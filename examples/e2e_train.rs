@@ -1,0 +1,172 @@
+//! End-to-end driver (the required full-stack validation run): exercises
+//! ALL THREE LAYERS on a real small workload and logs the loss curve.
+//!
+//! Pipeline: synthetic clustered data -> rust coordinator -> per-epoch
+//! accel (XLA/PJRT) executions of the AOT-lowered JAX+Pallas epoch step
+//! -> batch codebook updates -> QE curve + U-matrix + cross-check against
+//! the pure-rust dense kernel. Recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_train
+//! ```
+
+use somoclu::coordinator::config::TrainConfig;
+use somoclu::coordinator::train::train;
+use somoclu::data;
+use somoclu::io::output::OutputWriter;
+use somoclu::kernels::{DataShard, KernelType};
+use somoclu::runtime::Manifest;
+use somoclu::som::quality;
+use somoclu::util::rng::Rng;
+use somoclu::viz;
+
+fn main() -> anyhow::Result<()> {
+    let out_dir = std::path::PathBuf::from("out/e2e");
+    std::fs::create_dir_all(&out_dir)?;
+    anyhow::ensure!(
+        Manifest::default_dir().join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+
+    // Workload: 4,096 rows, 48 dims, 8 clusters; 24x24 map; 15 epochs.
+    let mut rng = Rng::new(23);
+    let (dim, n_rows) = (48, 4096);
+    let (train_data, labels) = data::gaussian_blobs(n_rows, dim, 8, 0.2, &mut rng);
+    let cfg = TrainConfig {
+        rows: 24,
+        cols: 24,
+        epochs: 15,
+        kernel: KernelType::Accel,
+        radius0: Some(12.0),
+        ..Default::default()
+    };
+    println!(
+        "e2e: {n_rows} rows x {dim} dims, 24x24 map, 15 epochs, kernel=accel-xla"
+    );
+
+    // Layer check: which artifact will serve this run?
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let art = manifest.select_som_step("gaussian", "planar", dim, 24 * 24)?;
+    println!(
+        "artifact: {} (S={}, D={}, N={}, blocks {}x{})",
+        art.name, art.s, art.d, art.n, art.block_s, art.block_n
+    );
+
+    let t0 = std::time::Instant::now();
+    let res = train(
+        &cfg,
+        DataShard::Dense {
+            data: &train_data,
+            dim,
+        },
+        None,
+        None,
+    )?;
+    let accel_time = t0.elapsed();
+    println!("loss curve (mean quantization error per epoch):");
+    for e in &res.epochs {
+        let bar = "#".repeat((e.qe * 40.0 / res.epochs[0].qe) as usize);
+        println!(
+            "  epoch {:>2}  radius {:>6.2}  QE {:.5}  {bar}",
+            e.epoch, e.radius, e.qe
+        );
+    }
+
+    // Cross-layer verification: same run on the pure-rust dense kernel.
+    let mut cpu_cfg = cfg.clone();
+    cpu_cfg.kernel = KernelType::DenseCpu;
+    let t1 = std::time::Instant::now();
+    let cpu = train(
+        &cpu_cfg,
+        DataShard::Dense {
+            data: &train_data,
+            dim,
+        },
+        None,
+        None,
+    )?;
+    let cpu_time = t1.elapsed();
+    // Cross-layer check 1 — single-epoch equivalence from the same
+    // initial codebook: the XLA path and the rust path must produce the
+    // same BMUs and the same updated codebook for one `trainOneEpoch`.
+    // (Full 15-epoch trajectories diverge chaotically from f32 rounding
+    // — both end at equally good maps, so whole-run agreement is checked
+    // by quality parity below, exactly like comparing two MPI layouts.)
+    let grid = cfg.grid();
+    let mut cb_a = somoclu::coordinator::train::init_codebook(&cfg, &grid, dim);
+    let mut cb_b = cb_a.clone();
+    let shard = DataShard::Dense {
+        data: &train_data,
+        dim,
+    };
+    let (bmus_a, qe_a) =
+        somoclu::api::train_one_epoch(&cfg, shard, &mut cb_a, 0)?;
+    let (bmus_b, qe_b) =
+        somoclu::api::train_one_epoch(&cpu_cfg, shard, &mut cb_b, 0)?;
+    let epoch_agree = bmus_a.iter().zip(&bmus_b).filter(|(a, b)| a == b).count();
+    let max_w_diff = cb_a
+        .weights
+        .iter()
+        .zip(&cb_b.weights)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!(
+        "single-epoch cross-check: {epoch_agree}/{} BMUs identical, max \
+         codebook delta {max_w_diff:.2e}, QE {qe_a:.6} vs {qe_b:.6}",
+        bmus_a.len()
+    );
+    anyhow::ensure!(
+        epoch_agree as f64 >= 0.999 * bmus_a.len() as f64,
+        "single-epoch cross-layer disagreement"
+    );
+    anyhow::ensure!(max_w_diff < 1e-2, "single-epoch codebook divergence");
+
+    // Cross-layer check 2 — full-run quality parity.
+    let agree = res
+        .bmus
+        .iter()
+        .zip(&cpu.bmus)
+        .filter(|(a, b)| a == b)
+        .count();
+    let qe_rel = (res.final_qe() - cpu.final_qe()).abs() / cpu.final_qe();
+    println!(
+        "full-run: {agree}/{} BMUs coincide (informational — trajectories \
+         diverge), QE rel diff {:.2e} (accel {:?} vs cpu {:?}; \
+         interpret-mode Pallas is expected slower)",
+        res.bmus.len(),
+        qe_rel,
+        accel_time,
+        cpu_time
+    );
+    anyhow::ensure!(qe_rel < 1e-2, "QE diverged across layers");
+
+    // Map quality: clusters should be separated on the grid.
+    let grid = cfg.grid();
+    let te = quality::topographic_error(&train_data, dim, &grid, &res.codebook, cfg.threads);
+    let mut purity_hits = 0usize;
+    let mut node_label: Vec<Option<usize>> = vec![None; grid.node_count()];
+    let mut occupied = 0usize;
+    for (i, &b) in res.bmus.iter().enumerate() {
+        match node_label[b as usize] {
+            None => {
+                node_label[b as usize] = Some(labels[i]);
+                occupied += 1;
+            }
+            Some(l) if l == labels[i] => purity_hits += 1,
+            Some(_) => {}
+        }
+    }
+    println!(
+        "final QE {:.5}, TE {:.3}, node-label consistency {:.1}%",
+        res.final_qe(),
+        te,
+        100.0 * purity_hits as f64 / (n_rows - occupied) as f64
+    );
+
+    OutputWriter::new(out_dir.join("map"))
+        .write_final(&grid, &res.codebook, &res.bmus, &res.umatrix)?;
+    viz::write_heatmap_ppm(out_dir.join("umatrix.ppm"), &grid, &res.umatrix, 10, Some(&res.bmus))?;
+    println!("outputs in {}", out_dir.display());
+    println!("E2E OK: all three layers verified on a live training run.");
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Generate the example data files the paper's package ships
+//! ("Example files are available in the package", §4.1): `data/rgbs.txt`
+//! (the RGB toy set used in the paper's CLI examples), `data/random.dat`
+//! (the Python-interface example input) and `data/sparse.svm` (libsvm
+//! sparse example), so the README's CLI invocations run verbatim.
+//!
+//! ```bash
+//! cargo run --release --example gen_data
+//! ./target/release/somoclu data/rgbs.txt data/rgbs
+//! ```
+
+use somoclu::data;
+use somoclu::io::{dense, sparse as sparse_io};
+use somoclu::sparse::Csr;
+use somoclu::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    std::fs::create_dir_all("data")?;
+    let mut rng = Rng::new(0xDA7A);
+
+    // rgbs.txt — the paper's "$ Somoclu data/rgbs.txt data/rgbs" input.
+    let (rgb, _) = data::rgb_toy(3000, &mut rng);
+    dense::write_dense("data/rgbs.txt", 3000, 3, &rgb, false)?;
+    println!("wrote data/rgbs.txt          (3000 x 3 dense)");
+
+    // random.dat — "data = numpy.loadtxt('data/random.dat')" (§4.3).
+    let rand = data::random_dense(2000, 16, &mut rng);
+    dense::write_dense("data/random.dat", 2000, 16, &rand, false)?;
+    println!("wrote data/random.dat        (2000 x 16 dense)");
+
+    // headered variant (ESOM-compatible dense format).
+    dense::write_dense("data/random_header.dat", 2000, 16, &rand, true)?;
+    println!("wrote data/random_header.dat (2000 x 16 dense, % header)");
+
+    // sparse.svm — libsvm-format sparse example (§4.1 format).
+    let m = Csr::random(1500, 512, 0.04, &mut rng);
+    sparse_io::write_sparse("data/sparse.svm", &m)?;
+    println!(
+        "wrote data/sparse.svm        (1500 x 512 sparse, {:.1}% nonzero)",
+        m.density() * 100.0
+    );
+
+    println!("\ntry:");
+    println!("  ./target/release/somoclu -e 10 -x 20 -y 20 data/rgbs.txt out/rgbs");
+    println!("  ./target/release/somoclu -k 2 -x 16 -y 16 data/sparse.svm out/sparse");
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Quickstart: the README's 60-second tour — generate data, train a map,
+//! inspect quality, write ESOM-compatible outputs and a PPM heatmap.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use somoclu::api::{self, DataInput};
+use somoclu::coordinator::config::TrainConfig;
+use somoclu::data;
+use somoclu::io::output::OutputWriter;
+use somoclu::som::quality;
+use somoclu::util::rng::Rng;
+use somoclu::viz;
+
+fn main() -> anyhow::Result<()> {
+    let out_dir = std::path::PathBuf::from("out/quickstart");
+    std::fs::create_dir_all(&out_dir)?;
+
+    // 1. Data: 2,000 rows of 16-d gaussian blobs (5 clusters).
+    let mut rng = Rng::new(7);
+    let (train_data, _labels) = data::gaussian_blobs(2000, 16, 5, 0.15, &mut rng);
+
+    // 2. Configure a 20x20 planar square map, 10 epochs (paper defaults
+    //    otherwise: gaussian neighborhood, linear cooling 1.0 -> 0.01).
+    let cfg = TrainConfig {
+        rows: 20,
+        cols: 20,
+        epochs: 10,
+        ..Default::default()
+    };
+
+    // 3. Train through the library API (zero-copy f32 input).
+    let t0 = std::time::Instant::now();
+    let res = api::train(&cfg, DataInput::BorrowedF32 { data: &train_data, dim: 16 })?;
+    println!("trained in {:?}", t0.elapsed());
+    for e in &res.epochs {
+        println!(
+            "  epoch {:>2}  radius {:>6.2}  QE {:.5}",
+            e.epoch, e.radius, e.qe
+        );
+    }
+
+    // 4. Quality measures.
+    let grid = cfg.grid();
+    let te = quality::topographic_error(&train_data, 16, &grid, &res.codebook, cfg.threads);
+    println!("final QE {:.5}, topographic error {:.3}", res.final_qe(), te);
+
+    // 5. Post-process: cluster the codebook (som.cluster() analog) and
+    //    label the data through the BMU mapping.
+    let mut km_rng = Rng::new(99);
+    let km = somoclu::som::kmeans::kmeans(&res.codebook, 5, 100, &mut km_rng);
+    let data_labels = somoclu::som::kmeans::data_labels(&km, &res.bmus);
+    println!(
+        "codebook k-means: k=5, inertia {:.3}, {} iterations; first data labels {:?}",
+        km.inertia,
+        km.iterations,
+        &data_labels[..8]
+    );
+
+    // 6. Outputs: ESOM-compatible files + a U-matrix heatmap.
+    let writer = OutputWriter::new(out_dir.join("map"));
+    writer.write_final(&grid, &res.codebook, &res.bmus, &res.umatrix)?;
+    viz::write_heatmap_ppm(
+        out_dir.join("umatrix.ppm"),
+        &grid,
+        &res.umatrix,
+        12,
+        Some(&res.bmus),
+    )?;
+    println!("wrote {}/map.{{wts,bm,umx}} and umatrix.ppm", out_dir.display());
+    Ok(())
+}

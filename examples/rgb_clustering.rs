@@ -1,0 +1,96 @@
+//! RGB toy example — the paper's Figs. 2–4 workload: color vectors
+//! self-organize on the map; the U-matrix shows cluster boundaries.
+//!
+//! Renders three images: the U-matrix heatmap, the learned codebook as
+//! an RGB image (each neuron colored by its weight vector — the classic
+//! "color map" figure), and a toroid variant (Fig. 2 is toroid).
+//!
+//! ```bash
+//! cargo run --release --example rgb_clustering
+//! ```
+
+use std::io::Write;
+
+use somoclu::coordinator::config::TrainConfig;
+use somoclu::coordinator::train::train;
+use somoclu::data;
+use somoclu::io::output::OutputWriter;
+use somoclu::kernels::DataShard;
+use somoclu::som::{Grid, MapType};
+use somoclu::util::rng::Rng;
+use somoclu::viz;
+
+/// Write the codebook of a 3-dim (RGB) map directly as pixels.
+fn write_codebook_rgb(
+    path: &std::path::Path,
+    grid: &Grid,
+    codebook: &somoclu::som::Codebook,
+    cell: usize,
+) -> std::io::Result<()> {
+    assert_eq!(codebook.dim, 3);
+    let (w, h) = (grid.cols * cell, grid.rows * cell);
+    let mut img = vec![0u8; w * h * 3];
+    for r in 0..grid.rows {
+        for c in 0..grid.cols {
+            let row = codebook.row(grid.index(r, c));
+            let rgb = [
+                (row[0].clamp(0.0, 1.0) * 255.0) as u8,
+                (row[1].clamp(0.0, 1.0) * 255.0) as u8,
+                (row[2].clamp(0.0, 1.0) * 255.0) as u8,
+            ];
+            for py in 0..cell {
+                for px in 0..cell {
+                    let o = ((r * cell + py) * w + c * cell + px) * 3;
+                    img[o..o + 3].copy_from_slice(&rgb);
+                }
+            }
+        }
+    }
+    let f = std::fs::File::create(path)?;
+    let mut out = std::io::BufWriter::new(f);
+    write!(out, "P6\n{w} {h}\n255\n")?;
+    out.write_all(&img)
+}
+
+fn main() -> anyhow::Result<()> {
+    let out_dir = std::path::PathBuf::from("out/rgb");
+    std::fs::create_dir_all(&out_dir)?;
+    let mut rng = Rng::new(11);
+    let (rgb, _) = data::rgb_toy(1500, &mut rng);
+
+    for (name, map_type) in [("planar", MapType::Planar), ("toroid", MapType::Toroid)] {
+        let cfg = TrainConfig {
+            rows: 30,
+            cols: 30,
+            epochs: 12,
+            map_type,
+            ..Default::default()
+        };
+        let res = train(&cfg, DataShard::Dense { data: &rgb, dim: 3 }, None, None)?;
+        let grid = cfg.grid();
+
+        let prefix = out_dir.join(name);
+        OutputWriter::new(&prefix).write_final(&grid, &res.codebook, &res.bmus, &res.umatrix)?;
+        viz::write_heatmap_ppm(
+            out_dir.join(format!("{name}_umatrix.ppm")),
+            &grid,
+            &res.umatrix,
+            8,
+            Some(&res.bmus),
+        )?;
+        write_codebook_rgb(
+            &out_dir.join(format!("{name}_codebook.ppm")),
+            &grid,
+            &res.codebook,
+            8,
+        )?;
+        println!(
+            "{name}: QE {:.4} -> {:.4} over {} epochs; outputs in {}",
+            res.epochs[0].qe,
+            res.final_qe(),
+            cfg.epochs,
+            out_dir.display()
+        );
+    }
+    Ok(())
+}

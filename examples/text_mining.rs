@@ -1,0 +1,134 @@
+//! Text-mining visualization — the paper's Fig. 9 / §5.3 workload:
+//! a sparse term-document space trained on a *toroid emergent* map with
+//! the sparse kernel, U-matrix exported for ESOM-style viewing.
+//!
+//! The paper used Reuters-21578 through Lucene (12,347 index terms in a
+//! ~20k-dim space, 1–5% dense). Offline, we generate a Zipfian corpus
+//! with planted topics that reproduces the structural claim: "dense
+//! areas where index terms are close and form tight clusters ... large
+//! barriers separating index terms into individual semantic regions."
+//! See DESIGN.md §3 (substitutions).
+//!
+//! ```bash
+//! cargo run --release --example text_mining          # scaled default
+//! SOM_TEXT_FULL=1 cargo run --release --example text_mining
+//! ```
+
+use somoclu::coordinator::config::TrainConfig;
+use somoclu::coordinator::train::train;
+use somoclu::data::{zipf_corpus, CorpusSpec};
+use somoclu::io::output::OutputWriter;
+use somoclu::kernels::{DataShard, KernelType};
+use somoclu::som::{Cooling, MapType, Neighborhood};
+use somoclu::util::memtrack::{fmt_bytes, MemRegion};
+use somoclu::util::rng::Rng;
+use somoclu::viz;
+
+fn main() -> anyhow::Result<()> {
+    let out_dir = std::path::PathBuf::from("out/text");
+    std::fs::create_dir_all(&out_dir)?;
+    let full = std::env::var("SOM_TEXT_FULL").is_ok();
+
+    // Paper: 12,347 instances, ~20k dims, 336x205 toroid emergent map,
+    // 10 epochs, lr 1.0 -> 0.1 linear, radius 100 -> 1 linear,
+    // noncompact gaussian. Scaled: 2,000 docs, 4,096 dims, 84x52 map.
+    let spec = if full {
+        CorpusSpec {
+            docs: 12_347,
+            vocab: 20_000,
+            topics: 12,
+            nnz_per_row: 400,
+            topic_affinity: 0.7,
+        }
+    } else {
+        CorpusSpec {
+            docs: 2_000,
+            vocab: 4_096,
+            topics: 8,
+            nnz_per_row: 80,
+            topic_affinity: 0.75,
+        }
+    };
+    let (rows, cols, radius0) = if full { (205, 336, 100.0) } else { (52, 84, 26.0) };
+
+    let mut rng = Rng::new(13);
+    let region = MemRegion::start();
+    let (corpus, _topics) = zipf_corpus(&spec, &mut rng);
+    println!(
+        "corpus: {} docs x {} terms, {:.2}% dense, CSR {} (dense would be {})",
+        corpus.rows,
+        corpus.cols,
+        corpus.density() * 100.0,
+        fmt_bytes(corpus.heap_bytes()),
+        fmt_bytes(corpus.rows * corpus.cols * 4),
+    );
+
+    let cfg = TrainConfig {
+        rows,
+        cols,
+        epochs: 10,
+        map_type: MapType::Toroid,
+        neighborhood: Neighborhood::gaussian(false), // noncompact gaussian
+        radius0: Some(radius0),
+        radius_n: 1.0,
+        radius_cooling: Cooling::Linear,
+        scale0: 1.0,
+        scale_n: 0.1,
+        scale_cooling: Cooling::Linear,
+        kernel: KernelType::SparseCpu,
+        ..Default::default()
+    };
+
+    let t0 = std::time::Instant::now();
+    let res = train(&cfg, DataShard::Sparse(&corpus), None, None)?;
+    println!(
+        "trained {}x{} toroid emergent map ({} nodes) in {:?}; peak memory {}",
+        rows,
+        cols,
+        rows * cols,
+        t0.elapsed(),
+        fmt_bytes(region.peak_delta()),
+    );
+    for e in &res.epochs {
+        println!("  epoch {:>2}  radius {:>7.2}  QE {:.5}", e.epoch, e.radius, e.qe);
+    }
+
+    let grid = cfg.grid();
+    OutputWriter::new(out_dir.join("reuters_like"))
+        .write_final(&grid, &res.codebook, &res.bmus, &res.umatrix)?;
+    viz::write_heatmap_ppm(
+        out_dir.join("umatrix.ppm"),
+        &grid,
+        &res.umatrix,
+        6,
+        Some(&res.bmus),
+    )?;
+    viz::write_heatmap_pgm(out_dir.join("umatrix.pgm"), &grid, &res.umatrix, 6)?;
+
+    // Quantify the Fig. 9 claim: BMU-occupied nodes should sit in valleys
+    // (low U) while barriers (high U) separate them.
+    let mut hit = vec![false; grid.node_count()];
+    for &b in &res.bmus {
+        hit[b as usize] = true;
+    }
+    let (mut u_hit, mut n_hit, mut u_miss, mut n_miss) = (0.0f64, 0usize, 0.0f64, 0usize);
+    for (u, h) in res.umatrix.iter().zip(&hit) {
+        if *h {
+            u_hit += *u as f64;
+            n_hit += 1;
+        } else {
+            u_miss += *u as f64;
+            n_miss += 1;
+        }
+    }
+    println!(
+        "U-matrix: mean height at occupied nodes {:.4} vs unoccupied {:.4} \
+         ({} occupied / {} nodes) — clusters in valleys, barriers between",
+        u_hit / n_hit.max(1) as f64,
+        u_miss / n_miss.max(1) as f64,
+        n_hit,
+        grid.node_count()
+    );
+    println!("outputs in {}", out_dir.display());
+    Ok(())
+}

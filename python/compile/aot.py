@@ -1,0 +1,198 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts + manifest.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, per shape config x variant:
+    artifacts/som_step_<shape>_<kind>_<map>.hlo.txt
+    artifacts/umatrix_<shape>.hlo.txt
+    artifacts/manifest.json   — shapes + input/output order for rust
+
+Python runs only here; the rust binary is self-contained once artifacts
+exist (`make artifacts` is a no-op while inputs are unchanged).
+"""
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import configs, model
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side unwraps one tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_som_step(shape_cfg, kind, map_type):
+    s, d, n = shape_cfg["s"], shape_cfg["d"], shape_cfg["n"]
+    bs, bn = shape_cfg["block_s"], shape_cfg["block_n"]
+
+    fn = functools.partial(
+        model.som_epoch_step, kind=kind, map_type=map_type,
+        block_s=bs, block_n=bn, interpret=True)
+
+    spec = jax.ShapeDtypeStruct
+    args = (
+        spec((s, d), jnp.float32),    # data
+        spec((s,), jnp.float32),      # data_mask
+        spec((n, d), jnp.float32),    # codebook
+        spec((n, 2), jnp.float32),    # coords
+        spec((n,), jnp.float32),      # node_valid
+        spec((2,), jnp.float32),      # span
+        spec((), jnp.float32),        # radius
+        spec((), jnp.float32),        # scale
+    )
+    lowered = jax.jit(lambda *a: tuple(fn(*a))).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def lower_bmu(shape_cfg, variant):
+    """BMU-only artifact for the hybrid kernel (paper §3.1: the GPU does
+    the distance search, OpenMP threads do the weight update). `variant`
+    selects the Gram-trick kernel or the naive direct formulation (the
+    paper's rejected design, kept for the ablation bench)."""
+    from compile.kernels import distance
+
+    s, d, n = shape_cfg["s"], shape_cfg["d"], shape_cfg["n"]
+    bs, bn = shape_cfg["block_s"], shape_cfg["block_n"]
+    fn = distance.bmu_pallas if variant == "gram" else distance.bmu_pallas_direct
+
+    spec = jax.ShapeDtypeStruct
+    args = (
+        spec((s, d), jnp.float32),    # data
+        spec((n, d), jnp.float32),    # codebook
+        spec((n,), jnp.float32),      # node_valid
+    )
+    lowered = jax.jit(
+        lambda data, cb, valid: tuple(
+            fn(data, cb, valid, block_s=bs, block_n=bn, interpret=True))
+    ).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def lower_umatrix(um_cfg):
+    n, k, d = um_cfg["n"], um_cfg["k"], um_cfg["d"]
+    spec = jax.ShapeDtypeStruct
+    args = (
+        spec((n, d), jnp.float32),    # codebook
+        spec((n, k), jnp.int32),      # neighbor_idx
+        spec((n, k), jnp.float32),    # neighbor_mask
+        spec((n,), jnp.float32),      # node_valid
+    )
+    lowered = jax.jit(lambda *a: (model.umatrix_step(*a),)).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=None,
+                    help="artifact directory (default: ../artifacts)")
+    ap.add_argument("--out", default=None,
+                    help="compat: path of a marker artifact; its parent "
+                         "directory becomes --out-dir")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated shape config names to build")
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if out_dir is None and args.out is not None:
+        out_dir = os.path.dirname(args.out) or "."
+    if out_dir is None:
+        out_dir = os.path.join(os.path.dirname(__file__), "..", "..",
+                               "artifacts")
+    os.makedirs(out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"som_step": [], "umatrix": [], "bmu": []}
+
+    for name, cfg in configs.SHAPE_CONFIGS.items():
+        if only and name not in only:
+            continue
+        for kind, map_type in configs.VARIANTS:
+            art = configs.artifact_name(name, kind, map_type)
+            path = os.path.join(out_dir, art + ".hlo.txt")
+            text = lower_som_step(cfg, kind, map_type)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["som_step"].append({
+                "name": art,
+                "file": art + ".hlo.txt",
+                "shape": name,
+                "kind": kind,
+                "map_type": map_type,
+                "s": cfg["s"], "d": cfg["d"], "n": cfg["n"],
+                "block_s": cfg["block_s"], "block_n": cfg["block_n"],
+                # input order for the rust runtime:
+                "inputs": ["data", "data_mask", "codebook", "coords",
+                           "node_valid", "span", "radius", "scale"],
+                "outputs": ["bmus", "num", "den", "qe_sum"],
+            })
+            print(f"lowered {art}: {len(text)} chars", file=sys.stderr)
+
+    for name, cfg in configs.SHAPE_CONFIGS.items():
+        if only and name not in only:
+            continue
+        for variant in ("gram", "direct"):
+            art = f"som_bmu_{name}_{variant}"
+            path = os.path.join(out_dir, art + ".hlo.txt")
+            text = lower_bmu(cfg, variant)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["bmu"].append({
+                "name": art,
+                "file": art + ".hlo.txt",
+                "shape": name,
+                "variant": variant,
+                "s": cfg["s"], "d": cfg["d"], "n": cfg["n"],
+                "block_s": cfg["block_s"], "block_n": cfg["block_n"],
+                "inputs": ["data", "codebook", "node_valid"],
+                "outputs": ["best_sq", "bmus"],
+            })
+            print(f"lowered {art}: {len(text)} chars", file=sys.stderr)
+
+    for name, cfg in configs.UMATRIX_CONFIGS.items():
+        if only and name not in only:
+            continue
+        art = configs.umatrix_name(name)
+        path = os.path.join(out_dir, art + ".hlo.txt")
+        text = lower_umatrix(cfg)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["umatrix"].append({
+            "name": art,
+            "file": art + ".hlo.txt",
+            "shape": name,
+            "n": cfg["n"], "k": cfg["k"], "d": cfg["d"],
+            "inputs": ["codebook", "neighbor_idx", "neighbor_mask",
+                       "node_valid"],
+            "outputs": ["umatrix"],
+        })
+        print(f"lowered {art}: {len(text)} chars", file=sys.stderr)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # marker for make's dependency tracking
+    if args.out is not None:
+        with open(args.out, "w") as f:
+            f.write("ok\n")
+    print(f"wrote manifest with {len(manifest['som_step'])} som_step and "
+          f"{len(manifest['umatrix'])} umatrix artifacts to {out_dir}",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

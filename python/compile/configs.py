@@ -1,0 +1,62 @@
+"""Artifact shape configurations for AOT lowering.
+
+HLO is shape-static: each named config freezes (S, D, N) = (shard rows,
+feature dims, codebook nodes) plus the Pallas block sizes. For every shape
+config, aot.py lowers one artifact per (neighborhood kind x map type)
+variant; the rust runtime picks the smallest config whose padded capacity
+fits the job (see rust/src/runtime/).
+
+S and N must be multiples of the block sizes (the rust side pads rows and
+nodes and passes validity masks). D is free (the kernels keep the feature
+axis whole per block) but the rust side pads D with zeros to match, which
+is distance- and update-neutral.
+
+Keep this list small: every entry costs lowering time at `make artifacts`
+and the interpret-mode runtime scales with S*N*D.
+"""
+
+from compile.model import MAP_TYPES, NEIGHBORHOOD_KINDS
+
+# name -> dict(s, d, n, block_s, block_n)
+SHAPE_CONFIGS = {
+    # tiny: integration tests and the quickstart example (toy data).
+    "tiny": dict(s=256, d=16, n=256, block_s=64, block_n=64),
+    # small: 20x20-ish maps, low-dim data (rgb example pads D 3 -> 16).
+    "small": dict(s=512, d=16, n=512, block_s=128, block_n=128),
+    # mid: 20x20..25x25 maps (<= 640 nodes), mid-dim dense data — the
+    # examples/bench geometry; added in the §Perf pass because routing a
+    # 400-node map to the 2560-node artifact wasted 6.4x padded FLOPs.
+    "mid": dict(s=1024, d=256, n=640, block_s=128, block_n=128),
+    # medium: 50x50 map (2500 -> 2560 nodes), mid-dim dense data.
+    "medium": dict(s=1024, d=256, n=2560, block_s=128, block_n=128),
+    # bench: the paper's Fig. 5 dense configuration, D = 1000, 50x50 map.
+    "bench": dict(s=1024, d=1000, n=2560, block_s=128, block_n=128),
+    # emergent: scaled-down stand-in for the paper's 200x200 emergent map
+    # (64x64 = 4096 nodes; full 200x200 is infeasible under interpret mode
+    # — see DESIGN.md §3 substitutions).
+    "emergent": dict(s=512, d=256, n=4096, block_s=128, block_n=128),
+}
+
+# Variants lowered for every shape config. gaussian/planar is the default
+# training path; the rest cover the paper's -n/-m/-p CLI options.
+VARIANTS = [(kind, map_type)
+            for kind in NEIGHBORHOOD_KINDS
+            for map_type in MAP_TYPES]
+
+# U-matrix artifact configs: (n, k, d) — nodes, max neighbors, dims.
+UMATRIX_CONFIGS = {
+    "tiny": dict(n=256, k=8, d=16),
+    "small": dict(n=512, k=8, d=16),
+    "mid": dict(n=640, k=8, d=256),
+    "medium": dict(n=2560, k=8, d=256),
+    "bench": dict(n=2560, k=8, d=1000),
+    "emergent": dict(n=4096, k=8, d=256),
+}
+
+
+def artifact_name(shape_name, kind, map_type):
+    return f"som_step_{shape_name}_{kind}_{map_type}"
+
+
+def umatrix_name(shape_name):
+    return f"umatrix_{shape_name}"

@@ -1,0 +1,128 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and the L2 model.
+
+These are the ground truth the Pallas kernels (distance.py, update.py) and
+the composed epoch step (model.py) are validated against in pytest.
+
+Everything here mirrors the batch-SOM formulation of the paper (Eq. 2/5/6):
+
+  dist[s, n]  = || x_s - w_n ||^2                       (squared Euclidean)
+  bmu[s]      = argmin_n dist[s, n]                     (first min wins)
+  H[s, n]     = h(grid_dist(bmu[s], n); radius)         (neighborhood)
+  num[n, :]   = sum_s H[s, n] * x_s                     (Eq. 6 numerator)
+  den[n]      = sum_s H[s, n]                           (Eq. 6 denominator)
+
+Masking: `data_mask[s] in {0,1}` zeroes the contribution of padded data
+rows; `node_valid[n] in {0,1}` prevents padded codebook rows from winning
+the argmin (their distance gets +BIG).
+"""
+
+import jax.numpy as jnp
+
+# Large-but-finite penalty for invalid nodes. Using +inf would poison
+# 0 * inf = nan in downstream masking, so stay finite.
+BIG = jnp.float32(1e30)
+
+
+def sq_distance_matrix(data, codebook):
+    """Squared Euclidean distances, [S, D] x [N, D] -> [S, N].
+
+    Direct formulation (no Gram trick) — numerically the most transparent
+    oracle. float32 in, float32 out.
+    """
+    diff = data[:, None, :] - codebook[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def sq_distance_matrix_gram(data, codebook):
+    """Gram-trick formulation: ||x||^2 + ||w||^2 - 2 x.w — what the paper's
+    GPU kernel (and our Pallas kernel) actually computes. Clamped at 0 to
+    kill tiny negative values from cancellation."""
+    x2 = jnp.sum(data * data, axis=1)[:, None]
+    w2 = jnp.sum(codebook * codebook, axis=1)[None, :]
+    cross = data @ codebook.T
+    return jnp.maximum(x2 + w2 - 2.0 * cross, 0.0)
+
+
+def bmu(data, codebook, node_valid=None):
+    """Best-matching-unit indices [S] (int32) and their squared distances.
+
+    First minimum wins (matches jnp.argmin and the rust kernels).
+    """
+    dist = sq_distance_matrix(data, codebook)
+    if node_valid is not None:
+        dist = dist + (1.0 - node_valid)[None, :] * BIG
+    idx = jnp.argmin(dist, axis=1).astype(jnp.int32)
+    best = jnp.min(dist, axis=1)
+    return idx, best
+
+
+def neighborhood_weights(grid_dist_rows, radius, *, kind="gaussian",
+                         compact=False):
+    """Neighborhood function h(.) of Eq. 5 applied to grid distances.
+
+    grid_dist_rows: [S, N] grid distances from each sample's BMU to node n.
+    kind='gaussian': exp(-d^2 / (2 r^2)); kind='bubble': 1[d <= r].
+    compact=True cuts the gaussian off beyond the radius (paper's -p flag).
+    """
+    r = jnp.maximum(radius, 1e-6)
+    if kind == "gaussian":
+        h = jnp.exp(-(grid_dist_rows * grid_dist_rows) / (2.0 * r * r))
+        if compact:
+            h = jnp.where(grid_dist_rows <= r, h, 0.0)
+    elif kind == "bubble":
+        h = jnp.where(grid_dist_rows <= r, 1.0, 0.0)
+    else:
+        raise ValueError(f"unknown neighborhood kind {kind!r}")
+    return h
+
+
+def grid_distance_matrix(coords, span=None, *, map_type="planar"):
+    """Dense node-to-node grid distances [N, N] from coordinates [N, 2].
+
+    Oracle counterpart of model.grid_distances: toroid wraps each axis
+    with min(|d|, span - |d|).
+    """
+    d = jnp.abs(coords[:, None, :] - coords[None, :, :])
+    if map_type == "toroid":
+        d = jnp.minimum(d, span[None, None, :] - d)
+    elif map_type != "planar":
+        raise ValueError(f"unknown map type {map_type!r}")
+    return jnp.sqrt(jnp.sum(d * d, axis=-1))
+
+
+def epoch_accumulators(data, codebook, node_grid_dist, radius, scale,
+                       data_mask=None, node_valid=None, *,
+                       kind="gaussian", compact=False):
+    """One batch-SOM accumulation pass (the L2 model's contract).
+
+    Returns (bmus[S] i32, num[N, D], den[N], qe_sum scalar).
+    `scale` multiplies H (the learning-rate factor folded into the batch
+    update the way somoclu's kernels do).
+    """
+    S = data.shape[0]
+    if data_mask is None:
+        data_mask = jnp.ones((S,), jnp.float32)
+    dist = sq_distance_matrix(data, codebook)
+    if node_valid is not None:
+        dist = dist + (1.0 - node_valid)[None, :] * BIG
+    bmus = jnp.argmin(dist, axis=1).astype(jnp.int32)
+    best = jnp.min(dist, axis=1)
+    # qe accumulates the *Euclidean* (not squared) distance of valid rows.
+    qe_sum = jnp.sum(jnp.sqrt(jnp.maximum(best, 0.0)) * data_mask)
+    grid_rows = node_grid_dist[bmus]                      # [S, N]
+    h = neighborhood_weights(grid_rows, radius, kind=kind, compact=compact)
+    h = h * scale * data_mask[:, None]                    # [S, N]
+    num = h.T @ data                                      # [N, D]
+    den = jnp.sum(h, axis=0)                              # [N]
+    return bmus, num, den, qe_sum
+
+
+def apply_update(codebook, num, den, node_valid=None, eps=1e-12):
+    """Master-side codebook update: w_n = num_n / den_n where den_n > 0,
+    keep old weights elsewhere (somoclu behaviour for unhit nodes)."""
+    hit = den > eps
+    new = num / jnp.where(hit, den, 1.0)[:, None]
+    out = jnp.where(hit[:, None], new, codebook)
+    if node_valid is not None:
+        out = jnp.where((node_valid > 0.5)[:, None], out, codebook)
+    return out

@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: tiled weighted codebook accumulation (Eq. 6).
+
+Computes the batch-update accumulators
+
+    num[n, :] = sum_s H[s, n] * x[s, :]   =  (H^T @ X)[n, :]
+    den[n]    = sum_s H[s, n]             =  (H^T @ 1)[n]
+
+as one tiled MXU matmul with an S-reduction carried across the minor grid
+axis. H is the (already masked and scaled) neighborhood weight matrix
+produced by the L2 model between the two kernels.
+
+Tiling: grid = (N/BN, S/BS) with S minor so each (num, den) output block is
+revisited across the S sweep and accumulated in VMEM. The D axis is kept
+whole per block (codebook feature dim fits VMEM for the paper's configs;
+see DESIGN.md §Perf for the footprint table).
+
+interpret=True required on the CPU PJRT plugin (see distance.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BS = 128
+DEFAULT_BN = 128
+
+
+def _accum_kernel(h_ref, x_ref, num_ref, den_ref):
+    """One (i, k) grid step: accumulate H^T X and H^T 1 for node block i.
+
+    h_ref:   [BS, BN]  neighborhood weight tile (sample-block k, node-block i)
+    x_ref:   [BS, D]   data row block k
+    num_ref: [BN, D]   accumulator (revisited across k)
+    den_ref: [BN]      accumulator (revisited across k)
+    """
+    k = pl.program_id(1)
+
+    ht = h_ref[...].T                                   # [BN, BS]
+    part_num = jnp.dot(ht, x_ref[...],
+                       preferred_element_type=jnp.float32)  # [BN, D]
+    part_den = jnp.sum(ht, axis=1)                      # [BN]
+
+    @pl.when(k == 0)
+    def _init():
+        num_ref[...] = part_num
+        den_ref[...] = part_den
+
+    @pl.when(k > 0)
+    def _accum():
+        num_ref[...] = num_ref[...] + part_num
+        den_ref[...] = den_ref[...] + part_den
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_n",
+                                             "interpret"))
+def accumulate_pallas(h, data, *, block_s=DEFAULT_BS, block_n=DEFAULT_BN,
+                      interpret=True):
+    """Weighted accumulation. h [S, N] (masked+scaled), data [S, D].
+
+    Returns (num [N, D] f32, den [N] f32). S % block_s == 0 and
+    N % block_n == 0 (AOT configs guarantee; rust runtime pads).
+    """
+    s, n = h.shape
+    _, d = data.shape
+    bs = min(block_s, s)
+    bn = min(block_n, n)
+    assert s % bs == 0 and n % bn == 0, (s, n, bs, bn)
+
+    grid = (n // bn, s // bs)
+    num, den = pl.pallas_call(
+        _accum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, bn), lambda i, k: (k, i)),
+            pl.BlockSpec((bs, d), lambda i, k: (k, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, d), lambda i, k: (i, 0)),
+            pl.BlockSpec((bn,), lambda i, k: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(h, data)
+    return num, den

@@ -1,0 +1,122 @@
+"""L2: the batch-SOM epoch step as a JAX computation calling the L1 kernels.
+
+`som_epoch_step` is the unit the rust coordinator executes per shard per
+epoch through PJRT (the paper's `trainOneEpoch` inner body, minus the MPI
+allreduce which lives in rust):
+
+    1. BMU search            — Pallas kernel (distance.py), fused argmin.
+    2. neighborhood weights  — grid distances from node *coordinates*
+                               (planar or toroid wrap) + gaussian/bubble
+                               window (plain jnp; memory-bound, no MXU win).
+    3. accumulators          — Pallas kernel (update.py): num = H^T X,
+                               den = H^T 1.
+    4. qe_sum                — sum of winning Euclidean distances (for the
+                               quantization-error curve the driver logs).
+
+Geometry: square and hexagonal grids are both expressed as 2-D node
+coordinates `coords [N, 2]` computed once by the rust side (hex rows get
+the usual 0.5 column offset and sqrt(3)/2 row pitch), so one artifact
+serves both grid types. Toroid maps additionally wrap distances with the
+`span [2]` input (map extent per axis). The neighborhood *kind*
+(gaussian / gaussian-compact / bubble) and map type (planar / toroid)
+change the HLO graph, so they are separate artifact variants (configs.py).
+A coordinate pair instead of an N x N grid-distance matrix is what keeps
+emergent maps (the paper's 200 x 200 benchmark) feasible: the paper makes
+the same point about codebook storage being the binding constraint.
+
+Padding: `data_mask [S]` zeroes padded rows, `node_valid [N]` keeps padded
+nodes from winning the argmin. Radius/scale are runtime scalars, so one
+artifact serves every cooling schedule.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import distance, update
+
+NEIGHBORHOOD_KINDS = ("gaussian", "gaussian_compact", "bubble")
+MAP_TYPES = ("planar", "toroid")
+
+
+def grid_distances(bmus, coords, span, *, map_type):
+    """Grid distance from each sample's BMU to every node: [S, N].
+
+    coords [N, 2] node grid coordinates; span [2] map extent per axis,
+    used only for toroid wrap-around (min(|d|, span - |d|) per axis).
+    """
+    bmu_xy = coords[bmus]                                # [S, 2]
+    d = jnp.abs(coords[None, :, :] - bmu_xy[:, None, :])  # [S, N, 2]
+    if map_type == "toroid":
+        d = jnp.minimum(d, span[None, None, :] - d)
+    elif map_type == "planar":
+        # Keep `span` in the planar graph too (0-weight use), so every
+        # artifact variant has the same 8-input signature — otherwise
+        # lowering drops the unused parameter and the rust runtime would
+        # need per-variant argument lists.
+        d = d + 0.0 * span[None, None, :]
+    else:
+        raise ValueError(f"unknown map type {map_type!r}")
+    return jnp.sqrt(jnp.sum(d * d, axis=-1))
+
+
+def neighborhood(grid_dist, radius, *, kind):
+    """H = h(grid_dist; radius) per Eq. 5 of the paper."""
+    r = jnp.maximum(radius, 1e-6)
+    if kind == "gaussian":
+        return jnp.exp(-(grid_dist * grid_dist) / (2.0 * r * r))
+    if kind == "gaussian_compact":
+        h = jnp.exp(-(grid_dist * grid_dist) / (2.0 * r * r))
+        return jnp.where(grid_dist <= r, h, 0.0)
+    if kind == "bubble":
+        return jnp.where(grid_dist <= radius, 1.0, 0.0)
+    raise ValueError(f"unknown neighborhood kind {kind!r}")
+
+
+def som_epoch_step(data, data_mask, codebook, coords, node_valid, span,
+                   radius, scale, *, kind="gaussian", map_type="planar",
+                   block_s=distance.DEFAULT_BS, block_n=distance.DEFAULT_BN,
+                   interpret=True):
+    """One shard-level batch-SOM accumulation pass.
+
+    data       [S, D] f32   shard rows (padded rows arbitrary)
+    data_mask  [S]    f32   1.0 real row, 0.0 padding
+    codebook   [N, D] f32   current global codebook (padded nodes = 0)
+    coords     [N, 2] f32   node grid coordinates
+    node_valid [N]    f32   1.0 real node, 0.0 padding
+    span       [2]    f32   map extent per axis (toroid wrap)
+    radius     []     f32   current neighborhood radius (grid units)
+    scale      []     f32   current learning-rate factor
+
+    Returns (bmus [S] i32, num [N, D] f32, den [N] f32, qe_sum [] f32).
+    """
+    best_sq, bmus = distance.bmu_pallas(
+        data, codebook, node_valid,
+        block_s=block_s, block_n=block_n, interpret=interpret)
+
+    qe_sum = jnp.sum(jnp.sqrt(jnp.maximum(best_sq, 0.0)) * data_mask)
+
+    gd = grid_distances(bmus, coords, span, map_type=map_type)
+    h = neighborhood(gd, radius, kind=kind)
+    h = h * scale * data_mask[:, None]
+
+    num, den = update.accumulate_pallas(
+        h, data, block_s=block_s, block_n=block_n, interpret=interpret)
+
+    return bmus, num, den, qe_sum
+
+
+def umatrix_step(codebook, neighbor_idx, neighbor_mask, node_valid):
+    """U-matrix heights (Eq. 7) as an AOT-able graph.
+
+    neighbor_idx  [N, K] i32  indices of up-to-K grid neighbors per node
+                              (K = 8 square / 6 hex; padded entries point
+                              anywhere and are masked off)
+    neighbor_mask [N, K] f32  1.0 for a real neighbor edge
+
+    U(j) = mean over real neighbors of ||w_i - w_j||.
+    """
+    gathered = codebook[neighbor_idx]                    # [N, K, D]
+    diff = gathered - codebook[:, None, :]
+    dist = jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0))
+    cnt = jnp.maximum(jnp.sum(neighbor_mask, axis=1), 1.0)
+    u = jnp.sum(dist * neighbor_mask, axis=1) / cnt
+    return u * node_valid

@@ -1,0 +1,123 @@
+"""Pallas BMU kernel vs the pure-jnp oracle.
+
+The hypothesis sweep varies shapes, block sizes, masks and data scales;
+every case asserts exact index agreement and allclose distances.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import distance, ref
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(shape, scale=1.0, seed=None):
+    rng = np.random.default_rng(seed) if seed is not None else RNG
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+def _check(data, codebook, node_valid, block_s, block_n, exact_idx=True):
+    best, idx = distance.bmu_pallas(
+        jnp.asarray(data), jnp.asarray(codebook), jnp.asarray(node_valid),
+        block_s=block_s, block_n=block_n, interpret=True)
+    best, idx = np.asarray(best), np.asarray(idx)
+    ref_idx, ref_best = ref.bmu(jnp.asarray(data), jnp.asarray(codebook),
+                                jnp.asarray(node_valid))
+    ref_idx, ref_best = np.asarray(ref_idx), np.asarray(ref_best)
+    # The Gram trick cancels ||x||^2 + ||w||^2 against 2 x.w, so its f32
+    # absolute error scales with the norm magnitudes, not with the
+    # distance itself (same trade-off as the paper's GPU kernel).
+    mag = float(np.square(data).sum(1).max() + np.square(codebook).sum(1).max())
+    tol = 1e-4 + 1e-5 * mag
+    if exact_idx:
+        np.testing.assert_array_equal(idx, ref_idx)
+    else:
+        # Near-ties may flip the argmin between the Gram and direct
+        # formulations; require an ε-argmin: the chosen node's true
+        # distance must be within tol of the oracle minimum.
+        chosen = np.square(
+            data - codebook[idx]).sum(axis=1).astype(np.float64)
+        np.testing.assert_allclose(chosen, ref_best, rtol=1e-4, atol=tol)
+        assert node_valid[idx].min() > 0.5
+    np.testing.assert_allclose(best, ref_best, rtol=1e-4, atol=tol)
+
+
+def test_basic():
+    data = _rand((128, 32), seed=1)
+    cb = _rand((256, 32), seed=2)
+    _check(data, cb, np.ones(256, np.float32), 64, 64)
+
+
+def test_single_tile():
+    data = _rand((64, 8), seed=3)
+    cb = _rand((64, 8), seed=4)
+    _check(data, cb, np.ones(64, np.float32), 64, 64)
+
+
+def test_node_padding_never_wins():
+    # Padded codebook rows are zero vectors — without masking they would
+    # win for any data far from the origin.
+    data = _rand((64, 4), scale=0.01, seed=5)
+    cb = np.zeros((128, 4), np.float32)
+    cb[:100] = _rand((100, 4), scale=10.0, seed=6)
+    valid = np.zeros(128, np.float32)
+    valid[:100] = 1.0
+    _, idx = distance.bmu_pallas(
+        jnp.asarray(data), jnp.asarray(cb), jnp.asarray(valid),
+        block_s=64, block_n=64, interpret=True)
+    assert np.asarray(idx).max() < 100
+
+
+def test_tie_first_min_wins():
+    # Identical codebook rows in different tiles: the lower index wins.
+    data = _rand((64, 4), seed=7)
+    row = _rand((1, 4), seed=8)
+    cb = np.tile(row, (128, 1)).astype(np.float32)
+    _, idx = distance.bmu_pallas(
+        jnp.asarray(data), jnp.asarray(cb), jnp.asarray(np.ones(128, np.float32)),
+        block_s=64, block_n=64, interpret=True)
+    np.testing.assert_array_equal(np.asarray(idx), np.zeros(64, np.int32))
+
+
+def test_exact_match_distance_zero():
+    cb = _rand((128, 16), seed=9)
+    data = cb[:64].copy()
+    best, idx = distance.bmu_pallas(
+        jnp.asarray(data), jnp.asarray(cb), jnp.asarray(np.ones(128, np.float32)),
+        block_s=64, block_n=64, interpret=True)
+    np.testing.assert_array_equal(np.asarray(idx), np.arange(64))
+    np.testing.assert_allclose(np.asarray(best), 0.0, atol=1e-4)
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    s_tiles=st.integers(1, 3),
+    n_tiles=st.integers(1, 3),
+    d=st.integers(1, 48),
+    block=st.sampled_from([32, 64]),
+    scale=st.sampled_from([0.01, 1.0, 100.0]),
+    n_invalid=st.integers(0, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(s_tiles, n_tiles, d, block, scale, n_invalid,
+                          seed):
+    s = s_tiles * block
+    n = n_tiles * block
+    data = _rand((s, d), scale=scale, seed=seed)
+    cb = _rand((n, d), scale=scale, seed=seed + 1)
+    valid = np.ones(n, np.float32)
+    if n_invalid:
+        valid[n - min(n_invalid, n - 1):] = 0.0
+    _check(data, cb, valid, block, block, exact_idx=False)
+
+
+def test_rejects_non_multiple_shapes():
+    data = _rand((100, 8), seed=10)  # 100 not a multiple of 64
+    cb = _rand((64, 8), seed=11)
+    with pytest.raises(AssertionError):
+        distance.bmu_pallas(jnp.asarray(data), jnp.asarray(cb),
+                            jnp.asarray(np.ones(64, np.float32)),
+                            block_s=64, block_n=64, interpret=True)

@@ -1,0 +1,231 @@
+"""L2 epoch step vs the pure-jnp oracle, across geometry/kind variants."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def square_coords(rows, cols):
+    ys, xs = np.mgrid[0:rows, 0:cols].astype(np.float32)
+    return np.stack([xs.ravel(), ys.ravel()], axis=1)
+
+
+def hex_coords(rows, cols):
+    ys, xs = np.mgrid[0:rows, 0:cols].astype(np.float32)
+    xs = xs + 0.5 * (ys % 2)
+    ys = ys * np.float32(np.sqrt(3) / 2)
+    return np.stack([xs.ravel(), ys.ravel()], axis=1)
+
+
+def _pad_nodes(coords, n_pad):
+    n = coords.shape[0]
+    out = np.zeros((n_pad, 2), np.float32)
+    out[:n] = coords
+    valid = np.zeros(n_pad, np.float32)
+    valid[:n] = 1.0
+    return out, valid
+
+
+def _run_case(kind, map_type, rows=8, cols=8, s=64, d=12, seed=0,
+              radius=2.5, scale=0.7, n_masked=5, grid="square"):
+    rng = np.random.default_rng(seed)
+    n_real = rows * cols
+    n = 128  # padded
+    coords_real = (square_coords if grid == "square" else hex_coords)(rows, cols)
+    coords, valid = _pad_nodes(coords_real, n)
+    span = np.array([cols, rows], np.float32) if grid == "square" else \
+        np.array([cols, rows * np.sqrt(3) / 2], np.float32)
+
+    data = rng.standard_normal((s, d)).astype(np.float32)
+    mask = np.ones(s, np.float32)
+    if n_masked:
+        mask[s - n_masked:] = 0.0
+    codebook = np.zeros((n, d), np.float32)
+    codebook[:n_real] = rng.standard_normal((n_real, d)).astype(np.float32)
+
+    bmus, num, den, qe = model.som_epoch_step(
+        jnp.asarray(data), jnp.asarray(mask), jnp.asarray(codebook),
+        jnp.asarray(coords), jnp.asarray(valid), jnp.asarray(span),
+        jnp.float32(radius), jnp.float32(scale),
+        kind=kind, map_type=map_type, block_s=32, block_n=32,
+        interpret=True)
+
+    # Oracle: dense grid-distance matrix from the same coords.
+    gd = ref.grid_distance_matrix(jnp.asarray(coords), jnp.asarray(span),
+                                  map_type=map_type)
+    okind = "gaussian" if kind.startswith("gaussian") else "bubble"
+    compact = kind == "gaussian_compact"
+    rbmus, rnum, rden, rqe = ref.epoch_accumulators(
+        jnp.asarray(data), jnp.asarray(codebook), gd,
+        jnp.float32(radius), jnp.float32(scale),
+        data_mask=jnp.asarray(mask), node_valid=jnp.asarray(valid),
+        kind=okind, compact=compact)
+
+    bmus = np.asarray(bmus)
+    if (bmus == np.asarray(rbmus)).all():
+        np.testing.assert_allclose(np.asarray(num), np.asarray(rnum),
+                                   rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(den), np.asarray(rden),
+                                   rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(float(qe), float(rqe), rtol=1e-3,
+                                   atol=1e-3)
+    else:
+        # Gram-vs-direct near-ties can flip an argmin; accept an ε-argmin
+        # and verify the rest of the pipeline against the kernel's BMUs.
+        chosen = np.square(data - codebook[bmus]).sum(axis=1)
+        np.testing.assert_allclose(chosen, np.asarray(rqe * 0 + 0) +
+                                   np.square(data - codebook[np.asarray(rbmus)]).sum(axis=1),
+                                   rtol=1e-3, atol=1e-3)
+        h = ref.neighborhood_weights(np.asarray(gd)[bmus],
+                                     jnp.float32(radius), kind=okind,
+                                     compact=compact)
+        h = np.asarray(h) * scale * mask[:, None]
+        np.testing.assert_allclose(np.asarray(num), h.T @ data,
+                                   rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(den), h.sum(0),
+                                   rtol=1e-3, atol=1e-3)
+    return bmus, np.asarray(num), np.asarray(den)
+
+
+@pytest.mark.parametrize("kind", model.NEIGHBORHOOD_KINDS)
+@pytest.mark.parametrize("map_type", model.MAP_TYPES)
+def test_variants_match_oracle(kind, map_type):
+    _run_case(kind, map_type)
+
+
+def test_hex_grid():
+    _run_case("gaussian", "planar", grid="hex")
+
+
+def test_hex_toroid():
+    _run_case("gaussian", "toroid", grid="hex")
+
+
+def test_masked_rows_contribute_nothing():
+    bm_a, num_a, den_a = _run_case("gaussian", "planar", n_masked=0, s=64,
+                                   seed=3)
+    # Same data but last 16 rows masked: accumulators must equal the
+    # 48-row run on the unmasked prefix.
+    rng = np.random.default_rng(3)
+    n, d, s = 128, 12, 64
+    coords, valid = _pad_nodes(square_coords(8, 8), n)
+    span = np.array([8, 8], np.float32)
+    data = rng.standard_normal((s, d)).astype(np.float32)
+    codebook = np.zeros((n, d), np.float32)
+    codebook[:64] = rng.standard_normal((64, d)).astype(np.float32)
+    mask = np.ones(s, np.float32)
+    mask[48:] = 0.0
+    _, num_m, den_m, qe_m = model.som_epoch_step(
+        jnp.asarray(data), jnp.asarray(mask), jnp.asarray(codebook),
+        jnp.asarray(coords), jnp.asarray(valid), jnp.asarray(span),
+        jnp.float32(2.0), jnp.float32(1.0), kind="gaussian",
+        map_type="planar", block_s=32, block_n=32, interpret=True)
+
+    gd = ref.grid_distance_matrix(jnp.asarray(coords), jnp.asarray(span))
+    _, num_r, den_r, qe_r = ref.epoch_accumulators(
+        jnp.asarray(data[:48]), jnp.asarray(codebook), gd,
+        jnp.float32(2.0), jnp.float32(1.0),
+        node_valid=jnp.asarray(valid))
+    np.testing.assert_allclose(np.asarray(num_m), np.asarray(num_r),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(den_m), np.asarray(den_r),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(float(qe_m), float(qe_r), rtol=1e-3)
+
+
+def test_toroid_wraps():
+    # On a toroid the grid distance between opposite edges is 1, so a BMU
+    # at column 0 must pull nodes at the far column with weight exp(-1/(2r^2))
+    # rather than the planar exp(-49/(2r^2)). Verified through the oracle
+    # comparison in _run_case; here check wrap explicitly via model helper.
+    coords = jnp.asarray(square_coords(1, 8))
+    span = jnp.asarray(np.array([8.0, 1.0], np.float32))
+    gd = model.grid_distances(jnp.asarray(np.array([0], np.int32)),
+                              coords, span, map_type="toroid")
+    np.testing.assert_allclose(
+        np.asarray(gd)[0], [0, 1, 2, 3, 4, 3, 2, 1], atol=1e-6)
+
+
+def test_full_training_convergence_interpret():
+    """Mini end-to-end: iterating the epoch step shrinks QE (batch SOM
+    actually converges on blob data)."""
+    rng = np.random.default_rng(7)
+    s, d = 64, 8
+    centers = rng.standard_normal((4, d)).astype(np.float32) * 3
+    data = np.concatenate([
+        centers[i] + 0.1 * rng.standard_normal((s // 4, d)).astype(np.float32)
+        for i in range(4)])
+    mask = np.ones(s, np.float32)
+    rows = cols = 6
+    n = 64
+    coords, valid = _pad_nodes(square_coords(rows, cols), n)
+    span = np.array([cols, rows], np.float32)
+    codebook = 0.1 * rng.standard_normal((n, d)).astype(np.float32)
+    codebook[36:] = 0.0
+
+    qes = []
+    for epoch in range(6):
+        radius = np.float32(3.0 - epoch * 0.5 + 0.5)
+        _, num, den, qe = model.som_epoch_step(
+            jnp.asarray(data), jnp.asarray(mask), jnp.asarray(codebook),
+            jnp.asarray(coords), jnp.asarray(valid), jnp.asarray(span),
+            radius, np.float32(1.0), kind="gaussian", map_type="planar",
+            block_s=32, block_n=32, interpret=True)
+        codebook = np.asarray(ref.apply_update(
+            jnp.asarray(codebook), num, den, jnp.asarray(valid)))
+        qes.append(float(qe) / s)
+    assert qes[-1] < qes[0] * 0.5, qes
+
+
+@settings(deadline=None, max_examples=10)
+@given(
+    kind=st.sampled_from(model.NEIGHBORHOOD_KINDS),
+    map_type=st.sampled_from(model.MAP_TYPES),
+    radius=st.floats(0.5, 6.0),
+    scale=st.floats(0.05, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_model_sweep(kind, map_type, radius, scale, seed):
+    _run_case(kind, map_type, radius=np.float32(radius),
+              scale=np.float32(scale), seed=seed)
+
+
+def test_umatrix_matches_naive():
+    rng = np.random.default_rng(11)
+    rows = cols = 6
+    n, d, k = 64, 8, 8
+    codebook = rng.standard_normal((n, d)).astype(np.float32)
+    valid = np.zeros(n, np.float32)
+    valid[:rows * cols] = 1.0
+
+    # 8-neighborhood on a square planar grid.
+    idx = np.zeros((n, k), np.int32)
+    msk = np.zeros((n, k), np.float32)
+    for r in range(rows):
+        for c in range(cols):
+            j = r * cols + c
+            t = 0
+            for dr in (-1, 0, 1):
+                for dc in (-1, 0, 1):
+                    if dr == 0 and dc == 0:
+                        continue
+                    rr, cc = r + dr, c + dc
+                    if 0 <= rr < rows and 0 <= cc < cols:
+                        idx[j, t] = rr * cols + cc
+                        msk[j, t] = 1.0
+                        t += 1
+
+    u = model.umatrix_step(jnp.asarray(codebook), jnp.asarray(idx),
+                           jnp.asarray(msk), jnp.asarray(valid))
+    u = np.asarray(u)
+
+    for j in range(rows * cols):
+        nb = [idx[j, t] for t in range(k) if msk[j, t] > 0]
+        want = np.mean([np.linalg.norm(codebook[i] - codebook[j])
+                        for i in nb])
+        np.testing.assert_allclose(u[j], want, rtol=1e-4)
+    assert np.abs(u[rows * cols:]).max() == 0.0

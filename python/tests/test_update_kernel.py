@@ -1,0 +1,75 @@
+"""Pallas accumulation kernel (H^T X, H^T 1) vs plain matmul oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import update
+
+
+def _rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+def _check(h, data, block_s, block_n, rtol=1e-4, atol=1e-4):
+    num, den = update.accumulate_pallas(
+        jnp.asarray(h), jnp.asarray(data),
+        block_s=block_s, block_n=block_n, interpret=True)
+    ref_num = h.T.astype(np.float64) @ data.astype(np.float64)
+    ref_den = h.sum(axis=0, dtype=np.float64)
+    np.testing.assert_allclose(np.asarray(num), ref_num, rtol=rtol,
+                               atol=atol)
+    np.testing.assert_allclose(np.asarray(den), ref_den, rtol=rtol,
+                               atol=atol)
+
+
+def test_basic():
+    _check(_rand((128, 128), 0), _rand((128, 32), 1), 64, 64)
+
+
+def test_multi_tile_accumulation():
+    # 4 S-tiles: exercises the k>0 accumulate branch.
+    _check(_rand((256, 64), 2), _rand((256, 16), 3), 64, 64)
+
+
+def test_zero_weights_zero_output():
+    h = np.zeros((128, 64), np.float32)
+    data = _rand((128, 8), 4)
+    num, den = update.accumulate_pallas(
+        jnp.asarray(h), jnp.asarray(data), block_s=64, block_n=64,
+        interpret=True)
+    assert np.abs(np.asarray(num)).max() == 0.0
+    assert np.abs(np.asarray(den)).max() == 0.0
+
+
+def test_one_hot_weights_select_rows():
+    # H is a permutation-ish one-hot: num[n] must equal the selected row.
+    s, n, d = 64, 64, 8
+    h = np.zeros((s, n), np.float32)
+    perm = np.random.default_rng(5).permutation(s)
+    for i, p in enumerate(perm):
+        h[i, p] = 1.0
+    data = _rand((s, d), 6)
+    num, den = update.accumulate_pallas(
+        jnp.asarray(h), jnp.asarray(data), block_s=32, block_n=32,
+        interpret=True)
+    np.testing.assert_allclose(np.asarray(den), 1.0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(num)[perm], data, atol=1e-5)
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    s_tiles=st.integers(1, 3),
+    n_tiles=st.integers(1, 3),
+    d=st.integers(1, 40),
+    block=st.sampled_from([32, 64]),
+    scale=st.sampled_from([0.01, 1.0, 10.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(s_tiles, n_tiles, d, block, scale, seed):
+    s, n = s_tiles * block, n_tiles * block
+    h = np.abs(_rand((s, n), seed, scale))
+    data = _rand((s, d), seed + 1, scale)
+    # f32 accumulation over multiple tiles: loosen tolerance with scale.
+    _check(h, data, block, block, rtol=1e-3, atol=1e-3 * scale * scale)

@@ -1,0 +1,73 @@
+//! Shared helpers for the figure-reproduction benches (the in-repo
+//! criterion substitute; see util::timer).
+#![allow(dead_code)] // each bench uses a different subset
+
+use somoclu::coordinator::config::TrainConfig;
+use somoclu::kernels::KernelType;
+
+/// Paper-parameter presets for the Fig. 5/6/8 experiments, shrunk by
+//  SOM_BENCH_SCALE (1.0 = the scaled default recorded in EXPERIMENTS.md).
+pub struct Fig5Params {
+    pub dims: usize,
+    pub sizes: Vec<usize>,
+    pub map_side: usize,
+    pub epochs: usize,
+}
+
+/// Fig. 5 regular map: paper is 50x50, D=1000, n = 12.5k..100k.
+/// Scale 1.0 default: 20x20, D=256, n = 1.25k..10k (single-core budget).
+pub fn fig5_regular(scale: f64) -> Fig5Params {
+    let base = [12_500usize, 25_000, 50_000, 100_000];
+    let f = scale / 10.0; // scale=10 reproduces the paper sizes
+    Fig5Params {
+        dims: if scale >= 10.0 { 1000 } else { 256 },
+        sizes: base
+            .iter()
+            .map(|&s| ((s as f64 * f) as usize).max(256))
+            .collect(),
+        map_side: if scale >= 10.0 { 50 } else { 20 },
+        epochs: 3,
+    }
+}
+
+/// Fig. 5 emergent map: paper 200x200, n = 1.25k..10k. Scaled: 64x64.
+pub fn fig5_emergent(scale: f64) -> Fig5Params {
+    let base = [1_250usize, 2_500, 5_000, 10_000];
+    let f = scale / 10.0;
+    Fig5Params {
+        dims: if scale >= 10.0 { 1000 } else { 256 },
+        sizes: base
+            .iter()
+            .map(|&s| ((s as f64 * f) as usize).max(128))
+            .collect(),
+        map_side: if scale >= 10.0 { 200 } else { 64 },
+        epochs: 2,
+    }
+}
+
+pub fn base_config(map_side: usize, epochs: usize, kernel: KernelType) -> TrainConfig {
+    TrainConfig {
+        rows: map_side,
+        cols: map_side,
+        epochs,
+        kernel,
+        radius0: Some(map_side as f32 / 2.0),
+        ..Default::default()
+    }
+}
+
+/// Environment banner all benches print first.
+pub fn banner(name: &str, scale: f64) {
+    println!("== {name} ==");
+    println!(
+        "scale {scale} (SOM_BENCH_SCALE; 10 = paper-size), {} core(s), \
+         threads/proc {}",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        somoclu::util::threadpool::default_threads(),
+    );
+    println!(
+        "NOTE: this host exposes a single core — speedups are *modeled* \
+         (per-shard compute measured serially + alpha-beta comm model); \
+         see DESIGN.md §3."
+    );
+}

@@ -1,0 +1,137 @@
+//! FIG5 — "Training time on a single node with CPU and GPU kernels and
+//! the R package kohonen" (+ the 200x200 emergent-map variant).
+//!
+//! Series reproduced: kohonen-like single-core online baseline, dense
+//! CPU kernel, accel (XLA/PJRT = the paper's GPU column). Rows: data
+//! sizes. The paper's claims to check: CPU kernel >= 10x the baseline
+//! (growing with data size), accel >= CPU at large dense shards, map
+//! size does not change the ordering, and the baseline cannot run
+//! emergent maps at all.
+//!
+//! Paper-size run: SOM_BENCH_SCALE=10 cargo bench --bench fig5_single_node
+
+mod common;
+
+use somoclu::baseline;
+use somoclu::coordinator::train::train;
+use somoclu::data;
+use somoclu::kernels::{DataShard, KernelType};
+use somoclu::runtime::Manifest;
+use somoclu::som::{Cooling, Neighborhood, Schedule};
+use somoclu::util::rng::Rng;
+use somoclu::util::timer::{bench_scale, time_once};
+
+fn run_baseline(p: &common::Fig5Params, data: &[f32], rows: usize) -> Option<f64> {
+    let grid = somoclu::som::Grid::new(
+        p.map_side,
+        p.map_side,
+        somoclu::som::GridType::Square,
+        somoclu::som::MapType::Planar,
+    );
+    let mut rng = Rng::new(1);
+    let cb = baseline::kohonen_like_init(&grid, data, p.dims, &mut rng).ok()?;
+    let radius = Schedule::new(p.map_side as f32 / 2.0, 1.0, Cooling::Linear, p.epochs);
+    let alpha = Schedule::new(0.5, 0.02, Cooling::Linear, p.epochs);
+    let (_, dt) = time_once(|| {
+        baseline::train_online(
+            &grid,
+            cb,
+            data,
+            p.dims,
+            p.epochs,
+            radius,
+            alpha,
+            Neighborhood::gaussian(false),
+        )
+    });
+    let _ = rows;
+    Some(dt.as_secs_f64())
+}
+
+fn run_kernel(
+    p: &common::Fig5Params,
+    data: &[f32],
+    kernel: KernelType,
+) -> anyhow::Result<f64> {
+    let cfg = common::base_config(p.map_side, p.epochs, kernel);
+    let (res, dt) = time_once(|| {
+        train(
+            &cfg,
+            DataShard::Dense {
+                data,
+                dim: p.dims,
+            },
+            None,
+            None,
+        )
+    });
+    res?;
+    Ok(dt.as_secs_f64())
+}
+
+fn sweep(name: &str, p: &common::Fig5Params, with_baseline: bool, accel_ok: bool) {
+    println!("\n-- {name}: {0}x{0} map, D={1}, {2} epochs --", p.map_side, p.dims, p.epochs);
+    println!(
+        "{:>10} {:>14} {:>14} {:>14} {:>10} {:>10}",
+        "n", "kohonen-like", "dense-cpu", "accel-xla", "cpu/koh", "acc vs cpu"
+    );
+    for &n in &p.sizes {
+        let mut rng = Rng::new(n as u64);
+        let data = data::random_dense(n, p.dims, &mut rng);
+
+        let t_base = if with_baseline {
+            run_baseline(p, &data, n)
+        } else {
+            None
+        };
+        let t_cpu = run_kernel(p, &data, KernelType::DenseCpu).unwrap();
+        let t_accel = if accel_ok {
+            run_kernel(p, &data, KernelType::Accel).ok()
+        } else {
+            None
+        };
+
+        let fmt = |t: Option<f64>| match t {
+            Some(t) => format!("{t:>13.3}s"),
+            None => format!("{:>14}", "n/a"),
+        };
+        println!(
+            "{n:>10} {} {} {} {:>9.1}x {:>9.2}x",
+            fmt(t_base),
+            fmt(Some(t_cpu)),
+            fmt(t_accel),
+            t_base.map(|b| b / t_cpu).unwrap_or(f64::NAN),
+            t_accel.map(|a| t_cpu / a).unwrap_or(f64::NAN),
+        );
+    }
+}
+
+fn main() {
+    let scale = bench_scale(1.0);
+    common::banner("FIG5: single-node training time", scale);
+    println!(
+        "paper claims: dense CPU >= 10x kohonen (gap grows with n); GPU >= 2x \
+         CPU on their testbed; map size does not change the ordering.\n\
+         accel here runs interpret-mode Pallas on CPU, so its absolute time \
+         is NOT a TPU estimate — see DESIGN.md §Perf for the roofline model."
+    );
+
+    let accel_ok = Manifest::default_dir().join("manifest.json").exists();
+    if !accel_ok {
+        println!("(accel column skipped: run `make artifacts`)");
+    }
+
+    let regular = common::fig5_regular(scale);
+    sweep("regular map (paper: 50x50)", &regular, true, accel_ok);
+
+    let emergent = common::fig5_emergent(scale);
+    // The kohonen-like baseline refuses emergent maps (nodes > rows for
+    // the small sizes) — the paper makes exactly this point.
+    sweep("emergent map (paper: 200x200)", &emergent, true, accel_ok);
+
+    println!(
+        "\nseries notes: 'n/a' under kohonen-like on emergent rows = the \
+         baseline cannot initialize maps with more nodes than instances \
+         (kohonen exits with an error — §5.1)."
+    );
+}

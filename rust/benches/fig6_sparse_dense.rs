@@ -1,0 +1,110 @@
+//! FIG6 — "Training time on a single node with dense and sparse kernels"
+//! (D = 1000, 5% nonzero) + the §5.1 memory claims:
+//!   * "Execution time was about two times faster with the sparse kernel."
+//!   * "the sparse kernel using only twenty per cent of the memory of the
+//!      dense one with 100,000 instances."
+//! Plus §3.1's CLAIM-MEM50 (threads share the codebook, ranks copy it).
+//!
+//! Paper-size run: SOM_BENCH_SCALE=10 cargo bench --bench fig6_sparse_dense
+
+mod common;
+
+use somoclu::cluster::netmodel::NetModel;
+use somoclu::cluster::runner::{train_cluster, ClusterData};
+use somoclu::coordinator::train::train;
+use somoclu::kernels::{DataShard, KernelType};
+use somoclu::sparse::Csr;
+use somoclu::util::memtrack::{fmt_bytes, MemRegion};
+use somoclu::util::rng::Rng;
+use somoclu::util::timer::{bench_scale, time_once};
+
+fn main() {
+    let scale = bench_scale(1.0);
+    common::banner("FIG6: dense vs sparse kernel (time + memory)", scale);
+    let p = common::fig5_regular(scale);
+    let density = 0.05;
+
+    println!(
+        "\n{:>10} {:>13} {:>13} {:>9} {:>14} {:>14} {:>8}",
+        "n", "dense time", "sparse time", "speedup", "dense mem", "sparse mem", "ratio"
+    );
+    for &n in &p.sizes {
+        let mut rng = Rng::new(n as u64 ^ 0xf16);
+        let m = Csr::random(n, p.dims, density, &mut rng);
+        let dense = m.to_dense();
+
+        let dense_cfg = common::base_config(p.map_side, p.epochs, KernelType::DenseCpu);
+        let sparse_cfg = common::base_config(p.map_side, p.epochs, KernelType::SparseCpu);
+
+        let region = MemRegion::start();
+        let (r1, t_dense) = time_once(|| {
+            train(
+                &dense_cfg,
+                DataShard::Dense {
+                    data: &dense,
+                    dim: p.dims,
+                },
+                None,
+                None,
+            )
+        });
+        r1.unwrap();
+        // Working set = run peak + the input representation itself.
+        let mem_dense = region.peak_delta() + dense.len() * 4;
+
+        let region = MemRegion::start();
+        let (r2, t_sparse) = time_once(|| {
+            train(&sparse_cfg, DataShard::Sparse(&m), None, None)
+        });
+        r2.unwrap();
+        let mem_sparse = region.peak_delta() + m.heap_bytes();
+
+        println!(
+            "{n:>10} {:>12.3}s {:>12.3}s {:>8.2}x {:>14} {:>14} {:>7.2}",
+            t_dense.as_secs_f64(),
+            t_sparse.as_secs_f64(),
+            t_dense.as_secs_f64() / t_sparse.as_secs_f64(),
+            fmt_bytes(mem_dense),
+            fmt_bytes(mem_sparse),
+            mem_sparse as f64 / mem_dense as f64,
+        );
+    }
+
+    // CLAIM-MEM50: 2 threads sharing a codebook vs 2 ranks copying it.
+    println!("\n-- §3.1 memory claim: OpenMP-style threads vs MPI-style ranks --");
+    let dim = 512;
+    let side = 24;
+    let mut rng = Rng::new(99);
+    let (d, _) = somoclu::data::gaussian_blobs(512, dim, 4, 0.3, &mut rng);
+    let codebook_bytes = side * side * dim * 4;
+
+    let mut tc = common::base_config(side, 2, KernelType::DenseCpu);
+    tc.threads = 2;
+    let region = MemRegion::start();
+    train(&tc, DataShard::Dense { data: &d, dim }, None, None).unwrap();
+    let threaded = region.peak_delta();
+
+    let mut rc = common::base_config(side, 2, KernelType::DenseCpu);
+    rc.threads = 1;
+    rc.ranks = 2;
+    let region = MemRegion::start();
+    train_cluster(
+        &rc,
+        ClusterData::Dense {
+            data: d.clone(),
+            dim,
+        },
+        NetModel::ideal(),
+    )
+    .unwrap();
+    let ranked = region.peak_delta();
+
+    println!(
+        "codebook {}; peak: 2 threads {} vs 2 ranks {} -> threads use {:.0}% \
+         of the rank-path memory (paper: \"minimum fifty per cent reduction\")",
+        fmt_bytes(codebook_bytes),
+        fmt_bytes(threaded),
+        fmt_bytes(ranked),
+        100.0 * threaded as f64 / ranked as f64,
+    );
+}

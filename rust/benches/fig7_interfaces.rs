@@ -1,0 +1,101 @@
+//! FIG7 — "Memory overhead of the Python, R, and MATLAB interfaces
+//! compared to the command-line version."
+//!
+//! Reproduced mechanism (DESIGN.md §3): the bindings differ in calling
+//! convention, not computation —
+//!   C++ CLI      -> file load straight into the core's f32 buffers
+//!   Python/numpy -> zero-copy f32 pointer pass (BorrowedF32)
+//!   R / MATLAB   -> f64 host structures converted (duplicated) to f32
+//!                   (ConvertedF64; R/MATLAB also hold the original f64,
+//!                   which we account as the caller-side buffer)
+//!
+//! Expected shape: CLI ≈ Python (flat gap), R/MATLAB gap grows linearly
+//! with data size.
+//!
+//! Paper-size run: SOM_BENCH_SCALE=10 cargo bench --bench fig7_interfaces
+
+mod common;
+
+use somoclu::api::{self, DataInput};
+use somoclu::io::dense;
+use somoclu::kernels::KernelType;
+use somoclu::util::memtrack::{fmt_bytes, MemRegion};
+use somoclu::util::rng::Rng;
+use somoclu::util::timer::bench_scale;
+
+fn main() {
+    let scale = bench_scale(1.0);
+    common::banner("FIG7: interface memory overhead", scale);
+    let p = common::fig5_regular(scale);
+    let cfg = common::base_config(p.map_side, 2, KernelType::DenseCpu);
+    let dir = std::env::temp_dir().join("somoclu_fig7");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    println!(
+        "\n{:>10} {:>14} {:>14} {:>14} {:>12}",
+        "n", "C++ (CLI)", "Python-like", "R/MATLAB-like", "R overhead"
+    );
+    for &n in &p.sizes {
+        let mut rng = Rng::new(n as u64 ^ 0xf17);
+        let data = somoclu::data::random_dense(n, p.dims, &mut rng);
+
+        // CLI path: parse the file into fresh buffers, then train.
+        let path = dir.join(format!("d{n}.txt"));
+        dense::write_dense(&path, n, p.dims, &data, false).unwrap();
+        let region = MemRegion::start();
+        {
+            let m = dense::read_dense(&path).unwrap();
+            api::train(
+                &cfg,
+                DataInput::BorrowedF32 {
+                    data: &m.data,
+                    dim: m.cols,
+                },
+            )
+            .unwrap();
+        }
+        let cli_peak = region.peak_delta();
+        std::fs::remove_file(&path).ok();
+
+        // Python-like: data already in memory as f32, passed by pointer.
+        let region = MemRegion::start();
+        api::train(
+            &cfg,
+            DataInput::BorrowedF32 {
+                data: &data,
+                dim: p.dims,
+            },
+        )
+        .unwrap();
+        let py_peak = region.peak_delta() + data.len() * 4; // caller buffer
+
+        // R/MATLAB-like: caller holds f64; binding converts to f32.
+        let data64: Vec<f64> = data.iter().map(|&v| v as f64).collect();
+        let region = MemRegion::start();
+        api::train(
+            &cfg,
+            DataInput::ConvertedF64 {
+                data: &data64,
+                dim: p.dims,
+            },
+        )
+        .unwrap();
+        let r_peak = region.peak_delta() + data64.len() * 8; // caller buffer
+        drop(data64);
+
+        // cli_peak already contains the file-parsed data buffer (it is
+        // allocated inside the measured region); the binding paths add
+        // their caller-side buffer explicitly instead.
+        println!(
+            "{n:>10} {:>14} {:>14} {:>14} {:>11.2}x",
+            fmt_bytes(cli_peak),
+            fmt_bytes(py_peak),
+            fmt_bytes(r_peak),
+            r_peak as f64 / py_peak as f64,
+        );
+    }
+    println!(
+        "\nexpected shape (paper Fig. 7): Python-like ≈ CLI; R/MATLAB-like \
+         gap grows with data size (f64 host copy + f32 conversion copy)."
+    );
+}

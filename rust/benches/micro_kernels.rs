@@ -1,0 +1,133 @@
+//! Micro-benchmarks of the training hot paths (the §Perf working set):
+//! BMU search, node-parallel accumulation, full epoch per kernel, and
+//! the accel path split into marshaling vs execution.
+//!
+//! cargo bench --bench micro_kernels
+
+mod common;
+
+use somoclu::kernels::dense_cpu::DenseCpuKernel;
+use somoclu::kernels::sparse_cpu::SparseCpuKernel;
+use somoclu::kernels::{DataShard, TrainingKernel};
+use somoclu::runtime::Manifest;
+use somoclu::som::{Codebook, Grid, GridType, MapType, Neighborhood};
+use somoclu::sparse::Csr;
+use somoclu::util::rng::Rng;
+use somoclu::util::timer::{bench, bench_scale, print_row};
+
+fn main() {
+    let scale = bench_scale(1.0);
+    common::banner("micro: kernel hot paths", scale);
+    let rows = (2048.0 * scale) as usize;
+    let dims = 256;
+    let side = 20;
+    let grid = Grid::new(side, side, GridType::Square, MapType::Planar);
+    let mut rng = Rng::new(0xabc);
+    let cb = Codebook::random_init(grid.node_count(), dims, &mut rng);
+    let data = somoclu::data::random_dense(rows, dims, &mut rng);
+    let nb = Neighborhood::gaussian(false);
+
+    println!(
+        "\nworkload: rows={rows} dims={dims} map {side}x{side} \
+         ({} nodes)\n",
+        grid.node_count()
+    );
+
+    // Dense epoch (BMU + accumulate).
+    let mut dense = DenseCpuKernel::new(1);
+    let shard = DataShard::Dense {
+        data: &data,
+        dim: dims,
+    };
+    let stats = bench(1, 5, || {
+        dense
+            .epoch_accumulate(shard, &cb, &grid, nb, 5.0, 1.0)
+            .unwrap()
+    });
+    print_row("dense-cpu epoch", rows, &stats);
+    let macs = rows as f64 * grid.node_count() as f64 * dims as f64;
+    println!(
+        "{:>24} {:>12.2} GMAC/s (BMU search bound)",
+        "",
+        macs / stats.min.as_secs_f64() / 1e9
+    );
+
+    // Sparse epoch at 5% density.
+    let m = Csr::random(rows, dims, 0.05, &mut rng);
+    let mut sparse = SparseCpuKernel::new(1);
+    let stats = bench(1, 5, || {
+        sparse
+            .epoch_accumulate(DataShard::Sparse(&m), &cb, &grid, nb, 5.0, 1.0)
+            .unwrap()
+    });
+    print_row("sparse-cpu epoch (5%)", rows, &stats);
+
+    // Radius thresholding effect (compact support shrinks the update).
+    let compact = Neighborhood::gaussian(true);
+    let stats = bench(1, 5, || {
+        dense
+            .epoch_accumulate(shard, &cb, &grid, compact, 2.0, 1.0)
+            .unwrap()
+    });
+    print_row("dense epoch r=2 compact", rows, &stats);
+
+    // Accel path, split into stages.
+    if Manifest::default_dir().join("manifest.json").exists() {
+        let mut accel =
+            somoclu::kernels::accel::AccelKernel::from_env().unwrap();
+        // Warm: includes artifact compile.
+        let t0 = std::time::Instant::now();
+        accel
+            .epoch_accumulate(shard, &cb, &grid, nb, 5.0, 1.0)
+            .unwrap();
+        println!(
+            "{:<24} {:>12}  first call (incl. HLO compile) {:?}",
+            "accel-xla epoch", rows, t0.elapsed()
+        );
+        let stats = bench(0, 3, || {
+            accel
+                .epoch_accumulate(shard, &cb, &grid, nb, 5.0, 1.0)
+                .unwrap()
+        });
+        print_row("accel-xla epoch (warm)", rows, &stats);
+        println!(
+            "{:>24} note: interpret-mode Pallas on CPU — structural bench \
+             only, not a TPU time estimate",
+            ""
+        );
+    } else {
+        println!("accel rows skipped: run `make artifacts`");
+    }
+
+    // U-matrix.
+    let stats = bench(1, 10, || {
+        somoclu::som::umatrix::umatrix(&grid, &cb, 1)
+    });
+    print_row("umatrix", grid.node_count(), &stats);
+
+    // Baseline per-epoch cost for context.
+    let small = &data[..512.min(rows) * dims];
+    let gridb = Grid::new(side, side, GridType::Square, MapType::Planar);
+    let cbb = Codebook::sample_init(
+        gridb.node_count(),
+        dims,
+        small,
+        small.len() / dims,
+        &mut rng,
+    );
+    let radius = somoclu::som::Schedule::new(10.0, 1.0, somoclu::som::Cooling::Linear, 2);
+    let alpha = somoclu::som::Schedule::new(0.5, 0.02, somoclu::som::Cooling::Linear, 2);
+    let stats = bench(0, 3, || {
+        somoclu::baseline::train_online(
+            &gridb,
+            cbb.clone(),
+            small,
+            dims,
+            1,
+            radius,
+            alpha,
+            nb,
+        )
+    });
+    print_row("baseline online epoch", small.len() / dims, &stats);
+}

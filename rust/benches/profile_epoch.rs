@@ -1,0 +1,24 @@
+//! Internal profiling helper (not a figure bench): runs many dense
+//! epochs so `perf record` gets a clean profile of the hot path.
+use somoclu::kernels::dense_cpu::DenseCpuKernel;
+use somoclu::kernels::{DataShard, TrainingKernel};
+use somoclu::som::{Codebook, Grid, GridType, MapType, Neighborhood};
+use somoclu::util::rng::Rng;
+
+fn main() {
+    let (rows, dims, side) = (2048usize, 256usize, 20usize);
+    let grid = Grid::new(side, side, GridType::Square, MapType::Planar);
+    let mut rng = Rng::new(0xabc);
+    let cb = Codebook::random_init(grid.node_count(), dims, &mut rng);
+    let data = somoclu::data::random_dense(rows, dims, &mut rng);
+    let mut k = DenseCpuKernel::new(1);
+    let shard = DataShard::Dense { data: &data, dim: dims };
+    let t0 = std::time::Instant::now();
+    for _ in 0..30 {
+        std::hint::black_box(
+            k.epoch_accumulate(shard, &cb, &grid, Neighborhood::gaussian(false), 5.0, 1.0)
+                .unwrap(),
+        );
+    }
+    println!("30 epochs in {:?}", t0.elapsed());
+}

@@ -1,0 +1,139 @@
+//! Library API (paper §4.2–4.3): the `trainOneEpoch`-style entry point
+//! plus the interface-binding memory semantics Fig. 7 measures.
+//!
+//! The paper's point: the Python/numpy binding passes f32 pointers
+//! (zero copy), while R and MATLAB default to f64 and "must duplicate all
+//! data structures" converting to the core's f32. We expose both calling
+//! conventions so the Fig. 7 harness can measure exactly that overhead:
+//!
+//! * [`DataInput::BorrowedF32`] — the numpy-style zero-copy path.
+//! * [`DataInput::ConvertedF64`] — the R/MATLAB-style path: an f64 buffer
+//!   converted (allocating a full f32 copy) before training.
+
+use crate::coordinator::config::TrainConfig;
+use crate::coordinator::train::{self, TrainResult};
+use crate::kernels::DataShard;
+use crate::sparse::Csr;
+
+/// Calling-convention variants for dense data (Fig. 7).
+pub enum DataInput<'a> {
+    /// Zero-copy: caller already holds f32 row-major data (Python/numpy
+    /// float32 semantics — "we pass pointers between the two languages").
+    BorrowedF32 { data: &'a [f32], dim: usize },
+    /// Copy-converting: f64 input duplicated into f32 (R/MATLAB
+    /// semantics — "we must convert between double and float arrays").
+    ConvertedF64 { data: &'a [f64], dim: usize },
+    /// Sparse CSR input (always borrowed).
+    Sparse(&'a Csr),
+}
+
+/// Train a map over `input` with `cfg`. The single public entry point
+/// the language bindings would wrap.
+pub fn train(cfg: &TrainConfig, input: DataInput<'_>) -> anyhow::Result<TrainResult> {
+    match input {
+        DataInput::BorrowedF32 { data, dim } => {
+            train::train(cfg, DataShard::Dense { data, dim }, None, None)
+        }
+        DataInput::ConvertedF64 { data, dim } => {
+            // The R/MATLAB duplication: a full-size converted copy lives
+            // for the duration of training (and the result converts back
+            // to f64 in a real binding; we account the input copy, which
+            // dominates).
+            let converted: Vec<f32> = data.iter().map(|&v| v as f32).collect();
+            train::train(
+                cfg,
+                DataShard::Dense {
+                    data: &converted,
+                    dim,
+                },
+                None,
+                None,
+            )
+        }
+        DataInput::Sparse(m) => train::train(cfg, DataShard::Sparse(m), None, None),
+    }
+}
+
+/// One epoch of training against an existing codebook — the literal
+/// `trainOneEpoch` API shape (paper §4.2): the caller owns all state.
+#[allow(clippy::too_many_arguments)]
+pub fn train_one_epoch(
+    cfg: &TrainConfig,
+    shard: DataShard<'_>,
+    codebook: &mut crate::som::Codebook,
+    epoch: usize,
+) -> anyhow::Result<(Vec<u32>, f64)> {
+    let grid = cfg.grid();
+    let radius = cfg.radius_schedule(&grid).at(epoch);
+    let scale = cfg.scale_schedule().at(epoch);
+    let mut kernel = train::make_kernel(cfg)?;
+    let accum = kernel.epoch_accumulate(
+        shard,
+        codebook,
+        &grid,
+        cfg.neighborhood,
+        radius,
+        scale,
+    )?;
+    codebook.apply_batch_update(&accum.num, &accum.den);
+    let rows = shard.rows();
+    Ok((accum.bmus, accum.qe_sum / rows.max(1) as f64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::som::Codebook;
+    use crate::util::rng::Rng;
+
+    fn small_cfg() -> TrainConfig {
+        TrainConfig {
+            rows: 5,
+            cols: 5,
+            epochs: 4,
+            threads: 2,
+            radius0: Some(2.5),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn borrowed_and_converted_agree() {
+        let mut rng = Rng::new(31);
+        let (data, _) = crate::data::gaussian_blobs(50, 4, 3, 0.2, &mut rng);
+        let data64: Vec<f64> = data.iter().map(|&v| v as f64).collect();
+        let cfg = small_cfg();
+        let a = train(&cfg, DataInput::BorrowedF32 { data: &data, dim: 4 }).unwrap();
+        let b = train(&cfg, DataInput::ConvertedF64 { data: &data64, dim: 4 }).unwrap();
+        // f64 -> f32 of an f32-exact value is lossless: identical runs.
+        assert_eq!(a.codebook.weights, b.codebook.weights);
+        assert_eq!(a.bmus, b.bmus);
+    }
+
+    #[test]
+    fn one_epoch_reduces_qe_progressively() {
+        let mut rng = Rng::new(32);
+        let (data, _) = crate::data::gaussian_blobs(60, 4, 3, 0.1, &mut rng);
+        let cfg = small_cfg();
+        let grid = cfg.grid();
+        let mut cb = Codebook::random_init(grid.node_count(), 4, &mut rng);
+        let shard = DataShard::Dense { data: &data, dim: 4 };
+        let (_, qe0) = train_one_epoch(&cfg, shard, &mut cb, 0).unwrap();
+        let mut qe_last = qe0;
+        for e in 1..cfg.epochs {
+            let (_, qe) = train_one_epoch(&cfg, shard, &mut cb, e).unwrap();
+            qe_last = qe;
+        }
+        assert!(qe_last < qe0, "{qe0} -> {qe_last}");
+    }
+
+    #[test]
+    fn sparse_input_works() {
+        let mut rng = Rng::new(33);
+        let m = Csr::random(40, 16, 0.2, &mut rng);
+        let mut cfg = small_cfg();
+        cfg.kernel = crate::kernels::KernelType::SparseCpu;
+        let res = train(&cfg, DataInput::Sparse(&m)).unwrap();
+        assert_eq!(res.bmus.len(), 40);
+    }
+}

@@ -1,0 +1,136 @@
+//! Single-core online-SOM baseline — the R `kohonen` comparator of
+//! Fig. 5.
+//!
+//! The kohonen package trains the *online* (per-sample) formulation on a
+//! single core, updating every map node after each presented instance —
+//! exactly the work profile our Fig. 5 harness needs to compare against:
+//! "Compared to the R package, even the CPU version is at least ten times
+//! faster." Deliberately unthreaded and unblocked; do not optimize.
+
+use crate::som::{Codebook, Grid, Neighborhood, Schedule};
+
+/// Result of a baseline run.
+pub struct BaselineResult {
+    pub codebook: Codebook,
+    pub bmus: Vec<u32>,
+    pub qe_history: Vec<f64>,
+}
+
+/// kohonen-style init: sample codebook vectors from the data. Like the
+/// package, it *refuses* emergent maps ("if the map has more nodes than
+/// data instances, kohonen exits with an error message") — faithfully
+/// reproduced so the Fig. 5 harness can show the same limitation.
+pub fn kohonen_like_init(
+    grid: &Grid,
+    data: &[f32],
+    dim: usize,
+    rng: &mut crate::util::rng::Rng,
+) -> Result<Codebook, String> {
+    let rows = data.len() / dim;
+    let nodes = grid.node_count();
+    if nodes > rows {
+        return Err(format!(
+            "kohonen-like baseline cannot initialize {nodes} nodes from \
+             {rows} instances (emergent maps unsupported, like the R package)"
+        ));
+    }
+    Ok(Codebook::sample_init(nodes, dim, data, rows, rng))
+}
+
+/// Train with the online rule (Eq. 4): for each instance, find the BMU
+/// (plain non-Gram distance loop), then update *every* node's weights.
+pub fn train_online(
+    grid: &Grid,
+    mut codebook: Codebook,
+    data: &[f32],
+    dim: usize,
+    epochs: usize,
+    radius: Schedule,
+    alpha: Schedule,
+    neighborhood: Neighborhood,
+) -> BaselineResult {
+    let rows = data.len() / dim;
+    assert_eq!(codebook.dim, dim);
+    let mut bmus = vec![0u32; rows];
+    let mut qe_history = Vec::with_capacity(epochs);
+
+    for epoch in 0..epochs {
+        let r = radius.at(epoch);
+        let a = alpha.at(epoch);
+        let mut qe_sum = 0.0f64;
+        for row in 0..rows {
+            let x = &data[row * dim..(row + 1) * dim];
+            // BMU search without the Gram trick — the naive profile.
+            let (mut best, mut best_d) = (0usize, f32::INFINITY);
+            for n in 0..codebook.nodes {
+                let mut d2 = 0.0f32;
+                for (xi, wi) in x.iter().zip(codebook.row(n)) {
+                    let d = xi - wi;
+                    d2 += d * d;
+                }
+                if d2 < best_d {
+                    best_d = d2;
+                    best = n;
+                }
+            }
+            bmus[row] = best as u32;
+            qe_sum += (best_d as f64).sqrt();
+            // Online update of every node (the unthresholded full-map
+            // sweep that makes the package slow).
+            for n in 0..codebook.nodes {
+                let h = neighborhood.weight(grid.distance(best, n), r);
+                if h > 0.0 {
+                    let w = codebook.row_mut(n);
+                    for (wi, xi) in w.iter_mut().zip(x) {
+                        *wi += a * h * (xi - *wi);
+                    }
+                }
+            }
+        }
+        qe_history.push(qe_sum / rows as f64);
+    }
+
+    BaselineResult {
+        codebook,
+        bmus,
+        qe_history,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::som::{Cooling, GridType, MapType};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn online_converges_on_blobs() {
+        let mut rng = Rng::new(21);
+        let (data, _) = crate::data::gaussian_blobs(120, 4, 3, 0.1, &mut rng);
+        let grid = Grid::new(5, 5, GridType::Square, MapType::Planar);
+        let cb = kohonen_like_init(&grid, &data, 4, &mut rng).unwrap();
+        let res = train_online(
+            &grid,
+            cb,
+            &data,
+            4,
+            8,
+            Schedule::new(2.5, 0.5, Cooling::Linear, 8),
+            Schedule::new(0.5, 0.02, Cooling::Linear, 8),
+            Neighborhood::gaussian(false),
+        );
+        assert!(
+            res.qe_history.last().unwrap() < &(res.qe_history[0] * 0.8),
+            "{:?}",
+            res.qe_history
+        );
+    }
+
+    #[test]
+    fn refuses_emergent_maps_like_kohonen() {
+        let mut rng = Rng::new(22);
+        let grid = Grid::new(20, 20, GridType::Square, MapType::Planar);
+        let data = vec![0.0f32; 10 * 4]; // 10 rows < 400 nodes
+        assert!(kohonen_like_init(&grid, &data, 4, &mut rng).is_err());
+    }
+}

@@ -1,0 +1,255 @@
+//! The somoclu command-line interface (paper §4.1), plus flags for the
+//! simulated cluster (`--ranks` replaces `mpirun -np`) and determinism
+//! (`--seed`).
+//!
+//! ```text
+//! somoclu [OPTIONs] INPUT_FILE OUTPUT_PREFIX
+//! ```
+
+use crate::cluster::netmodel::NetModel;
+use crate::coordinator::config::TrainConfig;
+use crate::io::output::SnapshotLevel;
+use crate::kernels::KernelType;
+use crate::util::argparse::{ArgError, ArgSpec, Parsed};
+
+pub fn arg_spec() -> ArgSpec {
+    ArgSpec::new()
+        .opt("codebook", Some('c'), Some("codebook"),
+             "initial code book file (default: random init)", None)
+        .opt("epochs", Some('e'), Some("epochs"),
+             "number of training epochs", Some("10"))
+        .opt("grid", Some('g'), Some("grid"),
+             "grid type: square | hexagonal", Some("square"))
+        .opt("kernel", Some('k'), Some("kernel"),
+             "kernel: 0 dense CPU, 1 accel (XLA), 2 sparse CPU, 3 hybrid", Some("0"))
+        .opt("map", Some('m'), Some("map"),
+             "map type: planar | toroid", Some("planar"))
+        .opt("neighborhood", Some('n'), Some("neighborhood"),
+             "neighborhood function: gaussian | bubble", Some("gaussian"))
+        .opt("compact", Some('p'), Some("compact"),
+             "1 = cut updates beyond the current radius", Some("0"))
+        .opt("radius-cooling", Some('t'), Some("radius-cooling"),
+             "radius cooling: linear | exponential", Some("linear"))
+        .opt("radius0", Some('r'), Some("radius0"),
+             "start radius (default: half of smaller map side)", None)
+        .opt("radiusN", Some('R'), Some("radiusN"),
+             "final radius", Some("1"))
+        .opt("scale-cooling", Some('T'), Some("scale-cooling"),
+             "learning-rate cooling: linear | exponential", Some("linear"))
+        .opt("scale0", Some('l'), Some("scale0"),
+             "starting learning rate", Some("1.0"))
+        .opt("scaleN", Some('L'), Some("scaleN"),
+             "final learning rate", Some("0.01"))
+        .opt("snapshots", Some('s'), Some("snapshots"),
+             "interim files: 0 none, 1 U-matrix, 2 +codebook/BMUs", Some("0"))
+        .opt("columns", Some('x'), Some("columns"),
+             "number of map columns", Some("50"))
+        .opt("rows", Some('y'), Some("rows"),
+             "number of map rows", Some("50"))
+        .opt("ranks", None, Some("ranks"),
+             "simulated cluster ranks (replaces `mpirun -np N`)", Some("1"))
+        .opt("threads", None, Some("threads"),
+             "worker threads per rank (default: all cores)", None)
+        .opt("initialization", None, Some("initialization"),
+             "codebook init: random | pca", Some("random"))
+        .opt("seed", None, Some("seed"),
+             "RNG seed for codebook init", Some("1347440723"))
+        .opt("net", None, Some("net"),
+             "cluster interconnect model: ideal | 10g", Some("ideal"))
+        .flag("help", Some('h'), Some("help"), "print usage")
+        .flag("verbose", Some('v'), Some("verbose"), "per-epoch progress")
+        .positional("INPUT_FILE", "dense or sparse (libsvm) training data")
+        .positional("OUTPUT_PREFIX", "prefix for .wts/.bm/.umx outputs")
+}
+
+/// Everything main() needs beyond TrainConfig.
+#[derive(Debug, Clone)]
+pub struct CliOptions {
+    pub config: TrainConfig,
+    pub input_file: String,
+    pub output_prefix: String,
+    pub initial_codebook: Option<String>,
+    pub net: NetModel,
+    pub verbose: bool,
+}
+
+fn bad(opt: &str, val: &str, why: String) -> ArgError {
+    ArgError::BadValue {
+        opt: opt.into(),
+        val: val.into(),
+        why,
+    }
+}
+
+pub fn parse_cli(parsed: &Parsed) -> Result<CliOptions, ArgError> {
+    let mut cfg = TrainConfig {
+        epochs: parsed.parse_as::<usize>("epochs")?,
+        rows: parsed.parse_as::<usize>("rows")?,
+        cols: parsed.parse_as::<usize>("columns")?,
+        radius_n: parsed.parse_as::<f32>("radiusN")?,
+        scale0: parsed.parse_as::<f32>("scale0")?,
+        scale_n: parsed.parse_as::<f32>("scaleN")?,
+        ranks: parsed.parse_as::<usize>("ranks")?,
+        seed: parsed.parse_as::<u64>("seed")?,
+        ..Default::default()
+    };
+
+    let gv = parsed.get("grid").unwrap();
+    cfg.grid_type = gv.parse().map_err(|e| bad("grid", gv, e))?;
+    let mv = parsed.get("map").unwrap();
+    cfg.map_type = mv.parse().map_err(|e| bad("map", mv, e))?;
+    let kv = parsed.get("kernel").unwrap();
+    cfg.kernel = kv.parse().map_err(|e| bad("kernel", kv, e))?;
+    let tv = parsed.get("radius-cooling").unwrap();
+    cfg.radius_cooling = tv.parse().map_err(|e| bad("radius-cooling", tv, e))?;
+    let sv = parsed.get("scale-cooling").unwrap();
+    cfg.scale_cooling = sv.parse().map_err(|e| bad("scale-cooling", sv, e))?;
+    let nv = parsed.get("neighborhood").unwrap();
+    let kind: crate::som::NeighborhoodKind =
+        nv.parse().map_err(|e| bad("neighborhood", nv, e))?;
+    let compact = parsed.parse_as::<u8>("compact")? != 0;
+    cfg.neighborhood = match kind {
+        crate::som::NeighborhoodKind::Gaussian => {
+            crate::som::Neighborhood::gaussian(compact)
+        }
+        crate::som::NeighborhoodKind::Bubble => crate::som::Neighborhood::bubble(),
+    };
+    if let Some(r0) = parsed.get("radius0") {
+        cfg.radius0 =
+            Some(r0.parse::<f32>().map_err(|e| bad("radius0", r0, e.to_string()))?);
+    }
+    if let Some(t) = parsed.get("threads") {
+        cfg.threads = t
+            .parse::<usize>()
+            .map_err(|e| bad("threads", t, e.to_string()))?;
+    }
+    let iv = parsed.get("initialization").unwrap();
+    cfg.initialization = iv.parse().map_err(|e| bad("initialization", iv, e))?;
+    let snap = parsed.get("snapshots").unwrap();
+    cfg.snapshot = snap
+        .parse::<SnapshotLevel>()
+        .map_err(|e| bad("snapshots", snap, e))?;
+
+    let netv = parsed.get("net").unwrap();
+    let net = match netv {
+        "ideal" => NetModel::ideal(),
+        "10g" => NetModel::ethernet_10g(),
+        other => return Err(bad("net", other, "want ideal | 10g".into())),
+    };
+
+    if matches!(cfg.kernel, KernelType::Accel | KernelType::Hybrid) && cfg.ranks > 1 {
+        return Err(bad(
+            "ranks",
+            &cfg.ranks.to_string(),
+            "accel kernel is single-node only (Fig. 8 uses the CPU kernel)".into(),
+        ));
+    }
+
+    Ok(CliOptions {
+        config: cfg,
+        input_file: parsed.positional(0).to_string(),
+        output_prefix: parsed.positional(1).to_string(),
+        initial_codebook: parsed.get("codebook").map(str::to_string),
+        net,
+        verbose: parsed.flag("verbose"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::som::{Cooling, GridType, MapType, NeighborhoodKind};
+
+    fn parse(args: &[&str]) -> CliOptions {
+        let spec = arg_spec();
+        let parsed = spec.parse(args.iter().map(|s| s.to_string())).unwrap();
+        parse_cli(&parsed).unwrap()
+    }
+
+    #[test]
+    fn paper_example_invocation() {
+        // "$ Somoclu data/rgbs.txt data/rgbs" (all defaults)
+        let o = parse(&["data/rgbs.txt", "data/rgbs"]);
+        assert_eq!(o.config.rows, 50);
+        assert_eq!(o.config.cols, 50);
+        assert_eq!(o.config.epochs, 10);
+        assert_eq!(o.config.kernel, KernelType::DenseCpu);
+        assert_eq!(o.input_file, "data/rgbs.txt");
+        assert_eq!(o.output_prefix, "data/rgbs");
+    }
+
+    #[test]
+    fn paper_example_with_flags() {
+        // "mpirun -np 4 ... Somoclu -k 0 --rows 20 --columns 20 in out"
+        let o = parse(&[
+            "--ranks", "4", "-k", "0", "--rows", "20", "--columns", "20",
+            "in.txt", "out",
+        ]);
+        assert_eq!(o.config.ranks, 4);
+        assert_eq!((o.config.rows, o.config.cols), (20, 20));
+    }
+
+    #[test]
+    fn all_knobs() {
+        let o = parse(&[
+            "-e", "25", "-g", "hexagonal", "-m", "toroid", "-n", "bubble",
+            "-p", "1", "-t", "exponential", "-r", "12", "-R", "2",
+            "-T", "exponential", "-l", "0.5", "-L", "0.05", "-s", "2",
+            "-k", "2", "--threads", "3", "--seed", "99", "in", "out",
+        ]);
+        let c = &o.config;
+        assert_eq!(c.epochs, 25);
+        assert_eq!(c.grid_type, GridType::Hexagonal);
+        assert_eq!(c.map_type, MapType::Toroid);
+        assert_eq!(c.neighborhood.kind, NeighborhoodKind::Bubble);
+        assert_eq!(c.radius_cooling, Cooling::Exponential);
+        assert_eq!(c.radius0, Some(12.0));
+        assert_eq!(c.radius_n, 2.0);
+        assert_eq!(c.scale_cooling, Cooling::Exponential);
+        assert_eq!(c.scale0, 0.5);
+        assert_eq!(c.scale_n, 0.05);
+        assert_eq!(c.snapshot, SnapshotLevel::Full);
+        assert_eq!(c.kernel, KernelType::SparseCpu);
+        assert_eq!(c.threads, 3);
+        assert_eq!(c.seed, 99);
+    }
+
+    #[test]
+    fn initialization_flag() {
+        let o = parse(&["--initialization", "pca", "in", "out"]);
+        assert_eq!(
+            o.config.initialization,
+            crate::coordinator::config::Initialization::Pca
+        );
+        let spec = arg_spec();
+        let parsed = spec
+            .parse(["--initialization", "magic", "in", "out"].map(String::from))
+            .unwrap();
+        assert!(parse_cli(&parsed).is_err());
+    }
+
+    #[test]
+    fn compact_gaussian() {
+        let o = parse(&["-p", "1", "in", "out"]);
+        assert!(o.config.neighborhood.compact_support);
+        assert_eq!(o.config.neighborhood.artifact_kind(), "gaussian_compact");
+    }
+
+    #[test]
+    fn accel_multirank_rejected() {
+        let spec = arg_spec();
+        let parsed = spec
+            .parse(["-k", "1", "--ranks", "4", "in", "out"].map(String::from))
+            .unwrap();
+        assert!(parse_cli(&parsed).is_err());
+    }
+
+    #[test]
+    fn bad_enum_value_rejected() {
+        let spec = arg_spec();
+        let parsed = spec
+            .parse(["-g", "triangular", "in", "out"].map(String::from))
+            .unwrap();
+        assert!(parse_cli(&parsed).is_err());
+    }
+}

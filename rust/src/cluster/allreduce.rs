@@ -1,0 +1,195 @@
+//! Training collectives on top of rank endpoints, mirroring the MPI
+//! calls the paper replaced MapReduce with (§3):
+//!
+//! * `reduce_sum_to_root` — MPI_Reduce(+) of f32 buffers: slaves send
+//!   local Eq. 6 accumulators, the master sums ("the accumulation of
+//!   local weights into a new global code book by one single process on
+//!   the master node").
+//! * `broadcast_from_root` — MPI_Bcast: "the new code book is broadcast
+//!   to all slave nodes".
+//! * `gather_u32_to_root` — MPI_Gather: BMU collection for output.
+//! * `reduce_f64_sum` — scalar reduction (QE sum).
+//! * `barrier` — token ring, used by tests.
+
+use crate::cluster::comm::{CollectiveMsg, Endpoint};
+
+pub const ROOT: usize = 0;
+
+/// Sum `buf` across ranks into the root's buffer. Non-root buffers are
+/// left untouched; returns true on the root.
+pub fn reduce_sum_to_root(ep: &mut Endpoint, buf: &mut [f32]) -> bool {
+    if ep.rank == ROOT {
+        for from in 1..ep.size {
+            let part = ep.recv(from).into_f32();
+            assert_eq!(part.len(), buf.len(), "reduce length mismatch");
+            for (a, b) in buf.iter_mut().zip(part) {
+                *a += b;
+            }
+        }
+        true
+    } else {
+        ep.send(ROOT, CollectiveMsg::F32(buf.to_vec()));
+        false
+    }
+}
+
+/// Broadcast the root's buffer to every rank (in place).
+pub fn broadcast_from_root(ep: &mut Endpoint, buf: &mut [f32]) {
+    if ep.rank == ROOT {
+        for to in 1..ep.size {
+            ep.send(to, CollectiveMsg::F32(buf.to_vec()));
+        }
+    } else {
+        let v = ep.recv(ROOT).into_f32();
+        assert_eq!(v.len(), buf.len(), "broadcast length mismatch");
+        buf.copy_from_slice(&v);
+    }
+}
+
+/// Gather variable-length u32 buffers to the root in rank order.
+pub fn gather_u32_to_root(ep: &mut Endpoint, local: Vec<u32>) -> Option<Vec<Vec<u32>>> {
+    if ep.rank == ROOT {
+        let mut all = Vec::with_capacity(ep.size);
+        all.push(local);
+        for from in 1..ep.size {
+            all.push(ep.recv(from).into_u32());
+        }
+        Some(all)
+    } else {
+        ep.send(ROOT, CollectiveMsg::U32(local));
+        None
+    }
+}
+
+/// Sum an f64 scalar across ranks; every rank receives the total.
+pub fn allreduce_f64_sum(ep: &mut Endpoint, value: f64) -> f64 {
+    if ep.rank == ROOT {
+        let mut total = value;
+        for from in 1..ep.size {
+            total += ep.recv(from).into_f64();
+        }
+        for to in 1..ep.size {
+            ep.send(to, CollectiveMsg::F64(total));
+        }
+        total
+    } else {
+        ep.send(ROOT, CollectiveMsg::F64(value));
+        ep.recv(ROOT).into_f64()
+    }
+}
+
+/// Simple barrier: everyone checks in at the root, root releases.
+pub fn barrier(ep: &mut Endpoint) {
+    if ep.rank == ROOT {
+        for from in 1..ep.size {
+            let _ = ep.recv(from);
+        }
+        for to in 1..ep.size {
+            ep.send(to, CollectiveMsg::Token);
+        }
+    } else {
+        ep.send(ROOT, CollectiveMsg::Token);
+        let _ = ep.recv(ROOT);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::comm::World;
+    use crate::cluster::netmodel::NetModel;
+    use crate::util::threadpool::run_concurrent;
+
+    fn with_world<T: Send + 'static>(
+        size: usize,
+        f: impl Fn(Endpoint) -> T + Send + Sync + Clone + 'static,
+    ) -> Vec<T> {
+        let mut world = World::new(size, NetModel::ideal());
+        let eps = world.take_endpoints();
+        let tasks: Vec<_> = eps
+            .into_iter()
+            .map(|ep| {
+                let f = f.clone();
+                move || f(ep)
+            })
+            .collect();
+        run_concurrent(tasks)
+    }
+
+    #[test]
+    fn reduce_sums_on_root_only() {
+        let out = with_world(4, |mut ep| {
+            let mut buf = vec![ep.rank as f32, 1.0];
+            let is_root = reduce_sum_to_root(&mut ep, &mut buf);
+            (is_root, buf)
+        });
+        assert_eq!(out[0], (true, vec![0.0 + 1.0 + 2.0 + 3.0, 4.0]));
+        for (r, (is_root, buf)) in out.iter().enumerate().skip(1) {
+            assert!(!is_root);
+            assert_eq!(buf, &vec![r as f32, 1.0]);
+        }
+    }
+
+    #[test]
+    fn broadcast_propagates() {
+        let out = with_world(3, |mut ep| {
+            let mut buf = if ep.rank == ROOT {
+                vec![42.0, -1.0]
+            } else {
+                vec![0.0, 0.0]
+            };
+            broadcast_from_root(&mut ep, &mut buf);
+            buf
+        });
+        for buf in out {
+            assert_eq!(buf, vec![42.0, -1.0]);
+        }
+    }
+
+    #[test]
+    fn reduce_then_broadcast_equals_serial_sum() {
+        // The full per-epoch pattern: every rank ends with the total.
+        let out = with_world(5, |mut ep| {
+            let mut buf = vec![(ep.rank + 1) as f32; 3];
+            reduce_sum_to_root(&mut ep, &mut buf);
+            broadcast_from_root(&mut ep, &mut buf);
+            buf
+        });
+        let want = vec![15.0; 3];
+        for buf in out {
+            assert_eq!(buf, want);
+        }
+    }
+
+    #[test]
+    fn gather_preserves_rank_order_and_lengths() {
+        let out = with_world(4, |mut ep| {
+            let local: Vec<u32> = (0..=ep.rank as u32).collect();
+            gather_u32_to_root(&mut ep, local)
+        });
+        let root = out[0].as_ref().unwrap();
+        assert_eq!(root.len(), 4);
+        for (r, v) in root.iter().enumerate() {
+            assert_eq!(v, &(0..=r as u32).collect::<Vec<_>>());
+        }
+        assert!(out[1..].iter().all(|o| o.is_none()));
+    }
+
+    #[test]
+    fn allreduce_scalar() {
+        let out = with_world(4, |mut ep| {
+            let r = ep.rank as f64;
+            allreduce_f64_sum(&mut ep, r)
+        });
+        assert!(out.iter().all(|&v| v == 6.0));
+    }
+
+    #[test]
+    fn barrier_completes() {
+        let out = with_world(6, |mut ep| {
+            barrier(&mut ep);
+            ep.rank
+        });
+        assert_eq!(out.len(), 6);
+    }
+}

@@ -1,0 +1,218 @@
+//! Rank-to-rank messaging: the MPI substitute.
+//!
+//! A `World` builds a full mesh of channels between `size` ranks; each
+//! rank takes its `Endpoint` into its thread. Sends are byte-counted
+//! (per-rank totals, read by the Fig. 8 harness) and optionally delayed
+//! by the `NetModel` to simulate interconnect cost.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use crate::cluster::netmodel::NetModel;
+
+pub type Rank = usize;
+
+/// Payloads exchanged by the training collectives. Byte costs match what
+/// MPI would put on the wire for the same buffers.
+#[derive(Clone, Debug)]
+pub enum CollectiveMsg {
+    F32(Vec<f32>),
+    U32(Vec<u32>),
+    F64(f64),
+    /// Control/empty message (barrier token).
+    Token,
+}
+
+impl CollectiveMsg {
+    pub fn byte_cost(&self) -> usize {
+        match self {
+            CollectiveMsg::F32(v) => v.len() * 4,
+            CollectiveMsg::U32(v) => v.len() * 4,
+            CollectiveMsg::F64(_) => 8,
+            CollectiveMsg::Token => 1,
+        }
+    }
+
+    pub fn into_f32(self) -> Vec<f32> {
+        match self {
+            CollectiveMsg::F32(v) => v,
+            other => panic!("expected F32 message, got {other:?}"),
+        }
+    }
+
+    pub fn into_u32(self) -> Vec<u32> {
+        match self {
+            CollectiveMsg::U32(v) => v,
+            other => panic!("expected U32 message, got {other:?}"),
+        }
+    }
+
+    pub fn into_f64(self) -> f64 {
+        match self {
+            CollectiveMsg::F64(v) => v,
+            other => panic!("expected F64 message, got {other:?}"),
+        }
+    }
+}
+
+/// Shared communication statistics (read after the run).
+#[derive(Debug, Default)]
+pub struct CommStats {
+    pub bytes_sent: AtomicU64,
+    pub messages_sent: AtomicU64,
+}
+
+/// One rank's endpoint: senders to every rank, receivers from every rank.
+pub struct Endpoint {
+    pub rank: Rank,
+    pub size: usize,
+    txs: Vec<Sender<CollectiveMsg>>,
+    rxs: Vec<Receiver<CollectiveMsg>>,
+    stats: Arc<CommStats>,
+    net: Arc<NetModel>,
+}
+
+impl Endpoint {
+    /// Send `msg` to `to` (applies the network-model delay and counts
+    /// bytes). Sending to self is allowed (loopback, no delay).
+    pub fn send(&self, to: Rank, msg: CollectiveMsg) {
+        let bytes = msg.byte_cost();
+        if to != self.rank {
+            self.stats.bytes_sent.fetch_add(bytes as u64, Ordering::Relaxed);
+            self.stats.messages_sent.fetch_add(1, Ordering::Relaxed);
+            self.net.transfer_delay(bytes);
+        }
+        self.txs[to]
+            .send(msg)
+            .expect("peer endpoint dropped before receiving");
+    }
+
+    /// Blocking receive from `from`.
+    pub fn recv(&mut self, from: Rank) -> CollectiveMsg {
+        self.rxs[from]
+            .recv()
+            .expect("peer endpoint dropped before sending")
+    }
+}
+
+/// The communicator: build once, split into endpoints.
+pub struct World {
+    pub size: usize,
+    pub stats: Arc<CommStats>,
+    endpoints: Vec<Endpoint>,
+}
+
+impl World {
+    pub fn new(size: usize, net: NetModel) -> Self {
+        assert!(size > 0);
+        let stats = Arc::new(CommStats::default());
+        let net = Arc::new(net);
+        // mesh[from][to]
+        let mut senders: Vec<Vec<Option<Sender<CollectiveMsg>>>> =
+            (0..size).map(|_| (0..size).map(|_| None).collect()).collect();
+        let mut receivers: Vec<Vec<Option<Receiver<CollectiveMsg>>>> =
+            (0..size).map(|_| (0..size).map(|_| None).collect()).collect();
+        for from in 0..size {
+            for to in 0..size {
+                let (tx, rx) = channel();
+                senders[from][to] = Some(tx);
+                receivers[to][from] = Some(rx);
+            }
+        }
+        let endpoints = senders
+            .into_iter()
+            .zip(receivers)
+            .enumerate()
+            .map(|(rank, (txs, rxs))| Endpoint {
+                rank,
+                size,
+                txs: txs.into_iter().map(Option::unwrap).collect(),
+                rxs: rxs.into_iter().map(Option::unwrap).collect(),
+                stats: stats.clone(),
+                net: net.clone(),
+            })
+            .collect();
+        World {
+            size,
+            stats,
+            endpoints,
+        }
+    }
+
+    /// Take the per-rank endpoints (consumes the world's handles; stats
+    /// remain readable through `self.stats`).
+    pub fn take_endpoints(&mut self) -> Vec<Endpoint> {
+        std::mem::take(&mut self.endpoints)
+    }
+
+    pub fn bytes_sent(&self) -> u64 {
+        self.stats.bytes_sent.load(Ordering::Relaxed)
+    }
+
+    pub fn messages_sent(&self) -> u64 {
+        self.stats.messages_sent.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::threadpool::run_concurrent;
+
+    #[test]
+    fn ping_pong() {
+        let mut world = World::new(2, NetModel::ideal());
+        let mut eps = world.take_endpoints();
+        let e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        let out = run_concurrent(vec![
+            Box::new(move || {
+                let mut e0 = e0;
+                e0.send(1, CollectiveMsg::F32(vec![1.0, 2.0]));
+                e0.recv(1).into_f64()
+            }) as Box<dyn FnOnce() -> f64 + Send>,
+            Box::new(move || {
+                let mut e1 = e1;
+                let v = e1.recv(0).into_f32();
+                e1.send(0, CollectiveMsg::F64(v.iter().sum::<f32>() as f64));
+                0.0
+            }),
+        ]);
+        assert_eq!(out[0], 3.0);
+        assert_eq!(world.bytes_sent(), 8 + 8);
+        assert_eq!(world.messages_sent(), 2);
+    }
+
+    #[test]
+    fn loopback_not_counted() {
+        let mut world = World::new(1, NetModel::ideal());
+        let mut eps = world.take_endpoints();
+        let mut e = eps.pop().unwrap();
+        e.send(0, CollectiveMsg::U32(vec![1, 2, 3]));
+        assert_eq!(e.recv(0).into_u32(), vec![1, 2, 3]);
+        assert_eq!(world.bytes_sent(), 0);
+    }
+
+    #[test]
+    fn messages_ordered_per_pair() {
+        let mut world = World::new(2, NetModel::ideal());
+        let mut eps = world.take_endpoints();
+        let e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        let got = run_concurrent(vec![
+            Box::new(move || {
+                let e0 = e0;
+                for i in 0..100u32 {
+                    e0.send(1, CollectiveMsg::U32(vec![i]));
+                }
+                Vec::new()
+            }) as Box<dyn FnOnce() -> Vec<u32> + Send>,
+            Box::new(move || {
+                let mut e1 = e1;
+                (0..100).map(|_| e1.recv(0).into_u32()[0]).collect()
+            }),
+        ]);
+        assert_eq!(got[1], (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,21 @@
+//! Simulated distributed runtime — the paper's MPI layer (§3.2).
+//!
+//! The paper's communication structure is deliberately simple: data is
+//! sharded once ("we can distribute equally sized parts of the data to
+//! each node, without any further communication of training data later
+//! on"); each epoch the slaves send local weight updates to the master,
+//! the master accumulates, and the new code book is broadcast.
+//!
+//! We reproduce that structure with one OS thread per rank connected by
+//! message channels. Every message is byte-counted, and an optional
+//! latency/bandwidth network model injects transfer delay, so the Fig. 8
+//! scaling experiment preserves the compute-to-communication ratio that
+//! makes the paper's scaling near-linear (see DESIGN.md §3).
+
+pub mod allreduce;
+pub mod comm;
+pub mod netmodel;
+pub mod runner;
+
+pub use comm::{CollectiveMsg, Endpoint, Rank, World};
+pub use netmodel::NetModel;

@@ -1,0 +1,91 @@
+//! Interconnect cost model for the simulated cluster.
+//!
+//! Classic alpha-beta model: transferring B bytes costs
+//! `latency + B / bandwidth`. With `NetModel::ideal()` transfers are
+//! free (pure shared-memory simulation); `NetModel::ethernet_10g()` etc.
+//! approximate real fabrics so the Fig. 8 scaling curve includes a
+//! realistic communication term.
+
+use std::time::Duration;
+
+#[derive(Clone, Debug)]
+pub struct NetModel {
+    /// Per-message latency (alpha).
+    pub latency: Duration,
+    /// Bytes per second (beta); `f64::INFINITY` = free.
+    pub bandwidth: f64,
+}
+
+impl NetModel {
+    /// Zero-cost interconnect (default for tests).
+    pub fn ideal() -> Self {
+        NetModel {
+            latency: Duration::ZERO,
+            bandwidth: f64::INFINITY,
+        }
+    }
+
+    /// 10 GbE-class fabric: ~50 µs latency, ~1.1 GiB/s effective.
+    pub fn ethernet_10g() -> Self {
+        NetModel {
+            latency: Duration::from_micros(50),
+            bandwidth: 1.1e9,
+        }
+    }
+
+    /// AWS cg1.4xlarge-era 10 GbE (the paper's testbed interconnect).
+    pub fn aws_cg1() -> Self {
+        Self::ethernet_10g()
+    }
+
+    /// Cost of transferring `bytes`.
+    pub fn cost(&self, bytes: usize) -> Duration {
+        if self.bandwidth.is_infinite() && self.latency.is_zero() {
+            return Duration::ZERO;
+        }
+        let transfer = if self.bandwidth.is_infinite() {
+            Duration::ZERO
+        } else {
+            Duration::from_secs_f64(bytes as f64 / self.bandwidth)
+        };
+        self.latency + transfer
+    }
+
+    /// Block the calling (sender) thread for the modeled duration.
+    pub fn transfer_delay(&self, bytes: usize) {
+        let d = self.cost(bytes);
+        if !d.is_zero() {
+            std::thread::sleep(d);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_is_free() {
+        let m = NetModel::ideal();
+        assert_eq!(m.cost(1 << 30), Duration::ZERO);
+    }
+
+    #[test]
+    fn alpha_beta_sum() {
+        let m = NetModel {
+            latency: Duration::from_millis(1),
+            bandwidth: 1e6, // 1 MB/s
+        };
+        let c = m.cost(500_000); // 0.5 s transfer + 1 ms
+        assert!((c.as_secs_f64() - 0.501).abs() < 1e-6);
+    }
+
+    #[test]
+    fn latency_only() {
+        let m = NetModel {
+            latency: Duration::from_micros(10),
+            bandwidth: f64::INFINITY,
+        };
+        assert_eq!(m.cost(12345), Duration::from_micros(10));
+    }
+}

@@ -1,0 +1,343 @@
+//! Distributed training driver (paper §3.2): shard once, per-epoch
+//! reduce-accumulators-to-master + broadcast-codebook, gather BMUs.
+//!
+//! Each rank runs on its own OS thread with its own codebook copy — the
+//! MPI-process memory model whose duplication cost the paper contrasts
+//! with OpenMP threads. Within a rank, the kernel still uses
+//! `threads_per_rank` workers (the paper's hybrid kernel shape).
+
+use std::time::Instant;
+
+use crate::cluster::allreduce::{
+    allreduce_f64_sum, broadcast_from_root, gather_u32_to_root, reduce_sum_to_root,
+};
+use crate::cluster::comm::World;
+use crate::cluster::netmodel::NetModel;
+use crate::coordinator::config::TrainConfig;
+use crate::coordinator::train::{init_codebook, EpochStats, TrainResult};
+use crate::kernels::dense_cpu::DenseCpuKernel;
+use crate::kernels::sparse_cpu::SparseCpuKernel;
+use crate::kernels::{DataShard, KernelType, TrainingKernel};
+use crate::sparse::Csr;
+use crate::util::threadpool::{run_concurrent, split_ranges};
+
+/// Input data for the cluster runner (owned, so shards can move to rank
+/// threads).
+pub enum ClusterData {
+    Dense { data: Vec<f32>, dim: usize },
+    Sparse(Csr),
+}
+
+impl ClusterData {
+    pub fn rows(&self) -> usize {
+        match self {
+            ClusterData::Dense { data, dim } => data.len() / dim,
+            ClusterData::Sparse(m) => m.rows,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            ClusterData::Dense { dim, .. } => *dim,
+            ClusterData::Sparse(m) => m.cols,
+        }
+    }
+
+    /// Split into per-rank shards ("equally sized parts of the data to
+    /// each node, without any further communication of training data").
+    fn shard(self, ranks: usize) -> Vec<ClusterData> {
+        let rows = self.rows();
+        let ranges = split_ranges(rows, ranks);
+        match self {
+            ClusterData::Dense { data, dim } => ranges
+                .into_iter()
+                .map(|r| ClusterData::Dense {
+                    data: data[r.start * dim..r.end * dim].to_vec(),
+                    dim,
+                })
+                .collect(),
+            ClusterData::Sparse(m) => ranges
+                .into_iter()
+                .map(|r| ClusterData::Sparse(m.slice_rows(r)))
+                .collect(),
+        }
+    }
+
+    fn as_shard(&self) -> DataShard<'_> {
+        match self {
+            ClusterData::Dense { data, dim } => DataShard::Dense {
+                data,
+                dim: *dim,
+            },
+            ClusterData::Sparse(m) => DataShard::Sparse(m),
+        }
+    }
+}
+
+/// Communication volume report for the Fig. 8 harness.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    pub ranks: usize,
+    pub bytes_sent: u64,
+    pub messages_sent: u64,
+}
+
+/// Train across `cfg.ranks` simulated nodes. Returns the master's result
+/// plus the communication report.
+pub fn train_cluster(
+    cfg: &TrainConfig,
+    data: ClusterData,
+    net: NetModel,
+) -> anyhow::Result<(TrainResult, ClusterReport)> {
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    anyhow::ensure!(
+        !matches!(cfg.kernel, KernelType::Accel | KernelType::Hybrid)
+            || cfg.ranks == 1,
+        "accel/hybrid kernels are single-node only (the paper benchmarks \
+         multi-node scaling with the CPU kernel; Fig. 8)"
+    );
+    let ranks = cfg.ranks;
+    let grid = cfg.grid();
+    let dim = data.dim();
+    let total_rows = data.rows();
+    anyhow::ensure!(total_rows >= ranks, "fewer rows than ranks");
+
+    // Identical initial codebook on every rank (broadcast-equivalent).
+    let init = match &data {
+        ClusterData::Dense { data: d, dim } => {
+            crate::coordinator::train::init_codebook_with_data(
+                cfg,
+                &grid,
+                DataShard::Dense { data: d, dim: *dim },
+            )?
+        }
+        ClusterData::Sparse(_) => {
+            anyhow::ensure!(
+                cfg.initialization
+                    == crate::coordinator::config::Initialization::Random,
+                "PCA initialization needs dense data"
+            );
+            init_codebook(cfg, &grid, dim)
+        }
+    };
+    let radius_sched = cfg.radius_schedule(&grid);
+    let scale_sched = cfg.scale_schedule();
+
+    let mut world = World::new(ranks, net);
+    let endpoints = world.take_endpoints();
+    let shards = data.shard(ranks);
+    let threads_per_rank = cfg.threads.max(1);
+
+    let t0 = Instant::now();
+    let tasks: Vec<_> = endpoints
+        .into_iter()
+        .zip(shards)
+        .map(|(mut ep, shard)| {
+            let mut codebook = init.clone();
+            let cfg = cfg.clone();
+            let grid = grid.clone();
+            move || -> anyhow::Result<Option<TrainResult>> {
+                let mut kernel: Box<dyn TrainingKernel> = match cfg.kernel {
+                    KernelType::SparseCpu => {
+                        Box::new(SparseCpuKernel::new(threads_per_rank))
+                    }
+                    _ => Box::new(DenseCpuKernel::new(threads_per_rank)),
+                };
+                let rows_local = shard.rows();
+                let mut epochs = Vec::with_capacity(cfg.epochs);
+                let mut bmus_local: Vec<u32> = Vec::new();
+
+                for epoch in 0..cfg.epochs {
+                    let te = Instant::now();
+                    let radius = radius_sched.at(epoch);
+                    let scale = scale_sched.at(epoch);
+                    let mut accum = kernel.epoch_accumulate(
+                        shard.as_shard(),
+                        &codebook,
+                        &grid,
+                        cfg.neighborhood,
+                        radius,
+                        scale,
+                    )?;
+                    bmus_local = accum.bmus;
+
+                    // Slaves send accumulators; master reduces, updates,
+                    // broadcasts the new codebook (the paper's two-way
+                    // master/slave exchange).
+                    let is_root = reduce_sum_to_root(&mut ep, &mut accum.num);
+                    reduce_sum_to_root(&mut ep, &mut accum.den);
+                    let qe_total = allreduce_f64_sum(&mut ep, accum.qe_sum);
+                    if is_root {
+                        codebook.apply_batch_update(&accum.num, &accum.den);
+                    }
+                    broadcast_from_root(&mut ep, &mut codebook.weights);
+
+                    epochs.push(EpochStats {
+                        epoch,
+                        radius,
+                        scale,
+                        qe: qe_total / total_rows as f64,
+                        duration: te.elapsed(),
+                    });
+                    let _ = rows_local;
+                }
+
+                // Gather BMUs in rank order for the final output.
+                let gathered = gather_u32_to_root(&mut ep, bmus_local);
+                if let Some(parts) = gathered {
+                    let bmus: Vec<u32> = parts.concat();
+                    let u = crate::som::umatrix::umatrix(
+                        &grid,
+                        &codebook,
+                        threads_per_rank,
+                    );
+                    Ok(Some(TrainResult {
+                        codebook,
+                        bmus,
+                        umatrix: u,
+                        epochs,
+                        total: std::time::Duration::ZERO, // set by caller
+                    }))
+                } else {
+                    Ok(None)
+                }
+            }
+        })
+        .collect();
+
+    let outcomes = run_concurrent(tasks);
+    let total = t0.elapsed();
+    let mut master: Option<TrainResult> = None;
+    for o in outcomes {
+        if let Some(res) = o? {
+            master = Some(res);
+        }
+    }
+    let mut result = master.expect("rank 0 must produce a result");
+    result.total = total;
+    let report = ClusterReport {
+        ranks,
+        bytes_sent: world.bytes_sent(),
+        messages_sent: world.messages_sent(),
+    };
+    Ok((result, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::train::train;
+    use crate::data;
+    use crate::util::rng::Rng;
+
+    fn cfg(ranks: usize) -> TrainConfig {
+        TrainConfig {
+            rows: 6,
+            cols: 6,
+            epochs: 5,
+            threads: 1,
+            ranks,
+            radius0: Some(3.0),
+            ..Default::default()
+        }
+    }
+
+    /// The paper's structure guarantees the distributed run computes the
+    /// *same* batch update as the serial run — verify bit-for-bit BMUs
+    /// and near-identical codebooks (f32 reduce order differs).
+    #[test]
+    fn cluster_matches_single_node() {
+        let mut rng = Rng::new(7);
+        let (data, _) = data::gaussian_blobs(96, 5, 3, 0.2, &mut rng);
+        let single = train(
+            &cfg(1),
+            DataShard::Dense { data: &data, dim: 5 },
+            None,
+            None,
+        )
+        .unwrap();
+        for ranks in [2, 3, 4] {
+            let (multi, report) = train_cluster(
+                &cfg(ranks),
+                ClusterData::Dense {
+                    data: data.clone(),
+                    dim: 5,
+                },
+                NetModel::ideal(),
+            )
+            .unwrap();
+            assert_eq!(multi.bmus, single.bmus, "ranks={ranks}");
+            for (a, b) in multi
+                .codebook
+                .weights
+                .iter()
+                .zip(&single.codebook.weights)
+            {
+                assert!((a - b).abs() < 1e-4, "ranks={ranks}: {a} vs {b}");
+            }
+            assert!(
+                (multi.final_qe() - single.final_qe()).abs() < 1e-6,
+                "ranks={ranks}"
+            );
+            assert!(report.bytes_sent > 0);
+        }
+    }
+
+    #[test]
+    fn sparse_cluster_matches_single() {
+        let mut rng = Rng::new(8);
+        let m = crate::sparse::Csr::random(60, 20, 0.15, &mut rng);
+        let mut c = cfg(1);
+        c.kernel = KernelType::SparseCpu;
+        let single = train(&c, DataShard::Sparse(&m), None, None).unwrap();
+        let mut c3 = cfg(3);
+        c3.kernel = KernelType::SparseCpu;
+        let (multi, _) =
+            train_cluster(&c3, ClusterData::Sparse(m), NetModel::ideal()).unwrap();
+        assert_eq!(multi.bmus, single.bmus);
+        assert!((multi.final_qe() - single.final_qe()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn comm_volume_scales_with_ranks_not_rows() {
+        // Per epoch each slave sends N*D + N floats and receives N*D:
+        // volume ∝ (ranks-1), independent of data rows — the property
+        // behind the paper's near-linear scaling.
+        let mut rng = Rng::new(9);
+        let (data, _) = data::gaussian_blobs(64, 4, 2, 0.3, &mut rng);
+        let run = |ranks| {
+            let (_, report) = train_cluster(
+                &cfg(ranks),
+                ClusterData::Dense {
+                    data: data.clone(),
+                    dim: 4,
+                },
+                NetModel::ideal(),
+            )
+            .unwrap();
+            report.bytes_sent
+        };
+        let b2 = run(2);
+        let b4 = run(4);
+        let per_slave_2 = b2 as f64 / 1.0;
+        let per_slave_4 = b4 as f64 / 3.0;
+        let ratio = per_slave_4 / per_slave_2;
+        assert!(
+            (0.9..1.1).contains(&ratio),
+            "per-slave volume changed with ranks: {ratio}"
+        );
+    }
+
+    #[test]
+    fn rejects_more_ranks_than_rows() {
+        let out = train_cluster(
+            &cfg(8),
+            ClusterData::Dense {
+                data: vec![0.0; 4 * 5],
+                dim: 5,
+            },
+            NetModel::ideal(),
+        );
+        assert!(out.is_err());
+    }
+}

@@ -1,0 +1,163 @@
+//! Training configuration — the union of the paper's CLI knobs (§4.1)
+//! and runtime options (threads, ranks, seed).
+
+use crate::io::output::SnapshotLevel;
+use crate::kernels::KernelType;
+use crate::som::{Cooling, Grid, GridType, MapType, Neighborhood, Schedule};
+
+/// Codebook initialization scheme (somoclu's Python API offers random
+/// and PCA/linear initialization; `-c FILE` supplies an explicit one).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Initialization {
+    Random,
+    Pca,
+}
+
+impl std::str::FromStr for Initialization {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "random" => Ok(Initialization::Random),
+            "pca" | "linear" => Ok(Initialization::Pca),
+            other => Err(format!("unknown initialization: {other}")),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Map rows (`-y`); paper default 50.
+    pub rows: usize,
+    /// Map columns (`-x`); paper default 50.
+    pub cols: usize,
+    /// Training epochs (`-e`).
+    pub epochs: usize,
+    /// Grid layout (`-g`).
+    pub grid_type: GridType,
+    /// Map topology (`-m`).
+    pub map_type: MapType,
+    /// Neighborhood function (`-n`) + compact support (`-p`).
+    pub neighborhood: Neighborhood,
+    /// Start radius (`-r`); None = "half of the map size in the smaller
+    /// direction" (paper default).
+    pub radius0: Option<f32>,
+    /// Final radius (`-R`); paper default 1.
+    pub radius_n: f32,
+    /// Radius cooling (`-t`).
+    pub radius_cooling: Cooling,
+    /// Start learning rate (`-l`); paper default 1.0.
+    pub scale0: f32,
+    /// Final learning rate (`-L`); paper default 0.01.
+    pub scale_n: f32,
+    /// Learning-rate cooling (`-T`).
+    pub scale_cooling: Cooling,
+    /// Kernel (`-k`): 0 dense CPU, 1 accel, 2 sparse CPU.
+    pub kernel: KernelType,
+    /// Worker threads per process (OpenMP analog).
+    pub threads: usize,
+    /// Simulated MPI ranks (1 = single-node path).
+    pub ranks: usize,
+    /// Interim snapshot level (`-s`).
+    pub snapshot: SnapshotLevel,
+    /// Codebook initialization (`--initialization random|pca`).
+    pub initialization: Initialization,
+    /// RNG seed for codebook init.
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            rows: 50,
+            cols: 50,
+            epochs: 10,
+            grid_type: GridType::Square,
+            map_type: MapType::Planar,
+            neighborhood: Neighborhood::gaussian(false),
+            radius0: None,
+            radius_n: 1.0,
+            radius_cooling: Cooling::Linear,
+            scale0: 1.0,
+            scale_n: 0.01,
+            scale_cooling: Cooling::Linear,
+            kernel: KernelType::DenseCpu,
+            threads: crate::util::threadpool::default_threads(),
+            ranks: 1,
+            snapshot: SnapshotLevel::None,
+            initialization: Initialization::Random,
+            seed: 0x50_4d_4f_53, // "SOMP"
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn grid(&self) -> Grid {
+        Grid::new(self.rows, self.cols, self.grid_type, self.map_type)
+    }
+
+    pub fn radius_schedule(&self, grid: &Grid) -> Schedule {
+        let r0 = self.radius0.unwrap_or_else(|| grid.default_radius0());
+        Schedule::new(r0, self.radius_n, self.radius_cooling, self.epochs)
+    }
+
+    pub fn scale_schedule(&self) -> Schedule {
+        Schedule::new(self.scale0, self.scale_n, self.scale_cooling, self.epochs)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.rows == 0 || self.cols == 0 {
+            return Err("map must have at least one row and column".into());
+        }
+        if self.epochs == 0 {
+            return Err("epochs must be > 0".into());
+        }
+        if self.ranks == 0 {
+            return Err("ranks must be > 0".into());
+        }
+        if let Some(r0) = self.radius0 {
+            if r0 < self.radius_n {
+                return Err(format!(
+                    "start radius {r0} smaller than final radius {}",
+                    self.radius_n
+                ));
+            }
+        }
+        if self.scale0 <= 0.0 {
+            return Err("start learning rate must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = TrainConfig::default();
+        assert_eq!((c.rows, c.cols), (50, 50));
+        assert_eq!(c.radius_n, 1.0);
+        assert_eq!(c.scale0, 1.0);
+        assert_eq!(c.scale_n, 0.01);
+        assert_eq!(c.radius_cooling, Cooling::Linear);
+        assert!(c.validate().is_ok());
+        // default radius0 = half the smaller map side
+        let grid = c.grid();
+        assert_eq!(c.radius_schedule(&grid).start, 25.0);
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut c = TrainConfig::default();
+        c.epochs = 0;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.radius0 = Some(0.5);
+        c.radius_n = 1.0;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.scale0 = 0.0;
+        assert!(c.validate().is_err());
+    }
+}

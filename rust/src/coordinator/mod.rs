@@ -1,0 +1,8 @@
+//! L3 coordination: configuration, the training loop, and the
+//! single-vs-distributed drivers (the paper's system contribution).
+
+pub mod config;
+pub mod train;
+
+pub use config::TrainConfig;
+pub use train::{train, EpochStats, TrainResult};

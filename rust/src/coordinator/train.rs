@@ -1,0 +1,316 @@
+//! The training loop (single-process path): epoch iteration, cooling,
+//! kernel dispatch, snapshots, and quality logging — the body of the
+//! paper's `trainOneEpoch` driven across epochs.
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::config::TrainConfig;
+use crate::io::output::OutputWriter;
+use crate::kernels::dense_cpu::DenseCpuKernel;
+use crate::kernels::sparse_cpu::SparseCpuKernel;
+use crate::kernels::{DataShard, KernelType, TrainingKernel};
+use crate::som::{umatrix, Codebook, Grid};
+use crate::util::rng::Rng;
+
+/// Per-epoch progress record (QE curve + timing).
+#[derive(Clone, Debug)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub radius: f32,
+    pub scale: f32,
+    /// Mean quantization error *before* this epoch's update (the error
+    /// of the codebook the BMUs were computed against).
+    pub qe: f64,
+    pub duration: Duration,
+}
+
+/// Final result of a training run.
+#[derive(Debug)]
+pub struct TrainResult {
+    pub codebook: Codebook,
+    pub bmus: Vec<u32>,
+    pub umatrix: Vec<f32>,
+    pub epochs: Vec<EpochStats>,
+    pub total: Duration,
+}
+
+impl TrainResult {
+    pub fn final_qe(&self) -> f64 {
+        self.epochs.last().map(|e| e.qe).unwrap_or(f64::NAN)
+    }
+}
+
+/// Build the kernel for `cfg` (single-process path). The accel kernel
+/// needs AOT artifacts on disk; see [`crate::runtime`].
+pub fn make_kernel(cfg: &TrainConfig) -> anyhow::Result<Box<dyn TrainingKernel>> {
+    Ok(match cfg.kernel {
+        KernelType::DenseCpu => Box::new(DenseCpuKernel::new(cfg.threads)),
+        KernelType::SparseCpu => Box::new(SparseCpuKernel::new(cfg.threads)),
+        KernelType::Accel => Box::new(crate::kernels::accel::AccelKernel::from_env()?),
+        KernelType::Hybrid => {
+            Box::new(crate::kernels::hybrid::HybridKernel::from_env(cfg.threads)?)
+        }
+    })
+}
+
+/// Initialize the codebook per config (random init, like `-c` absent).
+/// Used directly by the cluster runner's broadcast-equivalent init.
+pub fn init_codebook(cfg: &TrainConfig, grid: &Grid, dim: usize) -> Codebook {
+    let mut rng = Rng::new(cfg.seed);
+    Codebook::random_init(grid.node_count(), dim, &mut rng)
+}
+
+/// Initialization honoring `cfg.initialization` (PCA needs the data).
+pub fn init_codebook_with_data(
+    cfg: &TrainConfig,
+    grid: &Grid,
+    shard: DataShard<'_>,
+) -> anyhow::Result<Codebook> {
+    match cfg.initialization {
+        crate::coordinator::config::Initialization::Random => {
+            Ok(init_codebook(cfg, grid, shard.dim()))
+        }
+        crate::coordinator::config::Initialization::Pca => {
+            let DataShard::Dense { data, dim } = shard else {
+                anyhow::bail!(
+                    "PCA initialization needs dense data (densify or use \
+                     random init for sparse inputs)"
+                );
+            };
+            let mut rng = Rng::new(cfg.seed);
+            Ok(crate::som::pca::pca_init(grid, data, dim, &mut rng))
+        }
+    }
+}
+
+/// Train on one in-memory shard (the whole data set on the single-node
+/// path). `writer` enables interim snapshots (paper `-s`).
+pub fn train(
+    cfg: &TrainConfig,
+    shard: DataShard<'_>,
+    initial: Option<Codebook>,
+    writer: Option<&OutputWriter>,
+) -> anyhow::Result<TrainResult> {
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    let grid = cfg.grid();
+    let dim = shard.dim();
+    let rows = shard.rows();
+    anyhow::ensure!(rows > 0, "no data rows");
+
+    let mut codebook = match initial {
+        Some(cb) => {
+            anyhow::ensure!(
+                cb.nodes == grid.node_count() && cb.dim == dim,
+                "initial codebook shape {}x{} does not match map {}x{} / dim {dim}",
+                cb.nodes,
+                cb.dim,
+                grid.node_count(),
+                grid.rows * grid.cols
+            );
+            cb
+        }
+        None => init_codebook_with_data(cfg, &grid, shard)?,
+    };
+
+    let radius_sched = cfg.radius_schedule(&grid);
+    let scale_sched = cfg.scale_schedule();
+    let mut kernel = make_kernel(cfg)?;
+
+    let t0 = Instant::now();
+    let mut epochs = Vec::with_capacity(cfg.epochs);
+    let mut bmus: Vec<u32> = Vec::new();
+
+    for epoch in 0..cfg.epochs {
+        let te = Instant::now();
+        let radius = radius_sched.at(epoch);
+        let scale = scale_sched.at(epoch);
+
+        let accum = kernel.epoch_accumulate(
+            shard,
+            &codebook,
+            &grid,
+            cfg.neighborhood,
+            radius,
+            scale,
+        )?;
+        codebook.apply_batch_update(&accum.num, &accum.den);
+        bmus = accum.bmus;
+
+        epochs.push(EpochStats {
+            epoch,
+            radius,
+            scale,
+            qe: accum.qe_sum / rows as f64,
+            duration: te.elapsed(),
+        });
+
+        if let Some(w) = writer {
+            if cfg.snapshot > crate::io::output::SnapshotLevel::None {
+                let u = umatrix::umatrix(&grid, &codebook, cfg.threads);
+                w.write_snapshot(cfg.snapshot, epoch, &grid, &codebook, &bmus, &u)?;
+            }
+        }
+    }
+
+    let u = umatrix::umatrix(&grid, &codebook, cfg.threads);
+    if let Some(w) = writer {
+        w.write_final(&grid, &codebook, &bmus, &u)?;
+    }
+
+    Ok(TrainResult {
+        codebook,
+        bmus,
+        umatrix: u,
+        epochs,
+        total: t0.elapsed(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::som::{GridType, MapType, Neighborhood};
+
+    fn blob_config() -> TrainConfig {
+        TrainConfig {
+            rows: 8,
+            cols: 8,
+            epochs: 8,
+            threads: 2,
+            radius0: Some(4.0),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn qe_decreases_on_blobs() {
+        let mut rng = Rng::new(1);
+        let (data, _) = data::gaussian_blobs(160, 6, 4, 0.1, &mut rng);
+        let cfg = blob_config();
+        let res = train(
+            &cfg,
+            DataShard::Dense { data: &data, dim: 6 },
+            None,
+            None,
+        )
+        .unwrap();
+        assert_eq!(res.epochs.len(), 8);
+        let first = res.epochs.first().unwrap().qe;
+        let last = res.epochs.last().unwrap().qe;
+        assert!(
+            last < first * 0.5,
+            "QE did not converge: {first} -> {last}"
+        );
+        assert_eq!(res.bmus.len(), 160);
+        assert!(res.umatrix.len() == 64);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = Rng::new(2);
+        let (data, _) = data::gaussian_blobs(60, 4, 3, 0.1, &mut rng);
+        let cfg = blob_config();
+        let shard = DataShard::Dense { data: &data, dim: 4 };
+        let a = train(&cfg, shard, None, None).unwrap();
+        let b = train(&cfg, shard, None, None).unwrap();
+        assert_eq!(a.codebook.weights, b.codebook.weights);
+        assert_eq!(a.bmus, b.bmus);
+    }
+
+    #[test]
+    fn sparse_kernel_trains() {
+        let mut rng = Rng::new(3);
+        let m = crate::sparse::Csr::random(80, 30, 0.2, &mut rng);
+        let cfg = TrainConfig {
+            rows: 6,
+            cols: 6,
+            epochs: 5,
+            kernel: crate::kernels::KernelType::SparseCpu,
+            threads: 2,
+            radius0: Some(3.0),
+            ..Default::default()
+        };
+        let res = train(&cfg, DataShard::Sparse(&m), None, None).unwrap();
+        let first = res.epochs.first().unwrap().qe;
+        let last = res.epochs.last().unwrap().qe;
+        assert!(last < first, "{first} -> {last}");
+    }
+
+    #[test]
+    fn all_geometry_variants_run() {
+        let mut rng = Rng::new(4);
+        let (data, _) = data::gaussian_blobs(40, 3, 2, 0.2, &mut rng);
+        for gt in [GridType::Square, GridType::Hexagonal] {
+            for mt in [MapType::Planar, MapType::Toroid] {
+                for nb in [
+                    Neighborhood::gaussian(false),
+                    Neighborhood::gaussian(true),
+                    Neighborhood::bubble(),
+                ] {
+                    let cfg = TrainConfig {
+                        rows: 5,
+                        cols: 5,
+                        epochs: 3,
+                        grid_type: gt,
+                        map_type: mt,
+                        neighborhood: nb,
+                        threads: 2,
+                        radius0: Some(2.5),
+                        ..Default::default()
+                    };
+                    let res = train(
+                        &cfg,
+                        DataShard::Dense { data: &data, dim: 3 },
+                        None,
+                        None,
+                    )
+                    .unwrap();
+                    assert!(res.final_qe().is_finite());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn initial_codebook_shape_checked() {
+        let cfg = blob_config();
+        let bad = Codebook::zeros(4, 6); // wrong node count
+        let data = vec![0.0f32; 12];
+        let err = train(
+            &cfg,
+            DataShard::Dense { data: &data, dim: 6 },
+            Some(bad),
+            None,
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn radius_and_scale_follow_schedules() {
+        let mut rng = Rng::new(5);
+        let (data, _) = data::gaussian_blobs(30, 3, 2, 0.2, &mut rng);
+        let cfg = TrainConfig {
+            rows: 4,
+            cols: 4,
+            epochs: 4,
+            radius0: Some(2.0),
+            radius_n: 1.0,
+            scale0: 1.0,
+            scale_n: 0.1,
+            threads: 1,
+            ..Default::default()
+        };
+        let res = train(
+            &cfg,
+            DataShard::Dense { data: &data, dim: 3 },
+            None,
+            None,
+        )
+        .unwrap();
+        assert_eq!(res.epochs[0].radius, 2.0);
+        assert_eq!(res.epochs[3].radius, 1.0);
+        assert_eq!(res.epochs[0].scale, 1.0);
+        assert!((res.epochs[3].scale - 0.1).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,202 @@
+//! Synthetic workload generators for the paper's experiments.
+//!
+//! * `random_dense` — the Fig. 5/7/8 workload: "the data elements were
+//!   randomly generated, as we were interested in scalability alone".
+//! * `gaussian_blobs` — clustered data for convergence tests and the
+//!   quickstart example.
+//! * `rgb_toy` — the classic RGB clustering toy set (Figs. 2–4).
+//! * `zipf_corpus` — Fig. 9 stand-in: a Zipfian term-document space with
+//!   planted topics (~1–5% density, like the Reuters-21578 vector space;
+//!   see DESIGN.md §3 substitutions).
+
+use crate::sparse::Csr;
+use crate::util::rng::Rng;
+
+/// Uniform random dense rows in [0, 1) — the scalability benchmark data.
+pub fn random_dense(rows: usize, dim: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..rows * dim).map(|_| rng.f32()).collect()
+}
+
+/// Isotropic Gaussian blobs around `k` random centers; returns (data,
+/// labels).
+pub fn gaussian_blobs(
+    rows: usize,
+    dim: usize,
+    k: usize,
+    spread: f32,
+    rng: &mut Rng,
+) -> (Vec<f32>, Vec<usize>) {
+    assert!(k > 0);
+    let centers: Vec<f32> = (0..k * dim).map(|_| rng.range_f32(-3.0, 3.0)).collect();
+    let mut data = Vec::with_capacity(rows * dim);
+    let mut labels = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let c = r % k;
+        for d in 0..dim {
+            data.push(centers[c * dim + d] + spread * rng.normal_f32());
+        }
+        labels.push(c);
+    }
+    (data, labels)
+}
+
+/// RGB toy set: `rows` colors drawn near `k` primary anchors (the toy
+/// example the paper's Figs. 2–4 visualize). dim = 3.
+pub fn rgb_toy(rows: usize, rng: &mut Rng) -> (Vec<f32>, Vec<usize>) {
+    const ANCHORS: [[f32; 3]; 6] = [
+        [1.0, 0.0, 0.0],
+        [0.0, 1.0, 0.0],
+        [0.0, 0.0, 1.0],
+        [1.0, 1.0, 0.0],
+        [0.0, 1.0, 1.0],
+        [1.0, 0.0, 1.0],
+    ];
+    let mut data = Vec::with_capacity(rows * 3);
+    let mut labels = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let a = r % ANCHORS.len();
+        for d in 0..3 {
+            data.push((ANCHORS[a][d] + 0.12 * rng.normal_f32()).clamp(0.0, 1.0));
+        }
+        labels.push(a);
+    }
+    (data, labels)
+}
+
+/// Synthetic sparse term-document corpus with planted topics.
+///
+/// Each document draws `nnz_per_row` distinct terms: a fraction from its
+/// topic's preferred band of the vocabulary, the rest from a global
+/// Zipfian background. tf-idf-like weights in (0, 1]. This reproduces
+/// the *structure* Fig. 9 visualizes: dense semantic clusters separated
+/// by sparse barriers.
+pub struct CorpusSpec {
+    pub docs: usize,
+    pub vocab: usize,
+    pub topics: usize,
+    pub nnz_per_row: usize,
+    /// Probability that a term comes from the document's topic band.
+    pub topic_affinity: f64,
+}
+
+impl Default for CorpusSpec {
+    fn default() -> Self {
+        CorpusSpec {
+            docs: 2000,
+            vocab: 4096,
+            topics: 8,
+            nnz_per_row: 50,
+            topic_affinity: 0.7,
+        }
+    }
+}
+
+pub fn zipf_corpus(spec: &CorpusSpec, rng: &mut Rng) -> (Csr, Vec<usize>) {
+    assert!(spec.topics > 0 && spec.vocab >= spec.topics);
+    let band = spec.vocab / spec.topics;
+    let mut rows = Vec::with_capacity(spec.docs);
+    let mut labels = Vec::with_capacity(spec.docs);
+    for doc in 0..spec.docs {
+        let topic = doc % spec.topics;
+        let mut cols = std::collections::BTreeMap::new();
+        // Rejection-free: sample until we have nnz distinct terms.
+        let mut guard = 0;
+        while cols.len() < spec.nnz_per_row.min(spec.vocab) && guard < 100_000 {
+            guard += 1;
+            let term = if rng.f64() < spec.topic_affinity {
+                // Zipf *within* the topic band: topical head terms.
+                topic * band + rng.zipf(band.max(1), 1.1)
+            } else {
+                rng.zipf(spec.vocab, 1.1)
+            };
+            let weight = (0.1 + 0.9 * rng.f32()).min(1.0);
+            cols.entry(term as u32).or_insert(weight);
+        }
+        rows.push(cols.into_iter().collect::<Vec<_>>());
+        labels.push(topic);
+    }
+    let m = Csr::from_rows(rows, spec.vocab).expect("distinct sorted cols");
+    (m, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_dense_shape_and_range() {
+        let mut rng = Rng::new(1);
+        let d = random_dense(10, 5, &mut rng);
+        assert_eq!(d.len(), 50);
+        assert!(d.iter().all(|v| (0.0..1.0).contains(v)));
+    }
+
+    #[test]
+    fn blobs_cluster_tightly() {
+        let mut rng = Rng::new(2);
+        let (data, labels) = gaussian_blobs(200, 4, 4, 0.05, &mut rng);
+        assert_eq!(labels.len(), 200);
+        // Same-label rows are near each other; cross-label rows far.
+        let row = |r: usize| &data[r * 4..(r + 1) * 4];
+        let d = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum()
+        };
+        let same = d(row(0), row(4)); // labels 0 and 0
+        let diff = d(row(0), row(1)); // labels 0 and 1
+        assert!(same < diff, "{same} vs {diff}");
+    }
+
+    #[test]
+    fn rgb_toy_in_unit_cube() {
+        let mut rng = Rng::new(3);
+        let (data, labels) = rgb_toy(60, &mut rng);
+        assert_eq!(data.len(), 180);
+        assert_eq!(labels.iter().max(), Some(&5));
+        assert!(data.iter().all(|v| (0.0..=1.0).contains(v)));
+    }
+
+    #[test]
+    fn corpus_density_in_paper_band() {
+        let mut rng = Rng::new(4);
+        let spec = CorpusSpec {
+            docs: 200,
+            vocab: 2048,
+            nnz_per_row: 40,
+            ..Default::default()
+        };
+        let (m, labels) = zipf_corpus(&spec, &mut rng);
+        assert_eq!(m.rows, 200);
+        assert_eq!(labels.len(), 200);
+        // ~40/2048 ≈ 2% — inside the paper's "1–5% nonzero" band.
+        assert!(
+            (0.01..=0.05).contains(&m.density()),
+            "density {}",
+            m.density()
+        );
+    }
+
+    #[test]
+    fn corpus_topics_share_terms() {
+        let mut rng = Rng::new(5);
+        let spec = CorpusSpec {
+            docs: 64,
+            vocab: 1024,
+            topics: 4,
+            nnz_per_row: 30,
+            topic_affinity: 0.9,
+        };
+        let (m, labels) = zipf_corpus(&spec, &mut rng);
+        // Two docs of the same topic should overlap in terms far more
+        // than docs of different topics.
+        let overlap = |a: usize, b: usize| -> usize {
+            let (ca, _) = m.row(a);
+            let (cb, _) = m.row(b);
+            ca.iter().filter(|c| cb.contains(c)).count()
+        };
+        assert_eq!(labels[0], labels[4]);
+        assert_ne!(labels[0], labels[1]);
+        let same: usize = (0..10).map(|i| overlap(4 * i, 4 * i + 4 * 5 % 60)).sum();
+        let diff: usize = (0..10).map(|i| overlap(4 * i, 4 * i + 1)).sum();
+        assert!(same > diff, "same-topic overlap {same} <= cross {diff}");
+    }
+}

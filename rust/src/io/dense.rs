@@ -1,0 +1,315 @@
+//! Dense input formats (paper §4.1):
+//!
+//! * basic: whitespace-separated coordinates, one row per data instance;
+//!   "this file is parsed twice to get the basic dimensions right".
+//! * headered: identical, but with an ESOM-style header carrying the
+//!   matrix layout (`% rows [cols]` lines, Databionic-compatible).
+//!
+//! Comment lines starting with `#` (and `%` header lines) are ignored as
+//! data. Entries may be separated by any whitespace.
+
+use std::io::{BufRead, BufReader, Read};
+use std::path::Path;
+
+/// Row-major dense matrix as read from disk.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ReadError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("line {line}: ragged row: expected {expected} columns, found {found}")]
+    Ragged {
+        line: usize,
+        expected: usize,
+        found: usize,
+    },
+    #[error("line {line}: cannot parse '{token}' as a number")]
+    BadNumber { line: usize, token: String },
+    #[error("empty input: no data rows found")]
+    Empty,
+    #[error("header declares {declared} rows but {found} were read")]
+    HeaderMismatch { declared: usize, found: usize },
+}
+
+fn is_comment(line: &str) -> bool {
+    matches!(line.trim_start().chars().next(), Some('#'))
+}
+
+/// Parse ESOM-style header lines: `% <rows>` and `% <cols>` (the first
+/// two `%` lines, as written by Databionic ESOM tools / somoclu).
+fn parse_header_token(line: &str) -> Option<Vec<usize>> {
+    let rest = line.trim_start().strip_prefix('%')?;
+    let nums: Result<Vec<usize>, _> =
+        rest.split_whitespace().map(|t| t.parse::<usize>()).collect();
+    nums.ok().filter(|v| !v.is_empty())
+}
+
+/// Read a dense matrix from a reader. Handles both plain and headered
+/// formats transparently.
+pub fn read_dense_from<R: Read>(reader: R) -> Result<DenseMatrix, ReadError> {
+    let buf = BufReader::new(reader);
+    let mut data = Vec::new();
+    let mut cols: Option<usize> = None;
+    let mut rows = 0usize;
+    let mut header_lines: Vec<Vec<usize>> = Vec::new();
+
+    for (lineno, line) in buf.lines().enumerate() {
+        let line = line?;
+        if is_comment(&line) {
+            continue;
+        }
+        if let Some(nums) = parse_header_token(&line) {
+            header_lines.push(nums);
+            continue;
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let start = data.len();
+        for token in trimmed.split_whitespace() {
+            let v: f32 = token.parse().map_err(|_| ReadError::BadNumber {
+                line: lineno + 1,
+                token: token.to_string(),
+            })?;
+            data.push(v);
+        }
+        let found = data.len() - start;
+        match cols {
+            None => cols = Some(found),
+            Some(c) if c != found => {
+                return Err(ReadError::Ragged {
+                    line: lineno + 1,
+                    expected: c,
+                    found,
+                })
+            }
+            _ => {}
+        }
+        rows += 1;
+    }
+
+    let cols = cols.ok_or(ReadError::Empty)?;
+    if let Some(first) = header_lines.first() {
+        // Two conventions share the `%` header:
+        //   data files:  `% <rows>` (then `% <cols>`): first value = rows
+        //   .wts files:  `% <map_rows> <map_cols>` (then `% <dim>`):
+        //                product of the first line = neuron count = rows
+        let declared = first[0];
+        let product: usize = first.iter().product();
+        if declared != rows && product != rows {
+            return Err(ReadError::HeaderMismatch {
+                declared,
+                found: rows,
+            });
+        }
+    }
+    Ok(DenseMatrix { rows, cols, data })
+}
+
+/// Read a dense matrix from a file path.
+///
+/// Like classic somoclu, "this file is parsed twice to get the basic
+/// dimensions right": pass 1 counts rows/columns, pass 2 fills an
+/// exactly-sized buffer — no reallocation growth, so peak memory equals
+/// the matrix itself (the Fig. 7 CLI baseline depends on this).
+pub fn read_dense<P: AsRef<Path>>(path: P) -> Result<DenseMatrix, ReadError> {
+    let path = path.as_ref();
+    // Pass 1: dimensions only.
+    let buf = BufReader::new(std::fs::File::open(path)?);
+    let mut rows = 0usize;
+    let mut cols = 0usize;
+    for line in buf.lines() {
+        let line = line?;
+        if is_comment(&line) || parse_header_token(&line).is_some() {
+            continue;
+        }
+        let n = line.split_whitespace().count();
+        if n > 0 {
+            rows += 1;
+            cols = cols.max(n);
+        }
+    }
+    if rows == 0 {
+        return Err(ReadError::Empty);
+    }
+    // Pass 2: parse into the exact-size buffer (re-using the streaming
+    // parser would reallocate; fill in place instead).
+    let mut out = DenseMatrix {
+        rows,
+        cols,
+        data: Vec::with_capacity(rows * cols),
+    };
+    let buf = BufReader::new(std::fs::File::open(path)?);
+    let mut header_lines: Vec<Vec<usize>> = Vec::new();
+    let mut row_len_check: Option<usize> = None;
+    for (lineno, line) in buf.lines().enumerate() {
+        let line = line?;
+        if is_comment(&line) {
+            continue;
+        }
+        if let Some(nums) = parse_header_token(&line) {
+            header_lines.push(nums);
+            continue;
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let before = out.data.len();
+        for token in trimmed.split_whitespace() {
+            let v: f32 = token.parse().map_err(|_| ReadError::BadNumber {
+                line: lineno + 1,
+                token: token.to_string(),
+            })?;
+            out.data.push(v);
+        }
+        let found = out.data.len() - before;
+        match row_len_check {
+            None => row_len_check = Some(found),
+            Some(c) if c != found => {
+                return Err(ReadError::Ragged {
+                    line: lineno + 1,
+                    expected: c,
+                    found,
+                })
+            }
+            _ => {}
+        }
+    }
+    if let Some(first) = header_lines.first() {
+        let declared = first[0];
+        let product: usize = first.iter().product();
+        if declared != out.rows && product != out.rows {
+            return Err(ReadError::HeaderMismatch {
+                declared,
+                found: out.rows,
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// Write a dense matrix in the basic format (used by the data
+/// generators and the snapshot writer).
+pub fn write_dense<P: AsRef<Path>>(
+    path: P,
+    rows: usize,
+    cols: usize,
+    data: &[f32],
+    header: bool,
+) -> std::io::Result<()> {
+    use std::io::Write;
+    assert_eq!(data.len(), rows * cols);
+    let f = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(f);
+    if header {
+        writeln!(w, "% {rows}")?;
+        writeln!(w, "% {cols}")?;
+    }
+    for r in 0..rows {
+        let row = &data[r * cols..(r + 1) * cols];
+        let mut first = true;
+        for v in row {
+            if !first {
+                write!(w, " ")?;
+            }
+            write!(w, "{v}")?;
+            first = false;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_format() {
+        let src = "1.0 2.0 3.0\n4 5 6\n";
+        let m = read_dense_from(src.as_bytes()).unwrap();
+        assert_eq!(m.rows, 2);
+        assert_eq!(m.cols, 3);
+        assert_eq!(m.data, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let src = "# a comment\n\n1 2\n   # another\n3 4\n\n";
+        let m = read_dense_from(src.as_bytes()).unwrap();
+        assert_eq!(m.rows, 2);
+        assert_eq!(m.cols, 2);
+    }
+
+    #[test]
+    fn header_format() {
+        let src = "% 3\n% 2\n1 2\n3 4\n5 6\n";
+        let m = read_dense_from(src.as_bytes()).unwrap();
+        assert_eq!((m.rows, m.cols), (3, 2));
+    }
+
+    #[test]
+    fn header_mismatch_rejected() {
+        let src = "% 5\n% 2\n1 2\n3 4\n";
+        assert!(matches!(
+            read_dense_from(src.as_bytes()),
+            Err(ReadError::HeaderMismatch { declared: 5, found: 2 })
+        ));
+    }
+
+    #[test]
+    fn ragged_rejected() {
+        let src = "1 2 3\n4 5\n";
+        assert!(matches!(
+            read_dense_from(src.as_bytes()),
+            Err(ReadError::Ragged { line: 2, expected: 3, found: 2 })
+        ));
+    }
+
+    #[test]
+    fn bad_number_reported_with_line() {
+        let src = "1 2\n3 x\n";
+        match read_dense_from(src.as_bytes()) {
+            Err(ReadError::BadNumber { line, token }) => {
+                assert_eq!(line, 2);
+                assert_eq!(token, "x");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_rejected() {
+        assert!(matches!(
+            read_dense_from("# only comments\n".as_bytes()),
+            Err(ReadError::Empty)
+        ));
+    }
+
+    #[test]
+    fn tabs_and_multi_space() {
+        let src = "1\t2   3\n4\t 5  6\n";
+        let m = read_dense_from(src.as_bytes()).unwrap();
+        assert_eq!(m.cols, 3);
+    }
+
+    #[test]
+    fn write_read_round_trip() {
+        let dir = std::env::temp_dir().join("somoclu_test_dense");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.txt");
+        let data = vec![1.5, -2.0, 0.25, 1e6];
+        write_dense(&path, 2, 2, &data, true).unwrap();
+        let m = read_dense(&path).unwrap();
+        assert_eq!(m.data, data);
+        assert_eq!((m.rows, m.cols), (2, 2));
+    }
+}

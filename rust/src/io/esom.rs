@@ -1,0 +1,161 @@
+//! Databionic ESOM Tools compatibility (paper §1, §4.4, §5.3): the
+//! trained map is exported in the `.wts` (weights), `.bm` (best matches)
+//! and `.umx` (U-matrix) formats so ESOM Tools can visualize it.
+//!
+//! Formats (ESOM Tools file-format spec):
+//!   .wts:  `% <rows> <cols>` then `% <dim>`, then one line of `dim`
+//!          floats per neuron, row-major.
+//!   .bm:   `% <rows> <cols>` then `% <n>`, then `<index> <row> <col>`
+//!          per data instance.
+//!   .umx:  `% <rows> <cols>`, then `cols` floats per map row.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::som::{Codebook, Grid};
+
+/// Write the codebook as ESOM `.wts`.
+pub fn write_wts<P: AsRef<Path>>(
+    path: P,
+    grid: &Grid,
+    codebook: &Codebook,
+) -> std::io::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(f);
+    writeln!(w, "% {} {}", grid.rows, grid.cols)?;
+    writeln!(w, "% {}", codebook.dim)?;
+    for n in 0..codebook.nodes {
+        let row = codebook.row(n);
+        for (i, v) in row.iter().enumerate() {
+            if i > 0 {
+                write!(w, " ")?;
+            }
+            write!(w, "{v}")?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+/// Write best-matching units as ESOM `.bm`.
+pub fn write_bm<P: AsRef<Path>>(
+    path: P,
+    grid: &Grid,
+    bmus: &[u32],
+) -> std::io::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(f);
+    writeln!(w, "% {} {}", grid.rows, grid.cols)?;
+    writeln!(w, "% {}", bmus.len())?;
+    for (i, &b) in bmus.iter().enumerate() {
+        let (r, c) = grid.position(b as usize);
+        writeln!(w, "{i} {r} {c}")?;
+    }
+    Ok(())
+}
+
+/// Write the U-matrix as ESOM `.umx`.
+pub fn write_umx<P: AsRef<Path>>(
+    path: P,
+    grid: &Grid,
+    umatrix: &[f32],
+) -> std::io::Result<()> {
+    assert_eq!(umatrix.len(), grid.node_count());
+    let f = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(f);
+    writeln!(w, "% {} {}", grid.rows, grid.cols)?;
+    for r in 0..grid.rows {
+        for c in 0..grid.cols {
+            if c > 0 {
+                write!(w, " ")?;
+            }
+            write!(w, "{}", umatrix[grid.index(r, c)])?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+/// Parse a `.bm` file back (round-trip tests and resuming runs).
+pub fn read_bm<P: AsRef<Path>>(path: P) -> std::io::Result<Vec<(usize, usize, usize)>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') || t.starts_with('#') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let (Some(i), Some(r), Some(c)) = (it.next(), it.next(), it.next()) else {
+            continue;
+        };
+        if let (Ok(i), Ok(r), Ok(c)) =
+            (i.parse::<usize>(), r.parse::<usize>(), c.parse::<usize>())
+        {
+            out.push((i, r, c));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::som::grid::{GridType, MapType};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("somoclu_test_esom");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn wts_header_and_body() {
+        let grid = Grid::new(2, 3, GridType::Square, MapType::Planar);
+        let mut cb = Codebook::zeros(6, 2);
+        cb.row_mut(5).copy_from_slice(&[1.5, -2.0]);
+        let p = tmp("t.wts");
+        write_wts(&p, &grid, &cb).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "% 2 3");
+        assert_eq!(lines[1], "% 2");
+        assert_eq!(lines.len(), 2 + 6);
+        assert_eq!(lines[7], "1.5 -2");
+    }
+
+    #[test]
+    fn bm_round_trip() {
+        let grid = Grid::new(4, 5, GridType::Square, MapType::Planar);
+        let bmus = vec![0u32, 7, 19, 12];
+        let p = tmp("t.bm");
+        write_bm(&p, &grid, &bmus).unwrap();
+        let rt = read_bm(&p).unwrap();
+        assert_eq!(rt.len(), 4);
+        for (i, &(idx, r, c)) in rt.iter().enumerate() {
+            assert_eq!(idx, i);
+            assert_eq!(grid.index(r, c), bmus[i] as usize);
+        }
+    }
+
+    #[test]
+    fn umx_layout() {
+        let grid = Grid::new(2, 2, GridType::Square, MapType::Planar);
+        let p = tmp("t.umx");
+        write_umx(&p, &grid, &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines, vec!["% 2 2", "1 2", "3 4"]);
+    }
+
+    #[test]
+    fn umx_readable_as_dense_with_header_skipped() {
+        // gnuplot-style consumption: the matrix body parses as dense.
+        let grid = Grid::new(2, 3, GridType::Square, MapType::Planar);
+        let p = tmp("t2.umx");
+        write_umx(&p, &grid, &[1., 2., 3., 4., 5., 6.]).unwrap();
+        let m = crate::io::dense::read_dense(&p).unwrap();
+        // `% 2 3` parses as a header declaring 2 rows — consistent.
+        assert_eq!((m.rows, m.cols), (2, 3));
+    }
+}

@@ -1,0 +1,11 @@
+//! File formats (paper §4.1): plain dense, ESOM-header dense, libsvm
+//! sparse inputs; codebook / BMU / U-matrix outputs with Databionic ESOM
+//! Tools compatibility (`.wts`, `.bm`, `.umx`).
+
+pub mod dense;
+pub mod esom;
+pub mod output;
+pub mod sparse;
+
+pub use dense::{read_dense, DenseMatrix};
+pub use sparse::read_sparse;

@@ -1,0 +1,139 @@
+//! Output files under an OUTPUT_PREFIX (paper §4.1): "Instead of names
+//! of output files for the best matching units, code books, and
+//! U-matrices, an output prefix is requested ... the resulting files will
+//! be differentiated by the extension, and, if interim snapshots are
+//! requested, also by the indices of the epochs".
+//!
+//! Snapshot levels (paper `-s`): 0 = none, 1 = U-matrix per epoch,
+//! 2 = also codebook + BMUs per epoch.
+
+use std::path::{Path, PathBuf};
+
+use crate::io::esom;
+use crate::som::{Codebook, Grid};
+
+/// Interim snapshot level (paper `-s`).
+#[derive(Copy, Clone, Debug, PartialEq, Eq, PartialOrd)]
+pub enum SnapshotLevel {
+    None,
+    UMatrix,
+    Full,
+}
+
+impl std::str::FromStr for SnapshotLevel {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "0" => Ok(SnapshotLevel::None),
+            "1" => Ok(SnapshotLevel::UMatrix),
+            "2" => Ok(SnapshotLevel::Full),
+            other => Err(format!("bad snapshot level: {other} (want 0|1|2)")),
+        }
+    }
+}
+
+/// Writer bound to an output prefix.
+pub struct OutputWriter {
+    prefix: PathBuf,
+}
+
+impl OutputWriter {
+    pub fn new<P: AsRef<Path>>(prefix: P) -> Self {
+        OutputWriter {
+            prefix: prefix.as_ref().to_path_buf(),
+        }
+    }
+
+    fn path(&self, suffix: &str) -> PathBuf {
+        let mut s = self.prefix.as_os_str().to_os_string();
+        s.push(suffix);
+        PathBuf::from(s)
+    }
+
+    /// Final outputs: `<prefix>.wts`, `<prefix>.bm`, `<prefix>.umx`.
+    pub fn write_final(
+        &self,
+        grid: &Grid,
+        codebook: &Codebook,
+        bmus: &[u32],
+        umatrix: &[f32],
+    ) -> std::io::Result<()> {
+        esom::write_wts(self.path(".wts"), grid, codebook)?;
+        esom::write_bm(self.path(".bm"), grid, bmus)?;
+        esom::write_umx(self.path(".umx"), grid, umatrix)?;
+        Ok(())
+    }
+
+    /// Interim outputs for `epoch`, differentiated by epoch index.
+    pub fn write_snapshot(
+        &self,
+        level: SnapshotLevel,
+        epoch: usize,
+        grid: &Grid,
+        codebook: &Codebook,
+        bmus: &[u32],
+        umatrix: &[f32],
+    ) -> std::io::Result<()> {
+        if level >= SnapshotLevel::UMatrix {
+            esom::write_umx(self.path(&format!(".{epoch}.umx")), grid, umatrix)?;
+        }
+        if level >= SnapshotLevel::Full {
+            esom::write_wts(self.path(&format!(".{epoch}.wts")), grid, codebook)?;
+            esom::write_bm(self.path(&format!(".{epoch}.bm")), grid, bmus)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::som::grid::{GridType, MapType};
+
+    fn tmpdir() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "somoclu_test_out_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn final_files_created_with_extensions() {
+        let grid = Grid::new(2, 2, GridType::Square, MapType::Planar);
+        let cb = Codebook::zeros(4, 3);
+        let w = OutputWriter::new(tmpdir().join("run1"));
+        w.write_final(&grid, &cb, &[0, 1, 2], &[0.0; 4]).unwrap();
+        for ext in [".wts", ".bm", ".umx"] {
+            assert!(w.path(ext).exists(), "{ext}");
+        }
+    }
+
+    #[test]
+    fn snapshot_levels() {
+        let grid = Grid::new(2, 2, GridType::Square, MapType::Planar);
+        let cb = Codebook::zeros(4, 3);
+        let w = OutputWriter::new(tmpdir().join("run2"));
+        w.write_snapshot(SnapshotLevel::None, 0, &grid, &cb, &[], &[0.0; 4])
+            .unwrap();
+        assert!(!w.path(".0.umx").exists());
+        w.write_snapshot(SnapshotLevel::UMatrix, 1, &grid, &cb, &[], &[0.0; 4])
+            .unwrap();
+        assert!(w.path(".1.umx").exists());
+        assert!(!w.path(".1.wts").exists());
+        w.write_snapshot(SnapshotLevel::Full, 2, &grid, &cb, &[0], &[0.0; 4])
+            .unwrap();
+        assert!(w.path(".2.umx").exists());
+        assert!(w.path(".2.wts").exists());
+        assert!(w.path(".2.bm").exists());
+    }
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!("0".parse::<SnapshotLevel>().unwrap(), SnapshotLevel::None);
+        assert_eq!("1".parse::<SnapshotLevel>().unwrap(), SnapshotLevel::UMatrix);
+        assert_eq!("2".parse::<SnapshotLevel>().unwrap(), SnapshotLevel::Full);
+        assert!("3".parse::<SnapshotLevel>().is_err());
+    }
+}

@@ -1,0 +1,324 @@
+//! Accelerator kernel (paper `-k 1`) — the GPU kernel, reproduced as the
+//! AOT-compiled JAX/Pallas epoch step executed through XLA/PJRT.
+//!
+//! The paper's GPU kernel computes the Gram matrix "using linear algebra
+//! operations" and hybridizes with the CPU for the weight update; our
+//! artifact fuses the whole shard-level epoch step (Pallas BMU search +
+//! neighborhood + Pallas accumulation — see python/compile/model.py), so
+//! one device execution per data chunk returns (bmus, num, den, qe).
+//!
+//! Marshaling strategy (the memory-frugality the paper emphasizes):
+//! grid coordinates, node validity and wrap span are uploaded once per
+//! map and stay device-resident; per epoch only the codebook is
+//! re-uploaded; per chunk only the data rows + mask. Host staging
+//! buffers are allocated once and reused across chunks and epochs.
+
+use crate::kernels::{DataShard, EpochAccum, TrainingKernel};
+use crate::runtime::{untuple, Engine, SomStepArtifact};
+use crate::som::{Codebook, Grid, MapType, Neighborhood};
+
+pub struct AccelKernel {
+    engine: Engine,
+    setup: Option<Setup>,
+}
+
+/// Per-(map, codebook-shape, neighborhood) device state.
+struct Setup {
+    art: SomStepArtifact,
+    /// Logical sizes (unpadded).
+    nodes: usize,
+    dim: usize,
+    kind: &'static str,
+    map_type: MapType,
+    grid_fingerprint: (usize, usize),
+    /// Device-resident constants.
+    coords_buf: xla::PjRtBuffer,
+    valid_buf: xla::PjRtBuffer,
+    span_buf: xla::PjRtBuffer,
+    /// Reused host staging.
+    cb_padded: Vec<f32>,
+    data_padded: Vec<f32>,
+    mask: Vec<f32>,
+}
+
+impl AccelKernel {
+    pub fn new(engine: Engine) -> Self {
+        AccelKernel {
+            engine,
+            setup: None,
+        }
+    }
+
+    /// Engine over SOMOCLU_ARTIFACTS (or ./artifacts).
+    pub fn from_env() -> anyhow::Result<Self> {
+        Ok(Self::new(Engine::from_env()?))
+    }
+
+    fn ensure_setup(
+        &mut self,
+        grid: &Grid,
+        nodes: usize,
+        dim: usize,
+        kind: &'static str,
+    ) -> anyhow::Result<()> {
+        let fingerprint = (grid.rows, grid.cols);
+        if let Some(s) = &self.setup {
+            if s.nodes == nodes
+                && s.dim == dim
+                && s.kind == kind
+                && s.map_type == grid.map_type
+                && s.grid_fingerprint == fingerprint
+            {
+                return Ok(());
+            }
+        }
+        let map_type = match grid.map_type {
+            MapType::Planar => "planar",
+            MapType::Toroid => "toroid",
+        };
+        let art = self
+            .engine
+            .manifest()
+            .select_som_step(kind, map_type, dim, nodes)?
+            .clone();
+
+        // Coordinates, validity, span: upload once.
+        let mut coords = grid.coords_flat();
+        coords.resize(art.n * 2, 0.0);
+        let mut valid = vec![1.0f32; nodes];
+        valid.resize(art.n, 0.0);
+        let span = grid.span();
+
+        let coords_buf = self.engine.to_device_f32(&coords, &[art.n, 2])?;
+        let valid_buf = self.engine.to_device_f32(&valid, &[art.n])?;
+        let span_buf = self.engine.to_device_f32(&span, &[2])?;
+
+        // Pre-compile now so the first epoch isn't billed for it.
+        self.engine.executable(&art.file)?;
+
+        self.setup = Some(Setup {
+            cb_padded: vec![0.0; art.n * art.d],
+            data_padded: vec![0.0; art.s * art.d],
+            mask: vec![0.0; art.s],
+            art,
+            nodes,
+            dim,
+            kind,
+            map_type: grid.map_type,
+            grid_fingerprint: fingerprint,
+            coords_buf,
+            valid_buf,
+            span_buf,
+        });
+        Ok(())
+    }
+}
+
+impl TrainingKernel for AccelKernel {
+    fn name(&self) -> &'static str {
+        "accel-xla"
+    }
+
+    fn epoch_accumulate(
+        &mut self,
+        shard: DataShard<'_>,
+        codebook: &Codebook,
+        grid: &Grid,
+        neighborhood: Neighborhood,
+        radius: f32,
+        scale: f32,
+    ) -> anyhow::Result<EpochAccum> {
+        let DataShard::Dense { data, dim } = shard else {
+            anyhow::bail!(
+                "accel kernel needs dense data (the paper's GPU kernel has no \
+                 sparse variant either; use -k 2)"
+            );
+        };
+        anyhow::ensure!(dim == codebook.dim, "dim mismatch");
+        anyhow::ensure!(
+            grid.node_count() == codebook.nodes,
+            "grid/codebook mismatch"
+        );
+        let rows = data.len() / dim;
+        let kind = neighborhood.artifact_kind();
+        self.ensure_setup(grid, codebook.nodes, dim, kind)?;
+        // Split borrows: engine and setup are separate fields.
+        let setup = self.setup.as_mut().expect("just ensured");
+        let engine = &mut self.engine;
+        let (s_cap, d_pad, n_pad) = (setup.art.s, setup.art.d, setup.art.n);
+
+        // Codebook upload (once per epoch call).
+        for node in 0..setup.nodes {
+            setup.cb_padded[node * d_pad..node * d_pad + dim]
+                .copy_from_slice(codebook.row(node));
+        }
+        let cb_buf = engine.to_device_f32(&setup.cb_padded, &[n_pad, d_pad])?;
+        let radius_buf = engine.to_device_f32(&[radius], &[])?;
+        let scale_buf = engine.to_device_f32(&[scale], &[])?;
+
+        let mut acc = EpochAccum::zeros(setup.nodes, dim, 0);
+        let exe_file = setup.art.file.clone();
+
+        let mut start = 0usize;
+        while start < rows {
+            let chunk = (rows - start).min(s_cap);
+            // Stage rows + mask (padded tail zeroed).
+            for r in 0..chunk {
+                let src = &data[(start + r) * dim..(start + r + 1) * dim];
+                let dst = &mut setup.data_padded[r * d_pad..r * d_pad + dim];
+                dst.copy_from_slice(src);
+                setup.mask[r] = 1.0;
+            }
+            for r in chunk..s_cap {
+                setup.data_padded[r * d_pad..(r + 1) * d_pad].fill(0.0);
+                setup.mask[r] = 0.0;
+            }
+            let data_buf =
+                engine.to_device_f32(&setup.data_padded, &[s_cap, d_pad])?;
+            let mask_buf = engine.to_device_f32(&setup.mask, &[s_cap])?;
+
+            let exe = engine.executable(&exe_file)?;
+            let outputs = exe.execute_b(&[
+                &data_buf,
+                &mask_buf,
+                &cb_buf,
+                &setup.coords_buf,
+                &setup.valid_buf,
+                &setup.span_buf,
+                &radius_buf,
+                &scale_buf,
+            ])?;
+            let parts = untuple(outputs)?;
+            anyhow::ensure!(parts.len() == 4, "expected 4 outputs");
+
+            let bmus_chunk = parts[0].to_vec::<i32>()?;
+            let num_chunk = parts[1].to_vec::<f32>()?;
+            let den_chunk = parts[2].to_vec::<f32>()?;
+            let qe_chunk: f32 = parts[3].get_first_element()?;
+
+            acc.bmus
+                .extend(bmus_chunk[..chunk].iter().map(|&b| b as u32));
+            for node in 0..setup.nodes {
+                let src = &num_chunk[node * d_pad..node * d_pad + dim];
+                let dst = &mut acc.num[node * dim..(node + 1) * dim];
+                for (a, b) in dst.iter_mut().zip(src) {
+                    *a += b;
+                }
+            }
+            for (a, b) in acc.den.iter_mut().zip(&den_chunk[..setup.nodes]) {
+                *a += b;
+            }
+            acc.qe_sum += qe_chunk as f64;
+            start += chunk;
+        }
+        Ok(acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::dense_cpu::DenseCpuKernel;
+    use crate::som::grid::GridType;
+    use crate::util::rng::Rng;
+
+    fn artifacts_available() -> bool {
+        crate::runtime::Manifest::default_dir()
+            .join("manifest.json")
+            .exists()
+    }
+
+    /// accel kernel == dense CPU kernel (the cross-layer correctness
+    /// anchor: rust CPU path vs Pallas/XLA path).
+    #[test]
+    fn matches_dense_cpu_kernel() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rng = Rng::new(42);
+        for (map_type, nb) in [
+            (MapType::Planar, Neighborhood::gaussian(false)),
+            (MapType::Toroid, Neighborhood::gaussian(false)),
+            (MapType::Planar, Neighborhood::bubble()),
+            (MapType::Planar, Neighborhood::gaussian(true)),
+        ] {
+            let grid = Grid::new(10, 10, GridType::Square, map_type);
+            let cb = Codebook::random_init(100, 12, &mut rng);
+            let data: Vec<f32> = (0..300 * 12).map(|_| rng.normal_f32()).collect();
+            let shard = DataShard::Dense {
+                data: &data,
+                dim: 12,
+            };
+
+            let mut accel = AccelKernel::from_env().unwrap();
+            let got = accel
+                .epoch_accumulate(shard, &cb, &grid, nb, 2.5, 0.9)
+                .unwrap();
+            let want = DenseCpuKernel::new(2)
+                .epoch_accumulate(shard, &cb, &grid, nb, 2.5, 0.9)
+                .unwrap();
+
+            assert_eq!(got.bmus, want.bmus, "{map_type:?} {nb:?}");
+            assert!(
+                (got.qe_sum - want.qe_sum).abs() / want.qe_sum.max(1.0) < 1e-3,
+                "{map_type:?}: qe {} vs {}",
+                got.qe_sum,
+                want.qe_sum
+            );
+            for (i, (a, b)) in got.num.iter().zip(&want.num).enumerate() {
+                assert!(
+                    (a - b).abs() < 2e-2 + 1e-3 * b.abs(),
+                    "{map_type:?} num[{i}]: {a} vs {b}"
+                );
+            }
+            for (a, b) in got.den.iter().zip(&want.den) {
+                assert!((a - b).abs() < 2e-2 + 1e-3 * b.abs());
+            }
+        }
+    }
+
+    #[test]
+    fn chunking_is_invisible() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        // 300 rows with tiny-config capacity 256 forces 2 chunks; the
+        // result must equal the CPU kernel regardless (covered above),
+        // and re-running must be deterministic.
+        let mut rng = Rng::new(43);
+        let grid = Grid::new(8, 8, GridType::Square, MapType::Planar);
+        let cb = Codebook::random_init(64, 8, &mut rng);
+        let data: Vec<f32> = (0..300 * 8).map(|_| rng.normal_f32()).collect();
+        let shard = DataShard::Dense { data: &data, dim: 8 };
+        let mut k = AccelKernel::from_env().unwrap();
+        let nb = Neighborhood::gaussian(false);
+        let a = k.epoch_accumulate(shard, &cb, &grid, nb, 2.0, 1.0).unwrap();
+        let b = k.epoch_accumulate(shard, &cb, &grid, nb, 2.0, 1.0).unwrap();
+        assert_eq!(a.bmus, b.bmus);
+        assert_eq!(a.num, b.num);
+    }
+
+    #[test]
+    fn rejects_sparse() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let grid = Grid::new(2, 2, GridType::Square, MapType::Planar);
+        let cb = Codebook::zeros(4, 2);
+        let m = crate::sparse::Csr::new_empty(2, 2);
+        let mut k = AccelKernel::from_env().unwrap();
+        assert!(k
+            .epoch_accumulate(
+                DataShard::Sparse(&m),
+                &cb,
+                &grid,
+                Neighborhood::bubble(),
+                1.0,
+                1.0
+            )
+            .is_err());
+    }
+}

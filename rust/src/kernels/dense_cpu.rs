@@ -1,0 +1,552 @@
+//! Dense CPU kernel (paper `-k 0`) — "a straightforward implementation of
+//! the batch formulation in Equation 6", parallelized the way §3.1
+//! describes:
+//!
+//!  * BMU search is data-parallel: threads scan disjoint row ranges
+//!    against the *shared* codebook (no per-thread codebook copy — the
+//!    OpenMP-over-MPI memory saving).
+//!  * Accumulation is node-parallel ("the accumulation of local weights
+//!    ... is parallelized by an OpenMP directive"): threads own disjoint
+//!    node ranges of num/den, so no locks and no duplicated accumulators.
+//!  * The neighborhood radius is thresholded (`Neighborhood::cutoff`),
+//!    "which translates to speed improvements without compromising the
+//!    quality of the trained map".
+//!
+//! The BMU inner loop uses the same Gram-trick the GPU kernel exploits:
+//! argmin_n ||x||² + ||w_n||² − 2·x·w_n  =  argmin_n (||w_n||²/2 − x·w_n),
+//! turning the distance scan into dot products computed by an 8-row
+//! register-blocked FMA microkernel (see §Perf in EXPERIMENTS.md for the
+//! measured 13x iteration log on this path).
+
+use crate::kernels::{DataShard, EpochAccum, TrainingKernel};
+use crate::som::{Codebook, Grid, Neighborhood};
+use crate::util::threadpool;
+
+pub struct DenseCpuKernel {
+    pub threads: usize,
+    /// Cached ||w_n||² (recomputed when the codebook changes).
+    w2: Vec<f32>,
+}
+
+impl DenseCpuKernel {
+    pub fn new(threads: usize) -> Self {
+        DenseCpuKernel {
+            threads: threads.max(1),
+            w2: Vec::new(),
+        }
+    }
+
+    /// BMU per row + per-row winning squared distance.
+    fn search_bmus(
+        &self,
+        data: &[f32],
+        dim: usize,
+        codebook: &Codebook,
+        w2: &[f32],
+    ) -> (Vec<u32>, Vec<f32>) {
+        let rows = data.len() / dim;
+        let parts = threadpool::parallel_ranges(rows, self.threads, |_, range| {
+            let mut bmus = Vec::with_capacity(range.len());
+            let mut dists = Vec::with_capacity(range.len());
+            // Register-block over 8 rows: each codebook row streams from
+            // cache once per 8 data rows (§Perf: the BMU search is
+            // codebook-bandwidth bound; 8 rows ≈ the ymm register budget).
+            const B: usize = 8;
+            let mut it = range.clone().peekable();
+            while let Some(r0) = it.next() {
+                let mut block = [r0; B];
+                let mut blen = 1;
+                while blen < B {
+                    match it.next() {
+                        Some(r) => {
+                            block[blen] = r;
+                            blen += 1;
+                        }
+                        None => break,
+                    }
+                }
+                let x: [&[f32]; B] =
+                    std::array::from_fn(|k| &data[block[k] * dim..(block[k] + 1) * dim]);
+                let mut best = [0u32; B];
+                let mut best_score = [f32::INFINITY; B];
+                for n in 0..codebook.nodes {
+                    let w = codebook.row(n);
+                    let half_w2 = 0.5 * w2[n];
+                    // score = ||w||²/2 − x·w (argmin-equivalent to the
+                    // full squared distance); 8 rows share this w.
+                    let dots = dot8(&x, w);
+                    for k in 0..blen {
+                        let score = half_w2 - dots[k];
+                        if score < best_score[k] {
+                            best_score[k] = score;
+                            best[k] = n as u32;
+                        }
+                    }
+                }
+                for k in 0..blen {
+                    // Reconstruct the true squared distance for QE.
+                    let x2: f32 = x[k].iter().map(|v| v * v).sum();
+                    let d2 = (x2 + 2.0 * best_score[k]).max(0.0);
+                    bmus.push(best[k]);
+                    dists.push(d2);
+                }
+            }
+            (bmus, dists)
+        });
+        let mut bmus = Vec::with_capacity(rows);
+        let mut dists = Vec::with_capacity(rows);
+        for (b, d) in parts {
+            bmus.extend(b);
+            dists.extend(d);
+        }
+        (bmus, dists)
+    }
+}
+
+/// Eight dot products against a shared `w`.
+///
+/// On x86-64 with AVX2+FMA this uses explicit intrinsics: LLVM's
+/// auto-vectorizer turns the natural nested loop into cross-row shuffle
+/// soup (xmm inserts/shuffles around each FMA — measured 5x off peak),
+/// while the intrinsic kernel is 8 packed FMAs + 9 contiguous loads per
+/// 8-lane chunk and the shared `w` load amortizes across all rows.
+/// Portable scalar fallback elsewhere.
+#[inline]
+fn dot8(x: &[&[f32]; 8], w: &[f32]) -> [f32; 8] {
+    #[cfg(target_arch = "x86_64")]
+    {
+        // AVX-512 tried and reverted: no gain over AVX2 on this part
+        // (single 512-bit FMA unit + downclock) — see EXPERIMENTS.md §Perf.
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            // SAFETY: feature-checked above; slices are read in 8-lane
+            // chunks strictly within bounds.
+            return unsafe { dot8_avx2(x, w) };
+        }
+    }
+    let mut out = [0.0f32; 8];
+    for k in 0..8 {
+        out[k] = dot_unrolled(x[k], w);
+    }
+    out
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot8_avx2(x: &[&[f32]; 8], w: &[f32]) -> [f32; 8] {
+    use std::arch::x86_64::*;
+    let d = w.len();
+    let chunks = d / 8;
+    unsafe {
+        let mut acc = [_mm256_setzero_ps(); 8];
+        let wp = w.as_ptr();
+        let xp: [*const f32; 8] = std::array::from_fn(|k| x[k].as_ptr());
+        for c in 0..chunks {
+            let o = (c * 8) as isize;
+            let wv = _mm256_loadu_ps(wp.offset(o));
+            for k in 0..8 {
+                acc[k] =
+                    _mm256_fmadd_ps(_mm256_loadu_ps(xp[k].offset(o)), wv, acc[k]);
+            }
+        }
+        #[inline]
+        unsafe fn hsum(v: std::arch::x86_64::__m256) -> f32 {
+            unsafe {
+                let lo = _mm256_castps256_ps128(v);
+                let hi = _mm256_extractf128_ps(v, 1);
+                let s = _mm_add_ps(lo, hi);
+                let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+                let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+                _mm_cvtss_f32(s)
+            }
+        }
+        let mut out: [f32; 8] = std::array::from_fn(|k| hsum(acc[k]));
+        for i in chunks * 8..d {
+            for k in 0..8 {
+                out[k] = x[k][i].mul_add(w[i], out[k]);
+            }
+        }
+        out
+    }
+}
+
+/// Dot product with 8 independent accumulators: breaks the sequential
+/// FP dependency chain so the compiler vectorizes + pipelines it (§Perf:
+/// 4.5x on the BMU search vs the naive single-accumulator loop).
+#[inline]
+pub fn dot_unrolled(x: &[f32], w: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), w.len());
+    let chunks = x.len() / 8;
+    let mut acc = [0.0f32; 8];
+    for c in 0..chunks {
+        let xb = &x[c * 8..c * 8 + 8];
+        let wb = &w[c * 8..c * 8 + 8];
+        for k in 0..8 {
+            acc[k] = xb[k].mul_add(wb[k], acc[k]);
+        }
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..x.len() {
+        tail = x[i].mul_add(w[i], tail);
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7])) + tail
+}
+
+/// Node-parallel accumulation shared by the dense and sparse kernels,
+/// in two phases (§Perf: the BMU-histogram formulation):
+///
+///   A. Group rows by their BMU: X_sum[b] = Σ_{bmu(r)=b} x_r and
+///      cnt[b] = |{r : bmu(r)=b}| — `add_row(xsum_row, r, 1.0)` performs
+///      the (possibly sparse) add; threads own disjoint node ranges so
+///      the sums are lock-free AND deterministic (row order per node).
+///   B. num[n] = Σ_b h(d(b,n)) · X_sum[b], den[n] = Σ_b h · cnt[b] —
+///      node-parallel axpy sweep over the *occupied* BMUs only.
+///
+/// This is exact up to f32 ordering and turns the O(S·N·D) per-sample
+/// update into O(S·D + N·B·D) with B = occupied nodes ≤ min(S, N): the
+/// batch formulation's h depends only on (bmu, node), so rows sharing a
+/// BMU share their weight. The neighborhood radius is thresholded
+/// (`Neighborhood::cutoff`) exactly as §3.1 describes.
+pub fn accumulate_node_parallel<F>(
+    rows: usize,
+    nodes: usize,
+    dim: usize,
+    threads: usize,
+    grid: &Grid,
+    neighborhood: Neighborhood,
+    radius: f32,
+    scale: f32,
+    bmus: &[u32],
+    add_row: F,
+) -> (Vec<f32>, Vec<f32>)
+where
+    F: Fn(&mut [f32], usize, f32) + Sync,
+{
+    let cutoff = neighborhood.cutoff(radius);
+    debug_assert!(bmus.len() >= rows);
+
+    // --- Phase A: per-BMU sums, threads own disjoint node ranges.
+    let mut xsum = vec![0.0f32; nodes * dim];
+    let mut cnt = vec![0.0f32; nodes];
+    let ranges = threadpool::split_ranges(nodes, threads);
+    let xsum_chunks = split_at_ranges(&mut xsum, &ranges, dim);
+    let cnt_chunks = split_at_ranges(&mut cnt, &ranges, 1);
+    std::thread::scope(|scope| {
+        for ((range, xsum_chunk), cnt_chunk) in
+            ranges.iter().cloned().zip(xsum_chunks).zip(cnt_chunks)
+        {
+            let add_row = &add_row;
+            let bmus = &bmus[..rows];
+            scope.spawn(move || {
+                for (r, &bmu) in bmus.iter().enumerate() {
+                    let b = bmu as usize;
+                    if range.contains(&b) {
+                        let local = b - range.start;
+                        add_row(
+                            &mut xsum_chunk[local * dim..(local + 1) * dim],
+                            r,
+                            1.0,
+                        );
+                        cnt_chunk[local] += 1.0;
+                    }
+                }
+            });
+        }
+    });
+
+    // Occupied BMUs only: B is bounded by min(rows, nodes).
+    let active: Vec<u32> = (0..nodes as u32)
+        .filter(|&b| cnt[b as usize] > 0.0)
+        .collect();
+
+    // --- Phase B: neighborhood-weighted spread, node-parallel.
+    let mut num = vec![0.0f32; nodes * dim];
+    let mut den = vec![0.0f32; nodes];
+    let num_chunks = split_at_ranges(&mut num, &ranges, dim);
+    let den_chunks = split_at_ranges(&mut den, &ranges, 1);
+    let (xsum, cnt, active) = (&xsum, &cnt, &active);
+    std::thread::scope(|scope| {
+        for ((range, num_chunk), den_chunk) in
+            ranges.iter().cloned().zip(num_chunks).zip(den_chunks)
+        {
+            scope.spawn(move || {
+                for node in range.clone() {
+                    let local = node - range.start;
+                    let num_row = &mut num_chunk[local * dim..(local + 1) * dim];
+                    let mut d_acc = 0.0f32;
+                    for &b in active {
+                        let gd = grid.distance(b as usize, node);
+                        if gd > cutoff {
+                            continue;
+                        }
+                        let h = neighborhood.weight(gd, radius) * scale;
+                        if h <= 0.0 {
+                            continue;
+                        }
+                        d_acc += h * cnt[b as usize];
+                        let src = &xsum[b as usize * dim..(b as usize + 1) * dim];
+                        for (a, s) in num_row.iter_mut().zip(src) {
+                            *a = s.mul_add(h, *a);
+                        }
+                    }
+                    den_chunk[local] = d_acc;
+                }
+            });
+        }
+    });
+    (num, den)
+}
+
+/// Split a flat buffer into per-range mutable chunks (range i covers
+/// `range.len() * width` elements).
+fn split_at_ranges<'a>(
+    buf: &'a mut [f32],
+    ranges: &[std::ops::Range<usize>],
+    width: usize,
+) -> Vec<&'a mut [f32]> {
+    let mut out = Vec::with_capacity(ranges.len());
+    let mut rest = buf;
+    for r in ranges {
+        let (head, tail) = rest.split_at_mut(r.len() * width);
+        out.push(head);
+        rest = tail;
+    }
+    out
+}
+
+impl TrainingKernel for DenseCpuKernel {
+    fn name(&self) -> &'static str {
+        "dense-cpu"
+    }
+
+    fn epoch_accumulate(
+        &mut self,
+        shard: DataShard<'_>,
+        codebook: &Codebook,
+        grid: &Grid,
+        neighborhood: Neighborhood,
+        radius: f32,
+        scale: f32,
+    ) -> anyhow::Result<EpochAccum> {
+        let DataShard::Dense { data, dim } = shard else {
+            anyhow::bail!("dense kernel needs a dense shard (use -k 2 for sparse data)");
+        };
+        anyhow::ensure!(
+            dim == codebook.dim,
+            "data dim {dim} != codebook dim {}",
+            codebook.dim
+        );
+        let rows = data.len() / dim;
+
+        self.w2 = codebook.sq_norms();
+        let (bmus, dists) = self.search_bmus(data, dim, codebook, &self.w2);
+        let qe_sum: f64 = dists.iter().map(|d| (*d as f64).sqrt()).sum();
+
+        let (num, den) = accumulate_node_parallel(
+            rows,
+            codebook.nodes,
+            dim,
+            self.threads,
+            grid,
+            neighborhood,
+            radius,
+            scale,
+            &bmus,
+            |num_row, r, h| {
+                let x = &data[r * dim..(r + 1) * dim];
+                for (acc, v) in num_row.iter_mut().zip(x) {
+                    *acc += h * v;
+                }
+            },
+        );
+
+        Ok(EpochAccum {
+            bmus,
+            num,
+            den,
+            qe_sum,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::som::grid::{GridType, MapType};
+    use crate::util::rng::Rng;
+
+    fn setup(nodes_side: usize, dim: usize, rows: usize, seed: u64) -> (Grid, Codebook, Vec<f32>) {
+        let grid = Grid::new(nodes_side, nodes_side, GridType::Square, MapType::Planar);
+        let mut rng = Rng::new(seed);
+        let cb = Codebook::random_init(grid.node_count(), dim, &mut rng);
+        let data: Vec<f32> = (0..rows * dim).map(|_| rng.normal_f32()).collect();
+        (grid, cb, data)
+    }
+
+    /// Naive O(S·N·D) oracle for the full accumulation pass.
+    pub fn naive_accumulate(
+        data: &[f32],
+        dim: usize,
+        cb: &Codebook,
+        grid: &Grid,
+        nb: Neighborhood,
+        radius: f32,
+        scale: f32,
+    ) -> EpochAccum {
+        let rows = data.len() / dim;
+        let mut acc = EpochAccum::zeros(cb.nodes, dim, rows);
+        for r in 0..rows {
+            let x = &data[r * dim..(r + 1) * dim];
+            let (mut best, mut best_d) = (0usize, f32::INFINITY);
+            for n in 0..cb.nodes {
+                let d = crate::som::quality::sq_dist(x, cb.row(n));
+                if d < best_d {
+                    best_d = d;
+                    best = n;
+                }
+            }
+            acc.bmus[r] = best as u32;
+            acc.qe_sum += (best_d as f64).sqrt();
+            for n in 0..cb.nodes {
+                let h = nb.weight(grid.distance(best, n), radius) * scale;
+                if h > 0.0 {
+                    acc.den[n] += h;
+                    for d in 0..dim {
+                        acc.num[n * dim + d] += h * x[d];
+                    }
+                }
+            }
+        }
+        acc
+    }
+
+    fn assert_accum_close(a: &EpochAccum, b: &EpochAccum, tol: f32) {
+        assert_eq!(a.bmus, b.bmus);
+        assert!((a.qe_sum - b.qe_sum).abs() < tol as f64 * 10.0);
+        for (i, (x, y)) in a.num.iter().zip(&b.num).enumerate() {
+            assert!((x - y).abs() < tol, "num[{i}]: {x} vs {y}");
+        }
+        for (i, (x, y)) in a.den.iter().zip(&b.den).enumerate() {
+            assert!((x - y).abs() < tol, "den[{i}]: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matches_naive_oracle() {
+        let (grid, cb, data) = setup(6, 7, 40, 1);
+        let mut k = DenseCpuKernel::new(4);
+        let got = k
+            .epoch_accumulate(
+                DataShard::Dense { data: &data, dim: 7 },
+                &cb,
+                &grid,
+                Neighborhood::gaussian(false),
+                2.5,
+                0.8,
+            )
+            .unwrap();
+        let want = naive_accumulate(
+            &data,
+            7,
+            &cb,
+            &grid,
+            Neighborhood::gaussian(false),
+            2.5,
+            0.8,
+        );
+        assert_accum_close(&got, &want, 2e-3);
+    }
+
+    #[test]
+    fn matches_naive_all_variants() {
+        for (gt, mt) in [
+            (GridType::Square, MapType::Planar),
+            (GridType::Square, MapType::Toroid),
+            (GridType::Hexagonal, MapType::Planar),
+            (GridType::Hexagonal, MapType::Toroid),
+        ] {
+            for nb in [
+                Neighborhood::gaussian(false),
+                Neighborhood::gaussian(true),
+                Neighborhood::bubble(),
+            ] {
+                let grid = Grid::new(5, 4, gt, mt);
+                let mut rng = Rng::new(7);
+                let cb = Codebook::random_init(grid.node_count(), 3, &mut rng);
+                let data: Vec<f32> =
+                    (0..20 * 3).map(|_| rng.normal_f32()).collect();
+                let mut k = DenseCpuKernel::new(3);
+                let got = k
+                    .epoch_accumulate(
+                        DataShard::Dense { data: &data, dim: 3 },
+                        &cb,
+                        &grid,
+                        nb,
+                        1.8,
+                        1.0,
+                    )
+                    .unwrap();
+                let want = naive_accumulate(&data, 3, &cb, &grid, nb, 1.8, 1.0);
+                assert_accum_close(&got, &want, 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn thread_count_invariant() {
+        let (grid, cb, data) = setup(5, 4, 64, 3);
+        let run = |threads| {
+            DenseCpuKernel::new(threads)
+                .epoch_accumulate(
+                    DataShard::Dense { data: &data, dim: 4 },
+                    &cb,
+                    &grid,
+                    Neighborhood::gaussian(false),
+                    2.0,
+                    1.0,
+                )
+                .unwrap()
+        };
+        let a = run(1);
+        for threads in [2, 4, 8] {
+            let b = run(threads);
+            assert_eq!(a.bmus, b.bmus);
+            // Node-parallel accumulation is deterministic per node: exact.
+            assert_eq!(a.num, b.num, "threads={threads}");
+            assert_eq!(a.den, b.den, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn rejects_sparse_shard() {
+        let (grid, cb, _) = setup(3, 2, 0, 4);
+        let m = crate::sparse::Csr::new_empty(2, 2);
+        let mut k = DenseCpuKernel::new(1);
+        assert!(k
+            .epoch_accumulate(
+                DataShard::Sparse(&m),
+                &cb,
+                &grid,
+                Neighborhood::bubble(),
+                1.0,
+                1.0
+            )
+            .is_err());
+    }
+
+    #[test]
+    fn rejects_dim_mismatch() {
+        let (grid, cb, _) = setup(3, 5, 0, 5);
+        let data = vec![0.0; 8];
+        let mut k = DenseCpuKernel::new(1);
+        assert!(k
+            .epoch_accumulate(
+                DataShard::Dense { data: &data, dim: 4 },
+                &cb,
+                &grid,
+                Neighborhood::bubble(),
+                1.0,
+                1.0
+            )
+            .is_err());
+    }
+}

@@ -1,0 +1,237 @@
+//! Hybrid kernel — the paper's actual GPU design (§3.1): the accelerator
+//! does the data-parallel distance search, the CPU threads do the weight
+//! update. "While the GPU handles the load efficiently, it would be
+//! highly inefficient to use a single thread to update the local
+//! weights. We thus hybridized the kernel and rely on OpenMP to
+//! parallelize the weight update."
+//!
+//! Here: BMU search runs the AOT `som_bmu_*` artifact through PJRT; the
+//! Eq. 6 accumulation reuses the node-parallel CPU scheme of the dense
+//! kernel (BMU-histogram formulation).
+
+use crate::kernels::dense_cpu::accumulate_node_parallel;
+use crate::kernels::{DataShard, EpochAccum, TrainingKernel};
+use crate::runtime::{untuple, Engine};
+use crate::som::{Codebook, Grid, Neighborhood};
+
+pub struct HybridKernel {
+    engine: Engine,
+    pub threads: usize,
+    /// Which BMU formulation to run on the accelerator: "gram" (default,
+    /// the paper's pick) or "direct" (ablation baseline).
+    pub variant: &'static str,
+    setup: Option<Setup>,
+}
+
+struct Setup {
+    file: String,
+    s: usize,
+    d: usize,
+    n: usize,
+    nodes: usize,
+    dim: usize,
+    valid_buf: xla::PjRtBuffer,
+    cb_padded: Vec<f32>,
+    data_padded: Vec<f32>,
+}
+
+impl HybridKernel {
+    pub fn new(engine: Engine, threads: usize) -> Self {
+        HybridKernel {
+            engine,
+            threads: threads.max(1),
+            variant: "gram",
+            setup: None,
+        }
+    }
+
+    pub fn from_env(threads: usize) -> anyhow::Result<Self> {
+        Ok(Self::new(Engine::from_env()?, threads))
+    }
+
+    pub fn with_variant(mut self, variant: &'static str) -> Self {
+        self.variant = variant;
+        self.setup = None;
+        self
+    }
+
+    fn ensure_setup(&mut self, nodes: usize, dim: usize) -> anyhow::Result<()> {
+        if let Some(s) = &self.setup {
+            if s.nodes == nodes && s.dim == dim {
+                return Ok(());
+            }
+        }
+        let art = self.engine.manifest().select_bmu(self.variant, dim, nodes)?.clone();
+        let mut valid = vec![1.0f32; nodes];
+        valid.resize(art.n, 0.0);
+        let valid_buf = self.engine.to_device_f32(&valid, &[art.n])?;
+        self.engine.executable(&art.file)?;
+        self.setup = Some(Setup {
+            cb_padded: vec![0.0; art.n * art.d],
+            data_padded: vec![0.0; art.s * art.d],
+            file: art.file,
+            s: art.s,
+            d: art.d,
+            n: art.n,
+            nodes,
+            dim,
+            valid_buf,
+        });
+        Ok(())
+    }
+}
+
+impl TrainingKernel for HybridKernel {
+    fn name(&self) -> &'static str {
+        "hybrid-xla-cpu"
+    }
+
+    fn epoch_accumulate(
+        &mut self,
+        shard: DataShard<'_>,
+        codebook: &Codebook,
+        grid: &Grid,
+        neighborhood: Neighborhood,
+        radius: f32,
+        scale: f32,
+    ) -> anyhow::Result<EpochAccum> {
+        let DataShard::Dense { data, dim } = shard else {
+            anyhow::bail!("hybrid kernel needs dense data");
+        };
+        anyhow::ensure!(dim == codebook.dim, "dim mismatch");
+        let rows = data.len() / dim;
+        self.ensure_setup(codebook.nodes, dim)?;
+        let setup = self.setup.as_mut().expect("just ensured");
+        let engine = &mut self.engine;
+        let (s_cap, d_pad) = (setup.s, setup.d);
+
+        // --- Accelerator phase: BMU search per chunk.
+        for node in 0..setup.nodes {
+            setup.cb_padded[node * d_pad..node * d_pad + dim]
+                .copy_from_slice(codebook.row(node));
+        }
+        let cb_buf = engine.to_device_f32(&setup.cb_padded, &[setup.n, d_pad])?;
+
+        let mut bmus: Vec<u32> = Vec::with_capacity(rows);
+        let mut qe_sum = 0.0f64;
+        let mut start = 0usize;
+        while start < rows {
+            let chunk = (rows - start).min(s_cap);
+            for r in 0..chunk {
+                let src = &data[(start + r) * dim..(start + r + 1) * dim];
+                setup.data_padded[r * d_pad..r * d_pad + dim].copy_from_slice(src);
+            }
+            for r in chunk..s_cap {
+                setup.data_padded[r * d_pad..(r + 1) * d_pad].fill(0.0);
+            }
+            let data_buf = engine.to_device_f32(&setup.data_padded, &[s_cap, d_pad])?;
+            let exe = engine.executable(&setup.file)?;
+            let parts = untuple(exe.execute_b(&[&data_buf, &cb_buf, &setup.valid_buf])?)?;
+            anyhow::ensure!(parts.len() == 2, "expected 2 outputs");
+            let best = parts[0].to_vec::<f32>()?;
+            let idx = parts[1].to_vec::<i32>()?;
+            for r in 0..chunk {
+                bmus.push(idx[r] as u32);
+                qe_sum += (best[r].max(0.0) as f64).sqrt();
+            }
+            start += chunk;
+        }
+
+        // --- CPU phase: threaded Eq. 6 accumulation (the OpenMP side).
+        let (num, den) = accumulate_node_parallel(
+            rows,
+            codebook.nodes,
+            dim,
+            self.threads,
+            grid,
+            neighborhood,
+            radius,
+            scale,
+            &bmus,
+            |num_row, r, h| {
+                let x = &data[r * dim..(r + 1) * dim];
+                for (acc, v) in num_row.iter_mut().zip(x) {
+                    *acc = v.mul_add(h, *acc);
+                }
+            },
+        );
+
+        Ok(EpochAccum {
+            bmus,
+            num,
+            den,
+            qe_sum,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::dense_cpu::DenseCpuKernel;
+    use crate::som::grid::{GridType, MapType};
+    use crate::util::rng::Rng;
+
+    fn artifacts_available() -> bool {
+        crate::runtime::Manifest::default_dir()
+            .join("manifest.json")
+            .exists()
+    }
+
+    #[test]
+    fn hybrid_matches_dense_cpu() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rng = Rng::new(61);
+        let grid = Grid::new(9, 9, GridType::Square, MapType::Toroid);
+        let cb = Codebook::random_init(81, 10, &mut rng);
+        let data: Vec<f32> = (0..300 * 10).map(|_| rng.normal_f32()).collect();
+        let shard = DataShard::Dense { data: &data, dim: 10 };
+        let nb = Neighborhood::gaussian(false);
+
+        let want = DenseCpuKernel::new(2)
+            .epoch_accumulate(shard, &cb, &grid, nb, 3.0, 0.8)
+            .unwrap();
+        for variant in ["gram", "direct"] {
+            let mut k = HybridKernel::from_env(2).unwrap().with_variant(variant);
+            let got = k.epoch_accumulate(shard, &cb, &grid, nb, 3.0, 0.8).unwrap();
+            assert_eq!(got.bmus, want.bmus, "{variant}");
+            assert!(
+                (got.qe_sum - want.qe_sum).abs() / want.qe_sum < 1e-3,
+                "{variant}: {} vs {}",
+                got.qe_sum,
+                want.qe_sum
+            );
+            for (a, b) in got.num.iter().zip(&want.num) {
+                assert!((a - b).abs() < 1e-2 + 1e-3 * b.abs(), "{variant}");
+            }
+            for (a, b) in got.den.iter().zip(&want.den) {
+                assert!((a - b).abs() < 1e-2 + 1e-3 * b.abs(), "{variant}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_sparse() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let grid = Grid::new(2, 2, GridType::Square, MapType::Planar);
+        let cb = Codebook::zeros(4, 2);
+        let m = crate::sparse::Csr::new_empty(2, 2);
+        let mut k = HybridKernel::from_env(1).unwrap();
+        assert!(k
+            .epoch_accumulate(
+                DataShard::Sparse(&m),
+                &cb,
+                &grid,
+                Neighborhood::bubble(),
+                1.0,
+                1.0
+            )
+            .is_err());
+    }
+}

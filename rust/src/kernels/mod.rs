@@ -1,0 +1,155 @@
+//! Training kernels (paper `-k`): 0 = dense CPU, 1 = accelerator
+//! (paper: GPU; here: AOT XLA/PJRT), 2 = sparse CPU.
+//!
+//! A kernel computes one shard-level batch accumulation pass (the body of
+//! `trainOneEpoch`): BMUs, Eq. 6 numerator/denominator, and the
+//! quantization-error sum. The coordinator allreduces accumulators across
+//! ranks and applies the codebook update.
+
+pub mod accel;
+pub mod dense_cpu;
+pub mod hybrid;
+pub mod sparse_cpu;
+
+use crate::som::{Codebook, Grid, Neighborhood};
+use crate::sparse::Csr;
+
+/// Kernel selector, mirroring the paper's `-k NUMBER` (3 = the paper's
+/// hybrid accelerator-BMU + CPU-update design, exposed explicitly).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum KernelType {
+    DenseCpu,
+    Accel,
+    SparseCpu,
+    Hybrid,
+}
+
+impl std::str::FromStr for KernelType {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "0" | "dense" | "dense-cpu" => Ok(KernelType::DenseCpu),
+            "1" | "accel" | "gpu" | "xla" => Ok(KernelType::Accel),
+            "2" | "sparse" | "sparse-cpu" => Ok(KernelType::SparseCpu),
+            "3" | "hybrid" => Ok(KernelType::Hybrid),
+            other => Err(format!("unknown kernel type: {other}")),
+        }
+    }
+}
+
+/// A shard of training data, dense or sparse.
+#[derive(Copy, Clone, Debug)]
+pub enum DataShard<'a> {
+    Dense { data: &'a [f32], dim: usize },
+    Sparse(&'a Csr),
+}
+
+impl<'a> DataShard<'a> {
+    pub fn rows(&self) -> usize {
+        match self {
+            DataShard::Dense { data, dim } => data.len() / dim,
+            DataShard::Sparse(m) => m.rows,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            DataShard::Dense { dim, .. } => *dim,
+            DataShard::Sparse(m) => m.cols,
+        }
+    }
+}
+
+/// Result of one shard-level accumulation pass.
+#[derive(Clone, Debug)]
+pub struct EpochAccum {
+    /// Best matching unit per shard row.
+    pub bmus: Vec<u32>,
+    /// Eq. 6 numerator, [nodes x dim] row-major.
+    pub num: Vec<f32>,
+    /// Eq. 6 denominator, [nodes].
+    pub den: Vec<f32>,
+    /// Sum of winning Euclidean distances (for QE).
+    pub qe_sum: f64,
+}
+
+impl EpochAccum {
+    pub fn zeros(nodes: usize, dim: usize, rows: usize) -> Self {
+        EpochAccum {
+            bmus: vec![0; rows],
+            num: vec![0.0; nodes * dim],
+            den: vec![0.0; nodes],
+            qe_sum: 0.0,
+        }
+    }
+
+    /// Element-wise merge (the allreduce reduction operator).
+    pub fn merge(&mut self, other: &EpochAccum) {
+        assert_eq!(self.num.len(), other.num.len());
+        assert_eq!(self.den.len(), other.den.len());
+        for (a, b) in self.num.iter_mut().zip(&other.num) {
+            *a += b;
+        }
+        for (a, b) in self.den.iter_mut().zip(&other.den) {
+            *a += b;
+        }
+        self.qe_sum += other.qe_sum;
+    }
+}
+
+/// One epoch-step of a training kernel over a shard.
+pub trait TrainingKernel {
+    /// Human-readable kernel name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Compute BMUs + Eq. 6 accumulators for `shard` against `codebook`.
+    fn epoch_accumulate(
+        &mut self,
+        shard: DataShard<'_>,
+        codebook: &Codebook,
+        grid: &Grid,
+        neighborhood: Neighborhood,
+        radius: f32,
+        scale: f32,
+    ) -> anyhow::Result<EpochAccum>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_type_parse_matches_cli_numbers() {
+        assert_eq!("0".parse::<KernelType>().unwrap(), KernelType::DenseCpu);
+        assert_eq!("1".parse::<KernelType>().unwrap(), KernelType::Accel);
+        assert_eq!("2".parse::<KernelType>().unwrap(), KernelType::SparseCpu);
+        assert_eq!("3".parse::<KernelType>().unwrap(), KernelType::Hybrid);
+        assert!("4".parse::<KernelType>().is_err());
+    }
+
+    #[test]
+    fn accum_merge_adds() {
+        let mut a = EpochAccum::zeros(2, 2, 1);
+        a.num[0] = 1.0;
+        a.den[1] = 2.0;
+        a.qe_sum = 1.5;
+        let mut b = EpochAccum::zeros(2, 2, 1);
+        b.num[0] = 3.0;
+        b.den[1] = 4.0;
+        b.qe_sum = 0.5;
+        a.merge(&b);
+        assert_eq!(a.num[0], 4.0);
+        assert_eq!(a.den[1], 6.0);
+        assert_eq!(a.qe_sum, 2.0);
+    }
+
+    #[test]
+    fn shard_dims() {
+        let d = DataShard::Dense {
+            data: &[0.0; 12],
+            dim: 3,
+        };
+        assert_eq!(d.rows(), 4);
+        assert_eq!(d.dim(), 3);
+    }
+}

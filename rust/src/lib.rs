@@ -1,0 +1,36 @@
+//! # somoclu-rs — parallel self-organizing maps (paper reproduction)
+//!
+//! Reproduction of *Somoclu: An Efficient Parallel Library for
+//! Self-Organizing Maps* (Wittek et al.) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordinator: threaded CPU kernels, a
+//!   simulated-MPI cluster runtime, the full somoclu CLI, file formats,
+//!   and the training loop.
+//! * **L2/L1 (python/, build time only)** — the batch-SOM epoch step in
+//!   JAX calling Pallas kernels, AOT-lowered to HLO text artifacts that
+//!   [`runtime`] executes through the PJRT CPU client (the paper's GPU
+//!   kernel, re-thought for the MXU — see DESIGN.md).
+//!
+//! Entry points: [`api::train`] for library use, the `somoclu` binary for
+//! the paper's CLI, and `examples/` for end-to-end drivers.
+
+pub mod api;
+pub mod baseline;
+pub mod cli;
+pub mod cluster;
+pub mod coordinator;
+pub mod data;
+pub mod io;
+pub mod kernels;
+pub mod runtime;
+pub mod som;
+pub mod sparse;
+pub mod util;
+pub mod viz;
+
+/// Allocation tracking drives the paper's memory claims (Figs. 6–7); the
+/// wrapper adds two relaxed atomics per alloc, invisible next to the
+/// training arithmetic.
+#[global_allocator]
+static ALLOC: util::memtrack::TrackingAlloc = util::memtrack::TrackingAlloc;

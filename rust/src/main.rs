@@ -1,0 +1,151 @@
+//! `somoclu` — the command-line batch trainer (paper §4.1).
+//!
+//! Single process: `somoclu [OPTIONS] INPUT OUTPUT_PREFIX`.
+//! Simulated cluster: add `--ranks N` (stands in for `mpirun -np N`).
+
+use somoclu::cli;
+use somoclu::cluster::runner::{train_cluster, ClusterData};
+use somoclu::coordinator::train::train;
+use somoclu::io::output::OutputWriter;
+use somoclu::io::{read_dense, read_sparse};
+use somoclu::kernels::{DataShard, KernelType};
+use somoclu::som::Codebook;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let spec = cli::arg_spec();
+    if args.iter().any(|a| a == "-h" || a == "--help") {
+        print!("{}", spec.usage("somoclu"));
+        return;
+    }
+    let parsed = match spec.parse(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", spec.usage("somoclu"));
+            std::process::exit(2);
+        }
+    };
+    let opts = match cli::parse_cli(&parsed) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(opts) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
+    let cfg = &opts.config;
+    let writer = OutputWriter::new(&opts.output_prefix);
+
+    // Load the initial codebook if requested (paper -c).
+    let grid = cfg.grid();
+    let initial = match &opts.initial_codebook {
+        Some(path) => {
+            let m = read_dense(path)?;
+            anyhow::ensure!(
+                m.rows == grid.node_count(),
+                "initial codebook has {} rows, map has {} nodes",
+                m.rows,
+                grid.node_count()
+            );
+            Some(Codebook {
+                nodes: m.rows,
+                dim: m.cols,
+                weights: m.data,
+            })
+        }
+        None => None,
+    };
+
+    let t0 = std::time::Instant::now();
+    let result = if cfg.kernel == KernelType::SparseCpu {
+        let m = read_sparse(&opts.input_file, 0)?;
+        eprintln!(
+            "loaded sparse input: {} rows x {} dims, {:.2}% nonzero",
+            m.rows,
+            m.cols,
+            m.density() * 100.0
+        );
+        if cfg.ranks > 1 {
+            anyhow::ensure!(initial.is_none(), "--ranks with -c is not supported");
+            let (res, report) =
+                train_cluster(cfg, ClusterData::Sparse(m), opts.net.clone())?;
+            eprintln!(
+                "cluster: {} ranks, {} msgs, {} bytes on the wire",
+                report.ranks, report.messages_sent, report.bytes_sent
+            );
+            res
+        } else {
+            train(cfg, DataShard::Sparse(&m), initial, Some(&writer))?
+        }
+    } else {
+        let m = read_dense(&opts.input_file)?;
+        eprintln!("loaded dense input: {} rows x {} dims", m.rows, m.cols);
+        if cfg.ranks > 1 {
+            anyhow::ensure!(initial.is_none(), "--ranks with -c is not supported");
+            let (res, report) = train_cluster(
+                cfg,
+                ClusterData::Dense {
+                    data: m.data,
+                    dim: m.cols,
+                },
+                opts.net.clone(),
+            )?;
+            eprintln!(
+                "cluster: {} ranks, {} msgs, {} bytes on the wire",
+                report.ranks, report.messages_sent, report.bytes_sent
+            );
+            res
+        } else {
+            train(
+                cfg,
+                DataShard::Dense {
+                    data: &m.data,
+                    dim: m.cols,
+                },
+                initial,
+                Some(&writer),
+            )?
+        }
+    };
+
+    // Cluster path does not stream snapshots; write final outputs here.
+    if cfg.ranks > 1 {
+        writer.write_final(&grid, &result.codebook, &result.bmus, &result.umatrix)?;
+    }
+
+    if opts.verbose {
+        for e in &result.epochs {
+            eprintln!(
+                "epoch {:>3}  radius {:>7.3}  scale {:>6.4}  QE {:>10.6}  ({:?})",
+                e.epoch, e.radius, e.scale, e.qe, e.duration
+            );
+        }
+    }
+    eprintln!(
+        "trained {} epochs on a {}x{} {:?}/{:?} map with the {} kernel in {:?}; final QE {:.6}",
+        cfg.epochs,
+        cfg.rows,
+        cfg.cols,
+        cfg.grid_type,
+        cfg.map_type,
+        match cfg.kernel {
+            KernelType::DenseCpu => "dense-cpu",
+            KernelType::Accel => "accel-xla",
+            KernelType::SparseCpu => "sparse-cpu",
+            KernelType::Hybrid => "hybrid-xla-cpu",
+        },
+        t0.elapsed(),
+        result.final_qe()
+    );
+    eprintln!(
+        "wrote {p}.wts, {p}.bm, {p}.umx",
+        p = opts.output_prefix
+    );
+    Ok(())
+}

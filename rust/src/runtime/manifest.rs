@@ -1,0 +1,318 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime. Parsed with the in-repo JSON parser.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One AOT-lowered `som_epoch_step` variant.
+#[derive(Clone, Debug)]
+pub struct SomStepArtifact {
+    pub name: String,
+    pub file: String,
+    pub shape: String,
+    /// Neighborhood variant: gaussian | gaussian_compact | bubble.
+    pub kind: String,
+    /// planar | toroid.
+    pub map_type: String,
+    /// Shard row capacity.
+    pub s: usize,
+    /// Feature-dim capacity.
+    pub d: usize,
+    /// Node capacity.
+    pub n: usize,
+    pub block_s: usize,
+    pub block_n: usize,
+}
+
+/// One AOT-lowered BMU-only artifact (hybrid kernel / ablation bench).
+#[derive(Clone, Debug)]
+pub struct BmuArtifact {
+    pub name: String,
+    pub file: String,
+    pub shape: String,
+    /// "gram" (the paper's chosen formulation) or "direct" (the naive
+    /// design the paper benchmarked against and rejected).
+    pub variant: String,
+    pub s: usize,
+    pub d: usize,
+    pub n: usize,
+    pub block_s: usize,
+    pub block_n: usize,
+}
+
+/// One AOT-lowered `umatrix_step` artifact.
+#[derive(Clone, Debug)]
+pub struct UmatrixArtifact {
+    pub name: String,
+    pub file: String,
+    pub shape: String,
+    pub n: usize,
+    pub k: usize,
+    pub d: usize,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub som_steps: Vec<SomStepArtifact>,
+    pub umatrix: Vec<UmatrixArtifact>,
+    pub bmu: Vec<BmuArtifact>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("cannot read manifest {path}: {source}")]
+    Io {
+        path: String,
+        source: std::io::Error,
+    },
+    #[error("manifest parse error: {0}")]
+    Parse(String),
+    #[error(
+        "no artifact fits request: kind={kind} map={map_type} dim<= {d} nodes<= {n} \
+         (available: {available}) — re-run `make artifacts` with a config that covers it"
+    )]
+    NoFit {
+        kind: String,
+        map_type: String,
+        d: usize,
+        n: usize,
+        available: String,
+    },
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String, ManifestError> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| ManifestError::Parse(format!("missing string field {key}")))
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize, ManifestError> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| ManifestError::Parse(format!("missing numeric field {key}")))
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Self, ManifestError> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|source| ManifestError::Io {
+            path: path.display().to_string(),
+            source,
+        })?;
+        let j = Json::parse(&text).map_err(|e| ManifestError::Parse(e.to_string()))?;
+
+        let mut som_steps = Vec::new();
+        for entry in j
+            .get("som_step")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| ManifestError::Parse("missing som_step array".into()))?
+        {
+            som_steps.push(SomStepArtifact {
+                name: req_str(entry, "name")?,
+                file: req_str(entry, "file")?,
+                shape: req_str(entry, "shape")?,
+                kind: req_str(entry, "kind")?,
+                map_type: req_str(entry, "map_type")?,
+                s: req_usize(entry, "s")?,
+                d: req_usize(entry, "d")?,
+                n: req_usize(entry, "n")?,
+                block_s: req_usize(entry, "block_s")?,
+                block_n: req_usize(entry, "block_n")?,
+            });
+        }
+        let mut bmu = Vec::new();
+        if let Some(arr) = j.get("bmu").and_then(Json::as_arr) {
+            for entry in arr {
+                bmu.push(BmuArtifact {
+                    name: req_str(entry, "name")?,
+                    file: req_str(entry, "file")?,
+                    shape: req_str(entry, "shape")?,
+                    variant: req_str(entry, "variant")?,
+                    s: req_usize(entry, "s")?,
+                    d: req_usize(entry, "d")?,
+                    n: req_usize(entry, "n")?,
+                    block_s: req_usize(entry, "block_s")?,
+                    block_n: req_usize(entry, "block_n")?,
+                });
+            }
+        }
+        let mut umatrix = Vec::new();
+        for entry in j
+            .get("umatrix")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| ManifestError::Parse("missing umatrix array".into()))?
+        {
+            umatrix.push(UmatrixArtifact {
+                name: req_str(entry, "name")?,
+                file: req_str(entry, "file")?,
+                shape: req_str(entry, "shape")?,
+                n: req_usize(entry, "n")?,
+                k: req_usize(entry, "k")?,
+                d: req_usize(entry, "d")?,
+            });
+        }
+        Ok(Manifest {
+            dir,
+            som_steps,
+            umatrix,
+            bmu,
+        })
+    }
+
+    /// Pick the smallest-capacity BMU-only artifact that fits.
+    pub fn select_bmu(
+        &self,
+        variant: &str,
+        dim: usize,
+        nodes: usize,
+    ) -> Result<&BmuArtifact, ManifestError> {
+        self.bmu
+            .iter()
+            .filter(|a| a.variant == variant && a.d >= dim && a.n >= nodes)
+            .min_by_key(|a| a.s * a.d * a.n)
+            .ok_or_else(|| ManifestError::NoFit {
+                kind: format!("bmu/{variant}"),
+                map_type: "-".into(),
+                d: dim,
+                n: nodes,
+                available: self
+                    .bmu
+                    .iter()
+                    .map(|a| format!("{}/{}(d{},n{})", a.shape, a.variant, a.d, a.n))
+                    .collect::<Vec<_>>()
+                    .join(", "),
+            })
+    }
+
+    /// Pick the smallest-capacity som_step artifact that fits
+    /// (kind + map type exact; d and n padded up). Minimizes padded FLOPs
+    /// = s * d * n.
+    pub fn select_som_step(
+        &self,
+        kind: &str,
+        map_type: &str,
+        dim: usize,
+        nodes: usize,
+    ) -> Result<&SomStepArtifact, ManifestError> {
+        self.som_steps
+            .iter()
+            .filter(|a| {
+                a.kind == kind && a.map_type == map_type && a.d >= dim && a.n >= nodes
+            })
+            .min_by_key(|a| a.s * a.d * a.n)
+            .ok_or_else(|| ManifestError::NoFit {
+                kind: kind.into(),
+                map_type: map_type.into(),
+                d: dim,
+                n: nodes,
+                available: self
+                    .som_steps
+                    .iter()
+                    .map(|a| format!("{}(d{},n{})", a.shape, a.d, a.n))
+                    .collect::<Vec<_>>()
+                    .join(", "),
+            })
+    }
+
+    pub fn artifact_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Default artifact directory: SOMOCLU_ARTIFACTS env or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("SOMOCLU_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest() -> Manifest {
+        let mk = |shape: &str, kind: &str, map: &str, s, d, n| SomStepArtifact {
+            name: format!("som_step_{shape}_{kind}_{map}"),
+            file: format!("som_step_{shape}_{kind}_{map}.hlo.txt"),
+            shape: shape.into(),
+            kind: kind.into(),
+            map_type: map.into(),
+            s,
+            d,
+            n,
+            block_s: 64,
+            block_n: 64,
+        };
+        Manifest {
+            dir: PathBuf::from("/nonexistent"),
+            som_steps: vec![
+                mk("tiny", "gaussian", "planar", 256, 16, 256),
+                mk("medium", "gaussian", "planar", 1024, 256, 2560),
+                mk("tiny", "bubble", "planar", 256, 16, 256),
+            ],
+            umatrix: vec![],
+            bmu: vec![
+                BmuArtifact {
+                    name: "som_bmu_tiny_gram".into(),
+                    file: "som_bmu_tiny_gram.hlo.txt".into(),
+                    shape: "tiny".into(),
+                    variant: "gram".into(),
+                    s: 256,
+                    d: 16,
+                    n: 256,
+                    block_s: 64,
+                    block_n: 64,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn selects_smallest_fitting() {
+        let m = fake_manifest();
+        let a = m.select_som_step("gaussian", "planar", 10, 100).unwrap();
+        assert_eq!(a.shape, "tiny");
+        let a = m.select_som_step("gaussian", "planar", 100, 100).unwrap();
+        assert_eq!(a.shape, "medium"); // dim 100 > 16 forces medium
+    }
+
+    #[test]
+    fn no_fit_is_an_error() {
+        let m = fake_manifest();
+        assert!(m.select_som_step("gaussian", "toroid", 10, 10).is_err());
+        assert!(m.select_som_step("gaussian", "planar", 10_000, 10).is_err());
+        assert!(m.select_bmu("gram", 16, 256).is_ok());
+        assert!(m.select_bmu("direct", 16, 256).is_err());
+        assert!(m.select_bmu("gram", 17, 256).is_err());
+        assert!(m.select_som_step("bubble", "planar", 10, 10_000).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_json() {
+        let src = r#"{
+          "som_step": [{
+            "name": "som_step_tiny_gaussian_planar",
+            "file": "som_step_tiny_gaussian_planar.hlo.txt",
+            "shape": "tiny", "kind": "gaussian", "map_type": "planar",
+            "s": 256, "d": 16, "n": 256, "block_s": 64, "block_n": 64,
+            "inputs": ["data"], "outputs": ["bmus"]
+          }],
+          "umatrix": [{
+            "name": "umatrix_tiny", "file": "umatrix_tiny.hlo.txt",
+            "shape": "tiny", "n": 256, "k": 8, "d": 16,
+            "inputs": [], "outputs": []
+          }]
+        }"#;
+        let dir = std::env::temp_dir().join("somoclu_test_manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), src).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.som_steps.len(), 1);
+        assert_eq!(m.som_steps[0].s, 256);
+        assert_eq!(m.umatrix[0].k, 8);
+    }
+}

@@ -1,0 +1,176 @@
+//! PJRT runtime: load AOT HLO-text artifacts once, execute them from the
+//! training hot path (the paper's CUDA runtime, replaced by XLA/PJRT).
+//!
+//! The interchange format is HLO *text*: jax ≥ 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md). Executables are
+//! compiled on first use and cached for the life of the engine; constant
+//! inputs (grid coords, node validity, span) live on-device across the
+//! whole run so the per-epoch upload is just codebook + data shards.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+pub use manifest::{Manifest, SomStepArtifact};
+
+/// Lazily-compiled executable cache over a PJRT CPU client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exe_cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create an engine over `artifacts_dir` (compiles nothing yet).
+    pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            manifest,
+            exe_cache: HashMap::new(),
+        })
+    }
+
+    /// Engine over the default artifact dir (SOMOCLU_ARTIFACTS env or
+    /// ./artifacts).
+    pub fn from_env() -> anyhow::Result<Self> {
+        Self::new(Manifest::default_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact by file name (cached).
+    pub fn executable(&mut self, file: &str) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
+        if !self.exe_cache.contains_key(file) {
+            let path = self.manifest.artifact_path(file);
+            let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
+                anyhow::anyhow!("loading HLO text {}: {e}", path.display())
+            })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.exe_cache.insert(file.to_string(), exe);
+        }
+        Ok(&self.exe_cache[file])
+    }
+
+    /// Host f32 slice -> device buffer.
+    pub fn to_device_f32(
+        &self,
+        data: &[f32],
+        dims: &[usize],
+    ) -> anyhow::Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Host i32 slice -> device buffer.
+    pub fn to_device_i32(
+        &self,
+        data: &[i32],
+        dims: &[usize],
+    ) -> anyhow::Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+}
+
+/// U-matrix through the AOT `umatrix_*` artifact (Eq. 7 on the
+/// accelerator) — the accel-path counterpart of `som::umatrix::umatrix`.
+pub fn umatrix_accel(
+    engine: &mut Engine,
+    grid: &crate::som::Grid,
+    codebook: &crate::som::Codebook,
+) -> anyhow::Result<Vec<f32>> {
+    let nodes = codebook.nodes;
+    let dim = codebook.dim;
+    anyhow::ensure!(grid.node_count() == nodes, "grid/codebook mismatch");
+    let art = engine
+        .manifest()
+        .umatrix
+        .iter()
+        .filter(|a| a.d >= dim && a.n >= nodes && a.k >= 8)
+        .min_by_key(|a| a.n * a.d)
+        .ok_or_else(|| anyhow::anyhow!("no umatrix artifact fits n={nodes} d={dim}"))?
+        .clone();
+
+    // Pad codebook, neighbor tables and validity to the artifact shape.
+    let mut cb = vec![0.0f32; art.n * art.d];
+    for node in 0..nodes {
+        cb[node * art.d..node * art.d + dim].copy_from_slice(codebook.row(node));
+    }
+    let (idx_small, mask_small) = crate::som::umatrix::neighbor_tables(grid, art.k);
+    let mut idx = vec![0i32; art.n * art.k];
+    let mut mask = vec![0.0f32; art.n * art.k];
+    idx[..nodes * art.k].copy_from_slice(&idx_small);
+    mask[..nodes * art.k].copy_from_slice(&mask_small);
+    let mut valid = vec![1.0f32; nodes];
+    valid.resize(art.n, 0.0);
+
+    let cb_buf = engine.to_device_f32(&cb, &[art.n, art.d])?;
+    let idx_buf = engine.to_device_i32(&idx, &[art.n, art.k])?;
+    let mask_buf = engine.to_device_f32(&mask, &[art.n, art.k])?;
+    let valid_buf = engine.to_device_f32(&valid, &[art.n])?;
+    let exe = engine.executable(&art.file)?;
+    let parts = untuple(exe.execute_b(&[&cb_buf, &idx_buf, &mask_buf, &valid_buf])?)?;
+    anyhow::ensure!(parts.len() == 1, "expected 1 output");
+    let mut u = parts[0].to_vec::<f32>()?;
+    u.truncate(nodes);
+    Ok(u)
+}
+
+/// Decompose a single-tuple execution result into element literals.
+pub fn untuple(result: Vec<Vec<xla::PjRtBuffer>>) -> anyhow::Result<Vec<xla::Literal>> {
+    let buf = result
+        .into_iter()
+        .next()
+        .and_then(|replica| replica.into_iter().next())
+        .ok_or_else(|| anyhow::anyhow!("execution produced no output buffer"))?;
+    let lit = buf.to_literal_sync()?;
+    Ok(lit.to_tuple()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        Manifest::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn engine_loads_manifest() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let engine = Engine::from_env().unwrap();
+        assert_eq!(engine.platform_name(), "cpu");
+        assert!(!engine.manifest().som_steps.is_empty());
+    }
+
+    #[test]
+    fn compile_and_cache_tiny_artifact() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut engine = Engine::from_env().unwrap();
+        let file = engine
+            .manifest()
+            .select_som_step("gaussian", "planar", 16, 256)
+            .unwrap()
+            .file
+            .clone();
+        engine.executable(&file).unwrap();
+        assert_eq!(engine.exe_cache.len(), 1);
+        engine.executable(&file).unwrap(); // cached, no recompile
+        assert_eq!(engine.exe_cache.len(), 1);
+    }
+}

@@ -1,0 +1,188 @@
+//! The code book W (Eq. 1): one weight vector per neuron, dense f32.
+//!
+//! "Storing the code book in memory is the primary constraint for single
+//! node execution" (§3.2) — so this is a single flat allocation, shared
+//! read-only across worker threads during BMU search (the OpenMP memory
+//! model the paper credits for its ≥50% memory reduction), and updated in
+//! place at the end of each epoch.
+
+use crate::som::grid::Grid;
+use crate::util::rng::Rng;
+
+/// Dense row-major [nodes x dim] weight matrix.
+#[derive(Clone, Debug)]
+pub struct Codebook {
+    pub nodes: usize,
+    pub dim: usize,
+    pub weights: Vec<f32>,
+}
+
+impl Codebook {
+    pub fn zeros(nodes: usize, dim: usize) -> Self {
+        Codebook {
+            nodes,
+            dim,
+            weights: vec![0.0; nodes * dim],
+        }
+    }
+
+    /// Random initialization uniform in [-1, 1) per component — classic
+    /// somoclu's default (`-c` absent).
+    pub fn random_init(nodes: usize, dim: usize, rng: &mut Rng) -> Self {
+        let weights = (0..nodes * dim)
+            .map(|_| rng.range_f32(-1.0, 1.0))
+            .collect();
+        Codebook { nodes, dim, weights }
+    }
+
+    /// Initialize by sampling data rows (kohonen-style init; needs
+    /// nodes <= rows, which the paper notes makes emergent maps
+    /// impossible in the R package — we allow it and fall back to random
+    /// for the surplus nodes).
+    pub fn sample_init(
+        nodes: usize,
+        dim: usize,
+        data: &[f32],
+        rows: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        let mut cb = Codebook::zeros(nodes, dim);
+        let k = nodes.min(rows);
+        let picks = rng.sample_indices(rows, k);
+        for (node, &row) in picks.iter().enumerate() {
+            cb.row_mut(node)
+                .copy_from_slice(&data[row * dim..(row + 1) * dim]);
+        }
+        for node in k..nodes {
+            for v in cb.row_mut(node) {
+                *v = rng.range_f32(-1.0, 1.0);
+            }
+        }
+        cb
+    }
+
+    /// Linear gradient initialization across the grid between two random
+    /// anchors (a cheap PCA-free structured init; keeps examples
+    /// deterministic and already "unfolded").
+    pub fn gradient_init(grid: &Grid, dim: usize, rng: &mut Rng) -> Self {
+        let nodes = grid.node_count();
+        let a: Vec<f32> = (0..dim).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let b: Vec<f32> = (0..dim).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let c: Vec<f32> = (0..dim).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let mut cb = Codebook::zeros(nodes, dim);
+        let (w, h) = (grid.cols.max(2) - 1, grid.rows.max(2) - 1);
+        for node in 0..nodes {
+            let (r, col) = grid.position(node);
+            let tx = col as f32 / w.max(1) as f32;
+            let ty = r as f32 / h.max(1) as f32;
+            let row = cb.row_mut(node);
+            for d in 0..dim {
+                row[d] = a[d] + (b[d] - a[d]) * tx + (c[d] - a[d]) * ty;
+            }
+        }
+        cb
+    }
+
+    #[inline]
+    pub fn row(&self, node: usize) -> &[f32] {
+        &self.weights[node * self.dim..(node + 1) * self.dim]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, node: usize) -> &mut [f32] {
+        &mut self.weights[node * self.dim..(node + 1) * self.dim]
+    }
+
+    /// Apply the batch update w_n = num_n / den_n for hit nodes (Eq. 6);
+    /// unhit nodes keep their weights (somoclu behaviour).
+    pub fn apply_batch_update(&mut self, num: &[f32], den: &[f32]) {
+        assert_eq!(num.len(), self.nodes * self.dim);
+        assert_eq!(den.len(), self.nodes);
+        let dim = self.dim;
+        for n in 0..self.nodes {
+            let d = den[n];
+            if d > 1e-12 {
+                let inv = 1.0 / d;
+                let row = self.row_mut(n);
+                let src = &num[n * dim..(n + 1) * dim];
+                for (w, s) in row.iter_mut().zip(src) {
+                    *w = s * inv;
+                }
+            }
+        }
+    }
+
+    /// Squared L2 norm per node (precomputed for Gram-trick kernels).
+    pub fn sq_norms(&self) -> Vec<f32> {
+        (0..self.nodes)
+            .map(|n| self.row(n).iter().map(|v| v * v).sum())
+            .collect()
+    }
+
+    pub fn heap_bytes(&self) -> usize {
+        self.weights.capacity() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::som::grid::{GridType, MapType};
+
+    #[test]
+    fn random_init_in_range() {
+        let mut rng = Rng::new(1);
+        let cb = Codebook::random_init(10, 4, &mut rng);
+        assert!(cb.weights.iter().all(|w| (-1.0..1.0).contains(w)));
+    }
+
+    #[test]
+    fn batch_update_divides_and_skips_unhit() {
+        let mut cb = Codebook::zeros(2, 2);
+        cb.row_mut(0).copy_from_slice(&[5.0, 5.0]);
+        cb.row_mut(1).copy_from_slice(&[7.0, 7.0]);
+        let num = vec![2.0, 4.0, 99.0, 99.0];
+        let den = vec![2.0, 0.0];
+        cb.apply_batch_update(&num, &den);
+        assert_eq!(cb.row(0), &[1.0, 2.0]); // updated
+        assert_eq!(cb.row(1), &[7.0, 7.0]); // unhit: unchanged
+    }
+
+    #[test]
+    fn sample_init_copies_rows() {
+        let mut rng = Rng::new(2);
+        let data = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let cb = Codebook::sample_init(2, 2, &data, 3, &mut rng);
+        for node in 0..2 {
+            let row = cb.row(node);
+            let found = (0..3).any(|r| row == &data[r * 2..r * 2 + 2]);
+            assert!(found, "node {node} = {row:?} not a data row");
+        }
+    }
+
+    #[test]
+    fn gradient_init_is_smooth() {
+        let grid = Grid::new(10, 10, GridType::Square, MapType::Planar);
+        let mut rng = Rng::new(3);
+        let cb = Codebook::gradient_init(&grid, 3, &mut rng);
+        // Adjacent nodes must be closer than far-apart nodes on average.
+        let d_adj = euclid(cb.row(grid.index(0, 0)), cb.row(grid.index(0, 1)));
+        let d_far = euclid(cb.row(grid.index(0, 0)), cb.row(grid.index(9, 9)));
+        assert!(d_adj < d_far);
+    }
+
+    fn euclid(a: &[f32], b: &[f32]) -> f32 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y) * (x - y))
+            .sum::<f32>()
+            .sqrt()
+    }
+
+    #[test]
+    fn sq_norms() {
+        let mut cb = Codebook::zeros(2, 2);
+        cb.row_mut(0).copy_from_slice(&[3.0, 4.0]);
+        assert_eq!(cb.sq_norms(), vec![25.0, 0.0]);
+    }
+}

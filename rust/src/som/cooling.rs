@@ -1,0 +1,142 @@
+//! Cooling schedules for radius and learning rate (paper `-t`/`-T`,
+//! `-r`/`-R`, `-l`/`-L`).
+//!
+//! Linear interpolates start→end across epochs; exponential decays
+//! geometrically so that the final epoch lands exactly on the end value.
+
+/// Cooling strategy (paper: linear is the default for both knobs).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Cooling {
+    Linear,
+    Exponential,
+}
+
+impl std::str::FromStr for Cooling {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "linear" => Ok(Cooling::Linear),
+            "exponential" | "exp" => Ok(Cooling::Exponential),
+            other => Err(format!("unknown cooling strategy: {other}")),
+        }
+    }
+}
+
+/// A start→end schedule over `n_epochs`.
+#[derive(Copy, Clone, Debug)]
+pub struct Schedule {
+    pub start: f32,
+    pub end: f32,
+    pub cooling: Cooling,
+    pub n_epochs: usize,
+}
+
+impl Schedule {
+    pub fn new(start: f32, end: f32, cooling: Cooling, n_epochs: usize) -> Self {
+        assert!(n_epochs > 0);
+        assert!(start.is_finite() && end.is_finite());
+        Schedule {
+            start,
+            end,
+            cooling,
+            n_epochs,
+        }
+    }
+
+    /// Value at `epoch` ∈ [0, n_epochs): epoch 0 = start; the last epoch
+    /// = end (single-epoch schedules return start).
+    pub fn at(&self, epoch: usize) -> f32 {
+        debug_assert!(epoch < self.n_epochs);
+        if self.n_epochs == 1 {
+            return self.start;
+        }
+        let t = epoch as f32 / (self.n_epochs - 1) as f32;
+        match self.cooling {
+            Cooling::Linear => self.start + (self.end - self.start) * t,
+            Cooling::Exponential => {
+                // start * (end/start)^t, guarded for zero/negative ends.
+                let s = self.start.max(1e-6);
+                let e = self.end.max(1e-6);
+                s * (e / s).powf(t)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+
+    #[test]
+    fn linear_endpoints_and_midpoint() {
+        let s = Schedule::new(10.0, 1.0, Cooling::Linear, 10);
+        assert_eq!(s.at(0), 10.0);
+        assert_eq!(s.at(9), 1.0);
+        assert!((s.at(4) - (10.0 - 9.0 * 4.0 / 9.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn exponential_endpoints() {
+        let s = Schedule::new(100.0, 1.0, Cooling::Exponential, 5);
+        assert!((s.at(0) - 100.0).abs() < 1e-4);
+        assert!((s.at(4) - 1.0).abs() < 1e-4);
+        // Geometric: constant ratio between consecutive epochs.
+        let r1 = s.at(1) / s.at(0);
+        let r2 = s.at(3) / s.at(2);
+        assert!((r1 - r2).abs() < 1e-4);
+    }
+
+    #[test]
+    fn single_epoch_is_start() {
+        let s = Schedule::new(5.0, 1.0, Cooling::Linear, 1);
+        assert_eq!(s.at(0), 5.0);
+    }
+
+    #[test]
+    fn exponential_zero_end_guarded() {
+        let s = Schedule::new(10.0, 0.0, Cooling::Exponential, 4);
+        for e in 0..4 {
+            assert!(s.at(e).is_finite() && s.at(e) >= 0.0);
+        }
+    }
+
+    #[test]
+    fn prop_monotone_and_bounded() {
+        prop::check("cooling", |g| {
+            let start = g.f32_in(0.5, 100.0);
+            let end = g.f32_in(0.01, start);
+            let cooling = *g.choice(&[Cooling::Linear, Cooling::Exponential]);
+            let n = g.usize_in(2, 40);
+            let s = Schedule::new(start, end, cooling, n);
+            let mut prev = f32::INFINITY;
+            for e in 0..n {
+                let v = s.at(e);
+                prop_assert!(v <= prev + 1e-4, "not decreasing at {e}: {prev} -> {v}");
+                prop_assert!(
+                    v <= start + 1e-4 && v >= end - 1e-4,
+                    "out of range at {e}: {v} not in [{end}, {start}]"
+                );
+                prev = v;
+            }
+            prop_assert!((s.at(0) - start).abs() < 1e-3, "start endpoint");
+            prop_assert!(
+                (s.at(n - 1) - end).abs() < end.abs() * 1e-3 + 1e-3,
+                "end endpoint: {} vs {end}",
+                s.at(n - 1)
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parse() {
+        assert_eq!("linear".parse::<Cooling>().unwrap(), Cooling::Linear);
+        assert_eq!(
+            "exponential".parse::<Cooling>().unwrap(),
+            Cooling::Exponential
+        );
+        assert!("quadratic".parse::<Cooling>().is_err());
+    }
+}

@@ -1,0 +1,305 @@
+//! Map geometry: square/hexagonal grids on planar/toroid topologies.
+//!
+//! Nodes live on an `rows x cols` lattice; each node has 2-D coordinates
+//! used for both the neighborhood function (grid distances, Eq. 5) and
+//! the AOT accel kernel (which receives `coords [N, 2]` + `span [2]`
+//! inputs — see python/compile/model.py). Hexagonal grids use the usual
+//! offset coordinates: odd rows shifted +0.5 in x, rows √3/2 apart, which
+//! is how classic somoclu computes hex distances.
+
+/// Grid layout of the neuron lattice (paper `-g`).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum GridType {
+    Square,
+    Hexagonal,
+}
+
+/// Map topology (paper `-m`).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum MapType {
+    Planar,
+    Toroid,
+}
+
+impl std::str::FromStr for GridType {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "square" | "rectangular" => Ok(GridType::Square),
+            "hexagonal" | "hex" => Ok(GridType::Hexagonal),
+            other => Err(format!("unknown grid type: {other}")),
+        }
+    }
+}
+
+impl std::str::FromStr for MapType {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "planar" => Ok(MapType::Planar),
+            "toroid" | "toroidal" => Ok(MapType::Toroid),
+            other => Err(format!("unknown map type: {other}")),
+        }
+    }
+}
+
+pub const SQRT3_2: f32 = 0.866_025_4; // sqrt(3)/2
+
+/// The neuron lattice.
+#[derive(Clone, Debug)]
+pub struct Grid {
+    pub rows: usize,
+    pub cols: usize,
+    pub grid_type: GridType,
+    pub map_type: MapType,
+    /// Node coordinates, row-major node order, [n][0]=x, [n][1]=y.
+    coords: Vec<[f32; 2]>,
+    /// Wrap extent per axis for toroid distance.
+    span: [f32; 2],
+}
+
+impl Grid {
+    pub fn new(rows: usize, cols: usize, grid_type: GridType, map_type: MapType) -> Self {
+        assert!(rows > 0 && cols > 0);
+        let mut coords = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                let (x, y) = match grid_type {
+                    GridType::Square => (c as f32, r as f32),
+                    GridType::Hexagonal => (
+                        c as f32 + 0.5 * (r % 2) as f32,
+                        r as f32 * SQRT3_2,
+                    ),
+                };
+                coords.push([x, y]);
+            }
+        }
+        let span = match grid_type {
+            GridType::Square => [cols as f32, rows as f32],
+            GridType::Hexagonal => [cols as f32, rows as f32 * SQRT3_2],
+        };
+        Grid {
+            rows,
+            cols,
+            grid_type,
+            map_type,
+            coords,
+            span,
+        }
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Node index for (row, col).
+    #[inline]
+    pub fn index(&self, row: usize, col: usize) -> usize {
+        debug_assert!(row < self.rows && col < self.cols);
+        row * self.cols + col
+    }
+
+    /// (row, col) for node index.
+    #[inline]
+    pub fn position(&self, node: usize) -> (usize, usize) {
+        (node / self.cols, node % self.cols)
+    }
+
+    #[inline]
+    pub fn coord(&self, node: usize) -> [f32; 2] {
+        self.coords[node]
+    }
+
+    pub fn coords_flat(&self) -> Vec<f32> {
+        self.coords.iter().flat_map(|c| [c[0], c[1]]).collect()
+    }
+
+    pub fn span(&self) -> [f32; 2] {
+        self.span
+    }
+
+    /// Grid distance between two nodes (Euclidean over coordinates,
+    /// wrapped per-axis on a toroid).
+    #[inline]
+    pub fn distance(&self, a: usize, b: usize) -> f32 {
+        let (pa, pb) = (self.coords[a], self.coords[b]);
+        let mut dx = (pa[0] - pb[0]).abs();
+        let mut dy = (pa[1] - pb[1]).abs();
+        if self.map_type == MapType::Toroid {
+            dx = dx.min(self.span[0] - dx);
+            dy = dy.min(self.span[1] - dy);
+        }
+        (dx * dx + dy * dy).sqrt()
+    }
+
+    /// Immediate lattice neighbors N(j) for the U-matrix (Eq. 7):
+    /// 8-neighborhood on square grids, 6 on hexagonal; wraps on toroids.
+    pub fn neighbors(&self, node: usize) -> Vec<usize> {
+        let (r, c) = self.position(node);
+        let (rows, cols) = (self.rows as isize, self.cols as isize);
+        let (ri, ci) = (r as isize, c as isize);
+        let offsets: &[(isize, isize)] = match self.grid_type {
+            GridType::Square => &[
+                (-1, -1),
+                (-1, 0),
+                (-1, 1),
+                (0, -1),
+                (0, 1),
+                (1, -1),
+                (1, 0),
+                (1, 1),
+            ],
+            // Hex neighbor offsets depend on row parity (offset coords).
+            GridType::Hexagonal => {
+                if r % 2 == 0 {
+                    &[(0, -1), (0, 1), (-1, -1), (-1, 0), (1, -1), (1, 0)]
+                } else {
+                    &[(0, -1), (0, 1), (-1, 0), (-1, 1), (1, 0), (1, 1)]
+                }
+            }
+        };
+        let mut out = Vec::with_capacity(offsets.len());
+        for &(dr, dc) in offsets {
+            let (mut rr, mut cc) = (ri + dr, ci + dc);
+            match self.map_type {
+                MapType::Planar => {
+                    if rr < 0 || rr >= rows || cc < 0 || cc >= cols {
+                        continue;
+                    }
+                }
+                MapType::Toroid => {
+                    rr = rr.rem_euclid(rows);
+                    cc = cc.rem_euclid(cols);
+                }
+            }
+            let n = (rr as usize) * self.cols + cc as usize;
+            if n != node && !out.contains(&n) {
+                out.push(n);
+            }
+        }
+        out
+    }
+
+    /// Default starting radius: "half of the map size in the smaller
+    /// direction" (paper -r default).
+    pub fn default_radius0(&self) -> f32 {
+        (self.rows.min(self.cols) as f32) / 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+
+    #[test]
+    fn square_planar_distances() {
+        let g = Grid::new(5, 7, GridType::Square, MapType::Planar);
+        assert_eq!(g.node_count(), 35);
+        assert_eq!(g.distance(g.index(0, 0), g.index(0, 3)), 3.0);
+        assert_eq!(g.distance(g.index(0, 0), g.index(4, 0)), 4.0);
+        assert_eq!(g.distance(g.index(0, 0), g.index(3, 4)), 5.0);
+    }
+
+    #[test]
+    fn toroid_wraps() {
+        let g = Grid::new(1, 8, GridType::Square, MapType::Toroid);
+        assert_eq!(g.distance(0, 7), 1.0);
+        assert_eq!(g.distance(0, 4), 4.0);
+        let planar = Grid::new(1, 8, GridType::Square, MapType::Planar);
+        assert_eq!(planar.distance(0, 7), 7.0);
+    }
+
+    #[test]
+    fn hex_unit_neighbors() {
+        let g = Grid::new(4, 4, GridType::Hexagonal, MapType::Planar);
+        // Every hex neighbor is at distance ~1.
+        for node in 0..g.node_count() {
+            for nb in g.neighbors(node) {
+                let d = g.distance(node, nb);
+                assert!((d - 1.0).abs() < 1e-5, "{node}->{nb}: {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn neighbor_counts() {
+        let g = Grid::new(3, 3, GridType::Square, MapType::Planar);
+        assert_eq!(g.neighbors(g.index(1, 1)).len(), 8);
+        assert_eq!(g.neighbors(g.index(0, 0)).len(), 3);
+        let t = Grid::new(3, 3, GridType::Square, MapType::Toroid);
+        assert_eq!(t.neighbors(t.index(0, 0)).len(), 8);
+        let h = Grid::new(4, 4, GridType::Hexagonal, MapType::Planar);
+        assert_eq!(h.neighbors(h.index(1, 1)).len(), 6);
+    }
+
+    #[test]
+    fn neighbors_symmetric() {
+        for grid_type in [GridType::Square, GridType::Hexagonal] {
+            for map_type in [MapType::Planar, MapType::Toroid] {
+                let g = Grid::new(4, 6, grid_type, map_type);
+                for a in 0..g.node_count() {
+                    for b in g.neighbors(a) {
+                        assert!(
+                            g.neighbors(b).contains(&a),
+                            "{grid_type:?}/{map_type:?}: {a}->{b} not symmetric"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn default_radius_half_smaller_side() {
+        let g = Grid::new(20, 50, GridType::Square, MapType::Planar);
+        assert_eq!(g.default_radius0(), 10.0);
+    }
+
+    #[test]
+    fn prop_metric_invariants() {
+        prop::check("grid-metric", |gen| {
+            let rows = gen.usize_in(1, 9);
+            let cols = gen.usize_in(1, 9);
+            let gt = *gen.choice(&[GridType::Square, GridType::Hexagonal]);
+            let mt = *gen.choice(&[MapType::Planar, MapType::Toroid]);
+            let g = Grid::new(rows, cols, gt, mt);
+            let n = g.node_count();
+            let a = gen.usize_in(0, n - 1);
+            let b = gen.usize_in(0, n - 1);
+            let c = gen.usize_in(0, n - 1);
+            let (dab, dba) = (g.distance(a, b), g.distance(b, a));
+            prop_assert!((dab - dba).abs() < 1e-5, "symmetry {dab} {dba}");
+            prop_assert!(g.distance(a, a) == 0.0, "identity");
+            prop_assert!(
+                dab >= 0.0 && dab.is_finite(),
+                "non-negative finite: {dab}"
+            );
+            // Triangle inequality (holds for per-axis wrapped L2).
+            let (dac, dcb) = (g.distance(a, c), g.distance(c, b));
+            prop_assert!(
+                dab <= dac + dcb + 1e-4,
+                "triangle: d({a},{b})={dab} > {dac}+{dcb}"
+            );
+            // Toroid distance never exceeds planar distance.
+            if mt == MapType::Toroid {
+                let gp = Grid::new(rows, cols, gt, MapType::Planar);
+                prop_assert!(
+                    dab <= gp.distance(a, b) + 1e-5,
+                    "toroid shortcut"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parse_types() {
+        assert_eq!("hexagonal".parse::<GridType>().unwrap(), GridType::Hexagonal);
+        assert_eq!("square".parse::<GridType>().unwrap(), GridType::Square);
+        assert_eq!("toroid".parse::<MapType>().unwrap(), MapType::Toroid);
+        assert!("blob".parse::<GridType>().is_err());
+        assert!("blob".parse::<MapType>().is_err());
+    }
+}

@@ -1,0 +1,216 @@
+//! K-means clustering of the trained codebook — somoclu's Python API
+//! offers `som.cluster()` to post-process the map into discrete
+//! clusters (neurons -> cluster labels, which the BMU mapping then
+//! extends to data points). In-repo substrate: k-means++ seeding +
+//! Lloyd iterations, deterministic given the seed.
+
+use crate::som::codebook::Codebook;
+use crate::som::quality::sq_dist;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct KmeansResult {
+    pub k: usize,
+    /// Cluster label per codebook node.
+    pub labels: Vec<u32>,
+    /// Cluster centroids, [k x dim].
+    pub centroids: Vec<f32>,
+    /// Sum of squared distances to assigned centroids.
+    pub inertia: f64,
+    pub iterations: usize,
+}
+
+/// k-means++ seeding: spread initial centroids by D² sampling.
+fn seed_centroids(cb: &Codebook, k: usize, rng: &mut Rng) -> Vec<f32> {
+    let n = cb.nodes;
+    let dim = cb.dim;
+    let mut centroids = Vec::with_capacity(k * dim);
+    let first = rng.below(n as u64) as usize;
+    centroids.extend_from_slice(cb.row(first));
+    let mut d2: Vec<f64> = (0..n)
+        .map(|i| sq_dist(cb.row(i), cb.row(first)) as f64)
+        .collect();
+    for _ in 1..k {
+        let total: f64 = d2.iter().sum();
+        let pick = if total <= 0.0 {
+            rng.below(n as u64) as usize
+        } else {
+            let mut target = rng.f64() * total;
+            let mut chosen = n - 1;
+            for (i, &w) in d2.iter().enumerate() {
+                target -= w;
+                if target <= 0.0 {
+                    chosen = i;
+                    break;
+                }
+            }
+            chosen
+        };
+        let c0 = centroids.len();
+        centroids.extend_from_slice(cb.row(pick));
+        let new_c = &centroids[c0..c0 + dim];
+        for i in 0..n {
+            let d = sq_dist(cb.row(i), new_c) as f64;
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+    }
+    centroids
+}
+
+/// Cluster the codebook into `k` groups (Lloyd's algorithm, max_iter
+/// cap, convergence when assignments stop changing).
+pub fn kmeans(cb: &Codebook, k: usize, max_iter: usize, rng: &mut Rng) -> KmeansResult {
+    let n = cb.nodes;
+    let dim = cb.dim;
+    assert!(k >= 1 && k <= n, "k={k} out of range for {n} nodes");
+
+    let mut centroids = seed_centroids(cb, k, rng);
+    let mut labels = vec![0u32; n];
+    let mut iterations = 0;
+    for it in 0..max_iter.max(1) {
+        iterations = it + 1;
+        // Assign.
+        let mut changed = false;
+        for i in 0..n {
+            let row = cb.row(i);
+            let (mut best, mut best_d) = (0u32, f32::INFINITY);
+            for c in 0..k {
+                let d = sq_dist(row, &centroids[c * dim..(c + 1) * dim]);
+                if d < best_d {
+                    best_d = d;
+                    best = c as u32;
+                }
+            }
+            if labels[i] != best {
+                labels[i] = best;
+                changed = true;
+            }
+        }
+        if !changed && it > 0 {
+            break;
+        }
+        // Update (empty clusters keep their previous centroid).
+        let mut sums = vec![0.0f64; k * dim];
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            let c = labels[i] as usize;
+            counts[c] += 1;
+            for (s, v) in sums[c * dim..(c + 1) * dim].iter_mut().zip(cb.row(i)) {
+                *s += *v as f64;
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for d in 0..dim {
+                    centroids[c * dim + d] =
+                        (sums[c * dim + d] / counts[c] as f64) as f32;
+                }
+            }
+        }
+    }
+
+    let inertia: f64 = (0..n)
+        .map(|i| {
+            sq_dist(
+                cb.row(i),
+                &centroids[labels[i] as usize * dim..(labels[i] as usize + 1) * dim],
+            ) as f64
+        })
+        .sum();
+
+    KmeansResult {
+        k,
+        labels,
+        centroids,
+        inertia,
+        iterations,
+    }
+}
+
+/// Extend node labels to data labels through the BMU mapping (what
+/// `som.cluster()` gives back for the data set).
+pub fn data_labels(result: &KmeansResult, bmus: &[u32]) -> Vec<u32> {
+    bmus.iter().map(|&b| result.labels[b as usize]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob_codebook(k: usize, per: usize, dim: usize, rng: &mut Rng) -> Codebook {
+        let mut cb = Codebook::zeros(k * per, dim);
+        for c in 0..k {
+            for i in 0..per {
+                let row = cb.row_mut(c * per + i);
+                for d in 0..dim {
+                    row[d] = (c * 10) as f32 + 0.05 * rng.normal_f32();
+                }
+            }
+        }
+        cb
+    }
+
+    #[test]
+    fn recovers_separated_clusters() {
+        let mut rng = Rng::new(81);
+        let cb = blob_codebook(3, 20, 4, &mut rng);
+        let res = kmeans(&cb, 3, 50, &mut rng);
+        // All nodes of a true group share a label; groups have distinct
+        // labels.
+        for c in 0..3 {
+            let l0 = res.labels[c * 20];
+            for i in 0..20 {
+                assert_eq!(res.labels[c * 20 + i], l0, "group {c}");
+            }
+        }
+        let mut uniq: Vec<u32> = res.labels.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 3);
+        assert!(res.inertia < 1.0, "{}", res.inertia);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng1 = Rng::new(82);
+        let cb = blob_codebook(4, 10, 3, &mut rng1);
+        let a = kmeans(&cb, 4, 50, &mut Rng::new(5));
+        let b = kmeans(&cb, 4, 50, &mut Rng::new(5));
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.centroids, b.centroids);
+    }
+
+    #[test]
+    fn k_equals_one_and_n() {
+        let mut rng = Rng::new(83);
+        let cb = blob_codebook(2, 5, 3, &mut rng);
+        let one = kmeans(&cb, 1, 10, &mut rng);
+        assert!(one.labels.iter().all(|&l| l == 0));
+        let all = kmeans(&cb, 10, 10, &mut rng);
+        assert_eq!(all.labels.len(), 10);
+        assert!(all.inertia < 1.0);
+    }
+
+    #[test]
+    fn data_labels_follow_bmus() {
+        let mut rng = Rng::new(84);
+        let cb = blob_codebook(2, 4, 3, &mut rng);
+        let res = kmeans(&cb, 2, 20, &mut rng);
+        let bmus = vec![0u32, 5, 7, 2];
+        let labels = data_labels(&res, &bmus);
+        assert_eq!(labels[0], res.labels[0]);
+        assert_eq!(labels[1], res.labels[5]);
+        assert_eq!(labels.len(), 4);
+    }
+
+    #[test]
+    fn inertia_decreases_with_k() {
+        let mut rng = Rng::new(85);
+        let cb = blob_codebook(4, 15, 5, &mut rng);
+        let i2 = kmeans(&cb, 2, 50, &mut Rng::new(1)).inertia;
+        let i4 = kmeans(&cb, 4, 50, &mut Rng::new(1)).inertia;
+        assert!(i4 < i2, "{i4} !< {i2}");
+    }
+}

@@ -1,0 +1,16 @@
+//! Batch self-organizing map core: geometry, schedules, codebook,
+//! quality measures (paper §2).
+
+pub mod codebook;
+pub mod cooling;
+pub mod grid;
+pub mod kmeans;
+pub mod neighborhood;
+pub mod pca;
+pub mod quality;
+pub mod umatrix;
+
+pub use codebook::Codebook;
+pub use cooling::{Cooling, Schedule};
+pub use grid::{Grid, GridType, MapType};
+pub use neighborhood::{Neighborhood, NeighborhoodKind};

@@ -1,0 +1,173 @@
+//! Neighborhood functions h(d; r) of Eq. 5 (paper `-n` and `-p`).
+//!
+//! Gaussian: exp(-d² / (2 r²)); bubble: 1[d ≤ r]. `compact_support`
+//! (paper `-p 1`) cuts the gaussian off beyond the radius — the paper
+//! credits this thresholding for "speed improvements without compromising
+//! the quality of the trained map" because far-field updates vanish.
+
+/// Neighborhood kind (paper `-n`).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum NeighborhoodKind {
+    Gaussian,
+    Bubble,
+}
+
+impl std::str::FromStr for NeighborhoodKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "gaussian" => Ok(NeighborhoodKind::Gaussian),
+            "bubble" => Ok(NeighborhoodKind::Bubble),
+            other => Err(format!("unknown neighborhood function: {other}")),
+        }
+    }
+}
+
+/// Neighborhood function with its compact-support flag.
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub struct Neighborhood {
+    pub kind: NeighborhoodKind,
+    pub compact_support: bool,
+}
+
+impl Neighborhood {
+    pub fn gaussian(compact_support: bool) -> Self {
+        Neighborhood {
+            kind: NeighborhoodKind::Gaussian,
+            compact_support,
+        }
+    }
+
+    pub fn bubble() -> Self {
+        Neighborhood {
+            kind: NeighborhoodKind::Bubble,
+            compact_support: true, // bubble is inherently compact
+        }
+    }
+
+    /// Weight for grid distance `d` at radius `r`.
+    #[inline]
+    pub fn weight(&self, d: f32, r: f32) -> f32 {
+        let r = r.max(1e-6);
+        match self.kind {
+            NeighborhoodKind::Gaussian => {
+                if self.compact_support && d > r {
+                    0.0
+                } else {
+                    (-(d * d) / (2.0 * r * r)).exp()
+                }
+            }
+            NeighborhoodKind::Bubble => {
+                if d <= r {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// Effective cutoff distance: beyond this the weight is (near) zero,
+    /// letting kernels skip nodes entirely (the paper's radius
+    /// thresholding optimization in §3.1).
+    pub fn cutoff(&self, r: f32) -> f32 {
+        match self.kind {
+            NeighborhoodKind::Gaussian => {
+                if self.compact_support {
+                    r
+                } else {
+                    // exp(-d²/(2r²)) < 1e-12 beyond ~7.4 r; contributions
+                    // there are numerically invisible in f32 accumulation.
+                    7.5 * r.max(1e-6)
+                }
+            }
+            NeighborhoodKind::Bubble => r,
+        }
+    }
+
+    /// Artifact variant name this neighborhood maps to (accel kernel).
+    pub fn artifact_kind(&self) -> &'static str {
+        match (self.kind, self.compact_support) {
+            (NeighborhoodKind::Gaussian, false) => "gaussian",
+            (NeighborhoodKind::Gaussian, true) => "gaussian_compact",
+            (NeighborhoodKind::Bubble, _) => "bubble",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+
+    #[test]
+    fn gaussian_values() {
+        let nb = Neighborhood::gaussian(false);
+        assert_eq!(nb.weight(0.0, 3.0), 1.0);
+        let w = nb.weight(3.0, 3.0);
+        assert!((w - (-0.5f32).exp()).abs() < 1e-6);
+        assert!(nb.weight(30.0, 3.0) < 1e-6);
+    }
+
+    #[test]
+    fn compact_support_cuts() {
+        let nb = Neighborhood::gaussian(true);
+        assert!(nb.weight(2.9, 3.0) > 0.0);
+        assert_eq!(nb.weight(3.1, 3.0), 0.0);
+    }
+
+    #[test]
+    fn bubble_indicator() {
+        let nb = Neighborhood::bubble();
+        assert_eq!(nb.weight(2.0, 3.0), 1.0);
+        assert_eq!(nb.weight(3.0, 3.0), 1.0);
+        assert_eq!(nb.weight(3.01, 3.0), 0.0);
+    }
+
+    #[test]
+    fn tiny_radius_safe() {
+        for nb in [
+            Neighborhood::gaussian(false),
+            Neighborhood::gaussian(true),
+            Neighborhood::bubble(),
+        ] {
+            let w = nb.weight(0.0, 0.0);
+            assert!(w.is_finite());
+            assert_eq!(w, 1.0); // BMU itself always gets full weight
+        }
+    }
+
+    #[test]
+    fn artifact_kind_names_match_python_configs() {
+        assert_eq!(Neighborhood::gaussian(false).artifact_kind(), "gaussian");
+        assert_eq!(
+            Neighborhood::gaussian(true).artifact_kind(),
+            "gaussian_compact"
+        );
+        assert_eq!(Neighborhood::bubble().artifact_kind(), "bubble");
+    }
+
+    #[test]
+    fn prop_monotone_decreasing_and_cutoff() {
+        prop::check("neighborhood", |g| {
+            let nb = *g.choice(&[
+                Neighborhood::gaussian(false),
+                Neighborhood::gaussian(true),
+                Neighborhood::bubble(),
+            ]);
+            let r = g.f32_in(0.1, 20.0);
+            let d1 = g.f32_in(0.0, 25.0);
+            let d2 = d1 + g.f32_in(0.0, 10.0);
+            let (w1, w2) = (nb.weight(d1, r), nb.weight(d2, r));
+            prop_assert!(w2 <= w1 + 1e-6, "not decreasing: {w1} -> {w2}");
+            prop_assert!((0.0..=1.0).contains(&w1), "range: {w1}");
+            let beyond = nb.cutoff(r) + 0.01;
+            prop_assert!(
+                nb.weight(beyond, r) < 1e-9,
+                "cutoff leak at {beyond} (r={r})"
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,218 @@
+//! PCA (linear) codebook initialization — the `initialization='pca'`
+//! option of somoclu's Python API: span the map across the plane of the
+//! first two principal components so training starts from an already
+//! unfolded sheet.
+//!
+//! The eigensolver is an in-repo substrate (no LAPACK offline): power
+//! iteration with Gram-deflation on the centered data, computing
+//! X^T (X v) products so the D x D covariance is never materialized —
+//! important for the paper's high-dimensional text spaces.
+
+use crate::som::codebook::Codebook;
+use crate::som::grid::Grid;
+use crate::util::rng::Rng;
+
+/// Result of the 2-component PCA.
+#[derive(Clone, Debug)]
+pub struct Pca2 {
+    pub mean: Vec<f32>,
+    /// First two principal directions, each of length dim, unit norm.
+    pub components: [Vec<f32>; 2],
+    /// Corresponding standard deviations along each component.
+    pub sdev: [f32; 2],
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum()
+}
+
+fn normalize(v: &mut [f32]) -> f64 {
+    let n = dot(v, v).sqrt();
+    if n > 0.0 {
+        for x in v.iter_mut() {
+            *x = (*x as f64 / n) as f32;
+        }
+    }
+    n
+}
+
+/// Power iteration for the top-2 principal components of `data`
+/// ([rows x dim], row-major). Deterministic given the seed.
+pub fn pca2(data: &[f32], dim: usize, rng: &mut Rng) -> Pca2 {
+    let rows = data.len() / dim;
+    assert!(rows > 1, "need at least 2 rows for PCA");
+
+    let mut mean = vec![0.0f32; dim];
+    for r in 0..rows {
+        for d in 0..dim {
+            mean[d] += data[r * dim + d];
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= rows as f32;
+    }
+
+    // Centered matvec: y = X_c^T (X_c v) / (rows - 1).
+    let cov_apply = |v: &[f32], out: &mut Vec<f32>| {
+        out.clear();
+        out.resize(dim, 0.0);
+        for r in 0..rows {
+            let row = &data[r * dim..(r + 1) * dim];
+            let mut proj = 0.0f64;
+            for d in 0..dim {
+                proj += (row[d] - mean[d]) as f64 * v[d] as f64;
+            }
+            let p = (proj / (rows - 1) as f64) as f32;
+            for d in 0..dim {
+                out[d] += (row[d] - mean[d]) * p;
+            }
+        }
+    };
+
+    let mut components: [Vec<f32>; 2] = [vec![0.0; dim], vec![0.0; dim]];
+    let mut sdev = [0.0f32; 2];
+    let mut tmp = Vec::with_capacity(dim);
+    for c in 0..2 {
+        let mut v: Vec<f32> = (0..dim).map(|_| rng.normal_f32()).collect();
+        // Deflate against earlier components before and during iteration.
+        for _ in 0..60 {
+            for prev in 0..c {
+                let p = dot(&v, &components[prev]);
+                for (x, e) in v.iter_mut().zip(&components[prev]) {
+                    *x -= (p * *e as f64) as f32;
+                }
+            }
+            normalize(&mut v);
+            cov_apply(&v, &mut tmp);
+            std::mem::swap(&mut v, &mut tmp);
+        }
+        for prev in 0..c {
+            let p = dot(&v, &components[prev]);
+            for (x, e) in v.iter_mut().zip(&components[prev]) {
+                *x -= (p * *e as f64) as f32;
+            }
+        }
+        let eig = normalize(&mut v); // last matvec norm ≈ eigenvalue
+        sdev[c] = (eig.max(0.0)).sqrt() as f32;
+        components[c] = v;
+    }
+
+    Pca2 {
+        mean,
+        components,
+        sdev,
+    }
+}
+
+/// Linear initialization: node (r, c) = mean + a·PC1 + b·PC2 with (a, b)
+/// spanning ±2 standard deviations across the grid (kohonen/somtoolbox
+/// convention).
+pub fn pca_init(grid: &Grid, data: &[f32], dim: usize, rng: &mut Rng) -> Codebook {
+    let p = pca2(data, dim, rng);
+    let mut cb = Codebook::zeros(grid.node_count(), dim);
+    let (max_r, max_c) = (grid.rows.max(2) - 1, grid.cols.max(2) - 1);
+    for node in 0..grid.node_count() {
+        let (r, c) = grid.position(node);
+        // map grid position to [-2σ, +2σ] along each component
+        let a = (c as f32 / max_c.max(1) as f32 - 0.5) * 4.0 * p.sdev[0];
+        let b = (r as f32 / max_r.max(1) as f32 - 0.5) * 4.0 * p.sdev[1];
+        let row = cb.row_mut(node);
+        for d in 0..dim {
+            row[d] = p.mean[d] + a * p.components[0][d] + b * p.components[1][d];
+        }
+    }
+    cb
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::som::grid::{GridType, MapType};
+
+    /// Anisotropic gaussian: variance 9 along e0, 1 along e1, 0.01 rest.
+    fn aniso(rows: usize, dim: usize, rng: &mut Rng) -> Vec<f32> {
+        let mut d = vec![0.0f32; rows * dim];
+        for r in 0..rows {
+            d[r * dim] = 3.0 * rng.normal_f32() + 5.0; // offset mean
+            d[r * dim + 1] = 1.0 * rng.normal_f32();
+            for k in 2..dim {
+                d[r * dim + k] = 0.1 * rng.normal_f32();
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn recovers_dominant_directions() {
+        let mut rng = Rng::new(71);
+        let data = aniso(2000, 6, &mut rng);
+        let p = pca2(&data, 6, &mut rng);
+        // PC1 ≈ ±e0, PC2 ≈ ±e1.
+        assert!(p.components[0][0].abs() > 0.99, "{:?}", p.components[0]);
+        assert!(p.components[1][1].abs() > 0.99, "{:?}", p.components[1]);
+        assert!((p.sdev[0] - 3.0).abs() < 0.3, "{}", p.sdev[0]);
+        assert!((p.sdev[1] - 1.0).abs() < 0.15, "{}", p.sdev[1]);
+        // mean recovered
+        assert!((p.mean[0] - 5.0).abs() < 0.3);
+    }
+
+    #[test]
+    fn components_orthonormal() {
+        let mut rng = Rng::new(72);
+        let data: Vec<f32> = (0..500 * 8).map(|_| rng.normal_f32()).collect();
+        let p = pca2(&data, 8, &mut rng);
+        let d01 = dot(&p.components[0], &p.components[1]).abs();
+        assert!(d01 < 1e-3, "{d01}");
+        for c in 0..2 {
+            let n = dot(&p.components[c], &p.components[c]);
+            assert!((n - 1.0).abs() < 1e-4, "{n}");
+        }
+    }
+
+    #[test]
+    fn init_spans_the_data_plane() {
+        let mut rng = Rng::new(73);
+        let data = aniso(1000, 5, &mut rng);
+        let grid = Grid::new(10, 10, GridType::Square, MapType::Planar);
+        let cb = pca_init(&grid, &data, 5, &mut rng);
+        // Corner-to-corner variation along dim 0 spans ~4 sdev ≈ 12.
+        let span = (cb.row(grid.index(0, 0))[0] - cb.row(grid.index(0, 9))[0]).abs();
+        assert!(span > 8.0, "{span}");
+        // Grid is smooth: adjacent nodes closer than distant ones.
+        let d_adj = crate::som::quality::sq_dist(
+            cb.row(grid.index(5, 5)),
+            cb.row(grid.index(5, 6)),
+        );
+        let d_far = crate::som::quality::sq_dist(
+            cb.row(grid.index(0, 0)),
+            cb.row(grid.index(9, 9)),
+        );
+        assert!(d_adj < d_far);
+    }
+
+    #[test]
+    fn pca_init_beats_random_init_on_first_epoch() {
+        let mut rng = Rng::new(74);
+        let data = aniso(600, 8, &mut rng);
+        let grid = Grid::new(8, 8, GridType::Square, MapType::Planar);
+        let pca_cb = pca_init(&grid, &data, 8, &mut rng);
+        let rand_cb = Codebook::random_init(64, 8, &mut rng);
+        let qe = |cb: &Codebook| {
+            let mut total = 0.0f64;
+            for r in 0..600 {
+                let x = &data[r * 8..(r + 1) * 8];
+                let best = (0..64)
+                    .map(|n| crate::som::quality::sq_dist(x, cb.row(n)))
+                    .fold(f32::INFINITY, f32::min);
+                total += (best as f64).sqrt();
+            }
+            total / 600.0
+        };
+        assert!(
+            qe(&pca_cb) < qe(&rand_cb) * 0.8,
+            "pca {} vs random {}",
+            qe(&pca_cb),
+            qe(&rand_cb)
+        );
+    }
+}

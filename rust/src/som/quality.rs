@@ -1,0 +1,154 @@
+//! Map quality measures: quantization error and topographic error.
+//!
+//! QE = mean distance of each data row to its BMU — the loss-curve the
+//! end-to-end driver logs per epoch. TE = fraction of rows whose first
+//! and second BMUs are not grid neighbors (a topology-preservation
+//! check; not in the paper's tables but standard for SOM evaluation and
+//! used in our integration tests).
+
+use crate::som::codebook::Codebook;
+use crate::som::grid::Grid;
+use crate::util::threadpool;
+
+/// Squared Euclidean distance between two equal-length slices.
+#[inline]
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        let d = x - y;
+        acc += d * d;
+    }
+    acc
+}
+
+/// Mean quantization error over dense rows given their BMUs.
+pub fn quantization_error(
+    data: &[f32],
+    dim: usize,
+    codebook: &Codebook,
+    bmus: &[usize],
+) -> f32 {
+    let rows = bmus.len();
+    assert_eq!(data.len(), rows * dim);
+    if rows == 0 {
+        return 0.0;
+    }
+    let sum: f32 = (0..rows)
+        .map(|r| {
+            sq_dist(&data[r * dim..(r + 1) * dim], codebook.row(bmus[r])).sqrt()
+        })
+        .sum();
+    sum / rows as f32
+}
+
+/// First and second BMU per row (dense, threaded).
+pub fn best_two(
+    data: &[f32],
+    dim: usize,
+    codebook: &Codebook,
+    threads: usize,
+) -> Vec<(usize, usize)> {
+    let rows = data.len() / dim;
+    let parts = threadpool::parallel_ranges(rows, threads, |_, range| {
+        let mut out = Vec::with_capacity(range.len());
+        for r in range {
+            let x = &data[r * dim..(r + 1) * dim];
+            let (mut b1, mut d1) = (0usize, f32::INFINITY);
+            let (mut b2, mut d2) = (0usize, f32::INFINITY);
+            for n in 0..codebook.nodes {
+                let d = sq_dist(x, codebook.row(n));
+                if d < d1 {
+                    b2 = b1;
+                    d2 = d1;
+                    b1 = n;
+                    d1 = d;
+                } else if d < d2 {
+                    b2 = n;
+                    d2 = d;
+                }
+            }
+            out.push((b1, b2));
+        }
+        out
+    });
+    parts.concat()
+}
+
+/// Topographic error: share of rows whose top-2 BMUs are not neighbors.
+pub fn topographic_error(
+    data: &[f32],
+    dim: usize,
+    grid: &Grid,
+    codebook: &Codebook,
+    threads: usize,
+) -> f32 {
+    let pairs = best_two(data, dim, codebook, threads);
+    if pairs.is_empty() {
+        return 0.0;
+    }
+    let bad = pairs
+        .iter()
+        .filter(|(b1, b2)| !grid.neighbors(*b1).contains(b2))
+        .count();
+    bad as f32 / pairs.len() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::som::grid::{GridType, MapType};
+
+    #[test]
+    fn qe_zero_for_exact_match() {
+        let mut cb = Codebook::zeros(2, 2);
+        cb.row_mut(0).copy_from_slice(&[1.0, 2.0]);
+        cb.row_mut(1).copy_from_slice(&[3.0, 4.0]);
+        let data = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantization_error(&data, 2, &cb, &[0, 1]), 0.0);
+    }
+
+    #[test]
+    fn qe_known_value() {
+        let mut cb = Codebook::zeros(1, 2);
+        cb.row_mut(0).copy_from_slice(&[0.0, 0.0]);
+        let data = vec![3.0, 4.0]; // distance 5
+        assert_eq!(quantization_error(&data, 2, &cb, &[0]), 5.0);
+    }
+
+    #[test]
+    fn best_two_ordering() {
+        let mut cb = Codebook::zeros(3, 1);
+        cb.row_mut(0)[0] = 0.0;
+        cb.row_mut(1)[0] = 1.0;
+        cb.row_mut(2)[0] = 10.0;
+        let pairs = best_two(&[0.4], 1, &cb, 1);
+        assert_eq!(pairs, vec![(0, 1)]);
+    }
+
+    #[test]
+    fn te_zero_when_adjacent() {
+        // Codebook forms a smooth ramp along one row: top-2 are adjacent.
+        let grid = Grid::new(1, 10, GridType::Square, MapType::Planar);
+        let mut cb = Codebook::zeros(10, 1);
+        for n in 0..10 {
+            cb.row_mut(n)[0] = n as f32;
+        }
+        let data: Vec<f32> = (0..10).map(|i| i as f32 + 0.3).collect();
+        let te = topographic_error(&data, 1, &grid, &cb, 2);
+        assert_eq!(te, 0.0);
+    }
+
+    #[test]
+    fn te_detects_folding() {
+        // Node values alternate so top-2 BMUs are far apart on the grid.
+        let grid = Grid::new(1, 10, GridType::Square, MapType::Planar);
+        let mut cb = Codebook::zeros(10, 1);
+        for n in 0..10 {
+            cb.row_mut(n)[0] = if n % 2 == 0 { n as f32 } else { 100.0 };
+        }
+        let data = vec![1.0, 3.0, 5.0];
+        let te = topographic_error(&data, 1, &grid, &cb, 1);
+        assert!(te > 0.99);
+    }
+}

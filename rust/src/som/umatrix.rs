@@ -1,0 +1,125 @@
+//! U-matrix (Eq. 7): mean codebook distance to immediate grid neighbors.
+//!
+//! "The purpose of the U-matrix is to give a visual representation of the
+//! topology of the network." Computed CPU-side here (cheap: N·K·D flops),
+//! or through the AOT `umatrix_*` artifact on the accel path.
+
+use crate::som::codebook::Codebook;
+use crate::som::grid::Grid;
+use crate::util::threadpool;
+
+/// U(j) for every node, parallelized over nodes.
+pub fn umatrix(grid: &Grid, codebook: &Codebook, threads: usize) -> Vec<f32> {
+    assert_eq!(grid.node_count(), codebook.nodes);
+    let parts = threadpool::parallel_ranges(codebook.nodes, threads, |_, range| {
+        let mut out = Vec::with_capacity(range.len());
+        for node in range {
+            let nbs = grid.neighbors(node);
+            if nbs.is_empty() {
+                out.push(0.0);
+                continue;
+            }
+            let wj = codebook.row(node);
+            let mut sum = 0.0f32;
+            for nb in &nbs {
+                let wi = codebook.row(*nb);
+                let mut d2 = 0.0f32;
+                for (a, b) in wj.iter().zip(wi) {
+                    let diff = a - b;
+                    d2 += diff * diff;
+                }
+                sum += d2.sqrt();
+            }
+            out.push(sum / nbs.len() as f32);
+        }
+        out
+    });
+    parts.concat()
+}
+
+/// Neighbor index/mask tables for the AOT umatrix artifact
+/// ([N, K] i32 indices + [N, K] f32 mask, K = max neighbor count).
+pub fn neighbor_tables(grid: &Grid, k: usize) -> (Vec<i32>, Vec<f32>) {
+    let n = grid.node_count();
+    let mut idx = vec![0i32; n * k];
+    let mut mask = vec![0f32; n * k];
+    for node in 0..n {
+        for (t, nb) in grid.neighbors(node).into_iter().take(k).enumerate() {
+            idx[node * k + t] = nb as i32;
+            mask[node * k + t] = 1.0;
+        }
+    }
+    (idx, mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::som::grid::{GridType, MapType};
+
+    #[test]
+    fn uniform_codebook_zero_umatrix() {
+        let grid = Grid::new(4, 4, GridType::Square, MapType::Planar);
+        let mut cb = Codebook::zeros(16, 3);
+        for n in 0..16 {
+            cb.row_mut(n).copy_from_slice(&[1.0, 2.0, 3.0]);
+        }
+        let u = umatrix(&grid, &cb, 2);
+        assert!(u.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn boundary_node_height() {
+        // 1x2 map: each node has exactly one neighbor; U = distance.
+        let grid = Grid::new(1, 2, GridType::Square, MapType::Planar);
+        let mut cb = Codebook::zeros(2, 2);
+        cb.row_mut(0).copy_from_slice(&[0.0, 0.0]);
+        cb.row_mut(1).copy_from_slice(&[3.0, 4.0]);
+        let u = umatrix(&grid, &cb, 1);
+        assert_eq!(u, vec![5.0, 5.0]);
+    }
+
+    #[test]
+    fn cluster_boundary_is_ridge() {
+        // Left half of the map at 0, right half at 10: the tallest
+        // U-values must lie on the boundary columns.
+        let grid = Grid::new(6, 8, GridType::Square, MapType::Planar);
+        let mut cb = Codebook::zeros(48, 1);
+        for node in 0..48 {
+            let (_, c) = grid.position(node);
+            cb.row_mut(node)[0] = if c < 4 { 0.0 } else { 10.0 };
+        }
+        let u = umatrix(&grid, &cb, 4);
+        let max = u.iter().cloned().fold(0.0f32, f32::max);
+        for node in 0..48 {
+            let (_, c) = grid.position(node);
+            if u[node] == max {
+                assert!(c == 3 || c == 4, "ridge off boundary at col {c}");
+            }
+        }
+        assert!(max > 0.0);
+    }
+
+    #[test]
+    fn threads_do_not_change_result() {
+        let grid = Grid::new(5, 5, GridType::Hexagonal, MapType::Toroid);
+        let mut rng = crate::util::rng::Rng::new(9);
+        let cb = Codebook::random_init(25, 7, &mut rng);
+        let u1 = umatrix(&grid, &cb, 1);
+        let u4 = umatrix(&grid, &cb, 4);
+        assert_eq!(u1, u4);
+    }
+
+    #[test]
+    fn neighbor_tables_shape_and_mask() {
+        let grid = Grid::new(3, 3, GridType::Square, MapType::Planar);
+        let (idx, mask) = neighbor_tables(&grid, 8);
+        assert_eq!(idx.len(), 9 * 8);
+        // Corner has 3 neighbors, center has 8.
+        let corner_cnt: f32 = mask[0..8].iter().sum();
+        let center = grid.index(1, 1);
+        let center_cnt: f32 = mask[center * 8..center * 8 + 8].iter().sum();
+        assert_eq!(corner_cnt, 3.0);
+        assert_eq!(center_cnt, 8.0);
+    }
+}

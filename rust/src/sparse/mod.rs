@@ -1,0 +1,243 @@
+//! CSR sparse matrix — the substrate behind the paper's sparse kernel.
+//!
+//! §3.1: "A vector space coming from a text processing pipeline typically
+//! contains 1–5% nonzero elements, leading to a 20–100× reduction in
+//! memory use when using a sparse representation." CSR stores row
+//! pointers + (col, value) pairs, so memory is `8·nnz + 8·(rows+1)`
+//! bytes vs `4·rows·cols` dense.
+
+use crate::util::rng::Rng;
+
+/// Compressed sparse row matrix, f32 values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row pointers, len = rows + 1.
+    pub indptr: Vec<usize>,
+    /// Column indices, len = nnz, strictly increasing within a row.
+    pub indices: Vec<u32>,
+    /// Values, len = nnz.
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    pub fn new_empty(rows: usize, cols: usize) -> Self {
+        Csr {
+            rows,
+            cols,
+            indptr: vec![0; rows + 1],
+            indices: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Density in [0, 1].
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+    }
+
+    /// Approximate heap bytes held by this matrix (the number the paper's
+    /// memory comparison uses).
+    pub fn heap_bytes(&self) -> usize {
+        self.indptr.capacity() * std::mem::size_of::<usize>()
+            + self.indices.capacity() * std::mem::size_of::<u32>()
+            + self.values.capacity() * std::mem::size_of::<f32>()
+    }
+
+    /// One row as (cols, vals) slices.
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.indptr[r], self.indptr[r + 1]);
+        (&self.indices[a..b], &self.values[a..b])
+    }
+
+    /// Build from dense row-major data, keeping |v| > threshold entries.
+    pub fn from_dense(data: &[f32], rows: usize, cols: usize, threshold: f32) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        let mut m = Csr::new_empty(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                let v = data[r * cols + c];
+                if v.abs() > threshold {
+                    m.indices.push(c as u32);
+                    m.values.push(v);
+                }
+            }
+            m.indptr[r + 1] = m.values.len();
+        }
+        m
+    }
+
+    /// Build from per-row (col, value) pair lists. Pairs are sorted and
+    /// duplicate columns rejected.
+    pub fn from_rows(
+        rows: Vec<Vec<(u32, f32)>>,
+        cols: usize,
+    ) -> Result<Self, String> {
+        let mut m = Csr::new_empty(rows.len(), cols);
+        for (r, mut row) in rows.into_iter().enumerate() {
+            row.sort_by_key(|(c, _)| *c);
+            for w in row.windows(2) {
+                if w[0].0 == w[1].0 {
+                    return Err(format!("duplicate column {} in row {r}", w[0].0));
+                }
+            }
+            for (c, v) in row {
+                if c as usize >= cols {
+                    return Err(format!(
+                        "column {c} out of range (cols = {cols}) in row {r}"
+                    ));
+                }
+                m.indices.push(c);
+                m.values.push(v);
+            }
+            m.indptr[r + 1] = m.values.len();
+        }
+        Ok(m)
+    }
+
+    /// Densify (tests and the accel-kernel bridge; the paper notes the GPU
+    /// kernel has no sparse variant).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.rows * self.cols];
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                out[r * self.cols + *c as usize] = *v;
+            }
+        }
+        out
+    }
+
+    /// Squared L2 norm per row (precomputed once per training run; the
+    /// sparse kernel's distance uses ||x||² + ||w||² − 2 x·w with dense w).
+    pub fn row_sq_norms(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|r| {
+                let (_, vals) = self.row(r);
+                vals.iter().map(|v| v * v).sum()
+            })
+            .collect()
+    }
+
+    /// Slice out a contiguous row range as a new CSR (data sharding for
+    /// the distributed runner).
+    pub fn slice_rows(&self, range: std::ops::Range<usize>) -> Csr {
+        let (a, b) = (self.indptr[range.start], self.indptr[range.end]);
+        let mut indptr: Vec<usize> =
+            self.indptr[range.start..=range.end].to_vec();
+        for p in indptr.iter_mut() {
+            *p -= a;
+        }
+        Csr {
+            rows: range.len(),
+            cols: self.cols,
+            indptr,
+            indices: self.indices[a..b].to_vec(),
+            values: self.values[a..b].to_vec(),
+        }
+    }
+
+    /// Random sparse matrix with ~`density` nonzeros per row, values in
+    /// [0, 1) (the Fig. 6 workload: 1000 dims, 5% nonzero).
+    pub fn random(rows: usize, cols: usize, density: f64, rng: &mut Rng) -> Self {
+        let per_row = ((cols as f64 * density).round() as usize).clamp(1, cols);
+        let mut m = Csr::new_empty(rows, cols);
+        for r in 0..rows {
+            let mut idx = rng.sample_indices(cols, per_row);
+            idx.sort_unstable();
+            for c in idx {
+                m.indices.push(c as u32);
+                m.values.push(rng.f32());
+            }
+            m.indptr[r + 1] = m.values.len();
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+
+    #[test]
+    fn dense_round_trip() {
+        let dense = vec![
+            1.0, 0.0, 2.0, //
+            0.0, 0.0, 0.0, //
+            0.0, 3.5, 0.0,
+        ];
+        let m = Csr::from_dense(&dense, 3, 3, 0.0);
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.to_dense(), dense);
+        assert_eq!(m.row(0), (&[0u32, 2][..], &[1.0f32, 2.0][..]));
+        assert_eq!(m.row(1).0.len(), 0);
+    }
+
+    #[test]
+    fn from_rows_sorts_and_validates() {
+        let m = Csr::from_rows(vec![vec![(3, 1.0), (1, 2.0)]], 5).unwrap();
+        assert_eq!(m.row(0), (&[1u32, 3][..], &[2.0f32, 1.0][..]));
+        assert!(Csr::from_rows(vec![vec![(1, 1.0), (1, 2.0)]], 5).is_err());
+        assert!(Csr::from_rows(vec![vec![(9, 1.0)]], 5).is_err());
+    }
+
+    #[test]
+    fn row_norms() {
+        let m = Csr::from_rows(vec![vec![(0, 3.0), (2, 4.0)], vec![]], 3).unwrap();
+        assert_eq!(m.row_sq_norms(), vec![25.0, 0.0]);
+    }
+
+    #[test]
+    fn slice_rows_matches_dense_slice() {
+        let mut rng = Rng::new(4);
+        let m = Csr::random(10, 8, 0.4, &mut rng);
+        let s = m.slice_rows(3..7);
+        let dense = m.to_dense();
+        assert_eq!(s.to_dense(), dense[3 * 8..7 * 8].to_vec());
+    }
+
+    #[test]
+    fn random_density() {
+        let mut rng = Rng::new(1);
+        let m = Csr::random(100, 1000, 0.05, &mut rng);
+        assert!((m.density() - 0.05).abs() < 0.005, "{}", m.density());
+        // paper's claim territory: sparse rep much smaller than dense
+        let dense_bytes = 100 * 1000 * 4;
+        assert!(m.heap_bytes() * 4 < dense_bytes);
+    }
+
+    #[test]
+    fn prop_round_trip_and_slice() {
+        prop::check("csr-roundtrip", |g| {
+            let rows = g.usize_in(1, 12);
+            let cols = g.usize_in(1, 12);
+            let dense = g.vec_f32(rows * cols, -1.0, 1.0);
+            // Threshold some entries to zero to get real sparsity.
+            let dense: Vec<f32> = dense
+                .into_iter()
+                .map(|v| if v.abs() < 0.5 { 0.0 } else { v })
+                .collect();
+            let m = Csr::from_dense(&dense, rows, cols, 0.0);
+            prop_assert!(m.to_dense() == dense, "roundtrip failed");
+            let lo = g.usize_in(0, rows);
+            let hi = g.usize_in(lo, rows);
+            let s = m.slice_rows(lo..hi);
+            prop_assert!(
+                s.to_dense() == dense[lo * cols..hi * cols].to_vec(),
+                "slice {lo}..{hi} failed"
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,351 @@
+//! Getopt-style CLI parser (no `clap` available offline).
+//!
+//! Mirrors the classic somoclu command line: short flags with values
+//! (`-e 10`), long aliases (`--rows 20`), positional arguments, and a
+//! generated usage text. Only what the somoclu CLI needs — not a general
+//! library.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub short: Option<char>,
+    pub long: Option<&'static str>,
+    pub takes_value: bool,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+#[derive(Debug, Default)]
+pub struct ArgSpec {
+    opts: Vec<(&'static str, OptSpec)>, // name -> spec (ordered for usage)
+    positionals: Vec<(&'static str, &'static str)>, // name, help
+}
+
+#[derive(Debug)]
+pub struct Parsed {
+    values: BTreeMap<&'static str, String>,
+    flags: BTreeMap<&'static str, bool>,
+    positionals: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArgError {
+    #[error("unknown option: {0}")]
+    Unknown(String),
+    #[error("option {0} requires a value")]
+    MissingValue(String),
+    #[error("missing required positional argument <{0}>")]
+    MissingPositional(&'static str),
+    #[error("unexpected extra argument: {0}")]
+    Extra(String),
+    #[error("invalid value for {opt}: {val}: {why}")]
+    BadValue {
+        opt: String,
+        val: String,
+        why: String,
+    },
+}
+
+impl ArgSpec {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        short: Option<char>,
+        long: Option<&'static str>,
+        help: &'static str,
+        default: Option<&'static str>,
+    ) -> Self {
+        self.opts.push((
+            name,
+            OptSpec {
+                short,
+                long,
+                takes_value: true,
+                help,
+                default,
+            },
+        ));
+        self
+    }
+
+    pub fn flag(
+        mut self,
+        name: &'static str,
+        short: Option<char>,
+        long: Option<&'static str>,
+        help: &'static str,
+    ) -> Self {
+        self.opts.push((
+            name,
+            OptSpec {
+                short,
+                long,
+                takes_value: false,
+                help,
+                default: None,
+            },
+        ));
+        self
+    }
+
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    fn find_short(&self, c: char) -> Option<(&'static str, &OptSpec)> {
+        self.opts
+            .iter()
+            .find(|(_, s)| s.short == Some(c))
+            .map(|(n, s)| (*n, s))
+    }
+
+    fn find_long(&self, l: &str) -> Option<(&'static str, &OptSpec)> {
+        self.opts
+            .iter()
+            .find(|(_, s)| s.long == Some(l))
+            .map(|(n, s)| (*n, s))
+    }
+
+    pub fn usage(&self, prog: &str) -> String {
+        let mut out = format!("Usage: {prog} [OPTIONS]");
+        for (name, _) in &self.positionals {
+            out.push_str(&format!(" {name}"));
+        }
+        out.push_str("\n\nOptions:\n");
+        for (_, spec) in &self.opts {
+            let mut line = String::from("  ");
+            if let Some(c) = spec.short {
+                line.push_str(&format!("-{c}"));
+            }
+            if let Some(l) = spec.long {
+                if spec.short.is_some() {
+                    line.push_str(", ");
+                }
+                line.push_str(&format!("--{l}"));
+            }
+            if spec.takes_value {
+                line.push_str(" VALUE");
+            }
+            while line.len() < 28 {
+                line.push(' ');
+            }
+            line.push_str(spec.help);
+            if let Some(d) = spec.default {
+                line.push_str(&format!(" [default: {d}]"));
+            }
+            out.push_str(&line);
+            out.push('\n');
+        }
+        for (name, help) in &self.positionals {
+            out.push_str(&format!("  {name:<26}{help}\n"));
+        }
+        out
+    }
+
+    pub fn parse<I, S>(&self, args: I) -> Result<Parsed, ArgError>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut values = BTreeMap::new();
+        let mut flags = BTreeMap::new();
+        let mut positionals = Vec::new();
+        for (name, spec) in &self.opts {
+            if let Some(d) = spec.default {
+                values.insert(*name, d.to_string());
+            }
+            if !spec.takes_value {
+                flags.insert(*name, false);
+            }
+        }
+
+        let mut it = args.into_iter().map(Into::into).peekable();
+        while let Some(arg) = it.next() {
+            if let Some(long) = arg.strip_prefix("--") {
+                // --opt=value or --opt value
+                let (key, inline) = match long.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (long, None),
+                };
+                let (name, spec) = self
+                    .find_long(key)
+                    .ok_or_else(|| ArgError::Unknown(arg.clone()))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| ArgError::MissingValue(arg.clone()))?,
+                    };
+                    values.insert(name, v);
+                } else {
+                    flags.insert(name, true);
+                }
+            } else if arg.len() >= 2 && arg.starts_with('-') && !is_number(&arg) {
+                let c = arg.chars().nth(1).unwrap();
+                let (name, spec) = self
+                    .find_short(c)
+                    .ok_or_else(|| ArgError::Unknown(arg.clone()))?;
+                if spec.takes_value {
+                    // -eVALUE or -e VALUE
+                    let rest = &arg[2..];
+                    let v = if !rest.is_empty() {
+                        rest.to_string()
+                    } else {
+                        it.next()
+                            .ok_or_else(|| ArgError::MissingValue(arg.clone()))?
+                    };
+                    values.insert(name, v);
+                } else {
+                    flags.insert(name, true);
+                }
+            } else {
+                positionals.push(arg);
+            }
+        }
+
+        if positionals.len() > self.positionals.len() {
+            return Err(ArgError::Extra(
+                positionals[self.positionals.len()].clone(),
+            ));
+        }
+        if positionals.len() < self.positionals.len() {
+            return Err(ArgError::MissingPositional(
+                self.positionals[positionals.len()].0,
+            ));
+        }
+        Ok(Parsed {
+            values,
+            flags,
+            positionals,
+        })
+    }
+}
+
+fn is_number(s: &str) -> bool {
+    s[1..].chars().next().is_some_and(|c| c.is_ascii_digit())
+        && s[1..].parse::<f64>().is_ok()
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn positional(&self, idx: usize) -> &str {
+        &self.positionals[idx]
+    }
+
+    pub fn parse_as<T: std::str::FromStr>(
+        &self,
+        name: &'static str,
+    ) -> Result<T, ArgError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.get(name).ok_or(ArgError::MissingValue(
+            name.to_string(),
+        ))?;
+        raw.parse::<T>().map_err(|e| ArgError::BadValue {
+            opt: name.to_string(),
+            val: raw.to_string(),
+            why: e.to_string(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new()
+            .opt("epochs", Some('e'), Some("epochs"), "training epochs", Some("10"))
+            .opt("rows", Some('y'), Some("rows"), "map rows", Some("50"))
+            .flag("verbose", Some('v'), Some("verbose"), "chatty output")
+            .positional("INPUT", "input file")
+            .positional("OUTPUT", "output prefix")
+    }
+
+    #[test]
+    fn parses_mixed_styles() {
+        let p = spec()
+            .parse(["-e", "20", "--rows=30", "-v", "in.txt", "out"])
+            .unwrap();
+        assert_eq!(p.parse_as::<u32>("epochs").unwrap(), 20);
+        assert_eq!(p.parse_as::<u32>("rows").unwrap(), 30);
+        assert!(p.flag("verbose"));
+        assert_eq!(p.positional(0), "in.txt");
+        assert_eq!(p.positional(1), "out");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = spec().parse(["a", "b"]).unwrap();
+        assert_eq!(p.parse_as::<u32>("epochs").unwrap(), 10);
+        assert!(!p.flag("verbose"));
+    }
+
+    #[test]
+    fn attached_short_value() {
+        let p = spec().parse(["-e20", "a", "b"]).unwrap();
+        assert_eq!(p.parse_as::<u32>("epochs").unwrap(), 20);
+    }
+
+    #[test]
+    fn long_space_separated() {
+        let p = spec().parse(["--epochs", "7", "a", "b"]).unwrap();
+        assert_eq!(p.parse_as::<u32>("epochs").unwrap(), 7);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(matches!(
+            spec().parse(["-q", "a", "b"]),
+            Err(ArgError::Unknown(_))
+        ));
+        assert!(matches!(
+            spec().parse(["a", "b", "c"]),
+            Err(ArgError::Extra(_))
+        ));
+        assert!(matches!(spec().parse(["a"]), Err(ArgError::MissingPositional(_))));
+        assert!(matches!(
+            spec().parse(["--epochs"]),
+            Err(ArgError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn bad_value_reports_option() {
+        let p = spec().parse(["-e", "abc", "a", "b"]).unwrap();
+        match p.parse_as::<u32>("epochs") {
+            Err(ArgError::BadValue { opt, .. }) => assert_eq!(opt, "epochs"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn negative_number_positional_not_an_option() {
+        let s = ArgSpec::new().positional("X", "x");
+        let p = s.parse(["-3.5"]).unwrap();
+        assert_eq!(p.positional(0), "-3.5");
+    }
+
+    #[test]
+    fn usage_mentions_everything() {
+        let u = spec().usage("somoclu");
+        for needle in ["--epochs", "-v", "INPUT", "OUTPUT", "default: 10"] {
+            assert!(u.contains(needle), "{u}");
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! Allocation tracking — drives the paper's memory claims (Figs. 6–7,
+//! §3.1 "minimum fifty per cent reduction in memory").
+//!
+//! A thin wrapper around the system allocator keeps live/peak byte
+//! counters (two relaxed atomics per alloc — negligible next to the
+//! training arithmetic). The library installs it as the global allocator
+//! (see lib.rs), so every test/bench/example can snapshot memory regions
+//! with `MemRegion`.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static LIVE: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+pub struct TrackingAlloc;
+
+fn on_alloc(size: usize) {
+    let live = LIVE.fetch_add(size, Ordering::Relaxed) + size;
+    // Racy max update is fine: peaks are read at quiescent points.
+    let mut peak = PEAK.load(Ordering::Relaxed);
+    while live > peak {
+        match PEAK.compare_exchange_weak(
+            peak,
+            live,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        ) {
+            Ok(_) => break,
+            Err(p) => peak = p,
+        }
+    }
+}
+
+fn on_dealloc(size: usize) {
+    LIVE.fetch_sub(size, Ordering::Relaxed);
+}
+
+unsafe impl GlobalAlloc for TrackingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            on_alloc(layout.size());
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        on_dealloc(layout.size());
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            on_dealloc(layout.size());
+            on_alloc(new_size);
+        }
+        p
+    }
+}
+
+/// Currently live heap bytes (allocated through the global allocator).
+pub fn live_bytes() -> usize {
+    LIVE.load(Ordering::Relaxed)
+}
+
+/// High-water mark since process start (or last `reset_peak`).
+pub fn peak_bytes() -> usize {
+    PEAK.load(Ordering::Relaxed)
+}
+
+/// Reset the peak to the current live value (start of a measured region).
+pub fn reset_peak() {
+    PEAK.store(LIVE.load(Ordering::Relaxed), Ordering::Relaxed);
+}
+
+/// Measurement scope: records the live baseline and the peak *increase*
+/// over the region it covers.
+pub struct MemRegion {
+    baseline: usize,
+}
+
+impl MemRegion {
+    pub fn start() -> Self {
+        reset_peak();
+        MemRegion {
+            baseline: live_bytes(),
+        }
+    }
+
+    /// Peak additional bytes allocated since `start()`.
+    pub fn peak_delta(&self) -> usize {
+        peak_bytes().saturating_sub(self.baseline)
+    }
+
+    /// Net live bytes still held since `start()`.
+    pub fn live_delta(&self) -> usize {
+        live_bytes().saturating_sub(self.baseline)
+    }
+}
+
+/// Pretty-printer for byte counts in reports.
+pub fn fmt_bytes(b: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_alloc_and_free() {
+        let region = MemRegion::start();
+        let v: Vec<u8> = Vec::with_capacity(1 << 20);
+        assert!(region.peak_delta() >= 1 << 20, "{}", region.peak_delta());
+        drop(v);
+        // live returns to (near) baseline; other test threads may be
+        // allocating concurrently, so allow slack.
+        assert!(region.live_delta() < 1 << 19);
+    }
+
+    #[test]
+    fn peak_survives_free() {
+        let region = MemRegion::start();
+        {
+            let _v: Vec<u64> = vec![0; 1 << 18]; // 2 MiB
+        }
+        assert!(region.peak_delta() >= (1 << 18) * 8);
+    }
+
+    #[test]
+    fn fmt_bytes_readable() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+}

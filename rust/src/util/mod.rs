@@ -1,0 +1,11 @@
+//! In-repo substrates: everything an offline build can't pull from
+//! crates.io (see DESIGN.md §4). Each module is self-contained and
+//! unit-tested.
+
+pub mod argparse;
+pub mod json;
+pub mod memtrack;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;
+pub mod timer;

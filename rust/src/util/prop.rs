@@ -1,0 +1,166 @@
+//! Mini property-testing harness (no `proptest` available offline).
+//!
+//! `check` runs a property over N seeded random cases; on failure it
+//! re-runs with progressively "smaller" cases drawn from the same
+//! generator (size-bounded regeneration shrinking — not structural
+//! shrinking, but enough to report a small counterexample) and panics
+//! with the failing seed so the case can be replayed exactly.
+
+use super::rng::Rng;
+
+/// Generation context: wraps the RNG with a size bound that the shrink
+/// loop tightens.
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let hi = hi.min(lo + self.size.max(1));
+        if hi <= lo {
+            return lo;
+        }
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f32(lo, hi)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+}
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 100,
+            seed: 0x50_4f_50_54, // "POPT"
+            max_size: 64,
+        }
+    }
+}
+
+/// Check `prop` over `cfg.cases` random cases. `prop` returns
+/// `Err(description)` to signal failure.
+pub fn check_with<F>(cfg: Config, name: &str, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9e3779b97f4a7c15);
+        let size = 1 + (case * cfg.max_size) / cfg.cases.max(1);
+        let mut g = Gen {
+            rng: Rng::new(case_seed),
+            size,
+        };
+        if let Err(msg) = prop(&mut g) {
+            // Shrink: re-generate with smaller sizes from nearby seeds and
+            // keep the smallest failure found.
+            let mut best = (size, case_seed, msg);
+            for shrink_size in (1..size).rev() {
+                let mut found = false;
+                for probe in 0..20u64 {
+                    let s = case_seed ^ probe.wrapping_mul(0xd1342543de82ef95);
+                    let mut g = Gen {
+                        rng: Rng::new(s),
+                        size: shrink_size,
+                    };
+                    if let Err(m) = prop(&mut g) {
+                        best = (shrink_size, s, m);
+                        found = true;
+                        break;
+                    }
+                }
+                if !found {
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}): {}\n  \
+                 minimal size={} seed={:#x} — replay with Gen{{Rng::new(seed), size}}",
+                best.2, best.0, best.1
+            );
+        }
+    }
+}
+
+/// Check with default config.
+pub fn check<F>(name: &str, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    check_with(Config::default(), name, prop)
+}
+
+/// Helper macro for property assertions inside `check` closures.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", |g| {
+            let a = g.f32_in(-100.0, 100.0);
+            let b = g.f32_in(-100.0, 100.0);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err(format!("{a} + {b}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn size_grows_over_cases() {
+        // Early cases should be small: verify usize_in respects size.
+        let mut g = Gen {
+            rng: Rng::new(1),
+            size: 3,
+        };
+        for _ in 0..100 {
+            assert!(g.usize_in(0, 1000) <= 3);
+        }
+    }
+
+    #[test]
+    fn prop_assert_macro() {
+        check("macro", |g| {
+            let n = g.usize_in(0, 10);
+            prop_assert!(n <= 10, "n = {n}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,159 @@
+//! Scoped fork-join parallelism — the OpenMP substitute.
+//!
+//! The paper's single-node design point (§3.1) is that OpenMP threads
+//! share one codebook instead of MPI processes each holding a copy,
+//! halving memory. `parallel_chunks` reproduces that shape: worker
+//! threads borrow disjoint chunks of the input and a shared read-only
+//! view of the codebook; per-thread partial accumulators are merged by
+//! the caller (the OpenMP reduction clause).
+//!
+//! Implemented on `std::thread::scope` — no pool object needs to persist,
+//! and for epoch-granularity work the spawn cost (~10 µs/thread) is
+//! irrelevant; the hot loops run inside the workers.
+
+/// Number of worker threads to use: SOMOCLU_THREADS env var, else
+/// available_parallelism.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("SOMOCLU_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Split `total` items into at most `parts` contiguous ranges of
+/// near-equal size (first `total % parts` ranges get one extra).
+pub fn split_ranges(total: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    let parts = parts.max(1).min(total.max(1));
+    let base = total / parts;
+    let extra = total % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Fork-join map over contiguous index ranges: `f(thread_idx, range)` runs
+/// on its own thread; the Vec of results is returned in range order.
+///
+/// `f` only borrows (scoped threads), so callers can close over shared
+/// slices — this is exactly the "threads share one codebook" memory model
+/// the paper credits for the ≥50% reduction.
+pub fn parallel_ranges<T, F>(total: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, std::ops::Range<usize>) -> T + Sync,
+{
+    let ranges = split_ranges(total, threads);
+    if ranges.len() <= 1 {
+        return ranges
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| f(i, r))
+            .collect();
+    }
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = ranges
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let f = &f;
+                scope.spawn(move || f(i, r))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+/// Run `n` closures concurrently and collect results in order (used by
+/// the simulated cluster to run one task per rank).
+pub fn run_concurrent<T, F>(tasks: Vec<F>) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = tasks
+            .into_iter()
+            .map(|t| scope.spawn(t))
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn split_covers_everything_once() {
+        for total in [0usize, 1, 7, 100, 101, 1024] {
+            for parts in [1usize, 2, 3, 8, 200] {
+                let ranges = split_ranges(total, parts);
+                let mut covered = vec![false; total];
+                for r in &ranges {
+                    for i in r.clone() {
+                        assert!(!covered[i]);
+                        covered[i] = true;
+                    }
+                }
+                assert!(covered.iter().all(|&c| c), "{total}/{parts}");
+                // Near-equal: sizes differ by at most 1.
+                let sizes: Vec<_> = ranges.iter().map(|r| r.len()).collect();
+                let (mn, mx) = (
+                    sizes.iter().min().unwrap(),
+                    sizes.iter().max().unwrap(),
+                );
+                assert!(mx - mn <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_sum_matches_serial() {
+        let data: Vec<u64> = (0..10_000).collect();
+        let partials = parallel_ranges(data.len(), 4, |_, r| {
+            data[r].iter().sum::<u64>()
+        });
+        assert_eq!(partials.iter().sum::<u64>(), data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn runs_in_range_order() {
+        let got = parallel_ranges(100, 5, |i, r| (i, r.start));
+        for w in got.windows(2) {
+            assert!(w[0].1 < w[1].1);
+        }
+    }
+
+    #[test]
+    fn concurrent_tasks_all_run() {
+        let counter = AtomicUsize::new(0);
+        let tasks: Vec<_> = (0..8)
+            .map(|i| {
+                let c = &counter;
+                move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                    i * 2
+                }
+            })
+            .collect();
+        let out = run_concurrent(tasks);
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+        assert_eq!(out, (0..8).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let out = parallel_ranges(10, 1, |i, r| (i, r));
+        assert_eq!(out, vec![(0, 0..10)]);
+    }
+}

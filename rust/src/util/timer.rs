@@ -1,0 +1,122 @@
+//! Timing helpers for the benchmark harness (no `criterion` offline).
+//!
+//! `bench` runs a closure with warmup + repeated timed iterations and
+//! reports min/median/mean — the statistics the EXPERIMENTS.md tables
+//! quote. Deliberately simple: the figures we reproduce compare
+//! multi-second training runs, so micro-benchmark variance control
+//! matters less than determinism.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    pub fn from_samples(mut samples: Vec<Duration>) -> Self {
+        assert!(!samples.is_empty());
+        samples.sort();
+        let iters = samples.len();
+        let min = samples[0];
+        let max = samples[iters - 1];
+        let median = samples[iters / 2];
+        let total: Duration = samples.iter().sum();
+        BenchStats {
+            iters,
+            min,
+            median,
+            mean: total / iters as u32,
+            max,
+        }
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "min {:>10.3?}  median {:>10.3?}  mean {:>10.3?}  max {:>10.3?}  (n={})",
+            self.min, self.median, self.mean, self.max, self.iters
+        )
+    }
+}
+
+/// Time one invocation.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Run `f` `warmup` + `iters` times; return stats over the timed iters.
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let samples: Vec<Duration> = (0..iters.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            t0.elapsed()
+        })
+        .collect();
+    BenchStats::from_samples(samples)
+}
+
+/// Benchmark-table row printer: aligned columns for the figure
+/// reproductions ("series" = kernel name, "x" = sweep parameter).
+pub fn print_row(series: &str, x: impl std::fmt::Display, stats: &BenchStats) {
+    println!("{series:<24} {x:>12}  {stats}");
+}
+
+/// Scale factor for benches (SOM_BENCH_SCALE env: 0 < f <= 1; default
+/// from the per-bench caller). Lets the full paper-sized sweeps run when
+/// time allows and a fast CI pass otherwise.
+pub fn bench_scale(default: f64) -> f64 {
+    std::env::var("SOM_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .filter(|f| *f > 0.0 && *f <= 100.0)
+        .unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = BenchStats::from_samples(vec![
+            Duration::from_millis(5),
+            Duration::from_millis(1),
+            Duration::from_millis(3),
+        ]);
+        assert_eq!(s.min, Duration::from_millis(1));
+        assert_eq!(s.median, Duration::from_millis(3));
+        assert_eq!(s.max, Duration::from_millis(5));
+        assert_eq!(s.mean, Duration::from_millis(3));
+    }
+
+    #[test]
+    fn bench_runs_requested_iters() {
+        let mut count = 0;
+        let s = bench(2, 5, || {
+            count += 1;
+            count
+        });
+        assert_eq!(count, 7);
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, d) = time_once(|| 42);
+        assert_eq!(v, 42);
+        assert!(d < Duration::from_secs(1));
+    }
+}

@@ -1,0 +1,177 @@
+//! Minimal visualization: U-matrix heatmaps as PPM/PGM images (the
+//! gnuplot substitute of paper §4.4 — "the simplest procedure is to use a
+//! generic plotting library"; we write portable pixmaps any viewer or
+//! converter understands).
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::som::Grid;
+
+/// Map a value in [0, 1] through a blue→cyan→yellow→red heat colormap.
+fn heat_rgb(t: f32) -> [u8; 3] {
+    let t = t.clamp(0.0, 1.0);
+    let (r, g, b) = if t < 0.25 {
+        (0.0, 4.0 * t, 1.0)
+    } else if t < 0.5 {
+        (0.0, 1.0, 1.0 - 4.0 * (t - 0.25))
+    } else if t < 0.75 {
+        (4.0 * (t - 0.5), 1.0, 0.0)
+    } else {
+        (1.0, 1.0 - 4.0 * (t - 0.75), 0.0)
+    };
+    [(r * 255.0) as u8, (g * 255.0) as u8, (b * 255.0) as u8]
+}
+
+/// Normalize values to [0, 1] (min-max; constant input maps to 0).
+fn normalize(values: &[f32]) -> Vec<f32> {
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &v in values {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let span = (hi - lo).max(1e-12);
+    values.iter().map(|v| (v - lo) / span).collect()
+}
+
+/// Render a per-node scalar field (e.g. the U-matrix) as a color PPM,
+/// scaling each node to `cell x cell` pixels. Optionally overlay BMU
+/// hits as black dots (the paper's Fig. 9 style: "the individual dots
+/// are neurons with a weight vector that match a data instance").
+pub fn write_heatmap_ppm<P: AsRef<Path>>(
+    path: P,
+    grid: &Grid,
+    values: &[f32],
+    cell: usize,
+    bmus: Option<&[u32]>,
+) -> std::io::Result<()> {
+    assert_eq!(values.len(), grid.node_count());
+    let cell = cell.max(1);
+    let (w, h) = (grid.cols * cell, grid.rows * cell);
+    let norm = normalize(values);
+
+    let mut hit = vec![false; grid.node_count()];
+    if let Some(bmus) = bmus {
+        for &b in bmus {
+            if (b as usize) < hit.len() {
+                hit[b as usize] = true;
+            }
+        }
+    }
+
+    let mut img = vec![0u8; w * h * 3];
+    for r in 0..grid.rows {
+        for c in 0..grid.cols {
+            let node = grid.index(r, c);
+            let rgb = heat_rgb(norm[node]);
+            for py in 0..cell {
+                for px in 0..cell {
+                    let x = c * cell + px;
+                    let y = r * cell + py;
+                    let o = (y * w + x) * 3;
+                    // BMU dot: darken the center of the cell.
+                    let center = cell / 2;
+                    let is_dot = hit[node]
+                        && px.abs_diff(center) <= cell / 6
+                        && py.abs_diff(center) <= cell / 6;
+                    let px_rgb = if is_dot { [0, 0, 0] } else { rgb };
+                    img[o..o + 3].copy_from_slice(&px_rgb);
+                }
+            }
+        }
+    }
+
+    let f = std::fs::File::create(path)?;
+    let mut out = std::io::BufWriter::new(f);
+    write!(out, "P6\n{w} {h}\n255\n")?;
+    out.write_all(&img)?;
+    Ok(())
+}
+
+/// Grayscale PGM variant (U-matrix barrier structure without color).
+pub fn write_heatmap_pgm<P: AsRef<Path>>(
+    path: P,
+    grid: &Grid,
+    values: &[f32],
+    cell: usize,
+) -> std::io::Result<()> {
+    assert_eq!(values.len(), grid.node_count());
+    let cell = cell.max(1);
+    let (w, h) = (grid.cols * cell, grid.rows * cell);
+    let norm = normalize(values);
+    let mut img = vec![0u8; w * h];
+    for r in 0..grid.rows {
+        for c in 0..grid.cols {
+            let v = (norm[grid.index(r, c)] * 255.0) as u8;
+            for py in 0..cell {
+                for px in 0..cell {
+                    img[(r * cell + py) * w + c * cell + px] = v;
+                }
+            }
+        }
+    }
+    let f = std::fs::File::create(path)?;
+    let mut out = std::io::BufWriter::new(f);
+    write!(out, "P5\n{w} {h}\n255\n")?;
+    out.write_all(&img)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::som::grid::{GridType, MapType};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("somoclu_test_viz");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn ppm_header_and_size() {
+        let grid = Grid::new(3, 4, GridType::Square, MapType::Planar);
+        let p = tmp("t.ppm");
+        let vals: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        write_heatmap_ppm(&p, &grid, &vals, 5, None).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        let header = b"P6\n20 15\n255\n";
+        assert!(bytes.starts_with(header));
+        assert_eq!(bytes.len(), header.len() + 20 * 15 * 3);
+    }
+
+    #[test]
+    fn pgm_extremes_map_to_black_white() {
+        let grid = Grid::new(1, 2, GridType::Square, MapType::Planar);
+        let p = tmp("t.pgm");
+        write_heatmap_pgm(&p, &grid, &[0.0, 10.0], 1).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        let body = &bytes[bytes.len() - 2..];
+        assert_eq!(body, &[0u8, 255u8]);
+    }
+
+    #[test]
+    fn constant_field_no_panic() {
+        let grid = Grid::new(2, 2, GridType::Square, MapType::Planar);
+        write_heatmap_ppm(tmp("c.ppm"), &grid, &[1.0; 4], 2, None).unwrap();
+    }
+
+    #[test]
+    fn bmu_dots_darken_cells() {
+        let grid = Grid::new(1, 2, GridType::Square, MapType::Planar);
+        let p = tmp("dots.ppm");
+        write_heatmap_ppm(&p, &grid, &[0.5, 0.5], 9, Some(&[0])).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        let off = bytes.len() - 18 * 9 * 3 + (4 * 18 + 4) * 3;
+        // Center pixel of cell 0 is black, cell 1 is not.
+        assert_eq!(&bytes[off..off + 3], &[0, 0, 0]);
+        let off1 = off + 9 * 3;
+        assert_ne!(&bytes[off1..off1 + 3], &[0, 0, 0]);
+    }
+
+    #[test]
+    fn heat_rgb_endpoints() {
+        assert_eq!(heat_rgb(0.0), [0, 0, 255]);
+        assert_eq!(heat_rgb(1.0), [255, 0, 0]);
+    }
+}

@@ -1,0 +1,247 @@
+//! End-to-end through the real binary: write input files, invoke the
+//! `somoclu` CLI exactly as the paper's examples do, check outputs.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use somoclu::data;
+use somoclu::io::{dense, read_dense, sparse as sparse_io};
+use somoclu::sparse::Csr;
+use somoclu::util::rng::Rng;
+
+fn bin() -> PathBuf {
+    // target/<profile>/somoclu next to the test executable.
+    let mut p = std::env::current_exe().unwrap();
+    p.pop(); // deps/
+    p.pop(); // <profile>/
+    p.push("somoclu");
+    p
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("somoclu_cli_{}_{name}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn paper_basic_invocation() {
+    // "$ Somoclu data/rgbs.txt data/rgbs" — scaled-down map for speed.
+    let dir = tmpdir("basic");
+    let mut rng = Rng::new(500);
+    let (d, _) = data::rgb_toy(120, &mut rng);
+    let input = dir.join("rgbs.txt");
+    dense::write_dense(&input, 120, 3, &d, false).unwrap();
+    let prefix = dir.join("rgbs");
+
+    let out = Command::new(bin())
+        .args([
+            "-e", "4", "-x", "8", "-y", "8", "-r", "4",
+            input.to_str().unwrap(),
+            prefix.to_str().unwrap(),
+        ])
+        .output()
+        .expect("binary runs");
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    for ext in [".wts", ".bm", ".umx"] {
+        let p = format!("{}{ext}", prefix.display());
+        assert!(std::path::Path::new(&p).exists(), "{p}");
+    }
+    let wts = read_dense(format!("{}.wts", prefix.display())).unwrap();
+    assert_eq!((wts.rows, wts.cols), (64, 3));
+}
+
+#[test]
+fn paper_cluster_invocation() {
+    // "mpirun -np 4 Somoclu -k 0 --rows 20 --columns 20 ..." with
+    // --ranks standing in for mpirun.
+    let dir = tmpdir("cluster");
+    let mut rng = Rng::new(501);
+    let (d, _) = data::gaussian_blobs(160, 6, 4, 0.2, &mut rng);
+    let input = dir.join("data.txt");
+    dense::write_dense(&input, 160, 6, &d, false).unwrap();
+    let prefix = dir.join("out");
+
+    let out = Command::new(bin())
+        .args([
+            "--ranks", "4", "-k", "0", "--rows", "10", "--columns", "10",
+            "-e", "4", "-r", "5", "-v",
+            input.to_str().unwrap(),
+            prefix.to_str().unwrap(),
+        ])
+        .output()
+        .expect("binary runs");
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("cluster: 4 ranks"), "{stderr}");
+    assert!(stderr.contains("epoch"), "{stderr}");
+}
+
+#[test]
+fn sparse_kernel_invocation() {
+    let dir = tmpdir("sparse");
+    let mut rng = Rng::new(502);
+    let m = Csr::random(100, 50, 0.1, &mut rng);
+    let input = dir.join("data.svm");
+    sparse_io::write_sparse(&input, &m).unwrap();
+    let prefix = dir.join("out");
+
+    let out = Command::new(bin())
+        .args([
+            "-k", "2", "-e", "3", "-x", "6", "-y", "6", "-r", "3",
+            input.to_str().unwrap(),
+            prefix.to_str().unwrap(),
+        ])
+        .output()
+        .expect("binary runs");
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("sparse input"), "{stderr}");
+}
+
+#[test]
+fn help_lists_paper_flags() {
+    let out = Command::new(bin()).arg("--help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for flag in [
+        "-c", "-e", "-g", "-k", "-m", "-n", "-p", "-t", "-r", "-R", "-T",
+        "-l", "-L", "-s", "-x", "-y", "--ranks", "INPUT_FILE",
+        "OUTPUT_PREFIX",
+    ] {
+        assert!(text.contains(flag), "missing {flag} in:\n{text}");
+    }
+}
+
+#[test]
+fn bad_arguments_exit_nonzero_with_usage() {
+    let out = Command::new(bin()).args(["--bogus", "a", "b"]).output().unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("Usage"), "{text}");
+
+    let out = Command::new(bin())
+        .args(["-g", "triangle", "in.txt", "out"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn missing_input_file_reports_cleanly() {
+    let out = Command::new(bin())
+        .args(["/nonexistent/input.txt", "/tmp/somoclu_nope"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("error"), "{text}");
+}
+
+#[test]
+fn initial_codebook_flag_round_trips() {
+    let dir = tmpdir("resume");
+    let mut rng = Rng::new(503);
+    let (d, _) = data::gaussian_blobs(80, 4, 3, 0.2, &mut rng);
+    let input = dir.join("data.txt");
+    dense::write_dense(&input, 80, 4, &d, false).unwrap();
+    let p1 = dir.join("first");
+    let status = Command::new(bin())
+        .args([
+            "-e", "3", "-x", "6", "-y", "6", "-r", "3",
+            input.to_str().unwrap(),
+            p1.to_str().unwrap(),
+        ])
+        .status()
+        .unwrap();
+    assert!(status.success());
+
+    // Resume from the produced .wts via -c.
+    let p2 = dir.join("second");
+    let wts = format!("{}.wts", p1.display());
+    let out = Command::new(bin())
+        .args([
+            "-c", &wts, "-e", "2", "-x", "6", "-y", "6", "-r", "2",
+            input.to_str().unwrap(),
+            p2.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
+fn accel_and_hybrid_kernels_via_cli() {
+    // -k 1 / -k 3 end-to-end through the binary (needs artifacts).
+    if !somoclu::runtime::Manifest::default_dir()
+        .join("manifest.json")
+        .exists()
+    {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let dir = tmpdir("accel");
+    let mut rng = Rng::new(504);
+    let (d, _) = data::gaussian_blobs(128, 8, 3, 0.2, &mut rng);
+    let input = dir.join("data.txt");
+    dense::write_dense(&input, 128, 8, &d, false).unwrap();
+    for k in ["1", "3"] {
+        let prefix = dir.join(format!("out{k}"));
+        let out = Command::new(bin())
+            .env("SOMOCLU_ARTIFACTS",
+                 somoclu::runtime::Manifest::default_dir())
+            .args([
+                "-k", k, "-e", "2", "-x", "8", "-y", "8", "-r", "4",
+                input.to_str().unwrap(),
+                prefix.to_str().unwrap(),
+            ])
+            .output()
+            .unwrap();
+        assert!(
+            out.status.success(),
+            "-k {k}: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        assert!(std::path::Path::new(&format!("{}.wts", prefix.display())).exists());
+    }
+}
+
+#[test]
+fn pca_initialization_via_cli() {
+    let dir = tmpdir("pca");
+    let mut rng = Rng::new(505);
+    let (d, _) = data::gaussian_blobs(100, 6, 3, 0.2, &mut rng);
+    let input = dir.join("data.txt");
+    dense::write_dense(&input, 100, 6, &d, false).unwrap();
+    let prefix = dir.join("out");
+    let out = Command::new(bin())
+        .args([
+            "--initialization", "pca", "-e", "3", "-x", "6", "-y", "6",
+            "-r", "3",
+            input.to_str().unwrap(),
+            prefix.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}

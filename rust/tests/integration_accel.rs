@@ -1,0 +1,166 @@
+//! Integration: the accel (XLA/PJRT) kernel across the full training
+//! loop — the three-layer path (rust -> HLO artifact -> Pallas kernels).
+//!
+//! Requires `make artifacts`; tests skip (with a message) if absent so
+//! `cargo test` stays usable before the AOT step.
+
+use somoclu::coordinator::config::TrainConfig;
+use somoclu::coordinator::train::train;
+use somoclu::data;
+use somoclu::kernels::{DataShard, KernelType};
+use somoclu::runtime::Manifest;
+use somoclu::som::{GridType, MapType, Neighborhood};
+use somoclu::util::rng::Rng;
+
+fn artifacts_available() -> bool {
+    Manifest::default_dir().join("manifest.json").exists()
+}
+
+fn accel_cfg() -> TrainConfig {
+    TrainConfig {
+        rows: 10,
+        cols: 10,
+        epochs: 6,
+        kernel: KernelType::Accel,
+        threads: 2,
+        radius0: Some(5.0),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn accel_full_training_converges() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut rng = Rng::new(300);
+    let (d, _) = data::gaussian_blobs(256, 12, 4, 0.15, &mut rng);
+    let res = train(
+        &accel_cfg(),
+        DataShard::Dense { data: &d, dim: 12 },
+        None,
+        None,
+    )
+    .unwrap();
+    assert!(
+        res.epochs.last().unwrap().qe < res.epochs[0].qe * 0.5,
+        "QE: {:?}",
+        res.epochs.iter().map(|e| e.qe).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn accel_matches_cpu_over_full_run() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    // Whole-run comparison: f32 rounding makes long trajectories diverge
+    // chaotically (both reach equally good maps), so the contract is
+    // (a) exact-ish single-epoch agreement — covered by the kernel-level
+    // tests — and (b) end-quality parity here.
+    let mut rng = Rng::new(301);
+    let (d, _) = data::gaussian_blobs(200, 8, 4, 0.2, &mut rng);
+    let shard = DataShard::Dense { data: &d, dim: 8 };
+    let mut cpu_cfg = accel_cfg();
+    cpu_cfg.kernel = KernelType::DenseCpu;
+
+    let cpu = train(&cpu_cfg, shard, None, None).unwrap();
+    let accel = train(&accel_cfg(), shard, None, None).unwrap();
+
+    let qe_rel = (cpu.final_qe() - accel.final_qe()).abs() / cpu.final_qe();
+    assert!(qe_rel < 1e-2, "QE diverged: {qe_rel}");
+    // Informational floor: most assignments still coincide on blob data.
+    let agree = cpu
+        .bmus
+        .iter()
+        .zip(&accel.bmus)
+        .filter(|(a, b)| a == b)
+        .count();
+    assert!(
+        agree as f64 >= 0.7 * cpu.bmus.len() as f64,
+        "only {agree}/{} BMUs agree",
+        cpu.bmus.len()
+    );
+}
+
+#[test]
+fn accel_geometry_variants() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut rng = Rng::new(302);
+    let (d, _) = data::gaussian_blobs(128, 8, 3, 0.2, &mut rng);
+    for (gt, mt, nb) in [
+        (GridType::Square, MapType::Toroid, Neighborhood::gaussian(false)),
+        (GridType::Hexagonal, MapType::Planar, Neighborhood::gaussian(true)),
+        (GridType::Hexagonal, MapType::Toroid, Neighborhood::bubble()),
+    ] {
+        let cfg = TrainConfig {
+            rows: 8,
+            cols: 8,
+            epochs: 3,
+            kernel: KernelType::Accel,
+            grid_type: gt,
+            map_type: mt,
+            neighborhood: nb,
+            threads: 1,
+            radius0: Some(4.0),
+            ..Default::default()
+        };
+        let res = train(&cfg, DataShard::Dense { data: &d, dim: 8 }, None, None)
+            .unwrap();
+        assert!(
+            res.final_qe().is_finite(),
+            "{gt:?}/{mt:?}/{nb:?} produced non-finite QE"
+        );
+    }
+}
+
+#[test]
+fn accel_selects_larger_artifact_for_bigger_maps() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(Manifest::default_dir()).unwrap();
+    // 50x50 map (2500 nodes) must route past "tiny"/"small" to a config
+    // with n >= 2500.
+    let art = manifest
+        .select_som_step("gaussian", "planar", 100, 2500)
+        .unwrap();
+    assert!(art.n >= 2500, "{art:?}");
+    // 16-dim small map routes to the smallest config.
+    let art = manifest.select_som_step("gaussian", "planar", 16, 256).unwrap();
+    assert_eq!(art.shape, "tiny");
+}
+
+#[test]
+fn umatrix_artifact_matches_cpu_umatrix() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    use somoclu::runtime::{umatrix_accel, Engine};
+    let mut rng = Rng::new(303);
+    for (gt, mt) in [
+        (GridType::Square, MapType::Planar),
+        (GridType::Square, MapType::Toroid),
+        (GridType::Hexagonal, MapType::Planar),
+    ] {
+        let grid = somoclu::som::Grid::new(10, 12, gt, mt);
+        let cb = somoclu::som::Codebook::random_init(120, 12, &mut rng);
+        let cpu = somoclu::som::umatrix::umatrix(&grid, &cb, 2);
+        let mut engine = Engine::from_env().unwrap();
+        let acc = umatrix_accel(&mut engine, &grid, &cb).unwrap();
+        assert_eq!(acc.len(), cpu.len());
+        for (i, (a, b)) in acc.iter().zip(&cpu).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-3 + 1e-4 * b.abs(),
+                "{gt:?}/{mt:?} node {i}: {a} vs {b}"
+            );
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Integration: the simulated-MPI distributed path (paper §3.2, Fig. 8).
+
+use somoclu::cluster::netmodel::NetModel;
+use somoclu::cluster::runner::{train_cluster, ClusterData};
+use somoclu::coordinator::config::TrainConfig;
+use somoclu::coordinator::train::train;
+use somoclu::data;
+use somoclu::kernels::{DataShard, KernelType};
+use somoclu::sparse::Csr;
+use somoclu::util::rng::Rng;
+
+fn cfg(ranks: usize, epochs: usize) -> TrainConfig {
+    TrainConfig {
+        rows: 8,
+        cols: 8,
+        epochs,
+        threads: 1,
+        ranks,
+        radius0: Some(4.0),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn rank_count_does_not_change_the_map() {
+    let mut rng = Rng::new(200);
+    let (d, _) = data::gaussian_blobs(192, 6, 4, 0.2, &mut rng);
+    let single = train(&cfg(1, 6), DataShard::Dense { data: &d, dim: 6 }, None, None)
+        .unwrap();
+    for ranks in [2, 4, 6] {
+        let (multi, _) = train_cluster(
+            &cfg(ranks, 6),
+            ClusterData::Dense {
+                data: d.clone(),
+                dim: 6,
+            },
+            NetModel::ideal(),
+        )
+        .unwrap();
+        assert_eq!(multi.bmus, single.bmus, "ranks={ranks}");
+        // f32 reduction order differs between serial and reduced sums;
+        // drift compounds over epochs but stays tiny.
+        assert!(
+            (multi.final_qe() - single.final_qe()).abs() / single.final_qe() < 1e-4,
+            "ranks={ranks}: {} vs {}",
+            multi.final_qe(),
+            single.final_qe()
+        );
+    }
+}
+
+#[test]
+fn uneven_shards_handled() {
+    // 101 rows across 4 ranks: shards 26/25/25/25.
+    let mut rng = Rng::new(201);
+    let (d, _) = data::gaussian_blobs(101, 4, 3, 0.2, &mut rng);
+    let (res, _) = train_cluster(
+        &cfg(4, 4),
+        ClusterData::Dense { data: d, dim: 4 },
+        NetModel::ideal(),
+    )
+    .unwrap();
+    assert_eq!(res.bmus.len(), 101);
+}
+
+#[test]
+fn network_model_slows_but_does_not_change_results() {
+    let mut rng = Rng::new(202);
+    let (d, _) = data::gaussian_blobs(64, 4, 2, 0.2, &mut rng);
+    let (ideal, _) = train_cluster(
+        &cfg(2, 3),
+        ClusterData::Dense {
+            data: d.clone(),
+            dim: 4,
+        },
+        NetModel::ideal(),
+    )
+    .unwrap();
+    let slow_net = NetModel {
+        latency: std::time::Duration::from_micros(200),
+        bandwidth: 5e8,
+    };
+    let (modeled, report) = train_cluster(
+        &cfg(2, 3),
+        ClusterData::Dense { data: d, dim: 4 },
+        slow_net,
+    )
+    .unwrap();
+    assert_eq!(ideal.bmus, modeled.bmus);
+    assert_eq!(ideal.codebook.weights, modeled.codebook.weights);
+    assert!(report.bytes_sent > 0);
+}
+
+#[test]
+fn sparse_cluster_end_to_end() {
+    let mut rng = Rng::new(203);
+    let m = Csr::random(120, 64, 0.08, &mut rng);
+    let mut c = cfg(3, 5);
+    c.kernel = KernelType::SparseCpu;
+    let (res, report) =
+        train_cluster(&c, ClusterData::Sparse(m), NetModel::ideal()).unwrap();
+    assert_eq!(res.bmus.len(), 120);
+    assert!(res.final_qe().is_finite());
+    // Comm volume per epoch: 2 slaves send (N*D + N + 8B qe) and receive
+    // N*D codebook + qe total. Sanity-check the order of magnitude.
+    let n = 64usize;
+    let dim = 64usize;
+    let per_slave_per_epoch = (n * dim + n + n * dim) * 4 + 16;
+    let expect = 2 * 5 * per_slave_per_epoch as u64;
+    assert!(
+        report.bytes_sent > expect / 2 && report.bytes_sent < expect * 2,
+        "bytes {} vs expected ~{expect}",
+        report.bytes_sent
+    );
+}
+
+#[test]
+fn qe_improves_under_distribution_too() {
+    let mut rng = Rng::new(204);
+    let (d, _) = data::gaussian_blobs(200, 8, 5, 0.15, &mut rng);
+    let (res, _) = train_cluster(
+        &cfg(4, 8),
+        ClusterData::Dense { data: d, dim: 8 },
+        NetModel::ideal(),
+    )
+    .unwrap();
+    assert!(res.epochs.last().unwrap().qe < res.epochs[0].qe * 0.5);
+}

@@ -1,0 +1,308 @@
+//! Integration: full training runs across kernels, geometries and file
+//! formats — the paths a somoclu user exercises end to end.
+
+use somoclu::coordinator::config::TrainConfig;
+use somoclu::coordinator::train::train;
+use somoclu::data;
+use somoclu::io::output::{OutputWriter, SnapshotLevel};
+use somoclu::io::{esom, read_dense};
+use somoclu::kernels::{DataShard, KernelType};
+use somoclu::som::{quality, GridType, MapType, Neighborhood};
+use somoclu::sparse::Csr;
+use somoclu::util::rng::Rng;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("somoclu_it_{}_{name}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn dense_training_produces_topology_preserving_map() {
+    let mut rng = Rng::new(100);
+    let (train_data, labels) = data::gaussian_blobs(400, 8, 4, 0.15, &mut rng);
+    let cfg = TrainConfig {
+        rows: 10,
+        cols: 10,
+        epochs: 12,
+        threads: 4,
+        radius0: Some(5.0),
+        ..Default::default()
+    };
+    let res = train(
+        &cfg,
+        DataShard::Dense {
+            data: &train_data,
+            dim: 8,
+        },
+        None,
+        None,
+    )
+    .unwrap();
+
+    // QE must fall substantially on clustered data.
+    assert!(res.epochs.last().unwrap().qe < res.epochs[0].qe * 0.4);
+
+    // Same-cluster rows should map to nearby nodes: mean intra-cluster
+    // grid distance << mean cross-cluster distance.
+    let grid = cfg.grid();
+    let mut intra = (0.0f64, 0usize);
+    let mut cross = (0.0f64, 0usize);
+    for i in (0..400).step_by(7) {
+        for j in (1..400).step_by(11) {
+            let d = grid.distance(res.bmus[i] as usize, res.bmus[j] as usize) as f64;
+            if labels[i] == labels[j] {
+                intra = (intra.0 + d, intra.1 + 1);
+            } else {
+                cross = (cross.0 + d, cross.1 + 1);
+            }
+        }
+    }
+    let (mi, mc) = (intra.0 / intra.1 as f64, cross.0 / cross.1 as f64);
+    assert!(mi * 1.5 < mc, "intra {mi} vs cross {mc}");
+
+    // Topographic error should be small on a converged map.
+    let te = quality::topographic_error(&train_data, 8, &grid, &res.codebook, 4);
+    assert!(te < 0.35, "TE {te}");
+}
+
+#[test]
+fn outputs_are_esom_compatible() {
+    let mut rng = Rng::new(101);
+    let (train_data, _) = data::gaussian_blobs(80, 4, 3, 0.2, &mut rng);
+    let dir = tmpdir("esom");
+    let prefix = dir.join("run");
+    let cfg = TrainConfig {
+        rows: 6,
+        cols: 7,
+        epochs: 4,
+        threads: 2,
+        radius0: Some(3.0),
+        snapshot: SnapshotLevel::Full,
+        ..Default::default()
+    };
+    let writer = OutputWriter::new(&prefix);
+    let res = train(
+        &cfg,
+        DataShard::Dense {
+            data: &train_data,
+            dim: 4,
+        },
+        None,
+        Some(&writer),
+    )
+    .unwrap();
+
+    // Final files exist and parse.
+    let wts = read_dense(format!("{}.wts", prefix.display())).unwrap();
+    assert_eq!(wts.rows, 42);
+    assert_eq!(wts.cols, 4);
+    assert_eq!(wts.data, res.codebook.weights);
+
+    let bm = esom::read_bm(format!("{}.bm", prefix.display())).unwrap();
+    assert_eq!(bm.len(), 80);
+
+    let umx = read_dense(format!("{}.umx", prefix.display())).unwrap();
+    assert_eq!((umx.rows, umx.cols), (6, 7));
+
+    // Interim snapshots for every epoch at level 2.
+    for epoch in 0..4 {
+        for ext in ["umx", "wts", "bm"] {
+            let p = format!("{}.{epoch}.{ext}", prefix.display());
+            assert!(std::path::Path::new(&p).exists(), "{p}");
+        }
+    }
+}
+
+#[test]
+fn sparse_and_dense_kernels_train_identically() {
+    // Train twice from the same seed: once dense on densified data, once
+    // sparse on the CSR — the *entire run* must match (BMUs bit-for-bit).
+    let mut rng = Rng::new(102);
+    let m = Csr::random(150, 40, 0.1, &mut rng);
+    let dense = m.to_dense();
+    let base = TrainConfig {
+        rows: 8,
+        cols: 8,
+        epochs: 6,
+        threads: 3,
+        radius0: Some(4.0),
+        ..Default::default()
+    };
+    let mut dense_cfg = base.clone();
+    dense_cfg.kernel = KernelType::DenseCpu;
+    let mut sparse_cfg = base;
+    sparse_cfg.kernel = KernelType::SparseCpu;
+
+    let a = train(
+        &dense_cfg,
+        DataShard::Dense {
+            data: &dense,
+            dim: 40,
+        },
+        None,
+        None,
+    )
+    .unwrap();
+    let b = train(&sparse_cfg, DataShard::Sparse(&m), None, None).unwrap();
+    assert_eq!(a.bmus, b.bmus);
+    for (x, y) in a.codebook.weights.iter().zip(&b.codebook.weights) {
+        assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn toroid_map_wraps_clusters() {
+    // On a toroid, a 1-D ring of data can wrap without a seam; just
+    // verify training runs and the U-matrix exists for all nodes.
+    let mut rng = Rng::new(103);
+    let (d, _) = data::gaussian_blobs(120, 3, 6, 0.1, &mut rng);
+    let cfg = TrainConfig {
+        rows: 6,
+        cols: 9,
+        epochs: 6,
+        map_type: MapType::Toroid,
+        grid_type: GridType::Hexagonal,
+        neighborhood: Neighborhood::gaussian(true),
+        threads: 2,
+        radius0: Some(3.0),
+        ..Default::default()
+    };
+    let res = train(&cfg, DataShard::Dense { data: &d, dim: 3 }, None, None).unwrap();
+    assert_eq!(res.umatrix.len(), 54);
+    assert!(res.umatrix.iter().all(|u| u.is_finite()));
+    assert!(res.final_qe().is_finite());
+}
+
+#[test]
+fn emergent_map_feasible_where_baseline_fails() {
+    // The paper's emergent-map pitch: more nodes than data instances is
+    // fine for somoclu but impossible for kohonen-like init.
+    let mut rng = Rng::new(104);
+    let (d, _) = data::gaussian_blobs(50, 4, 3, 0.2, &mut rng);
+    let grid = somoclu::som::Grid::new(20, 20, GridType::Square, MapType::Planar);
+    assert!(somoclu::baseline::kohonen_like_init(&grid, &d, 4, &mut rng).is_err());
+
+    let cfg = TrainConfig {
+        rows: 20,
+        cols: 20,
+        epochs: 4,
+        threads: 4,
+        radius0: Some(10.0),
+        ..Default::default()
+    };
+    let res = train(&cfg, DataShard::Dense { data: &d, dim: 4 }, None, None).unwrap();
+    assert_eq!(res.codebook.nodes, 400);
+    assert!(res.final_qe().is_finite());
+}
+
+#[test]
+fn initial_codebook_resumes_training() {
+    // Train 4 epochs; resume from the written codebook; QE keeps falling.
+    let mut rng = Rng::new(105);
+    let (d, _) = data::gaussian_blobs(100, 5, 4, 0.2, &mut rng);
+    let shard = DataShard::Dense { data: &d, dim: 5 };
+    let cfg = TrainConfig {
+        rows: 7,
+        cols: 7,
+        epochs: 4,
+        threads: 2,
+        radius0: Some(3.5),
+        ..Default::default()
+    };
+    let first = train(&cfg, shard, None, None).unwrap();
+    let mut cfg2 = cfg.clone();
+    cfg2.radius0 = Some(1.5);
+    let second = train(&cfg2, shard, Some(first.codebook), None).unwrap();
+    assert!(second.final_qe() <= first.epochs[0].qe);
+}
+
+#[test]
+fn pca_init_converges_faster_initially() {
+    // somoclu's `initialization='pca'`: the unfolded start should give a
+    // lower first-epoch QE than random init on anisotropic data.
+    let mut rng = Rng::new(106);
+    let (d, _) = data::gaussian_blobs(300, 10, 4, 0.3, &mut rng);
+    let shard = DataShard::Dense { data: &d, dim: 10 };
+    let mk = |init| TrainConfig {
+        rows: 8,
+        cols: 8,
+        epochs: 4,
+        threads: 2,
+        radius0: Some(4.0),
+        initialization: init,
+        ..Default::default()
+    };
+    let pca = train(
+        &mk(somoclu::coordinator::config::Initialization::Pca),
+        shard,
+        None,
+        None,
+    )
+    .unwrap();
+    let rnd = train(
+        &mk(somoclu::coordinator::config::Initialization::Random),
+        shard,
+        None,
+        None,
+    )
+    .unwrap();
+    assert!(
+        pca.epochs[0].qe < rnd.epochs[0].qe,
+        "pca {} vs random {}",
+        pca.epochs[0].qe,
+        rnd.epochs[0].qe
+    );
+    assert!(pca.final_qe().is_finite() && rnd.final_qe().is_finite());
+}
+
+#[test]
+fn pca_init_rejected_for_sparse() {
+    let mut rng = Rng::new(107);
+    let m = Csr::random(50, 20, 0.2, &mut rng);
+    let cfg = TrainConfig {
+        rows: 5,
+        cols: 5,
+        epochs: 2,
+        kernel: KernelType::SparseCpu,
+        initialization: somoclu::coordinator::config::Initialization::Pca,
+        radius0: Some(2.0),
+        ..Default::default()
+    };
+    assert!(train(&cfg, DataShard::Sparse(&m), None, None).is_err());
+}
+
+#[test]
+fn codebook_clustering_recovers_data_clusters() {
+    // Train on well-separated blobs, then som.cluster()-style k-means on
+    // the codebook: data labels via BMUs must match the true labels (up
+    // to permutation).
+    let mut rng = Rng::new(108);
+    let k = 4;
+    let (d, truth) = data::gaussian_blobs(240, 6, k, 0.08, &mut rng);
+    let cfg = TrainConfig {
+        rows: 8,
+        cols: 8,
+        epochs: 10,
+        threads: 2,
+        radius0: Some(4.0),
+        ..Default::default()
+    };
+    let res = train(&cfg, DataShard::Dense { data: &d, dim: 6 }, None, None).unwrap();
+    let km = somoclu::som::kmeans::kmeans(&res.codebook, k, 100, &mut rng);
+    let labels = somoclu::som::kmeans::data_labels(&km, &res.bmus);
+
+    // Purity: for each predicted cluster, the dominant true label's share.
+    let mut agree = 0usize;
+    for c in 0..k as u32 {
+        let mut counts = vec![0usize; k];
+        for (i, &l) in labels.iter().enumerate() {
+            if l == c {
+                counts[truth[i]] += 1;
+            }
+        }
+        agree += counts.iter().max().copied().unwrap_or(0);
+    }
+    let purity = agree as f64 / labels.len() as f64;
+    assert!(purity > 0.9, "purity {purity}");
+}

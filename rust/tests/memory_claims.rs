@@ -1,0 +1,159 @@
+//! The paper's memory claims, verified with the tracking allocator:
+//!
+//! * §3.1: OpenMP threads share one codebook; MPI processes each copy it
+//!   — "a minimum fifty per cent reduction in memory even when only two
+//!   threads are used" (CLAIM-MEM50).
+//! * §5.1: "the sparse kernel using only twenty per cent of the memory of
+//!   the dense one" at 5% density (CLAIM-SPARSE-MEM).
+//! * Fig. 7: zero-copy (Python-style) interface adds ~nothing; the
+//!   converting (R/MATLAB-style) interface duplicates the data.
+
+use somoclu::api::{self, DataInput};
+use somoclu::cluster::netmodel::NetModel;
+use somoclu::cluster::runner::{train_cluster, ClusterData};
+use somoclu::coordinator::config::TrainConfig;
+use somoclu::coordinator::train::train;
+use somoclu::data;
+use somoclu::kernels::{DataShard, KernelType};
+use somoclu::sparse::Csr;
+use somoclu::util::memtrack::MemRegion;
+use somoclu::util::rng::Rng;
+
+fn cfg() -> TrainConfig {
+    TrainConfig {
+        rows: 12,
+        cols: 12,
+        epochs: 2,
+        threads: 2,
+        ranks: 1,
+        radius0: Some(6.0),
+        ..Default::default()
+    }
+}
+
+/// Threads share the codebook; simulated ranks duplicate it — with the
+/// same total parallelism the rank path must hold >= 2 codebook copies.
+#[test]
+fn threads_share_codebook_ranks_duplicate_it() {
+    let mut rng = Rng::new(400);
+    // Small data, biggish codebook so the codebook dominates.
+    let dim = 256;
+    let (d, _) = data::gaussian_blobs(64, dim, 2, 0.3, &mut rng);
+    let codebook_bytes = 12 * 12 * dim * 4;
+
+    // Two threads, one process (shared codebook).
+    let threaded = {
+        let mut c = cfg();
+        c.threads = 2;
+        let region = MemRegion::start();
+        let _ = train(&c, DataShard::Dense { data: &d, dim }, None, None).unwrap();
+        region.peak_delta()
+    };
+
+    // Two ranks, one thread each (duplicated codebook + reduce buffers).
+    let ranked = {
+        let mut c = cfg();
+        c.threads = 1;
+        c.ranks = 2;
+        let region = MemRegion::start();
+        let _ = train_cluster(
+            &c,
+            ClusterData::Dense {
+                data: d.clone(),
+                dim,
+            },
+            NetModel::ideal(),
+        )
+        .unwrap();
+        region.peak_delta()
+    };
+
+    // The rank path must cost at least one extra codebook worth of peak
+    // memory over the threaded path.
+    assert!(
+        ranked >= threaded + codebook_bytes / 2,
+        "ranked {ranked} vs threaded {threaded} (codebook {codebook_bytes})"
+    );
+}
+
+/// 5%-dense data: the CSR representation must be a small fraction of the
+/// dense buffer (the paper reports 20% end-to-end at 100k instances;
+/// representation-level the gap is larger).
+#[test]
+fn sparse_representation_saves_memory() {
+    let mut rng = Rng::new(401);
+    let (rows, dim) = (2000, 1000);
+    let m = Csr::random(rows, dim, 0.05, &mut rng);
+    let dense_bytes = rows * dim * 4;
+    let sparse_bytes = m.heap_bytes();
+    let ratio = sparse_bytes as f64 / dense_bytes as f64;
+    assert!(
+        ratio < 0.25,
+        "sparse rep is {ratio:.2} of dense ({sparse_bytes} vs {dense_bytes})"
+    );
+}
+
+/// End-to-end peak memory: sparse training holds CSR + codebook; dense
+/// training holds the dense matrix + codebook.
+#[test]
+fn sparse_training_peak_below_dense() {
+    let mut rng = Rng::new(402);
+    let (rows, dim) = (1500, 512);
+    let m = Csr::random(rows, dim, 0.05, &mut rng);
+    let dense = m.to_dense();
+
+    let mut dense_cfg = cfg();
+    dense_cfg.kernel = KernelType::DenseCpu;
+    let mut sparse_cfg = cfg();
+    sparse_cfg.kernel = KernelType::SparseCpu;
+
+    let region = MemRegion::start();
+    let _ = train(
+        &dense_cfg,
+        DataShard::Dense { data: &dense, dim },
+        None,
+        None,
+    )
+    .unwrap();
+    let dense_peak = region.peak_delta();
+
+    let region = MemRegion::start();
+    let _ = train(&sparse_cfg, DataShard::Sparse(&m), None, None).unwrap();
+    let sparse_peak = region.peak_delta();
+
+    // The dense input buffer itself isn't counted in either region (it
+    // pre-exists), so compare *total working set*: sparse path peak plus
+    // its input vs dense path peak plus its input.
+    let dense_total = dense_peak + dense.len() * 4;
+    let sparse_total = sparse_peak + m.heap_bytes();
+    assert!(
+        (sparse_total as f64) < 0.8 * dense_total as f64,
+        "sparse {sparse_total} vs dense {dense_total}"
+    );
+}
+
+/// Fig. 7 mechanism: the converting (f64 -> f32) interface allocates a
+/// full extra copy of the data; the borrowed interface does not.
+#[test]
+fn converting_interface_duplicates_data() {
+    let mut rng = Rng::new(403);
+    let dim = 64;
+    let (d, _) = data::gaussian_blobs(2000, dim, 3, 0.3, &mut rng);
+    let d64: Vec<f64> = d.iter().map(|&v| v as f64).collect();
+    let data_f32_bytes = d.len() * 4;
+
+    let c = cfg();
+    let region = MemRegion::start();
+    let _ = api::train(&c, DataInput::BorrowedF32 { data: &d, dim }).unwrap();
+    let borrowed_peak = region.peak_delta();
+
+    let region = MemRegion::start();
+    let _ = api::train(&c, DataInput::ConvertedF64 { data: &d64, dim }).unwrap();
+    let converted_peak = region.peak_delta();
+
+    assert!(
+        converted_peak >= borrowed_peak + data_f32_bytes * 9 / 10,
+        "converted {converted_peak} vs borrowed {borrowed_peak} \
+         (data copy {data_f32_bytes})"
+    );
+}

@@ -1,0 +1,257 @@
+//! Cross-module property tests (mini-harness in util::prop): format
+//! round-trips, schedule/geometry invariants, kernel equivalences and
+//! collective algebra under random inputs.
+
+use somoclu::io::{dense, sparse as sparse_io};
+use somoclu::kernels::dense_cpu::DenseCpuKernel;
+use somoclu::kernels::sparse_cpu::SparseCpuKernel;
+use somoclu::kernels::{DataShard, EpochAccum, TrainingKernel};
+use somoclu::prop_assert;
+use somoclu::som::{Codebook, Grid, GridType, MapType, Neighborhood};
+use somoclu::sparse::Csr;
+use somoclu::util::prop::{self, Config};
+use somoclu::util::rng::Rng;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("somoclu_prop_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+#[test]
+fn prop_dense_file_round_trip() {
+    prop::check_with(
+        Config {
+            cases: 40,
+            ..Default::default()
+        },
+        "dense-file-roundtrip",
+        |g| {
+            let rows = g.usize_in(1, 20);
+            let cols = g.usize_in(1, 12);
+            let header = g.bool();
+            let data = g.vec_f32(rows * cols, -1e3, 1e3);
+            let path = tmp("rt_dense.txt");
+            dense::write_dense(&path, rows, cols, &data, header)
+                .map_err(|e| e.to_string())?;
+            let m = dense::read_dense(&path).map_err(|e| e.to_string())?;
+            prop_assert!(m.rows == rows && m.cols == cols, "shape");
+            for (a, b) in m.data.iter().zip(&data) {
+                // Text round-trip of f32 Display is exact.
+                prop_assert!(a == b, "value {a} != {b}");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sparse_file_round_trip() {
+    prop::check_with(
+        Config {
+            cases: 40,
+            ..Default::default()
+        },
+        "sparse-file-roundtrip",
+        |g| {
+            let rows = g.usize_in(1, 15);
+            let cols = g.usize_in(2, 20);
+            let mut rng = Rng::new(g.rng.next_u64());
+            let density = 0.3 + 0.5 * g.f32_in(0.0, 1.0) as f64 * 0.5;
+            let m = Csr::random(rows, cols, density, &mut rng);
+            let path = tmp("rt_sparse.svm");
+            sparse_io::write_sparse(&path, &m).map_err(|e| e.to_string())?;
+            let rt = sparse_io::read_sparse(&path, cols).map_err(|e| e.to_string())?;
+            // Blank (all-zero) rows are dropped by the format; compare
+            // the nonempty rows in order.
+            let nonempty: Vec<usize> =
+                (0..m.rows).filter(|&r| !m.row(r).0.is_empty()).collect();
+            prop_assert!(
+                rt.rows == nonempty.len(),
+                "rows {} vs {}",
+                rt.rows,
+                nonempty.len()
+            );
+            for (out_r, &src_r) in nonempty.iter().enumerate() {
+                prop_assert!(rt.row(out_r) == m.row(src_r), "row {src_r}");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sparse_dense_kernels_agree() {
+    prop::check_with(
+        Config {
+            cases: 15,
+            ..Default::default()
+        },
+        "kernel-equivalence",
+        |g| {
+            let mut rng = Rng::new(g.rng.next_u64());
+            let side = g.usize_in(2, 6);
+            let dim = g.usize_in(1, 24);
+            let rows = g.usize_in(4, 40);
+            let gt = *g.choice(&[GridType::Square, GridType::Hexagonal]);
+            let mt = *g.choice(&[MapType::Planar, MapType::Toroid]);
+            let nb = *g.choice(&[
+                Neighborhood::gaussian(false),
+                Neighborhood::gaussian(true),
+                Neighborhood::bubble(),
+            ]);
+            let radius = g.f32_in(0.5, side as f32);
+            let grid = Grid::new(side, side, gt, mt);
+            let cb = Codebook::random_init(grid.node_count(), dim, &mut rng);
+            let m = Csr::random(rows, dim, 0.4, &mut rng);
+            let dense_data = m.to_dense();
+
+            let a = DenseCpuKernel::new(2)
+                .epoch_accumulate(
+                    DataShard::Dense {
+                        data: &dense_data,
+                        dim,
+                    },
+                    &cb,
+                    &grid,
+                    nb,
+                    radius,
+                    0.9,
+                )
+                .map_err(|e| e.to_string())?;
+            let b = SparseCpuKernel::new(2)
+                .epoch_accumulate(DataShard::Sparse(&m), &cb, &grid, nb, radius, 0.9)
+                .map_err(|e| e.to_string())?;
+            prop_assert!(a.bmus == b.bmus, "bmus differ");
+            for (x, y) in a.num.iter().zip(&b.num) {
+                prop_assert!((x - y).abs() < 1e-2, "num {x} vs {y}");
+            }
+            for (x, y) in a.den.iter().zip(&b.den) {
+                prop_assert!((x - y).abs() < 1e-2, "den {x} vs {y}");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_accum_merge_commutative_associative() {
+    prop::check("merge-algebra", |g| {
+        let nodes = g.usize_in(1, 8);
+        let dim = g.usize_in(1, 6);
+        let mk = |g: &mut prop::Gen| {
+            let mut a = EpochAccum::zeros(nodes, dim, 0);
+            a.num = g.vec_f32(nodes * dim, -10.0, 10.0);
+            a.den = g.vec_f32(nodes, 0.0, 10.0);
+            a.qe_sum = g.f32_in(0.0, 100.0) as f64;
+            a
+        };
+        let (a, b, c) = (mk(g), mk(g), mk(g));
+        // (a+b)+c == a+(b+c) in f64 qe only approximately; num/den are
+        // f32 adds of the same operand orders — compare with tolerance.
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut abc1 = ab.clone();
+        abc1.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut abc2 = a.clone();
+        abc2.merge(&bc);
+        for (x, y) in abc1.num.iter().zip(&abc2.num) {
+            prop_assert!((x - y).abs() < 1e-4, "assoc num");
+        }
+        // commutativity
+        let mut ba = b.clone();
+        ba.merge(&a);
+        for (x, y) in ab.num.iter().zip(&ba.num) {
+            prop_assert!((x - y).abs() < 1e-4, "comm num");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_umatrix_invariant_under_codebook_translation() {
+    // U(j) depends only on differences between codebook vectors: adding
+    // a constant vector to every node must not change it.
+    prop::check_with(
+        Config {
+            cases: 30,
+            ..Default::default()
+        },
+        "umatrix-translation",
+        |g| {
+            let mut rng = Rng::new(g.rng.next_u64());
+            let side = g.usize_in(2, 7);
+            let dim = g.usize_in(1, 8);
+            let grid = Grid::new(side, side, GridType::Square, MapType::Planar);
+            let cb = Codebook::random_init(grid.node_count(), dim, &mut rng);
+            let shift = g.vec_f32(dim, -5.0, 5.0);
+            let mut cb2 = cb.clone();
+            for n in 0..cb2.nodes {
+                for (v, s) in cb2.row_mut(n).iter_mut().zip(&shift) {
+                    *v += s;
+                }
+            }
+            let u1 = somoclu::som::umatrix::umatrix(&grid, &cb, 1);
+            let u2 = somoclu::som::umatrix::umatrix(&grid, &cb2, 1);
+            for (a, b) in u1.iter().zip(&u2) {
+                prop_assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_training_scale_invariance_of_bmus() {
+    // Scaling all data and the codebook by the same positive factor must
+    // not change BMU assignments (distances scale uniformly).
+    prop::check_with(
+        Config {
+            cases: 20,
+            ..Default::default()
+        },
+        "bmu-scale-invariance",
+        |g| {
+            let mut rng = Rng::new(g.rng.next_u64());
+            let dim = g.usize_in(1, 12);
+            let rows = g.usize_in(2, 30);
+            let factor = g.f32_in(0.1, 8.0);
+            let grid = Grid::new(4, 4, GridType::Square, MapType::Planar);
+            let cb = Codebook::random_init(16, dim, &mut rng);
+            let data: Vec<f32> =
+                (0..rows * dim).map(|_| rng.normal_f32()).collect();
+
+            let mut cb2 = cb.clone();
+            for v in cb2.weights.iter_mut() {
+                *v *= factor;
+            }
+            let data2: Vec<f32> = data.iter().map(|v| v * factor).collect();
+
+            let nb = Neighborhood::gaussian(false);
+            let a = DenseCpuKernel::new(1)
+                .epoch_accumulate(
+                    DataShard::Dense { data: &data, dim },
+                    &cb,
+                    &grid,
+                    nb,
+                    2.0,
+                    1.0,
+                )
+                .map_err(|e| e.to_string())?;
+            let b = DenseCpuKernel::new(1)
+                .epoch_accumulate(
+                    DataShard::Dense { data: &data2, dim },
+                    &cb2,
+                    &grid,
+                    nb,
+                    2.0,
+                    1.0,
+                )
+                .map_err(|e| e.to_string())?;
+            prop_assert!(a.bmus == b.bmus, "bmus changed under scaling");
+            Ok(())
+        },
+    );
+}
