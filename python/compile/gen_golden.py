@@ -1,0 +1,172 @@
+"""Generate golden-reference fixtures for the Rust test suite.
+
+Runs the pure-jnp oracle (kernels/ref.py) for a small, fully pinned
+training configuration and writes text fixtures that
+rust/tests/golden_reference.rs replays: the input data, the initial
+codebook, and the expected per-epoch QE trajectory, final codebook and
+final-epoch BMUs.
+
+The configuration mirrors the Rust side exactly:
+
+  * map: 6x6, square grid, planar topology (coords (x, y) = (col, row))
+  * neighborhood: gaussian, no compact support
+  * radius: linear 3.0 -> 1.0 over 3 epochs  => [3.0, 2.0, 1.0]
+  * scale:  linear 1.0 -> 0.01 over 3 epochs => [1.0, 0.505, 0.01]
+  * batch update: w_n = num_n / den_n where den_n > eps, else unchanged
+  * QE(epoch) = mean Euclidean distance to the BMU *before* that epoch's
+    update (somoclu convention, matching coordinator/train.rs)
+
+As a self-check, the script also simulates the Rust dense kernel's
+Gram-trick BMU formulation (||w||^2/2 - x.w) in float32 and insists it
+picks identical BMUs every epoch — if a near-tie makes the two distance
+formulations disagree, the data seed is rejected and the next one tried,
+so the checked-in fixture is robustly away from argmin ties.
+
+Usage: python3 python/compile/gen_golden.py
+Rewrites rust/tests/fixtures/golden_* in place; rerun only when the
+training semantics intentionally change, and commit the result.
+"""
+
+import importlib.util
+import json
+import pathlib
+
+import numpy as np
+
+HERE = pathlib.Path(__file__).resolve().parent
+REPO = HERE.parent.parent
+FIXTURES = REPO / "rust" / "tests" / "fixtures"
+
+_spec = importlib.util.spec_from_file_location("ref", HERE / "kernels" / "ref.py")
+ref = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(ref)
+
+import jax.numpy as jnp  # noqa: E402  (after ref import to keep one jax init)
+
+# --- pinned configuration (mirrored in golden_reference.rs) ------------
+MAP_ROWS, MAP_COLS = 6, 6
+DIM = 5
+DATA_ROWS = 64
+BLOBS = 3
+EPOCHS = 3
+RADIUS0, RADIUS_N = np.float32(3.0), np.float32(1.0)
+SCALE0, SCALE_N = np.float32(1.0), np.float32(0.01)
+SPREAD = np.float32(0.15)
+
+
+def schedule(start, end, epoch, n_epochs):
+    """Rust som::cooling Schedule::at, linear branch, in float32."""
+    t = np.float32(epoch) / np.float32(n_epochs - 1)
+    return np.float32(start + (end - start) * t)
+
+
+def square_planar_coords():
+    coords = np.zeros((MAP_ROWS * MAP_COLS, 2), dtype=np.float32)
+    for r in range(MAP_ROWS):
+        for c in range(MAP_COLS):
+            coords[r * MAP_COLS + c] = (c, r)  # (x, y), rust Grid::new
+    return coords
+
+
+def gen_case(seed):
+    rng = np.random.default_rng(seed)
+    centers = rng.uniform(-2.0, 2.0, size=(BLOBS, DIM)).astype(np.float32)
+    data = np.empty((DATA_ROWS, DIM), dtype=np.float32)
+    for i in range(DATA_ROWS):
+        c = i % BLOBS
+        data[i] = centers[c] + SPREAD * rng.standard_normal(DIM).astype(np.float32)
+    init_cb = rng.uniform(-1.0, 1.0, size=(MAP_ROWS * MAP_COLS, DIM)).astype(
+        np.float32
+    )
+    return data, init_cb
+
+
+def rust_like_bmus(data, cb):
+    """The dense CPU kernel's Gram-trick argmin, float32, first-min-wins."""
+    w2 = np.sum(cb.astype(np.float32) ** 2, axis=1, dtype=np.float32)
+    dots = (data.astype(np.float32) @ cb.astype(np.float32).T).astype(np.float32)
+    scores = np.float32(0.5) * w2[None, :] - dots
+    return np.argmin(scores, axis=1).astype(np.int32)
+
+
+def run(seed):
+    data, init_cb = gen_case(seed)
+    coords = square_planar_coords()
+    grid_dist = np.asarray(
+        ref.grid_distance_matrix(jnp.asarray(coords), map_type="planar"),
+        dtype=np.float32,
+    )
+
+    cb = jnp.asarray(init_cb)
+    data_j = jnp.asarray(data)
+    qes, bmus = [], None
+    for epoch in range(EPOCHS):
+        radius = schedule(RADIUS0, RADIUS_N, epoch, EPOCHS)
+        scale = schedule(SCALE0, SCALE_N, epoch, EPOCHS)
+        bmus, num, den, qe_sum = ref.epoch_accumulators(
+            data_j, cb, jnp.asarray(grid_dist), radius, scale, kind="gaussian"
+        )
+        # Self-check: the rust Gram formulation must agree on every BMU.
+        alt = rust_like_bmus(data, np.asarray(cb))
+        if not np.array_equal(np.asarray(bmus), alt):
+            return None
+        qes.append(float(qe_sum) / DATA_ROWS)
+        cb = ref.apply_update(cb, num, den)
+    return data, init_cb, np.asarray(cb), qes, np.asarray(bmus)
+
+
+def fmt(v):
+    """Shortest round-tripping decimal for a float32 value."""
+    return str(np.float32(v))
+
+
+def write_dense(path, mat):
+    with open(path, "w") as f:
+        for row in np.asarray(mat, dtype=np.float32):
+            f.write(" ".join(fmt(v) for v in row) + "\n")
+
+
+def main():
+    FIXTURES.mkdir(parents=True, exist_ok=True)
+    for seed in range(1347, 1400):
+        out = run(seed)
+        if out is not None:
+            break
+    else:
+        raise SystemExit("no tie-free seed found")
+    data, init_cb, final_cb, qes, bmus = out
+
+    write_dense(FIXTURES / "golden_data.txt", data)
+    write_dense(FIXTURES / "golden_init_codebook.txt", init_cb)
+    write_dense(FIXTURES / "golden_codebook_after3.txt", final_cb)
+    with open(FIXTURES / "golden_qe.txt", "w") as f:
+        for qe in qes:
+            f.write(format(qe, ".12e") + "\n")
+    with open(FIXTURES / "golden_bmus.txt", "w") as f:
+        for b in bmus:
+            f.write(f"{int(b)}\n")
+    meta = {
+        "generator": "python/compile/gen_golden.py",
+        "oracle": "python/compile/kernels/ref.py",
+        "seed": seed,
+        "map": [MAP_ROWS, MAP_COLS],
+        "grid": "square",
+        "topology": "planar",
+        "neighborhood": "gaussian",
+        "compact_support": False,
+        "dim": DIM,
+        "rows": DATA_ROWS,
+        "epochs": EPOCHS,
+        "radius": [float(RADIUS0), float(RADIUS_N)],
+        "scale": [float(SCALE0), float(SCALE_N)],
+        "cooling": "linear",
+        "qe": "mean Euclidean distance to BMU before the epoch's update",
+    }
+    with open(FIXTURES / "golden_meta.json", "w") as f:
+        json.dump(meta, f, indent=2)
+        f.write("\n")
+    print(f"wrote fixtures for seed {seed}: qe trajectory {qes}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+//! STREAM — out-of-core training memory profile: peak data-buffer bytes
+//! and wall time as the input grows with a fixed `--chunk-rows` window.
+//!
+//! The claim under test (ISSUE 1 acceptance): with chunked streaming the
+//! peak data-buffer allocation is O(chunk_rows * dim) — flat as rows
+//! grow — while the in-memory path is O(rows * dim). QE and BMUs match
+//! the in-memory run (asserted here on the smallest size).
+//!
+//! Paper-scale run (100k+ rows): SOM_BENCH_SCALE=10 cargo bench --bench stream_memory
+
+mod common;
+
+use somoclu::coordinator::config::TrainConfig;
+use somoclu::coordinator::train::{train, train_stream};
+use somoclu::data;
+use somoclu::io::dense;
+use somoclu::io::stream::ChunkedDenseFileSource;
+use somoclu::kernels::{DataShard, KernelType};
+use somoclu::util::memtrack::{self, fmt_bytes, MemRegion};
+use somoclu::util::rng::Rng;
+use somoclu::util::timer::{bench_scale, time_once};
+
+fn main() {
+    let scale = bench_scale(1.0);
+    common::banner("STREAM: out-of-core chunked training memory", scale);
+
+    let dim = 32;
+    let chunk_rows = 1000;
+    let base = [10_000usize, 20_000, 40_000];
+    let sizes: Vec<usize> = base
+        .iter()
+        .map(|&s| ((s as f64 * scale) as usize).max(2_000))
+        .collect();
+    let cfg = common::base_config(12, 3, KernelType::DenseCpu);
+
+    let dir = std::env::temp_dir().join(format!("somoclu_bench_stream_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    println!(
+        "\nchunk window: {chunk_rows} rows x {dim} dims = {}\n",
+        fmt_bytes(chunk_rows * dim * 4)
+    );
+    println!(
+        "{:>10} {:>12} {:>14} {:>14} {:>14} {:>10}",
+        "n", "stream time", "stream databuf", "stream peak", "in-mem peak", "QE match"
+    );
+
+    let mut first_checked = false;
+    for &n in &sizes {
+        let mut rng = Rng::new(n as u64 ^ 0x57_52);
+        let path = dir.join(format!("stream_{n}.txt"));
+        {
+            let rows_data = data::random_dense(n, dim, &mut rng);
+            dense::write_dense(&path, n, dim, &rows_data, false).unwrap();
+            // rows_data dropped here: the streaming run must not depend
+            // on the generator's resident copy.
+        }
+
+        // Streamed, bounded-window run.
+        memtrack::reset_data_buffer_peak();
+        let region = MemRegion::start();
+        let (stream_res, t_stream) = time_once(|| {
+            let mut src = ChunkedDenseFileSource::open(&path, chunk_rows).unwrap();
+            train_stream(&cfg, &mut src, None, None)
+        });
+        let stream_res = stream_res.unwrap();
+        let stream_peak = region.peak_delta();
+        let stream_databuf = memtrack::data_buffer_peak();
+
+        // In-memory reference run (also provides the QE cross-check).
+        let m = dense::read_dense(&path).unwrap();
+        let region = MemRegion::start();
+        let mem_res = train(
+            &cfg,
+            DataShard::Dense {
+                data: &m.data,
+                dim: m.cols,
+            },
+            None,
+            None,
+        )
+        .unwrap();
+        let mem_peak = region.peak_delta() + m.data.len() * 4;
+
+        let qe_match = (stream_res.final_qe() - mem_res.final_qe()).abs() < 1e-4
+            && stream_res.bmus == mem_res.bmus;
+        if !first_checked {
+            assert!(qe_match, "streamed run diverged from in-memory run");
+            first_checked = true;
+        }
+
+        println!(
+            "{n:>10} {:>11.3}s {:>14} {:>14} {:>14} {:>10}",
+            t_stream.as_secs_f64(),
+            fmt_bytes(stream_databuf),
+            fmt_bytes(stream_peak),
+            fmt_bytes(mem_peak),
+            if qe_match { "yes" } else { "NO" },
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    println!(
+        "\nexpected shape: 'stream databuf' flat across n (the window), \
+         'in-mem peak' growing ~linearly with n."
+    );
+}

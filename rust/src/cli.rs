@@ -54,6 +54,9 @@ pub fn arg_spec() -> ArgSpec {
              "codebook init: random | pca", Some("random"))
         .opt("seed", None, Some("seed"),
              "RNG seed for codebook init", Some("1347440723"))
+        .opt("chunk-rows", None, Some("chunk-rows"),
+             "stream the input in windows of N rows (out-of-core; 0 = \
+              load fully in memory)", Some("0"))
         .opt("net", None, Some("net"),
              "cluster interconnect model: ideal | 10g", Some("ideal"))
         .flag("help", Some('h'), Some("help"), "print usage")
@@ -91,6 +94,7 @@ pub fn parse_cli(parsed: &Parsed) -> Result<CliOptions, ArgError> {
         scale_n: parsed.parse_as::<f32>("scaleN")?,
         ranks: parsed.parse_as::<usize>("ranks")?,
         seed: parsed.parse_as::<u64>("seed")?,
+        chunk_rows: parsed.parse_as::<usize>("chunk-rows")?,
         ..Default::default()
     };
 
@@ -212,6 +216,14 @@ mod tests {
         assert_eq!(c.kernel, KernelType::SparseCpu);
         assert_eq!(c.threads, 3);
         assert_eq!(c.seed, 99);
+    }
+
+    #[test]
+    fn chunk_rows_flag() {
+        let o = parse(&["in", "out"]);
+        assert_eq!(o.config.chunk_rows, 0); // default: fully in memory
+        let o = parse(&["--chunk-rows", "4096", "in", "out"]);
+        assert_eq!(o.config.chunk_rows, 4096);
     }
 
     #[test]

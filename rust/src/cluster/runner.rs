@@ -15,9 +15,10 @@ use crate::cluster::comm::World;
 use crate::cluster::netmodel::NetModel;
 use crate::coordinator::config::TrainConfig;
 use crate::coordinator::train::{init_codebook, EpochStats, TrainResult};
+use crate::io::stream::{DataSource, InMemorySource};
 use crate::kernels::dense_cpu::DenseCpuKernel;
 use crate::kernels::sparse_cpu::SparseCpuKernel;
-use crate::kernels::{DataShard, KernelType, TrainingKernel};
+use crate::kernels::{DataShard, EpochAccum, KernelType, TrainingKernel};
 use crate::sparse::Csr;
 use crate::util::threadpool::{run_concurrent, split_ranges};
 
@@ -144,6 +145,13 @@ pub fn train_cluster(
                     _ => Box::new(DenseCpuKernel::new(threads_per_rank)),
                 };
                 let rows_local = shard.rows();
+                let dim_local = shard.dim();
+                // Each rank streams its shard in bounded chunks — the
+                // same chunk loop as the single-node coordinator, so
+                // `--chunk-rows` bounds per-rank data traffic to the
+                // kernel identically in both modes.
+                let mut source =
+                    InMemorySource::new(shard.as_shard(), cfg.chunk_rows);
                 let mut epochs = Vec::with_capacity(cfg.epochs);
                 let mut bmus_local: Vec<u32> = Vec::new();
 
@@ -151,15 +159,30 @@ pub fn train_cluster(
                     let te = Instant::now();
                     let radius = radius_sched.at(epoch);
                     let scale = scale_sched.at(epoch);
-                    let mut accum = kernel.epoch_accumulate(
-                        shard.as_shard(),
-                        &codebook,
-                        &grid,
-                        cfg.neighborhood,
-                        radius,
-                        scale,
-                    )?;
-                    bmus_local = accum.bmus;
+                    kernel.epoch_begin(&codebook)?;
+                    source.reset()?;
+                    let mut accum =
+                        EpochAccum::zeros(grid.node_count(), dim_local, 0);
+                    let mut epoch_bmus: Vec<u32> =
+                        Vec::with_capacity(rows_local);
+                    while let Some(chunk) = source.next_chunk()? {
+                        let part = kernel.epoch_accumulate(
+                            chunk,
+                            &codebook,
+                            &grid,
+                            cfg.neighborhood,
+                            radius,
+                            scale,
+                        )?;
+                        epoch_bmus.extend_from_slice(&part.bmus);
+                        accum.merge(&part);
+                    }
+                    anyhow::ensure!(
+                        epoch_bmus.len() == rows_local,
+                        "rank shard produced {} rows, expected {rows_local}",
+                        epoch_bmus.len()
+                    );
+                    bmus_local = epoch_bmus;
 
                     // Slaves send accumulators; master reduces, updates,
                     // broadcasts the new codebook (the paper's two-way
@@ -326,6 +349,30 @@ mod tests {
             (0.9..1.1).contains(&ratio),
             "per-slave volume changed with ranks: {ratio}"
         );
+    }
+
+    #[test]
+    fn chunked_cluster_matches_unchunked() {
+        let mut rng = Rng::new(10);
+        let (data, _) = data::gaussian_blobs(96, 5, 3, 0.2, &mut rng);
+        let run = |chunk_rows: usize| {
+            let mut c = cfg(3);
+            c.chunk_rows = chunk_rows;
+            train_cluster(
+                &c,
+                ClusterData::Dense {
+                    data: data.clone(),
+                    dim: 5,
+                },
+                NetModel::ideal(),
+            )
+            .unwrap()
+            .0
+        };
+        let a = run(0);
+        let b = run(9);
+        assert_eq!(a.bmus, b.bmus);
+        assert!((a.final_qe() - b.final_qe()).abs() < 1e-4);
     }
 
     #[test]

@@ -63,6 +63,11 @@ pub struct TrainConfig {
     pub initialization: Initialization,
     /// RNG seed for codebook init.
     pub seed: u64,
+    /// Streaming window in data rows (`--chunk-rows`): each epoch
+    /// accumulates over bounded chunks of this many rows instead of one
+    /// resident shard, capping data memory at O(chunk_rows * dim).
+    /// 0 = whole shard per chunk (the classic in-memory path, default).
+    pub chunk_rows: usize,
 }
 
 impl Default for TrainConfig {
@@ -86,6 +91,7 @@ impl Default for TrainConfig {
             snapshot: SnapshotLevel::None,
             initialization: Initialization::Random,
             seed: 0x50_4d_4f_53, // "SOMP"
+            chunk_rows: 0,
         }
     }
 }
@@ -137,6 +143,7 @@ mod tests {
     fn defaults_match_paper() {
         let c = TrainConfig::default();
         assert_eq!((c.rows, c.cols), (50, 50));
+        assert_eq!(c.chunk_rows, 0); // streaming is opt-in
         assert_eq!(c.radius_n, 1.0);
         assert_eq!(c.scale0, 1.0);
         assert_eq!(c.scale_n, 0.01);

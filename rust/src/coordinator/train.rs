@@ -1,14 +1,21 @@
 //! The training loop (single-process path): epoch iteration, cooling,
 //! kernel dispatch, snapshots, and quality logging — the body of the
 //! paper's `trainOneEpoch` driven across epochs.
+//!
+//! The loop is written against [`DataSource`], so one code path serves
+//! both the classic resident-shard mode and out-of-core streaming
+//! (`--chunk-rows`): each epoch accumulates bounded chunks, merging the
+//! partial Eq. 6 accumulators (`EpochAccum::merge`, the same operator the
+//! cluster allreduce uses) and reassembling BMUs in chunk order.
 
 use std::time::{Duration, Instant};
 
 use crate::coordinator::config::TrainConfig;
 use crate::io::output::OutputWriter;
+use crate::io::stream::{DataSource, InMemorySource};
 use crate::kernels::dense_cpu::DenseCpuKernel;
 use crate::kernels::sparse_cpu::SparseCpuKernel;
-use crate::kernels::{DataShard, KernelType, TrainingKernel};
+use crate::kernels::{DataShard, EpochAccum, KernelType, TrainingKernel};
 use crate::som::{umatrix, Codebook, Grid};
 use crate::util::rng::Rng;
 
@@ -84,17 +91,33 @@ pub fn init_codebook_with_data(
 }
 
 /// Train on one in-memory shard (the whole data set on the single-node
-/// path). `writer` enables interim snapshots (paper `-s`).
+/// path). `writer` enables interim snapshots (paper `-s`). With
+/// `cfg.chunk_rows > 0` the shard is processed in bounded windows — this
+/// is a thin wrapper over [`train_stream`].
 pub fn train(
     cfg: &TrainConfig,
     shard: DataShard<'_>,
     initial: Option<Codebook>,
     writer: Option<&OutputWriter>,
 ) -> anyhow::Result<TrainResult> {
+    let mut source = InMemorySource::new(shard, cfg.chunk_rows);
+    train_stream(cfg, &mut source, initial, writer)
+}
+
+/// Train over any [`DataSource`] — the out-of-core entry point. Each
+/// epoch resets the source and folds its chunks into one Eq. 6
+/// accumulator; file-backed sources keep data memory at
+/// O(chunk_rows * dim) regardless of total rows.
+pub fn train_stream(
+    cfg: &TrainConfig,
+    source: &mut dyn DataSource,
+    initial: Option<Codebook>,
+    writer: Option<&OutputWriter>,
+) -> anyhow::Result<TrainResult> {
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
     let grid = cfg.grid();
-    let dim = shard.dim();
-    let rows = shard.rows();
+    let dim = source.dim();
+    let rows = source.rows();
     anyhow::ensure!(rows > 0, "no data rows");
 
     let mut codebook = match initial {
@@ -109,7 +132,19 @@ pub fn train(
             );
             cb
         }
-        None => init_codebook_with_data(cfg, &grid, shard)?,
+        None => match source.resident() {
+            Some(shard) => init_codebook_with_data(cfg, &grid, shard)?,
+            None => {
+                anyhow::ensure!(
+                    cfg.initialization
+                        == crate::coordinator::config::Initialization::Random,
+                    "PCA initialization needs the data resident in memory; \
+                     streamed sources support only --initialization random \
+                     (or an explicit -c codebook)"
+                );
+                init_codebook(cfg, &grid, dim)
+            }
+        },
     };
 
     let radius_sched = cfg.radius_schedule(&grid);
@@ -125,16 +160,29 @@ pub fn train(
         let radius = radius_sched.at(epoch);
         let scale = scale_sched.at(epoch);
 
-        let accum = kernel.epoch_accumulate(
-            shard,
-            &codebook,
-            &grid,
-            cfg.neighborhood,
-            radius,
-            scale,
-        )?;
+        kernel.epoch_begin(&codebook)?;
+        source.reset()?;
+        let mut accum = EpochAccum::zeros(grid.node_count(), dim, 0);
+        let mut epoch_bmus: Vec<u32> = Vec::with_capacity(rows);
+        while let Some(chunk) = source.next_chunk()? {
+            let part = kernel.epoch_accumulate(
+                chunk,
+                &codebook,
+                &grid,
+                cfg.neighborhood,
+                radius,
+                scale,
+            )?;
+            epoch_bmus.extend_from_slice(&part.bmus);
+            accum.merge(&part);
+        }
+        anyhow::ensure!(
+            epoch_bmus.len() == rows,
+            "data source produced {} rows this epoch, expected {rows}",
+            epoch_bmus.len()
+        );
         codebook.apply_batch_update(&accum.num, &accum.den);
-        bmus = accum.bmus;
+        bmus = epoch_bmus;
 
         epochs.push(EpochStats {
             epoch,
@@ -270,6 +318,81 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn chunked_training_matches_in_memory() {
+        let mut rng = Rng::new(6);
+        let (data, _) = data::gaussian_blobs(90, 5, 3, 0.15, &mut rng);
+        let shard = DataShard::Dense { data: &data, dim: 5 };
+        let whole = train(&blob_config(), shard, None, None).unwrap();
+        for chunk_rows in [1usize, 7, 90, 1000] {
+            let cfg = TrainConfig {
+                chunk_rows,
+                ..blob_config()
+            };
+            let chunked = train(&cfg, shard, None, None).unwrap();
+            assert_eq!(chunked.bmus, whole.bmus, "chunk_rows={chunk_rows}");
+            assert!(
+                (chunked.final_qe() - whole.final_qe()).abs() < 1e-4,
+                "chunk_rows={chunk_rows}: QE {} vs {}",
+                chunked.final_qe(),
+                whole.final_qe()
+            );
+        }
+    }
+
+    #[test]
+    fn chunked_sparse_training_matches_in_memory() {
+        let mut rng = Rng::new(13);
+        let m = crate::sparse::Csr::random(70, 24, 0.2, &mut rng);
+        let base = TrainConfig {
+            rows: 6,
+            cols: 6,
+            epochs: 5,
+            kernel: crate::kernels::KernelType::SparseCpu,
+            threads: 2,
+            radius0: Some(3.0),
+            ..Default::default()
+        };
+        let whole = train(&base, DataShard::Sparse(&m), None, None).unwrap();
+        for chunk_rows in [1usize, 11, 70] {
+            let cfg = TrainConfig {
+                chunk_rows,
+                ..base.clone()
+            };
+            let chunked = train(&cfg, DataShard::Sparse(&m), None, None).unwrap();
+            assert_eq!(chunked.bmus, whole.bmus, "chunk_rows={chunk_rows}");
+            assert!(
+                (chunked.final_qe() - whole.final_qe()).abs() < 1e-4,
+                "chunk_rows={chunk_rows}"
+            );
+        }
+    }
+
+    #[test]
+    fn streamed_pca_init_requires_resident_data() {
+        // A file-backed source cannot serve PCA init; the error must be
+        // actionable rather than a panic.
+        let dir = std::env::temp_dir()
+            .join(format!("somoclu_train_stream_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pca.txt");
+        let mut rng = Rng::new(14);
+        let (data, _) = data::gaussian_blobs(20, 3, 2, 0.2, &mut rng);
+        crate::io::dense::write_dense(&path, 20, 3, &data, false).unwrap();
+        let mut src = crate::io::stream::ChunkedDenseFileSource::open(&path, 4).unwrap();
+        let cfg = TrainConfig {
+            rows: 4,
+            cols: 4,
+            epochs: 2,
+            initialization: crate::coordinator::config::Initialization::Pca,
+            radius0: Some(2.0),
+            ..Default::default()
+        };
+        let err = train_stream(&cfg, &mut src, None, None);
+        assert!(err.is_err());
+        assert!(format!("{:#}", err.unwrap_err()).contains("resident"));
     }
 
     #[test]

@@ -37,13 +37,13 @@ pub enum ReadError {
     HeaderMismatch { declared: usize, found: usize },
 }
 
-fn is_comment(line: &str) -> bool {
+pub(crate) fn is_comment(line: &str) -> bool {
     matches!(line.trim_start().chars().next(), Some('#'))
 }
 
 /// Parse ESOM-style header lines: `% <rows>` and `% <cols>` (the first
 /// two `%` lines, as written by Databionic ESOM tools / somoclu).
-fn parse_header_token(line: &str) -> Option<Vec<usize>> {
+pub(crate) fn parse_header_token(line: &str) -> Option<Vec<usize>> {
     let rest = line.trim_start().strip_prefix('%')?;
     let nums: Result<Vec<usize>, _> =
         rest.split_whitespace().map(|t| t.parse::<usize>()).collect();

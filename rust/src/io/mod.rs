@@ -1,11 +1,16 @@
 //! File formats (paper §4.1): plain dense, ESOM-header dense, libsvm
 //! sparse inputs; codebook / BMU / U-matrix outputs with Databionic ESOM
-//! Tools compatibility (`.wts`, `.bm`, `.umx`).
+//! Tools compatibility (`.wts`, `.bm`, `.umx`); plus the out-of-core
+//! streaming sources (`stream::DataSource`, CLI `--chunk-rows`).
 
 pub mod dense;
 pub mod esom;
 pub mod output;
 pub mod sparse;
+pub mod stream;
 
 pub use dense::{read_dense, DenseMatrix};
 pub use sparse::read_sparse;
+pub use stream::{
+    ChunkedDenseFileSource, ChunkedSparseFileSource, DataSource, InMemorySource,
+};

@@ -23,6 +23,50 @@ pub enum SparseReadError {
     Empty,
 }
 
+/// Parse one libsvm line into sorted (col, value) pairs. Returns `None`
+/// for blank and comment lines (they carry no data row). `lineno` is
+/// 1-based, for error reporting. Shared by the whole-file reader below
+/// and the chunked streaming source (io::stream).
+pub(crate) fn parse_sparse_line(
+    line: &str,
+    lineno: usize,
+) -> Result<Option<Vec<(u32, f32)>>, SparseReadError> {
+    let trimmed = line.trim();
+    if trimmed.is_empty() || trimmed.starts_with('#') {
+        return Ok(None);
+    }
+    let mut row: Vec<(u32, f32)> = Vec::new();
+    let mut prev: Option<u32> = None;
+    for token in trimmed.split_whitespace() {
+        let (idx, val) = token.split_once(':').ok_or_else(|| {
+            SparseReadError::BadEntry {
+                line: lineno,
+                token: token.to_string(),
+            }
+        })?;
+        let c: u32 = idx.parse().map_err(|_| SparseReadError::BadEntry {
+            line: lineno,
+            token: token.to_string(),
+        })?;
+        let v: f32 = val.parse().map_err(|_| SparseReadError::BadEntry {
+            line: lineno,
+            token: token.to_string(),
+        })?;
+        if let Some(p) = prev {
+            if c <= p {
+                return Err(SparseReadError::Unsorted {
+                    line: lineno,
+                    prev: p,
+                    cur: c,
+                });
+            }
+        }
+        prev = Some(c);
+        row.push((c, v));
+    }
+    Ok(Some(row))
+}
+
 /// Read libsvm-format sparse data. `min_cols` lets callers force a
 /// dimensionality larger than max(index)+1.
 pub fn read_sparse_from<R: Read>(
@@ -35,39 +79,11 @@ pub fn read_sparse_from<R: Read>(
 
     for (lineno, line) in buf.lines().enumerate() {
         let line = line?;
-        let trimmed = line.trim();
-        if trimmed.is_empty() || trimmed.starts_with('#') {
+        let Some(row) = parse_sparse_line(&line, lineno + 1)? else {
             continue;
-        }
-        let mut row: Vec<(u32, f32)> = Vec::new();
-        let mut prev: Option<u32> = None;
-        for token in trimmed.split_whitespace() {
-            let (idx, val) = token.split_once(':').ok_or_else(|| {
-                SparseReadError::BadEntry {
-                    line: lineno + 1,
-                    token: token.to_string(),
-                }
-            })?;
-            let c: u32 = idx.parse().map_err(|_| SparseReadError::BadEntry {
-                line: lineno + 1,
-                token: token.to_string(),
-            })?;
-            let v: f32 = val.parse().map_err(|_| SparseReadError::BadEntry {
-                line: lineno + 1,
-                token: token.to_string(),
-            })?;
-            if let Some(p) = prev {
-                if c <= p {
-                    return Err(SparseReadError::Unsorted {
-                        line: lineno + 1,
-                        prev: p,
-                        cur: c,
-                    });
-                }
-            }
-            prev = Some(c);
+        };
+        for &(c, _) in &row {
             max_col = max_col.max(c as usize);
-            row.push((c, v));
         }
         rows.push(row);
     }

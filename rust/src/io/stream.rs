@@ -1,0 +1,735 @@
+//! Out-of-core streaming data sources.
+//!
+//! The paper claims "memory use is highly optimized, enabling training
+//! large emergent maps even on a single computer" — but a fully resident
+//! `Vec<f32>` / `Csr` caps the workload at RAM size. Because the batch
+//! formulation (Eq. 6) is a pure sum over data rows, an epoch can
+//! accumulate over bounded-memory chunks and merge them exactly like the
+//! distributed runner's allreduce (`EpochAccum::merge`); BMUs concatenate
+//! in row order. [`DataSource`] is that abstraction: the coordinator's
+//! epoch loop becomes
+//!
+//! ```text
+//! source.reset()?;
+//! while let Some(chunk) = source.next_chunk()? {
+//!     accum.merge(&kernel.epoch_accumulate(chunk, ...)?);
+//! }
+//! ```
+//!
+//! Three implementations:
+//!
+//! * [`InMemorySource`] — wraps a resident shard (the classic path);
+//!   with `chunk_rows > 0` it yields bounded windows of it, which is
+//!   what the chunking-equivalence tests exercise.
+//! * [`ChunkedDenseFileSource`] — re-parses a dense text file in
+//!   fixed-row windows through one reusable buffer: peak data memory is
+//!   O(chunk_rows * dim) regardless of file size.
+//! * [`ChunkedSparseFileSource`] — the same for libsvm sparse files,
+//!   through a reusable windowed CSR.
+//!
+//! Every source accounts its resident buffer bytes to the additive
+//! data-buffer gauge ([`memtrack::data_buffer_resize`], released on
+//! drop) so benches/tests can assert the bounded-memory property even
+//! with one source per cluster rank alive at once.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+
+use crate::io::dense::{is_comment, parse_header_token, ReadError};
+use crate::io::sparse::parse_sparse_line;
+use crate::kernels::DataShard;
+use crate::sparse::Csr;
+use crate::util::memtrack;
+
+/// A restartable stream of bounded-size data chunks.
+///
+/// Contract: after `reset()`, repeated `next_chunk()` calls yield
+/// non-empty chunks covering every data row exactly once, in file/buffer
+/// order, then `None`. `rows()`/`dim()` are the totals across one full
+/// pass and are fixed for the life of the source.
+pub trait DataSource {
+    /// Total data rows per pass.
+    fn rows(&self) -> usize;
+
+    /// Vector dimensionality (columns).
+    fn dim(&self) -> usize;
+
+    /// Configured window size in rows; 0 means "one chunk per pass".
+    fn chunk_rows(&self) -> usize;
+
+    /// The next chunk of this pass, or `None` when the pass is done.
+    /// The returned shard borrows the source's internal buffer and is
+    /// valid until the next call on the source.
+    fn next_chunk(&mut self) -> anyhow::Result<Option<DataShard<'_>>>;
+
+    /// Rewind to the start for another pass (epoch).
+    fn reset(&mut self) -> anyhow::Result<()>;
+
+    /// Whole-data shard if it is resident in memory (used by PCA init,
+    /// which needs all rows at once). File-backed sources return `None`.
+    fn resident(&self) -> Option<DataShard<'_>> {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------
+// In-memory source
+// ---------------------------------------------------------------------
+
+/// Wraps a resident [`DataShard`]; with `chunk_rows > 0` yields bounded
+/// windows of it (dense windows are zero-copy subslices; sparse windows
+/// are copied into a reusable scratch CSR).
+pub struct InMemorySource<'a> {
+    shard: DataShard<'a>,
+    chunk_rows: usize,
+    cursor: usize,
+    /// Reusable window for chunked sparse iteration (rows 0 until used).
+    scratch: Csr,
+    /// Bytes currently accounted to the data-buffer gauge (shard +
+    /// scratch).
+    reported: usize,
+}
+
+fn shard_bytes(shard: &DataShard<'_>) -> usize {
+    match shard {
+        DataShard::Dense { data, .. } => std::mem::size_of_val(*data),
+        DataShard::Sparse(m) => m.heap_bytes(),
+    }
+}
+
+impl<'a> InMemorySource<'a> {
+    pub fn new(shard: DataShard<'a>, chunk_rows: usize) -> Self {
+        let bytes = shard_bytes(&shard);
+        memtrack::data_buffer_resize(0, bytes);
+        InMemorySource {
+            shard,
+            chunk_rows,
+            cursor: 0,
+            scratch: Csr::new_empty(0, 0),
+            reported: bytes,
+        }
+    }
+
+    /// Copy rows `start..start + take` of the resident CSR into the
+    /// reusable scratch window (no per-chunk allocation once warm).
+    fn fill_scratch(&mut self, m: &Csr, start: usize, take: usize) {
+        let (a, b) = (m.indptr[start], m.indptr[start + take]);
+        self.scratch.rows = take;
+        self.scratch.cols = m.cols;
+        self.scratch.indptr.clear();
+        self.scratch
+            .indptr
+            .extend(m.indptr[start..=start + take].iter().map(|p| p - a));
+        self.scratch.indices.clear();
+        self.scratch.indices.extend_from_slice(&m.indices[a..b]);
+        self.scratch.values.clear();
+        self.scratch.values.extend_from_slice(&m.values[a..b]);
+        let total = shard_bytes(&self.shard) + self.scratch.heap_bytes();
+        memtrack::data_buffer_resize(self.reported, total);
+        self.reported = total;
+    }
+}
+
+impl Drop for InMemorySource<'_> {
+    fn drop(&mut self) {
+        memtrack::data_buffer_resize(self.reported, 0);
+    }
+}
+
+impl DataSource for InMemorySource<'_> {
+    fn rows(&self) -> usize {
+        self.shard.rows()
+    }
+
+    fn dim(&self) -> usize {
+        self.shard.dim()
+    }
+
+    fn chunk_rows(&self) -> usize {
+        self.chunk_rows
+    }
+
+    fn next_chunk(&mut self) -> anyhow::Result<Option<DataShard<'_>>> {
+        let rows = self.shard.rows();
+        if self.cursor >= rows {
+            return Ok(None);
+        }
+        let take = if self.chunk_rows == 0 {
+            rows - self.cursor
+        } else {
+            self.chunk_rows.min(rows - self.cursor)
+        };
+        let start = self.cursor;
+        self.cursor += take;
+        match self.shard {
+            DataShard::Dense { data, dim } => Ok(Some(DataShard::Dense {
+                data: &data[start * dim..(start + take) * dim],
+                dim,
+            })),
+            DataShard::Sparse(m) => {
+                if take == rows {
+                    // Whole-shard pass: no copy at all.
+                    Ok(Some(DataShard::Sparse(m)))
+                } else {
+                    self.fill_scratch(m, start, take);
+                    Ok(Some(DataShard::Sparse(&self.scratch)))
+                }
+            }
+        }
+    }
+
+    fn reset(&mut self) -> anyhow::Result<()> {
+        self.cursor = 0;
+        Ok(())
+    }
+
+    fn resident(&self) -> Option<DataShard<'_>> {
+        Some(self.shard)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Chunked dense file source
+// ---------------------------------------------------------------------
+
+/// Streams a dense text file (plain or ESOM-headered, like
+/// [`crate::io::dense::read_dense`]) in windows of `chunk_rows` rows.
+///
+/// Construction runs a dimension pass ("this file is parsed twice to get
+/// the basic dimensions right" — here pass 1 also validates row widths);
+/// each epoch then re-parses the file through one reusable
+/// `chunk_rows * dim` buffer, so the resident data memory is bounded by
+/// the window, not the file.
+pub struct ChunkedDenseFileSource {
+    path: PathBuf,
+    rows: usize,
+    dim: usize,
+    chunk_rows: usize,
+    reader: Option<BufReader<File>>,
+    /// Reusable chunk buffer, capacity `chunk_rows * dim` once warm.
+    buf: Vec<f32>,
+    /// Reusable line buffer.
+    line: String,
+    line_no: usize,
+    rows_emitted: usize,
+    /// Bytes currently accounted to the data-buffer gauge.
+    reported: usize,
+}
+
+impl Drop for ChunkedDenseFileSource {
+    fn drop(&mut self) {
+        memtrack::data_buffer_resize(self.reported, 0);
+    }
+}
+
+impl ChunkedDenseFileSource {
+    /// Open `path`, running the dimension/validation pass. `chunk_rows`
+    /// of 0 streams the whole file as a single chunk per epoch.
+    pub fn open<P: AsRef<Path>>(path: P, chunk_rows: usize) -> anyhow::Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let mut reader = BufReader::new(File::open(&path)?);
+        let mut line = String::new();
+        let mut rows = 0usize;
+        let mut dim: Option<usize> = None;
+        let mut line_no = 0usize;
+        let mut header_first: Option<Vec<usize>> = None;
+        loop {
+            line.clear();
+            if reader.read_line(&mut line)? == 0 {
+                break;
+            }
+            line_no += 1;
+            if is_comment(&line) {
+                continue;
+            }
+            if let Some(nums) = parse_header_token(&line) {
+                if header_first.is_none() {
+                    header_first = Some(nums);
+                }
+                continue;
+            }
+            // Parse (not just count) every token so a corrupt value fails
+            // here, before training starts — same fail-fast guarantee as
+            // read_dense, which rejects the file before any epoch runs.
+            let mut n = 0usize;
+            for token in line.split_whitespace() {
+                token.parse::<f32>().map_err(|_| ReadError::BadNumber {
+                    line: line_no,
+                    token: token.to_string(),
+                })?;
+                n += 1;
+            }
+            if n == 0 {
+                continue;
+            }
+            match dim {
+                None => dim = Some(n),
+                Some(d) if d != n => {
+                    return Err(ReadError::Ragged {
+                        line: line_no,
+                        expected: d,
+                        found: n,
+                    }
+                    .into())
+                }
+                _ => {}
+            }
+            rows += 1;
+        }
+        let dim = dim.ok_or(ReadError::Empty)?;
+        // Same ESOM-header check as io::dense::read_dense: a truncated
+        // copy must fail here too, not train silently.
+        if let Some(first) = header_first {
+            let declared = first[0];
+            let product: usize = first.iter().product();
+            if declared != rows && product != rows {
+                return Err(ReadError::HeaderMismatch {
+                    declared,
+                    found: rows,
+                }
+                .into());
+            }
+        }
+        Ok(ChunkedDenseFileSource {
+            path,
+            rows,
+            dim,
+            chunk_rows,
+            reader: None,
+            buf: Vec::new(),
+            line: String::new(),
+            line_no: 0,
+            rows_emitted: 0,
+            reported: 0,
+        })
+    }
+}
+
+impl DataSource for ChunkedDenseFileSource {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn chunk_rows(&self) -> usize {
+        self.chunk_rows
+    }
+
+    fn next_chunk(&mut self) -> anyhow::Result<Option<DataShard<'_>>> {
+        if self.rows_emitted >= self.rows {
+            return Ok(None);
+        }
+        if self.reader.is_none() {
+            self.reader = Some(BufReader::new(File::open(&self.path)?));
+            self.line_no = 0;
+        }
+        let want = if self.chunk_rows == 0 {
+            self.rows - self.rows_emitted
+        } else {
+            self.chunk_rows.min(self.rows - self.rows_emitted)
+        };
+        let reader = self.reader.as_mut().expect("just ensured");
+        self.buf.clear();
+        let mut got = 0usize;
+        while got < want {
+            self.line.clear();
+            if reader.read_line(&mut self.line)? == 0 {
+                break;
+            }
+            self.line_no += 1;
+            if is_comment(&self.line) || parse_header_token(&self.line).is_some() {
+                continue;
+            }
+            let trimmed = self.line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            let before = self.buf.len();
+            for token in trimmed.split_whitespace() {
+                let v: f32 = token.parse().map_err(|_| ReadError::BadNumber {
+                    line: self.line_no,
+                    token: token.to_string(),
+                })?;
+                self.buf.push(v);
+            }
+            let found = self.buf.len() - before;
+            if found != self.dim {
+                return Err(ReadError::Ragged {
+                    line: self.line_no,
+                    expected: self.dim,
+                    found,
+                }
+                .into());
+            }
+            got += 1;
+        }
+        anyhow::ensure!(
+            got == want,
+            "{}: file shrank between passes: wanted {want} rows, got {got}",
+            self.path.display()
+        );
+        self.rows_emitted += got;
+        let bytes = self.buf.capacity() * std::mem::size_of::<f32>();
+        memtrack::data_buffer_resize(self.reported, bytes);
+        self.reported = bytes;
+        Ok(Some(DataShard::Dense {
+            data: &self.buf,
+            dim: self.dim,
+        }))
+    }
+
+    fn reset(&mut self) -> anyhow::Result<()> {
+        self.reader = None; // reopened lazily on the next chunk
+        self.rows_emitted = 0;
+        self.line_no = 0;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Chunked sparse file source
+// ---------------------------------------------------------------------
+
+/// Streams a libsvm sparse file (like [`crate::io::sparse::read_sparse`])
+/// in windows of `chunk_rows` rows through a reusable windowed CSR.
+pub struct ChunkedSparseFileSource {
+    path: PathBuf,
+    rows: usize,
+    cols: usize,
+    chunk_rows: usize,
+    reader: Option<BufReader<File>>,
+    /// Reusable window; `rows`/`indptr` rebuilt per chunk, `indices`/
+    /// `values` reused.
+    scratch: Csr,
+    line: String,
+    line_no: usize,
+    rows_emitted: usize,
+    /// Bytes currently accounted to the data-buffer gauge.
+    reported: usize,
+}
+
+impl Drop for ChunkedSparseFileSource {
+    fn drop(&mut self) {
+        memtrack::data_buffer_resize(self.reported, 0);
+    }
+}
+
+impl ChunkedSparseFileSource {
+    /// Open `path`, running the dimension/validation pass. `min_cols`
+    /// forces a dimensionality larger than max(index)+1 (same semantics
+    /// as [`crate::io::sparse::read_sparse`]).
+    pub fn open<P: AsRef<Path>>(
+        path: P,
+        min_cols: usize,
+        chunk_rows: usize,
+    ) -> anyhow::Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let mut reader = BufReader::new(File::open(&path)?);
+        let mut line = String::new();
+        let mut rows = 0usize;
+        let mut max_col: Option<usize> = None;
+        let mut line_no = 0usize;
+        loop {
+            line.clear();
+            if reader.read_line(&mut line)? == 0 {
+                break;
+            }
+            line_no += 1;
+            let Some(pairs) = parse_sparse_line(&line, line_no)? else {
+                continue;
+            };
+            for &(c, _) in &pairs {
+                max_col = Some(max_col.map_or(c as usize, |m| m.max(c as usize)));
+            }
+            rows += 1;
+        }
+        anyhow::ensure!(rows > 0, "{}: no data rows found", path.display());
+        let cols = min_cols.max(max_col.map_or(0, |m| m + 1));
+        Ok(ChunkedSparseFileSource {
+            path,
+            rows,
+            cols,
+            chunk_rows,
+            reader: None,
+            scratch: Csr::new_empty(0, cols),
+            line: String::new(),
+            line_no: 0,
+            rows_emitted: 0,
+            reported: 0,
+        })
+    }
+}
+
+impl DataSource for ChunkedSparseFileSource {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn dim(&self) -> usize {
+        self.cols
+    }
+
+    fn chunk_rows(&self) -> usize {
+        self.chunk_rows
+    }
+
+    fn next_chunk(&mut self) -> anyhow::Result<Option<DataShard<'_>>> {
+        if self.rows_emitted >= self.rows {
+            return Ok(None);
+        }
+        if self.reader.is_none() {
+            self.reader = Some(BufReader::new(File::open(&self.path)?));
+            self.line_no = 0;
+        }
+        let want = if self.chunk_rows == 0 {
+            self.rows - self.rows_emitted
+        } else {
+            self.chunk_rows.min(self.rows - self.rows_emitted)
+        };
+        let reader = self.reader.as_mut().expect("just ensured");
+        self.scratch.indices.clear();
+        self.scratch.values.clear();
+        self.scratch.indptr.clear();
+        self.scratch.indptr.push(0);
+        let mut got = 0usize;
+        while got < want {
+            self.line.clear();
+            if reader.read_line(&mut self.line)? == 0 {
+                break;
+            }
+            self.line_no += 1;
+            let Some(pairs) = parse_sparse_line(&self.line, self.line_no)? else {
+                continue;
+            };
+            for (c, v) in pairs {
+                anyhow::ensure!(
+                    (c as usize) < self.cols,
+                    "{}: line {}: column {c} out of range (cols = {}): file \
+                     grew between passes?",
+                    self.path.display(),
+                    self.line_no,
+                    self.cols
+                );
+                self.scratch.indices.push(c);
+                self.scratch.values.push(v);
+            }
+            self.scratch.indptr.push(self.scratch.values.len());
+            got += 1;
+        }
+        anyhow::ensure!(
+            got == want,
+            "{}: file shrank between passes: wanted {want} rows, got {got}",
+            self.path.display()
+        );
+        self.scratch.rows = got;
+        self.rows_emitted += got;
+        let bytes = self.scratch.heap_bytes();
+        memtrack::data_buffer_resize(self.reported, bytes);
+        self.reported = bytes;
+        Ok(Some(DataShard::Sparse(&self.scratch)))
+    }
+
+    fn reset(&mut self) -> anyhow::Result<()> {
+        self.reader = None;
+        self.rows_emitted = 0;
+        self.line_no = 0;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::{dense, sparse as sparse_io};
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("somoclu_stream_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    /// Drain a source into one dense buffer, checking chunk bounds.
+    fn drain_dense(src: &mut dyn DataSource) -> Vec<f32> {
+        let mut out = Vec::new();
+        let mut chunks = 0;
+        while let Some(chunk) = src.next_chunk().unwrap() {
+            let DataShard::Dense { data, dim } = chunk else {
+                panic!("expected dense chunks");
+            };
+            assert_eq!(dim, src.dim());
+            if src.chunk_rows() > 0 {
+                assert!(data.len() / dim <= src.chunk_rows());
+            }
+            out.extend_from_slice(data);
+            chunks += 1;
+        }
+        assert!(chunks >= 1);
+        out
+    }
+
+    fn drain_sparse(src: &mut dyn DataSource) -> Vec<f32> {
+        let mut out = Vec::new();
+        while let Some(chunk) = src.next_chunk().unwrap() {
+            let DataShard::Sparse(m) = chunk else {
+                panic!("expected sparse chunks");
+            };
+            assert_eq!(m.cols, src.dim());
+            out.extend_from_slice(&m.to_dense());
+        }
+        out
+    }
+
+    #[test]
+    fn in_memory_dense_chunks_cover_everything() {
+        let data: Vec<f32> = (0..60).map(|i| i as f32).collect();
+        let shard = DataShard::Dense { data: &data, dim: 4 };
+        for chunk_rows in [0usize, 1, 7, 15, 100] {
+            let mut src = InMemorySource::new(shard, chunk_rows);
+            assert_eq!((src.rows(), src.dim()), (15, 4));
+            assert_eq!(drain_dense(&mut src), data);
+            // Second pass after reset is identical.
+            src.reset().unwrap();
+            assert_eq!(drain_dense(&mut src), data);
+        }
+    }
+
+    #[test]
+    fn in_memory_sparse_chunks_cover_everything() {
+        let mut rng = Rng::new(21);
+        let m = Csr::random(13, 9, 0.3, &mut rng);
+        let whole = m.to_dense();
+        for chunk_rows in [0usize, 1, 5, 13, 50] {
+            let mut src = InMemorySource::new(DataShard::Sparse(&m), chunk_rows);
+            assert_eq!((src.rows(), src.dim()), (13, 9));
+            assert_eq!(drain_sparse(&mut src), whole);
+            src.reset().unwrap();
+            assert_eq!(drain_sparse(&mut src), whole);
+        }
+    }
+
+    #[test]
+    fn in_memory_resident_exposes_whole_shard() {
+        let data = vec![1.0f32; 12];
+        let src = InMemorySource::new(DataShard::Dense { data: &data, dim: 3 }, 2);
+        let resident = src.resident().unwrap();
+        assert_eq!(resident.rows(), 4);
+    }
+
+    #[test]
+    fn dense_file_chunks_match_whole_read() {
+        let mut rng = Rng::new(22);
+        let rows = 23;
+        let dim = 5;
+        let data: Vec<f32> = (0..rows * dim).map(|_| rng.normal_f32()).collect();
+        let path = tmp("chunked_dense.txt");
+        dense::write_dense(&path, rows, dim, &data, true).unwrap();
+        let whole = dense::read_dense(&path).unwrap();
+        for chunk_rows in [0usize, 1, 7, 23, 64] {
+            let mut src = ChunkedDenseFileSource::open(&path, chunk_rows).unwrap();
+            assert_eq!((src.rows(), src.dim()), (rows, dim));
+            assert_eq!(drain_dense(&mut src), whole.data);
+            src.reset().unwrap();
+            assert_eq!(drain_dense(&mut src), whole.data);
+        }
+    }
+
+    #[test]
+    fn dense_file_comments_and_headers_skipped() {
+        let path = tmp("chunked_dense_hdr.txt");
+        std::fs::write(&path, "% 3\n% 2\n# c\n1 2\n\n3 4\n5 6\n").unwrap();
+        let mut src = ChunkedDenseFileSource::open(&path, 2).unwrap();
+        assert_eq!((src.rows(), src.dim()), (3, 2));
+        assert_eq!(drain_dense(&mut src), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn dense_file_header_mismatch_rejected_at_open() {
+        // A headered file declaring more rows than it holds (truncated
+        // copy) must fail exactly like read_dense does.
+        let path = tmp("truncated.txt");
+        std::fs::write(&path, "% 5\n% 2\n1 2\n3 4\n").unwrap();
+        assert!(ChunkedDenseFileSource::open(&path, 2).is_err());
+    }
+
+    #[test]
+    fn dense_file_ragged_rejected_at_open() {
+        let path = tmp("ragged.txt");
+        std::fs::write(&path, "1 2 3\n4 5\n").unwrap();
+        assert!(ChunkedDenseFileSource::open(&path, 4).is_err());
+    }
+
+    #[test]
+    fn dense_file_bad_number_rejected_at_open() {
+        // Corruption anywhere in the file fails before training starts,
+        // like read_dense — not mid-epoch when the chunk is reached.
+        let path = tmp("badnum.txt");
+        std::fs::write(&path, "1 2\n3 nope\n").unwrap();
+        assert!(ChunkedDenseFileSource::open(&path, 1).is_err());
+    }
+
+    #[test]
+    fn dense_file_empty_rejected_at_open() {
+        let path = tmp("empty.txt");
+        std::fs::write(&path, "# nothing\n").unwrap();
+        assert!(ChunkedDenseFileSource::open(&path, 4).is_err());
+    }
+
+    #[test]
+    fn sparse_file_chunks_match_whole_read() {
+        let mut rng = Rng::new(23);
+        let m = Csr::random(17, 11, 0.35, &mut rng);
+        let path = tmp("chunked_sparse.svm");
+        sparse_io::write_sparse(&path, &m).unwrap();
+        let whole = sparse_io::read_sparse(&path, 11).unwrap();
+        for chunk_rows in [0usize, 1, 4, 17, 40] {
+            let mut src = ChunkedSparseFileSource::open(&path, 11, chunk_rows).unwrap();
+            assert_eq!((src.rows(), src.dim()), (whole.rows, 11));
+            assert_eq!(drain_sparse(&mut src), whole.to_dense());
+            src.reset().unwrap();
+            assert_eq!(drain_sparse(&mut src), whole.to_dense());
+        }
+    }
+
+    #[test]
+    fn sparse_file_bad_entry_rejected_at_open() {
+        let path = tmp("bad.svm");
+        std::fs::write(&path, "0:1 nonsense\n").unwrap();
+        assert!(ChunkedSparseFileSource::open(&path, 0, 4).is_err());
+    }
+
+    #[test]
+    fn dense_file_buffer_stays_bounded() {
+        // The acceptance property in miniature: a chunked pass over a
+        // file must report a data buffer of O(chunk_rows * dim), far
+        // below the full matrix.
+        let rows = 400;
+        let dim = 8;
+        let mut rng = Rng::new(24);
+        let data: Vec<f32> = (0..rows * dim).map(|_| rng.f32()).collect();
+        let path = tmp("bounded.txt");
+        dense::write_dense(&path, rows, dim, &data, false).unwrap();
+
+        let chunk_rows = 16;
+        let mut src = ChunkedDenseFileSource::open(&path, chunk_rows).unwrap();
+        let _ = drain_dense(&mut src);
+        // Assert on the source's own buffer (the global gauge is shared
+        // with concurrently running tests): it must hold one window, not
+        // the file.
+        let buf_bytes = src.buf.capacity() * 4;
+        let full = rows * dim * 4;
+        let window = chunk_rows * dim * 4;
+        assert!(buf_bytes >= window, "buffer {buf_bytes} below one window {window}");
+        assert!(
+            buf_bytes <= 4 * window && buf_bytes < full / 4,
+            "buffer {buf_bytes} not bounded by the window (window {window}, full {full})"
+        );
+        // And the gauge must have seen at least one window-sized report.
+        assert!(memtrack::data_buffer_peak() >= window);
+    }
+}

@@ -20,6 +20,10 @@ use crate::som::{Codebook, Grid, MapType, Neighborhood};
 pub struct AccelKernel {
     engine: Engine,
     setup: Option<Setup>,
+    /// Identity of the codebook `epoch_begin` opened an epoch for (see
+    /// `codebook_key`): its device buffer is reused across that epoch's
+    /// chunks. Calls with any other codebook re-upload every time.
+    begin_key: Option<(usize, usize, usize, u64)>,
 }
 
 /// Per-(map, codebook-shape, neighborhood) device state.
@@ -35,6 +39,8 @@ struct Setup {
     coords_buf: xla::PjRtBuffer,
     valid_buf: xla::PjRtBuffer,
     span_buf: xla::PjRtBuffer,
+    /// Device codebook for the current epoch (None = needs upload).
+    cb_buf: Option<xla::PjRtBuffer>,
     /// Reused host staging.
     cb_padded: Vec<f32>,
     data_padded: Vec<f32>,
@@ -46,6 +52,7 @@ impl AccelKernel {
         AccelKernel {
             engine,
             setup: None,
+            begin_key: None,
         }
     }
 
@@ -109,6 +116,7 @@ impl AccelKernel {
             coords_buf,
             valid_buf,
             span_buf,
+            cb_buf: None,
         });
         Ok(())
     }
@@ -117,6 +125,16 @@ impl AccelKernel {
 impl TrainingKernel for AccelKernel {
     fn name(&self) -> &'static str {
         "accel-xla"
+    }
+
+    fn epoch_begin(&mut self, codebook: &Codebook) -> anyhow::Result<()> {
+        // New epoch: invalidate the device copy so the first chunk
+        // re-uploads it, and let later same-codebook chunks reuse it.
+        self.begin_key = Some(crate::kernels::codebook_key(codebook));
+        if let Some(s) = self.setup.as_mut() {
+            s.cb_buf = None;
+        }
+        Ok(())
     }
 
     fn epoch_accumulate(
@@ -147,12 +165,20 @@ impl TrainingKernel for AccelKernel {
         let engine = &mut self.engine;
         let (s_cap, d_pad, n_pad) = (setup.art.s, setup.art.d, setup.art.n);
 
-        // Codebook upload (once per epoch call).
-        for node in 0..setup.nodes {
-            setup.cb_padded[node * d_pad..node * d_pad + dim]
-                .copy_from_slice(codebook.row(node));
+        // Codebook upload (once per epoch; reused across chunks inside an
+        // epoch_begin-scoped epoch for this exact codebook, refreshed per
+        // call otherwise).
+        if self.begin_key != Some(crate::kernels::codebook_key(codebook)) {
+            setup.cb_buf = None;
         }
-        let cb_buf = engine.to_device_f32(&setup.cb_padded, &[n_pad, d_pad])?;
+        if setup.cb_buf.is_none() {
+            for node in 0..setup.nodes {
+                setup.cb_padded[node * d_pad..node * d_pad + dim]
+                    .copy_from_slice(codebook.row(node));
+            }
+            setup.cb_buf =
+                Some(engine.to_device_f32(&setup.cb_padded, &[n_pad, d_pad])?);
+        }
         let radius_buf = engine.to_device_f32(&[radius], &[])?;
         let scale_buf = engine.to_device_f32(&[scale], &[])?;
 
@@ -178,10 +204,11 @@ impl TrainingKernel for AccelKernel {
             let mask_buf = engine.to_device_f32(&setup.mask, &[s_cap])?;
 
             let exe = engine.executable(&exe_file)?;
+            let cb_buf = setup.cb_buf.as_ref().expect("uploaded above");
             let outputs = exe.execute_b(&[
                 &data_buf,
                 &mask_buf,
-                &cb_buf,
+                cb_buf,
                 &setup.coords_buf,
                 &setup.valid_buf,
                 &setup.span_buf,

@@ -24,8 +24,13 @@ use crate::util::threadpool;
 
 pub struct DenseCpuKernel {
     pub threads: usize,
-    /// Cached ||w_n||² (recomputed when the codebook changes).
+    /// Cached ||w_n||² (refreshed in `epoch_begin`, or per call when the
+    /// kernel is driven without it).
     w2: Vec<f32>,
+    /// Identity of the codebook `w2` was hoisted for by `epoch_begin`
+    /// (see `codebook_key`); chunk calls with any other codebook
+    /// recompute per call.
+    prepared_for: Option<(usize, usize, usize, u64)>,
 }
 
 impl DenseCpuKernel {
@@ -33,6 +38,7 @@ impl DenseCpuKernel {
         DenseCpuKernel {
             threads: threads.max(1),
             w2: Vec::new(),
+            prepared_for: None,
         }
     }
 
@@ -318,6 +324,12 @@ impl TrainingKernel for DenseCpuKernel {
         "dense-cpu"
     }
 
+    fn epoch_begin(&mut self, codebook: &Codebook) -> anyhow::Result<()> {
+        self.w2 = codebook.sq_norms();
+        self.prepared_for = Some(crate::kernels::codebook_key(codebook));
+        Ok(())
+    }
+
     fn epoch_accumulate(
         &mut self,
         shard: DataShard<'_>,
@@ -337,7 +349,9 @@ impl TrainingKernel for DenseCpuKernel {
         );
         let rows = data.len() / dim;
 
-        self.w2 = codebook.sq_norms();
+        if self.prepared_for != Some(crate::kernels::codebook_key(codebook)) {
+            self.w2 = codebook.sq_norms();
+        }
         let (bmus, dists) = self.search_bmus(data, dim, codebook, &self.w2);
         let qe_sum: f64 = dists.iter().map(|d| (*d as f64).sqrt()).sum();
 

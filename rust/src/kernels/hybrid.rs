@@ -21,6 +21,10 @@ pub struct HybridKernel {
     /// the paper's pick) or "direct" (ablation baseline).
     pub variant: &'static str,
     setup: Option<Setup>,
+    /// Identity of the codebook `epoch_begin` opened an epoch for (see
+    /// `codebook_key`): its device buffer is reused across that epoch's
+    /// chunks. Calls with any other codebook re-upload every time.
+    begin_key: Option<(usize, usize, usize, u64)>,
 }
 
 struct Setup {
@@ -31,6 +35,8 @@ struct Setup {
     nodes: usize,
     dim: usize,
     valid_buf: xla::PjRtBuffer,
+    /// Device codebook for the current epoch (None = needs upload).
+    cb_buf: Option<xla::PjRtBuffer>,
     cb_padded: Vec<f32>,
     data_padded: Vec<f32>,
 }
@@ -42,6 +48,7 @@ impl HybridKernel {
             threads: threads.max(1),
             variant: "gram",
             setup: None,
+            begin_key: None,
         }
     }
 
@@ -76,6 +83,7 @@ impl HybridKernel {
             nodes,
             dim,
             valid_buf,
+            cb_buf: None,
         });
         Ok(())
     }
@@ -84,6 +92,16 @@ impl HybridKernel {
 impl TrainingKernel for HybridKernel {
     fn name(&self) -> &'static str {
         "hybrid-xla-cpu"
+    }
+
+    fn epoch_begin(&mut self, codebook: &Codebook) -> anyhow::Result<()> {
+        // New epoch: invalidate the device copy so the first chunk
+        // re-uploads it, and let later same-codebook chunks reuse it.
+        self.begin_key = Some(crate::kernels::codebook_key(codebook));
+        if let Some(s) = self.setup.as_mut() {
+            s.cb_buf = None;
+        }
+        Ok(())
     }
 
     fn epoch_accumulate(
@@ -105,12 +123,20 @@ impl TrainingKernel for HybridKernel {
         let engine = &mut self.engine;
         let (s_cap, d_pad) = (setup.s, setup.d);
 
-        // --- Accelerator phase: BMU search per chunk.
-        for node in 0..setup.nodes {
-            setup.cb_padded[node * d_pad..node * d_pad + dim]
-                .copy_from_slice(codebook.row(node));
+        // --- Accelerator phase: BMU search per device batch.
+        // Reuse the device codebook only within an epoch_begin-scoped
+        // epoch for this exact codebook; otherwise re-upload per call.
+        if self.begin_key != Some(crate::kernels::codebook_key(codebook)) {
+            setup.cb_buf = None;
         }
-        let cb_buf = engine.to_device_f32(&setup.cb_padded, &[setup.n, d_pad])?;
+        if setup.cb_buf.is_none() {
+            for node in 0..setup.nodes {
+                setup.cb_padded[node * d_pad..node * d_pad + dim]
+                    .copy_from_slice(codebook.row(node));
+            }
+            setup.cb_buf =
+                Some(engine.to_device_f32(&setup.cb_padded, &[setup.n, d_pad])?);
+        }
 
         let mut bmus: Vec<u32> = Vec::with_capacity(rows);
         let mut qe_sum = 0.0f64;
@@ -126,7 +152,8 @@ impl TrainingKernel for HybridKernel {
             }
             let data_buf = engine.to_device_f32(&setup.data_padded, &[s_cap, d_pad])?;
             let exe = engine.executable(&setup.file)?;
-            let parts = untuple(exe.execute_b(&[&data_buf, &cb_buf, &setup.valid_buf])?)?;
+            let cb_buf = setup.cb_buf.as_ref().expect("uploaded above");
+            let parts = untuple(exe.execute_b(&[&data_buf, cb_buf, &setup.valid_buf])?)?;
             anyhow::ensure!(parts.len() == 2, "expected 2 outputs");
             let best = parts[0].to_vec::<f32>()?;
             let idx = parts[1].to_vec::<i32>()?;

@@ -37,6 +37,25 @@ impl std::str::FromStr for KernelType {
     }
 }
 
+/// Cache key for a codebook: (weights pointer, nodes, dim, sampled
+/// content fingerprint). Kernels use it to decide whether an
+/// `epoch_begin` cache belongs to the codebook a chunk call passes in.
+/// The fingerprint (FNV over ≤64 strided weights) defeats the
+/// allocator-reuse trap where a dropped codebook's address is recycled
+/// by a new same-shape one: a different codebook then mismatches with
+/// overwhelming probability and the kernel falls back to recomputing.
+pub(crate) fn codebook_key(cb: &Codebook) -> (usize, usize, usize, u64) {
+    let w = &cb.weights;
+    let step = (w.len() / 64).max(1);
+    let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV-1a offset basis
+    let mut i = 0;
+    while i < w.len() {
+        h = (h ^ w[i].to_bits() as u64).wrapping_mul(0x100_0000_01b3);
+        i += step;
+    }
+    (w.as_ptr() as usize, cb.nodes, cb.dim, h)
+}
+
 /// A shard of training data, dense or sparse.
 #[derive(Copy, Clone, Debug)]
 pub enum DataShard<'a> {
@@ -98,9 +117,27 @@ impl EpochAccum {
 }
 
 /// One epoch-step of a training kernel over a shard.
+///
+/// With the streaming pipeline (io::stream) a `shard` is one bounded
+/// *chunk* of the epoch's data: the coordinator calls [`Self::epoch_begin`]
+/// once per epoch, then [`Self::epoch_accumulate`] per chunk, merging the
+/// partial accumulators with [`EpochAccum::merge`] and concatenating BMUs
+/// in chunk order.
 pub trait TrainingKernel {
     /// Human-readable kernel name for reports.
     fn name(&self) -> &'static str;
+
+    /// Hoist per-epoch work (codebook norm caches, transposes, device
+    /// uploads) before a chunk loop. The cache is keyed by codebook
+    /// identity (buffer pointer + shape): `epoch_accumulate` uses it only
+    /// when called with the same codebook object, and recomputes per call
+    /// otherwise (the pre-streaming behavior), so mixing begin-scoped and
+    /// begin-less calls is safe. One caveat: mutating the codebook buffer
+    /// *in place* does not change its identity — do what the coordinator
+    /// does and call `epoch_begin` again after every update.
+    fn epoch_begin(&mut self, _codebook: &Codebook) -> anyhow::Result<()> {
+        Ok(())
+    }
 
     /// Compute BMUs + Eq. 6 accumulators for `shard` against `codebook`.
     fn epoch_accumulate(

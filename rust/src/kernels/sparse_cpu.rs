@@ -25,6 +25,12 @@ pub struct SparseCpuKernel {
     /// the sparse search. Costs one extra codebook copy, which the
     /// sparse kernel's 20-100x data savings dwarfs.
     wt: Vec<f32>,
+    /// Cached ||w_n||², refreshed together with `wt`.
+    w2: Vec<f32>,
+    /// Identity of the codebook `wt`/`w2` were hoisted for by
+    /// `epoch_begin` (see `codebook_key`); chunk calls with any other
+    /// codebook rebuild per call.
+    prepared_for: Option<(usize, usize, usize, u64)>,
 }
 
 impl SparseCpuKernel {
@@ -32,6 +38,22 @@ impl SparseCpuKernel {
         SparseCpuKernel {
             threads: threads.max(1),
             wt: Vec::new(),
+            w2: Vec::new(),
+            prepared_for: None,
+        }
+    }
+
+    /// Rebuild the per-epoch codebook caches: ||w||² and the [dim x
+    /// nodes] transpose.
+    fn prepare(&mut self, codebook: &Codebook) {
+        self.w2 = codebook.sq_norms();
+        let (dim, nodes) = (codebook.dim, codebook.nodes);
+        self.wt.resize(dim * nodes, 0.0);
+        for n in 0..nodes {
+            let row = codebook.row(n);
+            for (c, &v) in row.iter().enumerate() {
+                self.wt[c * nodes + n] = v;
+            }
         }
     }
 }
@@ -49,6 +71,12 @@ fn axpy(scores: &mut [f32], v: f32, col: &[f32]) {
 impl TrainingKernel for SparseCpuKernel {
     fn name(&self) -> &'static str {
         "sparse-cpu"
+    }
+
+    fn epoch_begin(&mut self, codebook: &Codebook) -> anyhow::Result<()> {
+        self.prepare(codebook);
+        self.prepared_for = Some(crate::kernels::codebook_key(codebook));
+        Ok(())
     }
 
     fn epoch_accumulate(
@@ -70,19 +98,14 @@ impl TrainingKernel for SparseCpuKernel {
             codebook.dim
         );
 
-        let w2 = codebook.sq_norms();
+        if self.prepared_for != Some(crate::kernels::codebook_key(codebook)) {
+            // Not the epoch_begin codebook: rebuild the caches per call.
+            self.prepare(codebook);
+        }
         let x2 = m.row_sq_norms();
         let dim = codebook.dim;
         let nodes = codebook.nodes;
-
-        // Transpose the codebook once per epoch call: [dim x nodes].
-        self.wt.resize(dim * nodes, 0.0);
-        for n in 0..nodes {
-            let row = codebook.row(n);
-            for (c, &v) in row.iter().enumerate() {
-                self.wt[c * nodes + n] = v;
-            }
-        }
+        let w2 = &self.w2;
         let wt = &self.wt;
 
         // --- BMU search, row-parallel over the shared (transposed)

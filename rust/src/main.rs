@@ -5,9 +5,9 @@
 
 use somoclu::cli;
 use somoclu::cluster::runner::{train_cluster, ClusterData};
-use somoclu::coordinator::train::train;
+use somoclu::coordinator::train::{train, train_stream};
 use somoclu::io::output::OutputWriter;
-use somoclu::io::{read_dense, read_sparse};
+use somoclu::io::{read_dense, read_sparse, ChunkedDenseFileSource, ChunkedSparseFileSource, DataSource};
 use somoclu::kernels::{DataShard, KernelType};
 use somoclu::som::Codebook;
 
@@ -62,8 +62,41 @@ fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
         None => None,
     };
 
+    if cfg.ranks > 1 && cfg.chunk_rows > 0 {
+        eprintln!(
+            "note: --chunk-rows with --ranks still loads the full input and \
+             shards it in memory; each rank then streams its shard in \
+             {}-row windows (file-backed rank streaming is a ROADMAP item)",
+            cfg.chunk_rows
+        );
+    }
+
     let t0 = std::time::Instant::now();
-    let result = if cfg.kernel == KernelType::SparseCpu {
+    let result = if cfg.ranks == 1 && cfg.chunk_rows > 0 {
+        // Out-of-core path: never materialize the full data set — the
+        // file is re-parsed per epoch in `--chunk-rows` windows, capping
+        // data memory at O(chunk_rows * dim).
+        if cfg.kernel == KernelType::SparseCpu {
+            let mut src =
+                ChunkedSparseFileSource::open(&opts.input_file, 0, cfg.chunk_rows)?;
+            eprintln!(
+                "streaming sparse input: {} rows x {} dims in {}-row chunks",
+                src.rows(),
+                src.dim(),
+                cfg.chunk_rows
+            );
+            train_stream(cfg, &mut src, initial, Some(&writer))?
+        } else {
+            let mut src = ChunkedDenseFileSource::open(&opts.input_file, cfg.chunk_rows)?;
+            eprintln!(
+                "streaming dense input: {} rows x {} dims in {}-row chunks",
+                src.rows(),
+                src.dim(),
+                cfg.chunk_rows
+            );
+            train_stream(cfg, &mut src, initial, Some(&writer))?
+        }
+    } else if cfg.kernel == KernelType::SparseCpu {
         let m = read_sparse(&opts.input_file, 0)?;
         eprintln!(
             "loaded sparse input: {} rows x {} dims, {:.2}% nonzero",
@@ -142,6 +175,11 @@ fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
         },
         t0.elapsed(),
         result.final_qe()
+    );
+    eprintln!(
+        "peak data-buffer memory: {} (heap peak {})",
+        somoclu::util::memtrack::fmt_bytes(somoclu::util::memtrack::data_buffer_peak()),
+        somoclu::util::memtrack::fmt_bytes(somoclu::util::memtrack::peak_bytes()),
     );
     eprintln!(
         "wrote {p}.wts, {p}.bm, {p}.umx",

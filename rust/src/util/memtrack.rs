@@ -100,6 +100,64 @@ impl MemRegion {
     }
 }
 
+// ---------------------------------------------------------------------
+// Data-buffer gauge (out-of-core streaming, io::stream).
+//
+// The allocator counters above see *everything*; the streaming claim in
+// the paper ("memory use is highly optimized, enabling training large
+// emergent maps even on a single computer") is specifically about the
+// *training-data* working set. Each `DataSource` reports its resident
+// buffer size here after every chunk, so benches and tests can assert
+// peak data-buffer bytes stay O(chunk_rows * dim) instead of
+// O(rows * dim), independent of codebook/accumulator allocations.
+
+static DATA_BUF_LIVE: AtomicUsize = AtomicUsize::new(0);
+static DATA_BUF_PEAK: AtomicUsize = AtomicUsize::new(0);
+
+/// Adjust the gauge for one source whose resident buffer changed from
+/// `old_bytes` to `new_bytes`. The gauge is *additive* across sources
+/// (each cluster rank's source contributes its own share), so callers
+/// must pass their previous report as `old_bytes` and release with
+/// `(reported, 0)` when dropped — the `DataSource` implementations do
+/// both.
+pub fn data_buffer_resize(old_bytes: usize, new_bytes: usize) {
+    let live = if new_bytes >= old_bytes {
+        let d = new_bytes - old_bytes;
+        DATA_BUF_LIVE.fetch_add(d, Ordering::Relaxed) + d
+    } else {
+        let d = old_bytes - new_bytes;
+        DATA_BUF_LIVE.fetch_sub(d, Ordering::Relaxed).saturating_sub(d)
+    };
+    let mut peak = DATA_BUF_PEAK.load(Ordering::Relaxed);
+    while live > peak {
+        match DATA_BUF_PEAK.compare_exchange_weak(
+            peak,
+            live,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        ) {
+            Ok(_) => break,
+            Err(p) => peak = p,
+        }
+    }
+}
+
+/// Currently resident data-buffer bytes, summed over live sources.
+pub fn data_buffer_bytes() -> usize {
+    DATA_BUF_LIVE.load(Ordering::Relaxed)
+}
+
+/// High-water mark of resident data-buffer bytes since the last reset.
+pub fn data_buffer_peak() -> usize {
+    DATA_BUF_PEAK.load(Ordering::Relaxed)
+}
+
+/// Start a fresh data-buffer measurement region: the peak restarts from
+/// the currently live total (sources may still be alive).
+pub fn reset_data_buffer_peak() {
+    DATA_BUF_PEAK.store(DATA_BUF_LIVE.load(Ordering::Relaxed), Ordering::Relaxed);
+}
+
 /// Pretty-printer for byte counts in reports.
 pub fn fmt_bytes(b: usize) -> String {
     const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
@@ -138,6 +196,17 @@ mod tests {
             let _v: Vec<u64> = vec![0; 1 << 18]; // 2 MiB
         }
         assert!(region.peak_delta() >= (1 << 18) * 8);
+    }
+
+    #[test]
+    fn data_buffer_gauge_tracks_peak() {
+        // The gauge is global and other tests in this binary may adjust
+        // concurrently, so assert only monotone facts.
+        data_buffer_resize(0, 4096);
+        assert!(data_buffer_peak() >= 4096);
+        data_buffer_resize(4096, 512); // shrink this source's buffer
+        data_buffer_resize(512, 0); // drop it
+        assert!(data_buffer_peak() >= 4096); // peak survives release
     }
 
     #[test]

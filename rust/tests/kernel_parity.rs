@@ -1,0 +1,288 @@
+//! Cross-kernel parity — the equivalence the paper's `-k` switch
+//! implies: on identical data (densified for the sparse kernel),
+//! `DenseCpu`, `SparseCpu`, and `Hybrid` must produce identical BMUs and
+//! Eq. 6 accumulators within 1e-4, both for a single accumulation pass
+//! and across a full training run.
+//!
+//! The hybrid comparison needs the AOT artifacts (`make artifacts`) and a
+//! real xla-rs binding; it skips with a message otherwise, exactly like
+//! the existing accel integration tests.
+
+use somoclu::coordinator::config::TrainConfig;
+use somoclu::coordinator::train::train;
+use somoclu::data;
+use somoclu::kernels::dense_cpu::DenseCpuKernel;
+use somoclu::kernels::sparse_cpu::SparseCpuKernel;
+use somoclu::kernels::{DataShard, EpochAccum, KernelType, TrainingKernel};
+use somoclu::som::{Codebook, Grid, GridType, MapType, Neighborhood};
+use somoclu::sparse::Csr;
+use somoclu::util::rng::Rng;
+
+const TOL: f32 = 1e-4;
+
+fn blob_setup(
+    rows: usize,
+    dim: usize,
+    side: usize,
+    seed: u64,
+) -> (Grid, Codebook, Vec<f32>, Csr) {
+    let mut rng = Rng::new(seed);
+    let (dense, _) = data::gaussian_blobs(rows, dim, 4, 0.2, &mut rng);
+    let grid = Grid::new(side, side, GridType::Square, MapType::Planar);
+    let cb = Codebook::random_init(grid.node_count(), dim, &mut rng);
+    // Densified-for-sparse: every |v| > 0 entry becomes a CSR nonzero, so
+    // both kernels see the same vectors.
+    let csr = Csr::from_dense(&dense, rows, dim, 0.0);
+    (grid, cb, dense, csr)
+}
+
+fn assert_parity(name: &str, a: &EpochAccum, b: &EpochAccum, tol: f32) {
+    assert_eq!(a.bmus, b.bmus, "{name}: BMUs diverge");
+    assert!(
+        (a.qe_sum - b.qe_sum).abs() < tol as f64 * a.bmus.len().max(1) as f64,
+        "{name}: qe {} vs {}",
+        a.qe_sum,
+        b.qe_sum
+    );
+    for (i, (x, y)) in a.num.iter().zip(&b.num).enumerate() {
+        assert!((x - y).abs() < tol, "{name}: num[{i}] {x} vs {y}");
+    }
+    for (i, (x, y)) in a.den.iter().zip(&b.den).enumerate() {
+        assert!((x - y).abs() < tol, "{name}: den[{i}] {x} vs {y}");
+    }
+}
+
+#[test]
+fn dense_and_sparse_accumulate_identically() {
+    let (grid, cb, dense, csr) = blob_setup(120, 24, 7, 71);
+    for nb in [
+        Neighborhood::gaussian(false),
+        Neighborhood::gaussian(true),
+        Neighborhood::bubble(),
+    ] {
+        let a = DenseCpuKernel::new(3)
+            .epoch_accumulate(
+                DataShard::Dense {
+                    data: &dense,
+                    dim: 24,
+                },
+                &cb,
+                &grid,
+                nb,
+                3.0,
+                0.9,
+            )
+            .unwrap();
+        let b = SparseCpuKernel::new(3)
+            .epoch_accumulate(DataShard::Sparse(&csr), &cb, &grid, nb, 3.0, 0.9)
+            .unwrap();
+        assert_parity("dense-vs-sparse", &a, &b, TOL);
+    }
+}
+
+#[test]
+fn dense_and_sparse_full_training_runs_agree() {
+    let (_, _, dense, csr) = blob_setup(100, 16, 6, 72);
+    let mk = |kernel| TrainConfig {
+        rows: 6,
+        cols: 6,
+        epochs: 6,
+        kernel,
+        threads: 2,
+        radius0: Some(3.0),
+        ..Default::default()
+    };
+    let a = train(
+        &mk(KernelType::DenseCpu),
+        DataShard::Dense {
+            data: &dense,
+            dim: 16,
+        },
+        None,
+        None,
+    )
+    .unwrap();
+    let b = train(
+        &mk(KernelType::SparseCpu),
+        DataShard::Sparse(&csr),
+        None,
+        None,
+    )
+    .unwrap();
+    assert_eq!(a.bmus, b.bmus);
+    for (i, (x, y)) in a
+        .codebook
+        .weights
+        .iter()
+        .zip(&b.codebook.weights)
+        .enumerate()
+    {
+        assert!((x - y).abs() < TOL, "weights[{i}]: {x} vs {y}");
+    }
+    assert!(
+        (a.final_qe() - b.final_qe()).abs() < TOL as f64,
+        "QE {} vs {}",
+        a.final_qe(),
+        b.final_qe()
+    );
+}
+
+#[test]
+fn epoch_begin_does_not_change_results() {
+    // The per-epoch cache hoist (epoch_begin) must be observationally
+    // identical to the recompute-per-call path, for both CPU kernels.
+    let (grid, cb, dense, csr) = blob_setup(60, 12, 5, 73);
+    let nb = Neighborhood::gaussian(false);
+
+    let mut plain = DenseCpuKernel::new(2);
+    let without = plain
+        .epoch_accumulate(
+            DataShard::Dense {
+                data: &dense,
+                dim: 12,
+            },
+            &cb,
+            &grid,
+            nb,
+            2.0,
+            1.0,
+        )
+        .unwrap();
+    let mut primed = DenseCpuKernel::new(2);
+    primed.epoch_begin(&cb).unwrap();
+    let with = primed
+        .epoch_accumulate(
+            DataShard::Dense {
+                data: &dense,
+                dim: 12,
+            },
+            &cb,
+            &grid,
+            nb,
+            2.0,
+            1.0,
+        )
+        .unwrap();
+    assert_eq!(without.bmus, with.bmus);
+    assert_eq!(without.num, with.num);
+    assert_eq!(without.den, with.den);
+
+    let mut plain = SparseCpuKernel::new(2);
+    let without = plain
+        .epoch_accumulate(DataShard::Sparse(&csr), &cb, &grid, nb, 2.0, 1.0)
+        .unwrap();
+    let mut primed = SparseCpuKernel::new(2);
+    primed.epoch_begin(&cb).unwrap();
+    let with = primed
+        .epoch_accumulate(DataShard::Sparse(&csr), &cb, &grid, nb, 2.0, 1.0)
+        .unwrap();
+    assert_eq!(without.bmus, with.bmus);
+    assert_eq!(without.num, with.num);
+    assert_eq!(without.den, with.den);
+}
+
+#[test]
+fn epoch_begin_cache_is_keyed_by_codebook_identity() {
+    // epoch_begin(cb1) followed by epoch_accumulate(cb2) must not use
+    // cb1's hoisted caches: the result has to match a fresh kernel.
+    let (grid, cb1, dense, csr) = blob_setup(50, 8, 5, 75);
+    let mut rng = Rng::new(76);
+    let cb2 = Codebook::random_init(grid.node_count(), 8, &mut rng);
+    let nb = Neighborhood::gaussian(false);
+
+    let mut stale = DenseCpuKernel::new(2);
+    stale.epoch_begin(&cb1).unwrap();
+    let got = stale
+        .epoch_accumulate(
+            DataShard::Dense {
+                data: &dense,
+                dim: 8,
+            },
+            &cb2,
+            &grid,
+            nb,
+            2.0,
+            1.0,
+        )
+        .unwrap();
+    let want = DenseCpuKernel::new(2)
+        .epoch_accumulate(
+            DataShard::Dense {
+                data: &dense,
+                dim: 8,
+            },
+            &cb2,
+            &grid,
+            nb,
+            2.0,
+            1.0,
+        )
+        .unwrap();
+    assert_eq!(got.bmus, want.bmus);
+    assert_eq!(got.num, want.num);
+
+    let mut stale = SparseCpuKernel::new(2);
+    stale.epoch_begin(&cb1).unwrap();
+    let got = stale
+        .epoch_accumulate(DataShard::Sparse(&csr), &cb2, &grid, nb, 2.0, 1.0)
+        .unwrap();
+    let want = SparseCpuKernel::new(2)
+        .epoch_accumulate(DataShard::Sparse(&csr), &cb2, &grid, nb, 2.0, 1.0)
+        .unwrap();
+    assert_eq!(got.bmus, want.bmus);
+    assert_eq!(got.num, want.num);
+}
+
+/// Hybrid (accel BMU + CPU update) against the dense CPU kernel. Needs
+/// AOT artifacts and a real PJRT binding; skips otherwise.
+#[test]
+fn hybrid_parity_with_cpu_kernels() {
+    if !somoclu::runtime::Manifest::default_dir()
+        .join("manifest.json")
+        .exists()
+    {
+        eprintln!("skipping: run `make artifacts` (and link real xla-rs) first");
+        return;
+    }
+    let (grid, cb, dense, csr) = blob_setup(90, 10, 6, 74);
+    let nb = Neighborhood::gaussian(false);
+    let want = DenseCpuKernel::new(2)
+        .epoch_accumulate(
+            DataShard::Dense {
+                data: &dense,
+                dim: 10,
+            },
+            &cb,
+            &grid,
+            nb,
+            2.5,
+            0.8,
+        )
+        .unwrap();
+    let sparse = SparseCpuKernel::new(2)
+        .epoch_accumulate(DataShard::Sparse(&csr), &cb, &grid, nb, 2.5, 0.8)
+        .unwrap();
+    assert_parity("dense-vs-sparse", &want, &sparse, TOL);
+
+    let mut hybrid = match somoclu::kernels::hybrid::HybridKernel::from_env(2) {
+        Ok(k) => k,
+        Err(e) => {
+            eprintln!("skipping hybrid parity: {e:#}");
+            return;
+        }
+    };
+    let got = hybrid
+        .epoch_accumulate(
+            DataShard::Dense {
+                data: &dense,
+                dim: 10,
+            },
+            &cb,
+            &grid,
+            nb,
+            2.5,
+            0.8,
+        )
+        .unwrap();
+    assert_parity("hybrid-vs-dense", &got, &want, TOL);
+}

@@ -2,6 +2,7 @@
 //! round-trips, schedule/geometry invariants, kernel equivalences and
 //! collective algebra under random inputs.
 
+use somoclu::io::stream::{DataSource, InMemorySource};
 use somoclu::io::{dense, sparse as sparse_io};
 use somoclu::kernels::dense_cpu::DenseCpuKernel;
 use somoclu::kernels::sparse_cpu::SparseCpuKernel;
@@ -128,6 +129,258 @@ fn prop_sparse_dense_kernels_agree() {
             }
             for (x, y) in a.den.iter().zip(&b.den) {
                 prop_assert!((x - y).abs() < 1e-2, "den {x} vs {y}");
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The coordinator's chunk loop, reproduced standalone: fold every chunk
+/// of `source` into one accumulator, reassembling BMUs in chunk order.
+fn accumulate_streamed(
+    kernel: &mut dyn TrainingKernel,
+    source: &mut dyn DataSource,
+    cb: &Codebook,
+    grid: &Grid,
+    nb: Neighborhood,
+    radius: f32,
+    scale: f32,
+) -> Result<EpochAccum, String> {
+    kernel.epoch_begin(cb).map_err(|e| e.to_string())?;
+    source.reset().map_err(|e| e.to_string())?;
+    let mut accum = EpochAccum::zeros(cb.nodes, cb.dim, 0);
+    let mut bmus = Vec::with_capacity(source.rows());
+    while let Some(chunk) = source.next_chunk().map_err(|e| e.to_string())? {
+        let part = kernel
+            .epoch_accumulate(chunk, cb, grid, nb, radius, scale)
+            .map_err(|e| e.to_string())?;
+        bmus.extend_from_slice(&part.bmus);
+        accum.merge(&part);
+    }
+    accum.bmus = bmus;
+    Ok(accum)
+}
+
+fn accum_close(
+    name: &str,
+    a: &EpochAccum,
+    b: &EpochAccum,
+    tol: f32,
+) -> Result<(), String> {
+    prop_assert!(a.bmus == b.bmus, "{name}: bmus differ");
+    prop_assert!(
+        (a.qe_sum - b.qe_sum).abs() < 1e-6 * a.qe_sum.abs().max(1.0),
+        "{name}: qe {} vs {}",
+        a.qe_sum,
+        b.qe_sum
+    );
+    for (i, (x, y)) in a.num.iter().zip(&b.num).enumerate() {
+        prop_assert!(
+            (x - y).abs() < tol + tol * y.abs(),
+            "{name}: num[{i}] {x} vs {y}"
+        );
+    }
+    for (i, (x, y)) in a.den.iter().zip(&b.den).enumerate() {
+        prop_assert!(
+            (x - y).abs() < tol + tol * y.abs(),
+            "{name}: den[{i}] {x} vs {y}"
+        );
+    }
+    Ok(())
+}
+
+/// Chunking equivalence: for random rows/dim and chunk sizes {1, 7,
+/// rows}, streaming accumulation over an in-memory source equals the
+/// whole-shard pass — BMUs bit-for-bit (the BMU of a row depends only on
+/// the row and the codebook), accumulators exactly for the single-chunk
+/// pass and within f32-reassociation tolerance for real chunking (f32
+/// addition is not associative, so regrouped partial sums may differ in
+/// the last ulps; the training-level guarantee is the ±1e-4 QE bound).
+#[test]
+fn prop_chunked_dense_accumulation_matches_whole_shard() {
+    prop::check_with(
+        Config {
+            cases: 20,
+            ..Default::default()
+        },
+        "chunking-equivalence-dense",
+        |g| {
+            let mut rng = Rng::new(g.rng.next_u64());
+            let side = g.usize_in(2, 6);
+            let dim = g.usize_in(1, 16);
+            let rows = g.usize_in(2, 48);
+            let radius = g.f32_in(0.5, side as f32);
+            let grid = Grid::new(side, side, GridType::Square, MapType::Planar);
+            let cb = Codebook::random_init(grid.node_count(), dim, &mut rng);
+            let data: Vec<f32> = (0..rows * dim).map(|_| rng.normal_f32()).collect();
+            let shard = DataShard::Dense { data: &data, dim };
+            let nb = Neighborhood::gaussian(false);
+
+            let whole = DenseCpuKernel::new(2)
+                .epoch_accumulate(shard, &cb, &grid, nb, radius, 0.9)
+                .map_err(|e| e.to_string())?;
+
+            for chunk_rows in [1usize, 7, rows] {
+                let mut kernel = DenseCpuKernel::new(2);
+                let mut src = InMemorySource::new(shard, chunk_rows);
+                let streamed = accumulate_streamed(
+                    &mut kernel, &mut src, &cb, &grid, nb, radius, 0.9,
+                )?;
+                if chunk_rows >= rows {
+                    // Single chunk merged into zeros: numerically exact.
+                    prop_assert!(streamed.bmus == whole.bmus, "single-chunk bmus");
+                    prop_assert!(streamed.num == whole.num, "single-chunk num");
+                    prop_assert!(streamed.den == whole.den, "single-chunk den");
+                } else {
+                    accum_close(
+                        &format!("chunk_rows={chunk_rows}"),
+                        &streamed,
+                        &whole,
+                        5e-4,
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_chunked_sparse_accumulation_matches_whole_shard() {
+    prop::check_with(
+        Config {
+            cases: 15,
+            ..Default::default()
+        },
+        "chunking-equivalence-sparse",
+        |g| {
+            let mut rng = Rng::new(g.rng.next_u64());
+            let side = g.usize_in(2, 5);
+            let dim = g.usize_in(2, 20);
+            let rows = g.usize_in(2, 40);
+            let grid = Grid::new(side, side, GridType::Square, MapType::Planar);
+            let cb = Codebook::random_init(grid.node_count(), dim, &mut rng);
+            let m = Csr::random(rows, dim, 0.3, &mut rng);
+            let nb = Neighborhood::gaussian(false);
+
+            let whole = SparseCpuKernel::new(2)
+                .epoch_accumulate(DataShard::Sparse(&m), &cb, &grid, nb, 1.8, 1.0)
+                .map_err(|e| e.to_string())?;
+            for chunk_rows in [1usize, 7, rows] {
+                let mut kernel = SparseCpuKernel::new(2);
+                let mut src = InMemorySource::new(DataShard::Sparse(&m), chunk_rows);
+                let streamed = accumulate_streamed(
+                    &mut kernel, &mut src, &cb, &grid, nb, 1.8, 1.0,
+                )?;
+                if chunk_rows >= rows {
+                    prop_assert!(streamed.bmus == whole.bmus, "single-chunk bmus");
+                    prop_assert!(streamed.num == whole.num, "single-chunk num");
+                    prop_assert!(streamed.den == whole.den, "single-chunk den");
+                } else {
+                    accum_close(
+                        &format!("chunk_rows={chunk_rows}"),
+                        &streamed,
+                        &whole,
+                        5e-4,
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// `EpochAccum::merge` over random row splits of real kernel output:
+/// merging the per-part accumulators must be order-insensitive
+/// (commutative + associative up to f32 reassociation) and must agree
+/// with the whole-shard pass; concatenated BMUs are exact.
+#[test]
+fn prop_merge_of_random_splits_matches_whole() {
+    prop::check_with(
+        Config {
+            cases: 15,
+            ..Default::default()
+        },
+        "merge-random-splits",
+        |g| {
+            let mut rng = Rng::new(g.rng.next_u64());
+            let dim = g.usize_in(1, 10);
+            let rows = g.usize_in(3, 40);
+            let grid = Grid::new(4, 4, GridType::Square, MapType::Planar);
+            let cb = Codebook::random_init(16, dim, &mut rng);
+            let data: Vec<f32> = (0..rows * dim).map(|_| rng.normal_f32()).collect();
+            let nb = Neighborhood::gaussian(false);
+            let mut kernel = DenseCpuKernel::new(1);
+
+            // Random contiguous split into 2..=4 parts.
+            let parts = g.usize_in(2, 4.min(rows));
+            let mut cuts = vec![0usize, rows];
+            for _ in 0..parts - 1 {
+                cuts.push(g.usize_in(1, rows - 1));
+            }
+            cuts.sort_unstable();
+            cuts.dedup();
+
+            let mut accums: Vec<EpochAccum> = Vec::new();
+            for w in cuts.windows(2) {
+                let part = DataShard::Dense {
+                    data: &data[w[0] * dim..w[1] * dim],
+                    dim,
+                };
+                accums.push(
+                    kernel
+                        .epoch_accumulate(part, &cb, &grid, nb, 2.0, 1.0)
+                        .map_err(|e| e.to_string())?,
+                );
+            }
+            let whole = kernel
+                .epoch_accumulate(
+                    DataShard::Dense { data: &data, dim },
+                    &cb,
+                    &grid,
+                    nb,
+                    2.0,
+                    1.0,
+                )
+                .map_err(|e| e.to_string())?;
+
+            // Forward merge == whole (+ BMU concatenation).
+            let mut forward = EpochAccum::zeros(cb.nodes, dim, 0);
+            let mut bmus = Vec::new();
+            for a in &accums {
+                bmus.extend_from_slice(&a.bmus);
+                forward.merge(a);
+            }
+            forward.bmus = bmus;
+            accum_close("forward", &forward, &whole, 5e-4)?;
+
+            // Reverse merge order: commutativity of the reduction.
+            let mut reverse = EpochAccum::zeros(cb.nodes, dim, 0);
+            for a in accums.iter().rev() {
+                reverse.merge(a);
+            }
+            for (x, y) in reverse.num.iter().zip(&forward.num) {
+                prop_assert!((x - y).abs() < 1e-4, "reverse num {x} vs {y}");
+            }
+            for (x, y) in reverse.den.iter().zip(&forward.den) {
+                prop_assert!((x - y).abs() < 1e-4, "reverse den {x} vs {y}");
+            }
+
+            // Tree merge ((a+b)+(c+d)): associativity of the reduction.
+            if accums.len() >= 3 {
+                let mut left = EpochAccum::zeros(cb.nodes, dim, 0);
+                let mut right = EpochAccum::zeros(cb.nodes, dim, 0);
+                let mid = accums.len() / 2;
+                for a in &accums[..mid] {
+                    left.merge(a);
+                }
+                for a in &accums[mid..] {
+                    right.merge(a);
+                }
+                left.merge(&right);
+                for (x, y) in left.num.iter().zip(&forward.num) {
+                    prop_assert!((x - y).abs() < 1e-4, "tree num {x} vs {y}");
+                }
             }
             Ok(())
         },

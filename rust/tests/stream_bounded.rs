@@ -1,0 +1,62 @@
+//! The out-of-core acceptance property, isolated in its own test binary:
+//! the data-buffer gauge (util::memtrack) is process-global, so this
+//! measurement must not share a process with other tests that create
+//! data sources concurrently.
+//!
+//! With a fixed `--chunk-rows`, the peak data-buffer allocation is
+//! O(chunk_rows * dim) — growing the input 4x must not grow the buffer.
+//! (The 100k-row sweep of the same property runs in
+//! `benches/stream_memory.rs`; this is the CI-sized proof.)
+
+use somoclu::coordinator::config::TrainConfig;
+use somoclu::coordinator::train::train_stream;
+use somoclu::data;
+use somoclu::io::dense;
+use somoclu::io::stream::ChunkedDenseFileSource;
+use somoclu::util::memtrack;
+use somoclu::util::rng::Rng;
+
+#[test]
+fn data_buffer_stays_bounded_as_rows_grow() {
+    let dir = std::env::temp_dir()
+        .join(format!("somoclu_stream_bounded_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let dim = 16;
+    let chunk_rows = 64;
+    let window_bytes = chunk_rows * dim * 4;
+    let mut peaks = Vec::new();
+    for &rows in &[2000usize, 8000] {
+        let mut rng = Rng::new(rows as u64);
+        let data = data::random_dense(rows, dim, &mut rng);
+        let path = dir.join(format!("data_{rows}.txt"));
+        dense::write_dense(&path, rows, dim, &data, false).unwrap();
+        drop(data);
+
+        let cfg = TrainConfig {
+            rows: 6,
+            cols: 6,
+            epochs: 2,
+            threads: 2,
+            radius0: Some(3.0),
+            ..Default::default()
+        };
+        memtrack::reset_data_buffer_peak();
+        let mut src = ChunkedDenseFileSource::open(&path, chunk_rows).unwrap();
+        let res = train_stream(&cfg, &mut src, None, None).unwrap();
+        assert_eq!(res.bmus.len(), rows);
+        peaks.push(memtrack::data_buffer_peak());
+    }
+    // Bounded by the window (Vec growth allows a small constant factor),
+    // and in particular far below the full 8000-row matrix.
+    for (i, &p) in peaks.iter().enumerate() {
+        assert!(p >= window_bytes, "peak[{i}] = {p} below one window");
+        assert!(
+            p <= 4 * window_bytes,
+            "peak[{i}] = {p} not O(chunk_rows * dim) (window {window_bytes})"
+        );
+    }
+    assert!(
+        peaks[1] <= peaks[0].max(4 * window_bytes),
+        "peak grew with rows: {peaks:?}"
+    );
+}

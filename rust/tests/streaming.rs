@@ -1,0 +1,133 @@
+//! End-to-end out-of-core streaming (`--chunk-rows` / `train_stream`):
+//!
+//! * a chunked file-backed run must reproduce the in-memory run — same
+//!   final QE (±1e-4) and identical BMUs;
+//! * the CLI accepts `--chunk-rows` and produces the same artifacts.
+//!
+//! The bounded-memory acceptance property lives in its own binary
+//! (`stream_bounded.rs`) because the data-buffer gauge is process-global.
+
+use std::process::Command;
+
+use somoclu::coordinator::config::TrainConfig;
+use somoclu::coordinator::train::{train, train_stream};
+use somoclu::data;
+use somoclu::io::stream::{ChunkedDenseFileSource, ChunkedSparseFileSource};
+use somoclu::io::{dense, sparse as sparse_io};
+use somoclu::kernels::{DataShard, KernelType};
+use somoclu::sparse::Csr;
+use somoclu::util::rng::Rng;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("somoclu_streaming_{}_{name}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn small_cfg(kernel: KernelType) -> TrainConfig {
+    TrainConfig {
+        rows: 8,
+        cols: 8,
+        epochs: 6,
+        kernel,
+        threads: 2,
+        radius0: Some(4.0),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn dense_file_stream_matches_in_memory_run() {
+    let dir = tmpdir("dense_eq");
+    let mut rng = Rng::new(600);
+    let (rows, dim) = (500, 12);
+    let (data, _) = data::gaussian_blobs(rows, dim, 5, 0.2, &mut rng);
+    let path = dir.join("data.txt");
+    dense::write_dense(&path, rows, dim, &data, false).unwrap();
+
+    let cfg = small_cfg(KernelType::DenseCpu);
+    let resident = train(&cfg, DataShard::Dense { data: &data, dim }, None, None).unwrap();
+
+    for chunk_rows in [37usize, 100, 1000] {
+        let mut src = ChunkedDenseFileSource::open(&path, chunk_rows).unwrap();
+        let streamed = train_stream(&cfg, &mut src, None, None).unwrap();
+        assert_eq!(streamed.bmus, resident.bmus, "chunk_rows={chunk_rows}");
+        assert!(
+            (streamed.final_qe() - resident.final_qe()).abs() < 1e-4,
+            "chunk_rows={chunk_rows}: QE {} vs {}",
+            streamed.final_qe(),
+            resident.final_qe()
+        );
+        // Per-epoch QE trajectories agree too, not just the endpoint.
+        for (a, b) in streamed.epochs.iter().zip(&resident.epochs) {
+            assert!(
+                (a.qe - b.qe).abs() < 1e-4,
+                "epoch {}: {} vs {}",
+                a.epoch,
+                a.qe,
+                b.qe
+            );
+        }
+    }
+}
+
+#[test]
+fn sparse_file_stream_matches_in_memory_run() {
+    let dir = tmpdir("sparse_eq");
+    let mut rng = Rng::new(601);
+    let m = Csr::random(300, 64, 0.08, &mut rng);
+    let path = dir.join("data.svm");
+    sparse_io::write_sparse(&path, &m).unwrap();
+    // Re-read so blank-row semantics match the file exactly.
+    let resident_m = sparse_io::read_sparse(&path, 64).unwrap();
+
+    let cfg = small_cfg(KernelType::SparseCpu);
+    let resident = train(&cfg, DataShard::Sparse(&resident_m), None, None).unwrap();
+
+    for chunk_rows in [23usize, 300] {
+        let mut src = ChunkedSparseFileSource::open(&path, 64, chunk_rows).unwrap();
+        let streamed = train_stream(&cfg, &mut src, None, None).unwrap();
+        assert_eq!(streamed.bmus, resident.bmus, "chunk_rows={chunk_rows}");
+        assert!(
+            (streamed.final_qe() - resident.final_qe()).abs() < 1e-4,
+            "chunk_rows={chunk_rows}"
+        );
+    }
+}
+
+#[test]
+fn cli_chunk_rows_matches_in_memory_cli_run() {
+    let dir = tmpdir("cli");
+    let mut rng = Rng::new(602);
+    let (rows, dim) = (160, 6);
+    let (d, _) = data::gaussian_blobs(rows, dim, 3, 0.2, &mut rng);
+    let input = dir.join("data.txt");
+    dense::write_dense(&input, rows, dim, &d, false).unwrap();
+
+    let bin = env!("CARGO_BIN_EXE_somoclu");
+    let run = |prefix: &str, extra: &[&str]| {
+        let out_prefix = dir.join(prefix);
+        let mut args: Vec<String> = ["-e", "3", "-x", "8", "-y", "8", "-r", "4", "--seed", "7"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        args.extend(extra.iter().map(|s| s.to_string()));
+        args.push(input.to_str().unwrap().to_string());
+        args.push(out_prefix.to_str().unwrap().to_string());
+        let out = Command::new(bin).args(&args).output().unwrap();
+        assert!(
+            out.status.success(),
+            "stderr: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        dense::read_dense(format!("{}.wts", out_prefix.display())).unwrap()
+    };
+
+    let resident = run("mem", &[]);
+    let streamed = run("stream", &["--chunk-rows", "50"]);
+    assert_eq!(resident.rows, streamed.rows);
+    for (a, b) in resident.data.iter().zip(&streamed.data) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}

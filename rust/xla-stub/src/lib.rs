@@ -1,0 +1,151 @@
+//! Compile-only stand-in for the `xla` crate (xla-rs / xla_extension).
+//!
+//! The somoclu accel and hybrid kernels (`-k 1` / `-k 3`) execute AOT HLO
+//! artifacts through PJRT. The real binding needs a local `xla_extension`
+//! install, which not every build environment carries, and the crate is
+//! not fetchable offline. This stub keeps the whole workspace compiling
+//! and type-checked with zero external requirements: the API surface the
+//! somoclu runtime uses is reproduced exactly, and every entry point that
+//! would touch PJRT returns [`Error::Unavailable`].
+//!
+//! `Engine::new` calls [`PjRtClient::cpu`] first, so under the stub every
+//! accel path fails fast with a clear message — the same graceful-skip
+//! behaviour the test suite already has for missing AOT artifacts.
+//!
+//! To run the accel kernels for real, point the `xla` path dependency in
+//! the workspace `Cargo.toml` at an xla-rs checkout instead of this stub.
+
+use std::path::Path;
+
+/// Error type mirroring xla-rs's: convertible into `anyhow::Error`.
+#[derive(Debug)]
+pub enum Error {
+    /// The stub is active; no PJRT runtime is linked in.
+    Unavailable(&'static str),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "xla stub: {what} needs the real xla-rs binding (swap the \
+                 `xla` path dependency for an xla-rs checkout)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types transferable to device buffers.
+pub trait ElementType: Copy + 'static {}
+impl ElementType for f32 {}
+impl ElementType for f64 {}
+impl ElementType for i32 {}
+impl ElementType for i64 {}
+impl ElementType for u32 {}
+
+/// PJRT client handle. The stub cannot construct one.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T: ElementType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::Unavailable("buffer_from_host_buffer"))
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// Host-side literal (tuple or array).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::Unavailable("Literal::to_tuple"))
+    }
+
+    pub fn to_vec<T: ElementType>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable("Literal::to_vec"))
+    }
+
+    pub fn get_first_element<T: ElementType>(&self) -> Result<T> {
+        Err(Error::Unavailable("Literal::get_first_element"))
+    }
+}
+
+/// Parsed HLO module proto (text form).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<Self> {
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation { _private: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_reports_stub() {
+        let err = PjRtClient::cpu().err().expect("stub must refuse");
+        assert!(err.to_string().contains("xla stub"));
+    }
+}
