@@ -59,10 +59,49 @@ pub fn arg_spec() -> ArgSpec {
               load fully in memory)", Some("0"))
         .opt("net", None, Some("net"),
              "cluster interconnect model: ideal | 10g", Some("ideal"))
+        .flag("prefetch", None, Some("prefetch"),
+              "double-buffered chunk read-ahead for file-backed streaming")
         .flag("help", Some('h'), Some("help"), "print usage")
         .flag("verbose", Some('v'), Some("verbose"), "per-epoch progress")
         .positional("INPUT_FILE", "dense or sparse (libsvm) training data")
         .positional("OUTPUT_PREFIX", "prefix for .wts/.bm/.umx outputs")
+}
+
+/// Argument spec for the `somoclu convert` subcommand: transcode a text
+/// input (ESOM dense or libsvm sparse) into the binary container
+/// (`io::binary`) once, so training epochs stream it with zero parsing.
+pub fn convert_spec() -> ArgSpec {
+    ArgSpec::new()
+        .flag("sparse", Some('s'), Some("sparse"),
+              "input is libsvm sparse (default: dense text)")
+        .opt("min-cols", None, Some("min-cols"),
+             "force at least this many columns (sparse inputs)", Some("0"))
+        .opt("chunk-rows", None, Some("chunk-rows"),
+             "transcode window in rows (memory bound of the conversion)",
+             Some("4096"))
+        .flag("help", Some('h'), Some("help"), "print usage")
+        .positional("INPUT_FILE", "dense or sparse (libsvm) text data")
+        .positional("OUTPUT_FILE", "binary container to write (.somb)")
+}
+
+/// Parsed `somoclu convert` options.
+#[derive(Debug, Clone)]
+pub struct ConvertOptions {
+    pub input_file: String,
+    pub output_file: String,
+    pub sparse: bool,
+    pub min_cols: usize,
+    pub chunk_rows: usize,
+}
+
+pub fn parse_convert(parsed: &Parsed) -> Result<ConvertOptions, ArgError> {
+    Ok(ConvertOptions {
+        input_file: parsed.positional(0).to_string(),
+        output_file: parsed.positional(1).to_string(),
+        sparse: parsed.flag("sparse"),
+        min_cols: parsed.parse_as::<usize>("min-cols")?,
+        chunk_rows: parsed.parse_as::<usize>("chunk-rows")?,
+    })
 }
 
 /// Everything main() needs beyond TrainConfig.
@@ -95,6 +134,7 @@ pub fn parse_cli(parsed: &Parsed) -> Result<CliOptions, ArgError> {
         ranks: parsed.parse_as::<usize>("ranks")?,
         seed: parsed.parse_as::<u64>("seed")?,
         chunk_rows: parsed.parse_as::<usize>("chunk-rows")?,
+        prefetch: parsed.flag("prefetch"),
         ..Default::default()
     };
 
@@ -224,6 +264,31 @@ mod tests {
         assert_eq!(o.config.chunk_rows, 0); // default: fully in memory
         let o = parse(&["--chunk-rows", "4096", "in", "out"]);
         assert_eq!(o.config.chunk_rows, 4096);
+    }
+
+    #[test]
+    fn prefetch_flag() {
+        let o = parse(&["in", "out"]);
+        assert!(!o.config.prefetch);
+        let o = parse(&["--chunk-rows", "512", "--prefetch", "in", "out"]);
+        assert!(o.config.prefetch);
+    }
+
+    #[test]
+    fn convert_subcommand_spec() {
+        let spec = convert_spec();
+        let parsed = spec
+            .parse(["--sparse", "--min-cols", "40", "in.svm", "out.somb"].map(String::from))
+            .unwrap();
+        let o = parse_convert(&parsed).unwrap();
+        assert!(o.sparse);
+        assert_eq!(o.min_cols, 40);
+        assert_eq!(o.chunk_rows, 4096); // default transcode window
+        assert_eq!(o.input_file, "in.svm");
+        assert_eq!(o.output_file, "out.somb");
+        let parsed = spec.parse(["a.txt", "b.somb"].map(String::from)).unwrap();
+        let o = parse_convert(&parsed).unwrap();
+        assert!(!o.sparse);
     }
 
     #[test]

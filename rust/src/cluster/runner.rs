@@ -5,20 +5,43 @@
 //! MPI-process memory model whose duplication cost the paper contrasts
 //! with OpenMP threads. Within a rank, the kernel still uses
 //! `threads_per_rank` workers (the paper's hybrid kernel shape).
+//!
+//! Two input paths share one epoch loop (`rank_train_loop`, written
+//! against [`DataSource`]):
+//!
+//! * [`train_cluster`] — the classic resident path: the data set is
+//!   sharded in memory and each rank streams its shard (optionally in
+//!   `--chunk-rows` windows).
+//! * [`train_cluster_stream`] — the out-of-core path: every rank opens
+//!   its own **disjoint row window of the same file**
+//!   (`open_shard(rank, ranks)`, text or binary container), so no rank
+//!   ever holds more than O(chunk_rows × dim) of data. With
+//!   `cfg.prefetch`, each rank's reads overlap its kernel compute.
+//!
+//! Both use the identical `split_ranges` row split, so gathered BMUs
+//! concatenate in file row order and the reduced batch update is the
+//! same sum — multi-rank streaming matches single-rank training BMUs
+//! exactly (`streamed_cluster_matches_single_node`).
 
+use std::path::PathBuf;
 use std::time::Instant;
 
 use crate::cluster::allreduce::{
     allreduce_f64_sum, broadcast_from_root, gather_u32_to_root, reduce_sum_to_root,
 };
-use crate::cluster::comm::World;
+use crate::cluster::comm::{Endpoint, World};
 use crate::cluster::netmodel::NetModel;
 use crate::coordinator::config::TrainConfig;
 use crate::coordinator::train::{init_codebook, EpochStats, TrainResult};
-use crate::io::stream::{DataSource, InMemorySource};
+use crate::io::binary::{self, BinaryDenseFileSource, BinaryKind, BinarySparseFileSource};
+use crate::io::stream::{
+    ChunkedDenseFileSource, ChunkedSparseFileSource, DataSource, InMemorySource,
+    PrefetchSource,
+};
 use crate::kernels::dense_cpu::DenseCpuKernel;
 use crate::kernels::sparse_cpu::SparseCpuKernel;
 use crate::kernels::{DataShard, EpochAccum, KernelType, TrainingKernel};
+use crate::som::{Codebook, Grid, Schedule};
 use crate::sparse::Csr;
 use crate::util::threadpool::{run_concurrent, split_ranges};
 
@@ -75,6 +98,66 @@ impl ClusterData {
     }
 }
 
+/// File-backed input for [`train_cluster_stream`]: each rank opens its
+/// own disjoint row window of this one file.
+#[derive(Clone, Debug)]
+pub enum StreamInput {
+    /// Dense text (plain or ESOM-headered).
+    DenseText { path: PathBuf },
+    /// libsvm sparse text.
+    SparseText { path: PathBuf, min_cols: usize },
+    /// Binary container (`io::binary`), dense or sparse by header.
+    Binary { path: PathBuf },
+}
+
+impl StreamInput {
+    /// Open rank `rank` of `ranks`' shard of the file.
+    fn open_shard(
+        &self,
+        chunk_rows: usize,
+        rank: usize,
+        ranks: usize,
+    ) -> anyhow::Result<Box<dyn DataSource + Send>> {
+        Ok(match self {
+            StreamInput::DenseText { path } => Box::new(
+                ChunkedDenseFileSource::open_shard(path, chunk_rows, rank, ranks)?,
+            ),
+            StreamInput::SparseText { path, min_cols } => Box::new(
+                ChunkedSparseFileSource::open_shard(
+                    path, *min_cols, chunk_rows, rank, ranks,
+                )?,
+            ),
+            StreamInput::Binary { path } => match binary::sniff(path)? {
+                Some(BinaryKind::Sparse) => Box::new(
+                    BinarySparseFileSource::open_shard(path, chunk_rows, rank, ranks)?,
+                ),
+                _ => Box::new(BinaryDenseFileSource::open_shard(
+                    path, chunk_rows, rank, ranks,
+                )?),
+            },
+        })
+    }
+
+    /// Probe (total_rows, dim). Binary containers answer from the
+    /// 40-byte header; text inputs pay one full validation parse — the
+    /// same pass any single-rank open pays, and it fails fast before
+    /// the rank threads spawn (each rank's own open re-validates its
+    /// view by design, like every epoch re-checks for file shrinkage).
+    fn probe(&self, chunk_rows: usize) -> anyhow::Result<(usize, usize)> {
+        match self {
+            StreamInput::Binary { path } => {
+                let mut f = std::fs::File::open(path)?;
+                let h = binary::read_header(&mut f, path)?;
+                Ok((h.rows, h.dim))
+            }
+            _ => {
+                let src = self.open_shard(chunk_rows, 0, 1)?;
+                Ok((src.rows(), src.dim()))
+            }
+        }
+    }
+}
+
 /// Communication volume report for the Fig. 8 harness.
 #[derive(Debug, Clone)]
 pub struct ClusterReport {
@@ -83,20 +166,136 @@ pub struct ClusterReport {
     pub messages_sent: u64,
 }
 
-/// Train across `cfg.ranks` simulated nodes. Returns the master's result
-/// plus the communication report.
-pub fn train_cluster(
+/// One rank's whole training run: the per-epoch chunk loop over its
+/// [`DataSource`] shard, the reduce/update/broadcast exchange, and the
+/// final BMU gather. Returns `Some(result)` on the master rank only.
+#[allow(clippy::too_many_arguments)]
+fn rank_train_loop(
     cfg: &TrainConfig,
-    data: ClusterData,
-    net: NetModel,
+    grid: &Grid,
+    radius_sched: Schedule,
+    scale_sched: Schedule,
+    mut codebook: Codebook,
+    ep: &mut Endpoint,
+    source: &mut dyn DataSource,
+    total_rows: usize,
+    threads_per_rank: usize,
+) -> anyhow::Result<Option<TrainResult>> {
+    let mut kernel: Box<dyn TrainingKernel> = match cfg.kernel {
+        KernelType::SparseCpu => Box::new(SparseCpuKernel::new(threads_per_rank)),
+        _ => Box::new(DenseCpuKernel::new(threads_per_rank)),
+    };
+    let rows_local = source.rows();
+    let dim_local = source.dim();
+    let mut epochs = Vec::with_capacity(cfg.epochs);
+    let mut bmus_local: Vec<u32> = Vec::new();
+
+    for epoch in 0..cfg.epochs {
+        let te = Instant::now();
+        let radius = radius_sched.at(epoch);
+        let scale = scale_sched.at(epoch);
+        kernel.epoch_begin(&codebook)?;
+        source.reset()?;
+        let mut accum = EpochAccum::zeros(grid.node_count(), dim_local, 0);
+        let mut epoch_bmus: Vec<u32> = Vec::with_capacity(rows_local);
+        while let Some(chunk) = source.next_chunk()? {
+            let part = kernel.epoch_accumulate(
+                chunk,
+                &codebook,
+                grid,
+                cfg.neighborhood,
+                radius,
+                scale,
+            )?;
+            epoch_bmus.extend_from_slice(&part.bmus);
+            accum.merge(&part);
+        }
+        anyhow::ensure!(
+            epoch_bmus.len() == rows_local,
+            "rank shard produced {} rows, expected {rows_local}",
+            epoch_bmus.len()
+        );
+        bmus_local = epoch_bmus;
+
+        // Slaves send accumulators; master reduces, updates, broadcasts
+        // the new codebook (the paper's two-way master/slave exchange).
+        let is_root = reduce_sum_to_root(ep, &mut accum.num);
+        reduce_sum_to_root(ep, &mut accum.den);
+        let qe_total = allreduce_f64_sum(ep, accum.qe_sum);
+        if is_root {
+            codebook.apply_batch_update(&accum.num, &accum.den);
+        }
+        broadcast_from_root(ep, &mut codebook.weights);
+
+        epochs.push(EpochStats {
+            epoch,
+            radius,
+            scale,
+            qe: qe_total / total_rows as f64,
+            duration: te.elapsed(),
+        });
+    }
+
+    // Gather BMUs in rank order for the final output.
+    let gathered = gather_u32_to_root(ep, bmus_local);
+    if let Some(parts) = gathered {
+        let bmus: Vec<u32> = parts.concat();
+        let u = crate::som::umatrix::umatrix(grid, &codebook, threads_per_rank);
+        Ok(Some(TrainResult {
+            codebook,
+            bmus,
+            umatrix: u,
+            epochs,
+            total: std::time::Duration::ZERO, // set by caller
+        }))
+    } else {
+        Ok(None)
+    }
+}
+
+/// Pick the master's result out of the per-rank outcomes and attach the
+/// communication report.
+fn assemble(
+    outcomes: Vec<anyhow::Result<Option<TrainResult>>>,
+    world: &World,
+    ranks: usize,
+    total: std::time::Duration,
 ) -> anyhow::Result<(TrainResult, ClusterReport)> {
-    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    let mut master: Option<TrainResult> = None;
+    for o in outcomes {
+        if let Some(res) = o? {
+            master = Some(res);
+        }
+    }
+    let mut result = master.expect("rank 0 must produce a result");
+    result.total = total;
+    let report = ClusterReport {
+        ranks,
+        bytes_sent: world.bytes_sent(),
+        messages_sent: world.messages_sent(),
+    };
+    Ok((result, report))
+}
+
+fn check_kernel_ranks(cfg: &TrainConfig) -> anyhow::Result<()> {
     anyhow::ensure!(
         !matches!(cfg.kernel, KernelType::Accel | KernelType::Hybrid)
             || cfg.ranks == 1,
         "accel/hybrid kernels are single-node only (the paper benchmarks \
          multi-node scaling with the CPU kernel; Fig. 8)"
     );
+    Ok(())
+}
+
+/// Train across `cfg.ranks` simulated nodes on resident data. Returns
+/// the master's result plus the communication report.
+pub fn train_cluster(
+    cfg: &TrainConfig,
+    data: ClusterData,
+    net: NetModel,
+) -> anyhow::Result<(TrainResult, ClusterReport)> {
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    check_kernel_ranks(cfg)?;
     let ranks = cfg.ranks;
     let grid = cfg.grid();
     let dim = data.dim();
@@ -134,116 +333,138 @@ pub fn train_cluster(
         .into_iter()
         .zip(shards)
         .map(|(mut ep, shard)| {
-            let mut codebook = init.clone();
+            let codebook = init.clone();
             let cfg = cfg.clone();
             let grid = grid.clone();
             move || -> anyhow::Result<Option<TrainResult>> {
-                let mut kernel: Box<dyn TrainingKernel> = match cfg.kernel {
-                    KernelType::SparseCpu => {
-                        Box::new(SparseCpuKernel::new(threads_per_rank))
-                    }
-                    _ => Box::new(DenseCpuKernel::new(threads_per_rank)),
-                };
-                let rows_local = shard.rows();
-                let dim_local = shard.dim();
-                // Each rank streams its shard in bounded chunks — the
-                // same chunk loop as the single-node coordinator, so
-                // `--chunk-rows` bounds per-rank data traffic to the
+                // Each rank streams its resident shard in bounded chunks
+                // — the same chunk loop as the single-node coordinator,
+                // so `--chunk-rows` bounds per-rank data traffic to the
                 // kernel identically in both modes.
                 let mut source =
                     InMemorySource::new(shard.as_shard(), cfg.chunk_rows);
-                let mut epochs = Vec::with_capacity(cfg.epochs);
-                let mut bmus_local: Vec<u32> = Vec::new();
-
-                for epoch in 0..cfg.epochs {
-                    let te = Instant::now();
-                    let radius = radius_sched.at(epoch);
-                    let scale = scale_sched.at(epoch);
-                    kernel.epoch_begin(&codebook)?;
-                    source.reset()?;
-                    let mut accum =
-                        EpochAccum::zeros(grid.node_count(), dim_local, 0);
-                    let mut epoch_bmus: Vec<u32> =
-                        Vec::with_capacity(rows_local);
-                    while let Some(chunk) = source.next_chunk()? {
-                        let part = kernel.epoch_accumulate(
-                            chunk,
-                            &codebook,
-                            &grid,
-                            cfg.neighborhood,
-                            radius,
-                            scale,
-                        )?;
-                        epoch_bmus.extend_from_slice(&part.bmus);
-                        accum.merge(&part);
-                    }
-                    anyhow::ensure!(
-                        epoch_bmus.len() == rows_local,
-                        "rank shard produced {} rows, expected {rows_local}",
-                        epoch_bmus.len()
-                    );
-                    bmus_local = epoch_bmus;
-
-                    // Slaves send accumulators; master reduces, updates,
-                    // broadcasts the new codebook (the paper's two-way
-                    // master/slave exchange).
-                    let is_root = reduce_sum_to_root(&mut ep, &mut accum.num);
-                    reduce_sum_to_root(&mut ep, &mut accum.den);
-                    let qe_total = allreduce_f64_sum(&mut ep, accum.qe_sum);
-                    if is_root {
-                        codebook.apply_batch_update(&accum.num, &accum.den);
-                    }
-                    broadcast_from_root(&mut ep, &mut codebook.weights);
-
-                    epochs.push(EpochStats {
-                        epoch,
-                        radius,
-                        scale,
-                        qe: qe_total / total_rows as f64,
-                        duration: te.elapsed(),
-                    });
-                    let _ = rows_local;
-                }
-
-                // Gather BMUs in rank order for the final output.
-                let gathered = gather_u32_to_root(&mut ep, bmus_local);
-                if let Some(parts) = gathered {
-                    let bmus: Vec<u32> = parts.concat();
-                    let u = crate::som::umatrix::umatrix(
-                        &grid,
-                        &codebook,
-                        threads_per_rank,
-                    );
-                    Ok(Some(TrainResult {
-                        codebook,
-                        bmus,
-                        umatrix: u,
-                        epochs,
-                        total: std::time::Duration::ZERO, // set by caller
-                    }))
-                } else {
-                    Ok(None)
-                }
+                rank_train_loop(
+                    &cfg,
+                    &grid,
+                    radius_sched,
+                    scale_sched,
+                    codebook,
+                    &mut ep,
+                    &mut source,
+                    total_rows,
+                    threads_per_rank,
+                )
             }
         })
         .collect();
 
     let outcomes = run_concurrent(tasks);
-    let total = t0.elapsed();
-    let mut master: Option<TrainResult> = None;
-    for o in outcomes {
-        if let Some(res) = o? {
-            master = Some(res);
+    assemble(outcomes, &world, ranks, t0.elapsed())
+}
+
+/// Train across `cfg.ranks` simulated nodes with **no resident copy of
+/// the data**: every rank streams its own disjoint row window of the
+/// same file (`--ranks N --chunk-rows M` from the CLI). Peak data memory
+/// is ranks × chunk_rows × dim (× 2 with `cfg.prefetch`), independent of
+/// file size.
+pub fn train_cluster_stream(
+    cfg: &TrainConfig,
+    input: StreamInput,
+    net: NetModel,
+) -> anyhow::Result<(TrainResult, ClusterReport)> {
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    check_kernel_ranks(cfg)?;
+    anyhow::ensure!(
+        cfg.initialization == crate::coordinator::config::Initialization::Random,
+        "PCA initialization needs the data resident in memory; streamed \
+         cluster runs support only --initialization random"
+    );
+    let ranks = cfg.ranks;
+    let grid = cfg.grid();
+    // Kind-vs-kernel mismatch must fail here, before rank threads
+    // spawn: inside a rank it would surface as a kernel error that
+    // drops the rank's Endpoint and panics the peers blocked in the
+    // first collective instead of returning this message.
+    let wants_sparse = cfg.kernel == KernelType::SparseCpu;
+    let input_sparse = match &input {
+        StreamInput::SparseText { .. } => true,
+        StreamInput::DenseText { .. } => false,
+        StreamInput::Binary { path } => {
+            matches!(binary::sniff(path)?, Some(BinaryKind::Sparse))
         }
-    }
-    let mut result = master.expect("rank 0 must produce a result");
-    result.total = total;
-    let report = ClusterReport {
-        ranks,
-        bytes_sent: world.bytes_sent(),
-        messages_sent: world.messages_sent(),
     };
-    Ok((result, report))
+    anyhow::ensure!(
+        wants_sparse == input_sparse,
+        "input is {} but the {} kernel was selected ({})",
+        if input_sparse { "sparse" } else { "dense" },
+        if wants_sparse { "sparse" } else { "dense" },
+        if input_sparse { "use -k 2" } else { "drop -k 2" },
+    );
+    let (total_rows, dim) = input.probe(cfg.chunk_rows)?;
+    anyhow::ensure!(total_rows >= ranks, "fewer rows than ranks");
+
+    let init = init_codebook(cfg, &grid, dim);
+    let radius_sched = cfg.radius_schedule(&grid);
+    let scale_sched = cfg.scale_schedule();
+
+    let mut world = World::new(ranks, net);
+    let endpoints = world.take_endpoints();
+    let threads_per_rank = cfg.threads.max(1);
+
+    // Open every rank's shard BEFORE spawning rank threads: a fallible
+    // open inside a thread would drop its Endpoint and panic the peers
+    // blocked in collectives ("peer endpoint dropped") instead of
+    // surfacing the real error. Opened up front, an unreadable file is
+    // a clean anyhow error. (Mid-epoch read failures — the file mutated
+    // under a running job — still abort via the collective panic, the
+    // same behavior resident kernel errors always had.) The opens run
+    // concurrently: each text open is a full validation parse, so doing
+    // them serially would cost ranks × parse wall-clock at startup.
+    let opens: Vec<_> = (0..ranks)
+        .map(|rank| {
+            let input = input.clone();
+            let chunk_rows = cfg.chunk_rows;
+            move || input.open_shard(chunk_rows, rank, ranks)
+        })
+        .collect();
+    let mut sources: Vec<Box<dyn DataSource + Send>> = Vec::with_capacity(ranks);
+    for opened in run_concurrent(opens) {
+        let source = opened?;
+        // Read-ahead per rank: each shard's chunk k+1 loads while its
+        // kernel runs chunk k.
+        sources.push(if cfg.prefetch {
+            Box::new(PrefetchSource::new(source))
+        } else {
+            source
+        });
+    }
+
+    let t0 = Instant::now();
+    let tasks: Vec<_> = endpoints
+        .into_iter()
+        .zip(sources)
+        .map(|(mut ep, mut source)| {
+            let codebook = init.clone();
+            let cfg = cfg.clone();
+            let grid = grid.clone();
+            move || -> anyhow::Result<Option<TrainResult>> {
+                rank_train_loop(
+                    &cfg,
+                    &grid,
+                    radius_sched,
+                    scale_sched,
+                    codebook,
+                    &mut ep,
+                    &mut source,
+                    total_rows,
+                    threads_per_rank,
+                )
+            }
+        })
+        .collect();
+
+    let outcomes = run_concurrent(tasks);
+    assemble(outcomes, &world, ranks, t0.elapsed())
 }
 
 #[cfg(test)]
@@ -251,6 +472,7 @@ mod tests {
     use super::*;
     use crate::coordinator::train::train;
     use crate::data;
+    use crate::io::dense;
     use crate::util::rng::Rng;
 
     fn cfg(ranks: usize) -> TrainConfig {
@@ -386,5 +608,151 @@ mod tests {
             NetModel::ideal(),
         );
         assert!(out.is_err());
+    }
+
+    /// The ISSUE 2 acceptance bar: `--ranks N --chunk-rows M` streaming
+    /// disjoint shards from one file matches single-rank training BMUs
+    /// exactly — text and binary, with and without prefetch.
+    #[test]
+    fn streamed_cluster_matches_single_node() {
+        let dir = std::env::temp_dir()
+            .join(format!("somoclu_cluster_stream_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rng = Rng::new(11);
+        let (data, _) = data::gaussian_blobs(90, 5, 3, 0.2, &mut rng);
+        let text = dir.join("stream.txt");
+        dense::write_dense(&text, 90, 5, &data, false).unwrap();
+        let bin = dir.join("stream.somb");
+        crate::io::binary::write_binary_dense(&bin, 90, 5, &data).unwrap();
+
+        let single = train(
+            &cfg(1),
+            DataShard::Dense { data: &data, dim: 5 },
+            None,
+            None,
+        )
+        .unwrap();
+
+        for (input, prefetch) in [
+            (StreamInput::DenseText { path: text.clone() }, false),
+            (StreamInput::Binary { path: bin.clone() }, false),
+            (StreamInput::Binary { path: bin.clone() }, true),
+        ] {
+            let mut c = cfg(3);
+            c.chunk_rows = 8;
+            c.prefetch = prefetch;
+            let (multi, report) =
+                train_cluster_stream(&c, input.clone(), NetModel::ideal()).unwrap();
+            assert_eq!(
+                multi.bmus, single.bmus,
+                "input {input:?} prefetch {prefetch}"
+            );
+            assert!(
+                (multi.final_qe() - single.final_qe()).abs() < 1e-4,
+                "input {input:?}"
+            );
+            assert!(report.bytes_sent > 0);
+        }
+    }
+
+    #[test]
+    fn streamed_sparse_cluster_matches_single_node() {
+        let dir = std::env::temp_dir()
+            .join(format!("somoclu_cluster_stream_sp_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rng = Rng::new(12);
+        let m = crate::sparse::Csr::random(60, 20, 0.2, &mut rng);
+        let svm = dir.join("stream.svm");
+        crate::io::sparse::write_sparse(&svm, &m).unwrap();
+        // Re-read so blank-row semantics match the file exactly.
+        let resident = crate::io::sparse::read_sparse(&svm, 20).unwrap();
+
+        let mut c1 = cfg(1);
+        c1.kernel = KernelType::SparseCpu;
+        let single = train(&c1, DataShard::Sparse(&resident), None, None).unwrap();
+
+        let mut c3 = cfg(3);
+        c3.kernel = KernelType::SparseCpu;
+        c3.chunk_rows = 7;
+        let (multi, _) = train_cluster_stream(
+            &c3,
+            StreamInput::SparseText {
+                path: svm.clone(),
+                min_cols: 20,
+            },
+            NetModel::ideal(),
+        )
+        .unwrap();
+        assert_eq!(multi.bmus, single.bmus);
+        assert!((multi.final_qe() - single.final_qe()).abs() < 1e-4);
+
+        // Binary sparse container, prefetched.
+        let bin = dir.join("stream_sp.somb");
+        crate::io::binary::write_binary_sparse(&bin, &resident).unwrap();
+        let mut cb = c3.clone();
+        cb.prefetch = true;
+        let (multib, _) = train_cluster_stream(
+            &cb,
+            StreamInput::Binary { path: bin },
+            NetModel::ideal(),
+        )
+        .unwrap();
+        assert_eq!(multib.bmus, single.bmus);
+    }
+
+    #[test]
+    fn streamed_cluster_rejects_kernel_kind_mismatch() {
+        // A kind/kernel mismatch must be a clean pre-spawn error — inside
+        // a rank thread it would panic the peers mid-collective.
+        let dir = std::env::temp_dir()
+            .join(format!("somoclu_cluster_stream_kind_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rng = Rng::new(14);
+        let m = crate::sparse::Csr::random(20, 8, 0.4, &mut rng);
+        let bin = dir.join("kind.somb");
+        crate::io::binary::write_binary_sparse(&bin, &m).unwrap();
+
+        let mut c = cfg(2); // dense kernel (default)
+        c.chunk_rows = 5;
+        let err = train_cluster_stream(
+            &c,
+            StreamInput::Binary { path: bin.clone() },
+            NetModel::ideal(),
+        );
+        assert!(err.is_err());
+        assert!(format!("{:#}", err.unwrap_err()).contains("-k 2"));
+
+        let mut c = cfg(2);
+        c.chunk_rows = 5;
+        c.kernel = KernelType::SparseCpu;
+        let err = train_cluster_stream(
+            &c,
+            StreamInput::DenseText {
+                path: dir.join("nope.txt"),
+            },
+            NetModel::ideal(),
+        );
+        // Dense text + sparse kernel: rejected before the (missing)
+        // file is even opened.
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn streamed_cluster_rejects_pca_init() {
+        let dir = std::env::temp_dir()
+            .join(format!("somoclu_cluster_stream_pca_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pca.txt");
+        std::fs::write(&path, "1 2\n3 4\n5 6\n7 8\n").unwrap();
+        let mut c = cfg(2);
+        c.chunk_rows = 2;
+        c.initialization = crate::coordinator::config::Initialization::Pca;
+        let err = train_cluster_stream(
+            &c,
+            StreamInput::DenseText { path },
+            NetModel::ideal(),
+        );
+        assert!(err.is_err());
+        assert!(format!("{:#}", err.unwrap_err()).contains("resident"));
     }
 }

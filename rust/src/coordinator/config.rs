@@ -68,6 +68,11 @@ pub struct TrainConfig {
     /// resident shard, capping data memory at O(chunk_rows * dim).
     /// 0 = whole shard per chunk (the classic in-memory path, default).
     pub chunk_rows: usize,
+    /// Double-buffered chunk read-ahead (`--prefetch`): file-backed
+    /// streaming sources get a reader thread that loads chunk k+1 while
+    /// the kernel runs chunk k. Data-buffer bound doubles to
+    /// 2 × chunk_rows × dim per source; no effect on resident inputs.
+    pub prefetch: bool,
 }
 
 impl Default for TrainConfig {
@@ -92,6 +97,7 @@ impl Default for TrainConfig {
             initialization: Initialization::Random,
             seed: 0x50_4d_4f_53, // "SOMP"
             chunk_rows: 0,
+            prefetch: false,
         }
     }
 }
@@ -144,6 +150,7 @@ mod tests {
         let c = TrainConfig::default();
         assert_eq!((c.rows, c.cols), (50, 50));
         assert_eq!(c.chunk_rows, 0); // streaming is opt-in
+        assert!(!c.prefetch); // read-ahead is opt-in too
         assert_eq!(c.radius_n, 1.0);
         assert_eq!(c.scale0, 1.0);
         assert_eq!(c.scale_n, 0.01);

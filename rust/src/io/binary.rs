@@ -1,0 +1,722 @@
+//! Binary row-major container format — the streaming fast path.
+//!
+//! The text readers pay a full tokenize-and-parse pass per epoch when
+//! streaming (`--chunk-rows`); profile shows that parse dominates epoch
+//! wall-clock long before the BMU kernel does. This module defines a
+//! seekable binary container that is transcoded from the ESOM text /
+//! libsvm formats **once** (`somoclu convert`) and then chunk-streamed
+//! with zero per-epoch parsing: a chunk read is a header-offset
+//! computation plus `read_exact` calls.
+//!
+//! ## Layout (all integers little-endian)
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic  b"SOMB"
+//!      4     4  version (u32, currently 1)
+//!      8     4  kind    (u32: 0 = dense, 1 = sparse CSR)
+//!     12     4  reserved (u32, must be 0)
+//!     16     8  rows    (u64)
+//!     24     8  dim     (u64; sparse: cols)
+//!     32     8  nnz     (u64; dense: 0)
+//!     40     …  payload
+//! ```
+//!
+//! Dense payload: `rows * dim` f32 values, row-major.
+//!
+//! Sparse payload, three CSR sections back to back:
+//!
+//! ```text
+//! indptr   u64 * (rows + 1)   cumulative nnz, indptr[0] = 0
+//! indices  u32 * nnz          column ids, strictly increasing per row
+//! values   f32 * nnz
+//! ```
+//!
+//! Every section offset is computable from the header, so a reader can
+//! seek straight to any row window — this is what makes per-rank file
+//! sharding (`open_shard`) an O(1) positioning operation instead of a
+//! skip-and-parse scan.
+//!
+//! Corruption handling: `open` validates magic, version, kind, reserved
+//! field, and that the file length matches the header-declared payload
+//! exactly (a truncated copy is rejected before training starts, the
+//! same fail-fast contract as the text sources). Sparse chunk reads
+//! additionally check indptr monotonicity and column range.
+
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use crate::io::stream::{chunk_take, rank_window, ChunkBuf, DataSource};
+use crate::kernels::DataShard;
+use crate::sparse::Csr;
+use crate::util::memtrack;
+
+/// `b"SOMB"` — SOM Binary.
+pub const MAGIC: [u8; 4] = *b"SOMB";
+/// Current container version.
+pub const VERSION: u32 = 1;
+/// Header length in bytes; payload starts here.
+pub const HEADER_LEN: u64 = 40;
+
+/// Payload flavor, from the header `kind` field.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum BinaryKind {
+    Dense,
+    Sparse,
+}
+
+/// Parsed container header.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct BinaryHeader {
+    pub kind: BinaryKind,
+    pub rows: usize,
+    pub dim: usize,
+    pub nnz: usize,
+}
+
+impl BinaryHeader {
+    /// Declared payload size. Computed in u128 so a crafted header
+    /// (rows/dim near u64::MAX) cannot wrap the product and slip past
+    /// the exact-length check in `read_header`.
+    fn payload_bytes(&self) -> u128 {
+        match self.kind {
+            BinaryKind::Dense => 4u128 * (self.rows as u128) * (self.dim as u128),
+            BinaryKind::Sparse => {
+                8 * (self.rows as u128 + 1) + 4 * (self.nnz as u128) + 4 * (self.nnz as u128)
+            }
+        }
+    }
+
+    /// Byte offset of the sparse indptr section.
+    fn indptr_off(&self) -> u64 {
+        HEADER_LEN
+    }
+
+    /// Byte offset of the sparse indices section.
+    fn indices_off(&self) -> u64 {
+        HEADER_LEN + 8 * (self.rows as u64 + 1)
+    }
+
+    /// Byte offset of the sparse values section.
+    fn values_off(&self) -> u64 {
+        self.indices_off() + 4 * self.nnz as u64
+    }
+
+    fn encode(&self) -> [u8; HEADER_LEN as usize] {
+        let mut h = [0u8; HEADER_LEN as usize];
+        h[0..4].copy_from_slice(&MAGIC);
+        h[4..8].copy_from_slice(&VERSION.to_le_bytes());
+        let kind: u32 = match self.kind {
+            BinaryKind::Dense => 0,
+            BinaryKind::Sparse => 1,
+        };
+        h[8..12].copy_from_slice(&kind.to_le_bytes());
+        // h[12..16] reserved, zero.
+        h[16..24].copy_from_slice(&(self.rows as u64).to_le_bytes());
+        h[24..32].copy_from_slice(&(self.dim as u64).to_le_bytes());
+        h[32..40].copy_from_slice(&(self.nnz as u64).to_le_bytes());
+        h
+    }
+}
+
+/// Read + validate a container header from the start of `f`, including
+/// the exact-file-length check (rejects truncated or padded copies).
+pub fn read_header(f: &mut File, path: &Path) -> anyhow::Result<BinaryHeader> {
+    let len = f.metadata()?.len();
+    anyhow::ensure!(
+        len >= HEADER_LEN,
+        "{}: not a somoclu binary file (shorter than the {HEADER_LEN}-byte header)",
+        path.display()
+    );
+    let mut h = [0u8; HEADER_LEN as usize];
+    f.seek(SeekFrom::Start(0))?;
+    f.read_exact(&mut h)?;
+    anyhow::ensure!(
+        h[0..4] == MAGIC,
+        "{}: bad magic (not a somoclu binary file)",
+        path.display()
+    );
+    let version = u32::from_le_bytes(h[4..8].try_into().unwrap());
+    anyhow::ensure!(
+        version == VERSION,
+        "{}: unsupported container version {version} (this build reads {VERSION})",
+        path.display()
+    );
+    let kind = match u32::from_le_bytes(h[8..12].try_into().unwrap()) {
+        0 => BinaryKind::Dense,
+        1 => BinaryKind::Sparse,
+        other => anyhow::bail!("{}: unknown payload kind {other}", path.display()),
+    };
+    let reserved = u32::from_le_bytes(h[12..16].try_into().unwrap());
+    anyhow::ensure!(
+        reserved == 0,
+        "{}: nonzero reserved header field (corrupt header?)",
+        path.display()
+    );
+    let rows = u64::from_le_bytes(h[16..24].try_into().unwrap());
+    let dim = u64::from_le_bytes(h[24..32].try_into().unwrap());
+    let nnz = u64::from_le_bytes(h[32..40].try_into().unwrap());
+    anyhow::ensure!(rows > 0, "{}: header declares zero rows", path.display());
+    anyhow::ensure!(dim > 0, "{}: header declares zero dims", path.display());
+    if kind == BinaryKind::Dense {
+        anyhow::ensure!(
+            nnz == 0,
+            "{}: dense container with nonzero nnz (corrupt header?)",
+            path.display()
+        );
+    }
+    let header = BinaryHeader {
+        kind,
+        rows: usize::try_from(rows)?,
+        dim: usize::try_from(dim)?,
+        nnz: usize::try_from(nnz)?,
+    };
+    let want = HEADER_LEN as u128 + header.payload_bytes();
+    anyhow::ensure!(
+        len as u128 == want,
+        "{}: file is {len} bytes but the header declares {want} \
+         (truncated or corrupt copy)",
+        path.display()
+    );
+    // Post-validation invariant: every section offset/row product below
+    // is bounded by the actual file length, so u64 arithmetic in the
+    // chunk readers cannot overflow.
+    Ok(header)
+}
+
+/// Peek at the first bytes of `path`: `Some(kind)` if it is a somoclu
+/// binary container, `None` for anything else (text inputs). Used by the
+/// CLI to auto-detect binary inputs without a flag.
+pub fn sniff<P: AsRef<Path>>(path: P) -> std::io::Result<Option<BinaryKind>> {
+    let mut f = File::open(path.as_ref())?;
+    let mut head = [0u8; 12];
+    if f.read_exact(&mut head).is_err() {
+        return Ok(None); // shorter than a header: not binary
+    }
+    if head[0..4] != MAGIC {
+        return Ok(None);
+    }
+    Ok(match u32::from_le_bytes(head[8..12].try_into().unwrap()) {
+        0 => Some(BinaryKind::Dense),
+        1 => Some(BinaryKind::Sparse),
+        _ => Some(BinaryKind::Dense), // sniffed as binary; open() will reject
+    })
+}
+
+// ---------------------------------------------------------------------
+// Writers / convert
+// ---------------------------------------------------------------------
+
+/// Write a resident dense matrix (tests, data generators).
+pub fn write_binary_dense<P: AsRef<Path>>(
+    path: P,
+    rows: usize,
+    dim: usize,
+    data: &[f32],
+) -> anyhow::Result<()> {
+    assert_eq!(data.len(), rows * dim);
+    let header = BinaryHeader {
+        kind: BinaryKind::Dense,
+        rows,
+        dim,
+        nnz: 0,
+    };
+    let mut w = std::io::BufWriter::new(File::create(path)?);
+    w.write_all(&header.encode())?;
+    write_f32s(&mut w, data)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Write a resident CSR matrix (tests, data generators).
+pub fn write_binary_sparse<P: AsRef<Path>>(path: P, m: &Csr) -> anyhow::Result<()> {
+    let header = BinaryHeader {
+        kind: BinaryKind::Sparse,
+        rows: m.rows,
+        dim: m.cols,
+        nnz: m.nnz(),
+    };
+    let mut w = std::io::BufWriter::new(File::create(path)?);
+    w.write_all(&header.encode())?;
+    for &p in &m.indptr {
+        w.write_all(&(p as u64).to_le_bytes())?;
+    }
+    for &c in &m.indices {
+        w.write_all(&c.to_le_bytes())?;
+    }
+    write_f32s(&mut w, &m.values)?;
+    w.flush()?;
+    Ok(())
+}
+
+fn write_f32s<W: Write>(w: &mut W, vals: &[f32]) -> std::io::Result<()> {
+    // Encode through a fixed block so huge payloads never materialize a
+    // second byte copy.
+    let mut block = [0u8; 8192];
+    for chunk in vals.chunks(block.len() / 4) {
+        for (i, v) in chunk.iter().enumerate() {
+            block[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(&block[..chunk.len() * 4])?;
+    }
+    Ok(())
+}
+
+/// Transcode any [`DataSource`] yielding dense chunks into a binary
+/// container, in one streaming pass — memory stays O(chunk) regardless
+/// of file size. Returns (rows, dim).
+pub fn convert_dense_to_binary<P: AsRef<Path>>(
+    src: &mut dyn DataSource,
+    out_path: P,
+) -> anyhow::Result<(usize, usize)> {
+    let (rows, dim) = (src.rows(), src.dim());
+    let header = BinaryHeader {
+        kind: BinaryKind::Dense,
+        rows,
+        dim,
+        nnz: 0,
+    };
+    let mut w = std::io::BufWriter::new(File::create(out_path.as_ref())?);
+    w.write_all(&header.encode())?;
+    src.reset()?;
+    let mut written = 0usize;
+    while let Some(chunk) = src.next_chunk()? {
+        let DataShard::Dense { data, .. } = chunk else {
+            anyhow::bail!("convert: expected dense chunks (use --sparse for libsvm inputs)");
+        };
+        write_f32s(&mut w, data)?;
+        written += data.len() / dim;
+    }
+    anyhow::ensure!(
+        written == rows,
+        "convert: source yielded {written} rows, expected {rows}"
+    );
+    w.flush()?;
+    Ok((rows, dim))
+}
+
+/// Transcode any [`DataSource`] yielding sparse chunks into a binary
+/// container. Three streaming passes (indptr, indices, values — the
+/// sections are laid out back to back, so each pass appends one section
+/// sequentially); memory stays O(chunk + rows·8) — the indptr section is
+/// buffered, 8 bytes per row. Returns (rows, cols, nnz).
+///
+/// Known one-time-cost trade-off: after pass 1 every section offset is
+/// computable, so passes 2 and 3 could merge into one text parse using
+/// two seek-positioned writers. Conversion runs once per dataset, so we
+/// keep the simpler sequential-append form; revisit if convert time on
+/// huge sparse inputs ever matters.
+pub fn convert_sparse_to_binary<P: AsRef<Path>>(
+    src: &mut dyn DataSource,
+    out_path: P,
+) -> anyhow::Result<(usize, usize, usize)> {
+    let (rows, cols) = (src.rows(), src.dim());
+
+    // Pass 1: per-row nnz -> cumulative indptr.
+    let mut indptr: Vec<u64> = Vec::with_capacity(rows + 1);
+    indptr.push(0);
+    src.reset()?;
+    while let Some(chunk) = src.next_chunk()? {
+        let DataShard::Sparse(m) = chunk else {
+            anyhow::bail!("convert --sparse: expected sparse chunks");
+        };
+        for r in 0..m.rows {
+            let (c, _) = m.row(r);
+            indptr.push(indptr.last().unwrap() + c.len() as u64);
+        }
+    }
+    anyhow::ensure!(
+        indptr.len() == rows + 1,
+        "convert: source yielded {} rows, expected {rows}",
+        indptr.len() - 1
+    );
+    let nnz = usize::try_from(*indptr.last().unwrap())?;
+
+    let header = BinaryHeader {
+        kind: BinaryKind::Sparse,
+        rows,
+        dim: cols,
+        nnz,
+    };
+    let mut w = std::io::BufWriter::new(File::create(out_path.as_ref())?);
+    w.write_all(&header.encode())?;
+    for &p in &indptr {
+        w.write_all(&p.to_le_bytes())?;
+    }
+    drop(indptr);
+
+    // Pass 2: indices section.
+    src.reset()?;
+    while let Some(chunk) = src.next_chunk()? {
+        let DataShard::Sparse(m) = chunk else {
+            anyhow::bail!("convert --sparse: expected sparse chunks");
+        };
+        for r in 0..m.rows {
+            let (c, _) = m.row(r);
+            for &col in c {
+                w.write_all(&col.to_le_bytes())?;
+            }
+        }
+    }
+
+    // Pass 3: values section.
+    src.reset()?;
+    while let Some(chunk) = src.next_chunk()? {
+        let DataShard::Sparse(m) = chunk else {
+            anyhow::bail!("convert --sparse: expected sparse chunks");
+        };
+        for r in 0..m.rows {
+            let (_, v) = m.row(r);
+            write_f32s(&mut w, v)?;
+        }
+    }
+    w.flush()?;
+    Ok((rows, cols, nnz))
+}
+
+// ---------------------------------------------------------------------
+// Shared seek-read helpers
+// ---------------------------------------------------------------------
+
+/// Fixed staging block for LE decode: reads land here, then decode into
+/// the typed chunk buffer — bounded at 8 KiB so the data-buffer ledger
+/// stays the chunk window itself.
+const IO_BLOCK: usize = 8192;
+
+/// Seek to `off` and append `count` little-endian values of byte width
+/// `W` to `out`, decoding through the fixed staging block. The exact
+/// reservation matters: the decode buffer never overshoots the chunk
+/// (the 2×-window prefetch bound counts capacity, not length).
+fn read_le_at<const W: usize, T>(
+    f: &mut File,
+    off: u64,
+    count: usize,
+    out: &mut Vec<T>,
+    decode: fn([u8; W]) -> T,
+) -> anyhow::Result<()> {
+    f.seek(SeekFrom::Start(off))?;
+    out.reserve_exact(count);
+    let mut block = [0u8; IO_BLOCK];
+    let mut left = count;
+    while left > 0 {
+        let take = left.min(IO_BLOCK / W);
+        f.read_exact(&mut block[..take * W])?;
+        for i in 0..take {
+            out.push(decode(block[i * W..(i + 1) * W].try_into().unwrap()));
+        }
+        left -= take;
+    }
+    Ok(())
+}
+
+fn read_f32s_at(f: &mut File, off: u64, count: usize, out: &mut Vec<f32>) -> anyhow::Result<()> {
+    read_le_at(f, off, count, out, f32::from_le_bytes)
+}
+
+fn read_u32s_at(f: &mut File, off: u64, count: usize, out: &mut Vec<u32>) -> anyhow::Result<()> {
+    read_le_at(f, off, count, out, u32::from_le_bytes)
+}
+
+fn read_u64s_at(f: &mut File, off: u64, count: usize, out: &mut Vec<u64>) -> anyhow::Result<()> {
+    read_le_at(f, off, count, out, u64::from_le_bytes)
+}
+
+// ---------------------------------------------------------------------
+// Dense binary source
+// ---------------------------------------------------------------------
+
+/// Streams a dense binary container in `chunk_rows` windows: each chunk
+/// is one seek + sequential `read_exact`, no parsing. Supports a
+/// `(rank, ranks)` row-window view for per-rank file sharding.
+pub struct BinaryDenseFileSource {
+    path: PathBuf,
+    file: File,
+    dim: usize,
+    /// Global row index of this source's window start.
+    row_start: usize,
+    /// Rows in this source's window (what `rows()` reports).
+    window_rows: usize,
+    chunk_rows: usize,
+    cursor: usize,
+    buf: Vec<f32>,
+    reported: usize,
+}
+
+impl Drop for BinaryDenseFileSource {
+    fn drop(&mut self) {
+        memtrack::data_buffer_resize(self.reported, 0);
+    }
+}
+
+impl BinaryDenseFileSource {
+    /// Open the whole file (single-rank view).
+    pub fn open<P: AsRef<Path>>(path: P, chunk_rows: usize) -> anyhow::Result<Self> {
+        Self::open_shard(path, chunk_rows, 0, 1)
+    }
+
+    /// Open rank `rank` of `ranks`' disjoint row window.
+    pub fn open_shard<P: AsRef<Path>>(
+        path: P,
+        chunk_rows: usize,
+        rank: usize,
+        ranks: usize,
+    ) -> anyhow::Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let mut file = File::open(&path)?;
+        let header = read_header(&mut file, &path)?;
+        anyhow::ensure!(
+            header.kind == BinaryKind::Dense,
+            "{}: sparse container opened as dense (use the sparse kernel, -k 2)",
+            path.display()
+        );
+        let window = rank_window(header.rows, rank, ranks)?;
+        Ok(BinaryDenseFileSource {
+            path,
+            file,
+            dim: header.dim,
+            row_start: window.start,
+            window_rows: window.len(),
+            chunk_rows,
+            cursor: 0,
+            buf: Vec::new(),
+            reported: 0,
+        })
+    }
+
+    fn next_take(&self) -> usize {
+        chunk_take(self.window_rows, self.cursor, self.chunk_rows)
+    }
+
+    /// Read the next `take` rows into `out` (cleared first) and advance.
+    fn fill(&mut self, out: &mut Vec<f32>, take: usize) -> anyhow::Result<()> {
+        out.clear();
+        let global = self.row_start + self.cursor;
+        let off = HEADER_LEN + 4 * (global as u64) * (self.dim as u64);
+        read_f32s_at(&mut self.file, off, take * self.dim, out)?;
+        self.cursor += take;
+        Ok(())
+    }
+}
+
+impl DataSource for BinaryDenseFileSource {
+    fn rows(&self) -> usize {
+        self.window_rows
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn chunk_rows(&self) -> usize {
+        self.chunk_rows
+    }
+
+    fn next_chunk(&mut self) -> anyhow::Result<Option<DataShard<'_>>> {
+        let take = self.next_take();
+        if take == 0 {
+            return Ok(None);
+        }
+        let mut buf = std::mem::take(&mut self.buf);
+        let res = self.fill(&mut buf, take);
+        self.buf = buf;
+        res?;
+        let bytes = self.buf.capacity() * 4;
+        memtrack::data_buffer_resize(self.reported, bytes);
+        self.reported = bytes;
+        Ok(Some(DataShard::Dense {
+            data: &self.buf,
+            dim: self.dim,
+        }))
+    }
+
+    fn next_chunk_into(&mut self, out: &mut ChunkBuf) -> anyhow::Result<bool> {
+        let take = self.next_take();
+        if take == 0 {
+            return Ok(false);
+        }
+        let dim = self.dim;
+        self.fill(out.make_dense(dim), take)?;
+        Ok(true)
+    }
+
+    fn reset(&mut self) -> anyhow::Result<()> {
+        self.cursor = 0;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sparse binary source
+// ---------------------------------------------------------------------
+
+/// Streams a sparse (CSR) binary container in `chunk_rows` windows
+/// through a reusable scratch CSR: per chunk, one indptr window read and
+/// one seek-read per section. Supports `(rank, ranks)` row windows.
+pub struct BinarySparseFileSource {
+    path: PathBuf,
+    file: File,
+    header: BinaryHeader,
+    row_start: usize,
+    window_rows: usize,
+    chunk_rows: usize,
+    cursor: usize,
+    /// Reusable indptr window decode buffer (u64, absolute offsets).
+    ips: Vec<u64>,
+    scratch: Csr,
+    reported: usize,
+}
+
+impl Drop for BinarySparseFileSource {
+    fn drop(&mut self) {
+        memtrack::data_buffer_resize(self.reported, 0);
+    }
+}
+
+impl BinarySparseFileSource {
+    /// Open the whole file (single-rank view).
+    pub fn open<P: AsRef<Path>>(path: P, chunk_rows: usize) -> anyhow::Result<Self> {
+        Self::open_shard(path, chunk_rows, 0, 1)
+    }
+
+    /// Open rank `rank` of `ranks`' disjoint row window.
+    pub fn open_shard<P: AsRef<Path>>(
+        path: P,
+        chunk_rows: usize,
+        rank: usize,
+        ranks: usize,
+    ) -> anyhow::Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let mut file = File::open(&path)?;
+        let header = read_header(&mut file, &path)?;
+        anyhow::ensure!(
+            header.kind == BinaryKind::Sparse,
+            "{}: dense container opened as sparse (drop -k 2 for dense data)",
+            path.display()
+        );
+        let window = rank_window(header.rows, rank, ranks)?;
+        let cols = header.dim;
+        Ok(BinarySparseFileSource {
+            path,
+            file,
+            header,
+            row_start: window.start,
+            window_rows: window.len(),
+            chunk_rows,
+            cursor: 0,
+            ips: Vec::new(),
+            scratch: Csr::new_empty(0, cols),
+            reported: 0,
+        })
+    }
+
+    fn next_take(&self) -> usize {
+        chunk_take(self.window_rows, self.cursor, self.chunk_rows)
+    }
+
+    /// Read the next `take` rows into `out` (a reusable CSR) and advance.
+    fn fill(&mut self, out: &mut Csr, take: usize) -> anyhow::Result<()> {
+        let global = self.row_start + self.cursor;
+        let h = self.header; // Copy: keeps `self` free for field borrows
+
+        // indptr window: take + 1 cumulative offsets.
+        self.ips.clear();
+        read_u64s_at(
+            &mut self.file,
+            h.indptr_off() + 8 * global as u64,
+            take + 1,
+            &mut self.ips,
+        )?;
+        let a = usize::try_from(self.ips[0])?;
+        let b = usize::try_from(self.ips[take])?;
+        anyhow::ensure!(
+            b >= a && b <= h.nnz,
+            "{}: corrupt indptr section (window [{a}, {b}), nnz {})",
+            self.path.display(),
+            h.nnz
+        );
+        out.rows = take;
+        out.cols = h.dim;
+        out.indptr.clear();
+        for w in self.ips.windows(2) {
+            anyhow::ensure!(
+                w[1] >= w[0],
+                "{}: corrupt indptr section (non-monotone)",
+                self.path.display()
+            );
+        }
+        for &p in &self.ips {
+            out.indptr.push(usize::try_from(p)? - a);
+        }
+
+        out.indices.clear();
+        read_u32s_at(&mut self.file, h.indices_off() + 4 * a as u64, b - a, &mut out.indices)?;
+        for &c in &out.indices {
+            anyhow::ensure!(
+                (c as usize) < h.dim,
+                "{}: corrupt indices section (column {c} out of range, cols {})",
+                self.path.display(),
+                h.dim
+            );
+        }
+        out.values.clear();
+        read_f32s_at(&mut self.file, h.values_off() + 4 * a as u64, b - a, &mut out.values)?;
+        self.cursor += take;
+        Ok(())
+    }
+
+    /// Report this source's internal buffers (scratch CSR + indptr
+    /// decode window) to the additive data-buffer gauge. Called on both
+    /// drive paths — under prefetch the scratch stays empty but `ips`
+    /// is still real per-source memory.
+    fn sync_gauge(&mut self) {
+        let bytes = self.scratch.heap_bytes() + self.ips.capacity() * 8;
+        memtrack::data_buffer_resize(self.reported, bytes);
+        self.reported = bytes;
+    }
+}
+
+impl DataSource for BinarySparseFileSource {
+    fn rows(&self) -> usize {
+        self.window_rows
+    }
+
+    fn dim(&self) -> usize {
+        self.header.dim
+    }
+
+    fn chunk_rows(&self) -> usize {
+        self.chunk_rows
+    }
+
+    fn next_chunk(&mut self) -> anyhow::Result<Option<DataShard<'_>>> {
+        let take = self.next_take();
+        if take == 0 {
+            return Ok(None);
+        }
+        let mut scratch = std::mem::replace(&mut self.scratch, Csr::new_empty(0, 0));
+        let res = self.fill(&mut scratch, take);
+        self.scratch = scratch;
+        res?;
+        self.sync_gauge();
+        Ok(Some(DataShard::Sparse(&self.scratch)))
+    }
+
+    fn next_chunk_into(&mut self, out: &mut ChunkBuf) -> anyhow::Result<bool> {
+        let take = self.next_take();
+        if take == 0 {
+            return Ok(false);
+        }
+        let m = out.make_sparse(self.header.dim);
+        self.fill(m, take)?;
+        // The chunk itself lives in the caller's (gauge-tracked) buffer,
+        // but `ips` is ours on either drive path — keep it on the ledger.
+        self.sync_gauge();
+        Ok(true)
+    }
+
+    fn reset(&mut self) -> anyhow::Result<()> {
+        self.cursor = 0;
+        Ok(())
+    }
+}

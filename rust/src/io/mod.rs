@@ -1,16 +1,23 @@
 //! File formats (paper §4.1): plain dense, ESOM-header dense, libsvm
 //! sparse inputs; codebook / BMU / U-matrix outputs with Databionic ESOM
-//! Tools compatibility (`.wts`, `.bm`, `.umx`); plus the out-of-core
-//! streaming sources (`stream::DataSource`, CLI `--chunk-rows`).
+//! Tools compatibility (`.wts`, `.bm`, `.umx`); the out-of-core
+//! streaming sources (`stream::DataSource`, CLI `--chunk-rows`); and the
+//! binary container format (`binary`, CLI `somoclu convert`) that
+//! streams with zero per-epoch parsing.
 
+pub mod binary;
 pub mod dense;
 pub mod esom;
 pub mod output;
 pub mod sparse;
 pub mod stream;
 
+pub use binary::{
+    sniff as sniff_binary, BinaryDenseFileSource, BinaryKind, BinarySparseFileSource,
+};
 pub use dense::{read_dense, DenseMatrix};
 pub use sparse::read_sparse;
 pub use stream::{
-    ChunkedDenseFileSource, ChunkedSparseFileSource, DataSource, InMemorySource,
+    ChunkBuf, ChunkedDenseFileSource, ChunkedSparseFileSource, DataSource,
+    InMemorySource, PrefetchSource,
 };

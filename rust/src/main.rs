@@ -2,17 +2,55 @@
 //!
 //! Single process: `somoclu [OPTIONS] INPUT OUTPUT_PREFIX`.
 //! Simulated cluster: add `--ranks N` (stands in for `mpirun -np N`).
+//! Transcode to the binary fast path: `somoclu convert IN OUT`.
+//!
+//! Binary container inputs (written by `convert`) are auto-detected by
+//! magic; they always stream (chunked by `--chunk-rows`, whole-file
+//! otherwise) with zero per-epoch parsing. `--prefetch` overlaps chunk
+//! I/O with kernel compute. `--ranks N --chunk-rows M` streams per-rank
+//! disjoint shards of one file — no resident copy is ever built.
+
+use std::path::PathBuf;
 
 use somoclu::cli;
-use somoclu::cluster::runner::{train_cluster, ClusterData};
+use somoclu::cluster::runner::{train_cluster, train_cluster_stream, ClusterData, StreamInput};
 use somoclu::coordinator::train::{train, train_stream};
+use somoclu::io::binary::{self, BinaryKind};
 use somoclu::io::output::OutputWriter;
-use somoclu::io::{read_dense, read_sparse, ChunkedDenseFileSource, ChunkedSparseFileSource, DataSource};
+use somoclu::io::{
+    read_dense, read_sparse, BinaryDenseFileSource, BinarySparseFileSource,
+    ChunkedDenseFileSource, ChunkedSparseFileSource, DataSource, PrefetchSource,
+};
 use somoclu::kernels::{DataShard, KernelType};
 use somoclu::som::Codebook;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
+
+    // Subcommand: `somoclu convert [OPTIONS] INPUT OUTPUT`.
+    if args.first().map(String::as_str) == Some("convert") {
+        let spec = cli::convert_spec();
+        if args.iter().any(|a| a == "-h" || a == "--help") {
+            print!("{}", spec.usage("somoclu convert"));
+            return;
+        }
+        let opts = match spec
+            .parse(args[1..].iter().cloned())
+            .and_then(|p| cli::parse_convert(&p))
+        {
+            Ok(o) => o,
+            Err(e) => {
+                eprintln!("error: {e}\n\n{}", spec.usage("somoclu convert"));
+                std::process::exit(2);
+            }
+        };
+        if let Err(e) = run_convert(opts) {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+        return;
+    }
+
     let spec = cli::arg_spec();
     if args.iter().any(|a| a == "-h" || a == "--help") {
         print!("{}", spec.usage("somoclu"));
@@ -35,6 +73,136 @@ fn main() {
     if let Err(e) = run(opts) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
+    }
+}
+
+/// Transcode a text input into the binary container, streaming in
+/// `chunk_rows` windows so conversion memory stays bounded too.
+/// Do `a` and `b` name the same on-disk file? Inode identity on Unix
+/// (catches hard links, not just symlink/relative aliases), canonical
+/// path elsewhere. A nonexistent path matches nothing.
+#[cfg(unix)]
+fn same_file(a: &str, b: &str) -> bool {
+    use std::os::unix::fs::MetadataExt;
+    match (std::fs::metadata(a), std::fs::metadata(b)) {
+        (Ok(x), Ok(y)) => x.dev() == y.dev() && x.ino() == y.ino(),
+        _ => false,
+    }
+}
+
+#[cfg(not(unix))]
+fn same_file(a: &str, b: &str) -> bool {
+    match (std::fs::canonicalize(a), std::fs::canonicalize(b)) {
+        (Ok(x), Ok(y)) => x == y,
+        _ => false,
+    }
+}
+
+fn run_convert(opts: cli::ConvertOptions) -> anyhow::Result<()> {
+    // Refuse in-place conversion BEFORE File::create truncates the
+    // input (a nonexistent output cannot alias an existing input).
+    anyhow::ensure!(
+        !same_file(&opts.input_file, &opts.output_file),
+        "convert: input and output are the same file ({}); pick a \
+         different output path",
+        opts.input_file
+    );
+    anyhow::ensure!(
+        binary::sniff(&opts.input_file)?.is_none(),
+        "{}: already a somoclu binary container",
+        opts.input_file
+    );
+    let t0 = std::time::Instant::now();
+    if opts.sparse {
+        let mut src =
+            ChunkedSparseFileSource::open(&opts.input_file, opts.min_cols, opts.chunk_rows)?;
+        let (rows, cols, nnz) =
+            binary::convert_sparse_to_binary(&mut src, &opts.output_file)?;
+        eprintln!(
+            "converted {rows} rows x {cols} dims ({nnz} nonzeros, {:.2}% dense) \
+             to sparse binary {} in {:?}",
+            100.0 * nnz as f64 / (rows as f64 * cols as f64),
+            opts.output_file,
+            t0.elapsed()
+        );
+    } else {
+        let mut src = ChunkedDenseFileSource::open(&opts.input_file, opts.chunk_rows)?;
+        let (rows, dim) = binary::convert_dense_to_binary(&mut src, &opts.output_file)?;
+        eprintln!(
+            "converted {rows} rows x {dim} dims to dense binary {} in {:?}",
+            opts.output_file,
+            t0.elapsed()
+        );
+    }
+    Ok(())
+}
+
+/// Build the single-process streaming source for `input`: binary
+/// containers stream natively; text files stream re-parsed. `--prefetch`
+/// wraps either in the double-buffered read-ahead adapter.
+fn open_stream_source(
+    input: &str,
+    kind: Option<BinaryKind>,
+    kernel: KernelType,
+    chunk_rows: usize,
+    prefetch: bool,
+) -> anyhow::Result<Box<dyn DataSource + Send>> {
+    let mut src: Box<dyn DataSource + Send> = match kind {
+        Some(BinaryKind::Dense) => {
+            let s = BinaryDenseFileSource::open(input, chunk_rows)?;
+            eprintln!(
+                "streaming dense binary input: {} rows x {} dims ({} chunks)",
+                s.rows(),
+                s.dim(),
+                chunk_desc(chunk_rows)
+            );
+            Box::new(s)
+        }
+        Some(BinaryKind::Sparse) => {
+            let s = BinarySparseFileSource::open(input, chunk_rows)?;
+            eprintln!(
+                "streaming sparse binary input: {} rows x {} dims ({} chunks)",
+                s.rows(),
+                s.dim(),
+                chunk_desc(chunk_rows)
+            );
+            Box::new(s)
+        }
+        None if kernel == KernelType::SparseCpu => {
+            let s = ChunkedSparseFileSource::open(input, 0, chunk_rows)?;
+            eprintln!(
+                "streaming sparse input: {} rows x {} dims ({} chunks; run \
+                 `somoclu convert --sparse` once to skip per-epoch parsing)",
+                s.rows(),
+                s.dim(),
+                chunk_desc(chunk_rows)
+            );
+            Box::new(s)
+        }
+        None => {
+            let s = ChunkedDenseFileSource::open(input, chunk_rows)?;
+            eprintln!(
+                "streaming dense input: {} rows x {} dims ({} chunks; run \
+                 `somoclu convert` once to skip per-epoch parsing)",
+                s.rows(),
+                s.dim(),
+                chunk_desc(chunk_rows)
+            );
+            Box::new(s)
+        }
+    };
+    if prefetch {
+        eprintln!("prefetch on: chunk k+1 loads while the kernel runs chunk k");
+        src = Box::new(PrefetchSource::new(src));
+    }
+    Ok(src)
+}
+
+fn chunk_desc(chunk_rows: usize) -> String {
+    if chunk_rows == 0 {
+        "whole-pass".to_string()
+    } else {
+        format!("{chunk_rows}-row")
     }
 }
 
@@ -62,40 +230,53 @@ fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
         None => None,
     };
 
-    if cfg.ranks > 1 && cfg.chunk_rows > 0 {
-        eprintln!(
-            "note: --chunk-rows with --ranks still loads the full input and \
-             shards it in memory; each rank then streams its shard in \
-             {}-row windows (file-backed rank streaming is a ROADMAP item)",
-            cfg.chunk_rows
-        );
+    if cfg.ranks > 1 {
+        anyhow::ensure!(initial.is_none(), "--ranks with -c is not supported");
     }
 
+    // Binary containers (written by `somoclu convert`) are detected by
+    // magic and always stream — there is no reason to materialize them.
+    let binary_kind = binary::sniff(&opts.input_file)
+        .map_err(|e| anyhow::anyhow!("{}: {e}", opts.input_file))?;
+    let streaming = cfg.chunk_rows > 0 || binary_kind.is_some();
+
     let t0 = std::time::Instant::now();
-    let result = if cfg.ranks == 1 && cfg.chunk_rows > 0 {
-        // Out-of-core path: never materialize the full data set — the
-        // file is re-parsed per epoch in `--chunk-rows` windows, capping
-        // data memory at O(chunk_rows * dim).
-        if cfg.kernel == KernelType::SparseCpu {
-            let mut src =
-                ChunkedSparseFileSource::open(&opts.input_file, 0, cfg.chunk_rows)?;
-            eprintln!(
-                "streaming sparse input: {} rows x {} dims in {}-row chunks",
-                src.rows(),
-                src.dim(),
-                cfg.chunk_rows
-            );
-            train_stream(cfg, &mut src, initial, Some(&writer))?
+    let result = if cfg.ranks > 1 && streaming {
+        // Out-of-core cluster path: every rank opens its own disjoint
+        // row window of the input file — the full data set is never
+        // resident anywhere.
+        let path = PathBuf::from(&opts.input_file);
+        let input = if binary_kind.is_some() {
+            StreamInput::Binary { path }
+        } else if cfg.kernel == KernelType::SparseCpu {
+            StreamInput::SparseText { path, min_cols: 0 }
         } else {
-            let mut src = ChunkedDenseFileSource::open(&opts.input_file, cfg.chunk_rows)?;
-            eprintln!(
-                "streaming dense input: {} rows x {} dims in {}-row chunks",
-                src.rows(),
-                src.dim(),
-                cfg.chunk_rows
-            );
-            train_stream(cfg, &mut src, initial, Some(&writer))?
-        }
+            StreamInput::DenseText { path }
+        };
+        eprintln!(
+            "streaming {} per-rank shards ({} chunks each{})",
+            cfg.ranks,
+            chunk_desc(cfg.chunk_rows),
+            if cfg.prefetch { ", prefetched" } else { "" }
+        );
+        let (res, report) = train_cluster_stream(cfg, input, opts.net.clone())?;
+        eprintln!(
+            "cluster: {} ranks, {} msgs, {} bytes on the wire",
+            report.ranks, report.messages_sent, report.bytes_sent
+        );
+        res
+    } else if cfg.ranks == 1 && streaming {
+        // Out-of-core single-process path: never materialize the full
+        // data set — binary inputs seek-read chunks, text inputs are
+        // re-parsed per epoch in `--chunk-rows` windows.
+        let mut src = open_stream_source(
+            &opts.input_file,
+            binary_kind,
+            cfg.kernel,
+            cfg.chunk_rows,
+            cfg.prefetch,
+        )?;
+        train_stream(cfg, &mut src, initial, Some(&writer))?
     } else if cfg.kernel == KernelType::SparseCpu {
         let m = read_sparse(&opts.input_file, 0)?;
         eprintln!(
@@ -105,7 +286,6 @@ fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
             m.density() * 100.0
         );
         if cfg.ranks > 1 {
-            anyhow::ensure!(initial.is_none(), "--ranks with -c is not supported");
             let (res, report) =
                 train_cluster(cfg, ClusterData::Sparse(m), opts.net.clone())?;
             eprintln!(
@@ -120,7 +300,6 @@ fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
         let m = read_dense(&opts.input_file)?;
         eprintln!("loaded dense input: {} rows x {} dims", m.rows, m.cols);
         if cfg.ranks > 1 {
-            anyhow::ensure!(initial.is_none(), "--ranks with -c is not supported");
             let (res, report) = train_cluster(
                 cfg,
                 ClusterData::Dense {
@@ -147,7 +326,7 @@ fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
         }
     };
 
-    // Cluster path does not stream snapshots; write final outputs here.
+    // Cluster paths do not stream snapshots; write final outputs here.
     if cfg.ranks > 1 {
         writer.write_final(&grid, &result.codebook, &result.bmus, &result.umatrix)?;
     }

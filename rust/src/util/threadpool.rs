@@ -40,8 +40,27 @@ pub fn split_ranges(total: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
     out
 }
 
+/// Minimum items per worker range: below this, the ~10 µs/thread spawn
+/// dominates the work itself. Streaming chunks can be tiny (the last
+/// chunk of a pass, or a small `--chunk-rows`), and before this floor a
+/// 16-row chunk on a 16-core host paid 16 spawns for ~one row each.
+///
+/// Calibration: 64, not higher — parallel_ranges also carries the BMU
+/// search, where one item costs O(nodes · dim) (~10 µs/row on a 50×50
+/// map at dim 32, so 64 items already amortize a spawn ~60×). A 256
+/// floor would cap the README-recommended `--chunk-rows 1000` at 4
+/// threads and sink the streaming-vs-resident acceptance target; at 64
+/// that chunk still fans out to 16 threads.
+///
+/// Results are unaffected by construction: BMUs are per-row and the
+/// accumulation is node-parallel, so thread count never changes output
+/// (see `thread_count_invariant`).
+pub const MIN_ITEMS_PER_THREAD: usize = 64;
+
 /// Fork-join map over contiguous index ranges: `f(thread_idx, range)` runs
 /// on its own thread; the Vec of results is returned in range order.
+/// The thread count is capped so each range carries at least
+/// [`MIN_ITEMS_PER_THREAD`] items (tiny inputs run inline on the caller).
 ///
 /// `f` only borrows (scoped threads), so callers can close over shared
 /// slices — this is exactly the "threads share one codebook" memory model
@@ -51,6 +70,7 @@ where
     T: Send,
     F: Fn(usize, std::ops::Range<usize>) -> T + Sync,
 {
+    let threads = threads.min(total.div_ceil(MIN_ITEMS_PER_THREAD)).max(1);
     let ranges = split_ranges(total, threads);
     if ranges.len() <= 1 {
         return ranges
@@ -155,5 +175,30 @@ mod tests {
     fn single_thread_fallback() {
         let out = parallel_ranges(10, 1, |i, r| (i, r));
         assert_eq!(out, vec![(0, 0..10)]);
+    }
+
+    #[test]
+    fn min_items_floor_caps_range_count() {
+        // Tiny totals collapse to few ranges regardless of the requested
+        // thread count; totals that give every thread at least the floor
+        // still honor the requested count.
+        assert_eq!(parallel_ranges(10, 8, |i, r| (i, r)).len(), 1);
+        assert_eq!(parallel_ranges(MIN_ITEMS_PER_THREAD, 8, |i, r| (i, r)).len(), 1);
+        assert_eq!(
+            parallel_ranges(2 * MIN_ITEMS_PER_THREAD, 8, |i, r| (i, r)).len(),
+            2
+        );
+        // A 1000-row streaming chunk keeps full 8-way parallelism.
+        assert_eq!(parallel_ranges(1000, 8, |i, r| (i, r)).len(), 8);
+        assert_eq!(
+            parallel_ranges(MIN_ITEMS_PER_THREAD * 8, 8, |i, r| (i, r)).len(),
+            8
+        );
+        // Coverage is unchanged by the floor.
+        for total in [10usize, 100, 1000] {
+            let got = parallel_ranges(total, 8, |_, r| r);
+            let sum: usize = got.iter().map(|r| r.len()).sum();
+            assert_eq!(sum, total);
+        }
     }
 }

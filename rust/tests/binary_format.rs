@@ -1,0 +1,524 @@
+//! Binary container format (ISSUE 2): text → `convert` → binary streams
+//! must be **bit-identical** to text-parsed streams — same rows, same
+//! BMUs, same Eq. 6 accumulators — and corrupt/truncated containers must
+//! be rejected at open, before any training runs.
+
+use somoclu::coordinator::config::TrainConfig;
+use somoclu::coordinator::train::train_stream;
+use somoclu::io::binary::{
+    self, convert_dense_to_binary, convert_sparse_to_binary, write_binary_dense,
+    write_binary_sparse, BinaryKind, HEADER_LEN,
+};
+use somoclu::io::stream::{DataSource, PrefetchSource};
+use somoclu::io::{
+    dense, sparse as sparse_io, BinaryDenseFileSource, BinarySparseFileSource,
+    ChunkedDenseFileSource, ChunkedSparseFileSource,
+};
+use somoclu::kernels::dense_cpu::DenseCpuKernel;
+use somoclu::kernels::{DataShard, KernelType, TrainingKernel};
+use somoclu::prop_assert;
+use somoclu::som::{Grid, GridType, MapType, Neighborhood};
+use somoclu::sparse::Csr;
+use somoclu::util::prop::{self, Config};
+use somoclu::util::rng::Rng;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("somoclu_binfmt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Drain dense chunks as raw bit patterns (exact comparison currency).
+fn drain_dense_bits(src: &mut dyn DataSource) -> Vec<u32> {
+    let mut out = Vec::new();
+    while let Some(chunk) = src.next_chunk().unwrap() {
+        let DataShard::Dense { data, .. } = chunk else {
+            panic!("expected dense chunks");
+        };
+        out.extend(data.iter().map(|v| v.to_bits()));
+    }
+    out
+}
+
+/// Drain sparse chunks as (indptr, indices, value-bits) triplets.
+fn drain_sparse_exact(src: &mut dyn DataSource) -> (Vec<usize>, Vec<u32>, Vec<u32>) {
+    let (mut ips, mut idx, mut vals) = (vec![0usize], Vec::new(), Vec::new());
+    while let Some(chunk) = src.next_chunk().unwrap() {
+        let DataShard::Sparse(m) = chunk else {
+            panic!("expected sparse chunks");
+        };
+        let base = *ips.last().unwrap();
+        ips.extend(m.indptr[1..].iter().map(|p| base + p));
+        idx.extend_from_slice(&m.indices);
+        vals.extend(m.values.iter().map(|v| v.to_bits()));
+    }
+    (ips, idx, vals)
+}
+
+// ---------------------------------------------------------------------
+// Round trips
+// ---------------------------------------------------------------------
+
+#[test]
+fn dense_text_convert_binary_chunks_bit_identical() {
+    let mut rng = Rng::new(70);
+    let (rows, dim) = (57, 7);
+    let data: Vec<f32> = (0..rows * dim).map(|_| rng.normal_f32()).collect();
+    let txt = tmp("rt_dense.txt");
+    dense::write_dense(&txt, rows, dim, &data, true).unwrap();
+    let bin = tmp("rt_dense.somb");
+    let mut src = ChunkedDenseFileSource::open(&txt, 16).unwrap();
+    assert_eq!(convert_dense_to_binary(&mut src, &bin).unwrap(), (rows, dim));
+    assert_eq!(binary::sniff(&bin).unwrap(), Some(BinaryKind::Dense));
+    assert_eq!(binary::sniff(&txt).unwrap(), None);
+
+    for chunk_rows in [0usize, 1, 13, 57, 100] {
+        let mut from_text = ChunkedDenseFileSource::open(&txt, chunk_rows).unwrap();
+        let mut from_bin = BinaryDenseFileSource::open(&bin, chunk_rows).unwrap();
+        assert_eq!(
+            (from_bin.rows(), from_bin.dim()),
+            (from_text.rows(), from_text.dim())
+        );
+        let want = drain_dense_bits(&mut from_text);
+        assert_eq!(drain_dense_bits(&mut from_bin), want, "chunk_rows={chunk_rows}");
+        // Second epoch identical.
+        from_bin.reset().unwrap();
+        assert_eq!(drain_dense_bits(&mut from_bin), want);
+    }
+}
+
+#[test]
+fn sparse_text_convert_binary_chunks_bit_identical() {
+    let mut rng = Rng::new(71);
+    let m = Csr::random(41, 19, 0.25, &mut rng);
+    let txt = tmp("rt_sparse.svm");
+    sparse_io::write_sparse(&txt, &m).unwrap();
+    let bin = tmp("rt_sparse.somb");
+    let mut src = ChunkedSparseFileSource::open(&txt, 19, 8).unwrap();
+    let (rows, cols, nnz) = convert_sparse_to_binary(&mut src, &bin).unwrap();
+    assert_eq!((rows, cols), (src.rows(), 19));
+    assert_eq!(nnz, m.nnz());
+    assert_eq!(binary::sniff(&bin).unwrap(), Some(BinaryKind::Sparse));
+
+    for chunk_rows in [0usize, 1, 6, 41] {
+        let mut from_text = ChunkedSparseFileSource::open(&txt, 19, chunk_rows).unwrap();
+        let mut from_bin = BinarySparseFileSource::open(&bin, chunk_rows).unwrap();
+        assert_eq!(from_bin.rows(), from_text.rows());
+        assert_eq!(from_bin.dim(), from_text.dim());
+        let want = drain_sparse_exact(&mut from_text);
+        assert_eq!(
+            drain_sparse_exact(&mut from_bin),
+            want,
+            "chunk_rows={chunk_rows}"
+        );
+    }
+}
+
+#[test]
+fn direct_writers_round_trip() {
+    let mut rng = Rng::new(72);
+    let (rows, dim) = (12, 5);
+    let data: Vec<f32> = (0..rows * dim).map(|_| rng.normal_f32()).collect();
+    let bin = tmp("direct_dense.somb");
+    write_binary_dense(&bin, rows, dim, &data).unwrap();
+    let mut src = BinaryDenseFileSource::open(&bin, 0).unwrap();
+    let bits: Vec<u32> = data.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(drain_dense_bits(&mut src), bits);
+
+    let m = Csr::random(9, 6, 0.5, &mut rng);
+    let sbin = tmp("direct_sparse.somb");
+    write_binary_sparse(&sbin, &m).unwrap();
+    let mut src = BinarySparseFileSource::open(&sbin, 4).unwrap();
+    let (ips, idx, vals) = drain_sparse_exact(&mut src);
+    assert_eq!(ips, m.indptr);
+    assert_eq!(idx, m.indices);
+    assert_eq!(vals, m.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+}
+
+#[test]
+fn prop_convert_round_trip_bit_identical() {
+    prop::check_with(
+        Config {
+            cases: 25,
+            ..Default::default()
+        },
+        "binary-convert-roundtrip",
+        |g| {
+            let rows = g.usize_in(1, 24);
+            let cols = g.usize_in(1, 10);
+            let chunk = g.usize_in(0, rows + 4);
+            let data = g.vec_f32(rows * cols, -1e3, 1e3);
+            let txt = tmp("prop_dense.txt");
+            dense::write_dense(&txt, rows, cols, &data, false)
+                .map_err(|e| e.to_string())?;
+            let bin = tmp("prop_dense.somb");
+            let mut src =
+                ChunkedDenseFileSource::open(&txt, 5).map_err(|e| e.to_string())?;
+            convert_dense_to_binary(&mut src, &bin).map_err(|e| e.to_string())?;
+            let mut a = ChunkedDenseFileSource::open(&txt, chunk)
+                .map_err(|e| e.to_string())?;
+            let mut b =
+                BinaryDenseFileSource::open(&bin, chunk).map_err(|e| e.to_string())?;
+            prop_assert!(
+                drain_dense_bits(&mut a) == drain_dense_bits(&mut b),
+                "dense bits differ (rows {rows} cols {cols} chunk {chunk})"
+            );
+
+            // Sparse: random CSR through the same pipeline.
+            let mut rng = Rng::new(g.rng.next_u64());
+            let m = Csr::random(rows, cols.max(2), 0.5, &mut rng);
+            let svm = tmp("prop_sparse.svm");
+            sparse_io::write_sparse(&svm, &m).map_err(|e| e.to_string())?;
+            let sbin = tmp("prop_sparse.somb");
+            let mut src = ChunkedSparseFileSource::open(&svm, m.cols, 4)
+                .map_err(|e| e.to_string())?;
+            convert_sparse_to_binary(&mut src, &sbin).map_err(|e| e.to_string())?;
+            let mut a = ChunkedSparseFileSource::open(&svm, m.cols, chunk)
+                .map_err(|e| e.to_string())?;
+            let mut b = BinarySparseFileSource::open(&sbin, chunk)
+                .map_err(|e| e.to_string())?;
+            prop_assert!(
+                drain_sparse_exact(&mut a) == drain_sparse_exact(&mut b),
+                "sparse sections differ (rows {rows} chunk {chunk})"
+            );
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Kernel-level equality: BMUs and accumulators
+// ---------------------------------------------------------------------
+
+#[test]
+fn binary_chunks_produce_identical_accumulators() {
+    let mut rng = Rng::new(73);
+    let (rows, dim) = (48, 6);
+    let data: Vec<f32> = (0..rows * dim).map(|_| rng.normal_f32()).collect();
+    let txt = tmp("accum.txt");
+    dense::write_dense(&txt, rows, dim, &data, false).unwrap();
+    let bin = tmp("accum.somb");
+    let mut src = ChunkedDenseFileSource::open(&txt, 9).unwrap();
+    convert_dense_to_binary(&mut src, &bin).unwrap();
+
+    let grid = Grid::new(5, 5, GridType::Square, MapType::Planar);
+    let cb = somoclu::som::Codebook::random_init(grid.node_count(), dim, &mut rng);
+    let run = |src: &mut dyn DataSource| {
+        let mut kernel = DenseCpuKernel::new(2);
+        kernel.epoch_begin(&cb).unwrap();
+        let mut accums = Vec::new();
+        while let Some(chunk) = src.next_chunk().unwrap() {
+            accums.push(
+                kernel
+                    .epoch_accumulate(
+                        chunk,
+                        &cb,
+                        &grid,
+                        Neighborhood::gaussian(false),
+                        2.0,
+                        1.0,
+                    )
+                    .unwrap(),
+            );
+        }
+        accums
+    };
+    let mut text_src = ChunkedDenseFileSource::open(&txt, 9).unwrap();
+    let mut bin_src = BinaryDenseFileSource::open(&bin, 9).unwrap();
+    let a = run(&mut text_src);
+    let b = run(&mut bin_src);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        // Same bits in → same bits out: exact, not tolerance-based.
+        assert_eq!(x.bmus, y.bmus);
+        assert_eq!(x.num, y.num);
+        assert_eq!(x.den, y.den);
+        assert_eq!(x.qe_sum.to_bits(), y.qe_sum.to_bits());
+    }
+}
+
+#[test]
+fn binary_and_prefetch_training_matches_text_training() {
+    let mut rng = Rng::new(74);
+    let (rows, dim) = (120, 8);
+    let (data, _) = somoclu::data::gaussian_blobs(rows, dim, 4, 0.2, &mut rng);
+    let txt = tmp("train.txt");
+    dense::write_dense(&txt, rows, dim, &data, false).unwrap();
+    let bin = tmp("train.somb");
+    let mut src = ChunkedDenseFileSource::open(&txt, 32).unwrap();
+    convert_dense_to_binary(&mut src, &bin).unwrap();
+
+    let cfg = TrainConfig {
+        rows: 7,
+        cols: 7,
+        epochs: 5,
+        threads: 2,
+        radius0: Some(3.5),
+        ..Default::default()
+    };
+    let mut text_src = ChunkedDenseFileSource::open(&txt, 17).unwrap();
+    let want = train_stream(&cfg, &mut text_src, None, None).unwrap();
+
+    let mut bin_src = BinaryDenseFileSource::open(&bin, 17).unwrap();
+    let got = train_stream(&cfg, &mut bin_src, None, None).unwrap();
+    assert_eq!(got.bmus, want.bmus);
+    assert_eq!(got.codebook.weights, want.codebook.weights);
+
+    let mut pf = PrefetchSource::new(BinaryDenseFileSource::open(&bin, 17).unwrap());
+    let got = train_stream(&cfg, &mut pf, None, None).unwrap();
+    assert_eq!(got.bmus, want.bmus);
+    assert_eq!(got.codebook.weights, want.codebook.weights);
+}
+
+#[test]
+fn sparse_binary_training_matches_text_training() {
+    let mut rng = Rng::new(75);
+    let m = Csr::random(90, 30, 0.15, &mut rng);
+    let svm = tmp("train.svm");
+    sparse_io::write_sparse(&svm, &m).unwrap();
+    let bin = tmp("train_sp.somb");
+    let mut src = ChunkedSparseFileSource::open(&svm, 30, 20).unwrap();
+    convert_sparse_to_binary(&mut src, &bin).unwrap();
+
+    let cfg = TrainConfig {
+        rows: 6,
+        cols: 6,
+        epochs: 4,
+        kernel: KernelType::SparseCpu,
+        threads: 2,
+        radius0: Some(3.0),
+        ..Default::default()
+    };
+    let mut text_src = ChunkedSparseFileSource::open(&svm, 30, 13).unwrap();
+    let want = train_stream(&cfg, &mut text_src, None, None).unwrap();
+    let mut bin_src = BinarySparseFileSource::open(&bin, 13).unwrap();
+    let got = train_stream(&cfg, &mut bin_src, None, None).unwrap();
+    assert_eq!(got.bmus, want.bmus);
+    assert_eq!(got.codebook.weights, want.codebook.weights);
+
+    let mut pf = PrefetchSource::new(BinarySparseFileSource::open(&bin, 13).unwrap());
+    let got = train_stream(&cfg, &mut pf, None, None).unwrap();
+    assert_eq!(got.bmus, want.bmus);
+}
+
+// ---------------------------------------------------------------------
+// Rank shards over binary containers
+// ---------------------------------------------------------------------
+
+#[test]
+fn binary_shards_are_disjoint_and_cover_file() {
+    let mut rng = Rng::new(76);
+    let (rows, dim) = (37, 5);
+    let data: Vec<f32> = (0..rows * dim).map(|_| rng.normal_f32()).collect();
+    let bin = tmp("shards.somb");
+    write_binary_dense(&bin, rows, dim, &data).unwrap();
+    let bits: Vec<u32> = data.iter().map(|v| v.to_bits()).collect();
+    for ranks in [1usize, 2, 3, 5] {
+        let mut all = Vec::new();
+        for rank in 0..ranks {
+            let mut src =
+                BinaryDenseFileSource::open_shard(&bin, 4, rank, ranks).unwrap();
+            all.extend(drain_dense_bits(&mut src));
+        }
+        assert_eq!(all, bits, "ranks={ranks}");
+    }
+    assert!(BinaryDenseFileSource::open_shard(&bin, 4, 0, rows + 1).is_err());
+    assert!(BinaryDenseFileSource::open_shard(&bin, 4, 3, 3).is_err());
+}
+
+#[test]
+fn sparse_binary_shards_cover_file() {
+    let mut rng = Rng::new(77);
+    let m = Csr::random(29, 11, 0.3, &mut rng);
+    let bin = tmp("shards_sp.somb");
+    write_binary_sparse(&bin, &m).unwrap();
+    let mut whole = BinarySparseFileSource::open(&bin, 0).unwrap();
+    let want = drain_sparse_exact(&mut whole);
+    for ranks in [2usize, 4] {
+        let (mut ips, mut idx, mut vals) = (vec![0usize], Vec::new(), Vec::new());
+        for rank in 0..ranks {
+            let mut src =
+                BinarySparseFileSource::open_shard(&bin, 6, rank, ranks).unwrap();
+            let (i, x, v) = drain_sparse_exact(&mut src);
+            let base = *ips.last().unwrap();
+            ips.extend(i[1..].iter().map(|p| base + p));
+            idx.extend(x);
+            vals.extend(v);
+        }
+        assert_eq!((ips, idx, vals), want, "ranks={ranks}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Corruption / rejection
+// ---------------------------------------------------------------------
+
+#[test]
+fn truncated_and_corrupt_containers_rejected_at_open() {
+    let mut rng = Rng::new(78);
+    let (rows, dim) = (10, 4);
+    let data: Vec<f32> = (0..rows * dim).map(|_| rng.normal_f32()).collect();
+    let good = tmp("good.somb");
+    write_binary_dense(&good, rows, dim, &data).unwrap();
+    let bytes = std::fs::read(&good).unwrap();
+
+    // Shorter than the header.
+    let p = tmp("short.somb");
+    std::fs::write(&p, &bytes[..10]).unwrap();
+    assert!(BinaryDenseFileSource::open(&p, 4).is_err());
+
+    // Truncated payload (header intact, rows missing).
+    let p = tmp("trunc.somb");
+    std::fs::write(&p, &bytes[..bytes.len() - 7]).unwrap();
+    assert!(BinaryDenseFileSource::open(&p, 4).is_err());
+
+    // Trailing garbage (file longer than the header declares).
+    let p = tmp("padded.somb");
+    let mut padded = bytes.clone();
+    padded.extend_from_slice(&[0u8; 5]);
+    std::fs::write(&p, &padded).unwrap();
+    assert!(BinaryDenseFileSource::open(&p, 4).is_err());
+
+    // Bad magic.
+    let p = tmp("magic.somb");
+    let mut bad = bytes.clone();
+    bad[0] = b'X';
+    std::fs::write(&p, &bad).unwrap();
+    assert!(BinaryDenseFileSource::open(&p, 4).is_err());
+    assert_eq!(binary::sniff(&p).unwrap(), None);
+
+    // Unsupported version.
+    let p = tmp("version.somb");
+    let mut bad = bytes.clone();
+    bad[4] = 99;
+    std::fs::write(&p, &bad).unwrap();
+    assert!(BinaryDenseFileSource::open(&p, 4).is_err());
+
+    // Nonzero reserved field.
+    let p = tmp("reserved.somb");
+    let mut bad = bytes.clone();
+    bad[12] = 1;
+    std::fs::write(&p, &bad).unwrap();
+    assert!(BinaryDenseFileSource::open(&p, 4).is_err());
+
+    // Kind mismatch: a dense container is not a sparse source and
+    // vice versa.
+    assert!(BinarySparseFileSource::open(&good, 4).is_err());
+    let m = Csr::random(5, 4, 0.5, &mut rng);
+    let sp = tmp("good_sp.somb");
+    write_binary_sparse(&sp, &m).unwrap();
+    assert!(BinaryDenseFileSource::open(&sp, 4).is_err());
+
+    // The intact file still opens after all this.
+    assert!(BinaryDenseFileSource::open(&good, 4).is_ok());
+}
+
+#[test]
+fn corrupt_sparse_sections_rejected_at_read() {
+    let mut rng = Rng::new(79);
+    let m = Csr::random(8, 6, 0.5, &mut rng);
+    let good = tmp("sections.somb");
+    write_binary_sparse(&good, &m).unwrap();
+    let bytes = std::fs::read(&good).unwrap();
+
+    // Corrupt an indptr entry to be non-monotone (entry 2, after the
+    // header at byte 40): chunk reads must fail, not stream garbage.
+    let p = tmp("indptr.somb");
+    let mut bad = bytes.clone();
+    let off = HEADER_LEN as usize + 2 * 8;
+    bad[off..off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+    std::fs::write(&p, &bad).unwrap();
+    let mut src = BinarySparseFileSource::open(&p, 3).unwrap();
+    let mut failed = false;
+    for _ in 0..4 {
+        match src.next_chunk() {
+            Err(_) => {
+                failed = true;
+                break;
+            }
+            Ok(None) => break,
+            Ok(Some(_)) => {}
+        }
+    }
+    assert!(failed, "non-monotone indptr streamed without error");
+
+    // Corrupt a column index out of range.
+    let p = tmp("colrange.somb");
+    let mut bad = bytes.clone();
+    let idx_off = HEADER_LEN as usize + 8 * (m.rows + 1);
+    bad[idx_off..idx_off + 4].copy_from_slice(&1_000_000u32.to_le_bytes());
+    std::fs::write(&p, &bad).unwrap();
+    let mut src = BinarySparseFileSource::open(&p, 0).unwrap();
+    assert!(src.next_chunk().is_err());
+}
+
+// ---------------------------------------------------------------------
+// CLI: convert + binary training end to end
+// ---------------------------------------------------------------------
+
+#[test]
+fn cli_convert_then_train_matches_text_cli() {
+    use std::process::Command;
+    let dir = tmp("cli");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut rng = Rng::new(80);
+    let (rows, dim) = (140, 6);
+    let (d, _) = somoclu::data::gaussian_blobs(rows, dim, 3, 0.2, &mut rng);
+    let txt = dir.join("data.txt");
+    dense::write_dense(&txt, rows, dim, &d, false).unwrap();
+    let bin = dir.join("data.somb");
+
+    let somoclu = env!("CARGO_BIN_EXE_somoclu");
+
+    // In-place conversion must be refused BEFORE the output truncates
+    // the input (File::create on the same path would destroy it).
+    let before = std::fs::read(&txt).unwrap();
+    let out = Command::new(somoclu)
+        .args(["convert", txt.to_str().unwrap(), txt.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "in-place convert must fail");
+    assert_eq!(std::fs::read(&txt).unwrap(), before, "input was clobbered");
+
+    let out = Command::new(somoclu)
+        .args(["convert", txt.to_str().unwrap(), bin.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "convert failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert_eq!(binary::sniff(&bin).unwrap(), Some(BinaryKind::Dense));
+
+    let run = |input: &std::path::Path, prefix: &str, extra: &[&str]| {
+        let out_prefix = dir.join(prefix);
+        let mut args: Vec<String> =
+            ["-e", "3", "-x", "8", "-y", "8", "-r", "4", "--seed", "9"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        args.extend(extra.iter().map(|s| s.to_string()));
+        args.push(input.to_str().unwrap().to_string());
+        args.push(out_prefix.to_str().unwrap().to_string());
+        let out = Command::new(somoclu).args(&args).output().unwrap();
+        assert!(
+            out.status.success(),
+            "stderr: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        dense::read_dense(format!("{}.wts", out_prefix.display())).unwrap()
+    };
+
+    let from_text = run(&txt, "t", &["--chunk-rows", "40"]);
+    let from_bin = run(&bin, "b", &["--chunk-rows", "40"]);
+    let prefetched = run(&bin, "p", &["--chunk-rows", "40", "--prefetch"]);
+    let ranked = run(&bin, "r", &["--chunk-rows", "40", "--ranks", "3"]);
+    for (name, got) in [("binary", &from_bin), ("prefetch", &prefetched), ("ranks", &ranked)] {
+        assert_eq!(from_text.rows, got.rows, "{name}");
+        for (a, b) in from_text.data.iter().zip(&got.data) {
+            assert!((a - b).abs() < 1e-4, "{name}: {a} vs {b}");
+        }
+    }
+}

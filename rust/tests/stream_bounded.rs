@@ -1,18 +1,23 @@
-//! The out-of-core acceptance property, isolated in its own test binary:
-//! the data-buffer gauge (util::memtrack) is process-global, so this
-//! measurement must not share a process with other tests that create
-//! data sources concurrently.
+//! The out-of-core acceptance properties, isolated in their own test
+//! binary: the data-buffer gauge (util::memtrack) is process-global, so
+//! these measurements must not share a process with other tests that
+//! create data sources concurrently. One `#[test]` only — the sections
+//! run sequentially inside it for the same reason.
 //!
-//! With a fixed `--chunk-rows`, the peak data-buffer allocation is
-//! O(chunk_rows * dim) — growing the input 4x must not grow the buffer.
-//! (The 100k-row sweep of the same property runs in
-//! `benches/stream_memory.rs`; this is the CI-sized proof.)
+//! * With a fixed `--chunk-rows`, the peak data-buffer allocation is
+//!   O(chunk_rows * dim) — growing the input 4x must not grow the
+//!   buffer. (The 100k-row sweep of the same property runs in
+//!   `benches/stream_memory.rs`; this is the CI-sized proof.)
+//! * With `--prefetch`, the bound doubles — two transit buffers — and
+//!   no more: binary + prefetch stays ≤ 2 × chunk_rows × dim (plus Vec
+//!   growth slack), the ISSUE 2 acceptance bound.
 
 use somoclu::coordinator::config::TrainConfig;
 use somoclu::coordinator::train::train_stream;
 use somoclu::data;
+use somoclu::io::binary::{convert_dense_to_binary, BinaryDenseFileSource};
 use somoclu::io::dense;
-use somoclu::io::stream::ChunkedDenseFileSource;
+use somoclu::io::stream::{ChunkedDenseFileSource, PrefetchSource};
 use somoclu::util::memtrack;
 use somoclu::util::rng::Rng;
 
@@ -24,7 +29,18 @@ fn data_buffer_stays_bounded_as_rows_grow() {
     let dim = 16;
     let chunk_rows = 64;
     let window_bytes = chunk_rows * dim * 4;
+    let cfg = TrainConfig {
+        rows: 6,
+        cols: 6,
+        epochs: 2,
+        threads: 2,
+        radius0: Some(3.0),
+        ..Default::default()
+    };
+
+    // --- Section 1: text streaming, growing input, flat buffer. ---
     let mut peaks = Vec::new();
+    let mut big_path = None;
     for &rows in &[2000usize, 8000] {
         let mut rng = Rng::new(rows as u64);
         let data = data::random_dense(rows, dim, &mut rng);
@@ -32,19 +48,12 @@ fn data_buffer_stays_bounded_as_rows_grow() {
         dense::write_dense(&path, rows, dim, &data, false).unwrap();
         drop(data);
 
-        let cfg = TrainConfig {
-            rows: 6,
-            cols: 6,
-            epochs: 2,
-            threads: 2,
-            radius0: Some(3.0),
-            ..Default::default()
-        };
         memtrack::reset_data_buffer_peak();
         let mut src = ChunkedDenseFileSource::open(&path, chunk_rows).unwrap();
         let res = train_stream(&cfg, &mut src, None, None).unwrap();
         assert_eq!(res.bmus.len(), rows);
         peaks.push(memtrack::data_buffer_peak());
+        big_path = Some(path);
     }
     // Bounded by the window (Vec growth allows a small constant factor),
     // and in particular far below the full 8000-row matrix.
@@ -58,5 +67,48 @@ fn data_buffer_stays_bounded_as_rows_grow() {
     assert!(
         peaks[1] <= peaks[0].max(4 * window_bytes),
         "peak grew with rows: {peaks:?}"
+    );
+
+    // --- Section 2: binary + prefetch holds ≤ 2 windows. ---
+    // The binary source reads exactly chunk_rows * dim floats per chunk
+    // (no parse-time Vec growth), so the prefetched pair of transit
+    // buffers is exactly 2 windows; allow slack for the final short
+    // chunk bookkeeping and the sparse indptr decode buffer (absent
+    // here), but the bound must stay strictly under 3 windows — i.e.
+    // two buffers, not three (no hidden staging copy).
+    let big_path = big_path.unwrap();
+    let bin_path = dir.join("data_big.somb");
+    {
+        let mut src = ChunkedDenseFileSource::open(&big_path, 1024).unwrap();
+        convert_dense_to_binary(&mut src, &bin_path).unwrap();
+    }
+    memtrack::reset_data_buffer_peak();
+    {
+        let inner = BinaryDenseFileSource::open(&bin_path, chunk_rows).unwrap();
+        let mut src = PrefetchSource::new(inner);
+        let res = train_stream(&cfg, &mut src, None, None).unwrap();
+        assert_eq!(res.bmus.len(), 8000);
+    }
+    let peak = memtrack::data_buffer_peak();
+    assert!(
+        peak >= window_bytes,
+        "prefetch peak {peak} below one window {window_bytes}"
+    );
+    assert!(
+        peak <= 2 * window_bytes + window_bytes / 2,
+        "prefetch peak {peak} exceeds the 2-window bound (window {window_bytes})"
+    );
+
+    // --- Section 3: plain binary streaming holds one window. ---
+    memtrack::reset_data_buffer_peak();
+    {
+        let mut src = BinaryDenseFileSource::open(&bin_path, chunk_rows).unwrap();
+        let res = train_stream(&cfg, &mut src, None, None).unwrap();
+        assert_eq!(res.bmus.len(), 8000);
+    }
+    let peak = memtrack::data_buffer_peak();
+    assert!(
+        peak <= window_bytes + window_bytes / 2,
+        "binary streaming peak {peak} exceeds one window {window_bytes}"
     );
 }
