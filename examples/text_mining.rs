@@ -80,7 +80,7 @@ fn main() -> anyhow::Result<()> {
     };
 
     let t0 = std::time::Instant::now();
-    let res = train(&cfg, DataShard::Sparse(&corpus), None, None)?;
+    let res = train(&cfg, DataShard::Sparse(corpus.view()), None, None)?;
     println!(
         "trained {}x{} toroid emergent map ({} nodes) in {:?}; peak memory {}",
         rows,

@@ -54,7 +54,7 @@ fn main() {
 
         let region = MemRegion::start();
         let (r2, t_sparse) = time_once(|| {
-            train(&sparse_cfg, DataShard::Sparse(&m), None, None)
+            train(&sparse_cfg, DataShard::Sparse(m.view()), None, None)
         });
         r2.unwrap();
         let mem_sparse = region.peak_delta() + m.heap_bytes();

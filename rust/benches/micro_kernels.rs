@@ -57,7 +57,7 @@ fn main() {
     let mut sparse = SparseCpuKernel::new(1);
     let stats = bench(1, 5, || {
         sparse
-            .epoch_accumulate(DataShard::Sparse(&m), &cb, &grid, nb, 5.0, 1.0)
+            .epoch_accumulate(DataShard::Sparse(m.view()), &cb, &grid, nb, 5.0, 1.0)
             .unwrap()
     });
     print_row("sparse-cpu epoch (5%)", rows, &stats);

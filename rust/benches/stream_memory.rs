@@ -5,11 +5,27 @@
 //! while the in-memory path is O(rows * dim). QE and BMUs match the
 //! in-memory run (asserted on the smallest size).
 //!
-//! Part 2 (throughput, ISSUE 2 acceptance): per-epoch rows/s of
-//! text-streamed vs binary-streamed vs binary+prefetch vs fully
-//! resident training on the same data. The headline number is the
-//! `vs mem` column — binary+prefetch must sit within ~1.1× of the
-//! resident epoch wall-clock, where text re-parsing pays multiple ×.
+//! Part 2 (throughput, ISSUE 2/3 acceptance): per-epoch rows/s of every
+//! streaming backend — text, buffered binary, binary + prefetch, pread
+//! (shared fd), mmap (zero-copy) — against fully resident training on
+//! the same data. The headline number is the `vs mem` column —
+//! binary-family paths must sit near the resident epoch wall-clock,
+//! where text re-parsing pays multiple ×.
+//!
+//! CI modes (ISSUE 3):
+//!
+//! * `--quick`             small sizes, CI-friendly wall-clock
+//! * `--json PATH`         write the throughput table + peak gauges as
+//!                         JSON (the `BENCH_stream.json` trajectory)
+//! * `--check PATH`        regression gate: compare this run's
+//!                         binary-path slowdown (binary rows/s relative
+//!                         to resident rows/s — machine-independent)
+//!                         against the committed baseline; exit nonzero
+//!                         if more than 25% worse. A baseline without
+//!                         numbers (nulls) passes as a bootstrap run.
+//!
+//! `--json` and `--check` may point at the same file: the baseline is
+//! read fully before the result is written.
 //!
 //! Paper-scale run (100k+ rows): SOM_BENCH_SCALE=10 cargo bench --bench stream_memory
 
@@ -18,33 +34,81 @@ mod common;
 use somoclu::coordinator::config::TrainConfig;
 use somoclu::coordinator::train::{train, train_stream};
 use somoclu::data;
-use somoclu::io::binary::{convert_dense_to_binary, BinaryDenseFileSource};
+use somoclu::io::binary::{convert_dense_to_binary, BinaryDenseFileSource, SharedFd};
 use somoclu::io::dense;
-use somoclu::io::stream::{ChunkedDenseFileSource, DataSource, PrefetchSource};
+use somoclu::io::stream::{ChunkedDenseFileSource, PrefetchSource};
+use somoclu::io::MmapDenseSource;
 use somoclu::kernels::{DataShard, KernelType};
+use somoclu::util::json::Json;
 use somoclu::util::memtrack::{self, fmt_bytes, MemRegion};
 use somoclu::util::rng::Rng;
 use somoclu::util::timer::{bench_scale, time_once};
 
+/// One backend's throughput measurement.
+struct Lane {
+    key: &'static str,
+    rows_per_s: f64,
+    slowdown: f64,
+}
+
+/// Run `f` `reps` times; return the last result and the BEST (minimum)
+/// wall-clock in seconds. Minimum-of-N is the standard noise-robust
+/// timing estimator: on shared CI runners a single measurement is
+/// dominated by scheduler bursts, which only ever ADD time — so the
+/// regression gate compares best-observed against best-observed.
+fn best_secs<R>(reps: usize, mut f: impl FnMut() -> R) -> (R, f64) {
+    let mut best = f64::INFINITY;
+    let mut out = None;
+    for _ in 0..reps {
+        let (r, t) = time_once(&mut f);
+        best = best.min(t.as_secs_f64());
+        out = Some(r);
+    }
+    (out.expect("reps >= 1"), best)
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let arg_value = |flag: &str| {
+        args.iter()
+            .position(|a| a == flag)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+    };
+    let json_path = arg_value("--json");
+    let check_path = arg_value("--check");
+    // Read the baseline BEFORE any write so --json and --check can name
+    // the same file.
+    let baseline = check_path.as_ref().map(|p| {
+        std::fs::read_to_string(p)
+            .unwrap_or_else(|e| panic!("--check {p}: {e}"))
+    });
+
     let scale = bench_scale(1.0);
     common::banner("STREAM: out-of-core chunked training memory + throughput", scale);
 
     let dim = 32;
-    let chunk_rows = 1000;
-    let base = [10_000usize, 20_000, 40_000];
+    let chunk_rows = if quick { 256 } else { 1000 };
+    let base: &[usize] = if quick {
+        &[2_000, 4_000]
+    } else {
+        &[10_000, 20_000, 40_000]
+    };
     let sizes: Vec<usize> = base
         .iter()
-        .map(|&s| ((s as f64 * scale) as usize).max(2_000))
+        .map(|&s| ((s as f64 * scale) as usize).max(1_000))
         .collect();
-    let cfg = common::base_config(12, 3, KernelType::DenseCpu);
+    let epochs_p1 = if quick { 2 } else { 3 };
+    let cfg = common::base_config(12, epochs_p1, KernelType::DenseCpu);
 
     let dir = std::env::temp_dir().join(format!("somoclu_bench_stream_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
 
     println!(
-        "\nchunk window: {chunk_rows} rows x {dim} dims = {}\n",
-        fmt_bytes(chunk_rows * dim * 4)
+        "\nchunk window: {chunk_rows} rows x {dim} dims = {}{}\n",
+        fmt_bytes(chunk_rows * dim * 4),
+        if quick { "  [--quick]" } else { "" }
     );
     println!(
         "{:>10} {:>12} {:>14} {:>14} {:>14} {:>10}",
@@ -112,11 +176,10 @@ fn main() {
     );
 
     // ------------------------------------------------------------------
-    // Part 2: epoch throughput — text vs binary vs binary+prefetch vs
-    // resident (ISSUE 2 acceptance: binary+prefetch ≤ ~1.1× resident).
+    // Part 2: epoch throughput — every streaming backend vs resident.
     // ------------------------------------------------------------------
     let n = *sizes.last().unwrap();
-    let epochs = 3usize;
+    let epochs = if quick { 2usize } else { 3 };
     let tcfg = TrainConfig {
         epochs,
         ..common::base_config(12, epochs, KernelType::DenseCpu)
@@ -142,9 +205,14 @@ fn main() {
         "input path", "epoch time", "rows/s", "vs mem"
     );
 
+    // In --quick (CI gate) mode every lane is measured three times and
+    // the minimum is kept, so the gated ratio reflects code, not a
+    // shared runner's scheduler noise.
+    let reps = if quick { 3 } else { 1 };
+
     // Resident baseline.
     let m = dense::read_dense(&txt).unwrap();
-    let (mem_res, t_mem) = time_once(|| {
+    let (mem_res, best_mem) = best_secs(reps, || {
         train(
             &tcfg,
             DataShard::Dense {
@@ -157,18 +225,7 @@ fn main() {
         .unwrap()
     });
     drop(m);
-    let per_epoch_mem = t_mem.as_secs_f64() / epochs as f64;
-
-    let report = |name: &str, t: std::time::Duration, bmus: &[u32]| {
-        assert_eq!(bmus, &mem_res.bmus[..], "{name}: BMUs diverged from resident run");
-        let per_epoch = t.as_secs_f64() / epochs as f64;
-        println!(
-            "{name:<22} {:>11.3}s {:>14.0} {:>7.2}x",
-            per_epoch,
-            n as f64 / per_epoch,
-            per_epoch / per_epoch_mem
-        );
-    };
+    let per_epoch_mem = best_mem / epochs as f64;
     println!(
         "{:<22} {:>11.3}s {:>14.0} {:>7.2}x",
         "resident (baseline)",
@@ -177,32 +234,195 @@ fn main() {
         1.0
     );
 
+    let mut lanes: Vec<Lane> = vec![Lane {
+        key: "resident",
+        rows_per_s: n as f64 / per_epoch_mem,
+        slowdown: 1.0,
+    }];
+    let lane = |key: &'static str,
+                    label: &str,
+                    secs: f64,
+                    bmus: &[u32],
+                    lanes: &mut Vec<Lane>| {
+        assert_eq!(bmus, &mem_res.bmus[..], "{label}: BMUs diverged from resident run");
+        let per_epoch = secs / epochs as f64;
+        let slowdown = per_epoch / per_epoch_mem;
+        println!(
+            "{label:<22} {per_epoch:>11.3}s {:>14.0} {slowdown:>7.2}x",
+            n as f64 / per_epoch,
+        );
+        lanes.push(Lane {
+            key,
+            rows_per_s: n as f64 / per_epoch,
+            slowdown,
+        });
+    };
+
     // Sources open OUTSIDE the timed region, like read_dense for the
     // resident baseline: every row then measures pure epoch wall-clock
     // (the text open's validation parse would otherwise inflate its
     // per-epoch number by a third extra parse).
     let mut src = ChunkedDenseFileSource::open(&txt, chunk_rows).unwrap();
-    let (res, t) = time_once(|| train_stream(&tcfg, &mut src, None, None).unwrap());
+    let (res, t) = best_secs(reps, || train_stream(&tcfg, &mut src, None, None).unwrap());
     drop(src);
-    report("text stream", t, &res.bmus);
+    lane("text", "text stream", t, &res.bmus, &mut lanes);
 
+    memtrack::reset_data_buffer_peak();
     let mut src = BinaryDenseFileSource::open(&bin, chunk_rows).unwrap();
-    let (res, t) = time_once(|| train_stream(&tcfg, &mut src, None, None).unwrap());
+    let (res, t) = best_secs(reps, || train_stream(&tcfg, &mut src, None, None).unwrap());
     drop(src);
-    report("binary stream", t, &res.bmus);
+    let peak_databuf = memtrack::data_buffer_peak();
+    lane("binary", "binary stream", t, &res.bmus, &mut lanes);
 
     let mut src =
         PrefetchSource::new(BinaryDenseFileSource::open(&bin, chunk_rows).unwrap());
-    let (res, t) = time_once(|| train_stream(&tcfg, &mut src, None, None).unwrap());
+    let (res, t) = best_secs(reps, || train_stream(&tcfg, &mut src, None, None).unwrap());
     drop(src);
-    let per_epoch_pf = t.as_secs_f64() / epochs as f64;
-    report("binary + prefetch", t, &res.bmus);
+    lane("binary_prefetch", "binary + prefetch", t, &res.bmus, &mut lanes);
 
+    let mut src = SharedFd::open(&bin)
+        .unwrap()
+        .dense_shard(chunk_rows, 0, 1)
+        .unwrap();
+    let (res, t) = best_secs(reps, || train_stream(&tcfg, &mut src, None, None).unwrap());
+    drop(src);
+    lane("pread", "pread (shared fd)", t, &res.bmus, &mut lanes);
+
+    let mut peak_mapped = 0usize;
+    if somoclu::io::mmap::SUPPORTED {
+        memtrack::reset_data_map_peak();
+        let mut src = MmapDenseSource::open(&bin, chunk_rows).unwrap();
+        let (res, t) = best_secs(reps, || train_stream(&tcfg, &mut src, None, None).unwrap());
+        drop(src);
+        peak_mapped = memtrack::data_map_peak();
+        lane("mmap", "mmap (zero-copy)", t, &res.bmus, &mut lanes);
+    } else {
+        println!("{:<22} {:>12}", "mmap (zero-copy)", "unavailable");
+    }
+
+    let slowdown_of = |key: &str| lanes.iter().find(|l| l.key == key).map(|l| l.slowdown);
     println!(
         "\nacceptance: binary+prefetch / resident = {:.2}x (target ≤ ~1.1x; \
          text pays the re-parse penalty above)",
-        per_epoch_pf / per_epoch_mem
+        slowdown_of("binary_prefetch").unwrap()
     );
+    println!(
+        "peak data-buffer gauge (binary run): {}; peak mapped chunk views \
+         (mmap run): {}",
+        fmt_bytes(peak_databuf),
+        fmt_bytes(peak_mapped)
+    );
+
+    if let Some(path) = &json_path {
+        let json = render_json(quick, n, dim, chunk_rows, epochs, &lanes, peak_databuf, peak_mapped);
+        std::fs::write(path, &json).unwrap_or_else(|e| panic!("--json {path}: {e}"));
+        println!("wrote {path}");
+    }
+
     std::fs::remove_file(&txt).ok();
     std::fs::remove_file(&bin).ok();
+
+    if let Some(text) = baseline {
+        match check_regression(&text, &lanes) {
+            Ok(msg) => println!("regression gate: {msg}"),
+            Err(msg) => {
+                eprintln!("regression gate FAILED: {msg}");
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
+/// Serialize the run (no serde in the tree; fields are fixed ASCII keys
+/// and finite numbers, so hand-rendering is safe).
+#[allow(clippy::too_many_arguments)]
+fn render_json(
+    quick: bool,
+    rows: usize,
+    dim: usize,
+    chunk_rows: usize,
+    epochs: usize,
+    lanes: &[Lane],
+    peak_databuf: usize,
+    peak_mapped: usize,
+) -> String {
+    let num = |v: Option<f64>| match v {
+        Some(x) if x.is_finite() => format!("{x:.3}"),
+        _ => "null".to_string(),
+    };
+    let get = |key: &str| lanes.iter().find(|l| l.key == key);
+    let keys = ["resident", "text", "binary", "binary_prefetch", "pread", "mmap"];
+    let rps: Vec<String> = keys
+        .iter()
+        .map(|k| format!("    \"{k}\": {}", num(get(k).map(|l| l.rows_per_s))))
+        .collect();
+    let slow: Vec<String> = keys
+        .iter()
+        .skip(1) // resident is the 1.0 reference
+        .map(|k| format!("    \"{k}\": {}", num(get(k).map(|l| l.slowdown))))
+        .collect();
+    format!(
+        "{{\n  \"schema\": \"somoclu-stream-bench/v1\",\n  \"quick\": {quick},\n  \
+         \"rows\": {rows},\n  \"dim\": {dim},\n  \"chunk_rows\": {chunk_rows},\n  \
+         \"epochs\": {epochs},\n  \"rows_per_s\": {{\n{}\n  }},\n  \
+         \"slowdown_vs_resident\": {{\n{}\n  }},\n  \
+         \"min_binary_rows_per_s\": null,\n  \
+         \"peak_data_buffer_bytes\": {peak_databuf},\n  \
+         \"peak_mapped_bytes\": {peak_mapped}\n}}\n",
+        rps.join(",\n"),
+        slow.join(",\n"),
+    )
+}
+
+/// The CI gate. The primary metric is the binary path's *slowdown vs
+/// resident* — a dimensionless ratio that transfers across runner
+/// hardware, unlike raw rows/s. Optional absolute floor: a non-null
+/// `min_binary_rows_per_s` in the baseline also gates raw throughput
+/// (for pinned, dedicated runners). A baseline without numbers passes —
+/// that is the bootstrap state of an empty bench trajectory.
+fn check_regression(baseline_text: &str, lanes: &[Lane]) -> Result<String, String> {
+    let json = Json::parse(baseline_text)
+        .map_err(|e| format!("baseline is not valid JSON: {e:?}"))?;
+    let cur = lanes
+        .iter()
+        .find(|l| l.key == "binary")
+        .ok_or("current run has no binary lane")?;
+    let base_slow = json
+        .get("slowdown_vs_resident")
+        .and_then(|o| o.get("binary"))
+        .and_then(|v| v.as_f64());
+    let mut report = Vec::new();
+    match base_slow {
+        None => report.push(
+            "baseline has no binary slowdown number (bootstrap run) - gate passes"
+                .to_string(),
+        ),
+        Some(b) => {
+            let limit = b * 1.25;
+            if cur.slowdown > limit {
+                return Err(format!(
+                    "binary streaming slowdown {:.2}x vs resident exceeds \
+                     baseline {b:.2}x by more than 25% (limit {limit:.2}x)",
+                    cur.slowdown
+                ));
+            }
+            report.push(format!(
+                "binary slowdown {:.2}x within 25% of baseline {b:.2}x",
+                cur.slowdown
+            ));
+        }
+    }
+    if let Some(floor) = json.get("min_binary_rows_per_s").and_then(|v| v.as_f64()) {
+        if cur.rows_per_s < floor {
+            return Err(format!(
+                "binary streaming {:.0} rows/s below the baseline floor {floor:.0}",
+                cur.rows_per_s
+            ));
+        }
+        report.push(format!(
+            "binary {:.0} rows/s above the floor {floor:.0}",
+            cur.rows_per_s
+        ));
+    }
+    Ok(report.join("; "))
 }

@@ -50,7 +50,7 @@ pub fn train(cfg: &TrainConfig, input: DataInput<'_>) -> anyhow::Result<TrainRes
                 None,
             )
         }
-        DataInput::Sparse(m) => train::train(cfg, DataShard::Sparse(m), None, None),
+        DataInput::Sparse(m) => train::train(cfg, DataShard::Sparse(m.view()), None, None),
     }
 }
 

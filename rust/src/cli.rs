@@ -59,6 +59,9 @@ pub fn arg_spec() -> ArgSpec {
               load fully in memory)", Some("0"))
         .opt("net", None, Some("net"),
              "cluster interconnect model: ideal | 10g", Some("ideal"))
+        .opt("io", None, Some("io"),
+             "binary-container I/O backend: buffered | mmap (zero-copy) \
+              | pread (one shared fd for all ranks)", Some("buffered"))
         .flag("prefetch", None, Some("prefetch"),
               "double-buffered chunk read-ahead for file-backed streaming")
         .flag("help", Some('h'), Some("help"), "print usage")
@@ -82,6 +85,32 @@ pub fn convert_spec() -> ArgSpec {
         .flag("help", Some('h'), Some("help"), "print usage")
         .positional("INPUT_FILE", "dense or sparse (libsvm) text data")
         .positional("OUTPUT_FILE", "binary container to write (.somb)")
+}
+
+/// Argument spec for the `somoclu info` subcommand: decode and print a
+/// `SOMB` container header plus, with `--ranks N`, every rank's shard
+/// window — the debugging view that previously required a hex dump.
+/// Exits nonzero on corrupt or truncated headers.
+pub fn info_spec() -> ArgSpec {
+    ArgSpec::new()
+        .opt("ranks", None, Some("ranks"),
+             "also print each rank's row/byte shard window", Some("1"))
+        .flag("help", Some('h'), Some("help"), "print usage")
+        .positional("INPUT_FILE", "binary container to inspect (.somb)")
+}
+
+/// Parsed `somoclu info` options.
+#[derive(Debug, Clone)]
+pub struct InfoOptions {
+    pub input_file: String,
+    pub ranks: usize,
+}
+
+pub fn parse_info(parsed: &Parsed) -> Result<InfoOptions, ArgError> {
+    Ok(InfoOptions {
+        input_file: parsed.positional(0).to_string(),
+        ranks: parsed.parse_as::<usize>("ranks")?,
+    })
 }
 
 /// Parsed `somoclu convert` options.
@@ -173,6 +202,9 @@ pub fn parse_cli(parsed: &Parsed) -> Result<CliOptions, ArgError> {
     cfg.snapshot = snap
         .parse::<SnapshotLevel>()
         .map_err(|e| bad("snapshots", snap, e))?;
+
+    let iov = parsed.get("io").unwrap();
+    cfg.io_mode = iov.parse().map_err(|e| bad("io", iov, e))?;
 
     let netv = parsed.get("net").unwrap();
     let net = match netv {
@@ -272,6 +304,35 @@ mod tests {
         assert!(!o.config.prefetch);
         let o = parse(&["--chunk-rows", "512", "--prefetch", "in", "out"]);
         assert!(o.config.prefetch);
+    }
+
+    #[test]
+    fn io_flag() {
+        use crate::coordinator::config::IoMode;
+        let o = parse(&["in", "out"]);
+        assert_eq!(o.config.io_mode, IoMode::Buffered);
+        let o = parse(&["--io", "mmap", "in", "out"]);
+        assert_eq!(o.config.io_mode, IoMode::Mmap);
+        let o = parse(&["--io", "pread", "--ranks", "4", "in", "out"]);
+        assert_eq!(o.config.io_mode, IoMode::Pread);
+        let spec = arg_spec();
+        let parsed = spec
+            .parse(["--io", "directio", "in", "out"].map(String::from))
+            .unwrap();
+        assert!(parse_cli(&parsed).is_err());
+    }
+
+    #[test]
+    fn info_subcommand_spec() {
+        let spec = info_spec();
+        let parsed = spec
+            .parse(["--ranks", "4", "data.somb"].map(String::from))
+            .unwrap();
+        let o = parse_info(&parsed).unwrap();
+        assert_eq!(o.ranks, 4);
+        assert_eq!(o.input_file, "data.somb");
+        let parsed = spec.parse(["data.somb"].map(String::from)).unwrap();
+        assert_eq!(parse_info(&parsed).unwrap().ranks, 1);
     }
 
     #[test]

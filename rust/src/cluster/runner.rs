@@ -31,9 +31,12 @@ use crate::cluster::allreduce::{
 };
 use crate::cluster::comm::{Endpoint, World};
 use crate::cluster::netmodel::NetModel;
-use crate::coordinator::config::TrainConfig;
+use crate::coordinator::config::{IoMode, TrainConfig};
 use crate::coordinator::train::{init_codebook, EpochStats, TrainResult};
-use crate::io::binary::{self, BinaryDenseFileSource, BinaryKind, BinarySparseFileSource};
+use crate::io::binary::{
+    self, BinaryDenseFileSource, BinaryKind, BinarySparseFileSource, SharedFd,
+};
+use crate::io::mmap::MappedContainer;
 use crate::io::stream::{
     ChunkedDenseFileSource, ChunkedSparseFileSource, DataSource, InMemorySource,
     PrefetchSource,
@@ -93,7 +96,7 @@ impl ClusterData {
                 data,
                 dim: *dim,
             },
-            ClusterData::Sparse(m) => DataShard::Sparse(m),
+            ClusterData::Sparse(m) => DataShard::Sparse(m.view()),
         }
     }
 }
@@ -146,8 +149,8 @@ impl StreamInput {
     fn probe(&self, chunk_rows: usize) -> anyhow::Result<(usize, usize)> {
         match self {
             StreamInput::Binary { path } => {
-                let mut f = std::fs::File::open(path)?;
-                let h = binary::read_header(&mut f, path)?;
+                let f = std::fs::File::open(path)?;
+                let h = binary::read_header(&f, path)?;
                 Ok((h.rows, h.dim))
             }
             _ => {
@@ -417,26 +420,64 @@ pub fn train_cluster_stream(
     // surfacing the real error. Opened up front, an unreadable file is
     // a clean anyhow error. (Mid-epoch read failures — the file mutated
     // under a running job — still abort via the collective panic, the
-    // same behavior resident kernel errors always had.) The opens run
-    // concurrently: each text open is a full validation parse, so doing
-    // them serially would cost ranks × parse wall-clock at startup.
-    let opens: Vec<_> = (0..ranks)
-        .map(|rank| {
-            let input = input.clone();
-            let chunk_rows = cfg.chunk_rows;
-            move || input.open_shard(chunk_rows, rank, ranks)
-        })
-        .collect();
+    // same behavior resident kernel errors always had.)
     let mut sources: Vec<Box<dyn DataSource + Send>> = Vec::with_capacity(ranks);
-    for opened in run_concurrent(opens) {
-        let source = opened?;
+    match (&input, cfg.io_mode) {
+        (StreamInput::Binary { path }, IoMode::Pread) => {
+            // One shared fd serves every rank: each source clones the
+            // Arc and issues positioned reads against its own window.
+            let shared = SharedFd::open(path)?;
+            for rank in 0..ranks {
+                sources.push(match shared.header().kind {
+                    BinaryKind::Dense => {
+                        Box::new(shared.dense_shard(cfg.chunk_rows, rank, ranks)?)
+                    }
+                    BinaryKind::Sparse => {
+                        Box::new(shared.sparse_shard(cfg.chunk_rows, rank, ranks)?)
+                    }
+                });
+            }
+        }
+        (StreamInput::Binary { path }, IoMode::Mmap) => {
+            // One mapping serves every rank: chunk views come straight
+            // out of the shared page cache, no per-rank buffers at all.
+            let mapped = MappedContainer::open(path)?;
+            for rank in 0..ranks {
+                sources.push(match mapped.header().kind {
+                    BinaryKind::Dense => {
+                        Box::new(mapped.dense_shard(cfg.chunk_rows, rank, ranks)?)
+                    }
+                    BinaryKind::Sparse => {
+                        Box::new(mapped.sparse_shard(cfg.chunk_rows, rank, ranks)?)
+                    }
+                });
+            }
+        }
+        (_, IoMode::Buffered) => {
+            // Per-rank opens. These run concurrently: each text open is
+            // a full validation parse, so doing them serially would cost
+            // ranks × parse wall-clock at startup.
+            let opens: Vec<_> = (0..ranks)
+                .map(|rank| {
+                    let input = input.clone();
+                    let chunk_rows = cfg.chunk_rows;
+                    move || input.open_shard(chunk_rows, rank, ranks)
+                })
+                .collect();
+            for opened in run_concurrent(opens) {
+                sources.push(opened?);
+            }
+        }
+        (_, mode) => anyhow::bail!(mode.text_input_error()),
+    }
+    if cfg.prefetch {
         // Read-ahead per rank: each shard's chunk k+1 loads while its
-        // kernel runs chunk k.
-        sources.push(if cfg.prefetch {
-            Box::new(PrefetchSource::new(source))
-        } else {
-            source
-        });
+        // kernel runs chunk k. (mmap + prefetch was rejected by
+        // cfg.validate above — a copy thread would defeat zero-copy.)
+        sources = sources
+            .into_iter()
+            .map(|s| Box::new(PrefetchSource::new(s)) as Box<dyn DataSource + Send>)
+            .collect();
     }
 
     let t0 = Instant::now();
@@ -534,7 +575,7 @@ mod tests {
         let m = crate::sparse::Csr::random(60, 20, 0.15, &mut rng);
         let mut c = cfg(1);
         c.kernel = KernelType::SparseCpu;
-        let single = train(&c, DataShard::Sparse(&m), None, None).unwrap();
+        let single = train(&c, DataShard::Sparse(m.view()), None, None).unwrap();
         let mut c3 = cfg(3);
         c3.kernel = KernelType::SparseCpu;
         let (multi, _) =
@@ -669,7 +710,7 @@ mod tests {
 
         let mut c1 = cfg(1);
         c1.kernel = KernelType::SparseCpu;
-        let single = train(&c1, DataShard::Sparse(&resident), None, None).unwrap();
+        let single = train(&c1, DataShard::Sparse(resident.view()), None, None).unwrap();
 
         let mut c3 = cfg(3);
         c3.kernel = KernelType::SparseCpu;

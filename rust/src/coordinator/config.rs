@@ -24,6 +24,62 @@ impl std::str::FromStr for Initialization {
     }
 }
 
+/// I/O backend for streaming `SOMB` binary containers (`--io`).
+///
+/// * `Buffered` (default) — each source owns its fd and decodes chunks
+///   through a small staging block into owned buffers. Works everywhere.
+/// * `Pread` — positioned reads against **one shared fd** for all
+///   cluster ranks (`io::binary::SharedFd`); same memory profile as
+///   buffered, no per-rank opens, no seek-state contention.
+/// * `Mmap` — map the file once and hand kernels borrowed chunk views
+///   straight out of the page cache (`io::mmap`); zero data copies and
+///   ~zero heap. Needs the default-on `mmap` cargo feature (and a
+///   little-endian 64-bit unix target); incompatible with `--prefetch`.
+///
+/// Text inputs always use `Buffered` — the zero-copy layer is defined
+/// over the binary container only (`somoclu convert` first).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum IoMode {
+    Buffered,
+    Mmap,
+    Pread,
+}
+
+impl IoMode {
+    /// The CLI spelling (for error messages and reports).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            IoMode::Buffered => "buffered",
+            IoMode::Mmap => "mmap",
+            IoMode::Pread => "pread",
+        }
+    }
+
+    /// The one refusal message for zero-copy backends on text inputs
+    /// (every layer that can hit the mismatch — CLI early check, the
+    /// single-process source factory, the cluster runner — emits this
+    /// same text).
+    pub fn text_input_error(self) -> String {
+        format!(
+            "--io {} works on binary containers only; run `somoclu convert` \
+             once, or drop --io for text inputs",
+            self.as_str()
+        )
+    }
+}
+
+impl std::str::FromStr for IoMode {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "buffered" => Ok(IoMode::Buffered),
+            "mmap" => Ok(IoMode::Mmap),
+            "pread" => Ok(IoMode::Pread),
+            other => Err(format!("unknown io mode: {other} (want buffered | mmap | pread)")),
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
     /// Map rows (`-y`); paper default 50.
@@ -73,6 +129,9 @@ pub struct TrainConfig {
     /// the kernel runs chunk k. Data-buffer bound doubles to
     /// 2 × chunk_rows × dim per source; no effect on resident inputs.
     pub prefetch: bool,
+    /// Streaming I/O backend for binary containers (`--io`): buffered
+    /// per-source fds (default), one shared pread fd, or zero-copy mmap.
+    pub io_mode: IoMode,
 }
 
 impl Default for TrainConfig {
@@ -98,6 +157,7 @@ impl Default for TrainConfig {
             seed: 0x50_4d_4f_53, // "SOMP"
             chunk_rows: 0,
             prefetch: false,
+            io_mode: IoMode::Buffered,
         }
     }
 }
@@ -137,6 +197,16 @@ impl TrainConfig {
         if self.scale0 <= 0.0 {
             return Err("start learning rate must be positive".into());
         }
+        if self.io_mode == IoMode::Mmap && self.prefetch {
+            // Chunks come straight out of the page cache; a read-ahead
+            // thread would only add a copy the mmap mode exists to
+            // remove. Refusing beats silently degrading to buffered.
+            return Err(
+                "--prefetch has no effect with --io mmap (chunk views are \
+                 served from the page cache); drop one of the two"
+                    .into(),
+            );
+        }
         Ok(())
     }
 }
@@ -159,6 +229,29 @@ mod tests {
         // default radius0 = half the smaller map side
         let grid = c.grid();
         assert_eq!(c.radius_schedule(&grid).start, 25.0);
+    }
+
+    #[test]
+    fn io_mode_parses_and_defaults() {
+        let c = TrainConfig::default();
+        assert_eq!(c.io_mode, IoMode::Buffered);
+        assert_eq!("mmap".parse::<IoMode>().unwrap(), IoMode::Mmap);
+        assert_eq!("PREAD".parse::<IoMode>().unwrap(), IoMode::Pread);
+        assert!("zerocopy".parse::<IoMode>().is_err());
+    }
+
+    #[test]
+    fn mmap_with_prefetch_rejected() {
+        let mut c = TrainConfig::default();
+        c.io_mode = IoMode::Mmap;
+        c.prefetch = true;
+        assert!(c.validate().is_err());
+        c.prefetch = false;
+        assert!(c.validate().is_ok());
+        let mut c = TrainConfig::default();
+        c.io_mode = IoMode::Pread;
+        c.prefetch = true; // pread + prefetch is a supported combination
+        assert!(c.validate().is_ok());
     }
 
     #[test]

@@ -132,17 +132,23 @@ pub fn train_stream(
             );
             cb
         }
+        // Random init never touches the data, so only data-dependent
+        // schemes consult `resident()` — which lets zero-copy sources
+        // account a full-file exposure there without charging bounded
+        // random-init runs for it.
+        None if cfg.initialization
+            == crate::coordinator::config::Initialization::Random =>
+        {
+            init_codebook(cfg, &grid, dim)
+        }
         None => match source.resident() {
             Some(shard) => init_codebook_with_data(cfg, &grid, shard)?,
             None => {
-                anyhow::ensure!(
-                    cfg.initialization
-                        == crate::coordinator::config::Initialization::Random,
+                anyhow::bail!(
                     "PCA initialization needs the data resident in memory; \
                      streamed sources support only --initialization random \
                      (or an explicit -c codebook)"
                 );
-                init_codebook(cfg, &grid, dim)
             }
         },
     };
@@ -279,7 +285,7 @@ mod tests {
             radius0: Some(3.0),
             ..Default::default()
         };
-        let res = train(&cfg, DataShard::Sparse(&m), None, None).unwrap();
+        let res = train(&cfg, DataShard::Sparse(m.view()), None, None).unwrap();
         let first = res.epochs.first().unwrap().qe;
         let last = res.epochs.last().unwrap().qe;
         assert!(last < first, "{first} -> {last}");
@@ -355,13 +361,13 @@ mod tests {
             radius0: Some(3.0),
             ..Default::default()
         };
-        let whole = train(&base, DataShard::Sparse(&m), None, None).unwrap();
+        let whole = train(&base, DataShard::Sparse(m.view()), None, None).unwrap();
         for chunk_rows in [1usize, 11, 70] {
             let cfg = TrainConfig {
                 chunk_rows,
                 ..base.clone()
             };
-            let chunked = train(&cfg, DataShard::Sparse(&m), None, None).unwrap();
+            let chunked = train(&cfg, DataShard::Sparse(m.view()), None, None).unwrap();
             assert_eq!(chunked.bmus, whole.bmus, "chunk_rows={chunk_rows}");
             assert!(
                 (chunked.final_qe() - whole.final_qe()).abs() < 1e-4,

@@ -44,13 +44,59 @@
 //! additionally check indptr monotonicity and column range.
 
 use std::fs::File;
-use std::io::{Read, Seek, SeekFrom, Write};
+use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use crate::io::stream::{chunk_take, rank_window, ChunkBuf, DataSource};
 use crate::kernels::DataShard;
 use crate::sparse::Csr;
 use crate::util::memtrack;
+
+// ---------------------------------------------------------------------
+// Positioned reads (pread)
+// ---------------------------------------------------------------------
+
+/// Read exactly `buf.len()` bytes at absolute `off`, without touching
+/// the fd's seek cursor (unix `pread`). Cursor independence is what lets
+/// N cluster ranks stream disjoint windows through **one shared fd**
+/// ([`SharedFd`]) with no per-rank opens and no seek races.
+#[cfg(unix)]
+pub(crate) fn pread_exact(f: &File, off: u64, buf: &mut [u8]) -> std::io::Result<()> {
+    use std::os::unix::fs::FileExt;
+    f.read_exact_at(buf, off)
+}
+
+/// Windows positioned read. `seek_read` also moves the fd cursor, but
+/// every read in this module passes an absolute offset, so concurrent
+/// sharers never depend on cursor state.
+#[cfg(windows)]
+pub(crate) fn pread_exact(f: &File, off: u64, buf: &mut [u8]) -> std::io::Result<()> {
+    use std::os::windows::fs::FileExt;
+    let mut done = 0usize;
+    while done < buf.len() {
+        let n = f.seek_read(&mut buf[done..], off + done as u64)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "failed to fill whole buffer",
+            ));
+        }
+        done += n;
+    }
+    Ok(())
+}
+
+/// Portability fallback: seek-then-read through a borrowed handle.
+/// NOT cursor-independent — platforms landing here cannot share one fd
+/// across ranks, so [`SharedFd::open`] refuses there.
+#[cfg(not(any(unix, windows)))]
+pub(crate) fn pread_exact(f: &File, off: u64, buf: &mut [u8]) -> std::io::Result<()> {
+    use std::io::{Seek, SeekFrom};
+    let mut f = f;
+    f.seek(SeekFrom::Start(off))?;
+    f.read_exact(buf)
+}
 
 /// `b"SOMB"` — SOM Binary.
 pub const MAGIC: [u8; 4] = *b"SOMB";
@@ -89,17 +135,17 @@ impl BinaryHeader {
     }
 
     /// Byte offset of the sparse indptr section.
-    fn indptr_off(&self) -> u64 {
+    pub(crate) fn indptr_off(&self) -> u64 {
         HEADER_LEN
     }
 
     /// Byte offset of the sparse indices section.
-    fn indices_off(&self) -> u64 {
+    pub(crate) fn indices_off(&self) -> u64 {
         HEADER_LEN + 8 * (self.rows as u64 + 1)
     }
 
     /// Byte offset of the sparse values section.
-    fn values_off(&self) -> u64 {
+    pub(crate) fn values_off(&self) -> u64 {
         self.indices_off() + 4 * self.nnz as u64
     }
 
@@ -122,7 +168,9 @@ impl BinaryHeader {
 
 /// Read + validate a container header from the start of `f`, including
 /// the exact-file-length check (rejects truncated or padded copies).
-pub fn read_header(f: &mut File, path: &Path) -> anyhow::Result<BinaryHeader> {
+/// Positioned read: the fd's cursor is untouched, so a [`SharedFd`] can
+/// re-validate without disturbing concurrent readers.
+pub fn read_header(f: &File, path: &Path) -> anyhow::Result<BinaryHeader> {
     let len = f.metadata()?.len();
     anyhow::ensure!(
         len >= HEADER_LEN,
@@ -130,8 +178,7 @@ pub fn read_header(f: &mut File, path: &Path) -> anyhow::Result<BinaryHeader> {
         path.display()
     );
     let mut h = [0u8; HEADER_LEN as usize];
-    f.seek(SeekFrom::Start(0))?;
-    f.read_exact(&mut h)?;
+    pread_exact(f, 0, &mut h)?;
     anyhow::ensure!(
         h[0..4] == MAGIC,
         "{}: bad magic (not a somoclu binary file)",
@@ -183,6 +230,87 @@ pub fn read_header(f: &mut File, path: &Path) -> anyhow::Result<BinaryHeader> {
     // is bounded by the actual file length, so u64 arithmetic in the
     // chunk readers cannot overflow.
     Ok(header)
+}
+
+/// One indptr entry, positioned-read (the `info` shard report needs two
+/// boundary entries per rank, not the whole section).
+fn read_indptr_entry(f: &File, h: &BinaryHeader, row: usize) -> anyhow::Result<u64> {
+    let mut b = [0u8; 8];
+    pread_exact(f, h.indptr_off() + 8 * row as u64, &mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Human-readable report for `somoclu info`: the decoded header plus,
+/// with `ranks > 1`, every rank's `split_ranges` shard window (rows and
+/// payload bytes for dense, rows and nnz span for sparse) — the view of
+/// a container that previously required a hex dump. Errors on corrupt
+/// or truncated headers (the caller exits nonzero).
+pub fn info_report<P: AsRef<Path>>(path: P, ranks: usize) -> anyhow::Result<String> {
+    use std::fmt::Write as _;
+    let path = path.as_ref();
+    let file = File::open(path).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    let h = read_header(&file, path)?;
+    let len = file.metadata()?.len();
+    let mut out = String::new();
+    let kind = match h.kind {
+        BinaryKind::Dense => "dense",
+        BinaryKind::Sparse => "sparse (CSR)",
+    };
+    let _ = writeln!(out, "SOMB container: {}", path.display());
+    let _ = writeln!(out, "  version {VERSION}");
+    let _ = writeln!(out, "  kind    {kind}");
+    let _ = writeln!(out, "  rows    {}", h.rows);
+    let _ = writeln!(out, "  dim     {}", h.dim);
+    if h.kind == BinaryKind::Sparse {
+        let _ = writeln!(
+            out,
+            "  nnz     {} ({:.3}% dense)",
+            h.nnz,
+            100.0 * h.nnz as f64 / (h.rows as f64 * h.dim as f64)
+        );
+    }
+    let _ = writeln!(
+        out,
+        "  file    {len} bytes ({HEADER_LEN}-byte header + payload)"
+    );
+    if ranks != 1 {
+        // Same validation (and error text) as every shard open: ranks
+        // must be nonzero and no larger than the row count.
+        rank_window(h.rows, 0, ranks)?;
+        let _ = writeln!(out, "  shard windows (--ranks {ranks}):");
+        for (rank, w) in crate::util::threadpool::split_ranges(h.rows, ranks)
+            .into_iter()
+            .enumerate()
+        {
+            match h.kind {
+                BinaryKind::Dense => {
+                    let b0 = HEADER_LEN + 4 * (w.start as u64) * (h.dim as u64);
+                    let b1 = HEADER_LEN + 4 * (w.end as u64) * (h.dim as u64);
+                    let _ = writeln!(
+                        out,
+                        "    rank {rank}: rows [{}, {})  bytes [{b0}, {b1})",
+                        w.start, w.end
+                    );
+                }
+                BinaryKind::Sparse => {
+                    let a = read_indptr_entry(&file, &h, w.start)?;
+                    let b = read_indptr_entry(&file, &h, w.end)?;
+                    anyhow::ensure!(
+                        b >= a && b as usize <= h.nnz,
+                        "{}: corrupt indptr section (window [{a}, {b}), nnz {})",
+                        path.display(),
+                        h.nnz
+                    );
+                    let _ = writeln!(
+                        out,
+                        "    rank {rank}: rows [{}, {})  nnz [{a}, {b})",
+                        w.start, w.end
+                    );
+                }
+            }
+        }
+    }
+    Ok(out)
 }
 
 /// Peek at the first bytes of `path`: `Some(kind)` if it is a somoclu
@@ -376,7 +504,7 @@ pub fn convert_sparse_to_binary<P: AsRef<Path>>(
 }
 
 // ---------------------------------------------------------------------
-// Shared seek-read helpers
+// Shared positioned-read decode helpers
 // ---------------------------------------------------------------------
 
 /// Fixed staging block for LE decode: reads land here, then decode into
@@ -384,42 +512,111 @@ pub fn convert_sparse_to_binary<P: AsRef<Path>>(
 /// stays the chunk window itself.
 const IO_BLOCK: usize = 8192;
 
-/// Seek to `off` and append `count` little-endian values of byte width
-/// `W` to `out`, decoding through the fixed staging block. The exact
-/// reservation matters: the decode buffer never overshoots the chunk
-/// (the 2×-window prefetch bound counts capacity, not length).
+/// Append `count` little-endian values of byte width `W` read at
+/// absolute offset `off` to `out`, decoding through the fixed staging
+/// block. Positioned reads only — no seek state, so any number of
+/// sources can interleave reads on one shared fd. The exact reservation
+/// matters: the decode buffer never overshoots the chunk (the 2×-window
+/// prefetch bound counts capacity, not length).
 fn read_le_at<const W: usize, T>(
-    f: &mut File,
+    f: &File,
     off: u64,
     count: usize,
     out: &mut Vec<T>,
     decode: fn([u8; W]) -> T,
 ) -> anyhow::Result<()> {
-    f.seek(SeekFrom::Start(off))?;
     out.reserve_exact(count);
     let mut block = [0u8; IO_BLOCK];
     let mut left = count;
+    let mut pos = off;
     while left > 0 {
         let take = left.min(IO_BLOCK / W);
-        f.read_exact(&mut block[..take * W])?;
+        pread_exact(f, pos, &mut block[..take * W])?;
         for i in 0..take {
             out.push(decode(block[i * W..(i + 1) * W].try_into().unwrap()));
         }
+        pos += (take * W) as u64;
         left -= take;
     }
     Ok(())
 }
 
-fn read_f32s_at(f: &mut File, off: u64, count: usize, out: &mut Vec<f32>) -> anyhow::Result<()> {
+fn read_f32s_at(f: &File, off: u64, count: usize, out: &mut Vec<f32>) -> anyhow::Result<()> {
     read_le_at(f, off, count, out, f32::from_le_bytes)
 }
 
-fn read_u32s_at(f: &mut File, off: u64, count: usize, out: &mut Vec<u32>) -> anyhow::Result<()> {
+fn read_u32s_at(f: &File, off: u64, count: usize, out: &mut Vec<u32>) -> anyhow::Result<()> {
     read_le_at(f, off, count, out, u32::from_le_bytes)
 }
 
-fn read_u64s_at(f: &mut File, off: u64, count: usize, out: &mut Vec<u64>) -> anyhow::Result<()> {
+fn read_u64s_at(f: &File, off: u64, count: usize, out: &mut Vec<u64>) -> anyhow::Result<()> {
     read_le_at(f, off, count, out, u64::from_le_bytes)
+}
+
+// ---------------------------------------------------------------------
+// Shared fd (the pread streaming mode, `--io pread`)
+// ---------------------------------------------------------------------
+
+/// One open + one validated header, shareable by any number of chunk
+/// sources: every rank's source clones the `Arc` and issues positioned
+/// reads, so `--ranks N --io pread` holds exactly **one** fd for the
+/// data file instead of N per-rank opens (the buffered mode's shape).
+#[derive(Clone)]
+pub struct SharedFd {
+    file: Arc<File>,
+    path: PathBuf,
+    header: BinaryHeader,
+}
+
+impl SharedFd {
+    /// Open `path` once and validate its container header.
+    pub fn open<P: AsRef<Path>>(path: P) -> anyhow::Result<Self> {
+        // The fallback pread_exact (seek + read) is NOT cursor-safe
+        // under sharing, so the shared-fd mode refuses where real
+        // positioned reads are unavailable.
+        if cfg!(not(any(unix, windows))) {
+            anyhow::bail!(
+                "--io pread needs positioned reads (unix pread / windows \
+                 seek_read); this platform has neither — use --io buffered"
+            );
+        }
+        let path = path.as_ref().to_path_buf();
+        let file = File::open(&path)?;
+        let header = read_header(&file, &path)?;
+        Ok(SharedFd {
+            file: Arc::new(file),
+            path,
+            header,
+        })
+    }
+
+    pub fn header(&self) -> BinaryHeader {
+        self.header
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Rank `rank` of `ranks`' dense chunk source over this fd.
+    pub fn dense_shard(
+        &self,
+        chunk_rows: usize,
+        rank: usize,
+        ranks: usize,
+    ) -> anyhow::Result<BinaryDenseFileSource> {
+        BinaryDenseFileSource::from_shared(self, chunk_rows, rank, ranks)
+    }
+
+    /// Rank `rank` of `ranks`' sparse chunk source over this fd.
+    pub fn sparse_shard(
+        &self,
+        chunk_rows: usize,
+        rank: usize,
+        ranks: usize,
+    ) -> anyhow::Result<BinarySparseFileSource> {
+        BinarySparseFileSource::from_shared(self, chunk_rows, rank, ranks)
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -427,11 +624,13 @@ fn read_u64s_at(f: &mut File, off: u64, count: usize, out: &mut Vec<u64>) -> any
 // ---------------------------------------------------------------------
 
 /// Streams a dense binary container in `chunk_rows` windows: each chunk
-/// is one seek + sequential `read_exact`, no parsing. Supports a
-/// `(rank, ranks)` row-window view for per-rank file sharding.
+/// is positioned `pread`s, no parsing and no seek state. Supports a
+/// `(rank, ranks)` row-window view for per-rank file sharding, either
+/// over its own fd (`open_shard`, the buffered default) or over a
+/// [`SharedFd`] all ranks share (`--io pread`).
 pub struct BinaryDenseFileSource {
     path: PathBuf,
-    file: File,
+    file: Arc<File>,
     dim: usize,
     /// Global row index of this source's window start.
     row_start: usize,
@@ -455,7 +654,7 @@ impl BinaryDenseFileSource {
         Self::open_shard(path, chunk_rows, 0, 1)
     }
 
-    /// Open rank `rank` of `ranks`' disjoint row window.
+    /// Open rank `rank` of `ranks`' disjoint row window on a private fd.
     pub fn open_shard<P: AsRef<Path>>(
         path: P,
         chunk_rows: usize,
@@ -463,8 +662,37 @@ impl BinaryDenseFileSource {
         ranks: usize,
     ) -> anyhow::Result<Self> {
         let path = path.as_ref().to_path_buf();
-        let mut file = File::open(&path)?;
-        let header = read_header(&mut file, &path)?;
+        let file = File::open(&path)?;
+        let header = read_header(&file, &path)?;
+        Self::build(path, Arc::new(file), header, chunk_rows, rank, ranks)
+    }
+
+    /// Rank `rank` of `ranks`' row window over an already-open
+    /// [`SharedFd`] (no new open; the fd's header was validated there).
+    pub fn from_shared(
+        shared: &SharedFd,
+        chunk_rows: usize,
+        rank: usize,
+        ranks: usize,
+    ) -> anyhow::Result<Self> {
+        Self::build(
+            shared.path.clone(),
+            Arc::clone(&shared.file),
+            shared.header,
+            chunk_rows,
+            rank,
+            ranks,
+        )
+    }
+
+    fn build(
+        path: PathBuf,
+        file: Arc<File>,
+        header: BinaryHeader,
+        chunk_rows: usize,
+        rank: usize,
+        ranks: usize,
+    ) -> anyhow::Result<Self> {
         anyhow::ensure!(
             header.kind == BinaryKind::Dense,
             "{}: sparse container opened as dense (use the sparse kernel, -k 2)",
@@ -493,7 +721,7 @@ impl BinaryDenseFileSource {
         out.clear();
         let global = self.row_start + self.cursor;
         let off = HEADER_LEN + 4 * (global as u64) * (self.dim as u64);
-        read_f32s_at(&mut self.file, off, take * self.dim, out)?;
+        read_f32s_at(&self.file, off, take * self.dim, out)?;
         self.cursor += take;
         Ok(())
     }
@@ -552,10 +780,11 @@ impl DataSource for BinaryDenseFileSource {
 
 /// Streams a sparse (CSR) binary container in `chunk_rows` windows
 /// through a reusable scratch CSR: per chunk, one indptr window read and
-/// one seek-read per section. Supports `(rank, ranks)` row windows.
+/// one positioned read per section. Supports `(rank, ranks)` row
+/// windows over a private fd or a [`SharedFd`].
 pub struct BinarySparseFileSource {
     path: PathBuf,
-    file: File,
+    file: Arc<File>,
     header: BinaryHeader,
     row_start: usize,
     window_rows: usize,
@@ -579,7 +808,7 @@ impl BinarySparseFileSource {
         Self::open_shard(path, chunk_rows, 0, 1)
     }
 
-    /// Open rank `rank` of `ranks`' disjoint row window.
+    /// Open rank `rank` of `ranks`' disjoint row window on a private fd.
     pub fn open_shard<P: AsRef<Path>>(
         path: P,
         chunk_rows: usize,
@@ -587,8 +816,37 @@ impl BinarySparseFileSource {
         ranks: usize,
     ) -> anyhow::Result<Self> {
         let path = path.as_ref().to_path_buf();
-        let mut file = File::open(&path)?;
-        let header = read_header(&mut file, &path)?;
+        let file = File::open(&path)?;
+        let header = read_header(&file, &path)?;
+        Self::build(path, Arc::new(file), header, chunk_rows, rank, ranks)
+    }
+
+    /// Rank `rank` of `ranks`' row window over an already-open
+    /// [`SharedFd`] (no new open; the fd's header was validated there).
+    pub fn from_shared(
+        shared: &SharedFd,
+        chunk_rows: usize,
+        rank: usize,
+        ranks: usize,
+    ) -> anyhow::Result<Self> {
+        Self::build(
+            shared.path.clone(),
+            Arc::clone(&shared.file),
+            shared.header,
+            chunk_rows,
+            rank,
+            ranks,
+        )
+    }
+
+    fn build(
+        path: PathBuf,
+        file: Arc<File>,
+        header: BinaryHeader,
+        chunk_rows: usize,
+        rank: usize,
+        ranks: usize,
+    ) -> anyhow::Result<Self> {
         anyhow::ensure!(
             header.kind == BinaryKind::Sparse,
             "{}: dense container opened as sparse (drop -k 2 for dense data)",
@@ -622,7 +880,7 @@ impl BinarySparseFileSource {
         // indptr window: take + 1 cumulative offsets.
         self.ips.clear();
         read_u64s_at(
-            &mut self.file,
+            &self.file,
             h.indptr_off() + 8 * global as u64,
             take + 1,
             &mut self.ips,
@@ -650,7 +908,7 @@ impl BinarySparseFileSource {
         }
 
         out.indices.clear();
-        read_u32s_at(&mut self.file, h.indices_off() + 4 * a as u64, b - a, &mut out.indices)?;
+        read_u32s_at(&self.file, h.indices_off() + 4 * a as u64, b - a, &mut out.indices)?;
         for &c in &out.indices {
             anyhow::ensure!(
                 (c as usize) < h.dim,
@@ -660,7 +918,7 @@ impl BinarySparseFileSource {
             );
         }
         out.values.clear();
-        read_f32s_at(&mut self.file, h.values_off() + 4 * a as u64, b - a, &mut out.values)?;
+        read_f32s_at(&self.file, h.values_off() + 4 * a as u64, b - a, &mut out.values)?;
         self.cursor += take;
         Ok(())
     }
@@ -699,7 +957,7 @@ impl DataSource for BinarySparseFileSource {
         self.scratch = scratch;
         res?;
         self.sync_gauge();
-        Ok(Some(DataShard::Sparse(&self.scratch)))
+        Ok(Some(DataShard::Sparse(self.scratch.view())))
     }
 
     fn next_chunk_into(&mut self, out: &mut ChunkBuf) -> anyhow::Result<bool> {

@@ -1,0 +1,583 @@
+//! Zero-copy streaming over the `SOMB` binary container (`--io mmap`).
+//!
+//! The buffered binary sources (`io::binary`) already skip per-epoch
+//! parsing, but every chunk still pays one copy: page cache → decode
+//! block → typed chunk buffer. This module maps the container **once**
+//! (`mmap(2)`, read-only, shared) and hands the kernels borrowed
+//! [`DataShard`] views pointing straight into the mapping — the chunk
+//! "read" is pointer arithmetic, the OS pages data in on first touch,
+//! and the training process owns **no** data buffers at all (dense) or
+//! only a `chunk_rows + 1`-entry rebased indptr scratch (sparse). The
+//! data-resident bound is O(1) heap beyond whatever the OS keeps in the
+//! page cache, which is the strongest form of the paper's "memory use is
+//! highly optimized" claim.
+//!
+//! Why this is sound, and where it isn't:
+//!
+//! * The container is little-endian with a 40-byte header, so the dense
+//!   payload and every sparse section start 4-byte (indptr: 8-byte)
+//!   aligned — `&[f32]`/`&[u32]`/`&[u64]` views are valid on any
+//!   little-endian 64-bit unix target. The module is compiled only
+//!   there (plus the default-on `mmap` cargo feature); everywhere else
+//!   the stub half of this file keeps the API and returns a clear error
+//!   from `open`, so `--io buffered`/`pread` remain the portable paths.
+//! * `open` validates the header *and* the exact file length (like
+//!   every binary source), so all section offsets are in-bounds by
+//!   construction; the typed-view helper re-checks bounds and alignment
+//!   defensively anyway.
+//! * Caveat inherited from mmap semantics: if another process truncates
+//!   the file while it is mapped, touching the vanished pages raises
+//!   SIGBUS — the buffered/pread paths turn the same mutation into a
+//!   clean read error instead. Don't point `--io mmap` at files being
+//!   rewritten in place.
+//!
+//! Mapped bytes never pass through the global allocator, so each source
+//! reports the window it is currently exposing to the **mapped-window
+//! gauge** (`memtrack::data_map_resize`), keeping the bounded-memory
+//! assertions (`stream_bounded.rs`) meaningful on the zero-copy path.
+//!
+//! Cluster use: [`MappedContainer::open`] maps once; every rank's
+//! `dense_shard`/`sparse_shard` clones the `Arc` and serves its own
+//! disjoint row window from the same mapping — one map, zero fds held
+//! (the fd can close once mapped; POSIX keeps the mapping alive).
+
+/// True when this build carries the real zero-copy backend (the `mmap`
+/// cargo feature on little-endian 64-bit unix). When false, the types
+/// below still exist but every `open` fails with an explanation, so
+/// callers need no conditional compilation.
+pub const SUPPORTED: bool = cfg!(all(
+    feature = "mmap",
+    unix,
+    target_pointer_width = "64",
+    target_endian = "little"
+));
+
+#[cfg(all(
+    feature = "mmap",
+    unix,
+    target_pointer_width = "64",
+    target_endian = "little"
+))]
+mod real {
+    use std::fs::File;
+    use std::os::unix::io::AsRawFd;
+    use std::path::{Path, PathBuf};
+    use std::sync::Arc;
+
+    use crate::io::binary::{read_header, BinaryHeader, BinaryKind, HEADER_LEN};
+    use crate::io::stream::{chunk_take, rank_window, DataSource};
+    use crate::kernels::DataShard;
+    use crate::sparse::CsrView;
+    use crate::util::memtrack;
+
+    /// Minimal FFI surface — the constants below are identical on Linux
+    /// and macOS, the only unix targets this module compiles for in
+    /// practice. Keeping the declarations local avoids a libc crate
+    /// dependency the container image does not carry.
+    mod sys {
+        use std::os::raw::{c_int, c_void};
+
+        pub const PROT_READ: c_int = 1;
+        pub const MAP_SHARED: c_int = 1;
+        pub const MADV_SEQUENTIAL: c_int = 2;
+
+        extern "C" {
+            // off_t is i64 on every 64-bit unix; the module is gated to
+            // target_pointer_width = "64" so this signature is the ABI.
+            pub fn mmap(
+                addr: *mut c_void,
+                len: usize,
+                prot: c_int,
+                flags: c_int,
+                fd: c_int,
+                offset: i64,
+            ) -> *mut c_void;
+            pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+            pub fn madvise(addr: *mut c_void, len: usize, advice: c_int) -> c_int;
+        }
+    }
+
+    /// A read-only shared mapping of one file, unmapped on drop.
+    pub(super) struct Mapping {
+        ptr: *mut std::os::raw::c_void,
+        len: usize,
+    }
+
+    // The mapping is immutable shared memory; concurrent reads from any
+    // thread are safe, and the pointer is only freed in Drop.
+    unsafe impl Send for Mapping {}
+    unsafe impl Sync for Mapping {}
+
+    impl Mapping {
+        fn map(file: &File, len: usize, path: &Path) -> anyhow::Result<Mapping> {
+            anyhow::ensure!(len > 0, "{}: cannot map an empty file", path.display());
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_SHARED,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            anyhow::ensure!(
+                ptr as isize != -1,
+                "{}: mmap failed: {}",
+                path.display(),
+                std::io::Error::last_os_error()
+            );
+            // Epochs stream the window front to back; tell the pager.
+            // Purely advisory — a failure changes nothing correctness-wise.
+            unsafe { sys::madvise(ptr, len, sys::MADV_SEQUENTIAL) };
+            Ok(Mapping { ptr, len })
+        }
+
+        /// Borrow `count` values of `T` at byte offset `off`, bounds- and
+        /// alignment-checked. `T` must be a plain LE number type whose
+        /// every bit pattern is valid (f32 / u32 / u64 here).
+        fn typed<T: Copy>(&self, off: u64, count: usize) -> anyhow::Result<&[T]> {
+            let size = std::mem::size_of::<T>();
+            let off = usize::try_from(off)?;
+            let bytes = count
+                .checked_mul(size)
+                .ok_or_else(|| anyhow::anyhow!("mapped view size overflow"))?;
+            anyhow::ensure!(
+                off.checked_add(bytes).is_some_and(|end| end <= self.len),
+                "mapped view [{off}, +{bytes}) out of bounds (mapping is {} bytes)",
+                self.len
+            );
+            let p = unsafe { self.ptr.cast::<u8>().add(off) };
+            anyhow::ensure!(
+                p as usize % std::mem::align_of::<T>() == 0,
+                "mapped section at offset {off} is not {}-aligned",
+                std::mem::align_of::<T>()
+            );
+            Ok(unsafe { std::slice::from_raw_parts(p.cast::<T>(), count) })
+        }
+    }
+
+    impl Drop for Mapping {
+        fn drop(&mut self) {
+            unsafe { sys::munmap(self.ptr, self.len) };
+        }
+    }
+
+    /// One mapped `SOMB` container, shareable by any number of chunk
+    /// sources (the cluster runner maps once, then cuts a per-rank
+    /// window source for every rank).
+    pub struct MappedContainer {
+        map: Arc<Mapping>,
+        header: BinaryHeader,
+        path: PathBuf,
+    }
+
+    impl MappedContainer {
+        /// Open + validate + map `path`. The fd is closed before this
+        /// returns; the mapping keeps the file content reachable.
+        pub fn open<P: AsRef<Path>>(path: P) -> anyhow::Result<Self> {
+            let path = path.as_ref().to_path_buf();
+            let file = File::open(&path)?;
+            // Validates magic/version/kind and the exact file length, so
+            // every section offset derived from the header is in-bounds.
+            let header = read_header(&file, &path)?;
+            let len = usize::try_from(file.metadata()?.len())?;
+            let map = Mapping::map(&file, len, &path)?;
+            Ok(MappedContainer {
+                map: Arc::new(map),
+                header,
+                path,
+            })
+        }
+
+        pub fn header(&self) -> BinaryHeader {
+            self.header
+        }
+
+        /// Rank `rank` of `ranks`' dense window over this mapping.
+        pub fn dense_shard(
+            &self,
+            chunk_rows: usize,
+            rank: usize,
+            ranks: usize,
+        ) -> anyhow::Result<MmapDenseSource> {
+            anyhow::ensure!(
+                self.header.kind == BinaryKind::Dense,
+                "{}: sparse container opened as dense (use the sparse kernel, -k 2)",
+                self.path.display()
+            );
+            let window = rank_window(self.header.rows, rank, ranks)?;
+            Ok(MmapDenseSource {
+                map: Arc::clone(&self.map),
+                dim: self.header.dim,
+                row_start: window.start,
+                window_rows: window.len(),
+                chunk_rows,
+                cursor: 0,
+                reported_map: 0,
+            })
+        }
+
+        /// Rank `rank` of `ranks`' sparse window over this mapping.
+        pub fn sparse_shard(
+            &self,
+            chunk_rows: usize,
+            rank: usize,
+            ranks: usize,
+        ) -> anyhow::Result<MmapSparseSource> {
+            anyhow::ensure!(
+                self.header.kind == BinaryKind::Sparse,
+                "{}: dense container opened as sparse (drop -k 2 for dense data)",
+                self.path.display()
+            );
+            let window = rank_window(self.header.rows, rank, ranks)?;
+            Ok(MmapSparseSource {
+                map: Arc::clone(&self.map),
+                header: self.header,
+                path: self.path.clone(),
+                row_start: window.start,
+                window_rows: window.len(),
+                chunk_rows,
+                cursor: 0,
+                indptr_scratch: Vec::new(),
+                reported_buf: 0,
+                reported_map: 0,
+            })
+        }
+    }
+
+    /// Zero-copy dense source: every chunk is a borrowed `&[f32]` view
+    /// into the mapping. Holds no data buffers at all.
+    pub struct MmapDenseSource {
+        map: Arc<Mapping>,
+        dim: usize,
+        row_start: usize,
+        window_rows: usize,
+        chunk_rows: usize,
+        cursor: usize,
+        /// Mapped bytes currently exposed as a chunk view (gauge share).
+        reported_map: usize,
+    }
+
+    impl MmapDenseSource {
+        /// Map the whole file as a single-rank source.
+        pub fn open<P: AsRef<Path>>(path: P, chunk_rows: usize) -> anyhow::Result<Self> {
+            MappedContainer::open(path)?.dense_shard(chunk_rows, 0, 1)
+        }
+    }
+
+    impl Drop for MmapDenseSource {
+        fn drop(&mut self) {
+            memtrack::data_map_resize(self.reported_map, 0);
+        }
+    }
+
+    impl DataSource for MmapDenseSource {
+        fn rows(&self) -> usize {
+            self.window_rows
+        }
+
+        fn dim(&self) -> usize {
+            self.dim
+        }
+
+        fn chunk_rows(&self) -> usize {
+            self.chunk_rows
+        }
+
+        fn next_chunk(&mut self) -> anyhow::Result<Option<DataShard<'_>>> {
+            let take = chunk_take(self.window_rows, self.cursor, self.chunk_rows);
+            if take == 0 {
+                return Ok(None);
+            }
+            let global = self.row_start + self.cursor;
+            self.cursor += take;
+            let count = take * self.dim;
+            memtrack::data_map_resize(self.reported_map, count * 4);
+            self.reported_map = count * 4;
+            let off = HEADER_LEN + 4 * (global as u64) * (self.dim as u64);
+            let data: &[f32] = self.map.typed(off, count)?;
+            Ok(Some(DataShard::Dense {
+                data,
+                dim: self.dim,
+            }))
+        }
+
+        fn reset(&mut self) -> anyhow::Result<()> {
+            self.cursor = 0;
+            Ok(())
+        }
+
+        /// Unlike every other file-backed source, a full-file mapped view
+        /// IS addressable as one shard — so PCA initialization works
+        /// while still streaming bounded chunks through the kernels.
+        fn resident(&self) -> Option<DataShard<'_>> {
+            if self.row_start != 0 || self.window_rows * self.dim == 0 {
+                return None;
+            }
+            let off = HEADER_LEN;
+            let count = self.window_rows * self.dim;
+            match self.map.typed::<f32>(off, count) {
+                Ok(data) if self.is_whole_file(count) => {
+                    // The whole payload is being exposed (PCA init reads
+                    // every row). `&self` cannot carry a share to release
+                    // later, so record the exposure as a peak excursion —
+                    // the mapped-window gauge must never under-report the
+                    // largest view handed out. (The training loop only
+                    // calls `resident()` when init actually needs the
+                    // data, so bounded chunked runs keep their one-window
+                    // peak.)
+                    memtrack::data_map_resize(0, count * 4);
+                    memtrack::data_map_resize(count * 4, 0);
+                    Some(DataShard::Dense {
+                        data,
+                        dim: self.dim,
+                    })
+                }
+                _ => None,
+            }
+        }
+    }
+
+    impl MmapDenseSource {
+        /// Does this source's window cover the entire payload?
+        fn is_whole_file(&self, count: usize) -> bool {
+            HEADER_LEN as usize + count * 4 == self.map.len
+        }
+    }
+
+    /// Zero-copy sparse source: `indices`/`values` of every chunk are
+    /// borrowed views into the mapping; only the rebased indptr window
+    /// (`chunk_rows + 1` usizes) lives on the heap.
+    pub struct MmapSparseSource {
+        map: Arc<Mapping>,
+        header: BinaryHeader,
+        path: PathBuf,
+        row_start: usize,
+        window_rows: usize,
+        chunk_rows: usize,
+        cursor: usize,
+        /// Reusable rebased indptr window (the one owned allocation).
+        indptr_scratch: Vec<usize>,
+        /// Heap gauge share (the scratch).
+        reported_buf: usize,
+        /// Mapped-window gauge share (the exposed view).
+        reported_map: usize,
+    }
+
+    impl MmapSparseSource {
+        /// Map the whole file as a single-rank source.
+        pub fn open<P: AsRef<Path>>(path: P, chunk_rows: usize) -> anyhow::Result<Self> {
+            MappedContainer::open(path)?.sparse_shard(chunk_rows, 0, 1)
+        }
+    }
+
+    impl Drop for MmapSparseSource {
+        fn drop(&mut self) {
+            memtrack::data_buffer_resize(self.reported_buf, 0);
+            memtrack::data_map_resize(self.reported_map, 0);
+        }
+    }
+
+    impl DataSource for MmapSparseSource {
+        fn rows(&self) -> usize {
+            self.window_rows
+        }
+
+        fn dim(&self) -> usize {
+            self.header.dim
+        }
+
+        fn chunk_rows(&self) -> usize {
+            self.chunk_rows
+        }
+
+        fn next_chunk(&mut self) -> anyhow::Result<Option<DataShard<'_>>> {
+            let take = chunk_take(self.window_rows, self.cursor, self.chunk_rows);
+            if take == 0 {
+                return Ok(None);
+            }
+            let global = self.row_start + self.cursor;
+            self.cursor += take;
+            let h = self.header;
+
+            // indptr window: borrow take + 1 cumulative offsets from the
+            // map, validate (same checks and messages as the buffered
+            // source), rebase into the reusable scratch.
+            let (a, b) = {
+                let ips: &[u64] =
+                    self.map.typed(h.indptr_off() + 8 * global as u64, take + 1)?;
+                for w in ips.windows(2) {
+                    anyhow::ensure!(
+                        w[1] >= w[0],
+                        "{}: corrupt indptr section (non-monotone)",
+                        self.path.display()
+                    );
+                }
+                let a = usize::try_from(ips[0])?;
+                let b = usize::try_from(ips[take])?;
+                anyhow::ensure!(
+                    b <= h.nnz,
+                    "{}: corrupt indptr section (window [{a}, {b}), nnz {})",
+                    self.path.display(),
+                    h.nnz
+                );
+                self.indptr_scratch.clear();
+                self.indptr_scratch
+                    .extend(ips.iter().map(|&p| (p - ips[0]) as usize));
+                (a, b)
+            };
+
+            // Gauge shares: the scratch is heap, the exposed view is map.
+            let buf_bytes = self.indptr_scratch.capacity() * std::mem::size_of::<usize>();
+            memtrack::data_buffer_resize(self.reported_buf, buf_bytes);
+            self.reported_buf = buf_bytes;
+            let map_bytes = (take + 1) * 8 + (b - a) * 8;
+            memtrack::data_map_resize(self.reported_map, map_bytes);
+            self.reported_map = map_bytes;
+
+            let indices: &[u32] = self.map.typed(h.indices_off() + 4 * a as u64, b - a)?;
+            for &c in indices {
+                anyhow::ensure!(
+                    (c as usize) < h.dim,
+                    "{}: corrupt indices section (column {c} out of range, cols {})",
+                    self.path.display(),
+                    h.dim
+                );
+            }
+            let values: &[f32] = self.map.typed(h.values_off() + 4 * a as u64, b - a)?;
+            Ok(Some(DataShard::Sparse(CsrView {
+                rows: take,
+                cols: h.dim,
+                indptr: &self.indptr_scratch,
+                indices,
+                values,
+            })))
+        }
+
+        fn reset(&mut self) -> anyhow::Result<()> {
+            self.cursor = 0;
+            Ok(())
+        }
+    }
+}
+
+#[cfg(all(
+    feature = "mmap",
+    unix,
+    target_pointer_width = "64",
+    target_endian = "little"
+))]
+pub use real::{MappedContainer, MmapDenseSource, MmapSparseSource};
+
+/// Stub half: same names and signatures, every constructor explains why
+/// zero-copy is unavailable in this build. Keeps call sites (CLI,
+/// cluster runner, benches) free of conditional compilation and lets
+/// the `--no-default-features` CI leg prove the fallback paths.
+#[cfg(not(all(
+    feature = "mmap",
+    unix,
+    target_pointer_width = "64",
+    target_endian = "little"
+)))]
+mod stub {
+    use std::path::Path;
+
+    use crate::io::binary::BinaryHeader;
+    use crate::io::stream::{ChunkBuf, DataSource};
+    use crate::kernels::DataShard;
+
+    fn unsupported() -> anyhow::Error {
+        anyhow::anyhow!(
+            "this build has no zero-copy mmap backend (needs the `mmap` \
+             cargo feature and a little-endian 64-bit unix target); use \
+             --io pread or --io buffered"
+        )
+    }
+
+    pub struct MappedContainer {
+        never: std::convert::Infallible,
+    }
+
+    impl MappedContainer {
+        pub fn open<P: AsRef<Path>>(_path: P) -> anyhow::Result<Self> {
+            Err(unsupported())
+        }
+
+        pub fn header(&self) -> BinaryHeader {
+            match self.never {}
+        }
+
+        pub fn dense_shard(
+            &self,
+            _chunk_rows: usize,
+            _rank: usize,
+            _ranks: usize,
+        ) -> anyhow::Result<MmapDenseSource> {
+            match self.never {}
+        }
+
+        pub fn sparse_shard(
+            &self,
+            _chunk_rows: usize,
+            _rank: usize,
+            _ranks: usize,
+        ) -> anyhow::Result<MmapSparseSource> {
+            match self.never {}
+        }
+    }
+
+    macro_rules! stub_source {
+        ($name:ident) => {
+            pub struct $name {
+                never: std::convert::Infallible,
+            }
+
+            impl $name {
+                pub fn open<P: AsRef<Path>>(
+                    _path: P,
+                    _chunk_rows: usize,
+                ) -> anyhow::Result<Self> {
+                    Err(unsupported())
+                }
+            }
+
+            impl DataSource for $name {
+                fn rows(&self) -> usize {
+                    match self.never {}
+                }
+
+                fn dim(&self) -> usize {
+                    match self.never {}
+                }
+
+                fn chunk_rows(&self) -> usize {
+                    match self.never {}
+                }
+
+                fn next_chunk(&mut self) -> anyhow::Result<Option<DataShard<'_>>> {
+                    match self.never {}
+                }
+
+                fn next_chunk_into(&mut self, _out: &mut ChunkBuf) -> anyhow::Result<bool> {
+                    match self.never {}
+                }
+
+                fn reset(&mut self) -> anyhow::Result<()> {
+                    match self.never {}
+                }
+            }
+        };
+    }
+
+    stub_source!(MmapDenseSource);
+    stub_source!(MmapSparseSource);
+}
+
+#[cfg(not(all(
+    feature = "mmap",
+    unix,
+    target_pointer_width = "64",
+    target_endian = "little"
+)))]
+pub use stub::{MappedContainer, MmapDenseSource, MmapSparseSource};

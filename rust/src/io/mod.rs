@@ -8,13 +8,20 @@
 pub mod binary;
 pub mod dense;
 pub mod esom;
+// Zero-copy mmap sources (`--io mmap`). Always declared: on targets or
+// feature sets without the backend the module exports API-compatible
+// stubs whose constructors explain the fallback, so no caller needs
+// conditional compilation (see `mmap::SUPPORTED`).
+pub mod mmap;
 pub mod output;
 pub mod sparse;
 pub mod stream;
 
 pub use binary::{
     sniff as sniff_binary, BinaryDenseFileSource, BinaryKind, BinarySparseFileSource,
+    SharedFd,
 };
+pub use mmap::{MappedContainer, MmapDenseSource, MmapSparseSource};
 pub use dense::{read_dense, DenseMatrix};
 pub use sparse::read_sparse;
 pub use stream::{

@@ -27,8 +27,13 @@
 //! * [`ChunkedSparseFileSource`] — the same for libsvm sparse files,
 //!   through a reusable windowed CSR.
 //! * [`crate::io::binary`] adds `BinaryDenseFileSource` /
-//!   `BinarySparseFileSource` — seek-and-read chunking over the binary
-//!   container with zero per-epoch parsing (the streaming fast path).
+//!   `BinarySparseFileSource` — positioned-read chunking over the binary
+//!   container with zero per-epoch parsing (the streaming fast path),
+//!   either on a private fd or on one `SharedFd` all ranks share
+//!   (`--io pread`).
+//! * [`crate::io::mmap`] adds `MmapDenseSource` / `MmapSparseSource` —
+//!   zero-copy chunk views straight out of a page-cache mapping
+//!   (`--io mmap`), accounted on the mapped-window gauge.
 //! * [`PrefetchSource`] — wraps any `Send` source with a reader thread
 //!   and two recycled buffers, so chunk k+1 loads while the kernel runs
 //!   chunk k (I/O–compute overlap).
@@ -52,7 +57,7 @@ use std::sync::mpsc;
 use crate::io::dense::{is_comment, parse_header_token, ReadError};
 use crate::io::sparse::parse_sparse_line;
 use crate::kernels::DataShard;
-use crate::sparse::Csr;
+use crate::sparse::{Csr, CsrView};
 use crate::util::memtrack;
 use crate::util::threadpool::split_ranges;
 
@@ -97,11 +102,11 @@ pub trait DataSource {
                 let dst = out.make_sparse(m.cols);
                 dst.rows = m.rows;
                 dst.indptr.clear();
-                dst.indptr.extend_from_slice(&m.indptr);
+                dst.indptr.extend_from_slice(m.indptr);
                 dst.indices.clear();
-                dst.indices.extend_from_slice(&m.indices);
+                dst.indices.extend_from_slice(m.indices);
                 dst.values.clear();
-                dst.values.extend_from_slice(&m.values);
+                dst.values.extend_from_slice(m.values);
                 Ok(true)
             }
         }
@@ -205,7 +210,7 @@ impl ChunkBuf {
     pub fn as_shard(&self) -> DataShard<'_> {
         match self {
             ChunkBuf::Dense { data, dim } => DataShard::Dense { data, dim: *dim },
-            ChunkBuf::Sparse(m) => DataShard::Sparse(m),
+            ChunkBuf::Sparse(m) => DataShard::Sparse(m.view()),
         }
     }
 
@@ -274,7 +279,7 @@ pub struct InMemorySource<'a> {
 fn shard_bytes(shard: &DataShard<'_>) -> usize {
     match shard {
         DataShard::Dense { data, .. } => std::mem::size_of_val(*data),
-        DataShard::Sparse(m) => m.heap_bytes(),
+        DataShard::Sparse(m) => m.data_bytes(),
     }
 }
 
@@ -291,9 +296,9 @@ impl<'a> InMemorySource<'a> {
         }
     }
 
-    /// Copy rows `start..start + take` of the resident CSR into the
+    /// Copy rows `start..start + take` of the resident CSR view into the
     /// reusable scratch window (no per-chunk allocation once warm).
-    fn fill_scratch(&mut self, m: &Csr, start: usize, take: usize) {
+    fn fill_scratch(&mut self, m: CsrView<'_>, start: usize, take: usize) {
         let (a, b) = (m.indptr[start], m.indptr[start + take]);
         self.scratch.rows = take;
         self.scratch.cols = m.cols;
@@ -353,7 +358,7 @@ impl DataSource for InMemorySource<'_> {
                     Ok(Some(DataShard::Sparse(m)))
                 } else {
                     self.fill_scratch(m, start, take);
-                    Ok(Some(DataShard::Sparse(&self.scratch)))
+                    Ok(Some(DataShard::Sparse(self.scratch.view())))
                 }
             }
         }
@@ -896,7 +901,7 @@ impl DataSource for ChunkedSparseFileSource {
         let bytes = self.scratch.heap_bytes();
         memtrack::data_buffer_resize(self.reported, bytes);
         self.reported = bytes;
-        Ok(Some(DataShard::Sparse(&self.scratch)))
+        Ok(Some(DataShard::Sparse(self.scratch.view())))
     }
 
     fn next_chunk_into(&mut self, out: &mut ChunkBuf) -> anyhow::Result<bool> {
@@ -1168,15 +1173,18 @@ mod tests {
 
     /// Drain a source into one dense buffer, checking chunk bounds.
     fn drain_dense(src: &mut dyn DataSource) -> Vec<f32> {
+        // Queried before the loop: a live chunk borrows the source.
+        let want_dim = src.dim();
+        let want_chunk = src.chunk_rows();
         let mut out = Vec::new();
         let mut chunks = 0;
         while let Some(chunk) = src.next_chunk().unwrap() {
             let DataShard::Dense { data, dim } = chunk else {
                 panic!("expected dense chunks");
             };
-            assert_eq!(dim, src.dim());
-            if src.chunk_rows() > 0 {
-                assert!(data.len() / dim <= src.chunk_rows());
+            assert_eq!(dim, want_dim);
+            if want_chunk > 0 {
+                assert!(data.len() / dim <= want_chunk);
             }
             out.extend_from_slice(data);
             chunks += 1;
@@ -1186,12 +1194,13 @@ mod tests {
     }
 
     fn drain_sparse(src: &mut dyn DataSource) -> Vec<f32> {
+        let want_dim = src.dim();
         let mut out = Vec::new();
         while let Some(chunk) = src.next_chunk().unwrap() {
             let DataShard::Sparse(m) = chunk else {
                 panic!("expected sparse chunks");
             };
-            assert_eq!(m.cols, src.dim());
+            assert_eq!(m.cols, want_dim);
             out.extend_from_slice(&m.to_dense());
         }
         out
@@ -1217,7 +1226,7 @@ mod tests {
         let m = Csr::random(13, 9, 0.3, &mut rng);
         let whole = m.to_dense();
         for chunk_rows in [0usize, 1, 5, 13, 50] {
-            let mut src = InMemorySource::new(DataShard::Sparse(&m), chunk_rows);
+            let mut src = InMemorySource::new(DataShard::Sparse(m.view()), chunk_rows);
             assert_eq!((src.rows(), src.dim()), (13, 9));
             assert_eq!(drain_sparse(&mut src), whole);
             src.reset().unwrap();
@@ -1479,7 +1488,7 @@ mod tests {
         let mut rng = Rng::new(29);
         let m = Csr::random(11, 6, 0.4, &mut rng);
         let whole = m.to_dense();
-        let mut src = InMemorySource::new(DataShard::Sparse(&m), 4);
+        let mut src = InMemorySource::new(DataShard::Sparse(m.view()), 4);
         let mut buf = ChunkBuf::new();
         let mut out = Vec::new();
         while src.next_chunk_into(&mut buf).unwrap() {

@@ -339,7 +339,7 @@ mod tests {
         let mut k = AccelKernel::from_env().unwrap();
         assert!(k
             .epoch_accumulate(
-                DataShard::Sparse(&m),
+                DataShard::Sparse(m.view()),
                 &cb,
                 &grid,
                 Neighborhood::bubble(),

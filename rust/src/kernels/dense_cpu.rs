@@ -537,7 +537,7 @@ mod tests {
         let mut k = DenseCpuKernel::new(1);
         assert!(k
             .epoch_accumulate(
-                DataShard::Sparse(&m),
+                DataShard::Sparse(m.view()),
                 &cb,
                 &grid,
                 Neighborhood::bubble(),

@@ -252,7 +252,7 @@ mod tests {
         let mut k = HybridKernel::from_env(1).unwrap();
         assert!(k
             .epoch_accumulate(
-                DataShard::Sparse(&m),
+                DataShard::Sparse(m.view()),
                 &cb,
                 &grid,
                 Neighborhood::bubble(),

@@ -12,7 +12,7 @@ pub mod hybrid;
 pub mod sparse_cpu;
 
 use crate::som::{Codebook, Grid, Neighborhood};
-use crate::sparse::Csr;
+use crate::sparse::CsrView;
 
 /// Kernel selector, mirroring the paper's `-k NUMBER` (3 = the paper's
 /// hybrid accelerator-BMU + CPU-update design, exposed explicitly).
@@ -56,11 +56,15 @@ pub(crate) fn codebook_key(cb: &Codebook) -> (usize, usize, usize, u64) {
     (w.as_ptr() as usize, cb.nodes, cb.dim, h)
 }
 
-/// A shard of training data, dense or sparse.
+/// A shard of training data, dense or sparse. Both variants are *fully
+/// borrowed* (a dense slice / a [`CsrView`] of slices), so a shard can
+/// point into an owned buffer, a source's reusable scratch, or a
+/// memory-mapped file without copying — the zero-copy streaming contract
+/// every kernel accepts.
 #[derive(Copy, Clone, Debug)]
 pub enum DataShard<'a> {
     Dense { data: &'a [f32], dim: usize },
-    Sparse(&'a Csr),
+    Sparse(CsrView<'a>),
 }
 
 impl<'a> DataShard<'a> {

@@ -192,7 +192,7 @@ mod tests {
             Neighborhood::bubble(),
         ] {
             let got = SparseCpuKernel::new(3)
-                .epoch_accumulate(DataShard::Sparse(&m), &cb, &grid, nb, 2.0, 0.9)
+                .epoch_accumulate(DataShard::Sparse(m.view()), &cb, &grid, nb, 2.0, 0.9)
                 .unwrap();
             let want = DenseCpuKernel::new(3)
                 .epoch_accumulate(
@@ -227,7 +227,7 @@ mod tests {
         let run = |t| {
             SparseCpuKernel::new(t)
                 .epoch_accumulate(
-                    DataShard::Sparse(&m),
+                    DataShard::Sparse(m.view()),
                     &cb,
                     &grid,
                     Neighborhood::gaussian(false),
@@ -273,7 +273,7 @@ mod tests {
         let m = Csr::new_empty(3, 5);
         let got = SparseCpuKernel::new(2)
             .epoch_accumulate(
-                DataShard::Sparse(&m),
+                DataShard::Sparse(m.view()),
                 &cb,
                 &grid,
                 Neighborhood::gaussian(false),

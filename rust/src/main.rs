@@ -14,12 +14,14 @@ use std::path::PathBuf;
 
 use somoclu::cli;
 use somoclu::cluster::runner::{train_cluster, train_cluster_stream, ClusterData, StreamInput};
+use somoclu::coordinator::config::IoMode;
 use somoclu::coordinator::train::{train, train_stream};
 use somoclu::io::binary::{self, BinaryKind};
 use somoclu::io::output::OutputWriter;
 use somoclu::io::{
     read_dense, read_sparse, BinaryDenseFileSource, BinarySparseFileSource,
-    ChunkedDenseFileSource, ChunkedSparseFileSource, DataSource, PrefetchSource,
+    ChunkedDenseFileSource, ChunkedSparseFileSource, DataSource, MmapDenseSource,
+    MmapSparseSource, PrefetchSource, SharedFd,
 };
 use somoclu::kernels::{DataShard, KernelType};
 use somoclu::som::Codebook;
@@ -47,6 +49,34 @@ fn main() {
         if let Err(e) = run_convert(opts) {
             eprintln!("error: {e:#}");
             std::process::exit(1);
+        }
+        return;
+    }
+
+    // Subcommand: `somoclu info [--ranks N] INPUT` — decode a container
+    // header + shard windows; exits nonzero on corrupt/truncated files.
+    if args.first().map(String::as_str) == Some("info") {
+        let spec = cli::info_spec();
+        if args.iter().any(|a| a == "-h" || a == "--help") {
+            print!("{}", spec.usage("somoclu info"));
+            return;
+        }
+        let opts = match spec
+            .parse(args[1..].iter().cloned())
+            .and_then(|p| cli::parse_info(&p))
+        {
+            Ok(o) => o,
+            Err(e) => {
+                eprintln!("error: {e}\n\n{}", spec.usage("somoclu info"));
+                std::process::exit(2);
+            }
+        };
+        match binary::info_report(&opts.input_file, opts.ranks) {
+            Ok(report) => print!("{report}"),
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                std::process::exit(1);
+            }
         }
         return;
     }
@@ -138,17 +168,64 @@ fn run_convert(opts: cli::ConvertOptions) -> anyhow::Result<()> {
 }
 
 /// Build the single-process streaming source for `input`: binary
-/// containers stream natively; text files stream re-parsed. `--prefetch`
-/// wraps either in the double-buffered read-ahead adapter.
+/// containers stream natively through the selected `--io` backend
+/// (buffered decode, zero-copy mmap views, or positioned pread); text
+/// files stream re-parsed (buffered only). `--prefetch` wraps any
+/// `Send` source in the double-buffered read-ahead adapter (mmap +
+/// prefetch was already rejected by `TrainConfig::validate`).
 fn open_stream_source(
     input: &str,
     kind: Option<BinaryKind>,
     kernel: KernelType,
     chunk_rows: usize,
     prefetch: bool,
+    io: IoMode,
 ) -> anyhow::Result<Box<dyn DataSource + Send>> {
-    let mut src: Box<dyn DataSource + Send> = match kind {
-        Some(BinaryKind::Dense) => {
+    let mut src: Box<dyn DataSource + Send> = match (kind, io) {
+        (Some(BinaryKind::Dense), IoMode::Mmap) => {
+            let s = MmapDenseSource::open(input, chunk_rows)?;
+            eprintln!(
+                "mapped dense binary input: {} rows x {} dims ({} zero-copy chunk views)",
+                s.rows(),
+                s.dim(),
+                chunk_desc(chunk_rows)
+            );
+            Box::new(s)
+        }
+        (Some(BinaryKind::Sparse), IoMode::Mmap) => {
+            let s = MmapSparseSource::open(input, chunk_rows)?;
+            eprintln!(
+                "mapped sparse binary input: {} rows x {} dims ({} zero-copy chunk views)",
+                s.rows(),
+                s.dim(),
+                chunk_desc(chunk_rows)
+            );
+            Box::new(s)
+        }
+        (Some(BinaryKind::Dense), IoMode::Pread) => {
+            let s = SharedFd::open(input)?.dense_shard(chunk_rows, 0, 1)?;
+            eprintln!(
+                "streaming dense binary input over one pread fd: {} rows x {} dims ({} chunks)",
+                s.rows(),
+                s.dim(),
+                chunk_desc(chunk_rows)
+            );
+            Box::new(s)
+        }
+        (Some(BinaryKind::Sparse), IoMode::Pread) => {
+            let s = SharedFd::open(input)?.sparse_shard(chunk_rows, 0, 1)?;
+            eprintln!(
+                "streaming sparse binary input over one pread fd: {} rows x {} dims ({} chunks)",
+                s.rows(),
+                s.dim(),
+                chunk_desc(chunk_rows)
+            );
+            Box::new(s)
+        }
+        (None, mode) if mode != IoMode::Buffered => {
+            anyhow::bail!(mode.text_input_error());
+        }
+        (Some(BinaryKind::Dense), _) => {
             let s = BinaryDenseFileSource::open(input, chunk_rows)?;
             eprintln!(
                 "streaming dense binary input: {} rows x {} dims ({} chunks)",
@@ -158,7 +235,7 @@ fn open_stream_source(
             );
             Box::new(s)
         }
-        Some(BinaryKind::Sparse) => {
+        (Some(BinaryKind::Sparse), _) => {
             let s = BinarySparseFileSource::open(input, chunk_rows)?;
             eprintln!(
                 "streaming sparse binary input: {} rows x {} dims ({} chunks)",
@@ -168,7 +245,7 @@ fn open_stream_source(
             );
             Box::new(s)
         }
-        None if kernel == KernelType::SparseCpu => {
+        (None, _) if kernel == KernelType::SparseCpu => {
             let s = ChunkedSparseFileSource::open(input, 0, chunk_rows)?;
             eprintln!(
                 "streaming sparse input: {} rows x {} dims ({} chunks; run \
@@ -179,7 +256,7 @@ fn open_stream_source(
             );
             Box::new(s)
         }
-        None => {
+        (None, _) => {
             let s = ChunkedDenseFileSource::open(input, chunk_rows)?;
             eprintln!(
                 "streaming dense input: {} rows x {} dims ({} chunks; run \
@@ -208,6 +285,9 @@ fn chunk_desc(chunk_rows: usize) -> String {
 
 fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
     let cfg = &opts.config;
+    // Fail config conflicts (e.g. --io mmap with --prefetch) before any
+    // file is opened or mapped.
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
     let writer = OutputWriter::new(&opts.output_prefix);
 
     // Load the initial codebook if requested (paper -c).
@@ -239,6 +319,13 @@ fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
     let binary_kind = binary::sniff(&opts.input_file)
         .map_err(|e| anyhow::anyhow!("{}: {e}", opts.input_file))?;
     let streaming = cfg.chunk_rows > 0 || binary_kind.is_some();
+    // The zero-copy backends are defined over the binary container only;
+    // refuse early (covering the resident path too) instead of silently
+    // falling back on text inputs.
+    anyhow::ensure!(
+        cfg.io_mode == IoMode::Buffered || binary_kind.is_some(),
+        cfg.io_mode.text_input_error()
+    );
 
     let t0 = std::time::Instant::now();
     let result = if cfg.ranks > 1 && streaming {
@@ -254,9 +341,10 @@ fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
             StreamInput::DenseText { path }
         };
         eprintln!(
-            "streaming {} per-rank shards ({} chunks each{})",
+            "streaming {} per-rank shards ({} chunks each, --io {}{})",
             cfg.ranks,
             chunk_desc(cfg.chunk_rows),
+            cfg.io_mode.as_str(),
             if cfg.prefetch { ", prefetched" } else { "" }
         );
         let (res, report) = train_cluster_stream(cfg, input, opts.net.clone())?;
@@ -275,6 +363,7 @@ fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
             cfg.kernel,
             cfg.chunk_rows,
             cfg.prefetch,
+            cfg.io_mode,
         )?;
         train_stream(cfg, &mut src, initial, Some(&writer))?
     } else if cfg.kernel == KernelType::SparseCpu {
@@ -294,7 +383,7 @@ fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
             );
             res
         } else {
-            train(cfg, DataShard::Sparse(&m), initial, Some(&writer))?
+            train(cfg, DataShard::Sparse(m.view()), initial, Some(&writer))?
         }
     } else {
         let m = read_dense(&opts.input_file)?;
@@ -355,10 +444,19 @@ fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
         t0.elapsed(),
         result.final_qe()
     );
+    let map_peak = somoclu::util::memtrack::data_map_peak();
     eprintln!(
-        "peak data-buffer memory: {} (heap peak {})",
+        "peak data-buffer memory: {} (heap peak {}{})",
         somoclu::util::memtrack::fmt_bytes(somoclu::util::memtrack::data_buffer_peak()),
         somoclu::util::memtrack::fmt_bytes(somoclu::util::memtrack::peak_bytes()),
+        if map_peak > 0 {
+            format!(
+                ", peak mapped chunk views {}",
+                somoclu::util::memtrack::fmt_bytes(map_peak)
+            )
+        } else {
+            String::new()
+        },
     );
     eprintln!(
         "wrote {p}.wts, {p}.bm, {p}.umx",

@@ -8,6 +8,71 @@
 
 use crate::util::rng::Rng;
 
+/// A borrowed CSR row window — the sparse analog of a dense `&[f32]`
+/// chunk, and the type training kernels consume ([`crate::kernels::DataShard::Sparse`]).
+///
+/// Invariants: `indptr` is rebased to the window (`indptr[0] == 0`,
+/// `len == rows + 1`); `indices`/`values` cover exactly this window's
+/// nonzeros. Because every field is a borrow, a chunk view can point
+/// straight into an owned [`Csr`], a reusable scratch buffer, or a
+/// memory-mapped file (`io::mmap`) — the zero-copy streaming path hands
+/// kernels views whose `indices`/`values` live in the OS page cache.
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub struct CsrView<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row pointers, len = rows + 1, `indptr[0] == 0`.
+    pub indptr: &'a [usize],
+    /// Column indices, len = nnz, strictly increasing within a row.
+    pub indices: &'a [u32],
+    /// Values, len = nnz.
+    pub values: &'a [f32],
+}
+
+impl<'a> CsrView<'a> {
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// One row as (cols, vals) slices. The `'a` lifetime (not `&self`)
+    /// lets callers hold rows across view copies.
+    #[inline]
+    pub fn row(&self, r: usize) -> (&'a [u32], &'a [f32]) {
+        let (a, b) = (self.indptr[r], self.indptr[r + 1]);
+        (&self.indices[a..b], &self.values[a..b])
+    }
+
+    /// Squared L2 norm per row (the sparse kernel's ||x||² cache).
+    pub fn row_sq_norms(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|r| {
+                let (_, vals) = self.row(r);
+                vals.iter().map(|v| v * v).sum()
+            })
+            .collect()
+    }
+
+    /// Densify (tests and the accel-kernel bridge).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.rows * self.cols];
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                out[r * self.cols + *c as usize] = *v;
+            }
+        }
+        out
+    }
+
+    /// Logical bytes this view spans — the gauge currency for borrowed
+    /// chunks (length-based: a view owns no capacity).
+    pub fn data_bytes(&self) -> usize {
+        self.indptr.len() * std::mem::size_of::<usize>()
+            + self.indices.len() * std::mem::size_of::<u32>()
+            + self.values.len() * std::mem::size_of::<f32>()
+    }
+}
+
 /// Compressed sparse row matrix, f32 values.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Csr {
@@ -34,6 +99,20 @@ impl Csr {
 
     pub fn nnz(&self) -> usize {
         self.values.len()
+    }
+
+    /// Borrow the whole matrix as a [`CsrView`] (what
+    /// [`crate::kernels::DataShard`] carries; `indptr[0] == 0` holds for
+    /// any well-formed `Csr`).
+    #[inline]
+    pub fn view(&self) -> CsrView<'_> {
+        CsrView {
+            rows: self.rows,
+            cols: self.cols,
+            indptr: &self.indptr,
+            indices: &self.indices,
+            values: &self.values,
+        }
     }
 
     /// Density in [0, 1].
@@ -107,25 +186,13 @@ impl Csr {
     /// Densify (tests and the accel-kernel bridge; the paper notes the GPU
     /// kernel has no sparse variant).
     pub fn to_dense(&self) -> Vec<f32> {
-        let mut out = vec![0.0; self.rows * self.cols];
-        for r in 0..self.rows {
-            let (cols, vals) = self.row(r);
-            for (c, v) in cols.iter().zip(vals) {
-                out[r * self.cols + *c as usize] = *v;
-            }
-        }
-        out
+        self.view().to_dense()
     }
 
     /// Squared L2 norm per row (precomputed once per training run; the
     /// sparse kernel's distance uses ||x||² + ||w||² − 2 x·w with dense w).
     pub fn row_sq_norms(&self) -> Vec<f32> {
-        (0..self.rows)
-            .map(|r| {
-                let (_, vals) = self.row(r);
-                vals.iter().map(|v| v * v).sum()
-            })
-            .collect()
+        self.view().row_sq_norms()
     }
 
     /// Slice out a contiguous row range as a new CSR (data sharding for

@@ -101,7 +101,7 @@ impl MemRegion {
 }
 
 // ---------------------------------------------------------------------
-// Data-buffer gauge (out-of-core streaming, io::stream).
+// Data-buffer + mapped-window gauges (out-of-core streaming, io::*).
 //
 // The allocator counters above see *everything*; the streaming claim in
 // the paper ("memory use is highly optimized, enabling training large
@@ -110,9 +110,71 @@ impl MemRegion {
 // buffer size here after every chunk, so benches and tests can assert
 // peak data-buffer bytes stay O(chunk_rows * dim) instead of
 // O(rows * dim), independent of codebook/accumulator allocations.
+//
+// Two gauges, same mechanics:
+//
+// * data buffer — heap bytes a source *owns* (chunk Vecs, scratch CSRs,
+//   prefetch transit buffers). These go through the global allocator.
+// * mapped window — bytes of a memory-mapped file (`io::mmap`) a source
+//   is currently handing to the kernel as a borrowed chunk view. The
+//   allocator never sees them (they live in the OS page cache), so
+//   they need their own ledger for the bounded-memory assertions: a
+//   zero-copy source must report O(chunk) mapped-view bytes, not the
+//   whole file, to claim the same working-set bound.
 
-static DATA_BUF_LIVE: AtomicUsize = AtomicUsize::new(0);
-static DATA_BUF_PEAK: AtomicUsize = AtomicUsize::new(0);
+/// Additive live/peak byte ledger shared by the streaming gauges.
+struct Gauge {
+    live: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl Gauge {
+    const fn new() -> Self {
+        Gauge {
+            live: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+        }
+    }
+
+    /// One reporter's share changed from `old_bytes` to `new_bytes`.
+    fn resize(&self, old_bytes: usize, new_bytes: usize) {
+        let live = if new_bytes >= old_bytes {
+            let d = new_bytes - old_bytes;
+            self.live.fetch_add(d, Ordering::Relaxed) + d
+        } else {
+            let d = old_bytes - new_bytes;
+            self.live.fetch_sub(d, Ordering::Relaxed).saturating_sub(d)
+        };
+        let mut peak = self.peak.load(Ordering::Relaxed);
+        while live > peak {
+            match self.peak.compare_exchange_weak(
+                peak,
+                live,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(p) => peak = p,
+            }
+        }
+    }
+
+    fn live(&self) -> usize {
+        self.live.load(Ordering::Relaxed)
+    }
+
+    fn peak(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    fn reset_peak(&self) {
+        self.peak
+            .store(self.live.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+}
+
+static DATA_BUF: Gauge = Gauge::new();
+static DATA_MAP: Gauge = Gauge::new();
 
 /// Adjust the gauge for one source whose resident buffer changed from
 /// `old_bytes` to `new_bytes`. The gauge is *additive* across sources
@@ -121,41 +183,47 @@ static DATA_BUF_PEAK: AtomicUsize = AtomicUsize::new(0);
 /// `(reported, 0)` when dropped — the `DataSource` implementations do
 /// both.
 pub fn data_buffer_resize(old_bytes: usize, new_bytes: usize) {
-    let live = if new_bytes >= old_bytes {
-        let d = new_bytes - old_bytes;
-        DATA_BUF_LIVE.fetch_add(d, Ordering::Relaxed) + d
-    } else {
-        let d = old_bytes - new_bytes;
-        DATA_BUF_LIVE.fetch_sub(d, Ordering::Relaxed).saturating_sub(d)
-    };
-    let mut peak = DATA_BUF_PEAK.load(Ordering::Relaxed);
-    while live > peak {
-        match DATA_BUF_PEAK.compare_exchange_weak(
-            peak,
-            live,
-            Ordering::Relaxed,
-            Ordering::Relaxed,
-        ) {
-            Ok(_) => break,
-            Err(p) => peak = p,
-        }
-    }
+    DATA_BUF.resize(old_bytes, new_bytes);
 }
 
 /// Currently resident data-buffer bytes, summed over live sources.
 pub fn data_buffer_bytes() -> usize {
-    DATA_BUF_LIVE.load(Ordering::Relaxed)
+    DATA_BUF.live()
 }
 
 /// High-water mark of resident data-buffer bytes since the last reset.
 pub fn data_buffer_peak() -> usize {
-    DATA_BUF_PEAK.load(Ordering::Relaxed)
+    DATA_BUF.peak()
 }
 
 /// Start a fresh data-buffer measurement region: the peak restarts from
 /// the currently live total (sources may still be alive).
 pub fn reset_data_buffer_peak() {
-    DATA_BUF_PEAK.store(DATA_BUF_LIVE.load(Ordering::Relaxed), Ordering::Relaxed);
+    DATA_BUF.reset_peak();
+}
+
+/// Adjust the mapped-window gauge for one zero-copy source whose
+/// currently exposed chunk view changed from `old_bytes` to `new_bytes`
+/// of mapped file. Same additive contract as [`data_buffer_resize`]:
+/// report deltas against your previous share, release with
+/// `(reported, 0)` on drop.
+pub fn data_map_resize(old_bytes: usize, new_bytes: usize) {
+    DATA_MAP.resize(old_bytes, new_bytes);
+}
+
+/// Mapped-file bytes currently exposed as chunk views, over live sources.
+pub fn data_map_bytes() -> usize {
+    DATA_MAP.live()
+}
+
+/// High-water mark of exposed mapped-window bytes since the last reset.
+pub fn data_map_peak() -> usize {
+    DATA_MAP.peak()
+}
+
+/// Start a fresh mapped-window measurement region.
+pub fn reset_data_map_peak() {
+    DATA_MAP.reset_peak();
 }
 
 /// Pretty-printer for byte counts in reports.
@@ -207,6 +275,22 @@ mod tests {
         data_buffer_resize(4096, 512); // shrink this source's buffer
         data_buffer_resize(512, 0); // drop it
         assert!(data_buffer_peak() >= 4096); // peak survives release
+    }
+
+    #[test]
+    fn mapped_window_gauge_tracks_peak() {
+        // Separate ledger from the data-buffer gauge: mapped views never
+        // pass through the allocator, so they must not leak into (or
+        // read from) the heap gauge.
+        let buf_before = data_buffer_peak();
+        data_map_resize(0, 1 << 20);
+        assert!(data_map_peak() >= 1 << 20);
+        data_map_resize(1 << 20, 0);
+        assert!(data_map_peak() >= 1 << 20); // peak survives release
+        // The 1 MiB map report must not have leaked into the heap gauge
+        // (other lib tests run concurrently and report small buffers, so
+        // allow slack well below the 1 MiB signal).
+        assert!(data_buffer_peak() <= buf_before + 512 * 1024);
     }
 
     #[test]

@@ -245,3 +245,140 @@ fn pca_initialization_via_cli() {
         String::from_utf8_lossy(&out.stderr)
     );
 }
+
+#[test]
+fn info_subcommand_prints_header_and_shards() {
+    let dir = tmpdir("info");
+    let mut rng = Rng::new(600);
+    let (rows, dim) = (37usize, 5usize);
+    let d: Vec<f32> = (0..rows * dim).map(|_| rng.normal_f32()).collect();
+    let somb = dir.join("info.somb");
+    somoclu::io::binary::write_binary_dense(&somb, rows, dim, &d).unwrap();
+
+    let out = Command::new(bin())
+        .args(["info", "--ranks", "4", somb.to_str().unwrap()])
+        .output()
+        .expect("binary runs");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(stdout.contains("kind    dense"), "{stdout}");
+    assert!(stdout.contains("rows    37"), "{stdout}");
+    assert!(stdout.contains("dim     5"), "{stdout}");
+    assert!(stdout.contains("rank 0"), "{stdout}");
+    assert!(stdout.contains("rank 3"), "{stdout}");
+
+    // Sparse container: nnz line + per-rank nnz windows.
+    let m = Csr::random(20, 9, 0.3, &mut rng);
+    let sbin = dir.join("info_sp.somb");
+    somoclu::io::binary::write_binary_sparse(&sbin, &m).unwrap();
+    let out = Command::new(bin())
+        .args(["info", "--ranks", "2", sbin.to_str().unwrap()])
+        .output()
+        .expect("binary runs");
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("sparse"), "{stdout}");
+    assert!(stdout.contains("nnz"), "{stdout}");
+}
+
+#[test]
+fn info_subcommand_rejects_corrupt_containers() {
+    let dir = tmpdir("info_bad");
+
+    // Not a container at all.
+    let txt = dir.join("plain.txt");
+    std::fs::write(&txt, "1 2\n3 4\n").unwrap();
+    let out = Command::new(bin())
+        .args(["info", txt.to_str().unwrap()])
+        .output()
+        .expect("binary runs");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("magic"));
+
+    // Truncated container: header declares more payload than exists.
+    let mut rng = Rng::new(601);
+    let d: Vec<f32> = (0..60).map(|_| rng.normal_f32()).collect();
+    let good = dir.join("good.somb");
+    somoclu::io::binary::write_binary_dense(&good, 12, 5, &d).unwrap();
+    let bytes = std::fs::read(&good).unwrap();
+    let trunc = dir.join("trunc.somb");
+    std::fs::write(&trunc, &bytes[..bytes.len() - 7]).unwrap();
+    let out = Command::new(bin())
+        .args(["info", trunc.to_str().unwrap()])
+        .output()
+        .expect("binary runs");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("truncated"));
+
+    // More ranks than rows: clean nonzero exit, not a panic.
+    let out = Command::new(bin())
+        .args(["info", "--ranks", "99", good.to_str().unwrap()])
+        .output()
+        .expect("binary runs");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("ranks"));
+}
+
+#[test]
+fn io_backends_via_cli() {
+    let dir = tmpdir("io_modes");
+    let mut rng = Rng::new(602);
+    let (rows, dim) = (80usize, 4usize);
+    let d: Vec<f32> = (0..rows * dim).map(|_| rng.normal_f32()).collect();
+    let somb = dir.join("data.somb");
+    somoclu::io::binary::write_binary_dense(&somb, rows, dim, &d).unwrap();
+
+    let run = |io: &str, extra: &[&str]| {
+        let prefix = dir.join(format!("out_{io}{}", extra.len()));
+        let mut args = vec![
+            "-e", "3", "-x", "6", "-y", "6", "-r", "3",
+            "--chunk-rows", "16", "--ranks", "2", "--io", io,
+        ];
+        args.extend_from_slice(extra);
+        let somb_s = somb.to_str().unwrap().to_string();
+        let prefix_s = prefix.to_str().unwrap().to_string();
+        args.push(&somb_s);
+        args.push(&prefix_s);
+        let out = Command::new(bin()).args(&args).output().expect("binary runs");
+        (out, prefix)
+    };
+
+    let (out, prefix) = run("pread", &[]);
+    assert!(out.status.success(), "pread: {}", String::from_utf8_lossy(&out.stderr));
+    let pread_bm = std::fs::read(format!("{}.bm", prefix.display())).unwrap();
+
+    let (out, prefix) = run("buffered", &["--prefetch"]);
+    assert!(out.status.success(), "buffered: {}", String::from_utf8_lossy(&out.stderr));
+    let buf_bm = std::fs::read(format!("{}.bm", prefix.display())).unwrap();
+    assert_eq!(pread_bm, buf_bm, "pread BMUs diverged from buffered");
+
+    // mmap: identical when the backend exists, clean error otherwise.
+    let (out, prefix) = run("mmap", &[]);
+    if somoclu::io::mmap::SUPPORTED {
+        assert!(out.status.success(), "mmap: {}", String::from_utf8_lossy(&out.stderr));
+        let mmap_bm = std::fs::read(format!("{}.bm", prefix.display())).unwrap();
+        assert_eq!(pread_bm, mmap_bm, "mmap BMUs diverged from buffered");
+    } else {
+        assert!(!out.status.success());
+        assert!(String::from_utf8_lossy(&out.stderr).contains("mmap"));
+    }
+
+    // mmap + prefetch: rejected up front with an actionable message.
+    let (out, _) = run("mmap", &["--prefetch"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("prefetch"));
+
+    // --io on a text input: refused with the convert hint.
+    let txt = dir.join("data.txt");
+    dense::write_dense(&txt, rows, dim, &d, false).unwrap();
+    let out = Command::new(bin())
+        .args([
+            "--io", "pread", "--chunk-rows", "16",
+            txt.to_str().unwrap(),
+            dir.join("out_txt").to_str().unwrap(),
+        ])
+        .output()
+        .expect("binary runs");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("convert"));
+}

@@ -137,7 +137,7 @@ fn sparse_kernel_matches_python_oracle() {
     let m = somoclu::sparse::Csr::from_dense(&g.data, g.rows, g.dim, 0.0);
     let res = train(
         &golden_cfg(KernelType::SparseCpu),
-        DataShard::Sparse(&m),
+        DataShard::Sparse(m.view()),
         Some(g.init.clone()),
         None,
     )

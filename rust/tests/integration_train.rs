@@ -144,7 +144,7 @@ fn sparse_and_dense_kernels_train_identically() {
         None,
     )
     .unwrap();
-    let b = train(&sparse_cfg, DataShard::Sparse(&m), None, None).unwrap();
+    let b = train(&sparse_cfg, DataShard::Sparse(m.view()), None, None).unwrap();
     assert_eq!(a.bmus, b.bmus);
     for (x, y) in a.codebook.weights.iter().zip(&b.codebook.weights) {
         assert!((x - y).abs() < 1e-3, "{x} vs {y}");
@@ -269,7 +269,7 @@ fn pca_init_rejected_for_sparse() {
         radius0: Some(2.0),
         ..Default::default()
     };
-    assert!(train(&cfg, DataShard::Sparse(&m), None, None).is_err());
+    assert!(train(&cfg, DataShard::Sparse(m.view()), None, None).is_err());
 }
 
 #[test]

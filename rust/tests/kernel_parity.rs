@@ -74,7 +74,7 @@ fn dense_and_sparse_accumulate_identically() {
             )
             .unwrap();
         let b = SparseCpuKernel::new(3)
-            .epoch_accumulate(DataShard::Sparse(&csr), &cb, &grid, nb, 3.0, 0.9)
+            .epoch_accumulate(DataShard::Sparse(csr.view()), &cb, &grid, nb, 3.0, 0.9)
             .unwrap();
         assert_parity("dense-vs-sparse", &a, &b, TOL);
     }
@@ -104,7 +104,7 @@ fn dense_and_sparse_full_training_runs_agree() {
     .unwrap();
     let b = train(
         &mk(KernelType::SparseCpu),
-        DataShard::Sparse(&csr),
+        DataShard::Sparse(csr.view()),
         None,
         None,
     )
@@ -169,12 +169,12 @@ fn epoch_begin_does_not_change_results() {
 
     let mut plain = SparseCpuKernel::new(2);
     let without = plain
-        .epoch_accumulate(DataShard::Sparse(&csr), &cb, &grid, nb, 2.0, 1.0)
+        .epoch_accumulate(DataShard::Sparse(csr.view()), &cb, &grid, nb, 2.0, 1.0)
         .unwrap();
     let mut primed = SparseCpuKernel::new(2);
     primed.epoch_begin(&cb).unwrap();
     let with = primed
-        .epoch_accumulate(DataShard::Sparse(&csr), &cb, &grid, nb, 2.0, 1.0)
+        .epoch_accumulate(DataShard::Sparse(csr.view()), &cb, &grid, nb, 2.0, 1.0)
         .unwrap();
     assert_eq!(without.bmus, with.bmus);
     assert_eq!(without.num, with.num);
@@ -224,10 +224,10 @@ fn epoch_begin_cache_is_keyed_by_codebook_identity() {
     let mut stale = SparseCpuKernel::new(2);
     stale.epoch_begin(&cb1).unwrap();
     let got = stale
-        .epoch_accumulate(DataShard::Sparse(&csr), &cb2, &grid, nb, 2.0, 1.0)
+        .epoch_accumulate(DataShard::Sparse(csr.view()), &cb2, &grid, nb, 2.0, 1.0)
         .unwrap();
     let want = SparseCpuKernel::new(2)
-        .epoch_accumulate(DataShard::Sparse(&csr), &cb2, &grid, nb, 2.0, 1.0)
+        .epoch_accumulate(DataShard::Sparse(csr.view()), &cb2, &grid, nb, 2.0, 1.0)
         .unwrap();
     assert_eq!(got.bmus, want.bmus);
     assert_eq!(got.num, want.num);
@@ -260,7 +260,7 @@ fn hybrid_parity_with_cpu_kernels() {
         )
         .unwrap();
     let sparse = SparseCpuKernel::new(2)
-        .epoch_accumulate(DataShard::Sparse(&csr), &cb, &grid, nb, 2.5, 0.8)
+        .epoch_accumulate(DataShard::Sparse(csr.view()), &cb, &grid, nb, 2.5, 0.8)
         .unwrap();
     assert_parity("dense-vs-sparse", &want, &sparse, TOL);
 

@@ -118,7 +118,7 @@ fn sparse_training_peak_below_dense() {
     let dense_peak = region.peak_delta();
 
     let region = MemRegion::start();
-    let _ = train(&sparse_cfg, DataShard::Sparse(&m), None, None).unwrap();
+    let _ = train(&sparse_cfg, DataShard::Sparse(m.view()), None, None).unwrap();
     let sparse_peak = region.peak_delta();
 
     // The dense input buffer itself isn't counted in either region (it

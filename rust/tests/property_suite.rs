@@ -121,7 +121,7 @@ fn prop_sparse_dense_kernels_agree() {
                 )
                 .map_err(|e| e.to_string())?;
             let b = SparseCpuKernel::new(2)
-                .epoch_accumulate(DataShard::Sparse(&m), &cb, &grid, nb, radius, 0.9)
+                .epoch_accumulate(DataShard::Sparse(m.view()), &cb, &grid, nb, radius, 0.9)
                 .map_err(|e| e.to_string())?;
             prop_assert!(a.bmus == b.bmus, "bmus differ");
             for (x, y) in a.num.iter().zip(&b.num) {
@@ -264,11 +264,11 @@ fn prop_chunked_sparse_accumulation_matches_whole_shard() {
             let nb = Neighborhood::gaussian(false);
 
             let whole = SparseCpuKernel::new(2)
-                .epoch_accumulate(DataShard::Sparse(&m), &cb, &grid, nb, 1.8, 1.0)
+                .epoch_accumulate(DataShard::Sparse(m.view()), &cb, &grid, nb, 1.8, 1.0)
                 .map_err(|e| e.to_string())?;
             for chunk_rows in [1usize, 7, rows] {
                 let mut kernel = SparseCpuKernel::new(2);
-                let mut src = InMemorySource::new(DataShard::Sparse(&m), chunk_rows);
+                let mut src = InMemorySource::new(DataShard::Sparse(m.view()), chunk_rows);
                 let streamed = accumulate_streamed(
                     &mut kernel, &mut src, &cb, &grid, nb, 1.8, 1.0,
                 )?;

@@ -15,9 +15,10 @@
 use somoclu::coordinator::config::TrainConfig;
 use somoclu::coordinator::train::train_stream;
 use somoclu::data;
-use somoclu::io::binary::{convert_dense_to_binary, BinaryDenseFileSource};
+use somoclu::io::binary::{convert_dense_to_binary, BinaryDenseFileSource, SharedFd};
 use somoclu::io::dense;
 use somoclu::io::stream::{ChunkedDenseFileSource, PrefetchSource};
+use somoclu::io::MmapDenseSource;
 use somoclu::util::memtrack;
 use somoclu::util::rng::Rng;
 
@@ -111,4 +112,57 @@ fn data_buffer_stays_bounded_as_rows_grow() {
         peak <= window_bytes + window_bytes / 2,
         "binary streaming peak {peak} exceeds one window {window_bytes}"
     );
+
+    // --- Section 4: pread (shared fd) has the same one-window bound. ---
+    memtrack::reset_data_buffer_peak();
+    {
+        let mut src = SharedFd::open(&bin_path)
+            .unwrap()
+            .dense_shard(chunk_rows, 0, 1)
+            .unwrap();
+        let res = train_stream(&cfg, &mut src, None, None).unwrap();
+        assert_eq!(res.bmus.len(), 8000);
+    }
+    let peak = memtrack::data_buffer_peak();
+    assert!(
+        peak <= window_bytes + window_bytes / 2,
+        "pread streaming peak {peak} exceeds one window {window_bytes}"
+    );
+
+    // --- Section 5: mmap owns ~no heap; its mapped-window gauge is ---
+    // --- bounded by one window. ------------------------------------
+    if somoclu::io::mmap::SUPPORTED {
+        memtrack::reset_data_buffer_peak();
+        memtrack::reset_data_map_peak();
+        let heap_live_before = memtrack::data_buffer_bytes();
+        {
+            let mut src = MmapDenseSource::open(&bin_path, chunk_rows).unwrap();
+            let res = train_stream(&cfg, &mut src, None, None).unwrap();
+            assert_eq!(res.bmus.len(), 8000);
+        }
+        // Zero-copy: the dense mmap source allocates no chunk buffers at
+        // all, so the heap gauge must not have moved beyond the live
+        // baseline (earlier sections' sources are all dropped).
+        let heap_peak = memtrack::data_buffer_peak();
+        assert!(
+            heap_peak <= heap_live_before + 4 * 1024,
+            "mmap dense source allocated data buffers: peak {heap_peak}, \
+             baseline {heap_live_before}"
+        );
+        // The mapped-window gauge replaces the heap gauge as the bound
+        // carrier: exactly one exposed chunk view at a time.
+        let map_peak = memtrack::data_map_peak();
+        assert!(
+            map_peak >= window_bytes,
+            "mmap map-gauge peak {map_peak} below one window {window_bytes}"
+        );
+        assert!(
+            map_peak <= window_bytes + window_bytes / 2,
+            "mmap map-gauge peak {map_peak} exceeds one window {window_bytes}"
+        );
+        // And it releases on drop.
+        assert_eq!(memtrack::data_map_bytes(), 0, "mapped view bytes leaked");
+    } else {
+        eprintln!("skipping mmap gauge section (no mmap backend in this build)");
+    }
 }

@@ -83,7 +83,7 @@ fn sparse_file_stream_matches_in_memory_run() {
     let resident_m = sparse_io::read_sparse(&path, 64).unwrap();
 
     let cfg = small_cfg(KernelType::SparseCpu);
-    let resident = train(&cfg, DataShard::Sparse(&resident_m), None, None).unwrap();
+    let resident = train(&cfg, DataShard::Sparse(resident_m.view()), None, None).unwrap();
 
     for chunk_rows in [23usize, 300] {
         let mut src = ChunkedSparseFileSource::open(&path, 64, chunk_rows).unwrap();
