@@ -9,9 +9,10 @@
 //! ```
 
 use somoclu::cluster::netmodel::NetModel;
-use somoclu::cluster::runner::{train_cluster, ClusterData};
+use somoclu::cluster::runner::ClusterData;
 use somoclu::coordinator::config::TrainConfig;
 use somoclu::data;
+use somoclu::session::Som;
 use somoclu::util::memtrack::fmt_bytes;
 use somoclu::util::rng::Rng;
 
@@ -44,14 +45,14 @@ fn main() -> anyhow::Result<()> {
             radius0: Some(10.0),
             ..Default::default()
         };
-        let (res, report) = train_cluster(
-            &cfg,
-            ClusterData::Dense {
-                data: train_data.clone(),
-                dim,
-            },
-            NetModel::ethernet_10g(),
-        )?;
+        let mut session = Som::builder()
+            .config(cfg)
+            .net(NetModel::ethernet_10g())
+            .build()?;
+        let (res, report) = session.fit_cluster(ClusterData::Dense {
+            data: train_data.clone(),
+            dim,
+        })?;
         let secs = res.total.as_secs_f64();
         if t1.is_none() {
             t1 = Some(secs);

@@ -11,8 +11,8 @@
 //! ```
 
 use somoclu::coordinator::config::TrainConfig;
-use somoclu::coordinator::train::train;
 use somoclu::data;
+use somoclu::session::Som;
 use somoclu::io::output::OutputWriter;
 use somoclu::kernels::{DataShard, KernelType};
 use somoclu::runtime::Manifest;
@@ -53,15 +53,10 @@ fn main() -> anyhow::Result<()> {
     );
 
     let t0 = std::time::Instant::now();
-    let res = train(
-        &cfg,
-        DataShard::Dense {
-            data: &train_data,
-            dim,
-        },
-        None,
-        None,
-    )?;
+    let res = Som::builder().config(cfg.clone()).build()?.fit_shard(DataShard::Dense {
+        data: &train_data,
+        dim,
+    })?;
     let accel_time = t0.elapsed();
     println!("loss curve (mean quantization error per epoch):");
     for e in &res.epochs {
@@ -76,15 +71,13 @@ fn main() -> anyhow::Result<()> {
     let mut cpu_cfg = cfg.clone();
     cpu_cfg.kernel = KernelType::DenseCpu;
     let t1 = std::time::Instant::now();
-    let cpu = train(
-        &cpu_cfg,
-        DataShard::Dense {
+    let cpu = Som::builder()
+        .config(cpu_cfg.clone())
+        .build()?
+        .fit_shard(DataShard::Dense {
             data: &train_data,
             dim,
-        },
-        None,
-        None,
-    )?;
+        })?;
     let cpu_time = t1.elapsed();
     // Cross-layer check 1 — single-epoch equivalence from the same
     // initial codebook: the XLA path and the rust path must produce the
@@ -93,16 +86,27 @@ fn main() -> anyhow::Result<()> {
     // — both end at equally good maps, so whole-run agreement is checked
     // by quality parity below, exactly like comparing two MPI layouts.)
     let grid = cfg.grid();
-    let mut cb_a = somoclu::coordinator::train::init_codebook(&cfg, &grid, dim);
-    let mut cb_b = cb_a.clone();
-    let shard = DataShard::Dense {
+    let cb_init = somoclu::coordinator::train::init_codebook(&cfg, &grid, dim);
+    let mut sess_a = Som::builder()
+        .config(cfg.clone())
+        .initial_codebook(cb_init.clone())
+        .build()?;
+    let mut sess_b = Som::builder()
+        .config(cpu_cfg.clone())
+        .initial_codebook(cb_init)
+        .build()?;
+    let stats_a = sess_a.step_epoch(somoclu::api::DataInput::BorrowedF32 {
         data: &train_data,
         dim,
-    };
-    let (bmus_a, qe_a) =
-        somoclu::api::train_one_epoch(&cfg, shard, &mut cb_a, 0)?;
-    let (bmus_b, qe_b) =
-        somoclu::api::train_one_epoch(&cpu_cfg, shard, &mut cb_b, 0)?;
+    })?;
+    let stats_b = sess_b.step_epoch(somoclu::api::DataInput::BorrowedF32 {
+        data: &train_data,
+        dim,
+    })?;
+    let (qe_a, qe_b) = (stats_a.qe, stats_b.qe);
+    let (bmus_a, bmus_b) = (sess_a.last_bmus().to_vec(), sess_b.last_bmus().to_vec());
+    let cb_a = sess_a.codebook().expect("trained").clone();
+    let cb_b = sess_b.codebook().expect("trained").clone();
     let epoch_agree = bmus_a.iter().zip(&bmus_b).filter(|(a, b)| a == b).count();
     let max_w_diff = cb_a
         .weights

@@ -5,10 +5,10 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use somoclu::api::{self, DataInput};
-use somoclu::coordinator::config::TrainConfig;
+use somoclu::api::DataInput;
 use somoclu::data;
 use somoclu::io::output::OutputWriter;
+use somoclu::session::Som;
 use somoclu::som::quality;
 use somoclu::util::rng::Rng;
 use somoclu::viz;
@@ -21,18 +21,14 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(7);
     let (train_data, _labels) = data::gaussian_blobs(2000, 16, 5, 0.15, &mut rng);
 
-    // 2. Configure a 20x20 planar square map, 10 epochs (paper defaults
-    //    otherwise: gaussian neighborhood, linear cooling 1.0 -> 0.01).
-    let cfg = TrainConfig {
-        rows: 20,
-        cols: 20,
-        epochs: 10,
-        ..Default::default()
-    };
+    // 2. A 20x20 planar square map, 10 epochs (paper defaults otherwise:
+    //    gaussian neighborhood, linear cooling 1.0 -> 0.01) — one
+    //    builder call configures everything.
+    let mut session = Som::builder().map_size(20, 20).epochs(10).build()?;
 
-    // 3. Train through the library API (zero-copy f32 input).
+    // 3. Train through the session API (zero-copy f32 input).
     let t0 = std::time::Instant::now();
-    let res = api::train(&cfg, DataInput::BorrowedF32 { data: &train_data, dim: 16 })?;
+    let res = session.fit(DataInput::BorrowedF32 { data: &train_data, dim: 16 })?;
     println!("trained in {:?}", t0.elapsed());
     for e in &res.epochs {
         println!(
@@ -41,10 +37,24 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // 4. Quality measures.
-    let grid = cfg.grid();
-    let te = quality::topographic_error(&train_data, 16, &grid, &res.codebook, cfg.threads);
+    // 4. Quality measures + serving: the trained session answers BMU
+    //    lookups for new vectors (the fit/predict shape).
+    let grid = session.grid().clone();
+    let threads = session.config().threads;
+    let te = quality::topographic_error(&train_data, 16, &grid, &res.codebook, threads);
     println!("final QE {:.5}, topographic error {:.3}", res.final_qe(), te);
+    let (node, dist) = session.bmu(&train_data[0..16])?;
+    println!("first row maps to node {node} at distance {dist:.4}");
+
+    // 4b. Checkpoint the trained map; `Som::resume` (or the CLI's
+    //     `--resume`) restores it bit-exactly for serving or more epochs.
+    session.save_checkpoint(out_dir.join("map.somc"))?;
+    let resumed = Som::resume(out_dir.join("map.somc"))?;
+    assert_eq!(
+        resumed.codebook().unwrap().weights,
+        session.codebook().unwrap().weights
+    );
+    println!("checkpoint round-trip OK ({})", out_dir.join("map.somc").display());
 
     // 5. Post-process: cluster the codebook (som.cluster() analog) and
     //    label the data through the BMU mapping.

@@ -11,11 +11,10 @@
 
 use std::io::Write;
 
-use somoclu::coordinator::config::TrainConfig;
-use somoclu::coordinator::train::train;
 use somoclu::data;
 use somoclu::io::output::OutputWriter;
 use somoclu::kernels::DataShard;
+use somoclu::session::Som;
 use somoclu::som::{Grid, MapType};
 use somoclu::util::rng::Rng;
 use somoclu::viz;
@@ -59,15 +58,13 @@ fn main() -> anyhow::Result<()> {
     let (rgb, _) = data::rgb_toy(1500, &mut rng);
 
     for (name, map_type) in [("planar", MapType::Planar), ("toroid", MapType::Toroid)] {
-        let cfg = TrainConfig {
-            rows: 30,
-            cols: 30,
-            epochs: 12,
-            map_type,
-            ..Default::default()
-        };
-        let res = train(&cfg, DataShard::Dense { data: &rgb, dim: 3 }, None, None)?;
-        let grid = cfg.grid();
+        let mut session = Som::builder()
+            .map_size(30, 30)
+            .epochs(12)
+            .map_type(map_type)
+            .build()?;
+        let res = session.fit_shard(DataShard::Dense { data: &rgb, dim: 3 })?;
+        let grid = session.grid().clone();
 
         let prefix = out_dir.join(name);
         OutputWriter::new(&prefix).write_final(&grid, &res.codebook, &res.bmus, &res.umatrix)?;
@@ -88,7 +85,7 @@ fn main() -> anyhow::Result<()> {
             "{name}: QE {:.4} -> {:.4} over {} epochs; outputs in {}",
             res.epochs[0].qe,
             res.final_qe(),
-            cfg.epochs,
+            res.epochs.len(),
             out_dir.display()
         );
     }

@@ -15,8 +15,8 @@
 //! ```
 
 use somoclu::coordinator::config::TrainConfig;
-use somoclu::coordinator::train::train;
 use somoclu::data::{zipf_corpus, CorpusSpec};
+use somoclu::session::Som;
 use somoclu::io::output::OutputWriter;
 use somoclu::kernels::{DataShard, KernelType};
 use somoclu::som::{Cooling, MapType, Neighborhood};
@@ -80,7 +80,8 @@ fn main() -> anyhow::Result<()> {
     };
 
     let t0 = std::time::Instant::now();
-    let res = train(&cfg, DataShard::Sparse(corpus.view()), None, None)?;
+    let mut session = Som::builder().config(cfg.clone()).build()?;
+    let res = session.fit_shard(DataShard::Sparse(corpus.view()))?;
     println!(
         "trained {}x{} toroid emergent map ({} nodes) in {:?}; peak memory {}",
         rows,

@@ -16,7 +16,7 @@
 mod common;
 
 use somoclu::coordinator::config::TrainConfig;
-use somoclu::coordinator::train::train;
+use somoclu::session::Som;
 use somoclu::kernels::dense_cpu::DenseCpuKernel;
 use somoclu::kernels::hybrid::HybridKernel;
 use somoclu::kernels::{DataShard, KernelType, TrainingKernel};
@@ -92,7 +92,11 @@ fn main() {
             kernel: KernelType::DenseCpu,
             ..Default::default()
         };
-        train(&cfg, DataShard::Dense { data: &blob, dim: 16 }, None, None)
+        Som::builder()
+            .config(cfg)
+            .build()
+            .unwrap()
+            .fit_shard(DataShard::Dense { data: &blob, dim: 16 })
             .unwrap()
             .final_qe()
     };

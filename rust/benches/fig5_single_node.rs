@@ -13,7 +13,7 @@
 mod common;
 
 use somoclu::baseline;
-use somoclu::coordinator::train::train;
+use somoclu::session::Som;
 use somoclu::data;
 use somoclu::kernels::{DataShard, KernelType};
 use somoclu::runtime::Manifest;
@@ -55,15 +55,10 @@ fn run_kernel(
 ) -> anyhow::Result<f64> {
     let cfg = common::base_config(p.map_side, p.epochs, kernel);
     let (res, dt) = time_once(|| {
-        train(
-            &cfg,
-            DataShard::Dense {
-                data,
-                dim: p.dims,
-            },
-            None,
-            None,
-        )
+        Som::builder().config(cfg.clone()).build()?.fit_shard(DataShard::Dense {
+            data,
+            dim: p.dims,
+        })
     });
     res?;
     Ok(dt.as_secs_f64())

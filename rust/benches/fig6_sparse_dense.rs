@@ -10,8 +10,8 @@
 mod common;
 
 use somoclu::cluster::netmodel::NetModel;
-use somoclu::cluster::runner::{train_cluster, ClusterData};
-use somoclu::coordinator::train::train;
+use somoclu::cluster::runner::ClusterData;
+use somoclu::session::Som;
 use somoclu::kernels::{DataShard, KernelType};
 use somoclu::sparse::Csr;
 use somoclu::util::memtrack::{fmt_bytes, MemRegion};
@@ -38,15 +38,13 @@ fn main() {
 
         let region = MemRegion::start();
         let (r1, t_dense) = time_once(|| {
-            train(
-                &dense_cfg,
-                DataShard::Dense {
+            Som::builder()
+                .config(dense_cfg.clone())
+                .build()?
+                .fit_shard(DataShard::Dense {
                     data: &dense,
                     dim: p.dims,
-                },
-                None,
-                None,
-            )
+                })
         });
         r1.unwrap();
         // Working set = run peak + the input representation itself.
@@ -54,7 +52,10 @@ fn main() {
 
         let region = MemRegion::start();
         let (r2, t_sparse) = time_once(|| {
-            train(&sparse_cfg, DataShard::Sparse(m.view()), None, None)
+            Som::builder()
+                .config(sparse_cfg.clone())
+                .build()?
+                .fit_shard(DataShard::Sparse(m.view()))
         });
         r2.unwrap();
         let mem_sparse = region.peak_delta() + m.heap_bytes();
@@ -81,22 +82,28 @@ fn main() {
     let mut tc = common::base_config(side, 2, KernelType::DenseCpu);
     tc.threads = 2;
     let region = MemRegion::start();
-    train(&tc, DataShard::Dense { data: &d, dim }, None, None).unwrap();
+    Som::builder()
+        .config(tc.clone())
+        .build()
+        .unwrap()
+        .fit_shard(DataShard::Dense { data: &d, dim })
+        .unwrap();
     let threaded = region.peak_delta();
 
     let mut rc = common::base_config(side, 2, KernelType::DenseCpu);
     rc.threads = 1;
     rc.ranks = 2;
     let region = MemRegion::start();
-    train_cluster(
-        &rc,
-        ClusterData::Dense {
+    Som::builder()
+        .config(rc.clone())
+        .net(NetModel::ideal())
+        .build()
+        .unwrap()
+        .fit_cluster(ClusterData::Dense {
             data: d.clone(),
             dim,
-        },
-        NetModel::ideal(),
-    )
-    .unwrap();
+        })
+        .unwrap();
     let ranked = region.peak_delta();
 
     println!(

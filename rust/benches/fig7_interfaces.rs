@@ -16,7 +16,8 @@
 
 mod common;
 
-use somoclu::api::{self, DataInput};
+use somoclu::api::DataInput;
+use somoclu::session::Som;
 use somoclu::io::dense;
 use somoclu::kernels::KernelType;
 use somoclu::util::memtrack::{fmt_bytes, MemRegion};
@@ -45,41 +46,44 @@ fn main() {
         let region = MemRegion::start();
         {
             let m = dense::read_dense(&path).unwrap();
-            api::train(
-                &cfg,
-                DataInput::BorrowedF32 {
+            Som::builder()
+                .config(cfg.clone())
+                .build()
+                .unwrap()
+                .fit(DataInput::BorrowedF32 {
                     data: &m.data,
                     dim: m.cols,
-                },
-            )
-            .unwrap();
+                })
+                .unwrap();
         }
         let cli_peak = region.peak_delta();
         std::fs::remove_file(&path).ok();
 
         // Python-like: data already in memory as f32, passed by pointer.
         let region = MemRegion::start();
-        api::train(
-            &cfg,
-            DataInput::BorrowedF32 {
+        Som::builder()
+            .config(cfg.clone())
+            .build()
+            .unwrap()
+            .fit(DataInput::BorrowedF32 {
                 data: &data,
                 dim: p.dims,
-            },
-        )
-        .unwrap();
+            })
+            .unwrap();
         let py_peak = region.peak_delta() + data.len() * 4; // caller buffer
 
         // R/MATLAB-like: caller holds f64; binding converts to f32.
         let data64: Vec<f64> = data.iter().map(|&v| v as f64).collect();
         let region = MemRegion::start();
-        api::train(
-            &cfg,
-            DataInput::ConvertedF64 {
+        Som::builder()
+            .config(cfg.clone())
+            .build()
+            .unwrap()
+            .fit(DataInput::ConvertedF64 {
                 data: &data64,
                 dim: p.dims,
-            },
-        )
-        .unwrap();
+            })
+            .unwrap();
         let r_peak = region.peak_delta() + data64.len() * 8; // caller buffer
         drop(data64);
 

@@ -32,8 +32,10 @@
 mod common;
 
 use somoclu::coordinator::config::TrainConfig;
-use somoclu::coordinator::train::{train, train_stream};
+use somoclu::coordinator::train::TrainResult;
 use somoclu::data;
+use somoclu::io::stream::DataSource;
+use somoclu::session::Som;
 use somoclu::io::binary::{convert_dense_to_binary, BinaryDenseFileSource, SharedFd};
 use somoclu::io::dense;
 use somoclu::io::stream::{ChunkedDenseFileSource, PrefetchSource};
@@ -43,6 +45,17 @@ use somoclu::util::json::Json;
 use somoclu::util::memtrack::{self, fmt_bytes, MemRegion};
 use somoclu::util::rng::Rng;
 use somoclu::util::timer::{bench_scale, time_once};
+
+/// Out-of-core training through the session API (the surface the CLI
+/// and library users drive).
+fn fit_source(cfg: &TrainConfig, source: &mut dyn DataSource) -> TrainResult {
+    Som::builder()
+        .config(cfg.clone())
+        .build()
+        .unwrap()
+        .fit_source(source)
+        .unwrap()
+}
 
 /// One backend's throughput measurement.
 struct Lane {
@@ -131,25 +144,23 @@ fn main() {
         let region = MemRegion::start();
         let (stream_res, t_stream) = time_once(|| {
             let mut src = ChunkedDenseFileSource::open(&path, chunk_rows).unwrap();
-            train_stream(&cfg, &mut src, None, None)
+            fit_source(&cfg, &mut src)
         });
-        let stream_res = stream_res.unwrap();
         let stream_peak = region.peak_delta();
         let stream_databuf = memtrack::data_buffer_peak();
 
         // In-memory reference run (also provides the QE cross-check).
         let m = dense::read_dense(&path).unwrap();
         let region = MemRegion::start();
-        let mem_res = train(
-            &cfg,
-            DataShard::Dense {
+        let mem_res = Som::builder()
+            .config(cfg.clone())
+            .build()
+            .unwrap()
+            .fit_shard(DataShard::Dense {
                 data: &m.data,
                 dim: m.cols,
-            },
-            None,
-            None,
-        )
-        .unwrap();
+            })
+            .unwrap();
         let mem_peak = region.peak_delta() + m.data.len() * 4;
 
         let qe_match = (stream_res.final_qe() - mem_res.final_qe()).abs() < 1e-4
@@ -213,16 +224,15 @@ fn main() {
     // Resident baseline.
     let m = dense::read_dense(&txt).unwrap();
     let (mem_res, best_mem) = best_secs(reps, || {
-        train(
-            &tcfg,
-            DataShard::Dense {
+        Som::builder()
+            .config(tcfg.clone())
+            .build()
+            .unwrap()
+            .fit_shard(DataShard::Dense {
                 data: &m.data,
                 dim: m.cols,
-            },
-            None,
-            None,
-        )
-        .unwrap()
+            })
+            .unwrap()
     });
     drop(m);
     let per_epoch_mem = best_mem / epochs as f64;
@@ -263,20 +273,20 @@ fn main() {
     // (the text open's validation parse would otherwise inflate its
     // per-epoch number by a third extra parse).
     let mut src = ChunkedDenseFileSource::open(&txt, chunk_rows).unwrap();
-    let (res, t) = best_secs(reps, || train_stream(&tcfg, &mut src, None, None).unwrap());
+    let (res, t) = best_secs(reps, || fit_source(&tcfg, &mut src));
     drop(src);
     lane("text", "text stream", t, &res.bmus, &mut lanes);
 
     memtrack::reset_data_buffer_peak();
     let mut src = BinaryDenseFileSource::open(&bin, chunk_rows).unwrap();
-    let (res, t) = best_secs(reps, || train_stream(&tcfg, &mut src, None, None).unwrap());
+    let (res, t) = best_secs(reps, || fit_source(&tcfg, &mut src));
     drop(src);
     let peak_databuf = memtrack::data_buffer_peak();
     lane("binary", "binary stream", t, &res.bmus, &mut lanes);
 
     let mut src =
         PrefetchSource::new(BinaryDenseFileSource::open(&bin, chunk_rows).unwrap());
-    let (res, t) = best_secs(reps, || train_stream(&tcfg, &mut src, None, None).unwrap());
+    let (res, t) = best_secs(reps, || fit_source(&tcfg, &mut src));
     drop(src);
     lane("binary_prefetch", "binary + prefetch", t, &res.bmus, &mut lanes);
 
@@ -284,7 +294,7 @@ fn main() {
         .unwrap()
         .dense_shard(chunk_rows, 0, 1)
         .unwrap();
-    let (res, t) = best_secs(reps, || train_stream(&tcfg, &mut src, None, None).unwrap());
+    let (res, t) = best_secs(reps, || fit_source(&tcfg, &mut src));
     drop(src);
     lane("pread", "pread (shared fd)", t, &res.bmus, &mut lanes);
 
@@ -292,7 +302,7 @@ fn main() {
     if somoclu::io::mmap::SUPPORTED {
         memtrack::reset_data_map_peak();
         let mut src = MmapDenseSource::open(&bin, chunk_rows).unwrap();
-        let (res, t) = best_secs(reps, || train_stream(&tcfg, &mut src, None, None).unwrap());
+        let (res, t) = best_secs(reps, || fit_source(&tcfg, &mut src));
         drop(src);
         peak_mapped = memtrack::data_map_peak();
         lane("mmap", "mmap (zero-copy)", t, &res.bmus, &mut lanes);

@@ -1,5 +1,6 @@
-//! Library API (paper §4.2–4.3): the `trainOneEpoch`-style entry point
-//! plus the interface-binding memory semantics Fig. 7 measures.
+//! Library API (paper §4.2–4.3): the calling-convention types the
+//! language bindings wrap, plus the legacy free-function entry points
+//! (now deprecated shims over [`crate::session`]).
 //!
 //! The paper's point: the Python/numpy binding passes f32 pointers
 //! (zero copy), while R and MATLAB default to f64 and "must duplicate all
@@ -9,11 +10,18 @@
 //! * [`DataInput::BorrowedF32`] — the numpy-style zero-copy path.
 //! * [`DataInput::ConvertedF64`] — the R/MATLAB-style path: an f64 buffer
 //!   converted (allocating a full f32 copy) before training.
+//!
+//! The single public surface a binding wraps today is the session:
+//! [`Som::builder`] → [`SomSession`] (`fit`, `step_epoch`, `project`,
+//! `save_checkpoint` / [`Som::resume`]). [`train`] and
+//! [`train_one_epoch`] remain as delegating shims.
 
 use crate::coordinator::config::TrainConfig;
-use crate::coordinator::train::{self, TrainResult};
+use crate::coordinator::train::TrainResult;
 use crate::kernels::DataShard;
 use crate::sparse::Csr;
+
+pub use crate::session::{Som, SomBuilder, SomSession};
 
 /// Calling-convention variants for dense data (Fig. 7).
 pub enum DataInput<'a> {
@@ -27,57 +35,58 @@ pub enum DataInput<'a> {
     Sparse(&'a Csr),
 }
 
-/// Train a map over `input` with `cfg`. The single public entry point
-/// the language bindings would wrap.
+/// Train a map over `input` with `cfg`.
+///
+/// Legacy entry point: a delegating shim over the session API, always
+/// single-process (as it historically was, whatever `cfg.ranks` says).
+/// New code should build a session — it keeps the trained state for
+/// inference, stepping, and checkpointing.
+#[deprecated(
+    since = "0.2.0",
+    note = "use Som::builder().config(..).build()?.fit(input) — the session \
+            API adds stepping, inference, and checkpoint/resume"
+)]
 pub fn train(cfg: &TrainConfig, input: DataInput<'_>) -> anyhow::Result<TrainResult> {
-    match input {
-        DataInput::BorrowedF32 { data, dim } => {
-            train::train(cfg, DataShard::Dense { data, dim }, None, None)
-        }
-        DataInput::ConvertedF64 { data, dim } => {
-            // The R/MATLAB duplication: a full-size converted copy lives
-            // for the duration of training (and the result converts back
-            // to f64 in a real binding; we account the input copy, which
-            // dominates).
-            let converted: Vec<f32> = data.iter().map(|&v| v as f32).collect();
-            train::train(
-                cfg,
-                DataShard::Dense {
-                    data: &converted,
-                    dim,
-                },
-                None,
-                None,
-            )
-        }
-        DataInput::Sparse(m) => train::train(cfg, DataShard::Sparse(m.view()), None, None),
-    }
+    // Preserve the historical contract: this function never dispatched
+    // to the cluster runner, so force the single-process path.
+    let mut single = cfg.clone();
+    single.ranks = 1;
+    Som::builder().config(single).build()?.fit(input)
 }
 
 /// One epoch of training against an existing codebook — the literal
 /// `trainOneEpoch` API shape (paper §4.2): the caller owns all state.
-#[allow(clippy::too_many_arguments)]
+///
+/// Legacy entry point: a delegating shim over
+/// [`SomSession::step_epoch`]. Because the caller owns the codebook,
+/// every call builds a fresh session (and therefore a fresh kernel) —
+/// the kernel-rebuild-per-call cost this shape cannot avoid. Keep a
+/// session and call `step_epoch` instead: the kernel is constructed
+/// once and its `epoch_begin` caches serve every chunk of every step.
+#[deprecated(
+    since = "0.2.0",
+    note = "use SomSession::step_epoch — it owns the codebook and reuses \
+            the kernel's epoch_begin caches across steps"
+)]
 pub fn train_one_epoch(
     cfg: &TrainConfig,
     shard: DataShard<'_>,
     codebook: &mut crate::som::Codebook,
     epoch: usize,
 ) -> anyhow::Result<(Vec<u32>, f64)> {
-    let grid = cfg.grid();
-    let radius = cfg.radius_schedule(&grid).at(epoch);
-    let scale = cfg.scale_schedule().at(epoch);
-    let mut kernel = train::make_kernel(cfg)?;
-    let accum = kernel.epoch_accumulate(
-        shard,
-        codebook,
-        &grid,
-        cfg.neighborhood,
-        radius,
-        scale,
-    )?;
-    codebook.apply_batch_update(&accum.num, &accum.den);
-    let rows = shard.rows();
-    Ok((accum.bmus, accum.qe_sum / rows.max(1) as f64))
+    let mut session = Som::builder()
+        .config(cfg.clone())
+        .initial_codebook(codebook.clone())
+        .build()?;
+    session.set_epoch_cursor(epoch);
+    // The historical shape fed the whole shard to the kernel in one
+    // call; chunk_rows = 0 preserves that exact f32 summation order.
+    let mut source = crate::io::stream::InMemorySource::new(shard, 0);
+    let stats = session.step_epoch_source(&mut source)?;
+    codebook
+        .weights
+        .copy_from_slice(&session.codebook().expect("trained").weights);
+    Ok((session.last_bmus().to_vec(), stats.qe))
 }
 
 #[cfg(test)]
@@ -98,6 +107,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn borrowed_and_converted_agree() {
         let mut rng = Rng::new(31);
         let (data, _) = crate::data::gaussian_blobs(50, 4, 3, 0.2, &mut rng);
@@ -111,6 +121,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn one_epoch_reduces_qe_progressively() {
         let mut rng = Rng::new(32);
         let (data, _) = crate::data::gaussian_blobs(60, 4, 3, 0.1, &mut rng);
@@ -127,7 +138,42 @@ mod tests {
         assert!(qe_last < qe0, "{qe0} -> {qe_last}");
     }
 
+    /// The caller-owned-state shim must be step-for-step identical to a
+    /// session stepping its own codebook.
     #[test]
+    #[allow(deprecated)]
+    fn one_epoch_shim_matches_session_steps() {
+        let mut rng = Rng::new(34);
+        let (data, _) = crate::data::gaussian_blobs(40, 4, 3, 0.2, &mut rng);
+        let cfg = small_cfg();
+        let grid = cfg.grid();
+        let mut rng2 = Rng::new(77);
+        let init = Codebook::random_init(grid.node_count(), 4, &mut rng2);
+        let shard = DataShard::Dense { data: &data, dim: 4 };
+
+        let mut cb = init.clone();
+        let mut shim_bmus = Vec::new();
+        for e in 0..cfg.epochs {
+            let (bmus, _) = train_one_epoch(&cfg, shard, &mut cb, e).unwrap();
+            shim_bmus = bmus;
+        }
+
+        let mut session = Som::builder()
+            .config(cfg.clone())
+            .initial_codebook(init)
+            .build()
+            .unwrap();
+        for _ in 0..cfg.epochs {
+            session
+                .step_epoch(DataInput::BorrowedF32 { data: &data, dim: 4 })
+                .unwrap();
+        }
+        assert_eq!(cb.weights, session.codebook().unwrap().weights);
+        assert_eq!(shim_bmus, session.last_bmus());
+    }
+
+    #[test]
+    #[allow(deprecated)]
     fn sparse_input_works() {
         let mut rng = Rng::new(33);
         let m = Csr::random(40, 16, 0.2, &mut rng);

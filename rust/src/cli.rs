@@ -62,6 +62,13 @@ pub fn arg_spec() -> ArgSpec {
         .opt("io", None, Some("io"),
              "binary-container I/O backend: buffered | mmap (zero-copy) \
               | pread (one shared fd for all ranks)", Some("buffered"))
+        .opt("resume", None, Some("resume"),
+             "resume training from a SOMC checkpoint (map/schedule/kernel \
+              flags come from the checkpoint; runtime flags still apply)",
+             None)
+        .opt("checkpoint-every", None, Some("checkpoint-every"),
+             "write OUTPUT_PREFIX.epoch<k>.somc every N completed epochs \
+              (0 = off)", Some("0"))
         .flag("prefetch", None, Some("prefetch"),
               "double-buffered chunk read-ahead for file-backed streaming")
         .flag("help", Some('h'), Some("help"), "print usage")
@@ -140,6 +147,12 @@ pub struct CliOptions {
     pub input_file: String,
     pub output_prefix: String,
     pub initial_codebook: Option<String>,
+    /// `--resume`: a SOMC checkpoint to continue from (the checkpoint's
+    /// map/schedule/kernel settings override the corresponding flags).
+    pub resume: Option<String>,
+    /// `--checkpoint-every N`: save `OUTPUT_PREFIX.epoch<k>.somc` after
+    /// every N completed epochs (0 = off).
+    pub checkpoint_every: usize,
     pub net: NetModel,
     pub verbose: bool,
 }
@@ -221,11 +234,22 @@ pub fn parse_cli(parsed: &Parsed) -> Result<CliOptions, ArgError> {
         ));
     }
 
+    let resume = parsed.get("resume").map(str::to_string);
+    if resume.is_some() && parsed.get("codebook").is_some() {
+        return Err(bad(
+            "resume",
+            "-c",
+            "--resume restores the codebook from the checkpoint; drop -c".into(),
+        ));
+    }
+
     Ok(CliOptions {
         config: cfg,
         input_file: parsed.positional(0).to_string(),
         output_prefix: parsed.positional(1).to_string(),
         initial_codebook: parsed.get("codebook").map(str::to_string),
+        resume,
+        checkpoint_every: parsed.parse_as::<usize>("checkpoint-every")?,
         net,
         verbose: parsed.flag("verbose"),
     })
@@ -350,6 +374,25 @@ mod tests {
         let parsed = spec.parse(["a.txt", "b.somb"].map(String::from)).unwrap();
         let o = parse_convert(&parsed).unwrap();
         assert!(!o.sparse);
+    }
+
+    #[test]
+    fn resume_and_checkpoint_flags() {
+        let o = parse(&["in", "out"]);
+        assert!(o.resume.is_none());
+        assert_eq!(o.checkpoint_every, 0); // default: no checkpoints
+        let o = parse(&[
+            "--checkpoint-every", "3", "--resume", "ck.somc", "in", "out",
+        ]);
+        assert_eq!(o.resume.as_deref(), Some("ck.somc"));
+        assert_eq!(o.checkpoint_every, 3);
+        // --resume restores the codebook; combining it with -c is a
+        // contradiction and must be rejected.
+        let spec = arg_spec();
+        let parsed = spec
+            .parse(["--resume", "a.somc", "-c", "cb.wts", "in", "out"].map(String::from))
+            .unwrap();
+        assert!(parse_cli(&parsed).is_err());
     }
 
     #[test]

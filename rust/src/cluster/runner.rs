@@ -1,27 +1,36 @@
 //! Distributed training driver (paper §3.2): shard once, per-epoch
 //! reduce-accumulators-to-master + broadcast-codebook, gather BMUs.
 //!
-//! Each rank runs on its own OS thread with its own codebook copy — the
-//! MPI-process memory model whose duplication cost the paper contrasts
-//! with OpenMP threads. Within a rank, the kernel still uses
-//! `threads_per_rank` workers (the paper's hybrid kernel shape).
+//! Each rank runs on its own OS thread with its own **rank-local
+//! [`SomSession`]** — the MPI-process memory model whose duplication
+//! cost the paper contrasts with OpenMP threads. The per-epoch chunk
+//! loop lives in `SomSession::accumulate_epoch` (the same code the
+//! single-process coordinator runs); this module only adds the
+//! collectives between accumulation and update.
 //!
-//! Two input paths share one epoch loop (`rank_train_loop`, written
-//! against [`DataSource`]):
+//! Two input paths share that loop:
 //!
-//! * [`train_cluster`] — the classic resident path: the data set is
-//!   sharded in memory and each rank streams its shard (optionally in
-//!   `--chunk-rows` windows).
-//! * [`train_cluster_stream`] — the out-of-core path: every rank opens
-//!   its own **disjoint row window of the same file**
-//!   (`open_shard(rank, ranks)`, text or binary container), so no rank
-//!   ever holds more than O(chunk_rows × dim) of data. With
-//!   `cfg.prefetch`, each rank's reads overlap its kernel compute.
+//! * `run_cluster` ([`SomSession::fit_cluster`]) — the classic resident
+//!   path: the data set is sharded in memory and each rank streams its
+//!   shard (optionally in `--chunk-rows` windows).
+//! * `run_cluster_stream` ([`SomSession::fit_cluster_stream`]) — the
+//!   out-of-core path: every rank opens its own **disjoint row window
+//!   of the same file** (`open_shard`, text or binary container), so no
+//!   rank ever holds more than O(chunk_rows × dim) of data.
 //!
 //! Both use the identical `split_ranges` row split, so gathered BMUs
 //! concatenate in file row order and the reduced batch update is the
 //! same sum — multi-rank streaming matches single-rank training BMUs
 //! exactly (`streamed_cluster_matches_single_node`).
+//!
+//! The coordinator's session drives training in **windows**: without a
+//! checkpoint policy there is one window covering all remaining epochs
+//! (bit-identical to the historical all-at-once run); with
+//! `checkpoint_every(n, …)` each window spans `n` epochs and the
+//! coordinator checkpoints between windows — so multi-rank runs resume
+//! mid-schedule, and a resumed coordinator seeds every rank at its
+//! cursor. Per-epoch collectives are deterministic for a fixed rank
+//! count, so windowing never changes the result bits.
 
 use std::path::PathBuf;
 use std::time::Instant;
@@ -32,7 +41,9 @@ use crate::cluster::allreduce::{
 use crate::cluster::comm::{Endpoint, World};
 use crate::cluster::netmodel::NetModel;
 use crate::coordinator::config::{IoMode, TrainConfig};
-use crate::coordinator::train::{init_codebook, EpochStats, TrainResult};
+use crate::coordinator::train::{
+    init_codebook, init_codebook_with_data, EpochStats, TrainResult,
+};
 use crate::io::binary::{
     self, BinaryDenseFileSource, BinaryKind, BinarySparseFileSource, SharedFd,
 };
@@ -41,10 +52,9 @@ use crate::io::stream::{
     ChunkedDenseFileSource, ChunkedSparseFileSource, DataSource, InMemorySource,
     PrefetchSource,
 };
-use crate::kernels::dense_cpu::DenseCpuKernel;
-use crate::kernels::sparse_cpu::SparseCpuKernel;
-use crate::kernels::{DataShard, EpochAccum, KernelType, TrainingKernel};
-use crate::som::{Codebook, Grid, Schedule};
+use crate::kernels::{DataShard, KernelType};
+use crate::session::SomSession;
+use crate::som::Codebook;
 use crate::sparse::Csr;
 use crate::util::threadpool::{run_concurrent, split_ranges};
 
@@ -101,8 +111,8 @@ impl ClusterData {
     }
 }
 
-/// File-backed input for [`train_cluster_stream`]: each rank opens its
-/// own disjoint row window of this one file.
+/// File-backed input for [`SomSession::fit_cluster_stream`]: each rank
+/// opens its own disjoint row window of this one file.
 #[derive(Clone, Debug)]
 pub enum StreamInput {
     /// Dense text (plain or ESOM-headered).
@@ -161,7 +171,8 @@ impl StreamInput {
     }
 }
 
-/// Communication volume report for the Fig. 8 harness.
+/// Communication volume report for the Fig. 8 harness. With a
+/// checkpoint policy, volumes accumulate across training windows.
 #[derive(Debug, Clone)]
 pub struct ClusterReport {
     pub ranks: usize,
@@ -169,56 +180,26 @@ pub struct ClusterReport {
     pub messages_sent: u64,
 }
 
-/// One rank's whole training run: the per-epoch chunk loop over its
-/// [`DataSource`] shard, the reduce/update/broadcast exchange, and the
-/// final BMU gather. Returns `Some(result)` on the master rank only.
-#[allow(clippy::too_many_arguments)]
+/// One rank's run over `[session.epoch(), end_epoch)`: per epoch, the
+/// session's chunk-loop accumulation, then the reduce/update/broadcast
+/// exchange (the paper's two-way master/slave pattern); finally the BMU
+/// gather. A zero-epoch window (a run resumed at schedule completion)
+/// still gathers — BMUs come from a projection pass. Returns
+/// `Some(result)` on the master rank only.
 fn rank_train_loop(
-    cfg: &TrainConfig,
-    grid: &Grid,
-    radius_sched: Schedule,
-    scale_sched: Schedule,
-    mut codebook: Codebook,
+    session: &mut SomSession,
     ep: &mut Endpoint,
     source: &mut dyn DataSource,
     total_rows: usize,
-    threads_per_rank: usize,
+    end_epoch: usize,
 ) -> anyhow::Result<Option<TrainResult>> {
-    let mut kernel: Box<dyn TrainingKernel> = match cfg.kernel {
-        KernelType::SparseCpu => Box::new(SparseCpuKernel::new(threads_per_rank)),
-        _ => Box::new(DenseCpuKernel::new(threads_per_rank)),
-    };
     let rows_local = source.rows();
-    let dim_local = source.dim();
-    let mut epochs = Vec::with_capacity(cfg.epochs);
-    let mut bmus_local: Vec<u32> = Vec::new();
-
-    for epoch in 0..cfg.epochs {
+    while session.epoch() < end_epoch {
         let te = Instant::now();
-        let radius = radius_sched.at(epoch);
-        let scale = scale_sched.at(epoch);
-        kernel.epoch_begin(&codebook)?;
-        source.reset()?;
-        let mut accum = EpochAccum::zeros(grid.node_count(), dim_local, 0);
-        let mut epoch_bmus: Vec<u32> = Vec::with_capacity(rows_local);
-        while let Some(chunk) = source.next_chunk()? {
-            let part = kernel.epoch_accumulate(
-                chunk,
-                &codebook,
-                grid,
-                cfg.neighborhood,
-                radius,
-                scale,
-            )?;
-            epoch_bmus.extend_from_slice(&part.bmus);
-            accum.merge(&part);
-        }
-        anyhow::ensure!(
-            epoch_bmus.len() == rows_local,
-            "rank shard produced {} rows, expected {rows_local}",
-            epoch_bmus.len()
-        );
-        bmus_local = epoch_bmus;
+        let epoch = session.epoch();
+        let (radius, scale) = session.schedule_now();
+        let mut accum = session.accumulate_epoch(source)?;
+        let bmus = std::mem::take(&mut accum.bmus);
 
         // Slaves send accumulators; master reduces, updates, broadcasts
         // the new codebook (the paper's two-way master/slave exchange).
@@ -226,29 +207,43 @@ fn rank_train_loop(
         reduce_sum_to_root(ep, &mut accum.den);
         let qe_total = allreduce_f64_sum(ep, accum.qe_sum);
         if is_root {
-            codebook.apply_batch_update(&accum.num, &accum.den);
+            session.apply_epoch_update(&accum);
         }
-        broadcast_from_root(ep, &mut codebook.weights);
+        broadcast_from_root(ep, session.weights_mut());
+        session.finish_epoch(
+            EpochStats {
+                epoch,
+                radius,
+                scale,
+                qe: qe_total / total_rows as f64,
+                duration: te.elapsed(),
+            },
+            bmus,
+        )?;
+    }
 
-        epochs.push(EpochStats {
-            epoch,
-            radius,
-            scale,
-            qe: qe_total / total_rows as f64,
-            duration: te.elapsed(),
-        });
+    let mut bmus_local = session.last_bmus().to_vec();
+    if bmus_local.len() != rows_local {
+        // No epoch ran in this window: refresh the mapping with a
+        // projection pass so the gather still covers every row.
+        bmus_local = session.project_source(source)?;
     }
 
     // Gather BMUs in rank order for the final output.
     let gathered = gather_u32_to_root(ep, bmus_local);
     if let Some(parts) = gathered {
         let bmus: Vec<u32> = parts.concat();
-        let u = crate::som::umatrix::umatrix(grid, &codebook, threads_per_rank);
+        let codebook = session.codebook().expect("trained").clone();
+        let u = crate::som::umatrix::umatrix(
+            session.grid(),
+            &codebook,
+            session.config().threads,
+        );
         Ok(Some(TrainResult {
             codebook,
             bmus,
             umatrix: u,
-            epochs,
+            epochs: session.history().to_vec(),
             total: std::time::Duration::ZERO, // set by caller
         }))
     } else {
@@ -256,28 +251,17 @@ fn rank_train_loop(
     }
 }
 
-/// Pick the master's result out of the per-rank outcomes and attach the
-/// communication report.
-fn assemble(
+/// Pick the master's result out of the per-rank outcomes.
+fn pick_master(
     outcomes: Vec<anyhow::Result<Option<TrainResult>>>,
-    world: &World,
-    ranks: usize,
-    total: std::time::Duration,
-) -> anyhow::Result<(TrainResult, ClusterReport)> {
+) -> anyhow::Result<TrainResult> {
     let mut master: Option<TrainResult> = None;
     for o in outcomes {
         if let Some(res) = o? {
             master = Some(res);
         }
     }
-    let mut result = master.expect("rank 0 must produce a result");
-    result.total = total;
-    let report = ClusterReport {
-        ranks,
-        bytes_sent: world.bytes_sent(),
-        messages_sent: world.messages_sent(),
-    };
-    Ok((result, report))
+    Ok(master.expect("rank 0 must produce a result"))
 }
 
 fn check_kernel_ranks(cfg: &TrainConfig) -> anyhow::Result<()> {
@@ -290,100 +274,170 @@ fn check_kernel_ranks(cfg: &TrainConfig) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Train across `cfg.ranks` simulated nodes on resident data. Returns
-/// the master's result plus the communication report.
-pub fn train_cluster(
-    cfg: &TrainConfig,
+/// The shared checkpoint-window driver behind both cluster paths: per
+/// window, spin up a [`World`], hand its endpoints to `spawn` (which
+/// builds one task per rank from the coordinator's codebook snapshot
+/// and runs the ranks to the window end), accumulate the communication
+/// report, adopt the master's state into the coordinator session
+/// (firing its checkpoint policy), and repeat until the schedule
+/// completes. The resident and streamed paths differ only in how
+/// `spawn` builds each rank's data source.
+fn run_windows(
+    session: &mut SomSession,
+    net: NetModel,
+    spawn: &mut dyn FnMut(
+        Vec<Endpoint>,
+        &Codebook,
+        usize,
+        usize,
+    ) -> Vec<anyhow::Result<Option<TrainResult>>>,
+) -> anyhow::Result<(TrainResult, ClusterReport)> {
+    let ranks = session.config().ranks;
+    let total_epochs = session.config().epochs;
+    let t0 = Instant::now();
+    let mut report = ClusterReport {
+        ranks,
+        bytes_sent: 0,
+        messages_sent: 0,
+    };
+    let mut all_stats: Vec<EpochStats> = Vec::new();
+    let mut last_master: Option<TrainResult> = None;
+    loop {
+        let start = session.epoch();
+        let end = window_end(session, total_epochs);
+        let init = session.codebook().expect("codebook installed").clone();
+        let mut world = World::new(ranks, net.clone());
+        let endpoints = world.take_endpoints();
+        let outcomes = spawn(endpoints, &init, start, end);
+        report.bytes_sent += world.bytes_sent();
+        report.messages_sent += world.messages_sent();
+        let master = pick_master(outcomes)?;
+        all_stats.extend(master.epochs.iter().cloned());
+        session.adopt_cluster_window(&master, end)?;
+        last_master = Some(master);
+        if end >= total_epochs {
+            break;
+        }
+    }
+    let mut result = last_master.expect("at least one window ran");
+    result.epochs = all_stats;
+    result.total = t0.elapsed();
+    Ok((result, report))
+}
+
+/// The window span for the coordinator's next cluster window: up to the
+/// next multiple of the checkpoint cadence, capped at the schedule end.
+/// Aligning to the cadence *grid* (not `start + n`) matters for resumed
+/// runs: a session resumed at epoch 3 with `checkpoint_every(2)` must
+/// window to 4, 6, 8, … so the `epoch % every == 0` save in
+/// `adopt_cluster_window` fires after every window — the same cadence
+/// the single-process path produces.
+fn window_end(session: &SomSession, total_epochs: usize) -> usize {
+    match session.checkpoint_interval() {
+        Some(n) if n > 0 => ((session.epoch() / n + 1) * n).min(total_epochs),
+        _ => total_epochs,
+    }
+}
+
+/// Train `session` across `cfg.ranks` simulated nodes on resident data
+/// (the engine behind [`SomSession::fit_cluster`]). Returns the master's
+/// result plus the communication report.
+pub(crate) fn run_cluster(
+    session: &mut SomSession,
     data: ClusterData,
     net: NetModel,
 ) -> anyhow::Result<(TrainResult, ClusterReport)> {
+    let cfg = session.config().clone();
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
-    check_kernel_ranks(cfg)?;
+    check_kernel_ranks(&cfg)?;
     let ranks = cfg.ranks;
-    let grid = cfg.grid();
     let dim = data.dim();
     let total_rows = data.rows();
+    let total_epochs = cfg.epochs;
     anyhow::ensure!(total_rows >= ranks, "fewer rows than ranks");
+    anyhow::ensure!(
+        session.epoch() <= total_epochs,
+        "session cursor {} beyond the {total_epochs}-epoch schedule",
+        session.epoch()
+    );
 
-    // Identical initial codebook on every rank (broadcast-equivalent).
-    let init = match &data {
-        ClusterData::Dense { data: d, dim } => {
-            crate::coordinator::train::init_codebook_with_data(
-                cfg,
-                &grid,
-                DataShard::Dense { data: d, dim: *dim },
-            )?
-        }
-        ClusterData::Sparse(_) => {
-            anyhow::ensure!(
-                cfg.initialization
-                    == crate::coordinator::config::Initialization::Random,
-                "PCA initialization needs dense data"
-            );
-            init_codebook(cfg, &grid, dim)
-        }
-    };
-    let radius_sched = cfg.radius_schedule(&grid);
-    let scale_sched = cfg.scale_schedule();
-
-    let mut world = World::new(ranks, net);
-    let endpoints = world.take_endpoints();
-    let shards = data.shard(ranks);
-    let threads_per_rank = cfg.threads.max(1);
-
-    let t0 = Instant::now();
-    let tasks: Vec<_> = endpoints
-        .into_iter()
-        .zip(shards)
-        .map(|(mut ep, shard)| {
-            let codebook = init.clone();
-            let cfg = cfg.clone();
-            let grid = grid.clone();
-            move || -> anyhow::Result<Option<TrainResult>> {
-                // Each rank streams its resident shard in bounded chunks
-                // — the same chunk loop as the single-node coordinator,
-                // so `--chunk-rows` bounds per-rank data traffic to the
-                // kernel identically in both modes.
-                let mut source =
-                    InMemorySource::new(shard.as_shard(), cfg.chunk_rows);
-                rank_train_loop(
+    // Identical initial codebook on every rank (broadcast-equivalent);
+    // a resumed session already carries it.
+    match session.codebook() {
+        Some(cb) => anyhow::ensure!(
+            cb.dim == dim,
+            "data dim {dim} does not match the session codebook dim {}",
+            cb.dim
+        ),
+        None => {
+            let init = match &data {
+                ClusterData::Dense { data: d, dim } => init_codebook_with_data(
                     &cfg,
-                    &grid,
-                    radius_sched,
-                    scale_sched,
-                    codebook,
-                    &mut ep,
-                    &mut source,
-                    total_rows,
-                    threads_per_rank,
-                )
-            }
-        })
-        .collect();
+                    session.grid(),
+                    DataShard::Dense { data: d, dim: *dim },
+                )?,
+                ClusterData::Sparse(_) => {
+                    anyhow::ensure!(
+                        cfg.initialization
+                            == crate::coordinator::config::Initialization::Random,
+                        "PCA initialization needs dense data"
+                    );
+                    init_codebook(&cfg, session.grid(), dim)
+                }
+            };
+            session.install_codebook(init)?;
+        }
+    }
 
-    let outcomes = run_concurrent(tasks);
-    assemble(outcomes, &world, ranks, t0.elapsed())
+    let shards = data.shard(ranks);
+    run_windows(session, net, &mut |endpoints, init, start, end| {
+        let tasks: Vec<_> = endpoints
+            .into_iter()
+            .zip(&shards)
+            .map(|(mut ep, shard)| {
+                let cfg = cfg.clone();
+                let codebook = init.clone();
+                move || -> anyhow::Result<Option<TrainResult>> {
+                    let chunk_rows = cfg.chunk_rows;
+                    let mut rank_session =
+                        SomSession::rank_local(cfg, codebook, start)?;
+                    // Each rank streams its resident shard in bounded
+                    // chunks — the same chunk loop as the single-node
+                    // coordinator, so `--chunk-rows` bounds per-rank data
+                    // traffic to the kernel identically in both modes.
+                    let mut source =
+                        InMemorySource::new(shard.as_shard(), chunk_rows);
+                    rank_train_loop(
+                        &mut rank_session,
+                        &mut ep,
+                        &mut source,
+                        total_rows,
+                        end,
+                    )
+                }
+            })
+            .collect();
+        run_concurrent(tasks)
+    })
 }
 
-/// Train across `cfg.ranks` simulated nodes with **no resident copy of
-/// the data**: every rank streams its own disjoint row window of the
-/// same file (`--ranks N --chunk-rows M` from the CLI). Peak data memory
-/// is ranks × chunk_rows × dim (× 2 with `cfg.prefetch`), independent of
-/// file size.
-pub fn train_cluster_stream(
-    cfg: &TrainConfig,
+/// Train `session` across `cfg.ranks` simulated nodes with **no
+/// resident copy of the data** (the engine behind
+/// [`SomSession::fit_cluster_stream`]): every rank streams its own
+/// disjoint row window of the same file. Peak data memory is
+/// ranks × chunk_rows × dim (× 2 with `cfg.prefetch`), independent of
+/// file size. Sources are opened once and reused across checkpoint
+/// windows.
+pub(crate) fn run_cluster_stream(
+    session: &mut SomSession,
     input: StreamInput,
     net: NetModel,
 ) -> anyhow::Result<(TrainResult, ClusterReport)> {
+    let cfg = session.config().clone();
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
-    check_kernel_ranks(cfg)?;
-    anyhow::ensure!(
-        cfg.initialization == crate::coordinator::config::Initialization::Random,
-        "PCA initialization needs the data resident in memory; streamed \
-         cluster runs support only --initialization random"
-    );
+    check_kernel_ranks(&cfg)?;
     let ranks = cfg.ranks;
-    let grid = cfg.grid();
+    let total_epochs = cfg.epochs;
     // Kind-vs-kernel mismatch must fail here, before rank threads
     // spawn: inside a rank it would surface as a kernel error that
     // drops the rank's Endpoint and panics the peers blocked in the
@@ -405,14 +459,28 @@ pub fn train_cluster_stream(
     );
     let (total_rows, dim) = input.probe(cfg.chunk_rows)?;
     anyhow::ensure!(total_rows >= ranks, "fewer rows than ranks");
+    anyhow::ensure!(
+        session.epoch() <= total_epochs,
+        "session cursor {} beyond the {total_epochs}-epoch schedule",
+        session.epoch()
+    );
 
-    let init = init_codebook(cfg, &grid, dim);
-    let radius_sched = cfg.radius_schedule(&grid);
-    let scale_sched = cfg.scale_schedule();
-
-    let mut world = World::new(ranks, net);
-    let endpoints = world.take_endpoints();
-    let threads_per_rank = cfg.threads.max(1);
+    match session.codebook() {
+        Some(cb) => anyhow::ensure!(
+            cb.dim == dim,
+            "data dim {dim} does not match the session codebook dim {}",
+            cb.dim
+        ),
+        None => {
+            anyhow::ensure!(
+                cfg.initialization
+                    == crate::coordinator::config::Initialization::Random,
+                "PCA initialization needs the data resident in memory; streamed \
+                 cluster runs support only --initialization random"
+            );
+            session.install_codebook(init_codebook(&cfg, session.grid(), dim))?;
+        }
+    }
 
     // Open every rank's shard BEFORE spawning rank threads: a fallible
     // open inside a thread would drop its Endpoint and panic the peers
@@ -480,40 +548,83 @@ pub fn train_cluster_stream(
             .collect();
     }
 
-    let t0 = Instant::now();
-    let tasks: Vec<_> = endpoints
-        .into_iter()
-        .zip(sources)
-        .map(|(mut ep, mut source)| {
-            let codebook = init.clone();
-            let cfg = cfg.clone();
-            let grid = grid.clone();
-            move || -> anyhow::Result<Option<TrainResult>> {
-                rank_train_loop(
-                    &cfg,
-                    &grid,
-                    radius_sched,
-                    scale_sched,
-                    codebook,
-                    &mut ep,
-                    &mut source,
-                    total_rows,
-                    threads_per_rank,
-                )
-            }
-        })
-        .collect();
+    run_windows(session, net, &mut |endpoints, init, start, end| {
+        let tasks: Vec<_> = endpoints
+            .into_iter()
+            .zip(sources.iter_mut())
+            .map(|(mut ep, source)| {
+                let cfg = cfg.clone();
+                let codebook = init.clone();
+                move || -> anyhow::Result<Option<TrainResult>> {
+                    let mut rank_session =
+                        SomSession::rank_local(cfg, codebook, start)?;
+                    rank_train_loop(
+                        &mut rank_session,
+                        &mut ep,
+                        &mut **source,
+                        total_rows,
+                        end,
+                    )
+                }
+            })
+            .collect();
+        run_concurrent(tasks)
+    })
+}
 
-    let outcomes = run_concurrent(tasks);
-    assemble(outcomes, &world, ranks, t0.elapsed())
+/// Train across `cfg.ranks` simulated nodes on resident data.
+///
+/// Legacy entry point: a delegating shim over the session API, kept for
+/// source compatibility. New code should use
+/// [`crate::session::Som::builder`] and [`SomSession::fit_cluster`],
+/// which add checkpoint/resume and inference on the same state.
+#[deprecated(
+    since = "0.2.0",
+    note = "use Som::builder().config(..).build()?.fit_cluster(data) — the \
+            session API adds checkpoint/resume and inference"
+)]
+pub fn train_cluster(
+    cfg: &TrainConfig,
+    data: ClusterData,
+    net: NetModel,
+) -> anyhow::Result<(TrainResult, ClusterReport)> {
+    let mut session = crate::session::Som::builder()
+        .config(cfg.clone())
+        .net(net)
+        .build()?;
+    session.fit_cluster(data)
+}
+
+/// Train across `cfg.ranks` simulated nodes streaming per-rank shards of
+/// one file.
+///
+/// Legacy entry point: a delegating shim over the session API, kept for
+/// source compatibility. New code should use
+/// [`crate::session::Som::builder`] and
+/// [`SomSession::fit_cluster_stream`].
+#[deprecated(
+    since = "0.2.0",
+    note = "use Som::builder().config(..).build()?.fit_cluster_stream(input) — \
+            the session API adds checkpoint/resume and inference"
+)]
+pub fn train_cluster_stream(
+    cfg: &TrainConfig,
+    input: StreamInput,
+    net: NetModel,
+) -> anyhow::Result<(TrainResult, ClusterReport)> {
+    let mut session = crate::session::Som::builder()
+        .config(cfg.clone())
+        .net(net)
+        .build()?;
+    session.fit_cluster_stream(input)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::train::train;
     use crate::data;
     use crate::io::dense;
+    use crate::session::Som;
     use crate::util::rng::Rng;
 
     fn cfg(ranks: usize) -> TrainConfig {
@@ -528,6 +639,39 @@ mod tests {
         }
     }
 
+    fn fit_single(cfg: &TrainConfig, shard: DataShard<'_>) -> TrainResult {
+        Som::builder()
+            .config(cfg.clone())
+            .build()
+            .unwrap()
+            .fit_shard(shard)
+            .unwrap()
+    }
+
+    fn fit_cluster(
+        cfg: &TrainConfig,
+        data: ClusterData,
+        net: NetModel,
+    ) -> anyhow::Result<(TrainResult, ClusterReport)> {
+        Som::builder()
+            .config(cfg.clone())
+            .net(net)
+            .build()?
+            .fit_cluster(data)
+    }
+
+    fn fit_cluster_stream(
+        cfg: &TrainConfig,
+        input: StreamInput,
+        net: NetModel,
+    ) -> anyhow::Result<(TrainResult, ClusterReport)> {
+        Som::builder()
+            .config(cfg.clone())
+            .net(net)
+            .build()?
+            .fit_cluster_stream(input)
+    }
+
     /// The paper's structure guarantees the distributed run computes the
     /// *same* batch update as the serial run — verify bit-for-bit BMUs
     /// and near-identical codebooks (f32 reduce order differs).
@@ -535,15 +679,9 @@ mod tests {
     fn cluster_matches_single_node() {
         let mut rng = Rng::new(7);
         let (data, _) = data::gaussian_blobs(96, 5, 3, 0.2, &mut rng);
-        let single = train(
-            &cfg(1),
-            DataShard::Dense { data: &data, dim: 5 },
-            None,
-            None,
-        )
-        .unwrap();
+        let single = fit_single(&cfg(1), DataShard::Dense { data: &data, dim: 5 });
         for ranks in [2, 3, 4] {
-            let (multi, report) = train_cluster(
+            let (multi, report) = fit_cluster(
                 &cfg(ranks),
                 ClusterData::Dense {
                     data: data.clone(),
@@ -575,13 +713,41 @@ mod tests {
         let m = crate::sparse::Csr::random(60, 20, 0.15, &mut rng);
         let mut c = cfg(1);
         c.kernel = KernelType::SparseCpu;
-        let single = train(&c, DataShard::Sparse(m.view()), None, None).unwrap();
+        let single = fit_single(&c, DataShard::Sparse(m.view()));
         let mut c3 = cfg(3);
         c3.kernel = KernelType::SparseCpu;
         let (multi, _) =
-            train_cluster(&c3, ClusterData::Sparse(m), NetModel::ideal()).unwrap();
+            fit_cluster(&c3, ClusterData::Sparse(m), NetModel::ideal()).unwrap();
         assert_eq!(multi.bmus, single.bmus);
         assert!((multi.final_qe() - single.final_qe()).abs() < 1e-6);
+    }
+
+    /// The deprecated entry points must stay faithful delegating shims.
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_shims_match_session_api() {
+        let mut rng = Rng::new(77);
+        let (data, _) = data::gaussian_blobs(48, 4, 3, 0.2, &mut rng);
+        let (via_session, _) = fit_cluster(
+            &cfg(2),
+            ClusterData::Dense {
+                data: data.clone(),
+                dim: 4,
+            },
+            NetModel::ideal(),
+        )
+        .unwrap();
+        let (via_shim, _) = train_cluster(
+            &cfg(2),
+            ClusterData::Dense {
+                data: data.clone(),
+                dim: 4,
+            },
+            NetModel::ideal(),
+        )
+        .unwrap();
+        assert_eq!(via_shim.bmus, via_session.bmus);
+        assert_eq!(via_shim.codebook.weights, via_session.codebook.weights);
     }
 
     #[test]
@@ -592,7 +758,7 @@ mod tests {
         let mut rng = Rng::new(9);
         let (data, _) = data::gaussian_blobs(64, 4, 2, 0.3, &mut rng);
         let run = |ranks| {
-            let (_, report) = train_cluster(
+            let (_, report) = fit_cluster(
                 &cfg(ranks),
                 ClusterData::Dense {
                     data: data.clone(),
@@ -621,7 +787,7 @@ mod tests {
         let run = |chunk_rows: usize| {
             let mut c = cfg(3);
             c.chunk_rows = chunk_rows;
-            train_cluster(
+            fit_cluster(
                 &c,
                 ClusterData::Dense {
                     data: data.clone(),
@@ -640,7 +806,7 @@ mod tests {
 
     #[test]
     fn rejects_more_ranks_than_rows() {
-        let out = train_cluster(
+        let out = fit_cluster(
             &cfg(8),
             ClusterData::Dense {
                 data: vec![0.0; 4 * 5],
@@ -666,13 +832,7 @@ mod tests {
         let bin = dir.join("stream.somb");
         crate::io::binary::write_binary_dense(&bin, 90, 5, &data).unwrap();
 
-        let single = train(
-            &cfg(1),
-            DataShard::Dense { data: &data, dim: 5 },
-            None,
-            None,
-        )
-        .unwrap();
+        let single = fit_single(&cfg(1), DataShard::Dense { data: &data, dim: 5 });
 
         for (input, prefetch) in [
             (StreamInput::DenseText { path: text.clone() }, false),
@@ -683,7 +843,7 @@ mod tests {
             c.chunk_rows = 8;
             c.prefetch = prefetch;
             let (multi, report) =
-                train_cluster_stream(&c, input.clone(), NetModel::ideal()).unwrap();
+                fit_cluster_stream(&c, input.clone(), NetModel::ideal()).unwrap();
             assert_eq!(
                 multi.bmus, single.bmus,
                 "input {input:?} prefetch {prefetch}"
@@ -710,12 +870,12 @@ mod tests {
 
         let mut c1 = cfg(1);
         c1.kernel = KernelType::SparseCpu;
-        let single = train(&c1, DataShard::Sparse(resident.view()), None, None).unwrap();
+        let single = fit_single(&c1, DataShard::Sparse(resident.view()));
 
         let mut c3 = cfg(3);
         c3.kernel = KernelType::SparseCpu;
         c3.chunk_rows = 7;
-        let (multi, _) = train_cluster_stream(
+        let (multi, _) = fit_cluster_stream(
             &c3,
             StreamInput::SparseText {
                 path: svm.clone(),
@@ -732,7 +892,7 @@ mod tests {
         crate::io::binary::write_binary_sparse(&bin, &resident).unwrap();
         let mut cb = c3.clone();
         cb.prefetch = true;
-        let (multib, _) = train_cluster_stream(
+        let (multib, _) = fit_cluster_stream(
             &cb,
             StreamInput::Binary { path: bin },
             NetModel::ideal(),
@@ -755,7 +915,7 @@ mod tests {
 
         let mut c = cfg(2); // dense kernel (default)
         c.chunk_rows = 5;
-        let err = train_cluster_stream(
+        let err = fit_cluster_stream(
             &c,
             StreamInput::Binary { path: bin.clone() },
             NetModel::ideal(),
@@ -766,7 +926,7 @@ mod tests {
         let mut c = cfg(2);
         c.chunk_rows = 5;
         c.kernel = KernelType::SparseCpu;
-        let err = train_cluster_stream(
+        let err = fit_cluster_stream(
             &c,
             StreamInput::DenseText {
                 path: dir.join("nope.txt"),
@@ -788,12 +948,48 @@ mod tests {
         let mut c = cfg(2);
         c.chunk_rows = 2;
         c.initialization = crate::coordinator::config::Initialization::Pca;
-        let err = train_cluster_stream(
+        let err = fit_cluster_stream(
             &c,
             StreamInput::DenseText { path },
             NetModel::ideal(),
         );
         assert!(err.is_err());
         assert!(format!("{:#}", err.unwrap_err()).contains("resident"));
+    }
+
+    /// Checkpoint windows must not change the result: the per-epoch
+    /// collectives are deterministic for a fixed rank count, so training
+    /// in 2-epoch windows is bit-identical to one 5-epoch window.
+    #[test]
+    fn checkpoint_windows_are_bit_identical() {
+        let dir = std::env::temp_dir()
+            .join(format!("somoclu_cluster_windows_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rng = Rng::new(15);
+        let (data, _) = data::gaussian_blobs(72, 4, 3, 0.2, &mut rng);
+        let make = || ClusterData::Dense {
+            data: data.clone(),
+            dim: 4,
+        };
+
+        let (plain, _) = fit_cluster(&cfg(3), make(), NetModel::ideal()).unwrap();
+
+        let prefix = dir.join("win");
+        let mut windowed = Som::builder()
+            .config(cfg(3))
+            .checkpoint_every(2, &prefix)
+            .build()
+            .unwrap();
+        let (res, _) = windowed.fit_cluster(make()).unwrap();
+        assert_eq!(res.bmus, plain.bmus);
+        assert_eq!(res.codebook.weights, plain.codebook.weights);
+        assert_eq!(res.epochs.len(), plain.epochs.len());
+        // Checkpoints landed at the window boundaries.
+        for k in [2, 4] {
+            assert!(
+                crate::session::checkpoint_path(&prefix, k).exists(),
+                "missing checkpoint at epoch {k}"
+            );
+        }
     }
 }

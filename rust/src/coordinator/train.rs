@@ -1,22 +1,30 @@
-//! The training loop (single-process path): epoch iteration, cooling,
-//! kernel dispatch, snapshots, and quality logging — the body of the
-//! paper's `trainOneEpoch` driven across epochs.
+//! Single-process training support: kernel construction, codebook
+//! initialization, the per-epoch stats record, and the legacy
+//! `train`/`train_stream` entry points.
 //!
-//! The loop is written against [`DataSource`], so one code path serves
-//! both the classic resident-shard mode and out-of-core streaming
-//! (`--chunk-rows`): each epoch accumulates bounded chunks, merging the
-//! partial Eq. 6 accumulators (`EpochAccum::merge`, the same operator the
-//! cluster allreduce uses) and reassembling BMUs in chunk order.
+//! The epoch loop itself lives in [`crate::session::SomSession`] (one
+//! chunk loop serves the resident, streamed, and cluster paths); the
+//! functions here are thin **deprecated shims** over a session, kept so
+//! existing callers keep compiling. New code should build a session:
+//!
+//! ```
+//! use somoclu::api::DataInput;
+//! use somoclu::session::Som;
+//! let data = vec![0.5f32; 40];
+//! let mut session = Som::builder().map_size(4, 4).epochs(2).threads(1).build().unwrap();
+//! let res = session.fit(DataInput::BorrowedF32 { data: &data, dim: 4 }).unwrap();
+//! assert_eq!(res.bmus.len(), 10);
+//! ```
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::coordinator::config::TrainConfig;
 use crate::io::output::OutputWriter;
 use crate::io::stream::{DataSource, InMemorySource};
 use crate::kernels::dense_cpu::DenseCpuKernel;
 use crate::kernels::sparse_cpu::SparseCpuKernel;
-use crate::kernels::{DataShard, EpochAccum, KernelType, TrainingKernel};
-use crate::som::{umatrix, Codebook, Grid};
+use crate::kernels::{DataShard, KernelType, TrainingKernel};
+use crate::som::{Codebook, Grid};
 use crate::util::rng::Rng;
 
 /// Per-epoch progress record (QE curve + timing).
@@ -91,9 +99,17 @@ pub fn init_codebook_with_data(
 }
 
 /// Train on one in-memory shard (the whole data set on the single-node
-/// path). `writer` enables interim snapshots (paper `-s`). With
-/// `cfg.chunk_rows > 0` the shard is processed in bounded windows — this
-/// is a thin wrapper over [`train_stream`].
+/// path). `writer` enables interim snapshots (paper `-s`).
+///
+/// Legacy entry point: a delegating shim over the session API, kept for
+/// source compatibility. New code should use
+/// [`crate::session::Som::builder`] and `fit` — the session adds
+/// incremental stepping, inference, and checkpoint/resume.
+#[deprecated(
+    since = "0.2.0",
+    note = "use Som::builder().config(..).build()?.fit(input) — the session \
+            API adds stepping, inference, and checkpoint/resume"
+)]
 pub fn train(
     cfg: &TrainConfig,
     shard: DataShard<'_>,
@@ -101,129 +117,52 @@ pub fn train(
     writer: Option<&OutputWriter>,
 ) -> anyhow::Result<TrainResult> {
     let mut source = InMemorySource::new(shard, cfg.chunk_rows);
-    train_stream(cfg, &mut source, initial, writer)
+    #[allow(deprecated)]
+    let res = train_stream(cfg, &mut source, initial, writer);
+    res
 }
 
-/// Train over any [`DataSource`] — the out-of-core entry point. Each
-/// epoch resets the source and folds its chunks into one Eq. 6
-/// accumulator; file-backed sources keep data memory at
-/// O(chunk_rows * dim) regardless of total rows.
+/// Train over any [`DataSource`] — the out-of-core entry point.
+///
+/// Legacy entry point: a delegating shim over the session API, kept for
+/// source compatibility. New code should use
+/// [`crate::session::Som::builder`] and `fit_source`.
+#[deprecated(
+    since = "0.2.0",
+    note = "use Som::builder().config(..).build()?.fit_source(source) — the \
+            session API adds stepping, inference, and checkpoint/resume"
+)]
 pub fn train_stream(
     cfg: &TrainConfig,
     source: &mut dyn DataSource,
     initial: Option<Codebook>,
     writer: Option<&OutputWriter>,
 ) -> anyhow::Result<TrainResult> {
-    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
-    let grid = cfg.grid();
-    let dim = source.dim();
-    let rows = source.rows();
-    anyhow::ensure!(rows > 0, "no data rows");
-
-    let mut codebook = match initial {
-        Some(cb) => {
-            anyhow::ensure!(
-                cb.nodes == grid.node_count() && cb.dim == dim,
-                "initial codebook shape {}x{} does not match map {}x{} / dim {dim}",
-                cb.nodes,
-                cb.dim,
-                grid.node_count(),
-                grid.rows * grid.cols
-            );
-            cb
-        }
-        // Random init never touches the data, so only data-dependent
-        // schemes consult `resident()` — which lets zero-copy sources
-        // account a full-file exposure there without charging bounded
-        // random-init runs for it.
-        None if cfg.initialization
-            == crate::coordinator::config::Initialization::Random =>
-        {
-            init_codebook(cfg, &grid, dim)
-        }
-        None => match source.resident() {
-            Some(shard) => init_codebook_with_data(cfg, &grid, shard)?,
-            None => {
-                anyhow::bail!(
-                    "PCA initialization needs the data resident in memory; \
-                     streamed sources support only --initialization random \
-                     (or an explicit -c codebook)"
-                );
-            }
-        },
-    };
-
-    let radius_sched = cfg.radius_schedule(&grid);
-    let scale_sched = cfg.scale_schedule();
-    let mut kernel = make_kernel(cfg)?;
-
-    let t0 = Instant::now();
-    let mut epochs = Vec::with_capacity(cfg.epochs);
-    let mut bmus: Vec<u32> = Vec::new();
-
-    for epoch in 0..cfg.epochs {
-        let te = Instant::now();
-        let radius = radius_sched.at(epoch);
-        let scale = scale_sched.at(epoch);
-
-        kernel.epoch_begin(&codebook)?;
-        source.reset()?;
-        let mut accum = EpochAccum::zeros(grid.node_count(), dim, 0);
-        let mut epoch_bmus: Vec<u32> = Vec::with_capacity(rows);
-        while let Some(chunk) = source.next_chunk()? {
-            let part = kernel.epoch_accumulate(
-                chunk,
-                &codebook,
-                &grid,
-                cfg.neighborhood,
-                radius,
-                scale,
-            )?;
-            epoch_bmus.extend_from_slice(&part.bmus);
-            accum.merge(&part);
-        }
-        anyhow::ensure!(
-            epoch_bmus.len() == rows,
-            "data source produced {} rows this epoch, expected {rows}",
-            epoch_bmus.len()
-        );
-        codebook.apply_batch_update(&accum.num, &accum.den);
-        bmus = epoch_bmus;
-
-        epochs.push(EpochStats {
-            epoch,
-            radius,
-            scale,
-            qe: accum.qe_sum / rows as f64,
-            duration: te.elapsed(),
-        });
-
-        if let Some(w) = writer {
-            if cfg.snapshot > crate::io::output::SnapshotLevel::None {
-                let u = umatrix::umatrix(&grid, &codebook, cfg.threads);
-                w.write_snapshot(cfg.snapshot, epoch, &grid, &codebook, &bmus, &u)?;
-            }
-        }
+    // Preserve the historical contract: this function never dispatched
+    // to the cluster runner, whatever cfg.ranks says.
+    let mut single = cfg.clone();
+    single.ranks = 1;
+    let mut builder = crate::session::Som::builder().config(single);
+    if let Some(cb) = initial {
+        builder = builder.initial_codebook(cb);
     }
-
-    let u = umatrix::umatrix(&grid, &codebook, cfg.threads);
+    let mut session = builder.build()?;
+    let result = session.fit_source_with(source, &mut |s| match writer {
+        Some(w) => s.write_epoch_snapshot(w),
+        None => Ok(()),
+    })?;
     if let Some(w) = writer {
-        w.write_final(&grid, &codebook, &bmus, &u)?;
+        w.write_final(&cfg.grid(), &result.codebook, &result.bmus, &result.umatrix)?;
     }
-
-    Ok(TrainResult {
-        codebook,
-        bmus,
-        umatrix: u,
-        epochs,
-        total: t0.elapsed(),
-    })
+    Ok(result)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::DataInput;
     use crate::data;
+    use crate::session::Som;
     use crate::som::{GridType, MapType, Neighborhood};
 
     fn blob_config() -> TrainConfig {
@@ -237,18 +176,16 @@ mod tests {
         }
     }
 
+    fn fit(cfg: &TrainConfig, shard: DataShard<'_>) -> anyhow::Result<TrainResult> {
+        Som::builder().config(cfg.clone()).build()?.fit_shard(shard)
+    }
+
     #[test]
     fn qe_decreases_on_blobs() {
         let mut rng = Rng::new(1);
         let (data, _) = data::gaussian_blobs(160, 6, 4, 0.1, &mut rng);
         let cfg = blob_config();
-        let res = train(
-            &cfg,
-            DataShard::Dense { data: &data, dim: 6 },
-            None,
-            None,
-        )
-        .unwrap();
+        let res = fit(&cfg, DataShard::Dense { data: &data, dim: 6 }).unwrap();
         assert_eq!(res.epochs.len(), 8);
         let first = res.epochs.first().unwrap().qe;
         let last = res.epochs.last().unwrap().qe;
@@ -266,10 +203,26 @@ mod tests {
         let (data, _) = data::gaussian_blobs(60, 4, 3, 0.1, &mut rng);
         let cfg = blob_config();
         let shard = DataShard::Dense { data: &data, dim: 4 };
-        let a = train(&cfg, shard, None, None).unwrap();
-        let b = train(&cfg, shard, None, None).unwrap();
+        let a = fit(&cfg, shard).unwrap();
+        let b = fit(&cfg, shard).unwrap();
         assert_eq!(a.codebook.weights, b.codebook.weights);
         assert_eq!(a.bmus, b.bmus);
+    }
+
+    /// The deprecated `train` shim must stay a faithful delegate of the
+    /// session path.
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_train_shim_matches_session() {
+        let mut rng = Rng::new(21);
+        let (data, _) = data::gaussian_blobs(60, 4, 3, 0.1, &mut rng);
+        let cfg = blob_config();
+        let shard = DataShard::Dense { data: &data, dim: 4 };
+        let via_session = fit(&cfg, shard).unwrap();
+        let via_shim = train(&cfg, shard, None, None).unwrap();
+        assert_eq!(via_shim.codebook.weights, via_session.codebook.weights);
+        assert_eq!(via_shim.bmus, via_session.bmus);
+        assert_eq!(via_shim.epochs.len(), via_session.epochs.len());
     }
 
     #[test]
@@ -285,7 +238,7 @@ mod tests {
             radius0: Some(3.0),
             ..Default::default()
         };
-        let res = train(&cfg, DataShard::Sparse(m.view()), None, None).unwrap();
+        let res = fit(&cfg, DataShard::Sparse(m.view())).unwrap();
         let first = res.epochs.first().unwrap().qe;
         let last = res.epochs.last().unwrap().qe;
         assert!(last < first, "{first} -> {last}");
@@ -313,13 +266,8 @@ mod tests {
                         radius0: Some(2.5),
                         ..Default::default()
                     };
-                    let res = train(
-                        &cfg,
-                        DataShard::Dense { data: &data, dim: 3 },
-                        None,
-                        None,
-                    )
-                    .unwrap();
+                    let res =
+                        fit(&cfg, DataShard::Dense { data: &data, dim: 3 }).unwrap();
                     assert!(res.final_qe().is_finite());
                 }
             }
@@ -331,13 +279,13 @@ mod tests {
         let mut rng = Rng::new(6);
         let (data, _) = data::gaussian_blobs(90, 5, 3, 0.15, &mut rng);
         let shard = DataShard::Dense { data: &data, dim: 5 };
-        let whole = train(&blob_config(), shard, None, None).unwrap();
+        let whole = fit(&blob_config(), shard).unwrap();
         for chunk_rows in [1usize, 7, 90, 1000] {
             let cfg = TrainConfig {
                 chunk_rows,
                 ..blob_config()
             };
-            let chunked = train(&cfg, shard, None, None).unwrap();
+            let chunked = fit(&cfg, shard).unwrap();
             assert_eq!(chunked.bmus, whole.bmus, "chunk_rows={chunk_rows}");
             assert!(
                 (chunked.final_qe() - whole.final_qe()).abs() < 1e-4,
@@ -361,13 +309,13 @@ mod tests {
             radius0: Some(3.0),
             ..Default::default()
         };
-        let whole = train(&base, DataShard::Sparse(m.view()), None, None).unwrap();
+        let whole = fit(&base, DataShard::Sparse(m.view())).unwrap();
         for chunk_rows in [1usize, 11, 70] {
             let cfg = TrainConfig {
                 chunk_rows,
                 ..base.clone()
             };
-            let chunked = train(&cfg, DataShard::Sparse(m.view()), None, None).unwrap();
+            let chunked = fit(&cfg, DataShard::Sparse(m.view())).unwrap();
             assert_eq!(chunked.bmus, whole.bmus, "chunk_rows={chunk_rows}");
             assert!(
                 (chunked.final_qe() - whole.final_qe()).abs() < 1e-4,
@@ -396,22 +344,22 @@ mod tests {
             radius0: Some(2.0),
             ..Default::default()
         };
-        let err = train_stream(&cfg, &mut src, None, None);
+        let err = Som::builder()
+            .config(cfg)
+            .build()
+            .unwrap()
+            .fit_source(&mut src);
         assert!(err.is_err());
         assert!(format!("{:#}", err.unwrap_err()).contains("resident"));
     }
 
     #[test]
     fn initial_codebook_shape_checked() {
-        let cfg = blob_config();
         let bad = Codebook::zeros(4, 6); // wrong node count
-        let data = vec![0.0f32; 12];
-        let err = train(
-            &cfg,
-            DataShard::Dense { data: &data, dim: 6 },
-            Some(bad),
-            None,
-        );
+        let err = Som::builder()
+            .config(blob_config())
+            .initial_codebook(bad)
+            .build();
         assert!(err.is_err());
     }
 
@@ -430,13 +378,10 @@ mod tests {
             threads: 1,
             ..Default::default()
         };
-        let res = train(
-            &cfg,
-            DataShard::Dense { data: &data, dim: 3 },
-            None,
-            None,
-        )
-        .unwrap();
+        let mut session = Som::builder().config(cfg).build().unwrap();
+        let res = session
+            .fit(DataInput::BorrowedF32 { data: &data, dim: 3 })
+            .unwrap();
         assert_eq!(res.epochs[0].radius, 2.0);
         assert_eq!(res.epochs[3].radius, 1.0);
         assert_eq!(res.epochs[0].scale, 1.0);

@@ -1,0 +1,487 @@
+//! Versioned training checkpoints — the `SOMC` container behind
+//! [`crate::session::SomSession::save_checkpoint`] and
+//! [`crate::session::Som::resume`].
+//!
+//! A checkpoint captures everything a later process needs to continue a
+//! run **bit-identically**: the schedule-relevant configuration (map
+//! geometry, neighborhood, cooling endpoints, kernel, seed, total
+//! epochs), the epoch cursor (how many epochs have completed), and the
+//! exact f32 codebook weights. Runtime knobs (threads, ranks,
+//! `--chunk-rows`, prefetch, I/O backend, snapshots) are deliberately
+//! *not* stored — they do not affect the trained map, so a run saved on
+//! a laptop can resume on a 64-core box with different streaming
+//! settings. BMUs are not stored either: the remaining epochs recompute
+//! them, and a fully-trained checkpoint re-projects them from the data.
+//!
+//! ## Layout (all integers little-endian, same conventions as `SOMB`)
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic  b"SOMC"
+//!      4     4  version (u32, currently 1)
+//!      8     4  reserved (u32, must be 0)
+//!     12     4  kernel (u32: 0 dense, 1 accel, 2 sparse, 3 hybrid)
+//!     16     4  grid type (u32: 0 square, 1 hexagonal)
+//!     20     4  map type (u32: 0 planar, 1 toroid)
+//!     24     4  neighborhood kind (u32: 0 gaussian, 1 bubble)
+//!     28     4  compact support (u32: 0 | 1)
+//!     32     4  radius cooling (u32: 0 linear, 1 exponential)
+//!     36     4  scale cooling (u32: 0 linear, 1 exponential)
+//!     40     4  has_radius0 (u32: 0 | 1)
+//!     44     4  radius0 (f32 bits; meaningful when has_radius0 = 1)
+//!     48     4  radiusN (f32 bits)
+//!     52     4  scale0 (f32 bits)
+//!     56     4  scaleN (f32 bits)
+//!     60     8  map rows (u64)
+//!     68     8  map cols (u64)
+//!     76     8  total epochs (u64)
+//!     84     8  epoch cursor (u64; completed epochs, <= total)
+//!     92     8  dim (u64)
+//!    100     8  seed (u64)
+//!    108     8  payload FNV-1a 64 checksum (u64)
+//!    116     …  payload: rows * cols * dim f32 weights, row-major
+//! ```
+//!
+//! Corruption handling mirrors `SOMB` and goes one step further: `load`
+//! validates magic, version, the reserved field, every enum range, the
+//! cursor bound, and the **exact** file length — and because any f32 bit
+//! pattern is a "valid" weight (a length check alone cannot catch bit
+//! rot in the payload), the header carries an FNV-1a checksum of the
+//! payload bytes that `load` re-verifies. Saves are atomic: the file is
+//! written to `<path>.tmp` and renamed into place, so a crash mid-save
+//! never destroys the previous checkpoint (the spot-instance contract).
+
+use std::fs::File;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::coordinator::config::TrainConfig;
+use crate::kernels::KernelType;
+use crate::som::{Codebook, Cooling, GridType, MapType, Neighborhood, NeighborhoodKind};
+
+/// `b"SOMC"` — SOM Checkpoint.
+pub const MAGIC: [u8; 4] = *b"SOMC";
+/// Current checkpoint version.
+pub const VERSION: u32 = 1;
+/// Header length in bytes; the weight payload starts here.
+pub const HEADER_LEN: u64 = 116;
+
+/// A loaded checkpoint: the reconstructed schedule configuration, the
+/// epoch cursor, and the codebook — exactly what
+/// [`crate::session::Som::resume`] needs to rebuild a session.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// Schedule-relevant configuration; runtime knobs (threads, ranks,
+    /// chunking, I/O backend) are at their defaults and may be
+    /// overridden by the resuming process.
+    pub config: TrainConfig,
+    /// Completed epochs (the next epoch to run).
+    pub epoch: usize,
+    /// The exact codebook weights at the cursor.
+    pub codebook: Codebook,
+}
+
+/// FNV-1a 64 over a byte stream (the payload checksum).
+fn fnv1a(h: u64, bytes: &[u8]) -> u64 {
+    let mut h = h;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// FNV-1a offset basis.
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+fn kernel_code(k: KernelType) -> u32 {
+    match k {
+        KernelType::DenseCpu => 0,
+        KernelType::Accel => 1,
+        KernelType::SparseCpu => 2,
+        KernelType::Hybrid => 3,
+    }
+}
+
+fn cooling_code(c: Cooling) -> u32 {
+    match c {
+        Cooling::Linear => 0,
+        Cooling::Exponential => 1,
+    }
+}
+
+/// Checksum of the codebook payload as it is laid out on disk.
+fn payload_checksum(weights: &[f32]) -> u64 {
+    let mut h = FNV_OFFSET;
+    let mut block = [0u8; 8192];
+    for chunk in weights.chunks(block.len() / 4) {
+        for (i, v) in chunk.iter().enumerate() {
+            block[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        h = fnv1a(h, &block[..chunk.len() * 4]);
+    }
+    h
+}
+
+fn encode_header(cfg: &TrainConfig, epoch: usize, cb: &Codebook) -> [u8; HEADER_LEN as usize] {
+    let mut h = [0u8; HEADER_LEN as usize];
+    h[0..4].copy_from_slice(&MAGIC);
+    h[4..8].copy_from_slice(&VERSION.to_le_bytes());
+    // h[8..12] reserved, zero.
+    h[12..16].copy_from_slice(&kernel_code(cfg.kernel).to_le_bytes());
+    let grid_type: u32 = match cfg.grid_type {
+        GridType::Square => 0,
+        GridType::Hexagonal => 1,
+    };
+    h[16..20].copy_from_slice(&grid_type.to_le_bytes());
+    let map_type: u32 = match cfg.map_type {
+        MapType::Planar => 0,
+        MapType::Toroid => 1,
+    };
+    h[20..24].copy_from_slice(&map_type.to_le_bytes());
+    let nb_kind: u32 = match cfg.neighborhood.kind {
+        NeighborhoodKind::Gaussian => 0,
+        NeighborhoodKind::Bubble => 1,
+    };
+    h[24..28].copy_from_slice(&nb_kind.to_le_bytes());
+    h[28..32].copy_from_slice(&u32::from(cfg.neighborhood.compact_support).to_le_bytes());
+    h[32..36].copy_from_slice(&cooling_code(cfg.radius_cooling).to_le_bytes());
+    h[36..40].copy_from_slice(&cooling_code(cfg.scale_cooling).to_le_bytes());
+    h[40..44].copy_from_slice(&u32::from(cfg.radius0.is_some()).to_le_bytes());
+    h[44..48].copy_from_slice(&cfg.radius0.unwrap_or(0.0).to_le_bytes());
+    h[48..52].copy_from_slice(&cfg.radius_n.to_le_bytes());
+    h[52..56].copy_from_slice(&cfg.scale0.to_le_bytes());
+    h[56..60].copy_from_slice(&cfg.scale_n.to_le_bytes());
+    h[60..68].copy_from_slice(&(cfg.rows as u64).to_le_bytes());
+    h[68..76].copy_from_slice(&(cfg.cols as u64).to_le_bytes());
+    h[76..84].copy_from_slice(&(cfg.epochs as u64).to_le_bytes());
+    h[84..92].copy_from_slice(&(epoch as u64).to_le_bytes());
+    h[92..100].copy_from_slice(&(cb.dim as u64).to_le_bytes());
+    h[100..108].copy_from_slice(&cfg.seed.to_le_bytes());
+    h[108..116].copy_from_slice(&payload_checksum(&cb.weights).to_le_bytes());
+    h
+}
+
+/// Write a checkpoint atomically: encode to `<path>.tmp`, then rename
+/// over `path`, so an interrupted save never corrupts an existing file.
+pub fn save<P: AsRef<Path>>(
+    path: P,
+    cfg: &TrainConfig,
+    epoch: usize,
+    codebook: &Codebook,
+) -> anyhow::Result<()> {
+    let path = path.as_ref();
+    anyhow::ensure!(
+        codebook.nodes == cfg.rows * cfg.cols && codebook.weights.len() == codebook.nodes * codebook.dim,
+        "checkpoint: codebook shape {}x{} does not match the {}x{} map",
+        codebook.nodes,
+        codebook.dim,
+        cfg.rows,
+        cfg.cols
+    );
+    anyhow::ensure!(
+        epoch <= cfg.epochs,
+        "checkpoint: epoch cursor {epoch} beyond total epochs {}",
+        cfg.epochs
+    );
+    // Append ".tmp" to the FULL file name (with_extension would replace
+    // the final extension, colliding distinct checkpoints that share a
+    // stem — e.g. "model.a" and "model.b" would both stage through
+    // "model.somc.tmp" and corrupt each other under concurrency).
+    let tmp = {
+        let mut os = path.as_os_str().to_os_string();
+        os.push(".tmp");
+        std::path::PathBuf::from(os)
+    };
+    {
+        let mut w = std::io::BufWriter::new(File::create(&tmp)?);
+        w.write_all(&encode_header(cfg, epoch, codebook))?;
+        let mut block = [0u8; 8192];
+        for chunk in codebook.weights.chunks(block.len() / 4) {
+            for (i, v) in chunk.iter().enumerate() {
+                block[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+            }
+            w.write_all(&block[..chunk.len() * 4])?;
+        }
+        w.flush()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+fn decode_u32(h: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(h[off..off + 4].try_into().unwrap())
+}
+
+fn decode_u64(h: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(h[off..off + 8].try_into().unwrap())
+}
+
+fn decode_f32(h: &[u8], off: usize) -> f32 {
+    f32::from_le_bytes(h[off..off + 4].try_into().unwrap())
+}
+
+/// Read + validate a `SOMC` checkpoint: magic, version, reserved field,
+/// enum ranges, cursor bound, exact file length, and the payload
+/// checksum. Any failure is an error naming the file — a truncated or
+/// bit-rotted checkpoint is rejected before a resumed run starts.
+pub fn load<P: AsRef<Path>>(path: P) -> anyhow::Result<Checkpoint> {
+    let path = path.as_ref();
+    let mut f =
+        File::open(path).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    let len = f.metadata()?.len();
+    anyhow::ensure!(
+        len >= HEADER_LEN,
+        "{}: not a somoclu checkpoint (shorter than the {HEADER_LEN}-byte header)",
+        path.display()
+    );
+    let mut h = [0u8; HEADER_LEN as usize];
+    f.read_exact(&mut h)?;
+    anyhow::ensure!(
+        h[0..4] == MAGIC,
+        "{}: bad magic (not a somoclu checkpoint)",
+        path.display()
+    );
+    let version = decode_u32(&h, 4);
+    anyhow::ensure!(
+        version == VERSION,
+        "{}: unsupported checkpoint version {version} (this build reads {VERSION})",
+        path.display()
+    );
+    anyhow::ensure!(
+        decode_u32(&h, 8) == 0,
+        "{}: nonzero reserved header field (corrupt header?)",
+        path.display()
+    );
+    let kernel = match decode_u32(&h, 12) {
+        0 => KernelType::DenseCpu,
+        1 => KernelType::Accel,
+        2 => KernelType::SparseCpu,
+        3 => KernelType::Hybrid,
+        other => anyhow::bail!("{}: unknown kernel code {other}", path.display()),
+    };
+    let grid_type = match decode_u32(&h, 16) {
+        0 => GridType::Square,
+        1 => GridType::Hexagonal,
+        other => anyhow::bail!("{}: unknown grid type code {other}", path.display()),
+    };
+    let map_type = match decode_u32(&h, 20) {
+        0 => MapType::Planar,
+        1 => MapType::Toroid,
+        other => anyhow::bail!("{}: unknown map type code {other}", path.display()),
+    };
+    let nb_kind = match decode_u32(&h, 24) {
+        0 => NeighborhoodKind::Gaussian,
+        1 => NeighborhoodKind::Bubble,
+        other => anyhow::bail!("{}: unknown neighborhood code {other}", path.display()),
+    };
+    let compact = match decode_u32(&h, 28) {
+        0 => false,
+        1 => true,
+        other => anyhow::bail!("{}: bad compact-support flag {other}", path.display()),
+    };
+    let cooling = |off: usize| -> anyhow::Result<Cooling> {
+        Ok(match decode_u32(&h, off) {
+            0 => Cooling::Linear,
+            1 => Cooling::Exponential,
+            other => anyhow::bail!("{}: unknown cooling code {other}", path.display()),
+        })
+    };
+    let radius_cooling = cooling(32)?;
+    let scale_cooling = cooling(36)?;
+    let radius0 = match decode_u32(&h, 40) {
+        0 => None,
+        1 => Some(decode_f32(&h, 44)),
+        other => anyhow::bail!("{}: bad radius0 flag {other}", path.display()),
+    };
+    let radius_n = decode_f32(&h, 48);
+    let scale0 = decode_f32(&h, 52);
+    let scale_n = decode_f32(&h, 56);
+    let rows = usize::try_from(decode_u64(&h, 60))?;
+    let cols = usize::try_from(decode_u64(&h, 68))?;
+    let epochs = usize::try_from(decode_u64(&h, 76))?;
+    let epoch = usize::try_from(decode_u64(&h, 84))?;
+    let dim = usize::try_from(decode_u64(&h, 92))?;
+    let seed = decode_u64(&h, 100);
+    let want_sum = decode_u64(&h, 108);
+    anyhow::ensure!(
+        rows > 0 && cols > 0 && dim > 0,
+        "{}: header declares an empty map or zero dims",
+        path.display()
+    );
+    anyhow::ensure!(
+        epochs > 0 && epoch <= epochs,
+        "{}: epoch cursor {epoch} out of range (total {epochs})",
+        path.display()
+    );
+    // Exact-length check in u128 so a crafted header cannot wrap the
+    // payload product (same guard as the SOMB reader).
+    let nodes = (rows as u128) * (cols as u128);
+    let want_len = HEADER_LEN as u128 + 4 * nodes * dim as u128;
+    anyhow::ensure!(
+        len as u128 == want_len,
+        "{}: file is {len} bytes but the header declares {want_len} \
+         (truncated or corrupt copy)",
+        path.display()
+    );
+
+    // Payload: decode through a fixed block, checksumming as we go.
+    let count = rows * cols * dim;
+    let mut weights = Vec::with_capacity(count);
+    let mut sum = FNV_OFFSET;
+    let mut block = [0u8; 8192];
+    let mut left = count;
+    while left > 0 {
+        let take = left.min(block.len() / 4);
+        f.read_exact(&mut block[..take * 4])?;
+        sum = fnv1a(sum, &block[..take * 4]);
+        for i in 0..take {
+            weights.push(f32::from_le_bytes(block[i * 4..i * 4 + 4].try_into().unwrap()));
+        }
+        left -= take;
+    }
+    anyhow::ensure!(
+        sum == want_sum,
+        "{}: payload checksum mismatch (corrupt codebook weights)",
+        path.display()
+    );
+
+    let neighborhood = match nb_kind {
+        NeighborhoodKind::Gaussian => Neighborhood::gaussian(compact),
+        NeighborhoodKind::Bubble => Neighborhood::bubble(),
+    };
+    let config = TrainConfig {
+        rows,
+        cols,
+        epochs,
+        grid_type,
+        map_type,
+        neighborhood,
+        radius0,
+        radius_n,
+        radius_cooling,
+        scale0,
+        scale_n,
+        scale_cooling,
+        kernel,
+        seed,
+        ..TrainConfig::default()
+    };
+    config.validate().map_err(|e| {
+        anyhow::anyhow!("{}: checkpoint config invalid: {e}", path.display())
+    })?;
+    Ok(Checkpoint {
+        config,
+        epoch,
+        codebook: Codebook {
+            nodes: rows * cols,
+            dim,
+            weights,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("somoclu_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample() -> (TrainConfig, Codebook) {
+        let cfg = TrainConfig {
+            rows: 4,
+            cols: 5,
+            epochs: 9,
+            radius0: Some(2.5),
+            seed: 42,
+            kernel: KernelType::SparseCpu,
+            grid_type: GridType::Hexagonal,
+            map_type: MapType::Toroid,
+            neighborhood: Neighborhood::gaussian(true),
+            radius_cooling: Cooling::Exponential,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(9);
+        let cb = Codebook::random_init(20, 3, &mut rng);
+        (cfg, cb)
+    }
+
+    #[test]
+    fn round_trip_is_bit_exact() {
+        let (cfg, cb) = sample();
+        let path = tmp("roundtrip.somc");
+        save(&path, &cfg, 4, &cb).unwrap();
+        let ck = load(&path).unwrap();
+        assert_eq!(ck.epoch, 4);
+        assert_eq!(ck.codebook.nodes, 20);
+        assert_eq!(ck.codebook.dim, 3);
+        // Bit-identical weights, not approximately equal.
+        let a: Vec<u32> = cb.weights.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = ck.codebook.weights.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b);
+        let c = &ck.config;
+        assert_eq!((c.rows, c.cols, c.epochs), (4, 5, 9));
+        assert_eq!(c.kernel, KernelType::SparseCpu);
+        assert_eq!(c.grid_type, GridType::Hexagonal);
+        assert_eq!(c.map_type, MapType::Toroid);
+        assert_eq!(c.radius_cooling, Cooling::Exponential);
+        assert_eq!(c.radius0, Some(2.5));
+        assert_eq!(c.seed, 42);
+        assert!(c.neighborhood.compact_support);
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let (cfg, cb) = sample();
+        let path = tmp("trunc.somc");
+        save(&path, &cfg, 2, &cb).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let (cfg, cb) = sample();
+        let path = tmp("version.somc");
+        save(&path, &cfg, 2, &cb).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4..8].copy_from_slice(&99u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("version"), "{err:#}");
+    }
+
+    #[test]
+    fn flipped_payload_bit_rejected() {
+        let (cfg, cb) = sample();
+        let path = tmp("bitrot.somc");
+        save(&path, &cfg, 2, &cb).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let off = HEADER_LEN as usize + 7;
+        bytes[off] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+    }
+
+    #[test]
+    fn bad_magic_and_cursor_rejected() {
+        let (cfg, cb) = sample();
+        let path = tmp("magic.somc");
+        save(&path, &cfg, 2, &cb).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] = b'X';
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load(&path).is_err());
+
+        // Cursor beyond total epochs is refused at save time.
+        assert!(save(tmp("cursor.somc"), &cfg, cfg.epochs + 1, &cb).is_err());
+    }
+}

@@ -36,6 +36,14 @@
 //! gauge** (`memtrack::data_map_resize`), keeping the bounded-memory
 //! assertions (`stream_bounded.rs`) meaningful on the zero-copy path.
 //!
+//! Cold-cache behavior: the whole mapping is advised `MADV_SEQUENTIAL`
+//! at map time, and every `next_chunk` additionally issues
+//! `MADV_WILLNEED` on the *next* chunk window before handing out the
+//! current one — the mmap analog of `--prefetch` (which is refused in
+//! mmap mode): the pager streams the coming window in from disk while
+//! the kernel computes. Both hints are advisory; failures are ignored
+//! and never affect results.
+//!
 //! Cluster use: [`MappedContainer::open`] maps once; every rank's
 //! `dense_shard`/`sparse_shard` clones the `Arc` and serves its own
 //! disjoint row window from the same mapping — one map, zero fds held
@@ -80,6 +88,7 @@ mod real {
         pub const PROT_READ: c_int = 1;
         pub const MAP_SHARED: c_int = 1;
         pub const MADV_SEQUENTIAL: c_int = 2;
+        pub const MADV_WILLNEED: c_int = 3;
 
         extern "C" {
             // off_t is i64 on every 64-bit unix; the module is gated to
@@ -131,6 +140,34 @@ mod real {
             // Purely advisory — a failure changes nothing correctness-wise.
             unsafe { sys::madvise(ptr, len, sys::MADV_SEQUENTIAL) };
             Ok(Mapping { ptr, len })
+        }
+
+        /// Advise the pager to fault in `[off, off + bytes)` ahead of
+        /// use (`MADV_WILLNEED`) — the mmap answer to `--prefetch`: the
+        /// next chunk window starts paging in from disk while the kernel
+        /// computes on the current one, which matters on cold caches.
+        /// Purely advisory and deliberately infallible: the offset is
+        /// aligned down to a 16 KiB boundary (a multiple of every page
+        /// size in the wild, so the address stays page-aligned), the
+        /// range is clamped to the mapping, and any errno is ignored —
+        /// a failed hint changes nothing correctness-wise.
+        fn advise_willneed(&self, off: u64, bytes: usize) {
+            const ALIGN: usize = 16 * 1024;
+            let Ok(off) = usize::try_from(off) else {
+                return;
+            };
+            if bytes == 0 || off >= self.len {
+                return;
+            }
+            let end = off.saturating_add(bytes).min(self.len);
+            let a_off = off & !(ALIGN - 1);
+            unsafe {
+                sys::madvise(
+                    self.ptr.cast::<u8>().add(a_off).cast(),
+                    end - a_off,
+                    sys::MADV_WILLNEED,
+                );
+            }
         }
 
         /// Borrow `count` values of `T` at byte offset `off`, bounds- and
@@ -296,6 +333,17 @@ mod real {
             memtrack::data_map_resize(self.reported_map, count * 4);
             self.reported_map = count * 4;
             let off = HEADER_LEN + 4 * (global as u64) * (self.dim as u64);
+            // Touch-ahead: ask the pager for the *next* chunk window
+            // before handing out this one, so its pages stream in while
+            // the kernel computes (the mmap `--prefetch` analog).
+            let ahead = chunk_take(self.window_rows, self.cursor, self.chunk_rows);
+            if ahead > 0 {
+                let next_global = self.row_start + self.cursor;
+                self.map.advise_willneed(
+                    HEADER_LEN + 4 * (next_global as u64) * (self.dim as u64),
+                    ahead * self.dim * 4,
+                );
+            }
             let data: &[f32] = self.map.typed(off, count)?;
             Ok(Some(DataShard::Dense {
                 data,
@@ -435,6 +483,36 @@ mod real {
             let map_bytes = (take + 1) * 8 + (b - a) * 8;
             memtrack::data_map_resize(self.reported_map, map_bytes);
             self.reported_map = map_bytes;
+
+            // Touch-ahead for the next chunk window (the mmap
+            // `--prefetch` analog): its indptr run starts where this
+            // one ends (nnz offset `b`); one mapped indptr entry gives
+            // its end, then all three sections get a WILLNEED hint.
+            let ahead = chunk_take(self.window_rows, self.cursor, self.chunk_rows);
+            if ahead > 0 {
+                let next_global = self.row_start + self.cursor;
+                self.map.advise_willneed(
+                    h.indptr_off() + 8 * next_global as u64,
+                    (ahead + 1) * 8,
+                );
+                if let Ok(end) = self
+                    .map
+                    .typed::<u64>(h.indptr_off() + 8 * (next_global + ahead) as u64, 1)
+                {
+                    if let Ok(b2) = usize::try_from(end[0]) {
+                        if b2 > b && b2 <= h.nnz {
+                            self.map.advise_willneed(
+                                h.indices_off() + 4 * b as u64,
+                                (b2 - b) * 4,
+                            );
+                            self.map.advise_willneed(
+                                h.values_off() + 4 * b as u64,
+                                (b2 - b) * 4,
+                            );
+                        }
+                    }
+                }
+            }
 
             let indices: &[u32] = self.map.typed(h.indices_off() + 4 * a as u64, b - a)?;
             for &c in indices {

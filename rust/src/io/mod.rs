@@ -1,11 +1,13 @@
 //! File formats (paper §4.1): plain dense, ESOM-header dense, libsvm
 //! sparse inputs; codebook / BMU / U-matrix outputs with Databionic ESOM
 //! Tools compatibility (`.wts`, `.bm`, `.umx`); the out-of-core
-//! streaming sources (`stream::DataSource`, CLI `--chunk-rows`); and the
+//! streaming sources (`stream::DataSource`, CLI `--chunk-rows`); the
 //! binary container format (`binary`, CLI `somoclu convert`) that
-//! streams with zero per-epoch parsing.
+//! streams with zero per-epoch parsing; and the `SOMC` training
+//! checkpoints (`checkpoint`, CLI `--checkpoint-every` / `--resume`).
 
 pub mod binary;
+pub mod checkpoint;
 pub mod dense;
 pub mod esom;
 // Zero-copy mmap sources (`--io mmap`). Always declared: on targets or

@@ -31,6 +31,10 @@ pub struct DenseCpuKernel {
     /// (see `codebook_key`); chunk calls with any other codebook
     /// recompute per call.
     prepared_for: Option<(usize, usize, usize, u64)>,
+    /// `epoch_begin`-cache hit/miss counters (see
+    /// `TrainingKernel::epoch_cache_stats`).
+    cache_hits: u64,
+    cache_misses: u64,
 }
 
 impl DenseCpuKernel {
@@ -39,6 +43,8 @@ impl DenseCpuKernel {
             threads: threads.max(1),
             w2: Vec::new(),
             prepared_for: None,
+            cache_hits: 0,
+            cache_misses: 0,
         }
     }
 
@@ -330,6 +336,38 @@ impl TrainingKernel for DenseCpuKernel {
         Ok(())
     }
 
+    fn project(
+        &mut self,
+        shard: DataShard<'_>,
+        codebook: &Codebook,
+        _grid: &Grid,
+        _neighborhood: Neighborhood,
+    ) -> anyhow::Result<Vec<u32>> {
+        let DataShard::Dense { data, dim } = shard else {
+            anyhow::bail!("dense kernel needs a dense shard (use -k 2 for sparse data)");
+        };
+        anyhow::ensure!(
+            dim == codebook.dim,
+            "data dim {dim} != codebook dim {}",
+            codebook.dim
+        );
+        let key = crate::kernels::codebook_key(codebook);
+        if self.prepared_for == Some(key) {
+            self.cache_hits += 1;
+        } else {
+            self.cache_misses += 1;
+            self.w2 = codebook.sq_norms();
+            // Same re-key as epoch_accumulate: the cache must describe
+            // the codebook it was built from.
+            self.prepared_for = Some(key);
+        }
+        Ok(self.search_bmus(data, dim, codebook, &self.w2).0)
+    }
+
+    fn epoch_cache_stats(&self) -> Option<(u64, u64)> {
+        Some((self.cache_hits, self.cache_misses))
+    }
+
     fn epoch_accumulate(
         &mut self,
         shard: DataShard<'_>,
@@ -349,8 +387,16 @@ impl TrainingKernel for DenseCpuKernel {
         );
         let rows = data.len() / dim;
 
-        if self.prepared_for != Some(crate::kernels::codebook_key(codebook)) {
+        let key = crate::kernels::codebook_key(codebook);
+        if self.prepared_for == Some(key) {
+            self.cache_hits += 1;
+        } else {
+            self.cache_misses += 1;
             self.w2 = codebook.sq_norms();
+            // Re-key to the codebook the cache now describes: leaving the
+            // old key in place would false-hit a later call that passes
+            // the epoch_begin codebook again (stale norms, wrong BMUs).
+            self.prepared_for = Some(key);
         }
         let (bmus, dists) = self.search_bmus(data, dim, codebook, &self.w2);
         let qe_sum: f64 = dists.iter().map(|d| (*d as f64).sqrt()).sum();

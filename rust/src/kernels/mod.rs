@@ -133,12 +133,14 @@ pub trait TrainingKernel {
 
     /// Hoist per-epoch work (codebook norm caches, transposes, device
     /// uploads) before a chunk loop. The cache is keyed by codebook
-    /// identity (buffer pointer + shape): `epoch_accumulate` uses it only
-    /// when called with the same codebook object, and recomputes per call
-    /// otherwise (the pre-streaming behavior), so mixing begin-scoped and
-    /// begin-less calls is safe. One caveat: mutating the codebook buffer
-    /// *in place* does not change its identity — do what the coordinator
-    /// does and call `epoch_begin` again after every update.
+    /// identity (buffer pointer + shape + content fingerprint):
+    /// `epoch_accumulate` uses it only when called with a matching
+    /// codebook, and otherwise rebuilds **and re-keys** the cache to the
+    /// codebook it was just built from — so mixing begin-scoped and
+    /// begin-less calls (in any interleaving) is safe. One caveat:
+    /// mutating the codebook buffer *in place* does not change its
+    /// pointer — the fingerprint usually catches it, but do what the
+    /// coordinator does and call `epoch_begin` again after every update.
     fn epoch_begin(&mut self, _codebook: &Codebook) -> anyhow::Result<()> {
         Ok(())
     }
@@ -153,6 +155,42 @@ pub trait TrainingKernel {
         radius: f32,
         scale: f32,
     ) -> anyhow::Result<EpochAccum>;
+
+    /// BMUs only — the inference path behind
+    /// [`crate::session::SomSession::project`]: identical arithmetic
+    /// and tie-breaking to `epoch_accumulate`'s search, without
+    /// building the Eq. 6 accumulators. The default delegates to a
+    /// zero-scale accumulation pass (exact, but pays the grouping
+    /// work); kernels with a separable search override it — the dense
+    /// CPU kernel serves projection at pure BMU-search cost.
+    fn project(
+        &mut self,
+        shard: DataShard<'_>,
+        codebook: &Codebook,
+        grid: &Grid,
+        neighborhood: Neighborhood,
+    ) -> anyhow::Result<Vec<u32>> {
+        // Zero scale makes every update weight 0 (and a unit radius
+        // keeps the weight arithmetic finite); the accumulators are
+        // discarded and the BMUs are exactly the training search's. The
+        // caller's real neighborhood is passed through because some
+        // kernels (accel) select their device artifact by its kind.
+        Ok(self
+            .epoch_accumulate(shard, codebook, grid, neighborhood, 1.0, 0.0)?
+            .bmus)
+    }
+
+    /// Lifetime counters for the `epoch_begin` cache: `(hits, misses)`
+    /// across every `epoch_accumulate` call — a *hit* used the hoisted
+    /// cache, a *miss* recomputed per call because the codebook did not
+    /// match the `epoch_begin` key (`codebook_key`). `None` when the
+    /// kernel does not track them (accel/hybrid). This is observability
+    /// for the session regression tests: a `SomSession` driving chunked
+    /// epochs must never miss, while the legacy kernel-per-call pattern
+    /// missed on every chunk.
+    fn epoch_cache_stats(&self) -> Option<(u64, u64)> {
+        None
+    }
 }
 
 #[cfg(test)]

@@ -31,6 +31,10 @@ pub struct SparseCpuKernel {
     /// `epoch_begin` (see `codebook_key`); chunk calls with any other
     /// codebook rebuild per call.
     prepared_for: Option<(usize, usize, usize, u64)>,
+    /// `epoch_begin`-cache hit/miss counters (see
+    /// `TrainingKernel::epoch_cache_stats`).
+    cache_hits: u64,
+    cache_misses: u64,
 }
 
 impl SparseCpuKernel {
@@ -40,6 +44,8 @@ impl SparseCpuKernel {
             wt: Vec::new(),
             w2: Vec::new(),
             prepared_for: None,
+            cache_hits: 0,
+            cache_misses: 0,
         }
     }
 
@@ -79,6 +85,10 @@ impl TrainingKernel for SparseCpuKernel {
         Ok(())
     }
 
+    fn epoch_cache_stats(&self) -> Option<(u64, u64)> {
+        Some((self.cache_hits, self.cache_misses))
+    }
+
     fn epoch_accumulate(
         &mut self,
         shard: DataShard<'_>,
@@ -98,9 +108,17 @@ impl TrainingKernel for SparseCpuKernel {
             codebook.dim
         );
 
-        if self.prepared_for != Some(crate::kernels::codebook_key(codebook)) {
-            // Not the epoch_begin codebook: rebuild the caches per call.
+        let key = crate::kernels::codebook_key(codebook);
+        if self.prepared_for == Some(key) {
+            self.cache_hits += 1;
+        } else {
+            // Not the epoch_begin codebook: rebuild the caches, and
+            // re-key them to the codebook they now describe (leaving the
+            // old key would false-hit a later call with the epoch_begin
+            // codebook against this call's transpose/norms).
+            self.cache_misses += 1;
             self.prepare(codebook);
+            self.prepared_for = Some(key);
         }
         let x2 = m.row_sq_norms();
         let dim = codebook.dim;

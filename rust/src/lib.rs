@@ -12,8 +12,13 @@
 //!   [`runtime`] executes through the PJRT CPU client (the paper's GPU
 //!   kernel, re-thought for the MXU — see DESIGN.md).
 //!
-//! Entry points: [`api::train`] for library use, the `somoclu` binary for
-//! the paper's CLI, and `examples/` for end-to-end drivers.
+//! Entry points: [`session::Som::builder`] for library use (one
+//! builder-driven facade over resident/streamed/cluster training,
+//! incremental epochs, inference, and checkpoint/resume), the `somoclu`
+//! binary for the paper's CLI, and `examples/` for end-to-end drivers.
+//! The pre-session free functions (`api::train`,
+//! `coordinator::train::train_stream`, `cluster::runner::train_cluster`,
+//! `train_cluster_stream`) remain as deprecated delegating shims.
 
 pub mod api;
 pub mod baseline;
@@ -24,6 +29,7 @@ pub mod data;
 pub mod io;
 pub mod kernels;
 pub mod runtime;
+pub mod session;
 pub mod som;
 pub mod sparse;
 pub mod util;

@@ -4,26 +4,29 @@
 //! Simulated cluster: add `--ranks N` (stands in for `mpirun -np N`).
 //! Transcode to the binary fast path: `somoclu convert IN OUT`.
 //!
-//! Binary container inputs (written by `convert`) are auto-detected by
-//! magic; they always stream (chunked by `--chunk-rows`, whole-file
-//! otherwise) with zero per-epoch parsing. `--prefetch` overlaps chunk
-//! I/O with kernel compute. `--ranks N --chunk-rows M` streams per-rank
-//! disjoint shards of one file — no resident copy is ever built.
+//! Every mode drives one [`somoclu::session::SomSession`]: binary
+//! container inputs (written by `convert`) are auto-detected by magic
+//! and always stream; `--prefetch` overlaps chunk I/O with kernel
+//! compute; `--ranks N --chunk-rows M` streams per-rank disjoint shards
+//! of one file. Long runs are interruptible: `--checkpoint-every N`
+//! writes `OUTPUT_PREFIX.epoch<k>.somc` as training progresses, and
+//! `--resume CKPT` picks any of those up and finishes the run
+//! bit-identically to an uninterrupted one.
 
 use std::path::PathBuf;
 
 use somoclu::cli;
-use somoclu::cluster::runner::{train_cluster, train_cluster_stream, ClusterData, StreamInput};
+use somoclu::cluster::runner::{ClusterData, StreamInput};
 use somoclu::coordinator::config::IoMode;
-use somoclu::coordinator::train::{train, train_stream};
 use somoclu::io::binary::{self, BinaryKind};
 use somoclu::io::output::OutputWriter;
 use somoclu::io::{
     read_dense, read_sparse, BinaryDenseFileSource, BinarySparseFileSource,
-    ChunkedDenseFileSource, ChunkedSparseFileSource, DataSource, MmapDenseSource,
-    MmapSparseSource, PrefetchSource, SharedFd,
+    ChunkedDenseFileSource, ChunkedSparseFileSource, DataSource, InMemorySource,
+    MmapDenseSource, MmapSparseSource, PrefetchSource, SharedFd,
 };
 use somoclu::kernels::{DataShard, KernelType};
+use somoclu::session::{Som, SomSession};
 use somoclu::som::Codebook;
 
 fn main() {
@@ -283,36 +286,84 @@ fn chunk_desc(chunk_rows: usize) -> String {
     }
 }
 
-fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
-    let cfg = &opts.config;
-    // Fail config conflicts (e.g. --io mmap with --prefetch) before any
-    // file is opened or mapped.
-    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
-    let writer = OutputWriter::new(&opts.output_prefix);
-
-    // Load the initial codebook if requested (paper -c).
-    let grid = cfg.grid();
-    let initial = match &opts.initial_codebook {
-        Some(path) => {
-            let m = read_dense(path)?;
-            anyhow::ensure!(
-                m.rows == grid.node_count(),
-                "initial codebook has {} rows, map has {} nodes",
-                m.rows,
-                grid.node_count()
+/// Build the session this invocation drives: fresh from the flags, or
+/// resumed from a `SOMC` checkpoint — in which case the checkpoint owns
+/// the map/schedule/kernel settings and only the runtime knobs
+/// (threads, ranks, chunking, prefetch, I/O backend, snapshots, net)
+/// come from the flags.
+fn build_session(opts: &cli::CliOptions) -> anyhow::Result<SomSession> {
+    match &opts.resume {
+        Some(ckpt) => {
+            let mut session = Som::resume(ckpt)?;
+            let rt = &opts.config;
+            session.set_threads(rt.threads);
+            session.set_ranks(rt.ranks);
+            session.set_chunk_rows(rt.chunk_rows);
+            session.set_prefetch(rt.prefetch);
+            session.set_io_mode(rt.io_mode);
+            session.set_snapshot(rt.snapshot);
+            session.set_net(opts.net.clone());
+            eprintln!(
+                "resumed {ckpt}: epoch {}/{} on a {}x{} map ({} epochs to go)",
+                session.epoch(),
+                session.epochs_total(),
+                session.config().rows,
+                session.config().cols,
+                session.remaining_epochs(),
             );
-            Some(Codebook {
-                nodes: m.rows,
-                dim: m.cols,
-                weights: m.data,
-            })
+            Ok(session)
         }
-        None => None,
-    };
-
-    if cfg.ranks > 1 {
-        anyhow::ensure!(initial.is_none(), "--ranks with -c is not supported");
+        None => {
+            // Load the initial codebook if requested (paper -c).
+            let grid = opts.config.grid();
+            let initial = match &opts.initial_codebook {
+                Some(path) => {
+                    let m = read_dense(path)?;
+                    anyhow::ensure!(
+                        m.rows == grid.node_count(),
+                        "initial codebook has {} rows, map has {} nodes",
+                        m.rows,
+                        grid.node_count()
+                    );
+                    Some(Codebook {
+                        nodes: m.rows,
+                        dim: m.cols,
+                        weights: m.data,
+                    })
+                }
+                None => None,
+            };
+            if opts.config.ranks > 1 {
+                anyhow::ensure!(initial.is_none(), "--ranks with -c is not supported");
+            }
+            let mut builder = Som::builder()
+                .config(opts.config.clone())
+                .net(opts.net.clone());
+            if let Some(cb) = initial {
+                builder = builder.initial_codebook(cb);
+            }
+            builder.build()
+        }
     }
+}
+
+fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
+    let writer = OutputWriter::new(&opts.output_prefix);
+    let mut session = build_session(&opts)?;
+    if opts.checkpoint_every > 0 {
+        session.set_checkpoint_every(opts.checkpoint_every, &opts.output_prefix);
+        eprintln!(
+            "checkpointing every {} epochs to {}.epoch<k>.somc",
+            opts.checkpoint_every, opts.output_prefix
+        );
+    }
+
+    // The effective config: resumed sessions take map/schedule/kernel
+    // settings from the checkpoint, so dispatch on the session's view,
+    // not the raw flags. Fail config conflicts (e.g. --io mmap with
+    // --prefetch) before any file is opened or mapped.
+    let cfg = session.config().clone();
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
 
     // Binary containers (written by `somoclu convert`) are detected by
     // magic and always stream — there is no reason to materialize them.
@@ -326,6 +377,10 @@ fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
         cfg.io_mode == IoMode::Buffered || binary_kind.is_some(),
         cfg.io_mode.text_input_error()
     );
+
+    // Interim snapshots (paper -s) for the single-process paths.
+    let mut on_epoch =
+        |s: &SomSession| -> anyhow::Result<()> { s.write_epoch_snapshot(&writer) };
 
     let t0 = std::time::Instant::now();
     let result = if cfg.ranks > 1 && streaming {
@@ -347,7 +402,7 @@ fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
             cfg.io_mode.as_str(),
             if cfg.prefetch { ", prefetched" } else { "" }
         );
-        let (res, report) = train_cluster_stream(cfg, input, opts.net.clone())?;
+        let (res, report) = session.fit_cluster_stream(input)?;
         eprintln!(
             "cluster: {} ranks, {} msgs, {} bytes on the wire",
             report.ranks, report.messages_sent, report.bytes_sent
@@ -365,7 +420,7 @@ fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
             cfg.prefetch,
             cfg.io_mode,
         )?;
-        train_stream(cfg, &mut src, initial, Some(&writer))?
+        session.fit_source_with(&mut src, &mut on_epoch)?
     } else if cfg.kernel == KernelType::SparseCpu {
         let m = read_sparse(&opts.input_file, 0)?;
         eprintln!(
@@ -375,50 +430,45 @@ fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
             m.density() * 100.0
         );
         if cfg.ranks > 1 {
-            let (res, report) =
-                train_cluster(cfg, ClusterData::Sparse(m), opts.net.clone())?;
+            let (res, report) = session.fit_cluster(ClusterData::Sparse(m))?;
             eprintln!(
                 "cluster: {} ranks, {} msgs, {} bytes on the wire",
                 report.ranks, report.messages_sent, report.bytes_sent
             );
             res
         } else {
-            train(cfg, DataShard::Sparse(m.view()), initial, Some(&writer))?
+            let mut src =
+                InMemorySource::new(DataShard::Sparse(m.view()), cfg.chunk_rows);
+            session.fit_source_with(&mut src, &mut on_epoch)?
         }
     } else {
         let m = read_dense(&opts.input_file)?;
         eprintln!("loaded dense input: {} rows x {} dims", m.rows, m.cols);
         if cfg.ranks > 1 {
-            let (res, report) = train_cluster(
-                cfg,
-                ClusterData::Dense {
-                    data: m.data,
-                    dim: m.cols,
-                },
-                opts.net.clone(),
-            )?;
+            let (res, report) = session.fit_cluster(ClusterData::Dense {
+                data: m.data,
+                dim: m.cols,
+            })?;
             eprintln!(
                 "cluster: {} ranks, {} msgs, {} bytes on the wire",
                 report.ranks, report.messages_sent, report.bytes_sent
             );
             res
         } else {
-            train(
-                cfg,
+            let mut src = InMemorySource::new(
                 DataShard::Dense {
                     data: &m.data,
                     dim: m.cols,
                 },
-                initial,
-                Some(&writer),
-            )?
+                cfg.chunk_rows,
+            );
+            session.fit_source_with(&mut src, &mut on_epoch)?
         }
     };
 
-    // Cluster paths do not stream snapshots; write final outputs here.
-    if cfg.ranks > 1 {
-        writer.write_final(&grid, &result.codebook, &result.bmus, &result.umatrix)?;
-    }
+    // One final-output write for every path (cluster runs do not stream
+    // snapshots; single-process runs wrote those per epoch above).
+    writer.write_final(session.grid(), &result.codebook, &result.bmus, &result.umatrix)?;
 
     if opts.verbose {
         for e in &result.epochs {
@@ -428,22 +478,38 @@ fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
             );
         }
     }
-    eprintln!(
-        "trained {} epochs on a {}x{} {:?}/{:?} map with the {} kernel in {:?}; final QE {:.6}",
-        cfg.epochs,
-        cfg.rows,
-        cfg.cols,
-        cfg.grid_type,
-        cfg.map_type,
-        match cfg.kernel {
-            KernelType::DenseCpu => "dense-cpu",
-            KernelType::Accel => "accel-xla",
-            KernelType::SparseCpu => "sparse-cpu",
-            KernelType::Hybrid => "hybrid-xla-cpu",
-        },
-        t0.elapsed(),
-        result.final_qe()
-    );
+    let kernel_name = match cfg.kernel {
+        KernelType::DenseCpu => "dense-cpu",
+        KernelType::Accel => "accel-xla",
+        KernelType::SparseCpu => "sparse-cpu",
+        KernelType::Hybrid => "hybrid-xla-cpu",
+    };
+    if result.epochs.is_empty() {
+        // A --resume of an already-complete run: no epoch trained, the
+        // BMUs were re-projected against the input (final_qe would be
+        // NaN on an empty history — don't alarm scripts with it).
+        eprintln!(
+            "schedule already complete — re-projected {} BMUs on the {}x{} \
+             map with the {} kernel in {:?} (0 new epochs)",
+            result.bmus.len(),
+            cfg.rows,
+            cfg.cols,
+            kernel_name,
+            t0.elapsed(),
+        );
+    } else {
+        eprintln!(
+            "trained {} epochs on a {}x{} {:?}/{:?} map with the {} kernel in {:?}; final QE {:.6}",
+            result.epochs.len(),
+            cfg.rows,
+            cfg.cols,
+            cfg.grid_type,
+            cfg.map_type,
+            kernel_name,
+            t0.elapsed(),
+            result.final_qe()
+        );
+    }
     let map_peak = somoclu::util::memtrack::data_map_peak();
     eprintln!(
         "peak data-buffer memory: {} (heap peak {}{})",

@@ -1,0 +1,1069 @@
+//! The unified `Som` session API — one builder-driven facade over
+//! resident, streamed, and cluster training, incremental epochs, batch
+//! inference, and checkpoint/resume.
+//!
+//! Historically the crate grew four parallel entry points
+//! (`api::train`, `coordinator::train::train_stream`,
+//! `cluster::runner::train_cluster`, `train_cluster_stream`) with
+//! divergent argument lists, no inference path, and no way to stop and
+//! resume a long run. This module replaces all of them with two types:
+//!
+//! * [`SomBuilder`] (from [`Som::builder`]) — one validated construction
+//!   path for every knob: map geometry, schedules, kernel, threads,
+//!   ranks, streaming/chunking, I/O backend, checkpoint policy.
+//! * [`SomSession`] — owns the codebook and the cooling cursor, and
+//!   exposes the whole lifecycle: [`fit`](SomSession::fit) /
+//!   [`fit_source`](SomSession::fit_source) /
+//!   [`fit_cluster`](SomSession::fit_cluster) /
+//!   [`fit_cluster_stream`](SomSession::fit_cluster_stream) for
+//!   training, [`step_epoch`](SomSession::step_epoch) for incremental
+//!   (online) training, [`bmu`](SomSession::bmu) /
+//!   [`project`](SomSession::project) for inference on held-out data,
+//!   and [`save_checkpoint`](SomSession::save_checkpoint) /
+//!   [`Som::resume`] for interruptible long runs.
+//!
+//! The session constructs its kernel **once** and calls the kernel's
+//! `epoch_begin` before each epoch's chunk loop, so per-epoch caches
+//! (codebook norms, sparse transpose, device uploads) are reused across
+//! every chunk of every epoch — unlike the legacy `train_one_epoch`,
+//! which rebuilt the kernel on each call.
+//!
+//! Resume is **bit-exact**: a run checkpointed at epoch `k` and resumed
+//! produces the same codebook bits and BMUs as the same run left
+//! uninterrupted, because a checkpoint stores the exact f32 weights plus
+//! every schedule input, and epoch `e`'s update depends only on those
+//! (radius/scale are evaluated at the *absolute* epoch index). The one
+//! requirement is to keep the same chunking: different `chunk_rows`
+//! reassociate f32 sums (BMUs still match; weights differ in the last
+//! ulps).
+//!
+//! # Example
+//!
+//! ```
+//! use somoclu::api::DataInput;
+//! use somoclu::session::Som;
+//!
+//! let data: Vec<f32> = (0..60).map(|i| (i % 7) as f32 * 0.1).collect();
+//! let mut session = Som::builder()
+//!     .map_size(4, 4)
+//!     .epochs(3)
+//!     .radius0(2.0)
+//!     .threads(2)
+//!     .build()
+//!     .unwrap();
+//! let res = session
+//!     .fit(DataInput::BorrowedF32 { data: &data, dim: 6 })
+//!     .unwrap();
+//! assert_eq!(res.bmus.len(), 10);
+//!
+//! // The trained session serves BMU lookups on held-out vectors.
+//! let (node, dist) = session.bmu(&data[0..6]).unwrap();
+//! assert!(node < 16 && dist.is_finite());
+//! let mapped = session
+//!     .project(DataInput::BorrowedF32 { data: &data, dim: 6 })
+//!     .unwrap();
+//! assert_eq!(mapped.len(), 10);
+//! ```
+//!
+//! Checkpoint and resume (paths elided):
+//!
+//! ```no_run
+//! # use somoclu::api::DataInput;
+//! # use somoclu::session::Som;
+//! # let data: Vec<f32> = vec![0.0; 60];
+//! let mut session = Som::builder().map_size(4, 4).epochs(10).build().unwrap();
+//! for _ in 0..5 {
+//!     session.step_epoch(DataInput::BorrowedF32 { data: &data, dim: 6 }).unwrap();
+//! }
+//! session.save_checkpoint("half.somc").unwrap();
+//! // ... later, possibly in another process:
+//! let mut resumed = Som::resume("half.somc").unwrap();
+//! assert_eq!(resumed.epoch(), 5);
+//! resumed.fit(DataInput::BorrowedF32 { data: &data, dim: 6 }).unwrap();
+//! ```
+
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use crate::api::DataInput;
+use crate::cluster::netmodel::NetModel;
+use crate::cluster::runner::{ClusterData, ClusterReport, StreamInput};
+use crate::coordinator::config::{Initialization, IoMode, TrainConfig};
+use crate::coordinator::train::{
+    init_codebook, init_codebook_with_data, make_kernel, EpochStats, TrainResult,
+};
+use crate::io::output::{OutputWriter, SnapshotLevel};
+use crate::io::stream::{DataSource, InMemorySource};
+use crate::kernels::{DataShard, EpochAccum, KernelType, TrainingKernel};
+use crate::som::{umatrix, Codebook, Cooling, Grid, GridType, MapType, Neighborhood};
+use crate::sparse::Csr;
+
+/// Entry-point namespace for the session API: [`Som::builder`] starts a
+/// fresh configuration, [`Som::resume`] rebuilds a session from a
+/// `SOMC` checkpoint.
+pub struct Som;
+
+impl Som {
+    /// Start building a new training session (all paper defaults).
+    pub fn builder() -> SomBuilder {
+        SomBuilder::default()
+    }
+
+    /// Rebuild a session from a checkpoint written by
+    /// [`SomSession::save_checkpoint`] (or the CLI's
+    /// `--checkpoint-every`): the codebook weights are restored
+    /// bit-exactly and the epoch cursor picks up where the save left
+    /// off, so finishing the run matches an uninterrupted one.
+    ///
+    /// Runtime knobs (threads, ranks, chunking, prefetch, I/O backend)
+    /// are not stored in checkpoints; apply them to the returned session
+    /// with the `set_*` methods before fitting.
+    pub fn resume<P: AsRef<Path>>(path: P) -> anyhow::Result<SomSession> {
+        let ck = crate::io::checkpoint::load(path)?;
+        let mut session = SomBuilder::default().config(ck.config).build()?;
+        session.install_codebook(ck.codebook)?;
+        session.epoch = ck.epoch;
+        Ok(session)
+    }
+}
+
+/// Builder for [`SomSession`] — the single validated construction path
+/// for every training knob. Obtain one from [`Som::builder`]; finish
+/// with [`build`](SomBuilder::build).
+#[derive(Clone)]
+pub struct SomBuilder {
+    cfg: TrainConfig,
+    initial: Option<Codebook>,
+    net: NetModel,
+    checkpoint: Option<(usize, PathBuf)>,
+}
+
+impl Default for SomBuilder {
+    fn default() -> Self {
+        SomBuilder {
+            cfg: TrainConfig::default(),
+            initial: None,
+            net: NetModel::ideal(),
+            checkpoint: None,
+        }
+    }
+}
+
+impl SomBuilder {
+    /// Replace the whole configuration at once (the escape hatch for
+    /// callers that already hold a [`TrainConfig`], e.g. the CLI and the
+    /// legacy shims). Individual setters below override on top.
+    pub fn config(mut self, cfg: TrainConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Map geometry: `rows x cols` nodes (paper `-y` / `-x`).
+    pub fn map_size(mut self, rows: usize, cols: usize) -> Self {
+        self.cfg.rows = rows;
+        self.cfg.cols = cols;
+        self
+    }
+
+    /// Grid layout (paper `-g`): square or hexagonal.
+    pub fn grid_type(mut self, g: GridType) -> Self {
+        self.cfg.grid_type = g;
+        self
+    }
+
+    /// Map topology (paper `-m`): planar or toroid.
+    pub fn map_type(mut self, m: MapType) -> Self {
+        self.cfg.map_type = m;
+        self
+    }
+
+    /// Neighborhood function (paper `-n` / `-p`).
+    pub fn neighborhood(mut self, n: Neighborhood) -> Self {
+        self.cfg.neighborhood = n;
+        self
+    }
+
+    /// Total training epochs (paper `-e`).
+    pub fn epochs(mut self, n: usize) -> Self {
+        self.cfg.epochs = n;
+        self
+    }
+
+    /// Start radius (paper `-r`); default is half the smaller map side.
+    pub fn radius0(mut self, r: f32) -> Self {
+        self.cfg.radius0 = Some(r);
+        self
+    }
+
+    /// Final radius (paper `-R`).
+    pub fn radius_n(mut self, r: f32) -> Self {
+        self.cfg.radius_n = r;
+        self
+    }
+
+    /// Radius cooling strategy (paper `-t`).
+    pub fn radius_cooling(mut self, c: Cooling) -> Self {
+        self.cfg.radius_cooling = c;
+        self
+    }
+
+    /// Start learning rate (paper `-l`).
+    pub fn scale0(mut self, s: f32) -> Self {
+        self.cfg.scale0 = s;
+        self
+    }
+
+    /// Final learning rate (paper `-L`).
+    pub fn scale_n(mut self, s: f32) -> Self {
+        self.cfg.scale_n = s;
+        self
+    }
+
+    /// Learning-rate cooling strategy (paper `-T`).
+    pub fn scale_cooling(mut self, c: Cooling) -> Self {
+        self.cfg.scale_cooling = c;
+        self
+    }
+
+    /// Training kernel (paper `-k`): dense CPU, sparse CPU, accel, hybrid.
+    pub fn kernel(mut self, k: KernelType) -> Self {
+        self.cfg.kernel = k;
+        self
+    }
+
+    /// Worker threads per process/rank (OpenMP analog).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.cfg.threads = n;
+        self
+    }
+
+    /// Simulated MPI ranks; `> 1` routes [`SomSession::fit`] through the
+    /// cluster runner (`mpirun -np N` analog).
+    pub fn ranks(mut self, n: usize) -> Self {
+        self.cfg.ranks = n;
+        self
+    }
+
+    /// Codebook initialization scheme (random or PCA).
+    pub fn initialization(mut self, i: Initialization) -> Self {
+        self.cfg.initialization = i;
+        self
+    }
+
+    /// RNG seed for codebook initialization.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.cfg.seed = s;
+        self
+    }
+
+    /// Stream epochs in windows of `n` data rows (out-of-core training;
+    /// 0 = whole pass per chunk).
+    pub fn chunk_rows(mut self, n: usize) -> Self {
+        self.cfg.chunk_rows = n;
+        self
+    }
+
+    /// Double-buffered chunk read-ahead for file-backed sources.
+    pub fn prefetch(mut self, on: bool) -> Self {
+        self.cfg.prefetch = on;
+        self
+    }
+
+    /// Streaming I/O backend for binary containers (`--io`).
+    pub fn io_mode(mut self, mode: IoMode) -> Self {
+        self.cfg.io_mode = mode;
+        self
+    }
+
+    /// Interconnect model for the simulated cluster (default: ideal).
+    pub fn net(mut self, net: NetModel) -> Self {
+        self.net = net;
+        self
+    }
+
+    /// Start from an explicit codebook instead of random/PCA init (the
+    /// paper's `-c FILE`; also the warm-start retraining path).
+    pub fn initial_codebook(mut self, cb: Codebook) -> Self {
+        self.initial = Some(cb);
+        self
+    }
+
+    /// Save a `SOMC` checkpoint to `<prefix>.epoch<k>.somc` after every
+    /// `every` completed epochs (0 disables). Cluster fits checkpoint at
+    /// the same cadence by training in `every`-epoch windows.
+    pub fn checkpoint_every<P: AsRef<Path>>(mut self, every: usize, prefix: P) -> Self {
+        self.checkpoint = if every > 0 {
+            Some((every, prefix.as_ref().to_path_buf()))
+        } else {
+            None
+        };
+        self
+    }
+
+    /// Validate the configuration and produce a ready [`SomSession`].
+    /// Rejects inconsistent settings (zero-sized map, zero epochs,
+    /// radius growing over time, mmap + prefetch, an initial codebook
+    /// whose node count does not match the map, ...).
+    pub fn build(self) -> anyhow::Result<SomSession> {
+        self.cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+        let grid = self.cfg.grid();
+        let mut session = SomSession {
+            cfg: self.cfg,
+            grid,
+            net: self.net,
+            kernel: None,
+            codebook: None,
+            epoch: 0,
+            history: Vec::new(),
+            last_bmus: Vec::new(),
+            checkpoint: self.checkpoint,
+        };
+        if let Some(cb) = self.initial {
+            session.install_codebook(cb)?;
+        }
+        Ok(session)
+    }
+}
+
+/// Path of the `k`-th numbered checkpoint for an output prefix:
+/// `<prefix>.epoch<k>.somc` (what `--checkpoint-every` writes).
+pub fn checkpoint_path<P: AsRef<Path>>(prefix: P, epoch: usize) -> PathBuf {
+    PathBuf::from(format!("{}.epoch{epoch}.somc", prefix.as_ref().display()))
+}
+
+/// Materialize a [`DataInput`] as a borrowed [`DataShard`], converting
+/// f64 input into `tmp` (the R/MATLAB duplication the Fig. 7 harness
+/// measures — the copy lives for the duration of the borrow).
+fn materialize<'a>(input: DataInput<'a>, tmp: &'a mut Vec<f32>) -> DataShard<'a> {
+    match input {
+        DataInput::BorrowedF32 { data, dim } => DataShard::Dense { data, dim },
+        DataInput::ConvertedF64 { data, dim } => {
+            tmp.clear();
+            tmp.extend(data.iter().map(|&v| v as f32));
+            DataShard::Dense {
+                data: tmp.as_slice(),
+                dim,
+            }
+        }
+        DataInput::Sparse(m) => DataShard::Sparse(m.view()),
+    }
+}
+
+/// Copy a borrowed shard into the owned form the cluster runner shards
+/// across rank threads.
+fn owned_cluster_data(shard: DataShard<'_>) -> ClusterData {
+    match shard {
+        DataShard::Dense { data, dim } => ClusterData::Dense {
+            data: data.to_vec(),
+            dim,
+        },
+        DataShard::Sparse(m) => ClusterData::Sparse(Csr {
+            rows: m.rows,
+            cols: m.cols,
+            indptr: m.indptr.to_vec(),
+            indices: m.indices.to_vec(),
+            values: m.values.to_vec(),
+        }),
+    }
+}
+
+/// An owning training session: the codebook, the cooling cursor, the
+/// kernel (constructed once), and the checkpoint policy. See the
+/// [module docs](self) for the lifecycle and examples.
+pub struct SomSession {
+    cfg: TrainConfig,
+    grid: Grid,
+    net: NetModel,
+    kernel: Option<Box<dyn TrainingKernel>>,
+    codebook: Option<Codebook>,
+    /// Completed epochs (the next epoch to run).
+    epoch: usize,
+    history: Vec<EpochStats>,
+    last_bmus: Vec<u32>,
+    checkpoint: Option<(usize, PathBuf)>,
+}
+
+impl SomSession {
+    // -- accessors ----------------------------------------------------
+
+    /// The session's configuration (read-only; use the `set_*` methods
+    /// for the runtime knobs that may change between resume and fit).
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    /// The map geometry.
+    pub fn grid(&self) -> &Grid {
+        &self.grid
+    }
+
+    /// Completed epochs — the cooling cursor (the next epoch trains at
+    /// this absolute index).
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    /// Total epochs the schedules are defined over (`-e`).
+    pub fn epochs_total(&self) -> usize {
+        self.cfg.epochs
+    }
+
+    /// Epochs left until the schedule completes (0 = fully trained).
+    pub fn remaining_epochs(&self) -> usize {
+        self.cfg.epochs.saturating_sub(self.epoch)
+    }
+
+    /// The owned codebook, once initialized (after the first fit/step,
+    /// an explicit initial codebook, or a resume).
+    pub fn codebook(&self) -> Option<&Codebook> {
+        self.codebook.as_ref()
+    }
+
+    /// BMUs of the most recent training epoch (file row order).
+    pub fn last_bmus(&self) -> &[u32] {
+        &self.last_bmus
+    }
+
+    /// Per-epoch stats accumulated by this session (resumed sessions
+    /// start empty — earlier epochs ran in another process).
+    pub fn history(&self) -> &[EpochStats] {
+        &self.history
+    }
+
+    /// U-matrix of the current codebook, or `None` before initialization.
+    pub fn umatrix(&self) -> Option<Vec<f32>> {
+        self.codebook
+            .as_ref()
+            .map(|cb| umatrix::umatrix(&self.grid, cb, self.cfg.threads))
+    }
+
+    /// `(hits, misses)` of the kernel's `epoch_begin` cache across this
+    /// session's chunk calls, when the kernel tracks them. A session
+    /// driving chunked epochs reports zero misses — the regression guard
+    /// for the kernel-rebuild-per-call bug the legacy `train_one_epoch`
+    /// had.
+    pub fn kernel_cache_stats(&self) -> Option<(u64, u64)> {
+        self.kernel.as_ref().and_then(|k| k.epoch_cache_stats())
+    }
+
+    // -- runtime knobs (resume does not store these) ------------------
+
+    /// Set worker threads per process/rank. Takes effect immediately:
+    /// the kernel bakes its thread count in at construction, so an
+    /// already-built kernel is dropped and rebuilt on the next epoch
+    /// (results are thread-count invariant; this is purely a
+    /// performance knob — note it also resets
+    /// [`kernel_cache_stats`](Self::kernel_cache_stats)).
+    pub fn set_threads(&mut self, n: usize) {
+        self.cfg.threads = n.max(1);
+        self.kernel = None;
+    }
+
+    /// Set simulated cluster ranks (affects the `fit_cluster*` paths and
+    /// [`fit`](Self::fit) dispatch).
+    pub fn set_ranks(&mut self, n: usize) {
+        self.cfg.ranks = n;
+    }
+
+    /// Set the streaming window in data rows (0 = whole pass).
+    pub fn set_chunk_rows(&mut self, n: usize) {
+        self.cfg.chunk_rows = n;
+    }
+
+    /// Enable/disable double-buffered chunk read-ahead.
+    pub fn set_prefetch(&mut self, on: bool) {
+        self.cfg.prefetch = on;
+    }
+
+    /// Set the streaming I/O backend for binary containers.
+    pub fn set_io_mode(&mut self, mode: IoMode) {
+        self.cfg.io_mode = mode;
+    }
+
+    /// Set the interim snapshot level (the CLI `-s` behavior; consumed
+    /// by drivers that write snapshots per epoch).
+    pub fn set_snapshot(&mut self, level: SnapshotLevel) {
+        self.cfg.snapshot = level;
+    }
+
+    /// Set the cluster interconnect model.
+    pub fn set_net(&mut self, net: NetModel) {
+        self.net = net;
+    }
+
+    /// Set (or disable, with `every` = 0) the checkpoint policy; see
+    /// [`SomBuilder::checkpoint_every`].
+    pub fn set_checkpoint_every<P: AsRef<Path>>(&mut self, every: usize, prefix: P) {
+        self.checkpoint = if every > 0 {
+            Some((every, prefix.as_ref().to_path_buf()))
+        } else {
+            None
+        };
+    }
+
+    // -- training -----------------------------------------------------
+
+    /// Train to schedule completion on resident data. With
+    /// `ranks > 1` this dispatches through the simulated cluster
+    /// (copying the input into per-rank shards); otherwise it streams
+    /// the resident buffer in `chunk_rows` windows through the kernel.
+    /// Resuming sessions continue from their cursor.
+    pub fn fit(&mut self, input: DataInput<'_>) -> anyhow::Result<TrainResult> {
+        let mut tmp = Vec::new();
+        let shard = materialize(input, &mut tmp);
+        self.fit_shard(shard)
+    }
+
+    /// [`fit`](Self::fit) for callers already holding a [`DataShard`].
+    pub fn fit_shard(&mut self, shard: DataShard<'_>) -> anyhow::Result<TrainResult> {
+        if self.cfg.ranks > 1 {
+            let data = owned_cluster_data(shard);
+            return self.fit_cluster(data).map(|(res, _)| res);
+        }
+        let mut source = InMemorySource::new(shard, self.cfg.chunk_rows);
+        self.fit_source_with(&mut source, &mut |_| Ok(()))
+    }
+
+    /// Train to schedule completion over any [`DataSource`] — the
+    /// out-of-core path (single process; for multi-rank streaming use
+    /// [`fit_cluster_stream`](Self::fit_cluster_stream)).
+    pub fn fit_source(&mut self, source: &mut dyn DataSource) -> anyhow::Result<TrainResult> {
+        self.fit_source_with(source, &mut |_| Ok(()))
+    }
+
+    /// [`fit_source`](Self::fit_source) with a per-epoch observer (the
+    /// CLI uses it to write interim snapshots): `on_epoch` runs after
+    /// every completed epoch with the session borrowed read-only.
+    pub fn fit_source_with(
+        &mut self,
+        source: &mut dyn DataSource,
+        on_epoch: &mut dyn FnMut(&SomSession) -> anyhow::Result<()>,
+    ) -> anyhow::Result<TrainResult> {
+        self.cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+        anyhow::ensure!(
+            self.cfg.ranks == 1,
+            "fit_source is single-process; multi-rank streaming goes through \
+             fit_cluster_stream (per-rank file shards)"
+        );
+        anyhow::ensure!(source.rows() > 0, "no data rows");
+        let t0 = Instant::now();
+        let since = self.history.len();
+        let start_epoch = self.epoch;
+        self.ensure_codebook_for_source(source)?;
+        while self.epoch < self.cfg.epochs {
+            self.step_epoch_source(source)?;
+            on_epoch(self)?;
+        }
+        if self.epoch == start_epoch {
+            // No epoch ran (schedule already complete): `last_bmus` may
+            // describe a *previous* fit's data, so always refresh the
+            // mapping against THIS input with a projection pass.
+            self.last_bmus = self.project_source(source)?;
+        }
+        Ok(self.result_snapshot(since, t0.elapsed()))
+    }
+
+    /// Run exactly **one** epoch at the cursor on resident data and
+    /// advance — incremental/online training. The kernel is constructed
+    /// once per session and its `epoch_begin` caches serve every chunk
+    /// of every step (see [`kernel_cache_stats`](Self::kernel_cache_stats)).
+    /// Stepping past `epochs_total` is allowed: the schedules clamp to
+    /// their final values (warm retraining).
+    pub fn step_epoch(&mut self, input: DataInput<'_>) -> anyhow::Result<EpochStats> {
+        let mut tmp = Vec::new();
+        let shard = materialize(input, &mut tmp);
+        let mut source = InMemorySource::new(shard, self.cfg.chunk_rows);
+        self.ensure_codebook_for_source(&mut source)?;
+        self.step_epoch_source(&mut source)
+    }
+
+    /// [`step_epoch`](Self::step_epoch) over any [`DataSource`].
+    pub fn step_epoch_source(
+        &mut self,
+        source: &mut dyn DataSource,
+    ) -> anyhow::Result<EpochStats> {
+        self.ensure_codebook_for_source(source)?;
+        let te = Instant::now();
+        let epoch = self.epoch;
+        let (radius, scale) = self.schedule_now();
+        let mut accum = self.accumulate_epoch(source)?;
+        let bmus = std::mem::take(&mut accum.bmus);
+        self.apply_epoch_update(&accum);
+        let stats = EpochStats {
+            epoch,
+            radius,
+            scale,
+            qe: accum.qe_sum / source.rows().max(1) as f64,
+            duration: te.elapsed(),
+        };
+        self.finish_epoch(stats.clone(), bmus)?;
+        Ok(stats)
+    }
+
+    /// Train to schedule completion across `ranks` simulated nodes on
+    /// resident data (the paper's §3.2 exchange). Returns the result
+    /// plus the communication report. With a checkpoint policy, training
+    /// proceeds in `every`-epoch windows, checkpointing between windows
+    /// — so multi-rank runs resume mid-schedule too.
+    pub fn fit_cluster(
+        &mut self,
+        data: ClusterData,
+    ) -> anyhow::Result<(TrainResult, ClusterReport)> {
+        let net = self.net.clone();
+        crate::cluster::runner::run_cluster(self, data, net)
+    }
+
+    /// Train to schedule completion across `ranks` simulated nodes with
+    /// no resident copy: every rank streams its own disjoint row window
+    /// of one file (see [`StreamInput`]). Checkpoints as
+    /// [`fit_cluster`](Self::fit_cluster) does.
+    pub fn fit_cluster_stream(
+        &mut self,
+        input: StreamInput,
+    ) -> anyhow::Result<(TrainResult, ClusterReport)> {
+        let net = self.net.clone();
+        crate::cluster::runner::run_cluster_stream(self, input, net)
+    }
+
+    /// Write the interim snapshot for the epoch that just finished
+    /// (paper `-s`) — the canonical per-epoch observer body for
+    /// [`fit_source_with`](Self::fit_source_with), shared by the CLI
+    /// and the legacy `train_stream` shim. No-op when the snapshot
+    /// level is `None` or before any epoch completed.
+    pub fn write_epoch_snapshot(&self, writer: &OutputWriter) -> anyhow::Result<()> {
+        if self.cfg.snapshot == SnapshotLevel::None || self.epoch == 0 {
+            return Ok(());
+        }
+        let cb = self.codebook.as_ref().expect("epochs ran");
+        let u = umatrix::umatrix(&self.grid, cb, self.cfg.threads);
+        writer.write_snapshot(
+            self.cfg.snapshot,
+            self.epoch - 1,
+            &self.grid,
+            cb,
+            &self.last_bmus,
+            &u,
+        )?;
+        Ok(())
+    }
+
+    // -- inference ----------------------------------------------------
+
+    /// Best-matching unit for one dense vector: `(node, distance)`.
+    /// A plain codebook scan — kernel-independent (works for maps
+    /// trained with any kernel) and cheap enough to serve lookups.
+    pub fn bmu(&self, x: &[f32]) -> anyhow::Result<(usize, f32)> {
+        let cb = self.codebook.as_ref().ok_or_else(|| {
+            anyhow::anyhow!("session has no codebook yet (fit or resume first)")
+        })?;
+        anyhow::ensure!(
+            x.len() == cb.dim,
+            "query has {} dims, codebook has {}",
+            x.len(),
+            cb.dim
+        );
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for n in 0..cb.nodes {
+            let d = crate::som::quality::sq_dist(x, cb.row(n));
+            if d < best_d {
+                best_d = d;
+                best = n;
+            }
+        }
+        Ok((best, best_d.max(0.0).sqrt()))
+    }
+
+    /// Batch inference: BMU per row of `input` against the current
+    /// codebook, through the training kernel's BMU search (identical
+    /// tie-breaking and arithmetic to the BMUs training reports, with
+    /// none of the Eq. 6 accumulation work). Does **not** update the
+    /// codebook or advance the cursor.
+    pub fn project(&mut self, input: DataInput<'_>) -> anyhow::Result<Vec<u32>> {
+        let mut tmp = Vec::new();
+        let shard = materialize(input, &mut tmp);
+        let mut source = InMemorySource::new(shard, self.cfg.chunk_rows);
+        self.project_source(&mut source)
+    }
+
+    /// [`project`](Self::project) over any [`DataSource`].
+    pub fn project_source(
+        &mut self,
+        source: &mut dyn DataSource,
+    ) -> anyhow::Result<Vec<u32>> {
+        anyhow::ensure!(source.rows() > 0, "no data rows");
+        self.ensure_kernel()?;
+        let cb = self.codebook.as_ref().ok_or_else(|| {
+            anyhow::anyhow!("session has no codebook yet (fit or resume first)")
+        })?;
+        anyhow::ensure!(
+            cb.dim == source.dim(),
+            "data dim {} does not match the session codebook dim {}",
+            source.dim(),
+            cb.dim
+        );
+        let kernel = self.kernel.as_mut().expect("just ensured");
+        let rows = source.rows();
+        kernel.epoch_begin(cb)?;
+        source.reset()?;
+        let mut bmus: Vec<u32> = Vec::with_capacity(rows);
+        while let Some(chunk) = source.next_chunk()? {
+            bmus.extend(kernel.project(chunk, cb, &self.grid, self.cfg.neighborhood)?);
+        }
+        anyhow::ensure!(
+            bmus.len() == rows,
+            "data source produced {} rows this pass, expected {rows}",
+            bmus.len()
+        );
+        Ok(bmus)
+    }
+
+    // -- checkpointing ------------------------------------------------
+
+    /// Write a `SOMC` checkpoint of the current state (atomically; see
+    /// [`crate::io::checkpoint`]). [`Som::resume`] restores it
+    /// bit-exactly.
+    pub fn save_checkpoint<P: AsRef<Path>>(&self, path: P) -> anyhow::Result<()> {
+        let cb = self.codebook.as_ref().ok_or_else(|| {
+            anyhow::anyhow!("nothing to checkpoint: session has no codebook yet")
+        })?;
+        crate::io::checkpoint::save(path, &self.cfg, self.epoch.min(self.cfg.epochs), cb)
+    }
+
+    // -- internals (shared with the cluster runner) -------------------
+
+    /// Radius/scale at the cursor, clamped to the schedule's final
+    /// values for steps past `epochs_total`.
+    pub(crate) fn schedule_now(&self) -> (f32, f32) {
+        let e = self.epoch.min(self.cfg.epochs.saturating_sub(1));
+        (
+            self.cfg.radius_schedule(&self.grid).at(e),
+            self.cfg.scale_schedule().at(e),
+        )
+    }
+
+    /// Build the kernel on first use; it persists for the session.
+    fn ensure_kernel(&mut self) -> anyhow::Result<()> {
+        if self.kernel.is_none() {
+            self.kernel = Some(make_kernel(&self.cfg)?);
+        }
+        Ok(())
+    }
+
+    /// Install an explicit codebook (initial, broadcast, or resumed),
+    /// checking the node count against the map.
+    pub(crate) fn install_codebook(&mut self, cb: Codebook) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            cb.nodes == self.grid.node_count() && cb.weights.len() == cb.nodes * cb.dim,
+            "initial codebook shape {}x{} does not match map {}x{}",
+            cb.nodes,
+            cb.dim,
+            self.grid.rows,
+            self.grid.cols
+        );
+        self.codebook = Some(cb);
+        Ok(())
+    }
+
+    /// Initialize the codebook from the source if absent (random init
+    /// never touches the data; PCA needs a resident shard), or check
+    /// the existing one's dimensionality against the data.
+    pub(crate) fn ensure_codebook_for_source(
+        &mut self,
+        source: &mut dyn DataSource,
+    ) -> anyhow::Result<()> {
+        let dim = source.dim();
+        if let Some(cb) = &self.codebook {
+            anyhow::ensure!(
+                cb.dim == dim,
+                "data dim {dim} does not match the session codebook dim {}",
+                cb.dim
+            );
+            return Ok(());
+        }
+        let cb = if self.cfg.initialization == Initialization::Random {
+            init_codebook(&self.cfg, &self.grid, dim)
+        } else {
+            match source.resident() {
+                Some(shard) => init_codebook_with_data(&self.cfg, &self.grid, shard)?,
+                None => anyhow::bail!(
+                    "PCA initialization needs the data resident in memory; \
+                     streamed sources support only --initialization random \
+                     (or an explicit -c codebook)"
+                ),
+            }
+        };
+        self.codebook = Some(cb);
+        Ok(())
+    }
+
+    /// One epoch's accumulation pass: `epoch_begin`, then the chunk loop
+    /// merging partial Eq. 6 accumulators and concatenating BMUs in
+    /// chunk order. Does **not** apply the update or advance the cursor
+    /// — the cluster runner interleaves its collectives here.
+    pub(crate) fn accumulate_epoch(
+        &mut self,
+        source: &mut dyn DataSource,
+    ) -> anyhow::Result<EpochAccum> {
+        let (radius, scale) = self.schedule_now();
+        self.ensure_kernel()?;
+        let cb = self.codebook.as_ref().ok_or_else(|| {
+            anyhow::anyhow!("session has no codebook yet (fit or resume first)")
+        })?;
+        anyhow::ensure!(
+            cb.dim == source.dim(),
+            "data dim {} does not match the session codebook dim {}",
+            source.dim(),
+            cb.dim
+        );
+        let kernel = self.kernel.as_mut().expect("just ensured");
+        let grid = &self.grid;
+        let cfg = &self.cfg;
+        let rows = source.rows();
+        kernel.epoch_begin(cb)?;
+        source.reset()?;
+        let mut accum = EpochAccum::zeros(grid.node_count(), cb.dim, 0);
+        let mut bmus: Vec<u32> = Vec::with_capacity(rows);
+        while let Some(chunk) = source.next_chunk()? {
+            let part = kernel.epoch_accumulate(
+                chunk,
+                cb,
+                grid,
+                cfg.neighborhood,
+                radius,
+                scale,
+            )?;
+            bmus.extend_from_slice(&part.bmus);
+            accum.merge(&part);
+        }
+        anyhow::ensure!(
+            bmus.len() == rows,
+            "data source produced {} rows this epoch, expected {rows}",
+            bmus.len()
+        );
+        accum.bmus = bmus;
+        Ok(accum)
+    }
+
+    /// Apply the Eq. 6 batch update to the owned codebook.
+    pub(crate) fn apply_epoch_update(&mut self, accum: &EpochAccum) {
+        self.codebook
+            .as_mut()
+            .expect("codebook present")
+            .apply_batch_update(&accum.num, &accum.den);
+    }
+
+    /// Mutable weight buffer (the cluster broadcast target).
+    pub(crate) fn weights_mut(&mut self) -> &mut [f32] {
+        &mut self.codebook.as_mut().expect("codebook present").weights
+    }
+
+    /// Record a completed epoch: store its BMUs and stats, advance the
+    /// cursor, and fire the checkpoint policy if its cadence is due.
+    pub(crate) fn finish_epoch(
+        &mut self,
+        stats: EpochStats,
+        bmus: Vec<u32>,
+    ) -> anyhow::Result<()> {
+        self.last_bmus = bmus;
+        self.history.push(stats);
+        self.epoch += 1;
+        self.maybe_checkpoint()
+    }
+
+    /// Save a numbered checkpoint when the policy cadence is due.
+    pub(crate) fn maybe_checkpoint(&self) -> anyhow::Result<()> {
+        if let Some((every, prefix)) = &self.checkpoint {
+            if *every > 0 && self.epoch % *every == 0 {
+                self.save_checkpoint(checkpoint_path(prefix, self.epoch))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// The checkpoint cadence, if a policy is set (the cluster runner
+    /// sizes its training windows by it).
+    pub(crate) fn checkpoint_interval(&self) -> Option<usize> {
+        self.checkpoint.as_ref().map(|(every, _)| *every)
+    }
+
+    /// Adopt the master's state after a cluster training window: the
+    /// broadcast codebook bits, the gathered BMUs, the window's stats,
+    /// and the new cursor; then fire the checkpoint policy.
+    pub(crate) fn adopt_cluster_window(
+        &mut self,
+        master: &TrainResult,
+        end_epoch: usize,
+    ) -> anyhow::Result<()> {
+        self.codebook = Some(master.codebook.clone());
+        self.last_bmus = master.bmus.clone();
+        self.history.extend(master.epochs.iter().cloned());
+        self.epoch = end_epoch;
+        self.maybe_checkpoint()
+    }
+
+    /// Move the cursor (legacy `train_one_epoch` shim and rank-session
+    /// construction).
+    pub(crate) fn set_epoch_cursor(&mut self, epoch: usize) {
+        self.epoch = epoch;
+    }
+
+    /// A rank-local session for the cluster runner: owns the broadcast
+    /// codebook copy and starts mid-schedule at `start_epoch`. No
+    /// checkpoint policy — the coordinator session checkpoints.
+    pub(crate) fn rank_local(
+        cfg: TrainConfig,
+        codebook: Codebook,
+        start_epoch: usize,
+    ) -> anyhow::Result<SomSession> {
+        let grid = cfg.grid();
+        let mut session = SomSession {
+            cfg,
+            grid,
+            net: NetModel::ideal(),
+            kernel: None,
+            codebook: None,
+            epoch: start_epoch,
+            history: Vec::new(),
+            last_bmus: Vec::new(),
+            checkpoint: None,
+        };
+        session.install_codebook(codebook)?;
+        Ok(session)
+    }
+
+    /// Assemble a [`TrainResult`] from the session state (stats since
+    /// `since`, codebook clone, current BMUs, fresh U-matrix).
+    pub(crate) fn result_snapshot(&self, since: usize, total: Duration) -> TrainResult {
+        let codebook = self.codebook.clone().expect("snapshot after training");
+        let umatrix = umatrix::umatrix(&self.grid, &codebook, self.cfg.threads);
+        TrainResult {
+            codebook,
+            bmus: self.last_bmus.clone(),
+            umatrix,
+            epochs: self.history[since..].to_vec(),
+            total,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::util::rng::Rng;
+
+    fn blob(seed: u64) -> (Vec<f32>, usize) {
+        let mut rng = Rng::new(seed);
+        let (data, _) = data::gaussian_blobs(48, 5, 3, 0.2, &mut rng);
+        (data, 5)
+    }
+
+    fn small() -> SomBuilder {
+        Som::builder().map_size(5, 5).epochs(4).radius0(2.5).threads(2)
+    }
+
+    #[test]
+    fn builder_rejects_bad_configs() {
+        assert!(Som::builder().map_size(0, 5).build().is_err());
+        assert!(Som::builder().epochs(0).build().is_err());
+        assert!(small().radius0(0.5).radius_n(1.0).build().is_err());
+        assert!(small()
+            .io_mode(IoMode::Mmap)
+            .prefetch(true)
+            .build()
+            .is_err());
+        // Initial codebook with the wrong node count.
+        let cb = Codebook::zeros(7, 3);
+        assert!(small().initial_codebook(cb).build().is_err());
+    }
+
+    #[test]
+    fn fit_then_step_continue_identically() {
+        let (data, dim) = blob(51);
+        let input = || DataInput::BorrowedF32 { data: &data, dim };
+
+        let mut a = small().build().unwrap();
+        let res = a.fit(input()).unwrap();
+        assert_eq!(res.epochs.len(), 4);
+        assert_eq!(res.bmus.len(), 48);
+
+        // The same schedule stepped one epoch at a time is identical.
+        let mut b = small().build().unwrap();
+        for _ in 0..4 {
+            b.step_epoch(input()).unwrap();
+        }
+        assert_eq!(b.epoch(), 4);
+        assert_eq!(b.remaining_epochs(), 0);
+        assert_eq!(
+            a.codebook().unwrap().weights,
+            b.codebook().unwrap().weights
+        );
+        assert_eq!(a.last_bmus(), b.last_bmus());
+    }
+
+    #[test]
+    fn stepping_past_schedule_clamps() {
+        let (data, dim) = blob(52);
+        let mut s = small().build().unwrap();
+        for _ in 0..6 {
+            s.step_epoch(DataInput::BorrowedF32 { data: &data, dim }).unwrap();
+        }
+        assert_eq!(s.epoch(), 6);
+        let last = s.history().last().unwrap();
+        // Clamped to the final schedule values.
+        assert_eq!(last.radius, 1.0);
+        assert!((last.scale - 0.01).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bmu_and_project_agree_on_trained_map() {
+        let (data, dim) = blob(53);
+        let mut s = small().build().unwrap();
+        s.fit(DataInput::BorrowedF32 { data: &data, dim }).unwrap();
+        let projected = s.project(DataInput::BorrowedF32 { data: &data, dim }).unwrap();
+        assert_eq!(projected.len(), 48);
+        for (r, &p) in projected.iter().enumerate() {
+            let x = &data[r * dim..(r + 1) * dim];
+            let (_, dist) = s.bmu(x).unwrap();
+            // The scan and the kernel agree on the winning distance
+            // (indices can differ only between exactly-tied nodes, so
+            // comparing distances is the robust form of agreement).
+            let d_kernel = crate::som::quality::sq_dist(
+                x,
+                s.codebook().unwrap().row(p as usize),
+            )
+            .sqrt();
+            assert!((dist - d_kernel).abs() < 1e-4, "row {r}: {dist} vs {d_kernel}");
+        }
+    }
+
+    #[test]
+    fn inference_before_fit_is_an_error() {
+        let mut s = small().build().unwrap();
+        assert!(s.bmu(&[0.0; 5]).is_err());
+        let (data, dim) = blob(54);
+        assert!(s.project(DataInput::BorrowedF32 { data: &data, dim }).is_err());
+        assert!(s.save_checkpoint(std::env::temp_dir().join("never.somc")).is_err());
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let (data, dim) = blob(55);
+        let mut s = small().build().unwrap();
+        s.fit(DataInput::BorrowedF32 { data: &data, dim }).unwrap();
+        assert!(s.bmu(&[0.0; 3]).is_err());
+        let other = vec![0.0f32; 12];
+        assert!(s
+            .fit(DataInput::BorrowedF32 { data: &other, dim: 3 })
+            .is_err());
+    }
+
+    #[test]
+    fn checkpoint_paths_are_numbered() {
+        assert_eq!(
+            checkpoint_path("out/map", 12),
+            PathBuf::from("out/map.epoch12.somc")
+        );
+    }
+}

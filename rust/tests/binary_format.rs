@@ -4,7 +4,8 @@
 //! be rejected at open, before any training runs.
 
 use somoclu::coordinator::config::TrainConfig;
-use somoclu::coordinator::train::train_stream;
+use somoclu::coordinator::train::TrainResult;
+use somoclu::session::Som;
 use somoclu::io::binary::{
     self, convert_dense_to_binary, convert_sparse_to_binary, write_binary_dense,
     write_binary_sparse, BinaryKind, HEADER_LEN,
@@ -21,6 +22,14 @@ use somoclu::som::{Grid, GridType, MapType, Neighborhood};
 use somoclu::sparse::Csr;
 use somoclu::util::prop::{self, Config};
 use somoclu::util::rng::Rng;
+
+/// Out-of-core training through the session API.
+fn fit_source(
+    cfg: &TrainConfig,
+    source: &mut dyn DataSource,
+) -> anyhow::Result<TrainResult> {
+    Som::builder().config(cfg.clone()).build()?.fit_source(source)
+}
 
 fn tmp(name: &str) -> std::path::PathBuf {
     let dir =
@@ -258,15 +267,15 @@ fn binary_and_prefetch_training_matches_text_training() {
         ..Default::default()
     };
     let mut text_src = ChunkedDenseFileSource::open(&txt, 17).unwrap();
-    let want = train_stream(&cfg, &mut text_src, None, None).unwrap();
+    let want = fit_source(&cfg, &mut text_src).unwrap();
 
     let mut bin_src = BinaryDenseFileSource::open(&bin, 17).unwrap();
-    let got = train_stream(&cfg, &mut bin_src, None, None).unwrap();
+    let got = fit_source(&cfg, &mut bin_src).unwrap();
     assert_eq!(got.bmus, want.bmus);
     assert_eq!(got.codebook.weights, want.codebook.weights);
 
     let mut pf = PrefetchSource::new(BinaryDenseFileSource::open(&bin, 17).unwrap());
-    let got = train_stream(&cfg, &mut pf, None, None).unwrap();
+    let got = fit_source(&cfg, &mut pf).unwrap();
     assert_eq!(got.bmus, want.bmus);
     assert_eq!(got.codebook.weights, want.codebook.weights);
 }
@@ -291,14 +300,14 @@ fn sparse_binary_training_matches_text_training() {
         ..Default::default()
     };
     let mut text_src = ChunkedSparseFileSource::open(&svm, 30, 13).unwrap();
-    let want = train_stream(&cfg, &mut text_src, None, None).unwrap();
+    let want = fit_source(&cfg, &mut text_src).unwrap();
     let mut bin_src = BinarySparseFileSource::open(&bin, 13).unwrap();
-    let got = train_stream(&cfg, &mut bin_src, None, None).unwrap();
+    let got = fit_source(&cfg, &mut bin_src).unwrap();
     assert_eq!(got.bmus, want.bmus);
     assert_eq!(got.codebook.weights, want.codebook.weights);
 
     let mut pf = PrefetchSource::new(BinarySparseFileSource::open(&bin, 13).unwrap());
-    let got = train_stream(&cfg, &mut pf, None, None).unwrap();
+    let got = fit_source(&cfg, &mut pf).unwrap();
     assert_eq!(got.bmus, want.bmus);
 }
 

@@ -382,3 +382,126 @@ fn io_backends_via_cli() {
     assert!(!out.status.success());
     assert!(String::from_utf8_lossy(&out.stderr).contains("convert"));
 }
+
+#[test]
+fn checkpoint_and_resume_complete_a_half_trained_run() {
+    // The ISSUE 4 acceptance bar end-to-end: a full CLI run with
+    // --checkpoint-every leaves mid-schedule SOMC artifacts; `somoclu
+    // --resume` finishes from the half-trained one and the outputs are
+    // BYTE-identical to the uninterrupted run's.
+    let dir = tmpdir("ckpt");
+    let mut rng = Rng::new(510);
+    let (d, _) = data::gaussian_blobs(90, 5, 3, 0.2, &mut rng);
+    let input = dir.join("data.txt");
+    dense::write_dense(&input, 90, 5, &d, false).unwrap();
+
+    let full_prefix = dir.join("full");
+    let out = Command::new(bin())
+        .args([
+            "-e", "6", "-x", "6", "-y", "6", "-r", "3", "--threads", "2",
+            "--checkpoint-every", "2",
+            input.to_str().unwrap(),
+            full_prefix.to_str().unwrap(),
+        ])
+        .output()
+        .expect("binary runs");
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    // Numbered checkpoints at every cadence point.
+    for k in [2, 4, 6] {
+        let p = format!("{}.epoch{k}.somc", full_prefix.display());
+        assert!(std::path::Path::new(&p).exists(), "{p}");
+    }
+
+    // Resume the half-trained (epoch-4) artifact — exactly what a crash
+    // at epoch 5 would have left behind.
+    let resumed_prefix = dir.join("resumed");
+    let ckpt = format!("{}.epoch4.somc", full_prefix.display());
+    let out = Command::new(bin())
+        .args([
+            "--resume", &ckpt, "--threads", "2",
+            input.to_str().unwrap(),
+            resumed_prefix.to_str().unwrap(),
+        ])
+        .output()
+        .expect("binary runs");
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("resumed"), "{stderr}");
+    assert!(stderr.contains("epoch 4/6"), "{stderr}");
+
+    // Resume-equivalence holds exactly: same .wts/.bm bytes.
+    for ext in [".wts", ".bm", ".umx"] {
+        let a = std::fs::read(format!("{}{ext}", full_prefix.display())).unwrap();
+        let b = std::fs::read(format!("{}{ext}", resumed_prefix.display())).unwrap();
+        assert_eq!(a, b, "{ext} diverged between full and resumed runs");
+    }
+
+    // A streamed resume (--chunk-rows) finishes too and matches the
+    // streamed uninterrupted run.
+    let s_full = dir.join("sfull");
+    let out = Command::new(bin())
+        .args([
+            "-e", "4", "-x", "6", "-y", "6", "-r", "3", "--threads", "2",
+            "--chunk-rows", "8", "--checkpoint-every", "2",
+            input.to_str().unwrap(),
+            s_full.to_str().unwrap(),
+        ])
+        .output()
+        .expect("binary runs");
+    assert!(out.status.success());
+    let s_resumed = dir.join("sresumed");
+    let ckpt = format!("{}.epoch2.somc", s_full.display());
+    let out = Command::new(bin())
+        .args([
+            "--resume", &ckpt, "--threads", "2", "--chunk-rows", "8",
+            input.to_str().unwrap(),
+            s_resumed.to_str().unwrap(),
+        ])
+        .output()
+        .expect("binary runs");
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    for ext in [".wts", ".bm"] {
+        let a = std::fs::read(format!("{}{ext}", s_full.display())).unwrap();
+        let b = std::fs::read(format!("{}{ext}", s_resumed.display())).unwrap();
+        assert_eq!(a, b, "streamed {ext} diverged");
+    }
+
+    // A corrupt checkpoint is refused with a clear error.
+    let bad = dir.join("bad.somc");
+    let mut bytes = std::fs::read(format!("{}.epoch4.somc", full_prefix.display())).unwrap();
+    let n = bytes.len();
+    bytes[n - 2] ^= 0x20;
+    std::fs::write(&bad, &bytes).unwrap();
+    let out = Command::new(bin())
+        .args([
+            "--resume", bad.to_str().unwrap(),
+            input.to_str().unwrap(),
+            dir.join("nope").to_str().unwrap(),
+        ])
+        .output()
+        .expect("binary runs");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("checksum"));
+}
+
+#[test]
+fn resume_with_conflicting_codebook_flag_rejected() {
+    let out = Command::new(bin())
+        .args(["--resume", "x.somc", "-c", "cb.wts", "in.txt", "out"])
+        .output()
+        .expect("binary runs");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("resume"));
+}

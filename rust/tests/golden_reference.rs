@@ -16,10 +16,25 @@
 use std::path::PathBuf;
 
 use somoclu::coordinator::config::TrainConfig;
-use somoclu::coordinator::train::train;
+use somoclu::coordinator::train::TrainResult;
 use somoclu::io::read_dense;
 use somoclu::kernels::{DataShard, KernelType};
+use somoclu::session::Som;
 use somoclu::som::Codebook;
+
+/// Training through the session API, warm-started from the golden
+/// fixture's initial codebook.
+fn fit_from(
+    cfg: &TrainConfig,
+    shard: DataShard<'_>,
+    init: Codebook,
+) -> anyhow::Result<TrainResult> {
+    Som::builder()
+        .config(cfg.clone())
+        .initial_codebook(init)
+        .build()?
+        .fit_shard(shard)
+}
 
 fn fixture(name: &str) -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR"))
@@ -116,14 +131,13 @@ fn check_against_golden(g: &Golden, res: &somoclu::coordinator::train::TrainResu
 #[test]
 fn dense_kernel_matches_python_oracle() {
     let g = load_golden();
-    let res = train(
+    let res = fit_from(
         &golden_cfg(KernelType::DenseCpu),
         DataShard::Dense {
             data: &g.data,
             dim: g.dim,
         },
-        Some(g.init.clone()),
-        None,
+        g.init.clone(),
     )
     .unwrap();
     check_against_golden(&g, &res);
@@ -135,11 +149,10 @@ fn sparse_kernel_matches_python_oracle() {
     // ties the `-k 2` path to the oracle as well.
     let g = load_golden();
     let m = somoclu::sparse::Csr::from_dense(&g.data, g.rows, g.dim, 0.0);
-    let res = train(
+    let res = fit_from(
         &golden_cfg(KernelType::SparseCpu),
         DataShard::Sparse(m.view()),
-        Some(g.init.clone()),
-        None,
+        g.init.clone(),
     )
     .unwrap();
     check_against_golden(&g, &res);
@@ -155,14 +168,13 @@ fn chunked_run_matches_python_oracle() {
             chunk_rows,
             ..golden_cfg(KernelType::DenseCpu)
         };
-        let res = train(
+        let res = fit_from(
             &cfg,
             DataShard::Dense {
                 data: &g.data,
                 dim: g.dim,
             },
-            Some(g.init.clone()),
-            None,
+            g.init.clone(),
         )
         .unwrap();
         check_against_golden(&g, &res);

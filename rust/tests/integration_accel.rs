@@ -5,9 +5,10 @@
 //! `cargo test` stays usable before the AOT step.
 
 use somoclu::coordinator::config::TrainConfig;
-use somoclu::coordinator::train::train;
+use somoclu::coordinator::train::TrainResult;
 use somoclu::data;
 use somoclu::kernels::{DataShard, KernelType};
+use somoclu::session::Som;
 use somoclu::runtime::Manifest;
 use somoclu::som::{GridType, MapType, Neighborhood};
 use somoclu::util::rng::Rng;
@@ -15,6 +16,12 @@ use somoclu::util::rng::Rng;
 fn artifacts_available() -> bool {
     Manifest::default_dir().join("manifest.json").exists()
 }
+
+/// Single-process training through the session API.
+fn fit(cfg: &TrainConfig, shard: DataShard<'_>) -> anyhow::Result<TrainResult> {
+    Som::builder().config(cfg.clone()).build()?.fit_shard(shard)
+}
+
 
 fn accel_cfg() -> TrainConfig {
     TrainConfig {
@@ -36,13 +43,7 @@ fn accel_full_training_converges() {
     }
     let mut rng = Rng::new(300);
     let (d, _) = data::gaussian_blobs(256, 12, 4, 0.15, &mut rng);
-    let res = train(
-        &accel_cfg(),
-        DataShard::Dense { data: &d, dim: 12 },
-        None,
-        None,
-    )
-    .unwrap();
+    let res = fit(&accel_cfg(), DataShard::Dense { data: &d, dim: 12 }).unwrap();
     assert!(
         res.epochs.last().unwrap().qe < res.epochs[0].qe * 0.5,
         "QE: {:?}",
@@ -66,8 +67,8 @@ fn accel_matches_cpu_over_full_run() {
     let mut cpu_cfg = accel_cfg();
     cpu_cfg.kernel = KernelType::DenseCpu;
 
-    let cpu = train(&cpu_cfg, shard, None, None).unwrap();
-    let accel = train(&accel_cfg(), shard, None, None).unwrap();
+    let cpu = fit(&cpu_cfg, shard).unwrap();
+    let accel = fit(&accel_cfg(), shard).unwrap();
 
     let qe_rel = (cpu.final_qe() - accel.final_qe()).abs() / cpu.final_qe();
     assert!(qe_rel < 1e-2, "QE diverged: {qe_rel}");
@@ -110,8 +111,7 @@ fn accel_geometry_variants() {
             radius0: Some(4.0),
             ..Default::default()
         };
-        let res = train(&cfg, DataShard::Dense { data: &d, dim: 8 }, None, None)
-            .unwrap();
+        let res = fit(&cfg, DataShard::Dense { data: &d, dim: 8 }).unwrap();
         assert!(
             res.final_qe().is_finite(),
             "{gt:?}/{mt:?}/{nb:?} produced non-finite QE"

@@ -1,13 +1,39 @@
 //! Integration: the simulated-MPI distributed path (paper §3.2, Fig. 8).
 
 use somoclu::cluster::netmodel::NetModel;
-use somoclu::cluster::runner::{train_cluster, ClusterData};
+use somoclu::cluster::runner::{ClusterData, ClusterReport};
 use somoclu::coordinator::config::TrainConfig;
-use somoclu::coordinator::train::train;
+use somoclu::coordinator::train::TrainResult;
 use somoclu::data;
 use somoclu::kernels::{DataShard, KernelType};
+use somoclu::session::Som;
 use somoclu::sparse::Csr;
 use somoclu::util::rng::Rng;
+
+/// Single-process training through the session API.
+fn fit(cfg: &TrainConfig, shard: DataShard<'_>) -> TrainResult {
+    Som::builder()
+        .config(cfg.clone())
+        .build()
+        .unwrap()
+        .fit_shard(shard)
+        .unwrap()
+}
+
+/// Cluster training through the session API.
+fn fit_cluster(
+    cfg: &TrainConfig,
+    data: ClusterData,
+    net: NetModel,
+) -> (TrainResult, ClusterReport) {
+    Som::builder()
+        .config(cfg.clone())
+        .net(net)
+        .build()
+        .unwrap()
+        .fit_cluster(data)
+        .unwrap()
+}
 
 fn cfg(ranks: usize, epochs: usize) -> TrainConfig {
     TrainConfig {
@@ -25,18 +51,16 @@ fn cfg(ranks: usize, epochs: usize) -> TrainConfig {
 fn rank_count_does_not_change_the_map() {
     let mut rng = Rng::new(200);
     let (d, _) = data::gaussian_blobs(192, 6, 4, 0.2, &mut rng);
-    let single = train(&cfg(1, 6), DataShard::Dense { data: &d, dim: 6 }, None, None)
-        .unwrap();
+    let single = fit(&cfg(1, 6), DataShard::Dense { data: &d, dim: 6 });
     for ranks in [2, 4, 6] {
-        let (multi, _) = train_cluster(
+        let (multi, _) = fit_cluster(
             &cfg(ranks, 6),
             ClusterData::Dense {
                 data: d.clone(),
                 dim: 6,
             },
             NetModel::ideal(),
-        )
-        .unwrap();
+        );
         assert_eq!(multi.bmus, single.bmus, "ranks={ranks}");
         // f32 reduction order differs between serial and reduced sums;
         // drift compounds over epochs but stays tiny.
@@ -54,12 +78,11 @@ fn uneven_shards_handled() {
     // 101 rows across 4 ranks: shards 26/25/25/25.
     let mut rng = Rng::new(201);
     let (d, _) = data::gaussian_blobs(101, 4, 3, 0.2, &mut rng);
-    let (res, _) = train_cluster(
+    let (res, _) = fit_cluster(
         &cfg(4, 4),
         ClusterData::Dense { data: d, dim: 4 },
         NetModel::ideal(),
-    )
-    .unwrap();
+    );
     assert_eq!(res.bmus.len(), 101);
 }
 
@@ -67,25 +90,23 @@ fn uneven_shards_handled() {
 fn network_model_slows_but_does_not_change_results() {
     let mut rng = Rng::new(202);
     let (d, _) = data::gaussian_blobs(64, 4, 2, 0.2, &mut rng);
-    let (ideal, _) = train_cluster(
+    let (ideal, _) = fit_cluster(
         &cfg(2, 3),
         ClusterData::Dense {
             data: d.clone(),
             dim: 4,
         },
         NetModel::ideal(),
-    )
-    .unwrap();
+    );
     let slow_net = NetModel {
         latency: std::time::Duration::from_micros(200),
         bandwidth: 5e8,
     };
-    let (modeled, report) = train_cluster(
+    let (modeled, report) = fit_cluster(
         &cfg(2, 3),
         ClusterData::Dense { data: d, dim: 4 },
         slow_net,
-    )
-    .unwrap();
+    );
     assert_eq!(ideal.bmus, modeled.bmus);
     assert_eq!(ideal.codebook.weights, modeled.codebook.weights);
     assert!(report.bytes_sent > 0);
@@ -97,8 +118,7 @@ fn sparse_cluster_end_to_end() {
     let m = Csr::random(120, 64, 0.08, &mut rng);
     let mut c = cfg(3, 5);
     c.kernel = KernelType::SparseCpu;
-    let (res, report) =
-        train_cluster(&c, ClusterData::Sparse(m), NetModel::ideal()).unwrap();
+    let (res, report) = fit_cluster(&c, ClusterData::Sparse(m), NetModel::ideal());
     assert_eq!(res.bmus.len(), 120);
     assert!(res.final_qe().is_finite());
     // Comm volume per epoch: 2 slaves send (N*D + N + 8B qe) and receive
@@ -118,11 +138,10 @@ fn sparse_cluster_end_to_end() {
 fn qe_improves_under_distribution_too() {
     let mut rng = Rng::new(204);
     let (d, _) = data::gaussian_blobs(200, 8, 5, 0.15, &mut rng);
-    let (res, _) = train_cluster(
+    let (res, _) = fit_cluster(
         &cfg(4, 8),
         ClusterData::Dense { data: d, dim: 8 },
         NetModel::ideal(),
-    )
-    .unwrap();
+    );
     assert!(res.epochs.last().unwrap().qe < res.epochs[0].qe * 0.5);
 }

@@ -2,11 +2,12 @@
 //! formats — the paths a somoclu user exercises end to end.
 
 use somoclu::coordinator::config::TrainConfig;
-use somoclu::coordinator::train::train;
+use somoclu::coordinator::train::TrainResult;
 use somoclu::data;
 use somoclu::io::output::{OutputWriter, SnapshotLevel};
-use somoclu::io::{esom, read_dense};
+use somoclu::io::{esom, read_dense, InMemorySource};
 use somoclu::kernels::{DataShard, KernelType};
+use somoclu::session::Som;
 use somoclu::som::{quality, GridType, MapType, Neighborhood};
 use somoclu::sparse::Csr;
 use somoclu::util::rng::Rng;
@@ -15,6 +16,24 @@ fn tmpdir(name: &str) -> std::path::PathBuf {
     let dir = std::env::temp_dir().join(format!("somoclu_it_{}_{name}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
     dir
+}
+
+/// Train through the session API (what a library user writes today).
+fn fit(cfg: &TrainConfig, shard: DataShard<'_>) -> anyhow::Result<TrainResult> {
+    Som::builder().config(cfg.clone()).build()?.fit_shard(shard)
+}
+
+/// [`fit`] warm-started from an explicit initial codebook.
+fn fit_with_initial(
+    cfg: &TrainConfig,
+    shard: DataShard<'_>,
+    initial: somoclu::som::Codebook,
+) -> anyhow::Result<TrainResult> {
+    Som::builder()
+        .config(cfg.clone())
+        .initial_codebook(initial)
+        .build()?
+        .fit_shard(shard)
 }
 
 #[test]
@@ -29,14 +48,12 @@ fn dense_training_produces_topology_preserving_map() {
         radius0: Some(5.0),
         ..Default::default()
     };
-    let res = train(
+    let res = fit(
         &cfg,
         DataShard::Dense {
             data: &train_data,
             dim: 8,
         },
-        None,
-        None,
     )
     .unwrap();
 
@@ -82,16 +99,22 @@ fn outputs_are_esom_compatible() {
         ..Default::default()
     };
     let writer = OutputWriter::new(&prefix);
-    let res = train(
-        &cfg,
+    let mut session = Som::builder().config(cfg.clone()).build().unwrap();
+    let mut src = InMemorySource::new(
         DataShard::Dense {
             data: &train_data,
             dim: 4,
         },
-        None,
-        Some(&writer),
-    )
-    .unwrap();
+        cfg.chunk_rows,
+    );
+    // Interim snapshots ride the per-epoch observer hook; the final
+    // files are one explicit write — the CLI's exact shape.
+    let res = session
+        .fit_source_with(&mut src, &mut |s| s.write_epoch_snapshot(&writer))
+        .unwrap();
+    writer
+        .write_final(session.grid(), &res.codebook, &res.bmus, &res.umatrix)
+        .unwrap();
 
     // Final files exist and parse.
     let wts = read_dense(format!("{}.wts", prefix.display())).unwrap();
@@ -134,17 +157,15 @@ fn sparse_and_dense_kernels_train_identically() {
     let mut sparse_cfg = base;
     sparse_cfg.kernel = KernelType::SparseCpu;
 
-    let a = train(
+    let a = fit(
         &dense_cfg,
         DataShard::Dense {
             data: &dense,
             dim: 40,
         },
-        None,
-        None,
     )
     .unwrap();
-    let b = train(&sparse_cfg, DataShard::Sparse(m.view()), None, None).unwrap();
+    let b = fit(&sparse_cfg, DataShard::Sparse(m.view())).unwrap();
     assert_eq!(a.bmus, b.bmus);
     for (x, y) in a.codebook.weights.iter().zip(&b.codebook.weights) {
         assert!((x - y).abs() < 1e-3, "{x} vs {y}");
@@ -168,7 +189,7 @@ fn toroid_map_wraps_clusters() {
         radius0: Some(3.0),
         ..Default::default()
     };
-    let res = train(&cfg, DataShard::Dense { data: &d, dim: 3 }, None, None).unwrap();
+    let res = fit(&cfg, DataShard::Dense { data: &d, dim: 3 }).unwrap();
     assert_eq!(res.umatrix.len(), 54);
     assert!(res.umatrix.iter().all(|u| u.is_finite()));
     assert!(res.final_qe().is_finite());
@@ -191,7 +212,7 @@ fn emergent_map_feasible_where_baseline_fails() {
         radius0: Some(10.0),
         ..Default::default()
     };
-    let res = train(&cfg, DataShard::Dense { data: &d, dim: 4 }, None, None).unwrap();
+    let res = fit(&cfg, DataShard::Dense { data: &d, dim: 4 }).unwrap();
     assert_eq!(res.codebook.nodes, 400);
     assert!(res.final_qe().is_finite());
 }
@@ -210,10 +231,10 @@ fn initial_codebook_resumes_training() {
         radius0: Some(3.5),
         ..Default::default()
     };
-    let first = train(&cfg, shard, None, None).unwrap();
+    let first = fit(&cfg, shard).unwrap();
     let mut cfg2 = cfg.clone();
     cfg2.radius0 = Some(1.5);
-    let second = train(&cfg2, shard, Some(first.codebook), None).unwrap();
+    let second = fit_with_initial(&cfg2, shard, first.codebook).unwrap();
     assert!(second.final_qe() <= first.epochs[0].qe);
 }
 
@@ -233,20 +254,8 @@ fn pca_init_converges_faster_initially() {
         initialization: init,
         ..Default::default()
     };
-    let pca = train(
-        &mk(somoclu::coordinator::config::Initialization::Pca),
-        shard,
-        None,
-        None,
-    )
-    .unwrap();
-    let rnd = train(
-        &mk(somoclu::coordinator::config::Initialization::Random),
-        shard,
-        None,
-        None,
-    )
-    .unwrap();
+    let pca = fit(&mk(somoclu::coordinator::config::Initialization::Pca), shard).unwrap();
+    let rnd = fit(&mk(somoclu::coordinator::config::Initialization::Random), shard).unwrap();
     assert!(
         pca.epochs[0].qe < rnd.epochs[0].qe,
         "pca {} vs random {}",
@@ -269,7 +278,7 @@ fn pca_init_rejected_for_sparse() {
         radius0: Some(2.0),
         ..Default::default()
     };
-    assert!(train(&cfg, DataShard::Sparse(m.view()), None, None).is_err());
+    assert!(fit(&cfg, DataShard::Sparse(m.view())).is_err());
 }
 
 #[test]
@@ -288,7 +297,7 @@ fn codebook_clustering_recovers_data_clusters() {
         radius0: Some(4.0),
         ..Default::default()
     };
-    let res = train(&cfg, DataShard::Dense { data: &d, dim: 6 }, None, None).unwrap();
+    let res = fit(&cfg, DataShard::Dense { data: &d, dim: 6 }).unwrap();
     let km = somoclu::som::kmeans::kmeans(&res.codebook, k, 100, &mut rng);
     let labels = somoclu::som::kmeans::data_labels(&km, &res.bmus);
 

@@ -11,9 +11,10 @@
 //! buffered/pread fallback plus the stub's clean error.
 
 use somoclu::cluster::netmodel::NetModel;
-use somoclu::cluster::runner::{train_cluster_stream, StreamInput};
+use somoclu::cluster::runner::{ClusterReport, StreamInput};
 use somoclu::coordinator::config::{IoMode, TrainConfig};
-use somoclu::coordinator::train::{train, train_stream};
+use somoclu::coordinator::train::TrainResult;
+use somoclu::session::Som;
 use somoclu::io::binary::{write_binary_dense, write_binary_sparse, HEADER_LEN};
 use somoclu::io::stream::DataSource;
 use somoclu::io::{
@@ -29,6 +30,32 @@ use somoclu::util::prop::{self, Config};
 use somoclu::util::rng::Rng;
 
 const MMAP_OK: bool = somoclu::io::mmap::SUPPORTED;
+
+/// Single-process resident training through the session API.
+fn fit(cfg: &TrainConfig, shard: DataShard<'_>) -> anyhow::Result<TrainResult> {
+    Som::builder().config(cfg.clone()).build()?.fit_shard(shard)
+}
+
+/// Out-of-core training through the session API.
+fn fit_source(
+    cfg: &TrainConfig,
+    source: &mut dyn DataSource,
+) -> anyhow::Result<TrainResult> {
+    Som::builder().config(cfg.clone()).build()?.fit_source(source)
+}
+
+/// Multi-rank streaming through the session API.
+fn fit_cluster_stream(
+    cfg: &TrainConfig,
+    input: StreamInput,
+    net: NetModel,
+) -> anyhow::Result<(TrainResult, ClusterReport)> {
+    Som::builder()
+        .config(cfg.clone())
+        .net(net)
+        .build()?
+        .fit_cluster_stream(input)
+}
 
 fn tmp(name: &str) -> std::path::PathBuf {
     let dir =
@@ -317,7 +344,7 @@ fn backends_train_to_identical_results() {
 
     let mut reference: Option<(Vec<u32>, Vec<u32>)> = None;
     for (name, mut src) in dense_backend_sources(&bin, cfg.chunk_rows, 0, 1) {
-        let res = train_stream(&cfg, &mut src, None, None).unwrap();
+        let res = fit_source(&cfg, &mut src).unwrap();
         let weights: Vec<u32> = res.codebook.weights.iter().map(|v| v.to_bits()).collect();
         match &reference {
             None => reference = Some((res.bmus, weights)),
@@ -339,7 +366,7 @@ fn backends_train_to_identical_results() {
     };
     let mut reference: Option<(Vec<u32>, Vec<u32>)> = None;
     for (name, mut src) in sparse_backend_sources(&sbin, scfg.chunk_rows, 0, 1) {
-        let res = train_stream(&scfg, &mut src, None, None).unwrap();
+        let res = fit_source(&scfg, &mut src).unwrap();
         let weights: Vec<u32> = res.codebook.weights.iter().map(|v| v.to_bits()).collect();
         match &reference {
             None => reference = Some((res.bmus, weights)),
@@ -371,14 +398,12 @@ fn cluster_stream_backends_match_single_rank() {
         radius0: Some(3.0),
         ..Default::default()
     };
-    let single = train(
+    let single = fit(
         &base,
         DataShard::Dense {
             data: &data,
             dim,
         },
-        None,
-        None,
     )
     .unwrap();
 
@@ -391,7 +416,7 @@ fn cluster_stream_backends_match_single_rank() {
         cfg.ranks = 3;
         cfg.chunk_rows = 8;
         cfg.io_mode = io;
-        let (multi, _) = train_cluster_stream(
+        let (multi, _) = fit_cluster_stream(
             &cfg,
             StreamInput::Binary { path: bin.clone() },
             NetModel::ideal(),
@@ -419,7 +444,7 @@ fn cluster_stream_rejects_text_with_zero_copy_io() {
         ..Default::default()
     };
     cfg.io_mode = IoMode::Pread;
-    let err = train_cluster_stream(
+    let err = fit_cluster_stream(
         &cfg,
         StreamInput::DenseText { path: path.clone() },
         NetModel::ideal(),
@@ -544,18 +569,16 @@ fn mmap_dense_supports_pca_init() {
         ..Default::default()
     };
     // Resident reference: PCA init over the same data.
-    let resident = train(
+    let resident = fit(
         &cfg,
         DataShard::Dense {
             data: &data,
             dim,
         },
-        None,
-        None,
     )
     .unwrap();
     let mut src = MmapDenseSource::open(&bin, cfg.chunk_rows).unwrap();
-    let streamed = train_stream(&cfg, &mut src, None, None).unwrap();
+    let streamed = fit_source(&cfg, &mut src).unwrap();
     assert_eq!(streamed.bmus, resident.bmus);
 
     // A rank window (not the whole file) must NOT claim residency.

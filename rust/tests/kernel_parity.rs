@@ -9,14 +9,21 @@
 //! the existing accel integration tests.
 
 use somoclu::coordinator::config::TrainConfig;
-use somoclu::coordinator::train::train;
+use somoclu::coordinator::train::TrainResult;
 use somoclu::data;
+use somoclu::session::Som;
 use somoclu::kernels::dense_cpu::DenseCpuKernel;
 use somoclu::kernels::sparse_cpu::SparseCpuKernel;
 use somoclu::kernels::{DataShard, EpochAccum, KernelType, TrainingKernel};
 use somoclu::som::{Codebook, Grid, GridType, MapType, Neighborhood};
 use somoclu::sparse::Csr;
 use somoclu::util::rng::Rng;
+
+/// Single-process training through the session API.
+fn fit(cfg: &TrainConfig, shard: DataShard<'_>) -> anyhow::Result<TrainResult> {
+    Som::builder().config(cfg.clone()).build()?.fit_shard(shard)
+}
+
 
 const TOL: f32 = 1e-4;
 
@@ -92,23 +99,15 @@ fn dense_and_sparse_full_training_runs_agree() {
         radius0: Some(3.0),
         ..Default::default()
     };
-    let a = train(
+    let a = fit(
         &mk(KernelType::DenseCpu),
         DataShard::Dense {
             data: &dense,
             dim: 16,
         },
-        None,
-        None,
     )
     .unwrap();
-    let b = train(
-        &mk(KernelType::SparseCpu),
-        DataShard::Sparse(csr.view()),
-        None,
-        None,
-    )
-    .unwrap();
+    let b = fit(&mk(KernelType::SparseCpu), DataShard::Sparse(csr.view())).unwrap();
     assert_eq!(a.bmus, b.bmus);
     for (i, (x, y)) in a
         .codebook

@@ -8,16 +8,21 @@
 //! * Fig. 7: zero-copy (Python-style) interface adds ~nothing; the
 //!   converting (R/MATLAB-style) interface duplicates the data.
 
-use somoclu::api::{self, DataInput};
+use somoclu::api::DataInput;
 use somoclu::cluster::netmodel::NetModel;
-use somoclu::cluster::runner::{train_cluster, ClusterData};
+use somoclu::cluster::runner::ClusterData;
 use somoclu::coordinator::config::TrainConfig;
-use somoclu::coordinator::train::train;
+use somoclu::coordinator::train::TrainResult;
 use somoclu::data;
+use somoclu::session::Som;
 use somoclu::kernels::{DataShard, KernelType};
 use somoclu::sparse::Csr;
 use somoclu::util::memtrack::MemRegion;
 use somoclu::util::rng::Rng;
+
+fn fit(cfg: &TrainConfig, shard: DataShard<'_>) -> anyhow::Result<TrainResult> {
+    Som::builder().config(cfg.clone()).build()?.fit_shard(shard)
+}
 
 fn cfg() -> TrainConfig {
     TrainConfig {
@@ -46,7 +51,7 @@ fn threads_share_codebook_ranks_duplicate_it() {
         let mut c = cfg();
         c.threads = 2;
         let region = MemRegion::start();
-        let _ = train(&c, DataShard::Dense { data: &d, dim }, None, None).unwrap();
+        let _ = fit(&c, DataShard::Dense { data: &d, dim }).unwrap();
         region.peak_delta()
     };
 
@@ -56,15 +61,16 @@ fn threads_share_codebook_ranks_duplicate_it() {
         c.threads = 1;
         c.ranks = 2;
         let region = MemRegion::start();
-        let _ = train_cluster(
-            &c,
-            ClusterData::Dense {
+        let _ = Som::builder()
+            .config(c.clone())
+            .net(NetModel::ideal())
+            .build()
+            .unwrap()
+            .fit_cluster(ClusterData::Dense {
                 data: d.clone(),
                 dim,
-            },
-            NetModel::ideal(),
-        )
-        .unwrap();
+            })
+            .unwrap();
         region.peak_delta()
     };
 
@@ -108,17 +114,11 @@ fn sparse_training_peak_below_dense() {
     sparse_cfg.kernel = KernelType::SparseCpu;
 
     let region = MemRegion::start();
-    let _ = train(
-        &dense_cfg,
-        DataShard::Dense { data: &dense, dim },
-        None,
-        None,
-    )
-    .unwrap();
+    let _ = fit(&dense_cfg, DataShard::Dense { data: &dense, dim }).unwrap();
     let dense_peak = region.peak_delta();
 
     let region = MemRegion::start();
-    let _ = train(&sparse_cfg, DataShard::Sparse(m.view()), None, None).unwrap();
+    let _ = fit(&sparse_cfg, DataShard::Sparse(m.view())).unwrap();
     let sparse_peak = region.peak_delta();
 
     // The dense input buffer itself isn't counted in either region (it
@@ -144,11 +144,21 @@ fn converting_interface_duplicates_data() {
 
     let c = cfg();
     let region = MemRegion::start();
-    let _ = api::train(&c, DataInput::BorrowedF32 { data: &d, dim }).unwrap();
+    let _ = Som::builder()
+        .config(c.clone())
+        .build()
+        .unwrap()
+        .fit(DataInput::BorrowedF32 { data: &d, dim })
+        .unwrap();
     let borrowed_peak = region.peak_delta();
 
     let region = MemRegion::start();
-    let _ = api::train(&c, DataInput::ConvertedF64 { data: &d64, dim }).unwrap();
+    let _ = Som::builder()
+        .config(c.clone())
+        .build()
+        .unwrap()
+        .fit(DataInput::ConvertedF64 { data: &d64, dim })
+        .unwrap();
     let converted_peak = region.peak_delta();
 
     assert!(

@@ -1,0 +1,383 @@
+//! The session-API acceptance suite (ISSUE 4):
+//!
+//! * **Resume equivalence, exactly**: a run checkpointed at *any* epoch
+//!   and resumed produces bit-identical codebook weights and BMUs to
+//!   the same run uninterrupted — dense + sparse, resident + streamed
+//!   (`--chunk-rows`), single-process + cluster windows.
+//! * **SOMC rejection**: truncated / bit-rotted / version-mismatched
+//!   checkpoints fail `Som::resume` with a clear error (format-level
+//!   unit tests live in `io::checkpoint`; this covers the public path).
+//! * **Kernel cache regression**: consecutive `step_epoch` calls on one
+//!   session hit the kernel's `epoch_begin` cache on every chunk — zero
+//!   misses — the fix for the legacy `train_one_epoch`
+//!   kernel-rebuild-per-call behavior.
+//! * Inference (`bmu`/`project`) serves a trained or resumed map.
+
+use somoclu::api::DataInput;
+use somoclu::cluster::runner::ClusterData;
+use somoclu::coordinator::config::TrainConfig;
+use somoclu::io::stream::ChunkedDenseFileSource;
+use somoclu::io::{dense, sparse as sparse_io};
+use somoclu::kernels::{DataShard, KernelType};
+use somoclu::session::{checkpoint_path, Som, SomSession};
+use somoclu::sparse::Csr;
+use somoclu::util::rng::Rng;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("somoclu_session_{}_{name}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn small_cfg(kernel: KernelType, epochs: usize, chunk_rows: usize) -> TrainConfig {
+    TrainConfig {
+        rows: 6,
+        cols: 6,
+        epochs,
+        kernel,
+        threads: 2,
+        chunk_rows,
+        radius0: Some(3.0),
+        ..Default::default()
+    }
+}
+
+fn session(cfg: &TrainConfig) -> SomSession {
+    Som::builder().config(cfg.clone()).build().unwrap()
+}
+
+/// Bit-level equality of two weight buffers.
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    let ab: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+    let bb: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(ab, bb, "{what}: codebook bits diverged");
+}
+
+/// Resume-equivalence property on resident data: for every save epoch
+/// `k`, interrupt-at-`k` + resume must land on the uninterrupted run's
+/// exact bits.
+fn check_resident_resume(cfg: &TrainConfig, shard: DataShard<'_>, dir: &std::path::Path) {
+    let full = session(cfg).fit_shard(shard).unwrap();
+    for k in 1..cfg.epochs {
+        // Phase 1: train k epochs, checkpoint, drop everything.
+        let ckpt = dir.join(format!("resident_k{k}.somc"));
+        {
+            let mut s = session(cfg);
+            for _ in 0..k {
+                s.step_epoch_shard(shard).unwrap();
+            }
+            s.save_checkpoint(&ckpt).unwrap();
+        }
+        // Phase 2: a fresh process-equivalent resumes and finishes.
+        // Runtime knobs are not stored in checkpoints; restore the same
+        // chunking (bit-exactness requires identical f32 sum order).
+        let mut resumed = Som::resume(&ckpt).unwrap();
+        resumed.set_chunk_rows(cfg.chunk_rows);
+        resumed.set_threads(cfg.threads);
+        assert_eq!(resumed.epoch(), k);
+        let res = resumed.fit_shard(shard).unwrap();
+        assert_eq!(res.bmus, full.bmus, "k={k}: BMUs diverged");
+        assert_bits_eq(
+            &res.codebook.weights,
+            &full.codebook.weights,
+            &format!("k={k}"),
+        );
+        assert_eq!(res.epochs.len(), cfg.epochs - k, "k={k}: epoch stats");
+    }
+}
+
+/// `step_epoch` needs a `DataShard` entry point for the property loops.
+trait StepShard {
+    fn step_epoch_shard(&mut self, shard: DataShard<'_>) -> anyhow::Result<()>;
+}
+
+impl StepShard for SomSession {
+    fn step_epoch_shard(&mut self, shard: DataShard<'_>) -> anyhow::Result<()> {
+        match shard {
+            DataShard::Dense { data, dim } => {
+                self.step_epoch(DataInput::BorrowedF32 { data, dim })?;
+            }
+            DataShard::Sparse(_) => {
+                let mut src = somoclu::io::InMemorySource::new(shard, self.config().chunk_rows);
+                self.step_epoch_source(&mut src)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[test]
+fn resume_equivalence_dense_resident() {
+    let dir = tmpdir("dense_res");
+    let mut rng = Rng::new(900);
+    let (data, _) = somoclu::data::gaussian_blobs(60, 5, 3, 0.2, &mut rng);
+    let shard = DataShard::Dense { data: &data, dim: 5 };
+    // Whole-pass and chunked variants (same chunking on both sides —
+    // the documented requirement for bit-exactness).
+    for chunk_rows in [0usize, 7] {
+        let cfg = small_cfg(KernelType::DenseCpu, 5, chunk_rows);
+        check_resident_resume(&cfg, shard, &dir);
+    }
+}
+
+#[test]
+fn resume_equivalence_sparse_resident() {
+    let dir = tmpdir("sparse_res");
+    let mut rng = Rng::new(901);
+    let m = Csr::random(50, 18, 0.25, &mut rng);
+    for chunk_rows in [0usize, 9] {
+        let cfg = small_cfg(KernelType::SparseCpu, 4, chunk_rows);
+        check_resident_resume(&cfg, DataShard::Sparse(m.view()), &dir);
+    }
+}
+
+#[test]
+fn resume_equivalence_streamed_dense_file() {
+    // The --chunk-rows streamed fit of the acceptance criterion: train
+    // over a file-backed source, checkpoint mid-schedule, resume with a
+    // freshly opened source (a new process would), finish — bit-equal.
+    let dir = tmpdir("dense_stream");
+    let mut rng = Rng::new(902);
+    let (data, _) = somoclu::data::gaussian_blobs(90, 5, 3, 0.2, &mut rng);
+    let path = dir.join("data.txt");
+    dense::write_dense(&path, 90, 5, &data, false).unwrap();
+    let cfg = small_cfg(KernelType::DenseCpu, 6, 8);
+
+    let full = {
+        let mut src = ChunkedDenseFileSource::open(&path, cfg.chunk_rows).unwrap();
+        session(&cfg).fit_source(&mut src).unwrap()
+    };
+    for k in [1usize, 3, 5] {
+        let ckpt = dir.join(format!("stream_k{k}.somc"));
+        {
+            let mut s = session(&cfg);
+            let mut src = ChunkedDenseFileSource::open(&path, cfg.chunk_rows).unwrap();
+            for _ in 0..k {
+                s.step_epoch_source(&mut src).unwrap();
+            }
+            s.save_checkpoint(&ckpt).unwrap();
+        }
+        let mut resumed = Som::resume(&ckpt).unwrap();
+        resumed.set_chunk_rows(cfg.chunk_rows);
+        resumed.set_threads(cfg.threads);
+        let mut src = ChunkedDenseFileSource::open(&path, cfg.chunk_rows).unwrap();
+        let res = resumed.fit_source(&mut src).unwrap();
+        assert_eq!(res.bmus, full.bmus, "k={k}");
+        assert_bits_eq(&res.codebook.weights, &full.codebook.weights, &format!("k={k}"));
+    }
+}
+
+#[test]
+fn resume_equivalence_streamed_sparse_file() {
+    let dir = tmpdir("sparse_stream");
+    let mut rng = Rng::new(903);
+    let m = Csr::random(60, 20, 0.2, &mut rng);
+    let path = dir.join("data.svm");
+    sparse_io::write_sparse(&path, &m).unwrap();
+    let cfg = small_cfg(KernelType::SparseCpu, 5, 7);
+
+    let open = || somoclu::io::ChunkedSparseFileSource::open(&path, 20, cfg.chunk_rows).unwrap();
+    let full = {
+        let mut src = open();
+        session(&cfg).fit_source(&mut src).unwrap()
+    };
+    let k = 2;
+    let ckpt = dir.join("sparse_stream.somc");
+    {
+        let mut s = session(&cfg);
+        let mut src = open();
+        for _ in 0..k {
+            s.step_epoch_source(&mut src).unwrap();
+        }
+        s.save_checkpoint(&ckpt).unwrap();
+    }
+    let mut resumed = Som::resume(&ckpt).unwrap();
+    resumed.set_chunk_rows(cfg.chunk_rows);
+    resumed.set_threads(cfg.threads);
+    let mut src = open();
+    let res = resumed.fit_source(&mut src).unwrap();
+    assert_eq!(res.bmus, full.bmus);
+    assert_bits_eq(&res.codebook.weights, &full.codebook.weights, "sparse stream");
+}
+
+#[test]
+fn checkpoint_every_policy_writes_resumable_files() {
+    // The CLI contract in library form: a 6-epoch fit with
+    // checkpoint_every(2) leaves epoch2/4/6 files; resuming the
+    // mid-schedule one finishes bit-identically.
+    let dir = tmpdir("policy");
+    let prefix = dir.join("run");
+    let mut rng = Rng::new(904);
+    let (data, _) = somoclu::data::gaussian_blobs(48, 4, 3, 0.2, &mut rng);
+    let cfg = small_cfg(KernelType::DenseCpu, 6, 0);
+
+    let full = Som::builder()
+        .config(cfg.clone())
+        .checkpoint_every(2, &prefix)
+        .build()
+        .unwrap()
+        .fit(DataInput::BorrowedF32 { data: &data, dim: 4 })
+        .unwrap();
+    for k in [2usize, 4, 6] {
+        assert!(checkpoint_path(&prefix, k).exists(), "missing epoch{k} checkpoint");
+    }
+
+    let mut resumed = Som::resume(checkpoint_path(&prefix, 4)).unwrap();
+    resumed.set_threads(cfg.threads);
+    assert_eq!(resumed.epoch(), 4);
+    let res = resumed
+        .fit(DataInput::BorrowedF32 { data: &data, dim: 4 })
+        .unwrap();
+    assert_eq!(res.bmus, full.bmus);
+    assert_bits_eq(&res.codebook.weights, &full.codebook.weights, "policy resume");
+}
+
+#[test]
+fn cluster_resume_mid_schedule_matches_uninterrupted() {
+    // Multi-rank resume: a coordinator checkpoint taken between cluster
+    // windows seeds every rank mid-schedule; finishing matches the
+    // uninterrupted cluster run bit-for-bit (fixed rank count).
+    let dir = tmpdir("cluster");
+    let prefix = dir.join("cl");
+    let mut rng = Rng::new(905);
+    let (data, _) = somoclu::data::gaussian_blobs(72, 4, 3, 0.2, &mut rng);
+    let mut cfg = small_cfg(KernelType::DenseCpu, 6, 0);
+    cfg.ranks = 3;
+    let make = || ClusterData::Dense {
+        data: data.clone(),
+        dim: 4,
+    };
+
+    let (full, _) = Som::builder()
+        .config(cfg.clone())
+        .build()
+        .unwrap()
+        .fit_cluster(make())
+        .unwrap();
+
+    // Interrupted variant: checkpoint every 2 epochs, stop after the
+    // epoch-2 window by resuming from its file.
+    let (_, _) = Som::builder()
+        .config(cfg.clone())
+        .checkpoint_every(2, &prefix)
+        .build()
+        .unwrap()
+        .fit_cluster(make())
+        .unwrap();
+    let mut resumed = Som::resume(checkpoint_path(&prefix, 2)).unwrap();
+    resumed.set_ranks(cfg.ranks);
+    resumed.set_threads(cfg.threads);
+    assert_eq!(resumed.epoch(), 2);
+    let (res, _) = resumed.fit_cluster(make()).unwrap();
+    assert_eq!(res.bmus, full.bmus);
+    assert_bits_eq(&res.codebook.weights, &full.codebook.weights, "cluster resume");
+}
+
+#[test]
+fn resume_rejects_damaged_checkpoints() {
+    let dir = tmpdir("damage");
+    let mut rng = Rng::new(906);
+    let (data, _) = somoclu::data::gaussian_blobs(30, 4, 2, 0.3, &mut rng);
+    let cfg = small_cfg(KernelType::DenseCpu, 3, 0);
+    let ckpt = dir.join("ok.somc");
+    {
+        let mut s = session(&cfg);
+        s.step_epoch(DataInput::BorrowedF32 { data: &data, dim: 4 }).unwrap();
+        s.save_checkpoint(&ckpt).unwrap();
+    }
+    let bytes = std::fs::read(&ckpt).unwrap();
+
+    // Truncated payload.
+    let p = dir.join("trunc.somc");
+    std::fs::write(&p, &bytes[..bytes.len() - 3]).unwrap();
+    let err = format!("{:#}", Som::resume(&p).unwrap_err());
+    assert!(err.contains("truncated"), "{err}");
+
+    // Version from the future.
+    let p = dir.join("vers.somc");
+    let mut b = bytes.clone();
+    b[4..8].copy_from_slice(&7u32.to_le_bytes());
+    std::fs::write(&p, &b).unwrap();
+    let err = format!("{:#}", Som::resume(&p).unwrap_err());
+    assert!(err.contains("version"), "{err}");
+
+    // One flipped payload bit -> checksum mismatch.
+    let p = dir.join("rot.somc");
+    let mut b = bytes.clone();
+    let off = somoclu::io::checkpoint::HEADER_LEN as usize + 13;
+    b[off] ^= 0x40;
+    std::fs::write(&p, &b).unwrap();
+    let err = format!("{:#}", Som::resume(&p).unwrap_err());
+    assert!(err.contains("checksum"), "{err}");
+
+    // Not a checkpoint at all.
+    let p = dir.join("noise.somc");
+    std::fs::write(&p, b"definitely not a checkpoint").unwrap();
+    assert!(Som::resume(&p).is_err());
+}
+
+#[test]
+fn step_epochs_hit_the_kernel_begin_cache() {
+    // THE regression guard for the legacy kernel-rebuild-per-call bug:
+    // a session stepping chunked epochs must construct ONE kernel and
+    // hit its epoch_begin cache on every chunk — zero misses. The cache
+    // key is the codebook-fingerprint path (`codebook_key`), so this
+    // also proves the begin/accumulate keying survives in-place updates
+    // across steps.
+    let mut rng = Rng::new(907);
+    let (data, _) = somoclu::data::gaussian_blobs(50, 4, 3, 0.2, &mut rng);
+    let cfg = small_cfg(KernelType::DenseCpu, 10, 10); // 5 chunks/epoch
+    let mut s = session(&cfg);
+    let steps = 3usize;
+    for _ in 0..steps {
+        s.step_epoch(DataInput::BorrowedF32 { data: &data, dim: 4 }).unwrap();
+    }
+    let (hits, misses) = s.kernel_cache_stats().expect("cpu kernel tracks stats");
+    assert_eq!(misses, 0, "a session step recomputed the epoch_begin cache");
+    assert_eq!(hits, (steps * 5) as u64, "every chunk must hit the cache");
+
+    // Sparse kernel: same contract (its cache is bigger — w2 + the
+    // codebook transpose — so a miss would be costlier).
+    let m = Csr::random(40, 12, 0.3, &mut rng);
+    let scfg = small_cfg(KernelType::SparseCpu, 10, 8); // 5 chunks/epoch
+    let mut s = session(&scfg);
+    for _ in 0..steps {
+        let mut src = somoclu::io::InMemorySource::new(DataShard::Sparse(m.view()), 8);
+        s.step_epoch_source(&mut src).unwrap();
+    }
+    let (hits, misses) = s.kernel_cache_stats().expect("cpu kernel tracks stats");
+    assert_eq!(misses, 0);
+    assert_eq!(hits, (steps * 5) as u64);
+}
+
+#[test]
+fn project_serves_training_and_heldout_data() {
+    let mut rng = Rng::new(908);
+    let (data, _) = somoclu::data::gaussian_blobs(60, 5, 3, 0.15, &mut rng);
+    let cfg = small_cfg(KernelType::DenseCpu, 5, 0);
+    let mut s = session(&cfg);
+    s.fit(DataInput::BorrowedF32 { data: &data, dim: 5 }).unwrap();
+
+    // Held-out batch: projection is defined and in range.
+    let (held, _) = somoclu::data::gaussian_blobs(20, 5, 3, 0.15, &mut rng);
+    let mapped = s.project(DataInput::BorrowedF32 { data: &held, dim: 5 }).unwrap();
+    assert_eq!(mapped.len(), 20);
+    assert!(mapped.iter().all(|&b| (b as usize) < 36));
+
+    // Projection does not mutate the trained state.
+    let before = s.codebook().unwrap().weights.clone();
+    let epoch_before = s.epoch();
+    let _ = s.project(DataInput::BorrowedF32 { data: &held, dim: 5 }).unwrap();
+    assert_bits_eq(&before, &s.codebook().unwrap().weights, "project mutated weights");
+    assert_eq!(s.epoch(), epoch_before, "project advanced the cursor");
+
+    // A resumed session projects identically to the original.
+    let dir = tmpdir("project");
+    let ckpt = dir.join("trained.somc");
+    s.save_checkpoint(&ckpt).unwrap();
+    let mut r = Som::resume(&ckpt).unwrap();
+    let a = s.project(DataInput::BorrowedF32 { data: &held, dim: 5 }).unwrap();
+    let b = r.project(DataInput::BorrowedF32 { data: &held, dim: 5 }).unwrap();
+    assert_eq!(a, b);
+}

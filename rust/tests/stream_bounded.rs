@@ -13,14 +13,24 @@
 //!   growth slack), the ISSUE 2 acceptance bound.
 
 use somoclu::coordinator::config::TrainConfig;
-use somoclu::coordinator::train::train_stream;
+use somoclu::coordinator::train::TrainResult;
 use somoclu::data;
+use somoclu::io::stream::DataSource;
+use somoclu::session::Som;
 use somoclu::io::binary::{convert_dense_to_binary, BinaryDenseFileSource, SharedFd};
 use somoclu::io::dense;
 use somoclu::io::stream::{ChunkedDenseFileSource, PrefetchSource};
 use somoclu::io::MmapDenseSource;
 use somoclu::util::memtrack;
 use somoclu::util::rng::Rng;
+
+/// Out-of-core training through the session API.
+fn fit_source(
+    cfg: &TrainConfig,
+    source: &mut dyn DataSource,
+) -> anyhow::Result<TrainResult> {
+    Som::builder().config(cfg.clone()).build()?.fit_source(source)
+}
 
 #[test]
 fn data_buffer_stays_bounded_as_rows_grow() {
@@ -51,7 +61,7 @@ fn data_buffer_stays_bounded_as_rows_grow() {
 
         memtrack::reset_data_buffer_peak();
         let mut src = ChunkedDenseFileSource::open(&path, chunk_rows).unwrap();
-        let res = train_stream(&cfg, &mut src, None, None).unwrap();
+        let res = fit_source(&cfg, &mut src).unwrap();
         assert_eq!(res.bmus.len(), rows);
         peaks.push(memtrack::data_buffer_peak());
         big_path = Some(path);
@@ -87,7 +97,7 @@ fn data_buffer_stays_bounded_as_rows_grow() {
     {
         let inner = BinaryDenseFileSource::open(&bin_path, chunk_rows).unwrap();
         let mut src = PrefetchSource::new(inner);
-        let res = train_stream(&cfg, &mut src, None, None).unwrap();
+        let res = fit_source(&cfg, &mut src).unwrap();
         assert_eq!(res.bmus.len(), 8000);
     }
     let peak = memtrack::data_buffer_peak();
@@ -104,7 +114,7 @@ fn data_buffer_stays_bounded_as_rows_grow() {
     memtrack::reset_data_buffer_peak();
     {
         let mut src = BinaryDenseFileSource::open(&bin_path, chunk_rows).unwrap();
-        let res = train_stream(&cfg, &mut src, None, None).unwrap();
+        let res = fit_source(&cfg, &mut src).unwrap();
         assert_eq!(res.bmus.len(), 8000);
     }
     let peak = memtrack::data_buffer_peak();
@@ -120,7 +130,7 @@ fn data_buffer_stays_bounded_as_rows_grow() {
             .unwrap()
             .dense_shard(chunk_rows, 0, 1)
             .unwrap();
-        let res = train_stream(&cfg, &mut src, None, None).unwrap();
+        let res = fit_source(&cfg, &mut src).unwrap();
         assert_eq!(res.bmus.len(), 8000);
     }
     let peak = memtrack::data_buffer_peak();
@@ -137,7 +147,7 @@ fn data_buffer_stays_bounded_as_rows_grow() {
         let heap_live_before = memtrack::data_buffer_bytes();
         {
             let mut src = MmapDenseSource::open(&bin_path, chunk_rows).unwrap();
-            let res = train_stream(&cfg, &mut src, None, None).unwrap();
+            let res = fit_source(&cfg, &mut src).unwrap();
             assert_eq!(res.bmus.len(), 8000);
         }
         // Zero-copy: the dense mmap source allocates no chunk buffers at

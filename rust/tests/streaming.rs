@@ -1,4 +1,4 @@
-//! End-to-end out-of-core streaming (`--chunk-rows` / `train_stream`):
+//! End-to-end out-of-core streaming (`--chunk-rows` / `fit_source`):
 //!
 //! * a chunked file-backed run must reproduce the in-memory run — same
 //!   final QE (±1e-4) and identical BMUs;
@@ -10,8 +10,10 @@
 use std::process::Command;
 
 use somoclu::coordinator::config::TrainConfig;
-use somoclu::coordinator::train::{train, train_stream};
+use somoclu::coordinator::train::TrainResult;
 use somoclu::data;
+use somoclu::io::stream::DataSource;
+use somoclu::session::Som;
 use somoclu::io::stream::{ChunkedDenseFileSource, ChunkedSparseFileSource};
 use somoclu::io::{dense, sparse as sparse_io};
 use somoclu::kernels::{DataShard, KernelType};
@@ -23,6 +25,17 @@ fn tmpdir(name: &str) -> std::path::PathBuf {
         .join(format!("somoclu_streaming_{}_{name}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
     dir
+}
+
+fn fit(cfg: &TrainConfig, shard: DataShard<'_>) -> anyhow::Result<TrainResult> {
+    Som::builder().config(cfg.clone()).build()?.fit_shard(shard)
+}
+
+fn fit_source(
+    cfg: &TrainConfig,
+    source: &mut dyn DataSource,
+) -> anyhow::Result<TrainResult> {
+    Som::builder().config(cfg.clone()).build()?.fit_source(source)
 }
 
 fn small_cfg(kernel: KernelType) -> TrainConfig {
@@ -47,11 +60,11 @@ fn dense_file_stream_matches_in_memory_run() {
     dense::write_dense(&path, rows, dim, &data, false).unwrap();
 
     let cfg = small_cfg(KernelType::DenseCpu);
-    let resident = train(&cfg, DataShard::Dense { data: &data, dim }, None, None).unwrap();
+    let resident = fit(&cfg, DataShard::Dense { data: &data, dim }).unwrap();
 
     for chunk_rows in [37usize, 100, 1000] {
         let mut src = ChunkedDenseFileSource::open(&path, chunk_rows).unwrap();
-        let streamed = train_stream(&cfg, &mut src, None, None).unwrap();
+        let streamed = fit_source(&cfg, &mut src).unwrap();
         assert_eq!(streamed.bmus, resident.bmus, "chunk_rows={chunk_rows}");
         assert!(
             (streamed.final_qe() - resident.final_qe()).abs() < 1e-4,
@@ -83,11 +96,11 @@ fn sparse_file_stream_matches_in_memory_run() {
     let resident_m = sparse_io::read_sparse(&path, 64).unwrap();
 
     let cfg = small_cfg(KernelType::SparseCpu);
-    let resident = train(&cfg, DataShard::Sparse(resident_m.view()), None, None).unwrap();
+    let resident = fit(&cfg, DataShard::Sparse(resident_m.view())).unwrap();
 
     for chunk_rows in [23usize, 300] {
         let mut src = ChunkedSparseFileSource::open(&path, 64, chunk_rows).unwrap();
-        let streamed = train_stream(&cfg, &mut src, None, None).unwrap();
+        let streamed = fit_source(&cfg, &mut src).unwrap();
         assert_eq!(streamed.bmus, resident.bmus, "chunk_rows={chunk_rows}");
         assert!(
             (streamed.final_qe() - resident.final_qe()).abs() < 1e-4,
