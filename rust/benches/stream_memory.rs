@@ -44,7 +44,7 @@ use somoclu::kernels::{DataShard, KernelType};
 use somoclu::util::json::Json;
 use somoclu::util::memtrack::{self, fmt_bytes, MemRegion};
 use somoclu::util::rng::Rng;
-use somoclu::util::timer::{bench_scale, time_once};
+use somoclu::util::timer::{bench_scale, best_secs, time_once};
 
 /// Out-of-core training through the session API (the surface the CLI
 /// and library users drive).
@@ -62,22 +62,6 @@ struct Lane {
     key: &'static str,
     rows_per_s: f64,
     slowdown: f64,
-}
-
-/// Run `f` `reps` times; return the last result and the BEST (minimum)
-/// wall-clock in seconds. Minimum-of-N is the standard noise-robust
-/// timing estimator: on shared CI runners a single measurement is
-/// dominated by scheduler bursts, which only ever ADD time — so the
-/// regression gate compares best-observed against best-observed.
-fn best_secs<R>(reps: usize, mut f: impl FnMut() -> R) -> (R, f64) {
-    let mut best = f64::INFINITY;
-    let mut out = None;
-    for _ in 0..reps {
-        let (r, t) = time_once(&mut f);
-        best = best.min(t.as_secs_f64());
-        out = Some(r);
-    }
-    (out.expect("reps >= 1"), best)
 }
 
 fn main() {

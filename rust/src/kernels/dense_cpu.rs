@@ -10,7 +10,11 @@
 //!    node ranges of num/den, so no locks and no duplicated accumulators.
 //!  * The neighborhood radius is thresholded (`Neighborhood::cutoff`),
 //!    "which translates to speed improvements without compromising the
-//!    quality of the trained map".
+//!    quality of the trained map" — and once the thresholded window is
+//!    smaller than the lattice, Phase B switches to the
+//!    [`crate::som::stencil::NeighborhoodStencil`] windowed gather
+//!    (O(B·r²·D) instead of O(N·B·D), bit-identical output; see
+//!    [`accumulate_node_parallel_ext`]).
 //!
 //! The BMU inner loop uses the same Gram-trick the GPU kernel exploits:
 //! argmin_n ||x||² + ||w_n||² − 2·x·w_n  =  argmin_n (||w_n||²/2 − x·w_n),
@@ -18,8 +22,8 @@
 //! register-blocked FMA microkernel (see §Perf in EXPERIMENTS.md for the
 //! measured 13x iteration log on this path).
 
-use crate::kernels::{DataShard, EpochAccum, TrainingKernel};
-use crate::som::{Codebook, Grid, Neighborhood};
+use crate::kernels::{AccumConfig, AccumStats, DataShard, EpochAccum, SweepMode, TrainingKernel};
+use crate::som::{Codebook, Grid, Neighborhood, NeighborhoodStencil, StencilCache};
 use crate::util::threadpool;
 
 pub struct DenseCpuKernel {
@@ -35,6 +39,10 @@ pub struct DenseCpuKernel {
     /// `TrainingKernel::epoch_cache_stats`).
     cache_hits: u64,
     cache_misses: u64,
+    /// Phase B stencil memo: chunked epochs pass identical
+    /// (grid, neighborhood, radius, scale) per chunk, so the window
+    /// tables are built once per epoch, not once per chunk.
+    stencil: StencilCache,
 }
 
 impl DenseCpuKernel {
@@ -45,6 +53,7 @@ impl DenseCpuKernel {
             prepared_for: None,
             cache_hits: 0,
             cache_misses: 0,
+            stencil: StencilCache::new(),
         }
     }
 
@@ -79,6 +88,16 @@ impl DenseCpuKernel {
                 }
                 let x: [&[f32]; B] =
                     std::array::from_fn(|k| &data[block[k] * dim..(block[k] + 1) * dim]);
+                // ||x||² for the block, hoisted into block setup: one
+                // pass while the rows are being brought into cache for
+                // the scan, instead of a second walk over each row after
+                // it. Scalar sequential sum on purpose — the QE bits
+                // must not move (golden fixtures and the sparse/dense
+                // parity tests pin them).
+                let mut x2 = [0.0f32; B];
+                for k in 0..blen {
+                    x2[k] = x[k].iter().map(|v| v * v).sum();
+                }
                 let mut best = [0u32; B];
                 let mut best_score = [f32::INFINITY; B];
                 for n in 0..codebook.nodes {
@@ -97,8 +116,7 @@ impl DenseCpuKernel {
                 }
                 for k in 0..blen {
                     // Reconstruct the true squared distance for QE.
-                    let x2: f32 = x[k].iter().map(|v| v * v).sum();
-                    let d2 = (x2 + 2.0 * best_score[k]).max(0.0);
+                    let d2 = (x2[k] + 2.0 * best_score[k]).max(0.0);
                     bmus.push(best[k]);
                     dists.push(d2);
                 }
@@ -203,21 +221,16 @@ pub fn dot_unrolled(x: &[f32], w: &[f32]) -> f32 {
     (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7])) + tail
 }
 
-/// Node-parallel accumulation shared by the dense and sparse kernels,
-/// in two phases (§Perf: the BMU-histogram formulation):
-///
-///   A. Group rows by their BMU: X_sum[b] = Σ_{bmu(r)=b} x_r and
-///      cnt[b] = |{r : bmu(r)=b}| — `add_row(xsum_row, r, 1.0)` performs
-///      the (possibly sparse) add; threads own disjoint node ranges so
-///      the sums are lock-free AND deterministic (row order per node).
-///   B. num[n] = Σ_b h(d(b,n)) · X_sum[b], den[n] = Σ_b h · cnt[b] —
-///      node-parallel axpy sweep over the *occupied* BMUs only.
-///
-/// This is exact up to f32 ordering and turns the O(S·N·D) per-sample
-/// update into O(S·D + N·B·D) with B = occupied nodes ≤ min(S, N): the
-/// batch formulation's h depends only on (bmu, node), so rows sharing a
-/// BMU share their weight. The neighborhood radius is thresholded
-/// (`Neighborhood::cutoff`) exactly as §3.1 describes.
+/// Node-parallel accumulation — the historical 10-argument surface,
+/// running [`SweepMode::Auto`]. See [`accumulate_node_parallel_ext`]
+/// for the phases, the complexity bounds, and the bit-identity
+/// contract.
+#[deprecated(
+    since = "0.2.0",
+    note = "use accumulate_node_parallel_ext (or _with plus a StencilCache, as the \
+            kernels do — this wrapper rebuilds the stencil tables on every call)"
+)]
+#[allow(clippy::too_many_arguments)]
 pub fn accumulate_node_parallel<F>(
     rows: usize,
     nodes: usize,
@@ -233,10 +246,163 @@ pub fn accumulate_node_parallel<F>(
 where
     F: Fn(&mut [f32], usize, f32) + Sync,
 {
+    let (num, den, _) = accumulate_node_parallel_ext(
+        &AccumConfig {
+            rows,
+            nodes,
+            dim,
+            threads,
+            grid,
+            neighborhood,
+            radius,
+            scale,
+            mode: SweepMode::Auto,
+        },
+        bmus,
+        add_row,
+    );
+    (num, den)
+}
+
+/// Node-parallel accumulation in two phases (§Perf: the BMU-histogram
+/// formulation, windowed per the paper's §3.1 radius thresholding):
+///
+///   A. Group rows by their BMU with a **counting sort** (stable, so
+///      each BMU's rows stay in ascending row order): X_sum[b] =
+///      Σ_{bmu(r)=b} x_r and cnt[b] = |{r : bmu(r)=b}| —
+///      `add_row(xsum_row, r, 1.0)` performs the (possibly sparse) add.
+///      O(S + N) total; threads own disjoint node ranges and touch only
+///      their own buckets, so the sums are lock-free AND deterministic.
+///      (The previous formulation had every thread scan all S rows —
+///      O(T·S) of redundant filtering that dominated at high thread
+///      counts on small chunks.)
+///   B. num[n] = Σ_b h(d(b,n)) · X_sum[b], den[n] = Σ_b h · cnt[b],
+///      node-parallel, over the *occupied* BMUs only — either as the
+///      dense sweep over all B of them, or (when the thresholded radius
+///      makes the displacement window smaller than the lattice) as a
+///      [`NeighborhoodStencil`] gather that visits only the BMUs whose
+///      window reaches the node: O(N·B·D) becomes O(Σ_b window(b)·D) ≈
+///      O(B·r²·D). Both iterate contributions in ascending BMU order
+///      with table weights equal to the sweep's bit for bit, so `num`,
+///      `den` — every output bit — are identical across [`SweepMode`]s
+///      and thread counts.
+///
+/// This is exact up to f32 ordering and turns the O(S·N·D) per-sample
+/// update into O(S·D + B·r²·D) with B = occupied nodes ≤ min(S, N): the
+/// batch formulation's h depends only on (bmu, node), so rows sharing a
+/// BMU share their weight.
+pub fn accumulate_node_parallel_ext<F>(
+    cfg: &AccumConfig<'_>,
+    bmus: &[u32],
+    add_row: F,
+) -> (Vec<f32>, Vec<f32>, AccumStats)
+where
+    F: Fn(&mut [f32], usize, f32) + Sync,
+{
+    match cfg.mode {
+        SweepMode::FullSweep => accumulate_node_parallel_with(cfg, bmus, add_row, None),
+        SweepMode::Auto if cfg.scale <= 0.0 => {
+            // Zero-scale passes short-circuit inside `_with`; don't pay
+            // a table build for them.
+            accumulate_node_parallel_with(cfg, bmus, add_row, None)
+        }
+        SweepMode::Auto => {
+            let t = std::time::Instant::now();
+            let built =
+                NeighborhoodStencil::build(cfg.grid, cfg.neighborhood, cfg.radius, cfg.scale);
+            let build_time = t.elapsed();
+            let (num, den, mut stats) =
+                accumulate_node_parallel_with(cfg, bmus, add_row, built.as_ref());
+            // The per-pass table construction belongs to Phase B: the
+            // stencil must win including its setup cost (kernels
+            // amortize it across chunks through a `StencilCache`
+            // instead of calling this entry point).
+            stats.phase_b += build_time;
+            (num, den, stats)
+        }
+    }
+}
+
+/// [`accumulate_node_parallel_ext`] with the Phase B decision already
+/// resolved by the caller: `Some` runs the windowed stencil gather,
+/// `None` the dense full sweep (`cfg.mode` is ignored). This is the
+/// kernels' entry point — they memoize the stencil in a
+/// [`crate::som::stencil::StencilCache`] so chunked epochs build the
+/// tables once, not once per chunk. The stencil must have been built
+/// for exactly this pass's `(grid, neighborhood, radius, scale)`
+/// (debug-asserted via [`NeighborhoodStencil::matches`]).
+pub fn accumulate_node_parallel_with<F>(
+    cfg: &AccumConfig<'_>,
+    bmus: &[u32],
+    add_row: F,
+    stencil: Option<&NeighborhoodStencil>,
+) -> (Vec<f32>, Vec<f32>, AccumStats)
+where
+    F: Fn(&mut [f32], usize, f32) + Sync,
+{
+    let &AccumConfig {
+        rows,
+        nodes,
+        dim,
+        threads,
+        grid,
+        neighborhood,
+        radius,
+        scale,
+        mode: _,
+    } = cfg;
+    if let Some(st) = stencil {
+        debug_assert!(
+            st.matches(grid, neighborhood, radius, scale),
+            "stencil was built for different accumulation inputs"
+        );
+    }
     let cutoff = neighborhood.cutoff(radius);
     debug_assert!(bmus.len() >= rows);
+    assert!(rows <= u32::MAX as usize, "shard too large for u32 row ids");
 
-    // --- Phase A: per-BMU sums, threads own disjoint node ranges.
+    // scale <= 0 makes every update weight h = w·scale <= 0, which the
+    // sweep skips wholesale: both accumulators are exactly zero (the
+    // same +0.0 bits the skipping loops would leave). The default
+    // `TrainingKernel::project` drives this path once per call, so skip
+    // both phases instead of bucketing rows and walking windows to add
+    // nothing.
+    if scale <= 0.0 {
+        return (
+            vec![0.0f32; nodes * dim],
+            vec![0.0f32; nodes],
+            AccumStats {
+                phase_a: std::time::Duration::ZERO,
+                phase_b: std::time::Duration::ZERO,
+                stencil: false,
+                active_bmus: 0,
+                window_cells: 0,
+            },
+        );
+    }
+    let t0 = std::time::Instant::now();
+
+    // --- Phase A: stable counting sort of rows by BMU, then per-BMU
+    // sums. `start` is the bucket prefix; `order` holds row ids grouped
+    // by BMU, ascending within each bucket — exactly the order the old
+    // every-thread-scans-all-rows filter fed `add_row` in, so the f32
+    // sums are bit-identical.
+    let mut start = vec![0u32; nodes + 1];
+    for &b in &bmus[..rows] {
+        start[b as usize + 1] += 1;
+    }
+    for i in 0..nodes {
+        start[i + 1] += start[i];
+    }
+    let mut order = vec![0u32; rows];
+    let mut cursor: Vec<u32> = start[..nodes].to_vec();
+    for (r, &b) in bmus[..rows].iter().enumerate() {
+        let c = &mut cursor[b as usize];
+        order[*c as usize] = r as u32;
+        *c += 1;
+    }
+    drop(cursor);
+
     let mut xsum = vec![0.0f32; nodes * dim];
     let mut cnt = vec![0.0f32; nodes];
     let ranges = threadpool::split_ranges(nodes, threads);
@@ -246,66 +412,149 @@ where
         for ((range, xsum_chunk), cnt_chunk) in
             ranges.iter().cloned().zip(xsum_chunks).zip(cnt_chunks)
         {
-            let add_row = &add_row;
-            let bmus = &bmus[..rows];
+            let (add_row, order, start) = (&add_row, &order, &start);
             scope.spawn(move || {
-                for (r, &bmu) in bmus.iter().enumerate() {
-                    let b = bmu as usize;
-                    if range.contains(&b) {
-                        let local = b - range.start;
-                        add_row(
-                            &mut xsum_chunk[local * dim..(local + 1) * dim],
-                            r,
-                            1.0,
-                        );
+                for b in range.clone() {
+                    let bucket = &order[start[b] as usize..start[b + 1] as usize];
+                    if bucket.is_empty() {
+                        continue;
+                    }
+                    let local = b - range.start;
+                    let xrow = &mut xsum_chunk[local * dim..(local + 1) * dim];
+                    for &r in bucket {
+                        add_row(xrow, r as usize, 1.0);
                         cnt_chunk[local] += 1.0;
                     }
                 }
             });
         }
     });
-
-    // Occupied BMUs only: B is bounded by min(rows, nodes).
-    let active: Vec<u32> = (0..nodes as u32)
-        .filter(|&b| cnt[b as usize] > 0.0)
-        .collect();
+    let phase_a = t0.elapsed();
 
     // --- Phase B: neighborhood-weighted spread, node-parallel.
+    let t1 = std::time::Instant::now();
+    let active_bmus;
     let mut num = vec![0.0f32; nodes * dim];
     let mut den = vec![0.0f32; nodes];
     let num_chunks = split_at_ranges(&mut num, &ranges, dim);
     let den_chunks = split_at_ranges(&mut den, &ranges, 1);
-    let (xsum, cnt, active) = (&xsum, &cnt, &active);
-    std::thread::scope(|scope| {
-        for ((range, num_chunk), den_chunk) in
-            ranges.iter().cloned().zip(num_chunks).zip(den_chunks)
-        {
-            scope.spawn(move || {
-                for node in range.clone() {
-                    let local = node - range.start;
-                    let num_row = &mut num_chunk[local * dim..(local + 1) * dim];
-                    let mut d_acc = 0.0f32;
-                    for &b in active {
-                        let gd = grid.distance(b as usize, node);
-                        if gd > cutoff {
-                            continue;
-                        }
-                        let h = neighborhood.weight(gd, radius) * scale;
-                        if h <= 0.0 {
-                            continue;
-                        }
-                        d_acc += h * cnt[b as usize];
-                        let src = &xsum[b as usize * dim..(b as usize + 1) * dim];
-                        for (a, s) in num_row.iter_mut().zip(src) {
-                            *a = s.mul_add(h, *a);
-                        }
-                    }
-                    den_chunk[local] = d_acc;
-                }
-            });
+
+    if let Some(st) = stencil {
+        // Windowed gather. Active BMUs are indexed per grid row (the
+        // row-bucketed index), so each node walks only the sorted active
+        // columns inside its window's ascending physical intervals —
+        // ascending node order, same summation order as the sweep.
+        assert_eq!(
+            nodes,
+            grid.node_count(),
+            "stencil accumulation needs a codebook shaped like the grid"
+        );
+        let mut row_start = vec![0u32; grid.rows + 1];
+        let mut act_cols: Vec<u32> = Vec::new();
+        for (b, &c) in cnt.iter().enumerate() {
+            if c > 0.0 {
+                act_cols.push((b % grid.cols) as u32);
+                row_start[b / grid.cols + 1] += 1;
+            }
         }
-    });
-    (num, den)
+        active_bmus = act_cols.len();
+        for i in 0..grid.rows {
+            row_start[i + 1] += row_start[i];
+        }
+        let (xsum, cnt, row_start, act_cols) = (&xsum, &cnt, &row_start, &act_cols);
+        std::thread::scope(|scope| {
+            for ((range, num_chunk), den_chunk) in
+                ranges.iter().cloned().zip(num_chunks).zip(den_chunks)
+            {
+                scope.spawn(move || {
+                    for node in range.clone() {
+                        let local = node - range.start;
+                        let num_row = &mut num_chunk[local * dim..(local + 1) * dim];
+                        let (rn, cn) = (node / grid.cols, node % grid.cols);
+                        let col_iv = st.col_intervals(grid, cn);
+                        let mut d_acc = 0.0f32;
+                        for riv in st.row_intervals(grid, rn).as_slice() {
+                            for rb in riv.start..riv.end {
+                                let (lo, hi) =
+                                    (row_start[rb] as usize, row_start[rb + 1] as usize);
+                                if lo == hi {
+                                    continue;
+                                }
+                                let trow = st.table_row(rn, riv.slot0 + (rb - riv.start));
+                                let acts = &act_cols[lo..hi];
+                                for civ in col_iv.as_slice() {
+                                    let s = acts
+                                        .partition_point(|&c| (c as usize) < civ.start);
+                                    for &cb in &acts[s..] {
+                                        let cb = cb as usize;
+                                        if cb >= civ.end {
+                                            break;
+                                        }
+                                        let h = trow[civ.slot0 + (cb - civ.start)];
+                                        if h <= 0.0 {
+                                            continue;
+                                        }
+                                        let b = rb * grid.cols + cb;
+                                        d_acc += h * cnt[b];
+                                        let src = &xsum[b * dim..(b + 1) * dim];
+                                        for (a, s) in num_row.iter_mut().zip(src) {
+                                            *a = s.mul_add(h, *a);
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                        den_chunk[local] = d_acc;
+                    }
+                });
+            }
+        });
+    } else {
+        // Dense full sweep over the occupied BMUs (the pre-stencil path,
+        // still optimal when the window covers the lattice).
+        let active: Vec<u32> = (0..nodes as u32)
+            .filter(|&b| cnt[b as usize] > 0.0)
+            .collect();
+        active_bmus = active.len();
+        let (xsum, cnt, active) = (&xsum, &cnt, &active);
+        std::thread::scope(|scope| {
+            for ((range, num_chunk), den_chunk) in
+                ranges.iter().cloned().zip(num_chunks).zip(den_chunks)
+            {
+                scope.spawn(move || {
+                    for node in range.clone() {
+                        let local = node - range.start;
+                        let num_row = &mut num_chunk[local * dim..(local + 1) * dim];
+                        let mut d_acc = 0.0f32;
+                        for &b in active {
+                            let gd = grid.distance(b as usize, node);
+                            if gd > cutoff {
+                                continue;
+                            }
+                            let h = neighborhood.weight(gd, radius) * scale;
+                            if h <= 0.0 {
+                                continue;
+                            }
+                            d_acc += h * cnt[b as usize];
+                            let src = &xsum[b as usize * dim..(b as usize + 1) * dim];
+                            for (a, s) in num_row.iter_mut().zip(src) {
+                                *a = s.mul_add(h, *a);
+                            }
+                        }
+                        den_chunk[local] = d_acc;
+                    }
+                });
+            }
+        });
+    }
+    let stats = AccumStats {
+        phase_a,
+        phase_b: t1.elapsed(),
+        stencil: stencil.is_some(),
+        active_bmus,
+        window_cells: stencil.map_or(0, |s| s.window_cells()),
+    };
+    (num, den, stats)
 }
 
 /// Split a flat buffer into per-range mutable chunks (range i covers
@@ -401,15 +650,19 @@ impl TrainingKernel for DenseCpuKernel {
         let (bmus, dists) = self.search_bmus(data, dim, codebook, &self.w2);
         let qe_sum: f64 = dists.iter().map(|d| (*d as f64).sqrt()).sum();
 
-        let (num, den) = accumulate_node_parallel(
-            rows,
-            codebook.nodes,
-            dim,
-            self.threads,
-            grid,
-            neighborhood,
-            radius,
-            scale,
+        let threads = self.threads;
+        let (num, den, _) = accumulate_node_parallel_with(
+            &AccumConfig {
+                rows,
+                nodes: codebook.nodes,
+                dim,
+                threads,
+                grid,
+                neighborhood,
+                radius,
+                scale,
+                mode: SweepMode::Auto,
+            },
             &bmus,
             |num_row, r, h| {
                 let x = &data[r * dim..(r + 1) * dim];
@@ -417,6 +670,7 @@ impl TrainingKernel for DenseCpuKernel {
                     *acc += h * v;
                 }
             },
+            self.stencil.get(grid, neighborhood, radius, scale),
         );
 
         Ok(EpochAccum {

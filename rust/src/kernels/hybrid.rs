@@ -9,10 +9,10 @@
 //! Eq. 6 accumulation reuses the node-parallel CPU scheme of the dense
 //! kernel (BMU-histogram formulation).
 
-use crate::kernels::dense_cpu::accumulate_node_parallel;
-use crate::kernels::{DataShard, EpochAccum, TrainingKernel};
+use crate::kernels::dense_cpu::accumulate_node_parallel_with;
+use crate::kernels::{AccumConfig, DataShard, EpochAccum, SweepMode, TrainingKernel};
 use crate::runtime::{untuple, Engine};
-use crate::som::{Codebook, Grid, Neighborhood};
+use crate::som::{Codebook, Grid, Neighborhood, StencilCache};
 
 pub struct HybridKernel {
     engine: Engine,
@@ -25,6 +25,8 @@ pub struct HybridKernel {
     /// `codebook_key`): its device buffer is reused across that epoch's
     /// chunks. Calls with any other codebook re-upload every time.
     begin_key: Option<(usize, usize, usize, u64)>,
+    /// Phase B stencil memo (built once per epoch, reused per chunk).
+    stencil: StencilCache,
 }
 
 struct Setup {
@@ -49,6 +51,7 @@ impl HybridKernel {
             variant: "gram",
             setup: None,
             begin_key: None,
+            stencil: StencilCache::new(),
         }
     }
 
@@ -165,15 +168,19 @@ impl TrainingKernel for HybridKernel {
         }
 
         // --- CPU phase: threaded Eq. 6 accumulation (the OpenMP side).
-        let (num, den) = accumulate_node_parallel(
-            rows,
-            codebook.nodes,
-            dim,
-            self.threads,
-            grid,
-            neighborhood,
-            radius,
-            scale,
+        let threads = self.threads;
+        let (num, den, _) = accumulate_node_parallel_with(
+            &AccumConfig {
+                rows,
+                nodes: codebook.nodes,
+                dim,
+                threads,
+                grid,
+                neighborhood,
+                radius,
+                scale,
+                mode: SweepMode::Auto,
+            },
             &bmus,
             |num_row, r, h| {
                 let x = &data[r * dim..(r + 1) * dim];
@@ -181,6 +188,7 @@ impl TrainingKernel for HybridKernel {
                     *acc = v.mul_add(h, *acc);
                 }
             },
+            self.stencil.get(grid, neighborhood, radius, scale),
         );
 
         Ok(EpochAccum {

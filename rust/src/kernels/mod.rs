@@ -5,6 +5,12 @@
 //! `trainOneEpoch`): BMUs, Eq. 6 numerator/denominator, and the
 //! quantization-error sum. The coordinator allreduces accumulators across
 //! ranks and applies the codebook update.
+//!
+//! Both CPU kernels share one node-parallel accumulator
+//! ([`dense_cpu::accumulate_node_parallel_ext`]) whose Phase B picks
+//! between a dense full sweep and the windowed stencil gather built on
+//! [`crate::som::stencil::NeighborhoodStencil`] — bit-identical outputs,
+//! chosen by [`SweepMode`], observable through [`AccumStats`].
 
 pub mod accel;
 pub mod dense_cpu;
@@ -54,6 +60,68 @@ pub(crate) fn codebook_key(cb: &Codebook) -> (usize, usize, usize, u64) {
         i += step;
     }
     (w.as_ptr() as usize, cb.nodes, cb.dim, h)
+}
+
+/// Phase B strategy for the shared node-parallel accumulator
+/// (`dense_cpu::accumulate_node_parallel_ext`). Both strategies produce
+/// **bit-identical** accumulators — the stencil path iterates exactly
+/// the contributing BMUs of the full sweep in the same ascending order —
+/// so the choice is purely about speed.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Default)]
+pub enum SweepMode {
+    /// Windowed stencil gather when the displacement window is smaller
+    /// than the lattice, dense full sweep otherwise. What the kernels use.
+    #[default]
+    Auto,
+    /// Always the dense O(N·B·D) sweep over all active BMUs — the
+    /// pre-stencil reference path (benches/tests pin it to measure and
+    /// verify the stencil against it). There is deliberately no
+    /// "force stencil" variant: when the window covers the lattice no
+    /// windowed formulation exists, so forcing could only mean Auto.
+    FullSweep,
+}
+
+/// Per-pass observability from the shared accumulator: wall-clock per
+/// phase (feeds `benches/profile_epoch.rs`) and which Phase B strategy
+/// actually ran (feeds the equivalence tests).
+#[derive(Clone, Debug)]
+pub struct AccumStats {
+    /// Phase A: counting-sort bucketing + per-BMU sums.
+    pub phase_a: std::time::Duration,
+    /// Phase B: neighborhood-weighted spread (sweep or stencil gather).
+    pub phase_b: std::time::Duration,
+    /// True when Phase B ran the windowed stencil gather.
+    pub stencil: bool,
+    /// Occupied BMUs in this shard (the `B` of the complexity bounds).
+    /// Zero-scale passes short-circuit to all-zero output and report 0
+    /// here (and zero phase durations) without counting.
+    pub active_bmus: usize,
+    /// Displacement cells per node gather (0 on the full sweep).
+    pub window_cells: usize,
+}
+
+/// Geometry + schedule inputs of one accumulation pass, bundled so the
+/// extended accumulator keeps a readable signature.
+#[derive(Copy, Clone, Debug)]
+pub struct AccumConfig<'a> {
+    /// Shard rows (`bmus[..rows]` is consumed).
+    pub rows: usize,
+    /// Codebook nodes; must equal `grid.node_count()`.
+    pub nodes: usize,
+    /// Data dimension.
+    pub dim: usize,
+    /// Worker thread budget.
+    pub threads: usize,
+    /// The neuron lattice.
+    pub grid: &'a Grid,
+    /// Neighborhood function h(d; r).
+    pub neighborhood: Neighborhood,
+    /// Current cooling radius.
+    pub radius: f32,
+    /// Current learning scale.
+    pub scale: f32,
+    /// Phase B strategy.
+    pub mode: SweepMode,
 }
 
 /// A shard of training data, dense or sparse. Both variants are *fully

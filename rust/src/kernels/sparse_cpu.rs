@@ -12,9 +12,9 @@
 //! a sparse axpy. The paper notes there is no GPU variant of this kernel
 //! (irregular access patterns); likewise we offer no accel variant.
 
-use crate::kernels::dense_cpu::accumulate_node_parallel;
-use crate::kernels::{DataShard, EpochAccum, TrainingKernel};
-use crate::som::{Codebook, Grid, Neighborhood};
+use crate::kernels::dense_cpu::accumulate_node_parallel_with;
+use crate::kernels::{AccumConfig, DataShard, EpochAccum, SweepMode, TrainingKernel};
+use crate::som::{Codebook, Grid, Neighborhood, StencilCache};
 use crate::util::threadpool;
 
 pub struct SparseCpuKernel {
@@ -35,6 +35,8 @@ pub struct SparseCpuKernel {
     /// `TrainingKernel::epoch_cache_stats`).
     cache_hits: u64,
     cache_misses: u64,
+    /// Phase B stencil memo (built once per epoch, reused per chunk).
+    stencil: StencilCache,
 }
 
 impl SparseCpuKernel {
@@ -46,6 +48,7 @@ impl SparseCpuKernel {
             prepared_for: None,
             cache_hits: 0,
             cache_misses: 0,
+            stencil: StencilCache::new(),
         }
     }
 
@@ -120,7 +123,6 @@ impl TrainingKernel for SparseCpuKernel {
             self.prepare(codebook);
             self.prepared_for = Some(key);
         }
-        let x2 = m.row_sq_norms();
         let dim = codebook.dim;
         let nodes = codebook.nodes;
         let w2 = &self.w2;
@@ -146,7 +148,12 @@ impl TrainingKernel for SparseCpuKernel {
                         best = n as u32;
                     }
                 }
-                let d2 = (x2[r] + 2.0 * best_score).max(0.0);
+                // ||x||² for QE reconstruction via CsrView::row_sq_norm,
+                // computed here inside the row-parallel region (the old
+                // serial row_sq_norms() pre-pass allocated a full-shard
+                // vector and ran on one thread) — same bits: identical
+                // per-row summation order.
+                let d2 = (m.row_sq_norm(r) + 2.0 * best_score).max(0.0);
                 qe += (d2 as f64).sqrt();
                 bmus.push(best);
             }
@@ -160,15 +167,19 @@ impl TrainingKernel for SparseCpuKernel {
         }
 
         // --- Node-parallel accumulation with sparse axpy.
-        let (num, den) = accumulate_node_parallel(
-            m.rows,
-            codebook.nodes,
-            dim,
-            self.threads,
-            grid,
-            neighborhood,
-            radius,
-            scale,
+        let threads = self.threads;
+        let (num, den, _) = accumulate_node_parallel_with(
+            &AccumConfig {
+                rows: m.rows,
+                nodes: codebook.nodes,
+                dim,
+                threads,
+                grid,
+                neighborhood,
+                radius,
+                scale,
+                mode: SweepMode::Auto,
+            },
             &bmus,
             |num_row, r, h| {
                 let (cols, vals) = m.row(r);
@@ -176,6 +187,7 @@ impl TrainingKernel for SparseCpuKernel {
                     num_row[*c as usize] += h * v;
                 }
             },
+            self.stencil.get(grid, neighborhood, radius, scale),
         );
 
         Ok(EpochAccum {

@@ -185,6 +185,212 @@ impl Grid {
     pub fn default_radius0(&self) -> f32 {
         (self.rows.min(self.cols) as f32) / 2.0
     }
+
+    /// Lattice pitch along the row axis: vertical distance between
+    /// adjacent rows (1 on square grids, √3/2 on hexagonal ones). The
+    /// column pitch is 1 on both. Used to convert a neighborhood cutoff
+    /// distance into a per-axis window half-width.
+    pub fn row_pitch(&self) -> f32 {
+        match self.grid_type {
+            GridType::Square => 1.0,
+            GridType::Hexagonal => SQRT3_2,
+        }
+    }
+
+    /// Window shape along one axis for a neighborhood `cutoff` distance
+    /// (`pitch` = lattice step along that axis, `len` = axis length).
+    ///
+    /// The half-width is `floor(cutoff / pitch) +`[`WINDOW_MARGIN`] —
+    /// deliberately conservative: any lattice point *outside* the window
+    /// is more than one full step beyond the cutoff, a gap no f32
+    /// rounding in the distance computation can bridge, so the window
+    /// provably contains every displacement the thresholded sweep would
+    /// accept. (Cells inside the window but beyond the cutoff get a zero
+    /// table entry and are skipped — see `som::stencil`.) On a toroid a
+    /// window at least as wide as the axis would alias wrapped
+    /// displacements onto one node, so it degrades to [`AxisExtent::Full`]
+    /// (each physical index visited exactly once).
+    pub fn axis_extent(&self, cutoff: f32, pitch: f32, len: usize) -> AxisExtent {
+        let half = if cutoff.is_finite() && cutoff >= 0.0 {
+            let h = (cutoff / pitch).floor() + WINDOW_MARGIN as f32;
+            if h >= len as f32 {
+                len
+            } else {
+                h as usize
+            }
+        } else {
+            len
+        };
+        match self.map_type {
+            MapType::Toroid if 2 * half + 1 > len => AxisExtent::Full,
+            MapType::Toroid => AxisExtent::Window { half },
+            MapType::Planar => AxisExtent::Window {
+                half: half.min(len.saturating_sub(1)),
+            },
+        }
+    }
+
+    /// [`Self::axis_extent`] along the row axis.
+    pub fn row_extent(&self, cutoff: f32) -> AxisExtent {
+        self.axis_extent(cutoff, self.row_pitch(), self.rows)
+    }
+
+    /// [`Self::axis_extent`] along the column axis.
+    pub fn col_extent(&self, cutoff: f32) -> AxisExtent {
+        self.axis_extent(cutoff, 1.0, self.cols)
+    }
+
+    /// The physical indices an axis window reaches from `center`, as up
+    /// to two contiguous intervals in **ascending physical order** (a
+    /// toroid window that wraps splits in two). Ascending order is what
+    /// lets the stencil gather visit BMUs in ascending node-index order,
+    /// keeping its f32 summation order identical to the full sweep's.
+    ///
+    /// Each interval carries the displacement-table slot of its first
+    /// element; slots advance 1:1 with the physical index inside an
+    /// interval, so gather loops index tables without wrap arithmetic.
+    pub fn axis_intervals(&self, center: usize, ext: AxisExtent, len: usize) -> AxisIntervals {
+        debug_assert!(center < len);
+        match ext {
+            AxisExtent::Full => {
+                if center == 0 {
+                    AxisIntervals::one(AxisInterval {
+                        start: 0,
+                        end: len,
+                        slot0: 0,
+                    })
+                } else {
+                    AxisIntervals::two(
+                        AxisInterval {
+                            start: 0,
+                            end: center,
+                            slot0: len - center,
+                        },
+                        AxisInterval {
+                            start: center,
+                            end: len,
+                            slot0: 0,
+                        },
+                    )
+                }
+            }
+            AxisExtent::Window { half } => {
+                let lo = center as isize - half as isize;
+                let hi = center + half;
+                match self.map_type {
+                    MapType::Planar => {
+                        let s = lo.max(0) as usize;
+                        let e = hi.min(len - 1);
+                        AxisIntervals::one(AxisInterval {
+                            start: s,
+                            end: e + 1,
+                            slot0: s + half - center,
+                        })
+                    }
+                    MapType::Toroid if lo >= 0 && hi < len => {
+                        AxisIntervals::one(AxisInterval {
+                            start: lo as usize,
+                            end: hi + 1,
+                            slot0: 0,
+                        })
+                    }
+                    MapType::Toroid if lo < 0 => AxisIntervals::two(
+                        // Wraps below: [0, hi] then the wrapped tail.
+                        AxisInterval {
+                            start: 0,
+                            end: hi + 1,
+                            slot0: half - center,
+                        },
+                        AxisInterval {
+                            start: (lo + len as isize) as usize,
+                            end: len,
+                            slot0: 0,
+                        },
+                    ),
+                    MapType::Toroid => AxisIntervals::two(
+                        // Wraps above: the wrapped head, then [lo, len).
+                        AxisInterval {
+                            start: 0,
+                            end: hi - len + 1,
+                            slot0: len - center + half,
+                        },
+                        AxisInterval {
+                            start: lo as usize,
+                            end: len,
+                            slot0: 0,
+                        },
+                    ),
+                }
+            }
+        }
+    }
+}
+
+/// Safety margin (in lattice steps) added to every stencil window
+/// half-width, so f32 rounding in [`Grid::distance`] can never push a
+/// lattice point the thresholded sweep accepts outside the window.
+pub const WINDOW_MARGIN: usize = 2;
+
+/// Per-axis stencil window shape (see [`Grid::axis_extent`]).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum AxisExtent {
+    /// Displacements `-half..=half`; table slot = `dr + half`.
+    Window { half: usize },
+    /// Toroid axis fully covered: every physical index is visited once;
+    /// table slot = `(phys - center).rem_euclid(len)`.
+    Full,
+}
+
+impl AxisExtent {
+    /// Number of distinct displacement slots along an axis of length `len`.
+    pub fn slots(&self, len: usize) -> usize {
+        match self {
+            AxisExtent::Window { half } => 2 * half + 1,
+            AxisExtent::Full => len,
+        }
+    }
+}
+
+/// One contiguous run of physical indices inside an axis window, with
+/// the displacement-table slot of its first element (slot for physical
+/// index `i` is `slot0 + (i - start)`).
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub struct AxisInterval {
+    /// First physical index.
+    pub start: usize,
+    /// One past the last physical index.
+    pub end: usize,
+    /// Table slot of `start`.
+    pub slot0: usize,
+}
+
+/// Up to two [`AxisInterval`]s in ascending physical order.
+#[derive(Copy, Clone, Debug, Default)]
+pub struct AxisIntervals {
+    items: [AxisInterval; 2],
+    len: usize,
+}
+
+impl AxisIntervals {
+    fn one(iv: AxisInterval) -> Self {
+        AxisIntervals {
+            items: [iv, AxisInterval::default()],
+            len: 1,
+        }
+    }
+
+    fn two(a: AxisInterval, b: AxisInterval) -> Self {
+        debug_assert!(a.end <= b.start, "intervals must ascend: {a:?} {b:?}");
+        AxisIntervals {
+            items: [a, b],
+            len: 2,
+        }
+    }
+
+    /// The intervals, ascending by physical index.
+    pub fn as_slice(&self) -> &[AxisInterval] {
+        &self.items[..self.len]
+    }
 }
 
 #[cfg(test)]
@@ -292,6 +498,112 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// Canonical displacement of `p` from `center` along a wrapped or
+    /// clipped axis (test oracle).
+    fn oracle_disp(p: usize, center: usize, len: usize, mt: MapType) -> isize {
+        let raw = p as isize - center as isize;
+        match mt {
+            MapType::Planar => raw,
+            MapType::Toroid => {
+                // wrapped displacement with smallest magnitude
+                let m = raw.rem_euclid(len as isize);
+                if m * 2 > len as isize {
+                    m - len as isize
+                } else {
+                    m
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_axis_intervals_cover_window_once_with_linear_slots() {
+        prop::check("axis-intervals", |gen| {
+            let len = gen.usize_in(1, 40);
+            let center = gen.usize_in(0, len - 1);
+            let gt = *gen.choice(&[GridType::Square, GridType::Hexagonal]);
+            let mt = *gen.choice(&[MapType::Planar, MapType::Toroid]);
+            let cutoff = gen.f32_in(0.0, 12.0);
+            let g = Grid::new(len, len, gt, mt);
+            let ext = g.axis_extent(cutoff, 1.0, len);
+            let ivs = g.axis_intervals(center, ext, len);
+            let mut seen = vec![false; len];
+            let mut last_end = 0usize;
+            for iv in ivs.as_slice() {
+                prop_assert!(iv.start >= last_end, "ascending physical order");
+                prop_assert!(iv.end <= len && iv.start < iv.end, "in bounds");
+                last_end = iv.end;
+                for p in iv.start..iv.end {
+                    prop_assert!(!seen[p], "physical index {p} visited twice");
+                    seen[p] = true;
+                    let slot = iv.slot0 + (p - iv.start);
+                    match ext {
+                        AxisExtent::Window { half } => {
+                            let d = oracle_disp(p, center, len, mt);
+                            prop_assert!(
+                                d.unsigned_abs() <= half,
+                                "phys {p} outside window (d={d}, half={half})"
+                            );
+                            prop_assert!(
+                                slot as isize == d + half as isize,
+                                "slot {slot} != d {d} + half {half}"
+                            );
+                        }
+                        AxisExtent::Full => {
+                            let d = (p as isize - center as isize)
+                                .rem_euclid(len as isize);
+                            prop_assert!(slot as isize == d, "full slot {slot} != {d}");
+                        }
+                    }
+                }
+            }
+            // Completeness: every index within the window is covered.
+            if let AxisExtent::Window { half } = ext {
+                for (p, &s) in seen.iter().enumerate() {
+                    let inside = oracle_disp(p, center, len, mt).unsigned_abs() <= half;
+                    prop_assert!(s == inside, "coverage mismatch at {p}");
+                }
+            } else {
+                prop_assert!(seen.iter().all(|&s| s), "Full must cover the axis");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn axis_extent_window_contains_cutoff_plus_margin() {
+        // Any lattice point outside the window is > cutoff away (the
+        // bit-identity precondition of the stencil path).
+        for mt in [MapType::Planar, MapType::Toroid] {
+            let g = Grid::new(64, 64, GridType::Square, mt);
+            for cutoff in [0.0f32, 0.5, 1.0, 2.0, 7.3, 20.0] {
+                match g.axis_extent(cutoff, 1.0, 64) {
+                    AxisExtent::Window { half } => {
+                        assert!((half as f32) > cutoff, "half {half} vs {cutoff}");
+                    }
+                    AxisExtent::Full => assert!(2.0 * cutoff + 1.0 >= 60.0),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn axis_extent_degenerate_axes() {
+        // len-1 axes and non-finite cutoffs must not panic or alias.
+        for gt in [GridType::Square, GridType::Hexagonal] {
+            for mt in [MapType::Planar, MapType::Toroid] {
+                let g = Grid::new(1, 1, gt, mt);
+                let ext = g.axis_extent(5.0, 1.0, 1);
+                assert_eq!(ext.slots(1), 1);
+                let ivs = g.axis_intervals(0, ext, 1);
+                assert_eq!(ivs.as_slice().len(), 1);
+                assert_eq!(ivs.as_slice()[0], AxisInterval { start: 0, end: 1, slot0: 0 });
+                let inf = g.axis_extent(f32::INFINITY, 1.0, 1);
+                assert_eq!(inf.slots(1), 1);
+            }
+        }
     }
 
     #[test]

@@ -8,9 +8,11 @@ pub mod kmeans;
 pub mod neighborhood;
 pub mod pca;
 pub mod quality;
+pub mod stencil;
 pub mod umatrix;
 
 pub use codebook::Codebook;
 pub use cooling::{Cooling, Schedule};
 pub use grid::{Grid, GridType, MapType};
 pub use neighborhood::{Neighborhood, NeighborhoodKind};
+pub use stencil::{NeighborhoodStencil, StencilCache};

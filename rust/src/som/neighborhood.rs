@@ -85,6 +85,25 @@ impl Neighborhood {
         }
     }
 
+    /// Thresholded update weight exactly as the accumulation sweep
+    /// applies it: the Eq. 5 weight times the learning `scale`,
+    /// hard-zeroed beyond [`Self::cutoff`]. This is the table entry of
+    /// the stencil accumulator ([`crate::som::stencil`]): the full sweep
+    /// skips a (BMU, node) pair iff `gd > cutoff || weight·scale <= 0`,
+    /// so a zero entry encodes "skip" and precomputed tables reproduce
+    /// the sweep's decisions — and its contributions — bit-for-bit.
+    /// (Without the cutoff guard a *non-compact* gaussian would emit
+    /// tiny positive weights beyond the cutoff that the sweep never
+    /// adds.)
+    #[inline]
+    pub fn table_entry(&self, d: f32, r: f32, scale: f32) -> f32 {
+        if d > self.cutoff(r) {
+            0.0
+        } else {
+            self.weight(d, r) * scale
+        }
+    }
+
     /// Artifact variant name this neighborhood maps to (accel kernel).
     pub fn artifact_kind(&self) -> &'static str {
         match (self.kind, self.compact_support) {
@@ -146,6 +165,33 @@ mod tests {
             "gaussian_compact"
         );
         assert_eq!(Neighborhood::bubble().artifact_kind(), "bubble");
+    }
+
+    #[test]
+    fn table_entry_matches_sweep_decision() {
+        // table_entry == the full sweep's skip logic + contribution, bit
+        // for bit: zero iff (d > cutoff or weight*scale <= 0), else
+        // exactly weight*scale.
+        for nb in [
+            Neighborhood::gaussian(false),
+            Neighborhood::gaussian(true),
+            Neighborhood::bubble(),
+        ] {
+            for r in [0.3f32, 1.0, 2.5, 8.0] {
+                for scale in [0.0f32, 0.4, 1.0] {
+                    for i in 0..200 {
+                        let d = i as f32 * 0.11;
+                        let entry = nb.table_entry(d, r, scale);
+                        if d > nb.cutoff(r) {
+                            assert_eq!(entry, 0.0, "{nb:?} d={d} r={r}");
+                        } else {
+                            let h = nb.weight(d, r) * scale;
+                            assert_eq!(entry.to_bits(), h.to_bits());
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,479 @@
+//! Stencil/window neighborhood tables — the per-epoch precomputation
+//! behind the windowed Phase B accumulator (ISSUE 5 tentpole).
+//!
+//! The batch update's weight `h(d(bmu, node); r)·scale` depends only on
+//! the *grid displacement* between the BMU and the node (plus, on
+//! hexagonal grids, which rows are involved — see below), and the
+//! paper's §3.1 radius thresholding zeroes it beyond
+//! [`Neighborhood::cutoff`]. So once per accumulation pass we can tabulate
+//! every weight the sweep could ever apply over the O(r²) displacement
+//! window, and each node then gathers only from BMUs whose window
+//! reaches it: Phase B drops from O(N·B·D) to O(Σ_b window(b)·D) ≈
+//! O(B·r²·D). The gather (in `kernels::dense_cpu`) visits contributing
+//! BMUs in ascending node-index order, so the f32 summation order — and
+//! therefore every output bit — is identical to the full sweep's.
+//!
+//! ## Why hexagonal tables are keyed by the node's own row
+//!
+//! Square-grid coordinates are small integers, and toroid spans are too,
+//! so every axis delta the full sweep computes (`|xa−xb|`,
+//! `span−dx`) is *exact* in f32 — the distance truly is a function of
+//! the wrapped (|Δrow|, |Δcol|) displacement, and one shared table
+//! serves every node. Hexagonal y-coordinates are `row · √3/2` rounded
+//! to f32, and the rounded difference `f32(a·s) − f32(b·s)` is **not** a
+//! function of `a−b` alone (measured: thousands of bit mismatches vs a
+//! displacement-keyed value on a 200-row map). A table keyed by row
+//! *parity* — the obvious choice, since the x-offset only depends on
+//! parity — would therefore be bit-*close* but not bit-*identical*.
+//! Keying the table by the node's actual row (one `n_dr × n_dc` block
+//! per row) uses the very coordinates the sweep uses and restores exact
+//! equality; the x-axis side stays displacement-keyed because
+//! `c + 0.5·parity` arithmetic is exact (halves are representable).
+//!
+//! Construction cost is O(rows · r²) weight evaluations per pass
+//! (square: O(r²)), amortized against the O(B·r²·D) gather it enables.
+
+use crate::som::grid::{AxisExtent, AxisIntervals, Grid, GridType, MapType};
+use crate::som::Neighborhood;
+
+/// Precomputed neighborhood-weight tables over the displacement window
+/// of one accumulation pass (one `(radius, scale)` point of the cooling
+/// schedule).
+///
+/// Built by [`NeighborhoodStencil::build`]; consumed by the windowed
+/// Phase B in `kernels::dense_cpu::accumulate_node_parallel_ext`.
+#[derive(Clone, Debug)]
+pub struct NeighborhoodStencil {
+    rows: usize,
+    cols: usize,
+    row_ext: AxisExtent,
+    col_ext: AxisExtent,
+    n_dr: usize,
+    n_dc: usize,
+    /// `blocks × n_dr × n_dc` weights, where `blocks` is 1 on square
+    /// grids (displacement-keyed) and `rows` on hexagonal grids (keyed
+    /// by the node's own row). A zero entry means "the sweep would skip
+    /// this pair".
+    table: Vec<f32>,
+    per_row: bool,
+    /// Everything the table contents depend on (see [`Self::matches`]).
+    key: StencilKey,
+}
+
+/// The full set of inputs a stencil's tables are a function of.
+type StencilKey = (
+    usize,        // grid rows
+    usize,        // grid cols
+    GridType,
+    MapType,
+    Neighborhood,
+    u32,          // radius bits
+    u32,          // scale bits
+);
+
+fn stencil_key(grid: &Grid, nb: Neighborhood, radius: f32, scale: f32) -> StencilKey {
+    (
+        grid.rows,
+        grid.cols,
+        grid.grid_type,
+        grid.map_type,
+        nb,
+        radius.to_bits(),
+        scale.to_bits(),
+    )
+}
+
+impl NeighborhoodStencil {
+    /// Build the window tables for one pass, or `None` when windowing
+    /// cannot win:
+    ///
+    ///  * the displacement window has at least as many cells as the
+    ///    lattice (early epochs, where the cooling radius spans the
+    ///    map — or a non-compact gaussian whose 7.5·r cutoff exceeds
+    ///    the span): each node's gather would visit everything anyway;
+    ///  * the TOTAL table (`blocks · window_cells` — per-row blocks
+    ///    make this rows× larger on hexagonal grids) would exceed
+    ///    [`MAX_TABLE_CELLS_PER_NODE`] cells per lattice node: without
+    ///    this cap a large hex map at a mid-schedule radius could
+    ///    demand a multi-GB table and O(rows·r²) weight evaluations
+    ///    per pass, dwarfing the sweep it replaces.
+    ///
+    /// In either case the caller should run the dense full sweep, which
+    /// pays no table construction and no interval bookkeeping.
+    pub fn build(grid: &Grid, nb: Neighborhood, radius: f32, scale: f32) -> Option<Self> {
+        let cutoff = nb.cutoff(radius);
+        let row_ext = grid.row_extent(cutoff);
+        let col_ext = grid.col_extent(cutoff);
+        let n_dr = row_ext.slots(grid.rows);
+        let n_dc = col_ext.slots(grid.cols);
+        let per_row = grid.grid_type == GridType::Hexagonal;
+        let blocks = if per_row { grid.rows } else { 1 };
+        let window_cells = n_dr.saturating_mul(n_dc);
+        if window_cells >= grid.node_count()
+            || window_cells.saturating_mul(blocks)
+                >= grid.node_count().saturating_mul(MAX_TABLE_CELLS_PER_NODE)
+        {
+            return None;
+        }
+
+        let mut table = vec![0.0f32; blocks * n_dr * n_dc];
+        for (block, chunk) in table.chunks_exact_mut(n_dr * n_dc).enumerate() {
+            for sr in 0..n_dr {
+                // Representative row pair for this slot: the node row and
+                // the BMU row it reaches. Hexagonal blocks pin the node
+                // row to the block's row; square grids pick any in-range
+                // pair with the right displacement (the distance is an
+                // exact function of it — module docs).
+                let Some((ra, rb)) = rep_pair(row_ext, block, per_row, sr, grid.rows, grid.map_type)
+                else {
+                    continue;
+                };
+                let row = &mut chunk[sr * n_dc..(sr + 1) * n_dc];
+                for (sc, slot) in row.iter_mut().enumerate() {
+                    let Some((ca, cb)) =
+                        rep_pair(col_ext, 0, false, sc, grid.cols, grid.map_type)
+                    else {
+                        continue;
+                    };
+                    // Same argument order as the sweep: distance(bmu, node).
+                    let d = grid.distance(grid.index(rb, cb), grid.index(ra, ca));
+                    *slot = nb.table_entry(d, radius, scale);
+                }
+            }
+        }
+        Some(NeighborhoodStencil {
+            rows: grid.rows,
+            cols: grid.cols,
+            row_ext,
+            col_ext,
+            n_dr,
+            n_dc,
+            table,
+            per_row,
+            key: stencil_key(grid, nb, radius, scale),
+        })
+    }
+
+    /// True when this stencil was built for exactly these inputs — the
+    /// precondition for using it in an accumulation pass. Distances
+    /// depend only on the grid's shape/type, so two `Grid` values with
+    /// equal dimensions share tables safely.
+    pub fn matches(&self, grid: &Grid, nb: Neighborhood, radius: f32, scale: f32) -> bool {
+        self.key == stencil_key(grid, nb, radius, scale)
+    }
+
+    /// Row-axis window shape (feed to [`Grid::axis_intervals`]).
+    pub fn row_ext(&self) -> AxisExtent {
+        self.row_ext
+    }
+
+    /// Column-axis window shape (feed to [`Grid::axis_intervals`]).
+    pub fn col_ext(&self) -> AxisExtent {
+        self.col_ext
+    }
+
+    /// Displacement cells per node gather (`n_dr · n_dc`) — the `r²`
+    /// factor of the stencil complexity, reported by benches/tests.
+    pub fn window_cells(&self) -> usize {
+        self.n_dr * self.n_dc
+    }
+
+    /// The weight row for (node row `rn`, row slot `slot_r`), indexed by
+    /// column slot. Zero entries are "skip".
+    #[inline]
+    pub fn table_row(&self, rn: usize, slot_r: usize) -> &[f32] {
+        let block = if self.per_row { rn } else { 0 };
+        let off = (block * self.n_dr + slot_r) * self.n_dc;
+        &self.table[off..off + self.n_dc]
+    }
+
+    /// Physical BMU rows reachable from node row `rn`, ascending.
+    #[inline]
+    pub fn row_intervals(&self, grid: &Grid, rn: usize) -> AxisIntervals {
+        grid.axis_intervals(rn, self.row_ext, self.rows)
+    }
+
+    /// Physical BMU columns reachable from node column `cn`, ascending.
+    #[inline]
+    pub fn col_intervals(&self, grid: &Grid, cn: usize) -> AxisIntervals {
+        grid.axis_intervals(cn, self.col_ext, self.cols)
+    }
+}
+
+/// One-slot memo over [`NeighborhoodStencil::build`]. Chunked/streamed
+/// training runs one accumulation per chunk with identical
+/// `(grid, neighborhood, radius, scale)` across a whole epoch; without
+/// a memo every chunk would rebuild the same tables — on hexagonal
+/// grids up to [`MAX_TABLE_CELLS_PER_NODE`]·nodes weight evaluations,
+/// which for small chunks can rival the gather itself. Each CPU kernel
+/// owns one and hands the resolved decision to
+/// `kernels::dense_cpu::accumulate_node_parallel_with`. A "this window
+/// covers the lattice, run the dense sweep" outcome is memoized too.
+#[derive(Default, Debug)]
+pub struct StencilCache {
+    key: Option<StencilKey>,
+    value: Option<NeighborhoodStencil>,
+}
+
+impl StencilCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The Phase B decision for this pass — `Some` windowed tables or
+    /// `None` (dense sweep) — rebuilding only when the inputs changed
+    /// since the previous call.
+    ///
+    /// `scale <= 0.0` (the default `TrainingKernel::project` path)
+    /// returns `None` without touching the memo: the accumulator
+    /// short-circuits such passes to all-zero output anyway, and
+    /// building (then evicting the training-radius entry for) an
+    /// all-zero table would make every project/train interleave rebuild
+    /// tables twice.
+    pub fn get(
+        &mut self,
+        grid: &Grid,
+        nb: Neighborhood,
+        radius: f32,
+        scale: f32,
+    ) -> Option<&NeighborhoodStencil> {
+        if scale <= 0.0 {
+            return None;
+        }
+        let key = stencil_key(grid, nb, radius, scale);
+        if self.key != Some(key) {
+            self.value = NeighborhoodStencil::build(grid, nb, radius, scale);
+            self.key = Some(key);
+        }
+        self.value.as_ref()
+    }
+}
+
+/// Table-size guard for [`NeighborhoodStencil::build`]: decline to
+/// window when the total table would exceed this many cells per lattice
+/// node. Only hexagonal grids (whose tables carry a per-row block) can
+/// hit it before the window-vs-lattice check does; at 16 the table
+/// stays within the accumulators' own O(nodes·dim) memory scale (≤ 64
+/// bytes/node) and construction stays a few weight evaluations per
+/// node, while every small-radius window — the regime the stencil
+/// exists for — is untouched. Lifting it would need lazily built
+/// per-row blocks (see ROADMAP).
+pub const MAX_TABLE_CELLS_PER_NODE: usize = 16;
+
+/// Representative (node index, BMU index) pair along one axis for table
+/// slot `slot`: both in `[0, len)`, with the BMU at the slot's canonical
+/// displacement from the node. `None` when a planar window slot sticks
+/// out past the axis edge (such slots are unreachable by construction —
+/// `Grid::axis_intervals` clips to the lattice — so their entries stay
+/// zero). `pin` fixes the node index (hexagonal per-row blocks); square
+/// grids pass `pinned = false` and any in-range pair works.
+fn rep_pair(
+    ext: AxisExtent,
+    pin: usize,
+    pinned: bool,
+    slot: usize,
+    len: usize,
+    map: MapType,
+) -> Option<(usize, usize)> {
+    match ext {
+        AxisExtent::Full => {
+            let a = if pinned { pin } else { 0 };
+            Some((a, (a + slot) % len))
+        }
+        AxisExtent::Window { half } => {
+            let d = slot as isize - half as isize;
+            if pinned {
+                let b = pin as isize + d;
+                match map {
+                    MapType::Toroid => Some((pin, b.rem_euclid(len as isize) as usize)),
+                    MapType::Planar => (0..len as isize)
+                        .contains(&b)
+                        .then_some((pin, b as usize)),
+                }
+            } else {
+                match map {
+                    MapType::Toroid => Some((0, d.rem_euclid(len as isize) as usize)),
+                    MapType::Planar => {
+                        let a = d.min(0).unsigned_abs();
+                        let b = a as isize + d;
+                        (a < len && (0..len as isize).contains(&b))
+                            .then_some((a, b as usize))
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::som::grid::{GridType, MapType};
+
+    fn combos() -> Vec<Grid> {
+        let mut v = Vec::new();
+        for (r, c) in [(6, 5), (5, 8), (1, 7), (9, 1), (3, 12)] {
+            for gt in [GridType::Square, GridType::Hexagonal] {
+                for mt in [MapType::Planar, MapType::Toroid] {
+                    v.push(Grid::new(r, c, gt, mt));
+                }
+            }
+        }
+        v
+    }
+
+    fn neighborhoods() -> [Neighborhood; 3] {
+        [
+            Neighborhood::gaussian(false),
+            Neighborhood::gaussian(true),
+            Neighborhood::bubble(),
+        ]
+    }
+
+    /// The defining invariant: for every node, every BMU its window
+    /// reaches carries EXACTLY the weight the full sweep would compute,
+    /// and every BMU its window misses would be skipped by the sweep.
+    #[test]
+    fn table_matches_direct_weights_bitwise_and_covers_cutoff() {
+        let mut built = 0usize;
+        for grid in combos() {
+            for nb in neighborhoods() {
+                for radius in [0.4f32, 1.0, 1.7, 2.5] {
+                    let scale = 0.83f32;
+                    let Some(st) = NeighborhoodStencil::build(&grid, nb, radius, scale)
+                    else {
+                        continue;
+                    };
+                    built += 1;
+                    let cutoff = nb.cutoff(radius);
+                    for node in 0..grid.node_count() {
+                        let (rn, cn) = grid.position(node);
+                        let mut reached = vec![false; grid.node_count()];
+                        for riv in st.row_intervals(&grid, rn).as_slice() {
+                            for rb in riv.start..riv.end {
+                                let trow = st.table_row(rn, riv.slot0 + (rb - riv.start));
+                                for civ in st.col_intervals(&grid, cn).as_slice() {
+                                    for cb in civ.start..civ.end {
+                                        let b = grid.index(rb, cb);
+                                        reached[b] = true;
+                                        let got = trow[civ.slot0 + (cb - civ.start)];
+                                        let want =
+                                            nb.table_entry(grid.distance(b, node), radius, scale);
+                                        assert_eq!(
+                                            got.to_bits(),
+                                            want.to_bits(),
+                                            "entry ({b},{node}) {got} != {want} on \
+                                             {:?}/{:?} r={radius}",
+                                            grid.grid_type,
+                                            grid.map_type,
+                                        );
+                                    }
+                                }
+                            }
+                        }
+                        for (b, &r) in reached.iter().enumerate() {
+                            if !r {
+                                assert!(
+                                    grid.distance(b, node) > cutoff,
+                                    "window missed in-cutoff pair ({b},{node})"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        assert!(built > 30, "too few windowed cases exercised: {built}");
+    }
+
+    #[test]
+    fn build_declines_when_window_covers_lattice() {
+        // Non-compact gaussian: cutoff 7.5·r spans any small map.
+        let g = Grid::new(16, 16, GridType::Square, MapType::Planar);
+        assert!(NeighborhoodStencil::build(&g, Neighborhood::gaussian(false), 2.0, 1.0).is_none());
+        // Same radius with compact support: window is a small disc.
+        assert!(NeighborhoodStencil::build(&g, Neighborhood::gaussian(true), 2.0, 1.0).is_some());
+        // Early-epoch radius half the map: window ≥ lattice, dense wins.
+        let big = Grid::new(16, 16, GridType::Square, MapType::Toroid);
+        assert!(NeighborhoodStencil::build(&big, Neighborhood::bubble(), 8.0, 1.0).is_none());
+        assert!(NeighborhoodStencil::build(&big, Neighborhood::bubble(), 2.0, 1.0).is_some());
+    }
+
+    #[test]
+    fn window_cells_scale_with_radius_not_map() {
+        let small = Grid::new(16, 16, GridType::Square, MapType::Toroid);
+        let large = Grid::new(64, 64, GridType::Square, MapType::Toroid);
+        let st_s = NeighborhoodStencil::build(&small, Neighborhood::bubble(), 2.0, 1.0).unwrap();
+        let st_l = NeighborhoodStencil::build(&large, Neighborhood::bubble(), 2.0, 1.0).unwrap();
+        assert_eq!(st_s.window_cells(), st_l.window_cells());
+        assert!(st_l.window_cells() < large.node_count() / 40);
+    }
+
+    #[test]
+    fn zero_scale_tables_are_all_zero() {
+        // The project() path accumulates with scale 0: every entry must
+        // be a skip, exactly like the sweep's `h <= 0` guard. (12x12:
+        // an 8x8 toroid's r=2 window degrades to Full on both axes and
+        // build declines — see build_declines_when_window_covers_lattice.)
+        let g = Grid::new(12, 12, GridType::Hexagonal, MapType::Toroid);
+        let st = NeighborhoodStencil::build(&g, Neighborhood::gaussian(true), 2.0, 0.0).unwrap();
+        for rn in 0..12 {
+            for sr in 0..st.row_ext().slots(12) {
+                assert!(st.table_row(rn, sr).iter().all(|&h| h == 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn cache_memoizes_and_invalidates_per_input() {
+        let g = Grid::new(16, 16, GridType::Square, MapType::Toroid);
+        let nb = Neighborhood::gaussian(true);
+        let mut cache = StencilCache::new();
+        // Windowed decision, memoized: repeated gets agree with a fresh
+        // build bit-for-bit.
+        let fresh = NeighborhoodStencil::build(&g, nb, 2.0, 0.5).unwrap();
+        for _ in 0..3 {
+            let st = cache.get(&g, nb, 2.0, 0.5).expect("windowed");
+            assert!(st.matches(&g, nb, 2.0, 0.5));
+            assert_eq!(st.table, fresh.table);
+        }
+        // Any input change re-keys: a new radius...
+        let st = cache.get(&g, nb, 1.0, 0.5).expect("windowed");
+        assert!(st.matches(&g, nb, 1.0, 0.5) && !st.matches(&g, nb, 2.0, 0.5));
+        // ...a new scale...
+        assert!(cache.get(&g, nb, 1.0, 0.25).unwrap().matches(&g, nb, 1.0, 0.25));
+        // Zero-scale (project) passes get None and do not thrash the
+        // memo: the previous entry answers the next training call.
+        assert!(cache.get(&g, nb, 1.0, 0.0).is_none());
+        assert!(cache.get(&g, nb, 1.0, 0.25).unwrap().matches(&g, nb, 1.0, 0.25));
+        // ...and a dense-sweep outcome (radius spanning the map) is
+        // memoized as None, then flips back.
+        assert!(cache.get(&g, nb, 9.0, 0.5).is_none());
+        assert!(cache.get(&g, nb, 9.0, 0.5).is_none());
+        assert!(cache.get(&g, nb, 2.0, 0.5).is_some());
+        // An equal-shape different Grid value shares the tables (the
+        // key is geometric, not by address).
+        let g2 = Grid::new(16, 16, GridType::Square, MapType::Toroid);
+        assert!(cache.get(&g2, nb, 2.0, 0.5).unwrap().matches(&g, nb, 2.0, 0.5));
+    }
+
+    #[test]
+    fn hex_declines_oversized_per_row_tables() {
+        // Hexagonal tables carry a per-row block: a window that is
+        // smaller than the lattice can still demand a rows× larger
+        // table. Such configs must fall back to the dense sweep (the
+        // MAX_TABLE_CELLS_PER_NODE cap), while the same geometry on a
+        // square grid (one shared block) happily windows.
+        let hex = Grid::new(200, 200, GridType::Hexagonal, MapType::Planar);
+        let sq = Grid::new(200, 200, GridType::Square, MapType::Planar);
+        let nb = Neighborhood::gaussian(true);
+        // r=40: window ~95x85 ≈ 8k cells < 40k nodes, but 200 hex blocks
+        // would make ~1.6M table cells ≥ 16 * 40k.
+        assert!(NeighborhoodStencil::build(&hex, nb, 40.0, 1.0).is_none());
+        assert!(NeighborhoodStencil::build(&sq, nb, 40.0, 1.0).is_some());
+        // Small radii — the regime the stencil exists for — still window
+        // on hex.
+        let st = NeighborhoodStencil::build(&hex, nb, 4.0, 1.0).unwrap();
+        assert!(st.window_cells() * hex.rows < hex.node_count() * MAX_TABLE_CELLS_PER_NODE);
+    }
+}

@@ -42,14 +42,20 @@ impl<'a> CsrView<'a> {
         (&self.indices[a..b], &self.values[a..b])
     }
 
-    /// Squared L2 norm per row (the sparse kernel's ||x||² cache).
+    /// Squared L2 norm of one row. The sparse kernel evaluates this
+    /// inside its row-parallel search loop (each worker covers its own
+    /// rows — no serial pre-pass, no materialized norms vector); keep
+    /// the summation sequential in storage order so the value stays
+    /// bit-identical to a [`Self::row_sq_norms`] entry.
+    #[inline]
+    pub fn row_sq_norm(&self, r: usize) -> f32 {
+        let (_, vals) = self.row(r);
+        vals.iter().map(|v| v * v).sum()
+    }
+
+    /// Squared L2 norm per row (see [`Self::row_sq_norm`]).
     pub fn row_sq_norms(&self) -> Vec<f32> {
-        (0..self.rows)
-            .map(|r| {
-                let (_, vals) = self.row(r);
-                vals.iter().map(|v| v * v).sum()
-            })
-            .collect()
+        (0..self.rows).map(|r| self.row_sq_norm(r)).collect()
     }
 
     /// Densify (tests and the accel-kernel bridge).

@@ -1,0 +1,412 @@
+//! ISSUE 5 acceptance: the stencil/windowed accumulation path produces
+//! **bit-identical** results to the pre-refactor full sweep — same
+//! `num`, `den`, `bmus`, `qe_sum` bits — across every grid/map
+//! combination, every neighborhood, a radius sweep from sub-cell
+//! windows to map-covering cutoffs, and every thread count.
+//!
+//! Three layers of evidence:
+//!  * `oracle_old_path` reimplements the PRE-refactor accumulator
+//!    verbatim (scan-filter Phase A + dense-sweep Phase B) and is
+//!    compared against both [`SweepMode::FullSweep`] (pins the Phase A
+//!    counting-sort refactor) and [`SweepMode::Auto`] (pins the whole
+//!    stencil path).
+//!  * Kernel-level sweeps drive `DenseCpuKernel`/`SparseCpuKernel`
+//!    end-to-end and compare their accumulators against the forced full
+//!    sweep fed the same BMUs.
+//!  * Targeted shapes: r < 1 single-cell windows, toroid windows that
+//!    wrap both axes, tall/narrow maps where one axis degrades to Full,
+//!    the non-compact gaussian whose 7.5·r cutoff forces the dense
+//!    fast path, and thread-count invariance of the bucketed Phase A.
+
+use somoclu::kernels::dense_cpu::{accumulate_node_parallel_ext, DenseCpuKernel};
+use somoclu::kernels::sparse_cpu::SparseCpuKernel;
+use somoclu::kernels::{AccumConfig, DataShard, SweepMode, TrainingKernel};
+use somoclu::som::grid::{GridType, MapType};
+use somoclu::som::{Codebook, Grid, Neighborhood, NeighborhoodStencil};
+use somoclu::sparse::Csr;
+use somoclu::util::rng::Rng;
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str, ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{what} length ({ctx})");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}[{i}] {x:?} != {y:?} ({ctx})"
+        );
+    }
+}
+
+/// The accumulator exactly as it existed before this refactor:
+/// sequential scan-filter Phase A (row order per node), then the dense
+/// Phase B sweep over active BMUs in ascending order. Single-threaded —
+/// the node-parallel split never changed per-node arithmetic order.
+#[allow(clippy::too_many_arguments)]
+fn oracle_old_path(
+    rows: usize,
+    nodes: usize,
+    dim: usize,
+    grid: &Grid,
+    nb: Neighborhood,
+    radius: f32,
+    scale: f32,
+    bmus: &[u32],
+    data: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let cutoff = nb.cutoff(radius);
+    let mut xsum = vec![0.0f32; nodes * dim];
+    let mut cnt = vec![0.0f32; nodes];
+    for (r, &b) in bmus[..rows].iter().enumerate() {
+        let b = b as usize;
+        let x = &data[r * dim..(r + 1) * dim];
+        for (acc, v) in xsum[b * dim..(b + 1) * dim].iter_mut().zip(x) {
+            // == h * v with the h = 1.0 the old Phase A passed (1.0 * x
+            // is bitwise x).
+            *acc += v;
+        }
+        cnt[b] += 1.0;
+    }
+    let active: Vec<u32> = (0..nodes as u32)
+        .filter(|&b| cnt[b as usize] > 0.0)
+        .collect();
+    let mut num = vec![0.0f32; nodes * dim];
+    let mut den = vec![0.0f32; nodes];
+    for node in 0..nodes {
+        let mut d_acc = 0.0f32;
+        let num_row = &mut num[node * dim..(node + 1) * dim];
+        for &b in &active {
+            let gd = grid.distance(b as usize, node);
+            if gd > cutoff {
+                continue;
+            }
+            let h = nb.weight(gd, radius) * scale;
+            if h <= 0.0 {
+                continue;
+            }
+            d_acc += h * cnt[b as usize];
+            let src = &xsum[b as usize * dim..(b as usize + 1) * dim];
+            for (a, s) in num_row.iter_mut().zip(src) {
+                *a = s.mul_add(h, *a);
+            }
+        }
+        den[node] = d_acc;
+    }
+    (num, den)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_ext(
+    grid: &Grid,
+    nb: Neighborhood,
+    radius: f32,
+    scale: f32,
+    threads: usize,
+    mode: SweepMode,
+    bmus: &[u32],
+    data: &[f32],
+    dim: usize,
+) -> (Vec<f32>, Vec<f32>, somoclu::kernels::AccumStats) {
+    accumulate_node_parallel_ext(
+        &AccumConfig {
+            rows: bmus.len(),
+            nodes: grid.node_count(),
+            dim,
+            threads,
+            grid,
+            neighborhood: nb,
+            radius,
+            scale,
+            mode,
+        },
+        bmus,
+        |num_row, r, h| {
+            let x = &data[r * dim..(r + 1) * dim];
+            for (acc, v) in num_row.iter_mut().zip(x) {
+                *acc += h * v;
+            }
+        },
+    )
+}
+
+fn all_grids(rows: usize, cols: usize) -> Vec<Grid> {
+    let mut v = Vec::new();
+    for gt in [GridType::Square, GridType::Hexagonal] {
+        for mt in [MapType::Planar, MapType::Toroid] {
+            v.push(Grid::new(rows, cols, gt, mt));
+        }
+    }
+    v
+}
+
+fn neighborhoods() -> [Neighborhood; 3] {
+    [
+        Neighborhood::gaussian(false),
+        Neighborhood::gaussian(true),
+        Neighborhood::bubble(),
+    ]
+}
+
+/// The headline property: radius sweep over every grid/map/neighborhood
+/// combo, Auto and FullSweep and the pre-refactor oracle all agree bit
+/// for bit, and the sweep actually exercises BOTH Phase B strategies.
+#[test]
+fn radius_sweep_bit_identical_all_combos() {
+    let mut rng = Rng::new(0x57E2C11);
+    let (mut stencil_runs, mut dense_runs) = (0usize, 0usize);
+    for grid in all_grids(9, 11) {
+        let nodes = grid.node_count();
+        let dim = 5;
+        let rows = 64;
+        let data: Vec<f32> = (0..rows * dim).map(|_| rng.normal_f32()).collect();
+        let bmus: Vec<u32> = (0..rows).map(|_| rng.below(nodes as u64) as u32).collect();
+        for nb in neighborhoods() {
+            for radius in [0.3f32, 0.9, 1.4, 2.0, 3.1, 4.5, 7.0, 12.0] {
+                let scale = 0.77f32;
+                let ctx = format!(
+                    "{:?}/{:?} {nb:?} r={radius}",
+                    grid.grid_type, grid.map_type
+                );
+                let (o_num, o_den) = oracle_old_path(
+                    rows, nodes, dim, &grid, nb, radius, scale, &bmus, &data,
+                );
+                let (f_num, f_den, f_stats) = run_ext(
+                    &grid, nb, radius, scale, 3, SweepMode::FullSweep, &bmus, &data, dim,
+                );
+                let (a_num, a_den, a_stats) = run_ext(
+                    &grid, nb, radius, scale, 3, SweepMode::Auto, &bmus, &data, dim,
+                );
+                assert!(!f_stats.stencil);
+                if a_stats.stencil {
+                    stencil_runs += 1;
+                } else {
+                    dense_runs += 1;
+                }
+                assert_bits_eq(&f_num, &o_num, "full-sweep num vs oracle", &ctx);
+                assert_bits_eq(&f_den, &o_den, "full-sweep den vs oracle", &ctx);
+                assert_bits_eq(&a_num, &o_num, "auto num vs oracle", &ctx);
+                assert_bits_eq(&a_den, &o_den, "auto den vs oracle", &ctx);
+            }
+        }
+    }
+    assert!(stencil_runs > 25, "stencil path underexercised: {stencil_runs}");
+    assert!(dense_runs > 40, "dense path underexercised: {dense_runs}");
+}
+
+/// Dense kernel end-to-end: whole `EpochAccum` (bmus, num, den, qe_sum)
+/// bit-identical between the kernel's Auto path and the forced full
+/// sweep fed the same BMUs.
+#[test]
+fn dense_kernel_accum_bit_identical_at_stencil_radii() {
+    let mut rng = Rng::new(0xD15E);
+    for grid in all_grids(12, 10) {
+        let dim = 7;
+        let cb = Codebook::random_init(grid.node_count(), dim, &mut rng);
+        let data: Vec<f32> = (0..90 * dim).map(|_| rng.normal_f32()).collect();
+        for nb in neighborhoods() {
+            for radius in [0.6f32, 1.5, 2.5] {
+                let mut k = DenseCpuKernel::new(4);
+                let got = k
+                    .epoch_accumulate(
+                        DataShard::Dense { data: &data, dim },
+                        &cb,
+                        &grid,
+                        nb,
+                        radius,
+                        0.9,
+                    )
+                    .unwrap();
+                let (w_num, w_den, _) = run_ext(
+                    &grid, nb, radius, 0.9, 4, SweepMode::FullSweep, &got.bmus, &data, dim,
+                );
+                let ctx = format!("{:?}/{:?} {nb:?} r={radius}", grid.grid_type, grid.map_type);
+                assert_bits_eq(&got.num, &w_num, "kernel num vs full sweep", &ctx);
+                assert_bits_eq(&got.den, &w_den, "kernel den vs full sweep", &ctx);
+            }
+        }
+    }
+}
+
+/// Sparse kernel end-to-end with the sparse axpy closure.
+#[test]
+fn sparse_kernel_accum_bit_identical_at_stencil_radii() {
+    let mut rng = Rng::new(0x5A50);
+    for grid in all_grids(11, 9) {
+        let dim = 20;
+        let cb = Codebook::random_init(grid.node_count(), dim, &mut rng);
+        let m = Csr::random(70, dim, 0.25, &mut rng);
+        for nb in neighborhoods() {
+            for radius in [0.6f32, 1.6, 2.4] {
+                let mut k = SparseCpuKernel::new(3);
+                let got = k
+                    .epoch_accumulate(DataShard::Sparse(m.view()), &cb, &grid, nb, radius, 1.0)
+                    .unwrap();
+                let (w_num, w_den, _) = accumulate_node_parallel_ext(
+                    &AccumConfig {
+                        rows: m.rows,
+                        nodes: grid.node_count(),
+                        dim,
+                        threads: 3,
+                        grid: &grid,
+                        neighborhood: nb,
+                        radius,
+                        scale: 1.0,
+                        mode: SweepMode::FullSweep,
+                    },
+                    &got.bmus,
+                    |num_row, r, h| {
+                        let (cols, vals) = m.row(r);
+                        for (c, v) in cols.iter().zip(vals) {
+                            num_row[*c as usize] += h * v;
+                        }
+                    },
+                );
+                let ctx = format!("{:?}/{:?} {nb:?} r={radius}", grid.grid_type, grid.map_type);
+                assert_bits_eq(&got.num, &w_num, "sparse num vs full sweep", &ctx);
+                assert_bits_eq(&got.den, &w_den, "sparse den vs full sweep", &ctx);
+            }
+        }
+    }
+}
+
+/// r < 1: the window collapses to (nearly) a single cell and must still
+/// match — including the BMU's own full weight.
+#[test]
+fn sub_cell_radius_single_cell_window() {
+    let mut rng = Rng::new(0x5B);
+    for grid in all_grids(16, 16) {
+        let dim = 3;
+        let rows = 48;
+        let data: Vec<f32> = (0..rows * dim).map(|_| rng.normal_f32()).collect();
+        let bmus: Vec<u32> =
+            (0..rows).map(|_| rng.below(grid.node_count() as u64) as u32).collect();
+        for nb in neighborhoods() {
+            for radius in [0.05f32, 0.4, 0.99] {
+                let (o_num, o_den) = oracle_old_path(
+                    rows, grid.node_count(), dim, &grid, nb, radius, 1.0, &bmus, &data,
+                );
+                let (a_num, a_den, st) =
+                    run_ext(&grid, nb, radius, 1.0, 2, SweepMode::Auto, &bmus, &data, dim);
+                if nb.compact_support {
+                    // (Non-compact gaussians carry a 7.5·r cutoff, so
+                    // their windows are legitimately wider or dense.)
+                    assert!(st.stencil, "r={radius} should window on a 16x16 map");
+                    assert!(st.window_cells <= 35, "r<1 window stays tiny");
+                }
+                let ctx = format!("{:?}/{:?} r={radius}", grid.grid_type, grid.map_type);
+                assert_bits_eq(&a_num, &o_num, "num", &ctx);
+                assert_bits_eq(&a_den, &o_den, "den", &ctx);
+            }
+        }
+    }
+}
+
+/// Toroid maps small enough that every node's window wraps both axes,
+/// plus tall/narrow maps where one axis degrades to Full coverage.
+#[test]
+fn toroid_wrapping_and_full_axis_windows() {
+    let mut rng = Rng::new(0x7012);
+    let shapes = [(9usize, 9usize, 1.5f32), (3, 17, 2.0), (17, 3, 2.0), (5, 24, 1.8)];
+    for (rows_g, cols_g, radius) in shapes {
+        for gt in [GridType::Square, GridType::Hexagonal] {
+            let grid = Grid::new(rows_g, cols_g, gt, MapType::Toroid);
+            let dim = 4;
+            let rows = 80;
+            let data: Vec<f32> = (0..rows * dim).map(|_| rng.normal_f32()).collect();
+            let bmus: Vec<u32> =
+                (0..rows).map(|_| rng.below(grid.node_count() as u64) as u32).collect();
+            for nb in [Neighborhood::gaussian(true), Neighborhood::bubble()] {
+                let (o_num, o_den) = oracle_old_path(
+                    rows, grid.node_count(), dim, &grid, nb, radius, 0.66, &bmus, &data,
+                );
+                let (a_num, a_den, st) =
+                    run_ext(&grid, nb, radius, 0.66, 4, SweepMode::Auto, &bmus, &data, dim);
+                let ctx = format!("{rows_g}x{cols_g} {gt:?} {nb:?} r={radius}");
+                assert!(st.stencil, "these shapes must take the stencil path ({ctx})");
+                assert!(
+                    st.window_cells < grid.node_count(),
+                    "window must undercut lattice ({ctx})"
+                );
+                assert_bits_eq(&a_num, &o_num, "num", &ctx);
+                assert_bits_eq(&a_den, &o_den, "den", &ctx);
+            }
+        }
+    }
+}
+
+/// Non-compact gaussian: cutoff 7.5·r beyond the map span ⇒ the stencil
+/// declines (dense fast path) and nothing changes.
+#[test]
+fn non_compact_gaussian_takes_dense_fast_path() {
+    let mut rng = Rng::new(0xFA57);
+    let grid = Grid::new(10, 10, GridType::Hexagonal, MapType::Planar);
+    let nb = Neighborhood::gaussian(false);
+    let radius = 3.0; // cutoff 22.5 > span
+    assert!(NeighborhoodStencil::build(&grid, nb, radius, 1.0).is_none());
+    let dim = 3;
+    let rows = 40;
+    let data: Vec<f32> = (0..rows * dim).map(|_| rng.normal_f32()).collect();
+    let bmus: Vec<u32> =
+        (0..rows).map(|_| rng.below(grid.node_count() as u64) as u32).collect();
+    for mode in [SweepMode::Auto, SweepMode::FullSweep] {
+        let (num, den, st) = run_ext(&grid, nb, radius, 1.0, 2, mode, &bmus, &data, dim);
+        assert!(!st.stencil, "{mode:?} must fall back to the dense sweep");
+        assert_eq!(st.window_cells, 0);
+        let (o_num, o_den) =
+            oracle_old_path(rows, grid.node_count(), dim, &grid, nb, radius, 1.0, &bmus, &data);
+        assert_bits_eq(&num, &o_num, "num", &format!("{mode:?}"));
+        assert_bits_eq(&den, &o_den, "den", &format!("{mode:?}"));
+    }
+}
+
+/// The bucketed Phase A and the windowed Phase B are both node-owned:
+/// thread count must never change a single output bit.
+#[test]
+fn thread_count_invariance_bucketed_and_stencil() {
+    let mut rng = Rng::new(0x7C0);
+    for grid in all_grids(13, 8) {
+        let dim = 6;
+        let rows = 257; // odd, not a multiple of any thread count
+        let data: Vec<f32> = (0..rows * dim).map(|_| rng.normal_f32()).collect();
+        let bmus: Vec<u32> =
+            (0..rows).map(|_| rng.below(grid.node_count() as u64) as u32).collect();
+        for radius in [1.2f32, 6.0] {
+            let nb = Neighborhood::gaussian(true);
+            let (n1, d1, _) =
+                run_ext(&grid, nb, radius, 0.5, 1, SweepMode::Auto, &bmus, &data, dim);
+            for threads in [2usize, 3, 8, 16] {
+                let (nt, dt, _) = run_ext(
+                    &grid, nb, radius, 0.5, threads, SweepMode::Auto, &bmus, &data, dim,
+                );
+                let ctx = format!(
+                    "{:?}/{:?} r={radius} threads={threads}",
+                    grid.grid_type, grid.map_type
+                );
+                assert_bits_eq(&nt, &n1, "num", &ctx);
+                assert_bits_eq(&dt, &d1, "den", &ctx);
+            }
+        }
+    }
+}
+
+/// Empty shards and single-BMU pileups go through both paths unharmed.
+#[test]
+fn degenerate_shards() {
+    let grid = Grid::new(12, 12, GridType::Square, MapType::Toroid);
+    let nb = Neighborhood::gaussian(true);
+    let dim = 2;
+    // No rows at all.
+    let (num, den, _) = run_ext(&grid, nb, 2.0, 1.0, 4, SweepMode::Auto, &[], &[], dim);
+    assert!(num.iter().all(|&v| v == 0.0) && den.iter().all(|&v| v == 0.0));
+    // Every row lands on one BMU.
+    let rows = 100;
+    let data = vec![1.0f32; rows * dim];
+    let bmus = vec![77u32; rows];
+    let (o_num, o_den) =
+        oracle_old_path(rows, grid.node_count(), dim, &grid, nb, 2.0, 1.0, &bmus, &data);
+    let (a_num, a_den, st) =
+        run_ext(&grid, nb, 2.0, 1.0, 4, SweepMode::Auto, &bmus, &data, dim);
+    assert!(st.stencil);
+    assert_eq!(st.active_bmus, 1);
+    assert_bits_eq(&a_num, &o_num, "num", "single-bmu");
+    assert_bits_eq(&a_den, &o_den, "den", "single-bmu");
+}
