@@ -6,7 +6,8 @@
 
 mod common;
 
-use somoclu::kernels::dense_cpu::DenseCpuKernel;
+use somoclu::kernels::dense_cpu::{search_bmus_blocked, DenseCpuKernel};
+use somoclu::kernels::simd::{self, SimdKind};
 use somoclu::kernels::sparse_cpu::SparseCpuKernel;
 use somoclu::kernels::{DataShard, TrainingKernel};
 use somoclu::runtime::Manifest;
@@ -51,6 +52,48 @@ fn main() {
         "",
         macs / stats.min.as_secs_f64() / 1e9
     );
+
+    // BMU search microkernel in isolation (ISSUE 6): dispatched blocked
+    // search vs the flat (panel = N) nest vs forced-scalar, plus the raw
+    // dot8 kernel.
+    let w2 = cb.sq_norms();
+    let kind = simd::dispatch();
+    let panel = simd::default_panel_nodes(dims);
+    let stats = bench(1, 5, || {
+        search_bmus_blocked(&data, dims, &cb, &w2, 1, kind, panel)
+    });
+    print_row(
+        &format!("bmu blocked [{}]", simd::kernel_name(kind)),
+        rows,
+        &stats,
+    );
+    println!(
+        "{:>24} {:>12.2} GMAC/s (panel = {panel} nodes)",
+        "",
+        macs / stats.min.as_secs_f64() / 1e9
+    );
+    let stats = bench(1, 5, || {
+        search_bmus_blocked(&data, dims, &cb, &w2, 1, kind, cb.nodes)
+    });
+    print_row("bmu flat (panel = N)", rows, &stats);
+    if kind != SimdKind::Scalar {
+        let stats = bench(1, 5, || {
+            search_bmus_blocked(&data, dims, &cb, &w2, 1, SimdKind::Scalar, panel)
+        });
+        print_row("bmu blocked [scalar]", rows, &stats);
+    }
+    // Raw dot8: 8 rows x one codebook row, the innermost kernel.
+    let x: [&[f32]; 8] = std::array::from_fn(|k| &data[k * dims..(k + 1) * dims]);
+    let w = cb.row(0);
+    let stats = bench(2, 10, || {
+        let mut acc = 0.0f32;
+        for _ in 0..10_000 {
+            let d = simd::dot8(kind, &x, std::hint::black_box(w));
+            acc += d[0];
+        }
+        acc
+    });
+    print_row("dot8 x 10k", 80_000, &stats);
 
     // Sparse epoch at 5% density.
     let m = Csr::random(rows, dims, 0.05, &mut rng);

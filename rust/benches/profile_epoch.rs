@@ -9,9 +9,14 @@
 //!                         pre-stencil dense sweep) and `SweepMode::Auto`
 //!                         (the windowed stencil gather)
 //!
-//! The headline number is `phase_b_speedup = full / stencil` at a small
-//! radius — a machine-independent ratio (same map, same data, same
-//! machine, two algorithms), which is what the CI gate checks.
+//! The headline numbers are machine-independent ratios (same map, same
+//! data, same machine, two algorithms), which is what the CI gates
+//! check:
+//!
+//!   * `phase_b_speedup = full / stencil` at a small radius (ISSUE 5)
+//!   * `bmu_speedup = naive / blocked` — the cache-blocked, dispatched
+//!     BMU microkernel vs a naive per-row scalar scan (ISSUE 6). The
+//!     BMU search is radius-independent, so one ratio covers every lane.
 //!
 //! Modes (mirroring benches/stream_memory.rs):
 //!
@@ -20,15 +25,21 @@
 //! * `--json PATH`   write the phase table as JSON (BENCH_epoch.json)
 //! * `--check PATH`  regression gate: fail if the small-radius Phase B
 //!                   speedup falls below the baseline's
-//!                   `min_phase_b_speedup`; a null baseline passes
+//!                   `min_phase_b_speedup`, or the BMU speedup below
+//!                   `min_bmu_speedup`; a null baseline passes
 //!                   (bootstrap). `--json` and `--check` may share the
 //!                   path — the baseline is read before the write.
 //!
-//! The bench also asserts Phase B bit-identity (num/den) between the
-//! two sweep modes on every lane, so a CI perf run doubles as an
-//! equivalence check under release codegen.
+//! The bench also asserts, under release codegen on every CI perf run:
+//! Phase B bit-identity (num/den) between the two sweep modes on every
+//! lane; BMU/distance bit-identity between the panel-tiled and flat
+//! (panel = N) blocked search; and BMU/distance bit-identity between
+//! the naive scalar reference and the blocked search in Scalar kind.
 
-use somoclu::kernels::dense_cpu::{accumulate_node_parallel_ext, DenseCpuKernel};
+use somoclu::kernels::dense_cpu::{
+    accumulate_node_parallel_ext, dot_unrolled, search_bmus_blocked, DenseCpuKernel,
+};
+use somoclu::kernels::simd::{self, SimdKind};
 use somoclu::kernels::{AccumConfig, DataShard, SweepMode, TrainingKernel};
 use somoclu::som::{Codebook, Grid, GridType, MapType, Neighborhood};
 use somoclu::util::json::Json;
@@ -64,10 +75,13 @@ fn main() {
     // The committed floor is carried forward into the artifact we write:
     // committing a CI artifact verbatim over the baseline (the
     // documented refresh workflow) must not silently disable the gate.
-    let baseline_floor = baseline
+    let baseline_json = baseline.as_ref().and_then(|text| Json::parse(text).ok());
+    let baseline_floor = baseline_json
         .as_ref()
-        .and_then(|text| Json::parse(text).ok())
         .and_then(|json| json.get("min_phase_b_speedup").and_then(|v| v.as_f64()));
+    let baseline_bmu_floor = baseline_json
+        .as_ref()
+        .and_then(|json| json.get("min_bmu_speedup").and_then(|v| v.as_f64()));
 
     let side = 128usize; // the ISSUE 5 acceptance geometry
     let (rows, dim) = if quick { (4096, 32) } else { (16384, 128) };
@@ -92,6 +106,72 @@ fn main() {
         kernel.project(shard, &cb, &grid, nb).unwrap()
     });
     println!("\nBMU search: {t_search:.3}s ({:.0} rows/s)", rows as f64 / t_search);
+
+    // --- BMU microkernel lanes (ISSUE 6): naive per-row scalar scan vs
+    // the cache-blocked dispatched search, same threads, same data —
+    // algorithm vs algorithm, so the ratio is machine-independent.
+    let kind = simd::dispatch();
+    let w2 = cb.sq_norms();
+    let naive_search = || -> (Vec<u32>, Vec<f32>) {
+        let parts = threadpool::parallel_ranges(rows, threads, |_, range| {
+            let mut bmus = Vec::with_capacity(range.len());
+            let mut dists = Vec::with_capacity(range.len());
+            for r in range {
+                let x = &data[r * dim..(r + 1) * dim];
+                let x2: f32 = x.iter().map(|v| v * v).sum();
+                let (mut best, mut best_score) = (0u32, f32::INFINITY);
+                for n in 0..cb.nodes {
+                    let s = 0.5 * w2[n] - dot_unrolled(x, cb.row(n));
+                    if s < best_score {
+                        best_score = s;
+                        best = n as u32;
+                    }
+                }
+                bmus.push(best);
+                dists.push((x2 + 2.0 * best_score).max(0.0));
+            }
+            (bmus, dists)
+        });
+        let mut b = Vec::with_capacity(rows);
+        let mut d = Vec::with_capacity(rows);
+        for (pb, pd) in parts {
+            b.extend(pb);
+            d.extend(pd);
+        }
+        (b, d)
+    };
+    let panel = simd::default_panel_nodes(dim);
+    let (naive_out, t_bmu_naive) = best_secs(reps, naive_search);
+    let (blocked_out, t_bmu_blocked) = best_secs(reps, || {
+        search_bmus_blocked(&data, dim, &cb, &w2, threads, kind, panel)
+    });
+    let (nopanel_out, t_bmu_nopanel) = best_secs(reps, || {
+        search_bmus_blocked(&data, dim, &cb, &w2, threads, kind, cb.nodes)
+    });
+    // Exact-BMU contract under release codegen, every CI perf run.
+    let search_bits_eq = |a: &(Vec<u32>, Vec<f32>), b: &(Vec<u32>, Vec<f32>), what: &str| {
+        assert_eq!(a.0, b.0, "{what}: BMUs diverged");
+        assert!(
+            a.1.iter().zip(&b.1).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "{what}: distance bits diverged"
+        );
+    };
+    search_bits_eq(&blocked_out, &nopanel_out, "panel vs flat blocked search");
+    let scalar_blocked = if kind == SimdKind::Scalar {
+        blocked_out.clone()
+    } else {
+        search_bmus_blocked(&data, dim, &cb, &w2, threads, SimdKind::Scalar, panel)
+    };
+    search_bits_eq(&naive_out, &scalar_blocked, "naive scalar vs blocked scalar");
+    drop((naive_out, blocked_out, nopanel_out, scalar_blocked));
+    let bmu_speedup = t_bmu_naive / t_bmu_blocked;
+    let bmu_panel_speedup = t_bmu_nopanel / t_bmu_blocked;
+    println!(
+        "BMU microkernel [{}]: naive {t_bmu_naive:.3}s, blocked {t_bmu_blocked:.3}s \
+         ({bmu_speedup:.2}x; panel tiling alone {bmu_panel_speedup:.2}x over flat, \
+         panel = {panel} nodes)",
+        simd::kernel_name(kind)
+    );
 
     println!(
         "\n{:>7} {:>11} {:>14} {:>16} {:>9} {:>8} {:>8}",
@@ -189,44 +269,70 @@ fn main() {
     );
 
     if let Some(path) = &json_path {
-        let json = render_json(quick, side, rows, dim, t_search, &lanes, speedup, baseline_floor);
+        let json = render_json(&RenderInputs {
+            quick,
+            side,
+            rows,
+            dim,
+            bmu_search: t_search,
+            bmu_kernel: simd::kernel_name(kind),
+            bmu_naive: t_bmu_naive,
+            bmu_blocked: t_bmu_blocked,
+            bmu_speedup,
+            bmu_panel_speedup,
+            panel_nodes: panel,
+            lanes: &lanes,
+            gate_speedup: speedup,
+            floor: baseline_floor,
+            bmu_floor: baseline_bmu_floor,
+        });
         std::fs::write(path, &json).unwrap_or_else(|e| panic!("--json {path}: {e}"));
         println!("wrote {path}");
     }
     if let Some(text) = baseline {
-        match check_gate(&text, speedup) {
-            Ok(msg) => println!("stencil gate: {msg}"),
+        match check_gate(&text, speedup, bmu_speedup) {
+            Ok(msg) => println!("perf gates: {msg}"),
             Err(msg) => {
-                eprintln!("stencil gate FAILED: {msg}");
+                eprintln!("perf gate FAILED: {msg}");
                 std::process::exit(1);
             }
         }
     }
 }
 
-/// Hand-rendered JSON (no serde in the tree; fixed ASCII keys + finite
-/// numbers, same approach as stream_memory.rs). `floor` is the
-/// baseline's `min_phase_b_speedup`, carried forward verbatim so the
-/// artifact can be committed over the baseline without un-arming the
-/// gate.
-#[allow(clippy::too_many_arguments)]
-fn render_json(
+/// Everything `render_json` needs, bundled to keep the call readable.
+struct RenderInputs<'a> {
     quick: bool,
     side: usize,
     rows: usize,
     dim: usize,
     bmu_search: f64,
-    lanes: &[Lane],
+    bmu_kernel: &'a str,
+    bmu_naive: f64,
+    bmu_blocked: f64,
+    bmu_speedup: f64,
+    bmu_panel_speedup: f64,
+    panel_nodes: usize,
+    lanes: &'a [Lane],
     gate_speedup: f64,
     floor: Option<f64>,
-) -> String {
-    let lane_objs: Vec<String> = lanes
+    bmu_floor: Option<f64>,
+}
+
+/// Hand-rendered JSON (no serde in the tree; fixed ASCII keys + finite
+/// numbers, same approach as stream_memory.rs). `floor`/`bmu_floor` are
+/// the baseline's `min_phase_b_speedup`/`min_bmu_speedup`, carried
+/// forward verbatim so the artifact can be committed over the baseline
+/// without un-arming either gate.
+fn render_json(r: &RenderInputs<'_>) -> String {
+    let lane_objs: Vec<String> = r
+        .lanes
         .iter()
         .map(|l| {
             format!(
                 "    {{\"radius\": {:.1}, \"phase_a\": {:.4}, \"phase_b_full\": {:.4}, \
                  \"phase_b_stencil\": {:.4}, \"speedup\": {:.3}, \"window_cells\": {}, \
-                 \"active_bmus\": {}, \"stencil_used\": {}}}",
+                 \"active_bmus\": {}, \"stencil_used\": {}, \"bmu_speedup\": {:.3}}}",
                 l.radius,
                 l.phase_a,
                 l.phase_b_full,
@@ -235,43 +341,84 @@ fn render_json(
                 l.window_cells,
                 l.active_bmus,
                 l.stencil_used,
+                // The BMU phase is radius-independent: every lane's
+                // search sped up by the same measured ratio.
+                r.bmu_speedup,
             )
         })
         .collect();
-    let floor_str = match floor {
+    let floor_json = |f: Option<f64>| match f {
         Some(f) if f.is_finite() => format!("{f:.3}"),
         _ => "null".to_string(),
     };
     format!(
-        "{{\n  \"schema\": \"somoclu-epoch-bench/v1\",\n  \"quick\": {quick},\n  \
-         \"map\": \"{side}x{side} square planar\",\n  \"rows\": {rows},\n  \
-         \"dim\": {dim},\n  \"bmu_search_secs\": {bmu_search:.4},\n  \
+        "{{\n  \"schema\": \"somoclu-epoch-bench/v2\",\n  \"quick\": {},\n  \
+         \"map\": \"{}x{} square planar\",\n  \"rows\": {},\n  \
+         \"dim\": {},\n  \"bmu_search_secs\": {:.4},\n  \
+         \"bmu_kernel\": \"{}\",\n  \"bmu_naive_secs\": {:.4},\n  \
+         \"bmu_blocked_secs\": {:.4},\n  \"bmu_speedup\": {:.3},\n  \
+         \"bmu_panel_speedup\": {:.3},\n  \"bmu_panel_nodes\": {},\n  \
          \"lanes\": [\n{}\n  ],\n  \
-         \"phase_b_speedup_r4\": {gate_speedup:.3},\n  \
-         \"min_phase_b_speedup\": {floor_str}\n}}\n",
+         \"phase_b_speedup_r4\": {:.3},\n  \
+         \"min_phase_b_speedup\": {},\n  \
+         \"min_bmu_speedup\": {}\n}}\n",
+        r.quick,
+        r.side,
+        r.side,
+        r.rows,
+        r.dim,
+        r.bmu_search,
+        r.bmu_kernel,
+        r.bmu_naive,
+        r.bmu_blocked,
+        r.bmu_speedup,
+        r.bmu_panel_speedup,
+        r.panel_nodes,
         lane_objs.join(",\n"),
+        r.gate_speedup,
+        floor_json(r.floor),
+        floor_json(r.bmu_floor),
     )
 }
 
-/// The CI gate: the r=4 Phase B speedup (stencil vs full sweep) must
-/// not fall below the committed baseline's `min_phase_b_speedup`. A
-/// dimensionless algorithm-vs-algorithm ratio on identical inputs, so
-/// shared runners don't flake it; a baseline without the number passes
+/// The CI gates: the r=4 Phase B speedup (stencil vs full sweep) must
+/// not fall below the committed baseline's `min_phase_b_speedup`, and
+/// the BMU-search speedup (blocked microkernel vs naive scalar scan)
+/// not below `min_bmu_speedup`. Both are dimensionless
+/// algorithm-vs-algorithm ratios on identical inputs, so shared runners
+/// don't flake them; a baseline missing a number passes that gate
 /// (bootstrap state).
-fn check_gate(baseline_text: &str, speedup: f64) -> Result<String, String> {
+fn check_gate(
+    baseline_text: &str,
+    speedup: f64,
+    bmu_speedup: f64,
+) -> Result<String, String> {
     let json = Json::parse(baseline_text)
         .map_err(|e| format!("baseline is not valid JSON: {e:?}"))?;
+    let mut msgs = Vec::new();
     match json.get("min_phase_b_speedup").and_then(|v| v.as_f64()) {
-        None => Ok("baseline has no speedup floor (bootstrap run) - gate passes".into()),
+        None => msgs.push("no phase B floor (bootstrap) - passes".to_string()),
         Some(floor) => {
             if speedup < floor {
-                Err(format!(
+                return Err(format!(
                     "phase B stencil speedup {speedup:.2}x fell below the \
                      baseline floor {floor:.2}x"
-                ))
-            } else {
-                Ok(format!("speedup {speedup:.2}x above the floor {floor:.2}x"))
+                ));
             }
+            msgs.push(format!("phase B {speedup:.2}x >= floor {floor:.2}x"));
         }
     }
+    match json.get("min_bmu_speedup").and_then(|v| v.as_f64()) {
+        None => msgs.push("no BMU floor (bootstrap) - passes".to_string()),
+        Some(floor) => {
+            if bmu_speedup < floor {
+                return Err(format!(
+                    "BMU microkernel speedup {bmu_speedup:.2}x fell below the \
+                     baseline floor {floor:.2}x"
+                ));
+            }
+            msgs.push(format!("BMU {bmu_speedup:.2}x >= floor {floor:.2}x"));
+        }
+    }
+    Ok(msgs.join("; "))
 }

@@ -18,13 +18,19 @@
 //!
 //! The BMU inner loop uses the same Gram-trick the GPU kernel exploits:
 //! argmin_n ||x||² + ||w_n||² − 2·x·w_n  =  argmin_n (||w_n||²/2 − x·w_n),
-//! turning the distance scan into dot products computed by an 8-row
-//! register-blocked FMA microkernel (see §Perf in EXPERIMENTS.md for the
-//! measured 13x iteration log on this path).
+//! turning the distance scan into dot products computed by the
+//! cache-blocked, runtime-dispatched microkernel in
+//! [`crate::kernels::simd`]: 8-row register blocks × L2-resident
+//! codebook panels (see [`search_bmus_blocked`]).
 
+use crate::kernels::simd::{self, SimdKind, BLOCK_ROWS};
 use crate::kernels::{AccumConfig, AccumStats, DataShard, EpochAccum, SweepMode, TrainingKernel};
 use crate::som::{Codebook, Grid, Neighborhood, NeighborhoodStencil, StencilCache};
 use crate::util::threadpool;
+
+/// Historical re-export: the scalar dot kernel moved to
+/// [`crate::kernels::simd`] with the ISSUE 6 microkernel refactor.
+pub use crate::kernels::simd::dot_unrolled;
 
 pub struct DenseCpuKernel {
     pub threads: usize,
@@ -57,7 +63,9 @@ impl DenseCpuKernel {
         }
     }
 
-    /// BMU per row + per-row winning squared distance.
+    /// BMU per row + per-row winning squared distance, via the blocked
+    /// microkernel with the process-wide dispatched [`SimdKind`] and the
+    /// default L2 panel size.
     fn search_bmus(
         &self,
         data: &[f32],
@@ -65,160 +73,106 @@ impl DenseCpuKernel {
         codebook: &Codebook,
         w2: &[f32],
     ) -> (Vec<u32>, Vec<f32>) {
-        let rows = data.len() / dim;
-        let parts = threadpool::parallel_ranges(rows, self.threads, |_, range| {
-            let mut bmus = Vec::with_capacity(range.len());
-            let mut dists = Vec::with_capacity(range.len());
-            // Register-block over 8 rows: each codebook row streams from
-            // cache once per 8 data rows (§Perf: the BMU search is
-            // codebook-bandwidth bound; 8 rows ≈ the ymm register budget).
-            const B: usize = 8;
-            let mut it = range.clone().peekable();
-            while let Some(r0) = it.next() {
-                let mut block = [r0; B];
-                let mut blen = 1;
-                while blen < B {
-                    match it.next() {
-                        Some(r) => {
-                            block[blen] = r;
-                            blen += 1;
-                        }
-                        None => break,
-                    }
-                }
-                let x: [&[f32]; B] =
-                    std::array::from_fn(|k| &data[block[k] * dim..(block[k] + 1) * dim]);
-                // ||x||² for the block, hoisted into block setup: one
-                // pass while the rows are being brought into cache for
-                // the scan, instead of a second walk over each row after
-                // it. Scalar sequential sum on purpose — the QE bits
-                // must not move (golden fixtures and the sparse/dense
-                // parity tests pin them).
-                let mut x2 = [0.0f32; B];
-                for k in 0..blen {
-                    x2[k] = x[k].iter().map(|v| v * v).sum();
-                }
-                let mut best = [0u32; B];
-                let mut best_score = [f32::INFINITY; B];
-                for n in 0..codebook.nodes {
-                    let w = codebook.row(n);
-                    let half_w2 = 0.5 * w2[n];
-                    // score = ||w||²/2 − x·w (argmin-equivalent to the
-                    // full squared distance); 8 rows share this w.
-                    let dots = dot8(&x, w);
-                    for k in 0..blen {
-                        let score = half_w2 - dots[k];
-                        if score < best_score[k] {
-                            best_score[k] = score;
-                            best[k] = n as u32;
-                        }
-                    }
-                }
-                for k in 0..blen {
-                    // Reconstruct the true squared distance for QE.
-                    let d2 = (x2[k] + 2.0 * best_score[k]).max(0.0);
-                    bmus.push(best[k]);
-                    dists.push(d2);
-                }
-            }
-            (bmus, dists)
-        });
-        let mut bmus = Vec::with_capacity(rows);
-        let mut dists = Vec::with_capacity(rows);
-        for (b, d) in parts {
-            bmus.extend(b);
-            dists.extend(d);
-        }
-        (bmus, dists)
+        search_bmus_blocked(
+            data,
+            dim,
+            codebook,
+            w2,
+            self.threads,
+            simd::dispatch(),
+            simd::default_panel_nodes(dim),
+        )
     }
 }
 
-/// Eight dot products against a shared `w`.
+/// Cache-blocked BMU search: per row, the winning node index and the
+/// reconstructed squared distance `||x − w_bmu||²` (clamped at 0).
 ///
-/// On x86-64 with AVX2+FMA this uses explicit intrinsics: LLVM's
-/// auto-vectorizer turns the natural nested loop into cross-row shuffle
-/// soup (xmm inserts/shuffles around each FMA — measured 5x off peak),
-/// while the intrinsic kernel is 8 packed FMAs + 9 contiguous loads per
-/// 8-lane chunk and the shared `w` load amortizes across all rows.
-/// Portable scalar fallback elsewhere.
-#[inline]
-fn dot8(x: &[&[f32]; 8], w: &[f32]) -> [f32; 8] {
-    #[cfg(target_arch = "x86_64")]
-    {
-        // AVX-512 tried and reverted: no gain over AVX2 on this part
-        // (single 512-bit FMA unit + downclock) — see EXPERIMENTS.md §Perf.
-        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
-            // SAFETY: feature-checked above; slices are read in 8-lane
-            // chunks strictly within bounds.
-            return unsafe { dot8_avx2(x, w) };
-        }
-    }
-    let mut out = [0.0f32; 8];
-    for k in 0..8 {
-        out[k] = dot_unrolled(x[k], w);
-    }
-    out
-}
-
-#[cfg(target_arch = "x86_64")]
-#[target_feature(enable = "avx2,fma")]
-unsafe fn dot8_avx2(x: &[&[f32]; 8], w: &[f32]) -> [f32; 8] {
-    use std::arch::x86_64::*;
-    let d = w.len();
-    let chunks = d / 8;
-    unsafe {
-        let mut acc = [_mm256_setzero_ps(); 8];
-        let wp = w.as_ptr();
-        let xp: [*const f32; 8] = std::array::from_fn(|k| x[k].as_ptr());
-        for c in 0..chunks {
-            let o = (c * 8) as isize;
-            let wv = _mm256_loadu_ps(wp.offset(o));
-            for k in 0..8 {
-                acc[k] =
-                    _mm256_fmadd_ps(_mm256_loadu_ps(xp[k].offset(o)), wv, acc[k]);
+/// Loop nest per worker range (§Perf: the search is codebook-bandwidth
+/// bound):
+///
+/// * **panels outer** — the codebook is cut into `panel_nodes`-row
+///   N-panels (size them for L2 via [`simd::default_panel_nodes`]); each
+///   panel streams from DRAM once per worker range and is then re-read
+///   from cache by every row block, instead of the whole N·D codebook
+///   streaming once per 8-row block;
+/// * **8-row register blocks inner** — [`simd::bmu_scan_panel`] folds a
+///   panel into each block's running argmin.
+///
+/// Per-row argmin state persists across panels, so every row still sees
+/// nodes 0..N in ascending order: BMUs, Gram scores, and reconstructed
+/// distances are bit-identical to the pre-panel flat scan for the given
+/// `kind` (ties to the lowest node index, also across panel boundaries),
+/// and independent of both `threads` and `panel_nodes` —
+/// `rust/tests/bmu_search_equivalence.rs` pins all of this against a
+/// verbatim copy of the pre-refactor search.
+///
+/// `w2` must hold `||w_n||²` for every node (see `Codebook::sq_norms`).
+pub fn search_bmus_blocked(
+    data: &[f32],
+    dim: usize,
+    codebook: &Codebook,
+    w2: &[f32],
+    threads: usize,
+    kind: SimdKind,
+    panel_nodes: usize,
+) -> (Vec<u32>, Vec<f32>) {
+    assert!(dim > 0 && data.len() % dim == 0, "ragged data buffer");
+    assert_eq!(w2.len(), codebook.nodes, "w2 must cover every node");
+    let rows = data.len() / dim;
+    let nodes = codebook.nodes;
+    let panel_nodes = panel_nodes.max(1);
+    let parts = threadpool::parallel_ranges(rows, threads, |_, range| {
+        let cnt = range.len();
+        let mut best = vec![0u32; cnt];
+        let mut score = vec![f32::INFINITY; cnt];
+        let mut n0 = 0usize;
+        while n0 < nodes {
+            let n1 = (n0 + panel_nodes).min(nodes);
+            let panel = &codebook.weights[n0 * dim..n1 * dim];
+            let pw2 = &w2[n0..n1];
+            let mut off = 0usize;
+            while off < cnt {
+                let blen = (cnt - off).min(BLOCK_ROWS);
+                let r0 = range.start + off;
+                // Lanes blen.. pad with the block's last row; their
+                // results are never read back.
+                let x: [&[f32]; BLOCK_ROWS] = std::array::from_fn(|k| {
+                    let r = r0 + k.min(blen - 1);
+                    &data[r * dim..(r + 1) * dim]
+                });
+                let mut b = [0u32; BLOCK_ROWS];
+                let mut s = [f32::INFINITY; BLOCK_ROWS];
+                b[..blen].copy_from_slice(&best[off..off + blen]);
+                s[..blen].copy_from_slice(&score[off..off + blen]);
+                simd::bmu_scan_panel(kind, &x, blen, panel, dim, pw2, n0 as u32, &mut b, &mut s);
+                best[off..off + blen].copy_from_slice(&b[..blen]);
+                score[off..off + blen].copy_from_slice(&s[..blen]);
+                off += blen;
             }
+            n0 = n1;
         }
-        #[inline]
-        unsafe fn hsum(v: std::arch::x86_64::__m256) -> f32 {
-            unsafe {
-                let lo = _mm256_castps256_ps128(v);
-                let hi = _mm256_extractf128_ps(v, 1);
-                let s = _mm_add_ps(lo, hi);
-                let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
-                let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
-                _mm_cvtss_f32(s)
-            }
-        }
-        let mut out: [f32; 8] = std::array::from_fn(|k| hsum(acc[k]));
-        for i in chunks * 8..d {
-            for k in 0..8 {
-                out[k] = x[k][i].mul_add(w[i], out[k]);
-            }
-        }
-        out
+        let dists: Vec<f32> = range
+            .clone()
+            .zip(&score)
+            .map(|(r, &sc)| {
+                // Reconstruct the true squared distance for QE. Scalar
+                // sequential ||x||² on purpose — the QE bits must not
+                // move (golden fixtures and the sparse/dense parity
+                // tests pin them).
+                let x2: f32 = data[r * dim..(r + 1) * dim].iter().map(|v| v * v).sum();
+                (x2 + 2.0 * sc).max(0.0)
+            })
+            .collect();
+        (best, dists)
+    });
+    let mut bmus = Vec::with_capacity(rows);
+    let mut dists = Vec::with_capacity(rows);
+    for (b, d) in parts {
+        bmus.extend(b);
+        dists.extend(d);
     }
-}
-
-/// Dot product with 8 independent accumulators: breaks the sequential
-/// FP dependency chain so the compiler vectorizes + pipelines it (§Perf:
-/// 4.5x on the BMU search vs the naive single-accumulator loop).
-#[inline]
-pub fn dot_unrolled(x: &[f32], w: &[f32]) -> f32 {
-    debug_assert_eq!(x.len(), w.len());
-    let chunks = x.len() / 8;
-    let mut acc = [0.0f32; 8];
-    for c in 0..chunks {
-        let xb = &x[c * 8..c * 8 + 8];
-        let wb = &w[c * 8..c * 8 + 8];
-        for k in 0..8 {
-            acc[k] = xb[k].mul_add(wb[k], acc[k]);
-        }
-    }
-    let mut tail = 0.0f32;
-    for i in chunks * 8..x.len() {
-        tail = x[i].mul_add(w[i], tail);
-    }
-    (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7])) + tail
+    (bmus, dists)
 }
 
 /// Node-parallel accumulation — the historical 10-argument surface,

@@ -11,10 +11,15 @@
 //! between a dense full sweep and the windowed stencil gather built on
 //! [`crate::som::stencil::NeighborhoodStencil`] — bit-identical outputs,
 //! chosen by [`SweepMode`], observable through [`AccumStats`].
+//!
+//! They also share the cache-blocked, runtime-dispatched BMU-search
+//! microkernel in [`simd`] (8-row register blocks × L2-resident codebook
+//! panels, scalar / AVX2+FMA resolved once per process).
 
 pub mod accel;
 pub mod dense_cpu;
 pub mod hybrid;
+pub mod simd;
 pub mod sparse_cpu;
 
 use crate::som::{Codebook, Grid, Neighborhood};

@@ -1,0 +1,650 @@
+//! BMU-search microkernel: cache-blocked codebook panels with runtime
+//! SIMD dispatch (ISSUE 6 tentpole).
+//!
+//! The O(S·N·D) distance search is a disguised GEMM — `argmin_n ||x||² +
+//! ||w_n||² − 2·x·w_n = argmin_n (||w_n||²/2 − x·w_n)` — and after the
+//! stencil accumulator (ISSUE 5) it dominates every lane of
+//! `benches/profile_epoch.rs`. So it gets GEMM treatment:
+//!
+//! * **Register blocking** — 8 data rows share each codebook row
+//!   ([`BLOCK_ROWS`]; ≈ the ymm register budget), computed by an 8-way
+//!   FMA dot kernel ([`dot8`]).
+//! * **Cache blocking** — the codebook is cut into L2-resident
+//!   *N-panels* ([`default_panel_nodes`]): each panel streams from DRAM
+//!   once and is then re-read from L2 by every 8-row block in a worker's
+//!   range, instead of the whole N·D codebook streaming from DRAM once
+//!   per block. No packed/transposed layout is needed: the codebook is
+//!   row-major, so an N-panel is already one contiguous slab, and
+//!   repacking could only perturb the dot-product bit patterns the
+//!   exact-BMU contract pins.
+//! * **One dispatch point** — [`dispatch`] detects AVX2+FMA once per
+//!   process (overridable with `SOMOCLU_FORCE_SCALAR=1` for debugging)
+//!   and every scan takes the resolved [`SimdKind`] as a parameter, so
+//!   the hot loops contain no per-call feature detection.
+//!
+//! ## The exact-BMU contract
+//!
+//! For a fixed [`SimdKind`], every function here produces **bit-identical**
+//! scores, argmin indices, and reconstructed distances to the pre-panel
+//! 8-row block scan (`rust/tests/bmu_search_equivalence.rs` pins this
+//! against a verbatim copy of the old code):
+//!
+//! * the AVX2 `dot8` kernel is unchanged byte for byte;
+//! * the scalar `dot8` is 8× [`dot_unrolled`], the historical scalar
+//!   fallback, bit for bit;
+//! * panel tiling only re-nests the loops — each row still visits nodes
+//!   in ascending index order, so the `score < best` running argmin
+//!   (ties resolved to the **lowest node index**, including across panel
+//!   boundaries) evolves through the exact same sequence of updates.
+//!
+//! Scalar and AVX2 kinds are *not* bit-identical to each other (their
+//! dot reduction trees differ, as they always have); the contract is
+//! per-kind, matching what the pre-refactor per-call detection selected
+//! on the same machine.
+
+use std::sync::OnceLock;
+
+/// Data rows per register block: each codebook row is loaded once per
+/// block and shared by all 8 row accumulators.
+pub const BLOCK_ROWS: usize = 8;
+
+/// Which BMU-search kernel runs. Resolved once per process by
+/// [`dispatch`]; every scan in this module takes it as an explicit
+/// parameter so tests can pin a kind without touching the environment.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum SimdKind {
+    /// Portable scalar kernel ([`dot_unrolled`] ×8). Forced by
+    /// `SOMOCLU_FORCE_SCALAR=1`.
+    Scalar,
+    /// Explicit AVX2+FMA intrinsics (x86-64 with both features).
+    Avx2Fma,
+}
+
+/// Human-readable kernel name (`somoclu` prints it in its run summary;
+/// see also [`active_kernel_name`]).
+pub fn kernel_name(kind: SimdKind) -> &'static str {
+    match kind {
+        SimdKind::Scalar => "scalar",
+        SimdKind::Avx2Fma => "avx2+fma",
+    }
+}
+
+/// The one feature-detection point: AVX2+FMA on x86-64 unless
+/// `SOMOCLU_FORCE_SCALAR` is set to anything but `0`/empty, scalar
+/// otherwise. Cached for the process lifetime — the hot loops never
+/// re-detect (the pre-refactor code ran `is_x86_feature_detected!` per
+/// 8-row dot call).
+pub fn dispatch() -> SimdKind {
+    static KIND: OnceLock<SimdKind> = OnceLock::new();
+    *KIND.get_or_init(|| {
+        let forced = std::env::var("SOMOCLU_FORCE_SCALAR")
+            .is_ok_and(|v| !v.is_empty() && v != "0");
+        if forced {
+            return SimdKind::Scalar;
+        }
+        #[cfg(target_arch = "x86_64")]
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return SimdKind::Avx2Fma;
+        }
+        SimdKind::Scalar
+    })
+}
+
+/// Name of the kernel [`dispatch`] resolved for this process.
+pub fn active_kernel_name() -> &'static str {
+    kernel_name(dispatch())
+}
+
+/// L2 budget for one codebook panel. Half of a conservative 512 KiB L2:
+/// the other half keeps the 8 active data rows, their accumulators, and
+/// the panel's ||w||² slice resident alongside.
+pub const PANEL_BYTES: usize = 256 * 1024;
+
+/// Codebook rows per L2 panel for dimension `dim`: the largest panel
+/// whose f32 payload fits [`PANEL_BYTES`], floored at [`BLOCK_ROWS`].
+/// Override with `SOMOCLU_BMU_PANEL=<nodes>` (read once per process;
+/// the blocked-scan entry points also take the panel size as an explicit
+/// parameter, which is what the panel-sweep tests use).
+pub fn default_panel_nodes(dim: usize) -> usize {
+    static OVERRIDE: OnceLock<Option<usize>> = OnceLock::new();
+    let over = *OVERRIDE.get_or_init(|| {
+        std::env::var("SOMOCLU_BMU_PANEL")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+    });
+    if let Some(n) = over {
+        return n;
+    }
+    (PANEL_BYTES / (4 * dim.max(1))).max(BLOCK_ROWS)
+}
+
+/// Dot product with 8 independent accumulators: breaks the sequential
+/// FP dependency chain so the compiler vectorizes + pipelines it (§Perf:
+/// 4.5x on the BMU search vs the naive single-accumulator loop). This is
+/// the historical scalar kernel — its reduction order is pinned by the
+/// equivalence suite, so [`SimdKind::Scalar`] results never move.
+#[inline]
+pub fn dot_unrolled(x: &[f32], w: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), w.len());
+    let chunks = x.len() / 8;
+    let mut acc = [0.0f32; 8];
+    for c in 0..chunks {
+        let xb = &x[c * 8..c * 8 + 8];
+        let wb = &w[c * 8..c * 8 + 8];
+        for k in 0..8 {
+            acc[k] = xb[k].mul_add(wb[k], acc[k]);
+        }
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..x.len() {
+        tail = x[i].mul_add(w[i], tail);
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7])) + tail
+}
+
+/// Eight dot products against a shared `w`, using the kernel `kind`
+/// selects.
+///
+/// On AVX2+FMA this is explicit intrinsics: LLVM's auto-vectorizer turns
+/// the natural nested loop into cross-row shuffle soup (xmm
+/// inserts/shuffles around each FMA — measured 5x off peak), while the
+/// intrinsic kernel is 8 packed FMAs + 9 contiguous loads per 8-lane
+/// chunk and the shared `w` load amortizes across all rows. AVX-512 was
+/// tried and reverted: no gain over AVX2 on this part (single 512-bit
+/// FMA unit + downclock) — see EXPERIMENTS.md §Perf.
+#[inline]
+pub fn dot8(kind: SimdKind, x: &[&[f32]; BLOCK_ROWS], w: &[f32]) -> [f32; BLOCK_ROWS] {
+    #[cfg(target_arch = "x86_64")]
+    if kind == SimdKind::Avx2Fma {
+        // SAFETY: Avx2Fma is only resolved by `dispatch` (or passed by
+        // tests) on hosts with avx2+fma; slices are read in 8-lane
+        // chunks strictly within bounds.
+        return unsafe { dot8_avx2(x, w) };
+    }
+    let _ = kind;
+    dot8_scalar(x, w)
+}
+
+/// Scalar `dot8`: 8 independent [`dot_unrolled`] calls — bit-identical
+/// to the pre-refactor scalar fallback.
+#[inline]
+pub fn dot8_scalar(x: &[&[f32]; BLOCK_ROWS], w: &[f32]) -> [f32; BLOCK_ROWS] {
+    let mut out = [0.0f32; BLOCK_ROWS];
+    for k in 0..BLOCK_ROWS {
+        out[k] = dot_unrolled(x[k], w);
+    }
+    out
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot8_avx2(x: &[&[f32]; 8], w: &[f32]) -> [f32; 8] {
+    use std::arch::x86_64::*;
+    let d = w.len();
+    let chunks = d / 8;
+    unsafe {
+        let mut acc = [_mm256_setzero_ps(); 8];
+        let wp = w.as_ptr();
+        let xp: [*const f32; 8] = std::array::from_fn(|k| x[k].as_ptr());
+        for c in 0..chunks {
+            let o = (c * 8) as isize;
+            let wv = _mm256_loadu_ps(wp.offset(o));
+            for k in 0..8 {
+                acc[k] =
+                    _mm256_fmadd_ps(_mm256_loadu_ps(xp[k].offset(o)), wv, acc[k]);
+            }
+        }
+        #[inline]
+        unsafe fn hsum(v: std::arch::x86_64::__m256) -> f32 {
+            unsafe {
+                let lo = _mm256_castps256_ps128(v);
+                let hi = _mm256_extractf128_ps(v, 1);
+                let s = _mm_add_ps(lo, hi);
+                let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+                let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+                _mm_cvtss_f32(s)
+            }
+        }
+        let mut out: [f32; 8] = std::array::from_fn(|k| hsum(acc[k]));
+        for i in chunks * 8..d {
+            for k in 0..8 {
+                out[k] = x[k][i].mul_add(w[i], out[k]);
+            }
+        }
+        out
+    }
+}
+
+/// Fold one node's scores into the running argmin of a row block.
+/// Strict `<` keeps the lowest node index on exact ties — the tie rule
+/// the whole search contract pins — and rejects NaN scores.
+#[inline(always)]
+fn argmin_update(
+    n: u32,
+    half_w2: f32,
+    dots: &[f32; BLOCK_ROWS],
+    blen: usize,
+    best: &mut [u32; BLOCK_ROWS],
+    score: &mut [f32; BLOCK_ROWS],
+) {
+    for k in 0..blen {
+        let s = half_w2 - dots[k];
+        if s < score[k] {
+            score[k] = s;
+            best[k] = n;
+        }
+    }
+}
+
+/// Scan one codebook panel for a block of ≤ 8 data rows, folding into
+/// the rows' running argmin state.
+///
+/// * `x` — the block's row slices (lanes `blen..` are padding and their
+///   results are discarded);
+/// * `panel` — codebook rows `[n0, n0 + panel_len)`, contiguous row-major
+///   (`panel.len() == panel_len * dim`);
+/// * `w2` — matching `||w||²` slice (`panel_len` entries);
+/// * `best`/`score` — running argmin per lane, updated in place. `score`
+///   holds the Gram score `||w||²/2 − x·w`; callers reconstruct the true
+///   squared distance as `(||x||² + 2·score).max(0)`.
+///
+/// Nodes are visited in ascending index order, so driving this panel by
+/// panel (ascending `n0`) replays exactly the flat scan's update
+/// sequence — the bit-identity and lowest-index-tie guarantees hold
+/// across panel boundaries.
+#[allow(clippy::too_many_arguments)]
+pub fn bmu_scan_panel(
+    kind: SimdKind,
+    x: &[&[f32]; BLOCK_ROWS],
+    blen: usize,
+    panel: &[f32],
+    dim: usize,
+    w2: &[f32],
+    n0: u32,
+    best: &mut [u32; BLOCK_ROWS],
+    score: &mut [f32; BLOCK_ROWS],
+) {
+    debug_assert!(dim > 0 && panel.len() == w2.len() * dim);
+    #[cfg(target_arch = "x86_64")]
+    if kind == SimdKind::Avx2Fma {
+        // SAFETY: kind contract as in `dot8`.
+        unsafe { bmu_scan_panel_avx2(x, blen, panel, dim, w2, n0, best, score) };
+        return;
+    }
+    let _ = kind;
+    for (i, w) in panel.chunks_exact(dim).enumerate() {
+        let dots = dot8_scalar(x, w);
+        argmin_update(n0 + i as u32, 0.5 * w2[i], &dots, blen, best, score);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn bmu_scan_panel_avx2(
+    x: &[&[f32]; BLOCK_ROWS],
+    blen: usize,
+    panel: &[f32],
+    dim: usize,
+    w2: &[f32],
+    n0: u32,
+    best: &mut [u32; BLOCK_ROWS],
+    score: &mut [f32; BLOCK_ROWS],
+) {
+    for (i, w) in panel.chunks_exact(dim).enumerate() {
+        // SAFETY: caller guarantees avx2+fma; `w` has `dim` elements and
+        // each `x` lane at least `dim`.
+        let dots = unsafe { dot8_avx2(x, w) };
+        argmin_update(n0 + i as u32, 0.5 * w2[i], &dots, blen, best, score);
+    }
+}
+
+/// Fold one node's scores into the running top-2 of a row block. Strict
+/// `<` everywhere: on exact ties both the best and the runner-up keep
+/// the lowest qualifying node index. A node never ties itself into both
+/// slots — the `else` arm only sees nodes that did not displace `b1`.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn top2_update(
+    n: u32,
+    half_w2: f32,
+    dots: &[f32; BLOCK_ROWS],
+    blen: usize,
+    b1: &mut [u32; BLOCK_ROWS],
+    s1: &mut [f32; BLOCK_ROWS],
+    b2: &mut [u32; BLOCK_ROWS],
+    s2: &mut [f32; BLOCK_ROWS],
+) {
+    for k in 0..blen {
+        let s = half_w2 - dots[k];
+        if s < s1[k] {
+            s2[k] = s1[k];
+            b2[k] = b1[k];
+            s1[k] = s;
+            b1[k] = n;
+        } else if s < s2[k] {
+            s2[k] = s;
+            b2[k] = n;
+        }
+    }
+}
+
+/// [`bmu_scan_panel`]'s top-2 sibling: maintains the best *and second
+/// best* node per lane (the topographic-error scan in
+/// [`crate::som::quality::best_two`]). Same panel layout, same ascending
+/// visit order, same lowest-index tie rule.
+#[allow(clippy::too_many_arguments)]
+pub fn top2_scan_panel(
+    kind: SimdKind,
+    x: &[&[f32]; BLOCK_ROWS],
+    blen: usize,
+    panel: &[f32],
+    dim: usize,
+    w2: &[f32],
+    n0: u32,
+    b1: &mut [u32; BLOCK_ROWS],
+    s1: &mut [f32; BLOCK_ROWS],
+    b2: &mut [u32; BLOCK_ROWS],
+    s2: &mut [f32; BLOCK_ROWS],
+) {
+    debug_assert!(dim > 0 && panel.len() == w2.len() * dim);
+    #[cfg(target_arch = "x86_64")]
+    if kind == SimdKind::Avx2Fma {
+        // SAFETY: kind contract as in `dot8`.
+        unsafe { top2_scan_panel_avx2(x, blen, panel, dim, w2, n0, b1, s1, b2, s2) };
+        return;
+    }
+    let _ = kind;
+    for (i, w) in panel.chunks_exact(dim).enumerate() {
+        let dots = dot8_scalar(x, w);
+        top2_update(n0 + i as u32, 0.5 * w2[i], &dots, blen, b1, s1, b2, s2);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn top2_scan_panel_avx2(
+    x: &[&[f32]; BLOCK_ROWS],
+    blen: usize,
+    panel: &[f32],
+    dim: usize,
+    w2: &[f32],
+    n0: u32,
+    b1: &mut [u32; BLOCK_ROWS],
+    s1: &mut [f32; BLOCK_ROWS],
+    b2: &mut [u32; BLOCK_ROWS],
+    s2: &mut [f32; BLOCK_ROWS],
+) {
+    for (i, w) in panel.chunks_exact(dim).enumerate() {
+        // SAFETY: caller guarantees avx2+fma; bounds as in bmu_scan_panel.
+        let dots = unsafe { dot8_avx2(x, w) };
+        top2_update(n0 + i as u32, 0.5 * w2[i], &dots, blen, b1, s1, b2, s2);
+    }
+}
+
+/// Argmin over precomputed dot products — the sparse kernel's
+/// dense-codebook side: given `dots[n] = x·w_n` (built by its CSR axpy
+/// sweep) and `w2[n] = ||w_n||²`, return the node minimizing the Gram
+/// score `||w||²/2 − x·w` plus that winning score, ties to the lowest
+/// index.
+///
+/// Both kinds compute the score with the same two ops (`0.5 * w2[n]`,
+/// then the subtraction — never a fused multiply-sub, which would round
+/// differently) and reproduce the scalar scan's selection rule exactly,
+/// so the result is bit-identical across [`SimdKind`]s *and* to the
+/// pre-refactor scalar loop.
+pub fn argmin_scored(kind: SimdKind, w2: &[f32], dots: &[f32]) -> (u32, f32) {
+    debug_assert_eq!(w2.len(), dots.len());
+    #[cfg(target_arch = "x86_64")]
+    if kind == SimdKind::Avx2Fma {
+        // SAFETY: kind contract as in `dot8`.
+        return unsafe { argmin_scored_avx2(w2, dots) };
+    }
+    let _ = kind;
+    argmin_scored_scalar(w2, dots, 0, (0, f32::INFINITY))
+}
+
+/// Scalar scan from node `n0`, continuing a running `(best, score)`
+/// state (strict `<`, so earlier candidates win ties — and NaN scores
+/// are never selected).
+fn argmin_scored_scalar(
+    w2: &[f32],
+    dots: &[f32],
+    n0: usize,
+    mut state: (u32, f32),
+) -> (u32, f32) {
+    for (n, (&w, &d)) in w2.iter().zip(dots).enumerate().skip(n0) {
+        let s = 0.5 * w - d;
+        if s < state.1 {
+            state = (n as u32, s);
+        }
+    }
+    state
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn argmin_scored_avx2(w2: &[f32], dots: &[f32]) -> (u32, f32) {
+    use std::arch::x86_64::*;
+    let n = w2.len();
+    let chunks = n / 8;
+    let mut state = (0u32, f32::INFINITY);
+    if chunks > 0 {
+        // SAFETY: 8-lane loads within `chunks * 8 <= n`.
+        unsafe {
+            let half = _mm256_set1_ps(0.5);
+            let mut best_s = _mm256_set1_ps(f32::INFINITY);
+            let mut best_i = _mm256_setzero_si256();
+            let mut idx = _mm256_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7);
+            let eight = _mm256_set1_epi32(8);
+            for c in 0..chunks {
+                let w = _mm256_loadu_ps(w2.as_ptr().add(c * 8));
+                let d = _mm256_loadu_ps(dots.as_ptr().add(c * 8));
+                // mul then sub — two roundings, same as the scalar scan
+                // (a fused _mm256_fmsub_ps would change the bits).
+                let s = _mm256_sub_ps(_mm256_mul_ps(half, w), d);
+                let lt = _mm256_cmp_ps::<_CMP_LT_OQ>(s, best_s);
+                best_s = _mm256_blendv_ps(best_s, s, lt);
+                best_i =
+                    _mm256_blendv_epi8(best_i, idx, _mm256_castps_si256(lt));
+                idx = _mm256_add_epi32(idx, eight);
+            }
+            let mut lane_s = [0.0f32; 8];
+            let mut lane_i = [0i32; 8];
+            _mm256_storeu_ps(lane_s.as_mut_ptr(), best_s);
+            _mm256_storeu_si256(lane_i.as_mut_ptr() as *mut __m256i, best_i);
+            // Each lane kept the lowest index among its own (mod-8) ties;
+            // across lanes an explicit index comparison restores the
+            // global lowest-index rule.
+            for k in 0..8 {
+                let (i, s) = (lane_i[k] as u32, lane_s[k]);
+                if s < state.1 || (s == state.1 && i < state.0) {
+                    state = (i, s);
+                }
+            }
+        }
+    }
+    // Tail nodes have higher indices than every vector candidate, so the
+    // strict `<` of the scalar continuation is the correct tie rule.
+    argmin_scored_scalar(w2, dots, chunks * 8, state)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32()).collect()
+    }
+
+    #[test]
+    fn dispatch_is_stable_and_named() {
+        let k = dispatch();
+        assert_eq!(k, dispatch());
+        assert!(!kernel_name(k).is_empty());
+        assert_eq!(active_kernel_name(), kernel_name(k));
+    }
+
+    #[test]
+    fn panel_sizing_tracks_dim() {
+        // Unless the env override is set, panels shrink as dim grows and
+        // never drop below one register block.
+        if std::env::var_os("SOMOCLU_BMU_PANEL").is_some() {
+            return;
+        }
+        assert!(default_panel_nodes(8) >= default_panel_nodes(256));
+        assert!(default_panel_nodes(1 << 20) >= BLOCK_ROWS);
+        assert_eq!(default_panel_nodes(32), PANEL_BYTES / (4 * 32));
+    }
+
+    #[test]
+    fn scalar_dot8_is_eight_dot_unrolled() {
+        let mut rng = Rng::new(1);
+        for dim in [1usize, 7, 8, 9, 16, 33] {
+            let rows: Vec<Vec<f32>> = (0..8).map(|_| rand_vec(&mut rng, dim)).collect();
+            let w = rand_vec(&mut rng, dim);
+            let x: [&[f32]; 8] = std::array::from_fn(|k| rows[k].as_slice());
+            let got = dot8(SimdKind::Scalar, &x, &w);
+            for k in 0..8 {
+                assert_eq!(got[k].to_bits(), dot_unrolled(&rows[k], &w).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn dispatched_dot8_close_to_f64_oracle() {
+        // Cross-kind bits may differ; both must sit within f32 rounding
+        // of the f64 dot.
+        let mut rng = Rng::new(2);
+        for dim in [5usize, 8, 64, 130] {
+            let rows: Vec<Vec<f32>> = (0..8).map(|_| rand_vec(&mut rng, dim)).collect();
+            let w = rand_vec(&mut rng, dim);
+            let x: [&[f32]; 8] = std::array::from_fn(|k| rows[k].as_slice());
+            let got = dot8(dispatch(), &x, &w);
+            for k in 0..8 {
+                let oracle: f64 = rows[k]
+                    .iter()
+                    .zip(&w)
+                    .map(|(a, b)| *a as f64 * *b as f64)
+                    .sum();
+                let tol = 1e-5 * (1.0 + oracle.abs());
+                assert!(
+                    ((got[k] as f64) - oracle).abs() < tol,
+                    "dim {dim} lane {k}: {} vs {oracle}",
+                    got[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn argmin_scored_kinds_agree_bit_for_bit() {
+        // Identical score inputs ⇒ identical selection in every kind,
+        // including exact ties and NaN lanes.
+        let mut rng = Rng::new(3);
+        for n in [1usize, 2, 7, 8, 9, 16, 100, 257] {
+            let w2: Vec<f32> = (0..n).map(|_| rng.range_f32(0.0, 4.0)).collect();
+            let mut dots = rand_vec(&mut rng, n);
+            if n > 4 {
+                // Manufacture an exact tie: same (w2, dot) pair twice.
+                let (lo, hi) = (n / 4, n / 2);
+                dots[hi] = dots[lo];
+            }
+            let scalar = argmin_scored(SimdKind::Scalar, &w2, &dots);
+            let auto = argmin_scored(dispatch(), &w2, &dots);
+            assert_eq!(scalar.0, auto.0, "n={n}");
+            assert_eq!(scalar.1.to_bits(), auto.1.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn argmin_scored_tie_takes_lowest_index() {
+        // All-equal scores: node 0 wins in every kind.
+        let w2 = vec![2.0f32; 40];
+        let dots = vec![0.5f32; 40];
+        for kind in [SimdKind::Scalar, dispatch()] {
+            let (b, s) = argmin_scored(kind, &w2, &dots);
+            assert_eq!(b, 0);
+            assert_eq!(s, 0.5);
+        }
+    }
+
+    #[test]
+    fn argmin_scored_ignores_nan_lanes() {
+        // A NaN score is never selected (strict `<` semantics).
+        let w2 = vec![f32::NAN, 2.0, 4.0];
+        let dots = vec![0.0f32, 0.0, 0.0];
+        for kind in [SimdKind::Scalar, dispatch()] {
+            let (b, s) = argmin_scored(kind, &w2, &dots);
+            assert_eq!(b, 1, "{kind:?}");
+            assert_eq!(s, 1.0);
+        }
+    }
+
+    #[test]
+    fn bmu_scan_matches_flat_argmin() {
+        let mut rng = Rng::new(4);
+        for (nodes, dim) in [(1usize, 3usize), (5, 8), (33, 17), (64, 32)] {
+            let panel = rand_vec(&mut rng, nodes * dim);
+            let w2: Vec<f32> = panel
+                .chunks_exact(dim)
+                .map(|w| w.iter().map(|v| v * v).sum())
+                .collect();
+            let rows: Vec<Vec<f32>> = (0..8).map(|_| rand_vec(&mut rng, dim)).collect();
+            let x: [&[f32]; 8] = std::array::from_fn(|k| rows[k].as_slice());
+            for kind in [SimdKind::Scalar, dispatch()] {
+                let mut best = [0u32; 8];
+                let mut score = [f32::INFINITY; 8];
+                bmu_scan_panel(kind, &x, 8, &panel, dim, &w2, 0, &mut best, &mut score);
+                for k in 0..8 {
+                    let (mut wb, mut ws) = (0u32, f32::INFINITY);
+                    for n in 0..nodes {
+                        let dots = dot8(kind, &x, &panel[n * dim..(n + 1) * dim]);
+                        let s = 0.5 * w2[n] - dots[k];
+                        if s < ws {
+                            ws = s;
+                            wb = n as u32;
+                        }
+                    }
+                    assert_eq!(best[k], wb, "{kind:?} lane {k}");
+                    assert_eq!(score[k].to_bits(), ws.to_bits(), "{kind:?} lane {k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn top2_scan_keeps_distinct_ordered_pair() {
+        let mut rng = Rng::new(5);
+        let (nodes, dim) = (24usize, 12usize);
+        let panel = rand_vec(&mut rng, nodes * dim);
+        let w2: Vec<f32> = panel
+            .chunks_exact(dim)
+            .map(|w| w.iter().map(|v| v * v).sum())
+            .collect();
+        let rows: Vec<Vec<f32>> = (0..8).map(|_| rand_vec(&mut rng, dim)).collect();
+        let x: [&[f32]; 8] = std::array::from_fn(|k| rows[k].as_slice());
+        for kind in [SimdKind::Scalar, dispatch()] {
+            let mut b1 = [0u32; 8];
+            let mut s1 = [f32::INFINITY; 8];
+            let mut b2 = [0u32; 8];
+            let mut s2 = [f32::INFINITY; 8];
+            top2_scan_panel(
+                kind, &x, 8, &panel, dim, &w2, 0, &mut b1, &mut s1, &mut b2, &mut s2,
+            );
+            for k in 0..8 {
+                assert_ne!(b1[k], b2[k], "{kind:?} lane {k}");
+                assert!(s1[k] <= s2[k], "{kind:?} lane {k}");
+                // b1 must agree with the argmin scan.
+                let mut best = [0u32; 8];
+                let mut score = [f32::INFINITY; 8];
+                bmu_scan_panel(kind, &x, 8, &panel, dim, &w2, 0, &mut best, &mut score);
+                assert_eq!(b1[k], best[k]);
+                assert_eq!(s1[k].to_bits(), score[k].to_bits());
+            }
+        }
+    }
+}

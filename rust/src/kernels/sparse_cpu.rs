@@ -13,6 +13,7 @@
 //! (irregular access patterns); likewise we offer no accel variant.
 
 use crate::kernels::dense_cpu::accumulate_node_parallel_with;
+use crate::kernels::simd;
 use crate::kernels::{AccumConfig, DataShard, EpochAccum, SweepMode, TrainingKernel};
 use crate::som::{Codebook, Grid, Neighborhood, StencilCache};
 use crate::util::threadpool;
@@ -130,6 +131,10 @@ impl TrainingKernel for SparseCpuKernel {
 
         // --- BMU search, row-parallel over the shared (transposed)
         // codebook: scores[n] = Σ_nz v · wT[c, n], contiguous in n.
+        // The argmin over the dense score vector runs through the
+        // dispatched microkernel (`simd::argmin_scored`) — bit-identical
+        // selection to the historical scalar loop in every SimdKind.
+        let kind = simd::dispatch();
         let parts = threadpool::parallel_ranges(m.rows, self.threads, |_, range| {
             let mut bmus = Vec::with_capacity(range.len());
             let mut qe = 0.0f64;
@@ -140,14 +145,7 @@ impl TrainingKernel for SparseCpuKernel {
                 for (c, v) in cols.iter().zip(vals) {
                     axpy(&mut scores, *v, &wt[*c as usize * nodes..(*c as usize + 1) * nodes]);
                 }
-                let (mut best, mut best_score) = (0u32, f32::INFINITY);
-                for (n, &dot) in scores.iter().enumerate() {
-                    let score = 0.5 * w2[n] - dot;
-                    if score < best_score {
-                        best_score = score;
-                        best = n as u32;
-                    }
-                }
+                let (best, best_score) = simd::argmin_scored(kind, w2, &scores);
                 // ||x||² for QE reconstruction via CsrView::row_sq_norm,
                 // computed here inside the row-parallel region (the old
                 // serial row_sq_norms() pre-pass allocated a full-shard

@@ -484,6 +484,13 @@ fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
         KernelType::SparseCpu => "sparse-cpu",
         KernelType::Hybrid => "hybrid-xla-cpu",
     };
+    // Which BMU-search microkernel the runtime dispatch resolved
+    // (scalar / avx2+fma; `SOMOCLU_FORCE_SCALAR=1` forces scalar) —
+    // the observable handle the README's Performance section documents.
+    eprintln!(
+        "BMU search kernel: {}",
+        somoclu::kernels::simd::active_kernel_name()
+    );
     if result.epochs.is_empty() {
         // A --resume of an already-complete run: no epoch trained, the
         // BMUs were re-projected against the input (final_qe would be

@@ -6,6 +6,7 @@
 //! check; not in the paper's tables but standard for SOM evaluation and
 //! used in our integration tests).
 
+use crate::kernels::simd::{self, BLOCK_ROWS};
 use crate::som::codebook::Codebook;
 use crate::som::grid::Grid;
 use crate::util::threadpool;
@@ -23,6 +24,16 @@ pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
 }
 
 /// Mean quantization error over dense rows given their BMUs.
+///
+/// Each row's Euclidean distance is computed in f32 (`sq_dist(..).sqrt()`
+/// — the same bits the training kernels see), but the running **sum
+/// accumulates in f64** and only the final mean rounds back to f32. A
+/// single-f32 running sum loses increments once it dwarfs them (~1e7×
+/// smaller increments vanish entirely), which at streaming scale
+/// (millions of rows) made the logged loss curve drift and plateau
+/// falsely; with f64 accumulation the result is within one f32 ulp of an
+/// exact mean of the per-row f32 distances (see the 1e6-row property
+/// test in `rust/tests/bmu_search_equivalence.rs`).
 pub fn quantization_error(
     data: &[f32],
     dim: usize,
@@ -34,48 +45,107 @@ pub fn quantization_error(
     if rows == 0 {
         return 0.0;
     }
-    let sum: f32 = (0..rows)
+    let sum: f64 = (0..rows)
         .map(|r| {
-            sq_dist(&data[r * dim..(r + 1) * dim], codebook.row(bmus[r])).sqrt()
+            sq_dist(&data[r * dim..(r + 1) * dim], codebook.row(bmus[r])).sqrt() as f64
         })
         .sum();
-    sum / rows as f32
+    (sum / rows as f64) as f32
 }
 
-/// First and second BMU per row (dense, threaded).
+/// First and second BMU per row (dense, threaded), via the cache-blocked
+/// [`crate::kernels::simd`] microkernel ([`simd::top2_scan_panel`] — the
+/// Gram-score form `||w||²/2 − x·w`, which orders nodes exactly like the
+/// squared distance for a fixed row). Ties break to the lowest node
+/// index in both slots.
+///
+/// Invariant: every returned pair satisfies `b2 != b1` — the runner-up
+/// is a *different* node even when all distances are equal (duplicate
+/// codebook rows) or non-finite. Requires `codebook.nodes >= 2`
+/// (asserted); single-node maps have no runner-up, and
+/// [`topographic_error`] special-cases them before calling this.
 pub fn best_two(
     data: &[f32],
     dim: usize,
     codebook: &Codebook,
     threads: usize,
 ) -> Vec<(usize, usize)> {
+    assert!(
+        codebook.nodes >= 2,
+        "best_two needs at least 2 nodes (got {})",
+        codebook.nodes
+    );
     let rows = data.len() / dim;
+    let kind = simd::dispatch();
+    let panel_nodes = simd::default_panel_nodes(dim);
+    let w2 = codebook.sq_norms();
+    let (w2, nodes) = (w2.as_slice(), codebook.nodes);
     let parts = threadpool::parallel_ranges(rows, threads, |_, range| {
-        let mut out = Vec::with_capacity(range.len());
-        for r in range {
-            let x = &data[r * dim..(r + 1) * dim];
-            let (mut b1, mut d1) = (0usize, f32::INFINITY);
-            let (mut b2, mut d2) = (0usize, f32::INFINITY);
-            for n in 0..codebook.nodes {
-                let d = sq_dist(x, codebook.row(n));
-                if d < d1 {
-                    b2 = b1;
-                    d2 = d1;
-                    b1 = n;
-                    d1 = d;
-                } else if d < d2 {
-                    b2 = n;
-                    d2 = d;
-                }
+        let cnt = range.len();
+        let mut b1 = vec![0u32; cnt];
+        let mut s1 = vec![f32::INFINITY; cnt];
+        let mut b2 = vec![0u32; cnt];
+        let mut s2 = vec![f32::INFINITY; cnt];
+        // Same panel-outer / 8-row-block-inner nest as
+        // `search_bmus_blocked`; per-row top-2 state persists across
+        // panels, so nodes are still visited in ascending order.
+        let mut n0 = 0usize;
+        while n0 < nodes {
+            let n1 = (n0 + panel_nodes.max(1)).min(nodes);
+            let panel = &codebook.weights[n0 * dim..n1 * dim];
+            let pw2 = &w2[n0..n1];
+            let mut off = 0usize;
+            while off < cnt {
+                let blen = (cnt - off).min(BLOCK_ROWS);
+                let r0 = range.start + off;
+                let x: [&[f32]; BLOCK_ROWS] = std::array::from_fn(|k| {
+                    let r = r0 + k.min(blen - 1);
+                    &data[r * dim..(r + 1) * dim]
+                });
+                let mut lb1 = [0u32; BLOCK_ROWS];
+                let mut ls1 = [f32::INFINITY; BLOCK_ROWS];
+                let mut lb2 = [0u32; BLOCK_ROWS];
+                let mut ls2 = [f32::INFINITY; BLOCK_ROWS];
+                lb1[..blen].copy_from_slice(&b1[off..off + blen]);
+                ls1[..blen].copy_from_slice(&s1[off..off + blen]);
+                lb2[..blen].copy_from_slice(&b2[off..off + blen]);
+                ls2[..blen].copy_from_slice(&s2[off..off + blen]);
+                simd::top2_scan_panel(
+                    kind, &x, blen, panel, dim, pw2, n0 as u32, &mut lb1, &mut ls1, &mut lb2,
+                    &mut ls2,
+                );
+                b1[off..off + blen].copy_from_slice(&lb1[..blen]);
+                s1[off..off + blen].copy_from_slice(&ls1[..blen]);
+                b2[off..off + blen].copy_from_slice(&lb2[..blen]);
+                s2[off..off + blen].copy_from_slice(&ls2[..blen]);
+                off += blen;
             }
-            out.push((b1, b2));
+            n0 = n1;
         }
-        out
+        b1.iter()
+            .zip(&b2)
+            .map(|(&a, &b)| {
+                let (a, mut b) = (a as usize, b as usize);
+                // b2 == b1 is only reachable when every score after the
+                // first was NaN (strict `<` never filled the runner-up
+                // slot); keep the invariant with an arbitrary other node.
+                if b == a {
+                    b = if a == 0 { 1 } else { 0 };
+                }
+                (a, b)
+            })
+            .collect::<Vec<_>>()
     });
     parts.concat()
 }
 
 /// Topographic error: share of rows whose top-2 BMUs are not neighbors.
+///
+/// Degenerate maps: a single-node map (`codebook.nodes < 2`) has no
+/// meaningful runner-up, so TE is defined as 0 — every row trivially
+/// maps to the only topology there is. (Previously node 0 was scored by
+/// whether it neighbors itself, which depends on the grid's neighbor
+/// convention rather than on the map.)
 pub fn topographic_error(
     data: &[f32],
     dim: usize,
@@ -83,6 +153,9 @@ pub fn topographic_error(
     codebook: &Codebook,
     threads: usize,
 ) -> f32 {
+    if codebook.nodes < 2 {
+        return 0.0;
+    }
     let pairs = best_two(data, dim, codebook, threads);
     if pairs.is_empty() {
         return 0.0;
@@ -137,6 +210,52 @@ mod tests {
         let data: Vec<f32> = (0..10).map(|i| i as f32 + 0.3).collect();
         let te = topographic_error(&data, 1, &grid, &cb, 2);
         assert_eq!(te, 0.0);
+    }
+
+    #[test]
+    fn qe_mean_accumulates_in_f64() {
+        // 1 + eps + eps + ... with an increment small enough that a
+        // single-f32 running sum would drop every addend after the
+        // first: the f64 accumulator must keep them.
+        let rows = 4097usize;
+        let mut cb = Codebook::zeros(2, 1);
+        cb.row_mut(1)[0] = 1e-5;
+        let mut data = vec![0.0f32; rows];
+        data[0] = 1e4; // distance 1e4 to node 0
+        let mut bmus = vec![1usize; rows]; // distance 1e-5 each
+        bmus[0] = 0;
+        let got = quantization_error(&data, 1, &cb, &bmus) as f64;
+        let want = (1e4 + (rows - 1) as f64 * 1e-5) / rows as f64;
+        assert!((got - want).abs() < want * 1e-6, "{got} vs {want}");
+        // The f32-sum version would report exactly 1e4/rows.
+        let f32_sum = 1e4f64 / rows as f64;
+        assert!((got - f32_sum).abs() > want * 1e-9);
+    }
+
+    #[test]
+    fn te_zero_for_single_node_map() {
+        let grid = Grid::new(1, 1, GridType::Square, MapType::Planar);
+        let cb = Codebook::zeros(1, 2);
+        let data = vec![0.5, 0.5, 1.0, -1.0];
+        assert_eq!(topographic_error(&data, 2, &grid, &cb, 2), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 2 nodes")]
+    fn best_two_rejects_single_node_map() {
+        let cb = Codebook::zeros(1, 2);
+        best_two(&[0.0, 0.0], 2, &cb, 1);
+    }
+
+    #[test]
+    fn best_two_distinct_even_when_all_nodes_equal() {
+        // Duplicate codebook rows: every distance ties. Lowest-index tie
+        // rule ⇒ (0, 1), and the b2 != b1 invariant must hold.
+        let cb = Codebook::zeros(6, 3);
+        let data = vec![0.25f32; 4 * 3];
+        for (b1, b2) in best_two(&data, 3, &cb, 2) {
+            assert_eq!((b1, b2), (0, 1));
+        }
     }
 
     #[test]
