@@ -1,35 +1,197 @@
 //! FIG8 — "Speedup on multiple nodes with CPU kernel compared to a
-//! single node" (paper: 100k x 1000 dims, 50x50 map, near-linear).
+//! single node" (paper: 100k x 1000 dims, 50x50 map, near-linear),
+//! plus the collective-algorithm comparison the ring/tree exchange adds.
 //!
-//! This host exposes ONE core, so wall-clock multi-thread speedup is
-//! physically impossible; per DESIGN.md §3 the scaling is *modeled*
-//! exactly the way the paper's own argument goes:
+//! Two sections:
 //!
-//!   T(R) = max_r compute(shard_r)  +  comm(R)
+//! **Measured collectives** (always; the only section in `--quick`):
+//! real `fit_cluster` runs at P ∈ {2, 4, 8} under `--collective star`
+//! and `--collective ring`, with per-op byte/message/time tables from
+//! `CommStats`. Aggregate volumes are near-identical (star:
+//! (P−1)·(2·N·D+N) f32 per epoch — accumulators up, codebook down;
+//! ring: 2·(P−1)·(N·D+N) — allreduced accumulators, no codebook
+//! broadcast); the difference is the busiest sender — star's root
+//! pushes ~(P−1)·M while every ring rank pushes 2·(P−1)/P·M. Both
+//! closed forms are asserted here, and the busiest-sender ratio
+//! (ring/star at P = 4, theory ~2/P = 0.5) is the CI trajectory gate.
 //!
-//! compute(shard_r) is *measured* by running each rank's epoch kernel
-//! serially on its real shard; comm(R) comes from the alpha-beta network
-//! model over the true byte counts of the reduce+broadcast exchange
-//! (which the simulated cluster also counts on the wire). This keeps the
-//! claim honest: the compute term is measured, only its overlap is
-//! modeled, and the communication term uses the paper's own structure.
+//! **Modeled multi-node speedup** (skipped in `--quick`): this host
+//! exposes ONE core, so wall-clock multi-node speedup is physically
+//! impossible; per DESIGN.md §3 the scaling is modeled exactly the way
+//! the paper's own argument goes: T(R) = max_r compute(shard_r) +
+//! comm(R), with compute measured per real shard and comm from the
+//! alpha-beta model over the true byte counts.
+//!
+//! Modes (mirroring benches/profile_epoch.rs):
+//!
+//! * `--quick`       CI-friendly sizes, measured section only
+//! * `--json PATH`   write the collective table as JSON (BENCH_cluster.json)
+//! * `--check PATH`  regression gate: fail if the P=4 busiest-sender
+//!                   ratio rises above the baseline's
+//!                   `max_ring_star_ratio_p4`; a null ceiling passes
+//!                   (bootstrap). `--json`/`--check` may share the path
+//!                   — the baseline is read before the write.
 //!
 //! Paper-size run: SOM_BENCH_SCALE=10 cargo bench --bench fig8_multinode
 
 mod common;
 
+use somoclu::cluster::comm::CollectiveAlgo;
+use somoclu::cluster::runner::{ClusterData, ClusterReport};
 use somoclu::coordinator::config::TrainConfig;
 use somoclu::kernels::dense_cpu::DenseCpuKernel;
 use somoclu::kernels::{DataShard, TrainingKernel};
+use somoclu::session::Som;
 use somoclu::som::Neighborhood;
+use somoclu::util::json::Json;
 use somoclu::util::rng::Rng;
 use somoclu::util::threadpool::split_ranges;
 use somoclu::util::timer::{bench_scale, time_once};
 
-fn main() {
-    let scale = bench_scale(1.0);
-    common::banner("FIG8: multi-node speedup (modeled overlap)", scale);
+struct RankEntry {
+    ranks: usize,
+    star_bytes: u64,
+    ring_bytes: u64,
+    star_max_rank: u64,
+    ring_max_rank: u64,
+    ratio: f64,
+}
 
+fn op_bytes(report: &ClusterReport, name: &str) -> u64 {
+    report
+        .per_op
+        .iter()
+        .find(|o| o.name == name)
+        .map_or(0, |o| o.bytes)
+}
+
+fn print_per_op(report: &ClusterReport) {
+    for op in &report.per_op {
+        if op.messages > 0 {
+            println!(
+                "        {:<9} {:>12} bytes {:>8} msgs {:>9.3} ms",
+                op.name,
+                op.bytes,
+                op.messages,
+                op.nanos as f64 / 1e6
+            );
+        }
+    }
+}
+
+/// Real `fit_cluster` runs star-vs-ring; returns the per-P table.
+fn measured_collectives(quick: bool) -> Vec<RankEntry> {
+    let (rows, dims, side, epochs) = if quick {
+        (256usize, 16usize, 8usize, 3usize)
+    } else {
+        (2048, 64, 16, 5)
+    };
+    let nodes = side * side; // divisible by 8, so ring segments are even
+    let mut rng = Rng::new(0xc011);
+    let data = somoclu::data::random_dense(rows, dims, &mut rng);
+
+    println!(
+        "\nmeasured collectives: n={rows}, D={dims}, map {side}x{side}, {epochs} epochs"
+    );
+    println!(
+        "{:>6} {:>6} {:>14} {:>16} {:>8}",
+        "ranks", "algo", "total bytes", "busiest sender", "ratio"
+    );
+
+    let mut entries = Vec::new();
+    for p in [2usize, 4, 8] {
+        let mut reports = Vec::new();
+        for algo in [CollectiveAlgo::Star, CollectiveAlgo::Ring] {
+            let cfg = TrainConfig {
+                rows: side,
+                cols: side,
+                epochs,
+                threads: 1,
+                ranks: p,
+                radius0: Some(side as f32 / 2.0),
+                collective: algo,
+                ..Default::default()
+            };
+            let (_, report) = Som::builder()
+                .config(cfg)
+                .build()
+                .unwrap()
+                .fit_cluster(ClusterData::Dense {
+                    data: data.clone(),
+                    dim: dims,
+                })
+                .unwrap();
+            reports.push((algo, report));
+        }
+        let star = &reports[0].1;
+        let ring = &reports[1].1;
+        let ratio = ring.max_rank_bytes as f64 / star.max_rank_bytes as f64;
+        for (algo, report) in &reports {
+            println!(
+                "{:>6} {:>6} {:>14} {:>16} {:>8}",
+                p,
+                algo.as_str(),
+                report.bytes_sent,
+                report.max_rank_bytes,
+                if matches!(algo, CollectiveAlgo::Ring) {
+                    format!("{ratio:.3}")
+                } else {
+                    "-".to_string()
+                }
+            );
+            print_per_op(report);
+        }
+
+        // Closed forms, asserted on every run. Star per epoch: slaves
+        // send num+den up ((P−1)·(N·D+N)·4), the root broadcasts the
+        // updated codebook down ((P−1)·N·D·4). Ring per epoch:
+        // allreduce of num and den, 2·(P−1)·(N·D+N)·4 in aggregate
+        // (each rank 2·total − seg(r+1) − seg(r+2); the sum telescopes
+        // to 2·(P−1)·M for any length).
+        let m = ((nodes * dims + nodes) * 4) as u64;
+        let star_want =
+            epochs as u64 * (p as u64 - 1) * ((2 * nodes * dims + nodes) * 4) as u64;
+        let ring_want = epochs as u64 * 2 * (p as u64 - 1) * m;
+        for (algo, want) in [(CollectiveAlgo::Star, star_want), (CollectiveAlgo::Ring, ring_want)] {
+            let report = &reports
+                .iter()
+                .find(|(a, _)| *a == algo)
+                .expect("both algos ran")
+                .1;
+            assert_eq!(
+                op_bytes(report, "allreduce"),
+                want,
+                "P={p} {}: aggregate allreduce bytes off the closed form",
+                algo.as_str()
+            );
+        }
+        // Ring's busiest sender: 2·(P−1)/P·M per epoch on the f32
+        // allreduces, plus small non-allreduce traffic (the f64 QE
+        // scalar per epoch and the one BMU gather per run).
+        let ring_allreduce_per_rank = epochs as u64 * 2 * (p as u64 - 1) * m / p as u64;
+        let slack = epochs as u64 * 64 * p as u64 + rows as u64 * 8 + 1024;
+        assert!(
+            ring.max_rank_bytes <= ring_allreduce_per_rank + slack,
+            "P={p}: ring busiest sender {} exceeds 2(P-1)/P*M = {} (+{} slack)",
+            ring.max_rank_bytes,
+            ring_allreduce_per_rank,
+            slack
+        );
+        entries.push(RankEntry {
+            ranks: p,
+            star_bytes: star.bytes_sent,
+            ring_bytes: ring.bytes_sent,
+            star_max_rank: star.max_rank_bytes,
+            ring_max_rank: ring.max_rank_bytes,
+            ratio,
+        });
+    }
+    entries
+}
+
+/// The original Fig. 8 section: measured shard compute + alpha-beta
+/// modeled communication (star exchange, as the paper describes it).
+fn modeled_speedup(scale: f64) {
     let p = common::fig5_regular(scale);
     let n = *p.sizes.last().unwrap(); // the paper uses the largest size
     let dims = p.dims;
@@ -50,8 +212,7 @@ fn main() {
     let grid = cfg.grid();
     let radius_sched = cfg.radius_schedule(&grid);
     let scale_sched = cfg.scale_schedule();
-    let mut codebook =
-        somoclu::coordinator::train::init_codebook(&cfg, &grid, dims);
+    let mut codebook = somoclu::coordinator::train::init_codebook(&cfg, &grid, dims);
 
     println!(
         "\nworkload: n={n}, D={dims}, map {side}x{side}, {epochs} epochs, 10GbE model"
@@ -130,4 +291,120 @@ fn main() {
          communication is one accumulator exchange, independent of n, so \
          compute/comm stays large until rank counts get extreme."
     );
+}
+
+/// Hand-rendered JSON (no serde in the tree; same approach as
+/// profile_epoch.rs). The baseline's `max_ring_star_ratio_p4` ceiling
+/// is carried forward verbatim so the artifact can be committed over
+/// the baseline without un-arming the gate.
+fn render_json(quick: bool, entries: &[RankEntry], ceiling: Option<f64>) -> String {
+    let rows: Vec<String> = entries
+        .iter()
+        .map(|e| {
+            format!(
+                "    {{\"ranks\": {}, \"star_bytes\": {}, \"ring_bytes\": {}, \
+                 \"star_max_rank_bytes\": {}, \"ring_max_rank_bytes\": {}, \
+                 \"ratio\": {:.3}}}",
+                e.ranks, e.star_bytes, e.ring_bytes, e.star_max_rank, e.ring_max_rank, e.ratio
+            )
+        })
+        .collect();
+    let ratio_p4 = entries
+        .iter()
+        .find(|e| e.ranks == 4)
+        .map(|e| e.ratio)
+        .unwrap_or(f64::NAN);
+    let ceiling_json = match ceiling {
+        Some(c) if c.is_finite() => format!("{c:.3}"),
+        _ => "null".to_string(),
+    };
+    format!(
+        "{{\n  \"schema\": \"somoclu-cluster-bench/v1\",\n  \"quick\": {},\n  \
+         \"collectives\": [\n{}\n  ],\n  \
+         \"ratio_p4\": {:.3},\n  \
+         \"max_ring_star_ratio_p4\": {}\n}}\n",
+        quick,
+        rows.join(",\n"),
+        ratio_p4,
+        ceiling_json,
+    )
+}
+
+/// The CI gate: the busiest-sender byte ratio (ring/star) at P = 4 must
+/// not rise above the committed ceiling. A dimensionless byte-count
+/// ratio on identical workloads — deterministic, so shared runners
+/// can't flake it; a baseline without a ceiling passes (bootstrap).
+fn check_gate(baseline_text: &str, ratio_p4: f64) -> Result<String, String> {
+    let json = Json::parse(baseline_text)
+        .map_err(|e| format!("baseline is not valid JSON: {e:?}"))?;
+    match json.get("max_ring_star_ratio_p4").and_then(|v| v.as_f64()) {
+        None => Ok("no ratio ceiling (bootstrap) - passes".to_string()),
+        Some(ceiling) => {
+            if ratio_p4 > ceiling {
+                Err(format!(
+                    "ring/star busiest-sender ratio at P=4 is {ratio_p4:.3}, \
+                     above the baseline ceiling {ceiling:.3}"
+                ))
+            } else {
+                Ok(format!("ratio@P4 {ratio_p4:.3} <= ceiling {ceiling:.3}"))
+            }
+        }
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let arg_value = |flag: &str| {
+        args.iter()
+            .position(|a| a == flag)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+    };
+    let json_path = arg_value("--json");
+    let check_path = arg_value("--check");
+    // Read the baseline BEFORE any write so --json/--check can share a path.
+    let baseline = check_path.as_ref().map(|p| {
+        std::fs::read_to_string(p).unwrap_or_else(|e| panic!("--check {p}: {e}"))
+    });
+    let ceiling = baseline
+        .as_ref()
+        .and_then(|text| Json::parse(text).ok())
+        .and_then(|json| {
+            json.get("max_ring_star_ratio_p4").and_then(|v| v.as_f64())
+        });
+
+    let scale = bench_scale(1.0);
+    common::banner("FIG8: multi-node collectives + modeled speedup", scale);
+
+    let entries = measured_collectives(quick);
+    let ratio_p4 = entries
+        .iter()
+        .find(|e| e.ranks == 4)
+        .map(|e| e.ratio)
+        .expect("P=4 entry exists");
+    println!(
+        "\nbusiest-sender ratio ring/star at P=4: {ratio_p4:.3} (theory 2/P = 0.5)"
+    );
+
+    if quick {
+        println!("(--quick: modeled multi-node section skipped)");
+    } else {
+        modeled_speedup(scale);
+    }
+
+    if let Some(path) = &json_path {
+        let json = render_json(quick, &entries, ceiling);
+        std::fs::write(path, &json).unwrap_or_else(|e| panic!("--json {path}: {e}"));
+        println!("wrote {path}");
+    }
+    if let Some(text) = baseline {
+        match check_gate(&text, ratio_p4) {
+            Ok(msg) => println!("perf gates: {msg}"),
+            Err(msg) => {
+                eprintln!("perf gate FAILED: {msg}");
+                std::process::exit(1);
+            }
+        }
+    }
 }

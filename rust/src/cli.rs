@@ -6,6 +6,7 @@
 //! somoclu [OPTIONs] INPUT_FILE OUTPUT_PREFIX
 //! ```
 
+use crate::cluster::multiproc::NetOptions;
 use crate::cluster::netmodel::NetModel;
 use crate::coordinator::config::TrainConfig;
 use crate::io::output::SnapshotLevel;
@@ -59,6 +60,23 @@ pub fn arg_spec() -> ArgSpec {
               load fully in memory)", Some("0"))
         .opt("net", None, Some("net"),
              "cluster interconnect model: ideal | 10g", Some("ideal"))
+        .opt("collective", None, Some("collective"),
+             "cluster collective algorithm: auto (size-based ring/tree) | \
+              star (the paper's master/slave pattern) | ring | tree",
+             Some("auto"))
+        .opt("rank", None, Some("rank"),
+             "this process's rank in a real multi-process run (needs \
+              --ranks N and --peers; rank 0 writes the outputs)", None)
+        .opt("peers", None, Some("peers"),
+             "comma-separated rendezvous addresses, one per rank in rank \
+              order (host:port or unix:PATH; the last rank's may be \
+              omitted)", None)
+        .opt("listen", None, Some("listen"),
+             "two-process shorthand: run as rank 0 of 2, listening on \
+              ADDR for the peer started with --connect ADDR", None)
+        .opt("connect", None, Some("connect"),
+             "two-process shorthand: run as rank 1 of 2, dialing the \
+              process started with --listen ADDR", None)
         .opt("io", None, Some("io"),
              "binary-container I/O backend: buffered | mmap (zero-copy) \
               | pread (one shared fd for all ranks)", Some("buffered"))
@@ -154,6 +172,9 @@ pub struct CliOptions {
     /// every N completed epochs (0 = off).
     pub checkpoint_every: usize,
     pub net: NetModel,
+    /// `--rank`/`--peers` (or the `--listen`/`--connect` shorthand):
+    /// this process is one rank of a real multi-process run.
+    pub multiproc: Option<NetOptions>,
     pub verbose: bool,
 }
 
@@ -226,6 +247,20 @@ pub fn parse_cli(parsed: &Parsed) -> Result<CliOptions, ArgError> {
         other => return Err(bad("net", other, "want ideal | 10g".into())),
     };
 
+    let cv = parsed.get("collective").unwrap();
+    cfg.collective = cv.parse().map_err(|e| bad("collective", cv, e))?;
+
+    let multiproc = parse_multiproc(parsed, &mut cfg)?;
+    if multiproc.is_some() && netv != "ideal" {
+        return Err(bad(
+            "net",
+            netv,
+            "the interconnect model shapes the simulated cluster; a real \
+             multi-process run uses the real network"
+                .into(),
+        ));
+    }
+
     if matches!(cfg.kernel, KernelType::Accel | KernelType::Hybrid) && cfg.ranks > 1 {
         return Err(bad(
             "ranks",
@@ -251,8 +286,113 @@ pub fn parse_cli(parsed: &Parsed) -> Result<CliOptions, ArgError> {
         resume,
         checkpoint_every: parsed.parse_as::<usize>("checkpoint-every")?,
         net,
+        multiproc,
         verbose: parsed.flag("verbose"),
     })
+}
+
+/// Resolve `--listen`/`--connect`/`--rank`/`--peers` into [`NetOptions`]
+/// (adjusting `cfg.ranks` for the two-process shorthand), or `None` for
+/// single-process and simulated-cluster runs.
+fn parse_multiproc(
+    parsed: &Parsed,
+    cfg: &mut TrainConfig,
+) -> Result<Option<NetOptions>, ArgError> {
+    let listen = parsed.get("listen");
+    let connect = parsed.get("connect");
+    let rank = parsed.get("rank");
+    let peers = parsed.get("peers");
+
+    if let Some(addr) = listen.or(connect) {
+        if listen.is_some() && connect.is_some() {
+            return Err(bad(
+                "connect",
+                connect.unwrap(),
+                "a process either listens (rank 0) or connects (rank 1), \
+                 not both"
+                    .into(),
+            ));
+        }
+        if rank.is_some() || peers.is_some() {
+            return Err(bad(
+                "listen",
+                addr,
+                "--listen/--connect is the two-process shorthand; spell \
+                 bigger runs with --ranks N --rank K --peers ..."
+                    .into(),
+            ));
+        }
+        match cfg.ranks {
+            1 => cfg.ranks = 2, // the flag's default; the shorthand implies 2
+            2 => {}
+            n => {
+                return Err(bad(
+                    "ranks",
+                    &n.to_string(),
+                    "--listen/--connect runs exactly 2 processes; use \
+                     --rank/--peers for more ranks"
+                        .into(),
+                ))
+            }
+        }
+        return Ok(Some(NetOptions {
+            rank: usize::from(connect.is_some()),
+            peers: vec![addr.to_string()],
+        }));
+    }
+
+    match (rank, peers) {
+        (None, None) => Ok(None),
+        (Some(r), None) => Err(bad(
+            "rank",
+            r,
+            "--rank needs --peers (the rendezvous addresses)".into(),
+        )),
+        (None, Some(p)) => Err(bad(
+            "peers",
+            p,
+            "--peers needs --rank (which of these addresses is this \
+             process)"
+                .into(),
+        )),
+        (Some(r), Some(p)) => {
+            let rank = r
+                .parse::<usize>()
+                .map_err(|e| bad("rank", r, e.to_string()))?;
+            if cfg.ranks < 2 {
+                return Err(bad(
+                    "ranks",
+                    &cfg.ranks.to_string(),
+                    "a real multi-process run needs --ranks >= 2".into(),
+                ));
+            }
+            if rank >= cfg.ranks {
+                return Err(bad(
+                    "rank",
+                    r,
+                    format!("rank out of range for --ranks {}", cfg.ranks),
+                ));
+            }
+            let peers: Vec<String> = p
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            if peers.len() != cfg.ranks && peers.len() + 1 != cfg.ranks {
+                return Err(bad(
+                    "peers",
+                    p,
+                    format!(
+                        "lists {} addresses for {} ranks (one per rank in \
+                         rank order; the last rank's may be omitted)",
+                        peers.len(),
+                        cfg.ranks
+                    ),
+                ));
+            }
+            Ok(Some(NetOptions { rank, peers }))
+        }
+    }
 }
 
 #[cfg(test)]
@@ -414,6 +554,76 @@ mod tests {
         let o = parse(&["-p", "1", "in", "out"]);
         assert!(o.config.neighborhood.compact_support);
         assert_eq!(o.config.neighborhood.artifact_kind(), "gaussian_compact");
+    }
+
+    #[test]
+    fn collective_flag() {
+        use crate::cluster::comm::CollectiveAlgo;
+        let o = parse(&["in", "out"]);
+        assert_eq!(o.config.collective, CollectiveAlgo::Auto);
+        let o = parse(&["--collective", "ring", "--ranks", "4", "in", "out"]);
+        assert_eq!(o.config.collective, CollectiveAlgo::Ring);
+        let o = parse(&["--collective", "STAR", "in", "out"]);
+        assert_eq!(o.config.collective, CollectiveAlgo::Star);
+        let spec = arg_spec();
+        let parsed = spec
+            .parse(["--collective", "mesh", "in", "out"].map(String::from))
+            .unwrap();
+        assert!(parse_cli(&parsed).is_err());
+    }
+
+    #[test]
+    fn listen_connect_shorthand() {
+        let o = parse(&["--listen", "0.0.0.0:7777", "in", "out"]);
+        let mp = o.multiproc.unwrap();
+        assert_eq!(mp.rank, 0);
+        assert_eq!(mp.peers, vec!["0.0.0.0:7777".to_string()]);
+        assert_eq!(o.config.ranks, 2); // shorthand implies two processes
+
+        let o = parse(&["--connect", "somehost:7777", "in", "out"]);
+        let mp = o.multiproc.unwrap();
+        assert_eq!(mp.rank, 1);
+        assert_eq!(o.config.ranks, 2);
+
+        // Plain runs are not multiproc runs.
+        assert!(parse(&["--ranks", "4", "in", "out"]).multiproc.is_none());
+    }
+
+    #[test]
+    fn rank_peers_form() {
+        let o = parse(&[
+            "--ranks", "3", "--rank", "1",
+            "--peers", "h0:9000, h1:9001", "in", "out",
+        ]);
+        let mp = o.multiproc.unwrap();
+        assert_eq!(mp.rank, 1);
+        assert_eq!(mp.peers, vec!["h0:9000".to_string(), "h1:9001".to_string()]);
+    }
+
+    #[test]
+    fn bad_multiproc_combinations_rejected() {
+        let try_parse = |args: &[&str]| {
+            let spec = arg_spec();
+            let parsed = spec.parse(args.iter().map(|s| s.to_string())).unwrap();
+            parse_cli(&parsed)
+        };
+        // listen and connect together
+        assert!(try_parse(&["--listen", "a:1", "--connect", "b:2", "in", "out"]).is_err());
+        // shorthand with an explicit non-2 rank count
+        assert!(try_parse(&["--listen", "a:1", "--ranks", "4", "in", "out"]).is_err());
+        // shorthand mixed with the explicit form
+        assert!(try_parse(&["--listen", "a:1", "--rank", "0", "in", "out"]).is_err());
+        // --rank without --peers, and vice versa
+        assert!(try_parse(&["--ranks", "2", "--rank", "0", "in", "out"]).is_err());
+        assert!(try_parse(&["--ranks", "2", "--peers", "a:1", "in", "out"]).is_err());
+        // rank out of range / not enough ranks / wrong peer count
+        assert!(try_parse(&["--ranks", "2", "--rank", "2", "--peers", "a:1", "in", "out"]).is_err());
+        assert!(try_parse(&["--rank", "0", "--peers", "a:1", "in", "out"]).is_err());
+        assert!(
+            try_parse(&["--ranks", "4", "--rank", "0", "--peers", "a:1", "in", "out"]).is_err()
+        );
+        // the network model belongs to the simulated cluster
+        assert!(try_parse(&["--listen", "a:1", "--net", "10g", "in", "out"]).is_err());
     }
 
     #[test]

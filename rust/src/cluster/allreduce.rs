@@ -1,96 +1,595 @@
 //! Training collectives on top of rank endpoints, mirroring the MPI
-//! calls the paper replaced MapReduce with (§3):
+//! calls the paper replaced MapReduce with (§3) — now in three
+//! bandwidth classes selected by [`CollectiveAlgo`]:
 //!
-//! * `reduce_sum_to_root` — MPI_Reduce(+) of f32 buffers: slaves send
-//!   local Eq. 6 accumulators, the master sums ("the accumulation of
-//!   local weights into a new global code book by one single process on
-//!   the master node").
-//! * `broadcast_from_root` — MPI_Bcast: "the new code book is broadcast
-//!   to all slave nodes".
-//! * `gather_u32_to_root` — MPI_Gather: BMU collection for output.
-//! * `reduce_f64_sum` — scalar reduction (QE sum).
-//! * `barrier` — token ring, used by tests.
+//! * **Star** — the paper's literal master/slave pattern: slaves funnel
+//!   full buffers through rank 0, which sums serially in rank order
+//!   ("the accumulation of local weights into a new global code book by
+//!   one single process on the master node"). O(P·M) bytes through the
+//!   root; kept bit-compatible with the historical path for regression.
+//! * **Ring** — segmented reduce-scatter + allgather: every rank sends
+//!   exactly 2·(P−1)/P·M bytes (when P divides the buffer; within one
+//!   segment otherwise), independent of rank count. The bandwidth-
+//!   optimal choice for the Eq. 6 accumulators, which dominate traffic.
+//! * **Tree** — binomial reduce/broadcast: O(log P) latency steps for
+//!   small payloads (the QE scalar, barriers) where latency dominates.
+//!
+//! `Auto` resolves per call from the payload size — a pure function of
+//! values every rank agrees on (buffer length, rank count), so ranks
+//! never pick different algorithms for the same collective. Summation
+//! order is fixed per (rank count, algorithm): results are deterministic
+//! for a fixed `--collective` choice, star and ring/tree differing only
+//! by f32 reassociation (BMUs stay exact; codebooks within the 5e-4
+//! tolerance established by the chunking-equivalence suite).
+//!
+//! All payloads are little-endian bytes over [`Endpoint::send`]/`recv`,
+//! so the same collectives run unchanged over in-process channels and
+//! the TCP/UDS transport. Every operation returns `Result`: a dead peer
+//! is a [`CommError::PeerLost`], not a panic.
 
-use crate::cluster::comm::{CollectiveMsg, Endpoint};
+use std::ops::Range;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::cluster::comm::{Bytes, CollectiveAlgo, CollectiveOp, CommError, Endpoint, Rank};
 
 pub const ROOT: usize = 0;
 
-/// Sum `buf` across ranks into the root's buffer. Non-root buffers are
-/// left untouched; returns true on the root.
-pub fn reduce_sum_to_root(ep: &mut Endpoint, buf: &mut [f32]) -> bool {
-    if ep.rank == ROOT {
-        for from in 1..ep.size {
-            let part = ep.recv(from).into_f32();
-            assert_eq!(part.len(), buf.len(), "reduce length mismatch");
-            for (a, b) in buf.iter_mut().zip(part) {
-                *a += b;
+/// Payloads at or below this many bytes ride the binomial tree under
+/// `Auto`; larger ones ride the ring. Latency×log P beats bandwidth×2
+/// only while the buffer is small relative to the latency-bandwidth
+/// product (alpha-beta model; `NetModel::ethernet_10g` puts the
+/// crossover in the few-KiB range).
+pub const TREE_THRESHOLD_BYTES: usize = 4096;
+
+fn effective(algo: CollectiveAlgo, payload_bytes: usize) -> CollectiveAlgo {
+    match algo {
+        CollectiveAlgo::Auto => {
+            if payload_bytes <= TREE_THRESHOLD_BYTES {
+                CollectiveAlgo::Tree
+            } else {
+                CollectiveAlgo::Ring
             }
         }
-        true
-    } else {
-        ep.send(ROOT, CollectiveMsg::F32(buf.to_vec()));
-        false
+        fixed => fixed,
     }
 }
 
-/// Broadcast the root's buffer to every rank (in place).
-pub fn broadcast_from_root(ep: &mut Endpoint, buf: &mut [f32]) {
+/// Split `0..total` into exactly `parts` contiguous ranges whose sizes
+/// differ by at most one (earlier ranges get the remainder). Unlike
+/// `threadpool::split_ranges`, ranges may be empty — the ring needs one
+/// segment per rank even when `total < parts`, with empty segments
+/// moving as zero-byte frames to keep the lockstep.
+pub fn segment_ranges(total: usize, parts: usize) -> Vec<Range<usize>> {
+    assert!(parts > 0);
+    let base = total / parts;
+    let rem = total % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Little-endian codecs. f32/u32/f64 round-trip bit-exactly (including
+// NaN payloads), so byte transport preserves the star path's bits.
+
+pub(crate) fn f32_to_bytes(src: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(src.len() * 4);
+    for v in src {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+pub(crate) fn u32_to_bytes(src: &[u32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(src.len() * 4);
+    for v in src {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+fn payload_len_check(
+    bytes: &[u8],
+    want: usize,
+    from: Rank,
+    what: &str,
+) -> Result<(), CommError> {
+    if bytes.len() == want {
+        Ok(())
+    } else {
+        Err(CommError::Protocol {
+            peer: from,
+            what: format!("{what}: got {} bytes, want {want}", bytes.len()),
+        })
+    }
+}
+
+fn add_f32_from_bytes(dst: &mut [f32], bytes: &[u8], from: Rank) -> Result<(), CommError> {
+    payload_len_check(bytes, dst.len() * 4, from, "f32 sum payload")?;
+    for (a, c) in dst.iter_mut().zip(bytes.chunks_exact(4)) {
+        *a += f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+    }
+    Ok(())
+}
+
+fn copy_f32_from_bytes(dst: &mut [f32], bytes: &[u8], from: Rank) -> Result<(), CommError> {
+    payload_len_check(bytes, dst.len() * 4, from, "f32 payload")?;
+    for (a, c) in dst.iter_mut().zip(bytes.chunks_exact(4)) {
+        *a = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+    }
+    Ok(())
+}
+
+fn f64_from_bytes(bytes: &[u8], from: Rank) -> Result<f64, CommError> {
+    payload_len_check(bytes, 8, from, "f64 payload")?;
+    let mut b = [0u8; 8];
+    b.copy_from_slice(bytes);
+    Ok(f64::from_le_bytes(b))
+}
+
+fn u32s_from_bytes(bytes: &[u8], from: Rank) -> Result<Vec<u32>, CommError> {
+    if bytes.len() % 4 != 0 {
+        return Err(CommError::Protocol {
+            peer: from,
+            what: format!("u32 payload length {} not a multiple of 4", bytes.len()),
+        });
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Record the elapsed time of collective `op` against the endpoint's
+/// stats (per-rank call time; divide by rank count for wall estimates).
+fn timed<T>(
+    ep: &mut Endpoint,
+    op: CollectiveOp,
+    f: impl FnOnce(&mut Endpoint) -> Result<T, CommError>,
+) -> Result<T, CommError> {
+    let t = Instant::now();
+    let out = f(ep);
+    ep.stats().add_op_nanos(op, t.elapsed().as_nanos() as u64);
+    out
+}
+
+// ---------------------------------------------------------------------
+// Star primitives (the historical wire pattern, bit-compatible).
+
+fn star_reduce_f32(ep: &mut Endpoint, buf: &mut [f32]) -> Result<bool, CommError> {
     if ep.rank == ROOT {
-        for to in 1..ep.size {
-            ep.send(to, CollectiveMsg::F32(buf.to_vec()));
+        for from in 1..ep.size {
+            let part = ep.recv(from)?;
+            add_f32_from_bytes(buf, &part, from)?;
         }
+        Ok(true)
     } else {
-        let v = ep.recv(ROOT).into_f32();
-        assert_eq!(v.len(), buf.len(), "broadcast length mismatch");
-        buf.copy_from_slice(&v);
+        ep.send(ROOT, Arc::new(f32_to_bytes(buf)), CollectiveOp::Allreduce)?;
+        Ok(false)
     }
 }
 
-/// Gather variable-length u32 buffers to the root in rank order.
-pub fn gather_u32_to_root(ep: &mut Endpoint, local: Vec<u32>) -> Option<Vec<Vec<u32>>> {
+fn star_broadcast_f32(ep: &mut Endpoint, buf: &mut [f32]) -> Result<(), CommError> {
+    if ep.rank == ROOT {
+        // Serialize once, share the Arc with every destination — the
+        // in-process transport then moves P−1 pointers, not P−1 copies.
+        let payload = Arc::new(f32_to_bytes(buf));
+        for to in 1..ep.size {
+            ep.send(to, payload.clone(), CollectiveOp::Allreduce)?;
+        }
+        Ok(())
+    } else {
+        let v = ep.recv(ROOT)?;
+        copy_f32_from_bytes(buf, &v, ROOT)
+    }
+}
+
+fn star_gather_u32(
+    ep: &mut Endpoint,
+    local: Vec<u32>,
+) -> Result<Option<Vec<Vec<u32>>>, CommError> {
     if ep.rank == ROOT {
         let mut all = Vec::with_capacity(ep.size);
         all.push(local);
         for from in 1..ep.size {
-            all.push(ep.recv(from).into_u32());
+            let bytes = ep.recv(from)?;
+            all.push(u32s_from_bytes(&bytes, from)?);
         }
-        Some(all)
+        Ok(Some(all))
     } else {
-        ep.send(ROOT, CollectiveMsg::U32(local));
-        None
+        ep.send(ROOT, Arc::new(u32_to_bytes(&local)), CollectiveOp::Gather)?;
+        Ok(None)
     }
 }
 
-/// Sum an f64 scalar across ranks; every rank receives the total.
-pub fn allreduce_f64_sum(ep: &mut Endpoint, value: f64) -> f64 {
+fn star_allreduce_f64(ep: &mut Endpoint, value: f64) -> Result<f64, CommError> {
     if ep.rank == ROOT {
         let mut total = value;
         for from in 1..ep.size {
-            total += ep.recv(from).into_f64();
+            let bytes = ep.recv(from)?;
+            total += f64_from_bytes(&bytes, from)?;
         }
+        let payload = Arc::new(total.to_le_bytes().to_vec());
         for to in 1..ep.size {
-            ep.send(to, CollectiveMsg::F64(total));
+            ep.send(to, payload.clone(), CollectiveOp::Scalar)?;
         }
-        total
+        Ok(total)
     } else {
-        ep.send(ROOT, CollectiveMsg::F64(value));
-        ep.recv(ROOT).into_f64()
+        ep.send(
+            ROOT,
+            Arc::new(value.to_le_bytes().to_vec()),
+            CollectiveOp::Scalar,
+        )?;
+        let bytes = ep.recv(ROOT)?;
+        f64_from_bytes(&bytes, ROOT)
     }
 }
 
-/// Simple barrier: everyone checks in at the root, root releases.
-pub fn barrier(ep: &mut Endpoint) {
+fn star_barrier(ep: &mut Endpoint) -> Result<(), CommError> {
     if ep.rank == ROOT {
         for from in 1..ep.size {
-            let _ = ep.recv(from);
+            let _ = ep.recv(from)?;
         }
+        let token = Arc::new(Vec::new());
         for to in 1..ep.size {
-            ep.send(to, CollectiveMsg::Token);
+            ep.send(to, token.clone(), CollectiveOp::Barrier)?;
         }
     } else {
-        ep.send(ROOT, CollectiveMsg::Token);
-        let _ = ep.recv(ROOT);
+        ep.send(ROOT, Arc::new(Vec::new()), CollectiveOp::Barrier)?;
+        let _ = ep.recv(ROOT)?;
     }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Binomial tree primitives (root = 0). Reduce walks masks upward —
+// rank r receives from children r|mask (for masks below r's lowest set
+// bit), then sends its partial to parent r−lowbit(r). Broadcast is the
+// mirror image, high mask first. O(log P) rounds.
+
+fn tree_reduce_f32(
+    ep: &mut Endpoint,
+    buf: &mut [f32],
+    op: CollectiveOp,
+) -> Result<bool, CommError> {
+    let (r, size) = (ep.rank, ep.size);
+    let mut mask = 1;
+    while mask < size {
+        if r & mask != 0 {
+            ep.send(r & !mask, Arc::new(f32_to_bytes(buf)), op)?;
+            return Ok(false);
+        }
+        let child = r | mask;
+        if child < size {
+            let bytes = ep.recv(child)?;
+            add_f32_from_bytes(buf, &bytes, child)?;
+        }
+        mask <<= 1;
+    }
+    Ok(true) // only rank 0 has no set bit below `size`
+}
+
+fn tree_reduce_f64(ep: &mut Endpoint, value: f64, op: CollectiveOp) -> Result<Option<f64>, CommError> {
+    let (r, size) = (ep.rank, ep.size);
+    let mut total = value;
+    let mut mask = 1;
+    while mask < size {
+        if r & mask != 0 {
+            ep.send(r & !mask, Arc::new(total.to_le_bytes().to_vec()), op)?;
+            return Ok(None);
+        }
+        let child = r | mask;
+        if child < size {
+            let bytes = ep.recv(child)?;
+            total += f64_from_bytes(&bytes, child)?;
+        }
+        mask <<= 1;
+    }
+    Ok(Some(total))
+}
+
+/// Binomial broadcast of an opaque payload from rank 0; every rank gets
+/// the root's exact bytes. Root must pass `Some(payload)`, others
+/// `None`. Exposed for the multi-process bootstrap (initial codebook
+/// sync) as well as the tree allreduce below.
+pub fn broadcast_bytes_from_root(
+    ep: &mut Endpoint,
+    payload: Option<Arc<Vec<u8>>>,
+    op: CollectiveOp,
+) -> Result<Bytes, CommError> {
+    timed(ep, op, |ep| tree_broadcast_payload(ep, payload, op))
+}
+
+fn tree_broadcast_payload(
+    ep: &mut Endpoint,
+    payload: Option<Arc<Vec<u8>>>,
+    op: CollectiveOp,
+) -> Result<Bytes, CommError> {
+    let (r, size) = (ep.rank, ep.size);
+    let mut have = if r == ROOT {
+        Some(payload.expect("root provides the broadcast payload"))
+    } else {
+        None
+    };
+    let mut top = 1usize;
+    while top < size {
+        top <<= 1;
+    }
+    let mut mask = top >> 1;
+    while mask > 0 {
+        if r % (mask << 1) == 0 {
+            let partner = r + mask;
+            if partner < size {
+                let p = have.clone().expect("broadcast sender holds the payload");
+                ep.send(partner, p, op)?;
+            }
+        } else if r % (mask << 1) == mask {
+            // Exactly once per rank: mask == lowest set bit of r.
+            let got = ep.recv(r - mask)?;
+            have = Some(match got {
+                Bytes::Shared(a) => a,
+                Bytes::Owned(v) => Arc::new(v),
+            });
+        }
+        mask >>= 1;
+    }
+    Ok(Bytes::Shared(have.expect("broadcast reached every rank")))
+}
+
+fn tree_gather_u32(
+    ep: &mut Endpoint,
+    local: Vec<u32>,
+) -> Result<Option<Vec<Vec<u32>>>, CommError> {
+    let (r, size) = (ep.rank, ep.size);
+    let mut entries: Vec<(u32, Vec<u32>)> = vec![(r as u32, local)];
+    let mut mask = 1;
+    while mask < size {
+        if r & mask != 0 {
+            // Frame each entry [rank u32][len u32][data…] and hand the
+            // subtree to the parent.
+            let mut out = Vec::new();
+            for (rank, data) in &entries {
+                out.extend_from_slice(&rank.to_le_bytes());
+                out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+                out.extend_from_slice(&u32_to_bytes(data));
+            }
+            ep.send(r & !mask, Arc::new(out), CollectiveOp::Gather)?;
+            return Ok(None);
+        }
+        let child = r | mask;
+        if child < size {
+            let bytes = ep.recv(child)?;
+            entries.extend(parse_gather_frames(&bytes, child)?);
+        }
+        mask <<= 1;
+    }
+    entries.sort_by_key(|(rank, _)| *rank);
+    let complete = entries.len() == size
+        && entries.iter().enumerate().all(|(i, (rk, _))| *rk as usize == i);
+    if !complete {
+        return Err(CommError::Protocol {
+            peer: ROOT,
+            what: "gather: missing or duplicate rank frames".into(),
+        });
+    }
+    Ok(Some(entries.into_iter().map(|(_, d)| d).collect()))
+}
+
+fn parse_gather_frames(bytes: &[u8], from: Rank) -> Result<Vec<(u32, Vec<u32>)>, CommError> {
+    let truncated = |what: &str| CommError::Protocol {
+        peer: from,
+        what: what.to_string(),
+    };
+    let mut out = Vec::new();
+    let mut off = 0;
+    while off < bytes.len() {
+        if bytes.len() - off < 8 {
+            return Err(truncated("gather frame header truncated"));
+        }
+        let rank = u32::from_le_bytes([bytes[off], bytes[off + 1], bytes[off + 2], bytes[off + 3]]);
+        let len = u32::from_le_bytes([
+            bytes[off + 4],
+            bytes[off + 5],
+            bytes[off + 6],
+            bytes[off + 7],
+        ]) as usize;
+        off += 8;
+        if bytes.len() - off < len * 4 {
+            return Err(truncated("gather frame payload truncated"));
+        }
+        out.push((rank, u32s_from_bytes(&bytes[off..off + len * 4], from)?));
+        off += len * 4;
+    }
+    Ok(out)
+}
+
+fn tree_barrier(ep: &mut Endpoint) -> Result<(), CommError> {
+    let (r, size) = (ep.rank, ep.size);
+    let mut mask = 1;
+    while mask < size {
+        if r & mask != 0 {
+            ep.send(r & !mask, Arc::new(Vec::new()), CollectiveOp::Barrier)?;
+            break;
+        }
+        let child = r | mask;
+        if child < size {
+            let _ = ep.recv(child)?;
+        }
+        mask <<= 1;
+    }
+    tree_broadcast_payload(ep, (r == ROOT).then(|| Arc::new(Vec::new())), CollectiveOp::Barrier)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Ring allreduce: reduce-scatter then allgather around the ring
+// 0 → 1 → … → P−1 → 0. After reduce-scatter, rank r owns the fully
+// reduced segment (r+1) mod P (summed in the fixed order
+// c, c+1, …, c−1 for segment c — deterministic per rank count); the
+// allgather then byte-copies each owner's segment around the ring, so
+// every rank finishes with identical bits. Each rank sends
+// 2·total − seg(r+1) − seg(r+2) bytes = 2·(P−1)/P·M when P | len.
+// Sends never block (buffered transports), so the lockstep is safe.
+
+fn ring_allreduce_f32(
+    ep: &mut Endpoint,
+    buf: &mut [f32],
+    op: CollectiveOp,
+) -> Result<(), CommError> {
+    let (r, p) = (ep.rank, ep.size);
+    if p == 1 {
+        return Ok(());
+    }
+    let segs = segment_ranges(buf.len(), p);
+    let next = (r + 1) % p;
+    let prev = (r + p - 1) % p;
+    for step in 0..p - 1 {
+        let send_seg = (r + p - step) % p;
+        let recv_seg = (r + p - step - 1) % p;
+        let payload = f32_to_bytes(&buf[segs[send_seg].clone()]);
+        ep.send(next, Arc::new(payload), op)?;
+        let bytes = ep.recv(prev)?;
+        add_f32_from_bytes(&mut buf[segs[recv_seg].clone()], &bytes, prev)?;
+    }
+    for step in 0..p - 1 {
+        let send_seg = (r + 1 + p - step) % p;
+        let recv_seg = (r + p - step) % p;
+        let payload = f32_to_bytes(&buf[segs[send_seg].clone()]);
+        ep.send(next, Arc::new(payload), op)?;
+        let bytes = ep.recv(prev)?;
+        copy_f32_from_bytes(&mut buf[segs[recv_seg].clone()], &bytes, prev)?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Public collectives.
+
+/// Sum `buf` across ranks into the root's buffer (star wire pattern —
+/// the paper's MPI_Reduce). Non-root buffers are left untouched;
+/// returns true on the root.
+pub fn reduce_sum_to_root(ep: &mut Endpoint, buf: &mut [f32]) -> Result<bool, CommError> {
+    timed(ep, CollectiveOp::Allreduce, |ep| star_reduce_f32(ep, buf))
+}
+
+/// Broadcast the root's buffer to every rank in place (star wire
+/// pattern — the paper's MPI_Bcast). One serialization, shared per
+/// destination.
+pub fn broadcast_from_root(ep: &mut Endpoint, buf: &mut [f32]) -> Result<(), CommError> {
+    timed(ep, CollectiveOp::Allreduce, |ep| star_broadcast_f32(ep, buf))
+}
+
+/// Allreduce-sum `buf` in place with the selected algorithm; every rank
+/// finishes with identical bytes. `Auto` resolves from the buffer size
+/// (same on all ranks, so the choice is globally consistent).
+pub fn allreduce_f32_sum(
+    ep: &mut Endpoint,
+    buf: &mut [f32],
+    algo: CollectiveAlgo,
+) -> Result<(), CommError> {
+    let op = CollectiveOp::Allreduce;
+    timed(ep, op, |ep| {
+        if ep.size == 1 {
+            return Ok(());
+        }
+        match effective(algo, buf.len() * 4) {
+            CollectiveAlgo::Star => {
+                star_reduce_f32(ep, buf)?;
+                star_broadcast_f32(ep, buf)
+            }
+            CollectiveAlgo::Ring => ring_allreduce_f32(ep, buf, op),
+            _ => {
+                let payload = if tree_reduce_f32(ep, buf, op)? {
+                    Some(Arc::new(f32_to_bytes(buf)))
+                } else {
+                    None
+                };
+                let total = tree_broadcast_payload(ep, payload, op)?;
+                if ep.rank != ROOT {
+                    // Attribution: the bytes originate at the root even
+                    // when relayed by an intermediate rank.
+                    copy_f32_from_bytes(buf, &total, ROOT)?;
+                }
+                Ok(())
+            }
+        }
+    })
+}
+
+/// Sum an f64 scalar across ranks; every rank receives the total
+/// (star wire pattern, root's summation order).
+pub fn allreduce_f64_sum(ep: &mut Endpoint, value: f64) -> Result<f64, CommError> {
+    timed(ep, CollectiveOp::Scalar, |ep| star_allreduce_f64(ep, value))
+}
+
+/// f64 scalar allreduce with algorithm selection. Eight-byte payloads
+/// are latency-bound, so every non-star choice rides the binomial tree
+/// (a ring would take 2·(P−1) latency steps to move 8 bytes).
+pub fn allreduce_f64_sum_with(
+    ep: &mut Endpoint,
+    value: f64,
+    algo: CollectiveAlgo,
+) -> Result<f64, CommError> {
+    let op = CollectiveOp::Scalar;
+    timed(ep, op, |ep| {
+        if ep.size == 1 {
+            return Ok(value);
+        }
+        match algo {
+            CollectiveAlgo::Star => star_allreduce_f64(ep, value),
+            _ => {
+                let payload = tree_reduce_f64(ep, value, op)?
+                    .map(|total| Arc::new(total.to_le_bytes().to_vec()));
+                let total = tree_broadcast_payload(ep, payload, op)?;
+                f64_from_bytes(&total, ROOT)
+            }
+        }
+    })
+}
+
+/// Gather variable-length u32 buffers to the root in rank order (star
+/// wire pattern — the paper's MPI_Gather).
+pub fn gather_u32_to_root(
+    ep: &mut Endpoint,
+    local: Vec<u32>,
+) -> Result<Option<Vec<Vec<u32>>>, CommError> {
+    timed(ep, CollectiveOp::Gather, |ep| star_gather_u32(ep, local))
+}
+
+/// Gather with algorithm selection: the binomial tree bounds the
+/// *rounds* at O(log P) (tree/auto); star and ring use the direct
+/// linear gather — for gather the root must absorb every byte anyway,
+/// so there is no ring form.
+pub fn gather_u32_with(
+    ep: &mut Endpoint,
+    local: Vec<u32>,
+    algo: CollectiveAlgo,
+) -> Result<Option<Vec<Vec<u32>>>, CommError> {
+    timed(ep, CollectiveOp::Gather, |ep| match algo {
+        CollectiveAlgo::Star | CollectiveAlgo::Ring => star_gather_u32(ep, local),
+        _ => tree_gather_u32(ep, local),
+    })
+}
+
+/// Barrier, star wire pattern: everyone checks in at the root, root
+/// releases.
+pub fn barrier(ep: &mut Endpoint) -> Result<(), CommError> {
+    timed(ep, CollectiveOp::Barrier, star_barrier)
+}
+
+/// Barrier with algorithm selection (zero-byte tokens; every non-star
+/// choice rides the tree's O(log P) rounds).
+pub fn barrier_with(ep: &mut Endpoint, algo: CollectiveAlgo) -> Result<(), CommError> {
+    timed(ep, CollectiveOp::Barrier, |ep| match algo {
+        CollectiveAlgo::Star => star_barrier(ep),
+        _ => tree_barrier(ep),
+    })
 }
 
 #[cfg(test)]
@@ -117,10 +616,28 @@ mod tests {
     }
 
     #[test]
+    fn segment_ranges_cover_exactly() {
+        for (total, parts) in [(10, 4), (3, 5), (0, 3), (16, 4), (7, 1)] {
+            let segs = segment_ranges(total, parts);
+            assert_eq!(segs.len(), parts);
+            let mut cursor = 0;
+            for s in &segs {
+                assert_eq!(s.start, cursor);
+                cursor = s.end;
+            }
+            assert_eq!(cursor, total);
+            let (min, max) = segs
+                .iter()
+                .fold((usize::MAX, 0), |(lo, hi), s| (lo.min(s.len()), hi.max(s.len())));
+            assert!(max - min <= 1, "{total}/{parts}: uneven split {segs:?}");
+        }
+    }
+
+    #[test]
     fn reduce_sums_on_root_only() {
         let out = with_world(4, |mut ep| {
             let mut buf = vec![ep.rank as f32, 1.0];
-            let is_root = reduce_sum_to_root(&mut ep, &mut buf);
+            let is_root = reduce_sum_to_root(&mut ep, &mut buf).unwrap();
             (is_root, buf)
         });
         assert_eq!(out[0], (true, vec![0.0 + 1.0 + 2.0 + 3.0, 4.0]));
@@ -138,7 +655,7 @@ mod tests {
             } else {
                 vec![0.0, 0.0]
             };
-            broadcast_from_root(&mut ep, &mut buf);
+            broadcast_from_root(&mut ep, &mut buf).unwrap();
             buf
         });
         for buf in out {
@@ -148,11 +665,11 @@ mod tests {
 
     #[test]
     fn reduce_then_broadcast_equals_serial_sum() {
-        // The full per-epoch pattern: every rank ends with the total.
+        // The full per-epoch star pattern: every rank ends with the total.
         let out = with_world(5, |mut ep| {
             let mut buf = vec![(ep.rank + 1) as f32; 3];
-            reduce_sum_to_root(&mut ep, &mut buf);
-            broadcast_from_root(&mut ep, &mut buf);
+            reduce_sum_to_root(&mut ep, &mut buf).unwrap();
+            broadcast_from_root(&mut ep, &mut buf).unwrap();
             buf
         });
         let want = vec![15.0; 3];
@@ -162,34 +679,157 @@ mod tests {
     }
 
     #[test]
-    fn gather_preserves_rank_order_and_lengths() {
-        let out = with_world(4, |mut ep| {
-            let local: Vec<u32> = (0..=ep.rank as u32).collect();
-            gather_u32_to_root(&mut ep, local)
-        });
-        let root = out[0].as_ref().unwrap();
-        assert_eq!(root.len(), 4);
-        for (r, v) in root.iter().enumerate() {
-            assert_eq!(v, &(0..=r as u32).collect::<Vec<_>>());
+    fn ring_and_tree_allreduce_match_serial_sum() {
+        // Integer-valued f32s sum exactly in any association order, so
+        // equality is exact across algorithms — including segment tails
+        // (len % P ≠ 0) and starved ranks (len < P).
+        for algo in [CollectiveAlgo::Ring, CollectiveAlgo::Tree, CollectiveAlgo::Auto] {
+            for size in [1, 2, 3, 5, 8] {
+                for len in [1, 3, size.saturating_sub(1).max(1), 4 * size + 3] {
+                    let out = with_world(size, move |mut ep| {
+                        let mut buf: Vec<f32> =
+                            (0..len).map(|i| (ep.rank * len + i) as f32).collect();
+                        allreduce_f32_sum(&mut ep, &mut buf, algo).unwrap();
+                        buf
+                    });
+                    let want: Vec<f32> = (0..len)
+                        .map(|i| (0..size).map(|r| (r * len + i) as f32).sum())
+                        .collect();
+                    for (r, buf) in out.iter().enumerate() {
+                        assert_eq!(
+                            buf, &want,
+                            "algo {algo:?} size {size} len {len} rank {r}"
+                        );
+                    }
+                }
+            }
         }
-        assert!(out[1..].iter().all(|o| o.is_none()));
     }
 
     #[test]
-    fn allreduce_scalar() {
-        let out = with_world(4, |mut ep| {
-            let r = ep.rank as f64;
-            allreduce_f64_sum(&mut ep, r)
+    fn all_ranks_finish_bit_identical() {
+        // Non-integer values reassociate differently per rank *order*,
+        // but the design guarantees all ranks hold the root/owner bytes:
+        // buffers must be bit-identical across ranks.
+        for algo in [CollectiveAlgo::Ring, CollectiveAlgo::Tree] {
+            let out = with_world(5, move |mut ep| {
+                let mut buf: Vec<f32> =
+                    (0..13).map(|i| 0.1 + ep.rank as f32 * 0.3 + i as f32 * 0.7).collect();
+                allreduce_f32_sum(&mut ep, &mut buf, algo).unwrap();
+                buf.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            });
+            for bits in &out[1..] {
+                assert_eq!(bits, &out[0], "algo {algo:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn gather_preserves_rank_order_and_lengths() {
+        for algo in [CollectiveAlgo::Star, CollectiveAlgo::Tree, CollectiveAlgo::Auto] {
+            let out = with_world(4, move |mut ep| {
+                let local: Vec<u32> = (0..=ep.rank as u32).collect();
+                gather_u32_with(&mut ep, local, algo).unwrap()
+            });
+            let root = out[0].as_ref().unwrap();
+            assert_eq!(root.len(), 4, "algo {algo:?}");
+            for (r, v) in root.iter().enumerate() {
+                assert_eq!(v, &(0..=r as u32).collect::<Vec<_>>(), "algo {algo:?}");
+            }
+            assert!(out[1..].iter().all(|o| o.is_none()));
+        }
+    }
+
+    #[test]
+    fn allreduce_scalar_all_algos() {
+        for algo in [CollectiveAlgo::Star, CollectiveAlgo::Tree, CollectiveAlgo::Auto] {
+            let out = with_world(4, move |mut ep| {
+                let r = ep.rank as f64;
+                allreduce_f64_sum_with(&mut ep, r, algo).unwrap()
+            });
+            assert!(out.iter().all(|&v| v == 6.0), "algo {algo:?}");
+        }
+        let legacy = with_world(4, |mut ep| {
+            allreduce_f64_sum(&mut ep, ep.rank as f64).unwrap()
         });
-        assert!(out.iter().all(|&v| v == 6.0));
+        assert!(legacy.iter().all(|&v| v == 6.0));
     }
 
     #[test]
-    fn barrier_completes() {
-        let out = with_world(6, |mut ep| {
-            barrier(&mut ep);
+    fn barrier_completes_all_algos() {
+        for algo in [CollectiveAlgo::Star, CollectiveAlgo::Ring, CollectiveAlgo::Tree] {
+            let out = with_world(6, move |mut ep| {
+                barrier_with(&mut ep, algo).unwrap();
+                ep.rank
+            });
+            assert_eq!(out.len(), 6, "algo {algo:?}");
+        }
+        let out = with_world(3, |mut ep| {
+            barrier(&mut ep).unwrap();
             ep.rank
         });
-        assert_eq!(out.len(), 6);
+        assert_eq!(out.len(), 3);
+    }
+
+    #[test]
+    fn ring_per_rank_bytes_match_closed_form() {
+        // Each rank sends 2·total − seg(r+1) − seg(r+2) bytes; with
+        // P | len that is exactly 2·(P−1)/P·M — the bandwidth-optimality
+        // claim, asserted from the actual CommStats counters.
+        for (p, len) in [(2usize, 64usize), (4, 64), (8, 64), (4, 7), (3, 2)] {
+            let mut world = World::new(p, NetModel::ideal());
+            let eps = world.take_endpoints();
+            let tasks: Vec<_> = eps
+                .into_iter()
+                .map(|mut ep| {
+                    move || {
+                        let mut buf = vec![1.0f32; len];
+                        allreduce_f32_sum(&mut ep, &mut buf, CollectiveAlgo::Ring).unwrap();
+                    }
+                })
+                .collect();
+            run_concurrent(tasks);
+            let segs = segment_ranges(len, p);
+            let total_bytes = 4 * len as u64;
+            for r in 0..p {
+                let skip_a = 4 * segs[(r + 1) % p].len() as u64;
+                let skip_b = 4 * segs[(r + 2) % p].len() as u64;
+                let want = 2 * total_bytes - skip_a - skip_b;
+                assert_eq!(
+                    world.stats.rank_bytes(r),
+                    want,
+                    "P={p} len={len} rank {r}"
+                );
+                if len % p == 0 {
+                    assert_eq!(want, 2 * (p as u64 - 1) * total_bytes / p as u64);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dead_peer_surfaces_as_peer_lost() {
+        // Rank 1 exits before the collective: the survivors get a clean
+        // CommError instead of a panic.
+        let mut world = World::new(3, NetModel::ideal());
+        let mut eps = world.take_endpoints();
+        let e2 = eps.pop().unwrap();
+        let e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        drop(e1);
+        let out = run_concurrent(vec![
+            Box::new(move || {
+                let mut ep = e0;
+                let mut buf = vec![1.0f32; 8];
+                reduce_sum_to_root(&mut ep, &mut buf).map(|_| ())
+            }) as Box<dyn FnOnce() -> Result<(), CommError> + Send>,
+            Box::new(move || {
+                let mut ep = e2;
+                let mut buf = vec![1.0f32; 8];
+                reduce_sum_to_root(&mut ep, &mut buf).map(|_| ())
+            }),
+        ]);
+        let err = out[0].as_ref().unwrap_err();
+        assert!(matches!(err, CommError::PeerLost { peer: 1 }));
     }
 }

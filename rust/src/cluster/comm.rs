@@ -1,9 +1,25 @@
 //! Rank-to-rank messaging: the MPI substitute.
 //!
-//! A `World` builds a full mesh of channels between `size` ranks; each
-//! rank takes its `Endpoint` into its thread. Sends are byte-counted
-//! (per-rank totals, read by the Fig. 8 harness) and optionally delayed
-//! by the `NetModel` to simulate interconnect cost.
+//! The communication layer is split along two seams (ISSUE 7):
+//!
+//! * **[`Transport`]** moves opaque byte payloads between ranks. The
+//!   in-process [`ChannelTransport`] (built by [`World`]) is a full mesh
+//!   of channels — one OS thread per simulated rank, optionally delayed
+//!   by the alpha-beta [`NetModel`] to model interconnect cost. The
+//!   socket transport ([`crate::cluster::transport_net::NetTransport`])
+//!   carries the same frames over length-prefixed TCP/UDS streams so
+//!   ranks can be real processes on real machines.
+//! * **[`Endpoint`]** is what the collectives in
+//!   [`crate::cluster::allreduce`] program against: rank identity plus
+//!   byte/message/time accounting ([`CommStats`]), independent of which
+//!   transport carries the bytes.
+//!
+//! Every payload is raw little-endian bytes (`f32`/`u32`/`f64` buffers
+//! encode bit-exactly), so the star collectives produce the same bits
+//! over any transport, and byte counts match what MPI would put on the
+//! wire for the same buffers. Sends and receives return `Result`: a
+//! dropped peer surfaces as [`CommError::PeerLost`] instead of
+//! poisoning every rank thread with a panic.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -13,90 +29,295 @@ use crate::cluster::netmodel::NetModel;
 
 pub type Rank = usize;
 
-/// Payloads exchanged by the training collectives. Byte costs match what
-/// MPI would put on the wire for the same buffers.
-#[derive(Clone, Debug)]
-pub enum CollectiveMsg {
-    F32(Vec<f32>),
-    U32(Vec<u32>),
-    F64(f64),
-    /// Control/empty message (barrier token).
-    Token,
+/// Which collective algorithm the cluster exchange uses (`--collective`).
+///
+/// A **runtime knob** like `threads`/`ranks`: not stored in checkpoints.
+/// Summation order is fixed per (rank count, algorithm), so any single
+/// choice is deterministic across a run — but star and ring/tree
+/// reassociate f32 sums differently, so codebooks agree only within the
+/// established 5e-4 reassociation tolerance (BMUs stay exact).
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub enum CollectiveAlgo {
+    /// Pick by payload size: binomial tree for small (latency-bound)
+    /// buffers, segmented ring for large (bandwidth-bound) ones.
+    #[default]
+    Auto,
+    /// The paper's literal master/slave star (§3): slaves funnel full
+    /// buffers through rank 0, which sums serially in rank order. Kept
+    /// bit-compatible with the historical path for regression tests.
+    Star,
+    /// Segmented ring reduce-scatter + allgather: each rank moves
+    /// 2·(P−1)/P·M bytes per allreduce regardless of rank count.
+    Ring,
+    /// Binomial tree reduce + broadcast: O(log P) latency steps, for
+    /// small payloads where latency dominates bandwidth.
+    Tree,
 }
 
-impl CollectiveMsg {
-    pub fn byte_cost(&self) -> usize {
+impl CollectiveAlgo {
+    /// The CLI spelling (for reports and error messages).
+    pub fn as_str(self) -> &'static str {
         match self {
-            CollectiveMsg::F32(v) => v.len() * 4,
-            CollectiveMsg::U32(v) => v.len() * 4,
-            CollectiveMsg::F64(_) => 8,
-            CollectiveMsg::Token => 1,
-        }
-    }
-
-    pub fn into_f32(self) -> Vec<f32> {
-        match self {
-            CollectiveMsg::F32(v) => v,
-            other => panic!("expected F32 message, got {other:?}"),
-        }
-    }
-
-    pub fn into_u32(self) -> Vec<u32> {
-        match self {
-            CollectiveMsg::U32(v) => v,
-            other => panic!("expected U32 message, got {other:?}"),
-        }
-    }
-
-    pub fn into_f64(self) -> f64 {
-        match self {
-            CollectiveMsg::F64(v) => v,
-            other => panic!("expected F64 message, got {other:?}"),
+            CollectiveAlgo::Auto => "auto",
+            CollectiveAlgo::Star => "star",
+            CollectiveAlgo::Ring => "ring",
+            CollectiveAlgo::Tree => "tree",
         }
     }
 }
 
-/// Shared communication statistics (read after the run).
+impl std::str::FromStr for CollectiveAlgo {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(CollectiveAlgo::Auto),
+            "star" => Ok(CollectiveAlgo::Star),
+            "ring" => Ok(CollectiveAlgo::Ring),
+            "tree" => Ok(CollectiveAlgo::Tree),
+            other => Err(format!(
+                "unknown collective algorithm: {other} (want auto | star | ring | tree)"
+            )),
+        }
+    }
+}
+
+/// Communication failure, surfaced through the collectives as a clean
+/// error instead of a panic (ISSUE 7 satellite): the cluster runner
+/// annotates it with the failing rank and epoch.
+#[derive(Debug, thiserror::Error)]
+pub enum CommError {
+    /// The peer's endpoint dropped mid-collective (rank thread returned
+    /// early, process died, or socket closed).
+    #[error("rank {peer} lost (endpoint dropped mid-collective)")]
+    PeerLost { peer: Rank },
+    /// The peer sent bytes that do not decode as the expected payload.
+    #[error("protocol error talking to rank {peer}: {what}")]
+    Protocol { peer: Rank, what: String },
+}
+
+/// A received payload: shared (loopback / in-process, zero-copy) or
+/// owned (read off a socket). Dereferences to `&[u8]` either way.
+pub enum Bytes {
+    Shared(Arc<Vec<u8>>),
+    Owned(Vec<u8>),
+}
+
+impl std::ops::Deref for Bytes {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        match self {
+            Bytes::Shared(b) => b,
+            Bytes::Owned(b) => b,
+        }
+    }
+}
+
+/// Which collective a send belongs to, for the per-op accounting the
+/// Fig. 8 harness reports (`CommStats::op_totals`).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum CollectiveOp {
+    /// f32 buffer allreduce (the Eq. 6 num/den accumulators — the
+    /// bandwidth-dominant exchange; in star mode this covers the
+    /// reduce-to-root and the codebook broadcast).
+    Allreduce,
+    /// f64 scalar allreduce (the QE total).
+    Scalar,
+    /// BMU gather to root.
+    Gather,
+    /// Barrier tokens.
+    Barrier,
+    /// Multi-process bootstrap (hello + initial codebook sync).
+    Bootstrap,
+}
+
+/// Display names, indexed by [`CollectiveOp::index`].
+pub const OP_NAMES: [&str; 5] = ["allreduce", "scalar", "gather", "barrier", "bootstrap"];
+
+impl CollectiveOp {
+    pub fn index(self) -> usize {
+        match self {
+            CollectiveOp::Allreduce => 0,
+            CollectiveOp::Scalar => 1,
+            CollectiveOp::Gather => 2,
+            CollectiveOp::Barrier => 3,
+            CollectiveOp::Bootstrap => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        OP_NAMES[self.index()]
+    }
+}
+
 #[derive(Debug, Default)]
+struct OpCounters {
+    bytes: AtomicU64,
+    messages: AtomicU64,
+    nanos: AtomicU64,
+}
+
+/// One collective's totals (a [`CommStats::op_totals`] row). `nanos`
+/// aggregates rank-time spent inside the collective across all ranks —
+/// divide by the rank count for mean per-rank wall time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpTotals {
+    pub name: &'static str,
+    pub bytes: u64,
+    pub messages: u64,
+    pub nanos: u64,
+}
+
+/// Shared communication statistics (read after the run): aggregate
+/// byte/message totals, per-rank sent bytes (the star-vs-ring contrast
+/// is a *max-per-rank* story — aggregate volumes are nearly equal), and
+/// per-collective bytes/messages/time.
+#[derive(Debug)]
 pub struct CommStats {
     pub bytes_sent: AtomicU64,
     pub messages_sent: AtomicU64,
+    per_rank_bytes: Vec<AtomicU64>,
+    per_op: [OpCounters; OP_NAMES.len()],
 }
 
-/// One rank's endpoint: senders to every rank, receivers from every rank.
+impl CommStats {
+    pub fn new(size: usize) -> Self {
+        CommStats {
+            bytes_sent: AtomicU64::new(0),
+            messages_sent: AtomicU64::new(0),
+            per_rank_bytes: (0..size).map(|_| AtomicU64::new(0)).collect(),
+            per_op: Default::default(),
+        }
+    }
+
+    fn record_send(&self, from: Rank, op: CollectiveOp, bytes: usize) {
+        self.bytes_sent.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.messages_sent.fetch_add(1, Ordering::Relaxed);
+        if let Some(r) = self.per_rank_bytes.get(from) {
+            r.fetch_add(bytes as u64, Ordering::Relaxed);
+        }
+        let c = &self.per_op[op.index()];
+        c.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        c.messages.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Add rank-time spent inside a collective (each rank's call adds
+    /// its own elapsed time).
+    pub fn add_op_nanos(&self, op: CollectiveOp, nanos: u64) {
+        self.per_op[op.index()].nanos.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    /// Bytes sent by one rank.
+    pub fn rank_bytes(&self, rank: Rank) -> u64 {
+        self.per_rank_bytes
+            .get(rank)
+            .map_or(0, |r| r.load(Ordering::Relaxed))
+    }
+
+    /// The busiest sender's byte total — the bandwidth bottleneck
+    /// (rank 0 under star; ~2·(P−1)/P·M for every rank under ring).
+    pub fn max_rank_bytes(&self) -> u64 {
+        self.per_rank_bytes
+            .iter()
+            .map(|r| r.load(Ordering::Relaxed))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Per-collective totals, in [`OP_NAMES`] order.
+    pub fn op_totals(&self) -> Vec<OpTotals> {
+        self.per_op
+            .iter()
+            .zip(OP_NAMES)
+            .map(|(c, name)| OpTotals {
+                name,
+                bytes: c.bytes.load(Ordering::Relaxed),
+                messages: c.messages.load(Ordering::Relaxed),
+                nanos: c.nanos.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+}
+
+/// Byte mover between ranks. Implementations must deliver payloads
+/// per-pair in FIFO order; `send` must not block on the receiver making
+/// progress (buffered channel or writer thread), because the ring
+/// collectives run in lockstep with everyone sending before receiving.
+pub trait Transport: Send {
+    fn send(&mut self, to: Rank, payload: Arc<Vec<u8>>) -> Result<(), CommError>;
+    fn recv(&mut self, from: Rank) -> Result<Bytes, CommError>;
+}
+
+/// One rank's endpoint: a transport plus identity and accounting. The
+/// collectives in [`crate::cluster::allreduce`] are written against
+/// this type only, so they run unchanged over threads or sockets.
 pub struct Endpoint {
     pub rank: Rank,
     pub size: usize,
-    txs: Vec<Sender<CollectiveMsg>>,
-    rxs: Vec<Receiver<CollectiveMsg>>,
+    transport: Box<dyn Transport>,
     stats: Arc<CommStats>,
-    net: Arc<NetModel>,
 }
 
 impl Endpoint {
-    /// Send `msg` to `to` (applies the network-model delay and counts
-    /// bytes). Sending to self is allowed (loopback, no delay).
-    pub fn send(&self, to: Rank, msg: CollectiveMsg) {
-        let bytes = msg.byte_cost();
-        if to != self.rank {
-            self.stats.bytes_sent.fetch_add(bytes as u64, Ordering::Relaxed);
-            self.stats.messages_sent.fetch_add(1, Ordering::Relaxed);
-            self.net.transfer_delay(bytes);
+    pub fn new(rank: Rank, size: usize, transport: Box<dyn Transport>, stats: Arc<CommStats>) -> Self {
+        Endpoint {
+            rank,
+            size,
+            transport,
+            stats,
         }
-        self.txs[to]
-            .send(msg)
-            .expect("peer endpoint dropped before receiving");
     }
 
-    /// Blocking receive from `from`.
-    pub fn recv(&mut self, from: Rank) -> CollectiveMsg {
-        self.rxs[from]
-            .recv()
-            .expect("peer endpoint dropped before sending")
+    /// Send `payload` to `to`, attributed to collective `op`. Sending
+    /// to self is allowed (loopback — not counted, like MPI self-sends
+    /// that never touch the wire).
+    pub fn send(&mut self, to: Rank, payload: Arc<Vec<u8>>, op: CollectiveOp) -> Result<(), CommError> {
+        if to != self.rank {
+            self.stats.record_send(self.rank, op, payload.len());
+        }
+        self.transport.send(to, payload)
+    }
+
+    /// Blocking receive of the next payload from `from`.
+    pub fn recv(&mut self, from: Rank) -> Result<Bytes, CommError> {
+        self.transport.recv(from)
+    }
+
+    /// The shared statistics handle.
+    pub fn stats(&self) -> &Arc<CommStats> {
+        &self.stats
     }
 }
 
-/// The communicator: build once, split into endpoints.
+/// The in-process transport: a full mesh of unbounded channels, with
+/// the alpha-beta [`NetModel`] delaying non-loopback sends to simulate
+/// interconnect cost. Payloads move as `Arc` clones — a broadcast
+/// serializes once and shares the buffer with every receiver.
+pub struct ChannelTransport {
+    rank: Rank,
+    txs: Vec<Sender<Arc<Vec<u8>>>>,
+    rxs: Vec<Receiver<Arc<Vec<u8>>>>,
+    net: Arc<NetModel>,
+}
+
+impl Transport for ChannelTransport {
+    fn send(&mut self, to: Rank, payload: Arc<Vec<u8>>) -> Result<(), CommError> {
+        if to != self.rank {
+            self.net.transfer_delay(payload.len());
+        }
+        self.txs[to]
+            .send(payload)
+            .map_err(|_| CommError::PeerLost { peer: to })
+    }
+
+    fn recv(&mut self, from: Rank) -> Result<Bytes, CommError> {
+        self.rxs[from]
+            .recv()
+            .map(Bytes::Shared)
+            .map_err(|_| CommError::PeerLost { peer: from })
+    }
+}
+
+/// The in-process communicator: build once, split into endpoints.
 pub struct World {
     pub size: usize,
     pub stats: Arc<CommStats>,
@@ -106,12 +327,12 @@ pub struct World {
 impl World {
     pub fn new(size: usize, net: NetModel) -> Self {
         assert!(size > 0);
-        let stats = Arc::new(CommStats::default());
+        let stats = Arc::new(CommStats::new(size));
         let net = Arc::new(net);
         // mesh[from][to]
-        let mut senders: Vec<Vec<Option<Sender<CollectiveMsg>>>> =
+        let mut senders: Vec<Vec<Option<Sender<Arc<Vec<u8>>>>>> =
             (0..size).map(|_| (0..size).map(|_| None).collect()).collect();
-        let mut receivers: Vec<Vec<Option<Receiver<CollectiveMsg>>>> =
+        let mut receivers: Vec<Vec<Option<Receiver<Arc<Vec<u8>>>>>> =
             (0..size).map(|_| (0..size).map(|_| None).collect()).collect();
         for from in 0..size {
             for to in 0..size {
@@ -124,13 +345,14 @@ impl World {
             .into_iter()
             .zip(receivers)
             .enumerate()
-            .map(|(rank, (txs, rxs))| Endpoint {
-                rank,
-                size,
-                txs: txs.into_iter().map(Option::unwrap).collect(),
-                rxs: rxs.into_iter().map(Option::unwrap).collect(),
-                stats: stats.clone(),
-                net: net.clone(),
+            .map(|(rank, (txs, rxs))| {
+                let transport = ChannelTransport {
+                    rank,
+                    txs: txs.into_iter().map(Option::unwrap).collect(),
+                    rxs: rxs.into_iter().map(Option::unwrap).collect(),
+                    net: net.clone(),
+                };
+                Endpoint::new(rank, size, Box::new(transport), stats.clone())
             })
             .collect();
         World {
@@ -169,19 +391,27 @@ mod tests {
         let out = run_concurrent(vec![
             Box::new(move || {
                 let mut e0 = e0;
-                e0.send(1, CollectiveMsg::F32(vec![1.0, 2.0]));
-                e0.recv(1).into_f64()
-            }) as Box<dyn FnOnce() -> f64 + Send>,
+                e0.send(1, Arc::new(vec![1u8; 8]), CollectiveOp::Allreduce).unwrap();
+                e0.recv(1).unwrap().len()
+            }) as Box<dyn FnOnce() -> usize + Send>,
             Box::new(move || {
                 let mut e1 = e1;
-                let v = e1.recv(0).into_f32();
-                e1.send(0, CollectiveMsg::F64(v.iter().sum::<f32>() as f64));
-                0.0
+                let got = e1.recv(0).unwrap();
+                assert_eq!(&*got, &[1u8; 8]);
+                e1.send(0, Arc::new(vec![2u8; 8]), CollectiveOp::Scalar).unwrap();
+                0
             }),
         ]);
-        assert_eq!(out[0], 3.0);
+        assert_eq!(out[0], 8);
         assert_eq!(world.bytes_sent(), 8 + 8);
         assert_eq!(world.messages_sent(), 2);
+        // Per-rank and per-op attribution.
+        assert_eq!(world.stats.rank_bytes(0), 8);
+        assert_eq!(world.stats.rank_bytes(1), 8);
+        let ops = world.stats.op_totals();
+        assert_eq!(ops[CollectiveOp::Allreduce.index()].bytes, 8);
+        assert_eq!(ops[CollectiveOp::Scalar.index()].bytes, 8);
+        assert_eq!(ops[CollectiveOp::Gather.index()].bytes, 0);
     }
 
     #[test]
@@ -189,9 +419,10 @@ mod tests {
         let mut world = World::new(1, NetModel::ideal());
         let mut eps = world.take_endpoints();
         let mut e = eps.pop().unwrap();
-        e.send(0, CollectiveMsg::U32(vec![1, 2, 3]));
-        assert_eq!(e.recv(0).into_u32(), vec![1, 2, 3]);
+        e.send(0, Arc::new(vec![1, 2, 3]), CollectiveOp::Gather).unwrap();
+        assert_eq!(&*e.recv(0).unwrap(), &[1, 2, 3]);
         assert_eq!(world.bytes_sent(), 0);
+        assert_eq!(world.stats.max_rank_bytes(), 0);
     }
 
     #[test]
@@ -202,17 +433,44 @@ mod tests {
         let e0 = eps.pop().unwrap();
         let got = run_concurrent(vec![
             Box::new(move || {
-                let e0 = e0;
-                for i in 0..100u32 {
-                    e0.send(1, CollectiveMsg::U32(vec![i]));
+                let mut e0 = e0;
+                for i in 0..100u8 {
+                    e0.send(1, Arc::new(vec![i]), CollectiveOp::Barrier).unwrap();
                 }
                 Vec::new()
-            }) as Box<dyn FnOnce() -> Vec<u32> + Send>,
+            }) as Box<dyn FnOnce() -> Vec<u8> + Send>,
             Box::new(move || {
                 let mut e1 = e1;
-                (0..100).map(|_| e1.recv(0).into_u32()[0]).collect()
+                (0..100).map(|_| e1.recv(0).unwrap()[0]).collect()
             }),
         ]);
         assert_eq!(got[1], (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn dropped_peer_is_an_error_not_a_panic() {
+        let mut world = World::new(2, NetModel::ideal());
+        let mut eps = world.take_endpoints();
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        drop(e1); // rank 1 dies before communicating
+        let err = e0.recv(1).unwrap_err();
+        assert!(matches!(err, CommError::PeerLost { peer: 1 }));
+        let err = e0
+            .send(1, Arc::new(vec![0u8; 4]), CollectiveOp::Allreduce)
+            .unwrap_err();
+        assert!(matches!(err, CommError::PeerLost { peer: 1 }));
+        assert_eq!(err.to_string(), "rank 1 lost (endpoint dropped mid-collective)");
+    }
+
+    #[test]
+    fn collective_algo_parses() {
+        assert_eq!("auto".parse::<CollectiveAlgo>().unwrap(), CollectiveAlgo::Auto);
+        assert_eq!("STAR".parse::<CollectiveAlgo>().unwrap(), CollectiveAlgo::Star);
+        assert_eq!("ring".parse::<CollectiveAlgo>().unwrap(), CollectiveAlgo::Ring);
+        assert_eq!("tree".parse::<CollectiveAlgo>().unwrap(), CollectiveAlgo::Tree);
+        assert!("butterfly".parse::<CollectiveAlgo>().is_err());
+        assert_eq!(CollectiveAlgo::default(), CollectiveAlgo::Auto);
+        assert_eq!(CollectiveAlgo::Ring.as_str(), "ring");
     }
 }

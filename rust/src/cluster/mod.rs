@@ -1,4 +1,4 @@
-//! Simulated distributed runtime — the paper's MPI layer (§3.2).
+//! Distributed runtime — the paper's MPI layer (§3.2).
 //!
 //! The paper's communication structure is deliberately simple: data is
 //! sharded once ("we can distribute equally sized parts of the data to
@@ -6,16 +6,33 @@
 //! on"); each epoch the slaves send local weight updates to the master,
 //! the master accumulates, and the new code book is broadcast.
 //!
-//! We reproduce that structure with one OS thread per rank connected by
-//! message channels. Every message is byte-counted, and an optional
-//! latency/bandwidth network model injects transfer delay, so the Fig. 8
-//! scaling experiment preserves the compute-to-communication ratio that
-//! makes the paper's scaling near-linear (see DESIGN.md §3).
+//! We reproduce that structure — and improve on its star-shaped
+//! collectives — behind a pluggable byte [`Transport`]:
+//!
+//! * [`comm`] — ranks, per-rank/per-op traffic accounting, the
+//!   `Transport` trait, and the in-process channel mesh ([`World`])
+//!   that simulates P ranks on threads with an optional
+//!   latency/bandwidth network model injecting transfer delay (the
+//!   Fig. 8 harness; see DESIGN.md §3).
+//! * [`allreduce`] — the collectives: star (the paper's literal
+//!   master/slave pattern), bandwidth-optimal segmented ring
+//!   allreduce, and binomial-tree broadcast/reduce for small payloads,
+//!   selected by `--collective` (auto picks by payload size).
+//! * [`transport_net`] — length-prefixed TCP/UDS socket transport with
+//!   a rendezvous bootstrap, so N real OS processes form one world.
+//! * [`multiproc`] — the per-process driver behind
+//!   `--rank`/`--peers`/`--listen`/`--connect`.
+//! * [`runner`] — the shared per-rank training loop and the in-process
+//!   window/checkpoint driver.
 
 pub mod allreduce;
 pub mod comm;
+pub mod multiproc;
 pub mod netmodel;
 pub mod runner;
+pub mod transport_net;
 
-pub use comm::{CollectiveMsg, Endpoint, Rank, World};
+pub use comm::{CollectiveAlgo, CommStats, Endpoint, OpTotals, Rank, Transport, World};
+pub use multiproc::NetOptions;
 pub use netmodel::NetModel;
+pub use transport_net::NetTransport;

@@ -1,0 +1,336 @@
+//! Real multi-process distributed training: one OS process per rank.
+//!
+//! The in-process cluster paths simulate ranks on threads; this driver
+//! runs the **same** `rank_train_loop` with a [`NetTransport`] instead
+//! of a channel mesh, so `somoclu train --ranks N --rank k --peers …`
+//! launched N times trains one map over per-rank shards of one input
+//! file (each process opens only its own row window via `open_shard` /
+//! `SharedFd` — the file must be readable at the same path on every
+//! machine).
+//!
+//! Rank 0 is the coordinator-flavored rank: it owns the initial
+//! codebook (fresh init, `-c FILE`, or `--resume` state), broadcasts
+//! `[epoch u64][nodes u32][dim u32][weights…]` to the others at
+//! bootstrap, fires the checkpoint policy per epoch, and writes the
+//! outputs. Non-root ranks adopt that state and return nothing. The
+//! hello handshake's config fingerprint refuses mismatched launches
+//! before any training happens.
+//!
+//! Determinism: the collectives are the same algorithms as the
+//! simulated path with the same fixed summation orders, so a real
+//! 2-process TCP run produces BMUs identical to (and codebook bits
+//! matching) the simulated `--ranks 2` run.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::cluster::allreduce::{barrier_with, broadcast_bytes_from_root, ROOT};
+use crate::cluster::comm::{CollectiveOp, CommStats, Endpoint};
+use crate::cluster::runner::{
+    check_stream_kind, comm_failed, open_rank_source, rank_train_loop, ClusterReport,
+    StreamInput,
+};
+use crate::cluster::transport_net::NetTransport;
+use crate::coordinator::config::{Initialization, TrainConfig};
+use crate::coordinator::train::{init_codebook, TrainResult};
+use crate::kernels::KernelType;
+use crate::session::SomSession;
+use crate::som::Codebook;
+
+/// Where this process sits in a real multi-process run (`--rank` /
+/// `--peers`, or the `--listen`/`--connect` two-process sugar).
+#[derive(Clone, Debug)]
+pub struct NetOptions {
+    /// This process's rank; rank 0 coordinates and writes outputs.
+    pub rank: usize,
+    /// Rendezvous addresses, one per rank in rank order (`host:port` or
+    /// `unix:PATH`); the last rank's may be omitted.
+    pub peers: Vec<String>,
+}
+
+/// FNV-1a over a canonical rendering of every config field that shapes
+/// the training math. Ranks exchange it in the hello handshake: two
+/// processes launched with different maps, schedules, seeds, kernels,
+/// rank counts, or collectives must refuse to train one map together.
+/// Float endpoints hash by bit pattern, not display rounding.
+pub(crate) fn config_fingerprint(cfg: &TrainConfig) -> u64 {
+    let canon = format!(
+        "somoclu-fp-v1|{}x{}|e{}|g{:?}|m{:?}|n{:?}|r0:{:?}|rn:{}|rc:{:?}|s0:{}|sn:{}|sc:{:?}|k{:?}|P{}|i{:?}|seed{}|coll:{}",
+        cfg.rows,
+        cfg.cols,
+        cfg.epochs,
+        cfg.grid_type,
+        cfg.map_type,
+        cfg.neighborhood,
+        cfg.radius0.map(f32::to_bits),
+        cfg.radius_n.to_bits(),
+        cfg.radius_cooling,
+        cfg.scale0.to_bits(),
+        cfg.scale_n.to_bits(),
+        cfg.scale_cooling,
+        cfg.kernel,
+        cfg.ranks,
+        cfg.initialization,
+        cfg.seed,
+        cfg.collective.as_str(),
+    );
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in canon.as_bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+fn encode_state(epoch: u64, cb: &Codebook) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + cb.weights.len() * 4);
+    out.extend_from_slice(&epoch.to_le_bytes());
+    out.extend_from_slice(&(cb.nodes as u32).to_le_bytes());
+    out.extend_from_slice(&(cb.dim as u32).to_le_bytes());
+    for w in &cb.weights {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    out
+}
+
+fn decode_state(bytes: &[u8]) -> anyhow::Result<(u64, Codebook)> {
+    anyhow::ensure!(bytes.len() >= 16, "bootstrap state truncated");
+    let epoch = u64::from_le_bytes(bytes[..8].try_into().unwrap());
+    let nodes = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    let dim = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+    let body = &bytes[16..];
+    anyhow::ensure!(
+        body.len() == nodes * dim * 4,
+        "bootstrap state carries {} weight bytes, expected {}",
+        body.len(),
+        nodes * dim * 4
+    );
+    let weights = body
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok((epoch, Codebook { nodes, dim, weights }))
+}
+
+/// Train this process's rank of a real multi-process cluster (the
+/// engine behind [`SomSession::fit_cluster_net`]). Returns the final
+/// result on rank 0 (`None` elsewhere) plus this process's
+/// communication report.
+pub(crate) fn run_cluster_net(
+    session: &mut SomSession,
+    input: StreamInput,
+    opts: &NetOptions,
+) -> anyhow::Result<(Option<TrainResult>, ClusterReport)> {
+    let t0 = Instant::now();
+    let cfg = session.config().clone();
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    let ranks = cfg.ranks;
+    anyhow::ensure!(
+        ranks >= 2,
+        "a multi-process run needs --ranks >= 2 (got {ranks})"
+    );
+    anyhow::ensure!(
+        opts.rank < ranks,
+        "--rank {} out of range for --ranks {ranks}",
+        opts.rank
+    );
+    anyhow::ensure!(
+        !matches!(cfg.kernel, KernelType::Accel | KernelType::Hybrid),
+        "accel/hybrid kernels are single-node only (the paper benchmarks \
+         multi-node scaling with the CPU kernel; Fig. 8)"
+    );
+    check_stream_kind(&cfg, &input)?;
+    let (total_rows, dim) = input.probe(cfg.chunk_rows)?;
+    anyhow::ensure!(total_rows >= ranks, "fewer rows than ranks");
+    anyhow::ensure!(
+        session.epoch() <= cfg.epochs,
+        "session cursor {} beyond the {}-epoch schedule",
+        session.epoch(),
+        cfg.epochs
+    );
+
+    // Only rank 0 owns initial state; peers adopt it at bootstrap, so
+    // `-c`/`--resume` need to be passed to rank 0 alone.
+    if opts.rank == ROOT {
+        match session.codebook() {
+            Some(cb) => anyhow::ensure!(
+                cb.dim == dim,
+                "data dim {dim} does not match the session codebook dim {}",
+                cb.dim
+            ),
+            None => {
+                anyhow::ensure!(
+                    cfg.initialization == Initialization::Random,
+                    "PCA initialization needs the data resident in memory; \
+                     multi-process runs support only --initialization random"
+                );
+                session.install_codebook(init_codebook(&cfg, session.grid(), dim))?;
+            }
+        }
+    }
+
+    let fingerprint = config_fingerprint(&cfg);
+    let transport = NetTransport::bootstrap(opts.rank, ranks, &opts.peers, fingerprint)?;
+    let stats = Arc::new(CommStats::new(ranks));
+    let mut ep = Endpoint::new(opts.rank, ranks, Box::new(transport), stats.clone());
+
+    // State sync: rank 0's cursor + codebook, byte-exact on every rank.
+    let payload = (opts.rank == ROOT).then(|| {
+        let cb = session.codebook().expect("root codebook installed");
+        Arc::new(encode_state(session.epoch() as u64, cb))
+    });
+    let state = broadcast_bytes_from_root(&mut ep, payload, CollectiveOp::Bootstrap)
+        .map_err(|e| comm_failed(opts.rank, session.epoch(), e))?;
+    if opts.rank != ROOT {
+        let (epoch, cb) = decode_state(&state)?;
+        anyhow::ensure!(
+            cb.dim == dim,
+            "rank 0's codebook dim {} does not match this shard's dim {dim} \
+             (are all ranks reading the same file?)",
+            cb.dim
+        );
+        session.install_codebook(cb)?;
+        session.set_epoch_cursor(epoch as usize);
+    }
+
+    let mut source = open_rank_source(&input, &cfg, opts.rank, ranks)?;
+    let result = rank_train_loop(session, &mut ep, &mut *source, total_rows, cfg.epochs)?;
+
+    // Final barrier: no process tears its sockets down while a peer is
+    // still inside the BMU gather.
+    barrier_with(&mut ep, cfg.collective)
+        .map_err(|e| comm_failed(opts.rank, session.epoch(), e))?;
+
+    let mut report = ClusterReport::new(ranks);
+    report.absorb(&stats);
+    let result = result.map(|mut r| {
+        r.total = t0.elapsed();
+        r
+    });
+    Ok((result, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::comm::CollectiveAlgo;
+    use crate::data;
+    use crate::session::Som;
+    use crate::util::rng::Rng;
+    use crate::util::threadpool::run_concurrent;
+
+    #[test]
+    fn fingerprint_tracks_training_config_only() {
+        let a = TrainConfig::default();
+        assert_eq!(config_fingerprint(&a), config_fingerprint(&a.clone()));
+        let mut b = a.clone();
+        b.seed += 1;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&b));
+        let mut c = a.clone();
+        c.collective = CollectiveAlgo::Star;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&c));
+        // Per-process runtime knobs must NOT change the fingerprint:
+        // ranks may legitimately differ in threads or I/O strategy.
+        let mut d = a.clone();
+        d.threads = a.threads + 3;
+        d.chunk_rows = 17;
+        d.prefetch = true;
+        assert_eq!(config_fingerprint(&a), config_fingerprint(&d));
+    }
+
+    #[test]
+    fn state_roundtrip_is_bit_exact() {
+        let cb = Codebook {
+            nodes: 3,
+            dim: 2,
+            weights: vec![1.5, -0.25, f32::MIN_POSITIVE, 3e7, -0.0, 42.0],
+        };
+        let (epoch, back) = decode_state(&encode_state(9, &cb)).unwrap();
+        assert_eq!(epoch, 9);
+        assert_eq!(back.nodes, 3);
+        assert_eq!(back.dim, 2);
+        let bits: Vec<u32> = back.weights.iter().map(|w| w.to_bits()).collect();
+        let want: Vec<u32> = cb.weights.iter().map(|w| w.to_bits()).collect();
+        assert_eq!(bits, want);
+        assert!(decode_state(&[0u8; 15]).is_err());
+    }
+
+    /// The acceptance bar: ranks as real socket peers (here: threads
+    /// with their own sessions over loopback TCP, exactly what two
+    /// processes run) produce BMUs identical to — and codebook bits
+    /// matching — the simulated in-process 2-rank run.
+    #[test]
+    fn net_cluster_matches_simulated_cluster() {
+        let dir = std::env::temp_dir()
+            .join(format!("somoclu_multiproc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rng = Rng::new(21);
+        let (dat, _) = data::gaussian_blobs(60, 4, 3, 0.2, &mut rng);
+        let bin = dir.join("net.somb");
+        crate::io::binary::write_binary_dense(&bin, 60, 4, &dat).unwrap();
+
+        let cfg = TrainConfig {
+            rows: 6,
+            cols: 6,
+            epochs: 4,
+            threads: 1,
+            ranks: 2,
+            radius0: Some(3.0),
+            chunk_rows: 16,
+            ..Default::default()
+        };
+
+        let (simulated, _) = Som::builder()
+            .config(cfg.clone())
+            .build()
+            .unwrap()
+            .fit_cluster_stream(StreamInput::Binary { path: bin.clone() })
+            .unwrap();
+
+        let port = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let peers = vec![format!("127.0.0.1:{port}")];
+        let outcomes = run_concurrent(
+            (0..2usize)
+                .map(|rank| {
+                    let cfg = cfg.clone();
+                    let peers = peers.clone();
+                    let bin = bin.clone();
+                    move || -> anyhow::Result<Option<TrainResult>> {
+                        let mut session = Som::builder().config(cfg).build()?;
+                        let (res, report) = run_cluster_net(
+                            &mut session,
+                            StreamInput::Binary { path: bin },
+                            &NetOptions { rank, peers },
+                        )?;
+                        assert!(report.bytes_sent > 0);
+                        Ok(res)
+                    }
+                })
+                .collect(),
+        );
+        let mut root_result = None;
+        for o in outcomes {
+            if let Some(r) = o.unwrap() {
+                root_result = Some(r);
+            }
+        }
+        let net = root_result.expect("rank 0 returns the result");
+        assert_eq!(net.bmus, simulated.bmus);
+        assert_eq!(
+            net.codebook
+                .weights
+                .iter()
+                .map(|w| w.to_bits())
+                .collect::<Vec<_>>(),
+            simulated
+                .codebook
+                .weights
+                .iter()
+                .map(|w| w.to_bits())
+                .collect::<Vec<_>>()
+        );
+    }
+}

@@ -1,5 +1,14 @@
 //! Distributed training driver (paper §3.2): shard once, per-epoch
-//! reduce-accumulators-to-master + broadcast-codebook, gather BMUs.
+//! accumulator exchange, gather BMUs.
+//!
+//! The exchange comes in two shapes selected by `--collective`
+//! ([`CollectiveAlgo`]): the paper's literal star (reduce to master →
+//! update on master → broadcast codebook, the historical bit pattern)
+//! and the allreduce family (ring/tree/auto) where every rank receives
+//! bit-identical summed accumulators and applies the Eq. 6 update
+//! locally — no codebook broadcast at all, and no O(P·M) hot spot at
+//! rank 0. Either way the per-epoch result is deterministic for a
+//! fixed (rank count, algorithm) pair.
 //!
 //! Each rank runs on its own OS thread with its own **rank-local
 //! [`SomSession`]** — the MPI-process memory model whose duplication
@@ -36,9 +45,10 @@ use std::path::PathBuf;
 use std::time::Instant;
 
 use crate::cluster::allreduce::{
-    allreduce_f64_sum, broadcast_from_root, gather_u32_to_root, reduce_sum_to_root,
+    allreduce_f32_sum, allreduce_f64_sum, allreduce_f64_sum_with, broadcast_from_root,
+    gather_u32_with, reduce_sum_to_root,
 };
-use crate::cluster::comm::{Endpoint, World};
+use crate::cluster::comm::{CollectiveAlgo, CommError, CommStats, Endpoint, Rank, World};
 use crate::cluster::netmodel::NetModel;
 use crate::coordinator::config::{IoMode, TrainConfig};
 use crate::coordinator::train::{
@@ -156,7 +166,7 @@ impl StreamInput {
     /// same pass any single-rank open pays, and it fails fast before
     /// the rank threads spawn (each rank's own open re-validates its
     /// view by design, like every epoch re-checks for file shrinkage).
-    fn probe(&self, chunk_rows: usize) -> anyhow::Result<(usize, usize)> {
+    pub(crate) fn probe(&self, chunk_rows: usize) -> anyhow::Result<(usize, usize)> {
         match self {
             StreamInput::Binary { path } => {
                 let f = std::fs::File::open(path)?;
@@ -178,6 +188,53 @@ pub struct ClusterReport {
     pub ranks: usize,
     pub bytes_sent: u64,
     pub messages_sent: u64,
+    /// The busiest sender's byte total, summed across windows — the
+    /// bandwidth bottleneck (rank 0 under star at (P−1)·M per
+    /// allreduce; ~2·(P−1)/P·M for every rank under ring).
+    pub max_rank_bytes: u64,
+    /// Per-collective byte/message/time totals, accumulated across
+    /// windows in [`crate::cluster::comm::OP_NAMES`] order.
+    pub per_op: Vec<crate::cluster::comm::OpTotals>,
+}
+
+impl ClusterReport {
+    pub(crate) fn new(ranks: usize) -> Self {
+        ClusterReport {
+            ranks,
+            bytes_sent: 0,
+            messages_sent: 0,
+            max_rank_bytes: 0,
+            per_op: Vec::new(),
+        }
+    }
+
+    /// Fold one window's (or one process-lifetime's) counters in.
+    pub(crate) fn absorb(&mut self, stats: &CommStats) {
+        self.bytes_sent += stats.bytes_sent.load(std::sync::atomic::Ordering::Relaxed);
+        self.messages_sent += stats
+            .messages_sent
+            .load(std::sync::atomic::Ordering::Relaxed);
+        self.max_rank_bytes += stats.max_rank_bytes();
+        let ops = stats.op_totals();
+        if self.per_op.is_empty() {
+            self.per_op = ops;
+        } else {
+            for (acc, w) in self.per_op.iter_mut().zip(ops) {
+                acc.bytes += w.bytes;
+                acc.messages += w.messages;
+                acc.nanos += w.nanos;
+            }
+        }
+    }
+}
+
+/// Wrap a collective failure with who noticed it and when — the clean
+/// "rank k lost at epoch e" surface a dead peer gets instead of the
+/// old endpoint panic.
+pub(crate) fn comm_failed(rank: Rank, epoch: usize, e: CommError) -> anyhow::Error {
+    anyhow::Error::new(e).context(format!(
+        "rank {rank}: communication failed at epoch {epoch}"
+    ))
 }
 
 /// One rank's run over `[session.epoch(), end_epoch)`: per epoch, the
@@ -186,13 +243,14 @@ pub struct ClusterReport {
 /// gather. A zero-epoch window (a run resumed at schedule completion)
 /// still gathers — BMUs come from a projection pass. Returns
 /// `Some(result)` on the master rank only.
-fn rank_train_loop(
+pub(crate) fn rank_train_loop(
     session: &mut SomSession,
     ep: &mut Endpoint,
     source: &mut dyn DataSource,
     total_rows: usize,
     end_epoch: usize,
 ) -> anyhow::Result<Option<TrainResult>> {
+    let algo = session.config().collective;
     let rows_local = source.rows();
     while session.epoch() < end_epoch {
         let te = Instant::now();
@@ -201,15 +259,37 @@ fn rank_train_loop(
         let mut accum = session.accumulate_epoch(source)?;
         let bmus = std::mem::take(&mut accum.bmus);
 
-        // Slaves send accumulators; master reduces, updates, broadcasts
-        // the new codebook (the paper's two-way master/slave exchange).
-        let is_root = reduce_sum_to_root(ep, &mut accum.num);
-        reduce_sum_to_root(ep, &mut accum.den);
-        let qe_total = allreduce_f64_sum(ep, accum.qe_sum);
-        if is_root {
+        let qe_total = if algo == CollectiveAlgo::Star {
+            // The paper's literal two-way master/slave exchange: slaves
+            // send accumulators, the master reduces (serially, in rank
+            // order — the historical bit pattern), updates, and
+            // broadcasts the new codebook.
+            let is_root = reduce_sum_to_root(ep, &mut accum.num)
+                .map_err(|e| comm_failed(ep.rank, epoch, e))?;
+            reduce_sum_to_root(ep, &mut accum.den)
+                .map_err(|e| comm_failed(ep.rank, epoch, e))?;
+            let qe = allreduce_f64_sum(ep, accum.qe_sum)
+                .map_err(|e| comm_failed(ep.rank, epoch, e))?;
+            if is_root {
+                session.apply_epoch_update(&accum);
+            }
+            broadcast_from_root(ep, session.weights_mut())
+                .map_err(|e| comm_failed(ep.rank, epoch, e))?;
+            qe
+        } else {
+            // Ring/tree (or auto): allreduce leaves every rank holding
+            // bit-identical summed accumulators, so each rank applies
+            // the Eq. 6 update locally — the O(P·M) codebook broadcast
+            // disappears entirely.
+            allreduce_f32_sum(ep, &mut accum.num, algo)
+                .map_err(|e| comm_failed(ep.rank, epoch, e))?;
+            allreduce_f32_sum(ep, &mut accum.den, algo)
+                .map_err(|e| comm_failed(ep.rank, epoch, e))?;
+            let qe = allreduce_f64_sum_with(ep, accum.qe_sum, algo)
+                .map_err(|e| comm_failed(ep.rank, epoch, e))?;
             session.apply_epoch_update(&accum);
-        }
-        broadcast_from_root(ep, session.weights_mut());
+            qe
+        };
         session.finish_epoch(
             EpochStats {
                 epoch,
@@ -230,7 +310,8 @@ fn rank_train_loop(
     }
 
     // Gather BMUs in rank order for the final output.
-    let gathered = gather_u32_to_root(ep, bmus_local);
+    let gathered = gather_u32_with(ep, bmus_local, algo)
+        .map_err(|e| comm_failed(ep.rank, session.epoch(), e))?;
     if let Some(parts) = gathered {
         let bmus: Vec<u32> = parts.concat();
         let codebook = session.codebook().expect("trained").clone();
@@ -251,17 +332,32 @@ fn rank_train_loop(
     }
 }
 
-/// Pick the master's result out of the per-rank outcomes.
+/// Pick the master's result out of the per-rank outcomes. When a rank
+/// dies, its peers all fail with `PeerLost` cascades — prefer a
+/// non-communication error (the dying rank's own kernel/IO failure) as
+/// the root cause, falling back to the first cascade.
 fn pick_master(
     outcomes: Vec<anyhow::Result<Option<TrainResult>>>,
 ) -> anyhow::Result<TrainResult> {
     let mut master: Option<TrainResult> = None;
+    let mut comm_err: Option<anyhow::Error> = None;
     for o in outcomes {
-        if let Some(res) = o? {
-            master = Some(res);
+        match o {
+            Ok(Some(res)) => master = Some(res),
+            Ok(None) => {}
+            Err(e) => {
+                if e.downcast_ref::<CommError>().is_some() {
+                    comm_err.get_or_insert(e);
+                } else {
+                    return Err(e);
+                }
+            }
         }
     }
-    Ok(master.expect("rank 0 must produce a result"))
+    if let Some(e) = comm_err {
+        return Err(e);
+    }
+    master.ok_or_else(|| anyhow::anyhow!("rank 0 produced no result"))
 }
 
 fn check_kernel_ranks(cfg: &TrainConfig) -> anyhow::Result<()> {
@@ -272,6 +368,70 @@ fn check_kernel_ranks(cfg: &TrainConfig) -> anyhow::Result<()> {
          multi-node scaling with the CPU kernel; Fig. 8)"
     );
     Ok(())
+}
+
+/// Kind-vs-kernel mismatch must fail before any rank starts training:
+/// inside a rank it would surface as a kernel error that drops the
+/// rank's Endpoint and fails the peers mid-collective instead of
+/// returning this message.
+pub(crate) fn check_stream_kind(cfg: &TrainConfig, input: &StreamInput) -> anyhow::Result<()> {
+    let wants_sparse = cfg.kernel == KernelType::SparseCpu;
+    let input_sparse = match input {
+        StreamInput::SparseText { .. } => true,
+        StreamInput::DenseText { .. } => false,
+        StreamInput::Binary { path } => {
+            matches!(binary::sniff(path)?, Some(BinaryKind::Sparse))
+        }
+    };
+    anyhow::ensure!(
+        wants_sparse == input_sparse,
+        "input is {} but the {} kernel was selected ({})",
+        if input_sparse { "sparse" } else { "dense" },
+        if wants_sparse { "sparse" } else { "dense" },
+        if input_sparse { "use -k 2" } else { "drop -k 2" },
+    );
+    Ok(())
+}
+
+/// Open one rank's shard of `input` honoring the configured I/O backend
+/// (the per-process analog of `run_cluster_stream`'s source setup; in a
+/// real multi-process run each process opens only its own window).
+pub(crate) fn open_rank_source(
+    input: &StreamInput,
+    cfg: &TrainConfig,
+    rank: usize,
+    ranks: usize,
+) -> anyhow::Result<Box<dyn DataSource + Send>> {
+    let mut source: Box<dyn DataSource + Send> = match (input, cfg.io_mode) {
+        (StreamInput::Binary { path }, IoMode::Pread) => {
+            let shared = SharedFd::open(path)?;
+            match shared.header().kind {
+                BinaryKind::Dense => {
+                    Box::new(shared.dense_shard(cfg.chunk_rows, rank, ranks)?)
+                }
+                BinaryKind::Sparse => {
+                    Box::new(shared.sparse_shard(cfg.chunk_rows, rank, ranks)?)
+                }
+            }
+        }
+        (StreamInput::Binary { path }, IoMode::Mmap) => {
+            let mapped = MappedContainer::open(path)?;
+            match mapped.header().kind {
+                BinaryKind::Dense => {
+                    Box::new(mapped.dense_shard(cfg.chunk_rows, rank, ranks)?)
+                }
+                BinaryKind::Sparse => {
+                    Box::new(mapped.sparse_shard(cfg.chunk_rows, rank, ranks)?)
+                }
+            }
+        }
+        (_, IoMode::Buffered) => input.open_shard(cfg.chunk_rows, rank, ranks)?,
+        (_, mode) => anyhow::bail!(mode.text_input_error()),
+    };
+    if cfg.prefetch {
+        source = Box::new(PrefetchSource::new(source));
+    }
+    Ok(source)
 }
 
 /// The shared checkpoint-window driver behind both cluster paths: per
@@ -295,11 +455,7 @@ fn run_windows(
     let ranks = session.config().ranks;
     let total_epochs = session.config().epochs;
     let t0 = Instant::now();
-    let mut report = ClusterReport {
-        ranks,
-        bytes_sent: 0,
-        messages_sent: 0,
-    };
+    let mut report = ClusterReport::new(ranks);
     let mut all_stats: Vec<EpochStats> = Vec::new();
     let mut last_master: Option<TrainResult> = None;
     loop {
@@ -309,8 +465,7 @@ fn run_windows(
         let mut world = World::new(ranks, net.clone());
         let endpoints = world.take_endpoints();
         let outcomes = spawn(endpoints, &init, start, end);
-        report.bytes_sent += world.bytes_sent();
-        report.messages_sent += world.messages_sent();
+        report.absorb(&world.stats);
         let master = pick_master(outcomes)?;
         all_stats.extend(master.epochs.iter().cloned());
         session.adopt_cluster_window(&master, end)?;
@@ -438,25 +593,7 @@ pub(crate) fn run_cluster_stream(
     check_kernel_ranks(&cfg)?;
     let ranks = cfg.ranks;
     let total_epochs = cfg.epochs;
-    // Kind-vs-kernel mismatch must fail here, before rank threads
-    // spawn: inside a rank it would surface as a kernel error that
-    // drops the rank's Endpoint and panics the peers blocked in the
-    // first collective instead of returning this message.
-    let wants_sparse = cfg.kernel == KernelType::SparseCpu;
-    let input_sparse = match &input {
-        StreamInput::SparseText { .. } => true,
-        StreamInput::DenseText { .. } => false,
-        StreamInput::Binary { path } => {
-            matches!(binary::sniff(path)?, Some(BinaryKind::Sparse))
-        }
-    };
-    anyhow::ensure!(
-        wants_sparse == input_sparse,
-        "input is {} but the {} kernel was selected ({})",
-        if input_sparse { "sparse" } else { "dense" },
-        if wants_sparse { "sparse" } else { "dense" },
-        if input_sparse { "use -k 2" } else { "drop -k 2" },
-    );
+    check_stream_kind(&cfg, &input)?;
     let (total_rows, dim) = input.probe(cfg.chunk_rows)?;
     anyhow::ensure!(total_rows >= ranks, "fewer rows than ranks");
     anyhow::ensure!(
@@ -670,6 +807,18 @@ mod tests {
             .net(net)
             .build()?
             .fit_cluster_stream(input)
+    }
+
+    /// The "rank k lost at epoch e" message contract: a dead peer must
+    /// surface who noticed, when, and which rank vanished — the whole
+    /// error chain, not a panic.
+    #[test]
+    fn comm_failure_names_rank_and_epoch() {
+        let err = comm_failed(2, 5, CommError::PeerLost { peer: 1 });
+        let chain = format!("{err:#}");
+        assert!(chain.contains("rank 2"), "{chain}");
+        assert!(chain.contains("epoch 5"), "{chain}");
+        assert!(chain.contains("rank 1 lost"), "{chain}");
     }
 
     /// The paper's structure guarantees the distributed run computes the

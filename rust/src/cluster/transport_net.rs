@@ -1,0 +1,594 @@
+//! Length-prefixed socket transport: real multi-process ranks.
+//!
+//! Std-only (no async runtime): one TCP or Unix-domain stream per peer
+//! pair, carrying the same byte frames the in-process channels carry,
+//! so every collective in [`crate::cluster::allreduce`] runs unchanged
+//! over real processes — and real machines.
+//!
+//! **Wire format.** Each payload is `[len: u32 LE][bytes…]`. Before any
+//! frames flow, both ends exchange a 24-byte hello —
+//! `[b"SOMW"][version u32][world u32][rank u32][config fingerprint u64]`
+//! — and refuse to proceed on any mismatch, so two processes launched
+//! with different schedules, seeds, or rank counts fail fast with a
+//! clear error instead of silently training different maps.
+//!
+//! **Rendezvous.** `peers[k]` is rank k's listen address (`host:port`
+//! or `unix:PATH`); the last rank needs none. Every rank binds first,
+//! then connects to all lower ranks (retrying while the peer's listener
+//! comes up) and accepts from all higher ranks — connect-up/accept-down
+//! is cycle-free, so bootstrap cannot deadlock.
+//!
+//! **Non-blocking sends.** Ring steps have every rank send before it
+//! receives; if sends blocked on full socket buffers the lockstep would
+//! deadlock for segments larger than the kernel's buffer. Each peer
+//! therefore gets a dedicated writer thread fed by an unbounded channel
+//! of `Arc` frames — `send` enqueues and returns. Receives read the
+//! caller's `BufReader` directly.
+
+use std::collections::VecDeque;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::cluster::comm::{Bytes, CommError, Rank, Transport};
+
+const MAGIC: [u8; 4] = *b"SOMW";
+const VERSION: u32 = 1;
+/// Sanity cap on a single frame (the largest real payload is one
+/// codebook: nodes × dim × 4 bytes).
+const MAX_FRAME: usize = 1 << 30;
+/// How long bootstrap waits for peers (connect retries and accepts).
+fn bootstrap_timeout() -> Duration {
+    std::env::var("SOMOCLU_BOOTSTRAP_TIMEOUT_SECS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .map_or(Duration::from_secs(120), Duration::from_secs)
+}
+
+/// One established peer stream, TCP or Unix-domain.
+enum Conn {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Conn {
+    fn try_clone(&self) -> std::io::Result<Conn> {
+        Ok(match self {
+            Conn::Tcp(s) => Conn::Tcp(s.try_clone()?),
+            #[cfg(unix)]
+            Conn::Unix(s) => Conn::Unix(s.try_clone()?),
+        })
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.flush(),
+        }
+    }
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+/// `unix:PATH` selects a Unix-domain socket; anything else is a TCP
+/// `host:port`.
+fn is_unix(addr: &str) -> bool {
+    addr.starts_with("unix:")
+}
+
+fn bind(addr: &str) -> anyhow::Result<Listener> {
+    if let Some(path) = addr.strip_prefix("unix:") {
+        #[cfg(unix)]
+        {
+            // The rendezvous path belongs to this run: clear any stale
+            // socket file a crashed predecessor left behind.
+            let _ = std::fs::remove_file(path);
+            return Ok(Listener::Unix(UnixListener::bind(path).map_err(|e| {
+                anyhow::anyhow!("cannot listen on unix socket {path}: {e}")
+            })?));
+        }
+        #[cfg(not(unix))]
+        anyhow::bail!("unix: addresses need a unix target (got {addr})");
+    }
+    Ok(Listener::Tcp(TcpListener::bind(addr).map_err(|e| {
+        anyhow::anyhow!("cannot listen on {addr}: {e}")
+    })?))
+}
+
+fn connect_with_retry(addr: &str, deadline: Instant) -> anyhow::Result<Conn> {
+    loop {
+        let attempt: std::io::Result<Conn> = if let Some(path) = addr.strip_prefix("unix:") {
+            #[cfg(unix)]
+            {
+                UnixStream::connect(path).map(Conn::Unix)
+            }
+            #[cfg(not(unix))]
+            {
+                let _ = path;
+                return Err(anyhow::anyhow!(
+                    "unix: addresses need a unix target (got {addr})"
+                ));
+            }
+        } else {
+            TcpStream::connect(addr).map(|s| {
+                let _ = s.set_nodelay(true);
+                Conn::Tcp(s)
+            })
+        };
+        match attempt {
+            Ok(conn) => return Ok(conn),
+            Err(e) => {
+                // The peer's listener may simply not be up yet — retry
+                // connection-level failures until the deadline.
+                let transient = matches!(
+                    e.kind(),
+                    std::io::ErrorKind::ConnectionRefused
+                        | std::io::ErrorKind::ConnectionReset
+                        | std::io::ErrorKind::NotFound
+                        | std::io::ErrorKind::AddrNotAvailable
+                );
+                if !transient || Instant::now() >= deadline {
+                    anyhow::bail!("cannot connect to {addr}: {e}");
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+fn accept_with_deadline(listener: &Listener, deadline: Instant) -> anyhow::Result<Conn> {
+    // Poll in non-blocking mode so a missing peer fails bootstrap with
+    // a clear timeout instead of hanging the process (and CI) forever.
+    match listener {
+        Listener::Tcp(l) => {
+            l.set_nonblocking(true)?;
+            loop {
+                match l.accept() {
+                    Ok((s, _)) => {
+                        s.set_nonblocking(false)?;
+                        let _ = s.set_nodelay(true);
+                        return Ok(Conn::Tcp(s));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        anyhow::ensure!(
+                            Instant::now() < deadline,
+                            "timed out waiting for a peer to connect"
+                        );
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                    Err(e) => return Err(e.into()),
+                }
+            }
+        }
+        #[cfg(unix)]
+        Listener::Unix(l) => {
+            l.set_nonblocking(true)?;
+            loop {
+                match l.accept() {
+                    Ok((s, _)) => {
+                        s.set_nonblocking(false)?;
+                        return Ok(Conn::Unix(s));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        anyhow::ensure!(
+                            Instant::now() < deadline,
+                            "timed out waiting for a peer to connect"
+                        );
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                    Err(e) => return Err(e.into()),
+                }
+            }
+        }
+    }
+}
+
+struct Hello {
+    world: u32,
+    rank: u32,
+    fingerprint: u64,
+}
+
+fn write_hello(w: &mut impl Write, h: &Hello) -> std::io::Result<()> {
+    let mut buf = [0u8; 24];
+    buf[..4].copy_from_slice(&MAGIC);
+    buf[4..8].copy_from_slice(&VERSION.to_le_bytes());
+    buf[8..12].copy_from_slice(&h.world.to_le_bytes());
+    buf[12..16].copy_from_slice(&h.rank.to_le_bytes());
+    buf[16..24].copy_from_slice(&h.fingerprint.to_le_bytes());
+    w.write_all(&buf)?;
+    w.flush()
+}
+
+fn read_hello(r: &mut impl Read) -> anyhow::Result<Hello> {
+    let mut buf = [0u8; 24];
+    r.read_exact(&mut buf)
+        .map_err(|e| anyhow::anyhow!("peer hung up during handshake: {e}"))?;
+    anyhow::ensure!(buf[..4] == MAGIC, "peer is not a somoclu rank (bad magic)");
+    let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    anyhow::ensure!(
+        version == VERSION,
+        "peer speaks wire version {version}, this build speaks {VERSION}"
+    );
+    Ok(Hello {
+        world: u32::from_le_bytes(buf[8..12].try_into().unwrap()),
+        rank: u32::from_le_bytes(buf[12..16].try_into().unwrap()),
+        fingerprint: u64::from_le_bytes(buf[16..24].try_into().unwrap()),
+    })
+}
+
+fn check_hello(h: &Hello, world: usize, fingerprint: u64) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        h.world as usize == world,
+        "peer was launched with --ranks {}, this process with --ranks {world}",
+        h.world
+    );
+    anyhow::ensure!(
+        h.fingerprint == fingerprint,
+        "peer's training config fingerprint {:#018x} differs from ours \
+         {fingerprint:#018x}: all ranks must be launched with identical map, \
+         schedule, seed, and collective settings",
+        h.fingerprint
+    );
+    Ok(())
+}
+
+fn write_frame(w: &mut impl Write, payload: &[u8]) -> std::io::Result<()> {
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+fn read_frame(r: &mut impl Read) -> std::io::Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len) as usize;
+    if len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame of {len} bytes exceeds the {MAX_FRAME}-byte cap"),
+        ));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+fn writer_loop(conn: Conn, rx: Receiver<Arc<Vec<u8>>>) {
+    let mut w = BufWriter::new(conn);
+    while let Ok(payload) = rx.recv() {
+        if write_frame(&mut w, &payload).is_err() {
+            // Peer is gone; drain silently — the loss surfaces as a
+            // PeerLost on the next receive from that peer.
+            break;
+        }
+    }
+}
+
+/// The socket transport for one rank: per-peer writer threads (sends
+/// never block) and per-peer buffered readers. Build with
+/// [`NetTransport::bootstrap`].
+pub struct NetTransport {
+    rank: Rank,
+    writers: Vec<Option<Sender<Arc<Vec<u8>>>>>,
+    readers: Vec<Option<BufReader<Conn>>>,
+    loopback: VecDeque<Arc<Vec<u8>>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl NetTransport {
+    /// Establish the full mesh for `rank` of `world`. `peers[k]` is
+    /// rank k's listen address (the last rank's entry may be omitted);
+    /// `fingerprint` guards against ranks launched with mismatched
+    /// training configs.
+    pub fn bootstrap(
+        rank: usize,
+        world: usize,
+        peers: &[String],
+        fingerprint: u64,
+    ) -> anyhow::Result<NetTransport> {
+        anyhow::ensure!(world >= 1, "world must have at least one rank");
+        anyhow::ensure!(rank < world, "rank {rank} out of range for {world} ranks");
+        anyhow::ensure!(
+            peers.len() == world || peers.len() + 1 == world,
+            "--peers lists {} addresses for {world} ranks (one per rank; the \
+             last rank's may be omitted — it only connects)",
+            peers.len()
+        );
+        let deadline = Instant::now() + bootstrap_timeout();
+        let hello = Hello {
+            world: world as u32,
+            rank: rank as u32,
+            fingerprint,
+        };
+
+        // Bind before connecting to anyone: lower ranks' connects rely
+        // on every listener (rank < world−1) existing or imminently
+        // existing.
+        let listener = if rank + 1 < world {
+            anyhow::ensure!(
+                rank < peers.len(),
+                "--peers has no listen address for rank {rank}"
+            );
+            Some(bind(&peers[rank])?)
+        } else {
+            None
+        };
+
+        let mut conns: Vec<Option<Conn>> = (0..world).map(|_| None).collect();
+
+        // Connect up to every lower rank; they are accepting below.
+        for (lower, addr) in peers.iter().enumerate().take(rank) {
+            let mut conn = connect_with_retry(addr, deadline)
+                .map_err(|e| anyhow::anyhow!("rank {rank} → rank {lower}: {e}"))?;
+            write_hello(&mut conn, &hello)
+                .map_err(|e| anyhow::anyhow!("rank {rank} → rank {lower}: handshake send: {e}"))?;
+            let theirs = read_hello(&mut conn)
+                .map_err(|e| anyhow::anyhow!("rank {rank} → rank {lower}: {e}"))?;
+            check_hello(&theirs, world, fingerprint)?;
+            anyhow::ensure!(
+                theirs.rank as usize == lower,
+                "address {addr} answered as rank {}, expected rank {lower} \
+                 (check the --peers order)",
+                theirs.rank
+            );
+            conns[lower] = Some(conn);
+        }
+
+        // Accept one connection from every higher rank, in whatever
+        // order they arrive.
+        if let Some(listener) = &listener {
+            for _ in rank + 1..world {
+                let mut conn = accept_with_deadline(listener, deadline)
+                    .map_err(|e| anyhow::anyhow!("rank {rank} accepting peers: {e}"))?;
+                let theirs = read_hello(&mut conn)
+                    .map_err(|e| anyhow::anyhow!("rank {rank} accepting peers: {e}"))?;
+                check_hello(&theirs, world, fingerprint)?;
+                let higher = theirs.rank as usize;
+                anyhow::ensure!(
+                    higher > rank && higher < world,
+                    "accepted a connection claiming rank {higher}, which should \
+                     not dial rank {rank}"
+                );
+                anyhow::ensure!(
+                    conns[higher].is_none(),
+                    "two connections both claim rank {higher}"
+                );
+                write_hello(&mut conn, &hello).map_err(|e| {
+                    anyhow::anyhow!("rank {rank} → rank {higher}: handshake reply: {e}")
+                })?;
+                conns[higher] = Some(conn);
+            }
+        }
+
+        // Split each stream: writer thread (owns a clone) + reader.
+        let mut writers = Vec::with_capacity(world);
+        let mut readers = Vec::with_capacity(world);
+        let mut handles = Vec::new();
+        for conn in conns {
+            match conn {
+                Some(conn) => {
+                    let wconn = conn.try_clone()?;
+                    let (tx, rx) = channel::<Arc<Vec<u8>>>();
+                    handles.push(std::thread::spawn(move || writer_loop(wconn, rx)));
+                    writers.push(Some(tx));
+                    readers.push(Some(BufReader::new(conn)));
+                }
+                None => {
+                    writers.push(None);
+                    readers.push(None);
+                }
+            }
+        }
+
+        Ok(NetTransport {
+            rank,
+            writers,
+            readers,
+            loopback: VecDeque::new(),
+            handles,
+        })
+    }
+}
+
+impl Transport for NetTransport {
+    fn send(&mut self, to: Rank, payload: Arc<Vec<u8>>) -> Result<(), CommError> {
+        if to == self.rank {
+            self.loopback.push_back(payload);
+            return Ok(());
+        }
+        match self.writers.get(to).and_then(Option::as_ref) {
+            Some(tx) => tx.send(payload).map_err(|_| CommError::PeerLost { peer: to }),
+            None => Err(CommError::PeerLost { peer: to }),
+        }
+    }
+
+    fn recv(&mut self, from: Rank) -> Result<Bytes, CommError> {
+        if from == self.rank {
+            return self
+                .loopback
+                .pop_front()
+                .map(Bytes::Shared)
+                .ok_or(CommError::Protocol {
+                    peer: from,
+                    what: "loopback receive with nothing sent".into(),
+                });
+        }
+        match self.readers.get_mut(from).and_then(Option::as_mut) {
+            Some(reader) => read_frame(reader)
+                .map(Bytes::Owned)
+                .map_err(|_| CommError::PeerLost { peer: from }),
+            None => Err(CommError::PeerLost { peer: from }),
+        }
+    }
+}
+
+impl Drop for NetTransport {
+    fn drop(&mut self) {
+        // Closing the channels ends the writer loops once their queues
+        // drain; join so every queued frame is flushed before the
+        // process exits.
+        for w in &mut self.writers {
+            *w = None;
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::allreduce::{allreduce_f32_sum, barrier_with};
+    use crate::cluster::comm::{CollectiveAlgo, CommStats, Endpoint};
+    use crate::util::threadpool::run_concurrent;
+
+    /// Grab an ephemeral loopback port. The listener is dropped before
+    /// bootstrap rebinds it — a race in principle, but loopback tests
+    /// reuse it within milliseconds.
+    fn free_addr() -> String {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        format!("127.0.0.1:{}", addr.port())
+    }
+
+    fn net_endpoints(
+        world: usize,
+        peers: Vec<String>,
+        fingerprint: u64,
+    ) -> Vec<anyhow::Result<Endpoint>> {
+        let tasks: Vec<_> = (0..world)
+            .map(|rank| {
+                let peers = peers.clone();
+                move || -> anyhow::Result<Endpoint> {
+                    let t = NetTransport::bootstrap(rank, world, &peers, fingerprint)?;
+                    Ok(Endpoint::new(
+                        rank,
+                        world,
+                        Box::new(t),
+                        Arc::new(CommStats::new(world)),
+                    ))
+                }
+            })
+            .collect();
+        run_concurrent(tasks)
+    }
+
+    #[test]
+    fn three_rank_tcp_allreduce() {
+        let peers = vec![free_addr(), free_addr(), free_addr()];
+        let eps = net_endpoints(3, peers, 0xfeed);
+        let tasks: Vec<_> = eps
+            .into_iter()
+            .map(|ep| {
+                move || {
+                    let mut ep = ep.unwrap();
+                    let mut buf: Vec<f32> = (0..10).map(|i| (ep.rank * 10 + i) as f32).collect();
+                    allreduce_f32_sum(&mut ep, &mut buf, CollectiveAlgo::Ring).unwrap();
+                    barrier_with(&mut ep, CollectiveAlgo::Tree).unwrap();
+                    buf
+                }
+            })
+            .collect();
+        let out = run_concurrent(tasks);
+        let want: Vec<f32> = (0..10).map(|i| (3 * i + 30) as f32).collect();
+        for buf in out {
+            assert_eq!(buf, want);
+        }
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn two_rank_uds_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("somoclu_uds_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let peers = vec![format!("unix:{}", dir.join("rank0.sock").display())];
+        let eps = net_endpoints(2, peers, 1);
+        let tasks: Vec<_> = eps
+            .into_iter()
+            .map(|ep| {
+                move || {
+                    let mut ep = ep.unwrap();
+                    let mut buf = vec![ep.rank as f32 + 1.0; 5];
+                    allreduce_f32_sum(&mut ep, &mut buf, CollectiveAlgo::Tree).unwrap();
+                    buf
+                }
+            })
+            .collect();
+        for buf in run_concurrent(tasks) {
+            assert_eq!(buf, vec![3.0; 5]);
+        }
+    }
+
+    #[test]
+    fn fingerprint_mismatch_refused() {
+        let peers = vec![free_addr()];
+        let tasks: Vec<Box<dyn FnOnce() -> anyhow::Result<()> + Send>> = vec![
+            {
+                let peers = peers.clone();
+                Box::new(move || NetTransport::bootstrap(0, 2, &peers, 0xaaaa).map(|_| ()))
+            },
+            {
+                let peers = peers.clone();
+                Box::new(move || NetTransport::bootstrap(1, 2, &peers, 0xbbbb).map(|_| ()))
+            },
+        ];
+        let out = run_concurrent(tasks);
+        // At least the connecting side must refuse with the fingerprint
+        // message (the listener may instead see the resulting hangup).
+        assert!(out.iter().any(|r| r
+            .as_ref()
+            .err()
+            .is_some_and(|e| format!("{e:#}").contains("fingerprint"))));
+    }
+
+    #[test]
+    fn dead_peer_read_is_peer_lost() {
+        let peers = vec![free_addr()];
+        let eps = net_endpoints(2, peers, 7);
+        let out = run_concurrent(vec![
+            Box::new({
+                let mut it = eps.into_iter();
+                let e0 = it.next().unwrap();
+                let e1 = it.next().unwrap();
+                move || {
+                    drop(e1); // rank 1 dies right after bootstrap
+                    let mut ep = e0.unwrap();
+                    ep.recv(1).map(|_| ()).unwrap_err()
+                }
+            }) as Box<dyn FnOnce() -> CommError + Send>,
+        ]);
+        assert!(matches!(out[0], CommError::PeerLost { peer: 1 }));
+    }
+}

@@ -1,6 +1,7 @@
 //! Training configuration — the union of the paper's CLI knobs (§4.1)
 //! and runtime options (threads, ranks, seed).
 
+use crate::cluster::comm::CollectiveAlgo;
 use crate::io::output::SnapshotLevel;
 use crate::kernels::KernelType;
 use crate::som::{Cooling, Grid, GridType, MapType, Neighborhood, Schedule};
@@ -132,6 +133,13 @@ pub struct TrainConfig {
     /// Streaming I/O backend for binary containers (`--io`): buffered
     /// per-source fds (default), one shared pread fd, or zero-copy mmap.
     pub io_mode: IoMode,
+    /// Cluster collective algorithm (`--collective`): auto (size-based
+    /// ring/tree selection, default), star (the paper's literal
+    /// master/slave pattern, bit-compatible with the historical path),
+    /// ring, or tree. A runtime knob like `threads`/`ranks` — not
+    /// stored in checkpoints; a run uses one algorithm for all windows,
+    /// preserving checkpoint-window bit-invariance.
+    pub collective: CollectiveAlgo,
 }
 
 impl Default for TrainConfig {
@@ -158,6 +166,7 @@ impl Default for TrainConfig {
             chunk_rows: 0,
             prefetch: false,
             io_mode: IoMode::Buffered,
+            collective: CollectiveAlgo::Auto,
         }
     }
 }
@@ -235,6 +244,7 @@ mod tests {
     fn io_mode_parses_and_defaults() {
         let c = TrainConfig::default();
         assert_eq!(c.io_mode, IoMode::Buffered);
+        assert_eq!(c.collective, CollectiveAlgo::Auto);
         assert_eq!("mmap".parse::<IoMode>().unwrap(), IoMode::Mmap);
         assert_eq!("PREAD".parse::<IoMode>().unwrap(), IoMode::Pread);
         assert!("zerocopy".parse::<IoMode>().is_err());

@@ -2,7 +2,11 @@
 //!
 //! Single process: `somoclu [OPTIONS] INPUT OUTPUT_PREFIX`.
 //! Simulated cluster: add `--ranks N` (stands in for `mpirun -np N`).
-//! Transcode to the binary fast path: `somoclu convert IN OUT`.
+//! Real multi-process cluster: launch N processes, each with
+//! `--ranks N --rank K --peers HOST0:P0,...` (or, for two processes,
+//! `--listen ADDR` on one and `--connect ADDR` on the other); rank 0
+//! writes the outputs. Transcode to the binary fast path:
+//! `somoclu convert IN OUT`.
 //!
 //! Every mode drives one [`somoclu::session::SomSession`]: binary
 //! container inputs (written by `convert`) are auto-detected by magic
@@ -333,8 +337,18 @@ fn build_session(opts: &cli::CliOptions) -> anyhow::Result<SomSession> {
                 }
                 None => None,
             };
-            if opts.config.ranks > 1 {
-                anyhow::ensure!(initial.is_none(), "--ranks with -c is not supported");
+            match &opts.multiproc {
+                // Real multi-process run: rank 0 owns initial state and
+                // broadcasts it at bootstrap, so -c belongs to rank 0.
+                Some(mp) => anyhow::ensure!(
+                    initial.is_none() || mp.rank == 0,
+                    "-c is rank 0's flag in a multi-process run (initial \
+                     state is broadcast at bootstrap)"
+                ),
+                None if opts.config.ranks > 1 => {
+                    anyhow::ensure!(initial.is_none(), "--ranks with -c is not supported")
+                }
+                None => {}
             }
             let mut builder = Som::builder()
                 .config(opts.config.clone())
@@ -347,15 +361,41 @@ fn build_session(opts: &cli::CliOptions) -> anyhow::Result<SomSession> {
     }
 }
 
+/// Per-run communication summary: the aggregate line every cluster mode
+/// always printed, plus the busiest sender (the bandwidth bottleneck the
+/// ring collective exists to flatten) and a per-collective breakdown.
+fn print_comm_report(report: &somoclu::cluster::runner::ClusterReport) {
+    eprintln!(
+        "cluster: {} ranks, {} msgs, {} bytes on the wire (busiest sender: {} bytes)",
+        report.ranks, report.messages_sent, report.bytes_sent, report.max_rank_bytes
+    );
+    for op in &report.per_op {
+        if op.messages > 0 {
+            eprintln!(
+                "  {:<9} {:>14} bytes {:>9} msgs {:>10.3} ms",
+                op.name,
+                op.bytes,
+                op.messages,
+                op.nanos as f64 / 1e6
+            );
+        }
+    }
+}
+
 fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
     let writer = OutputWriter::new(&opts.output_prefix);
     let mut session = build_session(&opts)?;
+    let is_root = opts.multiproc.as_ref().map_or(true, |m| m.rank == 0);
     if opts.checkpoint_every > 0 {
-        session.set_checkpoint_every(opts.checkpoint_every, &opts.output_prefix);
-        eprintln!(
-            "checkpointing every {} epochs to {}.epoch<k>.somc",
-            opts.checkpoint_every, opts.output_prefix
-        );
+        if is_root {
+            session.set_checkpoint_every(opts.checkpoint_every, &opts.output_prefix);
+            eprintln!(
+                "checkpointing every {} epochs to {}.epoch<k>.somc",
+                opts.checkpoint_every, opts.output_prefix
+            );
+        } else {
+            eprintln!("--checkpoint-every ignored on this rank (rank 0 owns checkpoints)");
+        }
     }
 
     // The effective config: resumed sessions take map/schedule/kernel
@@ -383,7 +423,37 @@ fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
         |s: &SomSession| -> anyhow::Result<()> { s.write_epoch_snapshot(&writer) };
 
     let t0 = std::time::Instant::now();
-    let result = if cfg.ranks > 1 && streaming {
+    let result = if let Some(mp) = &opts.multiproc {
+        // Real multi-process run: this process is one rank; the data
+        // file must be readable at the same path by every rank.
+        let path = PathBuf::from(&opts.input_file);
+        let input = if binary_kind.is_some() {
+            StreamInput::Binary { path }
+        } else if cfg.kernel == KernelType::SparseCpu {
+            StreamInput::SparseText { path, min_cols: 0 }
+        } else {
+            StreamInput::DenseText { path }
+        };
+        eprintln!(
+            "rank {} of {}: rendezvous with peers ({} collective)",
+            mp.rank,
+            cfg.ranks,
+            cfg.collective.as_str()
+        );
+        let (res, report) = session.fit_cluster_net(input, mp)?;
+        print_comm_report(&report);
+        match res {
+            Some(r) => r,
+            None => {
+                eprintln!(
+                    "rank {} done after epoch {}; outputs are written by rank 0",
+                    mp.rank,
+                    session.epoch()
+                );
+                return Ok(());
+            }
+        }
+    } else if cfg.ranks > 1 && streaming {
         // Out-of-core cluster path: every rank opens its own disjoint
         // row window of the input file — the full data set is never
         // resident anywhere.
@@ -403,10 +473,7 @@ fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
             if cfg.prefetch { ", prefetched" } else { "" }
         );
         let (res, report) = session.fit_cluster_stream(input)?;
-        eprintln!(
-            "cluster: {} ranks, {} msgs, {} bytes on the wire",
-            report.ranks, report.messages_sent, report.bytes_sent
-        );
+        print_comm_report(&report);
         res
     } else if cfg.ranks == 1 && streaming {
         // Out-of-core single-process path: never materialize the full
@@ -431,10 +498,7 @@ fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
         );
         if cfg.ranks > 1 {
             let (res, report) = session.fit_cluster(ClusterData::Sparse(m))?;
-            eprintln!(
-                "cluster: {} ranks, {} msgs, {} bytes on the wire",
-                report.ranks, report.messages_sent, report.bytes_sent
-            );
+            print_comm_report(&report);
             res
         } else {
             let mut src =
@@ -449,10 +513,7 @@ fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
                 data: m.data,
                 dim: m.cols,
             })?;
-            eprintln!(
-                "cluster: {} ranks, {} msgs, {} bytes on the wire",
-                report.ranks, report.messages_sent, report.bytes_sent
-            );
+            print_comm_report(&report);
             res
         } else {
             let mut src = InMemorySource::new(

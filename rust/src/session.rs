@@ -86,6 +86,8 @@ use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 use crate::api::DataInput;
+use crate::cluster::comm::CollectiveAlgo;
+use crate::cluster::multiproc::NetOptions;
 use crate::cluster::netmodel::NetModel;
 use crate::cluster::runner::{ClusterData, ClusterReport, StreamInput};
 use crate::coordinator::config::{Initialization, IoMode, TrainConfig};
@@ -272,6 +274,13 @@ impl SomBuilder {
     /// Streaming I/O backend for binary containers (`--io`).
     pub fn io_mode(mut self, mode: IoMode) -> Self {
         self.cfg.io_mode = mode;
+        self
+    }
+
+    /// Cluster collective algorithm (`--collective`): auto (default),
+    /// star, ring, or tree. See [`CollectiveAlgo`].
+    pub fn collective(mut self, algo: CollectiveAlgo) -> Self {
+        self.cfg.collective = algo;
         self
     }
 
@@ -480,6 +489,14 @@ impl SomSession {
         self.cfg.io_mode = mode;
     }
 
+    /// Set the cluster collective algorithm. Like threads/ranks, a
+    /// runtime knob (not stored in checkpoints); keep it the same for
+    /// every window of one run — switching mid-run reassociates f32
+    /// sums across the checkpoint boundary.
+    pub fn set_collective(&mut self, algo: CollectiveAlgo) {
+        self.cfg.collective = algo;
+    }
+
     /// Set the interim snapshot level (the CLI `-s` behavior; consumed
     /// by drivers that write snapshots per epoch).
     pub fn set_snapshot(&mut self, level: SnapshotLevel) {
@@ -623,6 +640,24 @@ impl SomSession {
     ) -> anyhow::Result<(TrainResult, ClusterReport)> {
         let net = self.net.clone();
         crate::cluster::runner::run_cluster_stream(self, input, net)
+    }
+
+    /// Train this process's rank of a **real multi-process** cluster:
+    /// `cfg.ranks` OS processes rendezvous over TCP/Unix sockets
+    /// ([`NetOptions`]) and run the same per-epoch exchange as
+    /// [`fit_cluster_stream`](Self::fit_cluster_stream), each reading
+    /// only its own row window of `input` (the file must be readable at
+    /// the same path by every process). Rank 0 owns initial state
+    /// (fresh init, `-c FILE`, or a resumed checkpoint), broadcasts it
+    /// at bootstrap, and is the only rank that returns a
+    /// [`TrainResult`]; every rank gets its own [`ClusterReport`].
+    /// Checkpoint policy should be set on rank 0 only.
+    pub fn fit_cluster_net(
+        &mut self,
+        input: StreamInput,
+        opts: &NetOptions,
+    ) -> anyhow::Result<(Option<TrainResult>, ClusterReport)> {
+        crate::cluster::multiproc::run_cluster_net(self, input, opts)
     }
 
     /// Write the interim snapshot for the epoch that just finished

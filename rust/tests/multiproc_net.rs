@@ -1,0 +1,215 @@
+//! End-to-end through the real binary, **as real processes**: N
+//! `somoclu` processes rendezvous over loopback sockets and train one
+//! map, and the outputs must be byte-identical to the simulated
+//! in-process `--ranks N` run — the same collectives run over the
+//! channel mesh and the socket transport.
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command};
+
+use somoclu::data;
+use somoclu::io::dense;
+use somoclu::util::rng::Rng;
+
+fn bin() -> PathBuf {
+    let mut p = std::env::current_exe().unwrap();
+    p.pop(); // deps/
+    p.pop(); // <profile>/
+    p.push("somoclu");
+    p
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("somoclu_net_{}_{name}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn write_input(dir: &Path, seed: u64) -> PathBuf {
+    let mut rng = Rng::new(seed);
+    let (d, _) = data::gaussian_blobs(80, 5, 3, 0.2, &mut rng);
+    let input = dir.join("data.txt");
+    dense::write_dense(&input, 80, 5, &d, false).unwrap();
+    input
+}
+
+/// Pick a loopback port by binding to :0 and releasing it.
+fn free_port() -> u16 {
+    std::net::TcpListener::bind("127.0.0.1:0")
+        .unwrap()
+        .local_addr()
+        .unwrap()
+        .port()
+}
+
+const TRAIN_ARGS: [&str; 12] = [
+    "-e", "4", "-x", "7", "-y", "7", "-r", "3", "--threads", "1", "--seed", "99",
+];
+
+fn spawn_rank(input: &Path, prefix: &Path, extra: &[&str]) -> Child {
+    Command::new(bin())
+        .args(TRAIN_ARGS)
+        .args(extra)
+        .arg(input.to_str().unwrap())
+        .arg(prefix.to_str().unwrap())
+        .env("SOMOCLU_BOOTSTRAP_TIMEOUT_SECS", "60")
+        .output_piped()
+}
+
+trait Piped {
+    fn output_piped(&mut self) -> Child;
+}
+impl Piped for Command {
+    fn output_piped(&mut self) -> Child {
+        self.stdout(std::process::Stdio::piped())
+            .stderr(std::process::Stdio::piped())
+            .spawn()
+            .expect("binary spawns")
+    }
+}
+
+fn finish(child: Child, who: &str) -> (bool, String) {
+    let out = child.wait_with_output().expect("process completes");
+    (
+        out.status.success(),
+        format!("{who} stderr:\n{}", String::from_utf8_lossy(&out.stderr)),
+    )
+}
+
+fn read_bytes(p: &str) -> Vec<u8> {
+    std::fs::read(p).unwrap_or_else(|e| panic!("{p}: {e}"))
+}
+
+#[test]
+fn two_process_tcp_matches_simulated_two_rank_run() {
+    let dir = tmpdir("tcp2");
+    let input = write_input(&dir, 600);
+
+    // Reference: the simulated in-process 2-rank run.
+    let sim_prefix = dir.join("sim");
+    let out = Command::new(bin())
+        .args(TRAIN_ARGS)
+        .args(["--ranks", "2"])
+        .arg(input.to_str().unwrap())
+        .arg(sim_prefix.to_str().unwrap())
+        .output()
+        .expect("binary runs");
+    assert!(
+        out.status.success(),
+        "simulated run: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // Two real processes over loopback TCP via the shorthand flags.
+    let addr = format!("127.0.0.1:{}", free_port());
+    let net_prefix = dir.join("net");
+    let peer_prefix = dir.join("peer");
+    let r0 = spawn_rank(&input, &net_prefix, &["--listen", &addr]);
+    let r1 = spawn_rank(&input, &peer_prefix, &["--connect", &addr]);
+    let (ok0, err0) = finish(r0, "rank 0");
+    let (ok1, err1) = finish(r1, "rank 1");
+    assert!(ok0, "{err0}");
+    assert!(ok1, "{err1}");
+
+    // Rank 0 writes the outputs, byte-identical to the simulated run.
+    for ext in [".wts", ".bm"] {
+        let sim = read_bytes(&format!("{}{ext}", sim_prefix.display()));
+        let net = read_bytes(&format!("{}{ext}", net_prefix.display()));
+        assert_eq!(sim, net, "{ext} differs between simulated and 2-process runs");
+    }
+    // Rank 1 writes nothing.
+    for ext in [".wts", ".bm", ".umx"] {
+        assert!(
+            !std::path::Path::new(&format!("{}{ext}", peer_prefix.display())).exists(),
+            "rank 1 must not write {ext}"
+        );
+    }
+    assert!(err1.contains("written by rank 0"), "{err1}");
+}
+
+#[test]
+fn three_process_tcp_explicit_rank_form() {
+    let dir = tmpdir("tcp3");
+    let input = write_input(&dir, 601);
+
+    let sim_prefix = dir.join("sim");
+    let out = Command::new(bin())
+        .args(TRAIN_ARGS)
+        .args(["--ranks", "3", "--collective", "ring"])
+        .arg(input.to_str().unwrap())
+        .arg(sim_prefix.to_str().unwrap())
+        .output()
+        .expect("binary runs");
+    assert!(
+        out.status.success(),
+        "simulated run: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    let peers = format!("127.0.0.1:{},127.0.0.1:{}", free_port(), free_port());
+    let mut children = Vec::new();
+    for rank in 0..3usize {
+        let prefix = dir.join(format!("net{rank}"));
+        let rank_s = rank.to_string();
+        children.push(spawn_rank(
+            &input,
+            &prefix,
+            &[
+                "--ranks", "3", "--rank", &rank_s, "--peers", &peers,
+                "--collective", "ring",
+            ],
+        ));
+    }
+    for (rank, child) in children.into_iter().enumerate() {
+        let (ok, err) = finish(child, &format!("rank {rank}"));
+        assert!(ok, "{err}");
+    }
+    for ext in [".wts", ".bm"] {
+        let sim = read_bytes(&format!("{}{ext}", sim_prefix.display()));
+        let net = read_bytes(&format!("{}{ext}", dir.join("net0").display()));
+        assert_eq!(sim, net, "{ext} differs at 3 ranks over ring");
+    }
+}
+
+#[cfg(unix)]
+#[test]
+fn two_process_unix_socket_roundtrip() {
+    let dir = tmpdir("uds");
+    let input = write_input(&dir, 602);
+    let addr = format!("unix:{}", dir.join("rank0.sock").display());
+    let r0 = spawn_rank(&input, &dir.join("a"), &["--listen", &addr]);
+    let r1 = spawn_rank(&input, &dir.join("b"), &["--connect", &addr]);
+    let (ok0, err0) = finish(r0, "rank 0");
+    let (ok1, err1) = finish(r1, "rank 1");
+    assert!(ok0, "{err0}");
+    assert!(ok1, "{err1}");
+    assert!(
+        std::path::Path::new(&format!("{}.wts", dir.join("a").display())).exists(),
+        "{err0}"
+    );
+}
+
+#[test]
+fn mismatched_schedule_refused_at_bootstrap() {
+    let dir = tmpdir("mismatch");
+    let input = write_input(&dir, 603);
+    let addr = format!("127.0.0.1:{}", free_port());
+    // Rank 1 trains a different schedule: the handshake fingerprint
+    // must refuse the pairing instead of training a corrupted map.
+    let r0 = spawn_rank(&input, &dir.join("a"), &["--listen", &addr]);
+    let r1 = Command::new(bin())
+        .args(["-e", "9", "-x", "7", "-y", "7", "-r", "3", "--threads", "1"])
+        .args(["--connect", &addr])
+        .arg(input.to_str().unwrap())
+        .arg(dir.join("b").to_str().unwrap())
+        .env("SOMOCLU_BOOTSTRAP_TIMEOUT_SECS", "60")
+        .output_piped();
+    let (ok0, err0) = finish(r0, "rank 0");
+    let (ok1, err1) = finish(r1, "rank 1");
+    assert!(!ok0 && !ok1, "mismatched configs must not both succeed");
+    assert!(
+        err0.contains("fingerprint") || err1.contains("fingerprint"),
+        "{err0}\n{err1}"
+    );
+}
