@@ -1,6 +1,5 @@
 //! Library API (paper §4.2–4.3): the calling-convention types the
-//! language bindings wrap, plus the legacy free-function entry points
-//! (now deprecated shims over [`crate::session`]).
+//! language bindings wrap.
 //!
 //! The paper's point: the Python/numpy binding passes f32 pointers
 //! (zero copy), while R and MATLAB default to f64 and "must duplicate all
@@ -11,14 +10,14 @@
 //! * [`DataInput::ConvertedF64`] — the R/MATLAB-style path: an f64 buffer
 //!   converted (allocating a full f32 copy) before training.
 //!
-//! The single public surface a binding wraps today is the session:
+//! The single public surface a binding wraps is the session:
 //! [`Som::builder`] → [`SomSession`] (`fit`, `step_epoch`, `project`,
-//! `save_checkpoint` / [`Som::resume`]). [`train`] and
-//! [`train_one_epoch`] remain as delegating shims.
+//! `save_checkpoint` / [`Som::resume`]). The pre-0.2 free functions
+//! (`train`, `train_one_epoch`) are gone; their exact semantics live on
+//! as one-liners over the session — see the test module here for the
+//! caller-owned-codebook `trainOneEpoch` shape expressed with
+//! `set_epoch_cursor` + `step_epoch_source`.
 
-use crate::coordinator::config::TrainConfig;
-use crate::coordinator::train::TrainResult;
-use crate::kernels::DataShard;
 use crate::sparse::Csr;
 
 pub use crate::session::{Som, SomBuilder, SomSession};
@@ -35,63 +34,11 @@ pub enum DataInput<'a> {
     Sparse(&'a Csr),
 }
 
-/// Train a map over `input` with `cfg`.
-///
-/// Legacy entry point: a delegating shim over the session API, always
-/// single-process (as it historically was, whatever `cfg.ranks` says).
-/// New code should build a session — it keeps the trained state for
-/// inference, stepping, and checkpointing.
-#[deprecated(
-    since = "0.2.0",
-    note = "use Som::builder().config(..).build()?.fit(input) — the session \
-            API adds stepping, inference, and checkpoint/resume"
-)]
-pub fn train(cfg: &TrainConfig, input: DataInput<'_>) -> anyhow::Result<TrainResult> {
-    // Preserve the historical contract: this function never dispatched
-    // to the cluster runner, so force the single-process path.
-    let mut single = cfg.clone();
-    single.ranks = 1;
-    Som::builder().config(single).build()?.fit(input)
-}
-
-/// One epoch of training against an existing codebook — the literal
-/// `trainOneEpoch` API shape (paper §4.2): the caller owns all state.
-///
-/// Legacy entry point: a delegating shim over
-/// [`SomSession::step_epoch`]. Because the caller owns the codebook,
-/// every call builds a fresh session (and therefore a fresh kernel) —
-/// the kernel-rebuild-per-call cost this shape cannot avoid. Keep a
-/// session and call `step_epoch` instead: the kernel is constructed
-/// once and its `epoch_begin` caches serve every chunk of every step.
-#[deprecated(
-    since = "0.2.0",
-    note = "use SomSession::step_epoch — it owns the codebook and reuses \
-            the kernel's epoch_begin caches across steps"
-)]
-pub fn train_one_epoch(
-    cfg: &TrainConfig,
-    shard: DataShard<'_>,
-    codebook: &mut crate::som::Codebook,
-    epoch: usize,
-) -> anyhow::Result<(Vec<u32>, f64)> {
-    let mut session = Som::builder()
-        .config(cfg.clone())
-        .initial_codebook(codebook.clone())
-        .build()?;
-    session.set_epoch_cursor(epoch);
-    // The historical shape fed the whole shard to the kernel in one
-    // call; chunk_rows = 0 preserves that exact f32 summation order.
-    let mut source = crate::io::stream::InMemorySource::new(shard, 0);
-    let stats = session.step_epoch_source(&mut source)?;
-    codebook
-        .weights
-        .copy_from_slice(&session.codebook().expect("trained").weights);
-    Ok((session.last_bmus().to_vec(), stats.qe))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::config::TrainConfig;
+    use crate::kernels::DataShard;
     use crate::som::Codebook;
     use crate::util::rng::Rng;
 
@@ -106,22 +53,54 @@ mod tests {
         }
     }
 
+    fn fit(cfg: &TrainConfig, input: DataInput<'_>) -> crate::coordinator::train::TrainResult {
+        Som::builder()
+            .config(cfg.clone())
+            .build()
+            .unwrap()
+            .fit(input)
+            .unwrap()
+    }
+
     #[test]
-    #[allow(deprecated)]
     fn borrowed_and_converted_agree() {
         let mut rng = Rng::new(31);
         let (data, _) = crate::data::gaussian_blobs(50, 4, 3, 0.2, &mut rng);
         let data64: Vec<f64> = data.iter().map(|&v| v as f64).collect();
         let cfg = small_cfg();
-        let a = train(&cfg, DataInput::BorrowedF32 { data: &data, dim: 4 }).unwrap();
-        let b = train(&cfg, DataInput::ConvertedF64 { data: &data64, dim: 4 }).unwrap();
+        let a = fit(&cfg, DataInput::BorrowedF32 { data: &data, dim: 4 });
+        let b = fit(&cfg, DataInput::ConvertedF64 { data: &data64, dim: 4 });
         // f64 -> f32 of an f32-exact value is lossless: identical runs.
         assert_eq!(a.codebook.weights, b.codebook.weights);
         assert_eq!(a.bmus, b.bmus);
     }
 
+    /// The caller-owned-state `trainOneEpoch` shape (paper §4.2)
+    /// expressed with the session API: a fresh session per epoch, the
+    /// caller's codebook carried between them.
+    fn one_epoch(
+        cfg: &TrainConfig,
+        shard: DataShard<'_>,
+        codebook: &mut Codebook,
+        epoch: usize,
+    ) -> (Vec<u32>, f64) {
+        let mut session = Som::builder()
+            .config(cfg.clone())
+            .initial_codebook(codebook.clone())
+            .build()
+            .unwrap();
+        session.set_epoch_cursor(epoch);
+        // Feed the whole shard in one call (chunk_rows = 0) to keep the
+        // historical f32 summation order.
+        let mut source = crate::io::stream::InMemorySource::new(shard, 0);
+        let stats = session.step_epoch_source(&mut source).unwrap();
+        codebook
+            .weights
+            .copy_from_slice(&session.codebook().expect("trained").weights);
+        (session.last_bmus().to_vec(), stats.qe)
+    }
+
     #[test]
-    #[allow(deprecated)]
     fn one_epoch_reduces_qe_progressively() {
         let mut rng = Rng::new(32);
         let (data, _) = crate::data::gaussian_blobs(60, 4, 3, 0.1, &mut rng);
@@ -129,20 +108,21 @@ mod tests {
         let grid = cfg.grid();
         let mut cb = Codebook::random_init(grid.node_count(), 4, &mut rng);
         let shard = DataShard::Dense { data: &data, dim: 4 };
-        let (_, qe0) = train_one_epoch(&cfg, shard, &mut cb, 0).unwrap();
+        let (_, qe0) = one_epoch(&cfg, shard, &mut cb, 0);
         let mut qe_last = qe0;
         for e in 1..cfg.epochs {
-            let (_, qe) = train_one_epoch(&cfg, shard, &mut cb, e).unwrap();
+            let (_, qe) = one_epoch(&cfg, shard, &mut cb, e);
             qe_last = qe;
         }
         assert!(qe_last < qe0, "{qe0} -> {qe_last}");
     }
 
-    /// The caller-owned-state shim must be step-for-step identical to a
-    /// session stepping its own codebook.
+    /// Rebuilding a fresh session per epoch around a caller-owned
+    /// codebook must be step-for-step identical to one session stepping
+    /// its own state — the equivalence the pre-0.2 `train_one_epoch`
+    /// shim guaranteed, now stated directly against the session API.
     #[test]
-    #[allow(deprecated)]
-    fn one_epoch_shim_matches_session_steps() {
+    fn fresh_session_per_epoch_matches_persistent_session() {
         let mut rng = Rng::new(34);
         let (data, _) = crate::data::gaussian_blobs(40, 4, 3, 0.2, &mut rng);
         let cfg = small_cfg();
@@ -152,10 +132,10 @@ mod tests {
         let shard = DataShard::Dense { data: &data, dim: 4 };
 
         let mut cb = init.clone();
-        let mut shim_bmus = Vec::new();
+        let mut per_epoch_bmus = Vec::new();
         for e in 0..cfg.epochs {
-            let (bmus, _) = train_one_epoch(&cfg, shard, &mut cb, e).unwrap();
-            shim_bmus = bmus;
+            let (bmus, _) = one_epoch(&cfg, shard, &mut cb, e);
+            per_epoch_bmus = bmus;
         }
 
         let mut session = Som::builder()
@@ -169,17 +149,16 @@ mod tests {
                 .unwrap();
         }
         assert_eq!(cb.weights, session.codebook().unwrap().weights);
-        assert_eq!(shim_bmus, session.last_bmus());
+        assert_eq!(per_epoch_bmus, session.last_bmus());
     }
 
     #[test]
-    #[allow(deprecated)]
     fn sparse_input_works() {
         let mut rng = Rng::new(33);
         let m = Csr::random(40, 16, 0.2, &mut rng);
         let mut cfg = small_cfg();
         cfg.kernel = crate::kernels::KernelType::SparseCpu;
-        let res = train(&cfg, DataInput::Sparse(&m)).unwrap();
+        let res = fit(&cfg, DataInput::Sparse(&m));
         assert_eq!(res.bmus.len(), 40);
     }
 }

@@ -1,10 +1,18 @@
-//! The somoclu command-line interface (paper §4.1), plus flags for the
-//! simulated cluster (`--ranks` replaces `mpirun -np`) and determinism
-//! (`--seed`).
+//! The somoclu command-line interface (paper §4.1), organized as
+//! subcommands since v0.2:
 //!
 //! ```text
-//! somoclu [OPTIONs] INPUT_FILE OUTPUT_PREFIX
+//! somoclu train [OPTIONS] INPUT_FILE OUTPUT_PREFIX   # batch training
+//! somoclu serve [OPTIONS] LISTEN_ADDR                # checkpoint-serving daemon
+//! somoclu convert [OPTIONS] INPUT_FILE OUTPUT_FILE   # text -> binary container
+//! somoclu info [OPTIONS] INPUT_FILE                  # container inspector
 //! ```
+//!
+//! The historical flat form `somoclu [OPTIONS] INPUT OUTPUT_PREFIX`
+//! still works as an alias for `train` (with a one-line deprecation
+//! notice on stderr). Training flags carry the paper's short names
+//! (`-e`, `-k`, ...), plus the simulated cluster (`--ranks` replaces
+//! `mpirun -np`) and determinism (`--seed`).
 
 use crate::cluster::multiproc::NetOptions;
 use crate::cluster::netmodel::NetModel;
@@ -13,7 +21,9 @@ use crate::io::output::SnapshotLevel;
 use crate::kernels::KernelType;
 use crate::util::argparse::{ArgError, ArgSpec, Parsed};
 
-pub fn arg_spec() -> ArgSpec {
+/// Argument spec for `somoclu train` (and the deprecated flat
+/// invocation, which is the same grammar).
+pub fn train_spec() -> ArgSpec {
     ArgSpec::new()
         .opt("codebook", Some('c'), Some("codebook"),
              "initial code book file (default: random init)", None)
@@ -87,6 +97,9 @@ pub fn arg_spec() -> ArgSpec {
         .opt("checkpoint-every", None, Some("checkpoint-every"),
              "write OUTPUT_PREFIX.epoch<k>.somc every N completed epochs \
               (0 = off)", Some("0"))
+        .opt("keep-last", None, Some("keep-last"),
+             "retain only the newest N cadence checkpoints, deleting \
+              older ones as training progresses (0 = keep all)", Some("0"))
         .flag("prefetch", None, Some("prefetch"),
               "double-buffered chunk read-ahead for file-backed streaming")
         .flag("help", Some('h'), Some("help"), "print usage")
@@ -158,6 +171,52 @@ pub fn parse_convert(parsed: &Parsed) -> Result<ConvertOptions, ArgError> {
     })
 }
 
+/// Argument spec for the `somoclu serve` subcommand: the
+/// checkpoint-serving daemon (`crate::serve`).
+pub fn serve_spec() -> ArgSpec {
+    ArgSpec::new()
+        .opt("checkpoint", Some('c'), Some("checkpoint"),
+             "SOMC checkpoint to serve from the start (default: start \
+              empty and wait for a submitted job to publish a map)", None)
+        .opt("state-dir", None, Some("state-dir"),
+             "directory for the job-queue journal and job checkpoints",
+             Some("somoclu-serve"))
+        .opt("threads", None, Some("threads"),
+             "worker threads for training jobs and quality requests \
+              (default: all cores)", None)
+        .flag("help", Some('h'), Some("help"), "print usage")
+        .flag("verbose", Some('v'), Some("verbose"),
+              "log connections and publishes to stderr")
+        .positional("LISTEN_ADDR", "host:port (port 0 = any free port) or unix:PATH")
+}
+
+/// Parsed `somoclu serve` options (the CLI-facing subset of
+/// `crate::serve::ServeOptions`).
+#[derive(Debug, Clone)]
+pub struct ServeCliOptions {
+    pub addr: String,
+    pub checkpoint: Option<String>,
+    pub state_dir: String,
+    pub threads: usize,
+    pub verbose: bool,
+}
+
+pub fn parse_serve(parsed: &Parsed) -> Result<ServeCliOptions, ArgError> {
+    let threads = match parsed.get("threads") {
+        Some(t) => t
+            .parse::<usize>()
+            .map_err(|e| bad("threads", t, e.to_string()))?,
+        None => 0,
+    };
+    Ok(ServeCliOptions {
+        addr: parsed.positional(0).to_string(),
+        checkpoint: parsed.get("checkpoint").map(str::to_string),
+        state_dir: parsed.get("state-dir").unwrap().to_string(),
+        threads,
+        verbose: parsed.flag("verbose"),
+    })
+}
+
 /// Everything main() needs beyond TrainConfig.
 #[derive(Debug, Clone)]
 pub struct CliOptions {
@@ -171,6 +230,10 @@ pub struct CliOptions {
     /// `--checkpoint-every N`: save `OUTPUT_PREFIX.epoch<k>.somc` after
     /// every N completed epochs (0 = off).
     pub checkpoint_every: usize,
+    /// `--keep-last N`: retain only the newest N cadence checkpoints
+    /// (0 = keep all). Applied via
+    /// [`crate::session::SomSession::set_checkpoint_keep_last`].
+    pub keep_last: usize,
     pub net: NetModel,
     /// `--rank`/`--peers` (or the `--listen`/`--connect` shorthand):
     /// this process is one rank of a real multi-process run.
@@ -285,6 +348,7 @@ pub fn parse_cli(parsed: &Parsed) -> Result<CliOptions, ArgError> {
         initial_codebook: parsed.get("codebook").map(str::to_string),
         resume,
         checkpoint_every: parsed.parse_as::<usize>("checkpoint-every")?,
+        keep_last: parsed.parse_as::<usize>("keep-last")?,
         net,
         multiproc,
         verbose: parsed.flag("verbose"),
@@ -401,7 +465,7 @@ mod tests {
     use crate::som::{Cooling, GridType, MapType, NeighborhoodKind};
 
     fn parse(args: &[&str]) -> CliOptions {
-        let spec = arg_spec();
+        let spec = train_spec();
         let parsed = spec.parse(args.iter().map(|s| s.to_string())).unwrap();
         parse_cli(&parsed).unwrap()
     }
@@ -479,7 +543,7 @@ mod tests {
         assert_eq!(o.config.io_mode, IoMode::Mmap);
         let o = parse(&["--io", "pread", "--ranks", "4", "in", "out"]);
         assert_eq!(o.config.io_mode, IoMode::Pread);
-        let spec = arg_spec();
+        let spec = train_spec();
         let parsed = spec
             .parse(["--io", "directio", "in", "out"].map(String::from))
             .unwrap();
@@ -528,11 +592,48 @@ mod tests {
         assert_eq!(o.checkpoint_every, 3);
         // --resume restores the codebook; combining it with -c is a
         // contradiction and must be rejected.
-        let spec = arg_spec();
+        let spec = train_spec();
         let parsed = spec
             .parse(["--resume", "a.somc", "-c", "cb.wts", "in", "out"].map(String::from))
             .unwrap();
         assert!(parse_cli(&parsed).is_err());
+    }
+
+    #[test]
+    fn keep_last_flag() {
+        let o = parse(&["in", "out"]);
+        assert_eq!(o.keep_last, 0); // default: keep every checkpoint
+        let o = parse(&[
+            "--checkpoint-every", "2", "--keep-last", "3", "in", "out",
+        ]);
+        assert_eq!(o.checkpoint_every, 2);
+        assert_eq!(o.keep_last, 3);
+    }
+
+    #[test]
+    fn serve_subcommand_spec() {
+        let spec = serve_spec();
+        let parsed = spec
+            .parse(
+                ["-c", "map.somc", "--state-dir", "st", "--threads", "2",
+                 "-v", "127.0.0.1:9009"]
+                    .map(String::from),
+            )
+            .unwrap();
+        let o = parse_serve(&parsed).unwrap();
+        assert_eq!(o.addr, "127.0.0.1:9009");
+        assert_eq!(o.checkpoint.as_deref(), Some("map.somc"));
+        assert_eq!(o.state_dir, "st");
+        assert_eq!(o.threads, 2);
+        assert!(o.verbose);
+        // Defaults: no checkpoint, auto threads, bundled state dir.
+        let parsed = spec.parse(["unix:/tmp/s.sock"].map(String::from)).unwrap();
+        let o = parse_serve(&parsed).unwrap();
+        assert_eq!(o.addr, "unix:/tmp/s.sock");
+        assert!(o.checkpoint.is_none());
+        assert_eq!(o.state_dir, "somoclu-serve");
+        assert_eq!(o.threads, 0);
+        assert!(!o.verbose);
     }
 
     #[test]
@@ -542,7 +643,7 @@ mod tests {
             o.config.initialization,
             crate::coordinator::config::Initialization::Pca
         );
-        let spec = arg_spec();
+        let spec = train_spec();
         let parsed = spec
             .parse(["--initialization", "magic", "in", "out"].map(String::from))
             .unwrap();
@@ -565,7 +666,7 @@ mod tests {
         assert_eq!(o.config.collective, CollectiveAlgo::Ring);
         let o = parse(&["--collective", "STAR", "in", "out"]);
         assert_eq!(o.config.collective, CollectiveAlgo::Star);
-        let spec = arg_spec();
+        let spec = train_spec();
         let parsed = spec
             .parse(["--collective", "mesh", "in", "out"].map(String::from))
             .unwrap();
@@ -603,7 +704,7 @@ mod tests {
     #[test]
     fn bad_multiproc_combinations_rejected() {
         let try_parse = |args: &[&str]| {
-            let spec = arg_spec();
+            let spec = train_spec();
             let parsed = spec.parse(args.iter().map(|s| s.to_string())).unwrap();
             parse_cli(&parsed)
         };
@@ -628,7 +729,7 @@ mod tests {
 
     #[test]
     fn accel_multirank_rejected() {
-        let spec = arg_spec();
+        let spec = train_spec();
         let parsed = spec
             .parse(["-k", "1", "--ranks", "4", "in", "out"].map(String::from))
             .unwrap();
@@ -637,7 +738,7 @@ mod tests {
 
     #[test]
     fn bad_enum_value_rejected() {
-        let spec = arg_spec();
+        let spec = train_spec();
         let parsed = spec
             .parse(["-g", "triangular", "in", "out"].map(String::from))
             .unwrap();

@@ -123,7 +123,7 @@ pub(crate) fn run_cluster_net(
 ) -> anyhow::Result<(Option<TrainResult>, ClusterReport)> {
     let t0 = Instant::now();
     let cfg = session.config().clone();
-    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    cfg.validate()?;
     let ranks = cfg.ranks;
     anyhow::ensure!(
         ranks >= 2,

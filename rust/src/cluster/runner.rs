@@ -503,7 +503,7 @@ pub(crate) fn run_cluster(
     net: NetModel,
 ) -> anyhow::Result<(TrainResult, ClusterReport)> {
     let cfg = session.config().clone();
-    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    cfg.validate()?;
     check_kernel_ranks(&cfg)?;
     let ranks = cfg.ranks;
     let dim = data.dim();
@@ -589,7 +589,7 @@ pub(crate) fn run_cluster_stream(
     net: NetModel,
 ) -> anyhow::Result<(TrainResult, ClusterReport)> {
     let cfg = session.config().clone();
-    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    cfg.validate()?;
     check_kernel_ranks(&cfg)?;
     let ranks = cfg.ranks;
     let total_epochs = cfg.epochs;
@@ -709,53 +709,6 @@ pub(crate) fn run_cluster_stream(
     })
 }
 
-/// Train across `cfg.ranks` simulated nodes on resident data.
-///
-/// Legacy entry point: a delegating shim over the session API, kept for
-/// source compatibility. New code should use
-/// [`crate::session::Som::builder`] and [`SomSession::fit_cluster`],
-/// which add checkpoint/resume and inference on the same state.
-#[deprecated(
-    since = "0.2.0",
-    note = "use Som::builder().config(..).build()?.fit_cluster(data) — the \
-            session API adds checkpoint/resume and inference"
-)]
-pub fn train_cluster(
-    cfg: &TrainConfig,
-    data: ClusterData,
-    net: NetModel,
-) -> anyhow::Result<(TrainResult, ClusterReport)> {
-    let mut session = crate::session::Som::builder()
-        .config(cfg.clone())
-        .net(net)
-        .build()?;
-    session.fit_cluster(data)
-}
-
-/// Train across `cfg.ranks` simulated nodes streaming per-rank shards of
-/// one file.
-///
-/// Legacy entry point: a delegating shim over the session API, kept for
-/// source compatibility. New code should use
-/// [`crate::session::Som::builder`] and
-/// [`SomSession::fit_cluster_stream`].
-#[deprecated(
-    since = "0.2.0",
-    note = "use Som::builder().config(..).build()?.fit_cluster_stream(input) — \
-            the session API adds checkpoint/resume and inference"
-)]
-pub fn train_cluster_stream(
-    cfg: &TrainConfig,
-    input: StreamInput,
-    net: NetModel,
-) -> anyhow::Result<(TrainResult, ClusterReport)> {
-    let mut session = crate::session::Som::builder()
-        .config(cfg.clone())
-        .net(net)
-        .build()?;
-    session.fit_cluster_stream(input)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -789,7 +742,7 @@ mod tests {
         cfg: &TrainConfig,
         data: ClusterData,
         net: NetModel,
-    ) -> anyhow::Result<(TrainResult, ClusterReport)> {
+    ) -> Result<(TrainResult, ClusterReport), crate::error::SomError> {
         Som::builder()
             .config(cfg.clone())
             .net(net)
@@ -801,7 +754,7 @@ mod tests {
         cfg: &TrainConfig,
         input: StreamInput,
         net: NetModel,
-    ) -> anyhow::Result<(TrainResult, ClusterReport)> {
+    ) -> Result<(TrainResult, ClusterReport), crate::error::SomError> {
         Som::builder()
             .config(cfg.clone())
             .net(net)
@@ -871,32 +824,29 @@ mod tests {
         assert!((multi.final_qe() - single.final_qe()).abs() < 1e-6);
     }
 
-    /// The deprecated entry points must stay faithful delegating shims.
+    /// Two identically configured cluster sessions must be bit-identical
+    /// (the reproducibility the pre-0.2 `train_cluster` shim-equivalence
+    /// test relied on, now stated directly against the session API).
     #[test]
-    #[allow(deprecated)]
-    fn legacy_shims_match_session_api() {
+    fn cluster_session_runs_are_reproducible() {
         let mut rng = Rng::new(77);
         let (data, _) = data::gaussian_blobs(48, 4, 3, 0.2, &mut rng);
-        let (via_session, _) = fit_cluster(
-            &cfg(2),
-            ClusterData::Dense {
-                data: data.clone(),
-                dim: 4,
-            },
-            NetModel::ideal(),
-        )
-        .unwrap();
-        let (via_shim, _) = train_cluster(
-            &cfg(2),
-            ClusterData::Dense {
-                data: data.clone(),
-                dim: 4,
-            },
-            NetModel::ideal(),
-        )
-        .unwrap();
-        assert_eq!(via_shim.bmus, via_session.bmus);
-        assert_eq!(via_shim.codebook.weights, via_session.codebook.weights);
+        let run = || {
+            fit_cluster(
+                &cfg(2),
+                ClusterData::Dense {
+                    data: data.clone(),
+                    dim: 4,
+                },
+                NetModel::ideal(),
+            )
+            .unwrap()
+            .0
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.bmus, b.bmus);
+        assert_eq!(a.codebook.weights, b.codebook.weights);
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! and runtime options (threads, ranks, seed).
 
 use crate::cluster::comm::CollectiveAlgo;
+use crate::error::SomError;
 use crate::io::output::SnapshotLevel;
 use crate::kernels::KernelType;
 use crate::som::{Cooling, Grid, GridType, MapType, Neighborhood, Schedule};
@@ -185,36 +186,41 @@ impl TrainConfig {
         Schedule::new(self.scale0, self.scale_n, self.scale_cooling, self.epochs)
     }
 
-    pub fn validate(&self) -> Result<(), String> {
+    /// Reject inconsistent configurations with a typed
+    /// [`SomError::Config`] (code `config`) naming the offending knob.
+    pub fn validate(&self) -> Result<(), SomError> {
         if self.rows == 0 || self.cols == 0 {
-            return Err("map must have at least one row and column".into());
+            return Err(SomError::config(
+                "map must have at least one row and column",
+            ));
         }
         if self.epochs == 0 {
-            return Err("epochs must be > 0".into());
+            return Err(SomError::config("epochs must be > 0"));
         }
         if self.ranks == 0 {
-            return Err("ranks must be > 0".into());
+            return Err(SomError::config("ranks must be > 0"));
         }
         if let Some(r0) = self.radius0 {
             if r0 < self.radius_n {
-                return Err(format!(
+                return Err(SomError::config(format!(
                     "start radius {r0} smaller than final radius {}",
                     self.radius_n
-                ));
+                )));
             }
         }
         if self.scale0 <= 0.0 {
-            return Err("start learning rate must be positive".into());
+            return Err(SomError::config(
+                "start learning rate must be positive",
+            ));
         }
         if self.io_mode == IoMode::Mmap && self.prefetch {
             // Chunks come straight out of the page cache; a read-ahead
             // thread would only add a copy the mmap mode exists to
             // remove. Refusing beats silently degrading to buffered.
-            return Err(
+            return Err(SomError::config(
                 "--prefetch has no effect with --io mmap (chunk views are \
-                 served from the page cache); drop one of the two"
-                    .into(),
-            );
+                 served from the page cache); drop one of the two",
+            ));
         }
         Ok(())
     }

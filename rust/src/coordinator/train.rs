@@ -1,11 +1,10 @@
 //! Single-process training support: kernel construction, codebook
-//! initialization, the per-epoch stats record, and the legacy
-//! `train`/`train_stream` entry points.
+//! initialization, and the per-epoch stats record.
 //!
 //! The epoch loop itself lives in [`crate::session::SomSession`] (one
-//! chunk loop serves the resident, streamed, and cluster paths); the
-//! functions here are thin **deprecated shims** over a session, kept so
-//! existing callers keep compiling. New code should build a session:
+//! chunk loop serves the resident, streamed, and cluster paths). The
+//! pre-0.2 `train`/`train_stream` free functions are gone; build a
+//! session:
 //!
 //! ```
 //! use somoclu::api::DataInput;
@@ -19,8 +18,6 @@
 use std::time::Duration;
 
 use crate::coordinator::config::TrainConfig;
-use crate::io::output::OutputWriter;
-use crate::io::stream::{DataSource, InMemorySource};
 use crate::kernels::dense_cpu::DenseCpuKernel;
 use crate::kernels::sparse_cpu::SparseCpuKernel;
 use crate::kernels::{DataShard, KernelType, TrainingKernel};
@@ -98,65 +95,6 @@ pub fn init_codebook_with_data(
     }
 }
 
-/// Train on one in-memory shard (the whole data set on the single-node
-/// path). `writer` enables interim snapshots (paper `-s`).
-///
-/// Legacy entry point: a delegating shim over the session API, kept for
-/// source compatibility. New code should use
-/// [`crate::session::Som::builder`] and `fit` — the session adds
-/// incremental stepping, inference, and checkpoint/resume.
-#[deprecated(
-    since = "0.2.0",
-    note = "use Som::builder().config(..).build()?.fit(input) — the session \
-            API adds stepping, inference, and checkpoint/resume"
-)]
-pub fn train(
-    cfg: &TrainConfig,
-    shard: DataShard<'_>,
-    initial: Option<Codebook>,
-    writer: Option<&OutputWriter>,
-) -> anyhow::Result<TrainResult> {
-    let mut source = InMemorySource::new(shard, cfg.chunk_rows);
-    #[allow(deprecated)]
-    let res = train_stream(cfg, &mut source, initial, writer);
-    res
-}
-
-/// Train over any [`DataSource`] — the out-of-core entry point.
-///
-/// Legacy entry point: a delegating shim over the session API, kept for
-/// source compatibility. New code should use
-/// [`crate::session::Som::builder`] and `fit_source`.
-#[deprecated(
-    since = "0.2.0",
-    note = "use Som::builder().config(..).build()?.fit_source(source) — the \
-            session API adds stepping, inference, and checkpoint/resume"
-)]
-pub fn train_stream(
-    cfg: &TrainConfig,
-    source: &mut dyn DataSource,
-    initial: Option<Codebook>,
-    writer: Option<&OutputWriter>,
-) -> anyhow::Result<TrainResult> {
-    // Preserve the historical contract: this function never dispatched
-    // to the cluster runner, whatever cfg.ranks says.
-    let mut single = cfg.clone();
-    single.ranks = 1;
-    let mut builder = crate::session::Som::builder().config(single);
-    if let Some(cb) = initial {
-        builder = builder.initial_codebook(cb);
-    }
-    let mut session = builder.build()?;
-    let result = session.fit_source_with(source, &mut |s| match writer {
-        Some(w) => s.write_epoch_snapshot(w),
-        None => Ok(()),
-    })?;
-    if let Some(w) = writer {
-        w.write_final(&cfg.grid(), &result.codebook, &result.bmus, &result.umatrix)?;
-    }
-    Ok(result)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -209,20 +147,27 @@ mod tests {
         assert_eq!(a.bmus, b.bmus);
     }
 
-    /// The deprecated `train` shim must stay a faithful delegate of the
-    /// session path.
+    /// `fit_shard` and `fit_source` over an in-memory source are the
+    /// same path (the equivalence the pre-0.2 `train` shim delegated
+    /// through, now stated directly against the session API).
     #[test]
-    #[allow(deprecated)]
-    fn legacy_train_shim_matches_session() {
+    fn fit_shard_matches_fit_source() {
         let mut rng = Rng::new(21);
         let (data, _) = data::gaussian_blobs(60, 4, 3, 0.1, &mut rng);
         let cfg = blob_config();
         let shard = DataShard::Dense { data: &data, dim: 4 };
-        let via_session = fit(&cfg, shard).unwrap();
-        let via_shim = train(&cfg, shard, None, None).unwrap();
-        assert_eq!(via_shim.codebook.weights, via_session.codebook.weights);
-        assert_eq!(via_shim.bmus, via_session.bmus);
-        assert_eq!(via_shim.epochs.len(), via_session.epochs.len());
+        let via_shard = fit(&cfg, shard).unwrap();
+        let mut source =
+            crate::io::stream::InMemorySource::new(shard, cfg.chunk_rows);
+        let via_source = Som::builder()
+            .config(cfg.clone())
+            .build()
+            .unwrap()
+            .fit_source(&mut source)
+            .unwrap();
+        assert_eq!(via_source.codebook.weights, via_shard.codebook.weights);
+        assert_eq!(via_source.bmus, via_shard.bmus);
+        assert_eq!(via_source.epochs.len(), via_shard.epochs.len());
     }
 
     #[test]

@@ -1,0 +1,270 @@
+//! `SomError` — the typed error surface of the crate (ISSUE 8).
+//!
+//! Every error that crosses the public session/serve boundary is a
+//! [`SomError`]: a closed set of categories, each with a **stable
+//! machine-readable code** ([`SomError::code`]) and a human-readable
+//! message. The codes are part of the serving wire protocol
+//! ([`crate::serve::protocol`]) — a remote client sees exactly the same
+//! category a local library caller matches on — so they are frozen:
+//! codes may be added, never renamed or removed.
+//!
+//! | variant        | code         | meaning                                         |
+//! |----------------|--------------|-------------------------------------------------|
+//! | `Config`       | `config`     | invalid or inconsistent configuration           |
+//! | `State`        | `state`      | operation needs state the session does not have |
+//! | `Data`         | `data`       | input data malformed or mismatched (dims, rows) |
+//! | `Io`           | `io`         | operating-system I/O failure                    |
+//! | `Checkpoint`   | `checkpoint` | unreadable, corrupt, or mismatched `SOMC` file  |
+//! | `Comm`         | `comm`       | cluster communication failure (rank lost, ...)  |
+//! | `Protocol`     | `protocol`   | malformed or version-mismatched serve request   |
+//! | `Job`          | `job`        | training-job queue failure                      |
+//! | `Internal`     | `internal`   | anything not classified above                   |
+//!
+//! Internals (kernels, collectives, format decoders) still compose
+//! errors with `anyhow`; the `From<anyhow::Error>` impl classifies a
+//! chain as it crosses the public boundary — an embedded `SomError`
+//! keeps its category, a [`CommError`] chain becomes `Comm`, an
+//! [`std::io::Error`] chain becomes `Io`, everything else `Internal`.
+//! The full `{:#}`-style context chain is flattened into the message,
+//! so no diagnostic text is lost in the translation.
+
+use crate::cluster::comm::CommError;
+
+/// The crate's public error type: one category per failure class, each
+/// with a stable wire code. See the [module docs](self) for the table.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SomError {
+    /// Invalid or inconsistent configuration (`TrainConfig::validate`,
+    /// builder misuse, contradictory CLI flags).
+    Config(String),
+    /// The operation needs state the session does not have yet (no
+    /// codebook before `fit`/`resume`, nothing to checkpoint, ...).
+    State(String),
+    /// Input data malformed or mismatched: wrong dimensionality, zero
+    /// rows, unparseable rows.
+    Data(String),
+    /// Operating-system I/O failure (open/read/write/bind).
+    Io(String),
+    /// A `SOMC` checkpoint could not be read, failed validation
+    /// (magic/version/checksum/length), or could not be written.
+    Checkpoint(String),
+    /// Cluster communication failure (peer lost mid-collective,
+    /// undecodable collective payload).
+    Comm(String),
+    /// Malformed or version-mismatched serve-protocol request/response.
+    Protocol(String),
+    /// Training-job queue failure (unparseable job spec, journal
+    /// corruption, job aborted by drain).
+    Job(String),
+    /// Unclassified internal failure (the escape hatch for errors that
+    /// do not fit a category; the message carries the full chain).
+    Internal(String),
+}
+
+impl SomError {
+    /// Build the variant for a stable `code` string; unknown codes map
+    /// to [`SomError::Internal`] (the wire client uses this to
+    /// reconstruct errors, so a newer server's new code degrades to
+    /// `internal` instead of failing the decode).
+    pub fn from_code(code: &str, message: impl Into<String>) -> SomError {
+        let message = message.into();
+        match code {
+            "config" => SomError::Config(message),
+            "state" => SomError::State(message),
+            "data" => SomError::Data(message),
+            "io" => SomError::Io(message),
+            "checkpoint" => SomError::Checkpoint(message),
+            "comm" => SomError::Comm(message),
+            "protocol" => SomError::Protocol(message),
+            "job" => SomError::Job(message),
+            _ => SomError::Internal(message),
+        }
+    }
+
+    /// The stable machine-readable code for this category — what the
+    /// serve protocol puts on the wire and scripts match on. Frozen:
+    /// codes are never renamed.
+    pub fn code(&self) -> &'static str {
+        match self {
+            SomError::Config(_) => "config",
+            SomError::State(_) => "state",
+            SomError::Data(_) => "data",
+            SomError::Io(_) => "io",
+            SomError::Checkpoint(_) => "checkpoint",
+            SomError::Comm(_) => "comm",
+            SomError::Protocol(_) => "protocol",
+            SomError::Job(_) => "job",
+            SomError::Internal(_) => "internal",
+        }
+    }
+
+    /// The human-readable message (without the code prefix).
+    pub fn message(&self) -> &str {
+        match self {
+            SomError::Config(m)
+            | SomError::State(m)
+            | SomError::Data(m)
+            | SomError::Io(m)
+            | SomError::Checkpoint(m)
+            | SomError::Comm(m)
+            | SomError::Protocol(m)
+            | SomError::Job(m)
+            | SomError::Internal(m) => m,
+        }
+    }
+
+    /// Shorthand constructors (each takes anything `Into<String>`).
+    pub fn config(m: impl Into<String>) -> SomError {
+        SomError::Config(m.into())
+    }
+    /// See [`SomError::State`].
+    pub fn state(m: impl Into<String>) -> SomError {
+        SomError::State(m.into())
+    }
+    /// See [`SomError::Data`].
+    pub fn data(m: impl Into<String>) -> SomError {
+        SomError::Data(m.into())
+    }
+    /// See [`SomError::Io`].
+    pub fn io(m: impl Into<String>) -> SomError {
+        SomError::Io(m.into())
+    }
+    /// See [`SomError::Checkpoint`].
+    pub fn checkpoint(m: impl Into<String>) -> SomError {
+        SomError::Checkpoint(m.into())
+    }
+    /// See [`SomError::Protocol`].
+    pub fn protocol(m: impl Into<String>) -> SomError {
+        SomError::Protocol(m.into())
+    }
+    /// See [`SomError::Job`].
+    pub fn job(m: impl Into<String>) -> SomError {
+        SomError::Job(m.into())
+    }
+    /// See [`SomError::Internal`].
+    pub fn internal(m: impl Into<String>) -> SomError {
+        SomError::Internal(m.into())
+    }
+}
+
+impl std::fmt::Display for SomError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // The message alone: messages are written self-describing, and
+        // test/CLI consumers match on their text. The code is exposed
+        // separately via `code()` (and the serve wire format).
+        f.write_str(self.message())
+    }
+}
+
+impl std::error::Error for SomError {}
+
+impl From<std::io::Error> for SomError {
+    fn from(e: std::io::Error) -> SomError {
+        SomError::Io(e.to_string())
+    }
+}
+
+impl From<CommError> for SomError {
+    fn from(e: CommError) -> SomError {
+        SomError::Comm(e.to_string())
+    }
+}
+
+impl From<anyhow::Error> for SomError {
+    fn from(e: anyhow::Error) -> SomError {
+        // An outermost SomError passes through untouched.
+        let e = match e.downcast::<SomError>() {
+            Ok(s) => return s,
+            Err(e) => e,
+        };
+        // Otherwise classify by the deepest recognizable cause, keeping
+        // the whole `{:#}` context chain as the message.
+        let msg = format!("{e:#}");
+        for cause in e.chain() {
+            if let Some(s) = cause.downcast_ref::<SomError>() {
+                return SomError::from_code(s.code(), msg);
+            }
+            if cause.is::<CommError>() {
+                return SomError::Comm(msg);
+            }
+            if cause.is::<std::io::Error>() {
+                return SomError::Io(msg);
+            }
+        }
+        SomError::Internal(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_stable() {
+        let cases = [
+            (SomError::config("x"), "config"),
+            (SomError::state("x"), "state"),
+            (SomError::data("x"), "data"),
+            (SomError::io("x"), "io"),
+            (SomError::checkpoint("x"), "checkpoint"),
+            (SomError::Comm("x".into()), "comm"),
+            (SomError::protocol("x"), "protocol"),
+            (SomError::job("x"), "job"),
+            (SomError::internal("x"), "internal"),
+        ];
+        for (err, code) in cases {
+            assert_eq!(err.code(), code);
+            // from_code round-trips every known code.
+            assert_eq!(SomError::from_code(code, "x"), err);
+        }
+        // Unknown codes degrade to internal, not a decode failure.
+        assert_eq!(SomError::from_code("galaxy", "m").code(), "internal");
+    }
+
+    #[test]
+    fn anyhow_classification() {
+        // Embedded SomError keeps its category through a context chain.
+        let e: anyhow::Error = anyhow::Error::new(SomError::data("dim mismatch"));
+        assert_eq!(SomError::from(e).code(), "data");
+        let e = anyhow::Error::new(SomError::checkpoint("bad magic"))
+            .context("resuming run");
+        let s = SomError::from(e);
+        assert_eq!(s.code(), "checkpoint");
+        assert!(s.message().contains("resuming run"), "{s}");
+        assert!(s.message().contains("bad magic"), "{s}");
+
+        // io::Error chains classify as io.
+        let e = anyhow::Error::new(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "gone",
+        ))
+        .context("opening data");
+        assert_eq!(SomError::from(e).code(), "io");
+
+        // CommError chains classify as comm.
+        let e = anyhow::Error::new(crate::cluster::comm::CommError::PeerLost {
+            peer: 3,
+        })
+        .context("epoch 5");
+        let s = SomError::from(e);
+        assert_eq!(s.code(), "comm");
+        assert!(s.message().contains("rank 3"), "{s}");
+
+        // Anything else is internal, message preserved.
+        let s = SomError::from(anyhow::anyhow!("kernel exploded"));
+        assert_eq!(s.code(), "internal");
+        assert_eq!(s.message(), "kernel exploded");
+    }
+
+    #[test]
+    fn displays_message_only() {
+        let e = SomError::config("epochs must be > 0");
+        assert_eq!(e.to_string(), "epochs must be > 0");
+        // And it is a std error, so anyhow absorbs it.
+        fn absorbs() -> anyhow::Result<()> {
+            Err(anyhow::Error::new(SomError::state("no codebook")))
+        }
+        let err = absorbs().unwrap_err();
+        assert_eq!(err.downcast_ref::<SomError>().unwrap().code(), "state");
+    }
+}

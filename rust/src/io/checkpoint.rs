@@ -56,6 +56,7 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 use crate::coordinator::config::TrainConfig;
+use crate::error::SomError;
 use crate::kernels::KernelType;
 use crate::som::{Codebook, Cooling, GridType, MapType, Neighborhood, NeighborhoodKind};
 
@@ -163,13 +164,24 @@ fn encode_header(cfg: &TrainConfig, epoch: usize, cb: &Codebook) -> [u8; HEADER_
 
 /// Write a checkpoint atomically: encode to `<path>.tmp`, then rename
 /// over `path`, so an interrupted save never corrupts an existing file.
+/// Every failure (shape mismatch, cursor out of range, I/O) surfaces as
+/// [`SomError::Checkpoint`] (code `checkpoint`).
 pub fn save<P: AsRef<Path>>(
     path: P,
     cfg: &TrainConfig,
     epoch: usize,
     codebook: &Codebook,
+) -> Result<(), SomError> {
+    save_impl(path.as_ref(), cfg, epoch, codebook)
+        .map_err(|e| SomError::checkpoint(format!("{e:#}")))
+}
+
+fn save_impl(
+    path: &Path,
+    cfg: &TrainConfig,
+    epoch: usize,
+    codebook: &Codebook,
 ) -> anyhow::Result<()> {
-    let path = path.as_ref();
     anyhow::ensure!(
         codebook.nodes == cfg.rows * cfg.cols && codebook.weights.len() == codebook.nodes * codebook.dim,
         "checkpoint: codebook shape {}x{} does not match the {}x{} map",
@@ -222,10 +234,14 @@ fn decode_f32(h: &[u8], off: usize) -> f32 {
 
 /// Read + validate a `SOMC` checkpoint: magic, version, reserved field,
 /// enum ranges, cursor bound, exact file length, and the payload
-/// checksum. Any failure is an error naming the file — a truncated or
-/// bit-rotted checkpoint is rejected before a resumed run starts.
-pub fn load<P: AsRef<Path>>(path: P) -> anyhow::Result<Checkpoint> {
-    let path = path.as_ref();
+/// checksum. Any failure is a [`SomError::Checkpoint`] (code
+/// `checkpoint`) naming the file — a truncated or bit-rotted checkpoint
+/// is rejected before a resumed run starts.
+pub fn load<P: AsRef<Path>>(path: P) -> Result<Checkpoint, SomError> {
+    load_impl(path.as_ref()).map_err(|e| SomError::checkpoint(format!("{e:#}")))
+}
+
+fn load_impl(path: &Path) -> anyhow::Result<Checkpoint> {
     let mut f =
         File::open(path).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
     let len = f.metadata()?.len();

@@ -30,3 +30,147 @@ pub use stream::{
     ChunkBuf, ChunkedDenseFileSource, ChunkedSparseFileSource, DataSource,
     InMemorySource, PrefetchSource,
 };
+
+use crate::coordinator::config::IoMode;
+use crate::error::SomError;
+use crate::kernels::KernelType;
+
+/// Human description of a chunking choice for diagnostics: `0` streams
+/// the whole pass as one chunk.
+pub fn chunk_desc(chunk_rows: usize) -> String {
+    if chunk_rows == 0 {
+        "whole-pass".to_string()
+    } else {
+        format!("{chunk_rows}-row")
+    }
+}
+
+/// Build the single-process streaming source for `input`: binary
+/// containers (pass the [`sniff_binary`] result as `kind`) stream
+/// natively through the selected `--io` backend (buffered decode,
+/// zero-copy mmap views, or positioned pread); text files stream
+/// re-parsed (buffered only). `prefetch` wraps any `Send` source in the
+/// double-buffered read-ahead adapter (mmap + prefetch was already
+/// rejected by `TrainConfig::validate`). With `quiet` the per-source
+/// stderr diagnostics are suppressed — the serving daemon streams
+/// progress as events instead of log lines; the CLI passes `false`.
+pub fn open_stream_source(
+    input: &str,
+    kind: Option<BinaryKind>,
+    kernel: KernelType,
+    chunk_rows: usize,
+    prefetch: bool,
+    io: IoMode,
+    quiet: bool,
+) -> Result<Box<dyn DataSource + Send>, SomError> {
+    let mut src: Box<dyn DataSource + Send> = match (kind, io) {
+        (Some(BinaryKind::Dense), IoMode::Mmap) => {
+            let s = MmapDenseSource::open(input, chunk_rows)?;
+            if !quiet {
+                eprintln!(
+                    "mapped dense binary input: {} rows x {} dims ({} zero-copy chunk views)",
+                    s.rows(),
+                    s.dim(),
+                    chunk_desc(chunk_rows)
+                );
+            }
+            Box::new(s)
+        }
+        (Some(BinaryKind::Sparse), IoMode::Mmap) => {
+            let s = MmapSparseSource::open(input, chunk_rows)?;
+            if !quiet {
+                eprintln!(
+                    "mapped sparse binary input: {} rows x {} dims ({} zero-copy chunk views)",
+                    s.rows(),
+                    s.dim(),
+                    chunk_desc(chunk_rows)
+                );
+            }
+            Box::new(s)
+        }
+        (Some(BinaryKind::Dense), IoMode::Pread) => {
+            let s = SharedFd::open(input)?.dense_shard(chunk_rows, 0, 1)?;
+            if !quiet {
+                eprintln!(
+                    "streaming dense binary input over one pread fd: {} rows x {} dims ({} chunks)",
+                    s.rows(),
+                    s.dim(),
+                    chunk_desc(chunk_rows)
+                );
+            }
+            Box::new(s)
+        }
+        (Some(BinaryKind::Sparse), IoMode::Pread) => {
+            let s = SharedFd::open(input)?.sparse_shard(chunk_rows, 0, 1)?;
+            if !quiet {
+                eprintln!(
+                    "streaming sparse binary input over one pread fd: {} rows x {} dims ({} chunks)",
+                    s.rows(),
+                    s.dim(),
+                    chunk_desc(chunk_rows)
+                );
+            }
+            Box::new(s)
+        }
+        (None, mode) if mode != IoMode::Buffered => {
+            return Err(SomError::config(mode.text_input_error()));
+        }
+        (Some(BinaryKind::Dense), _) => {
+            let s = BinaryDenseFileSource::open(input, chunk_rows)?;
+            if !quiet {
+                eprintln!(
+                    "streaming dense binary input: {} rows x {} dims ({} chunks)",
+                    s.rows(),
+                    s.dim(),
+                    chunk_desc(chunk_rows)
+                );
+            }
+            Box::new(s)
+        }
+        (Some(BinaryKind::Sparse), _) => {
+            let s = BinarySparseFileSource::open(input, chunk_rows)?;
+            if !quiet {
+                eprintln!(
+                    "streaming sparse binary input: {} rows x {} dims ({} chunks)",
+                    s.rows(),
+                    s.dim(),
+                    chunk_desc(chunk_rows)
+                );
+            }
+            Box::new(s)
+        }
+        (None, _) if kernel == KernelType::SparseCpu => {
+            let s = ChunkedSparseFileSource::open(input, 0, chunk_rows)?;
+            if !quiet {
+                eprintln!(
+                    "streaming sparse input: {} rows x {} dims ({} chunks; run \
+                     `somoclu convert --sparse` once to skip per-epoch parsing)",
+                    s.rows(),
+                    s.dim(),
+                    chunk_desc(chunk_rows)
+                );
+            }
+            Box::new(s)
+        }
+        (None, _) => {
+            let s = ChunkedDenseFileSource::open(input, chunk_rows)?;
+            if !quiet {
+                eprintln!(
+                    "streaming dense input: {} rows x {} dims ({} chunks; run \
+                     `somoclu convert` once to skip per-epoch parsing)",
+                    s.rows(),
+                    s.dim(),
+                    chunk_desc(chunk_rows)
+                );
+            }
+            Box::new(s)
+        }
+    };
+    if prefetch {
+        if !quiet {
+            eprintln!("prefetch on: chunk k+1 loads while the kernel runs chunk k");
+        }
+        src = Box::new(PrefetchSource::new(src));
+    }
+    Ok(src)
+}

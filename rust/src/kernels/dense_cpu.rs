@@ -175,49 +175,6 @@ pub fn search_bmus_blocked(
     (bmus, dists)
 }
 
-/// Node-parallel accumulation — the historical 10-argument surface,
-/// running [`SweepMode::Auto`]. See [`accumulate_node_parallel_ext`]
-/// for the phases, the complexity bounds, and the bit-identity
-/// contract.
-#[deprecated(
-    since = "0.2.0",
-    note = "use accumulate_node_parallel_ext (or _with plus a StencilCache, as the \
-            kernels do — this wrapper rebuilds the stencil tables on every call)"
-)]
-#[allow(clippy::too_many_arguments)]
-pub fn accumulate_node_parallel<F>(
-    rows: usize,
-    nodes: usize,
-    dim: usize,
-    threads: usize,
-    grid: &Grid,
-    neighborhood: Neighborhood,
-    radius: f32,
-    scale: f32,
-    bmus: &[u32],
-    add_row: F,
-) -> (Vec<f32>, Vec<f32>)
-where
-    F: Fn(&mut [f32], usize, f32) + Sync,
-{
-    let (num, den, _) = accumulate_node_parallel_ext(
-        &AccumConfig {
-            rows,
-            nodes,
-            dim,
-            threads,
-            grid,
-            neighborhood,
-            radius,
-            scale,
-            mode: SweepMode::Auto,
-        },
-        bmus,
-        add_row,
-    );
-    (num, den)
-}
-
 /// Node-parallel accumulation in two phases (§Perf: the BMU-histogram
 /// formulation, windowed per the paper's §3.1 radius thresholding):
 ///

@@ -200,7 +200,12 @@ impl EpochAccum {
 /// once per epoch, then [`Self::epoch_accumulate`] per chunk, merging the
 /// partial accumulators with [`EpochAccum::merge`] and concatenating BMUs
 /// in chunk order.
-pub trait TrainingKernel {
+/// `Send` is a supertrait: sessions (and the serving daemon's hot maps,
+/// which hold one) move between threads with their kernel state inside.
+/// Every backend is plain host/device-handle data, so this costs
+/// nothing; a future backend with thread-affine state would need a
+/// `Send` wrapper anyway to work with the rank threads.
+pub trait TrainingKernel: Send {
     /// Human-readable kernel name for reports.
     fn name(&self) -> &'static str;
 

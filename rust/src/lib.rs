@@ -12,13 +12,18 @@
 //!   [`runtime`] executes through the PJRT CPU client (the paper's GPU
 //!   kernel, re-thought for the MXU — see DESIGN.md).
 //!
-//! Entry points: [`session::Som::builder`] for library use (one
-//! builder-driven facade over resident/streamed/cluster training,
-//! incremental epochs, inference, and checkpoint/resume), the `somoclu`
-//! binary for the paper's CLI, and `examples/` for end-to-end drivers.
-//! The pre-session free functions (`api::train`,
-//! `coordinator::train::train_stream`, `cluster::runner::train_cluster`,
-//! `train_cluster_stream`) remain as deprecated delegating shims.
+//! Entry points — the **single facade**: [`session::Som::builder`] for
+//! library use (one builder-driven construction path over
+//! resident/streamed/cluster training, incremental epochs, inference,
+//! and checkpoint/resume), the `somoclu` binary with its `train` /
+//! `serve` / `convert` / `info` subcommands for the paper's CLI, and
+//! [`serve`] for the long-lived checkpoint-serving daemon with its
+//! training job queue. The pre-session free-function entry points
+//! (`api::train`, `coordinator::train::{train, train_stream}`,
+//! `cluster::runner::{train_cluster, train_cluster_stream}`) are gone
+//! as of 0.2; every path constructs a [`session::SomSession`]. Errors
+//! crossing the public session/serve surface are typed
+//! [`error::SomError`] values with stable machine-readable codes.
 
 pub mod api;
 pub mod baseline;
@@ -26,9 +31,11 @@ pub mod cli;
 pub mod cluster;
 pub mod coordinator;
 pub mod data;
+pub mod error;
 pub mod io;
 pub mod kernels;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod som;
 pub mod sparse;

@@ -1,120 +1,193 @@
-//! `somoclu` — the command-line batch trainer (paper §4.1).
+//! `somoclu` — the command-line front end (paper §4.1), organized as
+//! subcommands:
 //!
-//! Single process: `somoclu [OPTIONS] INPUT OUTPUT_PREFIX`.
-//! Simulated cluster: add `--ranks N` (stands in for `mpirun -np N`).
-//! Real multi-process cluster: launch N processes, each with
-//! `--ranks N --rank K --peers HOST0:P0,...` (or, for two processes,
-//! `--listen ADDR` on one and `--connect ADDR` on the other); rank 0
-//! writes the outputs. Transcode to the binary fast path:
-//! `somoclu convert IN OUT`.
+//! - `somoclu train [OPTIONS] INPUT OUTPUT_PREFIX` — batch training.
+//!   Single process by default; `--ranks N` simulates a cluster
+//!   (stands in for `mpirun -np N`); `--rank K --peers ...` (or
+//!   `--listen`/`--connect`) runs one rank of a real multi-process
+//!   cluster, rank 0 writing the outputs. Long runs are interruptible:
+//!   `--checkpoint-every N` writes `OUTPUT_PREFIX.epoch<k>.somc` as
+//!   training progresses (`--keep-last M` caps how many survive), and
+//!   `--resume CKPT` finishes the run bit-identically to an
+//!   uninterrupted one.
+//! - `somoclu serve [OPTIONS] LISTEN_ADDR` — the checkpoint-serving
+//!   daemon ([`somoclu::serve`]): answers `bmu`/`project`/`quality`
+//!   requests over TCP or Unix sockets and runs a journaled training
+//!   job queue whose finished maps hot-swap into the serving slot.
+//! - `somoclu convert [OPTIONS] IN OUT` — transcode text inputs to the
+//!   binary container that streams with zero per-epoch parsing.
+//! - `somoclu info [OPTIONS] IN` — decode a container header (+ shard
+//!   windows with `--ranks N`).
 //!
-//! Every mode drives one [`somoclu::session::SomSession`]: binary
-//! container inputs (written by `convert`) are auto-detected by magic
-//! and always stream; `--prefetch` overlaps chunk I/O with kernel
-//! compute; `--ranks N --chunk-rows M` streams per-rank disjoint shards
-//! of one file. Long runs are interruptible: `--checkpoint-every N`
-//! writes `OUTPUT_PREFIX.epoch<k>.somc` as training progresses, and
-//! `--resume CKPT` picks any of those up and finishes the run
-//! bit-identically to an uninterrupted one.
+//! The historical flat invocation `somoclu [OPTIONS] INPUT
+//! OUTPUT_PREFIX` keeps working as an alias for `train`, printing a
+//! one-line deprecation notice to stderr.
 
 use std::path::PathBuf;
 
 use somoclu::cli;
 use somoclu::cluster::runner::{ClusterData, StreamInput};
 use somoclu::coordinator::config::IoMode;
-use somoclu::io::binary::{self, BinaryKind};
+use somoclu::error::SomError;
+use somoclu::io::binary;
 use somoclu::io::output::OutputWriter;
 use somoclu::io::{
-    read_dense, read_sparse, BinaryDenseFileSource, BinarySparseFileSource,
-    ChunkedDenseFileSource, ChunkedSparseFileSource, DataSource, InMemorySource,
-    MmapDenseSource, MmapSparseSource, PrefetchSource, SharedFd,
+    chunk_desc, open_stream_source, read_dense, read_sparse, ChunkedDenseFileSource,
+    ChunkedSparseFileSource, InMemorySource,
 };
 use somoclu::kernels::{DataShard, KernelType};
+use somoclu::serve::ServeOptions;
 use somoclu::session::{Som, SomSession};
 use somoclu::som::Codebook;
 
+const TOP_USAGE: &str = "\
+somoclu — massively parallel self-organizing maps
+
+Usage:
+  somoclu train [OPTIONS] INPUT_FILE OUTPUT_PREFIX
+  somoclu serve [OPTIONS] LISTEN_ADDR
+  somoclu convert [OPTIONS] INPUT_FILE OUTPUT_FILE
+  somoclu info [OPTIONS] INPUT_FILE
+
+Run `somoclu <subcommand> --help` for that subcommand's flags.
+
+The historical flat form `somoclu [OPTIONS] INPUT_FILE OUTPUT_PREFIX`
+still works as an alias for `train` (deprecated).
+";
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
-
-    // Subcommand: `somoclu convert [OPTIONS] INPUT OUTPUT`.
-    if args.first().map(String::as_str) == Some("convert") {
-        let spec = cli::convert_spec();
-        if args.iter().any(|a| a == "-h" || a == "--help") {
-            print!("{}", spec.usage("somoclu convert"));
-            return;
+    let code = match args.first().map(String::as_str) {
+        Some("train") => cmd_train(&args[1..], "somoclu train"),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("convert") => cmd_convert(&args[1..]),
+        Some("info") => cmd_info(&args[1..]),
+        Some("help") | Some("-h") | Some("--help") | None => {
+            print!("{TOP_USAGE}");
+            0
         }
-        let opts = match spec
-            .parse(args[1..].iter().cloned())
-            .and_then(|p| cli::parse_convert(&p))
-        {
-            Ok(o) => o,
-            Err(e) => {
-                eprintln!("error: {e}\n\n{}", spec.usage("somoclu convert"));
-                std::process::exit(2);
-            }
-        };
-        if let Err(e) = run_convert(opts) {
-            eprintln!("error: {e:#}");
-            std::process::exit(1);
-        }
-        return;
-    }
-
-    // Subcommand: `somoclu info [--ranks N] INPUT` — decode a container
-    // header + shard windows; exits nonzero on corrupt/truncated files.
-    if args.first().map(String::as_str) == Some("info") {
-        let spec = cli::info_spec();
-        if args.iter().any(|a| a == "-h" || a == "--help") {
-            print!("{}", spec.usage("somoclu info"));
-            return;
-        }
-        let opts = match spec
-            .parse(args[1..].iter().cloned())
-            .and_then(|p| cli::parse_info(&p))
-        {
-            Ok(o) => o,
-            Err(e) => {
-                eprintln!("error: {e}\n\n{}", spec.usage("somoclu info"));
-                std::process::exit(2);
-            }
-        };
-        match binary::info_report(&opts.input_file, opts.ranks) {
-            Ok(report) => print!("{report}"),
-            Err(e) => {
-                eprintln!("error: {e:#}");
-                std::process::exit(1);
-            }
-        }
-        return;
-    }
-
-    let spec = cli::arg_spec();
-    if args.iter().any(|a| a == "-h" || a == "--help") {
-        print!("{}", spec.usage("somoclu"));
-        return;
-    }
-    let parsed = match spec.parse(args) {
-        Ok(p) => p,
-        Err(e) => {
-            eprintln!("error: {e}\n\n{}", spec.usage("somoclu"));
-            std::process::exit(2);
+        _ => {
+            // Flat invocation: the pre-subcommand grammar, still the
+            // `train` grammar verbatim.
+            eprintln!(
+                "note: the flat `somoclu [OPTIONS] INPUT OUTPUT_PREFIX` form is \
+                 deprecated; use `somoclu train ...`"
+            );
+            cmd_train(&args, "somoclu")
         }
     };
-    let opts = match cli::parse_cli(&parsed) {
+    std::process::exit(code);
+}
+
+fn wants_help(args: &[String]) -> bool {
+    args.iter().any(|a| a == "-h" || a == "--help")
+}
+
+fn cmd_train(args: &[String], prog: &str) -> i32 {
+    let spec = cli::train_spec();
+    if wants_help(args) {
+        print!("{}", spec.usage(prog));
+        return 0;
+    }
+    let opts = match spec
+        .parse(args.iter().cloned())
+        .and_then(|p| cli::parse_cli(&p))
+    {
         Ok(o) => o,
         Err(e) => {
-            eprintln!("error: {e}");
-            std::process::exit(2);
+            eprintln!("error: {e}\n\n{}", spec.usage(prog));
+            return 2;
         }
     };
     if let Err(e) = run(opts) {
         eprintln!("error: {e:#}");
-        std::process::exit(1);
+        return 1;
+    }
+    0
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let spec = cli::serve_spec();
+    if wants_help(args) {
+        print!("{}", spec.usage("somoclu serve"));
+        return 0;
+    }
+    let opts = match spec
+        .parse(args.iter().cloned())
+        .and_then(|p| cli::parse_serve(&p))
+    {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", spec.usage("somoclu serve"));
+            return 2;
+        }
+    };
+    let serve_opts = ServeOptions {
+        addr: opts.addr,
+        checkpoint: opts.checkpoint.map(PathBuf::from),
+        state_dir: PathBuf::from(opts.state_dir),
+        threads: opts.threads,
+        handle_signals: true,
+        verbose: opts.verbose,
+    };
+    if let Err(e) = somoclu::serve::run(serve_opts) {
+        eprintln!("error: {e}");
+        return 1;
+    }
+    0
+}
+
+fn cmd_convert(args: &[String]) -> i32 {
+    let spec = cli::convert_spec();
+    if wants_help(args) {
+        print!("{}", spec.usage("somoclu convert"));
+        return 0;
+    }
+    let opts = match spec
+        .parse(args.iter().cloned())
+        .and_then(|p| cli::parse_convert(&p))
+    {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", spec.usage("somoclu convert"));
+            return 2;
+        }
+    };
+    if let Err(e) = run_convert(opts) {
+        eprintln!("error: {e:#}");
+        return 1;
+    }
+    0
+}
+
+fn cmd_info(args: &[String]) -> i32 {
+    let spec = cli::info_spec();
+    if wants_help(args) {
+        print!("{}", spec.usage("somoclu info"));
+        return 0;
+    }
+    let opts = match spec
+        .parse(args.iter().cloned())
+        .and_then(|p| cli::parse_info(&p))
+    {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", spec.usage("somoclu info"));
+            return 2;
+        }
+    };
+    match binary::info_report(&opts.input_file, opts.ranks) {
+        Ok(report) => {
+            print!("{report}");
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
     }
 }
 
-/// Transcode a text input into the binary container, streaming in
-/// `chunk_rows` windows so conversion memory stays bounded too.
 /// Do `a` and `b` name the same on-disk file? Inode identity on Unix
 /// (catches hard links, not just symlink/relative aliases), canonical
 /// path elsewhere. A nonexistent path matches nothing.
@@ -135,6 +208,8 @@ fn same_file(a: &str, b: &str) -> bool {
     }
 }
 
+/// Transcode a text input into the binary container, streaming in
+/// `chunk_rows` windows so conversion memory stays bounded too.
 fn run_convert(opts: cli::ConvertOptions) -> anyhow::Result<()> {
     // Refuse in-place conversion BEFORE File::create truncates the
     // input (a nonexistent output cannot alias an existing input).
@@ -172,122 +247,6 @@ fn run_convert(opts: cli::ConvertOptions) -> anyhow::Result<()> {
         );
     }
     Ok(())
-}
-
-/// Build the single-process streaming source for `input`: binary
-/// containers stream natively through the selected `--io` backend
-/// (buffered decode, zero-copy mmap views, or positioned pread); text
-/// files stream re-parsed (buffered only). `--prefetch` wraps any
-/// `Send` source in the double-buffered read-ahead adapter (mmap +
-/// prefetch was already rejected by `TrainConfig::validate`).
-fn open_stream_source(
-    input: &str,
-    kind: Option<BinaryKind>,
-    kernel: KernelType,
-    chunk_rows: usize,
-    prefetch: bool,
-    io: IoMode,
-) -> anyhow::Result<Box<dyn DataSource + Send>> {
-    let mut src: Box<dyn DataSource + Send> = match (kind, io) {
-        (Some(BinaryKind::Dense), IoMode::Mmap) => {
-            let s = MmapDenseSource::open(input, chunk_rows)?;
-            eprintln!(
-                "mapped dense binary input: {} rows x {} dims ({} zero-copy chunk views)",
-                s.rows(),
-                s.dim(),
-                chunk_desc(chunk_rows)
-            );
-            Box::new(s)
-        }
-        (Some(BinaryKind::Sparse), IoMode::Mmap) => {
-            let s = MmapSparseSource::open(input, chunk_rows)?;
-            eprintln!(
-                "mapped sparse binary input: {} rows x {} dims ({} zero-copy chunk views)",
-                s.rows(),
-                s.dim(),
-                chunk_desc(chunk_rows)
-            );
-            Box::new(s)
-        }
-        (Some(BinaryKind::Dense), IoMode::Pread) => {
-            let s = SharedFd::open(input)?.dense_shard(chunk_rows, 0, 1)?;
-            eprintln!(
-                "streaming dense binary input over one pread fd: {} rows x {} dims ({} chunks)",
-                s.rows(),
-                s.dim(),
-                chunk_desc(chunk_rows)
-            );
-            Box::new(s)
-        }
-        (Some(BinaryKind::Sparse), IoMode::Pread) => {
-            let s = SharedFd::open(input)?.sparse_shard(chunk_rows, 0, 1)?;
-            eprintln!(
-                "streaming sparse binary input over one pread fd: {} rows x {} dims ({} chunks)",
-                s.rows(),
-                s.dim(),
-                chunk_desc(chunk_rows)
-            );
-            Box::new(s)
-        }
-        (None, mode) if mode != IoMode::Buffered => {
-            anyhow::bail!(mode.text_input_error());
-        }
-        (Some(BinaryKind::Dense), _) => {
-            let s = BinaryDenseFileSource::open(input, chunk_rows)?;
-            eprintln!(
-                "streaming dense binary input: {} rows x {} dims ({} chunks)",
-                s.rows(),
-                s.dim(),
-                chunk_desc(chunk_rows)
-            );
-            Box::new(s)
-        }
-        (Some(BinaryKind::Sparse), _) => {
-            let s = BinarySparseFileSource::open(input, chunk_rows)?;
-            eprintln!(
-                "streaming sparse binary input: {} rows x {} dims ({} chunks)",
-                s.rows(),
-                s.dim(),
-                chunk_desc(chunk_rows)
-            );
-            Box::new(s)
-        }
-        (None, _) if kernel == KernelType::SparseCpu => {
-            let s = ChunkedSparseFileSource::open(input, 0, chunk_rows)?;
-            eprintln!(
-                "streaming sparse input: {} rows x {} dims ({} chunks; run \
-                 `somoclu convert --sparse` once to skip per-epoch parsing)",
-                s.rows(),
-                s.dim(),
-                chunk_desc(chunk_rows)
-            );
-            Box::new(s)
-        }
-        (None, _) => {
-            let s = ChunkedDenseFileSource::open(input, chunk_rows)?;
-            eprintln!(
-                "streaming dense input: {} rows x {} dims ({} chunks; run \
-                 `somoclu convert` once to skip per-epoch parsing)",
-                s.rows(),
-                s.dim(),
-                chunk_desc(chunk_rows)
-            );
-            Box::new(s)
-        }
-    };
-    if prefetch {
-        eprintln!("prefetch on: chunk k+1 loads while the kernel runs chunk k");
-        src = Box::new(PrefetchSource::new(src));
-    }
-    Ok(src)
-}
-
-fn chunk_desc(chunk_rows: usize) -> String {
-    if chunk_rows == 0 {
-        "whole-pass".to_string()
-    } else {
-        format!("{chunk_rows}-row")
-    }
 }
 
 /// Build the session this invocation drives: fresh from the flags, or
@@ -356,7 +315,7 @@ fn build_session(opts: &cli::CliOptions) -> anyhow::Result<SomSession> {
             if let Some(cb) = initial {
                 builder = builder.initial_codebook(cb);
             }
-            builder.build()
+            Ok(builder.build()?)
         }
     }
 }
@@ -393,6 +352,13 @@ fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
                 "checkpointing every {} epochs to {}.epoch<k>.somc",
                 opts.checkpoint_every, opts.output_prefix
             );
+            if opts.keep_last > 0 {
+                session.set_checkpoint_keep_last(opts.keep_last);
+                eprintln!(
+                    "retaining only the newest {} checkpoints (--keep-last)",
+                    opts.keep_last
+                );
+            }
         } else {
             eprintln!("--checkpoint-every ignored on this rank (rank 0 owns checkpoints)");
         }
@@ -403,7 +369,7 @@ fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
     // not the raw flags. Fail config conflicts (e.g. --io mmap with
     // --prefetch) before any file is opened or mapped.
     let cfg = session.config().clone();
-    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    cfg.validate()?;
 
     // Binary containers (written by `somoclu convert`) are detected by
     // magic and always stream — there is no reason to materialize them.
@@ -420,7 +386,7 @@ fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
 
     // Interim snapshots (paper -s) for the single-process paths.
     let mut on_epoch =
-        |s: &SomSession| -> anyhow::Result<()> { s.write_epoch_snapshot(&writer) };
+        |s: &SomSession| -> Result<(), SomError> { s.write_epoch_snapshot(&writer) };
 
     let t0 = std::time::Instant::now();
     let result = if let Some(mp) = &opts.multiproc {
@@ -486,8 +452,9 @@ fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
             cfg.chunk_rows,
             cfg.prefetch,
             cfg.io_mode,
+            false,
         )?;
-        session.fit_source_with(&mut src, &mut on_epoch)?
+        session.fit_source_with(&mut *src, &mut on_epoch)?
     } else if cfg.kernel == KernelType::SparseCpu {
         let m = read_sparse(&opts.input_file, 0)?;
         eprintln!(

@@ -1,0 +1,626 @@
+//! The `somoclu serve` daemon: loads a `SOMC` checkpoint, answers
+//! `bmu`/`project`/`quality`/`status` requests from concurrent clients,
+//! and runs a training job queue whose finished maps hot-swap into the
+//! serving slot.
+//!
+//! Concurrency model: the served map lives behind
+//! `RwLock<Option<Arc<ServedMap>>>`. Every request clones the `Arc` and
+//! answers from that snapshot, so a publish (an atomic slot swap) never
+//! stalls or torments an in-flight request — old readers keep the old
+//! map, new readers see the new one, and the old map is freed when the
+//! last in-flight request drops it. `bmu` is lock-free over a cloned
+//! codebook via [`linear_bmu`] (the *same* arithmetic as
+//! [`SomSession::bmu`], so served answers are bit-identical to offline
+//! ones); `project`/`quality` go through the map's own `SomSession`
+//! under a mutex — the exact offline code path, serialized per map.
+//!
+//! Shutdown: SIGTERM/SIGINT (when [`ServeOptions::handle_signals`]) or
+//! a [`Request::Shutdown`] frame sets one flag. The acceptor stops
+//! taking connections, handlers finish their in-flight request and
+//! close, watchers get a final `job`-coded error frame, the worker
+//! checkpoints and re-queues the in-flight job (see
+//! [`super::jobs`]), and the journal makes the next start resume where
+//! this one stopped.
+
+use std::collections::HashSet;
+use std::io::{Read, Write};
+use std::net::TcpListener;
+#[cfg(unix)]
+use std::os::unix::net::UnixListener;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::api::DataInput;
+use crate::error::SomError;
+use crate::serve::jobs::JobQueue;
+use crate::serve::protocol::{
+    check_hello, hello_bytes, read_frame_idle, write_frame, Conn, FrameEvent, Request,
+    Response, StatusInfo,
+};
+use crate::session::{Som, SomSession};
+use crate::som::quality::{linear_bmu, quantization_error, topographic_error};
+use crate::som::{Codebook, Grid};
+
+/// How the daemon listens, what it serves first, and where its state
+/// lives.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Listen address: `host:port` (TCP; port 0 picks a free port) or
+    /// `unix:PATH`.
+    pub addr: String,
+    /// Checkpoint to serve from the start; `None` starts empty (reads
+    /// fail with a `state` error until a job publishes a map).
+    pub checkpoint: Option<PathBuf>,
+    /// Queue journal + job checkpoints live here (created if missing).
+    pub state_dir: PathBuf,
+    /// Worker threads for training jobs and quality computations
+    /// (0 = auto, as in training).
+    pub threads: usize,
+    /// Install SIGTERM/SIGINT handlers that trigger a graceful drain.
+    /// The CLI sets this; embedded/test daemons drain via
+    /// [`DaemonHandle::stop`] or a shutdown request instead.
+    pub handle_signals: bool,
+    /// Log connections and publishes to stderr.
+    pub verbose: bool,
+}
+
+impl ServeOptions {
+    /// Sensible test/embedding defaults: loopback TCP on a free port,
+    /// no initial checkpoint, no signal handlers.
+    pub fn new(state_dir: impl Into<PathBuf>) -> ServeOptions {
+        ServeOptions {
+            addr: "127.0.0.1:0".to_string(),
+            checkpoint: None,
+            state_dir: state_dir.into(),
+            threads: 0,
+            handle_signals: false,
+            verbose: false,
+        }
+    }
+}
+
+/// One immutable served map: everything a request needs, snapshotted at
+/// publish time.
+struct ServedMap {
+    /// Checkpoint this map came from (pinned against GC while served).
+    path: PathBuf,
+    /// Cloned codebook for lock-free `bmu` answers.
+    codebook: Codebook,
+    grid: Grid,
+    epoch: u64,
+    /// The offline code path for `project`/`quality` — same bits as a
+    /// local `SomSession` over the same checkpoint, by construction.
+    session: Mutex<SomSession>,
+}
+
+impl ServedMap {
+    fn load(path: &Path, threads: usize) -> Result<ServedMap, SomError> {
+        let mut session = Som::resume(path)?;
+        session.set_threads(threads);
+        let codebook = session
+            .codebook()
+            .ok_or_else(|| SomError::checkpoint("checkpoint has no codebook"))?
+            .clone();
+        let grid = session.grid().clone();
+        let epoch = session.epoch() as u64;
+        Ok(ServedMap {
+            path: path.to_path_buf(),
+            codebook,
+            grid,
+            epoch,
+            session: Mutex::new(session),
+        })
+    }
+}
+
+/// State shared by the acceptor, connection handlers, and the worker.
+struct Shared {
+    served: RwLock<Option<Arc<ServedMap>>>,
+    /// Checkpoint paths job GC must never delete (the served one).
+    pins: Arc<Mutex<HashSet<PathBuf>>>,
+    queue: JobQueue,
+    shutdown: AtomicBool,
+    requests: AtomicU64,
+    threads: usize,
+    verbose: bool,
+}
+
+impl Shared {
+    fn served(&self) -> Result<Arc<ServedMap>, SomError> {
+        self.served
+            .read()
+            .map_err(|_| SomError::internal("served-map slot poisoned"))?
+            .clone()
+            .ok_or_else(|| {
+                SomError::state(
+                    "no map is being served yet (start with --checkpoint or submit a job)",
+                )
+            })
+    }
+
+    /// Load `path` and hot-swap it into the serving slot. The new path
+    /// is pinned before the swap and the old one unpinned after, so at
+    /// no instant is the served checkpoint GC-eligible.
+    fn publish(&self, path: &Path) -> Result<(), SomError> {
+        let map = Arc::new(ServedMap::load(path, self.threads)?);
+        let mut pins = self
+            .pins
+            .lock()
+            .map_err(|_| SomError::internal("pin set poisoned"))?;
+        pins.insert(path.to_path_buf());
+        let old = self
+            .served
+            .write()
+            .map_err(|_| SomError::internal("served-map slot poisoned"))?
+            .replace(map);
+        if let Some(old) = old {
+            if old.path != path {
+                pins.remove(&old.path);
+            }
+        }
+        if self.verbose {
+            eprintln!("serve: now serving {}", path.display());
+        }
+        Ok(())
+    }
+
+    fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.queue.notify_all();
+    }
+
+    fn draining(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Listener
+// ---------------------------------------------------------------------
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener, PathBuf),
+}
+
+impl Listener {
+    /// Bind nonblocking (the accept loop polls so it can observe
+    /// shutdown). Returns the resolved address — for TCP `:0` that is
+    /// the actual port, which tests need.
+    fn bind(addr: &str) -> Result<(Listener, String), SomError> {
+        if let Some(path) = addr.strip_prefix("unix:") {
+            #[cfg(unix)]
+            {
+                // A stale socket file from an unclean death blocks
+                // rebinding; connect() on it would fail anyway.
+                let _ = std::fs::remove_file(path);
+                let l = UnixListener::bind(path)?;
+                l.set_nonblocking(true)?;
+                return Ok((Listener::Unix(l, PathBuf::from(path)), addr.to_string()));
+            }
+            #[cfg(not(unix))]
+            {
+                let _ = path;
+                return Err(SomError::config(
+                    "unix: addresses are not supported on this platform; use host:port",
+                ));
+            }
+        }
+        let l = TcpListener::bind(addr)?;
+        l.set_nonblocking(true)?;
+        let resolved = l
+            .local_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| addr.to_string());
+        Ok((Listener::Tcp(l), resolved))
+    }
+
+    fn accept(&self) -> std::io::Result<Conn> {
+        match self {
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nonblocking(false)?;
+                Ok(Conn::Tcp(s))
+            }
+            #[cfg(unix)]
+            Listener::Unix(l, _) => {
+                let (s, _) = l.accept()?;
+                s.set_nonblocking(false)?;
+                Ok(Conn::Unix(s))
+            }
+        }
+    }
+
+    fn cleanup(&self) {
+        #[cfg(unix)]
+        if let Listener::Unix(_, path) = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Signals
+// ---------------------------------------------------------------------
+
+/// Set from the signal handler; the accept loop folds it into the
+/// shared shutdown flag. Process-global because signal dispositions
+/// are.
+static SIGNAL_SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+fn install_signal_handlers() {
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    extern "C" fn on_signal(_sig: i32) {
+        SIGNAL_SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_signal as usize);
+        signal(SIGINT, on_signal as usize);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_signal_handlers() {}
+
+// ---------------------------------------------------------------------
+// Daemon
+// ---------------------------------------------------------------------
+
+/// A running daemon: the acceptor, its connection handlers, and the job
+/// worker. Obtained from [`DaemonHandle::spawn`]; the CLI's blocking
+/// entry is [`run`].
+pub struct DaemonHandle {
+    addr: String,
+    shared: Arc<Shared>,
+    acceptor: JoinHandle<()>,
+    worker: JoinHandle<()>,
+}
+
+impl DaemonHandle {
+    /// Bind, load the initial checkpoint (if any), replay the job
+    /// journal, and start the acceptor + worker threads. Binding and
+    /// loading happen synchronously so a bad address or checkpoint
+    /// fails here, and [`addr`](Self::addr) is immediately connectable.
+    pub fn spawn(opts: ServeOptions) -> Result<DaemonHandle, SomError> {
+        let (listener, addr) = Listener::bind(&opts.addr)?;
+        let queue = JobQueue::open(&opts.state_dir)?;
+        let shared = Arc::new(Shared {
+            served: RwLock::new(None),
+            pins: Arc::new(Mutex::new(HashSet::new())),
+            queue,
+            shutdown: AtomicBool::new(false),
+            requests: AtomicU64::new(0),
+            threads: opts.threads,
+            verbose: opts.verbose,
+        });
+        if let Some(ck) = &opts.checkpoint {
+            shared.publish(ck)?;
+        }
+        if opts.handle_signals {
+            install_signal_handlers();
+        }
+        let acceptor = {
+            let shared = Arc::clone(&shared);
+            let watch_signals = opts.handle_signals;
+            std::thread::spawn(move || accept_loop(shared, listener, watch_signals))
+        };
+        let worker = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || {
+                let publish = |p: &Path| shared.publish(p);
+                shared.queue.run_worker(&shared.shutdown, &shared.pins, &publish);
+            })
+        };
+        Ok(DaemonHandle {
+            addr,
+            shared,
+            acceptor,
+            worker,
+        })
+    }
+
+    /// The resolved listen address (`host:port` with the real port even
+    /// when bound to `:0`, or the `unix:PATH` given).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Request a graceful drain and wait for it to finish: in-flight
+    /// requests complete, the running job checkpoints and re-queues,
+    /// the journal is flushed.
+    pub fn stop(self) -> Result<(), SomError> {
+        self.shared.request_shutdown();
+        self.join()
+    }
+
+    /// Wait for the daemon to exit on its own (a shutdown request or a
+    /// handled signal).
+    pub fn wait(self) -> Result<(), SomError> {
+        self.join()
+    }
+
+    fn join(self) -> Result<(), SomError> {
+        let mut failed = false;
+        failed |= self.acceptor.join().is_err();
+        failed |= self.worker.join().is_err();
+        if failed {
+            return Err(SomError::internal("a daemon thread panicked"));
+        }
+        Ok(())
+    }
+}
+
+/// Run a daemon to completion — `somoclu serve`'s blocking body.
+/// Returns when a shutdown request or handled signal finishes
+/// draining.
+pub fn run(opts: ServeOptions) -> Result<(), SomError> {
+    let verbose = opts.verbose;
+    let handle = DaemonHandle::spawn(opts)?;
+    if verbose {
+        eprintln!("serve: listening on {}", handle.addr());
+    }
+    handle.wait()
+}
+
+fn accept_loop(shared: Arc<Shared>, listener: Listener, watch_signals: bool) {
+    let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+    loop {
+        if watch_signals && SIGNAL_SHUTDOWN.load(Ordering::SeqCst) {
+            shared.request_shutdown();
+        }
+        if shared.draining() {
+            break;
+        }
+        match listener.accept() {
+            Ok(conn) => {
+                handlers.retain(|h| !h.is_finished());
+                let shared = Arc::clone(&shared);
+                handlers.push(std::thread::spawn(move || handle_conn(&shared, conn)));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            Err(e) => {
+                if shared.verbose {
+                    eprintln!("serve: accept error: {e}");
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+    listener.cleanup();
+    // Drain: handlers observe the shutdown flag at their next idle poll
+    // (in-flight requests finish first).
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Connection handling
+// ---------------------------------------------------------------------
+
+fn send(conn: &mut Conn, rsp: &Response) -> bool {
+    write_frame(conn, &rsp.encode()).is_ok()
+}
+
+fn error_response(e: &SomError) -> Response {
+    Response::Error {
+        code: e.code().to_string(),
+        message: e.message().to_string(),
+    }
+}
+
+/// One connection's lifetime: hello exchange, then a request/response
+/// loop until EOF, a protocol violation, or drain.
+fn handle_conn(shared: &Shared, mut conn: Conn) {
+    // Hello phase: generous timeout, then reject-before-echo so a
+    // client on the wrong protocol or version learns why.
+    if conn.set_read_timeout(Some(Duration::from_secs(5))).is_err() {
+        return;
+    }
+    let mut hello = [0u8; 8];
+    if conn.read_exact(&mut hello).is_err() {
+        return;
+    }
+    if let Err(e) = check_hello(&hello) {
+        let _ = send(&mut conn, &error_response(&e));
+        return;
+    }
+    if conn.write_all(&hello_bytes()).is_err() || conn.flush().is_err() {
+        return;
+    }
+    // Request loop: short read timeouts so an idle connection observes
+    // drain promptly.
+    if conn
+        .set_read_timeout(Some(Duration::from_millis(200)))
+        .is_err()
+    {
+        return;
+    }
+    loop {
+        let payload = match read_frame_idle(&mut conn) {
+            Ok(FrameEvent::Frame(p)) => p,
+            Ok(FrameEvent::Eof) => return,
+            Ok(FrameEvent::Idle) => {
+                if shared.draining() {
+                    return;
+                }
+                continue;
+            }
+            Err(_) => return,
+        };
+        let req = match Request::decode(&payload) {
+            Ok(r) => r,
+            Err(e) => {
+                // Malformed frame: typed reject, then close — the
+                // stream can no longer be trusted to be at a frame
+                // boundary.
+                let _ = send(&mut conn, &error_response(&e));
+                return;
+            }
+        };
+        shared.requests.fetch_add(1, Ordering::Relaxed);
+        match req {
+            Request::Shutdown => {
+                shared.request_shutdown();
+                let _ = send(&mut conn, &Response::Ok);
+                return;
+            }
+            Request::Watch { job } => {
+                if !stream_job_events(shared, &mut conn, job) {
+                    return;
+                }
+            }
+            other => {
+                let rsp = answer(shared, other).unwrap_or_else(|e| error_response(&e));
+                if !send(&mut conn, &rsp) {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Answer one non-streaming request from the current map snapshot.
+fn answer(shared: &Shared, req: Request) -> Result<Response, SomError> {
+    match req {
+        Request::Bmu { vector } => {
+            let map = shared.served()?;
+            if vector.len() != map.codebook.dim {
+                return Err(SomError::data(format!(
+                    "query vector has dim {}, served map has dim {}",
+                    vector.len(),
+                    map.codebook.dim
+                )));
+            }
+            let (node, distance) = linear_bmu(&map.codebook, &vector);
+            Ok(Response::Bmu {
+                node: node as u64,
+                distance,
+            })
+        }
+        Request::Project { dim, data } => {
+            let map = shared.served()?;
+            let bmus = project_batch(&map, dim as usize, &data)?;
+            Ok(Response::Project { bmus })
+        }
+        Request::Quality { dim, data } => {
+            let map = shared.served()?;
+            let dim = dim as usize;
+            let bmus = project_batch(&map, dim, &data)?;
+            let bmus: Vec<usize> = bmus.iter().map(|&b| b as usize).collect();
+            let qe = quantization_error(&data, dim, &map.codebook, &bmus);
+            let te =
+                topographic_error(&data, dim, &map.grid, &map.codebook, shared.threads);
+            Ok(Response::Quality { qe, te })
+        }
+        Request::Status => {
+            let (queued_jobs, active_job) = shared.queue.counts();
+            let served = shared
+                .served
+                .read()
+                .map_err(|_| SomError::internal("served-map slot poisoned"))?
+                .clone();
+            let info = match served {
+                Some(m) => StatusInfo {
+                    checkpoint: m.path.display().to_string(),
+                    epoch: m.epoch,
+                    rows: m.grid.rows as u32,
+                    cols: m.grid.cols as u32,
+                    dim: m.codebook.dim as u32,
+                    queued_jobs,
+                    active_job,
+                    requests_served: shared.requests.load(Ordering::Relaxed),
+                },
+                None => StatusInfo {
+                    checkpoint: String::new(),
+                    epoch: 0,
+                    rows: 0,
+                    cols: 0,
+                    dim: 0,
+                    queued_jobs,
+                    active_job,
+                    requests_served: shared.requests.load(Ordering::Relaxed),
+                },
+            };
+            Ok(Response::Status(info))
+        }
+        Request::Submit { argv } => Ok(Response::Submitted {
+            job: shared.queue.submit(argv)?,
+        }),
+        // Handled by the caller.
+        Request::Watch { .. } | Request::Shutdown => {
+            Err(SomError::internal("streaming request reached answer()"))
+        }
+    }
+}
+
+/// `project` via the map's own session — the offline code path.
+fn project_batch(map: &ServedMap, dim: usize, data: &[f32]) -> Result<Vec<u32>, SomError> {
+    if dim == 0 || data.len() % dim != 0 {
+        return Err(SomError::data(format!(
+            "batch of {} floats is not a whole number of dim-{dim} rows",
+            data.len()
+        )));
+    }
+    if dim != map.codebook.dim {
+        return Err(SomError::data(format!(
+            "batch has dim {dim}, served map has dim {}",
+            map.codebook.dim
+        )));
+    }
+    let mut session = map
+        .session
+        .lock()
+        .map_err(|_| SomError::internal("served session poisoned"))?;
+    session.project(DataInput::BorrowedF32 { data, dim })
+}
+
+/// Stream one job's events until its terminal event. Returns whether
+/// the connection is still usable for further requests.
+fn stream_job_events(shared: &Shared, conn: &mut Conn, job: u64) -> bool {
+    let mut cursor = 0usize;
+    loop {
+        let (events, done) = match shared.queue.events_since(job, cursor) {
+            Some(x) => x,
+            None => {
+                return send(
+                    conn,
+                    &error_response(&SomError::job(format!("no such job: {job}"))),
+                );
+            }
+        };
+        for event in events {
+            cursor += 1;
+            if !send(conn, &Response::Event { job, event }) {
+                return false;
+            }
+        }
+        // Terminal events are pushed before the status flips, so
+        // `done` implies the terminal event was in `events` (or an
+        // earlier batch): everything is sent.
+        if done {
+            return true;
+        }
+        if shared.draining() {
+            let _ = send(
+                conn,
+                &error_response(&SomError::job(
+                    "daemon draining; the job will resume on the next start",
+                )),
+            );
+            return false;
+        }
+        shared.queue.wait_for_event(Duration::from_millis(200));
+    }
+}

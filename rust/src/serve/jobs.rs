@@ -1,0 +1,678 @@
+//! The daemon's training job queue: submitted `somoclu train` argument
+//! vectors run one at a time on a worker thread, stream progress
+//! events to watchers, checkpoint into the daemon's state directory,
+//! and publish their finished codebook to the hot serving slot.
+//!
+//! Durability: the queue journals itself to `<state_dir>/queue.json` on
+//! every transition (submit, start, finish, fail, drain). On restart
+//! the journal is replayed — finished jobs keep their terminal status
+//! (so late `watch` requests still resolve), queued jobs re-enter the
+//! queue, and a job that was *running* when the daemon died re-enters
+//! the queue with `--resume` pointing at its newest cadence checkpoint,
+//! so completed epochs are never retrained (resume is bit-exact; see
+//! [`crate::session`]).
+//!
+//! Draining: when shutdown is requested the per-epoch observer returns
+//! a typed error, aborting the fit after the epoch in flight; the job
+//! re-queues from its newest checkpoint exactly like a crash would, and
+//! the journal records that. No partial epoch is ever published.
+
+use std::collections::{BTreeMap, HashSet, VecDeque};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::error::SomError;
+use crate::io::binary;
+use crate::io::output::OutputWriter;
+use crate::io::{read_dense, read_sparse, InMemorySource};
+use crate::kernels::{DataShard, KernelType};
+use crate::serve::protocol::JobEvent;
+use crate::session::{checkpoint_path, Som, SomSession};
+use crate::som::Codebook;
+use crate::util::json::Json;
+
+/// Lifecycle of one submitted job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    /// Waiting in the queue.
+    Queued,
+    /// Training on the worker thread.
+    Running,
+    /// Finished; its checkpoint is (or was) the served map.
+    Done,
+    /// Failed with a typed error (recorded as the terminal event).
+    Failed,
+}
+
+impl JobStatus {
+    fn as_str(self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Running => "running",
+            JobStatus::Done => "done",
+            JobStatus::Failed => "failed",
+        }
+    }
+
+    fn from_str(s: &str) -> Option<JobStatus> {
+        Some(match s {
+            "queued" => JobStatus::Queued,
+            "running" => JobStatus::Running,
+            "done" => JobStatus::Done,
+            "failed" => JobStatus::Failed,
+            _ => return None,
+        })
+    }
+}
+
+/// One job's full record (in-memory; the journal persists everything
+/// except the event history).
+#[derive(Clone, Debug)]
+struct JobRecord {
+    argv: Vec<String>,
+    status: JobStatus,
+    events: Vec<JobEvent>,
+    /// Newest cadence checkpoint — the resume point after a drain or
+    /// crash, and the publish source after success.
+    last_checkpoint: Option<PathBuf>,
+}
+
+struct QueueState {
+    next_id: u64,
+    pending: VecDeque<u64>,
+    active: Option<u64>,
+    jobs: BTreeMap<u64, JobRecord>,
+}
+
+/// The training job queue. Shared between the daemon's connection
+/// handlers (submit/watch/status) and the single worker thread
+/// ([`run_worker`](Self::run_worker)).
+pub struct JobQueue {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+    state_dir: PathBuf,
+}
+
+impl JobQueue {
+    /// Open (or create) the queue rooted at `state_dir`, replaying
+    /// `queue.json` if present.
+    pub fn open(state_dir: &Path) -> Result<JobQueue, SomError> {
+        std::fs::create_dir_all(state_dir)?;
+        let q = JobQueue {
+            state: Mutex::new(QueueState {
+                next_id: 1,
+                pending: VecDeque::new(),
+                active: None,
+                jobs: BTreeMap::new(),
+            }),
+            cv: Condvar::new(),
+            state_dir: state_dir.to_path_buf(),
+        };
+        q.replay_journal()?;
+        Ok(q)
+    }
+
+    fn journal_path(&self) -> PathBuf {
+        self.state_dir.join("queue.json")
+    }
+
+    fn replay_journal(&self) -> Result<(), SomError> {
+        let path = self.journal_path();
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
+            Err(e) => return Err(e.into()),
+        };
+        let doc = Json::parse(&text).map_err(|e| {
+            SomError::job(format!("{}: corrupt queue journal: {e:?}", path.display()))
+        })?;
+        let bad = || SomError::job(format!("{}: corrupt queue journal", path.display()));
+        let mut st = self.state.lock().expect("queue lock");
+        st.next_id = doc.get("next_id").and_then(Json::as_usize).ok_or_else(bad)? as u64;
+        for j in doc.get("jobs").and_then(Json::as_arr).ok_or_else(bad)? {
+            let id = j.get("id").and_then(Json::as_usize).ok_or_else(bad)? as u64;
+            let status = j
+                .get("status")
+                .and_then(Json::as_str)
+                .and_then(JobStatus::from_str)
+                .ok_or_else(bad)?;
+            let argv: Vec<String> = j
+                .get("argv")
+                .and_then(Json::as_arr)
+                .ok_or_else(bad)?
+                .iter()
+                .map(|a| a.as_str().map(str::to_string).ok_or_else(bad))
+                .collect::<Result<_, _>>()?;
+            let last_checkpoint = j
+                .get("checkpoint")
+                .and_then(Json::as_str)
+                .map(PathBuf::from)
+                // A journaled checkpoint that no longer exists (GC'd by a
+                // later run, manual delete) cannot be a resume point.
+                .filter(|p| p.exists());
+            // A job that was mid-flight when the daemon died re-queues
+            // and resumes from its newest surviving checkpoint.
+            let status = match status {
+                JobStatus::Running => JobStatus::Queued,
+                s => s,
+            };
+            if status == JobStatus::Queued {
+                st.pending.push_back(id);
+            }
+            // The journal does not persist event histories; re-seed the
+            // terminal event for finished jobs so a late `watch` still
+            // resolves instead of hanging.
+            let events = match status {
+                JobStatus::Done => vec![JobEvent::Done {
+                    checkpoint: last_checkpoint
+                        .as_ref()
+                        .map(|p| p.display().to_string())
+                        .unwrap_or_default(),
+                }],
+                JobStatus::Failed => vec![JobEvent::Failed {
+                    code: "job".to_string(),
+                    message: "job failed before a daemon restart (details not journaled)"
+                        .to_string(),
+                }],
+                _ => Vec::new(),
+            };
+            st.jobs.insert(
+                id,
+                JobRecord {
+                    argv,
+                    status,
+                    events,
+                    last_checkpoint,
+                },
+            );
+        }
+        Ok(())
+    }
+
+    /// Persist the queue (atomic `.tmp` + rename, like checkpoints).
+    /// Called with the lock held by every mutator.
+    fn write_journal(&self, st: &QueueState) -> Result<(), SomError> {
+        let mut out = String::from("{");
+        out.push_str(&format!("\"next_id\": {}, \"jobs\": [", st.next_id));
+        let mut first = true;
+        for (id, rec) in &st.jobs {
+            if !first {
+                out.push_str(", ");
+            }
+            first = false;
+            out.push_str(&format!(
+                "{{\"id\": {id}, \"status\": {}, \"argv\": [",
+                json_str(rec.status.as_str())
+            ));
+            for (i, a) in rec.argv.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(", ");
+                }
+                out.push_str(&json_str(a));
+            }
+            out.push(']');
+            if let Some(ck) = &rec.last_checkpoint {
+                out.push_str(&format!(
+                    ", \"checkpoint\": {}",
+                    json_str(&ck.display().to_string())
+                ));
+            }
+            out.push('}');
+        }
+        out.push_str("]}");
+        let path = self.journal_path();
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, out)?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(())
+    }
+
+    /// Validate and enqueue a training job. The argv is parsed with the
+    /// `train` subcommand's spec *now*, so a malformed submission fails
+    /// at submit time with [`SomError::Job`], not hours later on the
+    /// worker.
+    pub fn submit(&self, argv: Vec<String>) -> Result<u64, SomError> {
+        let opts = parse_job_argv(&argv)?;
+        if opts.multiproc.is_some() || opts.config.ranks > 1 {
+            return Err(SomError::job(
+                "serve jobs are single-process; drop --ranks/--rank/--peers",
+            ));
+        }
+        let mut st = self.state.lock().expect("queue lock");
+        let id = st.next_id;
+        st.next_id += 1;
+        st.jobs.insert(
+            id,
+            JobRecord {
+                argv,
+                status: JobStatus::Queued,
+                events: Vec::new(),
+                last_checkpoint: None,
+            },
+        );
+        st.pending.push_back(id);
+        self.write_journal(&st)?;
+        drop(st);
+        self.cv.notify_all();
+        Ok(id)
+    }
+
+    /// `(queued, active_job_or_0)` for status reports.
+    pub fn counts(&self) -> (u32, u64) {
+        let st = self.state.lock().expect("queue lock");
+        (st.pending.len() as u32, st.active.unwrap_or(0))
+    }
+
+    /// Events of `job` from `cursor` on, plus whether the job is
+    /// terminal. `None` = unknown job id.
+    pub fn events_since(&self, job: u64, cursor: usize) -> Option<(Vec<JobEvent>, bool)> {
+        let st = self.state.lock().expect("queue lock");
+        let rec = st.jobs.get(&job)?;
+        let evs = rec.events.get(cursor..).unwrap_or(&[]).to_vec();
+        let done = matches!(rec.status, JobStatus::Done | JobStatus::Failed);
+        Some((evs, done))
+    }
+
+    /// Block (bounded by `timeout`) until `job` may have new events.
+    pub fn wait_for_event(&self, timeout: Duration) {
+        let st = self.state.lock().expect("queue lock");
+        let _ = self.cv.wait_timeout(st, timeout);
+    }
+
+    /// Wake every waiter (watchers and the worker); the daemon calls
+    /// this when shutdown is requested.
+    pub fn notify_all(&self) {
+        self.cv.notify_all();
+    }
+
+    fn push_event(&self, job: u64, ev: JobEvent) {
+        let mut st = self.state.lock().expect("queue lock");
+        if let Some(rec) = st.jobs.get_mut(&job) {
+            rec.events.push(ev);
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    fn set_last_checkpoint(&self, job: u64, path: PathBuf) {
+        let mut st = self.state.lock().expect("queue lock");
+        if let Some(rec) = st.jobs.get_mut(&job) {
+            rec.last_checkpoint = Some(path);
+        }
+        let _ = self.write_journal(&st);
+    }
+
+    fn set_status(&self, job: u64, status: JobStatus) {
+        let mut st = self.state.lock().expect("queue lock");
+        match status {
+            JobStatus::Running => st.active = Some(job),
+            _ if st.active == Some(job) => st.active = None,
+            _ => {}
+        }
+        if let Some(rec) = st.jobs.get_mut(&job) {
+            rec.status = status;
+        }
+        let _ = self.write_journal(&st);
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Pop the next queued job, blocking until one arrives or
+    /// `shutdown` is set. Returns `(id, argv, resume_from)`.
+    fn next_job(&self, shutdown: &AtomicBool) -> Option<(u64, Vec<String>, Option<PathBuf>)> {
+        let mut st = self.state.lock().expect("queue lock");
+        loop {
+            if shutdown.load(Ordering::SeqCst) {
+                return None;
+            }
+            if let Some(id) = st.pending.pop_front() {
+                let rec = st.jobs.get(&id).expect("pending job exists");
+                return Some((id, rec.argv.clone(), rec.last_checkpoint.clone()));
+            }
+            let (guard, _) = self
+                .cv
+                .wait_timeout(st, Duration::from_millis(200))
+                .expect("queue lock");
+            st = guard;
+        }
+    }
+
+    /// The worker loop: run queued jobs until `shutdown`. `pins` is the
+    /// daemon's GC-protection set (the served checkpoint lives in it);
+    /// `publish` swaps a finished job's checkpoint into the hot slot.
+    ///
+    /// Runs on its own thread; returns when shutdown is observed.
+    pub fn run_worker(
+        &self,
+        shutdown: &AtomicBool,
+        pins: &Arc<Mutex<HashSet<PathBuf>>>,
+        publish: &(dyn Fn(&Path) -> Result<(), SomError> + Sync),
+    ) {
+        while let Some((id, argv, resume_from)) = self.next_job(shutdown) {
+            self.set_status(id, JobStatus::Running);
+            match self.run_job(id, &argv, resume_from, shutdown, pins) {
+                Ok(final_ckpt) => {
+                    if let Err(e) = publish(&final_ckpt) {
+                        self.push_event(
+                            id,
+                            JobEvent::Failed {
+                                code: e.code().to_string(),
+                                message: format!("publish failed: {e}"),
+                            },
+                        );
+                        self.set_status(id, JobStatus::Failed);
+                        continue;
+                    }
+                    self.set_last_checkpoint(id, final_ckpt.clone());
+                    self.push_event(
+                        id,
+                        JobEvent::Done {
+                            checkpoint: final_ckpt.display().to_string(),
+                        },
+                    );
+                    self.set_status(id, JobStatus::Done);
+                }
+                Err(e) if e == drain_error() => {
+                    // Shutdown mid-job: back to the queue; the journal
+                    // records the resume checkpoint for the next start.
+                    self.requeue_front(id);
+                }
+                Err(e) => {
+                    self.push_event(
+                        id,
+                        JobEvent::Failed {
+                            code: e.code().to_string(),
+                            message: e.message().to_string(),
+                        },
+                    );
+                    self.set_status(id, JobStatus::Failed);
+                }
+            }
+        }
+    }
+
+    fn requeue_front(&self, id: u64) {
+        let mut st = self.state.lock().expect("queue lock");
+        if st.active == Some(id) {
+            st.active = None;
+        }
+        if let Some(rec) = st.jobs.get_mut(&id) {
+            rec.status = JobStatus::Queued;
+        }
+        st.pending.push_front(id);
+        let _ = self.write_journal(&st);
+    }
+
+    /// Train one job to completion. Returns the final checkpoint path
+    /// (what the daemon serves next).
+    fn run_job(
+        &self,
+        id: u64,
+        argv: &[String],
+        resume_from: Option<PathBuf>,
+        shutdown: &AtomicBool,
+        pins: &Arc<Mutex<HashSet<PathBuf>>>,
+    ) -> Result<PathBuf, SomError> {
+        let opts = parse_job_argv(argv)?;
+        let mut session = build_job_session(&opts, resume_from)?;
+
+        // Checkpoint cadence into the state dir: the user's
+        // --checkpoint-every if given, else every epoch — the journal's
+        // resume guarantee needs *some* cadence. --keep-last applies;
+        // the daemon's pin set shields the served checkpoint.
+        let prefix = self.state_dir.join(format!("job{id}"));
+        let every = opts.checkpoint_every.max(1);
+        session.set_checkpoint_every(every, &prefix);
+        session.set_checkpoint_keep_last(opts.keep_last);
+        session.set_checkpoint_protected(Arc::clone(pins));
+
+        let result = {
+            let mut on_epoch = |s: &SomSession| -> Result<(), SomError> {
+                let stats = s.history().last().expect("epoch just finished");
+                self.push_event(
+                    id,
+                    JobEvent::Epoch {
+                        epoch: stats.epoch as u64,
+                        qe: stats.qe,
+                        radius: stats.radius,
+                        scale: stats.scale,
+                    },
+                );
+                if s.epoch() % every == 0 {
+                    self.set_last_checkpoint(id, checkpoint_path(&prefix, s.epoch()));
+                }
+                if shutdown.load(Ordering::SeqCst) {
+                    return Err(drain_error());
+                }
+                Ok(())
+            };
+            run_job_fit(&opts, &mut session, &mut on_epoch)?
+        };
+
+        // The job's own outputs (like `somoclu train` writes), then the
+        // final checkpoint the daemon will serve.
+        let writer = OutputWriter::new(&opts.output_prefix);
+        writer.write_final(session.grid(), &result.codebook, &result.bmus, &result.umatrix)?;
+        let final_ckpt = self.state_dir.join(format!("job{id}.final.somc"));
+        session.save_checkpoint(&final_ckpt)?;
+        Ok(final_ckpt)
+    }
+}
+
+/// The sentinel error a drain aborts the in-flight fit with; compared
+/// structurally (SomError is `PartialEq`).
+fn drain_error() -> SomError {
+    SomError::job("daemon draining; job re-queued at its last checkpoint")
+}
+
+/// Escape a string as a JSON literal (the journal writer; `util::json`
+/// only parses).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Parse a job argv with the `train` subcommand's spec.
+fn parse_job_argv(argv: &[String]) -> Result<crate::cli::CliOptions, SomError> {
+    let spec = crate::cli::train_spec();
+    let parsed = spec
+        .parse(argv.iter().cloned())
+        .map_err(|e| SomError::job(format!("bad job argv: {e}")))?;
+    crate::cli::parse_cli(&parsed).map_err(|e| SomError::job(format!("bad job argv: {e}")))
+}
+
+/// Build the session a job trains: a fresh one from its flags, or a
+/// resumed one (drain/crash recovery beats the flags' --resume, which
+/// beats fresh). Runtime knobs always come from the flags.
+fn build_job_session(
+    opts: &crate::cli::CliOptions,
+    resume_from: Option<PathBuf>,
+) -> Result<SomSession, SomError> {
+    let resume = resume_from
+        .as_ref()
+        .map(|p| p.display().to_string())
+        .or_else(|| opts.resume.clone());
+    if let Some(ckpt) = resume {
+        let mut session = Som::resume(&ckpt)?;
+        let rt = &opts.config;
+        session.set_threads(rt.threads);
+        session.set_chunk_rows(rt.chunk_rows);
+        session.set_prefetch(rt.prefetch);
+        session.set_io_mode(rt.io_mode);
+        return Ok(session);
+    }
+    let grid = opts.config.grid();
+    let initial = match &opts.initial_codebook {
+        Some(path) => {
+            let m = read_dense(path).map_err(|e| SomError::data(format!("{e:#}")))?;
+            if m.rows != grid.node_count() {
+                return Err(SomError::config(format!(
+                    "initial codebook has {} rows, map has {} nodes",
+                    m.rows,
+                    grid.node_count()
+                )));
+            }
+            Some(Codebook {
+                nodes: m.rows,
+                dim: m.cols,
+                weights: m.data,
+            })
+        }
+        None => None,
+    };
+    let mut builder = Som::builder().config(opts.config.clone());
+    if let Some(cb) = initial {
+        builder = builder.initial_codebook(cb);
+    }
+    builder.build()
+}
+
+/// Run a job's fit over the right source for its input (binary
+/// containers and `--chunk-rows` stream; text inputs load resident) —
+/// the single-process subset of the CLI's dispatch.
+fn run_job_fit(
+    opts: &crate::cli::CliOptions,
+    session: &mut SomSession,
+    on_epoch: &mut dyn FnMut(&SomSession) -> Result<(), SomError>,
+) -> Result<crate::coordinator::train::TrainResult, SomError> {
+    let cfg = session.config().clone();
+    let binary_kind = binary::sniff(&opts.input_file)
+        .map_err(|e| SomError::data(format!("{}: {e:#}", opts.input_file)))?;
+    if cfg.chunk_rows > 0 || binary_kind.is_some() {
+        let mut src = crate::io::open_stream_source(
+            &opts.input_file,
+            binary_kind,
+            cfg.kernel,
+            cfg.chunk_rows,
+            cfg.prefetch,
+            cfg.io_mode,
+            true, // quiet: the daemon's log is the event stream
+        )?;
+        session.fit_source_with(&mut *src, on_epoch)
+    } else if cfg.kernel == KernelType::SparseCpu {
+        let m = read_sparse(&opts.input_file, 0).map_err(|e| SomError::data(format!("{e:#}")))?;
+        let mut src = InMemorySource::new(DataShard::Sparse(m.view()), cfg.chunk_rows);
+        session.fit_source_with(&mut src, on_epoch)
+    } else {
+        let m = read_dense(&opts.input_file).map_err(|e| SomError::data(format!("{e:#}")))?;
+        let mut src = InMemorySource::new(
+            DataShard::Dense {
+                data: &m.data,
+                dim: m.cols,
+            },
+            cfg.chunk_rows,
+        );
+        session.fit_source_with(&mut src, on_epoch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "somoclu-jobs-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn submit_validates_argv() {
+        let dir = tmpdir("validate");
+        let q = JobQueue::open(&dir).unwrap();
+        // Missing positionals.
+        assert_eq!(
+            q.submit(vec!["-e".into(), "3".into()]).unwrap_err().code(),
+            "job"
+        );
+        // Multi-rank jobs are refused.
+        let err = q
+            .submit(vec!["--ranks".into(), "2".into(), "in".into(), "out".into()])
+            .unwrap_err();
+        assert_eq!(err.code(), "job");
+        // A well-formed argv queues.
+        let id = q.submit(vec!["in.txt".into(), "out".into()]).unwrap();
+        assert_eq!(id, 1);
+        assert_eq!(q.counts(), (1, 0));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn journal_roundtrips_queue_state() {
+        let dir = tmpdir("journal");
+        {
+            let q = JobQueue::open(&dir).unwrap();
+            q.submit(vec!["a.txt".into(), "out-a".into()]).unwrap();
+            q.submit(vec![
+                "-e".into(),
+                "7".into(),
+                "b \"quoted\"\n.txt".into(),
+                "out-b".into(),
+            ])
+            .unwrap();
+            q.set_status(1, JobStatus::Running);
+        }
+        // Reopen: job 1 (running at "crash") re-queues, job 2 stays
+        // queued; ids and argv survive, including escaped characters.
+        let q = JobQueue::open(&dir).unwrap();
+        let st = q.state.lock().unwrap();
+        assert_eq!(st.next_id, 3);
+        assert_eq!(st.pending, VecDeque::from([1, 2]));
+        assert_eq!(st.jobs[&1].status, JobStatus::Queued);
+        assert_eq!(st.jobs[&2].argv[2], "b \"quoted\"\n.txt");
+        drop(st);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn events_and_counts_flow() {
+        let dir = tmpdir("events");
+        let q = JobQueue::open(&dir).unwrap();
+        let id = q.submit(vec!["in.txt".into(), "out".into()]).unwrap();
+        q.push_event(
+            id,
+            JobEvent::Epoch {
+                epoch: 0,
+                qe: 0.5,
+                radius: 2.0,
+                scale: 1.0,
+            },
+        );
+        let (evs, done) = q.events_since(id, 0).unwrap();
+        assert_eq!(evs.len(), 1);
+        assert!(!done);
+        let (evs, _) = q.events_since(id, 1).unwrap();
+        assert!(evs.is_empty());
+        assert!(q.events_since(99, 0).is_none());
+        q.set_status(id, JobStatus::Done);
+        let (_, done) = q.events_since(id, 0).unwrap();
+        assert!(done);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn json_str_escapes() {
+        assert_eq!(json_str("plain"), "\"plain\"");
+        assert_eq!(json_str("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+        assert_eq!(json_str("\u{1}"), "\"\\u0001\"");
+    }
+}

@@ -1,0 +1,28 @@
+//! `somoclu serve` — the checkpoint-serving daemon.
+//!
+//! Three pieces:
+//!
+//! - [`protocol`]: the versioned `SOMS` wire protocol (length-prefixed
+//!   frames over TCP or Unix sockets) and the blocking [`Client`].
+//! - [`daemon`]: the daemon itself — loads a `SOMC` checkpoint, answers
+//!   `bmu`/`project`/`quality`/`status` from concurrent connections,
+//!   hot-swaps freshly trained maps without dropping in-flight
+//!   requests, and drains gracefully on SIGTERM or a shutdown request.
+//! - [`jobs`]: the training job queue behind `submit`/`watch` —
+//!   journaled to the state directory, resumed from the last checkpoint
+//!   after a restart or drain.
+//!
+//! Start one from the CLI (`somoclu serve 127.0.0.1:9009 --checkpoint
+//! map.somc`) or embed it with [`DaemonHandle::spawn`], which binds
+//! synchronously and hands back the resolved address — that is what the
+//! end-to-end tests do. All errors crossing this API are typed
+//! [`crate::error::SomError`] values; over the wire they travel as
+//! `(code, message)` pairs and reconstruct on the client side.
+
+pub mod daemon;
+pub mod jobs;
+pub mod protocol;
+
+pub use daemon::{run, DaemonHandle, ServeOptions};
+pub use jobs::{JobQueue, JobStatus};
+pub use protocol::{Client, JobEvent, Request, Response, StatusInfo, VERSION};

@@ -1,0 +1,930 @@
+//! The `SOMS` serving protocol — versioned, length-prefixed request/
+//! response frames over TCP or Unix-domain sockets, plus the blocking
+//! [`Client`].
+//!
+//! The wire format mirrors the cluster transport (`SOMW`,
+//! `cluster::transport_net`): every frame is `[len: u32 LE][payload]`,
+//! and a connection opens with a fixed 8-byte hello
+//! `[b"SOMS"][VERSION: u32 LE]` in each direction — the daemon echoes
+//! its hello only after validating the client's, so magic and version
+//! mismatches are rejected before any frame is parsed.
+//!
+//! Payloads are a tag byte followed by fields in little-endian byte
+//! order; strings and vectors carry a `u32` length/count prefix. The
+//! protocol is deliberately not self-describing: both ends are this
+//! crate, and the version byte in the hello gates any future layout
+//! change.
+//!
+//! Errors travel as [`Response::Error`] frames carrying the stable
+//! [`SomError::code`] string plus the human-readable message, so a
+//! client reconstructs the typed error with [`SomError::from_code`].
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+#[cfg(unix)]
+use std::os::unix::net::UnixStream;
+use std::time::Duration;
+
+use crate::error::SomError;
+
+/// Frame magic for the serving protocol (`SOMW` is the cluster
+/// transport; `SOMC` the checkpoint container).
+pub const MAGIC: [u8; 4] = *b"SOMS";
+/// Protocol version spoken by this build; bumped on any wire change.
+pub const VERSION: u32 = 1;
+/// Upper bound on one frame's payload (64 MiB — far above any real
+/// request; a bigger announced length is a protocol error, not an
+/// allocation).
+pub const MAX_FRAME: usize = 1 << 26;
+
+// ---------------------------------------------------------------------
+// Connections
+// ---------------------------------------------------------------------
+
+/// Does this address name a Unix-domain socket (`unix:PATH`)?
+pub(crate) fn is_unix(addr: &str) -> bool {
+    addr.strip_prefix("unix:").is_some()
+}
+
+/// One serving connection: TCP (`host:port`) or Unix (`unix:PATH`).
+/// Duplicated from the cluster transport's private enum — the two
+/// protocols stay independently versioned.
+pub(crate) enum Conn {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Conn {
+    pub(crate) fn connect(addr: &str) -> Result<Conn, SomError> {
+        if let Some(path) = addr.strip_prefix("unix:") {
+            #[cfg(unix)]
+            {
+                return Ok(Conn::Unix(UnixStream::connect(path)?));
+            }
+            #[cfg(not(unix))]
+            {
+                let _ = path;
+                return Err(SomError::config(
+                    "unix: addresses need a unix target; use host:port",
+                ));
+            }
+        }
+        Ok(Conn::Tcp(TcpStream::connect(addr)?))
+    }
+
+    pub(crate) fn set_read_timeout(&self, t: Option<Duration>) -> Result<(), SomError> {
+        match self {
+            Conn::Tcp(s) => s.set_read_timeout(t)?,
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_read_timeout(t)?,
+        }
+        Ok(())
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.flush(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Framing
+// ---------------------------------------------------------------------
+
+/// Write one `[len][payload]` frame.
+pub(crate) fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<(), SomError> {
+    if payload.len() > MAX_FRAME {
+        return Err(SomError::protocol(format!(
+            "frame of {} bytes exceeds the {MAX_FRAME}-byte limit",
+            payload.len()
+        )));
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame's payload. `Ok(None)` = the peer closed the
+/// connection cleanly at a frame boundary.
+pub(crate) fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>, SomError> {
+    let mut len = [0u8; 4];
+    match r.read(&mut len) {
+        Ok(0) => return Ok(None),
+        Ok(n) => r.read_exact(&mut len[n..])?,
+        Err(e) => return Err(e.into()),
+    }
+    let len = u32::from_le_bytes(len) as usize;
+    if len > MAX_FRAME {
+        return Err(SomError::protocol(format!(
+            "announced frame of {len} bytes exceeds the {MAX_FRAME}-byte limit"
+        )));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(Some(payload))
+}
+
+/// What one read-timeout-bounded poll of a connection produced.
+pub(crate) enum FrameEvent {
+    /// A complete frame payload.
+    Frame(Vec<u8>),
+    /// The peer closed the connection at a frame boundary.
+    Eof,
+    /// The read timeout elapsed with no data — check shutdown and poll
+    /// again.
+    Idle,
+}
+
+/// [`read_frame`] for connections with a read timeout: a timeout while
+/// waiting for the *start* of a frame is [`FrameEvent::Idle`] (the
+/// daemon's handler loops poll this way so they observe shutdown), a
+/// timeout mid-frame is still an error (a stalled half-frame means a
+/// broken peer).
+pub(crate) fn read_frame_idle(r: &mut impl Read) -> Result<FrameEvent, SomError> {
+    let mut len = [0u8; 4];
+    match r.read(&mut len) {
+        Ok(0) => return Ok(FrameEvent::Eof),
+        Ok(n) => r.read_exact(&mut len[n..])?,
+        Err(e)
+            if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock
+                    | std::io::ErrorKind::TimedOut
+                    | std::io::ErrorKind::Interrupted
+            ) =>
+        {
+            return Ok(FrameEvent::Idle)
+        }
+        Err(e) => return Err(e.into()),
+    }
+    let len = u32::from_le_bytes(len) as usize;
+    if len > MAX_FRAME {
+        return Err(SomError::protocol(format!(
+            "announced frame of {len} bytes exceeds the {MAX_FRAME}-byte limit"
+        )));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(FrameEvent::Frame(payload))
+}
+
+/// The 8-byte connection hello.
+pub(crate) fn hello_bytes() -> [u8; 8] {
+    let mut h = [0u8; 8];
+    h[..4].copy_from_slice(&MAGIC);
+    h[4..].copy_from_slice(&VERSION.to_le_bytes());
+    h
+}
+
+/// Validate a peer's hello; distinguishes wrong-protocol from
+/// wrong-version so the reject message is actionable.
+pub(crate) fn check_hello(h: &[u8; 8]) -> Result<(), SomError> {
+    if h[..4] != MAGIC {
+        return Err(SomError::protocol(
+            "not a somoclu serving connection (bad magic)",
+        ));
+    }
+    let v = u32::from_le_bytes([h[4], h[5], h[6], h[7]]);
+    if v != VERSION {
+        return Err(SomError::protocol(format!(
+            "protocol version {v} not supported (this daemon speaks {VERSION})"
+        )));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Payload codec
+// ---------------------------------------------------------------------
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32s(buf: &mut Vec<u8>, v: &[f32]) {
+    put_u32(buf, v.len() as u32);
+    for &x in v {
+        put_f32(buf, x);
+    }
+}
+
+fn put_u32s(buf: &mut Vec<u8>, v: &[u32]) {
+    put_u32(buf, v.len() as u32);
+    for &x in v {
+        put_u32(buf, x);
+    }
+}
+
+/// Bounds-checked payload reader; every short read is a typed
+/// [`SomError::Protocol`].
+struct Dec<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Dec { b, pos: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], SomError> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.b.len());
+        match end {
+            Some(end) => {
+                let s = &self.b[self.pos..end];
+                self.pos = end;
+                Ok(s)
+            }
+            None => Err(SomError::protocol("truncated frame payload")),
+        }
+    }
+
+    fn u8(&mut self) -> Result<u8, SomError> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, SomError> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, SomError> {
+        let b = self.bytes(8)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8 bytes")))
+    }
+
+    fn f32(&mut self) -> Result<f32, SomError> {
+        Ok(f32::from_le_bytes(self.bytes(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn f64(&mut self) -> Result<f64, SomError> {
+        Ok(f64::from_le_bytes(self.bytes(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn str(&mut self) -> Result<String, SomError> {
+        let n = self.u32()? as usize;
+        let b = self.bytes(n)?;
+        String::from_utf8(b.to_vec())
+            .map_err(|_| SomError::protocol("string field is not UTF-8"))
+    }
+
+    /// Element-count prefix with a sanity cap implied by the remaining
+    /// payload bytes (4 bytes per element), so a hostile count cannot
+    /// force a huge allocation.
+    fn counted(&mut self, elem_bytes: usize) -> Result<usize, SomError> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(elem_bytes) > self.b.len() - self.pos {
+            return Err(SomError::protocol("element count exceeds payload"));
+        }
+        Ok(n)
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>, SomError> {
+        let n = self.counted(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f32()?);
+        }
+        Ok(v)
+    }
+
+    fn u32s(&mut self) -> Result<Vec<u32>, SomError> {
+        let n = self.counted(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.u32()?);
+        }
+        Ok(v)
+    }
+
+    fn finish(self) -> Result<(), SomError> {
+        if self.pos != self.b.len() {
+            return Err(SomError::protocol("trailing bytes after payload"));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Requests
+// ---------------------------------------------------------------------
+
+/// One client request. Vector payloads are row-major f32 (the training
+/// data layout); the daemon answers from the currently-hot map.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Best-matching unit of one dense vector.
+    Bmu { vector: Vec<f32> },
+    /// BMU per row of a dense batch (`data.len() == rows * dim`).
+    Project { dim: u32, data: Vec<f32> },
+    /// Quantization + topographic error of a dense batch against the
+    /// served map.
+    Quality { dim: u32, data: Vec<f32> },
+    /// Daemon and served-map status.
+    Status,
+    /// Enqueue a training job; `argv` is a full `somoclu train`
+    /// argument vector (flags + INPUT + OUTPUT_PREFIX), validated at
+    /// submit time.
+    Submit { argv: Vec<String> },
+    /// Stream progress events of one job until it finishes.
+    Watch { job: u64 },
+    /// Ask the daemon to drain and exit (same path as SIGTERM).
+    Shutdown,
+}
+
+const REQ_BMU: u8 = 1;
+const REQ_PROJECT: u8 = 2;
+const REQ_QUALITY: u8 = 3;
+const REQ_STATUS: u8 = 4;
+const REQ_SUBMIT: u8 = 5;
+const REQ_WATCH: u8 = 6;
+const REQ_SHUTDOWN: u8 = 7;
+
+impl Request {
+    /// Serialize to a frame payload.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        match self {
+            Request::Bmu { vector } => {
+                b.push(REQ_BMU);
+                put_f32s(&mut b, vector);
+            }
+            Request::Project { dim, data } => {
+                b.push(REQ_PROJECT);
+                put_u32(&mut b, *dim);
+                put_f32s(&mut b, data);
+            }
+            Request::Quality { dim, data } => {
+                b.push(REQ_QUALITY);
+                put_u32(&mut b, *dim);
+                put_f32s(&mut b, data);
+            }
+            Request::Status => b.push(REQ_STATUS),
+            Request::Submit { argv } => {
+                b.push(REQ_SUBMIT);
+                put_u32(&mut b, argv.len() as u32);
+                for a in argv {
+                    put_str(&mut b, a);
+                }
+            }
+            Request::Watch { job } => {
+                b.push(REQ_WATCH);
+                put_u64(&mut b, *job);
+            }
+            Request::Shutdown => b.push(REQ_SHUTDOWN),
+        }
+        b
+    }
+
+    /// Parse a frame payload; any malformation is a typed
+    /// [`SomError::Protocol`].
+    pub fn decode(payload: &[u8]) -> Result<Request, SomError> {
+        let mut d = Dec::new(payload);
+        let req = match d.u8()? {
+            REQ_BMU => Request::Bmu { vector: d.f32s()? },
+            REQ_PROJECT => Request::Project {
+                dim: d.u32()?,
+                data: d.f32s()?,
+            },
+            REQ_QUALITY => Request::Quality {
+                dim: d.u32()?,
+                data: d.f32s()?,
+            },
+            REQ_STATUS => Request::Status,
+            REQ_SUBMIT => {
+                let n = d.counted(4)?;
+                let mut argv = Vec::with_capacity(n);
+                for _ in 0..n {
+                    argv.push(d.str()?);
+                }
+                Request::Submit { argv }
+            }
+            REQ_WATCH => Request::Watch { job: d.u64()? },
+            REQ_SHUTDOWN => Request::Shutdown,
+            t => {
+                return Err(SomError::protocol(format!("unknown request tag {t}")));
+            }
+        };
+        d.finish()?;
+        Ok(req)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Responses
+// ---------------------------------------------------------------------
+
+/// Daemon status snapshot ([`Request::Status`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StatusInfo {
+    /// Path of the checkpoint behind the currently-served map ("" when
+    /// no map is loaded yet).
+    pub checkpoint: String,
+    /// Epoch the served map was trained to.
+    pub epoch: u64,
+    /// Map geometry and data dimensionality (0s when no map is loaded).
+    pub rows: u32,
+    pub cols: u32,
+    pub dim: u32,
+    /// Jobs waiting in the queue.
+    pub queued_jobs: u32,
+    /// The running job's id, or 0 (job ids start at 1).
+    pub active_job: u64,
+    /// Requests answered since the daemon started.
+    pub requests_served: u64,
+}
+
+/// One progress event of a training job, streamed to
+/// [`Request::Watch`] clients. `Done`/`Failed` are terminal.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobEvent {
+    /// A training epoch completed.
+    Epoch {
+        epoch: u64,
+        qe: f64,
+        radius: f32,
+        scale: f32,
+    },
+    /// The job finished; its final checkpoint is now the served map.
+    Done { checkpoint: String },
+    /// The job failed with a typed error.
+    Failed { code: String, message: String },
+}
+
+impl JobEvent {
+    /// Is this a terminal event (no more events will follow)?
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobEvent::Done { .. } | JobEvent::Failed { .. })
+    }
+}
+
+/// One daemon response.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// Answer to [`Request::Bmu`].
+    Bmu { node: u64, distance: f32 },
+    /// Answer to [`Request::Project`].
+    Project { bmus: Vec<u32> },
+    /// Answer to [`Request::Quality`].
+    Quality { qe: f32, te: f32 },
+    /// Answer to [`Request::Status`].
+    Status(StatusInfo),
+    /// Answer to [`Request::Submit`]: the queued job's id.
+    Submitted { job: u64 },
+    /// One streamed [`Request::Watch`] event.
+    Event { job: u64, event: JobEvent },
+    /// Generic success (e.g. [`Request::Shutdown`] acknowledged).
+    Ok,
+    /// A typed failure: `code` is a stable [`SomError::code`] string.
+    Error { code: String, message: String },
+}
+
+const RSP_BMU: u8 = 1;
+const RSP_PROJECT: u8 = 2;
+const RSP_QUALITY: u8 = 3;
+const RSP_STATUS: u8 = 4;
+const RSP_SUBMITTED: u8 = 5;
+const RSP_EVENT: u8 = 6;
+const RSP_OK: u8 = 7;
+const RSP_ERROR: u8 = 8;
+
+const EV_EPOCH: u8 = 1;
+const EV_DONE: u8 = 2;
+const EV_FAILED: u8 = 3;
+
+impl Response {
+    /// Serialize to a frame payload.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        match self {
+            Response::Bmu { node, distance } => {
+                b.push(RSP_BMU);
+                put_u64(&mut b, *node);
+                put_f32(&mut b, *distance);
+            }
+            Response::Project { bmus } => {
+                b.push(RSP_PROJECT);
+                put_u32s(&mut b, bmus);
+            }
+            Response::Quality { qe, te } => {
+                b.push(RSP_QUALITY);
+                put_f32(&mut b, *qe);
+                put_f32(&mut b, *te);
+            }
+            Response::Status(s) => {
+                b.push(RSP_STATUS);
+                put_str(&mut b, &s.checkpoint);
+                put_u64(&mut b, s.epoch);
+                put_u32(&mut b, s.rows);
+                put_u32(&mut b, s.cols);
+                put_u32(&mut b, s.dim);
+                put_u32(&mut b, s.queued_jobs);
+                put_u64(&mut b, s.active_job);
+                put_u64(&mut b, s.requests_served);
+            }
+            Response::Submitted { job } => {
+                b.push(RSP_SUBMITTED);
+                put_u64(&mut b, *job);
+            }
+            Response::Event { job, event } => {
+                b.push(RSP_EVENT);
+                put_u64(&mut b, *job);
+                match event {
+                    JobEvent::Epoch {
+                        epoch,
+                        qe,
+                        radius,
+                        scale,
+                    } => {
+                        b.push(EV_EPOCH);
+                        put_u64(&mut b, *epoch);
+                        put_f64(&mut b, *qe);
+                        put_f32(&mut b, *radius);
+                        put_f32(&mut b, *scale);
+                    }
+                    JobEvent::Done { checkpoint } => {
+                        b.push(EV_DONE);
+                        put_str(&mut b, checkpoint);
+                    }
+                    JobEvent::Failed { code, message } => {
+                        b.push(EV_FAILED);
+                        put_str(&mut b, code);
+                        put_str(&mut b, message);
+                    }
+                }
+            }
+            Response::Ok => b.push(RSP_OK),
+            Response::Error { code, message } => {
+                b.push(RSP_ERROR);
+                put_str(&mut b, code);
+                put_str(&mut b, message);
+            }
+        }
+        b
+    }
+
+    /// Parse a frame payload.
+    pub fn decode(payload: &[u8]) -> Result<Response, SomError> {
+        let mut d = Dec::new(payload);
+        let rsp = match d.u8()? {
+            RSP_BMU => Response::Bmu {
+                node: d.u64()?,
+                distance: d.f32()?,
+            },
+            RSP_PROJECT => Response::Project { bmus: d.u32s()? },
+            RSP_QUALITY => Response::Quality {
+                qe: d.f32()?,
+                te: d.f32()?,
+            },
+            RSP_STATUS => Response::Status(StatusInfo {
+                checkpoint: d.str()?,
+                epoch: d.u64()?,
+                rows: d.u32()?,
+                cols: d.u32()?,
+                dim: d.u32()?,
+                queued_jobs: d.u32()?,
+                active_job: d.u64()?,
+                requests_served: d.u64()?,
+            }),
+            RSP_SUBMITTED => Response::Submitted { job: d.u64()? },
+            RSP_EVENT => {
+                let job = d.u64()?;
+                let event = match d.u8()? {
+                    EV_EPOCH => JobEvent::Epoch {
+                        epoch: d.u64()?,
+                        qe: d.f64()?,
+                        radius: d.f32()?,
+                        scale: d.f32()?,
+                    },
+                    EV_DONE => JobEvent::Done {
+                        checkpoint: d.str()?,
+                    },
+                    EV_FAILED => JobEvent::Failed {
+                        code: d.str()?,
+                        message: d.str()?,
+                    },
+                    t => {
+                        return Err(SomError::protocol(format!("unknown event tag {t}")))
+                    }
+                };
+                Response::Event { job, event }
+            }
+            RSP_OK => Response::Ok,
+            RSP_ERROR => Response::Error {
+                code: d.str()?,
+                message: d.str()?,
+            },
+            t => {
+                return Err(SomError::protocol(format!("unknown response tag {t}")));
+            }
+        };
+        d.finish()?;
+        Ok(rsp)
+    }
+}
+
+/// Turn a [`Response::Error`] into the typed error it carried; any
+/// other response is an unexpected-response protocol error.
+fn expect<T>(got: Response, want: &str, ok: impl FnOnce(Response) -> Option<T>) -> Result<T, SomError> {
+    match got {
+        Response::Error { code, message } => Err(SomError::from_code(&code, message)),
+        other => match ok(other) {
+            Some(v) => Ok(v),
+            None => Err(SomError::protocol(format!(
+                "unexpected response (wanted {want})"
+            ))),
+        },
+    }
+}
+
+// ---------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------
+
+/// A blocking serving client: one connection, synchronous
+/// request/response. Used by the daemon's tests and available to
+/// library consumers; any tool speaking the frame layout above
+/// interoperates.
+pub struct Client {
+    conn: Conn,
+}
+
+impl Client {
+    /// Connect to a daemon at `host:port` or `unix:PATH` and exchange
+    /// hellos. Fails with [`SomError::Protocol`] if the peer speaks a
+    /// different protocol or version.
+    pub fn connect(addr: &str) -> Result<Client, SomError> {
+        let mut conn = Conn::connect(addr)?;
+        conn.write_all(&hello_bytes())
+            .map_err(|e| SomError::protocol(format!("hello write failed: {e}")))?;
+        conn.flush()?;
+        let mut h = [0u8; 8];
+        conn.read_exact(&mut h)
+            .map_err(|e| SomError::protocol(format!("hello read failed: {e}")))?;
+        check_hello(&h)?;
+        Ok(Client { conn })
+    }
+
+    /// Send one request and read one response frame.
+    pub fn request(&mut self, req: &Request) -> Result<Response, SomError> {
+        write_frame(&mut self.conn, &req.encode())?;
+        match read_frame(&mut self.conn)? {
+            Some(payload) => Response::decode(&payload),
+            None => Err(SomError::protocol("daemon closed the connection")),
+        }
+    }
+
+    /// BMU of one dense vector: `(node, distance)` — bit-identical to
+    /// [`crate::session::SomSession::bmu`] on the served checkpoint.
+    pub fn bmu(&mut self, x: &[f32]) -> Result<(usize, f32), SomError> {
+        let rsp = self.request(&Request::Bmu { vector: x.to_vec() })?;
+        expect(rsp, "bmu", |r| match r {
+            Response::Bmu { node, distance } => Some((node as usize, distance)),
+            _ => None,
+        })
+    }
+
+    /// BMU per row of a dense batch.
+    pub fn project(&mut self, dim: usize, data: &[f32]) -> Result<Vec<u32>, SomError> {
+        let rsp = self.request(&Request::Project {
+            dim: dim as u32,
+            data: data.to_vec(),
+        })?;
+        expect(rsp, "project", |r| match r {
+            Response::Project { bmus } => Some(bmus),
+            _ => None,
+        })
+    }
+
+    /// Quantization + topographic error of a dense batch: `(qe, te)`.
+    pub fn quality(&mut self, dim: usize, data: &[f32]) -> Result<(f32, f32), SomError> {
+        let rsp = self.request(&Request::Quality {
+            dim: dim as u32,
+            data: data.to_vec(),
+        })?;
+        expect(rsp, "quality", |r| match r {
+            Response::Quality { qe, te } => Some((qe, te)),
+            _ => None,
+        })
+    }
+
+    /// Daemon status.
+    pub fn status(&mut self) -> Result<StatusInfo, SomError> {
+        let rsp = self.request(&Request::Status)?;
+        expect(rsp, "status", |r| match r {
+            Response::Status(s) => Some(s),
+            _ => None,
+        })
+    }
+
+    /// Enqueue a training job (a full `somoclu train` argv). Returns
+    /// the job id; progress streams via [`watch`](Self::watch).
+    pub fn submit(&mut self, argv: &[String]) -> Result<u64, SomError> {
+        let rsp = self.request(&Request::Submit {
+            argv: argv.to_vec(),
+        })?;
+        expect(rsp, "submitted", |r| match r {
+            Response::Submitted { job } => Some(job),
+            _ => None,
+        })
+    }
+
+    /// Start watching a job: the daemon streams [`JobEvent`] frames on
+    /// this connection. Read them with [`next_event`](Self::next_event)
+    /// until a terminal event; the connection then goes back to
+    /// request/response use.
+    pub fn watch(&mut self, job: u64) -> Result<(), SomError> {
+        write_frame(&mut self.conn, &Request::Watch { job }.encode())
+    }
+
+    /// Next streamed event of the job being watched.
+    pub fn next_event(&mut self) -> Result<JobEvent, SomError> {
+        match read_frame(&mut self.conn)? {
+            Some(payload) => match Response::decode(&payload)? {
+                Response::Event { event, .. } => Ok(event),
+                Response::Error { code, message } => {
+                    Err(SomError::from_code(&code, message))
+                }
+                _ => Err(SomError::protocol("unexpected response (wanted event)")),
+            },
+            None => Err(SomError::protocol("daemon closed the connection")),
+        }
+    }
+
+    /// Ask the daemon to drain and exit.
+    pub fn shutdown(&mut self) -> Result<(), SomError> {
+        let rsp = self.request(&Request::Shutdown)?;
+        expect(rsp, "ok", |r| match r {
+            Response::Ok => Some(()),
+            _ => None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requests_roundtrip() {
+        let reqs = [
+            Request::Bmu {
+                vector: vec![1.0, -2.5, 3.25],
+            },
+            Request::Project {
+                dim: 3,
+                data: vec![0.0; 9],
+            },
+            Request::Quality {
+                dim: 2,
+                data: vec![1.0, 2.0],
+            },
+            Request::Status,
+            Request::Submit {
+                argv: vec!["-e".into(), "5".into(), "in.txt".into(), "out".into()],
+            },
+            Request::Watch { job: 42 },
+            Request::Shutdown,
+        ];
+        for r in reqs {
+            assert_eq!(Request::decode(&r.encode()).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn responses_roundtrip() {
+        let rsps = [
+            Response::Bmu {
+                node: 7,
+                distance: 0.5,
+            },
+            Response::Project {
+                bmus: vec![0, 3, 9],
+            },
+            Response::Quality { qe: 0.1, te: 0.02 },
+            Response::Status(StatusInfo {
+                checkpoint: "x.somc".into(),
+                epoch: 9,
+                rows: 5,
+                cols: 6,
+                dim: 3,
+                queued_jobs: 2,
+                active_job: 1,
+                requests_served: 100,
+            }),
+            Response::Submitted { job: 3 },
+            Response::Event {
+                job: 3,
+                event: JobEvent::Epoch {
+                    epoch: 2,
+                    qe: 0.25,
+                    radius: 2.0,
+                    scale: 0.5,
+                },
+            },
+            Response::Event {
+                job: 3,
+                event: JobEvent::Done {
+                    checkpoint: "job3.somc".into(),
+                },
+            },
+            Response::Ok,
+            Response::Error {
+                code: "state".into(),
+                message: "no map".into(),
+            },
+        ];
+        for r in rsps {
+            assert_eq!(Response::decode(&r.encode()).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn malformed_payloads_are_protocol_errors() {
+        // Unknown tag.
+        assert_eq!(Request::decode(&[200]).unwrap_err().code(), "protocol");
+        // Truncated vector.
+        let mut b = vec![REQ_BMU];
+        b.extend_from_slice(&10u32.to_le_bytes()); // announces 10 floats, has 0
+        assert_eq!(Request::decode(&b).unwrap_err().code(), "protocol");
+        // Trailing garbage.
+        let mut b = Request::Status.encode();
+        b.push(0);
+        assert_eq!(Request::decode(&b).unwrap_err().code(), "protocol");
+        // Empty payload.
+        assert_eq!(Request::decode(&[]).unwrap_err().code(), "protocol");
+    }
+
+    #[test]
+    fn hello_is_checked() {
+        assert!(check_hello(&hello_bytes()).is_ok());
+        let mut bad_magic = hello_bytes();
+        bad_magic[0] = b'X';
+        assert_eq!(check_hello(&bad_magic).unwrap_err().code(), "protocol");
+        let mut bad_version = hello_bytes();
+        bad_version[4] = 99;
+        let err = check_hello(&bad_version).unwrap_err();
+        assert_eq!(err.code(), "protocol");
+        assert!(err.message().contains("version"));
+    }
+
+    #[test]
+    fn frames_roundtrip_over_a_buffer() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"hello").unwrap();
+        write_frame(&mut wire, b"").unwrap();
+        let mut r = &wire[..];
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"");
+        assert!(read_frame(&mut r).unwrap().is_none()); // clean EOF
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        let mut r = &wire[..];
+        assert_eq!(read_frame(&mut r).unwrap_err().code(), "protocol");
+    }
+}

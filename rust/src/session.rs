@@ -82,10 +82,13 @@
 //! resumed.fit(DataInput::BorrowedF32 { data: &data, dim: 6 }).unwrap();
 //! ```
 
+use std::collections::{HashSet, VecDeque};
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::api::DataInput;
+use crate::error::SomError;
 use crate::cluster::comm::CollectiveAlgo;
 use crate::cluster::multiproc::NetOptions;
 use crate::cluster::netmodel::NetModel;
@@ -120,10 +123,18 @@ impl Som {
     /// Runtime knobs (threads, ranks, chunking, prefetch, I/O backend)
     /// are not stored in checkpoints; apply them to the returned session
     /// with the `set_*` methods before fitting.
-    pub fn resume<P: AsRef<Path>>(path: P) -> anyhow::Result<SomSession> {
+    ///
+    /// # Errors
+    ///
+    /// [`SomError::Checkpoint`] for unreadable/corrupt files,
+    /// [`SomError::Config`] if the stored configuration no longer
+    /// validates.
+    pub fn resume<P: AsRef<Path>>(path: P) -> Result<SomSession, SomError> {
         let ck = crate::io::checkpoint::load(path)?;
         let mut session = SomBuilder::default().config(ck.config).build()?;
-        session.install_codebook(ck.codebook)?;
+        session
+            .install_codebook(ck.codebook)
+            .map_err(|e| SomError::checkpoint(format!("{e:#}")))?;
         session.epoch = ck.epoch;
         Ok(session)
     }
@@ -138,6 +149,7 @@ pub struct SomBuilder {
     initial: Option<Codebook>,
     net: NetModel,
     checkpoint: Option<(usize, PathBuf)>,
+    keep_last: usize,
 }
 
 impl Default for SomBuilder {
@@ -147,6 +159,7 @@ impl Default for SomBuilder {
             initial: None,
             net: NetModel::ideal(),
             checkpoint: None,
+            keep_last: 0,
         }
     }
 }
@@ -309,12 +322,25 @@ impl SomBuilder {
         self
     }
 
+    /// Retention for [`checkpoint_every`](Self::checkpoint_every)
+    /// checkpoints (the CLI's `--keep-last`): after each save, delete
+    /// the oldest checkpoints this session wrote until at most `n`
+    /// remain. `0` (the default) keeps everything. Checkpoints pinned
+    /// via [`SomSession::set_checkpoint_protected`] — e.g. the one a
+    /// daemon is currently serving — are never deleted and do not count
+    /// against `n`.
+    pub fn checkpoint_keep_last(mut self, n: usize) -> Self {
+        self.keep_last = n;
+        self
+    }
+
     /// Validate the configuration and produce a ready [`SomSession`].
     /// Rejects inconsistent settings (zero-sized map, zero epochs,
     /// radius growing over time, mmap + prefetch, an initial codebook
-    /// whose node count does not match the map, ...).
-    pub fn build(self) -> anyhow::Result<SomSession> {
-        self.cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    /// whose node count does not match the map, ...) with a typed
+    /// [`SomError::Config`].
+    pub fn build(self) -> Result<SomSession, SomError> {
+        self.cfg.validate()?;
         let grid = self.cfg.grid();
         let mut session = SomSession {
             cfg: self.cfg,
@@ -325,10 +351,14 @@ impl SomBuilder {
             epoch: 0,
             history: Vec::new(),
             last_bmus: Vec::new(),
-            checkpoint: self.checkpoint,
+            checkpoint: self
+                .checkpoint
+                .map(|(every, prefix)| CheckpointPolicy::new(every, prefix, self.keep_last)),
         };
         if let Some(cb) = self.initial {
-            session.install_codebook(cb)?;
+            session
+                .install_codebook(cb)
+                .map_err(|e| SomError::config(format!("{e:#}")))?;
         }
         Ok(session)
     }
@@ -338,6 +368,76 @@ impl SomBuilder {
 /// `<prefix>.epoch<k>.somc` (what `--checkpoint-every` writes).
 pub fn checkpoint_path<P: AsRef<Path>>(prefix: P, epoch: usize) -> PathBuf {
     PathBuf::from(format!("{}.epoch{epoch}.somc", prefix.as_ref().display()))
+}
+
+/// The session's periodic-checkpoint policy: cadence, path prefix, and
+/// GC retention. Owned by [`SomSession`]; configured through
+/// [`SomBuilder::checkpoint_every`] /
+/// [`SomBuilder::checkpoint_keep_last`] or the matching `set_*` methods.
+struct CheckpointPolicy {
+    /// Save after every `every` completed epochs.
+    every: usize,
+    /// `<prefix>.epoch<k>.somc` naming (see [`checkpoint_path`]).
+    prefix: PathBuf,
+    /// Retain at most this many non-protected checkpoints (0 = all).
+    keep_last: usize,
+    /// Paths this session wrote, oldest first — the GC candidate set.
+    /// Pre-existing files from earlier runs are never touched.
+    written: VecDeque<PathBuf>,
+    /// Shared pin set: paths in here survive GC unconditionally (the
+    /// serving daemon pins whatever checkpoint is currently hot).
+    protected: Option<Arc<Mutex<HashSet<PathBuf>>>>,
+}
+
+impl CheckpointPolicy {
+    fn new(every: usize, prefix: PathBuf, keep_last: usize) -> Self {
+        CheckpointPolicy {
+            every,
+            prefix,
+            keep_last,
+            written: VecDeque::new(),
+            protected: None,
+        }
+    }
+
+    fn is_protected(&self, path: &Path) -> bool {
+        match &self.protected {
+            Some(set) => match set.lock() {
+                Ok(guard) => guard.contains(path),
+                // A poisoned pin set means some serving thread panicked;
+                // err on the side of never deleting.
+                Err(_) => true,
+            },
+            None => false,
+        }
+    }
+
+    /// Delete the oldest non-protected checkpoints until at most
+    /// `keep_last` remain. Best-effort: a failed unlink (already gone,
+    /// permissions) is skipped, never fatal to training.
+    fn gc(&mut self) {
+        if self.keep_last == 0 {
+            return;
+        }
+        let unprotected = self
+            .written
+            .iter()
+            .filter(|p| !self.is_protected(p))
+            .count();
+        let mut to_delete = unprotected.saturating_sub(self.keep_last);
+        let mut survivors = VecDeque::with_capacity(self.written.len());
+        while to_delete > 0 {
+            let old = self.written.pop_front().expect("counted above");
+            if self.is_protected(&old) {
+                survivors.push_back(old);
+                continue;
+            }
+            let _ = std::fs::remove_file(&old);
+            to_delete -= 1;
+        }
+        survivors.extend(self.written.drain(..));
+        self.written = survivors;
+    }
 }
 
 /// Materialize a [`DataInput`] as a borrowed [`DataShard`], converting
@@ -389,7 +489,7 @@ pub struct SomSession {
     epoch: usize,
     history: Vec<EpochStats>,
     last_bmus: Vec<u32>,
-    checkpoint: Option<(usize, PathBuf)>,
+    checkpoint: Option<CheckpointPolicy>,
 }
 
 impl SomSession {
@@ -509,13 +609,39 @@ impl SomSession {
     }
 
     /// Set (or disable, with `every` = 0) the checkpoint policy; see
-    /// [`SomBuilder::checkpoint_every`].
+    /// [`SomBuilder::checkpoint_every`]. An existing policy's retention
+    /// and pin set carry over; the written-checkpoint GC ledger resets.
     pub fn set_checkpoint_every<P: AsRef<Path>>(&mut self, every: usize, prefix: P) {
-        self.checkpoint = if every > 0 {
-            Some((every, prefix.as_ref().to_path_buf()))
-        } else {
-            None
+        let (keep_last, protected) = match self.checkpoint.take() {
+            Some(p) => (p.keep_last, p.protected),
+            None => (0, None),
         };
+        if every > 0 {
+            let mut policy = CheckpointPolicy::new(every, prefix.as_ref().to_path_buf(), keep_last);
+            policy.protected = protected;
+            self.checkpoint = Some(policy);
+        }
+    }
+
+    /// Set checkpoint GC retention (the CLI's `--keep-last`; see
+    /// [`SomBuilder::checkpoint_keep_last`]). No effect unless a
+    /// checkpoint policy is active — call
+    /// [`set_checkpoint_every`](Self::set_checkpoint_every) first.
+    pub fn set_checkpoint_keep_last(&mut self, n: usize) {
+        if let Some(p) = self.checkpoint.as_mut() {
+            p.keep_last = n;
+        }
+    }
+
+    /// Install a shared pin set for checkpoint GC: paths present in the
+    /// set when GC runs are never deleted (and don't count against
+    /// `keep_last`). The serving daemon keeps its currently-hot
+    /// checkpoint in here so retention can never unlink the map being
+    /// served. No effect unless a checkpoint policy is active.
+    pub fn set_checkpoint_protected(&mut self, pins: Arc<Mutex<HashSet<PathBuf>>>) {
+        if let Some(p) = self.checkpoint.as_mut() {
+            p.protected = Some(pins);
+        }
     }
 
     // -- training -----------------------------------------------------
@@ -525,14 +651,14 @@ impl SomSession {
     /// (copying the input into per-rank shards); otherwise it streams
     /// the resident buffer in `chunk_rows` windows through the kernel.
     /// Resuming sessions continue from their cursor.
-    pub fn fit(&mut self, input: DataInput<'_>) -> anyhow::Result<TrainResult> {
+    pub fn fit(&mut self, input: DataInput<'_>) -> Result<TrainResult, SomError> {
         let mut tmp = Vec::new();
         let shard = materialize(input, &mut tmp);
         self.fit_shard(shard)
     }
 
     /// [`fit`](Self::fit) for callers already holding a [`DataShard`].
-    pub fn fit_shard(&mut self, shard: DataShard<'_>) -> anyhow::Result<TrainResult> {
+    pub fn fit_shard(&mut self, shard: DataShard<'_>) -> Result<TrainResult, SomError> {
         if self.cfg.ranks > 1 {
             let data = owned_cluster_data(shard);
             return self.fit_cluster(data).map(|(res, _)| res);
@@ -544,25 +670,33 @@ impl SomSession {
     /// Train to schedule completion over any [`DataSource`] — the
     /// out-of-core path (single process; for multi-rank streaming use
     /// [`fit_cluster_stream`](Self::fit_cluster_stream)).
-    pub fn fit_source(&mut self, source: &mut dyn DataSource) -> anyhow::Result<TrainResult> {
+    pub fn fit_source(
+        &mut self,
+        source: &mut dyn DataSource,
+    ) -> Result<TrainResult, SomError> {
         self.fit_source_with(source, &mut |_| Ok(()))
     }
 
     /// [`fit_source`](Self::fit_source) with a per-epoch observer (the
-    /// CLI uses it to write interim snapshots): `on_epoch` runs after
-    /// every completed epoch with the session borrowed read-only.
+    /// CLI uses it to write interim snapshots, the serving daemon to
+    /// stream progress events and honor drain requests): `on_epoch` runs
+    /// after every completed epoch with the session borrowed read-only;
+    /// an `Err` from it aborts the fit and surfaces unchanged.
     pub fn fit_source_with(
         &mut self,
         source: &mut dyn DataSource,
-        on_epoch: &mut dyn FnMut(&SomSession) -> anyhow::Result<()>,
-    ) -> anyhow::Result<TrainResult> {
-        self.cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
-        anyhow::ensure!(
-            self.cfg.ranks == 1,
-            "fit_source is single-process; multi-rank streaming goes through \
-             fit_cluster_stream (per-rank file shards)"
-        );
-        anyhow::ensure!(source.rows() > 0, "no data rows");
+        on_epoch: &mut dyn FnMut(&SomSession) -> Result<(), SomError>,
+    ) -> Result<TrainResult, SomError> {
+        self.cfg.validate()?;
+        if self.cfg.ranks != 1 {
+            return Err(SomError::config(
+                "fit_source is single-process; multi-rank streaming goes through \
+                 fit_cluster_stream (per-rank file shards)",
+            ));
+        }
+        if source.rows() == 0 {
+            return Err(SomError::data("no data rows"));
+        }
         let t0 = Instant::now();
         let since = self.history.len();
         let start_epoch = self.epoch;
@@ -586,7 +720,7 @@ impl SomSession {
     /// of every step (see [`kernel_cache_stats`](Self::kernel_cache_stats)).
     /// Stepping past `epochs_total` is allowed: the schedules clamp to
     /// their final values (warm retraining).
-    pub fn step_epoch(&mut self, input: DataInput<'_>) -> anyhow::Result<EpochStats> {
+    pub fn step_epoch(&mut self, input: DataInput<'_>) -> Result<EpochStats, SomError> {
         let mut tmp = Vec::new();
         let shard = materialize(input, &mut tmp);
         let mut source = InMemorySource::new(shard, self.cfg.chunk_rows);
@@ -598,7 +732,7 @@ impl SomSession {
     pub fn step_epoch_source(
         &mut self,
         source: &mut dyn DataSource,
-    ) -> anyhow::Result<EpochStats> {
+    ) -> Result<EpochStats, SomError> {
         self.ensure_codebook_for_source(source)?;
         let te = Instant::now();
         let epoch = self.epoch;
@@ -625,9 +759,9 @@ impl SomSession {
     pub fn fit_cluster(
         &mut self,
         data: ClusterData,
-    ) -> anyhow::Result<(TrainResult, ClusterReport)> {
+    ) -> Result<(TrainResult, ClusterReport), SomError> {
         let net = self.net.clone();
-        crate::cluster::runner::run_cluster(self, data, net)
+        Ok(crate::cluster::runner::run_cluster(self, data, net)?)
     }
 
     /// Train to schedule completion across `ranks` simulated nodes with
@@ -637,9 +771,9 @@ impl SomSession {
     pub fn fit_cluster_stream(
         &mut self,
         input: StreamInput,
-    ) -> anyhow::Result<(TrainResult, ClusterReport)> {
+    ) -> Result<(TrainResult, ClusterReport), SomError> {
         let net = self.net.clone();
-        crate::cluster::runner::run_cluster_stream(self, input, net)
+        Ok(crate::cluster::runner::run_cluster_stream(self, input, net)?)
     }
 
     /// Train this process's rank of a **real multi-process** cluster:
@@ -656,8 +790,8 @@ impl SomSession {
         &mut self,
         input: StreamInput,
         opts: &NetOptions,
-    ) -> anyhow::Result<(Option<TrainResult>, ClusterReport)> {
-        crate::cluster::multiproc::run_cluster_net(self, input, opts)
+    ) -> Result<(Option<TrainResult>, ClusterReport), SomError> {
+        Ok(crate::cluster::multiproc::run_cluster_net(self, input, opts)?)
     }
 
     /// Write the interim snapshot for the epoch that just finished
@@ -665,7 +799,7 @@ impl SomSession {
     /// [`fit_source_with`](Self::fit_source_with), shared by the CLI
     /// and the legacy `train_stream` shim. No-op when the snapshot
     /// level is `None` or before any epoch completed.
-    pub fn write_epoch_snapshot(&self, writer: &OutputWriter) -> anyhow::Result<()> {
+    pub fn write_epoch_snapshot(&self, writer: &OutputWriter) -> Result<(), SomError> {
         if self.cfg.snapshot == SnapshotLevel::None || self.epoch == 0 {
             return Ok(());
         }
@@ -685,28 +819,28 @@ impl SomSession {
     // -- inference ----------------------------------------------------
 
     /// Best-matching unit for one dense vector: `(node, distance)`.
-    /// A plain codebook scan — kernel-independent (works for maps
-    /// trained with any kernel) and cheap enough to serve lookups.
-    pub fn bmu(&self, x: &[f32]) -> anyhow::Result<(usize, f32)> {
+    /// Delegates to [`crate::som::quality::linear_bmu`] — the plain
+    /// codebook scan the serving daemon's `bmu` request path also uses,
+    /// so served and offline answers are bit-identical by construction.
+    /// Kernel-independent (works for maps trained with any kernel) and
+    /// cheap enough to serve lookups.
+    ///
+    /// # Errors
+    ///
+    /// [`SomError::State`] before any codebook exists,
+    /// [`SomError::Data`] on a dimension mismatch.
+    pub fn bmu(&self, x: &[f32]) -> Result<(usize, f32), SomError> {
         let cb = self.codebook.as_ref().ok_or_else(|| {
-            anyhow::anyhow!("session has no codebook yet (fit or resume first)")
+            SomError::state("session has no codebook yet (fit or resume first)")
         })?;
-        anyhow::ensure!(
-            x.len() == cb.dim,
-            "query has {} dims, codebook has {}",
-            x.len(),
-            cb.dim
-        );
-        let mut best = 0usize;
-        let mut best_d = f32::INFINITY;
-        for n in 0..cb.nodes {
-            let d = crate::som::quality::sq_dist(x, cb.row(n));
-            if d < best_d {
-                best_d = d;
-                best = n;
-            }
+        if x.len() != cb.dim {
+            return Err(SomError::data(format!(
+                "query has {} dims, codebook has {}",
+                x.len(),
+                cb.dim
+            )));
         }
-        Ok((best, best_d.max(0.0).sqrt()))
+        Ok(crate::som::quality::linear_bmu(cb, x))
     }
 
     /// Batch inference: BMU per row of `input` against the current
@@ -714,7 +848,7 @@ impl SomSession {
     /// tie-breaking and arithmetic to the BMUs training reports, with
     /// none of the Eq. 6 accumulation work). Does **not** update the
     /// codebook or advance the cursor.
-    pub fn project(&mut self, input: DataInput<'_>) -> anyhow::Result<Vec<u32>> {
+    pub fn project(&mut self, input: DataInput<'_>) -> Result<Vec<u32>, SomError> {
         let mut tmp = Vec::new();
         let shard = materialize(input, &mut tmp);
         let mut source = InMemorySource::new(shard, self.cfg.chunk_rows);
@@ -725,18 +859,21 @@ impl SomSession {
     pub fn project_source(
         &mut self,
         source: &mut dyn DataSource,
-    ) -> anyhow::Result<Vec<u32>> {
-        anyhow::ensure!(source.rows() > 0, "no data rows");
+    ) -> Result<Vec<u32>, SomError> {
+        if source.rows() == 0 {
+            return Err(SomError::data("no data rows"));
+        }
         self.ensure_kernel()?;
         let cb = self.codebook.as_ref().ok_or_else(|| {
-            anyhow::anyhow!("session has no codebook yet (fit or resume first)")
+            SomError::state("session has no codebook yet (fit or resume first)")
         })?;
-        anyhow::ensure!(
-            cb.dim == source.dim(),
-            "data dim {} does not match the session codebook dim {}",
-            source.dim(),
-            cb.dim
-        );
+        if cb.dim != source.dim() {
+            return Err(SomError::data(format!(
+                "data dim {} does not match the session codebook dim {}",
+                source.dim(),
+                cb.dim
+            )));
+        }
         let kernel = self.kernel.as_mut().expect("just ensured");
         let rows = source.rows();
         kernel.epoch_begin(cb)?;
@@ -745,11 +882,12 @@ impl SomSession {
         while let Some(chunk) = source.next_chunk()? {
             bmus.extend(kernel.project(chunk, cb, &self.grid, self.cfg.neighborhood)?);
         }
-        anyhow::ensure!(
-            bmus.len() == rows,
-            "data source produced {} rows this pass, expected {rows}",
-            bmus.len()
-        );
+        if bmus.len() != rows {
+            return Err(SomError::data(format!(
+                "data source produced {} rows this pass, expected {rows}",
+                bmus.len()
+            )));
+        }
         Ok(bmus)
     }
 
@@ -758,9 +896,14 @@ impl SomSession {
     /// Write a `SOMC` checkpoint of the current state (atomically; see
     /// [`crate::io::checkpoint`]). [`Som::resume`] restores it
     /// bit-exactly.
-    pub fn save_checkpoint<P: AsRef<Path>>(&self, path: P) -> anyhow::Result<()> {
+    ///
+    /// # Errors
+    ///
+    /// [`SomError::State`] before any codebook exists,
+    /// [`SomError::Checkpoint`] if the write fails.
+    pub fn save_checkpoint<P: AsRef<Path>>(&self, path: P) -> Result<(), SomError> {
         let cb = self.codebook.as_ref().ok_or_else(|| {
-            anyhow::anyhow!("nothing to checkpoint: session has no codebook yet")
+            SomError::state("nothing to checkpoint: session has no codebook yet")
         })?;
         crate::io::checkpoint::save(path, &self.cfg, self.epoch.min(self.cfg.epochs), cb)
     }
@@ -788,14 +931,14 @@ impl SomSession {
     /// Install an explicit codebook (initial, broadcast, or resumed),
     /// checking the node count against the map.
     pub(crate) fn install_codebook(&mut self, cb: Codebook) -> anyhow::Result<()> {
-        anyhow::ensure!(
-            cb.nodes == self.grid.node_count() && cb.weights.len() == cb.nodes * cb.dim,
-            "initial codebook shape {}x{} does not match map {}x{}",
-            cb.nodes,
-            cb.dim,
-            self.grid.rows,
-            self.grid.cols
-        );
+        if cb.nodes != self.grid.node_count() || cb.weights.len() != cb.nodes * cb.dim {
+            // Embed a typed error so the public surface recovers the
+            // `config` code when this crosses it via `From<anyhow::Error>`.
+            return Err(anyhow::Error::new(SomError::config(format!(
+                "initial codebook shape {}x{} does not match map {}x{}",
+                cb.nodes, cb.dim, self.grid.rows, self.grid.cols
+            ))));
+        }
         self.codebook = Some(cb);
         Ok(())
     }
@@ -809,11 +952,12 @@ impl SomSession {
     ) -> anyhow::Result<()> {
         let dim = source.dim();
         if let Some(cb) = &self.codebook {
-            anyhow::ensure!(
-                cb.dim == dim,
-                "data dim {dim} does not match the session codebook dim {}",
-                cb.dim
-            );
+            if cb.dim != dim {
+                return Err(anyhow::Error::new(SomError::data(format!(
+                    "data dim {dim} does not match the session codebook dim {}",
+                    cb.dim
+                ))));
+            }
             return Ok(());
         }
         let cb = if self.cfg.initialization == Initialization::Random {
@@ -821,11 +965,13 @@ impl SomSession {
         } else {
             match source.resident() {
                 Some(shard) => init_codebook_with_data(&self.cfg, &self.grid, shard)?,
-                None => anyhow::bail!(
-                    "PCA initialization needs the data resident in memory; \
-                     streamed sources support only --initialization random \
-                     (or an explicit -c codebook)"
-                ),
+                None => {
+                    return Err(anyhow::Error::new(SomError::config(
+                        "PCA initialization needs the data resident in memory; \
+                         streamed sources support only --initialization random \
+                         (or an explicit -c codebook)",
+                    )))
+                }
             }
         };
         self.codebook = Some(cb);
@@ -843,14 +989,17 @@ impl SomSession {
         let (radius, scale) = self.schedule_now();
         self.ensure_kernel()?;
         let cb = self.codebook.as_ref().ok_or_else(|| {
-            anyhow::anyhow!("session has no codebook yet (fit or resume first)")
+            anyhow::Error::new(SomError::state(
+                "session has no codebook yet (fit or resume first)",
+            ))
         })?;
-        anyhow::ensure!(
-            cb.dim == source.dim(),
-            "data dim {} does not match the session codebook dim {}",
-            source.dim(),
-            cb.dim
-        );
+        if cb.dim != source.dim() {
+            return Err(anyhow::Error::new(SomError::data(format!(
+                "data dim {} does not match the session codebook dim {}",
+                source.dim(),
+                cb.dim
+            ))));
+        }
         let kernel = self.kernel.as_mut().expect("just ensured");
         let grid = &self.grid;
         let cfg = &self.cfg;
@@ -906,11 +1055,20 @@ impl SomSession {
         self.maybe_checkpoint()
     }
 
-    /// Save a numbered checkpoint when the policy cadence is due.
-    pub(crate) fn maybe_checkpoint(&self) -> anyhow::Result<()> {
-        if let Some((every, prefix)) = &self.checkpoint {
-            if *every > 0 && self.epoch % *every == 0 {
-                self.save_checkpoint(checkpoint_path(prefix, self.epoch))?;
+    /// Save a numbered checkpoint when the policy cadence is due, then
+    /// run retention GC over the checkpoints this session has written.
+    pub(crate) fn maybe_checkpoint(&mut self) -> anyhow::Result<()> {
+        let due = match &self.checkpoint {
+            Some(p) if p.every > 0 && self.epoch % p.every == 0 => {
+                Some(checkpoint_path(&p.prefix, self.epoch))
+            }
+            _ => None,
+        };
+        if let Some(path) = due {
+            self.save_checkpoint(&path)?;
+            if let Some(p) = self.checkpoint.as_mut() {
+                p.written.push_back(path);
+                p.gc();
             }
         }
         Ok(())
@@ -919,7 +1077,7 @@ impl SomSession {
     /// The checkpoint cadence, if a policy is set (the cluster runner
     /// sizes its training windows by it).
     pub(crate) fn checkpoint_interval(&self) -> Option<usize> {
-        self.checkpoint.as_ref().map(|(every, _)| *every)
+        self.checkpoint.as_ref().map(|p| p.every)
     }
 
     /// Adopt the master's state after a cluster training window: the
@@ -1100,5 +1258,72 @@ mod tests {
             checkpoint_path("out/map", 12),
             PathBuf::from("out/map.epoch12.somc")
         );
+    }
+
+    #[test]
+    fn checkpoint_gc_keeps_last_n() {
+        let dir = std::env::temp_dir().join(format!(
+            "somoclu-gc-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let prefix = dir.join("map");
+        let (data, dim) = blob(60);
+        let mut s = small()
+            .epochs(6)
+            .checkpoint_every(1, &prefix)
+            .checkpoint_keep_last(2)
+            .build()
+            .unwrap();
+        s.fit(DataInput::BorrowedF32 { data: &data, dim }).unwrap();
+        // Only the newest two survive retention.
+        for e in 1..=4 {
+            assert!(!checkpoint_path(&prefix, e).exists(), "epoch {e} kept");
+        }
+        for e in 5..=6 {
+            assert!(checkpoint_path(&prefix, e).exists(), "epoch {e} deleted");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn checkpoint_gc_never_deletes_protected() {
+        let dir = std::env::temp_dir().join(format!(
+            "somoclu-gc-pin-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let prefix = dir.join("map");
+        let (data, dim) = blob(61);
+        let mut s = small()
+            .epochs(6)
+            .checkpoint_every(1, &prefix)
+            .checkpoint_keep_last(1)
+            .build()
+            .unwrap();
+        let pins = Arc::new(Mutex::new(HashSet::new()));
+        pins.lock().unwrap().insert(checkpoint_path(&prefix, 2));
+        s.set_checkpoint_protected(pins);
+        s.fit(DataInput::BorrowedF32 { data: &data, dim }).unwrap();
+        // The pinned epoch-2 checkpoint survives alongside the newest.
+        assert!(checkpoint_path(&prefix, 2).exists());
+        assert!(checkpoint_path(&prefix, 6).exists());
+        assert!(!checkpoint_path(&prefix, 5).exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn errors_carry_stable_codes() {
+        let mut s = small().build().unwrap();
+        assert_eq!(s.bmu(&[0.0; 5]).unwrap_err().code(), "state");
+        assert_eq!(
+            Som::builder().epochs(0).build().unwrap_err().code(),
+            "config"
+        );
+        let (data, dim) = blob(62);
+        s.fit(DataInput::BorrowedF32 { data: &data, dim }).unwrap();
+        assert_eq!(s.bmu(&[0.0; 3]).unwrap_err().code(), "data");
     }
 }

@@ -23,6 +23,30 @@ pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
     acc
 }
 
+/// Best-matching unit of one dense vector by plain linear scan:
+/// `(node, distance)`, ties to the lowest node index. Kernel-independent
+/// and deterministic — **the** BMU-lookup arithmetic shared by
+/// [`crate::session::SomSession::bmu`] and the serving daemon's `bmu`
+/// request path, so a served answer is bit-identical to the offline one
+/// by construction, not by coincidence.
+///
+/// The caller guarantees `x.len() == codebook.dim` and a non-empty map;
+/// distance is `sqrt(max(sq_dist, 0))` in f32 (the clamp guards the
+/// tiny negative residue cancellation can leave).
+pub fn linear_bmu(codebook: &Codebook, x: &[f32]) -> (usize, f32) {
+    debug_assert_eq!(x.len(), codebook.dim);
+    let mut best = 0usize;
+    let mut best_d = f32::INFINITY;
+    for n in 0..codebook.nodes {
+        let d = sq_dist(x, codebook.row(n));
+        if d < best_d {
+            best_d = d;
+            best = n;
+        }
+    }
+    (best, best_d.max(0.0).sqrt())
+}
+
 /// Mean quantization error over dense rows given their BMUs.
 ///
 /// Each row's Euclidean distance is computed in f32 (`sq_dist(..).sqrt()`

@@ -112,16 +112,134 @@ fn sparse_kernel_invocation() {
 }
 
 #[test]
-fn help_lists_paper_flags() {
-    let out = Command::new(bin()).arg("--help").output().unwrap();
+fn train_help_lists_paper_flags() {
+    let out = Command::new(bin()).args(["train", "--help"]).output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
     for flag in [
         "-c", "-e", "-g", "-k", "-m", "-n", "-p", "-t", "-r", "-R", "-T",
-        "-l", "-L", "-s", "-x", "-y", "--ranks", "INPUT_FILE",
-        "OUTPUT_PREFIX",
+        "-l", "-L", "-s", "-x", "-y", "--ranks", "--keep-last",
+        "INPUT_FILE", "OUTPUT_PREFIX",
     ] {
         assert!(text.contains(flag), "missing {flag} in:\n{text}");
+    }
+}
+
+#[test]
+fn top_level_help_lists_subcommands() {
+    for invocation in [vec!["--help"], vec!["help"], vec![]] {
+        let out = Command::new(bin()).args(&invocation).output().unwrap();
+        assert!(out.status.success(), "{invocation:?}");
+        let text = String::from_utf8_lossy(&out.stdout);
+        for needle in [
+            "Usage", "somoclu train", "somoclu serve", "somoclu convert",
+            "somoclu info",
+        ] {
+            assert!(text.contains(needle), "missing {needle} in:\n{text}");
+        }
+    }
+}
+
+#[test]
+fn per_subcommand_help_screens() {
+    let out = Command::new(bin()).args(["serve", "--help"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for needle in ["LISTEN_ADDR", "--checkpoint", "--state-dir"] {
+        assert!(text.contains(needle), "missing {needle} in:\n{text}");
+    }
+
+    let out = Command::new(bin()).args(["convert", "--help"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("--sparse"), "{text}");
+}
+
+#[test]
+fn flat_invocation_is_deprecated_train_alias() {
+    // `somoclu train ...` and the pre-subcommand flat form produce
+    // byte-identical outputs; only the flat form warns on stderr.
+    let dir = tmpdir("alias");
+    let mut rng = Rng::new(506);
+    let (d, _) = data::gaussian_blobs(80, 4, 3, 0.2, &mut rng);
+    let input = dir.join("data.txt");
+    dense::write_dense(&input, 80, 4, &d, false).unwrap();
+
+    let sub_prefix = dir.join("sub");
+    let out = Command::new(bin())
+        .args([
+            "train", "-e", "3", "-x", "6", "-y", "6", "-r", "3",
+            input.to_str().unwrap(),
+            sub_prefix.to_str().unwrap(),
+        ])
+        .output()
+        .expect("binary runs");
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(
+        !String::from_utf8_lossy(&out.stderr).contains("deprecated"),
+        "subcommand form must not warn"
+    );
+
+    let flat_prefix = dir.join("flat");
+    let out = Command::new(bin())
+        .args([
+            "-e", "3", "-x", "6", "-y", "6", "-r", "3",
+            input.to_str().unwrap(),
+            flat_prefix.to_str().unwrap(),
+        ])
+        .output()
+        .expect("binary runs");
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("deprecated"),
+        "flat form must print the deprecation notice"
+    );
+
+    for ext in [".wts", ".bm", ".umx"] {
+        let a = std::fs::read(format!("{}{ext}", sub_prefix.display())).unwrap();
+        let b = std::fs::read(format!("{}{ext}", flat_prefix.display())).unwrap();
+        assert_eq!(a, b, "{ext} diverged between train and flat alias");
+    }
+}
+
+#[test]
+fn keep_last_prunes_old_checkpoints() {
+    // --keep-last N retains only the newest N cadence checkpoints.
+    let dir = tmpdir("keep_last");
+    let mut rng = Rng::new(507);
+    let (d, _) = data::gaussian_blobs(60, 4, 3, 0.2, &mut rng);
+    let input = dir.join("data.txt");
+    dense::write_dense(&input, 60, 4, &d, false).unwrap();
+    let prefix = dir.join("out");
+    let out = Command::new(bin())
+        .args([
+            "train", "-e", "6", "-x", "5", "-y", "5", "-r", "2",
+            "--checkpoint-every", "1", "--keep-last", "2",
+            input.to_str().unwrap(),
+            prefix.to_str().unwrap(),
+        ])
+        .output()
+        .expect("binary runs");
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    for k in [5, 6] {
+        let p = format!("{}.epoch{k}.somc", prefix.display());
+        assert!(std::path::Path::new(&p).exists(), "{p} should survive GC");
+    }
+    for k in [1, 2, 3, 4] {
+        let p = format!("{}.epoch{k}.somc", prefix.display());
+        assert!(!std::path::Path::new(&p).exists(), "{p} should be pruned");
     }
 }
 

@@ -1,0 +1,498 @@
+//! End-to-end tests of the `somoclu serve` daemon (ISSUE 8):
+//!
+//! * served `bmu`/`project` answers are **bit-identical** to offline
+//!   [`SomSession`] answers, including under ≥ 8 concurrent clients;
+//! * hot swap is atomic under load: while a training job publishes a
+//!   new map, every answer matches exactly the old map or the new one,
+//!   and every projected batch is entirely one map's answer (no torn
+//!   reads);
+//! * graceful shutdown drains: a running job checkpoints, re-queues in
+//!   the journal, and a fresh daemon on the same state dir resumes it
+//!   from where it stopped (not epoch 0);
+//! * malformed and version-mismatched requests are rejected with typed
+//!   `protocol` errors before (hello) or at (frame) the parse boundary.
+//!
+//! Everything binds `127.0.0.1:0` (or a unix socket) so tests run in
+//! parallel without port clashes.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use somoclu::api::DataInput;
+use somoclu::coordinator::config::TrainConfig;
+use somoclu::serve::{Client, DaemonHandle, JobEvent, Response, ServeOptions, VERSION};
+use somoclu::session::{Som, SomSession};
+use somoclu::util::rng::Rng;
+
+const DIM: usize = 6;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "somoclu-serve-{tag}-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn blob_data(seed: u64, rows: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    somoclu::data::gaussian_blobs(rows, DIM, 4, 0.2, &mut rng).0
+}
+
+fn small_cfg(epochs: usize) -> TrainConfig {
+    TrainConfig {
+        rows: 7,
+        cols: 7,
+        epochs,
+        threads: 2,
+        radius0: Some(3.0),
+        ..Default::default()
+    }
+}
+
+/// Train a small map offline and checkpoint it into `dir`.
+fn make_checkpoint(dir: &Path, tag: &str, seed: u64, epochs: usize) -> PathBuf {
+    let data = blob_data(seed, 120);
+    let mut s = Som::builder().config(small_cfg(epochs)).build().unwrap();
+    s.fit(DataInput::BorrowedF32 { data: &data, dim: DIM }).unwrap();
+    let ck = dir.join(format!("{tag}.somc"));
+    s.save_checkpoint(&ck).unwrap();
+    ck
+}
+
+fn offline(ck: &Path) -> SomSession {
+    let mut s = Som::resume(ck).unwrap();
+    s.set_threads(2);
+    s
+}
+
+fn serve_opts(dir: &Path, ck: Option<&Path>) -> ServeOptions {
+    let mut opts = ServeOptions::new(dir.join("state"));
+    opts.checkpoint = ck.map(Path::to_path_buf);
+    opts.threads = 2;
+    opts
+}
+
+/// Per-query offline reference: `(node, distance bits)`.
+fn offline_bmus(session: &SomSession, queries: &[f32]) -> Vec<(usize, u32)> {
+    queries
+        .chunks(DIM)
+        .map(|x| {
+            let (node, d) = session.bmu(x).unwrap();
+            (node, d.to_bits())
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Concurrent-client bit-equality
+// ---------------------------------------------------------------------
+
+/// ≥ 8 concurrent clients; every `bmu` and `project` answer must be
+/// bit-identical to the offline session over the same checkpoint.
+#[test]
+fn concurrent_clients_match_offline_answers() {
+    let dir = tmpdir("concurrent");
+    let ck = make_checkpoint(&dir, "map", 11, 6);
+    let daemon = DaemonHandle::spawn(serve_opts(&dir, Some(&ck))).unwrap();
+    let addr = daemon.addr().to_string();
+
+    let queries = Arc::new(blob_data(99, 32)); // held-out data
+    let mut off = offline(&ck);
+    let want_bmus = Arc::new(offline_bmus(&off, &queries));
+    let want_project = Arc::new(
+        off.project(DataInput::BorrowedF32 { data: &queries, dim: DIM }).unwrap(),
+    );
+
+    let threads: Vec<_> = (0..8)
+        .map(|_| {
+            let (addr, queries) = (addr.clone(), Arc::clone(&queries));
+            let (want_bmus, want_project) =
+                (Arc::clone(&want_bmus), Arc::clone(&want_project));
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                for _ in 0..5 {
+                    for (x, want) in queries.chunks(DIM).zip(want_bmus.iter()) {
+                        let (node, d) = c.bmu(x).unwrap();
+                        assert_eq!((node, d.to_bits()), *want);
+                    }
+                    assert_eq!(c.project(DIM, &queries).unwrap(), *want_project);
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+
+    // Status reflects the served map and counted the load.
+    let mut c = Client::connect(&addr).unwrap();
+    let st = c.status().unwrap();
+    assert_eq!((st.rows, st.cols, st.dim), (7, 7, DIM as u32));
+    assert_eq!(st.epoch, 6);
+    assert!(st.checkpoint.ends_with("map.somc"), "{}", st.checkpoint);
+    assert!(st.requests_served >= 8 * 5 * 33, "{}", st.requests_served);
+
+    // Quality goes through the same offline arithmetic.
+    let (qe, te) = c.quality(DIM, &queries).unwrap();
+    let bmus: Vec<usize> = want_project.iter().map(|&b| b as usize).collect();
+    let cb = off.codebook().unwrap();
+    let want_qe = somoclu::som::quality::quantization_error(&queries, DIM, cb, &bmus);
+    let want_te =
+        somoclu::som::quality::topographic_error(&queries, DIM, off.grid(), cb, 2);
+    assert_eq!(qe.to_bits(), want_qe.to_bits());
+    assert_eq!(te.to_bits(), want_te.to_bits());
+
+    daemon.stop().unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// The same bit-equality over a unix-domain socket.
+#[cfg(unix)]
+#[test]
+fn unix_socket_serves_identical_answers() {
+    let dir = tmpdir("unix");
+    let ck = make_checkpoint(&dir, "map", 12, 5);
+    let mut opts = serve_opts(&dir, Some(&ck));
+    opts.addr = format!("unix:{}", dir.join("somoclu.sock").display());
+    let daemon = DaemonHandle::spawn(opts).unwrap();
+
+    let queries = blob_data(98, 8);
+    let want = offline_bmus(&offline(&ck), &queries);
+    let mut c = Client::connect(daemon.addr()).unwrap();
+    for (x, w) in queries.chunks(DIM).zip(want.iter()) {
+        let (node, d) = c.bmu(x).unwrap();
+        assert_eq!((node, d.to_bits()), *w);
+    }
+    drop(c);
+    daemon.stop().unwrap();
+    // The socket file is removed on drain.
+    assert!(!dir.join("somoclu.sock").exists());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Typed request errors
+// ---------------------------------------------------------------------
+
+#[test]
+fn typed_errors_for_bad_requests() {
+    let dir = tmpdir("typed-errors");
+
+    // An empty daemon answers reads with a `state` error.
+    let empty = DaemonHandle::spawn(serve_opts(&dir, None)).unwrap();
+    let mut c = Client::connect(empty.addr()).unwrap();
+    assert_eq!(c.bmu(&[0.0; DIM]).unwrap_err().code(), "state");
+    let st = c.status().unwrap(); // status still answers
+    assert_eq!(st.checkpoint, "");
+    drop(c);
+    empty.stop().unwrap();
+
+    // A serving daemon rejects dimension mismatches with `data`.
+    let ck = make_checkpoint(&dir, "map", 13, 4);
+    let daemon = DaemonHandle::spawn(serve_opts(&dir, Some(&ck))).unwrap();
+    let mut c = Client::connect(daemon.addr()).unwrap();
+    assert_eq!(c.bmu(&[0.0; DIM + 1]).unwrap_err().code(), "data");
+    assert_eq!(c.project(DIM, &[0.0; DIM + 1]).unwrap_err().code(), "data");
+    assert_eq!(c.project(0, &[]).unwrap_err().code(), "data");
+    // Bad job submissions fail at submit time with `job`.
+    let argv = |v: &[&str]| v.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+    assert_eq!(c.submit(&argv(&["-e", "3"])).unwrap_err().code(), "job");
+    assert_eq!(
+        c.submit(&argv(&["--ranks", "2", "in", "out"])).unwrap_err().code(),
+        "job"
+    );
+    // Watching an unknown job is a `job` error; the connection survives.
+    c.watch(999).unwrap();
+    assert_eq!(c.next_event().unwrap_err().code(), "job");
+    assert!(c.status().is_ok());
+    drop(c);
+    daemon.stop().unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Protocol-level rejection (raw bytes)
+// ---------------------------------------------------------------------
+
+fn read_error_frame(s: &mut TcpStream) -> (String, String) {
+    let mut len = [0u8; 4];
+    s.read_exact(&mut len).unwrap();
+    let mut payload = vec![0u8; u32::from_le_bytes(len) as usize];
+    s.read_exact(&mut payload).unwrap();
+    match Response::decode(&payload).unwrap() {
+        Response::Error { code, message } => (code, message),
+        other => panic!("wanted an error frame, got {other:?}"),
+    }
+}
+
+#[test]
+fn malformed_and_mismatched_requests_rejected() {
+    let dir = tmpdir("reject");
+    let ck = make_checkpoint(&dir, "map", 14, 3);
+    let daemon = DaemonHandle::spawn(serve_opts(&dir, Some(&ck))).unwrap();
+    let addr = daemon.addr().to_string();
+
+    // Wrong version: rejected before the daemon echoes its hello.
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.write_all(b"SOMS").unwrap();
+    s.write_all(&(VERSION + 1).to_le_bytes()).unwrap();
+    let (code, message) = read_error_frame(&mut s);
+    assert_eq!(code, "protocol");
+    assert!(message.contains("version"), "{message}");
+    // ... and the connection is closed.
+    assert_eq!(s.read(&mut [0u8; 1]).unwrap(), 0);
+
+    // Wrong magic.
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.write_all(b"HTTP").unwrap();
+    s.write_all(&VERSION.to_le_bytes()).unwrap();
+    let (code, message) = read_error_frame(&mut s);
+    assert_eq!(code, "protocol");
+    assert!(message.contains("magic"), "{message}");
+
+    // Good hello, then a frame with an unknown request tag: a typed
+    // reject, then close (the stream is no longer trustworthy).
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.write_all(b"SOMS").unwrap();
+    s.write_all(&VERSION.to_le_bytes()).unwrap();
+    let mut hello = [0u8; 8];
+    s.read_exact(&mut hello).unwrap();
+    assert_eq!(&hello[..4], b"SOMS");
+    s.write_all(&1u32.to_le_bytes()).unwrap(); // frame length 1
+    s.write_all(&[0xFF]).unwrap(); // unknown tag
+    let (code, _) = read_error_frame(&mut s);
+    assert_eq!(code, "protocol");
+    assert_eq!(s.read(&mut [0u8; 1]).unwrap(), 0);
+
+    // Good hello, then a truncated Bmu payload (tag only, no vector).
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.write_all(&somoclu::serve::protocol::MAGIC).unwrap();
+    s.write_all(&VERSION.to_le_bytes()).unwrap();
+    s.read_exact(&mut hello).unwrap();
+    s.write_all(&1u32.to_le_bytes()).unwrap();
+    s.write_all(&[1]).unwrap(); // REQ_BMU with missing fields
+    let (code, _) = read_error_frame(&mut s);
+    assert_eq!(code, "protocol");
+
+    daemon.stop().unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Jobs: hot swap under load
+// ---------------------------------------------------------------------
+
+fn write_train_file(dir: &Path, seed: u64, rows: usize) -> PathBuf {
+    let data = blob_data(seed, rows);
+    let path = dir.join(format!("train-{seed}.txt"));
+    somoclu::io::dense::write_dense(&path, rows, DIM, &data, false).unwrap();
+    path
+}
+
+/// Queries answered while a job trains and publishes must each match
+/// the old map or the new one exactly — and a projected batch must be
+/// entirely one map's answer.
+#[test]
+fn hot_swap_is_atomic_under_load() {
+    let dir = tmpdir("hotswap");
+    let ck_a = make_checkpoint(&dir, "a", 21, 5);
+    let daemon = DaemonHandle::spawn(serve_opts(&dir, Some(&ck_a))).unwrap();
+    let addr = daemon.addr().to_string();
+
+    let queries = Arc::new(blob_data(97, 16));
+    let mut off_a = offline(&ck_a);
+    let bmus_a = Arc::new(offline_bmus(&off_a, &queries));
+    let project_a = Arc::new(
+        off_a.project(DataInput::BorrowedF32 { data: &queries, dim: DIM }).unwrap(),
+    );
+
+    // 8 load threads record every answer while the job swaps the map.
+    let stop = Arc::new(AtomicBool::new(false));
+    let seen_bmu: Arc<Mutex<Vec<Vec<(usize, u32)>>>> = Arc::new(Mutex::new(Vec::new()));
+    let seen_project: Arc<Mutex<Vec<Vec<u32>>>> = Arc::new(Mutex::new(Vec::new()));
+    let load: Vec<_> = (0..8)
+        .map(|_| {
+            let (addr, queries, stop) =
+                (addr.clone(), Arc::clone(&queries), Arc::clone(&stop));
+            let (seen_bmu, seen_project) =
+                (Arc::clone(&seen_bmu), Arc::clone(&seen_project));
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                while !stop.load(Ordering::SeqCst) {
+                    let round: Vec<(usize, u32)> = queries
+                        .chunks(DIM)
+                        .map(|x| {
+                            let (node, d) = c.bmu(x).unwrap();
+                            (node, d.to_bits())
+                        })
+                        .collect();
+                    seen_bmu.lock().unwrap().push(round);
+                    seen_project
+                        .lock()
+                        .unwrap()
+                        .push(c.project(DIM, &queries).unwrap());
+                }
+            })
+        })
+        .collect();
+
+    // Train map B through the job queue (different data and schedule).
+    let input = write_train_file(&dir, 22, 120);
+    let out = dir.join("jobout");
+    let mut c = Client::connect(&addr).unwrap();
+    let argv: Vec<String> = [
+        "-x", "7", "-y", "7", "-e", "9", "-r", "3.0", "--threads", "2",
+        input.to_str().unwrap(),
+        out.to_str().unwrap(),
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    let job = c.submit(&argv).unwrap();
+    assert_eq!(job, 1);
+    c.watch(job).unwrap();
+    let ck_b = loop {
+        match c.next_event().unwrap() {
+            JobEvent::Done { checkpoint } => break PathBuf::from(checkpoint),
+            JobEvent::Failed { code, message } => panic!("job failed: {code}: {message}"),
+            JobEvent::Epoch { .. } => {}
+        }
+    };
+    // Let the load threads observe the published map for a few rounds.
+    std::thread::sleep(Duration::from_millis(100));
+    stop.store(true, Ordering::SeqCst);
+    for t in load {
+        t.join().unwrap();
+    }
+
+    // Offline reference for map B.
+    let mut off_b = offline(&ck_b);
+    let bmus_b = offline_bmus(&off_b, &queries);
+    let project_b =
+        off_b.project(DataInput::BorrowedF32 { data: &queries, dim: DIM }).unwrap();
+    assert_ne!(*bmus_a, bmus_b, "maps too similar for the swap to be observable");
+
+    // Every recorded answer matches map A or map B — bit-exactly.
+    for round in seen_bmu.lock().unwrap().iter() {
+        for (i, got) in round.iter().enumerate() {
+            assert!(
+                *got == bmus_a[i] || *got == bmus_b[i],
+                "bmu answer matches neither map: query {i}, got {got:?}"
+            );
+        }
+    }
+    // Projected batches are atomic: entirely A or entirely B.
+    let mut saw_b = false;
+    for batch in seen_project.lock().unwrap().iter() {
+        assert!(
+            *batch == *project_a || *batch == project_b,
+            "torn project batch: {batch:?}"
+        );
+        saw_b |= *batch == project_b;
+    }
+    assert!(saw_b, "no load thread ever observed the published map");
+
+    // After the swap, answers come from B and status names its checkpoint.
+    let (node, d) = c.bmu(&queries[..DIM]).unwrap();
+    assert_eq!((node, d.to_bits()), bmus_b[0]);
+    let st = c.status().unwrap();
+    assert!(st.checkpoint.ends_with("job1.final.somc"), "{}", st.checkpoint);
+    assert_eq!(st.epoch, 9);
+
+    daemon.stop().unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Graceful shutdown + journal resume
+// ---------------------------------------------------------------------
+
+/// Drain mid-job: the watcher gets a typed `job` error, the job
+/// re-queues at its last checkpoint, and a fresh daemon on the same
+/// state dir finishes it from there (never from epoch 0).
+#[test]
+fn drain_requeues_and_restart_resumes() {
+    let dir = tmpdir("drain");
+    let ck = make_checkpoint(&dir, "a", 31, 3);
+    let daemon = DaemonHandle::spawn(serve_opts(&dir, Some(&ck))).unwrap();
+
+    let input = write_train_file(&dir, 32, 120);
+    let out = dir.join("jobout");
+    let mut watcher = Client::connect(daemon.addr()).unwrap();
+    let mut killer = Client::connect(daemon.addr()).unwrap();
+    // Checkpoint every epoch so the drain point is always resumable.
+    let argv: Vec<String> = [
+        "-x", "6", "-y", "6", "-e", "800", "-r", "2.5",
+        "--checkpoint-every", "1",
+        input.to_str().unwrap(),
+        out.to_str().unwrap(),
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    let job = watcher.submit(&argv).unwrap();
+    watcher.watch(job).unwrap();
+    // First epoch completed (epoch stats are 0-based) -> the job is
+    // mid-flight; ask for a drain.
+    match watcher.next_event().unwrap() {
+        JobEvent::Epoch { epoch, .. } => assert_eq!(epoch, 0),
+        other => panic!("wanted the first epoch event, got {other:?}"),
+    }
+    killer.shutdown().unwrap();
+    // The watcher stream ends with a typed drain notice (more epoch
+    // events may arrive first while the in-flight epoch finishes).
+    let drain_err = loop {
+        match watcher.next_event() {
+            Ok(JobEvent::Epoch { .. }) => {}
+            Ok(other) => panic!("job should not finish during drain: {other:?}"),
+            Err(e) => break e,
+        }
+    };
+    assert_eq!(drain_err.code(), "job");
+    daemon.wait().unwrap();
+
+    // Restart on the same state dir: the journal re-queues the job and
+    // the worker resumes it from its newest checkpoint.
+    let daemon2 = DaemonHandle::spawn(serve_opts(&dir, Some(&ck))).unwrap();
+    let mut c = Client::connect(daemon2.addr()).unwrap();
+    c.watch(job).unwrap();
+    let mut first_epoch_after_restart = None;
+    let final_ck = loop {
+        match c.next_event().unwrap() {
+            JobEvent::Epoch { epoch, .. } => {
+                first_epoch_after_restart.get_or_insert(epoch);
+            }
+            JobEvent::Done { checkpoint } => break checkpoint,
+            JobEvent::Failed { code, message } => panic!("resume failed: {code}: {message}"),
+        }
+    };
+    // A fresh (non-resumed) run would start back at epoch 0; the drain
+    // checkpointed at least one epoch, so a resume starts at >= 1.
+    assert!(
+        first_epoch_after_restart.unwrap_or(u64::MAX) >= 1,
+        "restart must resume from a checkpoint, not epoch 0; \
+         got {first_epoch_after_restart:?}"
+    );
+    assert!(final_ck.ends_with("job1.final.somc"), "{final_ck}");
+    let st = c.status().unwrap();
+    assert_eq!(st.epoch, 800);
+    assert!(st.checkpoint.ends_with("job1.final.somc"), "{}", st.checkpoint);
+    // The served map answers match an offline resume of the same final
+    // checkpoint — the bit-equality contract survives drain + resume.
+    let queries = blob_data(96, 4);
+    let want = offline_bmus(&offline(Path::new(&final_ck)), &queries);
+    for (x, w) in queries.chunks(DIM).zip(want.iter()) {
+        let (node, d) = c.bmu(x).unwrap();
+        assert_eq!((node, d.to_bits()), *w);
+    }
+
+    daemon2.stop().unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
