@@ -2,10 +2,12 @@
 //! subcommands since v0.2:
 //!
 //! ```text
-//! somoclu train [OPTIONS] INPUT_FILE OUTPUT_PREFIX   # batch training
-//! somoclu serve [OPTIONS] LISTEN_ADDR                # checkpoint-serving daemon
-//! somoclu convert [OPTIONS] INPUT_FILE OUTPUT_FILE   # text -> binary container
-//! somoclu info [OPTIONS] INPUT_FILE                  # container inspector
+//! somoclu train [OPTIONS] INPUT_FILE OUTPUT_PREFIX    # batch training
+//! somoclu ensemble [OPTIONS] INPUT_FILE OUTPUT_PREFIX # K-map SCE consensus clustering
+//! somoclu quality [OPTIONS] CHECKPOINT DATA_FILE      # map-quality JSON report
+//! somoclu serve [OPTIONS] LISTEN_ADDR                 # checkpoint-serving daemon
+//! somoclu convert [OPTIONS] INPUT_FILE OUTPUT_FILE    # text -> binary container
+//! somoclu info [OPTIONS] INPUT_FILE                   # container inspector
 //! ```
 //!
 //! The historical flat form `somoclu [OPTIONS] INPUT OUTPUT_PREFIX`
@@ -214,6 +216,144 @@ pub fn parse_serve(parsed: &Parsed) -> Result<ServeCliOptions, ArgError> {
         state_dir: parsed.get("state-dir").unwrap().to_string(),
         threads,
         verbose: parsed.flag("verbose"),
+    })
+}
+
+/// Argument spec for the `somoclu ensemble` subcommand: train K
+/// independently-seeded maps, cluster each codebook, and combine the
+/// labelings into one consensus (`crate::ensemble`). The training
+/// knobs mirror `somoclu train` where they apply; `-k` means *members*
+/// here (ensemble size), not kernel — the ensemble always trains on
+/// the dense CPU path.
+pub fn ensemble_spec() -> ArgSpec {
+    ArgSpec::new()
+        .opt("members", Some('k'), Some("members"),
+             "ensemble members (independently-seeded maps) to train", Some("5"))
+        .opt("clusters", Some('c'), Some("clusters"),
+             "k-means clusters to cut each member's codebook into", Some("8"))
+        .opt("epochs", Some('e'), Some("epochs"),
+             "training epochs per member", Some("10"))
+        .opt("grid", Some('g'), Some("grid"),
+             "grid type: square | hexagonal", Some("square"))
+        .opt("map", Some('m'), Some("map"),
+             "map type: planar | toroid", Some("planar"))
+        .opt("columns", Some('x'), Some("columns"),
+             "number of map columns", Some("50"))
+        .opt("rows", Some('y'), Some("rows"),
+             "number of map rows", Some("50"))
+        .opt("radius0", Some('r'), Some("radius0"),
+             "start radius (default: half of smaller map side)", None)
+        .opt("seed", None, Some("seed"),
+             "base seed; member i trains with a seed derived from it",
+             Some("1347440723"))
+        .opt("kmeans-iters", None, Some("kmeans-iters"),
+             "Lloyd iteration cap for the per-member k-means", Some("100"))
+        .opt("threads", None, Some("threads"),
+             "total worker threads, split across members (0 = one per \
+              member)", Some("0"))
+        .opt("checkpoint-every", None, Some("checkpoint-every"),
+             "write OUTPUT_PREFIX.m<i>.epoch<k>.somc every N epochs per \
+              member and resume members from existing checkpoints (0 = \
+              off)", Some("0"))
+        .flag("help", Some('h'), Some("help"), "print usage")
+        .flag("verbose", Some('v'), Some("verbose"), "per-member summary lines")
+        .positional("INPUT_FILE", "dense training data (text)")
+        .positional("OUTPUT_PREFIX",
+                    "prefix for .m<i>.bm / .consensus.lbl / .ensemble.json")
+}
+
+/// Parsed `somoclu ensemble` options.
+#[derive(Debug, Clone)]
+pub struct EnsembleCliOptions {
+    pub input_file: String,
+    pub output_prefix: String,
+    pub members: usize,
+    pub clusters: usize,
+    pub kmeans_iters: usize,
+    pub checkpoint_every: usize,
+    pub config: TrainConfig,
+    pub verbose: bool,
+}
+
+pub fn parse_ensemble(parsed: &Parsed) -> Result<EnsembleCliOptions, ArgError> {
+    let mut cfg = TrainConfig {
+        epochs: parsed.parse_as::<usize>("epochs")?,
+        rows: parsed.parse_as::<usize>("rows")?,
+        cols: parsed.parse_as::<usize>("columns")?,
+        seed: parsed.parse_as::<u64>("seed")?,
+        threads: parsed.parse_as::<usize>("threads")?,
+        ..Default::default()
+    };
+    let gv = parsed.get("grid").unwrap();
+    cfg.grid_type = gv.parse().map_err(|e| bad("grid", gv, e))?;
+    let mv = parsed.get("map").unwrap();
+    cfg.map_type = mv.parse().map_err(|e| bad("map", mv, e))?;
+    if let Some(r0) = parsed.get("radius0") {
+        cfg.radius0 =
+            Some(r0.parse::<f32>().map_err(|e| bad("radius0", r0, e.to_string()))?);
+    }
+    let members = parsed.parse_as::<usize>("members")?;
+    if members == 0 {
+        return Err(bad("members", "0", "the ensemble needs at least 1 member".into()));
+    }
+    let clusters = parsed.parse_as::<usize>("clusters")?;
+    if clusters == 0 {
+        return Err(bad("clusters", "0", "need at least 1 cluster".into()));
+    }
+    Ok(EnsembleCliOptions {
+        input_file: parsed.positional(0).to_string(),
+        output_prefix: parsed.positional(1).to_string(),
+        members,
+        clusters,
+        kmeans_iters: parsed.parse_as::<usize>("kmeans-iters")?,
+        checkpoint_every: parsed.parse_as::<usize>("checkpoint-every")?,
+        config: cfg,
+        verbose: parsed.flag("verbose"),
+    })
+}
+
+/// Argument spec for the `somoclu quality` subcommand: load a SOMC
+/// checkpoint, project a data set through it, and emit the versioned
+/// quality JSON ([`crate::som::quality::QualityReport`]).
+pub fn quality_spec() -> ArgSpec {
+    ArgSpec::new()
+        .opt("knn", Some('k'), Some("knn"),
+             "neighborhood size for trustworthiness / neighborhood \
+              preservation", Some("10"))
+        .opt("threads", None, Some("threads"),
+             "worker threads (0 = all cores)", Some("0"))
+        .opt("out", Some('o'), Some("out"),
+             "write the JSON report here instead of stdout", None)
+        .flag("planes", None, Some("planes"),
+              "include full per-node component-plane values (large)")
+        .flag("help", Some('h'), Some("help"), "print usage")
+        .positional("CHECKPOINT", "trained map to evaluate (.somc)")
+        .positional("DATA_FILE", "dense evaluation data (text)")
+}
+
+/// Parsed `somoclu quality` options.
+#[derive(Debug, Clone)]
+pub struct QualityCliOptions {
+    pub checkpoint: String,
+    pub data_file: String,
+    pub knn: usize,
+    pub threads: usize,
+    pub planes: bool,
+    pub out: Option<String>,
+}
+
+pub fn parse_quality(parsed: &Parsed) -> Result<QualityCliOptions, ArgError> {
+    let knn = parsed.parse_as::<usize>("knn")?;
+    if knn == 0 {
+        return Err(bad("knn", "0", "the neighborhood size must be at least 1".into()));
+    }
+    Ok(QualityCliOptions {
+        checkpoint: parsed.positional(0).to_string(),
+        data_file: parsed.positional(1).to_string(),
+        knn,
+        threads: parsed.parse_as::<usize>("threads")?,
+        planes: parsed.flag("planes"),
+        out: parsed.get("out").map(str::to_string),
     })
 }
 
@@ -634,6 +774,78 @@ mod tests {
         assert_eq!(o.state_dir, "somoclu-serve");
         assert_eq!(o.threads, 0);
         assert!(!o.verbose);
+    }
+
+    #[test]
+    fn ensemble_subcommand_spec() {
+        let spec = ensemble_spec();
+        let parsed = spec
+            .parse(
+                ["-k", "8", "-c", "4", "-e", "7", "-g", "hexagonal",
+                 "-m", "toroid", "-x", "12", "-y", "9", "-r", "5",
+                 "--seed", "42", "--kmeans-iters", "30", "--threads", "6",
+                 "--checkpoint-every", "2", "-v", "in.txt", "out"]
+                    .map(String::from),
+            )
+            .unwrap();
+        let o = parse_ensemble(&parsed).unwrap();
+        assert_eq!(o.members, 8);
+        assert_eq!(o.clusters, 4);
+        assert_eq!(o.config.epochs, 7);
+        assert_eq!(o.config.grid_type, GridType::Hexagonal);
+        assert_eq!(o.config.map_type, MapType::Toroid);
+        assert_eq!((o.config.rows, o.config.cols), (9, 12));
+        assert_eq!(o.config.radius0, Some(5.0));
+        assert_eq!(o.config.seed, 42);
+        assert_eq!(o.kmeans_iters, 30);
+        assert_eq!(o.config.threads, 6);
+        assert_eq!(o.checkpoint_every, 2);
+        assert!(o.verbose);
+        assert_eq!(o.input_file, "in.txt");
+        assert_eq!(o.output_prefix, "out");
+        // Defaults.
+        let parsed = spec.parse(["a.txt", "b"].map(String::from)).unwrap();
+        let o = parse_ensemble(&parsed).unwrap();
+        assert_eq!(o.members, 5);
+        assert_eq!(o.clusters, 8);
+        assert_eq!(o.config.epochs, 10);
+        assert_eq!(o.config.threads, 0);
+        assert_eq!(o.checkpoint_every, 0);
+        assert!(!o.verbose);
+        // Degenerate counts are rejected at parse time.
+        let parsed = spec.parse(["-k", "0", "a", "b"].map(String::from)).unwrap();
+        assert!(parse_ensemble(&parsed).is_err());
+        let parsed = spec.parse(["-c", "0", "a", "b"].map(String::from)).unwrap();
+        assert!(parse_ensemble(&parsed).is_err());
+    }
+
+    #[test]
+    fn quality_subcommand_spec() {
+        let spec = quality_spec();
+        let parsed = spec
+            .parse(
+                ["-k", "25", "--threads", "4", "--planes", "-o", "rep.json",
+                 "map.somc", "data.txt"]
+                    .map(String::from),
+            )
+            .unwrap();
+        let o = parse_quality(&parsed).unwrap();
+        assert_eq!(o.knn, 25);
+        assert_eq!(o.threads, 4);
+        assert!(o.planes);
+        assert_eq!(o.out.as_deref(), Some("rep.json"));
+        assert_eq!(o.checkpoint, "map.somc");
+        assert_eq!(o.data_file, "data.txt");
+        // Defaults: knn 10, auto threads, stdout, no plane export.
+        let parsed = spec.parse(["m.somc", "d.txt"].map(String::from)).unwrap();
+        let o = parse_quality(&parsed).unwrap();
+        assert_eq!(o.knn, 10);
+        assert_eq!(o.threads, 0);
+        assert!(!o.planes);
+        assert!(o.out.is_none());
+        // knn 0 makes no sense.
+        let parsed = spec.parse(["-k", "0", "m", "d"].map(String::from)).unwrap();
+        assert!(parse_quality(&parsed).is_err());
     }
 
     #[test]

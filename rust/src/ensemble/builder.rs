@@ -1,0 +1,457 @@
+//! [`EnsembleBuilder`]: train K independently-seeded sessions, cluster
+//! each codebook, and combine the labelings into one consensus.
+
+use std::path::{Path, PathBuf};
+
+use crate::api::DataInput;
+use crate::coordinator::config::TrainConfig;
+use crate::ensemble::combine::{align_labels, sce_consensus, Consensus};
+use crate::ensemble::{member_seed, CLUSTER_SALT};
+use crate::error::SomError;
+use crate::session::{checkpoint_path, Som, SomSession};
+use crate::som::kmeans::{data_labels, kmeans};
+use crate::som::quality;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::threadpool;
+
+/// One trained ensemble member's contribution.
+#[derive(Clone, Debug)]
+pub struct EnsembleMember {
+    /// The member's derived training seed ([`member_seed`]).
+    pub seed: u64,
+    /// BMU node index per data row, projected against the member's
+    /// **final** codebook (so it is identical whether the member trained
+    /// fresh or resumed an already-complete checkpoint).
+    pub bmus: Vec<u32>,
+    /// Per-sample cluster labels, **aligned** to member 0's label space.
+    pub labels: Vec<u32>,
+    /// K-means inertia of the member's codebook clustering.
+    pub inertia: f64,
+    /// Lloyd iterations the member's k-means took to converge.
+    pub kmeans_iterations: usize,
+    /// Mean quantization error of the member's final map.
+    pub qe: f32,
+}
+
+/// The combined result of [`EnsembleBuilder::run`].
+#[derive(Clone, Debug)]
+pub struct EnsembleResult {
+    /// Every member, in member-index order (member 0 is the alignment
+    /// reference).
+    pub members: Vec<EnsembleMember>,
+    /// The SCE consensus labeling + per-sample agreement.
+    pub consensus: Consensus,
+    /// Number of clusters each member's codebook was cut into.
+    pub clusters: usize,
+}
+
+impl EnsembleResult {
+    /// Versioned JSON report (`<prefix>.ensemble.json` on the CLI).
+    ///
+    /// Seeds are emitted as **strings**: they are full-range u64 values
+    /// and JSON numbers (f64) silently lose integers above 2^53.
+    pub fn to_json(&self) -> Json {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("version".into(), Json::Num(1.0));
+        obj.insert("members".into(), Json::Num(self.members.len() as f64));
+        obj.insert("clusters".into(), Json::Num(self.clusters as f64));
+        obj.insert(
+            "samples".into(),
+            Json::Num(self.consensus.labels.len() as f64),
+        );
+        obj.insert(
+            "mean_agreement".into(),
+            Json::Num(self.consensus.mean_agreement),
+        );
+        let members: Vec<Json> = self
+            .members
+            .iter()
+            .map(|m| {
+                let mut o = std::collections::BTreeMap::new();
+                o.insert("seed".into(), Json::Str(m.seed.to_string()));
+                o.insert("qe".into(), Json::Num(m.qe as f64));
+                o.insert("inertia".into(), Json::Num(m.inertia));
+                o.insert(
+                    "kmeans_iterations".into(),
+                    Json::Num(m.kmeans_iterations as f64),
+                );
+                Json::Obj(o)
+            })
+            .collect();
+        obj.insert("member_stats".into(), Json::Arr(members));
+        Json::Obj(obj)
+    }
+}
+
+/// Builder for an ensemble run: K maps trained from [`member_seed`]
+/// seeds, clustered, aligned, and majority-voted into a [`Consensus`].
+///
+/// ```no_run
+/// use somoclu::coordinator::config::TrainConfig;
+/// use somoclu::ensemble::EnsembleBuilder;
+///
+/// # fn main() -> Result<(), somoclu::error::SomError> {
+/// let data = vec![0.0f32; 400 * 4];
+/// let result = EnsembleBuilder::new()
+///     .config(TrainConfig { rows: 10, cols: 10, epochs: 5, ..Default::default() })
+///     .members(8)
+///     .clusters(4)
+///     .run(&data, 4)?;
+/// println!("mean agreement: {}", result.consensus.mean_agreement);
+/// # Ok(())
+/// # }
+/// ```
+///
+/// Determinism: for a fixed config the consensus labels and agreement
+/// scores are **bit-identical across thread counts** — member seeds
+/// are index-derived, kernel outputs are thread-count invariant,
+/// k-means is single-threaded and seeded, and all combination steps
+/// are sequential integer arithmetic.
+#[derive(Clone, Debug)]
+pub struct EnsembleBuilder {
+    cfg: TrainConfig,
+    members: usize,
+    clusters: usize,
+    kmeans_iters: usize,
+    checkpoint: Option<(usize, PathBuf)>,
+}
+
+impl Default for EnsembleBuilder {
+    fn default() -> Self {
+        EnsembleBuilder {
+            cfg: TrainConfig::default(),
+            members: 5,
+            clusters: 8,
+            kmeans_iters: 100,
+            checkpoint: None,
+        }
+    }
+}
+
+impl EnsembleBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Per-member training configuration. `seed` is the ensemble's
+    /// *base* seed (each member trains with [`member_seed`]`(seed, i)`);
+    /// `threads` is the ensemble's total budget, split across members.
+    pub fn config(mut self, cfg: TrainConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Number of ensemble members to train (default 5).
+    pub fn members(mut self, k: usize) -> Self {
+        self.members = k;
+        self
+    }
+
+    /// Number of clusters to cut each member's codebook into (default 8).
+    pub fn clusters(mut self, c: usize) -> Self {
+        self.clusters = c;
+        self
+    }
+
+    /// Lloyd iteration cap for the per-member k-means (default 100).
+    pub fn kmeans_iters(mut self, n: usize) -> Self {
+        self.kmeans_iters = n;
+        self
+    }
+
+    /// Ensemble base seed (shorthand for setting `config.seed`).
+    pub fn seed(mut self, s: u64) -> Self {
+        self.cfg.seed = s;
+        self
+    }
+
+    /// Total thread budget (shorthand for setting `config.threads`).
+    /// 0 = one thread per member (members already run concurrently).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.cfg.threads = n;
+        self
+    }
+
+    /// Checkpoint every member's session every `every` epochs under
+    /// `<prefix>.m<i>.epoch<k>.somc`, and **resume** any member whose
+    /// newest checkpoint already exists — an interrupted ensemble run
+    /// re-invoked with the same prefix picks up each member where it
+    /// stopped, bit-identically (the session checkpoint contract).
+    pub fn checkpoint_every<P: AsRef<Path>>(mut self, every: usize, prefix: P) -> Self {
+        self.checkpoint = if every == 0 {
+            None
+        } else {
+            Some((every, prefix.as_ref().to_path_buf()))
+        };
+        self
+    }
+
+    /// Train, cluster, align, and combine. `data` is dense row-major
+    /// `rows × dim`; every member trains on the full data set.
+    pub fn run(&self, data: &[f32], dim: usize) -> Result<EnsembleResult, SomError> {
+        if self.members == 0 {
+            return Err(SomError::config("ensemble needs at least 1 member"));
+        }
+        if dim == 0 || data.len() % dim != 0 {
+            return Err(SomError::data(format!(
+                "data length {} is not a multiple of dim {dim}",
+                data.len()
+            )));
+        }
+        if data.is_empty() {
+            return Err(SomError::data("ensemble training needs at least one row"));
+        }
+        let nodes = self.cfg.rows * self.cfg.cols;
+        if self.clusters == 0 || self.clusters > nodes {
+            return Err(SomError::config(format!(
+                "clusters={} out of range for a {}x{} map ({} nodes)",
+                self.clusters, self.cfg.rows, self.cfg.cols, nodes
+            )));
+        }
+        // Split the thread budget: members already run concurrently, so
+        // 0 (= "all cores" for a lone session) becomes 1 per member.
+        let member_threads = if self.cfg.threads == 0 {
+            1
+        } else {
+            (self.cfg.threads / self.members).max(1)
+        };
+
+        let base = self.cfg.seed;
+        let tasks: Vec<_> = (0..self.members)
+            .map(|i| {
+                let mut mcfg = self.cfg.clone();
+                mcfg.seed = member_seed(base, i);
+                mcfg.threads = member_threads;
+                mcfg.ranks = 1;
+                let checkpoint = self.checkpoint.clone();
+                let (clusters, kmeans_iters) = (self.clusters, self.kmeans_iters);
+                move || -> Result<EnsembleMember, SomError> {
+                    let seed = mcfg.seed;
+                    let epochs = mcfg.epochs;
+                    let mut session =
+                        build_member_session(mcfg, i, epochs, checkpoint.as_ref())?;
+                    let result = session.fit(DataInput::BorrowedF32 { data, dim })?;
+                    // Project explicitly: a fit that just trained returns
+                    // the last epoch's accumulation BMUs (pre-update
+                    // codebook), while resuming an already-complete
+                    // checkpoint returns a projection. Defining member
+                    // BMUs against the FINAL codebook makes both paths —
+                    // and everything built on them — bit-identical.
+                    let bmus = session.project(DataInput::BorrowedF32 { data, dim })?;
+                    let km = kmeans(
+                        &result.codebook,
+                        clusters,
+                        kmeans_iters,
+                        &mut Rng::new(seed ^ CLUSTER_SALT),
+                    );
+                    let labels = data_labels(&km, &bmus);
+                    let bmus_usize: Vec<usize> =
+                        bmus.iter().map(|&b| b as usize).collect();
+                    let qe =
+                        quality::quantization_error(data, dim, &result.codebook, &bmus_usize);
+                    Ok(EnsembleMember {
+                        seed,
+                        bmus,
+                        labels,
+                        inertia: km.inertia,
+                        kmeans_iterations: km.iterations,
+                        qe,
+                    })
+                }
+            })
+            .collect();
+        let raw: Vec<EnsembleMember> = threadpool::run_concurrent(tasks)
+            .into_iter()
+            .collect::<Result<_, _>>()?;
+
+        // Sequential combination: align everyone onto member 0's label
+        // space, then majority-vote. Nothing here depends on scheduling.
+        let mut members = raw;
+        let reference = members[0].labels.clone();
+        for m in members.iter_mut().skip(1) {
+            m.labels = align_labels(&reference, &m.labels, self.clusters);
+        }
+        let aligned: Vec<Vec<u32>> = members.iter().map(|m| m.labels.clone()).collect();
+        let consensus = sce_consensus(&aligned, self.clusters);
+        Ok(EnsembleResult {
+            members,
+            consensus,
+            clusters: self.clusters,
+        })
+    }
+}
+
+/// Construct (or resume) member `i`'s session. With checkpointing on,
+/// the newest existing `<prefix>.m<i>.epoch<k>.somc` wins — the session
+/// checkpoint owns map/schedule/seed, we re-apply only runtime knobs.
+fn build_member_session(
+    cfg: TrainConfig,
+    member: usize,
+    epochs: usize,
+    checkpoint: Option<&(usize, PathBuf)>,
+) -> Result<SomSession, SomError> {
+    let threads = cfg.threads;
+    if let Some((every, prefix)) = checkpoint {
+        let mprefix = PathBuf::from(format!("{}.m{member}", prefix.display()));
+        for e in (1..=epochs).rev() {
+            let path = checkpoint_path(&mprefix, e);
+            if path.exists() {
+                let mut session = Som::resume(&path)?;
+                session.set_threads(threads);
+                session.set_checkpoint_every(*every, &mprefix);
+                return Ok(session);
+            }
+        }
+        return Som::builder()
+            .config(cfg)
+            .checkpoint_every(*every, &mprefix)
+            .build();
+    }
+    Som::builder().config(cfg).build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+
+    fn blob_data(seed: u64) -> (Vec<f32>, usize) {
+        let mut rng = Rng::new(seed);
+        let (d, _) = data::gaussian_blobs(48, 5, 3, 0.2, &mut rng);
+        (d, 5)
+    }
+
+    fn small() -> EnsembleBuilder {
+        EnsembleBuilder::new()
+            .config(TrainConfig {
+                rows: 6,
+                cols: 6,
+                epochs: 3,
+                radius0: Some(3.0),
+                ..Default::default()
+            })
+            .members(3)
+            .clusters(3)
+    }
+
+    #[test]
+    fn shapes_and_ranges() {
+        let (d, dim) = blob_data(90);
+        let res = small().run(&d, dim).unwrap();
+        assert_eq!(res.members.len(), 3);
+        assert_eq!(res.consensus.labels.len(), 48);
+        assert_eq!(res.consensus.agreement.len(), 48);
+        for m in &res.members {
+            assert_eq!(m.bmus.len(), 48);
+            assert_eq!(m.labels.len(), 48);
+            assert!(m.labels.iter().all(|&l| l < 3));
+            assert!(m.qe.is_finite());
+        }
+        assert!(res.consensus.labels.iter().all(|&l| l < 3));
+        for &a in &res.consensus.agreement {
+            assert!((0.0..=1.0).contains(&a), "{a}");
+            // With 3 members the winner has at least 1 vote.
+            assert!(a >= 1.0 / 3.0);
+        }
+        assert!(res.consensus.mean_agreement > 0.0);
+        assert!(res.consensus.mean_agreement <= 1.0);
+    }
+
+    #[test]
+    fn deterministic_for_fixed_seed_across_thread_budgets() {
+        let (d, dim) = blob_data(91);
+        let a = small().threads(1).run(&d, dim).unwrap();
+        let b = small().threads(4).run(&d, dim).unwrap();
+        let c = small().threads(16).run(&d, dim).unwrap();
+        for other in [&b, &c] {
+            assert_eq!(a.consensus.labels, other.consensus.labels);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&a.consensus.agreement), bits(&other.consensus.agreement));
+            assert_eq!(
+                a.consensus.mean_agreement.to_bits(),
+                other.consensus.mean_agreement.to_bits()
+            );
+            for (ma, mo) in a.members.iter().zip(&other.members) {
+                assert_eq!(ma.seed, mo.seed);
+                assert_eq!(ma.bmus, mo.bmus);
+                assert_eq!(ma.labels, mo.labels);
+            }
+        }
+    }
+
+    #[test]
+    fn different_base_seeds_change_members() {
+        let (d, dim) = blob_data(92);
+        let a = small().seed(1).run(&d, dim).unwrap();
+        let b = small().seed(2).run(&d, dim).unwrap();
+        assert_ne!(a.members[0].seed, b.members[0].seed);
+        // Different inits virtually always land at least one BMU apart.
+        assert_ne!(a.members[0].bmus, b.members[0].bmus);
+    }
+
+    #[test]
+    fn checkpointed_members_resume_bit_identically() {
+        let (d, dim) = blob_data(93);
+        let dir = std::env::temp_dir().join(format!("somoclu_ens_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let prefix = dir.join("ens");
+
+        // Uninterrupted reference (no checkpoints at all).
+        let want = small().run(&d, dim).unwrap();
+
+        // First pass writes per-member cadence checkpoints...
+        let first = small()
+            .checkpoint_every(1, &prefix)
+            .run(&d, dim)
+            .unwrap();
+        assert_eq!(first.consensus.labels, want.consensus.labels);
+        for i in 0..3 {
+            let p = checkpoint_path(format!("{}.m{i}", prefix.display()), 3);
+            assert!(p.exists(), "{}", p.display());
+            // Simulate an interruption: drop members back to epoch 2.
+            std::fs::remove_file(&p).unwrap();
+        }
+        // ...second pass resumes every member from epoch 2 and must
+        // reproduce the uninterrupted consensus exactly.
+        let resumed = small()
+            .checkpoint_every(1, &prefix)
+            .run(&d, dim)
+            .unwrap();
+        assert_eq!(resumed.consensus.labels, want.consensus.labels);
+        for (rm, wm) in resumed.members.iter().zip(&want.members) {
+            assert_eq!(rm.bmus, wm.bmus);
+            assert_eq!(rm.labels, wm.labels);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let (d, dim) = blob_data(94);
+        assert!(small().members(0).run(&d, dim).is_err());
+        assert!(small().clusters(0).run(&d, dim).is_err());
+        assert!(small().clusters(37).run(&d, dim).is_err()); // > 36 nodes
+        assert!(small().run(&d[..d.len() - 1], dim).is_err());
+        assert!(small().run(&[], dim).is_err());
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let (d, dim) = blob_data(95);
+        let res = small().run(&d, dim).unwrap();
+        let j = res.to_json();
+        assert_eq!(j.get("version").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("members").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("clusters").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("samples").unwrap().as_usize(), Some(48));
+        let stats = j.get("member_stats").unwrap().as_arr().unwrap();
+        assert_eq!(stats.len(), 3);
+        // Seeds survive the u64 round-trip as strings.
+        let s0 = stats[0].get("seed").unwrap().as_str().unwrap();
+        assert_eq!(s0.parse::<u64>().unwrap(), res.members[0].seed);
+        // The report serializes and re-parses.
+        let rt = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(rt.get("version").unwrap().as_usize(), Some(1));
+    }
+}

@@ -1,0 +1,216 @@
+//! Cross-member label alignment + the SCE consensus/agreement rule.
+//!
+//! K-means labels are arbitrary per member (cluster 3 of member 0 and
+//! cluster 0 of member 1 may be the same group of samples), so the
+//! ensemble cannot vote on raw labels. [`align_labels`] first maps each
+//! member's label space onto the reference member's by maximizing label
+//! co-occurrence; [`sce_consensus`] then majority-votes the aligned
+//! labelings and reports per-sample agreement.
+
+/// Consensus labeling of an aligned ensemble.
+#[derive(Clone, Debug)]
+pub struct Consensus {
+    /// Winning label per sample (majority vote, ties to the lowest
+    /// label id).
+    pub labels: Vec<u32>,
+    /// Per-sample agreement: fraction of members that voted for the
+    /// winning label, in (0, 1]. 1.0 = unanimous.
+    pub agreement: Vec<f32>,
+    /// Mean agreement over all samples (computed from exact integer
+    /// vote counts, so it is identical across thread counts).
+    pub mean_agreement: f64,
+}
+
+/// Relabel `member` into `reference`'s label space.
+///
+/// Builds the k×k contingency table (how many samples carry reference
+/// label `r` and member label `m` simultaneously) and greedily matches
+/// the largest remaining cell until every label is paired — ties break
+/// to the lowest `(r, m)` pair in scan order, so the result is fully
+/// deterministic. Returns `member` with each label replaced by its
+/// matched reference label.
+///
+/// Both labelings must have the same length and all labels `< k`
+/// (asserted). Greedy maximum matching is the standard SCE alignment
+/// step; an optimal assignment (Hungarian) differs only when cluster
+/// overlap is highly ambiguous, where consensus agreement will be low
+/// regardless.
+pub fn align_labels(reference: &[u32], member: &[u32], k: usize) -> Vec<u32> {
+    assert_eq!(
+        reference.len(),
+        member.len(),
+        "label vectors must cover the same samples"
+    );
+    assert!(k >= 1, "k must be at least 1");
+    let mut cont = vec![0u64; k * k];
+    for (&r, &m) in reference.iter().zip(member) {
+        let (r, m) = (r as usize, m as usize);
+        assert!(r < k && m < k, "label out of range: ref {r} / member {m} vs k={k}");
+        cont[r * k + m] += 1;
+    }
+    let mut map = vec![u32::MAX; k];
+    let mut ref_used = vec![false; k];
+    let mut mem_used = vec![false; k];
+    for _ in 0..k {
+        let (mut best, mut best_r, mut best_m) = (None::<u64>, 0usize, 0usize);
+        for r in 0..k {
+            if ref_used[r] {
+                continue;
+            }
+            for m in 0..k {
+                if mem_used[m] {
+                    continue;
+                }
+                let c = cont[r * k + m];
+                // Strict `>` keeps the first-scanned (lowest) pair on
+                // ties — the determinism contract.
+                if best.map_or(true, |b| c > b) {
+                    best = Some(c);
+                    best_r = r;
+                    best_m = m;
+                }
+            }
+        }
+        map[best_m] = best_r as u32;
+        ref_used[best_r] = true;
+        mem_used[best_m] = true;
+    }
+    member.iter().map(|&m| map[m as usize]).collect()
+}
+
+/// Majority-vote consensus over *aligned* member labelings (aweSOM's
+/// statistically-combined-ensemble rule).
+///
+/// Every member contributes one vote per sample; the winning label is
+/// the most-voted one, ties to the lowest label id. The per-sample
+/// agreement score is `winning votes / members`. All arithmetic is
+/// integer until the final division, so the output is bit-deterministic
+/// regardless of how the members were scheduled.
+///
+/// Panics if `members` is empty, the labelings disagree on length, or a
+/// label is `>= k`.
+pub fn sce_consensus(members: &[Vec<u32>], k: usize) -> Consensus {
+    assert!(!members.is_empty(), "consensus needs at least one member");
+    assert!(k >= 1, "k must be at least 1");
+    let n = members[0].len();
+    for (i, m) in members.iter().enumerate() {
+        assert_eq!(m.len(), n, "member {i} labels {} samples, expected {n}", m.len());
+    }
+    let total = members.len() as u32;
+    let mut labels = Vec::with_capacity(n);
+    let mut agreement = Vec::with_capacity(n);
+    let mut winner_votes_sum = 0u64;
+    let mut counts = vec![0u32; k];
+    for s in 0..n {
+        counts.iter_mut().for_each(|c| *c = 0);
+        for m in members {
+            let l = m[s] as usize;
+            assert!(l < k, "label {l} out of range for k={k}");
+            counts[l] += 1;
+        }
+        // argmax with strict `>`: ties go to the lowest label id.
+        let (mut win, mut votes) = (0u32, 0u32);
+        for (l, &c) in counts.iter().enumerate() {
+            if c > votes {
+                votes = c;
+                win = l as u32;
+            }
+        }
+        labels.push(win);
+        agreement.push(votes as f32 / total as f32);
+        winner_votes_sum += votes as u64;
+    }
+    let mean_agreement = if n == 0 {
+        0.0
+    } else {
+        winner_votes_sum as f64 / (n as u64 * total as u64) as f64
+    };
+    Consensus {
+        labels,
+        agreement,
+        mean_agreement,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alignment_undoes_a_label_permutation() {
+        // Member = reference under the permutation 0->2, 1->0, 2->1.
+        let reference = vec![0u32, 0, 1, 1, 2, 2, 0, 1, 2];
+        let member: Vec<u32> = reference.iter().map(|&l| [2u32, 0, 1][l as usize]).collect();
+        assert_eq!(align_labels(&reference, &member, 3), reference);
+    }
+
+    #[test]
+    fn alignment_is_identity_when_spaces_agree() {
+        let labels = vec![1u32, 0, 3, 2, 1, 1, 0, 3];
+        assert_eq!(align_labels(&labels, &labels, 4), labels);
+    }
+
+    #[test]
+    fn alignment_tie_breaks_to_lowest_pair() {
+        // Equal overlap everywhere (each (r, m) cell = 1): the greedy
+        // scan must pair (0,0), (1,1) — the identity.
+        let reference = vec![0u32, 0, 1, 1];
+        let member = vec![0u32, 1, 0, 1];
+        assert_eq!(align_labels(&reference, &member, 2), member);
+    }
+
+    #[test]
+    fn alignment_handles_labels_absent_from_one_side() {
+        // Member never emits label 2; alignment must still produce a
+        // full permutation (unused labels pair with leftover cells).
+        let reference = vec![0u32, 1, 2, 0, 1, 2];
+        let member = vec![1u32, 0, 0, 1, 0, 0];
+        let aligned = align_labels(&reference, &member, 3);
+        assert_eq!(aligned.len(), 6);
+        assert!(aligned.iter().all(|&l| l < 3));
+        // Member label 1 co-occurs most with reference 0, member 0 with
+        // reference 1 (2 hits) — check the majority pairs survived.
+        assert_eq!(aligned[0], 0);
+        assert_eq!(aligned[1], 1);
+    }
+
+    #[test]
+    fn consensus_unanimous_members() {
+        let labels = vec![2u32, 0, 1, 1];
+        let members = vec![labels.clone(), labels.clone(), labels.clone()];
+        let c = sce_consensus(&members, 3);
+        assert_eq!(c.labels, labels);
+        assert!(c.agreement.iter().all(|&a| a == 1.0));
+        assert_eq!(c.mean_agreement, 1.0);
+    }
+
+    #[test]
+    fn consensus_majority_and_tie_rule() {
+        // Sample 0: votes {0, 0, 1} -> 0 with 2/3.
+        // Sample 1: votes {1, 2, 2} -> 2 with 2/3.
+        // Sample 2: three-way tie {0, 1, 2} -> lowest label 0 with 1/3.
+        let members = vec![vec![0u32, 1, 0], vec![0u32, 2, 1], vec![1u32, 2, 2]];
+        let c = sce_consensus(&members, 3);
+        assert_eq!(c.labels, vec![0, 2, 0]);
+        let want = [2.0f32 / 3.0, 2.0 / 3.0, 1.0 / 3.0];
+        for (got, want) in c.agreement.iter().zip(want) {
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
+        assert!((c.mean_agreement - 5.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn consensus_single_member_is_identity() {
+        let labels = vec![0u32, 1, 0, 1];
+        let members = vec![labels.clone()];
+        let c = sce_consensus(&members, 2);
+        assert_eq!(c.labels, labels);
+        assert_eq!(c.mean_agreement, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn consensus_rejects_out_of_range_labels() {
+        sce_consensus(&[vec![5u32]], 3);
+    }
+}

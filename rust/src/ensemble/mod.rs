@@ -1,0 +1,84 @@
+//! Ensemble SOM training + statistically combined cluster labeling.
+//!
+//! The paper positions somoclu as a *clustering analysis* tool (its
+//! text-mining workflow, §5), but a single SOM run is seed-sensitive:
+//! two maps trained from different random codebooks can carve the same
+//! data into visibly different clusters. aweSOM's statistically
+//! combined ensemble (SCE) answer is to embrace that variance — train
+//! `K` maps with **independent seeds** (embarrassingly parallel; each
+//! member is one [`crate::session::SomSession`]), cluster each member's
+//! codebook (k-means, [`crate::som::kmeans`]), align the arbitrary
+//! cluster label spaces across members, and majority-vote a single
+//! consensus labeling plus a per-sample **agreement score** — the
+//! fraction of members that voted for the winning label, a confidence
+//! readout a single run cannot produce.
+//!
+//! Pipeline (all deterministic for a fixed base seed):
+//!
+//! 1. [`member_seed`] derives member `i`'s seed from the base seed via
+//!    a SplitMix64 finalizer — decorrelated, reproducible, and
+//!    independent of how many members run.
+//! 2. [`EnsembleBuilder::run`] trains the members concurrently over the
+//!    scoped thread pool (kernel outputs are thread-count invariant, so
+//!    concurrency never changes a bit of any member's result), then
+//!    clusters each member's codebook and extends node labels to data
+//!    labels through the member's BMUs.
+//! 3. [`combine::align_labels`] maps every member's label space onto
+//!    member 0's by greedy maximum-overlap matching of the k×k
+//!    contingency table (ties to the lowest label pair, so alignment is
+//!    order-independent of the thread schedule).
+//! 4. [`combine::sce_consensus`] majority-votes the aligned labelings
+//!    (ties to the lowest label id) and scores per-sample agreement.
+//!
+//! The CLI front end is `somoclu ensemble`; outputs are per-member
+//! ESOM `.bm` files, a `.consensus.lbl` labeling with agreement scores,
+//! and a versioned `.ensemble.json` report.
+
+pub mod builder;
+pub mod combine;
+
+pub use builder::{EnsembleBuilder, EnsembleMember, EnsembleResult};
+pub use combine::{align_labels, sce_consensus, Consensus};
+
+/// Salt XORed into a member's seed for its k-means RNG, so codebook
+/// initialization and cluster seeding never share a stream.
+pub const CLUSTER_SALT: u64 = 0x5ce5_ce5c_e5ce_5ce5;
+
+/// Derive member `i`'s training seed from the ensemble's base seed.
+///
+/// SplitMix64 finalizer over `base ^ (i+1)·φ64` — the same mixing
+/// constants as [`crate::util::rng::Rng`]'s generator, used here as a
+/// one-shot hash. Properties the ensemble relies on: deterministic,
+/// distinct per member (including member 0 ≠ base), and decorrelated
+/// even for adjacent indices, so members never share an init stream.
+pub fn member_seed(base: u64, member: usize) -> u64 {
+    let mut z = base ^ (member as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn member_seeds_are_distinct_and_stable() {
+        let base = 1347440723u64;
+        let seeds: Vec<u64> = (0..64).map(|i| member_seed(base, i)).collect();
+        // Deterministic across calls.
+        assert_eq!(seeds, (0..64).map(|i| member_seed(base, i)).collect::<Vec<_>>());
+        // Pairwise distinct, and none equal to the base itself.
+        let mut uniq = seeds.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), seeds.len());
+        assert!(!seeds.contains(&base));
+    }
+
+    #[test]
+    fn member_seeds_depend_on_base() {
+        assert_ne!(member_seed(1, 0), member_seed(2, 0));
+        assert_ne!(member_seed(0, 0), member_seed(0, 1));
+    }
+}

@@ -76,6 +76,26 @@ pub fn write_umx<P: AsRef<Path>>(
     Ok(())
 }
 
+/// Write an ensemble consensus labeling as `.lbl`: one
+/// `<index> <label> <agreement>` line per sample after a `%`-header, in
+/// the same comment/whitespace dialect as the other ESOM-style files so
+/// existing tooling can ingest it. `agreement[i]` is the fraction of
+/// ensemble members that voted for `labels[i]`.
+pub fn write_consensus_labels<P: AsRef<Path>>(
+    path: P,
+    labels: &[u32],
+    agreement: &[f32],
+) -> std::io::Result<()> {
+    assert_eq!(labels.len(), agreement.len());
+    let f = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(f);
+    writeln!(w, "% {}", labels.len())?;
+    for (i, (&l, &a)) in labels.iter().zip(agreement).enumerate() {
+        writeln!(w, "{i} {l} {a}")?;
+    }
+    Ok(())
+}
+
 /// Parse a `.bm` file back (round-trip tests and resuming runs).
 pub fn read_bm<P: AsRef<Path>>(path: P) -> std::io::Result<Vec<(usize, usize, usize)>> {
     let text = std::fs::read_to_string(path)?;
@@ -136,6 +156,15 @@ mod tests {
             assert_eq!(idx, i);
             assert_eq!(grid.index(r, c), bmus[i] as usize);
         }
+    }
+
+    #[test]
+    fn consensus_labels_layout() {
+        let p = tmp("t.lbl");
+        write_consensus_labels(&p, &[2, 0, 1], &[1.0, 0.5, 0.75]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines, vec!["% 3", "0 2 1", "1 0 0.5", "2 1 0.75"]);
     }
 
     #[test]

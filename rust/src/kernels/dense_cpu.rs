@@ -378,10 +378,23 @@ where
                 ranges.iter().cloned().zip(num_chunks).zip(den_chunks)
             {
                 scope.spawn(move || {
+                    // Lazy stencils (oversized hex per-row tables) get a
+                    // per-worker block buffer, refilled only when the
+                    // node row changes: node ranges ascend, so a pass
+                    // costs ~rows + threads fills in total. Eager
+                    // stencils read their precomputed table directly.
+                    let lazy = st.is_lazy();
+                    let mut block_buf =
+                        if lazy { vec![0.0f32; st.window_cells()] } else { Vec::new() };
+                    let mut block_row = usize::MAX;
                     for node in range.clone() {
                         let local = node - range.start;
                         let num_row = &mut num_chunk[local * dim..(local + 1) * dim];
                         let (rn, cn) = (node / grid.cols, node % grid.cols);
+                        if lazy && rn != block_row {
+                            st.fill_row_block(grid, rn, &mut block_buf);
+                            block_row = rn;
+                        }
                         let col_iv = st.col_intervals(grid, cn);
                         let mut d_acc = 0.0f32;
                         for riv in st.row_intervals(grid, rn).as_slice() {
@@ -391,7 +404,12 @@ where
                                 if lo == hi {
                                     continue;
                                 }
-                                let trow = st.table_row(rn, riv.slot0 + (rb - riv.start));
+                                let slot_r = riv.slot0 + (rb - riv.start);
+                                let trow = if lazy {
+                                    st.table_row_in(&block_buf, slot_r)
+                                } else {
+                                    st.table_row(rn, slot_r)
+                                };
                                 let acts = &act_cols[lo..hi];
                                 for civ in col_iv.as_slice() {
                                     let s = acts

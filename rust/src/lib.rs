@@ -16,9 +16,11 @@
 //! library use (one builder-driven construction path over
 //! resident/streamed/cluster training, incremental epochs, inference,
 //! and checkpoint/resume), the `somoclu` binary with its `train` /
-//! `serve` / `convert` / `info` subcommands for the paper's CLI, and
-//! [`serve`] for the long-lived checkpoint-serving daemon with its
-//! training job queue. The pre-session free-function entry points
+//! `serve` / `ensemble` / `quality` / `convert` / `info` subcommands
+//! for the paper's CLI, [`serve`] for the long-lived checkpoint-serving
+//! daemon with its training job queue, and [`ensemble`] for
+//! statistically combined multi-map clustering with consensus labels
+//! and per-sample agreement scores. The pre-session free-function entry points
 //! (`api::train`, `coordinator::train::{train, train_stream}`,
 //! `cluster::runner::{train_cluster, train_cluster_stream}`) are gone
 //! as of 0.2; every path constructs a [`session::SomSession`]. Errors
@@ -31,6 +33,7 @@ pub mod cli;
 pub mod cluster;
 pub mod coordinator;
 pub mod data;
+pub mod ensemble;
 pub mod error;
 pub mod io;
 pub mod kernels;

@@ -10,6 +10,16 @@
 //!   training progresses (`--keep-last M` caps how many survive), and
 //!   `--resume CKPT` finishes the run bit-identically to an
 //!   uninterrupted one.
+//! - `somoclu ensemble [OPTIONS] INPUT OUTPUT_PREFIX` — train K
+//!   independently-seeded maps concurrently ([`somoclu::ensemble`]),
+//!   cluster each codebook, and combine the labelings into one
+//!   consensus with per-sample agreement scores (aweSOM's SCE rule).
+//!   Writes `.m<i>.bm` per member, `.consensus.lbl`, and a versioned
+//!   `.ensemble.json` report.
+//! - `somoclu quality [OPTIONS] CHECKPOINT DATA` — load a SOMC
+//!   checkpoint, project the data through it, and emit the versioned
+//!   quality JSON (QE, TE, trustworthiness, neighborhood preservation,
+//!   component-plane and U-matrix digests).
 //! - `somoclu serve [OPTIONS] LISTEN_ADDR` — the checkpoint-serving
 //!   daemon ([`somoclu::serve`]): answers `bmu`/`project`/`quality`
 //!   requests over TCP or Unix sockets and runs a journaled training
@@ -45,6 +55,8 @@ somoclu — massively parallel self-organizing maps
 
 Usage:
   somoclu train [OPTIONS] INPUT_FILE OUTPUT_PREFIX
+  somoclu ensemble [OPTIONS] INPUT_FILE OUTPUT_PREFIX
+  somoclu quality [OPTIONS] CHECKPOINT DATA_FILE
   somoclu serve [OPTIONS] LISTEN_ADDR
   somoclu convert [OPTIONS] INPUT_FILE OUTPUT_FILE
   somoclu info [OPTIONS] INPUT_FILE
@@ -59,6 +71,8 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let code = match args.first().map(String::as_str) {
         Some("train") => cmd_train(&args[1..], "somoclu train"),
+        Some("ensemble") => cmd_ensemble(&args[1..]),
+        Some("quality") => cmd_quality(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("convert") => cmd_convert(&args[1..]),
         Some("info") => cmd_info(&args[1..]),
@@ -104,6 +118,171 @@ fn cmd_train(args: &[String], prog: &str) -> i32 {
         return 1;
     }
     0
+}
+
+fn cmd_ensemble(args: &[String]) -> i32 {
+    let spec = cli::ensemble_spec();
+    if wants_help(args) {
+        print!("{}", spec.usage("somoclu ensemble"));
+        return 0;
+    }
+    let opts = match spec
+        .parse(args.iter().cloned())
+        .and_then(|p| cli::parse_ensemble(&p))
+    {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", spec.usage("somoclu ensemble"));
+            return 2;
+        }
+    };
+    if let Err(e) = run_ensemble(opts) {
+        eprintln!("error: {e:#}");
+        return 1;
+    }
+    0
+}
+
+fn cmd_quality(args: &[String]) -> i32 {
+    let spec = cli::quality_spec();
+    if wants_help(args) {
+        print!("{}", spec.usage("somoclu quality"));
+        return 0;
+    }
+    let opts = match spec
+        .parse(args.iter().cloned())
+        .and_then(|p| cli::parse_quality(&p))
+    {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", spec.usage("somoclu quality"));
+            return 2;
+        }
+    };
+    if let Err(e) = run_quality(opts) {
+        eprintln!("error: {e:#}");
+        return 1;
+    }
+    0
+}
+
+/// Train the ensemble and write per-member `.m<i>.bm` files, the
+/// consensus labeling (`.consensus.lbl`), and the versioned JSON report
+/// (`.ensemble.json`).
+fn run_ensemble(opts: cli::EnsembleCliOptions) -> anyhow::Result<()> {
+    let m = read_dense(&opts.input_file)?;
+    eprintln!("loaded dense input: {} rows x {} dims", m.rows, m.cols);
+    let t0 = std::time::Instant::now();
+    let mut builder = somoclu::ensemble::EnsembleBuilder::new()
+        .config(opts.config.clone())
+        .members(opts.members)
+        .clusters(opts.clusters)
+        .kmeans_iters(opts.kmeans_iters);
+    if opts.checkpoint_every > 0 {
+        builder = builder.checkpoint_every(opts.checkpoint_every, &opts.output_prefix);
+        eprintln!(
+            "checkpointing every {} epochs to {}.m<i>.epoch<k>.somc (existing \
+             member checkpoints are resumed)",
+            opts.checkpoint_every, opts.output_prefix
+        );
+    }
+    let result = builder.run(&m.data, m.cols)?;
+
+    let grid = opts.config.grid();
+    for (i, member) in result.members.iter().enumerate() {
+        let path = format!("{}.m{i}.bm", opts.output_prefix);
+        somoclu::io::esom::write_bm(&path, &grid, &member.bmus)?;
+        if opts.verbose {
+            eprintln!(
+                "member {i}: seed {}  QE {:.6}  k-means inertia {:.4} \
+                 ({} iters)",
+                member.seed, member.qe, member.inertia, member.kmeans_iterations
+            );
+        }
+    }
+    let lbl_path = format!("{}.consensus.lbl", opts.output_prefix);
+    somoclu::io::esom::write_consensus_labels(
+        &lbl_path,
+        &result.consensus.labels,
+        &result.consensus.agreement,
+    )?;
+    let json_path = format!("{}.ensemble.json", opts.output_prefix);
+    std::fs::write(&json_path, format!("{}\n", result.to_json()))?;
+    eprintln!(
+        "ensemble: {} members x {} epochs on {}x{} maps, {} clusters; mean \
+         agreement {:.4} over {} samples in {:?}",
+        opts.members,
+        opts.config.epochs,
+        opts.config.rows,
+        opts.config.cols,
+        opts.clusters,
+        result.consensus.mean_agreement,
+        result.consensus.labels.len(),
+        t0.elapsed()
+    );
+    eprintln!(
+        "wrote {p}.m<i>.bm, {lbl_path}, {json_path}",
+        p = opts.output_prefix
+    );
+    Ok(())
+}
+
+/// Evaluate a trained checkpoint against a data set and emit the
+/// versioned quality JSON to stdout (or `-o FILE`).
+fn run_quality(opts: cli::QualityCliOptions) -> anyhow::Result<()> {
+    let mut session = Som::resume(&opts.checkpoint)?;
+    if opts.threads > 0 {
+        session.set_threads(opts.threads);
+    }
+    let m = read_dense(&opts.data_file)?;
+    let codebook = session
+        .codebook()
+        .ok_or_else(|| anyhow::anyhow!("{}: checkpoint holds no codebook", opts.checkpoint))?
+        .clone();
+    anyhow::ensure!(
+        m.cols == codebook.dim,
+        "{}: data has {} dims, the checkpointed map was trained on {}",
+        opts.data_file,
+        m.cols,
+        codebook.dim
+    );
+    let bmus = session.project(somoclu::api::DataInput::BorrowedF32 {
+        data: &m.data,
+        dim: m.cols,
+    })?;
+    let umatrix = session.umatrix();
+    let mut report = somoclu::som::quality::QualityReport::compute(
+        &m.data,
+        m.cols,
+        session.grid(),
+        &codebook,
+        &bmus,
+        umatrix.as_deref(),
+        opts.knn,
+        opts.threads,
+    );
+    if opts.planes {
+        report = report.with_plane_values(&codebook);
+    }
+    let text = format!("{}\n", report.to_json());
+    match &opts.out {
+        Some(path) => {
+            std::fs::write(path, &text)?;
+            eprintln!("wrote {path}");
+        }
+        None => print!("{text}"),
+    }
+    eprintln!(
+        "quality: QE {:.6}  TE {:.4}  trustworthiness {:.4}  neighborhood \
+         preservation {:.4} (k={}) over {} rows",
+        report.qe,
+        report.te,
+        report.rank.trustworthiness,
+        report.rank.neighborhood_preservation,
+        report.rank.k,
+        report.rows
+    );
+    Ok(())
 }
 
 fn cmd_serve(args: &[String]) -> i32 {

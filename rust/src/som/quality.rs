@@ -1,14 +1,26 @@
-//! Map quality measures: quantization error and topographic error.
+//! Map quality measures: from QE/TE to a full metrics module.
 //!
 //! QE = mean distance of each data row to its BMU — the loss-curve the
 //! end-to-end driver logs per epoch. TE = fraction of rows whose first
 //! and second BMUs are not grid neighbors (a topology-preservation
 //! check; not in the paper's tables but standard for SOM evaluation and
 //! used in our integration tests).
+//!
+//! Beyond those two, this module computes rank-based projection metrics
+//! ([`rank_metrics`]: trustworthiness + neighborhood preservation),
+//! per-dimension component-plane summaries ([`component_planes`]), and
+//! U-matrix statistics ([`umatrix_stats`]) — all bundled into a
+//! versioned [`QualityReport`] that `somoclu quality` emits as JSON.
+//! [`assert_quality_invariant`] is the reusable harness future perf PRs
+//! use to assert "metrics unchanged within tolerance" instead of only
+//! bit-equality.
+
+use std::collections::BTreeMap;
 
 use crate::kernels::simd::{self, BLOCK_ROWS};
 use crate::som::codebook::Codebook;
-use crate::som::grid::Grid;
+use crate::som::grid::{Grid, GridType, MapType};
+use crate::util::json::Json;
 use crate::util::threadpool;
 
 /// Squared Euclidean distance between two equal-length slices.
@@ -191,6 +203,427 @@ pub fn topographic_error(
     bad as f32 / pairs.len() as f32
 }
 
+/// Rank-based projection quality: trustworthiness + neighborhood
+/// preservation (continuity) at one neighborhood size.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RankMetrics {
+    /// Trustworthiness T(k) ∈ (−∞, 1]: penalizes samples that look like
+    /// map-space neighbors but are far apart in input space ("false
+    /// friends" the projection invented). 1.0 = none.
+    pub trustworthiness: f64,
+    /// Neighborhood preservation / continuity C(k): penalizes input-space
+    /// neighbors the projection tore apart. 1.0 = none.
+    pub neighborhood_preservation: f64,
+    /// The neighborhood size actually used, after clamping the request
+    /// to `min(k, (2N−2)/3).max(1)` so the normalizer stays positive.
+    pub k: usize,
+}
+
+/// Compute [`RankMetrics`] for a trained map.
+///
+/// Input-space neighbors of sample `i` are ranked by squared Euclidean
+/// distance ([`sq_dist`]); map-space neighbors by the grid distance
+/// between BMU nodes ([`Grid::distance`]). Both rankings break distance
+/// ties by the lower sample index, so ranks — and therefore both
+/// metrics — are fully deterministic. Penalties accumulate as exact
+/// integers (`u64` rank excesses) summed over per-thread partials, so
+/// the result is **bit-identical across thread counts**.
+///
+/// Definitions (Venna & Kaski): with `r_in(i,j)` the input-space rank
+/// of `j` among `i`'s neighbors and `U_k(i)` the samples inside `i`'s
+/// map-space k-NN but outside its input-space k-NN,
+///
+/// ```text
+/// T(k) = 1 − 2/(N·k·(2N−3k−1)) · Σ_i Σ_{j ∈ U_k(i)} (r_in(i,j) − k)
+/// ```
+///
+/// and neighborhood preservation is the same with the two spaces
+/// swapped. Maps with `N ≤ 3` samples have no meaningful neighborhood
+/// structure and score 1.0 by definition.
+///
+/// Cost is O(N² log N) — fine for evaluation-sized sets; `somoclu
+/// quality` runs it once per invocation, never inside training.
+pub fn rank_metrics(
+    data: &[f32],
+    dim: usize,
+    grid: &Grid,
+    bmus: &[u32],
+    k: usize,
+    threads: usize,
+) -> RankMetrics {
+    let rows = bmus.len();
+    assert_eq!(data.len(), rows * dim, "data shape mismatch");
+    if rows <= 3 {
+        return RankMetrics {
+            trustworthiness: 1.0,
+            neighborhood_preservation: 1.0,
+            k: k.max(1),
+        };
+    }
+    let n = rows;
+    let k_eff = k.min((2 * n - 2) / 3).max(1);
+    let parts = threadpool::parallel_ranges(rows, threads, |_, range| {
+        let mut trust_pen = 0u64;
+        let mut np_pen = 0u64;
+        // Scratch reused across samples in this shard.
+        let mut order: Vec<u32> = Vec::with_capacity(n - 1);
+        let mut rank_in = vec![0u32; n];
+        let mut rank_out = vec![0u32; n];
+        let mut out_knn: Vec<u32> = Vec::with_capacity(k_eff);
+        let mut in_knn: Vec<u32> = Vec::with_capacity(k_eff);
+        for i in range {
+            let xi = &data[i * dim..(i + 1) * dim];
+            let bi = bmus[i] as usize;
+            // Input-space ranking: (distance, index) under total_cmp.
+            order.clear();
+            order.extend((0..n as u32).filter(|&j| j as usize != i));
+            order.sort_unstable_by(|&a, &b| {
+                let da = sq_dist(xi, &data[a as usize * dim..(a as usize + 1) * dim]);
+                let db = sq_dist(xi, &data[b as usize * dim..(b as usize + 1) * dim]);
+                da.total_cmp(&db).then(a.cmp(&b))
+            });
+            for (p, &j) in order.iter().enumerate() {
+                rank_in[j as usize] = p as u32 + 1;
+            }
+            in_knn.clear();
+            in_knn.extend_from_slice(&order[..k_eff]);
+            // Map-space ranking: grid distance between BMU nodes.
+            order.sort_unstable_by(|&a, &b| {
+                let da = grid.distance(bi, bmus[a as usize] as usize);
+                let db = grid.distance(bi, bmus[b as usize] as usize);
+                da.total_cmp(&db).then(a.cmp(&b))
+            });
+            for (p, &j) in order.iter().enumerate() {
+                rank_out[j as usize] = p as u32 + 1;
+            }
+            out_knn.clear();
+            out_knn.extend_from_slice(&order[..k_eff]);
+            // Trustworthiness: map-space neighbors that are input-far.
+            for &j in &out_knn {
+                let r = rank_in[j as usize] as u64;
+                if r > k_eff as u64 {
+                    trust_pen += r - k_eff as u64;
+                }
+            }
+            // Preservation: input-space neighbors that are map-far.
+            for &j in &in_knn {
+                let r = rank_out[j as usize] as u64;
+                if r > k_eff as u64 {
+                    np_pen += r - k_eff as u64;
+                }
+            }
+        }
+        (trust_pen, np_pen)
+    });
+    let (trust_pen, np_pen) = parts
+        .iter()
+        .fold((0u64, 0u64), |(t, p), &(dt, dp)| (t + dt, p + dp));
+    let norm = 2.0 / (n as f64 * k_eff as f64 * (2 * n - 3 * k_eff - 1) as f64);
+    RankMetrics {
+        trustworthiness: 1.0 - norm * trust_pen as f64,
+        neighborhood_preservation: 1.0 - norm * np_pen as f64,
+        k: k_eff,
+    }
+}
+
+/// Summary statistics of one codebook dimension across all nodes — the
+/// scalar digest of a component plane (the per-dimension heatmap SOM
+/// practice reads cluster structure from).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ComponentPlane {
+    /// Which input dimension this plane describes.
+    pub dim: usize,
+    pub min: f32,
+    pub max: f32,
+    /// Mean over nodes, accumulated in f64.
+    pub mean: f32,
+}
+
+/// One [`ComponentPlane`] summary per input dimension. The full
+/// per-node plane values are `codebook.weights[n*dim + d]` — the CLI
+/// exports them verbatim under `--planes`; this function only digests.
+pub fn component_planes(codebook: &Codebook) -> Vec<ComponentPlane> {
+    let (nodes, dim) = (codebook.nodes, codebook.dim);
+    (0..dim)
+        .map(|d| {
+            let mut min = f32::INFINITY;
+            let mut max = f32::NEG_INFINITY;
+            let mut sum = 0.0f64;
+            for n in 0..nodes {
+                let w = codebook.weights[n * dim + d];
+                min = min.min(w);
+                max = max.max(w);
+                sum += w as f64;
+            }
+            if nodes == 0 {
+                (min, max) = (0.0, 0.0);
+            }
+            ComponentPlane {
+                dim: d,
+                min,
+                max,
+                mean: if nodes == 0 { 0.0 } else { (sum / nodes as f64) as f32 },
+            }
+        })
+        .collect()
+}
+
+/// Distribution summary of a U-matrix: how sharp the cluster borders
+/// are (high max/median ratio = well-separated clusters).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct UmatrixStats {
+    pub min: f32,
+    pub max: f32,
+    /// Mean over nodes, accumulated in f64.
+    pub mean: f64,
+    /// Median (average of the middle two for even lengths).
+    pub median: f32,
+}
+
+/// Compute [`UmatrixStats`] over per-node U-matrix values. An empty
+/// slice yields all zeros.
+pub fn umatrix_stats(um: &[f32]) -> UmatrixStats {
+    if um.is_empty() {
+        return UmatrixStats {
+            min: 0.0,
+            max: 0.0,
+            mean: 0.0,
+            median: 0.0,
+        };
+    }
+    let mut sorted = um.to_vec();
+    sorted.sort_unstable_by(|a, b| a.total_cmp(b));
+    let mid = sorted.len() / 2;
+    let median = if sorted.len() % 2 == 1 {
+        sorted[mid]
+    } else {
+        (sorted[mid - 1] + sorted[mid]) / 2.0
+    };
+    UmatrixStats {
+        min: sorted[0],
+        max: sorted[sorted.len() - 1],
+        mean: um.iter().map(|&v| v as f64).sum::<f64>() / um.len() as f64,
+        median,
+    }
+}
+
+/// Everything `somoclu quality` reports, in one struct.
+///
+/// Built by [`QualityReport::compute`]; serialized by
+/// [`QualityReport::to_json`] as a **version 1** JSON document. QE and
+/// TE are computed by the exact [`quantization_error`] /
+/// [`topographic_error`] functions above, so the CLI numbers match
+/// library callers bit-for-bit.
+#[derive(Clone, Debug)]
+pub struct QualityReport {
+    /// Mean quantization error ([`quantization_error`]).
+    pub qe: f32,
+    /// Topographic error ([`topographic_error`]).
+    pub te: f32,
+    /// Rank-based metrics ([`rank_metrics`]) at the report's k.
+    pub rank: RankMetrics,
+    /// Number of evaluated data rows.
+    pub rows: usize,
+    /// Input dimensionality.
+    pub dim: usize,
+    /// Map geometry, echoed so a report is self-describing.
+    pub map_rows: usize,
+    pub map_cols: usize,
+    pub grid_type: GridType,
+    pub map_type: MapType,
+    /// One summary per input dimension ([`component_planes`]).
+    pub component_planes: Vec<ComponentPlane>,
+    /// U-matrix digest, when a U-matrix was available.
+    pub umatrix: Option<UmatrixStats>,
+    /// Full per-node plane values (`planes[d][node]`), only when the
+    /// caller asked for the heavy export (CLI `--planes`).
+    pub plane_values: Option<Vec<Vec<f32>>>,
+}
+
+impl QualityReport {
+    /// Evaluate a trained map against `data` (dense row-major
+    /// `rows × dim`). `bmus` must be the BMUs of `data` on `codebook`
+    /// (e.g. from [`crate::session::SomSession::project`]); `umatrix`
+    /// is optional per-node values; `knn` is the requested neighborhood
+    /// size for [`rank_metrics`] (clamped as documented there).
+    pub fn compute(
+        data: &[f32],
+        dim: usize,
+        grid: &Grid,
+        codebook: &Codebook,
+        bmus: &[u32],
+        umatrix: Option<&[f32]>,
+        knn: usize,
+        threads: usize,
+    ) -> QualityReport {
+        let rows = bmus.len();
+        assert_eq!(data.len(), rows * dim, "data shape mismatch");
+        assert_eq!(codebook.dim, dim, "codebook dim mismatch");
+        let bmus_usize: Vec<usize> = bmus.iter().map(|&b| b as usize).collect();
+        let qe = quantization_error(data, dim, codebook, &bmus_usize);
+        let te = topographic_error(data, dim, grid, codebook, threads);
+        let rank = rank_metrics(data, dim, grid, bmus, knn, threads);
+        QualityReport {
+            qe,
+            te,
+            rank,
+            rows,
+            dim,
+            map_rows: grid.rows,
+            map_cols: grid.cols,
+            grid_type: grid.grid_type,
+            map_type: grid.map_type,
+            component_planes: component_planes(codebook),
+            umatrix: umatrix.map(umatrix_stats),
+            plane_values: None,
+        }
+    }
+
+    /// Attach the full per-node component-plane values (`planes[d]` has
+    /// one entry per node) for the heavy export path.
+    pub fn with_plane_values(mut self, codebook: &Codebook) -> QualityReport {
+        let (nodes, dim) = (codebook.nodes, codebook.dim);
+        self.plane_values = Some(
+            (0..dim)
+                .map(|d| (0..nodes).map(|n| codebook.weights[n * dim + d]).collect())
+                .collect(),
+        );
+        self
+    }
+
+    /// Versioned JSON document (schema version 1). Stable keys, sorted
+    /// output; `umatrix` is `null` when absent and `plane_values` is
+    /// omitted entirely unless exported.
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("version".into(), Json::Num(1.0));
+        obj.insert("qe".into(), Json::Num(self.qe as f64));
+        obj.insert("te".into(), Json::Num(self.te as f64));
+        obj.insert("knn".into(), Json::Num(self.rank.k as f64));
+        obj.insert(
+            "trustworthiness".into(),
+            Json::Num(self.rank.trustworthiness),
+        );
+        obj.insert(
+            "neighborhood_preservation".into(),
+            Json::Num(self.rank.neighborhood_preservation),
+        );
+        obj.insert("rows".into(), Json::Num(self.rows as f64));
+        obj.insert("dim".into(), Json::Num(self.dim as f64));
+        let mut map = BTreeMap::new();
+        map.insert("rows".into(), Json::Num(self.map_rows as f64));
+        map.insert("cols".into(), Json::Num(self.map_cols as f64));
+        map.insert(
+            "grid".into(),
+            Json::Str(
+                match self.grid_type {
+                    GridType::Square => "square",
+                    GridType::Hexagonal => "hexagonal",
+                }
+                .into(),
+            ),
+        );
+        map.insert(
+            "topology".into(),
+            Json::Str(
+                match self.map_type {
+                    MapType::Planar => "planar",
+                    MapType::Toroid => "toroid",
+                }
+                .into(),
+            ),
+        );
+        obj.insert("map".into(), Json::Obj(map));
+        let planes: Vec<Json> = self
+            .component_planes
+            .iter()
+            .map(|p| {
+                let mut o = BTreeMap::new();
+                o.insert("dim".into(), Json::Num(p.dim as f64));
+                o.insert("min".into(), Json::Num(p.min as f64));
+                o.insert("max".into(), Json::Num(p.max as f64));
+                o.insert("mean".into(), Json::Num(p.mean as f64));
+                Json::Obj(o)
+            })
+            .collect();
+        obj.insert("component_planes".into(), Json::Arr(planes));
+        obj.insert(
+            "umatrix".into(),
+            match &self.umatrix {
+                None => Json::Null,
+                Some(u) => {
+                    let mut o = BTreeMap::new();
+                    o.insert("min".into(), Json::Num(u.min as f64));
+                    o.insert("max".into(), Json::Num(u.max as f64));
+                    o.insert("mean".into(), Json::Num(u.mean));
+                    o.insert("median".into(), Json::Num(u.median as f64));
+                    Json::Obj(o)
+                }
+            },
+        );
+        if let Some(planes) = &self.plane_values {
+            obj.insert(
+                "plane_values".into(),
+                Json::Arr(
+                    planes
+                        .iter()
+                        .map(|p| {
+                            Json::Arr(p.iter().map(|&v| Json::Num(v as f64)).collect())
+                        })
+                        .collect(),
+                ),
+            );
+        }
+        Json::Obj(obj)
+    }
+}
+
+/// Quality-invariance harness: assert that two reports describe the
+/// same map equally well, naming the first divergent metric.
+///
+/// Shape fields (rows, dim, map geometry) must match **exactly**; the
+/// scalar metrics (QE, TE, trustworthiness, neighborhood preservation,
+/// U-matrix mean) must agree within absolute tolerance `tol`. Perf PRs
+/// that intentionally reorder arithmetic should pin behavior with this
+/// (e.g. `tol = 1e-5`) where bit-equality is too strict — and keep
+/// bit-level tests where it isn't.
+///
+/// Panics with the divergent metric's name and both values.
+pub fn assert_quality_invariant(a: &QualityReport, b: &QualityReport, tol: f64) {
+    assert_eq!(a.rows, b.rows, "quality invariant: rows differ");
+    assert_eq!(a.dim, b.dim, "quality invariant: dim differs");
+    assert_eq!(
+        (a.map_rows, a.map_cols),
+        (b.map_rows, b.map_cols),
+        "quality invariant: map geometry differs"
+    );
+    let checks: [(&str, f64, f64); 5] = [
+        ("qe", a.qe as f64, b.qe as f64),
+        ("te", a.te as f64, b.te as f64),
+        (
+            "trustworthiness",
+            a.rank.trustworthiness,
+            b.rank.trustworthiness,
+        ),
+        (
+            "neighborhood_preservation",
+            a.rank.neighborhood_preservation,
+            b.rank.neighborhood_preservation,
+        ),
+        (
+            "umatrix_mean",
+            a.umatrix.map_or(0.0, |u| u.mean),
+            b.umatrix.map_or(0.0, |u| u.mean),
+        ),
+    ];
+    for (name, va, vb) in checks {
+        assert!(
+            (va - vb).abs() <= tol,
+            "quality invariant violated: {name} diverged ({va} vs {vb}, tol {tol})"
+        );
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -293,5 +726,182 @@ mod tests {
         let data = vec![1.0, 3.0, 5.0];
         let te = topographic_error(&data, 1, &grid, &cb, 1);
         assert!(te > 0.99);
+    }
+
+    /// A 1-D ramp mapped onto a 1×N strip in order: every neighborhood
+    /// is perfectly preserved in both directions.
+    #[test]
+    fn rank_metrics_perfect_on_ordered_strip() {
+        let n = 12usize;
+        let grid = Grid::new(1, n, GridType::Square, MapType::Planar);
+        let data: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let bmus: Vec<u32> = (0..n as u32).collect();
+        let m = rank_metrics(&data, 1, &grid, &bmus, 3, 2);
+        assert_eq!(m.k, 3);
+        assert_eq!(m.trustworthiness, 1.0);
+        assert_eq!(m.neighborhood_preservation, 1.0);
+    }
+
+    /// Reversing half the strip tears input neighborhoods apart and
+    /// invents false map neighborhoods: both metrics must drop.
+    #[test]
+    fn rank_metrics_detect_a_folded_projection() {
+        let n = 12usize;
+        let grid = Grid::new(1, n, GridType::Square, MapType::Planar);
+        let data: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        // Interleave the two halves: 0,6,1,7,2,8,...
+        let mut bmus = vec![0u32; n];
+        for i in 0..n {
+            bmus[i] = if i % 2 == 0 { i as u32 / 2 } else { 6 + i as u32 / 2 };
+        }
+        let m = rank_metrics(&data, 1, &grid, &bmus, 3, 1);
+        assert!(m.trustworthiness < 0.95, "{}", m.trustworthiness);
+        assert!(
+            m.neighborhood_preservation < 0.95,
+            "{}",
+            m.neighborhood_preservation
+        );
+    }
+
+    #[test]
+    fn rank_metrics_thread_invariant_bits() {
+        let grid = Grid::new(4, 5, GridType::Hexagonal, MapType::Planar);
+        let mut rng = crate::util::rng::Rng::new(7);
+        let data: Vec<f32> = (0..40 * 3).map(|_| rng.f32()).collect();
+        let bmus: Vec<u32> = (0..40).map(|_| rng.next_u64() as u32 % 20).collect();
+        let a = rank_metrics(&data, 3, &grid, &bmus, 5, 1);
+        for t in [2, 4, 16] {
+            let b = rank_metrics(&data, 3, &grid, &bmus, 5, t);
+            assert_eq!(a.trustworthiness.to_bits(), b.trustworthiness.to_bits());
+            assert_eq!(
+                a.neighborhood_preservation.to_bits(),
+                b.neighborhood_preservation.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn rank_metrics_trivial_for_tiny_sets() {
+        let grid = Grid::new(2, 2, GridType::Square, MapType::Planar);
+        let m = rank_metrics(&[0.0, 1.0, 2.0], 1, &grid, &[0, 1, 2], 10, 1);
+        assert_eq!(m.trustworthiness, 1.0);
+        assert_eq!(m.neighborhood_preservation, 1.0);
+    }
+
+    #[test]
+    fn component_planes_known_values() {
+        let mut cb = Codebook::zeros(3, 2);
+        cb.row_mut(0).copy_from_slice(&[1.0, -1.0]);
+        cb.row_mut(1).copy_from_slice(&[2.0, 0.0]);
+        cb.row_mut(2).copy_from_slice(&[3.0, 1.0]);
+        let planes = component_planes(&cb);
+        assert_eq!(planes.len(), 2);
+        assert_eq!((planes[0].min, planes[0].max, planes[0].mean), (1.0, 3.0, 2.0));
+        assert_eq!((planes[1].min, planes[1].max, planes[1].mean), (-1.0, 1.0, 0.0));
+        assert_eq!(planes[0].dim, 0);
+        assert_eq!(planes[1].dim, 1);
+    }
+
+    #[test]
+    fn umatrix_stats_medians() {
+        let odd = umatrix_stats(&[3.0, 1.0, 2.0]);
+        assert_eq!((odd.min, odd.max, odd.median), (1.0, 3.0, 2.0));
+        assert_eq!(odd.mean, 2.0);
+        let even = umatrix_stats(&[4.0, 1.0, 3.0, 2.0]);
+        assert_eq!(even.median, 2.5);
+        let empty = umatrix_stats(&[]);
+        assert_eq!((empty.min, empty.max, empty.mean, empty.median), (0.0, 0.0, 0.0, 0.0));
+    }
+
+    fn tiny_report() -> QualityReport {
+        let grid = Grid::new(2, 3, GridType::Square, MapType::Planar);
+        let mut cb = Codebook::zeros(6, 2);
+        for n in 0..6 {
+            cb.row_mut(n).copy_from_slice(&[n as f32, -(n as f32)]);
+        }
+        let data = vec![0.1, 0.0, 1.2, -1.0, 2.1, -2.0, 3.9, -4.0, 5.0, -5.1];
+        let bmus = vec![0u32, 1, 2, 4, 5];
+        let um = vec![0.5f32, 1.0, 0.25, 2.0, 1.5, 0.75];
+        QualityReport::compute(&data, 2, &grid, &cb, &bmus, Some(&um), 2, 2)
+    }
+
+    #[test]
+    fn report_qe_te_match_the_direct_functions() {
+        let grid = Grid::new(2, 3, GridType::Square, MapType::Planar);
+        let mut cb = Codebook::zeros(6, 2);
+        for n in 0..6 {
+            cb.row_mut(n).copy_from_slice(&[n as f32, -(n as f32)]);
+        }
+        let data = vec![0.1, 0.0, 1.2, -1.0, 2.1, -2.0, 3.9, -4.0, 5.0, -5.1];
+        let bmus = vec![0u32, 1, 2, 4, 5];
+        let r = tiny_report();
+        let bmus_usize: Vec<usize> = bmus.iter().map(|&b| b as usize).collect();
+        assert_eq!(
+            r.qe.to_bits(),
+            quantization_error(&data, 2, &cb, &bmus_usize).to_bits()
+        );
+        assert_eq!(
+            r.te.to_bits(),
+            topographic_error(&data, 2, &grid, &cb, 2).to_bits()
+        );
+    }
+
+    #[test]
+    fn report_json_is_versioned_and_round_trips() {
+        let r = tiny_report();
+        let j = r.to_json();
+        assert_eq!(j.get("version").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(j.get("rows").and_then(|v| v.as_usize()), Some(5));
+        assert_eq!(j.get("dim").and_then(|v| v.as_usize()), Some(2));
+        let map = j.get("map").unwrap();
+        assert_eq!(map.get("grid").and_then(|v| v.as_str()), Some("square"));
+        assert_eq!(map.get("topology").and_then(|v| v.as_str()), Some("planar"));
+        assert!(j.get("plane_values").is_none());
+        let planes = j.get("component_planes").unwrap().as_arr().unwrap();
+        assert_eq!(planes.len(), 2);
+        assert!(j.get("umatrix").unwrap().as_obj().is_some());
+        // Round-trip through the text form.
+        let rt = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(
+            rt.get("qe").and_then(|v| v.as_f64()),
+            j.get("qe").and_then(|v| v.as_f64())
+        );
+    }
+
+    #[test]
+    fn report_plane_values_exported_on_request() {
+        let grid = Grid::new(2, 3, GridType::Square, MapType::Planar);
+        let mut cb = Codebook::zeros(6, 2);
+        for n in 0..6 {
+            cb.row_mut(n).copy_from_slice(&[n as f32, -(n as f32)]);
+        }
+        let r = tiny_report().with_plane_values(&cb);
+        let planes = r.plane_values.as_ref().unwrap();
+        assert_eq!(planes.len(), 2);
+        assert_eq!(planes[0].len(), 6);
+        assert_eq!(planes[0][3], 3.0);
+        assert_eq!(planes[1][3], -3.0);
+        let j = r.to_json();
+        let pv = j.get("plane_values").unwrap().as_arr().unwrap();
+        assert_eq!(pv.len(), 2);
+        assert_eq!(pv[0].as_arr().unwrap().len(), 6);
+        let _ = grid;
+    }
+
+    #[test]
+    fn quality_invariant_accepts_small_drift() {
+        let a = tiny_report();
+        let mut b = a.clone();
+        b.qe += 1e-7;
+        assert_quality_invariant(&a, &b, 1e-5);
+    }
+
+    #[test]
+    #[should_panic(expected = "te diverged")]
+    fn quality_invariant_names_the_divergent_metric() {
+        let a = tiny_report();
+        let mut b = a.clone();
+        b.te += 0.5;
+        assert_quality_invariant(&a, &b, 1e-5);
     }
 }

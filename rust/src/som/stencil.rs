@@ -53,9 +53,20 @@ pub struct NeighborhoodStencil {
     /// `blocks × n_dr × n_dc` weights, where `blocks` is 1 on square
     /// grids (displacement-keyed) and `rows` on hexagonal grids (keyed
     /// by the node's own row). A zero entry means "the sweep would skip
-    /// this pair".
+    /// this pair". **Empty in lazy mode** — workers materialize one
+    /// row's block at a time via [`Self::fill_row_block`].
     table: Vec<f32>,
     per_row: bool,
+    /// Lazy mode: the eager per-row table would exceed
+    /// [`MAX_TABLE_CELLS_PER_NODE`] cells per node, so no table is
+    /// precomputed; Phase B workers fill one `window_cells()` block on
+    /// demand as they advance through node rows.
+    lazy: bool,
+    /// The weight function's inputs, kept for lazy block fills (the
+    /// same values the key hashes).
+    nb: Neighborhood,
+    radius: f32,
+    scale: f32,
     /// Everything the table contents depend on (see [`Self::matches`]).
     key: StencilKey,
 }
@@ -85,21 +96,25 @@ fn stencil_key(grid: &Grid, nb: Neighborhood, radius: f32, scale: f32) -> Stenci
 
 impl NeighborhoodStencil {
     /// Build the window tables for one pass, or `None` when windowing
-    /// cannot win:
+    /// cannot win: the displacement window has at least as many cells
+    /// as the lattice (early epochs, where the cooling radius spans the
+    /// map — or a non-compact gaussian whose 7.5·r cutoff exceeds the
+    /// span), so each node's gather would visit everything anyway. The
+    /// caller should then run the dense full sweep, which pays no table
+    /// construction and no interval bookkeeping.
     ///
-    ///  * the displacement window has at least as many cells as the
-    ///    lattice (early epochs, where the cooling radius spans the
-    ///    map — or a non-compact gaussian whose 7.5·r cutoff exceeds
-    ///    the span): each node's gather would visit everything anyway;
-    ///  * the TOTAL table (`blocks · window_cells` — per-row blocks
-    ///    make this rows× larger on hexagonal grids) would exceed
-    ///    [`MAX_TABLE_CELLS_PER_NODE`] cells per lattice node: without
-    ///    this cap a large hex map at a mid-schedule radius could
-    ///    demand a multi-GB table and O(rows·r²) weight evaluations
-    ///    per pass, dwarfing the sweep it replaces.
-    ///
-    /// In either case the caller should run the dense full sweep, which
-    /// pays no table construction and no interval bookkeeping.
+    /// A second regime exists on hexagonal grids, whose tables carry a
+    /// per-row block: a window well under the lattice size can still
+    /// demand a `rows ×` larger table. When the total table would
+    /// exceed [`MAX_TABLE_CELLS_PER_NODE`] cells per lattice node
+    /// (multi-GB tables and O(rows·r²) construction on large maps at
+    /// mid-schedule radii), the stencil is returned in **lazy mode**
+    /// ([`Self::is_lazy`]): no table is precomputed, and each Phase B
+    /// worker fills one row's `window_cells()` block on demand with
+    /// [`Self::fill_row_block`] as it advances through node rows —
+    /// O(window) scratch per worker, ~`rows + threads` block fills per
+    /// pass, same per-entry arithmetic bit for bit. Before lazy mode
+    /// these configurations fell back to the dense sweep.
     pub fn build(grid: &Grid, nb: Neighborhood, radius: f32, scale: f32) -> Option<Self> {
         let cutoff = nb.cutoff(radius);
         let row_ext = grid.row_extent(cutoff);
@@ -109,49 +124,95 @@ impl NeighborhoodStencil {
         let per_row = grid.grid_type == GridType::Hexagonal;
         let blocks = if per_row { grid.rows } else { 1 };
         let window_cells = n_dr.saturating_mul(n_dc);
-        if window_cells >= grid.node_count()
-            || window_cells.saturating_mul(blocks)
-                >= grid.node_count().saturating_mul(MAX_TABLE_CELLS_PER_NODE)
-        {
+        if window_cells >= grid.node_count() {
             return None;
         }
+        let lazy = window_cells.saturating_mul(blocks)
+            >= grid.node_count().saturating_mul(MAX_TABLE_CELLS_PER_NODE);
 
-        let mut table = vec![0.0f32; blocks * n_dr * n_dc];
-        for (block, chunk) in table.chunks_exact_mut(n_dr * n_dc).enumerate() {
-            for sr in 0..n_dr {
-                // Representative row pair for this slot: the node row and
-                // the BMU row it reaches. Hexagonal blocks pin the node
-                // row to the block's row; square grids pick any in-range
-                // pair with the right displacement (the distance is an
-                // exact function of it — module docs).
-                let Some((ra, rb)) = rep_pair(row_ext, block, per_row, sr, grid.rows, grid.map_type)
-                else {
-                    continue;
-                };
-                let row = &mut chunk[sr * n_dc..(sr + 1) * n_dc];
-                for (sc, slot) in row.iter_mut().enumerate() {
-                    let Some((ca, cb)) =
-                        rep_pair(col_ext, 0, false, sc, grid.cols, grid.map_type)
-                    else {
-                        continue;
-                    };
-                    // Same argument order as the sweep: distance(bmu, node).
-                    let d = grid.distance(grid.index(rb, cb), grid.index(ra, ca));
-                    *slot = nb.table_entry(d, radius, scale);
-                }
-            }
-        }
-        Some(NeighborhoodStencil {
+        let mut st = NeighborhoodStencil {
             rows: grid.rows,
             cols: grid.cols,
             row_ext,
             col_ext,
             n_dr,
             n_dc,
-            table,
+            table: Vec::new(),
             per_row,
+            lazy,
+            nb,
+            radius,
+            scale,
             key: stencil_key(grid, nb, radius, scale),
-        })
+        };
+        if !lazy {
+            let mut table = vec![0.0f32; blocks * n_dr * n_dc];
+            for (block, chunk) in table.chunks_exact_mut(n_dr * n_dc).enumerate() {
+                st.fill_block_into(grid, block, chunk);
+            }
+            st.table = table;
+        }
+        Some(st)
+    }
+
+    /// Fill one block's weights into `chunk` (`n_dr × n_dc` entries,
+    /// zeroed first) — the single shared table-entry arithmetic behind
+    /// both the eager build and lazy per-worker fills, so the two modes
+    /// are bit-identical by construction.
+    fn fill_block_into(&self, grid: &Grid, block: usize, chunk: &mut [f32]) {
+        chunk.fill(0.0);
+        for sr in 0..self.n_dr {
+            // Representative row pair for this slot: the node row and
+            // the BMU row it reaches. Hexagonal blocks pin the node
+            // row to the block's row; square grids pick any in-range
+            // pair with the right displacement (the distance is an
+            // exact function of it — module docs).
+            let Some((ra, rb)) =
+                rep_pair(self.row_ext, block, self.per_row, sr, grid.rows, grid.map_type)
+            else {
+                continue;
+            };
+            let row = &mut chunk[sr * self.n_dc..(sr + 1) * self.n_dc];
+            for (sc, slot) in row.iter_mut().enumerate() {
+                let Some((ca, cb)) =
+                    rep_pair(self.col_ext, 0, false, sc, grid.cols, grid.map_type)
+                else {
+                    continue;
+                };
+                // Same argument order as the sweep: distance(bmu, node).
+                let d = grid.distance(grid.index(rb, cb), grid.index(ra, ca));
+                *slot = self.nb.table_entry(d, self.radius, self.scale);
+            }
+        }
+    }
+
+    /// True when no table was precomputed ([`Self::build`]'s per-row
+    /// size cap): Phase B workers must materialize blocks on demand via
+    /// [`Self::fill_row_block`] + [`Self::table_row_in`] instead of
+    /// calling [`Self::table_row`].
+    #[inline]
+    pub fn is_lazy(&self) -> bool {
+        self.lazy
+    }
+
+    /// Materialize node row `rn`'s weight block into `out`
+    /// (`window_cells()` entries) — the lazy-mode counterpart of the
+    /// eager table lookup. Valid in both modes (eager callers get the
+    /// same bits the table holds); workers advancing through ascending
+    /// node ranges refill only when the node row changes, so a pass
+    /// performs about `rows + threads` fills in total.
+    pub fn fill_row_block(&self, grid: &Grid, rn: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), self.window_cells(), "block buffer size mismatch");
+        let block = if self.per_row { rn } else { 0 };
+        self.fill_block_into(grid, block, out);
+    }
+
+    /// The weight row for row slot `slot_r` inside a caller-held block
+    /// buffer previously filled by [`Self::fill_row_block`], indexed by
+    /// column slot. Zero entries are "skip".
+    #[inline]
+    pub fn table_row_in<'a>(&self, buf: &'a [f32], slot_r: usize) -> &'a [f32] {
+        &buf[slot_r * self.n_dc..(slot_r + 1) * self.n_dc]
     }
 
     /// True when this stencil was built for exactly these inputs — the
@@ -179,9 +240,12 @@ impl NeighborhoodStencil {
     }
 
     /// The weight row for (node row `rn`, row slot `slot_r`), indexed by
-    /// column slot. Zero entries are "skip".
+    /// column slot. Zero entries are "skip". Eager mode only — lazy
+    /// stencils hold no table; use [`Self::fill_row_block`] +
+    /// [`Self::table_row_in`].
     #[inline]
     pub fn table_row(&self, rn: usize, slot_r: usize) -> &[f32] {
+        debug_assert!(!self.lazy, "table_row on a lazy stencil (use fill_row_block)");
         let block = if self.per_row { rn } else { 0 };
         let off = (block * self.n_dr + slot_r) * self.n_dc;
         &self.table[off..off + self.n_dc]
@@ -249,15 +313,16 @@ impl StencilCache {
     }
 }
 
-/// Table-size guard for [`NeighborhoodStencil::build`]: decline to
-/// window when the total table would exceed this many cells per lattice
-/// node. Only hexagonal grids (whose tables carry a per-row block) can
-/// hit it before the window-vs-lattice check does; at 16 the table
-/// stays within the accumulators' own O(nodes·dim) memory scale (≤ 64
-/// bytes/node) and construction stays a few weight evaluations per
-/// node, while every small-radius window — the regime the stencil
-/// exists for — is untouched. Lifting it would need lazily built
-/// per-row blocks (see ROADMAP).
+/// Table-size guard for [`NeighborhoodStencil::build`]: switch to lazy
+/// per-worker row blocks when the precomputed table would exceed this
+/// many cells per lattice node. Only hexagonal grids (whose tables
+/// carry a per-row block) can hit it before the window-vs-lattice check
+/// does; at 16 the eager table stays within the accumulators' own
+/// O(nodes·dim) memory scale (≤ 64 bytes/node) and construction stays a
+/// few weight evaluations per node. Beyond the cap, lazy mode keeps the
+/// windowed gather (instead of the old dense-sweep fallback) at
+/// O(window) scratch per worker and ~`rows + threads` block fills per
+/// pass — large hex maps at mid-schedule radii stay windowed.
 pub const MAX_TABLE_CELLS_PER_NODE: usize = 16;
 
 /// Representative (node index, BMU index) pair along one axis for table
@@ -458,22 +523,75 @@ mod tests {
     }
 
     #[test]
-    fn hex_declines_oversized_per_row_tables() {
+    fn hex_oversized_per_row_tables_go_lazy() {
         // Hexagonal tables carry a per-row block: a window that is
         // smaller than the lattice can still demand a rows× larger
-        // table. Such configs must fall back to the dense sweep (the
-        // MAX_TABLE_CELLS_PER_NODE cap), while the same geometry on a
-        // square grid (one shared block) happily windows.
+        // table. Past the MAX_TABLE_CELLS_PER_NODE cap such configs now
+        // build in lazy mode (no precomputed table, per-worker row
+        // blocks) instead of falling back to the dense sweep; the same
+        // geometry on a square grid (one shared block) eagerly windows.
         let hex = Grid::new(200, 200, GridType::Hexagonal, MapType::Planar);
         let sq = Grid::new(200, 200, GridType::Square, MapType::Planar);
         let nb = Neighborhood::gaussian(true);
         // r=40: window ~95x85 ≈ 8k cells < 40k nodes, but 200 hex blocks
         // would make ~1.6M table cells ≥ 16 * 40k.
-        assert!(NeighborhoodStencil::build(&hex, nb, 40.0, 1.0).is_none());
-        assert!(NeighborhoodStencil::build(&sq, nb, 40.0, 1.0).is_some());
-        // Small radii — the regime the stencil exists for — still window
-        // on hex.
+        let st = NeighborhoodStencil::build(&hex, nb, 40.0, 1.0).expect("lazy window");
+        assert!(st.is_lazy());
+        let st_sq = NeighborhoodStencil::build(&sq, nb, 40.0, 1.0).unwrap();
+        assert!(!st_sq.is_lazy());
+        // Lazy blocks carry EXACTLY the weights the sweep computes:
+        // sample a few node rows and verify per-entry bit-equality via
+        // the window intervals.
+        let radius = 40.0f32;
+        let mut buf = vec![0.0f32; st.window_cells()];
+        for rn in [0usize, 97, 199] {
+            st.fill_row_block(&hex, rn, &mut buf);
+            let cn = 100usize;
+            let node = hex.index(rn, cn);
+            for riv in st.row_intervals(&hex, rn).as_slice() {
+                for rb in (riv.start..riv.end).step_by(13) {
+                    let trow = st.table_row_in(&buf, riv.slot0 + (rb - riv.start));
+                    for civ in st.col_intervals(&hex, cn).as_slice() {
+                        for cb in (civ.start..civ.end).step_by(17) {
+                            let b = hex.index(rb, cb);
+                            let got = trow[civ.slot0 + (cb - civ.start)];
+                            let want = nb.table_entry(hex.distance(b, node), radius, 1.0);
+                            assert_eq!(got.to_bits(), want.to_bits(), "entry ({b},{node})");
+                        }
+                    }
+                }
+            }
+        }
+        // Small radii — the regime the eager table exists for — still
+        // precompute on hex.
         let st = NeighborhoodStencil::build(&hex, nb, 4.0, 1.0).unwrap();
+        assert!(!st.is_lazy());
         assert!(st.window_cells() * hex.rows < hex.node_count() * MAX_TABLE_CELLS_PER_NODE);
+    }
+
+    #[test]
+    fn lazy_and_eager_blocks_are_bit_identical() {
+        // fill_row_block is valid in eager mode too and must reproduce
+        // the precomputed table exactly — the bridge invariant that lets
+        // the equivalence suite trust either path.
+        for grid in combos() {
+            for nb in neighborhoods() {
+                let Some(st) = NeighborhoodStencil::build(&grid, nb, 1.7, 0.83) else {
+                    continue;
+                };
+                assert!(!st.is_lazy(), "small maps stay eager");
+                let mut buf = vec![0.0f32; st.window_cells()];
+                for rn in 0..grid.rows {
+                    st.fill_row_block(&grid, rn, &mut buf);
+                    for sr in 0..st.row_ext().slots(grid.rows) {
+                        let eager = st.table_row(rn, sr);
+                        let lazy = st.table_row_in(&buf, sr);
+                        for (a, b) in eager.iter().zip(lazy) {
+                            assert_eq!(a.to_bits(), b.to_bits());
+                        }
+                    }
+                }
+            }
+        }
     }
 }

@@ -132,8 +132,8 @@ fn top_level_help_lists_subcommands() {
         assert!(out.status.success(), "{invocation:?}");
         let text = String::from_utf8_lossy(&out.stdout);
         for needle in [
-            "Usage", "somoclu train", "somoclu serve", "somoclu convert",
-            "somoclu info",
+            "Usage", "somoclu train", "somoclu serve", "somoclu ensemble",
+            "somoclu quality", "somoclu convert", "somoclu info",
         ] {
             assert!(text.contains(needle), "missing {needle} in:\n{text}");
         }
@@ -153,6 +153,67 @@ fn per_subcommand_help_screens() {
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("--sparse"), "{text}");
+
+    let out = Command::new(bin()).args(["ensemble", "--help"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for needle in [
+        "--members", "--clusters", "--seed", "--kmeans-iters",
+        "--checkpoint-every", "INPUT_FILE", "OUTPUT_PREFIX",
+    ] {
+        assert!(text.contains(needle), "missing {needle} in:\n{text}");
+    }
+
+    let out = Command::new(bin()).args(["quality", "--help"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for needle in ["--knn", "--planes", "--out", "CHECKPOINT", "DATA_FILE"] {
+        assert!(text.contains(needle), "missing {needle} in:\n{text}");
+    }
+}
+
+#[test]
+fn quality_subcommand_emits_versioned_json() {
+    // Schema-level check only; the bit-exact QE/TE cross-validation
+    // against the library lives in rust/tests/ensemble_quality.rs.
+    let dir = tmpdir("quality_schema");
+    let mut rng = Rng::new(508);
+    let (d, _) = data::gaussian_blobs(40, 3, 3, 0.2, &mut rng);
+    let input = dir.join("data.txt");
+    dense::write_dense(&input, 40, 3, &d, false).unwrap();
+    let prefix = dir.join("map");
+    let out = Command::new(bin())
+        .args([
+            "train", "-e", "3", "-x", "5", "-y", "5", "-r", "2",
+            "--checkpoint-every", "3",
+            input.to_str().unwrap(),
+            prefix.to_str().unwrap(),
+        ])
+        .output()
+        .expect("binary runs");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let ckpt = format!("{}.epoch3.somc", prefix.display());
+
+    let out = Command::new(bin())
+        .args(["quality", "-k", "4", &ckpt, input.to_str().unwrap()])
+        .output()
+        .expect("binary runs");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let json = somoclu::util::json::Json::parse(&String::from_utf8_lossy(&out.stdout))
+        .expect("stdout is valid JSON");
+    use somoclu::util::json::Json;
+    assert_eq!(json.get("version").and_then(Json::as_usize), Some(1));
+    for key in [
+        "qe", "te", "trustworthiness", "neighborhood_preservation", "knn",
+        "rows", "dim", "map", "component_planes", "umatrix",
+    ] {
+        assert!(json.get(key).is_some(), "missing key {key}");
+    }
+    assert_eq!(json.get("rows").and_then(Json::as_usize), Some(40));
+    assert_eq!(
+        json.get("map").and_then(|m| m.get("grid")).and_then(Json::as_str),
+        Some("square")
+    );
 }
 
 #[test]

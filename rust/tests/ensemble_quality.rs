@@ -1,0 +1,439 @@
+//! ISSUE 9 acceptance: ensemble training + map-quality toolkit.
+//!
+//!  * `somoclu ensemble -k 8` produces a bit-deterministic consensus
+//!    labeling for a fixed seed across `--threads` 1/4/16, with a
+//!    per-sample agreement score — checked byte-for-byte on the
+//!    `.consensus.lbl` and `.ensemble.json` artifacts, and again at the
+//!    library level through [`EnsembleBuilder`].
+//!  * `somoclu quality` emits valid versioned JSON whose QE/TE match
+//!    the `som::quality` library functions **exactly** (the JSON writer
+//!    prints shortest-round-trip floats, so parsing back recovers the
+//!    identical f64 bits).
+//!  * Trustworthiness / neighborhood preservation are pinned against a
+//!    naive O(N³) counting-rank oracle that never sorts — a genuinely
+//!    different route to the same integer penalties.
+//!  * The quality-invariance harness accepts thread-count-only changes
+//!    at `tol = 0.0` (the metrics are designed bit-stable).
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use somoclu::api::DataInput;
+use somoclu::coordinator::config::TrainConfig;
+use somoclu::data;
+use somoclu::ensemble::EnsembleBuilder;
+use somoclu::io::dense;
+use somoclu::session::Som;
+use somoclu::som::grid::{Grid, GridType, MapType};
+use somoclu::som::quality::{
+    self, assert_quality_invariant, rank_metrics, QualityReport,
+};
+use somoclu::util::json::Json;
+use somoclu::util::rng::Rng;
+
+fn bin() -> PathBuf {
+    let mut p = std::env::current_exe().unwrap();
+    p.pop(); // deps/
+    p.pop(); // <profile>/
+    p.push("somoclu");
+    p
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("somoclu_ens_{}_{name}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn small_config(seed: u64) -> TrainConfig {
+    TrainConfig {
+        rows: 6,
+        cols: 6,
+        epochs: 3,
+        radius0: Some(3.0),
+        seed,
+        ..TrainConfig::default()
+    }
+}
+
+/// The acceptance bar at the library level: 8 members, consensus bits
+/// identical across total thread budgets 1/4/16.
+#[test]
+fn ensemble_consensus_bit_deterministic_across_thread_budgets() {
+    let mut rng = Rng::new(0xE25E);
+    let (d, _) = data::gaussian_blobs(60, 4, 3, 0.2, &mut rng);
+    let run = |threads: usize| {
+        let mut cfg = small_config(41);
+        cfg.threads = threads;
+        EnsembleBuilder::new()
+            .config(cfg)
+            .members(8)
+            .clusters(4)
+            .run(&d, 4)
+            .expect("ensemble trains")
+    };
+    let base = run(1);
+    assert_eq!(base.members.len(), 8);
+    assert_eq!(base.consensus.labels.len(), 60);
+    for threads in [4usize, 16] {
+        let r = run(threads);
+        assert_eq!(r.consensus.labels, base.consensus.labels, "threads={threads}");
+        for (i, (a, b)) in r
+            .consensus
+            .agreement
+            .iter()
+            .zip(&base.consensus.agreement)
+            .enumerate()
+        {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "agreement[{i}] diverged at threads={threads}"
+            );
+        }
+        assert_eq!(
+            r.consensus.mean_agreement.to_bits(),
+            base.consensus.mean_agreement.to_bits(),
+            "threads={threads}"
+        );
+        for (m, (x, y)) in r.members.iter().zip(&base.members).enumerate() {
+            assert_eq!(x.bmus, y.bmus, "member {m} BMUs diverged at threads={threads}");
+            assert_eq!(x.labels, y.labels, "member {m} labels diverged");
+        }
+    }
+}
+
+/// Same bar through the real binary: `somoclu ensemble -k 8` with
+/// `--threads` 1/4/16 writes byte-identical `.consensus.lbl` and
+/// `.ensemble.json`, plus one `.m<i>.bm` per member.
+#[test]
+fn ensemble_cli_artifacts_byte_identical_across_threads() {
+    let dir = tmpdir("cli_det");
+    let mut rng = Rng::new(0xC11E);
+    let (d, _) = data::gaussian_blobs(60, 4, 3, 0.2, &mut rng);
+    let input = dir.join("data.txt");
+    dense::write_dense(&input, 60, 4, &d, false).unwrap();
+
+    let mut artifacts: Vec<(Vec<u8>, Vec<u8>)> = Vec::new();
+    for threads in ["1", "4", "16"] {
+        let prefix = dir.join(format!("out_t{threads}"));
+        let out = Command::new(bin())
+            .args([
+                "ensemble", "-k", "8", "-c", "4", "-e", "3", "-x", "6", "-y", "6",
+                "-r", "3", "--seed", "99", "--threads", threads, "-v",
+                input.to_str().unwrap(),
+                prefix.to_str().unwrap(),
+            ])
+            .output()
+            .expect("binary runs");
+        assert!(
+            out.status.success(),
+            "threads={threads}: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(stderr.contains("mean"), "{stderr}");
+        for i in 0..8 {
+            let p = format!("{}.m{i}.bm", prefix.display());
+            assert!(std::path::Path::new(&p).exists(), "{p}");
+        }
+        let lbl = std::fs::read(format!("{}.consensus.lbl", prefix.display())).unwrap();
+        let json = std::fs::read(format!("{}.ensemble.json", prefix.display())).unwrap();
+        artifacts.push((lbl, json));
+    }
+    for (i, (lbl, json)) in artifacts.iter().enumerate().skip(1) {
+        assert_eq!(lbl, &artifacts[0].0, "consensus.lbl diverged (run {i})");
+        assert_eq!(json, &artifacts[0].1, "ensemble.json diverged (run {i})");
+    }
+
+    // The labeling itself is well-formed: header, one line per sample,
+    // labels inside [0, clusters), agreement in (0, 1].
+    let text = String::from_utf8(artifacts[0].0.clone()).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines[0], "% 60");
+    assert_eq!(lines.len(), 61);
+    for (i, line) in lines[1..].iter().enumerate() {
+        let f: Vec<&str> = line.split_whitespace().collect();
+        assert_eq!(f.len(), 3, "{line}");
+        assert_eq!(f[0].parse::<usize>().unwrap(), i);
+        assert!(f[1].parse::<u32>().unwrap() < 4, "{line}");
+        let a: f32 = f[2].parse().unwrap();
+        assert!(a > 0.0 && a <= 1.0, "{line}");
+    }
+
+    // And the JSON report is versioned and self-consistent.
+    let json = Json::parse(std::str::from_utf8(&artifacts[0].1).unwrap())
+        .expect("valid JSON");
+    assert_eq!(json.get("version").and_then(Json::as_usize), Some(1));
+    assert_eq!(json.get("members").and_then(Json::as_usize), Some(8));
+    assert_eq!(json.get("clusters").and_then(Json::as_usize), Some(4));
+    assert_eq!(json.get("samples").and_then(Json::as_usize), Some(60));
+    let ma = json.get("mean_agreement").and_then(Json::as_f64).unwrap();
+    assert!((0.0..=1.0).contains(&ma), "{ma}");
+    let stats = json.get("member_stats").and_then(Json::as_arr).unwrap();
+    assert_eq!(stats.len(), 8);
+    let seeds: std::collections::BTreeSet<u64> = stats
+        .iter()
+        .map(|s| {
+            s.get("seed")
+                .and_then(Json::as_str)
+                .unwrap()
+                .parse::<u64>()
+                .expect("u64 seed survives the string round-trip")
+        })
+        .collect();
+    assert_eq!(seeds.len(), 8, "member seeds must be distinct");
+}
+
+/// `somoclu quality` end-to-end: train → checkpoint → evaluate. The
+/// emitted JSON parses, is schema-version 1, and its QE/TE/rank values
+/// recover the **identical f64 bits** the library computes on the same
+/// checkpoint + data.
+#[test]
+fn quality_cli_json_matches_library_bit_for_bit() {
+    let dir = tmpdir("quality");
+    let mut rng = Rng::new(0x0A11);
+    let (d, _) = data::gaussian_blobs(50, 4, 3, 0.2, &mut rng);
+    let input = dir.join("data.txt");
+    dense::write_dense(&input, 50, 4, &d, false).unwrap();
+    let prefix = dir.join("map");
+    let out = Command::new(bin())
+        .args([
+            "train", "-e", "4", "-x", "6", "-y", "6", "-r", "3",
+            "--checkpoint-every", "4",
+            input.to_str().unwrap(),
+            prefix.to_str().unwrap(),
+        ])
+        .output()
+        .expect("binary runs");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let ckpt = format!("{}.epoch4.somc", prefix.display());
+    assert!(std::path::Path::new(&ckpt).exists(), "{ckpt}");
+
+    let out = Command::new(bin())
+        .args(["quality", "-k", "5", &ckpt, input.to_str().unwrap()])
+        .output()
+        .expect("binary runs");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let json = Json::parse(&String::from_utf8_lossy(&out.stdout))
+        .expect("quality emits valid JSON");
+
+    // Library route over the same artifacts.
+    let mut session = Som::resume(&ckpt).expect("checkpoint resumes");
+    let codebook = session.codebook().expect("codebook").clone();
+    let bmus = session
+        .project(DataInput::BorrowedF32 { data: &d, dim: 4 })
+        .expect("projection");
+    let umatrix = session.umatrix();
+    let report = QualityReport::compute(
+        &d, 4, session.grid(), &codebook, &bmus, umatrix.as_deref(), 5, 2,
+    );
+
+    assert_eq!(json.get("version").and_then(Json::as_usize), Some(1));
+    assert_eq!(json.get("rows").and_then(Json::as_usize), Some(50));
+    assert_eq!(json.get("dim").and_then(Json::as_usize), Some(4));
+    assert_eq!(json.get("knn").and_then(Json::as_usize), Some(report.rank.k));
+    let map = json.get("map").expect("map object");
+    assert_eq!(map.get("rows").and_then(Json::as_usize), Some(6));
+    assert_eq!(map.get("cols").and_then(Json::as_usize), Some(6));
+    assert_eq!(map.get("grid").and_then(Json::as_str), Some("square"));
+    assert_eq!(map.get("topology").and_then(Json::as_str), Some("planar"));
+
+    // The acceptance criterion: CLI QE/TE == library QE/TE, exactly.
+    let get = |k: &str| json.get(k).and_then(Json::as_f64).unwrap();
+    assert_eq!(get("qe").to_bits(), (report.qe as f64).to_bits());
+    assert_eq!(get("te").to_bits(), (report.te as f64).to_bits());
+    assert_eq!(
+        get("trustworthiness").to_bits(),
+        report.rank.trustworthiness.to_bits()
+    );
+    assert_eq!(
+        get("neighborhood_preservation").to_bits(),
+        report.rank.neighborhood_preservation.to_bits()
+    );
+    let planes = json.get("component_planes").and_then(Json::as_arr).unwrap();
+    assert_eq!(planes.len(), 4);
+    let um = json.get("umatrix").expect("umatrix key present");
+    let um_mean = um.get("mean").and_then(Json::as_f64).unwrap();
+    assert_eq!(um_mean.to_bits(), report.umatrix.unwrap().mean.to_bits());
+    assert!(json.get("plane_values").is_none(), "no --planes, no dump");
+
+    // --planes + -o FILE: the heavy export lands on disk with one row of
+    // node values per input dimension.
+    let report_path = dir.join("report.json");
+    let out = Command::new(bin())
+        .args([
+            "quality", "-k", "5", "--planes", "-o", report_path.to_str().unwrap(),
+            &ckpt, input.to_str().unwrap(),
+        ])
+        .output()
+        .expect("binary runs");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(out.stdout.is_empty(), "-o must silence stdout");
+    let json = Json::parse(&std::fs::read_to_string(&report_path).unwrap()).unwrap();
+    let pv = json.get("plane_values").and_then(Json::as_arr).unwrap();
+    assert_eq!(pv.len(), 4);
+    for p in pv {
+        assert_eq!(p.as_arr().unwrap().len(), 36);
+    }
+}
+
+/// Counting-rank oracle for Venna & Kaski trustworthiness/preservation:
+/// rank(i,j) = 1 + #{l : (d(i,l), l) < (d(i,j), j)} under the same
+/// (total_cmp, index) tie-break the library sorts by — no sorting, no
+/// shared code with `rank_metrics`.
+fn oracle_rank_metrics(
+    data: &[f32],
+    dim: usize,
+    grid: &Grid,
+    bmus: &[u32],
+    k: usize,
+) -> (f64, f64) {
+    let n = bmus.len();
+    assert!(n > 3);
+    let k_eff = k.min((2 * n - 2) / 3).max(1) as u64;
+    let d_in = |i: usize, j: usize| {
+        quality::sq_dist(&data[i * dim..(i + 1) * dim], &data[j * dim..(j + 1) * dim])
+    };
+    let d_out =
+        |i: usize, j: usize| grid.distance(bmus[i] as usize, bmus[j] as usize);
+    let lt = |da: f32, a: usize, db: f32, b: usize| {
+        match da.total_cmp(&db) {
+            std::cmp::Ordering::Less => true,
+            std::cmp::Ordering::Greater => false,
+            std::cmp::Ordering::Equal => a < b,
+        }
+    };
+    let rank = |d: &dyn Fn(usize, usize) -> f32, i: usize, j: usize| -> u64 {
+        1 + (0..n)
+            .filter(|&l| l != i && l != j && lt(d(i, l), l, d(i, j), j))
+            .count() as u64
+    };
+    let (mut trust, mut np) = (0u64, 0u64);
+    for i in 0..n {
+        for j in 0..n {
+            if j == i {
+                continue;
+            }
+            let r_in = rank(&d_in, i, j);
+            let r_out = rank(&d_out, i, j);
+            // j inside i's map-space k-NN but outside its input k-NN.
+            if r_out <= k_eff && r_in > k_eff {
+                trust += r_in - k_eff;
+            }
+            // j inside i's input k-NN but outside its map-space k-NN.
+            if r_in <= k_eff && r_out > k_eff {
+                np += r_out - k_eff;
+            }
+        }
+    }
+    let norm =
+        2.0 / (n as f64 * k_eff as f64 * (2 * n as u64 - 3 * k_eff - 1) as f64);
+    (1.0 - norm * trust as f64, 1.0 - norm * np as f64)
+}
+
+/// `rank_metrics` equals the counting oracle exactly — every grid type,
+/// several k, several thread counts, including heavy BMU pileups (many
+/// samples on one node ⇒ massed distance ties resolved by index).
+#[test]
+fn rank_metrics_match_naive_counting_oracle() {
+    let mut rng = Rng::new(0x7AB5);
+    let grids = [
+        Grid::new(7, 5, GridType::Square, MapType::Planar),
+        Grid::new(5, 6, GridType::Hexagonal, MapType::Toroid),
+    ];
+    for grid in &grids {
+        let n = 40;
+        let dim = 3;
+        let data: Vec<f32> = (0..n * dim).map(|_| rng.normal_f32()).collect();
+        // Pile BMUs onto few nodes so map-space ties are everywhere.
+        let bmus: Vec<u32> =
+            (0..n).map(|_| rng.below(6) as u32 * 3).collect();
+        for k in [1usize, 3, 10, 100] {
+            let (ot, onp) = oracle_rank_metrics(&data, dim, grid, &bmus, k);
+            for threads in [1usize, 3] {
+                let m = rank_metrics(&data, dim, grid, &bmus, k, threads);
+                let ctx = format!(
+                    "{:?}/{:?} k={k} threads={threads}",
+                    grid.grid_type, grid.map_type
+                );
+                assert_eq!(m.trustworthiness.to_bits(), ot.to_bits(), "{ctx}");
+                assert_eq!(
+                    m.neighborhood_preservation.to_bits(),
+                    onp.to_bits(),
+                    "{ctx}"
+                );
+            }
+        }
+    }
+}
+
+/// The invariance harness holds at `tol = 0.0` for a pure thread-count
+/// change — the guarantee perf PRs will lean on.
+#[test]
+fn quality_reports_thread_invariant_under_harness() {
+    let mut rng = Rng::new(0x1A47);
+    let (d, _) = data::gaussian_blobs(45, 4, 3, 0.25, &mut rng);
+    let cfg = small_config(7);
+    let mut session = Som::builder().config(cfg).build().expect("builds");
+    session
+        .fit(DataInput::BorrowedF32 { data: &d, dim: 4 })
+        .expect("trains");
+    let codebook = session.codebook().expect("codebook").clone();
+    let bmus = session
+        .project(DataInput::BorrowedF32 { data: &d, dim: 4 })
+        .expect("projection");
+    let um = session.umatrix();
+    let mk = |threads: usize| {
+        QualityReport::compute(
+            &d, 4, session.grid(), &codebook, &bmus, um.as_deref(), 6, threads,
+        )
+    };
+    let a = mk(1);
+    for threads in [2usize, 4, 16] {
+        assert_quality_invariant(&a, &mk(threads), 0.0);
+    }
+}
+
+/// Ensemble member checkpoints resume to bit-identical consensus through
+/// the CLI: interrupt-free and resumed runs write identical artifacts.
+#[test]
+fn ensemble_cli_checkpoint_resume_is_bit_identical() {
+    let dir = tmpdir("cli_resume");
+    let mut rng = Rng::new(0xFEED);
+    let (d, _) = data::gaussian_blobs(40, 4, 3, 0.2, &mut rng);
+    let input = dir.join("data.txt");
+    dense::write_dense(&input, 40, 4, &d, false).unwrap();
+
+    let run = |prefix: &PathBuf| {
+        let out = Command::new(bin())
+            .args([
+                "ensemble", "-k", "3", "-c", "3", "-e", "3", "-x", "5", "-y", "5",
+                "-r", "2", "--seed", "11", "--checkpoint-every", "1",
+                input.to_str().unwrap(),
+                prefix.to_str().unwrap(),
+            ])
+            .output()
+            .expect("binary runs");
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    };
+    let full = dir.join("full");
+    run(&full);
+    // Re-running over the existing member checkpoints resumes (the
+    // final-epoch .somc files are found and nothing retrains) and must
+    // reproduce the same consensus bytes.
+    let before =
+        std::fs::read(format!("{}.consensus.lbl", full.display())).unwrap();
+    run(&full);
+    let after =
+        std::fs::read(format!("{}.consensus.lbl", full.display())).unwrap();
+    assert_eq!(before, after, "resumed consensus diverged");
+
+    // And a fresh prefix with the same seed gives those same bytes too.
+    let fresh = dir.join("fresh");
+    run(&fresh);
+    let fresh_lbl =
+        std::fs::read(format!("{}.consensus.lbl", fresh.display())).unwrap();
+    assert_eq!(before, fresh_lbl, "checkpointed vs fresh consensus diverged");
+}

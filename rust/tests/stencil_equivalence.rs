@@ -388,6 +388,48 @@ fn thread_count_invariance_bucketed_and_stencil() {
     }
 }
 
+/// Lazy per-row hex stencils: radii wide enough that an eager per-row
+/// table would blow the `MAX_TABLE_CELLS_PER_NODE` budget now build in
+/// lazy mode (instead of declining to the dense sweep) and must stay
+/// bit-identical to the pre-refactor oracle. The scan crosses the
+/// eager→lazy threshold so both modes are exercised on the same map.
+#[test]
+fn lazy_hex_stencils_bit_identical_to_oracle() {
+    let mut rng = Rng::new(0x1A27);
+    let dim = 4;
+    let rows = 120;
+    let nb = Neighborhood::gaussian(true);
+    for mt in [MapType::Planar, MapType::Toroid] {
+        let grid = Grid::new(48, 18, GridType::Hexagonal, mt);
+        let nodes = grid.node_count();
+        let data: Vec<f32> = (0..rows * dim).map(|_| rng.normal_f32()).collect();
+        let bmus: Vec<u32> = (0..rows).map(|_| rng.below(nodes as u64) as u32).collect();
+        let (mut lazy_runs, mut eager_runs) = (0usize, 0usize);
+        for radius in [3.0f32, 5.0, 8.0, 10.0, 12.0] {
+            let built = NeighborhoodStencil::build(&grid, nb, radius, 0.8);
+            match &built {
+                Some(st) if st.is_lazy() => lazy_runs += 1,
+                Some(_) => eager_runs += 1,
+                None => {}
+            }
+            let (o_num, o_den) =
+                oracle_old_path(rows, nodes, dim, &grid, nb, radius, 0.8, &bmus, &data);
+            let (a_num, a_den, st) =
+                run_ext(&grid, nb, radius, 0.8, 4, SweepMode::Auto, &bmus, &data, dim);
+            assert_eq!(
+                st.stencil,
+                built.is_some(),
+                "Auto must window whenever a stencil builds ({mt:?} r={radius})"
+            );
+            let ctx = format!("{mt:?} r={radius}");
+            assert_bits_eq(&a_num, &o_num, "lazy-scan num", &ctx);
+            assert_bits_eq(&a_den, &o_den, "lazy-scan den", &ctx);
+        }
+        assert!(lazy_runs >= 2, "lazy stencil underexercised ({mt:?}): {lazy_runs}");
+        assert!(eager_runs >= 1, "eager stencil underexercised ({mt:?}): {eager_runs}");
+    }
+}
+
 /// Empty shards and single-BMU pileups go through both paths unharmed.
 #[test]
 fn degenerate_shards() {
