@@ -16,6 +16,7 @@
 //! (`-e`, `-k`, ...), plus the simulated cluster (`--ranks` replaces
 //! `mpirun -np`) and determinism (`--seed`).
 
+use crate::cluster::fault::RecoveryPolicy;
 use crate::cluster::multiproc::NetOptions;
 use crate::cluster::netmodel::NetModel;
 use crate::coordinator::config::TrainConfig;
@@ -102,6 +103,11 @@ pub fn train_spec() -> ArgSpec {
         .opt("keep-last", None, Some("keep-last"),
              "retain only the newest N cadence checkpoints, deleting \
               older ones as training progresses (0 = keep all)", Some("0"))
+        .opt("recover", None, Some("recover"),
+             "automatic rank-failure recovery for cluster runs: \
+              max-restarts=N[,backoff-ms=M] retries a failed checkpoint \
+              window up to N times with exponential backoff (default: \
+              off — the first lost rank fails the run)", None)
         .flag("prefetch", None, Some("prefetch"),
               "double-buffered chunk read-ahead for file-backed streaming")
         .flag("help", Some('h'), Some("help"), "print usage")
@@ -186,6 +192,10 @@ pub fn serve_spec() -> ArgSpec {
         .opt("threads", None, Some("threads"),
              "worker threads for training jobs and quality requests \
               (default: all cores)", None)
+        .opt("job-retries", None, Some("job-retries"),
+             "re-queue a training job that fails with a transient error \
+              (comm/io/recovery) up to N times, resuming from its newest \
+              checkpoint (0 = fail the job on first error)", Some("0"))
         .flag("help", Some('h'), Some("help"), "print usage")
         .flag("verbose", Some('v'), Some("verbose"),
               "log connections and publishes to stderr")
@@ -200,6 +210,8 @@ pub struct ServeCliOptions {
     pub checkpoint: Option<String>,
     pub state_dir: String,
     pub threads: usize,
+    /// `--job-retries N`: transient-failure retry budget per training job.
+    pub job_retries: usize,
     pub verbose: bool,
 }
 
@@ -215,6 +227,7 @@ pub fn parse_serve(parsed: &Parsed) -> Result<ServeCliOptions, ArgError> {
         checkpoint: parsed.get("checkpoint").map(str::to_string),
         state_dir: parsed.get("state-dir").unwrap().to_string(),
         threads,
+        job_retries: parsed.parse_as::<usize>("job-retries")?,
         verbose: parsed.flag("verbose"),
     })
 }
@@ -378,6 +391,9 @@ pub struct CliOptions {
     /// `--rank`/`--peers` (or the `--listen`/`--connect` shorthand):
     /// this process is one rank of a real multi-process run.
     pub multiproc: Option<NetOptions>,
+    /// `--recover max-restarts=N[,backoff-ms=M]`: retry a cluster
+    /// window aborted by a lost rank instead of failing the run.
+    pub recovery: RecoveryPolicy,
     pub verbose: bool,
 }
 
@@ -387,6 +403,46 @@ fn bad(opt: &str, val: &str, why: String) -> ArgError {
         val: val.into(),
         why,
     }
+}
+
+/// Parse `--recover max-restarts=N[,backoff-ms=M]` into a
+/// [`RecoveryPolicy`]. Key order is free; unknown keys are rejected so a
+/// typo does not silently run without recovery.
+fn parse_recover(val: &str) -> Result<RecoveryPolicy, ArgError> {
+    let mut restarts: Option<usize> = None;
+    let mut backoff_ms: Option<u64> = None;
+    for part in val.split(',') {
+        let (key, v) = part.split_once('=').ok_or_else(|| {
+            bad("recover", val, format!("`{part}` is not key=value"))
+        })?;
+        match key.trim() {
+            "max-restarts" => {
+                restarts = Some(v.trim().parse::<usize>().map_err(|e| {
+                    bad("recover", val, format!("max-restarts: {e}"))
+                })?);
+            }
+            "backoff-ms" => {
+                backoff_ms = Some(v.trim().parse::<u64>().map_err(|e| {
+                    bad("recover", val, format!("backoff-ms: {e}"))
+                })?);
+            }
+            other => {
+                return Err(bad(
+                    "recover",
+                    val,
+                    format!("unknown key `{other}`; want max-restarts=N[,backoff-ms=M]"),
+                ));
+            }
+        }
+    }
+    let restarts = restarts.ok_or_else(|| {
+        bad("recover", val, "max-restarts=N is required".into())
+    })?;
+    let mut policy = RecoveryPolicy::restarts(restarts);
+    if let Some(ms) = backoff_ms {
+        policy = policy.with_backoff(std::time::Duration::from_millis(ms));
+    }
+    Ok(policy)
 }
 
 pub fn parse_cli(parsed: &Parsed) -> Result<CliOptions, ArgError> {
@@ -491,6 +547,10 @@ pub fn parse_cli(parsed: &Parsed) -> Result<CliOptions, ArgError> {
         keep_last: parsed.parse_as::<usize>("keep-last")?,
         net,
         multiproc,
+        recovery: match parsed.get("recover") {
+            Some(v) => parse_recover(v)?,
+            None => RecoveryPolicy::none(),
+        },
         verbose: parsed.flag("verbose"),
     })
 }
@@ -603,6 +663,7 @@ fn parse_multiproc(
 mod tests {
     use super::*;
     use crate::som::{Cooling, GridType, MapType, NeighborhoodKind};
+    use std::time::Duration;
 
     fn parse(args: &[&str]) -> CliOptions {
         let spec = train_spec();
@@ -751,12 +812,45 @@ mod tests {
     }
 
     #[test]
+    fn recover_flag() {
+        let o = parse(&["in", "out"]);
+        assert_eq!(o.recovery.max_restarts, 0); // default: fail fast
+
+        let o = parse(&["--recover", "max-restarts=4", "in", "out"]);
+        assert_eq!(o.recovery.max_restarts, 4);
+        assert_eq!(o.recovery.backoff, Duration::from_millis(500));
+
+        let o = parse(&[
+            "--recover", "backoff-ms=50,max-restarts=2", "in", "out",
+        ]);
+        assert_eq!(o.recovery.max_restarts, 2);
+        assert_eq!(o.recovery.backoff, Duration::from_millis(50));
+    }
+
+    #[test]
+    fn bad_recover_values_rejected() {
+        let spec = train_spec();
+        for val in [
+            "3",                    // bare number: ambiguous, want key=value
+            "max-restarts=many",    // non-numeric
+            "backoff-ms=50",        // missing the required max-restarts
+            "max-restart=3",        // typo'd key must not silently disable
+            "max-restarts=2,,",     // empty segment
+        ] {
+            let parsed = spec
+                .parse(["--recover", val, "in", "out"].map(String::from))
+                .unwrap();
+            assert!(parse_cli(&parsed).is_err(), "accepted --recover {val}");
+        }
+    }
+
+    #[test]
     fn serve_subcommand_spec() {
         let spec = serve_spec();
         let parsed = spec
             .parse(
                 ["-c", "map.somc", "--state-dir", "st", "--threads", "2",
-                 "-v", "127.0.0.1:9009"]
+                 "--job-retries", "3", "-v", "127.0.0.1:9009"]
                     .map(String::from),
             )
             .unwrap();
@@ -765,14 +859,17 @@ mod tests {
         assert_eq!(o.checkpoint.as_deref(), Some("map.somc"));
         assert_eq!(o.state_dir, "st");
         assert_eq!(o.threads, 2);
+        assert_eq!(o.job_retries, 3);
         assert!(o.verbose);
-        // Defaults: no checkpoint, auto threads, bundled state dir.
+        // Defaults: no checkpoint, auto threads, bundled state dir,
+        // jobs fail on first error.
         let parsed = spec.parse(["unix:/tmp/s.sock"].map(String::from)).unwrap();
         let o = parse_serve(&parsed).unwrap();
         assert_eq!(o.addr, "unix:/tmp/s.sock");
         assert!(o.checkpoint.is_none());
         assert_eq!(o.state_dir, "somoclu-serve");
         assert_eq!(o.threads, 0);
+        assert_eq!(o.job_retries, 0);
         assert!(!o.verbose);
     }
 

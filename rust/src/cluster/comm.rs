@@ -93,6 +93,24 @@ pub enum CommError {
     /// The peer sent bytes that do not decode as the expected payload.
     #[error("protocol error talking to rank {peer}: {what}")]
     Protocol { peer: Rank, what: String },
+    /// The peer is still connected but produced no bytes within the
+    /// receive deadline (`SOMOCLU_COMM_TIMEOUT_SECS`) — a hung process
+    /// or a partitioned link. Feeds the same abort/recovery path as
+    /// [`CommError::PeerLost`].
+    #[error("rank {peer} timed out (no bytes within the receive deadline)")]
+    Timeout { peer: Rank },
+}
+
+impl CommError {
+    /// The rank this failure implicates — the input the recovery driver
+    /// needs to know which rank to respawn.
+    pub fn peer(&self) -> Rank {
+        match self {
+            CommError::PeerLost { peer }
+            | CommError::Protocol { peer, .. }
+            | CommError::Timeout { peer } => *peer,
+        }
+    }
 }
 
 /// A received payload: shared (loopback / in-process, zero-copy) or
@@ -326,6 +344,20 @@ pub struct World {
 
 impl World {
     pub fn new(size: usize, net: NetModel) -> Self {
+        World::new_with_wrapper(size, net, &mut |_, t| t)
+    }
+
+    /// [`World::new`] with a per-rank transport interception hook:
+    /// `wrap(rank, transport)` runs once per rank over the freshly built
+    /// channel transport, and whatever it returns becomes that rank's
+    /// endpoint transport. This is the seam the deterministic
+    /// fault-injection layer ([`crate::cluster::fault::FaultyTransport`])
+    /// plugs into; an identity closure reproduces `World::new` exactly.
+    pub fn new_with_wrapper(
+        size: usize,
+        net: NetModel,
+        wrap: &mut dyn FnMut(Rank, Box<dyn Transport>) -> Box<dyn Transport>,
+    ) -> Self {
         assert!(size > 0);
         let stats = Arc::new(CommStats::new(size));
         let net = Arc::new(net);
@@ -352,7 +384,7 @@ impl World {
                     rxs: rxs.into_iter().map(Option::unwrap).collect(),
                     net: net.clone(),
                 };
-                Endpoint::new(rank, size, Box::new(transport), stats.clone())
+                Endpoint::new(rank, size, wrap(rank, Box::new(transport)), stats.clone())
             })
             .collect();
         World {

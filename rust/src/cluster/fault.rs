@@ -1,0 +1,361 @@
+//! Deterministic fault injection and the recovery policy (ISSUE 10).
+//!
+//! Distributed fault tolerance is only trustworthy if every failure
+//! mode is a **reproducible test case**, not a flake. This module
+//! provides the two halves of that story:
+//!
+//! * [`FaultyTransport`] wraps any [`Transport`] (the in-process channel
+//!   mesh or the TCP/UDS socket transport) and executes a [`FaultPlan`]:
+//!   kill a rank at its n-th transport operation, delay an operation, or
+//!   tear a frame in half. Operation counts are **cumulative across the
+//!   whole run** (they survive world re-formation), so a fault fires
+//!   exactly once at a deterministic point and a recovered retry of the
+//!   same window does not re-trigger it — exactly how a real crashed
+//!   process behaves.
+//! * [`RecoveryPolicy`] is the knob the recovery drivers in
+//!   [`crate::cluster::runner`] and [`crate::cluster::multiproc`]
+//!   consume: how many restarts a run may spend, and the base of the
+//!   bounded exponential backoff between them.
+//!
+//! Because every rank's sequence of transport operations is fixed per
+//! (collective algorithm, rank count, schedule), `at_op` indices are
+//! deterministic: probe a clean run with [`FaultPlan::ops`] once, then
+//! aim faults at any epoch of any rank by arithmetic. The property
+//! suite in `rust/tests/fault_recovery.rs` does exactly that.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::cluster::comm::{Bytes, CommError, Rank, Transport};
+
+/// What an injected fault does when it fires.
+#[derive(Clone, Debug)]
+pub enum FaultKind {
+    /// The victim rank "dies": the firing operation and every later
+    /// operation on its transport return [`CommError::PeerLost`] naming
+    /// the victim itself. The rank's driver errors out and drops its
+    /// endpoint, so peers observe a genuine mid-collective peer loss —
+    /// the same cascade a crashed process produces.
+    Kill,
+    /// Stall the operation for the given duration, then proceed — a
+    /// slow or hiccuping peer. Under a receive deadline
+    /// (`SOMOCLU_COMM_TIMEOUT_SECS`) a long enough delay surfaces on
+    /// the other side as [`CommError::Timeout`].
+    Delay(Duration),
+    /// Truncate an outgoing payload to half its bytes. The receiving
+    /// collective sees a wrong-length payload and raises
+    /// [`CommError::Protocol`] — the corrupted-frame failure mode.
+    /// Matching a receive operation is a no-op (frames tear on send).
+    TornFrame,
+}
+
+/// One scheduled fault: fire `kind` on `victim`'s `at_op`-th transport
+/// operation (sends and receives counted together, 0-based, cumulative
+/// across world re-formations).
+#[derive(Clone, Debug)]
+pub struct FaultSpec {
+    pub victim: Rank,
+    pub at_op: u64,
+    pub kind: FaultKind,
+}
+
+struct FaultState {
+    spec: FaultSpec,
+    fired: AtomicBool,
+}
+
+/// A reproducible schedule of faults plus live per-rank operation
+/// counters. Build one, share it (`Arc`) with every [`FaultyTransport`]
+/// of a run — typically via
+/// [`SomSession::set_fault_plan`](crate::session::SomSession::set_fault_plan),
+/// which makes the cluster runner wrap every rank's transport.
+pub struct FaultPlan {
+    faults: Vec<FaultState>,
+    ops: Vec<AtomicU64>,
+}
+
+impl FaultPlan {
+    /// An empty plan (pure observation: counts operations, injects
+    /// nothing) for a world of `ranks` ranks.
+    pub fn observe(ranks: usize) -> Self {
+        FaultPlan {
+            faults: Vec::new(),
+            ops: (0..ranks).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Add a kill: `victim` dies at its `at_op`-th transport operation.
+    pub fn kill(mut self, victim: Rank, at_op: u64) -> Self {
+        self.faults.push(FaultState {
+            spec: FaultSpec { victim, at_op, kind: FaultKind::Kill },
+            fired: AtomicBool::new(false),
+        });
+        self
+    }
+
+    /// Add a stall of `dur` at `victim`'s `at_op`-th operation.
+    pub fn delay(mut self, victim: Rank, at_op: u64, dur: Duration) -> Self {
+        self.faults.push(FaultState {
+            spec: FaultSpec { victim, at_op, kind: FaultKind::Delay(dur) },
+            fired: AtomicBool::new(false),
+        });
+        self
+    }
+
+    /// Add a torn frame: `victim`'s `at_op`-th operation, if a send,
+    /// transmits only half its payload bytes.
+    pub fn torn_frame(mut self, victim: Rank, at_op: u64) -> Self {
+        self.faults.push(FaultState {
+            spec: FaultSpec { victim, at_op, kind: FaultKind::TornFrame },
+            fired: AtomicBool::new(false),
+        });
+        self
+    }
+
+    /// One pseudo-random kill derived from `seed`: victim and operation
+    /// index are a pure function of the seed (splitmix64), so a seed IS
+    /// a reproducible failure scenario. `max_op` bounds the operation
+    /// index (probe it with an [`observe`](Self::observe) run).
+    pub fn seeded_kill(seed: u64, ranks: usize, max_op: u64) -> Self {
+        let mut x = seed.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut next = move || {
+            x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+            z ^ (z >> 31)
+        };
+        let victim = (next() % ranks.max(1) as u64) as usize;
+        let at_op = next() % max_op.max(1);
+        FaultPlan::observe(ranks).kill(victim, at_op)
+    }
+
+    /// Cumulative transport operations (sends + receives) performed by
+    /// `rank` under this plan — the probe that maps epochs to `at_op`
+    /// indices: ops are linear in epochs, so two observation runs of
+    /// different lengths recover the per-epoch stride.
+    pub fn ops(&self, rank: Rank) -> u64 {
+        self.ops.get(rank).map_or(0, |c| c.load(Ordering::Relaxed))
+    }
+
+    /// Whether every scheduled fault has fired (a test that injects a
+    /// fault should assert this — otherwise the fault aimed past the
+    /// end of the run and proved nothing).
+    pub fn all_fired(&self) -> bool {
+        self.faults.iter().all(|f| f.fired.load(Ordering::Relaxed))
+    }
+
+    /// Record one operation by `rank`; returns the fault to apply, if
+    /// one matches this exact operation index and has not fired yet.
+    fn tick(&self, rank: Rank) -> Option<FaultKind> {
+        let op = match self.ops.get(rank) {
+            Some(c) => c.fetch_add(1, Ordering::Relaxed),
+            None => return None,
+        };
+        for f in &self.faults {
+            if f.spec.victim == rank
+                && f.spec.at_op == op
+                && !f.fired.swap(true, Ordering::Relaxed)
+            {
+                return Some(f.spec.kind.clone());
+            }
+        }
+        None
+    }
+}
+
+/// A [`Transport`] decorator that executes a shared [`FaultPlan`].
+/// Wrap any transport before handing it to an
+/// [`Endpoint`](crate::cluster::comm::Endpoint); the in-process runner
+/// does this automatically for every rank when a session carries a
+/// fault plan.
+pub struct FaultyTransport {
+    rank: Rank,
+    inner: Box<dyn Transport>,
+    plan: Arc<FaultPlan>,
+    /// A fired kill is sticky for this transport instance: the rank is
+    /// dead until the world re-forms with a fresh transport.
+    dead: bool,
+}
+
+impl FaultyTransport {
+    /// Wrap `inner` as rank `rank` under `plan`.
+    pub fn new(rank: Rank, inner: Box<dyn Transport>, plan: Arc<FaultPlan>) -> Self {
+        FaultyTransport { rank, inner, plan, dead: false }
+    }
+
+    fn check(&mut self) -> Result<Option<FaultKind>, CommError> {
+        if self.dead {
+            return Err(CommError::PeerLost { peer: self.rank });
+        }
+        match self.plan.tick(self.rank) {
+            Some(FaultKind::Kill) => {
+                self.dead = true;
+                Err(CommError::PeerLost { peer: self.rank })
+            }
+            other => Ok(other),
+        }
+    }
+}
+
+impl Transport for FaultyTransport {
+    fn send(&mut self, to: Rank, payload: Arc<Vec<u8>>) -> Result<(), CommError> {
+        match self.check()? {
+            Some(FaultKind::Delay(d)) => std::thread::sleep(d),
+            Some(FaultKind::TornFrame) => {
+                let torn = payload[..payload.len() / 2].to_vec();
+                return self.inner.send(to, Arc::new(torn));
+            }
+            _ => {}
+        }
+        self.inner.send(to, payload)
+    }
+
+    fn recv(&mut self, from: Rank) -> Result<Bytes, CommError> {
+        if let Some(FaultKind::Delay(d)) = self.check()? {
+            std::thread::sleep(d);
+        }
+        self.inner.recv(from)
+    }
+}
+
+/// How a training run responds to a communication-typed abort: retry
+/// the failed checkpoint window up to `max_restarts` times, sleeping
+/// `backoff * 2^k` (capped at 30 s) before the k-th consecutive retry.
+/// The default (`max_restarts = 0`) preserves the historical behavior:
+/// the first failure surfaces as an error.
+///
+/// Restarts are a **run-wide budget**, not per-window — a flapping
+/// interconnect cannot spin a job forever. A window that completes
+/// resets the backoff exponent but not the budget.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RecoveryPolicy {
+    /// Total aborted windows the run may retry before giving up.
+    pub max_restarts: usize,
+    /// Base sleep before a retry; doubles per consecutive abort.
+    pub backoff: Duration,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        RecoveryPolicy::none()
+    }
+}
+
+impl RecoveryPolicy {
+    /// No recovery: the first communication failure is fatal.
+    pub fn none() -> Self {
+        RecoveryPolicy { max_restarts: 0, backoff: Duration::ZERO }
+    }
+
+    /// Retry up to `n` times with the default 500 ms base backoff.
+    pub fn restarts(n: usize) -> Self {
+        RecoveryPolicy { max_restarts: n, backoff: Duration::from_millis(500) }
+    }
+
+    /// Override the backoff base.
+    pub fn with_backoff(mut self, base: Duration) -> Self {
+        self.backoff = base;
+        self
+    }
+
+    /// The sleep before the `attempt`-th consecutive retry (0-based):
+    /// `backoff * 2^attempt`, capped at 30 seconds.
+    pub fn backoff_for(&self, attempt: usize) -> Duration {
+        const CAP: Duration = Duration::from_secs(30);
+        let factor = 1u32 << attempt.min(16) as u32;
+        self.backoff.saturating_mul(factor).min(CAP)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::comm::{CollectiveOp, World};
+    use crate::cluster::netmodel::NetModel;
+
+    #[test]
+    fn backoff_is_bounded_exponential() {
+        let p = RecoveryPolicy::restarts(3).with_backoff(Duration::from_millis(100));
+        assert_eq!(p.backoff_for(0), Duration::from_millis(100));
+        assert_eq!(p.backoff_for(1), Duration::from_millis(200));
+        assert_eq!(p.backoff_for(2), Duration::from_millis(400));
+        assert_eq!(p.backoff_for(20), Duration::from_secs(30));
+        assert_eq!(RecoveryPolicy::none().backoff_for(5), Duration::ZERO);
+        assert_eq!(RecoveryPolicy::default(), RecoveryPolicy::none());
+    }
+
+    #[test]
+    fn seeded_kill_is_a_pure_function_of_the_seed() {
+        let a = FaultPlan::seeded_kill(7, 4, 100);
+        let b = FaultPlan::seeded_kill(7, 4, 100);
+        assert_eq!(a.faults[0].spec.victim, b.faults[0].spec.victim);
+        assert_eq!(a.faults[0].spec.at_op, b.faults[0].spec.at_op);
+        assert!(a.faults[0].spec.victim < 4);
+        assert!(a.faults[0].spec.at_op < 100);
+    }
+
+    /// A kill at op N makes the victim's N-th and every later operation
+    /// fail as a self-blaming PeerLost, while peers see a genuine
+    /// endpoint-drop cascade once the victim's endpoint goes away.
+    #[test]
+    fn kill_fires_once_at_the_exact_op() {
+        let plan = Arc::new(FaultPlan::observe(2).kill(1, 2));
+        let mut world = World::new_with_wrapper(2, NetModel::ideal(), &mut |r, t| {
+            Box::new(FaultyTransport::new(r, t, plan.clone()))
+        });
+        let mut eps = world.take_endpoints();
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        // Victim ops 0 and 1 succeed, op 2 kills, op 3 is still dead.
+        e1.send(0, Arc::new(vec![1u8]), CollectiveOp::Barrier).unwrap();
+        e1.send(0, Arc::new(vec![2u8]), CollectiveOp::Barrier).unwrap();
+        let err = e1.send(0, Arc::new(vec![3u8]), CollectiveOp::Barrier).unwrap_err();
+        assert!(matches!(err, CommError::PeerLost { peer: 1 }));
+        let err = e1.recv(0).unwrap_err();
+        assert!(matches!(err, CommError::PeerLost { peer: 1 }));
+        assert!(plan.all_fired());
+        // Pre-kill sends were delivered; after the victim's endpoint
+        // drops, the survivor sees the ordinary PeerLost cascade.
+        assert_eq!(&*e0.recv(1).unwrap(), &[1u8]);
+        assert_eq!(&*e0.recv(1).unwrap(), &[2u8]);
+        drop(e1);
+        assert!(matches!(e0.recv(1).unwrap_err(), CommError::PeerLost { peer: 1 }));
+        // Op accounting: the victim ticked 4 ops, the survivor 3 recvs.
+        assert_eq!(plan.ops(1), 4);
+        assert_eq!(plan.ops(0), 3);
+    }
+
+    #[test]
+    fn torn_frame_halves_the_payload_once() {
+        let plan = Arc::new(FaultPlan::observe(2).torn_frame(0, 0));
+        let mut world = World::new_with_wrapper(2, NetModel::ideal(), &mut |r, t| {
+            Box::new(FaultyTransport::new(r, t, plan.clone()))
+        });
+        let mut eps = world.take_endpoints();
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e0.send(1, Arc::new(vec![9u8; 8]), CollectiveOp::Allreduce).unwrap();
+        e0.send(1, Arc::new(vec![9u8; 8]), CollectiveOp::Allreduce).unwrap();
+        assert_eq!(e1.recv(0).unwrap().len(), 4, "torn frame arrives halved");
+        assert_eq!(e1.recv(0).unwrap().len(), 8, "later frames intact");
+        assert!(plan.all_fired());
+    }
+
+    #[test]
+    fn observation_plan_injects_nothing() {
+        let plan = Arc::new(FaultPlan::observe(2));
+        let mut world = World::new_with_wrapper(2, NetModel::ideal(), &mut |r, t| {
+            Box::new(FaultyTransport::new(r, t, plan.clone()))
+        });
+        let mut eps = world.take_endpoints();
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e0.send(1, Arc::new(vec![5u8; 3]), CollectiveOp::Gather).unwrap();
+        assert_eq!(&*e1.recv(0).unwrap(), &[5u8; 3]);
+        assert!(plan.all_fired(), "vacuously true with no faults");
+        assert_eq!(plan.ops(0), 1);
+        assert_eq!(plan.ops(1), 1);
+    }
+}

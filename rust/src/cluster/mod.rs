@@ -24,15 +24,22 @@
 //!   `--rank`/`--peers`/`--listen`/`--connect`.
 //! * [`runner`] — the shared per-rank training loop and the in-process
 //!   window/checkpoint driver.
+//! * [`fault`] — deterministic fault injection ([`FaultPlan`] /
+//!   [`FaultyTransport`]) and the [`RecoveryPolicy`] that turns a lost
+//!   rank into a bounded, byte-identical window retry instead of a
+//!   dead job.
 
 pub mod allreduce;
 pub mod comm;
+pub mod fault;
 pub mod multiproc;
 pub mod netmodel;
 pub mod runner;
 pub mod transport_net;
 
 pub use comm::{CollectiveAlgo, CommStats, Endpoint, OpTotals, Rank, Transport, World};
+pub use fault::{FaultKind, FaultPlan, FaultSpec, FaultyTransport, RecoveryPolicy};
 pub use multiproc::NetOptions;
 pub use netmodel::NetModel;
+pub use runner::EpochAborted;
 pub use transport_net::NetTransport;

@@ -9,30 +9,48 @@
 //! machine).
 //!
 //! Rank 0 is the coordinator-flavored rank: it owns the initial
-//! codebook (fresh init, `-c FILE`, or `--resume` state), broadcasts
-//! `[epoch u64][nodes u32][dim u32][weights…]` to the others at
-//! bootstrap, fires the checkpoint policy per epoch, and writes the
-//! outputs. Non-root ranks adopt that state and return nothing. The
-//! hello handshake's config fingerprint refuses mismatched launches
-//! before any training happens.
+//! codebook (fresh init, `-c FILE`, or `--resume` state), fires the
+//! checkpoint policy per epoch, and writes the outputs. Training runs
+//! in **checkpoint-aligned windows**: each window opens with rank 0
+//! broadcasting a header — the window's end epoch plus
+//! `[epoch u64][nodes u32][dim u32][weights…]` state — which every
+//! other rank adopts before training to the fence. The hello
+//! handshake's config fingerprint refuses mismatched launches before
+//! any training happens.
+//!
+//! **Recovery (ISSUE 10).** Because every window begins with that
+//! state broadcast, a lost rank is survivable under `--recover`: each
+//! surviving process drops its endpoints, sleeps the policy backoff,
+//! and re-enters the rendezvous (binding retries through `TIME_WAIT`);
+//! rank 0 rewinds its session to the window start. When the operator
+//! relaunches the dead rank — same CLI, fresh process — it joins the
+//! re-formed world as a blank slate and the next window header hands it
+//! the exact state every survivor rewound to. Retries are bounded by
+//! the run-wide [`RecoveryPolicy`](crate::cluster::fault::RecoveryPolicy)
+//! budget; exhausting it (or failing to re-form the world) surfaces the
+//! typed `recovery` error naming the root-cause rank.
 //!
 //! Determinism: the collectives are the same algorithms as the
 //! simulated path with the same fixed summation orders, so a real
 //! 2-process TCP run produces BMUs identical to (and codebook bits
-//! matching) the simulated `--ranks 2` run.
+//! matching) the simulated `--ranks 2` run — and a recovered run is
+//! byte-identical to an uninterrupted one.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::cluster::allreduce::{barrier_with, broadcast_bytes_from_root, ROOT};
-use crate::cluster::comm::{CollectiveOp, CommStats, Endpoint};
+use crate::cluster::comm::{CollectiveOp, CommError, CommStats, Endpoint};
+use crate::cluster::fault::{FaultPlan, FaultyTransport};
 use crate::cluster::runner::{
-    check_stream_kind, comm_failed, open_rank_source, rank_train_loop, ClusterReport,
-    StreamInput,
+    abort_error, check_stream_kind, comm_failed, open_rank_source, rank_train_loop,
+    window_end, ClusterReport, CommFailure, EpochAborted, StreamInput,
 };
 use crate::cluster::transport_net::NetTransport;
 use crate::coordinator::config::{Initialization, TrainConfig};
 use crate::coordinator::train::{init_codebook, TrainResult};
+use crate::error::SomError;
+use crate::io::stream::DataSource;
 use crate::kernels::KernelType;
 use crate::session::SomSession;
 use crate::som::Codebook;
@@ -112,6 +130,89 @@ fn decode_state(bytes: &[u8]) -> anyhow::Result<(u64, Codebook)> {
     Ok((epoch, Codebook { nodes, dim, weights }))
 }
 
+/// Per-window header: `[end u64]` then the state-sync payload — the
+/// fence every rank (including a freshly relaunched replacement, which
+/// has no checkpoint policy to derive it from) trains to.
+fn encode_window(end: u64, epoch: u64, cb: &Codebook) -> Vec<u8> {
+    let mut out = Vec::with_capacity(24 + cb.weights.len() * 4);
+    out.extend_from_slice(&end.to_le_bytes());
+    out.extend_from_slice(&encode_state(epoch, cb));
+    out
+}
+
+fn decode_window(bytes: &[u8]) -> anyhow::Result<(u64, u64, Codebook)> {
+    anyhow::ensure!(bytes.len() >= 8, "window header truncated");
+    let end = u64::from_le_bytes(bytes[..8].try_into().unwrap());
+    let (epoch, cb) = decode_state(&bytes[8..])?;
+    Ok((end, epoch, cb))
+}
+
+/// Rendezvous and wrap this rank's endpoint. A session-installed
+/// [`FaultPlan`] wraps the socket transport exactly as the in-process
+/// runner wraps its channel mesh — deterministic chaos over real
+/// sockets.
+fn form_world(
+    rank: usize,
+    ranks: usize,
+    peers: &[String],
+    fingerprint: u64,
+    stats: &Arc<CommStats>,
+    fault_plan: &Option<Arc<FaultPlan>>,
+) -> anyhow::Result<Endpoint> {
+    let net = NetTransport::bootstrap(rank, ranks, peers, fingerprint)?;
+    let transport: Box<dyn crate::cluster::comm::Transport> = match fault_plan {
+        Some(plan) => Box::new(FaultyTransport::new(rank, Box::new(net), plan.clone())),
+        None => Box::new(net),
+    };
+    Ok(Endpoint::new(rank, ranks, transport, stats.clone()))
+}
+
+/// When `e` is communication-typed, the `(failed rank, epoch, cause)`
+/// the recovery driver needs; `None` marks it non-retryable.
+fn comm_cause(e: &anyhow::Error, fallback_epoch: usize) -> Option<(usize, usize, String)> {
+    if let Some(f) = e.downcast_ref::<CommFailure>() {
+        return Some((f.source.peer(), f.epoch, f.source.to_string()));
+    }
+    if let Some(c) = e.downcast_ref::<CommError>() {
+        return Some((c.peer(), fallback_epoch, c.to_string()));
+    }
+    None
+}
+
+/// One checkpoint window: adopt the root's header (fence + state), then
+/// train to the fence. Returns the fence and, on rank 0, the window's
+/// result.
+fn run_window(
+    session: &mut SomSession,
+    ep: &mut Endpoint,
+    source: &mut dyn DataSource,
+    cfg: &TrainConfig,
+    rank: usize,
+    total_rows: usize,
+    dim: usize,
+) -> anyhow::Result<(usize, Option<TrainResult>)> {
+    let payload = (rank == ROOT).then(|| {
+        let end = window_end(session, cfg.epochs);
+        let cb = session.codebook().expect("root codebook installed");
+        Arc::new(encode_window(end as u64, session.epoch() as u64, cb))
+    });
+    let header = broadcast_bytes_from_root(ep, payload, CollectiveOp::Bootstrap)
+        .map_err(|e| comm_failed(rank, session.epoch(), e))?;
+    let (end, epoch, cb) = decode_window(&header)?;
+    if rank != ROOT {
+        anyhow::ensure!(
+            cb.dim == dim,
+            "rank 0's codebook dim {} does not match this shard's dim {dim} \
+             (are all ranks reading the same file?)",
+            cb.dim
+        );
+        session.install_codebook(cb)?;
+        session.set_epoch_cursor(epoch as usize);
+    }
+    let result = rank_train_loop(session, ep, source, total_rows, end as usize)?;
+    Ok((end as usize, result))
+}
+
 /// Train this process's rank of a real multi-process cluster (the
 /// engine behind [`SomSession::fit_cluster_net`]). Returns the final
 /// result on rank 0 (`None` elsewhere) plus this process's
@@ -170,31 +271,73 @@ pub(crate) fn run_cluster_net(
     }
 
     let fingerprint = config_fingerprint(&cfg);
-    let transport = NetTransport::bootstrap(opts.rank, ranks, &opts.peers, fingerprint)?;
+    let policy = session.recovery().clone();
+    let fault_plan = session.fault_plan();
     let stats = Arc::new(CommStats::new(ranks));
-    let mut ep = Endpoint::new(opts.rank, ranks, Box::new(transport), stats.clone());
 
-    // State sync: rank 0's cursor + codebook, byte-exact on every rank.
-    let payload = (opts.rank == ROOT).then(|| {
-        let cb = session.codebook().expect("root codebook installed");
-        Arc::new(encode_state(session.epoch() as u64, cb))
-    });
-    let state = broadcast_bytes_from_root(&mut ep, payload, CollectiveOp::Bootstrap)
-        .map_err(|e| comm_failed(opts.rank, session.epoch(), e))?;
-    if opts.rank != ROOT {
-        let (epoch, cb) = decode_state(&state)?;
-        anyhow::ensure!(
-            cb.dim == dim,
-            "rank 0's codebook dim {} does not match this shard's dim {dim} \
-             (are all ranks reading the same file?)",
-            cb.dim
-        );
-        session.install_codebook(cb)?;
-        session.set_epoch_cursor(epoch as usize);
-    }
+    // The initial rendezvous is fatal on failure — recovery only covers
+    // worlds that formed once (a typo'd --peers list should not retry).
+    let mut ep = form_world(opts.rank, ranks, &opts.peers, fingerprint, &stats, &fault_plan)?;
 
     let mut source = open_rank_source(&input, &cfg, opts.rank, ranks)?;
-    let result = rank_train_loop(session, &mut ep, &mut *source, total_rows, cfg.epochs)?;
+    let total_epochs = cfg.epochs;
+    let mut restarts_left = policy.max_restarts;
+    let mut consecutive_aborts = 0usize;
+    let mut final_result: Option<TrainResult> = None;
+    loop {
+        let window_start = session.epoch();
+        let history_mark = session.history().len();
+        let rewind_codebook = (opts.rank == ROOT)
+            .then(|| session.codebook().expect("root codebook installed").clone());
+
+        match run_window(session, &mut ep, &mut *source, &cfg, opts.rank, total_rows, dim) {
+            Ok((end, result)) => {
+                consecutive_aborts = 0;
+                if end >= total_epochs {
+                    final_result = result;
+                    break;
+                }
+            }
+            Err(e) => {
+                let (failed_rank, epoch, cause) = match comm_cause(&e, window_start) {
+                    Some(c) => c,
+                    None => return Err(e), // not retryable: surface as-is
+                };
+                let abort = EpochAborted {
+                    failed_rank,
+                    epoch,
+                    rewind_to: window_start,
+                    cause,
+                };
+                if restarts_left == 0 {
+                    return Err(abort_error(abort, &policy));
+                }
+                restarts_left -= 1;
+                // Rank 0 rewinds to the window start; the other ranks
+                // re-adopt that exact state from the next window header.
+                if let Some(cb) = rewind_codebook {
+                    session.install_codebook(cb)?;
+                    session.set_epoch_cursor(window_start);
+                    session.truncate_history(history_mark);
+                }
+                // Tear the old endpoints down first so peers unblock,
+                // then wait out the backoff and re-rendezvous — the
+                // window in which the operator (or a supervisor) must
+                // relaunch the dead rank.
+                drop(ep);
+                std::thread::sleep(policy.backoff_for(consecutive_aborts));
+                consecutive_aborts += 1;
+                ep = form_world(opts.rank, ranks, &opts.peers, fingerprint, &stats, &fault_plan)
+                    .map_err(|e| {
+                        anyhow::Error::new(SomError::recovery(format!(
+                            "rank {}: could not re-form the world after rank {} \
+                             failed: {e:#}",
+                            opts.rank, abort.failed_rank
+                        )))
+                    })?;
+            }
+        }
+    }
 
     // Final barrier: no process tears its sockets down while a peer is
     // still inside the BMU gather.
@@ -203,7 +346,7 @@ pub(crate) fn run_cluster_net(
 
     let mut report = ClusterReport::new(ranks);
     report.absorb(&stats);
-    let result = result.map(|mut r| {
+    let result = final_result.map(|mut r| {
         r.total = t0.elapsed();
         r
     });
@@ -332,5 +475,124 @@ mod tests {
                 .map(|w| w.to_bits())
                 .collect::<Vec<_>>()
         );
+    }
+
+    fn write_blob(dir: &std::path::Path, seed: u64) -> (std::path::PathBuf, Vec<f32>) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut rng = Rng::new(seed);
+        let (dat, _) = data::gaussian_blobs(60, 4, 3, 0.2, &mut rng);
+        let bin = dir.join("net.somb");
+        crate::io::binary::write_binary_dense(&bin, 60, 4, &dat).unwrap();
+        (bin, dat)
+    }
+
+    fn free_port() -> u16 {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().port()
+    }
+
+    fn net_cfg() -> TrainConfig {
+        TrainConfig {
+            rows: 6,
+            cols: 6,
+            epochs: 4,
+            threads: 1,
+            ranks: 2,
+            radius0: Some(3.0),
+            chunk_rows: 16,
+            ..Default::default()
+        }
+    }
+
+    /// Run a 2-rank loopback-TCP cluster in threads; `tune` customizes
+    /// each rank's session (fault plan, recovery, checkpoints) before
+    /// training. Returns rank 0's result.
+    fn run_net_pair(
+        bin: &std::path::Path,
+        cfg: &TrainConfig,
+        tune: impl Fn(usize, &mut crate::session::SomSession) + Clone + Send + 'static,
+    ) -> TrainResult {
+        let peers = vec![format!("127.0.0.1:{}", free_port())];
+        let outcomes = run_concurrent(
+            (0..2usize)
+                .map(|rank| {
+                    let cfg = cfg.clone();
+                    let peers = peers.clone();
+                    let bin = bin.to_path_buf();
+                    let tune = tune.clone();
+                    move || -> anyhow::Result<Option<TrainResult>> {
+                        let mut session = Som::builder().config(cfg).build()?;
+                        tune(rank, &mut session);
+                        let (res, _) = run_cluster_net(
+                            &mut session,
+                            StreamInput::Binary { path: bin },
+                            &NetOptions { rank, peers },
+                        )?;
+                        Ok(res)
+                    }
+                })
+                .collect(),
+        );
+        let mut root_result = None;
+        for o in outcomes {
+            if let Some(r) = o.unwrap() {
+                root_result = Some(r);
+            }
+        }
+        root_result.expect("rank 0 returns the result")
+    }
+
+    /// The windowed header protocol must not change results: a net run
+    /// whose root checkpoints every 2 epochs (two windows, two header
+    /// broadcasts) matches the unwindowed net run bit-for-bit.
+    #[test]
+    fn net_cluster_windows_are_bit_identical() {
+        let dir = std::env::temp_dir()
+            .join(format!("somoclu_multiproc_win_{}", std::process::id()));
+        let (bin, _) = write_blob(&dir, 23);
+        let cfg = net_cfg();
+        let plain = run_net_pair(&bin, &cfg, |_, _| {});
+        let prefix = dir.join("ck");
+        let windowed = run_net_pair(&bin, &cfg, move |rank, session| {
+            if rank == 0 {
+                session.set_checkpoint_every(2, &prefix);
+            }
+        });
+        assert_eq!(windowed.bmus, plain.bmus);
+        assert_eq!(windowed.codebook.weights, plain.codebook.weights);
+        assert!(
+            crate::session::checkpoint_path(dir.join("ck"), 2).exists(),
+            "window fence checkpoint missing"
+        );
+    }
+
+    /// Deterministic chaos over real sockets: a rank killed mid-run by
+    /// an injected fault recovers through the re-rendezvous path to a
+    /// byte-identical result. (Real-process SIGKILL recovery is covered
+    /// in tests/fault_recovery.rs; this exercises the same protocol
+    /// in-thread.)
+    #[test]
+    fn net_cluster_recovers_from_injected_kill() {
+        use crate::cluster::fault::{FaultPlan, RecoveryPolicy};
+        use std::time::Duration;
+        let dir = std::env::temp_dir()
+            .join(format!("somoclu_multiproc_chaos_{}", std::process::id()));
+        let (bin, _) = write_blob(&dir, 24);
+        let cfg = net_cfg();
+        let clean = run_net_pair(&bin, &cfg, |_, _| {});
+
+        let plan = Arc::new(FaultPlan::observe(2).kill(1, 10));
+        let check = plan.clone();
+        let recovered = run_net_pair(&bin, &cfg, move |rank, session| {
+            if rank == 1 {
+                session.set_fault_plan(Some(plan.clone()));
+            }
+            session.set_recovery(
+                RecoveryPolicy::restarts(2).with_backoff(Duration::from_millis(1)),
+            );
+        });
+        assert!(check.all_fired(), "the kill never triggered");
+        assert_eq!(recovered.bmus, clean.bmus);
+        assert_eq!(recovered.codebook.weights, clean.codebook.weights);
     }
 }

@@ -49,7 +49,9 @@ use crate::cluster::allreduce::{
     gather_u32_with, reduce_sum_to_root,
 };
 use crate::cluster::comm::{CollectiveAlgo, CommError, CommStats, Endpoint, Rank, World};
+use crate::cluster::fault::{FaultyTransport, RecoveryPolicy};
 use crate::cluster::netmodel::NetModel;
+use crate::error::SomError;
 use crate::coordinator::config::{IoMode, TrainConfig};
 use crate::coordinator::train::{
     init_codebook, init_codebook_with_data, EpochStats, TrainResult,
@@ -228,13 +230,54 @@ impl ClusterReport {
     }
 }
 
-/// Wrap a collective failure with who noticed it and when — the clean
-/// "rank k lost at epoch e" surface a dead peer gets instead of the
-/// old endpoint panic.
+/// A rank's communication failure annotated with who observed it and
+/// when — the clean "rank k lost at epoch e" surface a dead peer gets
+/// instead of the old endpoint panic, and the typed unit the
+/// window-fence abort classification consumes.
+#[derive(Debug, thiserror::Error)]
+#[error("rank {rank}: communication failed at epoch {epoch}")]
+pub struct CommFailure {
+    /// The rank that observed the failure.
+    pub rank: Rank,
+    /// The absolute epoch it was at when the collective failed.
+    pub epoch: usize,
+    /// The underlying transport failure.
+    #[source]
+    pub source: CommError,
+}
+
+/// Wrap a collective failure with who noticed it and when.
 pub(crate) fn comm_failed(rank: Rank, epoch: usize, e: CommError) -> anyhow::Error {
-    anyhow::Error::new(e).context(format!(
-        "rank {rank}: communication failed at epoch {epoch}"
-    ))
+    anyhow::Error::new(CommFailure {
+        rank,
+        epoch,
+        source: e,
+    })
+}
+
+/// The typed window-fence abort state (ISSUE 10): when any rank fails
+/// a collective mid-window, the surviving ranks' `PeerLost` cascade
+/// collapses into this one value at the fence — who died, when, and
+/// which epoch the retry rewinds to. The recovery driver re-runs
+/// aborted windows under the session's
+/// [`RecoveryPolicy`](crate::cluster::fault::RecoveryPolicy); with the
+/// restart budget exhausted (or recovery disabled) it surfaces as the
+/// root cause of the run's typed [`SomError`].
+#[derive(Debug, Clone, thiserror::Error)]
+#[error(
+    "epoch {epoch} aborted: rank {failed_rank} failed ({cause}); \
+     training rewinds to epoch {rewind_to}"
+)]
+pub struct EpochAborted {
+    /// The rank blamed for the abort: the rank whose own outcome blames
+    /// itself (it died in place), or the peer most survivors lost.
+    pub failed_rank: Rank,
+    /// The earliest epoch at which any rank observed the failure.
+    pub epoch: usize,
+    /// The checkpoint-window start a retry rewinds to.
+    pub rewind_to: usize,
+    /// The root-cause transport failure, rendered.
+    pub cause: String,
 }
 
 /// One rank's run over `[session.epoch(), end_epoch)`: per epoch, the
@@ -332,32 +375,98 @@ pub(crate) fn rank_train_loop(
     }
 }
 
-/// Pick the master's result out of the per-rank outcomes. When a rank
-/// dies, its peers all fail with `PeerLost` cascades — prefer a
-/// non-communication error (the dying rank's own kernel/IO failure) as
-/// the root cause, falling back to the first cascade.
-fn pick_master(
+/// What one window's per-rank outcomes collapse to at the fence.
+enum WindowOutcome {
+    /// Every rank completed; the master's result.
+    Complete(TrainResult),
+    /// At least one rank failed a collective: the typed abort the
+    /// recovery driver retries. Session state is untouched on abort.
+    Aborted(EpochAborted),
+}
+
+/// The window-fence protocol (replaces the old `pick_master`): fold the
+/// per-rank outcomes into one [`WindowOutcome`]. Communication failures
+/// from any number of ranks — the victim's own error plus its peers'
+/// `PeerLost`/`Timeout`/`Protocol` cascades — converge on a single
+/// [`EpochAborted`] naming the root-cause rank. Non-communication
+/// errors (kernel bugs, unreadable shards) surface immediately and are
+/// never retried.
+fn window_fence(
     outcomes: Vec<anyhow::Result<Option<TrainResult>>>,
-) -> anyhow::Result<TrainResult> {
+    rewind_to: usize,
+) -> anyhow::Result<WindowOutcome> {
     let mut master: Option<TrainResult> = None;
-    let mut comm_err: Option<anyhow::Error> = None;
-    for o in outcomes {
+    // (observer, blamed peer, epoch, rendered cause) per failed rank.
+    let mut failures: Vec<(Rank, Rank, usize, String)> = Vec::new();
+    for (rank, o) in outcomes.into_iter().enumerate() {
         match o {
             Ok(Some(res)) => master = Some(res),
             Ok(None) => {}
             Err(e) => {
-                if e.downcast_ref::<CommError>().is_some() {
-                    comm_err.get_or_insert(e);
+                if let Some(f) = e.downcast_ref::<CommFailure>() {
+                    failures.push((f.rank, f.source.peer(), f.epoch, f.source.to_string()));
+                } else if let Some(c) = e.downcast_ref::<CommError>() {
+                    failures.push((rank, c.peer(), rewind_to, c.to_string()));
                 } else {
                     return Err(e);
                 }
             }
         }
     }
-    if let Some(e) = comm_err {
-        return Err(e);
+    if !failures.is_empty() {
+        // A rank blaming itself died in place (injected kill, local
+        // socket teardown); otherwise the most-blamed peer is the one
+        // that vanished (ties break low).
+        let failed_rank = failures
+            .iter()
+            .find(|(observer, peer, _, _)| observer == peer)
+            .map(|&(_, peer, _, _)| peer)
+            .unwrap_or_else(|| {
+                let mut votes: Vec<(usize, Rank)> = Vec::new();
+                for &(_, peer, _, _) in &failures {
+                    match votes.iter_mut().find(|(_, p)| *p == peer) {
+                        Some((n, _)) => *n += 1,
+                        None => votes.push((1, peer)),
+                    }
+                }
+                votes.sort_by_key(|&(n, p)| (std::cmp::Reverse(n), p));
+                votes[0].1
+            });
+        let epoch = failures.iter().map(|&(_, _, e, _)| e).min().unwrap_or(rewind_to);
+        let cause = failures
+            .iter()
+            .find(|&&(_, peer, _, _)| peer == failed_rank)
+            .map(|(_, _, _, c)| c.clone())
+            .unwrap_or_else(|| failures[0].3.clone());
+        return Ok(WindowOutcome::Aborted(EpochAborted {
+            failed_rank,
+            epoch,
+            rewind_to,
+            cause,
+        }));
     }
-    master.ok_or_else(|| anyhow::anyhow!("rank 0 produced no result"))
+    master
+        .map(WindowOutcome::Complete)
+        .ok_or_else(|| anyhow::anyhow!("rank 0 produced no result"))
+}
+
+/// The terminal error for an abort the run will not retry: recovery
+/// disabled keeps the historical `comm` error code; an exhausted
+/// restart budget surfaces as the typed `recovery` code. Either way
+/// the [`EpochAborted`] root cause rides the chain — never a bare
+/// `PeerLost` cascade.
+pub(crate) fn abort_error(abort: EpochAborted, policy: &RecoveryPolicy) -> anyhow::Error {
+    let som = if policy.max_restarts == 0 {
+        SomError::Comm(format!(
+            "{abort}; recovery disabled (--recover max-restarts=N retries automatically)"
+        ))
+    } else {
+        SomError::recovery(format!(
+            "{abort}; recovery exhausted after {} restart(s)",
+            policy.max_restarts
+        ))
+    };
+    anyhow::Error::new(abort).context(som)
 }
 
 fn check_kernel_ranks(cfg: &TrainConfig) -> anyhow::Result<()> {
@@ -442,6 +551,16 @@ pub(crate) fn open_rank_source(
 /// (firing its checkpoint policy), and repeat until the schedule
 /// completes. The resident and streamed paths differ only in how
 /// `spawn` builds each rank's data source.
+///
+/// **Recovery (ISSUE 10):** the coordinator session is only mutated
+/// when a window completes, so an [`EpochAborted`] window is retried
+/// for free — re-form the world (respawning every rank, including the
+/// dead one, from the same pre-window codebook) and re-run. Collectives
+/// are deterministic per (rank count, algorithm), so the recovered run
+/// is **byte-identical** to an uninterrupted one. Retries are bounded
+/// by the session's [`RecoveryPolicy`] with exponential backoff; a
+/// session carrying a [`FaultPlan`](crate::cluster::fault::FaultPlan)
+/// gets every rank's transport wrapped in a [`FaultyTransport`].
 fn run_windows(
     session: &mut SomSession,
     net: NetModel,
@@ -454,24 +573,47 @@ fn run_windows(
 ) -> anyhow::Result<(TrainResult, ClusterReport)> {
     let ranks = session.config().ranks;
     let total_epochs = session.config().epochs;
+    let policy = session.recovery().clone();
+    let fault_plan = session.fault_plan();
     let t0 = Instant::now();
     let mut report = ClusterReport::new(ranks);
     let mut all_stats: Vec<EpochStats> = Vec::new();
     let mut last_master: Option<TrainResult> = None;
+    let mut restarts_left = policy.max_restarts;
+    let mut consecutive_aborts = 0usize;
     loop {
         let start = session.epoch();
         let end = window_end(session, total_epochs);
         let init = session.codebook().expect("codebook installed").clone();
-        let mut world = World::new(ranks, net.clone());
+        let mut world = match &fault_plan {
+            Some(plan) => World::new_with_wrapper(ranks, net.clone(), &mut |r, t| {
+                Box::new(FaultyTransport::new(r, t, plan.clone()))
+            }),
+            None => World::new(ranks, net.clone()),
+        };
         let endpoints = world.take_endpoints();
         let outcomes = spawn(endpoints, &init, start, end);
         report.absorb(&world.stats);
-        let master = pick_master(outcomes)?;
-        all_stats.extend(master.epochs.iter().cloned());
-        session.adopt_cluster_window(&master, end)?;
-        last_master = Some(master);
-        if end >= total_epochs {
-            break;
+        match window_fence(outcomes, start)? {
+            WindowOutcome::Complete(master) => {
+                all_stats.extend(master.epochs.iter().cloned());
+                session.adopt_cluster_window(&master, end)?;
+                last_master = Some(master);
+                consecutive_aborts = 0;
+                if end >= total_epochs {
+                    break;
+                }
+            }
+            WindowOutcome::Aborted(abort) => {
+                if restarts_left == 0 {
+                    return Err(abort_error(abort, &policy));
+                }
+                restarts_left -= 1;
+                std::thread::sleep(policy.backoff_for(consecutive_aborts));
+                consecutive_aborts += 1;
+                // Fall through: the loop re-reads the untouched session
+                // cursor/codebook and re-runs the same window.
+            }
         }
     }
     let mut result = last_master.expect("at least one window ran");
@@ -487,7 +629,7 @@ fn run_windows(
 /// window to 4, 6, 8, … so the `epoch % every == 0` save in
 /// `adopt_cluster_window` fires after every window — the same cadence
 /// the single-process path produces.
-fn window_end(session: &SomSession, total_epochs: usize) -> usize {
+pub(crate) fn window_end(session: &SomSession, total_epochs: usize) -> usize {
     match session.checkpoint_interval() {
         Some(n) if n > 0 => ((session.epoch() / n + 1) * n).min(total_epochs),
         _ => total_epochs,
@@ -716,6 +858,8 @@ mod tests {
     use crate::io::dense;
     use crate::session::Som;
     use crate::util::rng::Rng;
+    use std::sync::Arc;
+    use std::time::Duration;
 
     fn cfg(ranks: usize) -> TrainConfig {
         TrainConfig {
@@ -1090,5 +1234,139 @@ mod tests {
                 "missing checkpoint at epoch {k}"
             );
         }
+    }
+
+    /// The fence must collapse a whole failure cascade — the victim's
+    /// self-blame plus every survivor's `PeerLost` — into one abort
+    /// naming the root-cause rank and the earliest failing epoch.
+    #[test]
+    fn window_fence_collapses_cascade_to_root_cause() {
+        let outcomes: Vec<anyhow::Result<Option<TrainResult>>> = vec![
+            // Rank 0 (root) noticed rank 1 vanish at epoch 4.
+            Err(comm_failed(0, 4, CommError::PeerLost { peer: 1 })),
+            // Rank 1 blames itself (injected kill) at epoch 3.
+            Err(comm_failed(1, 3, CommError::PeerLost { peer: 1 })),
+            // Rank 2's cascade arrives blaming rank 1 too.
+            Err(comm_failed(2, 4, CommError::Timeout { peer: 1 })),
+        ];
+        match window_fence(outcomes, 2).unwrap() {
+            WindowOutcome::Aborted(a) => {
+                assert_eq!(a.failed_rank, 1);
+                assert_eq!(a.epoch, 3, "earliest observed failure epoch");
+                assert_eq!(a.rewind_to, 2);
+                assert!(a.cause.contains("rank 1"), "{}", a.cause);
+                let text = a.to_string();
+                assert!(text.contains("rewinds to epoch 2"), "{text}");
+            }
+            WindowOutcome::Complete(_) => panic!("expected abort"),
+        }
+    }
+
+    /// Without a self-blaming victim (a real process crash leaves no
+    /// first-person report), the most-blamed peer is the failed rank.
+    #[test]
+    fn window_fence_votes_when_no_self_blame() {
+        let outcomes: Vec<anyhow::Result<Option<TrainResult>>> = vec![
+            Err(comm_failed(0, 2, CommError::PeerLost { peer: 3 })),
+            Err(comm_failed(1, 2, CommError::PeerLost { peer: 3 })),
+            Err(comm_failed(2, 2, CommError::PeerLost { peer: 0 })),
+        ];
+        match window_fence(outcomes, 0).unwrap() {
+            WindowOutcome::Aborted(a) => assert_eq!(a.failed_rank, 3),
+            WindowOutcome::Complete(_) => panic!("expected abort"),
+        }
+    }
+
+    /// Non-communication failures (kernel bugs, unreadable shards) must
+    /// surface immediately — retrying them would loop forever.
+    #[test]
+    fn window_fence_passes_noncomm_errors_through() {
+        let outcomes: Vec<anyhow::Result<Option<TrainResult>>> = vec![
+            Err(anyhow::anyhow!("kernel exploded")),
+            Ok(None),
+        ];
+        let err = window_fence(outcomes, 0).unwrap_err();
+        assert!(err.to_string().contains("kernel exploded"));
+    }
+
+    /// The terminal error code tracks the policy: unconfigured runs keep
+    /// the historical `comm` code, an exhausted restart budget is the
+    /// new `recovery` code — and both carry the root cause.
+    #[test]
+    fn abort_error_code_tracks_policy() {
+        let abort = EpochAborted {
+            failed_rank: 2,
+            epoch: 7,
+            rewind_to: 6,
+            cause: "rank 2 lost (endpoint dropped mid-collective)".into(),
+        };
+        let disabled = abort_error(abort.clone(), &RecoveryPolicy::none());
+        let s = SomError::from(disabled);
+        assert_eq!(s.code(), "comm");
+        assert!(s.message().contains("rank 2 failed"), "{s}");
+
+        let exhausted = abort_error(abort, &RecoveryPolicy::restarts(3));
+        let s = SomError::from(exhausted);
+        assert_eq!(s.code(), "recovery");
+        assert!(s.message().contains("exhausted after 3 restart(s)"), "{s}");
+        assert!(s.message().contains("epoch 7 aborted"), "{s}");
+    }
+
+    /// End-to-end in-process recovery smoke: a rank killed mid-run under
+    /// a restart budget recovers to a byte-identical result. (The full
+    /// rank×epoch×collective sweep lives in `tests/fault_recovery.rs`.)
+    #[test]
+    fn injected_kill_recovers_byte_identical() {
+        use crate::cluster::fault::FaultPlan;
+        let mut rng = Rng::new(21);
+        let (data, _) = data::gaussian_blobs(48, 4, 3, 0.2, &mut rng);
+        let make = || ClusterData::Dense {
+            data: data.clone(),
+            dim: 4,
+        };
+
+        let (clean, _) = fit_cluster(&cfg(3), make(), NetModel::ideal()).unwrap();
+
+        let plan = Arc::new(FaultPlan::observe(3).kill(1, 7));
+        let mut session = Som::builder()
+            .config(cfg(3))
+            .recovery(RecoveryPolicy::restarts(2).with_backoff(Duration::from_millis(1)))
+            .build()
+            .unwrap();
+        session.set_fault_plan(Some(plan.clone()));
+        let (res, _) = session.fit_cluster(make()).unwrap();
+        assert!(plan.all_fired(), "the kill never triggered");
+        assert_eq!(res.bmus, clean.bmus);
+        assert_eq!(res.codebook.weights, clean.codebook.weights);
+    }
+
+    /// Exhausting the restart budget surfaces the typed `recovery` error
+    /// (a persistent fault re-kills the respawned rank every attempt).
+    #[test]
+    fn exhausted_restarts_surface_recovery_error() {
+        use crate::cluster::fault::FaultPlan;
+        let mut rng = Rng::new(22);
+        let (data, _) = data::gaussian_blobs(48, 4, 3, 0.2, &mut rng);
+
+        // Four kills aimed at rank 1, spaced one op apart: each retry
+        // trips the next one, outlasting a 2-restart budget.
+        let mut plan = FaultPlan::observe(3);
+        for k in 0..4 {
+            plan = plan.kill(1, 7 + k);
+        }
+        let mut session = Som::builder()
+            .config(cfg(3))
+            .recovery(RecoveryPolicy::restarts(2).with_backoff(Duration::from_millis(1)))
+            .build()
+            .unwrap();
+        session.set_fault_plan(Some(Arc::new(plan)));
+        let err = session
+            .fit_cluster(ClusterData::Dense {
+                data: data.clone(),
+                dim: 4,
+            })
+            .unwrap_err();
+        assert_eq!(err.code(), "recovery");
+        assert!(err.message().contains("rank 1"), "{err}");
     }
 }

@@ -50,6 +50,19 @@ fn bootstrap_timeout() -> Duration {
         .map_or(Duration::from_secs(120), Duration::from_secs)
 }
 
+/// Receive deadline applied to every peer stream after bootstrap
+/// (`SOMOCLU_COMM_TIMEOUT_SECS`, default 300; `0` disables). A peer
+/// that is connected but silent for this long fails the receive with
+/// the typed [`CommError::Timeout`] instead of hanging the collective —
+/// and the whole cluster — forever on a wedged process.
+fn comm_timeout() -> Option<Duration> {
+    let secs: u64 = std::env::var("SOMOCLU_COMM_TIMEOUT_SECS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(300);
+    (secs > 0).then(|| Duration::from_secs(secs))
+}
+
 /// One established peer stream, TCP or Unix-domain.
 enum Conn {
     Tcp(TcpStream),
@@ -64,6 +77,14 @@ impl Conn {
             #[cfg(unix)]
             Conn::Unix(s) => Conn::Unix(s.try_clone()?),
         })
+    }
+
+    fn set_read_timeout(&self, dur: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_read_timeout(dur),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_read_timeout(dur),
+        }
     }
 }
 
@@ -106,23 +127,40 @@ fn is_unix(addr: &str) -> bool {
     addr.starts_with("unix:")
 }
 
-fn bind(addr: &str) -> anyhow::Result<Listener> {
-    if let Some(path) = addr.strip_prefix("unix:") {
-        #[cfg(unix)]
+/// Bind `addr`, retrying `AddrInUse` until `deadline`: a replacement
+/// rank re-binding its crashed predecessor's address must ride out the
+/// TCP `TIME_WAIT` (and the old writer threads' teardown) the previous
+/// process left behind.
+fn bind(addr: &str, deadline: Instant) -> anyhow::Result<Listener> {
+    loop {
+        let attempt: std::io::Result<Listener> = if let Some(path) = addr.strip_prefix("unix:")
         {
-            // The rendezvous path belongs to this run: clear any stale
-            // socket file a crashed predecessor left behind.
-            let _ = std::fs::remove_file(path);
-            return Ok(Listener::Unix(UnixListener::bind(path).map_err(|e| {
-                anyhow::anyhow!("cannot listen on unix socket {path}: {e}")
-            })?));
+            #[cfg(unix)]
+            {
+                // The rendezvous path belongs to this run: clear any
+                // stale socket file a crashed predecessor left behind.
+                let _ = std::fs::remove_file(path);
+                UnixListener::bind(path).map(Listener::Unix)
+            }
+            #[cfg(not(unix))]
+            {
+                let _ = path;
+                anyhow::bail!("unix: addresses need a unix target (got {addr})");
+            }
+        } else {
+            TcpListener::bind(addr).map(Listener::Tcp)
+        };
+        match attempt {
+            Ok(l) => return Ok(l),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::AddrInUse
+                    && Instant::now() < deadline =>
+            {
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            Err(e) => anyhow::bail!("cannot listen on {addr}: {e}"),
         }
-        #[cfg(not(unix))]
-        anyhow::bail!("unix: addresses need a unix target (got {addr})");
     }
-    Ok(Listener::Tcp(TcpListener::bind(addr).map_err(|e| {
-        anyhow::anyhow!("cannot listen on {addr}: {e}")
-    })?))
 }
 
 fn connect_with_retry(addr: &str, deadline: Instant) -> anyhow::Result<Conn> {
@@ -340,7 +378,7 @@ impl NetTransport {
                 rank < peers.len(),
                 "--peers has no listen address for rank {rank}"
             );
-            Some(bind(&peers[rank])?)
+            Some(bind(&peers[rank], deadline)?)
         } else {
             None
         };
@@ -395,6 +433,7 @@ impl NetTransport {
         let mut writers = Vec::with_capacity(world);
         let mut readers = Vec::with_capacity(world);
         let mut handles = Vec::new();
+        let recv_deadline = comm_timeout();
         for conn in conns {
             match conn {
                 Some(conn) => {
@@ -402,6 +441,9 @@ impl NetTransport {
                     let (tx, rx) = channel::<Arc<Vec<u8>>>();
                     handles.push(std::thread::spawn(move || writer_loop(wconn, rx)));
                     writers.push(Some(tx));
+                    // The receive deadline applies to training traffic
+                    // only — bootstrap has its own (shorter) timeout.
+                    conn.set_read_timeout(recv_deadline)?;
                     readers.push(Some(BufReader::new(conn)));
                 }
                 None => {
@@ -445,9 +487,16 @@ impl Transport for NetTransport {
                 });
         }
         match self.readers.get_mut(from).and_then(Option::as_mut) {
-            Some(reader) => read_frame(reader)
-                .map(Bytes::Owned)
-                .map_err(|_| CommError::PeerLost { peer: from }),
+            Some(reader) => read_frame(reader).map(Bytes::Owned).map_err(|e| {
+                // A receive-deadline expiry (SO_RCVTIMEO) is a hung
+                // peer, not a dead one — surface the distinction.
+                match e.kind() {
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+                        CommError::Timeout { peer: from }
+                    }
+                    _ => CommError::PeerLost { peer: from },
+                }
+            }),
             None => Err(CommError::PeerLost { peer: from }),
         }
     }
@@ -571,6 +620,31 @@ mod tests {
             .as_ref()
             .err()
             .is_some_and(|e| format!("{e:#}").contains("fingerprint"))));
+    }
+
+    /// A connected-but-silent peer must surface as the typed
+    /// [`CommError::Timeout`], not an indefinite hang (SOMOCLU_COMM_
+    /// TIMEOUT_SECS applies per stream at bootstrap).
+    #[test]
+    fn silent_peer_times_out_as_typed_timeout() {
+        std::env::set_var("SOMOCLU_COMM_TIMEOUT_SECS", "1");
+        let peers = vec![free_addr()];
+        let eps = net_endpoints(2, peers, 9);
+        std::env::remove_var("SOMOCLU_COMM_TIMEOUT_SECS");
+        let mut it = eps.into_iter();
+        let e0 = it.next().unwrap();
+        let e1 = it.next().unwrap(); // alive for the duration, but mute
+        let out = run_concurrent(vec![Box::new(move || {
+            let mut ep = e0.unwrap();
+            ep.recv(1).map(|_| ()).unwrap_err()
+        })
+            as Box<dyn FnOnce() -> CommError + Send>]);
+        assert!(
+            matches!(out[0], CommError::Timeout { peer: 1 }),
+            "{:?}",
+            out[0]
+        );
+        drop(e1);
     }
 
     #[test]

@@ -16,6 +16,7 @@
 //! | `Io`           | `io`         | operating-system I/O failure                    |
 //! | `Checkpoint`   | `checkpoint` | unreadable, corrupt, or mismatched `SOMC` file  |
 //! | `Comm`         | `comm`       | cluster communication failure (rank lost, ...)  |
+//! | `Recovery`     | `recovery`   | rank-failure recovery exhausted its restarts    |
 //! | `Protocol`     | `protocol`   | malformed or version-mismatched serve request   |
 //! | `Job`          | `job`        | training-job queue failure                      |
 //! | `Internal`     | `internal`   | anything not classified above                   |
@@ -51,6 +52,12 @@ pub enum SomError {
     /// Cluster communication failure (peer lost mid-collective,
     /// undecodable collective payload).
     Comm(String),
+    /// Automatic rank-failure recovery ran out of restarts (ISSUE 10):
+    /// a communication failure persisted through every retry the
+    /// [`RecoveryPolicy`](crate::cluster::fault::RecoveryPolicy)
+    /// allowed. The message carries the root-cause abort (failed rank,
+    /// epoch, rewind point) — the detail layer on top of `Comm`.
+    Recovery(String),
     /// Malformed or version-mismatched serve-protocol request/response.
     Protocol(String),
     /// Training-job queue failure (unparseable job spec, journal
@@ -75,6 +82,7 @@ impl SomError {
             "io" => SomError::Io(message),
             "checkpoint" => SomError::Checkpoint(message),
             "comm" => SomError::Comm(message),
+            "recovery" => SomError::Recovery(message),
             "protocol" => SomError::Protocol(message),
             "job" => SomError::Job(message),
             _ => SomError::Internal(message),
@@ -92,6 +100,7 @@ impl SomError {
             SomError::Io(_) => "io",
             SomError::Checkpoint(_) => "checkpoint",
             SomError::Comm(_) => "comm",
+            SomError::Recovery(_) => "recovery",
             SomError::Protocol(_) => "protocol",
             SomError::Job(_) => "job",
             SomError::Internal(_) => "internal",
@@ -107,6 +116,7 @@ impl SomError {
             | SomError::Io(m)
             | SomError::Checkpoint(m)
             | SomError::Comm(m)
+            | SomError::Recovery(m)
             | SomError::Protocol(m)
             | SomError::Job(m)
             | SomError::Internal(m) => m,
@@ -132,6 +142,10 @@ impl SomError {
     /// See [`SomError::Checkpoint`].
     pub fn checkpoint(m: impl Into<String>) -> SomError {
         SomError::Checkpoint(m.into())
+    }
+    /// See [`SomError::Recovery`].
+    pub fn recovery(m: impl Into<String>) -> SomError {
+        SomError::Recovery(m.into())
     }
     /// See [`SomError::Protocol`].
     pub fn protocol(m: impl Into<String>) -> SomError {
@@ -208,6 +222,7 @@ mod tests {
             (SomError::io("x"), "io"),
             (SomError::checkpoint("x"), "checkpoint"),
             (SomError::Comm("x".into()), "comm"),
+            (SomError::recovery("x"), "recovery"),
             (SomError::protocol("x"), "protocol"),
             (SomError::job("x"), "job"),
             (SomError::internal("x"), "internal"),

@@ -307,6 +307,7 @@ fn cmd_serve(args: &[String]) -> i32 {
         state_dir: PathBuf::from(opts.state_dir),
         threads: opts.threads,
         handle_signals: true,
+        job_retries: opts.job_retries as u32,
         verbose: opts.verbose,
     };
     if let Err(e) = somoclu::serve::run(serve_opts) {
@@ -524,6 +525,15 @@ fn run(opts: cli::CliOptions) -> anyhow::Result<()> {
     let writer = OutputWriter::new(&opts.output_prefix);
     let mut session = build_session(&opts)?;
     let is_root = opts.multiproc.as_ref().map_or(true, |m| m.rank == 0);
+    if opts.recovery.max_restarts > 0 {
+        // Applies to fresh and resumed sessions alike: recovery is a
+        // runtime knob, never restored from a checkpoint.
+        session.set_recovery(opts.recovery.clone());
+        eprintln!(
+            "rank-failure recovery on: up to {} window restart(s), {:?} base backoff",
+            opts.recovery.max_restarts, opts.recovery.backoff
+        );
+    }
     if opts.checkpoint_every > 0 {
         if is_root {
             session.set_checkpoint_every(opts.checkpoint_every, &opts.output_prefix);

@@ -63,6 +63,10 @@ pub struct ServeOptions {
     /// The CLI sets this; embedded/test daemons drain via
     /// [`DaemonHandle::stop`] or a shutdown request instead.
     pub handle_signals: bool,
+    /// `--job-retries`: restart a training job that fails with a
+    /// transient error (`comm`/`io`/`recovery`) from its newest
+    /// checkpoint up to this many times (0 = fail on first error).
+    pub job_retries: u32,
     /// Log connections and publishes to stderr.
     pub verbose: bool,
 }
@@ -77,6 +81,7 @@ impl ServeOptions {
             state_dir: state_dir.into(),
             threads: 0,
             handle_signals: false,
+            job_retries: 0,
             verbose: false,
         }
     }
@@ -315,9 +320,12 @@ impl DaemonHandle {
         };
         let worker = {
             let shared = Arc::clone(&shared);
+            let job_retries = opts.job_retries;
             std::thread::spawn(move || {
                 let publish = |p: &Path| shared.publish(p);
-                shared.queue.run_worker(&shared.shutdown, &shared.pins, &publish);
+                shared
+                    .queue
+                    .run_worker(&shared.shutdown, &shared.pins, &publish, job_retries);
             })
         };
         Ok(DaemonHandle {

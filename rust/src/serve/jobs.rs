@@ -342,6 +342,10 @@ impl JobQueue {
     /// The worker loop: run queued jobs until `shutdown`. `pins` is the
     /// daemon's GC-protection set (the served checkpoint lives in it);
     /// `publish` swaps a finished job's checkpoint into the hot slot.
+    /// `retries` is the daemon's `--job-retries` budget: a job that
+    /// fails with a transient error (`comm`/`io`/`recovery`) restarts
+    /// from its newest checkpoint up to that many times, each restart
+    /// streaming a non-terminal [`JobEvent::Retry`] to watchers.
     ///
     /// Runs on its own thread; returns when shutdown is observed.
     pub fn run_worker(
@@ -349,48 +353,83 @@ impl JobQueue {
         shutdown: &AtomicBool,
         pins: &Arc<Mutex<HashSet<PathBuf>>>,
         publish: &(dyn Fn(&Path) -> Result<(), SomError> + Sync),
+        retries: u32,
     ) {
         while let Some((id, argv, resume_from)) = self.next_job(shutdown) {
             self.set_status(id, JobStatus::Running);
-            match self.run_job(id, &argv, resume_from, shutdown, pins) {
-                Ok(final_ckpt) => {
-                    if let Err(e) = publish(&final_ckpt) {
+            let mut resume_from = resume_from;
+            let mut attempt = 0u32;
+            loop {
+                match self.run_job(id, &argv, resume_from.clone(), shutdown, pins) {
+                    Ok(final_ckpt) => {
+                        if let Err(e) = publish(&final_ckpt) {
+                            self.push_event(
+                                id,
+                                JobEvent::Failed {
+                                    code: e.code().to_string(),
+                                    message: format!("publish failed: {e}"),
+                                },
+                            );
+                            self.set_status(id, JobStatus::Failed);
+                            break;
+                        }
+                        self.set_last_checkpoint(id, final_ckpt.clone());
+                        self.push_event(
+                            id,
+                            JobEvent::Done {
+                                checkpoint: final_ckpt.display().to_string(),
+                            },
+                        );
+                        self.set_status(id, JobStatus::Done);
+                        break;
+                    }
+                    Err(e) if e == drain_error() => {
+                        // Shutdown mid-job: back to the queue; the journal
+                        // records the resume checkpoint for the next start.
+                        // The retry count does NOT survive a drain — a
+                        // restart gets a fresh budget, like a crash does.
+                        self.requeue_front(id);
+                        break;
+                    }
+                    Err(e) if attempt < retries && is_transient(&e) => {
+                        attempt += 1;
+                        self.push_event(
+                            id,
+                            JobEvent::Retry {
+                                attempt,
+                                max: retries,
+                                code: e.code().to_string(),
+                                message: e.message().to_string(),
+                            },
+                        );
+                        // Completed epochs are never retrained: the next
+                        // attempt resumes from the newest checkpoint this
+                        // attempt managed to write (journaled, so even a
+                        // daemon crash mid-retry keeps it).
+                        resume_from = self.last_checkpoint(id);
+                        std::thread::sleep(Duration::from_millis(100) * attempt);
+                    }
+                    Err(e) => {
                         self.push_event(
                             id,
                             JobEvent::Failed {
                                 code: e.code().to_string(),
-                                message: format!("publish failed: {e}"),
+                                message: e.message().to_string(),
                             },
                         );
                         self.set_status(id, JobStatus::Failed);
-                        continue;
+                        break;
                     }
-                    self.set_last_checkpoint(id, final_ckpt.clone());
-                    self.push_event(
-                        id,
-                        JobEvent::Done {
-                            checkpoint: final_ckpt.display().to_string(),
-                        },
-                    );
-                    self.set_status(id, JobStatus::Done);
-                }
-                Err(e) if e == drain_error() => {
-                    // Shutdown mid-job: back to the queue; the journal
-                    // records the resume checkpoint for the next start.
-                    self.requeue_front(id);
-                }
-                Err(e) => {
-                    self.push_event(
-                        id,
-                        JobEvent::Failed {
-                            code: e.code().to_string(),
-                            message: e.message().to_string(),
-                        },
-                    );
-                    self.set_status(id, JobStatus::Failed);
                 }
             }
         }
+    }
+
+    /// The newest journaled checkpoint of `job` — the resume point the
+    /// next retry attempt starts from.
+    fn last_checkpoint(&self, job: u64) -> Option<PathBuf> {
+        let st = self.state.lock().expect("queue lock");
+        st.jobs.get(&job).and_then(|r| r.last_checkpoint.clone())
     }
 
     fn requeue_front(&self, id: u64) {
@@ -465,6 +504,15 @@ impl JobQueue {
 /// structurally (SomError is `PartialEq`).
 fn drain_error() -> SomError {
     SomError::job("daemon draining; job re-queued at its last checkpoint")
+}
+
+/// Is this failure worth a `--job-retries` restart? Only the error
+/// classes a retry can plausibly outlive: lost peers and exhausted
+/// in-run recovery (`comm`, `recovery`) and I/O hiccups (`io`).
+/// Config/data/protocol errors are deterministic — retrying replays
+/// the same failure — so they stay terminal.
+fn is_transient(e: &SomError) -> bool {
+    matches!(e.code(), "comm" | "io" | "recovery")
 }
 
 /// Escape a string as a JSON literal (the journal writer; `util::json`
@@ -666,6 +714,82 @@ mod tests {
         q.set_status(id, JobStatus::Done);
         let (_, done) = q.events_since(id, 0).unwrap();
         assert!(done);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// End-to-end worker retry: training succeeds but the final output
+    /// write hits a transient `io` error every attempt (the output
+    /// prefix points into a directory that does not exist). With a
+    /// budget of 2 the worker streams Retry{1,2} and Retry{2,2}, never
+    /// retrains a completed epoch (attempts 2 and 3 resume from the
+    /// journaled checkpoint), and lands on a terminal `io` failure.
+    #[test]
+    fn worker_retries_transient_failures_until_budget() {
+        let dir = tmpdir("retry");
+        let input = dir.join("in.txt");
+        let mut text = String::new();
+        for i in 0..12 {
+            let v = i as f32;
+            text.push_str(&format!("{} {} {}\n", v, v * 0.5, 12.0 - v));
+        }
+        std::fs::write(&input, text).unwrap();
+        let out = dir.join("no-such-dir").join("out");
+
+        let q = JobQueue::open(&dir).unwrap();
+        let id = q
+            .submit(vec![
+                "-e".into(),
+                "2".into(),
+                "-x".into(),
+                "3".into(),
+                "-y".into(),
+                "3".into(),
+                input.display().to_string(),
+                out.display().to_string(),
+            ])
+            .unwrap();
+
+        let shutdown = AtomicBool::new(false);
+        let pins = Arc::new(Mutex::new(HashSet::new()));
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let publish = |_: &Path| Ok(());
+                q.run_worker(&shutdown, &pins, &publish, 2);
+            });
+            loop {
+                let (_, done) = q.events_since(id, 0).unwrap();
+                if done {
+                    break;
+                }
+                q.wait_for_event(Duration::from_millis(50));
+            }
+            shutdown.store(true, Ordering::SeqCst);
+            q.notify_all();
+        });
+
+        let (events, done) = q.events_since(id, 0).unwrap();
+        assert!(done);
+        let retries: Vec<_> = events
+            .iter()
+            .filter_map(|e| match e {
+                JobEvent::Retry { attempt, max, code, .. } => {
+                    Some((*attempt, *max, code.as_str()))
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(retries, vec![(1, 2, "io"), (2, 2, "io")]);
+        // Attempts 2 and 3 resumed from the epoch-2 checkpoint, so only
+        // the first attempt trained epochs.
+        let epochs = events
+            .iter()
+            .filter(|e| matches!(e, JobEvent::Epoch { .. }))
+            .count();
+        assert_eq!(epochs, 2);
+        match events.last().unwrap() {
+            JobEvent::Failed { code, .. } => assert_eq!(code, "io"),
+            other => panic!("expected a terminal failure, got {other:?}"),
+        }
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -490,6 +490,18 @@ pub enum JobEvent {
     Done { checkpoint: String },
     /// The job failed with a typed error.
     Failed { code: String, message: String },
+    /// The job hit a transient failure (`comm`/`io`/`recovery`) and was
+    /// re-queued to resume from its newest checkpoint (`--job-retries`).
+    /// Non-terminal: watchers keep streaming through the retry.
+    Retry {
+        /// Which retry this is (1-based).
+        attempt: u32,
+        /// The daemon's `--job-retries` budget.
+        max: u32,
+        /// Stable [`crate::error::SomError::code`] of the failure.
+        code: String,
+        message: String,
+    },
 }
 
 impl JobEvent {
@@ -532,6 +544,7 @@ const RSP_ERROR: u8 = 8;
 const EV_EPOCH: u8 = 1;
 const EV_DONE: u8 = 2;
 const EV_FAILED: u8 = 3;
+const EV_RETRY: u8 = 4;
 
 impl Response {
     /// Serialize to a frame payload.
@@ -592,6 +605,18 @@ impl Response {
                         put_str(&mut b, code);
                         put_str(&mut b, message);
                     }
+                    JobEvent::Retry {
+                        attempt,
+                        max,
+                        code,
+                        message,
+                    } => {
+                        b.push(EV_RETRY);
+                        put_u32(&mut b, *attempt);
+                        put_u32(&mut b, *max);
+                        put_str(&mut b, code);
+                        put_str(&mut b, message);
+                    }
                 }
             }
             Response::Ok => b.push(RSP_OK),
@@ -641,6 +666,12 @@ impl Response {
                         checkpoint: d.str()?,
                     },
                     EV_FAILED => JobEvent::Failed {
+                        code: d.str()?,
+                        message: d.str()?,
+                    },
+                    EV_RETRY => JobEvent::Retry {
+                        attempt: d.u32()?,
+                        max: d.u32()?,
                         code: d.str()?,
                         message: d.str()?,
                     },
@@ -867,6 +898,15 @@ mod tests {
                 job: 3,
                 event: JobEvent::Done {
                     checkpoint: "job3.somc".into(),
+                },
+            },
+            Response::Event {
+                job: 3,
+                event: JobEvent::Retry {
+                    attempt: 1,
+                    max: 3,
+                    code: "comm".into(),
+                    message: "rank 1 failed".into(),
                 },
             },
             Response::Ok,

@@ -90,6 +90,7 @@ use std::time::{Duration, Instant};
 use crate::api::DataInput;
 use crate::error::SomError;
 use crate::cluster::comm::CollectiveAlgo;
+use crate::cluster::fault::{FaultPlan, RecoveryPolicy};
 use crate::cluster::multiproc::NetOptions;
 use crate::cluster::netmodel::NetModel;
 use crate::cluster::runner::{ClusterData, ClusterReport, StreamInput};
@@ -150,6 +151,7 @@ pub struct SomBuilder {
     net: NetModel,
     checkpoint: Option<(usize, PathBuf)>,
     keep_last: usize,
+    recovery: RecoveryPolicy,
 }
 
 impl Default for SomBuilder {
@@ -160,6 +162,7 @@ impl Default for SomBuilder {
             net: NetModel::ideal(),
             checkpoint: None,
             keep_last: 0,
+            recovery: RecoveryPolicy::none(),
         }
     }
 }
@@ -334,6 +337,19 @@ impl SomBuilder {
         self
     }
 
+    /// Automatic rank-failure recovery for cluster fits (the CLI's
+    /// `--recover`): when a rank is lost mid-window, survivors abort the
+    /// window at the epoch fence, the session rewinds to the last
+    /// completed window, and the world is re-formed and retried — up to
+    /// [`RecoveryPolicy::max_restarts`] times with exponential backoff.
+    /// A recovered run produces byte-identical weights and BMUs to an
+    /// uninterrupted one. The default ([`RecoveryPolicy::none`])
+    /// disables recovery: the first lost rank fails the fit.
+    pub fn recovery(mut self, policy: RecoveryPolicy) -> Self {
+        self.recovery = policy;
+        self
+    }
+
     /// Validate the configuration and produce a ready [`SomSession`].
     /// Rejects inconsistent settings (zero-sized map, zero epochs,
     /// radius growing over time, mmap + prefetch, an initial codebook
@@ -354,6 +370,8 @@ impl SomBuilder {
             checkpoint: self
                 .checkpoint
                 .map(|(every, prefix)| CheckpointPolicy::new(every, prefix, self.keep_last)),
+            recovery: self.recovery,
+            fault_plan: None,
         };
         if let Some(cb) = self.initial {
             session
@@ -490,6 +508,13 @@ pub struct SomSession {
     history: Vec<EpochStats>,
     last_bmus: Vec<u32>,
     checkpoint: Option<CheckpointPolicy>,
+    /// Rank-failure recovery budget for cluster fits (see
+    /// [`SomBuilder::recovery`]).
+    recovery: RecoveryPolicy,
+    /// Deterministic fault plan injected into the simulated cluster's
+    /// transports — the chaos-testing hook (see
+    /// [`set_fault_plan`](Self::set_fault_plan)).
+    fault_plan: Option<Arc<FaultPlan>>,
 }
 
 impl SomSession {
@@ -631,6 +656,24 @@ impl SomSession {
         if let Some(p) = self.checkpoint.as_mut() {
             p.keep_last = n;
         }
+    }
+
+    /// Set the rank-failure recovery policy for cluster fits (the CLI's
+    /// `--recover`; see [`SomBuilder::recovery`]). A runtime knob, not
+    /// stored in checkpoints — resumed sessions default to no recovery.
+    pub fn set_recovery(&mut self, policy: RecoveryPolicy) {
+        self.recovery = policy;
+    }
+
+    /// Install a deterministic fault plan: every transport of the
+    /// simulated cluster world is wrapped in a
+    /// [`FaultyTransport`](crate::cluster::fault::FaultyTransport) that
+    /// executes the plan (kill rank *k* at collective op *n*, delay,
+    /// torn frame). This is the chaos-testing hook behind the fault
+    /// injection test suite; production runs leave it unset. `None`
+    /// removes a previously installed plan.
+    pub fn set_fault_plan(&mut self, plan: Option<Arc<FaultPlan>>) {
+        self.fault_plan = plan;
     }
 
     /// Install a shared pin set for checkpoint GC: paths present in the
@@ -1080,6 +1123,16 @@ impl SomSession {
         self.checkpoint.as_ref().map(|p| p.every)
     }
 
+    /// The rank-failure recovery policy (cluster window driver input).
+    pub(crate) fn recovery(&self) -> &RecoveryPolicy {
+        &self.recovery
+    }
+
+    /// The installed fault plan, if any (cluster window driver input).
+    pub(crate) fn fault_plan(&self) -> Option<Arc<FaultPlan>> {
+        self.fault_plan.clone()
+    }
+
     /// Adopt the master's state after a cluster training window: the
     /// broadcast codebook bits, the gathered BMUs, the window's stats,
     /// and the new cursor; then fire the checkpoint policy.
@@ -1101,6 +1154,12 @@ impl SomSession {
         self.epoch = epoch;
     }
 
+    /// Drop epoch stats recorded after `len` — the recovery rewind
+    /// discarding a partially trained, aborted window's statistics.
+    pub(crate) fn truncate_history(&mut self, len: usize) {
+        self.history.truncate(len);
+    }
+
     /// A rank-local session for the cluster runner: owns the broadcast
     /// codebook copy and starts mid-schedule at `start_epoch`. No
     /// checkpoint policy — the coordinator session checkpoints.
@@ -1120,6 +1179,8 @@ impl SomSession {
             history: Vec::new(),
             last_bmus: Vec::new(),
             checkpoint: None,
+            recovery: RecoveryPolicy::none(),
+            fault_plan: None,
         };
         session.install_codebook(codebook)?;
         Ok(session)

@@ -1,0 +1,336 @@
+//! Chaos suite for the fault-tolerance layer (ISSUE 10): deterministic
+//! fault injection ([`somoclu::cluster::FaultPlan`]) against the
+//! in-process cluster runner across every collective algorithm, plus a
+//! real-process SIGKILL-and-rejoin smoke over loopback TCP.
+//!
+//! The core property everywhere: a run that loses a rank and recovers
+//! under a [`RecoveryPolicy`] finishes **byte-identical** to a run that
+//! never faulted — same BMUs, same codebook bits. Fault positions are
+//! derived from a clean observation probe (operation counts are a pure
+//! function of (collective, rank count, schedule)), so every scenario
+//! here is reproducible, never a flake.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use somoclu::cluster::comm::CollectiveAlgo;
+use somoclu::cluster::runner::ClusterData;
+use somoclu::cluster::{FaultPlan, RecoveryPolicy};
+use somoclu::coordinator::config::TrainConfig;
+use somoclu::coordinator::train::TrainResult;
+use somoclu::data;
+use somoclu::session::Som;
+use somoclu::util::rng::Rng;
+
+const RANKS: usize = 3;
+const EPOCHS: usize = 3;
+const DIM: usize = 4;
+
+fn cfg(collective: CollectiveAlgo) -> TrainConfig {
+    TrainConfig {
+        rows: 6,
+        cols: 6,
+        epochs: EPOCHS,
+        threads: 1,
+        ranks: RANKS,
+        radius0: Some(3.0),
+        collective,
+        ..Default::default()
+    }
+}
+
+fn blobs() -> Vec<f32> {
+    let mut rng = Rng::new(42);
+    data::gaussian_blobs(60, DIM, 3, 0.2, &mut rng).0
+}
+
+/// One in-process cluster run under `plan` (None = no injection) and
+/// `policy`, returning the final result.
+fn run(
+    collective: CollectiveAlgo,
+    plan: Option<Arc<FaultPlan>>,
+    policy: RecoveryPolicy,
+) -> Result<TrainResult, somoclu::error::SomError> {
+    let mut session = Som::builder()
+        .config(cfg(collective))
+        .recovery(policy)
+        .build()?;
+    session.set_fault_plan(plan);
+    session
+        .fit_cluster(ClusterData::Dense {
+            data: blobs(),
+            dim: DIM,
+        })
+        .map(|(res, _)| res)
+}
+
+/// Clean reference run plus per-rank total operation counts (the probe
+/// that lets kill positions be aimed by arithmetic).
+fn probe(collective: CollectiveAlgo) -> (TrainResult, Vec<u64>) {
+    let plan = Arc::new(FaultPlan::observe(RANKS));
+    let clean = run(collective, Some(plan.clone()), RecoveryPolicy::none()).unwrap();
+    let totals = (0..RANKS).map(|r| plan.ops(r)).collect();
+    (clean, totals)
+}
+
+fn assert_identical(a: &TrainResult, b: &TrainResult, what: &str) {
+    assert_eq!(a.bmus, b.bmus, "{what}: BMUs diverged");
+    assert_eq!(
+        a.codebook.weights, b.codebook.weights,
+        "{what}: codebook bits diverged"
+    );
+}
+
+const COLLECTIVES: [(CollectiveAlgo, &str); 3] = [
+    (CollectiveAlgo::Star, "star"),
+    (CollectiveAlgo::Ring, "ring"),
+    (CollectiveAlgo::Tree, "tree"),
+];
+
+/// The property sweep: for every collective algorithm, kill every rank
+/// at operation positions spanning the whole run (early / middle / late
+/// — with a 3-epoch schedule that is one kill per epoch, plus the final
+/// gather region). Every scenario must recover byte-identical to the
+/// clean run within one restart.
+#[test]
+fn killing_any_rank_anywhere_recovers_byte_identical() {
+    for (algo, name) in COLLECTIVES {
+        let (clean, totals) = probe(algo);
+        for victim in 0..RANKS {
+            for sixth in [1, 3, 5] {
+                let at_op = totals[victim] * sixth / 6;
+                let plan = Arc::new(FaultPlan::observe(RANKS).kill(victim, at_op));
+                let tag = format!("{name}: kill rank {victim} at op {at_op}");
+                let recovered = run(
+                    algo,
+                    Some(plan.clone()),
+                    RecoveryPolicy::restarts(2).with_backoff(Duration::from_millis(1)),
+                )
+                .unwrap_or_else(|e| panic!("{tag}: did not recover: {e}"));
+                assert!(plan.all_fired(), "{tag}: the kill never triggered");
+                assert_identical(&clean, &recovered, &tag);
+            }
+        }
+    }
+}
+
+/// Seeded pseudo-random kills: a seed IS a reproducible failure
+/// scenario, so a handful of seeds both exercises arbitrary positions
+/// and stays deterministic run-to-run.
+#[test]
+fn seeded_kills_recover() {
+    let (clean, totals) = probe(CollectiveAlgo::Star);
+    let max_op = *totals.iter().min().unwrap();
+    for seed in [1u64, 7, 23] {
+        let plan = Arc::new(FaultPlan::seeded_kill(seed, RANKS, max_op));
+        let recovered = run(
+            CollectiveAlgo::Star,
+            Some(plan.clone()),
+            RecoveryPolicy::restarts(2).with_backoff(Duration::from_millis(1)),
+        )
+        .unwrap_or_else(|e| panic!("seed {seed}: did not recover: {e}"));
+        assert!(plan.all_fired(), "seed {seed}: the kill never triggered");
+        assert_identical(&clean, &recovered, &format!("seed {seed}"));
+    }
+}
+
+/// A stalled peer (delay fault) is not a failure: the run completes
+/// without spending any restart — recovery disabled on purpose — and
+/// the result is still byte-identical.
+#[test]
+fn delayed_peer_is_benign() {
+    let (clean, _) = probe(CollectiveAlgo::Ring);
+    let plan =
+        Arc::new(FaultPlan::observe(RANKS).delay(1, 9, Duration::from_millis(50)));
+    let delayed = run(CollectiveAlgo::Ring, Some(plan.clone()), RecoveryPolicy::none())
+        .expect("a delay must not abort the run");
+    assert!(plan.all_fired());
+    assert_identical(&clean, &delayed, "delay");
+}
+
+/// A torn frame surfaces as a typed `CommError::Protocol` on the
+/// receiving side (every collective decode validates payload length)
+/// and feeds the same abort/recovery path as a lost rank. If the torn
+/// operation happens to be a receive the fault is a no-op by design —
+/// either way the run must end byte-identical.
+#[test]
+fn torn_frame_recovers_byte_identical() {
+    let (clean, totals) = probe(CollectiveAlgo::Star);
+    let plan = Arc::new(FaultPlan::observe(RANKS).torn_frame(0, totals[0] / 2));
+    let recovered = run(
+        CollectiveAlgo::Star,
+        Some(plan.clone()),
+        RecoveryPolicy::restarts(2).with_backoff(Duration::from_millis(1)),
+    )
+    .expect("torn frame must recover or pass through");
+    assert!(plan.all_fired());
+    assert_identical(&clean, &recovered, "torn frame");
+}
+
+/// More kills than budget: the run must fail with the typed `recovery`
+/// error code and name the failed rank — never hang, never panic.
+/// Kills at consecutive op indices fire once per attempt (op counters
+/// are cumulative across world re-formations).
+#[test]
+fn exhausted_budget_is_a_typed_recovery_error() {
+    let (_, totals) = probe(CollectiveAlgo::Star);
+    let at = totals[1] / 2;
+    let plan = Arc::new(
+        FaultPlan::observe(RANKS)
+            .kill(1, at)
+            .kill(1, at + 1)
+            .kill(1, at + 2)
+            .kill(1, at + 3),
+    );
+    let err = run(
+        CollectiveAlgo::Star,
+        Some(plan),
+        RecoveryPolicy::restarts(2).with_backoff(Duration::from_millis(1)),
+    )
+    .expect_err("budget of 2 cannot outlive 4 kills");
+    assert_eq!(err.code(), "recovery", "{err}");
+    let msg = err.to_string();
+    assert!(msg.contains("rank 1"), "{msg}");
+}
+
+/// With recovery off (the default), the first loss keeps the historical
+/// `comm` error code, and the message points at the `--recover` flag.
+#[test]
+fn recovery_disabled_keeps_the_comm_code() {
+    let (_, totals) = probe(CollectiveAlgo::Star);
+    let plan = Arc::new(FaultPlan::observe(RANKS).kill(2, totals[2] / 2));
+    let err = run(CollectiveAlgo::Star, Some(plan), RecoveryPolicy::none())
+        .expect_err("no recovery: first loss is fatal");
+    assert_eq!(err.code(), "comm", "{err}");
+    assert!(err.to_string().contains("--recover"), "{err}");
+}
+
+// ---------------------------------------------------------------------
+// Real processes: SIGKILL a rank mid-run, relaunch it, recover.
+// ---------------------------------------------------------------------
+
+#[cfg(unix)]
+mod sigkill {
+    use std::path::{Path, PathBuf};
+    use std::process::{Child, Command, Stdio};
+
+    fn bin() -> PathBuf {
+        let mut p = std::env::current_exe().unwrap();
+        p.pop(); // deps/
+        p.pop(); // <profile>/
+        p.push("somoclu");
+        p
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("somoclu_chaos_{}_{name}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn free_port() -> u16 {
+        std::net::TcpListener::bind("127.0.0.1:0")
+            .unwrap()
+            .local_addr()
+            .unwrap()
+            .port()
+    }
+
+    const TRAIN_ARGS: [&str; 12] = [
+        "-e", "30", "-x", "7", "-y", "7", "-r", "3", "--threads", "1", "--seed", "99",
+    ];
+
+    fn spawn_rank(input: &Path, prefix: &Path, extra: &[&str]) -> Child {
+        Command::new(bin())
+            .args(TRAIN_ARGS)
+            .args(extra)
+            .arg(input.to_str().unwrap())
+            .arg(prefix.to_str().unwrap())
+            .env("SOMOCLU_BOOTSTRAP_TIMEOUT_SECS", "60")
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .spawn()
+            .expect("binary spawns")
+    }
+
+    fn finish(child: Child, who: &str) -> (bool, String) {
+        let out = child.wait_with_output().expect("process completes");
+        (
+            out.status.success(),
+            format!("{who} stderr:\n{}", String::from_utf8_lossy(&out.stderr)),
+        )
+    }
+
+    /// Kill rank 1 with SIGKILL once training has demonstrably passed
+    /// the epoch-2 checkpoint, relaunch it, and require the recovered
+    /// 2-process run to be byte-identical to the simulated 2-rank run.
+    #[test]
+    fn sigkill_and_rejoin_matches_clean_run() {
+        let dir = tmpdir("rejoin");
+        let input = dir.join("data.txt");
+        {
+            let mut rng = somoclu::util::rng::Rng::new(600);
+            let (d, _) = somoclu::data::gaussian_blobs(80, 5, 3, 0.2, &mut rng);
+            somoclu::io::dense::write_dense(&input, 80, 5, &d, false).unwrap();
+        }
+
+        // Clean reference: the simulated in-process 2-rank run.
+        let sim_prefix = dir.join("sim");
+        let out = Command::new(bin())
+            .args(TRAIN_ARGS)
+            .args(["--ranks", "2"])
+            .arg(input.to_str().unwrap())
+            .arg(sim_prefix.to_str().unwrap())
+            .output()
+            .expect("binary runs");
+        assert!(
+            out.status.success(),
+            "simulated run: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+
+        let peers = format!("127.0.0.1:{},127.0.0.1:{}", free_port(), free_port());
+        let prefix0 = dir.join("net0");
+        let prefix1 = dir.join("net1");
+        let common = [
+            "--ranks", "2", "--peers", peers.as_str(),
+            "--checkpoint-every", "2", "--recover", "max-restarts=3",
+        ];
+        let rank_args = |rank: &'static str, common: &[&str]| {
+            let mut v = vec!["--rank", rank];
+            v.extend_from_slice(common);
+            v
+        };
+        let r0 = spawn_rank(&input, &prefix0, &rank_args("0", &common));
+        let mut r1 = spawn_rank(&input, &prefix1, &rank_args("1", &common));
+
+        // Rank 0 owns checkpoints: once <prefix0>.epoch2.somc exists the
+        // cluster is provably mid-run (epoch 2 of 30) — SIGKILL rank 1.
+        let ck = somoclu::session::checkpoint_path(prefix0.to_str().unwrap(), 2);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+        while !ck.exists() {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "epoch-2 checkpoint never appeared"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        r1.kill().expect("SIGKILL rank 1");
+        let _ = r1.wait();
+
+        // The replacement rank re-binds rank 1's port, re-rendezvous,
+        // adopts the window header, and the run completes.
+        let r1b = spawn_rank(&input, &prefix1, &rank_args("1", &common));
+        let (ok0, err0) = finish(r0, "rank 0");
+        let (ok1, err1) = finish(r1b, "replacement rank 1");
+        assert!(ok0, "{err0}");
+        assert!(ok1, "{err1}");
+
+        for ext in [".wts", ".bm"] {
+            let sim = std::fs::read(format!("{}{ext}", sim_prefix.display())).unwrap();
+            let net = std::fs::read(format!("{}{ext}", prefix0.display())).unwrap();
+            assert_eq!(sim, net, "{ext} differs after SIGKILL-and-rejoin");
+        }
+    }
+}
